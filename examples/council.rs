@@ -1,0 +1,121 @@
+//! Council of Agents: the full Warp-Cortex episode of the paper's Figure 1.
+//!
+//! A main agent (the River) generates while the Cortex Router watches its
+//! stream for `[TASK: ...]` / `[RECALL: ...]` / `[VERIFY: ...]` triggers.
+//! Each trigger spawns a side agent (a Stream) seeded from the Topological
+//! Synapse; finished thoughts pass the Validation Gate and are merged back
+//! via Referential Injection.
+//!
+//! ```bash
+//! cargo run --release --example council [-- <model> [max_tokens]]
+//! ```
+
+use std::sync::Arc;
+
+use warp_cortex::cortex::{CortexConfig, Event, WarpCortex};
+use warp_cortex::cortex::memory::fmt_bytes;
+use warp_cortex::model::Engine;
+use warp_cortex::runtime::{DeviceHandle, DeviceOptions};
+use warp_cortex::text::SamplerConfig;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "small".into());
+    let max_tokens: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(160);
+    // Optional θ override (paper default 0.5; lower it to watch Referential
+    // Injection fire on this small byte-LM, e.g. `council small 160 0.0`).
+    let theta: Option<f32> = args.get(3).and_then(|s| s.parse().ok());
+
+    let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&[&model]))?;
+    let engine = Engine::new(device, &model)?;
+    let cortex = Arc::new(WarpCortex::new(
+        engine,
+        CortexConfig {
+            model: model.clone(),
+            max_side_agents: 3,
+            synapse_refresh_every: 24,
+            side_gen_budget: 24,
+            gate_theta: theta,
+            sampler: SamplerConfig {
+                temperature: 0.75,
+                seed: 1234,
+                ..SamplerConfig::default()
+            },
+            ..CortexConfig::default()
+        },
+    )?);
+
+    // The prompt plants two explicit triggers; the trained byte-LM often
+    // emits its own `[TASK: ...]` patterns as well (they're in-corpus).
+    let prompt = "user: tell me about the synapse and the landmarks. \
+                  [TASK: verify the units] [RECALL: the definition]\nriver: ";
+    println!("── prompt ──\n{prompt}\n── episode ──");
+    let report = cortex.run_episode(prompt, max_tokens)?;
+
+    println!("{}\n", report.text);
+    println!("── events ──");
+    for e in &report.events {
+        match e {
+            Event::Spawned { task_id, tag, payload, at_token } => {
+                println!("  t+{at_token:<4} SPAWN   #{task_id} [{tag}] {payload:?}")
+            }
+            Event::Dropped { payload, at_token } => {
+                println!("  t+{at_token:<4} DROP    {payload:?}")
+            }
+            Event::Merged { task_id, score, thought, injected_rows, at_token } => println!(
+                "  t+{at_token:<4} MERGE   #{task_id} score={score:.3} rows={injected_rows} {thought:?}"
+            ),
+            Event::Rejected { task_id, score, thought, at_token } => {
+                println!("  t+{at_token:<4} REJECT  #{task_id} score={score:.3} {thought:?}")
+            }
+            Event::Failed { task_id, error, at_token } => {
+                println!("  t+{at_token:<4} FAIL    #{task_id} {error}")
+            }
+            Event::SynapsePushed { version, source_len, at_token } => println!(
+                "  t+{at_token:<4} SYNAPSE v{version} ({source_len} rows compressed to k)"
+            ),
+        }
+    }
+
+    println!("\n── summary ──");
+    println!(
+        "tokens: {}  ({:.1} tok/s, p50 step {:.2} ms, p95 {:.2} ms)",
+        report.tokens_generated,
+        report.main_tokens_per_sec,
+        report.step_latency_p50_ns / 1e6,
+        report.step_latency_p95_ns / 1e6,
+    );
+    println!(
+        "gate: {} evaluated, {:.0}% accepted (θ={})",
+        report.gate.evaluated,
+        report.gate.accept_rate() * 100.0,
+        cortex.gate.theta()
+    );
+    println!(
+        "inject: {} thoughts merged, {} rows total",
+        report.inject.injected, report.inject.rows_total
+    );
+    println!(
+        "synapse: {} pushes / {} reads, last source {} rows",
+        report.synapse.pushes, report.synapse.reads, report.synapse.last_source_len
+    );
+    println!(
+        "scheduler: {} submitted, {} completed, {} rejected",
+        report.scheduler.submitted, report.scheduler.completed, report.scheduler.rejected_capacity
+    );
+    let mem = &report.memory;
+    println!(
+        "memory: weights {} + main kv {} + side kv {} + synapse {} = {}",
+        fmt_bytes(mem.per_kind[0] as f64),
+        fmt_bytes(mem.per_kind[1] as f64),
+        fmt_bytes(mem.per_kind[2] as f64),
+        fmt_bytes(mem.per_kind[3] as f64),
+        fmt_bytes(mem.total() as f64),
+    );
+    let dev = cortex.engine.device().stats();
+    println!(
+        "device: {} ops (river {}, stream {}, background {})",
+        dev.ops, dev.lane_ops[0], dev.lane_ops[1], dev.lane_ops[2]
+    );
+    Ok(())
+}

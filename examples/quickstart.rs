@@ -1,0 +1,78 @@
+//! Quickstart: load the AOT artifacts, prefill a prompt, stream tokens.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! This is the smallest end-to-end use of the public API: a single main
+//! agent, no side agents — the baseline everything else builds on.
+
+use warp_cortex::model::Engine;
+use warp_cortex::runtime::{DeviceHandle, DeviceOptions, Lane};
+use warp_cortex::text::{Sampler, SamplerConfig, Tokenizer, EOS_ID};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "small".into());
+    println!("bringing up device with config `{model}` ...");
+    let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&[&model]))?;
+    let engine = Engine::new(device, &model)?;
+    println!(
+        "model: d={} layers={} heads={}/{} params={} (weights resident once: {} bytes)",
+        engine.config().d_model,
+        engine.config().n_layers,
+        engine.config().n_heads,
+        engine.config().n_kv_heads,
+        engine.config().param_count,
+        engine.device().weight_bytes(&model),
+    );
+
+    let tk = Tokenizer::new();
+    let prompt = "user: tell me about the kv cache.\nriver: ";
+    let ids = tk.encode(prompt, true);
+
+    let mut kv = engine.new_main_cache();
+    let t0 = std::time::Instant::now();
+    let pre = engine.prefill(&ids, &mut kv, Lane::River)?;
+    println!(
+        "prefill: {} tokens in {:.1} ms",
+        pre.len,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    let v = engine.config().vocab_size;
+    let mut logits = pre.logits[(pre.len - 1) * v..pre.len * v].to_vec();
+    let mut sampler = Sampler::new(SamplerConfig {
+        temperature: 0.7,
+        seed: 7,
+        ..SamplerConfig::default()
+    });
+
+    print!("{prompt}");
+    let t0 = std::time::Instant::now();
+    let mut pos = kv.len() as i32;
+    let mut generated = 0;
+    for _ in 0..120 {
+        let id = sampler.sample(&logits);
+        if id == EOS_ID || kv.remaining() == 0 {
+            break;
+        }
+        if let Some(b) = tk.decode_one(id) {
+            print!("{}", b as char);
+            use std::io::Write;
+            std::io::stdout().flush()?;
+        }
+        let out = engine.decode(id, pos, &mut kv, Lane::River)?;
+        logits = out.logits;
+        pos += 1;
+        generated += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\n\n{generated} tokens in {:.2}s = {:.1} tok/s (KV cache: {} rows, {} bytes)",
+        dt,
+        generated as f64 / dt,
+        kv.len(),
+        kv.bytes()
+    );
+    Ok(())
+}

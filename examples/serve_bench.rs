@@ -1,0 +1,164 @@
+//! E2E serving driver (EXPERIMENTS.md §E2E): start the HTTP server on the
+//! trained small model, replay a synthetic request trace against it over
+//! real sockets, and report latency percentiles + throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_bench
+//! ```
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use warp_cortex::cortex::{CortexConfig, WarpCortex};
+use warp_cortex::model::Engine;
+use warp_cortex::runtime::{DeviceHandle, DeviceOptions};
+use warp_cortex::serve::{serve, ServerConfig};
+use warp_cortex::text::SamplerConfig;
+use warp_cortex::util::vecmath::percentile;
+use warp_cortex::util::Json;
+use warp_cortex::workload::{generate, Arrivals, WorkloadConfig};
+
+fn post_generate(addr: std::net::SocketAddr, prompt: &str, max_tokens: usize) -> anyhow::Result<(usize, f64)> {
+    let body = Json::obj()
+        .with("prompt", prompt)
+        .with("max_tokens", max_tokens)
+        .to_string();
+    let mut stream = TcpStream::connect(addr)?;
+    let raw = format!(
+        "POST /generate HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(raw.as_bytes())?;
+    let mut response = String::new();
+    stream.read_to_string(&mut response)?;
+    let payload = response
+        .split("\r\n\r\n")
+        .nth(1)
+        .ok_or_else(|| anyhow::anyhow!("no body"))?;
+    let json = Json::parse(payload).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(err) = json.get("error") {
+        anyhow::bail!("server error: {err}");
+    }
+    let tokens = json.get("tokens").and_then(|v| v.as_usize()).unwrap_or(0);
+    let tps = json
+        .get("tokens_per_sec")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    Ok((tokens, tps))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "small".into());
+    let n_requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(24);
+    let concurrency: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    println!("bringing up warp-cortex server (model={model}) ...");
+    let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&[&model]))?;
+    let engine = Engine::new(device, &model)?;
+    let cortex = Arc::new(WarpCortex::new(
+        engine,
+        CortexConfig {
+            model: model.clone(),
+            max_side_agents: 2,
+            side_gen_budget: 12,
+            sampler: SamplerConfig {
+                temperature: 0.7,
+                seed: 99,
+                ..SamplerConfig::default()
+            },
+            ..CortexConfig::default()
+        },
+    )?);
+    let handle = serve(
+        cortex.clone(),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: concurrency,
+            max_tokens_cap: 64,
+        },
+    )?;
+    let addr = handle.addr;
+    println!("serving on {addr}; replaying {n_requests} requests x{concurrency} workers\n");
+
+    let trace = generate(&WorkloadConfig {
+        seed: 31,
+        requests: n_requests,
+        arrivals: Arrivals::Burst,
+        min_tokens: 16,
+        max_tokens: 40,
+        trigger_prob: 0.4,
+    });
+
+    let t0 = Instant::now();
+    let latencies = std::sync::Mutex::new(Vec::<f64>::new());
+    let total_tokens = std::sync::atomic::AtomicUsize::new(0);
+    let errors = std::sync::atomic::AtomicUsize::new(0);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..concurrency {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if i >= trace.len() {
+                    return;
+                }
+                let req = &trace[i];
+                let rt0 = Instant::now();
+                match post_generate(addr, &req.prompt, req.max_tokens) {
+                    Ok((tokens, _)) => {
+                        total_tokens.fetch_add(tokens, std::sync::atomic::Ordering::Relaxed);
+                        latencies
+                            .lock()
+                            .unwrap()
+                            .push(rt0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    Err(e) => {
+                        eprintln!("request {i} failed: {e:#}");
+                        errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+
+    let wall = t0.elapsed().as_secs_f64();
+    let lat = latencies.into_inner().unwrap();
+    let tokens = total_tokens.load(std::sync::atomic::Ordering::Relaxed);
+    let errors = errors.load(std::sync::atomic::Ordering::Relaxed);
+
+    println!("── E2E serving results ──");
+    println!("requests:   {} ok, {} errors", lat.len(), errors);
+    println!("wall time:  {wall:.2} s");
+    println!("throughput: {:.2} req/s, {:.1} tok/s aggregate", lat.len() as f64 / wall, tokens as f64 / wall);
+    println!(
+        "latency ms: p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}",
+        percentile(&lat, 50.0),
+        percentile(&lat, 95.0),
+        percentile(&lat, 99.0),
+        percentile(&lat, 100.0)
+    );
+
+    let dev = cortex.engine.device().stats();
+    println!(
+        "device ops: {} (river {}, stream {}, background {}); mean exec {:.2} ms",
+        dev.ops,
+        dev.lane_ops[0],
+        dev.lane_ops[1],
+        dev.lane_ops[2],
+        dev.exec_ns as f64 / dev.ops.max(1) as f64 / 1e6
+    );
+    let gate = cortex.gate.stats();
+    println!(
+        "gate: {} evaluated, {:.0}% accepted; synapse pushes {}; batcher mean batch {:.2}",
+        gate.evaluated,
+        gate.accept_rate() * 100.0,
+        cortex.synapse.stats().pushes,
+        cortex.batcher.stats().mean_batch_size(),
+    );
+    handle.stop();
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Warp-Cortex build path: JAX model (L2) + Pallas kernels (L1) + AOT export.
+
+Everything in this package runs ONCE at build time (`make artifacts`); the
+rust coordinator (L3) loads the resulting HLO-text artifacts via PJRT and
+Python never appears on the request path.
+"""

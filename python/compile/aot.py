@@ -1,0 +1,339 @@
+"""AOT export: train weights, lower every program to HLO text, emit manifest.
+
+This is the single entry point of the Python build path:
+
+    cd python && python -m compile.aot --out-dir ../artifacts --configs tiny,small
+
+Outputs (per config):
+    weights_<cfg>.npz          flat weights, keys ``w000_embed`` ... (ordered ABI)
+    <cfg>_<program>.hlo.txt    one HLO-text artifact per exported program
+    golden_<cfg>.json          golden vectors for the rust integration tests
+plus a global ``manifest.json`` describing configs, capacities, programs,
+input/output shapes and FLOP estimates — everything the rust runtime needs.
+
+Incremental: training is skipped when a weights file with a matching
+fingerprint already exists; `make artifacts` skips the whole step when
+sources are older than the manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import (
+    CONFIGS, ANALYTIC_CONFIGS, Capacities, ModelConfig,
+    DEFAULT_ALPHA, default_inv2sig2, TRAIN_STEPS, config_fingerprint, BOS_ID,
+)
+from .hlo import to_hlo_text
+from .train import train
+
+SEED = 0
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _spec_json(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def weight_key(i: int, name: str) -> str:
+    return f"w{i:03d}_{name}"
+
+
+def save_weights(path: str, cfg: ModelConfig, flat) -> None:
+    arrays = {
+        weight_key(i, name): np.asarray(arr)
+        for i, ((name, _), arr) in enumerate(zip(M.param_spec(cfg), flat))
+    }
+    np.savez(path, **arrays)  # ZIP_STORED: the rust npz reader expects stored
+
+
+def load_weights(path: str, cfg: ModelConfig):
+    with np.load(path) as z:
+        keys = sorted(z.files)
+        return [jnp.asarray(z[k]) for k in keys]
+
+
+def decode_flops(cfg: ModelConfig, C: int) -> int:
+    """Rough per-token decode FLOPs at full cache: 2*P + attention term."""
+    return 2 * cfg.param_count() + 4 * C * cfg.n_heads * cfg.head_dim
+
+
+def attention_impl() -> bool:
+    """Decode-attention implementation selector (True = Pallas kernel).
+
+    ``WARP_ATTENTION=jnp`` flips the decode inner attention to the
+    pure-jnp oracle path — identical semantics (pytest asserts allclose),
+    ~1.9x faster on the CPU-PJRT substitute because it skips the Pallas
+    interpreter's while-loop lowering (EXPERIMENTS.md §Perf L2).  The
+    default stays ``pallas``: that is the faithful TPU artifact.
+    """
+    return os.environ.get("WARP_ATTENTION", "pallas") != "jnp"
+
+
+def programs_for(cfg: ModelConfig, caps: Capacities):
+    """(name, fn, step_arg_specs, out_specs, flops) for every exported program."""
+    use_pallas = attention_impl()
+    L, KV, hd, D, V = (
+        cfg.n_layers, cfg.n_kv_heads, cfg.head_dim, cfg.d_model, cfg.vocab_size,
+    )
+    S, C, Cs, K, T, B = (
+        caps.prefill_len, caps.main_ctx, caps.side_ctx,
+        caps.synapse_k, caps.inject_len, caps.decode_batch,
+    )
+    i32, f32 = jnp.int32, jnp.float32
+    cache = lambda c: _sds((L, c, KV, hd))
+    progs = [
+        (
+            f"prefill_s{S}_c{C}",
+            M.make_prefill(cfg, S, C),
+            [("tokens", (S,), i32), ("length", (), i32)],
+            [("logits", (S, V)), ("hidden_last", (D,)),
+             ("k_cache", (L, C, KV, hd)), ("v_cache", (L, C, KV, hd))],
+            2 * cfg.param_count() * S,
+        ),
+        # Decode is compiled at a LADDER of cache capacities; the rust engine
+        # dispatches each step to the smallest tier that fits the live
+        # context, cutting the dominant per-step cost (cache upload + masked
+        # attention over dead rows) by up to C/tier (§Perf opt A).
+        *[
+            (
+                f"decode_c{ct}",
+                M.make_decode(cfg, ct, use_pallas=use_pallas),
+                [("token", (), i32), ("pos", (), i32),
+                 ("k_cache", (L, ct, KV, hd), f32),
+                 ("v_cache", (L, ct, KV, hd), f32),
+                 ("cache_len", (), i32)],
+                [("logits", (V,)), ("hidden", (D,)),
+                 ("k_new", (L, KV, hd)), ("v_new", (L, KV, hd))],
+                decode_flops(cfg, ct),
+            )
+            for ct in sorted({128, 256, C, Cs})
+        ],
+        (
+            f"decode_batch_b{B}_c{Cs}",
+            M.make_decode_batch(cfg, B, Cs, use_pallas=use_pallas),
+            [("tokens", (B,), i32), ("pos", (B,), i32),
+             ("k_cache", (B, L, Cs, KV, hd), f32),
+             ("v_cache", (B, L, Cs, KV, hd), f32),
+             ("cache_len", (B,), i32)],
+            [("logits", (B, V)), ("hidden", (B, D)),
+             ("k_new", (B, L, KV, hd)), ("v_new", (B, L, KV, hd))],
+            B * decode_flops(cfg, Cs),
+        ),
+        (
+            f"synapse_extract_c{C}_k{K}",
+            M.make_synapse_extract(cfg, C, K, use_pallas=use_pallas),
+            [("hidden", (D,), f32),
+             ("k_cache", (L, C, KV, hd), f32), ("v_cache", (L, C, KV, hd), f32),
+             ("cache_len", (), i32), ("alpha", (), f32), ("inv2sig2", (), f32)],
+            [("lm_k", (L, K, KV, hd)), ("lm_v", (L, K, KV, hd)),
+             ("indices", (K,)), ("sel_scores", (K,))],  # indices f32 (see model.py)
+            2 * C * C * KV * hd + 2 * C * cfg.n_heads * hd,
+        ),
+        (
+            f"inject_encode_t{T}",
+            M.make_inject_encode(cfg, T),
+            [("tokens", (T,), i32), ("length", (), i32), ("pos_base", (), i32)],
+            [("k", (L, T, KV, hd)), ("v", (L, T, KV, hd)), ("hidden_last", (D,))],
+            2 * cfg.param_count() * T,
+        ),
+    ]
+    return progs
+
+
+def lower_program(cfg, flat_specs, fn, step_specs) -> str:
+    args = [tuple(flat_specs)]
+    for name, shape, *rest in step_specs:
+        dtype = rest[0] if rest else jnp.float32
+        args.append(_sds(shape, dtype))
+    # keep_unused: every program keeps the FULL weights tuple in its HLO
+    # signature even if it only reads part of it (e.g. synapse_extract only
+    # needs the scoring layer's Wq) — the rust runtime passes the same
+    # resident weight buffers (the Prism) to every program.
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def make_goldens(cfg: ModelConfig, caps: Capacities, flat) -> dict:
+    """Golden vectors for rust integration tests (integration_runtime.rs)."""
+    S, C, K = caps.prefill_len, caps.main_ctx, caps.synapse_k
+    prompt = (
+        b"user: tell me about the kv cache.\n"
+        b"river: the cache grows one row per token. the synapse "
+        b"selects landmark tokens.\nriver: "
+    )  # > synapse_k tokens (and < S) so the golden extraction is well-posed
+    toks = [BOS_ID] + list(prompt)
+    padded = np.full((S,), 256, np.int32)  # PAD
+    padded[: len(toks)] = toks
+    length = len(toks)
+
+    prefill = M.make_prefill(cfg, S, C)
+    logits, hidden_last, kc, vc = prefill(flat, jnp.asarray(padded), jnp.int32(length))
+
+    decode = M.make_decode(cfg, C)
+    steps = []
+    cl = length
+    tok = int(jnp.argmax(logits[length - 1]))
+    kc_h, vc_h = kc, vc
+    for _ in range(4):
+        lg, hid, kn, vn = decode(
+            flat, jnp.int32(tok), jnp.int32(cl), kc_h, vc_h, jnp.int32(cl)
+        )
+        kc_h = kc_h.at[:, cl].set(kn)
+        vc_h = vc_h.at[:, cl].set(vn)
+        steps.append({
+            "token_in": tok,
+            "pos": cl,
+            "argmax": int(jnp.argmax(lg)),
+            "logits8": np.asarray(lg[:8]).tolist(),
+            "hidden4": np.asarray(hid[:4]).tolist(),
+        })
+        tok = int(jnp.argmax(lg))
+        cl += 1
+
+    extract = M.make_synapse_extract(cfg, C, K)
+    lm_k, lm_v, idx, vals = extract(
+        flat, hidden_last, kc, vc, jnp.int32(length),
+        jnp.float32(DEFAULT_ALPHA), jnp.float32(default_inv2sig2(cfg)),
+    )
+
+    inject = M.make_inject_encode(cfg, caps.inject_len)
+    itoks = np.full((caps.inject_len,), 256, np.int32)
+    thought = b"fact: a kilobyte"
+    itoks[: len(thought)] = list(thought)
+    ik, iv, ih = inject(flat, jnp.asarray(itoks), jnp.int32(len(thought)), jnp.int32(77))
+
+    return {
+        "prompt_tokens": [int(t) for t in toks],
+        "prefill": {
+            "length": length,
+            "argmax_last": int(jnp.argmax(logits[length - 1])),
+            "logits8_last": np.asarray(logits[length - 1, :8]).tolist(),
+            "hidden8": np.asarray(hidden_last[:8]).tolist(),
+        },
+        "decode_steps": steps,
+        "synapse": {
+            "cache_len": length,
+            "alpha": DEFAULT_ALPHA,
+            "inv2sig2": default_inv2sig2(cfg),
+            "indices": np.asarray(idx).tolist(),
+            "scores8": np.asarray(vals[:8]).tolist(),
+            "lm_k_slice": np.asarray(lm_k[0, 0, 0, :4]).tolist(),
+        },
+        "inject": {
+            "tokens": itoks.tolist(),
+            "length": int(len(thought)),
+            "pos_base": 77,
+            "k_slice": np.asarray(ik[0, 0, 0, :4]).tolist(),
+            "hidden4": np.asarray(ih[:4]).tolist(),
+        },
+    }
+
+
+def build_config(cfg: ModelConfig, caps: Capacities, out_dir: str, steps: int) -> dict:
+    fp = config_fingerprint(cfg, caps, steps, SEED)
+    wpath = os.path.join(out_dir, f"weights_{cfg.name}.npz")
+    fp_path = wpath + ".fingerprint"
+
+    if os.path.exists(wpath) and os.path.exists(fp_path) and \
+            open(fp_path).read().strip() == fp:
+        print(f"[aot:{cfg.name}] weights up-to-date ({fp}), skipping training")
+        flat = load_weights(wpath, cfg)
+    else:
+        print(f"[aot:{cfg.name}] training {steps} steps ...")
+        params = train(cfg, steps, seed=SEED)
+        flat = M.flatten_params(cfg, params)
+        save_weights(wpath, cfg, flat)
+        with open(fp_path, "w") as f:
+            f.write(fp)
+
+    flat_specs = [_sds(a.shape, a.dtype) for a in flat]
+    weight_specs = [
+        _spec_json(weight_key(i, name), shape, "f32")
+        for i, (name, shape) in enumerate(M.param_spec(cfg))
+    ]
+
+    artifacts = []
+    for name, fn, step_specs, out_specs, flops in programs_for(cfg, caps):
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        t0 = time.time()
+        text = lower_program(cfg, flat_specs, fn, step_specs)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"[aot:{cfg.name}] {fname}: {len(text)/1e3:.0f} kB "
+              f"({time.time()-t0:.1f}s)")
+        artifacts.append({
+            "name": f"{cfg.name}_{name}",
+            "program": name,
+            "config": cfg.name,
+            "file": fname,
+            "inputs": [
+                _spec_json(n, s, "s32" if d == jnp.int32 else "f32")
+                for n, s, *rest in step_specs
+                for d in [rest[0] if rest else jnp.float32]
+            ],
+            "outputs": [
+                _spec_json(o[0], o[1], o[2] if len(o) > 2 else "f32")
+                for o in out_specs
+            ],
+            "flops": int(flops),
+        })
+
+    gpath = os.path.join(out_dir, f"golden_{cfg.name}.json")
+    with open(gpath, "w") as f:
+        json.dump(make_goldens(cfg, caps, flat), f, indent=1)
+
+    return {
+        "model": cfg.to_json(),
+        "capacities": caps.to_json(),
+        "weights_file": os.path.basename(wpath),
+        "weight_params": weight_specs,
+        "golden_file": os.path.basename(gpath),
+        "fingerprint": fp,
+        "defaults": {
+            "alpha": DEFAULT_ALPHA,
+            "inv2sig2": default_inv2sig2(cfg),
+            "gate_theta": 0.5,
+        },
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override training steps (all configs)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    env_steps = os.environ.get("WARP_TRAIN_STEPS")
+    manifest = {"version": 1, "configs": {}, "analytic_configs": {}}
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name.strip()]
+        caps = Capacities()
+        steps = args.steps or (int(env_steps) if env_steps else TRAIN_STEPS[cfg.name])
+        manifest["configs"][cfg.name] = build_config(cfg, caps, args.out_dir, steps)
+    for name, cfg in ANALYTIC_CONFIGS.items():
+        manifest["analytic_configs"][name] = cfg.to_json()
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Model + capacity configurations for Warp-Cortex.
+
+Two runnable configs (``tiny`` for tests, ``small`` for examples/serving) plus
+an analytic-only config (``qwen2_5_0_5b``) used by the Table-1/Table-2 memory
+projections on the rust side.  The runnable configs are Qwen2-style
+decoder-only transformers (RMSNorm, RoPE, GQA, SwiGLU) over a byte-level
+vocabulary.
+
+Vocabulary layout (byte-level, 260 symbols):
+    0..255   raw bytes
+    256      PAD
+    257      BOS
+    258      EOS
+    259      REF   (marks Referential-Injection reference segments)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+VOCAB_SIZE = 260
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+REF_ID = 259
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters of one Warp-Cortex model variant."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int = VOCAB_SIZE
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def gqa_groups(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        """Exact parameter count (embeddings tied with the LM head)."""
+        d, f = self.d_model, self.d_ff
+        per_layer = (
+            2 * d  # ln1, ln2
+            + d * self.n_heads * self.head_dim  # wq
+            + 2 * d * self.n_kv_heads * self.head_dim  # wk, wv
+            + self.n_heads * self.head_dim * d  # wo
+            + 3 * d * f  # wg, wu, wd
+        )
+        return self.vocab_size * d + self.n_layers * per_layer + d  # + ln_f
+
+    def to_json(self) -> dict:
+        out = dataclasses.asdict(self)
+        out["head_dim"] = self.head_dim
+        out["param_count"] = self.param_count()
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Capacities:
+    """Buffer capacities that fix the shapes of the AOT-compiled programs."""
+
+    prefill_len: int = 128  # S: padded prompt length for prefill
+    main_ctx: int = 512  # C: main-agent KV capacity (incl. injection headroom)
+    side_ctx: int = 96  # Cs: side-agent KV capacity (synapse_k + generation)
+    synapse_k: int = 64  # K: landmark count ("k" in the paper, §3.3)
+    inject_len: int = 16  # T: max thought length for referential injection
+    decode_batch: int = 4  # B: side-agent dynamic-batch width
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ── Runnable configs ────────────────────────────────────────────────────────
+
+TINY = ModelConfig(
+    name="tiny", d_model=64, n_layers=2, n_heads=4, n_kv_heads=2, d_ff=192
+)
+SMALL = ModelConfig(
+    name="small", d_model=128, n_layers=4, n_heads=8, n_kv_heads=2, d_ff=384
+)
+
+# ── Analytic-only config (paper's testbed model; NEVER compiled here) ──────
+# Qwen2.5-0.5B-Instruct: 24 layers, d=896, 14 query heads / 2 KV heads,
+# head_dim 64, d_ff 4864, vocab 151936.  Used by rust cortex::memory for the
+# Table-1 / Table-2 projections.
+QWEN2_5_0_5B = ModelConfig(
+    name="qwen2_5_0_5b",
+    d_model=896,
+    n_layers=24,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151936,
+    rope_theta=1000000.0,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL)}
+ANALYTIC_CONFIGS = {QWEN2_5_0_5B.name: QWEN2_5_0_5B}
+
+# Default synapse-sampler hyper-parameters (paper §3.3: hybrid score
+# s = alpha * attn_mass_hat + (1-alpha) * (1 - density_hat)).
+DEFAULT_ALPHA = 0.5
+# Gaussian-KDE bandwidth for the density term: sigma^2 = head-space scale.
+def default_inv2sig2(cfg: ModelConfig) -> float:
+    # keys live in R^{n_kv_heads * head_dim}; sigma^2 = dim gives a bandwidth
+    # at the natural scale of RMS-normalised features.
+    dim = cfg.n_kv_heads * cfg.head_dim
+    return 1.0 / (2.0 * float(dim))
+
+
+TRAIN_STEPS = {"tiny": 400, "small": 700}
+
+
+def config_fingerprint(cfg: ModelConfig, caps: Capacities, steps: int, seed: int) -> str:
+    """Stable hash over everything that affects trained weights + artifacts."""
+    payload = json.dumps(
+        {"cfg": cfg.to_json(), "caps": caps.to_json(), "steps": steps, "seed": seed},
+        sort_keys=True,
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]

@@ -1,0 +1,21 @@
+"""HLO-text lowering helper (the AOT interchange format).
+
+HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` 0.1.6 rust crate) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """jax ``Lowered`` → XLA HLO text with a tuple root (rust: to_tuple())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

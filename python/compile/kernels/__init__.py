@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the HLO artifacts).
+
+``decode_attention`` — single-query flash-style GQA attention over the KV
+cache (the serving hot-spot).  ``hybrid_fields``/``hybrid_scores`` — the
+Topological Synapse's hybrid density-coverage landmark sampler (paper §3.3).
+``ref`` holds the pure-jnp oracles both are tested against.
+"""
+
+from .decode_attention import decode_attention
+from .hybrid_scores import hybrid_fields, hybrid_scores
+from . import ref
+
+__all__ = ["decode_attention", "hybrid_fields", "hybrid_scores", "ref"]

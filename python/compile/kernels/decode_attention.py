@@ -1,0 +1,130 @@
+"""L1 Pallas kernel: single-query flash-style decode attention (GQA).
+
+The serving hot-spot: one query position attending over the agent's KV cache.
+Written TPU-style (DESIGN.md §8):
+
+  * the cache is streamed HBM -> VMEM in ``BC``-row tiles via ``BlockSpec``
+    (this replaces the CUDA paper's threadblock tiling),
+  * online-softmax running statistics (m, l, acc) live in VMEM scratch and
+    persist across the sequential grid steps,
+  * the score/value contractions are MXU-shaped matmuls per KV group.
+
+Lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated from the VMEM footprint in
+DESIGN.md §7 / EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _block_c(C: int) -> int:
+    """Largest cache-tile size <= 128 that divides the capacity C."""
+    for bc in (128, 96, 64, 48, 32, 16, 8):
+        if C % bc == 0:
+            return min(bc, C)
+    return C
+
+
+def _kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, kv, g, hd, bc, nblocks, scale):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].reshape(kv, g, hd)
+    k = k_ref[...]  # [BC, KV, hd]
+    v = v_ref[...]  # [BC, KV, hd]
+    # scores for this tile: [KV, G, BC]
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    ) * scale
+    pos = j * bc + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bc), 2)
+    valid = pos < vl_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [KV, G]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    # masked probabilities — explicit where() so fully-masked tiles contribute
+    # exactly zero (exp(NEG_INF - NEG_INF) would otherwise be 1).
+    p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)  # [KV, G, BC]
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    )  # [KV, G, hd]
+    acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == nblocks - 1)
+    def _final():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[...] = out.reshape(kv * g, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, valid_len, *, interpret=True):
+    """Single-query GQA attention over a length-masked KV cache.
+
+    Args:
+      q:        [H, hd] f32 — current-position query heads (post-RoPE).
+      k_cache:  [C, KV, hd] f32 — cached keys (post-RoPE); rows >= valid_len
+                are uninitialised and masked out.
+      v_cache:  [C, KV, hd] f32 — cached values.
+      valid_len: scalar i32 — number of valid cache rows (>= 1).
+      interpret: lower via the Pallas interpreter (required for CPU PJRT).
+
+    Returns:
+      [H, hd] f32 attention output (pre output-projection).
+    """
+    H, hd = q.shape
+    C, KV, _ = k_cache.shape
+    G = H // KV
+    bc = _block_c(C)
+    nblocks = C // bc
+    scale = 1.0 / float(hd) ** 0.5
+    vl = jnp.reshape(valid_len, (1,)).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _kernel, kv=KV, g=G, hd=hd, bc=bc, nblocks=nblocks, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda j: (0,)),  # valid_len (scalar lane)
+            pl.BlockSpec((H, hd), lambda j: (0, 0)),  # q: resident
+            pl.BlockSpec((bc, KV, hd), lambda j: (j, 0, 0)),  # k tile
+            pl.BlockSpec((bc, KV, hd), lambda j: (j, 0, 0)),  # v tile
+        ],
+        out_specs=pl.BlockSpec((H, hd), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, hd), jnp.float32),
+        scratch_shapes=[
+            pl.ANY((KV, G), jnp.float32),  # m: running max
+            pl.ANY((KV, G), jnp.float32),  # l: running sum
+            pl.ANY((KV, G, hd), jnp.float32),  # acc: running output
+        ],
+        interpret=interpret,
+    )(vl, q, k_cache, v_cache)
+
+
+def vmem_footprint_bytes(C: int, KV: int, H: int, hd: int) -> int:
+    """Estimated VMEM-resident bytes per grid step (DESIGN.md §7, L1 target).
+
+    q + one K tile + one V tile + scratch (m, l, acc) + output block, f32.
+    """
+    bc = _block_c(C)
+    G = H // KV
+    tiles = 2 * bc * KV * hd  # k + v tile
+    scratch = KV * G * (2 + hd)
+    return 4 * (H * hd + tiles + scratch + H * hd)

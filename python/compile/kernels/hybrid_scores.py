@@ -1,0 +1,182 @@
+"""L1 Pallas kernel: hybrid density-coverage landmark fields (paper §3.3).
+
+This is the compute hot-spot of the Topological Synapse.  The KV cache is
+treated as a point cloud in latent space; for every cached position *i* the
+kernel produces the two fields the hybrid sampler mixes:
+
+  attn[i] = sum_h softmax_i(q_h . K_i / sqrt(d_k))
+            — the paper's "Attention Score Summation" term (§3.3), used as an
+              inverse-kernel-density estimate of semantic importance;
+  rho[i]  = mean_j exp(-||K_i - K_j||^2 / (2 sigma^2))
+            — Gaussian kernel density over the key cloud; LOW density means
+              the point covers a geometrically distinct region (the paper's
+              "Geometric Coverage" term).
+
+The O(C^2) density term is the expensive part; its pairwise distances are
+computed as an MXU-shaped matmul (||a||^2 + ||b||^2 - 2 a.b) per tile pair.
+
+Structure (TPU-thinking, DESIGN.md §8): a two-phase sequential grid
+``(2, C/BC)``.  Phase 0 streams K tiles and accumulates global online-softmax
+statistics (m, l) in scratch; phase 1 revisits each tile to emit normalised
+attention mass and the density row-block against the full key set.  For the
+capacities used here (C <= 512) the full key set fits VMEM (<= 64 KB); the
+paper-scale variant would add a third grid axis to tile the j-dimension.
+
+Lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _block_c(C: int) -> int:
+    for bc in (128, 96, 64, 48, 32, 16, 8):
+        if C % bc == 0:
+            return min(bc, C)
+    return C
+
+
+def _kernel(vl_ref, sig_ref, q_ref, k_ref, kfull_ref, attn_ref, rho_ref,
+            m_ref, l_ref, *, kv, g, hd, bc, nblocks, scale):
+    phase = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(phase == 0, j == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].reshape(kv, g, hd)
+    k = k_ref[...]  # [BC, KV, hd]
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    ) * scale  # [KV, G, BC]
+    pos = j * bc + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bc), 2)
+    valid = pos < vl_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    @pl.when(phase == 0)
+    def _accumulate():
+        # online-softmax statistics over the whole (masked) cache
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        m_ref[...] = m_new
+
+    @pl.when(phase == 1)
+    def _emit():
+        # attention mass, normalised with the phase-0 global statistics
+        p = jnp.where(
+            valid,
+            jnp.exp(s - m_ref[...][..., None])
+            / jnp.maximum(l_ref[...], 1e-30)[..., None],
+            0.0,
+        )
+        attn_ref[...] = p.sum(axis=(0, 1))  # [BC]
+
+        # density row-block: this tile vs the full key cloud
+        row = k.reshape(bc, kv * hd)  # [BC, D']
+        full = kfull_ref[...].reshape(-1, kv * hd)  # [C, D']
+        rsq = jnp.sum(row * row, axis=-1)  # [BC]
+        fsq = jnp.sum(full * full, axis=-1)  # [C]
+        cross = jax.lax.dot_general(
+            row, full, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [BC, C] — the MXU tile
+        d2 = jnp.maximum(rsq[:, None] + fsq[None, :] - 2.0 * cross, 0.0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (1, full.shape[0]), 1)
+        ker = jnp.where(cols < vl_ref[0], jnp.exp(-d2 * sig_ref[0]), 0.0)
+        denom = jnp.maximum(vl_ref[0].astype(jnp.float32), 1.0)
+        rho = ker.sum(axis=-1) / denom  # [BC]
+        rowvalid = (j * bc + jax.lax.broadcasted_iota(jnp.int32, (bc,), 0)) < vl_ref[0]
+        rho_ref[...] = jnp.where(rowvalid, rho, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hybrid_fields(q, k_cache, valid_len, inv2sig2, *, interpret=True):
+    """Compute the (attn, rho) landmark fields over a length-masked cache.
+
+    Args:
+      q:        [H, hd] f32 — the Main Agent's current query heads Q_t.
+      k_cache:  [C, KV, hd] f32 — scoring-layer cached keys.
+      valid_len: scalar i32 — number of valid cache rows.
+      inv2sig2: scalar f32 — Gaussian bandwidth 1/(2 sigma^2).
+      interpret: lower via the Pallas interpreter (required for CPU PJRT).
+
+    Returns:
+      (attn[C], rho[C]) f32: attention mass (0 on invalid rows) and kernel
+      density (1 on invalid rows).
+    """
+    H, hd = q.shape
+    C, KV, _ = k_cache.shape
+    G = H // KV
+    bc = _block_c(C)
+    nblocks = C // bc
+    scale = 1.0 / float(hd) ** 0.5
+    vl = jnp.reshape(valid_len, (1,)).astype(jnp.int32)
+    sg = jnp.reshape(inv2sig2, (1,)).astype(jnp.float32)
+
+    kernel = functools.partial(
+        _kernel, kv=KV, g=G, hd=hd, bc=bc, nblocks=nblocks, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(2, nblocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda p, j: (0,)),  # valid_len
+            pl.BlockSpec((1,), lambda p, j: (0,)),  # inv2sig2
+            pl.BlockSpec((H, hd), lambda p, j: (0, 0)),  # q resident
+            pl.BlockSpec((bc, KV, hd), lambda p, j: (j, 0, 0)),  # K tile
+            pl.BlockSpec((C, KV, hd), lambda p, j: (0, 0, 0)),  # K full (phase 1)
+        ],
+        out_specs=[
+            pl.BlockSpec((bc,), lambda p, j: (j,)),
+            pl.BlockSpec((bc,), lambda p, j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pl.ANY((KV, G), jnp.float32),  # m
+            pl.ANY((KV, G), jnp.float32),  # l
+        ],
+        interpret=interpret,
+    )(vl, sg, q, k_cache, k_cache)
+
+
+def hybrid_scores(q, k_cache, valid_len, alpha, inv2sig2, *, interpret=True):
+    """Full §3.3 hybrid score: normalised mix of the two kernel fields.
+
+    The elementwise epilogue (max-normalisation + alpha-mix) runs in plain
+    jnp inside the same jit/HLO module; the O(C^2 + C.H) work is the kernel.
+    Invalid rows score NEG_INF so top-k never selects them.
+    """
+    attn, rho = hybrid_fields(q, k_cache, valid_len, inv2sig2, interpret=interpret)
+    C = attn.shape[0]
+    mask = jnp.arange(C) < valid_len
+    attn_hat = attn / jnp.maximum(jnp.max(jnp.where(mask, attn, 0.0)), 1e-30)
+    rho_hat = rho / jnp.maximum(jnp.max(jnp.where(mask, rho, 0.0)), 1e-30)
+    score = alpha * attn_hat + (1.0 - alpha) * (1.0 - rho_hat)
+    return jnp.where(mask, score, NEG_INF)
+
+
+def vmem_footprint_bytes(C: int, KV: int, H: int, hd: int) -> int:
+    """Estimated peak VMEM bytes per phase-1 grid step (L1 perf target)."""
+    bc = _block_c(C)
+    G = H // KV
+    dflat = KV * hd
+    tile = bc * dflat  # K tile
+    full = C * dflat  # resident key cloud
+    cross = bc * C  # distance tile
+    scratch = 2 * KV * G
+    return 4 * (H * hd + tile + full + cross + scratch + 2 * bc)

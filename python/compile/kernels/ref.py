@@ -1,0 +1,104 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: ``pytest python/tests`` asserts that
+every Pallas kernel matches its oracle to float32 tolerance across a
+hypothesis-swept shape space.  They are also the "standard architecture"
+compute path used by the training loop (no Pallas in the training hot loop).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid_len):
+    """Single-query GQA attention over a length-masked KV cache.
+
+    Args:
+      q:        [H, hd]     query heads for the current position.
+      k_cache:  [C, KV, hd] cached (post-RoPE) keys; rows >= valid_len are junk.
+      v_cache:  [C, KV, hd] cached values.
+      valid_len: scalar i32; number of valid cache rows.
+
+    Returns:
+      out: [H, hd] attention output (pre-Wo).
+    """
+    H, hd = q.shape
+    C, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = q.reshape(KV, G, hd)
+    # scores: [KV, G, C]
+    s = jnp.einsum("kgd,ckd->kgc", qg, k_cache) * scale
+    pos = jnp.arange(C)[None, None, :]
+    s = jnp.where(pos < valid_len, s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(pos < valid_len, p, 0.0)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("kgc,ckd->kgd", p, v_cache)
+    return out.reshape(H, hd)
+
+
+def hybrid_fields_ref(q, k_cache, valid_len, inv2sig2):
+    """Reference for the hybrid density-coverage landmark fields (§3.3).
+
+    Computes, per cached position i:
+      attn[i] = sum_h softmax_i(q_h . K_i / sqrt(d_k))   (attention mass;
+                the paper's "inverse kernel density estimator" numerator)
+      rho[i]  = mean_{j < valid} exp(-||K_i - K_j||^2 * inv2sig2)
+                (Gaussian kernel density over the key point-cloud, keys
+                flattened across KV heads)
+
+    Rows >= valid_len get attn = 0 and rho = 1 (max density => never chosen).
+
+    Args:
+      q:        [H, hd]
+      k_cache:  [C, KV, hd]
+      valid_len: scalar i32
+      inv2sig2: scalar f32, 1 / (2 sigma^2)
+
+    Returns:
+      (attn[C], rho[C]) float32.
+    """
+    H, hd = q.shape
+    C, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = q.reshape(KV, G, hd)
+    s = jnp.einsum("kgd,ckd->kgc", qg, k_cache) * scale  # [KV, G, C]
+    pos = jnp.arange(C)
+    mask = pos < valid_len
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(mask[None, None, :], p, 0.0)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    attn = p.sum(axis=(0, 1))  # [C]; sums to H over valid positions
+
+    flat = k_cache.reshape(C, KV * hd)
+    sq = jnp.sum(flat * flat, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * flat @ flat.T
+    d2 = jnp.maximum(d2, 0.0)
+    ker = jnp.exp(-d2 * inv2sig2) * mask[None, :]
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    rho = jnp.sum(ker, axis=-1) / denom
+    rho = jnp.where(mask, rho, 1.0)
+    attn = jnp.where(mask, attn, 0.0)
+    return attn.astype(jnp.float32), rho.astype(jnp.float32)
+
+
+def hybrid_scores_ref(q, k_cache, valid_len, alpha, inv2sig2):
+    """Full hybrid landmark score (normalised mix of the two fields).
+
+    s_i = alpha * attn_hat_i + (1 - alpha) * (1 - rho_hat_i), masked to
+    valid positions (invalid positions get NEG_INF so top-k never picks
+    them).  attn_hat / rho_hat are max-normalised over valid positions.
+    """
+    attn, rho = hybrid_fields_ref(q, k_cache, valid_len, inv2sig2)
+    C = attn.shape[0]
+    mask = jnp.arange(C) < valid_len
+    attn_hat = attn / jnp.maximum(jnp.max(jnp.where(mask, attn, 0.0)), 1e-30)
+    rho_hat = rho / jnp.maximum(jnp.max(jnp.where(mask, rho, 0.0)), 1e-30)
+    score = alpha * attn_hat + (1.0 - alpha) * (1.0 - rho_hat)
+    return jnp.where(mask, score, NEG_INF)

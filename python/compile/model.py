@@ -1,0 +1,368 @@
+"""Layer-2 JAX model: a Qwen2-style decoder-only transformer, from scratch.
+
+Architecture (matching the paper's Qwen2.5-0.5B testbed one-for-one in
+structure, scaled down per DESIGN.md §4): RMSNorm → GQA attention with RoPE
+→ residual → RMSNorm → SwiGLU MLP → residual; tied byte-level LM head.
+
+The decode path calls the Layer-1 Pallas ``decode_attention`` kernel; the
+synapse path calls the Layer-1 ``hybrid_scores`` kernel.  Both lower (with
+``interpret=True``) into the same HLO module exported by ``aot.py``.
+
+ABI note (DESIGN.md §2): every exported program takes the weights as a flat
+*tuple of arrays* in ``param_spec`` order, so the rust side can load
+``weights_<cfg>.npz`` (keys ``w000_...``, sorted) and pass them as leading
+PJRT buffers — uploaded once, shared by every agent: this is the paper's
+Prism / Singleton Weight Sharing made literal.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, Capacities
+from .kernels.decode_attention import decode_attention
+from .kernels.hybrid_scores import hybrid_scores
+from .kernels import ref as kref
+
+
+# ── Parameter layout ────────────────────────────────────────────────────────
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat weight ABI."""
+    d, hd = cfg.d_model, cfg.head_dim
+    spec: list[tuple[str, tuple[int, ...]]] = [("embed", (cfg.vocab_size, d))]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}_ln1", (d,)),
+            (f"l{i}_wq", (d, cfg.n_heads * hd)),
+            (f"l{i}_wk", (d, cfg.n_kv_heads * hd)),
+            (f"l{i}_wv", (d, cfg.n_kv_heads * hd)),
+            (f"l{i}_wo", (cfg.n_heads * hd, d)),
+            (f"l{i}_ln2", (d,)),
+            (f"l{i}_wg", (d, cfg.d_ff)),
+            (f"l{i}_wu", (d, cfg.d_ff)),
+            (f"l{i}_wd", (cfg.d_ff, d)),
+        ]
+    spec.append(("ln_f", (d,)))
+    return spec
+
+
+class Layer(NamedTuple):
+    ln1: jax.Array
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    ln2: jax.Array
+    wg: jax.Array
+    wu: jax.Array
+    wd: jax.Array
+
+
+class Params(NamedTuple):
+    embed: jax.Array
+    layers: tuple[Layer, ...]
+    ln_f: jax.Array
+
+
+def pack_params(cfg: ModelConfig, flat) -> Params:
+    """Rebuild the structured view from the flat ABI tuple."""
+    spec = param_spec(cfg)
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    by_name = {name: arr for (name, _), arr in zip(spec, flat)}
+    layers = tuple(
+        Layer(*(by_name[f"l{i}_{f}"] for f in Layer._fields))
+        for i in range(cfg.n_layers)
+    )
+    return Params(embed=by_name["embed"], layers=layers, ln_f=by_name["ln_f"])
+
+
+def flatten_params(cfg: ModelConfig, params: Params) -> list[jax.Array]:
+    out = [params.embed]
+    for layer in params.layers:
+        out.extend(layer)
+    out.append(params.ln_f)
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Scaled-Gaussian init (std 0.02, output projections down-scaled)."""
+    spec = param_spec(cfg)
+    flat = []
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")) or name == "ln_f":
+            flat.append(jnp.ones(shape, jnp.float32))
+        else:
+            std = 0.02
+            if name.endswith(("wo", "wd")):
+                std = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+            flat.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return pack_params(cfg, flat)
+
+
+# ── Primitive blocks ────────────────────────────────────────────────────────
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope_cos_sin(cfg: ModelConfig, positions):
+    """RoPE angle tables for integer positions.  positions: [...]."""
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., hd/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """Rotate pairs (llama half-split convention).  x: [..., hd]."""
+    hd = x.shape[-1]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(h, layer: Layer):
+    return (jax.nn.silu(h @ layer.wg) * (h @ layer.wu)) @ layer.wd
+
+
+# ── Prefill (sequence) path — plain jnp attention ───────────────────────────
+
+def _seq_attention(q, k, v, mask, cfg: ModelConfig):
+    """Masked GQA attention over a full sequence.  q:[S,H,hd] k,v:[S,KV,hd]."""
+    S = q.shape[0]
+    KV, G = cfg.n_kv_heads, cfg.gqa_groups
+    qg = q.reshape(S, KV, G, cfg.head_dim)
+    s = jnp.einsum("ikgd,jkd->kgij", qg, k) / (cfg.head_dim ** 0.5)
+    s = jnp.where(mask[None, None, :, :], s, kref.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None, :, :], p, 0.0)
+    out = jnp.einsum("kgij,jkd->ikgd", p, v)
+    return out.reshape(S, cfg.n_heads * cfg.head_dim)
+
+
+def forward_sequence(cfg: ModelConfig, params: Params, tokens, positions, length):
+    """Causal forward pass over a (padded) token sequence.
+
+    Args:
+      tokens:    [S] i32, padded with PAD beyond ``length``.
+      positions: [S] i32 RoPE positions (prefill: arange; injection: offset).
+      length:    scalar i32 count of real tokens.
+
+    Returns:
+      (hidden[S, D] final-layer normed states, k[L, S, KV, hd], v[L, S, KV, hd])
+    """
+    S = tokens.shape[0]
+    x = params.embed[tokens]  # [S, D]
+    cos, sin = rope_cos_sin(cfg, positions)  # [S, hd/2]
+    idx = jnp.arange(S)
+    causal = idx[None, :] <= idx[:, None]
+    valid = idx[None, :] < length
+    mask = causal & valid
+    ks, vs = [], []
+    for layer in params.layers:
+        h = rms_norm(x, layer.ln1, cfg.norm_eps)
+        q = (h @ layer.wq).reshape(S, cfg.n_heads, cfg.head_dim)
+        k = (h @ layer.wk).reshape(S, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ layer.wv).reshape(S, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+        x = x + _seq_attention(q, k, v, mask, cfg) @ layer.wo
+        h = rms_norm(x, layer.ln2, cfg.norm_eps)
+        x = x + swiglu(h, layer)
+        ks.append(k)
+        vs.append(v)
+    hidden = rms_norm(x, params.ln_f, cfg.norm_eps)
+    return hidden, jnp.stack(ks), jnp.stack(vs)
+
+
+# ── Exported programs ───────────────────────────────────────────────────────
+# Each ``make_*`` returns a function over (flat_params, *step_args) that
+# aot.py jits and lowers to one HLO artifact.
+
+def make_prefill(cfg: ModelConfig, S: int, C: int):
+    """prefill_s{S}_c{C}: prompt → logits + KV cache (in capacity-C layout).
+
+    (tokens[S] i32, length i32) →
+      (logits[S, V], hidden_last[D], k_cache[L, C, KV, hd], v_cache[...])
+    """
+
+    def prefill(flat, tokens, length):
+        params = pack_params(cfg, flat)
+        positions = jnp.arange(S, dtype=jnp.int32)
+        hidden, ks, vs = forward_sequence(cfg, params, tokens, positions, length)
+        logits = hidden @ params.embed.T
+        hidden_last = hidden[jnp.clip(length - 1, 0, S - 1)]
+        pad = [(0, 0), (0, C - S), (0, 0), (0, 0)]
+        return logits, hidden_last, jnp.pad(ks, pad), jnp.pad(vs, pad)
+
+    return prefill
+
+
+def make_inject_encode(cfg: ModelConfig, T: int):
+    """inject_encode_t{T}: Referential-Injection reference pass (§3.6).
+
+    Runs the thought tokens through the model *at virtual RoPE positions*
+    ``pos_base + i`` and returns only the resulting K/V entries (plus the
+    last hidden state, which the Validation Gate may score).  The rust side
+    appends these rows to the Main Agent's cache: the agent "remembers" the
+    thought without any visible-stream tokens.
+
+    (tokens[T] i32, length i32, pos_base i32) →
+      (k[L, T, KV, hd], v[L, T, KV, hd], hidden_last[D])
+    """
+
+    def inject_encode(flat, tokens, length, pos_base):
+        params = pack_params(cfg, flat)
+        positions = pos_base + jnp.arange(T, dtype=jnp.int32)
+        hidden, ks, vs = forward_sequence(cfg, params, tokens, positions, length)
+        hidden_last = hidden[jnp.clip(length - 1, 0, T - 1)]
+        return ks, vs, hidden_last
+
+    return inject_encode
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, pos, k_cache, v_cache,
+                cache_len, *, use_pallas=True):
+    """One decode step over capacity-C caches.
+
+    The new token's K/V rows are written at ``cache_len`` (the caller then
+    treats the cache as holding ``cache_len + 1`` rows).  Attention runs over
+    the updated cache via the Layer-1 Pallas kernel.
+
+    Returns (logits[V], hidden[D], k_new[L, KV, hd], v_new[L, KV, hd]).
+    """
+    x = params.embed[token]  # [D]
+    cos, sin = rope_cos_sin(cfg, pos)  # [hd/2]
+    k_news, v_news = [], []
+    for li, layer in enumerate(params.layers):
+        h = rms_norm(x, layer.ln1, cfg.norm_eps)
+        q = (h @ layer.wq).reshape(cfg.n_heads, cfg.head_dim)
+        k_new = (h @ layer.wk).reshape(cfg.n_kv_heads, cfg.head_dim)
+        v_new = (h @ layer.wv).reshape(cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos[None, :], sin[None, :])
+        k_new = apply_rope(k_new, cos[None, :], sin[None, :])
+        kc = jax.lax.dynamic_update_slice(k_cache[li], k_new[None], (cache_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[li], v_new[None], (cache_len, 0, 0))
+        if use_pallas:
+            attn = decode_attention(q, kc, vc, cache_len + 1)
+        else:
+            attn = kref.decode_attention_ref(q, kc, vc, cache_len + 1)
+        x = x + attn.reshape(-1) @ layer.wo
+        h = rms_norm(x, layer.ln2, cfg.norm_eps)
+        x = x + swiglu(h, layer)
+        k_news.append(k_new)
+        v_news.append(v_new)
+    hidden = rms_norm(x, params.ln_f, cfg.norm_eps)
+    logits = hidden @ params.embed.T
+    return logits, hidden, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def make_decode(cfg: ModelConfig, C: int, *, use_pallas=True):
+    """decode_c{C}: one-token decode.
+
+    (token i32, pos i32, k_cache[L,C,KV,hd], v_cache[...], cache_len i32) →
+      (logits[V], hidden[D], k_new[L,KV,hd], v_new[L,KV,hd])
+    """
+
+    def decode(flat, token, pos, k_cache, v_cache, cache_len):
+        params = pack_params(cfg, flat)
+        return decode_step(cfg, params, token, pos, k_cache, v_cache,
+                           cache_len, use_pallas=use_pallas)
+
+    return decode
+
+
+def make_decode_batch(cfg: ModelConfig, B: int, C: int, *, use_pallas=True):
+    """decode_batch_b{B}_c{C}: the dynamic batcher's target (vmapped decode).
+
+    (tokens[B] i32, pos[B] i32, k_cache[B,L,C,KV,hd], v_cache[...],
+     cache_len[B] i32) →
+      (logits[B,V], hidden[B,D], k_new[B,L,KV,hd], v_new[B,L,KV,hd])
+    """
+
+    def one(flat, token, pos, k_cache, v_cache, cache_len):
+        params = pack_params(cfg, flat)
+        return decode_step(cfg, params, token, pos, k_cache, v_cache,
+                           cache_len, use_pallas=use_pallas)
+
+    def batch(flat, tokens, pos, k_caches, v_caches, cache_lens):
+        return jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0))(
+            flat, tokens, pos, k_caches, v_caches, cache_lens
+        )
+
+    return batch
+
+
+def make_synapse_extract(cfg: ModelConfig, C: int, K: int, *, use_pallas=True,
+                         scoring_layer: int | None = None):
+    """synapse_extract_c{C}_k{K}: the Topological Synapse sampler (§3.3).
+
+    Scores every cached position with the hybrid density-coverage kernel
+    (driven by the Main Agent's current query state, derived from its last
+    hidden state via the scoring layer's Wq), selects the top-K landmarks,
+    re-sorts them into temporal order, and gathers their K/V rows across
+    *all* layers into a side-agent-shaped landmark cache.
+
+    (hidden[D], k_cache[L,C,KV,hd], v_cache[...], cache_len i32,
+     alpha f32, inv2sig2 f32) →
+      (lm_k[L,K,KV,hd], lm_v[L,K,KV,hd], indices[K] i32, sel_scores[K] f32)
+    """
+    sl = cfg.n_layers - 1 if scoring_layer is None else scoring_layer
+
+    def extract(flat, hidden, k_cache, v_cache, cache_len, alpha, inv2sig2):
+        params = pack_params(cfg, flat)
+        layer = params.layers[sl]
+        q = (hidden @ layer.wq).reshape(cfg.n_heads, cfg.head_dim)
+        cos, sin = rope_cos_sin(cfg, cache_len)
+        q = apply_rope(q, cos[None, :], sin[None, :])
+        if use_pallas:
+            scores = hybrid_scores(q, k_cache[sl], cache_len, alpha, inv2sig2)
+        else:
+            scores = kref.hybrid_scores_ref(q, k_cache[sl], cache_len, alpha, inv2sig2)
+        # NOTE: not lax.top_k — it lowers to the `topk` HLO op, which the
+        # xla_extension 0.5.1 text parser (behind the rust `xla` crate)
+        # rejects.  argsort lowers to plain `sort` and round-trips.
+        order_desc = jnp.argsort(-scores)
+        idx = order_desc[:K]
+        vals = scores[idx]
+        # clamp (cache_len < K never happens in the runtime, but stay safe)
+        idx = jnp.minimum(idx, jnp.maximum(cache_len - 1, 0))
+        # temporal re-sort: landmarks keep their original RoPE positions, so
+        # the side agent sees them in causal order.
+        order = jnp.argsort(idx)
+        idx = idx[order].astype(jnp.int32)
+        vals = vals[order]
+        lm_k = jnp.take(k_cache, idx, axis=1)  # [L, K, KV, hd]
+        lm_v = jnp.take(v_cache, idx, axis=1)
+        # indices returned as f32: readback of mixed f32/s32 output tuples
+        # segfaults in xla_extension 0.5.1 (runtime converts back to i32;
+        # exact for idx < 2^24).
+        return lm_k, lm_v, idx.astype(jnp.float32), vals
+
+    return extract
+
+
+# ── Training-path loss (plain-jnp attention; used by train.py) ─────────────
+
+def lm_loss(cfg: ModelConfig, params: Params, tokens, length):
+    """Next-byte cross-entropy over one padded sequence.  tokens: [S] i32."""
+    S = tokens.shape[0]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    hidden, _, _ = forward_sequence(cfg, params, tokens, positions, length)
+    logits = hidden @ params.embed.T  # [S, V]
+    targets = jnp.roll(tokens, -1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+    mask = (jnp.arange(S) < length - 1).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def batched_lm_loss(cfg: ModelConfig, params: Params, tokens, lengths):
+    per = jax.vmap(lambda t, l: lm_loss(cfg, params, t, l))(tokens, lengths)
+    return jnp.mean(per)

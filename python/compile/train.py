@@ -1,0 +1,84 @@
+"""Build-time training of the from-scratch byte-LM (DESIGN.md §4).
+
+A few hundred Adam steps of next-byte prediction on the synthetic
+agent-council corpus, so the served model produces structured text (including
+``[TASK: ...]`` router triggers) instead of noise.  Fully deterministic:
+seeded corpus, seeded init, seeded batch sampling.
+
+Runs with the plain-jnp attention path (no Pallas in the training loop); the
+pytest suite separately asserts that the jnp and Pallas decode paths agree on
+the *trained* weights.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import ModelConfig, BOS_ID
+from .corpus import build_corpus
+
+SEQ_LEN = 128
+BATCH = 16
+PEAK_LR = 3e-3
+WARMUP = 40
+
+
+def sample_batch(data: np.ndarray, rng: np.random.Generator, batch: int, seq: int):
+    """Random corpus windows, each prefixed with BOS."""
+    starts = rng.integers(0, len(data) - seq, size=batch)
+    toks = np.stack([
+        np.concatenate([[BOS_ID], data[s : s + seq - 1]]) for s in starts
+    ]).astype(np.int32)
+    lengths = np.full((batch,), seq, np.int32)
+    return jnp.asarray(toks), jnp.asarray(lengths)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return zeros, jax.tree.map(jnp.zeros_like, params)
+
+
+def train(cfg: ModelConfig, steps: int, seed: int = 0, log_every: int = 50,
+          corpus_seed: int = 7) -> M.Params:
+    """Train and return Params.  ~10-40 ms/step on CPU for tiny/small."""
+    data = np.frombuffer(build_corpus(seed=corpus_seed), dtype=np.uint8)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    m, v = adam_init(params)
+    rng = np.random.default_rng(seed + 1)
+
+    b1, b2, eps = 0.9, 0.95, 1e-8
+
+    @jax.jit
+    def step_fn(params, m, v, toks, lens, t):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.batched_lm_loss(cfg, p, toks, lens)
+        )(params)
+        lr = PEAK_LR * jnp.minimum(1.0, t / WARMUP) * (
+            0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(t / steps, 1.0)))
+        )
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+        v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+        tt = t + 1.0
+        params = jax.tree.map(
+            lambda p, mi, vi: p
+            - lr * (mi / (1 - b1 ** tt)) / (jnp.sqrt(vi / (1 - b2 ** tt)) + eps),
+            params, m, v,
+        )
+        return params, m, v, loss
+
+    t0 = time.time()
+    for t in range(steps):
+        toks, lens = sample_batch(data, rng, BATCH, SEQ_LEN)
+        params, m, v, loss = step_fn(params, m, v, toks, lens, jnp.float32(t))
+        if t % log_every == 0 or t == steps - 1:
+            print(
+                f"[train:{cfg.name}] step {t:4d}/{steps} "
+                f"loss {float(loss):.4f}  ({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return params

@@ -1,0 +1,91 @@
+"""AOT export consistency: the built artifacts/ tree must exist, be
+internally consistent (manifest ↔ files ↔ weights ABI ↔ goldens), and the
+HLO text must avoid constructs xla_extension 0.5.1 rejects."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import CONFIGS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_configs(manifest):
+    assert set(manifest["configs"]) == set(CONFIGS)
+    assert "qwen2_5_0_5b" in manifest["analytic_configs"]
+
+
+def test_artifact_files_exist(manifest):
+    for cfg in manifest["configs"].values():
+        assert os.path.exists(os.path.join(ART, cfg["weights_file"]))
+        assert os.path.exists(os.path.join(ART, cfg["golden_file"]))
+        for a in cfg["artifacts"]:
+            path = os.path.join(ART, a["file"])
+            assert os.path.exists(path), a["file"]
+            assert os.path.getsize(path) > 1000
+
+
+def test_weights_match_param_spec(manifest):
+    for name, cfg in manifest["configs"].items():
+        spec = M.param_spec(CONFIGS[name])
+        with np.load(os.path.join(ART, cfg["weights_file"])) as z:
+            keys = sorted(z.files)
+            assert len(keys) == len(spec)
+            for key, (pname, shape) in zip(keys, spec):
+                assert key.endswith(pname), (key, pname)
+                assert z[key].shape == shape
+                assert z[key].dtype == np.float32
+        assert len(cfg["weight_params"]) == len(spec)
+
+
+def test_no_unparseable_hlo_ops(manifest):
+    """Guards the 0.5.1-parser constraints: no `topk` op (lax.top_k) and no
+    mixed-dtype output tuples (readback segfault) — see DESIGN.md §4."""
+    for cfg in manifest["configs"].values():
+        for a in cfg["artifacts"]:
+            text = open(os.path.join(ART, a["file"])).read()
+            assert " topk(" not in text, f"{a['file']} uses topk"
+            out_dtypes = {o["dtype"] for o in a["outputs"]}
+            assert out_dtypes == {"f32"}, (a["name"], out_dtypes)
+
+
+def test_golden_structure(manifest):
+    for cfg in manifest["configs"].values():
+        with open(os.path.join(ART, cfg["golden_file"])) as f:
+            g = json.load(f)
+        k = cfg["capacities"]["synapse_k"]
+        assert len(g["prompt_tokens"]) >= k, "golden prompt shorter than K"
+        assert len(g["decode_steps"]) >= 4
+        idx = g["synapse"]["indices"]
+        assert len(idx) == k
+        assert all(idx[i] < idx[i + 1] for i in range(len(idx) - 1))
+        assert all(0 <= i < g["synapse"]["cache_len"] for i in idx)
+
+
+def test_capacities_consistent(manifest):
+    for cfg in manifest["configs"].values():
+        caps = cfg["capacities"]
+        assert caps["synapse_k"] < caps["side_ctx"] <= caps["main_ctx"]
+        assert caps["prefill_len"] <= caps["main_ctx"]
+        assert caps["inject_len"] <= caps["side_ctx"]
+
+
+def test_flops_positive(manifest):
+    for cfg in manifest["configs"].values():
+        for a in cfg["artifacts"]:
+            assert a["flops"] > 0

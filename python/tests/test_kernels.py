@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+hypothesis sweeps the shape/dtype space; every case asserts allclose between
+the interpret-mode Pallas kernel and `kernels/ref.py`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import decode_attention, _block_c
+from compile.kernels.hybrid_scores import hybrid_fields, hybrid_scores
+from compile.kernels import ref
+
+# Shapes: (H, KV, hd, C) — GQA ratios 1, 2 and 4; capacities that exercise
+# both single-tile and multi-tile grids.
+SHAPES = st.sampled_from([
+    (4, 2, 16, 64),
+    (4, 2, 16, 512),
+    (8, 2, 16, 96),
+    (8, 4, 8, 128),
+    (2, 2, 4, 32),
+    (4, 1, 8, 48),
+    (14, 2, 64, 128),  # qwen-0.5b head geometry
+])
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+class TestDecodeAttention:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**31 - 1),
+           frac=st.floats(0.01, 1.0))
+    def test_matches_ref(self, shape, seed, frac):
+        H, KV, hd, C = shape
+        key = jax.random.PRNGKey(seed)
+        q = rand(jax.random.fold_in(key, 0), (H, hd))
+        k = rand(jax.random.fold_in(key, 1), (C, KV, hd))
+        v = rand(jax.random.fold_in(key, 2), (C, KV, hd))
+        vl = max(1, int(frac * C))
+        out = decode_attention(q, k, v, jnp.int32(vl))
+        expect = ref.decode_attention_ref(q, k, v, jnp.int32(vl))
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=2e-5)
+
+    def test_single_valid_row_returns_its_value(self):
+        # With one valid row, attention must return exactly V[0].
+        H, KV, hd, C = 4, 2, 16, 64
+        key = jax.random.PRNGKey(0)
+        q = rand(key, (H, hd))
+        k = rand(jax.random.fold_in(key, 1), (C, KV, hd))
+        v = rand(jax.random.fold_in(key, 2), (C, KV, hd))
+        out = np.asarray(decode_attention(q, k, v, jnp.int32(1)))
+        G = H // KV
+        for h in range(H):
+            np.testing.assert_allclose(out[h], v[0, h // G], rtol=1e-5, atol=1e-6)
+
+    def test_junk_beyond_valid_len_is_ignored(self):
+        H, KV, hd, C = 4, 2, 16, 64
+        key = jax.random.PRNGKey(1)
+        q = rand(key, (H, hd))
+        k = rand(jax.random.fold_in(key, 1), (C, KV, hd))
+        v = rand(jax.random.fold_in(key, 2), (C, KV, hd))
+        vl = 17
+        out1 = decode_attention(q, k, v, jnp.int32(vl))
+        # poison the invalid region
+        k2 = k.at[vl:].set(1e6)
+        v2 = v.at[vl:].set(-1e6)
+        out2 = decode_attention(q, k2, v2, jnp.int32(vl))
+        np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+    def test_uniform_scores_average_values(self):
+        # identical keys => uniform attention => output = mean of values
+        H, KV, hd, C = 2, 2, 8, 32
+        key = jax.random.PRNGKey(2)
+        k = jnp.broadcast_to(rand(key, (1, KV, hd)), (C, KV, hd))
+        v = rand(jax.random.fold_in(key, 1), (C, KV, hd))
+        q = rand(jax.random.fold_in(key, 2), (H, hd))
+        vl = 20
+        out = np.asarray(decode_attention(q, k, v, jnp.int32(vl)))
+        expect = np.asarray(v[:vl].mean(axis=0))
+        for h in range(H):
+            np.testing.assert_allclose(out[h], expect[h], rtol=1e-4, atol=1e-5)
+
+    def test_block_c_divides(self):
+        for C in (8, 16, 32, 48, 64, 96, 128, 256, 512):
+            assert C % _block_c(C) == 0
+            assert _block_c(C) <= 128
+
+
+class TestHybridScores:
+    @settings(max_examples=15, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**31 - 1),
+           frac=st.floats(0.02, 1.0), sig=st.floats(0.001, 0.5))
+    def test_fields_match_ref(self, shape, seed, frac, sig):
+        H, KV, hd, C = shape
+        key = jax.random.PRNGKey(seed)
+        q = rand(jax.random.fold_in(key, 0), (H, hd))
+        k = rand(jax.random.fold_in(key, 1), (C, KV, hd))
+        vl = max(1, int(frac * C))
+        a, r = hybrid_fields(q, k, jnp.int32(vl), jnp.float32(sig))
+        ae, re_ = ref.hybrid_fields_ref(q, k, jnp.int32(vl), jnp.float32(sig))
+        np.testing.assert_allclose(a, ae, rtol=1e-4, atol=2e-5)
+        np.testing.assert_allclose(r, re_, rtol=1e-4, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), alpha=st.floats(0.0, 1.0))
+    def test_scores_match_ref(self, seed, alpha):
+        H, KV, hd, C = 4, 2, 16, 128
+        key = jax.random.PRNGKey(seed)
+        q = rand(jax.random.fold_in(key, 0), (H, hd))
+        k = rand(jax.random.fold_in(key, 1), (C, KV, hd))
+        vl = 100
+        s = hybrid_scores(q, k, jnp.int32(vl), jnp.float32(alpha), jnp.float32(0.02))
+        se = ref.hybrid_scores_ref(q, k, jnp.int32(vl), jnp.float32(alpha), jnp.float32(0.02))
+        mask = np.arange(C) < vl
+        np.testing.assert_allclose(
+            np.asarray(s)[mask], np.asarray(se)[mask], rtol=1e-4, atol=3e-5
+        )
+
+    def test_attention_mass_sums_to_num_heads(self):
+        # sum_i A_i == H over valid positions (softmax rows sum to 1 per head)
+        H, KV, hd, C = 4, 2, 16, 128
+        key = jax.random.PRNGKey(5)
+        q = rand(key, (H, hd))
+        k = rand(jax.random.fold_in(key, 1), (C, KV, hd))
+        a, _ = hybrid_fields(q, k, jnp.int32(77), jnp.float32(0.02))
+        assert abs(float(a.sum()) - H) < 1e-3
+
+    def test_invalid_rows_never_win(self):
+        H, KV, hd, C = 4, 2, 16, 64
+        key = jax.random.PRNGKey(6)
+        q = rand(key, (H, hd))
+        k = rand(jax.random.fold_in(key, 1), (C, KV, hd))
+        vl = 10
+        s = np.asarray(hybrid_scores(q, k, jnp.int32(vl), jnp.float32(0.5),
+                                     jnp.float32(0.02)))
+        assert s[:vl].min() > s[vl:].max()
+
+    def test_density_flags_duplicates(self):
+        # a tight cluster of duplicate keys must have higher density than an
+        # isolated outlier => coverage term (1-rho) prefers the outlier
+        H, KV, hd, C = 2, 1, 8, 32
+        key = jax.random.PRNGKey(7)
+        base = rand(key, (1, KV, hd), 0.05)
+        k = jnp.broadcast_to(base, (C, KV, hd))
+        k = k.at[13].set(5.0)  # the outlier
+        q = jnp.zeros((H, hd), jnp.float32)  # attention term ~uniform
+        _, rho = hybrid_fields(q, k, jnp.int32(C), jnp.float32(0.05))
+        rho = np.asarray(rho)
+        assert rho[13] < rho[0], (rho[13], rho[0])
+        s = np.asarray(hybrid_scores(q, k, jnp.int32(C), jnp.float32(0.0),
+                                     jnp.float32(0.05)))
+        assert s.argmax() == 13

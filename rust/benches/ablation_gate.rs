@@ -1,0 +1,100 @@
+//! Bench A2 — Validation Gate threshold sweep (paper §3.5: θ "tuned for
+//! precision-recall trade-offs, empirically set to 0.5").
+//!
+//! Runs identical council episodes at each θ and reports the gate's
+//! behaviour: evaluated / accepted / merged / mean score.  The shape to
+//! reproduce: accept-rate decreases monotonically in θ, with θ=0
+//! accepting everything and high θ rejecting everything.
+//!
+//! ```bash
+//! cargo bench --bench ablation_gate
+//! ```
+
+use std::sync::Arc;
+
+use warp_cortex::cortex::{CortexConfig, Event, WarpCortex};
+use warp_cortex::model::Engine;
+use warp_cortex::runtime::{DeviceHandle, DeviceOptions};
+use warp_cortex::text::SamplerConfig;
+
+const THETAS: [f32; 6] = [-1.0, 0.0, 0.1, 0.3, 0.5, 0.9];
+const EPISODES: usize = 3;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("WARP_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+    let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&[&model]))?;
+    let engine = Engine::new(device, &model)?;
+
+    let prompt = "user: tell me about the kv cache.\nriver: the cache grows \
+                  one row per token. the synapse selects landmark tokens. \
+                  [TASK: verify the math] [RECALL: the definition]\nriver: ";
+
+    println!("═══ A2: Validation Gate θ sweep ═══\n");
+    println!(
+        "{:>7} {:>10} {:>10} {:>8} {:>12} {:>12}",
+        "θ", "evaluated", "accepted", "merged", "accept rate", "mean score"
+    );
+
+    let mut rates = Vec::new();
+    for &theta in &THETAS {
+        let mut evaluated = 0u64;
+        let mut accepted = 0u64;
+        let mut merged = 0usize;
+        let mut score_sum = 0.0f64;
+        for ep in 0..EPISODES {
+            let cortex = WarpCortex::new(
+                engine.clone(),
+                CortexConfig {
+                    model: model.clone(),
+                    max_side_agents: 2,
+                    side_gen_budget: 10,
+                    synapse_refresh_every: 16,
+                    gate_theta: Some(theta),
+                    sampler: SamplerConfig {
+                        temperature: 0.7,
+                        seed: 1000 + ep as u64,
+                        ..SamplerConfig::default()
+                    },
+                    ..CortexConfig::default()
+                },
+            )?;
+            let cortex = Arc::new(cortex);
+            let report = cortex.run_episode(prompt, 48)?;
+            evaluated += report.gate.evaluated;
+            accepted += report.gate.accepted;
+            score_sum += report.gate.mean_score() * report.gate.evaluated as f64;
+            merged += report
+                .events
+                .iter()
+                .filter(|e| matches!(e, Event::Merged { .. }))
+                .count();
+        }
+        let rate = if evaluated > 0 {
+            accepted as f64 / evaluated as f64
+        } else {
+            0.0
+        };
+        rates.push((theta, rate));
+        println!(
+            "{:>7.2} {:>10} {:>10} {:>8} {:>11.0}% {:>12.4}",
+            theta,
+            evaluated,
+            accepted,
+            merged,
+            rate * 100.0,
+            if evaluated > 0 { score_sum / evaluated as f64 } else { 0.0 },
+        );
+    }
+
+    // Shape: monotone non-increasing accept rate; θ=-1 accepts all.
+    for w in rates.windows(2) {
+        assert!(
+            w[1].1 <= w[0].1 + 1e-9,
+            "accept rate not monotone: {:?}",
+            rates
+        );
+    }
+    assert!((rates[0].1 - 1.0).abs() < 1e-9, "θ=-1 must accept everything");
+    println!("\nshape check: accept rate monotone in θ, θ=-1 accepts all  ✓");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Bench A3 — Referential Injection (§3.6) vs the traditional alternative
+//! ("pasting text into the context, which disrupts the Main Agent's
+//! generation flow").
+//!
+//! Both mechanisms deliver the same thought to the main agent; we measure
+//! what each costs:
+//!
+//! * visible-stream disruption (tokens inserted into the text stream),
+//! * wall latency on the main agent's critical path,
+//! * KV growth,
+//! * influence (max |Δlogit| on the next decode step) — both must influence
+//!   generation, only text-paste may disrupt the stream.
+//!
+//! ```bash
+//! cargo bench --bench ablation_injection
+//! ```
+
+use warp_cortex::cortex::Injector;
+use warp_cortex::model::Engine;
+use warp_cortex::runtime::{DeviceHandle, DeviceOptions, Lane};
+use warp_cortex::text::Tokenizer;
+use warp_cortex::util::timer::{bench_median, format_ns};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("WARP_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+    let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&[&model]))?;
+    let engine = Engine::new(device, &model)?;
+    let tk = Tokenizer::new();
+    let injector = Injector::new(16);
+
+    // main agent mid-generation
+    let prompt = tk.encode("user: what is a kilobyte?\nriver: a kilobyte is ", true);
+    let mut kv = engine.new_main_cache();
+    let pre = engine.prefill(&prompt, &mut kv, Lane::River)?;
+    let pos = kv.len() as i32;
+    let next_token = 32i32; // the token the main agent is about to decode
+
+    let thought = tk.encode("fact: a kilobyte is 1024 bytes", false);
+    let thought_len = thought.len().min(engine.caps().inject_len);
+
+    // baseline next-step logits (no thought delivered)
+    let baseline = {
+        let mut c = kv.clone();
+        engine.decode(next_token, pos, &mut c, Lane::River)?.logits
+    };
+    let influence = |logits: &[f32]| {
+        logits
+            .iter()
+            .zip(&baseline)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    };
+
+    println!("═══ A3: Referential Injection vs text-paste ═══\n");
+    println!(
+        "{:<22} {:>12} {:>14} {:>10} {:>12}",
+        "mechanism", "disruption", "latency p50", "KV rows", "influence"
+    );
+
+    // ── Referential Injection ──
+    let inj_lat = bench_median(2, 12, || {
+        let mut c = kv.clone();
+        injector
+            .inject(&engine, &mut c, &thought, pos, Lane::Stream)
+            .expect("inject");
+        std::hint::black_box(&c);
+    });
+    let (inj_rows, inj_influence) = {
+        let mut c = kv.clone();
+        let report = injector.inject(&engine, &mut c, &thought, pos, Lane::Stream)?;
+        let out = engine.decode(next_token, pos, &mut c, Lane::River)?;
+        (report.rows, influence(&out.logits))
+    };
+    println!(
+        "{:<22} {:>12} {:>14} {:>10} {:>12.4}",
+        "referential inject",
+        "0 tokens",
+        inj_lat.format_time(),
+        inj_rows,
+        inj_influence
+    );
+
+    // ── Text paste: decode the thought tokens through the visible stream ──
+    let paste_lat = bench_median(2, 12, || {
+        let mut c = kv.clone();
+        let mut p = pos;
+        for &id in &thought[..thought_len] {
+            engine.decode(id, p, &mut c, Lane::River).expect("decode");
+            p += 1;
+        }
+        std::hint::black_box(&c);
+    });
+    let paste_influence = {
+        let mut c = kv.clone();
+        let mut p = pos;
+        for &id in &thought[..thought_len] {
+            engine.decode(id, p, &mut c, Lane::River)?;
+            p += 1;
+        }
+        // the next "real" token now sits after the pasted text
+        let out = engine.decode(next_token, p, &mut c, Lane::River)?;
+        influence(&out.logits)
+    };
+    println!(
+        "{:<22} {:>12} {:>14} {:>10} {:>12.4}",
+        "text paste",
+        format!("{thought_len} tokens"),
+        paste_lat.format_time(),
+        thought_len,
+        paste_influence
+    );
+
+    println!(
+        "\nper-token paste cost: {} — injection amortises the whole thought into \
+         one reference pass off the River lane",
+        format_ns(paste_lat.median_ns / thought_len as f64)
+    );
+
+    // the paper's positional-integrity claim: injected keys carry virtual
+    // RoPE positions, so the main agent's own position bookkeeping (and its
+    // visible stream) is unchanged — 0 disruption by construction, while
+    // both mechanisms demonstrably influence the next-token distribution.
+    assert!(inj_influence > 1e-4, "injection must influence generation");
+    assert!(paste_influence > 1e-4);
+    println!("\nshape check: 0-token disruption with non-zero influence  ✓");
+
+    let _ = pre;
+    Ok(())
+}

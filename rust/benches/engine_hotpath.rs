@@ -1,0 +1,179 @@
+//! Perf baseline — per-op latency of every compiled program through the full
+//! runtime path (marshal → lane queue → PJRT execute → readback).  This is
+//! the §Perf L3 measurement harness: EXPERIMENTS.md records before/after of
+//! the optimization passes from these numbers.
+//!
+//! ```bash
+//! cargo bench --bench engine_hotpath
+//! ```
+
+use warp_cortex::model::Engine;
+use warp_cortex::runtime::{DeviceHandle, DeviceOptions, Lane};
+use warp_cortex::text::Tokenizer;
+use warp_cortex::util::timer::bench_median;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("WARP_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+    let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&[&model]))?;
+    let engine = Engine::new(device.clone(), &model)?;
+    let tk = Tokenizer::new();
+    let manifest = device.manifest().config(&model)?.clone();
+
+    let prompt = tk.encode(
+        "user: tell me about the kv cache.\nriver: the cache grows one row \
+         per token. the synapse selects landmark tokens.\nriver: ",
+        true,
+    );
+    let mut kv = engine.new_main_cache();
+    let pre = engine.prefill(&prompt, &mut kv, Lane::River)?;
+    // grow context so decode pays a realistic upload
+    {
+        let v = engine.config().vocab_size;
+        let mut logits = pre.logits[(pre.len - 1) * v..pre.len * v].to_vec();
+        while kv.len() < 256 {
+            let id = warp_cortex::util::vecmath::argmax(&logits) as i32;
+            let id = if id >= 256 { 32 } else { id };
+            logits = engine.decode(id, kv.len() as i32, &mut kv, Lane::River)?.logits;
+        }
+    }
+    let hidden = pre.hidden_last.clone();
+
+    // side cache for side/batch paths
+    let s = engine.synapse_extract(&hidden, &kv, Lane::Background)?;
+    let mut side_kv = engine.new_side_cache();
+    side_kv.append_rows(s.indices.len(), &s.lm_k, &s.lm_v)?;
+    let side_pos = s.source_len as i32;
+
+    println!("═══ engine hot-path op latency ({model}) ═══\n");
+    println!(
+        "{:<26} {:>12} {:>12} {:>12} {:>14}",
+        "op", "p50", "p10", "p90", "derived"
+    );
+    let flops_of = |prefix: &str| {
+        manifest
+            .artifacts
+            .iter()
+            .find(|a| a.program.starts_with(prefix))
+            .map(|a| a.flops)
+            .unwrap_or(0)
+    };
+    let print_row = |name: &str, stats: warp_cortex::util::timer::BenchStats, derived: String| {
+        println!(
+            "{:<26} {:>12} {:>12} {:>12} {:>14}",
+            name,
+            warp_cortex::util::timer::format_ns(stats.median_ns),
+            warp_cortex::util::timer::format_ns(stats.p10_ns),
+            warp_cortex::util::timer::format_ns(stats.p90_ns),
+            derived
+        );
+        stats.median_ns
+    };
+
+    // decode (main cache) across context lengths — exercises the capacity-
+    // tier dispatcher (§Perf opt A): short contexts route to small tiers.
+    let mut decode_ns = 0.0;
+    for target_len in [64usize, 120, 250, 400] {
+        let mut base = kv.clone();
+        // shrink/grow the working cache to the target length
+        while base.len() > target_len {
+            base = {
+                let mut fresh = engine.new_main_cache();
+                let (k, v) = kv.gather_rows(&(0..target_len).collect::<Vec<_>>());
+                fresh.append_rows(target_len, &k, &v).unwrap();
+                fresh
+            };
+        }
+        while base.len() < target_len {
+            engine.decode(32, base.len() as i32, &mut base, Lane::River)?;
+        }
+        let st = bench_median(5, 60, || {
+            let mut c = base.clone();
+            let out = engine.decode(32, c.len() as i32, &mut c, Lane::River).unwrap();
+            std::hint::black_box(out);
+        });
+        decode_ns = st.median_ns;
+        print_row(
+            &format!("decode (main, len={target_len})"),
+            st.clone(),
+            format!("{:.0} tok/s", 1e9 / st.median_ns),
+        );
+    }
+
+    // decode (side ctx)
+    let st = bench_median(5, 40, || {
+        let mut c = side_kv.clone();
+        let out = engine.decode(32, side_pos, &mut c, Lane::Stream).unwrap();
+        std::hint::black_box(out);
+    });
+    print_row(
+        "decode (side, C=96)",
+        st.clone(),
+        format!("{:.0} tok/s", 1e9 / st.median_ns),
+    );
+
+    // batched side decode
+    let b = engine.caps().decode_batch;
+    let st = bench_median(3, 25, || {
+        let mut caches: Vec<_> = (0..b).map(|_| side_kv.clone()).collect();
+        let mut slots: Vec<(i32, i32, &mut warp_cortex::model::KvCache)> = caches
+            .iter_mut()
+            .map(|c| (32, side_pos, c))
+            .collect();
+        let out = engine.decode_batch(&mut slots, Lane::Stream).unwrap();
+        std::hint::black_box(out);
+    });
+    print_row(
+        &format!("decode_batch (B={b})"),
+        st.clone(),
+        format!("{:.0} tok/s", b as f64 * 1e9 / st.median_ns),
+    );
+
+    // prefill
+    let st = bench_median(2, 15, || {
+        let mut c = engine.new_main_cache();
+        let out = engine.prefill(&prompt, &mut c, Lane::River).unwrap();
+        std::hint::black_box(out);
+    });
+    let prefill_flops = flops_of("prefill") as f64;
+    print_row(
+        "prefill (S=128)",
+        st.clone(),
+        format!("{:.2} GFLOP/s", prefill_flops / st.median_ns),
+    );
+
+    // synapse extract
+    let st = bench_median(3, 25, || {
+        let out = engine.synapse_extract(&hidden, &kv, Lane::Background).unwrap();
+        std::hint::black_box(out);
+    });
+    print_row(
+        "synapse_extract (C=512)",
+        st.clone(),
+        format!("{:.2} GFLOP/s", flops_of("synapse") as f64 / st.median_ns),
+    );
+
+    // inject encode
+    let thought = tk.encode("fact: a kilobyte", false);
+    let st = bench_median(3, 25, || {
+        let out = engine.inject_encode(&thought, 300, Lane::Stream).unwrap();
+        std::hint::black_box(out);
+    });
+    print_row("inject_encode (T=16)", st.clone(), String::new());
+
+    // dispatch overhead estimate: decode minus pure exec time
+    let stats = device.stats();
+    let mean_exec = stats.exec_ns as f64 / stats.ops.max(1) as f64;
+    println!(
+        "\ndispatch anatomy: decode p50 {} vs device-thread exec mean {} \
+         (marshal + queue + wakeup ≈ {})",
+        warp_cortex::util::timer::format_ns(decode_ns),
+        warp_cortex::util::timer::format_ns(mean_exec),
+        warp_cortex::util::timer::format_ns((decode_ns - mean_exec).max(0.0)),
+    );
+    println!(
+        "device totals: {} ops, {:.1}% of wall in exec",
+        stats.ops,
+        100.0 * stats.exec_ns as f64 / stats.exec_ns.max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Agent state machines: the Main Agent (the River) and side agents (the
+//! Streams).
+//!
+//! A side agent's lifecycle (paper Fig. 1):
+//!   1. seed its cache from the Topological Synapse (k landmark rows),
+//!   2. absorb its task prompt (teacher-forced decode at continuation
+//!      positions after the compressed context),
+//!   3. generate a short thought until a stop byte or its budget,
+//!   4. hand the thought + its final hidden state to the Validation Gate.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use super::prism::{AgentKind, Prism};
+use super::router::AgentRole;
+use super::synapse::Synapse;
+use crate::model::Engine;
+use crate::text::{Sampler, SamplerConfig, Tokenizer, EOS_ID};
+
+/// A routed unit of side-agent work.
+#[derive(Debug, Clone)]
+pub struct SideTask {
+    pub id: u64,
+    pub role: AgentRole,
+    pub payload: String,
+    /// Main-agent text position when the trigger fired (for gating context).
+    pub main_pos: i32,
+    pub spawned_at: Instant,
+}
+
+/// Terminal state of a side agent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SideState {
+    Finished,
+    BudgetExhausted,
+    Failed,
+}
+
+/// What a side agent returns to the coordinator.
+#[derive(Debug)]
+pub struct SideOutcome {
+    pub task: SideTask,
+    pub state: SideState,
+    /// The generated thought (visible bytes only).
+    pub text: String,
+    pub tokens: Vec<i32>,
+    /// Final-layer hidden state of the last generated token (gate input).
+    pub hidden: Vec<f32>,
+    /// Decode steps consumed (prompt + generation).
+    pub steps: usize,
+    /// Synapse version the agent was seeded from.
+    pub synapse_version: u64,
+    pub elapsed: Duration,
+    pub error: Option<String>,
+}
+
+/// Shared context handed to every side agent.
+pub struct SideContext {
+    pub engine: Arc<Engine>,
+    pub synapse: Arc<Synapse>,
+    pub batcher: Arc<Batcher>,
+    /// Registry + memory accounting (agents exist only while running).
+    pub prism: Arc<Prism>,
+    /// How side caches are seeded (Full / Coarse / Adaptive — §6.2).
+    pub seed_mode: super::synapse::SeedMode,
+    /// Max generated thought tokens.
+    pub gen_budget: usize,
+    pub sampler: SamplerConfig,
+}
+
+/// Run one side agent to completion (called on a Stream worker thread).
+pub fn run_side_agent(ctx: &SideContext, task: SideTask) -> SideOutcome {
+    let started = Instant::now();
+    match run_side_inner(ctx, &task) {
+        Ok((state, text, tokens, hidden, steps, version)) => SideOutcome {
+            task,
+            state,
+            text,
+            tokens,
+            hidden,
+            steps,
+            synapse_version: version,
+            elapsed: started.elapsed(),
+            error: None,
+        },
+        Err(e) => SideOutcome {
+            task,
+            state: SideState::Failed,
+            text: String::new(),
+            tokens: vec![],
+            hidden: vec![],
+            steps: 0,
+            synapse_version: 0,
+            elapsed: started.elapsed(),
+            error: Some(format!("{e:#}")),
+        },
+    }
+}
+
+type SideRun = (SideState, String, Vec<i32>, Vec<f32>, usize, u64);
+
+fn run_side_inner(ctx: &SideContext, task: &SideTask) -> Result<SideRun> {
+    let tk = Tokenizer::new();
+
+    // 1. Register with the Prism (just-in-time existence: the ticket's drop
+    //    at function exit releases the agent's bytes) and seed the cache
+    //    from the synapse landmarks (witness reconstruction).
+    let mut ticket = ctx.prism.register(AgentKind::Side)?;
+    let (seeded, mut pos, version) =
+        ctx.synapse.seed_side_cache_with(&ctx.engine, ctx.seed_mode)?;
+    ticket.kv = seeded;
+    let kv = &mut ticket.kv;
+
+    // 2. Absorb the task prompt at continuation positions.  The prompt
+    //    mirrors the corpus' stream sections so the trained byte-LM stays
+    //    in-distribution.
+    let prompt = format!("\nstream: [THOUGHT] {}: ", task.payload);
+    let prompt_ids = tk.encode(&prompt, false);
+    let mut steps = 0usize;
+    let mut last = None;
+    // keep room for generation
+    let absorb = prompt_ids
+        .len()
+        .min(kv.remaining().saturating_sub(ctx.gen_budget.min(8)));
+    for &id in &prompt_ids[..absorb] {
+        last = Some(ctx.batcher.decode(id, pos, kv)?);
+        pos += 1;
+        steps += 1;
+    }
+
+    // 3. Generate the thought.
+    let mut sampler = Sampler::new(SamplerConfig {
+        seed: ctx.sampler.seed ^ task.id,
+        ..ctx.sampler.clone()
+    });
+    let mut text = String::new();
+    let mut tokens = Vec::new();
+    let mut state = SideState::BudgetExhausted;
+    let mut hidden = last.as_ref().map(|o| o.hidden.clone()).unwrap_or_default();
+    for _ in 0..ctx.gen_budget {
+        if kv.remaining() == 0 {
+            break;
+        }
+        let logits = match &last {
+            Some(out) => &out.logits,
+            None => break,
+        };
+        let id = sampler.sample(logits);
+        if id == EOS_ID {
+            state = SideState::Finished;
+            break;
+        }
+        if let Some(b) = tk.decode_one(id) {
+            if b == b'\n' || b == b']' {
+                state = SideState::Finished;
+                break;
+            }
+            text.push(b as char);
+        }
+        tokens.push(id);
+        let out = ctx.batcher.decode(id, pos, kv)?;
+        hidden = out.hidden.clone();
+        last = Some(out);
+        pos += 1;
+        steps += 1;
+    }
+
+    Ok((state, text, tokens, hidden, steps, version))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn side_task_fields() {
+        let t = SideTask {
+            id: 7,
+            role: AgentRole::Verify,
+            payload: "check the date".into(),
+            main_pos: 42,
+            spawned_at: Instant::now(),
+        };
+        assert_eq!(t.role.name(), "verify");
+        assert_eq!(t.payload, "check the date");
+    }
+}

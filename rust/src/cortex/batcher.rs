@@ -1,0 +1,204 @@
+//! Dynamic batcher for side-agent decode steps.
+//!
+//! Side agents run on independent threads; batching their per-token decode
+//! ops amortises device dispatch overhead (the serving classic).  A worker
+//! calls [`Batcher::decode`], which ships a request to the batcher thread;
+//! the thread lingers briefly (`linger`) to collect up to `B` requests,
+//! issues one `decode_batch` op on the Stream lane, and fans the results
+//! back out.  Single stragglers fall through to the cheaper single-decode
+//! program.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Engine, KvCache};
+use crate::runtime::Lane;
+
+/// Result of one batched decode step.
+#[derive(Debug)]
+pub struct StepOut {
+    pub logits: Vec<f32>,
+    pub hidden: Vec<f32>,
+}
+
+struct Request {
+    token: i32,
+    pos: i32,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    cache_len: i32,
+    reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>>,
+}
+
+/// Batching statistics.
+#[derive(Debug, Clone, Default)]
+pub struct BatcherStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub singles: u64,
+}
+
+impl BatcherStats {
+    /// Mean requests per device op (>1 means batching is paying off).
+    pub fn mean_batch_size(&self) -> f64 {
+        let ops = self.batches + self.singles;
+        if ops == 0 {
+            0.0
+        } else {
+            self.requests as f64 / ops as f64
+        }
+    }
+}
+
+/// The dynamic batcher.  Clone-free: share via `Arc`.
+pub struct Batcher {
+    tx: Mutex<Option<mpsc::Sender<Request>>>,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    singles: AtomicU64,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Batcher {
+    /// Spawn the batcher thread.  `linger` bounds the wait for co-batchable
+    /// requests (the latency/throughput knob).
+    pub fn new(engine: Arc<Engine>, linger: Duration) -> Arc<Batcher> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let batcher = Arc::new(Batcher {
+            tx: Mutex::new(Some(tx)),
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            singles: AtomicU64::new(0),
+            handle: Mutex::new(None),
+        });
+        let b = batcher.clone();
+        let handle = std::thread::Builder::new()
+            .name("warp-batcher".into())
+            .spawn(move || batcher_thread(engine, rx, linger, b))
+            .expect("spawn batcher");
+        *batcher.handle.lock().unwrap() = Some(handle);
+        batcher
+    }
+
+    /// One decode step through the batcher (blocks until the result lands).
+    /// Appends the new KV row to `kv` on success.
+    pub fn decode(&self, token: i32, pos: i32, kv: &mut KvCache) -> Result<StepOut> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            token,
+            pos,
+            k: kv.k_raw().to_vec(),
+            v: kv.v_raw().to_vec(),
+            cache_len: kv.len() as i32,
+            reply: reply_tx,
+        };
+        let tx = self.tx.lock().unwrap();
+        tx.as_ref()
+            .ok_or_else(|| anyhow!("batcher shut down"))?
+            .send(req)
+            .map_err(|_| anyhow!("batcher thread gone"))?;
+        drop(tx);
+        let (logits, hidden, k_new, v_new) = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("batcher dropped reply"))??;
+        kv.append_row(&k_new, &v_new)?;
+        Ok(StepOut { logits, hidden })
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        BatcherStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            singles: self.singles.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the batcher thread (pending requests error out).
+    pub fn shutdown(&self) {
+        *self.tx.lock().unwrap() = None;
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_thread(
+    engine: Arc<Engine>,
+    rx: mpsc::Receiver<Request>,
+    linger: Duration,
+    stats: Arc<Batcher>,
+) {
+    let b_max = engine.caps().decode_batch;
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped
+        };
+        let mut batch = vec![first];
+        let deadline = std::time::Instant::now() + linger;
+        while batch.len() < b_max {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        if batch.len() == 1 {
+            // Straggler: cheaper single-decode program.
+            stats.singles.fetch_add(1, Ordering::Relaxed);
+            let req = batch.pop().unwrap();
+            let result = engine.decode_side_raw(
+                req.token, req.pos, req.k, req.v, req.cache_len, Lane::Stream,
+            );
+            let _ = req.reply.send(result);
+            continue;
+        }
+
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats
+            .batched_requests
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        let n = batch.len();
+        let mut tokens = Vec::with_capacity(n);
+        let mut pos = Vec::with_capacity(n);
+        let mut lens = Vec::with_capacity(n);
+        let mut k_all = Vec::new();
+        let mut v_all = Vec::new();
+        for r in &batch {
+            tokens.push(r.token);
+            pos.push(r.pos);
+            lens.push(r.cache_len);
+            k_all.extend_from_slice(&r.k);
+            v_all.extend_from_slice(&r.v);
+        }
+        match engine.decode_batch_raw(n, tokens, pos, k_all, v_all, lens, Lane::Stream) {
+            Ok(results) => {
+                for (req, out) in batch.into_iter().zip(results) {
+                    let _ = req.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in batch {
+                    let _ = req.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+// End-to-end batcher behaviour (batch == single numerics, fan-out under
+// concurrency) is covered in rust/tests/integration_cortex.rs.

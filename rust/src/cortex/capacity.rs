@@ -1,0 +1,221 @@
+//! Capacity planning: where does agent scaling actually stop?
+//!
+//! The paper's abstract claims "theoretical capacity exceeding 1,000 agents
+//! before compute latency becomes the bottleneck" and the title says
+//! "million-agent".  This module makes that claim precise and testable: a
+//! two-resource model (memory bytes, device-seconds) that, given measured
+//! per-op costs, finds the binding constraint at every population size.
+//!
+//! Model: N agents = 1 main (continuous decoding at `main_rate` tok/s) +
+//! (N−1) side agents, each consuming `side_duty` device-tokens per main
+//! token (side agents are bursty; duty is the time-averaged rate).  One
+//! device executes ops serially (the River preempts at op granularity, so
+//! main latency stays ~1 op; what saturates is total utilization):
+//!
+//!   util(N) = main_rate · t_main + (N−1) · side_duty · main_rate · t_side/B
+//!
+//! Memory: the Table-1/Table-2 arithmetic from [`super::memory`].
+
+use super::memory::MemoryModel;
+
+/// Per-op device costs (seconds), measured or projected.
+#[derive(Debug, Clone)]
+pub struct ComputeCosts {
+    /// One main-agent decode op.
+    pub t_main_decode: f64,
+    /// One *batched* side decode op (B tokens per op).
+    pub t_side_batch: f64,
+    pub batch_width: usize,
+}
+
+/// The full capacity model.
+#[derive(Debug, Clone)]
+pub struct CapacityModel {
+    pub mem: MemoryModel,
+    pub compute: ComputeCosts,
+    /// Main agent's sustained generation rate (tok/s).
+    pub main_rate: f64,
+    /// Average side-agent tokens generated per main-agent token.
+    pub side_duty: f64,
+}
+
+/// Why scaling stops at a given population.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bottleneck {
+    Feasible,
+    Memory,
+    Compute,
+}
+
+/// One point of the scaling curve.
+#[derive(Debug, Clone)]
+pub struct CapacityPoint {
+    pub agents: u64,
+    pub mem_bytes: u64,
+    pub utilization: f64,
+    pub bottleneck: Bottleneck,
+}
+
+impl CapacityModel {
+    /// Device utilization in [0, ∞): >1 means the op stream no longer fits.
+    pub fn utilization(&self, agents: u64) -> f64 {
+        let side = agents.saturating_sub(1) as f64;
+        let side_tokens_per_sec = side * self.side_duty * self.main_rate;
+        self.main_rate * self.compute.t_main_decode
+            + side_tokens_per_sec * self.compute.t_side_batch
+                / self.compute.batch_width as f64
+    }
+
+    pub fn evaluate(&self, agents: u64) -> CapacityPoint {
+        let mem_bytes = self.mem.warp_total_bytes(agents);
+        let utilization = self.utilization(agents);
+        let over_mem = mem_bytes > self.mem.vram_total - self.mem.vram_reserved;
+        let bottleneck = match (over_mem, utilization > 1.0) {
+            (false, false) => Bottleneck::Feasible,
+            // report the constraint that binds FIRST as N grows
+            (true, false) => Bottleneck::Memory,
+            (false, true) => Bottleneck::Compute,
+            (true, true) => {
+                if self.max_agents_memory() < self.max_agents_compute() {
+                    Bottleneck::Memory
+                } else {
+                    Bottleneck::Compute
+                }
+            }
+        };
+        CapacityPoint {
+            agents,
+            mem_bytes,
+            utilization,
+            bottleneck,
+        }
+    }
+
+    /// Largest N that fits memory.
+    pub fn max_agents_memory(&self) -> u64 {
+        self.mem.max_agents_warp()
+    }
+
+    /// Largest N with utilization <= 1.
+    pub fn max_agents_compute(&self) -> u64 {
+        let fixed = self.main_rate * self.compute.t_main_decode;
+        if fixed >= 1.0 {
+            return 0;
+        }
+        let per_side = self.side_duty * self.main_rate * self.compute.t_side_batch
+            / self.compute.batch_width as f64;
+        if per_side <= 0.0 {
+            return u64::MAX;
+        }
+        1 + ((1.0 - fixed) / per_side) as u64
+    }
+
+    /// The population where scaling stops, and why.
+    pub fn limit(&self) -> (u64, Bottleneck) {
+        let m = self.max_agents_memory();
+        let c = self.max_agents_compute();
+        if c < m {
+            (c, Bottleneck::Compute)
+        } else {
+            (m, Bottleneck::Memory)
+        }
+    }
+
+    /// Log-spaced scaling curve up to `max_n`.
+    pub fn curve(&self, max_n: u64) -> Vec<CapacityPoint> {
+        let mut points = Vec::new();
+        let mut n = 1u64;
+        while n <= max_n {
+            points.push(self.evaluate(n));
+            n = if n < 10 { n * 2 } else { n * 10 / 3 };
+        }
+        points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cortex::memory::{MemoryModel, GIB, MIB};
+
+    fn model(t_side_batch: f64) -> CapacityModel {
+        CapacityModel {
+            mem: MemoryModel {
+                config_name: "test".into(),
+                kv_row_bytes: 12288,
+                weight_bytes: GIB,
+                full_ctx: 32768,
+                synapse_k: 64,
+                side_gen: 32,
+                per_agent_overhead: 12 * MIB,
+                vram_total: 24 * GIB,
+                vram_reserved: GIB,
+            },
+            compute: ComputeCosts {
+                t_main_decode: 2e-3,
+                t_side_batch,
+                batch_width: 4,
+            },
+            main_rate: 30.0,
+            side_duty: 0.25,
+        }
+    }
+
+    #[test]
+    fn compute_limit_math() {
+        let m = model(4e-3);
+        // fixed = 30*2e-3 = 0.06; per_side = 0.25*30*1e-3 = 7.5e-3
+        // max = 1 + (0.94/0.0075) = 1 + 125
+        assert_eq!(m.max_agents_compute(), 126);
+        assert!(m.utilization(126) <= 1.0 + 1e-9);
+        assert!(m.utilization(130) > 1.0);
+    }
+
+    #[test]
+    fn limit_reports_binding_constraint() {
+        // slow device → compute binds before memory
+        let slow = model(4e-3);
+        let (n, why) = slow.limit();
+        assert_eq!(why, Bottleneck::Compute);
+        assert!(n < slow.max_agents_memory());
+
+        // very fast device → memory binds
+        let fast = model(1e-7);
+        let (n, why) = fast.limit();
+        assert_eq!(why, Bottleneck::Memory);
+        assert_eq!(n, fast.max_agents_memory());
+        assert!(n > 1000, "paper's 1000+ agent claim should hold: {n}");
+    }
+
+    #[test]
+    fn curve_is_monotone_and_classified() {
+        let m = model(4e-3);
+        let curve = m.curve(100_000);
+        for w in curve.windows(2) {
+            assert!(w[1].mem_bytes >= w[0].mem_bytes);
+            assert!(w[1].utilization >= w[0].utilization);
+        }
+        assert_eq!(curve.first().unwrap().bottleneck, Bottleneck::Feasible);
+        assert_ne!(curve.last().unwrap().bottleneck, Bottleneck::Feasible);
+    }
+
+    #[test]
+    fn million_agents_is_memory_bound_on_one_card() {
+        // The title's "million-agent" scaling: even with zero compute cost,
+        // one 24 GB card cannot hold 1M × (synapse + overhead) — the model
+        // quantifies exactly how far the memory axis carries.
+        let free = model(0.0);
+        assert_eq!(free.max_agents_compute(), u64::MAX);
+        let at_million = free.evaluate(1_000_000);
+        assert_eq!(at_million.bottleneck, Bottleneck::Memory);
+        // ... unless the per-agent footprint drops to the synapse-only row
+        // the paper's Table 1 quotes (≈0.8 MB): then ~28k agents/card, and
+        // a million agents is a ~36-card (not data-center) problem.
+        let mut slim = free.clone();
+        slim.mem.per_agent_overhead = 0;
+        slim.mem.side_gen = 0;
+        let per_card = slim.max_agents_memory();
+        assert!(per_card > 20_000, "{per_card}");
+        assert!((1_000_000 / per_card) < 50);
+    }
+}

@@ -1,0 +1,408 @@
+//! The Warp-Cortex orchestrator: composes the Prism, Synapse, Router, Gate,
+//! Injector and the River & Stream scheduler into the full system of the
+//! paper's Figure 1.
+//!
+//! `run_episode` is the canonical serving loop:
+//!
+//! ```text
+//! prefill (River) ─► decode loop (River) ─► token stream ─► Router
+//!        │                 ▲                                  │ trigger
+//!        ▼                 │ Referential Injection            ▼
+//!   Synapse push ◄── gate-accepted thoughts ◄── side agents (Stream lane,
+//!   (Background)                                dynamic batcher)
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::agent::{SideContext, SideOutcome, SideTask};
+use super::batcher::Batcher;
+use super::gate::{Gate, GateStats};
+use super::inject::{InjectStats, Injector};
+use super::memory::{MemSnapshot, MemoryTracker};
+use super::prism::{AgentKind, AgentTicket, Prism};
+use super::router::{Router, RouterConfig, Trigger};
+use super::scheduler::{SchedulerStats, StreamScheduler};
+use super::synapse::{Synapse, SynapseStats};
+use crate::metrics::{Histogram, Throughput};
+use crate::model::Engine;
+use crate::runtime::Lane;
+use crate::text::{Sampler, SamplerConfig, Tokenizer, EOS_ID};
+
+/// Orchestrator configuration.
+#[derive(Debug, Clone)]
+pub struct CortexConfig {
+    /// Model config name (must be loaded on the device).
+    pub model: String,
+    /// Max concurrently *running* side agents (worker threads).
+    pub max_side_agents: usize,
+    /// Additional queued tasks beyond the running ones.
+    pub max_queued_tasks: usize,
+    /// Refresh the synapse every this many main-agent tokens.
+    pub synapse_refresh_every: usize,
+    /// Side-agent thought budget (generated tokens).
+    pub side_gen_budget: usize,
+    /// Enable Referential Injection of gate-accepted thoughts.
+    pub inject_enabled: bool,
+    /// Rows always reserved for main-agent generation (injection headroom).
+    pub inject_reserve_rows: usize,
+    /// Validation-gate threshold θ (None = artifact default, 0.5).
+    pub gate_theta: Option<f32>,
+    /// Main-agent sampling.
+    pub sampler: SamplerConfig,
+    /// Side-agent sampling.
+    pub side_sampler: SamplerConfig,
+    /// Batcher linger window.
+    pub batch_linger: Duration,
+    pub router: RouterConfig,
+    /// Side-cache seeding (Full, or the §6.2 Coarse/Adaptive extensions).
+    pub seed_mode: crate::cortex::synapse::SeedMode,
+}
+
+impl Default for CortexConfig {
+    fn default() -> Self {
+        CortexConfig {
+            model: "small".into(),
+            max_side_agents: 4,
+            max_queued_tasks: 16,
+            synapse_refresh_every: 32,
+            side_gen_budget: 24,
+            inject_enabled: true,
+            inject_reserve_rows: 64,
+            gate_theta: None,
+            sampler: SamplerConfig::default(),
+            side_sampler: SamplerConfig {
+                temperature: 0.7,
+                ..SamplerConfig::default()
+            },
+            batch_linger: Duration::from_micros(500),
+            router: RouterConfig::default(),
+            seed_mode: crate::cortex::synapse::SeedMode::Full,
+        }
+    }
+}
+
+/// One recorded coordination event (for reports and the council example).
+#[derive(Debug, Clone)]
+pub enum Event {
+    Spawned {
+        task_id: u64,
+        tag: String,
+        payload: String,
+        at_token: usize,
+    },
+    Dropped {
+        payload: String,
+        at_token: usize,
+    },
+    Merged {
+        task_id: u64,
+        score: f32,
+        thought: String,
+        injected_rows: usize,
+        at_token: usize,
+    },
+    Rejected {
+        task_id: u64,
+        score: f32,
+        thought: String,
+        at_token: usize,
+    },
+    Failed {
+        task_id: u64,
+        error: String,
+        at_token: usize,
+    },
+    SynapsePushed {
+        version: u64,
+        source_len: usize,
+        at_token: usize,
+    },
+}
+
+/// Result of one serving episode.
+#[derive(Debug)]
+pub struct EpisodeReport {
+    pub prompt: String,
+    pub text: String,
+    pub tokens_generated: usize,
+    pub events: Vec<Event>,
+    pub elapsed: Duration,
+    pub main_tokens_per_sec: f64,
+    pub step_latency_p50_ns: f64,
+    pub step_latency_p95_ns: f64,
+    pub gate: GateStats,
+    pub inject: InjectStats,
+    pub synapse: SynapseStats,
+    pub scheduler: SchedulerStats,
+    pub memory: MemSnapshot,
+}
+
+/// The assembled system.
+pub struct WarpCortex {
+    pub cfg: CortexConfig,
+    pub engine: Arc<Engine>,
+    pub prism: Arc<Prism>,
+    pub synapse: Arc<Synapse>,
+    pub gate: Arc<Gate>,
+    pub injector: Arc<Injector>,
+    pub scheduler: StreamScheduler,
+    pub batcher: Arc<Batcher>,
+    pub tracker: Arc<MemoryTracker>,
+    pub main_throughput: Throughput,
+    pub step_latency: Histogram,
+    next_task_id: std::sync::atomic::AtomicU64,
+}
+
+impl Drop for WarpCortex {
+    fn drop(&mut self) {
+        // Join the batcher thread before tearing the rest down: an un-joined
+        // thread touching engine state during process exit races the C++
+        // xla_extension teardown (observed as a SIGSEGV at exit).
+        self.batcher.shutdown();
+    }
+}
+
+impl WarpCortex {
+    /// Assemble the system on an existing engine.
+    pub fn new(engine: Arc<Engine>, cfg: CortexConfig) -> Result<WarpCortex> {
+        let tracker = MemoryTracker::new();
+        let prism = Prism::new(engine.clone(), tracker.clone());
+        let synapse = Synapse::new(tracker.clone());
+        let gate = Arc::new(Gate::new(cfg.gate_theta.unwrap_or(engine.gate_theta)));
+        let injector = Arc::new(Injector::new(cfg.inject_reserve_rows));
+        let batcher = Batcher::new(engine.clone(), cfg.batch_linger);
+        let side_ctx = Arc::new(SideContext {
+            engine: engine.clone(),
+            synapse: synapse.clone(),
+            batcher: batcher.clone(),
+            prism: prism.clone(),
+            seed_mode: cfg.seed_mode,
+            gen_budget: cfg.side_gen_budget,
+            sampler: cfg.side_sampler.clone(),
+        });
+        let scheduler = StreamScheduler::new(side_ctx, cfg.max_side_agents, cfg.max_queued_tasks);
+        Ok(WarpCortex {
+            cfg,
+            engine,
+            prism,
+            synapse,
+            gate,
+            injector,
+            scheduler,
+            batcher,
+            tracker,
+            main_throughput: Throughput::new(),
+            step_latency: Histogram::new(),
+            next_task_id: std::sync::atomic::AtomicU64::new(1),
+        })
+    }
+
+    fn next_task_id(&self) -> u64 {
+        self.next_task_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Register + prefill a fresh main agent.
+    pub fn start_main(&self, prompt: &str) -> Result<(AgentTicket, Vec<f32>, Vec<f32>)> {
+        let tk = Tokenizer::new();
+        let mut ticket = self.prism.register(AgentKind::Main)?;
+        let max_prompt = self.engine.caps().prefill_len - 1;
+        let mut ids = tk.encode(prompt, true);
+        if ids.len() > max_prompt {
+            // keep BOS + the most recent window
+            let tail = ids.len() - max_prompt + 1;
+            ids = std::iter::once(ids[0]).chain(ids[tail..].iter().copied()).collect();
+        }
+        let out = self.engine.prefill(&ids, &mut ticket.kv, Lane::River)?;
+        let v = self.engine.config().vocab_size;
+        let last = out.logits[(out.len - 1) * v..out.len * v].to_vec();
+        Ok((ticket, last, out.hidden_last))
+    }
+
+    /// Run one full episode: generate up to `max_tokens` from `prompt`,
+    /// routing / gating / injecting along the way.
+    pub fn run_episode(&self, prompt: &str, max_tokens: usize) -> Result<EpisodeReport> {
+        let started = Instant::now();
+        let tk = Tokenizer::new();
+        let (mut ticket, mut logits, mut hidden) = self.start_main(prompt)?;
+        let mut router = Router::new(self.cfg.router.clone());
+        // Triggers already present in the prompt spawn on the first step.
+        let mut pending: Vec<Trigger> = router.feed(prompt);
+
+        let mut sampler = Sampler::new(self.cfg.sampler.clone());
+        let mut text = String::new();
+        let mut events = Vec::new();
+        let mut pos = ticket.kv.len() as i32; // text position == cache rows so far
+        let mut generated = 0usize;
+
+        while generated < max_tokens && ticket.kv.remaining() > 0 {
+            // ── decode one token on the River lane ──
+            let t0 = Instant::now();
+            let id = sampler.sample(&logits);
+            if id == EOS_ID {
+                break;
+            }
+            let out = self.engine.decode(id, pos, &mut ticket.kv, Lane::River)?;
+            self.step_latency.record(t0.elapsed());
+            self.main_throughput.tick();
+            logits = out.logits;
+            hidden = out.hidden;
+            pos += 1;
+            generated += 1;
+
+            let mut new_triggers: Vec<Trigger> = std::mem::take(&mut pending);
+            if let Some(b) = tk.decode_one(id) {
+                text.push(b as char);
+                if let Some(tr) = router.feed_byte(b) {
+                    new_triggers.push(tr);
+                }
+            }
+
+            // ── synapse refresh (Background lane) ──
+            let due = generated % self.cfg.synapse_refresh_every == 0;
+            let need = !new_triggers.is_empty() && self.synapse.read().is_none();
+            if (due || need) && ticket.kv.len() >= self.engine.caps().synapse_k {
+                let s = self
+                    .engine
+                    .synapse_extract(&hidden, &ticket.kv, Lane::Background)?;
+                let source_len = s.source_len;
+                let version = self.synapse.push(s);
+                events.push(Event::SynapsePushed {
+                    version,
+                    source_len,
+                    at_token: generated,
+                });
+            }
+
+            // ── route triggers to side agents ──
+            for tr in new_triggers {
+                if self.synapse.read().is_none() {
+                    events.push(Event::Dropped {
+                        payload: tr.payload,
+                        at_token: generated,
+                    });
+                    continue;
+                }
+                let task = SideTask {
+                    id: self.next_task_id(),
+                    role: tr.role,
+                    payload: tr.payload.clone(),
+                    main_pos: pos,
+                    spawned_at: Instant::now(),
+                };
+                let task_id = task.id;
+                if self.scheduler.submit(task) {
+                    events.push(Event::Spawned {
+                        task_id,
+                        tag: tr.tag,
+                        payload: tr.payload,
+                        at_token: generated,
+                    });
+                } else {
+                    events.push(Event::Dropped {
+                        payload: tr.payload,
+                        at_token: generated,
+                    });
+                }
+            }
+
+            // ── merge finished side agents (gate + referential injection) ──
+            for outcome in self.scheduler.poll_results() {
+                self.merge_outcome(outcome, &hidden, &mut ticket, pos, generated, &mut events)?;
+            }
+        }
+
+        // Final drain pass: give in-flight agents a grace window so every
+        // spawned task reaches a terminal event in the report.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while self.scheduler.in_flight() > 0 && Instant::now() < deadline {
+            if let Some(outcome) = self.scheduler.wait_result(Duration::from_millis(100)) {
+                self.merge_outcome(outcome, &hidden, &mut ticket, pos, generated, &mut events)?;
+            }
+        }
+        for outcome in self.scheduler.poll_results() {
+            self.merge_outcome(outcome, &hidden, &mut ticket, pos, generated, &mut events)?;
+        }
+
+        let elapsed = started.elapsed();
+        Ok(EpisodeReport {
+            prompt: prompt.to_string(),
+            text,
+            tokens_generated: generated,
+            events,
+            elapsed,
+            main_tokens_per_sec: generated as f64 / elapsed.as_secs_f64().max(1e-9),
+            step_latency_p50_ns: self.step_latency.percentile_ns(50.0),
+            step_latency_p95_ns: self.step_latency.percentile_ns(95.0),
+            gate: self.gate.stats(),
+            inject: self.injector.stats(),
+            synapse: self.synapse.stats(),
+            scheduler: self.scheduler.stats(),
+            memory: self.tracker.snapshot(),
+        })
+    }
+
+    fn merge_outcome(
+        &self,
+        outcome: SideOutcome,
+        main_hidden: &[f32],
+        ticket: &mut AgentTicket,
+        pos: i32,
+        at_token: usize,
+        events: &mut Vec<Event>,
+    ) -> Result<()> {
+        if let Some(err) = &outcome.error {
+            events.push(Event::Failed {
+                task_id: outcome.task.id,
+                error: err.clone(),
+                at_token,
+            });
+            return Ok(());
+        }
+        if outcome.hidden.is_empty() || outcome.text.trim().is_empty() {
+            events.push(Event::Rejected {
+                task_id: outcome.task.id,
+                score: 0.0,
+                thought: outcome.text,
+                at_token,
+            });
+            return Ok(());
+        }
+        let decision = self.gate.evaluate(main_hidden, &outcome.hidden);
+        if !decision.accepted {
+            events.push(Event::Rejected {
+                task_id: outcome.task.id,
+                score: decision.score,
+                thought: outcome.text,
+                at_token,
+            });
+            return Ok(());
+        }
+        let mut injected_rows = 0;
+        if self.cfg.inject_enabled {
+            let tk = Tokenizer::new();
+            let mut thought_ids = vec![crate::text::REF_ID];
+            thought_ids.extend(tk.encode(&outcome.text, false));
+            match self
+                .injector
+                .inject(&self.engine, &mut ticket.kv, &thought_ids, pos, Lane::Stream)
+            {
+                Ok(report) => injected_rows = report.rows,
+                Err(e) => {
+                    log::debug!("injection skipped: {e:#}");
+                }
+            }
+        }
+        events.push(Event::Merged {
+            task_id: outcome.task.id,
+            score: decision.score,
+            thought: outcome.text,
+            injected_rows,
+            at_token,
+        });
+        Ok(())
+    }
+}

@@ -1,0 +1,151 @@
+//! The Validation Gate (paper §3.5, Eq. 2): geometric quality control.
+//!
+//! Before a side agent's thought is merged into the Main Agent's stream, the
+//! gate scores the cosine similarity between the thought's last-token hidden
+//! state and the Main Agent's current hidden state; thoughts below θ are
+//! rejected — the paper's defence against "hallucination cascades".
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::vecmath::cosine;
+
+/// Outcome of one gate evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GateDecision {
+    pub score: f32,
+    pub accepted: bool,
+    pub theta: f32,
+}
+
+/// Cumulative gate statistics.
+#[derive(Debug, Clone, Default)]
+pub struct GateStats {
+    pub evaluated: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    /// Sum of scores ×1e6 (for mean reporting without float atomics).
+    pub score_sum_micros: i64,
+}
+
+impl GateStats {
+    pub fn accept_rate(&self) -> f64 {
+        if self.evaluated == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.evaluated as f64
+        }
+    }
+
+    pub fn mean_score(&self) -> f64 {
+        if self.evaluated == 0 {
+            0.0
+        } else {
+            self.score_sum_micros as f64 / 1e6 / self.evaluated as f64
+        }
+    }
+}
+
+/// Thread-safe gate.
+#[derive(Debug)]
+pub struct Gate {
+    theta: f32,
+    evaluated: AtomicU64,
+    accepted: AtomicU64,
+    score_sum_micros: std::sync::atomic::AtomicI64,
+}
+
+impl Gate {
+    pub fn new(theta: f32) -> Gate {
+        Gate {
+            theta,
+            evaluated: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+            score_sum_micros: std::sync::atomic::AtomicI64::new(0),
+        }
+    }
+
+    pub fn theta(&self) -> f32 {
+        self.theta
+    }
+
+    /// Score a thought against the Main Agent's current hidden state.
+    pub fn evaluate(&self, main_hidden: &[f32], thought_hidden: &[f32]) -> GateDecision {
+        let score = cosine(main_hidden, thought_hidden);
+        let accepted = score >= self.theta;
+        self.evaluated.fetch_add(1, Ordering::Relaxed);
+        if accepted {
+            self.accepted.fetch_add(1, Ordering::Relaxed);
+        }
+        self.score_sum_micros
+            .fetch_add((score as f64 * 1e6) as i64, Ordering::Relaxed);
+        GateDecision {
+            score,
+            accepted,
+            theta: self.theta,
+        }
+    }
+
+    pub fn stats(&self) -> GateStats {
+        let evaluated = self.evaluated.load(Ordering::Relaxed);
+        let accepted = self.accepted.load(Ordering::Relaxed);
+        GateStats {
+            evaluated,
+            accepted,
+            rejected: evaluated - accepted,
+            score_sum_micros: self.score_sum_micros.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn accepts_aligned_rejects_orthogonal() {
+        let g = Gate::new(0.5);
+        let main = vec![1.0, 0.0, 0.0, 0.0];
+        let aligned = vec![0.9, 0.1, 0.0, 0.0];
+        let orthogonal = vec![0.0, 0.0, 1.0, 0.0];
+        let opposite = vec![-1.0, 0.0, 0.0, 0.0];
+        assert!(g.evaluate(&main, &aligned).accepted);
+        assert!(!g.evaluate(&main, &orthogonal).accepted);
+        assert!(!g.evaluate(&main, &opposite).accepted);
+        let s = g.stats();
+        assert_eq!(s.evaluated, 3);
+        assert_eq!(s.accepted, 1);
+        assert!((s.accept_rate() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theta_zero_accepts_nonnegative_theta_one_only_identical() {
+        let main = vec![0.3, -0.2, 0.9];
+        let g0 = Gate::new(0.0);
+        assert!(g0.evaluate(&main, &main).accepted);
+        let g1 = Gate::new(0.9999);
+        assert!(g1.evaluate(&main, &main).accepted);
+        assert!(!g1.evaluate(&main, &[0.3, 0.2, 0.9]).accepted);
+    }
+
+    #[test]
+    fn score_is_bounded_and_symmetric() {
+        check("gate score bounded", 200, |g| {
+            let n = g.usize_in(1..64);
+            let a: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let gate = Gate::new(0.5);
+            let d1 = gate.evaluate(&a, &b);
+            let d2 = gate.evaluate(&b, &a);
+            crate::prop_assert!(
+                d1.score >= -1.0 - 1e-5 && d1.score <= 1.0 + 1e-5,
+                "score out of range: {}", d1.score
+            );
+            crate::prop_assert!(
+                (d1.score - d2.score).abs() < 1e-5,
+                "asymmetric: {} vs {}", d1.score, d2.score
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Referential Injection (paper §3.6): merge a side agent's thought into the
+//! Main Agent's KV cache without touching the visible text stream.
+//!
+//! Mechanism, exactly as the paper describes it one level down the stack:
+//! the thought tokens get a forward pass at *virtual RoPE positions*
+//! (`inject_encode` artifact), and the resulting K/V rows are appended
+//! beyond the Main Agent's current rows.  Subsequent decode steps attend
+//! over them (`cache_len` grows) while the text position bookkeeping is
+//! unchanged — the agent "remembers" the thought mid-sentence.
+//!
+//! The injector also enforces *headroom*: injections are refused when they
+//! would starve the main cache of generation capacity.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::model::{Engine, KvCache};
+use crate::runtime::Lane;
+
+/// Report of one successful injection.
+#[derive(Debug, Clone)]
+pub struct InjectReport {
+    /// Rows appended to the main cache.
+    pub rows: usize,
+    /// Virtual RoPE base position the thought was encoded at.
+    pub pos_base: i32,
+    /// Cache length before / after.
+    pub len_before: usize,
+    pub len_after: usize,
+    /// Bytes the injected rows occupy.
+    pub bytes: u64,
+}
+
+/// Injection statistics.
+#[derive(Debug, Clone, Default)]
+pub struct InjectStats {
+    pub injected: u64,
+    pub refused_headroom: u64,
+    pub rows_total: u64,
+}
+
+/// Injection policy + mechanism.
+#[derive(Debug)]
+pub struct Injector {
+    /// Always keep at least this many free rows for main-agent generation.
+    pub reserve_rows: usize,
+    injected: AtomicU64,
+    refused: AtomicU64,
+    rows_total: AtomicU64,
+}
+
+impl Injector {
+    pub fn new(reserve_rows: usize) -> Injector {
+        Injector {
+            reserve_rows,
+            injected: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+            rows_total: AtomicU64::new(0),
+        }
+    }
+
+    /// Would an injection of `rows` rows fit right now?
+    pub fn has_headroom(&self, kv: &KvCache, rows: usize) -> bool {
+        kv.remaining() >= rows + self.reserve_rows
+    }
+
+    /// Inject `thought_tokens` into the main cache at virtual positions
+    /// starting from the agent's current text position `main_pos`.
+    ///
+    /// The thought is truncated to the artifact's `inject_len`.  Runs the
+    /// reference forward pass on `lane` (typically `Stream`: injection work
+    /// must never preempt River decode ops).
+    pub fn inject(
+        &self,
+        engine: &Engine,
+        kv: &mut KvCache,
+        thought_tokens: &[i32],
+        main_pos: i32,
+        lane: Lane,
+    ) -> Result<InjectReport> {
+        if thought_tokens.is_empty() {
+            bail!("inject: empty thought");
+        }
+        let rows = thought_tokens.len().min(engine.caps().inject_len);
+        if !self.has_headroom(kv, rows) {
+            self.refused.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "inject: no headroom ({} free, need {} + {} reserve)",
+                kv.remaining(),
+                rows,
+                self.reserve_rows
+            );
+        }
+        let len_before = kv.len();
+        let enc = engine.inject_encode(&thought_tokens[..rows], main_pos, lane)?;
+        let (k_rows, v_rows) = engine.slice_inject_rows(&enc, enc.len);
+        kv.append_rows(enc.len, &k_rows, &v_rows)?;
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        self.rows_total.fetch_add(enc.len as u64, Ordering::Relaxed);
+        let row_bytes = engine.config().kv_row_bytes(4);
+        Ok(InjectReport {
+            rows: enc.len,
+            pos_base: main_pos,
+            len_before,
+            len_after: kv.len(),
+            bytes: row_bytes * enc.len as u64,
+        })
+    }
+
+    pub fn stats(&self) -> InjectStats {
+        InjectStats {
+            injected: self.injected.load(Ordering::Relaxed),
+            refused_headroom: self.refused.load(Ordering::Relaxed),
+            rows_total: self.rows_total.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelConfig;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 192,
+            vocab_size: 260,
+            head_dim: 16,
+            rope_theta: 1e4,
+            param_count: 0,
+        }
+    }
+
+    #[test]
+    fn headroom_math() {
+        let cfg = tiny_cfg();
+        let mut kv = KvCache::new(&cfg, 32);
+        let row = cfg.n_layers * cfg.n_kv_heads * cfg.head_dim;
+        for _ in 0..20 {
+            kv.append_row(&vec![0.0; row], &vec![0.0; row]).unwrap();
+        }
+        let inj = Injector::new(8);
+        assert!(inj.has_headroom(&kv, 4)); // 12 free >= 4 + 8
+        assert!(!inj.has_headroom(&kv, 5)); // 12 free < 5 + 8
+    }
+
+    // The end-to-end inject path (with the real engine) is covered by
+    // rust/tests/integration_cortex.rs.
+}

@@ -1,0 +1,380 @@
+//! Memory accounting: the measured side of Table 2 and the analytic side of
+//! Table 1.
+//!
+//! [`MemoryTracker`] counts every byte of model state the coordinator
+//! actually allocates (weights resident on the device, per-agent KV caches,
+//! the shared synapse buffer), categorised so the benches can print the
+//! paper's component rows.  [`MemoryModel`] projects the same arithmetic
+//! onto arbitrary configs — in particular Qwen2.5-0.5B on a 24 GB RTX 4090,
+//! the paper's testbed (DESIGN.md §4 records the substitution).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::runtime::ModelConfig;
+
+/// Memory category (the component rows of Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemKind {
+    /// Model weights — allocated once (the Prism).
+    Weights = 0,
+    /// Main-agent KV caches.
+    MainKv = 1,
+    /// Side-agent KV caches.
+    SideKv = 2,
+    /// The shared Topological Synapse landmark buffer.
+    Synapse = 3,
+    /// Fixed per-agent runtime overhead (allocator granularity, activation
+    /// workspace) — modelled, not measured, on this CPU substrate.
+    Overhead = 4,
+}
+
+pub const MEM_KINDS: [MemKind; 5] = [
+    MemKind::Weights,
+    MemKind::MainKv,
+    MemKind::SideKv,
+    MemKind::Synapse,
+    MemKind::Overhead,
+];
+
+impl MemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemKind::Weights => "weights",
+            MemKind::MainKv => "main_kv",
+            MemKind::SideKv => "side_kv",
+            MemKind::Synapse => "synapse",
+            MemKind::Overhead => "overhead",
+        }
+    }
+}
+
+/// Live byte accounting, by category.
+#[derive(Debug, Default)]
+pub struct MemoryTracker {
+    live: [AtomicI64; 5],
+    peak: [AtomicI64; 5],
+    allocs: AtomicU64,
+    frees: AtomicU64,
+}
+
+impl MemoryTracker {
+    pub fn new() -> Arc<MemoryTracker> {
+        Arc::new(MemoryTracker::default())
+    }
+
+    pub fn alloc(self: &Arc<Self>, kind: MemKind, bytes: u64) -> MemGuard {
+        let idx = kind as usize;
+        let now = self.live[idx].fetch_add(bytes as i64, Ordering::Relaxed) + bytes as i64;
+        self.peak[idx].fetch_max(now, Ordering::Relaxed);
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        MemGuard {
+            tracker: self.clone(),
+            kind,
+            bytes,
+        }
+    }
+
+    fn free(&self, kind: MemKind, bytes: u64) {
+        self.live[kind as usize].fetch_sub(bytes as i64, Ordering::Relaxed);
+        self.frees.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn live_bytes(&self, kind: MemKind) -> i64 {
+        self.live[kind as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn total_live(&self) -> i64 {
+        MEM_KINDS.iter().map(|k| self.live_bytes(*k)).sum()
+    }
+
+    pub fn snapshot(&self) -> MemSnapshot {
+        let mut per = [0i64; 5];
+        let mut peak = [0i64; 5];
+        for (i, _) in MEM_KINDS.iter().enumerate() {
+            per[i] = self.live[i].load(Ordering::Relaxed);
+            peak[i] = self.peak[i].load(Ordering::Relaxed);
+        }
+        MemSnapshot {
+            per_kind: per,
+            peak_per_kind: peak,
+            allocs: self.allocs.load(Ordering::Relaxed),
+            frees: self.frees.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// RAII guard: frees its bytes when dropped (conservation by construction).
+#[derive(Debug)]
+pub struct MemGuard {
+    tracker: Arc<MemoryTracker>,
+    kind: MemKind,
+    bytes: u64,
+}
+
+impl MemGuard {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Adjust the guarded size (e.g. synapse buffer replaced).
+    pub fn resize(&mut self, new_bytes: u64) {
+        self.tracker.free(self.kind, self.bytes);
+        let idx = self.kind as usize;
+        let now = self.tracker.live[idx].fetch_add(new_bytes as i64, Ordering::Relaxed)
+            + new_bytes as i64;
+        self.tracker.peak[idx].fetch_max(now, Ordering::Relaxed);
+        self.bytes = new_bytes;
+    }
+}
+
+impl Drop for MemGuard {
+    fn drop(&mut self) {
+        self.tracker.free(self.kind, self.bytes);
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MemSnapshot {
+    pub per_kind: [i64; 5],
+    pub peak_per_kind: [i64; 5],
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+impl MemSnapshot {
+    pub fn total(&self) -> i64 {
+        self.per_kind.iter().sum()
+    }
+
+    pub fn get(&self, kind: MemKind) -> i64 {
+        self.per_kind[kind as usize]
+    }
+}
+
+pub fn fmt_bytes(b: f64) -> String {
+    let b = b.max(0.0);
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} kB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+// ── Analytic projection (Table 1 / Table 2 at paper scale) ──────────────
+
+/// Analytic VRAM model for an arbitrary (config, hardware) pair.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub config_name: String,
+    /// KV bytes for one cached row (all layers, K+V).
+    pub kv_row_bytes: u64,
+    pub weight_bytes: u64,
+    /// Full context length L of the standard architecture.
+    pub full_ctx: usize,
+    /// Landmark count k of the synapse (paper §3.3).
+    pub synapse_k: usize,
+    /// Side-agent generation budget rows on top of the landmarks.
+    pub side_gen: usize,
+    /// Fixed per-agent runtime overhead.  The paper measures ~13 MB/agent
+    /// total with a ~0.8 MB synapse; the remainder is CUDA allocator
+    /// granularity + per-stream activation workspace.  Calibrated to the
+    /// paper's Table-2 midpoint (12 MiB).
+    pub per_agent_overhead: u64,
+    /// Total device memory budget.
+    pub vram_total: u64,
+    /// Non-model reserved bytes (CUDA context, fragmentation reserve).
+    pub vram_reserved: u64,
+}
+
+pub const GIB: u64 = 1 << 30;
+pub const MIB: u64 = 1 << 20;
+
+impl MemoryModel {
+    /// The paper's testbed: Qwen2.5-0.5B (fp16) on an RTX 4090 (24 GB),
+    /// 32k full context, k = 64 landmarks.
+    pub fn qwen05b_on_4090(cfg: &ModelConfig) -> MemoryModel {
+        MemoryModel {
+            config_name: cfg.name.clone(),
+            kv_row_bytes: cfg.kv_row_bytes(2), // fp16 cache
+            // fp16 weights + embeddings ≈ paper's 1.2 GB figure
+            weight_bytes: cfg.weight_bytes(2) + 200 * MIB,
+            full_ctx: 32_768,
+            synapse_k: 64,
+            side_gen: 32,
+            per_agent_overhead: 12 * MIB,
+            vram_total: 24 * GIB,
+            vram_reserved: 1 * GIB,
+        }
+    }
+
+    /// Model for one of our runnable configs (f32, measured capacities).
+    pub fn runnable(cfg: &ModelConfig, main_ctx: usize, synapse_k: usize, side_ctx: usize) -> MemoryModel {
+        MemoryModel {
+            config_name: cfg.name.clone(),
+            kv_row_bytes: cfg.kv_row_bytes(4),
+            weight_bytes: cfg.weight_bytes(4),
+            full_ctx: main_ctx,
+            synapse_k,
+            side_gen: side_ctx.saturating_sub(synapse_k),
+            per_agent_overhead: 0, // measured directly on this substrate
+            vram_total: 24 * GIB,
+            vram_reserved: 0,
+        }
+    }
+
+    /// Standard architecture: every agent owns a weight copy + full context.
+    pub fn standard_agent_bytes(&self) -> u64 {
+        self.weight_bytes + self.kv_row_bytes * self.full_ctx as u64 + self.per_agent_overhead
+    }
+
+    /// Warp-Cortex side agent: landmarks + generation rows + overhead
+    /// (weights shared via the Prism: zero marginal).
+    pub fn warp_agent_bytes(&self) -> u64 {
+        self.kv_row_bytes * (self.synapse_k + self.side_gen) as u64 + self.per_agent_overhead
+    }
+
+    /// Synapse-only context bytes (the paper's "0.01 GB" row).
+    pub fn synapse_bytes(&self) -> u64 {
+        self.kv_row_bytes * self.synapse_k as u64
+    }
+
+    pub fn full_ctx_bytes(&self) -> u64 {
+        self.kv_row_bytes * self.full_ctx as u64
+    }
+
+    fn budget(&self) -> u64 {
+        self.vram_total - self.vram_reserved
+    }
+
+    /// Max agents under the standard architecture (first agent included).
+    pub fn max_agents_standard(&self) -> u64 {
+        self.budget() / self.standard_agent_bytes().max(1)
+    }
+
+    /// Max agents under Warp-Cortex (weights paid once).
+    pub fn max_agents_warp(&self) -> u64 {
+        let rest = self.budget().saturating_sub(self.weight_bytes + self.full_ctx_bytes());
+        1 + rest / self.warp_agent_bytes().max(1)
+    }
+
+    /// Total VRAM with `n` Warp-Cortex agents (1 main + n-1 side).
+    pub fn warp_total_bytes(&self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        self.weight_bytes
+            + self.full_ctx_bytes()          // the main agent's own context
+            + self.per_agent_overhead        // main agent overhead
+            + (n - 1) * self.warp_agent_bytes()
+    }
+
+    /// Total VRAM with `n` standard agents.
+    pub fn standard_total_bytes(&self, n: u64) -> u64 {
+        n * self.standard_agent_bytes()
+    }
+
+    /// Compression ratio of the synapse vs full context (paper claims 98 %
+    /// at L=32k, k=64 — ours: 1 - k/L).
+    pub fn compression(&self) -> f64 {
+        1.0 - self.synapse_k as f64 / self.full_ctx as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qwen_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "qwen2_5_0_5b".into(),
+            d_model: 896,
+            n_layers: 24,
+            n_heads: 14,
+            n_kv_heads: 2,
+            d_ff: 4864,
+            vocab_size: 151936,
+            head_dim: 64,
+            rope_theta: 1e6,
+            param_count: 494_032_768,
+        }
+    }
+
+    #[test]
+    fn tracker_conservation() {
+        let t = MemoryTracker::new();
+        let g1 = t.alloc(MemKind::MainKv, 1000);
+        let g2 = t.alloc(MemKind::SideKv, 500);
+        assert_eq!(t.total_live(), 1500);
+        drop(g1);
+        assert_eq!(t.total_live(), 500);
+        drop(g2);
+        assert_eq!(t.total_live(), 0);
+        let s = t.snapshot();
+        assert_eq!(s.allocs, 2);
+        assert_eq!(s.frees, 2);
+        assert_eq!(s.peak_per_kind[MemKind::MainKv as usize], 1000);
+    }
+
+    #[test]
+    fn guard_resize() {
+        let t = MemoryTracker::new();
+        let mut g = t.alloc(MemKind::Synapse, 100);
+        g.resize(250);
+        assert_eq!(t.live_bytes(MemKind::Synapse), 250);
+        drop(g);
+        assert_eq!(t.live_bytes(MemKind::Synapse), 0);
+    }
+
+    #[test]
+    fn table1_shape_holds() {
+        // The paper's Table 1: standard ≈ 12 agents, warp ≫ standard.
+        let m = MemoryModel::qwen05b_on_4090(&qwen_cfg());
+        // weights ≈ 1.2 GB
+        assert!(m.weight_bytes > 1_000_000_000 && m.weight_bytes < 1_400_000_000);
+        // full 32k fp16 context ≈ 0.4 GB (paper: ~0.5 GB)
+        assert!(m.full_ctx_bytes() > 350_000_000 && m.full_ctx_bytes() < 550_000_000);
+        // synapse ≈ 0.8 MB ≤ paper's 0.01 GB row
+        assert!(m.synapse_bytes() < 10 * MIB);
+        let std_max = m.max_agents_standard();
+        let warp_max = m.max_agents_warp();
+        assert!((10..=16).contains(&std_max), "standard max {std_max}");
+        assert!(warp_max > 400, "warp max {warp_max}");
+        assert!(warp_max > 20 * std_max);
+    }
+
+    #[test]
+    fn table2_shape_holds() {
+        // Measured table: ~13 MB/agent marginal, 100 agents ≈ 1.3 GB delta.
+        let m = MemoryModel::qwen05b_on_4090(&qwen_cfg());
+        let base = m.warp_total_bytes(1);
+        let at100 = m.warp_total_bytes(100);
+        let delta = at100 - base;
+        let per_agent = delta / 99;
+        assert!(
+            (10 * MIB..=16 * MIB).contains(&per_agent),
+            "per-agent {} MB",
+            per_agent / MIB
+        );
+        assert!(delta < 2 * GIB, "delta {}", fmt_bytes(delta as f64));
+        // monotone linear scaling
+        assert!(m.warp_total_bytes(50) > m.warp_total_bytes(10));
+    }
+
+    #[test]
+    fn compression_claim() {
+        let m = MemoryModel::qwen05b_on_4090(&qwen_cfg());
+        assert!(m.compression() > 0.98);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert!(fmt_bytes(2_500_000.0).ends_with("MB"));
+        assert!(fmt_bytes(3.2e9).ends_with("GB"));
+    }
+}

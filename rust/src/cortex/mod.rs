@@ -1,0 +1,40 @@
+//! The paper's Layer-3 contribution: the Warp-Cortex coordinator.
+//!
+//! | module      | paper § | mechanism |
+//! |-------------|---------|-----------|
+//! | `prism`     | 3.2     | Singleton Weight Sharing + agent registry |
+//! | `synapse`   | 3.3     | Topological Synapse (shared landmark buffer) |
+//! | `router`    | 3.4     | Cortex Router (streaming trigger extraction) |
+//! | `gate`      | 3.5     | Validation Gate (cosine θ-test) |
+//! | `inject`    | 3.6     | Referential Injection (virtual-position KV) |
+//! | `scheduler` | 3.1     | River & Stream worker pool (+ device lanes) |
+//! | `batcher`   | 4       | dynamic batching of side-agent decode steps |
+//! | `memory`    | 5       | Table-1/Table-2 byte accounting + projection |
+//! | `baseline`  | 5       | the Standard Architecture comparison column |
+//! | `cortex`    | Fig. 1  | the assembled orchestrator |
+
+pub mod agent;
+pub mod batcher;
+pub mod baseline;
+pub mod capacity;
+pub mod cortex;
+pub mod gate;
+pub mod inject;
+pub mod memory;
+pub mod prism;
+pub mod router;
+pub mod scheduler;
+pub mod synapse;
+
+pub use agent::{SideContext, SideOutcome, SideTask};
+pub use batcher::Batcher;
+pub use baseline::StandardArchitecture;
+pub use capacity::{Bottleneck, CapacityModel, ComputeCosts};
+pub use cortex::{CortexConfig, EpisodeReport, Event, WarpCortex};
+pub use gate::{Gate, GateDecision};
+pub use inject::Injector;
+pub use memory::{MemKind, MemoryModel, MemoryTracker};
+pub use prism::{AgentKind, AgentTicket, Prism};
+pub use router::{AgentRole, Router, RouterConfig, Trigger};
+pub use scheduler::StreamScheduler;
+pub use synapse::{adaptive_subset, SeedMode, Synapse, SynapseSnapshot};

@@ -1,0 +1,181 @@
+//! The Prism (paper §3.2): Singleton Weight Sharing + the agent registry.
+//!
+//! Weights live in device buffers uploaded exactly once (see
+//! `runtime::device`); every agent holds an `Arc<Engine>` — a pointer, not a
+//! copy.  The Prism tracks the live agent population and charges each
+//! agent's KV bytes to the [`MemoryTracker`], which is what the Table-2
+//! bench measures.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::memory::{MemGuard, MemKind, MemoryTracker};
+use crate::model::{Engine, KvCache};
+
+/// Kind of registered agent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgentKind {
+    Main,
+    Side,
+}
+
+/// Unique agent identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AgentId(pub u64);
+
+#[derive(Debug)]
+struct AgentMeta {
+    kind: AgentKind,
+    registered: Instant,
+    kv_bytes: u64,
+}
+
+/// A registered agent's handle: carries its cache and its memory charge.
+/// Dropping the ticket releases both registry entry and accounted bytes.
+pub struct AgentTicket {
+    pub id: AgentId,
+    pub kind: AgentKind,
+    pub kv: KvCache,
+    _mem: MemGuard,
+    prism: Arc<PrismInner>,
+}
+
+impl std::fmt::Debug for AgentTicket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AgentTicket")
+            .field("id", &self.id)
+            .field("kind", &self.kind)
+            .field("kv_len", &self.kv.len())
+            .finish()
+    }
+}
+
+impl Drop for AgentTicket {
+    fn drop(&mut self) {
+        self.prism.agents.lock().unwrap().remove(&self.id);
+    }
+}
+
+#[derive(Debug)]
+struct PrismInner {
+    agents: Mutex<HashMap<AgentId, AgentMeta>>,
+    next_id: AtomicU64,
+}
+
+/// Population counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Population {
+    pub main: usize,
+    pub side: usize,
+}
+
+impl Population {
+    pub fn total(&self) -> usize {
+        self.main + self.side
+    }
+}
+
+/// The singleton model instance shared by all agents.
+pub struct Prism {
+    engine: Arc<Engine>,
+    tracker: Arc<MemoryTracker>,
+    inner: Arc<PrismInner>,
+    /// Keeps the weights' memory charge alive for the Prism's lifetime.
+    _weights_mem: MemGuard,
+}
+
+impl Prism {
+    /// Wrap an engine; charges the (singleton) weight bytes once.
+    pub fn new(engine: Arc<Engine>, tracker: Arc<MemoryTracker>) -> Arc<Prism> {
+        let weight_bytes = engine.device().weight_bytes(&engine.config().name);
+        let weights_mem = tracker.alloc(MemKind::Weights, weight_bytes);
+        Arc::new(Prism {
+            engine,
+            tracker,
+            inner: Arc::new(PrismInner {
+                agents: Mutex::new(HashMap::new()),
+                next_id: AtomicU64::new(1),
+            }),
+            _weights_mem: weights_mem,
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn tracker(&self) -> &Arc<MemoryTracker> {
+        &self.tracker
+    }
+
+    /// Register a new agent: allocates its cache and charges its bytes.
+    pub fn register(&self, kind: AgentKind) -> Result<AgentTicket> {
+        let kv = match kind {
+            AgentKind::Main => self.engine.new_main_cache(),
+            AgentKind::Side => self.engine.new_side_cache(),
+        };
+        let mem_kind = match kind {
+            AgentKind::Main => MemKind::MainKv,
+            AgentKind::Side => MemKind::SideKv,
+        };
+        let bytes = kv.bytes();
+        let guard = self.tracker.alloc(mem_kind, bytes);
+        let id = AgentId(self.inner.next_id.fetch_add(1, Ordering::Relaxed));
+        self.inner.agents.lock().unwrap().insert(
+            id,
+            AgentMeta {
+                kind,
+                registered: Instant::now(),
+                kv_bytes: bytes,
+            },
+        );
+        Ok(AgentTicket {
+            id,
+            kind,
+            kv,
+            _mem: guard,
+            prism: self.inner.clone(),
+        })
+    }
+
+    pub fn population(&self) -> Population {
+        let agents = self.inner.agents.lock().unwrap();
+        let mut p = Population::default();
+        for meta in agents.values() {
+            match meta.kind {
+                AgentKind::Main => p.main += 1,
+                AgentKind::Side => p.side += 1,
+            }
+        }
+        p
+    }
+
+    /// Total KV bytes currently registered (cross-check for the tracker).
+    pub fn registered_kv_bytes(&self) -> u64 {
+        self.inner
+            .agents
+            .lock()
+            .unwrap()
+            .values()
+            .map(|m| m.kv_bytes)
+            .sum()
+    }
+
+    /// Age of the oldest live agent (for eviction policies).
+    pub fn oldest_agent_age(&self) -> Option<std::time::Duration> {
+        self.inner
+            .agents
+            .lock()
+            .unwrap()
+            .values()
+            .map(|m| m.registered.elapsed())
+            .max()
+    }
+}
+
+// Unit tests for the registry bookkeeping use the real engine and live in
+// rust/tests/integration_cortex.rs (Prism requires a device).

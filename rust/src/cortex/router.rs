@@ -1,0 +1,299 @@
+//! The Cortex Router (paper §3.4): regex-style intent extraction over the
+//! Main Agent's *streaming* output, with just-in-time spawn policy.
+//!
+//! The scanner is an incremental state machine fed one byte at a time (the
+//! decode loop produces bytes one by one), equivalent to matching
+//! `\[(TAG): ([^\]]{1,max})\]` over the stream — a unit test checks literal
+//! equivalence against the `regex` crate on random streams.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// What kind of side agent a trigger spawns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgentRole {
+    /// Generic task worker (`[TASK: ...]`).
+    Task,
+    /// Fact recall (`[RECALL: ...]`).
+    Recall,
+    /// Verification / fact-check (`[VERIFY: ...]`).
+    Verify,
+}
+
+impl AgentRole {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AgentRole::Task => "task",
+            AgentRole::Recall => "recall",
+            AgentRole::Verify => "verify",
+        }
+    }
+}
+
+/// A detected trigger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trigger {
+    pub role: AgentRole,
+    pub tag: String,
+    pub payload: String,
+    /// Byte offset in the stream where `[` appeared.
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum ScanState {
+    /// Outside any pattern.
+    Text,
+    /// After `[`, collecting the tag.
+    Tag,
+    /// After `: `, collecting the payload.
+    Payload,
+}
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Recognised tags, mapped to roles.
+    pub tags: Vec<(String, AgentRole)>,
+    /// Payloads longer than this abort the match (runaway guard).
+    pub max_payload: usize,
+    /// Suppress a trigger if an identical payload fired within this many
+    /// stream bytes (dedup window).
+    pub dedup_window: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            tags: vec![
+                ("TASK".into(), AgentRole::Task),
+                ("RECALL".into(), AgentRole::Recall),
+                ("VERIFY".into(), AgentRole::Verify),
+            ],
+            max_payload: 96,
+            dedup_window: 512,
+        }
+    }
+}
+
+/// Streaming trigger scanner + dedup policy.
+#[derive(Debug)]
+pub struct Router {
+    cfg: RouterConfig,
+    state: ScanState,
+    tag_buf: String,
+    payload_buf: String,
+    match_start: usize,
+    offset: usize,
+    recent: VecDeque<(String, usize)>,
+    pub triggers_seen: u64,
+    pub triggers_suppressed: u64,
+    created: Instant,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Router {
+        Router {
+            cfg,
+            state: ScanState::Text,
+            tag_buf: String::new(),
+            payload_buf: String::new(),
+            match_start: 0,
+            offset: 0,
+            recent: VecDeque::new(),
+            triggers_seen: 0,
+            triggers_suppressed: 0,
+            created: Instant::now(),
+        }
+    }
+
+    pub fn with_defaults() -> Router {
+        Router::new(RouterConfig::default())
+    }
+
+    /// Feed one stream byte; returns a trigger if one completed here.
+    pub fn feed_byte(&mut self, b: u8) -> Option<Trigger> {
+        let c = b as char;
+        let out = match self.state {
+            ScanState::Text => {
+                if c == '[' {
+                    self.state = ScanState::Tag;
+                    self.tag_buf.clear();
+                    self.match_start = self.offset;
+                }
+                None
+            }
+            ScanState::Tag => {
+                if c == ':' {
+                    if self.known_role(&self.tag_buf).is_some() {
+                        self.state = ScanState::Payload;
+                        self.payload_buf.clear();
+                    } else {
+                        self.state = ScanState::Text;
+                    }
+                } else if c.is_ascii_uppercase() && self.tag_buf.len() < 16 {
+                    self.tag_buf.push(c);
+                } else if c == '[' {
+                    // restart on nested open bracket
+                    self.tag_buf.clear();
+                    self.match_start = self.offset;
+                } else {
+                    self.state = ScanState::Text;
+                }
+                None
+            }
+            ScanState::Payload => {
+                if c == ']' {
+                    self.state = ScanState::Text;
+                    self.finish_match()
+                } else if c == '[' || self.payload_buf.len() >= self.cfg.max_payload {
+                    self.state = if c == '[' { ScanState::Tag } else { ScanState::Text };
+                    if c == '[' {
+                        self.tag_buf.clear();
+                        self.match_start = self.offset;
+                    }
+                    None
+                } else {
+                    self.payload_buf.push(c);
+                    None
+                }
+            }
+        };
+        self.offset += 1;
+        out
+    }
+
+    /// Feed a chunk; returns all triggers completed within it.
+    pub fn feed(&mut self, text: &str) -> Vec<Trigger> {
+        text.bytes().filter_map(|b| self.feed_byte(b)).collect()
+    }
+
+    fn known_role(&self, tag: &str) -> Option<AgentRole> {
+        self.cfg
+            .tags
+            .iter()
+            .find(|(t, _)| t == tag)
+            .map(|(_, r)| *r)
+    }
+
+    fn finish_match(&mut self) -> Option<Trigger> {
+        let role = self.known_role(&self.tag_buf)?;
+        let payload = self.payload_buf.trim().to_string();
+        if payload.is_empty() {
+            return None;
+        }
+        self.triggers_seen += 1;
+        // dedup
+        let cutoff = self.offset.saturating_sub(self.cfg.dedup_window);
+        while matches!(self.recent.front(), Some((_, o)) if *o < cutoff) {
+            self.recent.pop_front();
+        }
+        if self.recent.iter().any(|(p, _)| *p == payload) {
+            self.triggers_suppressed += 1;
+            return None;
+        }
+        self.recent.push_back((payload.clone(), self.offset));
+        Some(Trigger {
+            role,
+            tag: self.tag_buf.clone(),
+            payload,
+            offset: self.match_start,
+        })
+    }
+
+    pub fn uptime(&self) -> std::time::Duration {
+        self.created.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn detects_simple_trigger() {
+        let mut r = Router::with_defaults();
+        let t = r.feed("thinking... [TASK: verify the math] and on we go");
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].role, AgentRole::Task);
+        assert_eq!(t[0].payload, "verify the math");
+        assert_eq!(t[0].offset, 12);
+    }
+
+    #[test]
+    fn detects_across_chunk_boundaries() {
+        let mut r = Router::with_defaults();
+        assert!(r.feed("abc [VER").is_empty());
+        assert!(r.feed("IFY: the da").is_empty());
+        let t = r.feed("te] rest");
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].role, AgentRole::Verify);
+        assert_eq!(t[0].payload, "the date");
+    }
+
+    #[test]
+    fn unknown_tags_and_malformed_ignored() {
+        let mut r = Router::with_defaults();
+        assert!(r.feed("[WHAT: nope] [task: lowercase] [TASK no colon]").is_empty());
+        assert!(r.feed("[TASK: ] empty payload").is_empty());
+        // unterminated then a real one
+        let t = r.feed("[TASK: runs [TASK: real] x");
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].payload, "real");
+    }
+
+    #[test]
+    fn payload_length_capped() {
+        let mut r = Router::with_defaults();
+        let long = format!("[TASK: {}]", "x".repeat(500));
+        assert!(r.feed(&long).is_empty());
+        assert_eq!(r.feed("[TASK: ok]").len(), 1);
+    }
+
+    #[test]
+    fn dedup_suppresses_repeats_within_window() {
+        let mut r = Router::with_defaults();
+        assert_eq!(r.feed("[TASK: same thing]").len(), 1);
+        assert_eq!(r.feed(" filler [TASK: same thing]").len(), 0);
+        assert_eq!(r.triggers_suppressed, 1);
+        // outside the window it fires again
+        let filler = "y".repeat(600);
+        assert_eq!(r.feed(&format!("{filler}[TASK: same thing]")).len(), 1);
+    }
+
+    #[test]
+    fn multiple_roles_in_one_stream() {
+        let mut r = Router::with_defaults();
+        let t = r.feed("[TASK: a] mid [RECALL: b] end [VERIFY: c]");
+        let roles: Vec<_> = t.iter().map(|x| x.role).collect();
+        assert_eq!(roles, vec![AgentRole::Task, AgentRole::Recall, AgentRole::Verify]);
+    }
+
+    #[test]
+    fn equivalent_to_reference_regex_on_random_streams() {
+        // The streaming scanner must agree with the obvious regex on
+        // arbitrary byte soup (dedup disabled for the comparison).
+        let re = regex::Regex::new(r"\[(TASK|RECALL|VERIFY): ([^\[\]]{1,96})\]").unwrap();
+        check("router == regex", 300, |g| {
+            let alphabet = b"ab []:TASKRECLVIFY ";
+            let s = g.string_from(0..120, alphabet);
+            let mut r = Router::new(RouterConfig {
+                dedup_window: 0,
+                ..RouterConfig::default()
+            });
+            let got: Vec<String> = r
+                .feed(&s)
+                .into_iter()
+                .map(|t| format!("{}:{}", t.tag, t.payload))
+                .collect();
+            let want: Vec<String> = re
+                .captures_iter(&s)
+                .filter(|c| !c[2].trim().is_empty())
+                .map(|c| format!("{}:{}", &c[1], c[2].trim()))
+                .collect();
+            crate::prop_assert!(got == want, "stream {s:?}: got {got:?} want {want:?}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,196 @@
+//! The Stream scheduler: the worker-pool half of the River & Stream topology
+//! (paper §3.1).
+//!
+//! Device-level priority lives in `runtime::device` (River ops preempt
+//! Stream ops at op granularity).  This module manages the *population*
+//! side: a bounded pool of side-agent worker threads (the paper's
+//! "just-in-time spawning" — an agent exists only while its task runs),
+//! task admission, and result collection that the Main Agent polls between
+//! its decode steps.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+use super::agent::{run_side_agent, SideContext, SideOutcome, SideTask};
+
+/// Scheduler statistics.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected_capacity: u64,
+    pub active: usize,
+    pub queued: usize,
+}
+
+struct SharedQueue {
+    tasks: Mutex<VecDeque<SideTask>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Bounded side-agent executor.
+pub struct StreamScheduler {
+    queue: Arc<SharedQueue>,
+    results_rx: Mutex<mpsc::Receiver<SideOutcome>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+    max_queue: usize,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl StreamScheduler {
+    /// Spawn `workers` side-agent threads sharing `ctx`.  At most
+    /// `max_queue` tasks may wait beyond the running ones (backpressure).
+    pub fn new(ctx: Arc<SideContext>, workers: usize, max_queue: usize) -> StreamScheduler {
+        let queue = Arc::new(SharedQueue {
+            tasks: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let (results_tx, results_rx) = mpsc::channel();
+        let active = Arc::new(AtomicUsize::new(0));
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let queue = queue.clone();
+                let ctx = ctx.clone();
+                let tx = results_tx.clone();
+                let active = active.clone();
+                std::thread::Builder::new()
+                    .name(format!("warp-stream-{i}"))
+                    .spawn(move || worker_loop(queue, ctx, tx, active))
+                    .expect("spawn stream worker")
+            })
+            .collect();
+        StreamScheduler {
+            queue,
+            results_rx: Mutex::new(results_rx),
+            workers: handles,
+            active,
+            max_queue,
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// Submit a task; `false` means the queue is full (caller drops it —
+    /// the paper's agents are best-effort by design).
+    pub fn submit(&self, task: SideTask) -> bool {
+        let mut q = self.queue.tasks.lock().unwrap();
+        if q.len() >= self.max_queue {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        q.push_back(task);
+        drop(q);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.queue.cv.notify_one();
+        true
+    }
+
+    /// Non-blocking poll for finished side agents (the Main Agent calls
+    /// this between decode steps).
+    pub fn poll_results(&self) -> Vec<SideOutcome> {
+        let rx = self.results_rx.lock().unwrap();
+        let mut out = Vec::new();
+        while let Ok(r) = rx.try_recv() {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            out.push(r);
+        }
+        out
+    }
+
+    /// Blocking wait for the next result with a timeout.
+    pub fn wait_result(&self, timeout: std::time::Duration) -> Option<SideOutcome> {
+        let rx = self.results_rx.lock().unwrap();
+        match rx.recv_timeout(timeout) {
+            Ok(r) => {
+                self.completed.fetch_add(1, Ordering::Relaxed);
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Tasks currently running or queued.
+    pub fn in_flight(&self) -> usize {
+        self.active.load(Ordering::Relaxed) + self.queue.tasks.lock().unwrap().len()
+    }
+
+    pub fn stats(&self) -> SchedulerStats {
+        SchedulerStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected_capacity: self.rejected.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            queued: self.queue.tasks.lock().unwrap().len(),
+        }
+    }
+
+    /// Drain: wait until nothing is running or queued (or timeout).
+    pub fn drain(&self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while self.in_flight() > 0 {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        true
+    }
+
+    pub fn shutdown(mut self) {
+        self.queue.shutdown.store(true, Ordering::SeqCst);
+        self.queue.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StreamScheduler {
+    fn drop(&mut self) {
+        self.queue.shutdown.store(true, Ordering::SeqCst);
+        self.queue.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    queue: Arc<SharedQueue>,
+    ctx: Arc<SideContext>,
+    results: mpsc::Sender<SideOutcome>,
+    active: Arc<AtomicUsize>,
+) {
+    loop {
+        let task = {
+            let mut q = queue.tasks.lock().unwrap();
+            loop {
+                if queue.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = queue.cv.wait(q).unwrap();
+            }
+        };
+        active.fetch_add(1, Ordering::SeqCst);
+        let outcome = run_side_agent(&ctx, task);
+        active.fetch_sub(1, Ordering::SeqCst);
+        if results.send(outcome).is_err() {
+            return;
+        }
+    }
+}
+
+// Scheduler behaviour with a real engine is covered by
+// rust/tests/integration_cortex.rs; queue-capacity/backpressure unit tests
+// would require a mock engine, which the SideContext design intentionally
+// avoids (it is exercised end-to-end instead).

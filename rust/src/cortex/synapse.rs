@@ -1,0 +1,370 @@
+//! The Topological Synapse (paper §3.3): a shared landmark buffer.
+//!
+//! The Main Agent periodically extracts the top-k landmark rows of its KV
+//! cache (hybrid density-coverage sampling — the Layer-1 Pallas kernel) and
+//! *pushes* them here.  Side agents *read* the latest snapshot and seed
+//! their own caches from it: k rows instead of L — the `O(N·L) → O(N·k)`
+//! claim.  Readers share one `Arc` snapshot ("zero-copy" in the paper's
+//! terms: no per-reader duplication of the landmark buffer).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::memory::{MemGuard, MemKind, MemoryTracker};
+use crate::model::{Engine, KvCache, SynapseOut};
+
+/// One immutable published landmark set.
+#[derive(Debug)]
+pub struct SynapseSnapshot {
+    pub landmarks: SynapseOut,
+    /// Monotone version (bumps on every push).
+    pub version: u64,
+    pub created: Instant,
+}
+
+impl SynapseSnapshot {
+    /// Context compression ratio achieved by this snapshot (paper: 98 %).
+    pub fn compression(&self) -> f64 {
+        let k = self.landmarks.indices.len();
+        if self.landmarks.source_len == 0 {
+            0.0
+        } else {
+            1.0 - k as f64 / self.landmarks.source_len as f64
+        }
+    }
+
+    /// **Hierarchical Synapse** (paper §6.2 future work #2): derive a
+    /// coarser level-2 landmark set — the `k2` highest-scoring landmarks of
+    /// this snapshot, in causal order.  Side agents with tight budgets seed
+    /// from the coarse level; the fine level stays available.
+    pub fn coarsen(&self, k2: usize) -> SynapseOut {
+        let lm = &self.landmarks;
+        let k = lm.indices.len();
+        let k2 = k2.min(k).max(1);
+        // rank landmarks by score, keep top k2, restore causal order
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| lm.scores[b].partial_cmp(&lm.scores[a]).unwrap());
+        let mut keep: Vec<usize> = order[..k2].to_vec();
+        keep.sort_unstable();
+
+        subset(lm, &keep)
+    }
+}
+
+/// Gather the landmark subset `keep` (positions into the landmark list,
+/// ascending) out of a `[L, K, KV, hd]`-shaped landmark set.
+pub fn subset(lm: &SynapseOut, keep: &[usize]) -> SynapseOut {
+    let k = lm.indices.len();
+    let l = lm.n_layers.max(1);
+    let w = lm.lm_k.len() / (l * k); // row width = KV * hd
+    let mut lm_k = Vec::with_capacity(l * keep.len() * w);
+    let mut lm_v = Vec::with_capacity(l * keep.len() * w);
+    for layer in 0..l {
+        let base = layer * k * w;
+        for &i in keep {
+            lm_k.extend_from_slice(&lm.lm_k[base + i * w..base + (i + 1) * w]);
+            lm_v.extend_from_slice(&lm.lm_v[base + i * w..base + (i + 1) * w]);
+        }
+    }
+    SynapseOut {
+        lm_k,
+        lm_v,
+        indices: keep.iter().map(|&i| lm.indices[i]).collect(),
+        scores: keep.iter().map(|&i| lm.scores[i]).collect(),
+        source_len: lm.source_len,
+        n_layers: lm.n_layers,
+    }
+}
+
+/// **Adaptive Landmark Selection** (paper §6.2 future work #1): shrink a
+/// landmark set to the smallest k whose cumulative (normalised) hybrid
+/// score mass reaches `target_mass` — simple contexts keep fewer landmarks,
+/// complex ones keep all.  Result stays in causal order; at least
+/// `min_k` landmarks are always retained.
+pub fn adaptive_subset(lm: &SynapseOut, target_mass: f32, min_k: usize) -> SynapseOut {
+    let k = lm.indices.len();
+    let total: f32 = lm.scores.iter().map(|s| s.max(0.0)).sum();
+    if total <= 0.0 {
+        return subset(lm, &(0..k).collect::<Vec<_>>());
+    }
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| lm.scores[b].partial_cmp(&lm.scores[a]).unwrap());
+    let mut mass = 0.0f32;
+    let mut keep = Vec::new();
+    for &i in &order {
+        keep.push(i);
+        mass += lm.scores[i].max(0.0) / total;
+        if mass >= target_mass && keep.len() >= min_k {
+            break;
+        }
+    }
+    keep.sort_unstable();
+    subset(lm, &keep)
+}
+
+/// Cumulative synapse statistics.
+#[derive(Debug, Clone, Default)]
+pub struct SynapseStats {
+    pub pushes: u64,
+    pub reads: u64,
+    pub last_source_len: usize,
+    pub last_version: u64,
+}
+
+/// The shared landmark buffer.
+pub struct Synapse {
+    current: RwLock<Option<Arc<SynapseSnapshot>>>,
+    version: AtomicU64,
+    reads: AtomicU64,
+    mem: Mutex<Option<MemGuard>>,
+    tracker: Arc<MemoryTracker>,
+}
+
+impl Synapse {
+    pub fn new(tracker: Arc<MemoryTracker>) -> Arc<Synapse> {
+        Arc::new(Synapse {
+            current: RwLock::new(None),
+            version: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+            mem: Mutex::new(None),
+            tracker,
+        })
+    }
+
+    /// Publish a new landmark set (replaces the previous snapshot; existing
+    /// readers keep their `Arc` until they drop it).
+    pub fn push(&self, landmarks: SynapseOut) -> u64 {
+        let bytes = (landmarks.lm_k.len() + landmarks.lm_v.len()) as u64 * 4
+            + landmarks.indices.len() as u64 * 8;
+        let version = self.version.fetch_add(1, Ordering::SeqCst) + 1;
+        let snap = Arc::new(SynapseSnapshot {
+            landmarks,
+            version,
+            created: Instant::now(),
+        });
+        {
+            let mut mem = self.mem.lock().unwrap();
+            match mem.as_mut() {
+                Some(g) => g.resize(bytes),
+                None => *mem = Some(self.tracker.alloc(MemKind::Synapse, bytes)),
+            }
+        }
+        *self.current.write().unwrap() = Some(snap);
+        version
+    }
+
+    /// Read the latest snapshot (None until the first push).
+    pub fn read(&self) -> Option<Arc<SynapseSnapshot>> {
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        self.current.read().unwrap().clone()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::SeqCst)
+    }
+
+    pub fn stats(&self) -> SynapseStats {
+        let cur = self.current.read().unwrap();
+        SynapseStats {
+            pushes: self.version.load(Ordering::SeqCst),
+            reads: self.reads.load(Ordering::Relaxed),
+            last_source_len: cur.as_ref().map(|s| s.landmarks.source_len).unwrap_or(0),
+            last_version: cur.as_ref().map(|s| s.version).unwrap_or(0),
+        }
+    }
+
+    /// Seed a fresh side-agent cache from the latest snapshot.
+    ///
+    /// The side agent continues decoding at position `snapshot.source_len`
+    /// (after the original context), so the landmark rows keep their
+    /// original RoPE positions — the witness-complex reconstruction the
+    /// paper describes.  Returns `(cache, continuation_pos, version)`.
+    pub fn seed_side_cache(&self, engine: &Engine) -> Result<(KvCache, i32, u64)> {
+        self.seed_side_cache_with(engine, SeedMode::Full)
+    }
+
+    /// Seeding with the §6.2 extensions: hierarchical (coarse level-2
+    /// landmarks) or adaptive-k (score-mass-driven landmark count).
+    pub fn seed_side_cache_with(
+        &self,
+        engine: &Engine,
+        mode: SeedMode,
+    ) -> Result<(KvCache, i32, u64)> {
+        let Some(snap) = self.read() else {
+            bail!("synapse is empty (no landmarks pushed yet)");
+        };
+        let lm = match mode {
+            SeedMode::Full => None,
+            SeedMode::Coarse(k2) => Some(snap.coarsen(k2)),
+            SeedMode::Adaptive { target_mass, min_k } => {
+                Some(adaptive_subset(&snap.landmarks, target_mass, min_k))
+            }
+        };
+        let lm = lm.as_ref().unwrap_or(&snap.landmarks);
+        let k = lm.indices.len();
+        let mut kv = engine.new_side_cache();
+        kv.append_rows(k, &lm.lm_k, &lm.lm_v)?;
+        Ok((kv, lm.source_len as i32, snap.version))
+    }
+}
+
+/// How a side agent's cache is seeded from the synapse.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SeedMode {
+    /// All k landmarks (the paper's base design).
+    Full,
+    /// Hierarchical Synapse (§6.2 #2): the coarse level-2 set of size k2.
+    Coarse(usize),
+    /// Adaptive Landmark Selection (§6.2 #1): smallest set reaching the
+    /// target hybrid-score mass.
+    Adaptive { target_mass: f32, min_k: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_landmarks(k: usize, source_len: usize, rows: usize) -> SynapseOut {
+        SynapseOut {
+            lm_k: vec![1.0; rows * k],
+            lm_v: vec![2.0; rows * k],
+            indices: (0..k as i32).collect(),
+            scores: vec![0.5; k],
+            source_len,
+            n_layers: 1,
+        }
+    }
+
+    #[test]
+    fn push_read_versions() {
+        let t = MemoryTracker::new();
+        let s = Synapse::new(t.clone());
+        assert!(s.read().is_none());
+        let v1 = s.push(fake_landmarks(4, 100, 8));
+        assert_eq!(v1, 1);
+        let snap = s.read().unwrap();
+        assert_eq!(snap.version, 1);
+        assert!(snap.compression() > 0.9);
+        let v2 = s.push(fake_landmarks(4, 120, 8));
+        assert_eq!(v2, 2);
+        // old snapshot still valid for holders
+        assert_eq!(snap.landmarks.source_len, 100);
+        assert_eq!(s.read().unwrap().landmarks.source_len, 120);
+        assert_eq!(s.stats().pushes, 2);
+        assert!(s.stats().reads >= 2);
+    }
+
+    #[test]
+    fn memory_accounted_once_not_per_reader() {
+        let t = MemoryTracker::new();
+        let s = Synapse::new(t.clone());
+        s.push(fake_landmarks(4, 100, 8));
+        let before = t.live_bytes(MemKind::Synapse);
+        assert!(before > 0);
+        let _r1 = s.read();
+        let _r2 = s.read();
+        let _r3 = s.read();
+        assert_eq!(t.live_bytes(MemKind::Synapse), before, "readers are zero-copy");
+        // replacing adjusts, not accumulates
+        s.push(fake_landmarks(8, 100, 8));
+        let after = t.live_bytes(MemKind::Synapse);
+        assert!(after > before);
+        s.push(fake_landmarks(4, 100, 8));
+        assert_eq!(t.live_bytes(MemKind::Synapse), before);
+    }
+
+    fn structured_landmarks() -> SynapseOut {
+        // L=2 layers, K=4 landmarks, row width w=3: lm_k[l][i][..] = l*100 + i
+        let mut lm_k = Vec::new();
+        for l in 0..2 {
+            for i in 0..4 {
+                lm_k.extend_from_slice(&[(l * 100 + i) as f32; 3]);
+            }
+        }
+        SynapseOut {
+            lm_v: lm_k.iter().map(|x| -x).collect(),
+            lm_k,
+            indices: vec![3, 10, 20, 30],
+            scores: vec![0.1, 0.9, 0.3, 0.6],
+            source_len: 40,
+            n_layers: 2,
+        }
+    }
+
+    #[test]
+    fn coarsen_keeps_top_scores_in_causal_order() {
+        let t = MemoryTracker::new();
+        let s = Synapse::new(t);
+        s.push(structured_landmarks());
+        let snap = s.read().unwrap();
+        let coarse = snap.coarsen(2);
+        // top-2 scores are 0.9 (i=1) and 0.6 (i=3), causal order => [10, 30]
+        assert_eq!(coarse.indices, vec![10, 30]);
+        assert_eq!(coarse.scores, vec![0.9, 0.6]);
+        assert_eq!(coarse.n_layers, 2);
+        // layer 0 rows: landmarks 1 and 3 => values 1.0 and 3.0
+        assert_eq!(&coarse.lm_k[..6], &[1.0, 1.0, 1.0, 3.0, 3.0, 3.0]);
+        // layer 1 rows: 101 and 103
+        assert_eq!(&coarse.lm_k[6..12], &[101.0, 101.0, 101.0, 103.0, 103.0, 103.0]);
+        assert_eq!(coarse.lm_v[0], -1.0);
+        // degenerate requests clamp
+        assert_eq!(snap.coarsen(0).indices.len(), 1);
+        assert_eq!(snap.coarsen(99).indices.len(), 4);
+    }
+
+    #[test]
+    fn adaptive_subset_scales_k_with_mass() {
+        let lm = structured_landmarks();
+        // total mass 1.9; target 0.4 → 0.9/1.9 ≈ 0.47 ≥ 0.4 after 1 landmark
+        let small = adaptive_subset(&lm, 0.4, 1);
+        assert_eq!(small.indices, vec![10]);
+        // target 0.99 → needs all 4
+        let big = adaptive_subset(&lm, 0.99, 1);
+        assert_eq!(big.indices.len(), 4);
+        // min_k respected
+        let floored = adaptive_subset(&lm, 0.01, 3);
+        assert_eq!(floored.indices.len(), 3);
+        // causal order always
+        assert!(floored.indices.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn concurrent_push_read_consistency() {
+        use std::thread;
+        let t = MemoryTracker::new();
+        let s = Synapse::new(t);
+        let writer = {
+            let s = s.clone();
+            thread::spawn(move || {
+                for i in 1..=200usize {
+                    s.push(fake_landmarks(4, 100 + i, 8));
+                }
+            })
+        };
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let s = s.clone();
+                thread::spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..500 {
+                        if let Some(snap) = s.read() {
+                            // versions never go backwards for a reader
+                            assert!(snap.version >= last);
+                            last = snap.version;
+                            // snapshot is internally consistent
+                            assert_eq!(snap.landmarks.indices.len(), 4);
+                        }
+                    }
+                })
+            })
+            .collect();
+        writer.join().unwrap();
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert_eq!(s.version(), 200);
+    }
+}

@@ -1,0 +1,30 @@
+//! # Warp-Cortex
+//!
+//! A from-scratch reproduction of *Warp-Cortex: An Asynchronous,
+//! Memory-Efficient Architecture for Million-Agent Cognitive Scaling on
+//! Consumer Hardware* (Ruiz Williams, 2026) as a three-layer
+//! Rust + JAX + Pallas serving stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): Pallas kernels — decode
+//!   attention and the Topological Synapse's hybrid density-coverage
+//!   landmark sampler.
+//! * **Layer 2** (`python/compile/model.py`): JAX transformer, AOT-lowered
+//!   to HLO-text artifacts at build time.
+//! * **Layer 3** (this crate): the serving coordinator — singleton weight
+//!   sharing ([`cortex::prism`]), the Topological Synapse buffer
+//!   ([`cortex::synapse`]), the Cortex Router ([`cortex::router`]), the
+//!   Validation Gate ([`cortex::gate`]), Referential Injection
+//!   ([`cortex::inject`]) and the River & Stream scheduler
+//!   ([`runtime::device`] lanes + [`cortex::scheduler`]).
+//!
+//! Python never runs on the request path: `make artifacts` exports
+//! everything once, and this crate serves from the compiled artifacts.
+
+pub mod cortex;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod serve;
+pub mod text;
+pub mod util;
+pub mod workload;

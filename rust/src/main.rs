@@ -1,0 +1,155 @@
+//! Warp-Cortex launcher.
+//!
+//! ```text
+//! warp-cortex serve  [--model small] [--addr 127.0.0.1:8787] [--workers 2]
+//! warp-cortex run    [--model small] [--prompt "..."] [--max-tokens 64]
+//! warp-cortex council [--model small] [--prompt "..."] [--agents 4]
+//! warp-cortex tables  [--model tiny]          # print Table 1 quick view
+//! warp-cortex info                            # manifest + artifact summary
+//! ```
+//!
+//! Requires `make artifacts` to have been run (Python is build-time only;
+//! this binary never invokes it).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use warp_cortex::cortex::{CortexConfig, WarpCortex};
+use warp_cortex::model::Engine;
+use warp_cortex::runtime::{DeviceHandle, DeviceOptions, Manifest};
+use warp_cortex::serve::{serve, ServerConfig};
+use warp_cortex::util::args::Args;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("run") => cmd_run(&args),
+        Some("council") => cmd_council(&args),
+        Some("tables") => cmd_tables(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: warp-cortex <serve|run|council|tables|info> [options]\n\
+                 see rust/src/main.rs for the option list"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn build_cortex(args: &Args) -> Result<Arc<WarpCortex>> {
+    let model = args.get_or("model", "small").to_string();
+    let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&[&model]))?;
+    let engine = Engine::new(device, &model)?;
+    let cfg = CortexConfig {
+        model: model.clone(),
+        max_side_agents: args.get_usize("agents", 4),
+        side_gen_budget: args.get_usize("side-budget", 24),
+        inject_enabled: !args.flag("no-inject"),
+        gate_theta: args.get("theta").and_then(|t| t.parse().ok()),
+        ..CortexConfig::default()
+    };
+    Ok(Arc::new(WarpCortex::new(engine, cfg)?))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cortex = build_cortex(args)?;
+    let cfg = ServerConfig {
+        addr: args.get_or("addr", "127.0.0.1:8787").to_string(),
+        workers: args.get_usize("workers", 2),
+        max_tokens_cap: args.get_usize("max-tokens-cap", 128),
+    };
+    let handle = serve(cortex, cfg)?;
+    println!("warp-cortex serving on http://{}", handle.addr);
+    println!("  POST /generate  {{\"prompt\": \"...\", \"max_tokens\": 48}}");
+    println!("  GET  /stats");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cortex = build_cortex(args)?;
+    let prompt = args
+        .get_or("prompt", "user: tell me about the kv cache.\nriver: ")
+        .to_string();
+    let max_tokens = args.get_usize("max-tokens", 64);
+    let report = cortex.run_episode(&prompt, max_tokens)?;
+    println!("── prompt ──\n{prompt}");
+    println!("── generated ({} tokens) ──\n{}", report.tokens_generated, report.text);
+    println!(
+        "── {:.1} tok/s, p50 step {:.2} ms, {} events ──",
+        report.main_tokens_per_sec,
+        report.step_latency_p50_ns / 1e6,
+        report.events.len()
+    );
+    Ok(())
+}
+
+fn cmd_council(args: &Args) -> Result<()> {
+    let cortex = build_cortex(args)?;
+    let prompt = args
+        .get_or(
+            "prompt",
+            "user: tell me about the synapse. [TASK: verify the units] \
+             [RECALL: the definition]\nriver: ",
+        )
+        .to_string();
+    let report = cortex.run_episode(&prompt, args.get_usize("max-tokens", 96))?;
+    println!("text: {}", report.text);
+    println!("events:");
+    for e in &report.events {
+        println!("  {e:?}");
+    }
+    println!("gate: {:?}", report.gate);
+    println!("inject: {:?}", report.inject);
+    println!("memory: total {} bytes", report.memory.total());
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    // Delegated to the bench binaries for the full output; print the quick
+    // analytic version here.
+    use warp_cortex::cortex::memory::{fmt_bytes, MemoryModel};
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let qwen = manifest
+        .analytic
+        .get("qwen2_5_0_5b")
+        .expect("analytic config");
+    let m = MemoryModel::qwen05b_on_4090(qwen);
+    println!("Table 1 (analytic, {}):", qwen.name);
+    println!("  weights           {}", fmt_bytes(m.weight_bytes as f64));
+    println!("  full context      {}", fmt_bytes(m.full_ctx_bytes() as f64));
+    println!("  synapse (k=64)    {}", fmt_bytes(m.synapse_bytes() as f64));
+    println!("  max agents std    {}", m.max_agents_standard());
+    println!("  max agents warp   {}", m.max_agents_warp());
+    let _ = args;
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    for (name, bundle) in &manifest.configs {
+        println!(
+            "config {name}: d={} L={} heads={}/{} params={}",
+            bundle.model.d_model,
+            bundle.model.n_layers,
+            bundle.model.n_heads,
+            bundle.model.n_kv_heads,
+            bundle.model.param_count
+        );
+        for a in &bundle.artifacts {
+            println!("  {} ({} flops)", a.name, a.flops);
+        }
+    }
+    Ok(())
+}

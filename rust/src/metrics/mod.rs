@@ -1,0 +1,247 @@
+//! Serving metrics: counters, histograms with percentile queries, and
+//! windowed throughput meters.  Everything is cheap enough for the decode
+//! hot loop (atomics + a mutex-guarded histogram with bounded buckets).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram (ns).  ~60 buckets cover 1 ns .. 1000 s
+/// with <8% relative error — plenty for p50/p95/p99 reporting.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Mutex<Vec<u64>>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+const BUCKETS_PER_DECADE: usize = 5;
+const DECADES: usize = 12;
+const NBUCKETS: usize = BUCKETS_PER_DECADE * DECADES;
+
+fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        return 0;
+    }
+    let log10 = (ns as f64).log10();
+    let idx = (log10 * BUCKETS_PER_DECADE as f64) as usize;
+    idx.min(NBUCKETS - 1)
+}
+
+fn bucket_upper_ns(idx: usize) -> f64 {
+    10f64.powf((idx + 1) as f64 / BUCKETS_PER_DECADE as f64)
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: Mutex::new(vec![0; NBUCKETS]),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        let mut b = self.buckets.lock().unwrap();
+        b[bucket_of(ns)] += 1;
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile in ns (`p` in [0, 100]).
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * total as f64).ceil().max(1.0) as u64;
+        let b = self.buckets.lock().unwrap();
+        let mut cum = 0u64;
+        for (i, n) in b.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return bucket_upper_ns(i);
+            }
+        }
+        bucket_upper_ns(NBUCKETS - 1)
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            mean_ns: self.mean_ns(),
+            p50_ns: self.percentile_ns(50.0),
+            p95_ns: self.percentile_ns(95.0),
+            p99_ns: self.percentile_ns(99.0),
+            max_ns: self.max_ns(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub max_ns: u64,
+}
+
+/// Events-per-second meter over the process lifetime plus a sliding window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    events: Counter,
+    window: Mutex<Vec<Instant>>,
+    window_cap: usize,
+}
+
+impl Throughput {
+    pub fn new() -> Throughput {
+        Throughput {
+            start: Instant::now(),
+            events: Counter::default(),
+            window: Mutex::new(Vec::new()),
+            window_cap: 4096,
+        }
+    }
+
+    pub fn tick(&self) {
+        self.events.inc();
+        let mut w = self.window.lock().unwrap();
+        w.push(Instant::now());
+        if w.len() > self.window_cap {
+            let drop_n = w.len() - self.window_cap;
+            w.drain(..drop_n);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.events.get()
+    }
+
+    /// Average rate since construction.
+    pub fn overall_per_sec(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.events.get() as f64 / dt
+        }
+    }
+
+    /// Rate over the last `secs` seconds (from the sliding window).
+    pub fn recent_per_sec(&self, secs: f64) -> f64 {
+        let cutoff = Instant::now() - std::time::Duration::from_secs_f64(secs);
+        let w = self.window.lock().unwrap();
+        let n = w.iter().rev().take_while(|t| **t >= cutoff).count();
+        n as f64 / secs
+    }
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1000); // 1µs .. 1ms uniform
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 1000);
+        assert!(s.p50_ns <= s.p95_ns && s.p95_ns <= s.p99_ns);
+        // p50 should land near 500µs (within bucket error)
+        assert!(s.p50_ns > 3e5 && s.p50_ns < 8e5, "p50={}", s.p50_ns);
+        assert_eq!(s.max_ns, 1_000_000);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_ns(99.0), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn throughput_total() {
+        let t = Throughput::new();
+        for _ in 0..10 {
+            t.tick();
+        }
+        assert_eq!(t.total(), 10);
+        assert!(t.overall_per_sec() > 0.0);
+        assert!(t.recent_per_sec(10.0) >= 1.0);
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        assert!(bucket_of(10) <= bucket_of(100));
+        assert!(bucket_of(1_000_000) < bucket_of(100_000_000));
+        assert_eq!(bucket_of(0), 0);
+    }
+}

@@ -1,0 +1,562 @@
+//! The typed inference API: shapes the coordinator's intents into device ops.
+//!
+//! One `Engine` per model config.  All agents share it (`Arc<Engine>` — the
+//! Prism of §3.2): it holds no per-agent state, only program ids and the
+//! device handle.  Every method takes the [`Lane`] the op should run on, so
+//! the River & Stream scheduler controls priority end-to-end.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::kv::KvCache;
+use crate::runtime::device::ProgramId;
+use crate::runtime::{
+    Capacities, DeviceHandle, HostTensor, Lane, ModelConfig,
+};
+
+/// Output of a prefill op.
+#[derive(Debug)]
+pub struct PrefillOut {
+    /// `[S, V]` logits over the padded prompt.
+    pub logits: Vec<f32>,
+    /// Final-layer hidden state at the last real position.
+    pub hidden_last: Vec<f32>,
+    /// Number of real tokens.
+    pub len: usize,
+}
+
+/// Output of a decode op.
+#[derive(Debug)]
+pub struct DecodeOut {
+    /// `[V]` next-token logits.
+    pub logits: Vec<f32>,
+    /// `[D]` final hidden state (Validation Gate input).
+    pub hidden: Vec<f32>,
+    pub queue_ns: u64,
+    pub exec_ns: u64,
+}
+
+/// Output of a synapse extraction (§3.3).
+#[derive(Debug, Clone)]
+pub struct SynapseOut {
+    /// `[L, K, KV, hd]` landmark keys.
+    pub lm_k: Vec<f32>,
+    /// `[L, K, KV, hd]` landmark values.
+    pub lm_v: Vec<f32>,
+    /// Original cache positions of the landmarks (ascending).
+    pub indices: Vec<i32>,
+    /// Hybrid scores of the selected landmarks.
+    pub scores: Vec<f32>,
+    /// Length of the source context when extracted.
+    pub source_len: usize,
+    /// Model layer count (fixes the `[L, K, KV, hd]` buffer geometry).
+    pub n_layers: usize,
+}
+
+/// Output of a referential-injection encode (§3.6).
+#[derive(Debug)]
+pub struct InjectOut {
+    /// `[L, T, KV, hd]` keys at virtual positions.
+    pub k: Vec<f32>,
+    /// `[L, T, KV, hd]` values.
+    pub v: Vec<f32>,
+    /// Hidden state of the thought's last token.
+    pub hidden_last: Vec<f32>,
+    /// Number of real thought tokens (<= T).
+    pub len: usize,
+}
+
+struct ProgramIds {
+    prefill: ProgramId,
+    /// Decode ladder: (cache capacity, program), ascending capacity.  The
+    /// dispatcher picks the smallest tier that fits the live context
+    /// (§Perf opt A: upload + attention cost scale with the tier, not the
+    /// full cache capacity).
+    decode_tiers: Vec<(usize, ProgramId)>,
+    decode_side: ProgramId,
+    decode_batch: ProgramId,
+    synapse: ProgramId,
+    inject: ProgramId,
+}
+
+/// Shared, stateless inference engine for one model config.
+pub struct Engine {
+    device: DeviceHandle,
+    cfg: ModelConfig,
+    caps: Capacities,
+    ids: ProgramIds,
+    pub alpha: f32,
+    pub inv2sig2: f32,
+    pub gate_theta: f32,
+    pad_id: i32,
+}
+
+pub const PAD_ID: i32 = 256;
+pub const BOS_ID: i32 = 257;
+pub const EOS_ID: i32 = 258;
+pub const REF_ID: i32 = 259;
+
+impl Engine {
+    /// Build an engine for `config` on an already-started device.
+    pub fn new(device: DeviceHandle, config: &str) -> Result<Arc<Engine>> {
+        let bundle = device.manifest().config(config)?.clone();
+        let caps = bundle.caps;
+        let find = |prefix: &str| -> Result<ProgramId> {
+            let spec = bundle.artifact(prefix)?;
+            device.program_id(&spec.name)
+        };
+        // Collect the decode capacity ladder from the manifest (capacity =
+        // dim 1 of the k_cache input).
+        let mut decode_tiers = Vec::new();
+        for a in &bundle.artifacts {
+            if a.program.starts_with("decode_c") {
+                let cap = a.inputs[2].shape[1];
+                decode_tiers.push((cap, device.program_id(&a.name)?));
+            }
+        }
+        decode_tiers.sort_by_key(|(c, _)| *c);
+        if decode_tiers.is_empty() {
+            bail!("no decode artifacts for config `{config}`");
+        }
+        let ids = ProgramIds {
+            prefill: find(&format!("prefill_s{}", caps.prefill_len))?,
+            decode_tiers,
+            decode_side: find(&format!("decode_c{}", caps.side_ctx))?,
+            decode_batch: find(&format!("decode_batch_b{}", caps.decode_batch))?,
+            synapse: find("synapse_extract")?,
+            inject: find("inject_encode")?,
+        };
+        Ok(Arc::new(Engine {
+            device,
+            cfg: bundle.model,
+            caps,
+            ids,
+            alpha: bundle.defaults.alpha,
+            inv2sig2: bundle.defaults.inv2sig2,
+            gate_theta: bundle.defaults.gate_theta,
+            pad_id: PAD_ID,
+        }))
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn caps(&self) -> &Capacities {
+        &self.caps
+    }
+
+    pub fn device(&self) -> &DeviceHandle {
+        &self.device
+    }
+
+    /// Fresh main-agent cache (capacity `main_ctx`).
+    pub fn new_main_cache(&self) -> KvCache {
+        KvCache::new(&self.cfg, self.caps.main_ctx)
+    }
+
+    /// Fresh side-agent cache (capacity `side_ctx`).
+    pub fn new_side_cache(&self) -> KvCache {
+        KvCache::new(&self.cfg, self.caps.side_ctx)
+    }
+
+    // ── Prefill ────────────────────────────────────────────────────────
+
+    /// Run the prompt through the model; fills `kv` (must be a main cache).
+    pub fn prefill(&self, tokens: &[i32], kv: &mut KvCache, lane: Lane) -> Result<PrefillOut> {
+        let s = self.caps.prefill_len;
+        if tokens.is_empty() || tokens.len() > s {
+            bail!("prefill: prompt length {} not in 1..={s}", tokens.len());
+        }
+        if kv.capacity() != self.caps.main_ctx {
+            bail!("prefill requires a main-capacity cache");
+        }
+        let mut padded = vec![self.pad_id; s];
+        padded[..tokens.len()].copy_from_slice(tokens);
+
+        let out = self.device.call(
+            self.ids.prefill,
+            vec![
+                HostTensor::i32(padded, vec![s]),
+                HostTensor::scalar_i32(tokens.len() as i32),
+            ],
+            lane,
+        )?;
+        let [logits, hidden, k_full, v_full]: [HostTensor; 4] = take4(out.outputs)?;
+        kv.load_full(tokens.len(), k_full.as_f32()?, v_full.as_f32()?)?;
+        Ok(PrefillOut {
+            logits: logits.into_f32()?,
+            hidden_last: hidden.into_f32()?,
+            len: tokens.len(),
+        })
+    }
+
+    // ── Decode ─────────────────────────────────────────────────────────
+
+    /// One decode step at RoPE position `pos`; appends the new row to `kv`.
+    ///
+    /// `pos` is passed separately from `kv.len()` because side agents decode
+    /// at *continuation* positions (after the landmark positions), and
+    /// injected rows occupy cache rows without advancing the text position.
+    pub fn decode(&self, token: i32, pos: i32, kv: &mut KvCache, lane: Lane) -> Result<DecodeOut> {
+        if kv.remaining() == 0 {
+            bail!("decode: kv cache full");
+        }
+        // Tier dispatch: smallest compiled capacity that (a) holds the rows
+        // the step must attend over and (b) does not exceed this cache's
+        // own capacity (so side caches use the side program).
+        let needed = kv.len() + 1;
+        let (tier, id) = self
+            .ids
+            .decode_tiers
+            .iter()
+            .find(|(c, _)| *c >= needed && *c <= kv.capacity())
+            .copied()
+            .or_else(|| {
+                self.ids
+                    .decode_tiers
+                    .iter()
+                    .find(|(c, _)| *c == kv.capacity())
+                    .copied()
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!("no decode tier for cache capacity {}", kv.capacity())
+            })?;
+        let _ = id;
+        self.decode_at_tier(token, pos, kv, tier, lane)
+    }
+
+    /// Decode pinned to an explicit capacity tier (tests + tier ablation;
+    /// normal callers use [`Engine::decode`], which picks the tier).
+    pub fn decode_at_tier(
+        &self,
+        token: i32,
+        pos: i32,
+        kv: &mut KvCache,
+        tier: usize,
+        lane: Lane,
+    ) -> Result<DecodeOut> {
+        let (_, id) = self
+            .ids
+            .decode_tiers
+            .iter()
+            .find(|(c, _)| *c == tier)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no decode program at tier {tier}"))?;
+        if kv.len() >= tier {
+            bail!("decode_at_tier: {} rows do not fit tier {tier}", kv.len());
+        }
+
+        let (k_up, v_up) = if tier == kv.capacity() {
+            (kv.k_raw().to_vec(), kv.v_raw().to_vec())
+        } else {
+            kv.prefix_upload(tier)
+        };
+        let shape = vec![
+            self.cfg.n_layers,
+            tier,
+            self.cfg.n_kv_heads,
+            self.cfg.head_dim,
+        ];
+        let out = self.device.call(
+            id,
+            vec![
+                HostTensor::scalar_i32(token),
+                HostTensor::scalar_i32(pos),
+                HostTensor::f32(k_up, shape.clone()),
+                HostTensor::f32(v_up, shape),
+                HostTensor::scalar_i32(kv.len() as i32),
+            ],
+            lane,
+        )?;
+        let queue_ns = out.queue_ns;
+        let exec_ns = out.exec_ns;
+        let [logits, hidden, k_new, v_new]: [HostTensor; 4] = take4(out.outputs)?;
+        kv.append_row(k_new.as_f32()?, v_new.as_f32()?)?;
+        Ok(DecodeOut {
+            logits: logits.into_f32()?,
+            hidden: hidden.into_f32()?,
+            queue_ns,
+            exec_ns,
+        })
+    }
+
+    /// Single side-agent decode over raw cache buffers (the batcher's
+    /// straggler path).  Returns `(logits, hidden, k_new, v_new)` without
+    /// touching any `KvCache`.
+    #[allow(clippy::type_complexity)]
+    pub fn decode_side_raw(
+        &self,
+        token: i32,
+        pos: i32,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        cache_len: i32,
+        lane: Lane,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let cs = self.caps.side_ctx;
+        let shape = vec![
+            self.cfg.n_layers,
+            cs,
+            self.cfg.n_kv_heads,
+            self.cfg.head_dim,
+        ];
+        let out = self.device.call(
+            self.ids.decode_side,
+            vec![
+                HostTensor::scalar_i32(token),
+                HostTensor::scalar_i32(pos),
+                HostTensor::f32(k, shape.clone()),
+                HostTensor::f32(v, shape),
+                HostTensor::scalar_i32(cache_len),
+            ],
+            lane,
+        )?;
+        let [logits, hidden, k_new, v_new]: [HostTensor; 4] = take4(out.outputs)?;
+        Ok((
+            logits.into_f32()?,
+            hidden.into_f32()?,
+            k_new.into_f32()?,
+            v_new.into_f32()?,
+        ))
+    }
+
+    /// Batched side-agent decode over raw cache buffers (the dynamic
+    /// batcher's entry point — it owns flat copies, not `KvCache`s).
+    ///
+    /// `n` is the number of real slots; the remaining `B - n` lanes are
+    /// padded.  `k_all`/`v_all` are `[B, L, Cs, KV, hd]` with the first `n`
+    /// slots filled.  Returns `n` tuples `(logits, hidden, k_new, v_new)`.
+    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
+    pub fn decode_batch_raw(
+        &self,
+        n: usize,
+        mut tokens: Vec<i32>,
+        mut pos: Vec<i32>,
+        mut k_all: Vec<f32>,
+        mut v_all: Vec<f32>,
+        mut lens: Vec<i32>,
+        lane: Lane,
+    ) -> Result<Vec<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>> {
+        let b = self.caps.decode_batch;
+        if n == 0 || n > b {
+            bail!("decode_batch_raw: {n} slots not in 1..={b}");
+        }
+        let cs = self.caps.side_ctx;
+        let per = self.cfg.n_layers * cs * self.cfg.n_kv_heads * self.cfg.head_dim;
+        tokens.resize(b, self.pad_id);
+        pos.resize(b, 0);
+        lens.resize(b, 0);
+        k_all.resize(b * per, 0.0);
+        v_all.resize(b * per, 0.0);
+
+        let shape = vec![
+            b,
+            self.cfg.n_layers,
+            cs,
+            self.cfg.n_kv_heads,
+            self.cfg.head_dim,
+        ];
+        let out = self.device.call(
+            self.ids.decode_batch,
+            vec![
+                HostTensor::i32(tokens, vec![b]),
+                HostTensor::i32(pos, vec![b]),
+                HostTensor::f32(k_all, shape.clone()),
+                HostTensor::f32(v_all, shape),
+                HostTensor::i32(lens, vec![b]),
+            ],
+            lane,
+        )?;
+        let [logits, hidden, k_new, v_new]: [HostTensor; 4] = take4(out.outputs)?;
+        let logits = logits.into_f32()?;
+        let hidden = hidden.into_f32()?;
+        let k_new = k_new.into_f32()?;
+        let v_new = v_new.into_f32()?;
+
+        let v_dim = self.cfg.vocab_size;
+        let d = self.cfg.d_model;
+        let row = self.cfg.n_layers * self.cfg.n_kv_heads * self.cfg.head_dim;
+        Ok((0..n)
+            .map(|i| {
+                (
+                    logits[i * v_dim..(i + 1) * v_dim].to_vec(),
+                    hidden[i * d..(i + 1) * d].to_vec(),
+                    k_new[i * row..(i + 1) * row].to_vec(),
+                    v_new[i * row..(i + 1) * row].to_vec(),
+                )
+            })
+            .collect())
+    }
+
+    /// Batched side-agent decode over `KvCache` slots (same order results).
+    pub fn decode_batch(
+        &self,
+        slots: &mut [(i32, i32, &mut KvCache)],
+        lane: Lane,
+    ) -> Result<Vec<DecodeOut>> {
+        let b = self.caps.decode_batch;
+        if slots.is_empty() || slots.len() > b {
+            bail!("decode_batch: {} slots not in 1..={b}", slots.len());
+        }
+        let cs = self.caps.side_ctx;
+        let per = self.cfg.n_layers * cs * self.cfg.n_kv_heads * self.cfg.head_dim;
+        let n = slots.len();
+        let mut tokens = Vec::with_capacity(n);
+        let mut pos = Vec::with_capacity(n);
+        let mut lens = Vec::with_capacity(n);
+        let mut k_all = vec![0.0f32; n * per];
+        let mut v_all = vec![0.0f32; n * per];
+        for (i, (tok, p, kv)) in slots.iter().enumerate() {
+            if kv.capacity() != cs {
+                bail!("decode_batch: slot {i} is not side-capacity");
+            }
+            if kv.remaining() == 0 {
+                bail!("decode_batch: slot {i} cache full");
+            }
+            tokens.push(*tok);
+            pos.push(*p);
+            lens.push(kv.len() as i32);
+            k_all[i * per..(i + 1) * per].copy_from_slice(kv.k_raw());
+            v_all[i * per..(i + 1) * per].copy_from_slice(kv.v_raw());
+        }
+        let results = self.decode_batch_raw(n, tokens, pos, k_all, v_all, lens, lane)?;
+        let mut outs = Vec::with_capacity(n);
+        for ((logits, hidden, k_new, v_new), (_, _, kv)) in
+            results.into_iter().zip(slots.iter_mut())
+        {
+            kv.append_row(&k_new, &v_new)?;
+            outs.push(DecodeOut {
+                logits,
+                hidden,
+                queue_ns: 0,
+                exec_ns: 0,
+            });
+        }
+        Ok(outs)
+    }
+
+    // ── Synapse (§3.3) ─────────────────────────────────────────────────
+
+    /// Extract K landmarks from a main-agent cache, driven by its current
+    /// hidden state.  Uses the engine-default hybrid parameters.
+    pub fn synapse_extract(
+        &self,
+        hidden: &[f32],
+        kv: &KvCache,
+        lane: Lane,
+    ) -> Result<SynapseOut> {
+        self.synapse_extract_with(hidden, kv, self.alpha, self.inv2sig2, lane)
+    }
+
+    /// Extraction with explicit hybrid parameters (ablation entry point:
+    /// `alpha=1` = attention-only, `alpha=0` = density/coverage-only).
+    pub fn synapse_extract_with(
+        &self,
+        hidden: &[f32],
+        kv: &KvCache,
+        alpha: f32,
+        inv2sig2: f32,
+        lane: Lane,
+    ) -> Result<SynapseOut> {
+        if kv.capacity() != self.caps.main_ctx {
+            bail!("synapse_extract requires a main-capacity cache");
+        }
+        if kv.len() < self.caps.synapse_k {
+            bail!(
+                "synapse_extract: cache has {} rows < K={}",
+                kv.len(),
+                self.caps.synapse_k
+            );
+        }
+        let out = self.device.call(
+            self.ids.synapse,
+            vec![
+                HostTensor::f32(hidden.to_vec(), vec![self.cfg.d_model]),
+                kv.k_tensor(),
+                kv.v_tensor(),
+                HostTensor::scalar_i32(kv.len() as i32),
+                HostTensor::scalar_f32(alpha),
+                HostTensor::scalar_f32(inv2sig2),
+            ],
+            lane,
+        )?;
+        let [lm_k, lm_v, indices, scores]: [HostTensor; 4] = take4(out.outputs)?;
+        // indices arrive as f32 (mixed-dtype output tuples crash the 0.5.1
+        // readback path — see python/compile/model.py); exact below 2^24.
+        let indices = indices.into_f32()?.iter().map(|x| *x as i32).collect();
+        Ok(SynapseOut {
+            lm_k: lm_k.into_f32()?,
+            lm_v: lm_v.into_f32()?,
+            indices,
+            scores: scores.into_f32()?,
+            source_len: kv.len(),
+            n_layers: self.cfg.n_layers,
+        })
+    }
+
+    // ── Referential Injection (§3.6) ───────────────────────────────────
+
+    /// Encode a thought at virtual base position `pos_base`, returning the
+    /// K/V rows to append to a main cache.
+    pub fn inject_encode(
+        &self,
+        tokens: &[i32],
+        pos_base: i32,
+        lane: Lane,
+    ) -> Result<InjectOut> {
+        let t = self.caps.inject_len;
+        if tokens.is_empty() {
+            bail!("inject_encode: empty thought");
+        }
+        let len = tokens.len().min(t);
+        let mut padded = vec![self.pad_id; t];
+        padded[..len].copy_from_slice(&tokens[..len]);
+        let out = self.device.call(
+            self.ids.inject,
+            vec![
+                HostTensor::i32(padded, vec![t]),
+                HostTensor::scalar_i32(len as i32),
+                HostTensor::scalar_i32(pos_base),
+            ],
+            lane,
+        )?;
+        let [k, v, hidden]: [HostTensor; 3] = take3(out.outputs)?;
+        Ok(InjectOut {
+            k: k.into_f32()?,
+            v: v.into_f32()?,
+            hidden_last: hidden.into_f32()?,
+            len,
+        })
+    }
+
+    /// Slice the first `n` rows out of `[L, T, KV, hd]` inject output so the
+    /// caller can append exactly the real thought rows.
+    pub fn slice_inject_rows(&self, out: &InjectOut, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let t = self.caps.inject_len;
+        let row = self.cfg.n_kv_heads * self.cfg.head_dim;
+        let mut k = Vec::with_capacity(self.cfg.n_layers * n * row);
+        let mut v = Vec::with_capacity(self.cfg.n_layers * n * row);
+        for layer in 0..self.cfg.n_layers {
+            let start = layer * t * row;
+            k.extend_from_slice(&out.k[start..start + n * row]);
+            v.extend_from_slice(&out.v[start..start + n * row]);
+        }
+        (k, v)
+    }
+}
+
+fn take4(v: Vec<HostTensor>) -> Result<[HostTensor; 4]> {
+    let arr: [HostTensor; 4] = v
+        .try_into()
+        .map_err(|v: Vec<HostTensor>| anyhow::anyhow!("expected 4 outputs, got {}", v.len()))?;
+    Ok(arr)
+}
+
+fn take3(v: Vec<HostTensor>) -> Result<[HostTensor; 3]> {
+    let arr: [HostTensor; 3] = v
+        .try_into()
+        .map_err(|v: Vec<HostTensor>| anyhow::anyhow!("expected 3 outputs, got {}", v.len()))?;
+    Ok(arr)
+}

@@ -1,0 +1,307 @@
+//! Host-side KV cache buffers.
+//!
+//! Each agent owns one `KvCache` pair of flat row-major buffers shaped
+//! `[L, C, KV, hd]` (matching the AOT program ABI).  The coordinator appends
+//! rows as decoding proceeds and uploads the buffers with each decode op.
+//! Every byte held here is accounted by `cortex::memory` — these buffers ARE
+//! the per-agent context cost of Table 2.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{HostTensor, ModelConfig};
+
+/// A fixed-capacity KV cache for one agent.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    /// `[L, C, KV, hd]` keys, row-major.
+    k: Vec<f32>,
+    /// `[L, C, KV, hd]` values.
+    v: Vec<f32>,
+    n_layers: usize,
+    capacity: usize,
+    kv_heads: usize,
+    row: usize, // KV * hd floats per (layer, position)
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig, capacity: usize) -> KvCache {
+        let row = cfg.n_kv_heads * cfg.head_dim;
+        let total = cfg.n_layers * capacity * row;
+        KvCache {
+            k: vec![0.0; total],
+            v: vec![0.0; total],
+            n_layers: cfg.n_layers,
+            capacity,
+            kv_heads: cfg.n_kv_heads,
+            row,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// Bytes held by this cache (both K and V buffers) — the Table-2 unit.
+    pub fn bytes(&self) -> u64 {
+        (self.k.len() + self.v.len()) as u64 * 4
+    }
+
+    /// Bytes actually in use (`len` rows).
+    pub fn used_bytes(&self) -> u64 {
+        (self.n_layers * self.len * self.row * 2) as u64 * 4
+    }
+
+    fn offset(&self, layer: usize, pos: usize) -> usize {
+        (layer * self.capacity + pos) * self.row
+    }
+
+    /// Append one position's K/V rows.  `k_new`/`v_new` are `[L, KV, hd]`.
+    pub fn append_row(&mut self, k_new: &[f32], v_new: &[f32]) -> Result<()> {
+        if self.len >= self.capacity {
+            bail!("kv cache full ({} rows)", self.capacity);
+        }
+        if k_new.len() != self.n_layers * self.row || v_new.len() != k_new.len() {
+            bail!(
+                "append_row: expected {} floats, got {}",
+                self.n_layers * self.row,
+                k_new.len()
+            );
+        }
+        for layer in 0..self.n_layers {
+            let dst = self.offset(layer, self.len);
+            let src = layer * self.row;
+            self.k[dst..dst + self.row].copy_from_slice(&k_new[src..src + self.row]);
+            self.v[dst..dst + self.row].copy_from_slice(&v_new[src..src + self.row]);
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Append `n` positions from `[L, n, KV, hd]` buffers (synapse loads,
+    /// prefill copy-in, referential injection).
+    pub fn append_rows(&mut self, n: usize, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
+        if self.len + n > self.capacity {
+            bail!(
+                "kv cache overflow: {} + {n} > {}",
+                self.len,
+                self.capacity
+            );
+        }
+        let expect = self.n_layers * n * self.row;
+        if k_rows.len() != expect || v_rows.len() != expect {
+            bail!("append_rows: expected {expect} floats, got {}", k_rows.len());
+        }
+        for layer in 0..self.n_layers {
+            let dst = self.offset(layer, self.len);
+            let src = layer * n * self.row;
+            let count = n * self.row;
+            self.k[dst..dst + count].copy_from_slice(&k_rows[src..src + count]);
+            self.v[dst..dst + count].copy_from_slice(&v_rows[src..src + count]);
+        }
+        self.len += n;
+        Ok(())
+    }
+
+    /// Overwrite the whole buffer from prefill outputs (`[L, C, KV, hd]`)
+    /// and set the row count.
+    pub fn load_full(&mut self, len: usize, k_full: &[f32], v_full: &[f32]) -> Result<()> {
+        if k_full.len() != self.k.len() || v_full.len() != self.v.len() {
+            bail!(
+                "load_full: expected {} floats, got {}",
+                self.k.len(),
+                k_full.len()
+            );
+        }
+        if len > self.capacity {
+            bail!("load_full: len {len} > capacity {}", self.capacity);
+        }
+        self.k.copy_from_slice(k_full);
+        self.v.copy_from_slice(v_full);
+        self.len = len;
+        Ok(())
+    }
+
+    /// Reset to empty (buffers retained — no reallocation on the hot path).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Tensor views for a decode upload.
+    pub fn k_tensor(&self) -> HostTensor {
+        HostTensor::f32(
+            self.k.clone(),
+            vec![self.n_layers, self.capacity, self.row_kv(), self.head_dim()],
+        )
+    }
+
+    pub fn v_tensor(&self) -> HostTensor {
+        HostTensor::f32(
+            self.v.clone(),
+            vec![self.n_layers, self.capacity, self.row_kv(), self.head_dim()],
+        )
+    }
+
+    /// Raw access for batching (the batcher packs several caches into one
+    /// `[B, L, C, KV, hd]` upload without intermediate tensors).
+    pub fn k_raw(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v_raw(&self) -> &[f32] {
+        &self.v
+    }
+
+    pub fn shape(&self) -> Vec<usize> {
+        vec![self.n_layers, self.capacity, self.row_kv(), self.head_dim()]
+    }
+
+    // The row split (KV heads vs head_dim) is only needed to shape uploads;
+    // store the product and derive the split lazily from construction.
+    fn row_kv(&self) -> usize {
+        self.kv_heads
+    }
+
+    fn head_dim(&self) -> usize {
+        self.row / self.kv_heads
+    }
+}
+
+// NOTE: `kv_heads` retained separately for shaping uploads.
+// (declared after methods for readability)
+impl KvCache {
+    /// Copy the first `c` positions of each layer into fresh `[L, c, KV, hd]`
+    /// buffers — the upload for a capacity-`c` decode tier (§Perf opt A).
+    /// Requires `len() <= c <= capacity()`.
+    pub fn prefix_upload(&self, c: usize) -> (Vec<f32>, Vec<f32>) {
+        debug_assert!(self.len <= c && c <= self.capacity);
+        let per = c * self.row;
+        let mut k = Vec::with_capacity(self.n_layers * per);
+        let mut v = Vec::with_capacity(self.n_layers * per);
+        for layer in 0..self.n_layers {
+            let off = self.offset(layer, 0);
+            k.extend_from_slice(&self.k[off..off + per]);
+            v.extend_from_slice(&self.v[off..off + per]);
+        }
+        (k, v)
+    }
+
+    /// Gather arbitrary rows (by position) across all layers into
+    /// `[L, n, KV, hd]` buffers — the host-side analogue of the synapse
+    /// program's landmark gather, used by the selection-policy ablation.
+    pub fn gather_rows(&self, indices: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let n = indices.len();
+        let mut k = Vec::with_capacity(self.n_layers * n * self.row);
+        let mut v = Vec::with_capacity(self.n_layers * n * self.row);
+        for layer in 0..self.n_layers {
+            for &pos in indices {
+                let off = self.offset(layer, pos);
+                k.extend_from_slice(&self.k[off..off + self.row]);
+                v.extend_from_slice(&self.v[off..off + self.row]);
+            }
+        }
+        (k, v)
+    }
+
+    /// K rows for position range `[start, end)` of a given layer.
+    pub fn k_slice(&self, layer: usize, start: usize, end: usize) -> &[f32] {
+        let a = self.offset(layer, start);
+        let b = self.offset(layer, end.min(self.len));
+        &self.k[a..b]
+    }
+
+    pub fn v_slice(&self, layer: usize, start: usize, end: usize) -> &[f32] {
+        let a = self.offset(layer, start);
+        let b = self.offset(layer, end.min(self.len));
+        &self.v[a..b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 192,
+            vocab_size: 260,
+            head_dim: 16,
+            rope_theta: 1e4,
+            param_count: 0,
+        }
+    }
+
+    #[test]
+    fn append_and_slice() {
+        let cfg = tiny_cfg();
+        let mut kv = KvCache::new(&cfg, 8);
+        assert_eq!(kv.len(), 0);
+        assert_eq!(kv.bytes(), (2 * 8 * 32 * 2 * 4) as u64);
+
+        let row = 2 * 32; // L * KV*hd
+        let k: Vec<f32> = (0..row).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..row).map(|i| -(i as f32)).collect();
+        kv.append_row(&k, &v).unwrap();
+        kv.append_row(&v, &k).unwrap();
+        assert_eq!(kv.len(), 2);
+        // layer 1, position 0 starts at offset (1*8+0)*32 in flat buffer;
+        // source layer 1 starts at 32.
+        assert_eq!(kv.k_slice(1, 0, 1), &k[32..64]);
+        assert_eq!(kv.k_slice(1, 1, 2), &v[32..64]);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let cfg = tiny_cfg();
+        let mut kv = KvCache::new(&cfg, 2);
+        let row = 2 * 32;
+        let k = vec![0.0; row];
+        kv.append_row(&k, &k).unwrap();
+        kv.append_row(&k, &k).unwrap();
+        assert!(kv.append_row(&k, &k).is_err());
+        assert_eq!(kv.remaining(), 0);
+        kv.clear();
+        assert_eq!(kv.remaining(), 2);
+    }
+
+    #[test]
+    fn append_rows_bulk() {
+        let cfg = tiny_cfg();
+        let mut kv = KvCache::new(&cfg, 8);
+        let n = 3;
+        let rows: Vec<f32> = (0..2 * n * 32).map(|i| i as f32).collect();
+        kv.append_rows(n, &rows, &rows).unwrap();
+        assert_eq!(kv.len(), 3);
+        // layer 0 rows are the first n*32 floats
+        assert_eq!(kv.k_slice(0, 0, 3), &rows[..96]);
+        // layer 1 rows follow
+        assert_eq!(kv.k_slice(1, 0, 3), &rows[96..192]);
+        assert!(kv.append_rows(6, &vec![0.0; 2 * 6 * 32], &vec![0.0; 2 * 6 * 32]).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let cfg = tiny_cfg();
+        let mut kv = KvCache::new(&cfg, 4);
+        assert!(kv.append_row(&[0.0; 3], &[0.0; 3]).is_err());
+        assert!(kv.load_full(1, &[0.0; 3], &[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Host-side model state and the typed inference API over the runtime.
+
+pub mod engine;
+pub mod kv;
+
+pub use engine::{DecodeOut, Engine, InjectOut, PrefillOut, SynapseOut};
+pub use kv::KvCache;

@@ -1,0 +1,594 @@
+//! The device service thread: owns every PJRT object (client, compiled
+//! executables, resident weight buffers) and executes operations pulled from
+//! three priority lanes.
+//!
+//! Why a single thread: the `xla` crate's handles are `Rc`-based (not
+//! `Send`), and the paper's testbed is likewise a single physical GPU fed by
+//! prioritized CUDA streams (§3.1 "River & Stream").  The lanes reproduce
+//! those semantics at op granularity: a queued River op always runs before
+//! any Stream op, which always runs before Background work.
+//!
+//! The Prism (§3.2 Singleton Weight Sharing) is literal here: each config's
+//! weights are uploaded to device buffers ONCE at startup and every
+//! subsequent `execute_b` call — no matter which agent issued it — shares
+//! those buffers.  Per-op marshalling covers only the step inputs (token,
+//! positions, KV cache).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, Once};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+
+/// Priority lane of the River & Stream topology (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Lane {
+    /// The Main Agent's user-facing stream — highest priority.
+    River = 0,
+    /// Side-agent reasoning streams — medium priority.
+    Stream = 1,
+    /// Maintenance work (synapse refresh, speculative prefill) — lowest.
+    Background = 2,
+}
+
+pub const LANES: [Lane; 3] = [Lane::River, Lane::Stream, Lane::Background];
+
+impl Lane {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lane::River => "river",
+            Lane::Stream => "stream",
+            Lane::Background => "background",
+        }
+    }
+}
+
+/// Identifier of a compiled program on the device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProgramId(pub usize);
+
+/// Result of one executed operation.
+#[derive(Debug)]
+pub struct OpResult {
+    pub outputs: Vec<HostTensor>,
+    /// Time spent waiting in the lane queue.
+    pub queue_ns: u64,
+    /// Device execution time (marshalling + run + readback).
+    pub exec_ns: u64,
+}
+
+/// Options controlling device bring-up.
+#[derive(Debug, Clone)]
+pub struct DeviceOptions {
+    pub artifacts_dir: PathBuf,
+    /// Configs to load (e.g. `["tiny"]`); empty = all in the manifest.
+    pub configs: Vec<String>,
+    /// If false, compile artifacts lazily on first use (faster startup).
+    pub eager_compile: bool,
+}
+
+impl DeviceOptions {
+    pub fn from_env() -> DeviceOptions {
+        DeviceOptions {
+            artifacts_dir: Manifest::default_dir(),
+            configs: vec![],
+            eager_compile: true,
+        }
+    }
+
+    pub fn with_configs(mut self, configs: &[&str]) -> Self {
+        self.configs = configs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+}
+
+struct Op {
+    program: usize,
+    lane: usize,
+    inputs: Vec<HostTensor>,
+    reply: mpsc::Sender<Result<OpResult>>,
+    enqueued: Instant,
+}
+
+struct QueueState {
+    lanes: [std::collections::VecDeque<Op>; 3],
+    shutdown: bool,
+}
+
+/// Cumulative device statistics (lock-free reads for the hot counters).
+#[derive(Debug, Default)]
+pub struct DeviceStats {
+    pub ops: AtomicU64,
+    pub exec_ns: AtomicU64,
+    pub queue_ns: AtomicU64,
+    pub lane_ops: [AtomicU64; 3],
+    pub lane_queue_ns: [AtomicU64; 3],
+    pub flops: AtomicU64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DeviceStatsSnapshot {
+    pub ops: u64,
+    pub exec_ns: u64,
+    pub queue_ns: u64,
+    pub lane_ops: [u64; 3],
+    pub lane_queue_ns: [u64; 3],
+    pub flops: u64,
+}
+
+// ── Exit-time cleanup ───────────────────────────────────────────────────
+// A PJRT CPU client that is still alive while libc runs the C++ library's
+// static destructors crashes intermittently (its internal thread pools race
+// the teardown).  Every device registers here; an `atexit` hook — installed
+// AFTER the C++ handlers, hence run BEFORE them — shuts the service threads
+// down and drops all PJRT objects first.
+
+static CLEANUP_ONCE: Once = Once::new();
+static LIVE_DEVICES: Mutex<Vec<(std::sync::Weak<Shared>, Option<std::thread::JoinHandle<()>>)>> =
+    Mutex::new(Vec::new());
+
+extern "C" fn cleanup_devices_at_exit() {
+    let mut devices = match LIVE_DEVICES.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    for (weak, handle) in devices.drain(..) {
+        if let Some(shared) = weak.upgrade() {
+            shared.queues.lock().unwrap().shutdown = true;
+            shared.cv.notify_all();
+        }
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+fn register_device_for_cleanup(shared: &Arc<Shared>, handle: std::thread::JoinHandle<()>) {
+    CLEANUP_ONCE.call_once(|| unsafe {
+        libc::atexit(cleanup_devices_at_exit);
+    });
+    LIVE_DEVICES
+        .lock()
+        .unwrap()
+        .push((Arc::downgrade(shared), Some(handle)));
+}
+
+struct Shared {
+    specs: Vec<ArtifactSpec>,
+    name_to_id: HashMap<String, usize>,
+    queues: Mutex<QueueState>,
+    cv: Condvar,
+    stats: DeviceStats,
+    /// Bytes of weights resident on the device (the Prism), per config.
+    weight_bytes: HashMap<String, u64>,
+}
+
+/// Clonable, `Send` handle to the device service thread.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    shared: Arc<Shared>,
+    manifest: Arc<Manifest>,
+}
+
+impl DeviceHandle {
+    /// Bring up the device: spawn the service thread, load + compile the
+    /// requested configs' artifacts, upload weights.  Blocks until ready.
+    pub fn new(options: DeviceOptions) -> Result<DeviceHandle> {
+        let manifest = Arc::new(Manifest::load(&options.artifacts_dir)?);
+        let configs: Vec<String> = if options.configs.is_empty() {
+            manifest.configs.keys().cloned().collect()
+        } else {
+            options.configs.clone()
+        };
+
+        let mut specs = Vec::new();
+        let mut name_to_id = HashMap::new();
+        let mut weight_bytes = HashMap::new();
+        for cname in &configs {
+            let bundle = manifest.config(cname)?;
+            weight_bytes.insert(cname.clone(), bundle.model.weight_bytes(4));
+            for a in &bundle.artifacts {
+                name_to_id.insert(a.name.clone(), specs.len());
+                specs.push(a.clone());
+            }
+        }
+
+        let shared = Arc::new(Shared {
+            specs,
+            name_to_id,
+            queues: Mutex::new(QueueState {
+                lanes: Default::default(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            stats: DeviceStats::default(),
+            weight_bytes,
+        });
+
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = {
+            let shared = shared.clone();
+            let manifest = manifest.clone();
+            let configs = configs.clone();
+            let eager = options.eager_compile;
+            std::thread::Builder::new()
+                .name("warp-device".to_string())
+                .spawn(move || device_thread(shared, manifest, configs, eager, ready_tx))
+                .context("spawning device thread")?
+        };
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("device thread died during startup"))??;
+        register_device_for_cleanup(&shared, handle);
+        Ok(DeviceHandle { shared, manifest })
+    }
+
+    /// Convenience: default options + a single config.
+    pub fn for_config(config: &str) -> Result<DeviceHandle> {
+        DeviceHandle::new(DeviceOptions::from_env().with_configs(&[config]))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn program_id(&self, name: &str) -> Result<ProgramId> {
+        self.shared
+            .name_to_id
+            .get(name)
+            .copied()
+            .map(ProgramId)
+            .with_context(|| format!("program `{name}` not loaded"))
+    }
+
+    pub fn program_spec(&self, id: ProgramId) -> &ArtifactSpec {
+        &self.shared.specs[id.0]
+    }
+
+    /// Bytes of resident weights (the Prism) for a config.
+    pub fn weight_bytes(&self, config: &str) -> u64 {
+        self.shared.weight_bytes.get(config).copied().unwrap_or(0)
+    }
+
+    /// Enqueue an op on a lane; returns a receiver for the result.
+    pub fn submit(
+        &self,
+        id: ProgramId,
+        inputs: Vec<HostTensor>,
+        lane: Lane,
+    ) -> mpsc::Receiver<Result<OpResult>> {
+        let (tx, rx) = mpsc::channel();
+        let op = Op {
+            program: id.0,
+            lane: op_lane_index(lane),
+            inputs,
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        {
+            let mut q = self.shared.queues.lock().unwrap();
+            if q.shutdown {
+                let _ = op.reply.send(Err(anyhow!("device is shut down")));
+            } else {
+                q.lanes[op.lane].push_back(op);
+            }
+        }
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    /// Blocking execute.
+    pub fn call(&self, id: ProgramId, inputs: Vec<HostTensor>, lane: Lane) -> Result<OpResult> {
+        self.submit(id, inputs, lane)
+            .recv()
+            .map_err(|_| anyhow!("device thread dropped the reply channel"))?
+    }
+
+    pub fn stats(&self) -> DeviceStatsSnapshot {
+        let s = &self.shared.stats;
+        DeviceStatsSnapshot {
+            ops: s.ops.load(Ordering::Relaxed),
+            exec_ns: s.exec_ns.load(Ordering::Relaxed),
+            queue_ns: s.queue_ns.load(Ordering::Relaxed),
+            lane_ops: [
+                s.lane_ops[0].load(Ordering::Relaxed),
+                s.lane_ops[1].load(Ordering::Relaxed),
+                s.lane_ops[2].load(Ordering::Relaxed),
+            ],
+            lane_queue_ns: [
+                s.lane_queue_ns[0].load(Ordering::Relaxed),
+                s.lane_queue_ns[1].load(Ordering::Relaxed),
+                s.lane_queue_ns[2].load(Ordering::Relaxed),
+            ],
+            flops: s.flops.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of ops currently waiting, per lane (for backpressure).
+    pub fn queue_depths(&self) -> [usize; 3] {
+        let q = self.shared.queues.lock().unwrap();
+        [q.lanes[0].len(), q.lanes[1].len(), q.lanes[2].len()]
+    }
+
+    /// Stop the service thread (pending ops receive errors).
+    pub fn shutdown(&self) {
+        let mut q = self.shared.queues.lock().unwrap();
+        q.shutdown = true;
+        drop(q);
+        self.shared.cv.notify_all();
+    }
+}
+
+fn op_lane_index(lane: Lane) -> usize {
+    lane as usize
+}
+
+// ── Device thread ───────────────────────────────────────────────────────
+
+struct LoadedProgram {
+    exe: xla::PjRtLoadedExecutable,
+    /// Index into `weights` for this program's config.
+    weights_idx: usize,
+    flops: u64,
+}
+
+fn device_thread(
+    shared: Arc<Shared>,
+    manifest: Arc<Manifest>,
+    configs: Vec<String>,
+    eager: bool,
+    ready_tx: mpsc::Sender<Result<()>>,
+) {
+    #[allow(clippy::type_complexity)]
+    let setup = || -> Result<(
+        xla::PjRtClient,
+        Vec<Vec<xla::PjRtBuffer>>,
+        Vec<xla::Literal>,
+        Vec<Option<LoadedProgram>>,
+    )> {
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "device up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+
+        // The Prism: upload each config's weights ONCE.
+        //
+        // SAFETY NOTE: `buffer_from_host_literal` enqueues an ASYNC copy on
+        // the PJRT thread pool; the source Literal must outlive that copy
+        // (dropping it immediately is a use-after-free that release builds
+        // reliably hit).  We retain all weight literals for the device
+        // thread's lifetime — a few MB, and the buffers stay valid forever.
+        let mut weights: Vec<Vec<xla::PjRtBuffer>> = Vec::new();
+        let mut pinned_literals: Vec<xla::Literal> = Vec::new();
+        let mut weights_idx_of: HashMap<String, usize> = HashMap::new();
+        for cname in &configs {
+            let bundle = manifest.config(cname)?;
+            let path = manifest.dir.join(&bundle.weights_file);
+            // NOTE: read via Literal, not PjRtBuffer::read_npz — the latter
+            // passes `ElementType as i32` where a `PrimitiveType` is expected
+            // (xla 0.1.6 bug), silently creating F16 buffers from F32 data.
+            let mut named = <xla::Literal as xla::FromRawBytes>::read_npz(&path, &())
+                .map_err(|e| anyhow!("loading weights {path:?}: {e:?}"))?;
+            // keys are `w000_embed`, `w001_...` — lexicographic == ABI order
+            named.sort_by(|a, b| a.0.cmp(&b.0));
+            weights_idx_of.insert(cname.clone(), weights.len());
+            let mut bufs = Vec::with_capacity(named.len());
+            for (_, lit) in named {
+                bufs.push(
+                    client
+                        .buffer_from_host_literal(None, &lit)
+                        .map_err(|e| anyhow!("uploading weights: {e:?}"))?,
+                );
+                pinned_literals.push(lit);
+            }
+            weights.push(bufs);
+        }
+
+        // Compile artifacts.
+        let mut programs: Vec<Option<LoadedProgram>> = Vec::new();
+        for spec in &shared.specs {
+            if eager {
+                let t0 = Instant::now();
+                let exe = compile_program(&client, &manifest.dir, spec)?;
+                log::info!(
+                    "compiled {} in {:.0} ms",
+                    spec.name,
+                    t0.elapsed().as_secs_f64() * 1e3
+                );
+                programs.push(Some(LoadedProgram {
+                    exe,
+                    weights_idx: weights_idx_of[&spec.config],
+                    flops: spec.flops,
+                }));
+            } else {
+                programs.push(None);
+            }
+        }
+        Ok((client, weights, pinned_literals, programs))
+    };
+
+    let (client, weights, _pinned_literals, mut programs) = match setup() {
+        Ok(v) => {
+            let _ = ready_tx.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+
+    let weights_idx_of: HashMap<String, usize> = {
+        // reconstruct mapping (config order == upload order)
+        let mut m = HashMap::new();
+        let mut idx = 0;
+        for cname in &configs {
+            m.insert(cname.clone(), idx);
+            idx += 1;
+        }
+        m
+    };
+
+    loop {
+        let op = {
+            let mut q = shared.queues.lock().unwrap();
+            loop {
+                if q.shutdown {
+                    for lane in q.lanes.iter_mut() {
+                        for op in lane.drain(..) {
+                            let _ = op.reply.send(Err(anyhow!("device shut down")));
+                        }
+                    }
+                    return;
+                }
+                // Strict priority: River, then Stream, then Background.
+                if let Some(op) = q.lanes.iter_mut().find_map(|l| l.pop_front()) {
+                    break op;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+
+        let queue_ns = op.enqueued.elapsed().as_nanos() as u64;
+        let spec = &shared.specs[op.program];
+
+        // Lazy compile if needed.
+        if programs[op.program].is_none() {
+            match compile_program(&client, &manifest.dir, spec) {
+                Ok(exe) => {
+                    programs[op.program] = Some(LoadedProgram {
+                        exe,
+                        weights_idx: weights_idx_of[&spec.config],
+                        flops: spec.flops,
+                    });
+                }
+                Err(e) => {
+                    let _ = op.reply.send(Err(e));
+                    continue;
+                }
+            }
+        }
+        let prog = programs[op.program].as_ref().unwrap();
+
+        let t0 = Instant::now();
+        let result = execute_op(&client, prog, &weights[prog.weights_idx], spec, &op.inputs);
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+
+        record_stats(&shared.stats, op.lane, prog.flops, queue_ns, exec_ns);
+
+        let _ = op.reply.send(result.map(|outputs| OpResult {
+            outputs,
+            queue_ns,
+            exec_ns,
+        }));
+    }
+}
+
+fn record_stats(stats: &DeviceStats, lane: usize, flops: u64, queue_ns: u64, exec_ns: u64) {
+    stats.ops.fetch_add(1, Ordering::Relaxed);
+    stats.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+    stats.queue_ns.fetch_add(queue_ns, Ordering::Relaxed);
+    stats.lane_ops[lane].fetch_add(1, Ordering::Relaxed);
+    stats.lane_queue_ns[lane].fetch_add(queue_ns, Ordering::Relaxed);
+    stats.flops.fetch_add(flops, Ordering::Relaxed);
+}
+
+fn compile_program(
+    client: &xla::PjRtClient,
+    dir: &std::path::Path,
+    spec: &ArtifactSpec,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(&spec.file);
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| anyhow!("parsing HLO {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))
+}
+
+fn execute_op(
+    client: &xla::PjRtClient,
+    prog: &LoadedProgram,
+    weights: &[xla::PjRtBuffer],
+    spec: &ArtifactSpec,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "{}: expected {} step inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            inputs.len()
+        );
+    }
+    // Validate + upload step inputs.
+    let mut step_buffers = Vec::with_capacity(inputs.len());
+    for (tensor, ispec) in inputs.iter().zip(&spec.inputs) {
+        if tensor.shape() != ispec.shape.as_slice() {
+            bail!(
+                "{}: input `{}` shape mismatch: got {:?}, want {:?}",
+                spec.name,
+                ispec.name,
+                tensor.shape(),
+                ispec.shape
+            );
+        }
+        let buf = match tensor {
+            HostTensor::F32 { data, shape } => {
+                client.buffer_from_host_buffer::<f32>(data, shape, None)
+            }
+            HostTensor::I32 { data, shape } => {
+                client.buffer_from_host_buffer::<i32>(data, shape, None)
+            }
+        }
+        .map_err(|e| anyhow!("{}: uploading input: {e:?}", spec.name))?;
+        step_buffers.push(buf);
+    }
+
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(weights.len() + step_buffers.len());
+    args.extend(weights.iter());
+    args.extend(step_buffers.iter());
+
+    let result = prog
+        .exe
+        .execute_b(&args)
+        .map_err(|e| anyhow!("{}: execute: {e:?}", spec.name))?;
+    let tuple = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("{}: readback: {e:?}", spec.name))?;
+    let literals = tuple
+        .to_tuple()
+        .map_err(|e| anyhow!("{}: untuple: {e:?}", spec.name))?;
+
+    let mut outputs = Vec::with_capacity(literals.len());
+    for (lit, ospec) in literals.iter().zip(&spec.outputs) {
+        let ty = lit
+            .ty()
+            .map_err(|e| anyhow!("{}: output type: {e:?}", spec.name))?;
+        let t = match ty {
+            xla::ElementType::F32 => HostTensor::F32 {
+                data: lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("{}: output read: {e:?}", spec.name))?,
+                shape: ospec.shape.clone(),
+            },
+            xla::ElementType::S32 => HostTensor::I32 {
+                data: lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("{}: output read: {e:?}", spec.name))?,
+                shape: ospec.shape.clone(),
+            },
+            other => bail!("{}: unsupported output type {other:?}", spec.name),
+        };
+        outputs.push(t);
+    }
+    Ok(outputs)
+}

@@ -1,0 +1,326 @@
+//! Artifact manifest: the contract between the Python build path and the
+//! rust runtime.  Parsed from `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) with the hand-rolled JSON module.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::tensor::Dtype;
+use crate::util::json::Json;
+
+/// Architecture of one model variant (mirrors `python/compile/configs.py`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub head_dim: usize,
+    pub rope_theta: f64,
+    pub param_count: u64,
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.req("name")?.as_str().unwrap_or("").to_string(),
+            d_model: j.req("d_model")?.as_usize().context("d_model")?,
+            n_layers: j.req("n_layers")?.as_usize().context("n_layers")?,
+            n_heads: j.req("n_heads")?.as_usize().context("n_heads")?,
+            n_kv_heads: j.req("n_kv_heads")?.as_usize().context("n_kv_heads")?,
+            d_ff: j.req("d_ff")?.as_usize().context("d_ff")?,
+            vocab_size: j.req("vocab_size")?.as_usize().context("vocab_size")?,
+            head_dim: j.req("head_dim")?.as_usize().context("head_dim")?,
+            rope_theta: j.req("rope_theta")?.as_f64().context("rope_theta")?,
+            param_count: j.req("param_count")?.as_i64().context("param_count")? as u64,
+        })
+    }
+
+    /// Bytes of one KV-cache row (all layers, K+V) at the given dtype width.
+    pub fn kv_row_bytes(&self, dtype_bytes: usize) -> u64 {
+        (self.n_layers * self.n_kv_heads * self.head_dim * 2 * dtype_bytes) as u64
+    }
+
+    /// Bytes of a full KV cache with `ctx` rows.
+    pub fn kv_cache_bytes(&self, ctx: usize, dtype_bytes: usize) -> u64 {
+        self.kv_row_bytes(dtype_bytes) * ctx as u64
+    }
+
+    /// Weight bytes at the given dtype width.
+    pub fn weight_bytes(&self, dtype_bytes: usize) -> u64 {
+        self.param_count * dtype_bytes as u64
+    }
+}
+
+/// Buffer capacities fixed at AOT time (shapes of the compiled programs).
+#[derive(Debug, Clone, Copy)]
+pub struct Capacities {
+    pub prefill_len: usize,
+    pub main_ctx: usize,
+    pub side_ctx: usize,
+    pub synapse_k: usize,
+    pub inject_len: usize,
+    pub decode_batch: usize,
+}
+
+impl Capacities {
+    fn from_json(j: &Json) -> Result<Capacities> {
+        Ok(Capacities {
+            prefill_len: j.req("prefill_len")?.as_usize().context("prefill_len")?,
+            main_ctx: j.req("main_ctx")?.as_usize().context("main_ctx")?,
+            side_ctx: j.req("side_ctx")?.as_usize().context("side_ctx")?,
+            synapse_k: j.req("synapse_k")?.as_usize().context("synapse_k")?,
+            inject_len: j.req("inject_len")?.as_usize().context("inject_len")?,
+            decode_batch: j.req("decode_batch")?.as_usize().context("decode_batch")?,
+        })
+    }
+}
+
+/// One tensor in a program signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().unwrap_or("").to_string(),
+            shape: j.req("shape")?.usize_vec()?,
+            dtype: Dtype::parse(j.req("dtype")?.as_str().unwrap_or("f32"))?,
+        })
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled program (an HLO-text file + its signature).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Globally unique name, e.g. `tiny_decode_c512`.
+    pub name: String,
+    /// Program kind name, e.g. `decode_c512`.
+    pub program: String,
+    pub config: String,
+    pub file: String,
+    /// Step inputs (the weights tuple precedes these in the HLO signature).
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Analytic FLOPs per invocation (perf accounting).
+    pub flops: u64,
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<ArtifactSpec> {
+        Ok(ArtifactSpec {
+            name: j.req("name")?.as_str().unwrap_or("").to_string(),
+            program: j.req("program")?.as_str().unwrap_or("").to_string(),
+            config: j.req("config")?.as_str().unwrap_or("").to_string(),
+            file: j.req("file")?.as_str().unwrap_or("").to_string(),
+            inputs: j
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            outputs: j
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            flops: j.req("flops")?.as_i64().unwrap_or(0) as u64,
+        })
+    }
+}
+
+/// Synapse/gate defaults chosen at build time.
+#[derive(Debug, Clone, Copy)]
+pub struct Defaults {
+    pub alpha: f32,
+    pub inv2sig2: f32,
+    pub gate_theta: f32,
+}
+
+/// Everything belonging to one runnable config.
+#[derive(Debug, Clone)]
+pub struct ConfigBundle {
+    pub model: ModelConfig,
+    pub caps: Capacities,
+    pub weights_file: String,
+    pub golden_file: String,
+    pub fingerprint: String,
+    pub defaults: Defaults,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ConfigBundle {
+    pub fn artifact(&self, program_prefix: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.program.starts_with(program_prefix))
+            .with_context(|| format!("no artifact with program prefix `{program_prefix}`"))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigBundle>,
+    /// Analytic-only configs (e.g. qwen2_5_0_5b) for memory projections.
+    pub analytic: BTreeMap<String, ModelConfig>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.req("configs")?.members() {
+            let dj = cj.req("defaults")?;
+            configs.insert(
+                name.clone(),
+                ConfigBundle {
+                    model: ModelConfig::from_json(cj.req("model")?)?,
+                    caps: Capacities::from_json(cj.req("capacities")?)?,
+                    weights_file: cj.req("weights_file")?.as_str().unwrap_or("").to_string(),
+                    golden_file: cj.req("golden_file")?.as_str().unwrap_or("").to_string(),
+                    fingerprint: cj.req("fingerprint")?.as_str().unwrap_or("").to_string(),
+                    defaults: Defaults {
+                        alpha: dj.req("alpha")?.as_f64().unwrap_or(0.5) as f32,
+                        inv2sig2: dj.req("inv2sig2")?.as_f64().unwrap_or(0.0) as f32,
+                        gate_theta: dj.req("gate_theta")?.as_f64().unwrap_or(0.5) as f32,
+                    },
+                    artifacts: cj
+                        .req("artifacts")?
+                        .as_arr()
+                        .context("artifacts")?
+                        .iter()
+                        .map(ArtifactSpec::from_json)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        let mut analytic = BTreeMap::new();
+        if let Some(aj) = j.get("analytic_configs") {
+            for (name, cj) in aj.members() {
+                analytic.insert(name.clone(), ModelConfig::from_json(cj)?);
+            }
+        }
+
+        Ok(Manifest { dir, configs, analytic })
+    }
+
+    /// Default artifacts directory: `$WARP_ARTIFACTS_DIR` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("WARP_ARTIFACTS_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigBundle> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config `{name}` not in manifest (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest_json() -> String {
+        r#"{
+          "version": 1,
+          "configs": {
+            "tiny": {
+              "model": {"name":"tiny","d_model":64,"n_layers":2,"n_heads":4,
+                        "n_kv_heads":2,"d_ff":192,"vocab_size":260,
+                        "head_dim":16,"rope_theta":10000.0,"norm_eps":1e-5,
+                        "param_count":116032},
+              "capacities": {"prefill_len":128,"main_ctx":512,"side_ctx":96,
+                             "synapse_k":64,"inject_len":16,"decode_batch":4},
+              "weights_file": "weights_tiny.npz",
+              "golden_file": "golden_tiny.json",
+              "fingerprint": "abc",
+              "defaults": {"alpha":0.5,"inv2sig2":0.015625,"gate_theta":0.5},
+              "artifacts": [
+                {"name":"tiny_decode_c512","program":"decode_c512",
+                 "config":"tiny","file":"tiny_decode_c512.hlo.txt",
+                 "inputs":[{"name":"token","shape":[],"dtype":"s32"}],
+                 "outputs":[{"name":"logits","shape":[260],"dtype":"f32"}],
+                 "flops":232064}
+              ]
+            }
+          },
+          "analytic_configs": {
+            "qwen2_5_0_5b": {"name":"qwen2_5_0_5b","d_model":896,"n_layers":24,
+              "n_heads":14,"n_kv_heads":2,"d_ff":4864,"vocab_size":151936,
+              "head_dim":64,"rope_theta":1e6,"norm_eps":1e-5,
+              "param_count":494032768}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_mini_manifest() {
+        let dir = std::env::temp_dir().join(format!("wc_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), mini_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let cfg = m.config("tiny").unwrap();
+        assert_eq!(cfg.model.d_model, 64);
+        assert_eq!(cfg.caps.synapse_k, 64);
+        assert_eq!(cfg.artifacts.len(), 1);
+        let a = cfg.artifact("decode_c512").unwrap();
+        assert_eq!(a.inputs[0].dtype, Dtype::I32);
+        assert!(cfg.artifact("nonexistent").is_err());
+        assert!(m.analytic.contains_key("qwen2_5_0_5b"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kv_math() {
+        let m = Manifest::load({
+            let dir = std::env::temp_dir().join(format!("wc_manifest_kv_{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join("manifest.json"), mini_manifest_json()).unwrap();
+            dir
+        })
+        .unwrap();
+        let cfg = &m.config("tiny").unwrap().model;
+        // 2 layers * 2 kv heads * 16 hd * 2 (K+V) * 4 bytes = 512 B/row
+        assert_eq!(cfg.kv_row_bytes(4), 512);
+        assert_eq!(cfg.kv_cache_bytes(512, 4), 512 * 512);
+        // qwen: 24 * 2 * 64 * 2 * 2B = 12288 B/row; 32k ctx ≈ 402 MB (paper's ~0.5 GB)
+        let q = &m.analytic["qwen2_5_0_5b"];
+        assert_eq!(q.kv_row_bytes(2), 12288);
+        let full = q.kv_cache_bytes(32768, 2);
+        assert!(full > 380_000_000 && full < 420_000_000, "{full}");
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime bridge: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `weights_*.npz` + `manifest.json`) produced by the Python build path and
+//! executes them on the XLA PJRT CPU client.
+//!
+//! Threading model: all PJRT objects (client, executables, device buffers)
+//! live on ONE dedicated *device service thread* — the `xla` crate's handles
+//! are `Rc`-based and must not cross threads.  Other threads talk to the
+//! device through [`device::DeviceHandle`], which enqueues operations into
+//! the three priority lanes of the paper's River & Stream topology (§3.1):
+//! the River lane preempts the Stream lane at op granularity, exactly the
+//! scheduling semantics the paper gets from prioritized CUDA streams.
+
+pub mod device;
+pub mod manifest;
+pub mod tensor;
+
+pub use device::{DeviceHandle, DeviceOptions, Lane, OpResult};
+pub use manifest::{ArtifactSpec, Capacities, ConfigBundle, Manifest, ModelConfig, TensorSpec};
+pub use tensor::{Dtype, HostTensor};

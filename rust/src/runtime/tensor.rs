@@ -1,0 +1,147 @@
+//! Host-side tensors: the plain-data currency between coordinator threads
+//! and the device service thread (PJRT literals never cross threads).
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`HostTensor`] (only the two the artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" | "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype `{other}`"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// A dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> HostTensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32 { data, shape }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> HostTensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32 { data, shape }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor::F32 { data: vec![0.0; n], shape }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload size — the number the memory tracker accounts for.
+    pub fn num_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.num_bytes(), 16);
+        assert_eq!(t.as_f32().unwrap()[3], 4.0);
+        assert!(t.as_i32().is_err());
+
+        let s = HostTensor::scalar_i32(7);
+        assert!(s.shape().is_empty());
+        assert_eq!(s.as_i32().unwrap(), &[7]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("s32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn zeros() {
+        let z = HostTensor::zeros_f32(vec![3, 4]);
+        assert_eq!(z.len(), 12);
+        assert!(z.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,158 @@
+//! Minimal HTTP/1.1 request/response handling over a `TcpStream`.
+//!
+//! Supports exactly what the API needs: GET/POST, Content-Length bodies,
+//! and JSON responses.  Not a general web server — a serving substrate.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not UTF-8")
+    }
+
+    /// Read one request from the stream (None on clean EOF).
+    pub fn read_from(stream: &mut TcpStream) -> Result<Option<HttpRequest>> {
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(None);
+        }
+        let mut parts = line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_uppercase();
+        let path = parts.next().unwrap_or("/").to_string();
+        if method.is_empty() {
+            bail!("malformed request line: {line:?}");
+        }
+
+        let mut headers = Vec::new();
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                break;
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.push((k.trim().to_string(), v.trim().to_string()));
+            }
+        }
+
+        let len: usize = headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+            .and_then(|(_, v)| v.parse().ok())
+            .unwrap_or(0);
+        if len > 16 * 1024 * 1024 {
+            bail!("request body too large: {len}");
+        }
+        let mut body = vec![0u8; len];
+        if len > 0 {
+            reader.read_exact(&mut body)?;
+        }
+        Ok(Some(HttpRequest {
+            method,
+            path,
+            headers,
+            body,
+        }))
+    }
+}
+
+/// Write an HTTP response with a JSON (or plain) body.
+pub fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+pub fn respond_json(stream: &mut TcpStream, status: u16, body: &crate::util::Json) -> Result<()> {
+    respond(stream, status, "application/json", &body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    fn roundtrip(raw: &str) -> Option<HttpRequest> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_string();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(raw.as_bytes()).unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let req = HttpRequest::read_from(&mut conn).unwrap();
+        client.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_get() {
+        let req = roundtrip("GET /stats HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/stats");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let body = r#"{"prompt":"hi"}"#;
+        let raw = format!(
+            "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let req = roundtrip(&raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body_str().unwrap(), body);
+    }
+
+    #[test]
+    fn empty_connection_is_none() {
+        assert!(roundtrip("").is_none());
+    }
+}

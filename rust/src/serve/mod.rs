@@ -1,0 +1,7 @@
+//! The serving layer: a minimal HTTP/1.1 server over `std::net` exposing the
+//! Warp-Cortex orchestrator (no web-framework crates offline — DESIGN §4).
+
+pub mod http;
+pub mod server;
+
+pub use server::{serve, ServerConfig};

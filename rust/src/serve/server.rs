@@ -1,0 +1,264 @@
+//! The Warp-Cortex HTTP API.
+//!
+//! Endpoints:
+//! * `POST /generate` — `{"prompt": "...", "max_tokens": 64}` → episode
+//!   report (text, events, timing).
+//! * `GET  /stats`    — live system statistics (memory, gate, synapse,
+//!   scheduler, device).
+//! * `GET  /health`   — readiness probe.
+//!
+//! Connections are handled by a small accept-loop thread pool; every episode
+//! runs through the shared [`WarpCortex`] orchestrator, so all requests
+//! share the singleton weights and the device priority lanes.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::http::{respond, respond_json, HttpRequest};
+use crate::cortex::WarpCortex;
+use crate::util::Json;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub workers: usize,
+    /// Cap on tokens per request.
+    pub max_tokens_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:8787".into(),
+            workers: 2,
+            max_tokens_cap: 128,
+        }
+    }
+}
+
+/// Handle to a running server (for tests and the CLI).
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the acceptor
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving; returns immediately with a handle.
+pub fn serve(cortex: Arc<WarpCortex>, cfg: ServerConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let requests = Arc::new(AtomicU64::new(0));
+
+    // Accept loop distributes connections to handler threads via a channel.
+    let (tx, rx) = std::sync::mpsc::channel::<TcpStream>();
+    let rx = Arc::new(std::sync::Mutex::new(rx));
+    let mut threads = Vec::new();
+
+    for i in 0..cfg.workers.max(1) {
+        let rx = rx.clone();
+        let cortex = cortex.clone();
+        let cfg = cfg.clone();
+        let requests = requests.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("warp-http-{i}"))
+                .spawn(move || loop {
+                    let conn = rx.lock().unwrap().recv();
+                    match conn {
+                        Ok(mut stream) => {
+                            requests.fetch_add(1, Ordering::Relaxed);
+                            if let Err(e) = handle_connection(&mut stream, &cortex, &cfg) {
+                                log::debug!("connection error: {e:#}");
+                            }
+                        }
+                        Err(_) => return,
+                    }
+                })?,
+        );
+    }
+
+    {
+        let stop = stop.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name("warp-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        if let Ok(stream) = conn {
+                            if tx.send(stream).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                })?,
+        );
+    }
+
+    Ok(ServerHandle { addr, stop, threads })
+}
+
+fn handle_connection(
+    stream: &mut TcpStream,
+    cortex: &WarpCortex,
+    cfg: &ServerConfig,
+) -> Result<()> {
+    let Some(req) = HttpRequest::read_from(stream)? else {
+        return Ok(());
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => respond_json(stream, 200, &Json::obj().with("ok", true)),
+        ("GET", "/stats") => respond_json(stream, 200, &stats_json(cortex)),
+        ("POST", "/generate") => match handle_generate(&req, cortex, cfg) {
+            Ok(body) => respond_json(stream, 200, &body),
+            Err(e) => respond_json(
+                stream,
+                400,
+                &Json::obj().with("error", format!("{e:#}")),
+            ),
+        },
+        ("POST", _) | ("GET", _) => respond(stream, 404, "text/plain", "not found"),
+        _ => respond(stream, 405, "text/plain", "method not allowed"),
+    }
+}
+
+fn handle_generate(req: &HttpRequest, cortex: &WarpCortex, cfg: &ServerConfig) -> Result<Json> {
+    let body = Json::parse(req.body_str()?).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let prompt = body
+        .req("prompt")?
+        .as_str()
+        .context("`prompt` must be a string")?
+        .to_string();
+    let max_tokens = body
+        .get("max_tokens")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(48)
+        .min(cfg.max_tokens_cap);
+
+    let report = cortex.run_episode(&prompt, max_tokens)?;
+    let events: Vec<Json> = report
+        .events
+        .iter()
+        .map(|e| match e {
+            crate::cortex::Event::Spawned { task_id, tag, payload, at_token } => Json::obj()
+                .with("type", "spawned")
+                .with("task", *task_id as i64)
+                .with("tag", tag.as_str())
+                .with("payload", payload.as_str())
+                .with("at_token", *at_token),
+            crate::cortex::Event::Dropped { payload, at_token } => Json::obj()
+                .with("type", "dropped")
+                .with("payload", payload.as_str())
+                .with("at_token", *at_token),
+            crate::cortex::Event::Merged { task_id, score, thought, injected_rows, at_token } => {
+                Json::obj()
+                    .with("type", "merged")
+                    .with("task", *task_id as i64)
+                    .with("score", *score as f64)
+                    .with("thought", thought.as_str())
+                    .with("injected_rows", *injected_rows)
+                    .with("at_token", *at_token)
+            }
+            crate::cortex::Event::Rejected { task_id, score, thought, at_token } => Json::obj()
+                .with("type", "rejected")
+                .with("task", *task_id as i64)
+                .with("score", *score as f64)
+                .with("thought", thought.as_str())
+                .with("at_token", *at_token),
+            crate::cortex::Event::Failed { task_id, error, at_token } => Json::obj()
+                .with("type", "failed")
+                .with("task", *task_id as i64)
+                .with("error", error.as_str())
+                .with("at_token", *at_token),
+            crate::cortex::Event::SynapsePushed { version, source_len, at_token } => Json::obj()
+                .with("type", "synapse")
+                .with("version", *version)
+                .with("source_len", *source_len)
+                .with("at_token", *at_token),
+        })
+        .collect();
+
+    Ok(Json::obj()
+        .with("text", report.text.as_str())
+        .with("tokens", report.tokens_generated)
+        .with("elapsed_ms", report.elapsed.as_secs_f64() * 1e3)
+        .with("tokens_per_sec", report.main_tokens_per_sec)
+        .with("events", Json::Arr(events)))
+}
+
+fn stats_json(cortex: &WarpCortex) -> Json {
+    let mem = cortex.tracker.snapshot();
+    let gate = cortex.gate.stats();
+    let syn = cortex.synapse.stats();
+    let sched = cortex.scheduler.stats();
+    let dev = cortex.engine.device().stats();
+    let batch = cortex.batcher.stats();
+    Json::obj()
+        .with(
+            "memory",
+            Json::obj()
+                .with("total_bytes", mem.total())
+                .with("weights", mem.per_kind[0])
+                .with("main_kv", mem.per_kind[1])
+                .with("side_kv", mem.per_kind[2])
+                .with("synapse", mem.per_kind[3]),
+        )
+        .with(
+            "gate",
+            Json::obj()
+                .with("evaluated", gate.evaluated)
+                .with("accepted", gate.accepted)
+                .with("accept_rate", gate.accept_rate()),
+        )
+        .with(
+            "synapse",
+            Json::obj()
+                .with("pushes", syn.pushes)
+                .with("reads", syn.reads)
+                .with("last_source_len", syn.last_source_len),
+        )
+        .with(
+            "scheduler",
+            Json::obj()
+                .with("submitted", sched.submitted)
+                .with("completed", sched.completed)
+                .with("active", sched.active)
+                .with("queued", sched.queued),
+        )
+        .with(
+            "batcher",
+            Json::obj()
+                .with("requests", batch.requests)
+                .with("mean_batch_size", batch.mean_batch_size()),
+        )
+        .with(
+            "device",
+            Json::obj()
+                .with("ops", dev.ops)
+                .with("exec_ns", dev.exec_ns)
+                .with("river_ops", dev.lane_ops[0])
+                .with("stream_ops", dev.lane_ops[1])
+                .with("background_ops", dev.lane_ops[2]),
+        )
+        .with("population", cortex.prism.population().total())
+}
+
+// End-to-end server tests live in rust/tests/integration_serve.rs.

@@ -1,0 +1,7 @@
+//! Text substrate: byte-level tokenizer and sampling strategies.
+
+pub mod sampler;
+pub mod tokenizer;
+
+pub use sampler::{Sampler, SamplerConfig};
+pub use tokenizer::{Tokenizer, BOS_ID, EOS_ID, PAD_ID, REF_ID, VOCAB_SIZE};

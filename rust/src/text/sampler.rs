@@ -1,0 +1,245 @@
+//! Token sampling: greedy, temperature, top-k and nucleus (top-p), with a
+//! seeded xorshift RNG and a repetition penalty — everything the serving
+//! layer needs, no `rand` crate.
+
+use crate::util::rng::XorShift;
+use crate::util::vecmath::argmax;
+
+/// Sampling hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    /// 0 = disabled.
+    pub top_k: usize,
+    /// 1.0 = disabled.
+    pub top_p: f32,
+    /// 1.0 = disabled; >1 penalises recently generated ids.
+    pub repetition_penalty: f32,
+    /// Window for the repetition penalty.
+    pub repetition_window: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig {
+            temperature: 0.8,
+            top_k: 40,
+            top_p: 0.95,
+            repetition_penalty: 1.1,
+            repetition_window: 64,
+            seed: 0,
+        }
+    }
+}
+
+impl SamplerConfig {
+    pub fn greedy() -> SamplerConfig {
+        SamplerConfig {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            repetition_window: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// Stateful sampler (tracks recent ids for the repetition penalty).
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    cfg: SamplerConfig,
+    rng: XorShift,
+    recent: Vec<i32>,
+}
+
+impl Sampler {
+    pub fn new(cfg: SamplerConfig) -> Sampler {
+        let seed = cfg.seed;
+        Sampler {
+            cfg,
+            rng: XorShift::new(seed ^ 0xA5A5_5A5A_DEAD_BEEF),
+            recent: Vec::new(),
+        }
+    }
+
+    /// Sample the next id from raw logits (mutates a working copy).
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        let id = self.sample_inner(logits);
+        if self.cfg.repetition_window > 0 {
+            self.recent.push(id);
+            if self.recent.len() > self.cfg.repetition_window {
+                self.recent.remove(0);
+            }
+        }
+        id
+    }
+
+    fn sample_inner(&mut self, logits: &[f32]) -> i32 {
+        if self.cfg.temperature <= 0.0 {
+            return argmax(logits) as i32;
+        }
+        let mut work: Vec<(usize, f32)> = logits.iter().cloned().enumerate().collect();
+
+        if self.cfg.repetition_penalty > 1.0 {
+            for &id in &self.recent {
+                let l = &mut work[id as usize].1;
+                *l = if *l > 0.0 {
+                    *l / self.cfg.repetition_penalty
+                } else {
+                    *l * self.cfg.repetition_penalty
+                };
+            }
+        }
+
+        // temperature
+        let inv_t = 1.0 / self.cfg.temperature;
+        for (_, l) in work.iter_mut() {
+            *l *= inv_t;
+        }
+
+        // top-k cut
+        work.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        if self.cfg.top_k > 0 && self.cfg.top_k < work.len() {
+            work.truncate(self.cfg.top_k);
+        }
+
+        // softmax over the surviving set
+        let m = work[0].1;
+        let mut total = 0.0f64;
+        let mut probs: Vec<f64> = work
+            .iter()
+            .map(|(_, l)| {
+                let p = ((l - m) as f64).exp();
+                total += p;
+                p
+            })
+            .collect();
+        for p in probs.iter_mut() {
+            *p /= total;
+        }
+
+        // nucleus cut
+        if self.cfg.top_p < 1.0 {
+            let mut cum = 0.0;
+            let mut keep = probs.len();
+            for (i, p) in probs.iter().enumerate() {
+                cum += p;
+                if cum >= self.cfg.top_p as f64 {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            probs.truncate(keep);
+            let z: f64 = probs.iter().sum();
+            for p in probs.iter_mut() {
+                *p /= z;
+            }
+        }
+
+        // inverse-CDF draw
+        let u = self.rng.unit();
+        let mut cum = 0.0;
+        for (i, p) in probs.iter().enumerate() {
+            cum += p;
+            if u < cum {
+                return work[i].0 as i32;
+            }
+        }
+        work[probs.len() - 1].0 as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniformish_logits(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 37) % 11) as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(SamplerConfig::greedy());
+        let mut logits = vec![0.0f32; 100];
+        logits[42] = 5.0;
+        assert_eq!(s.sample(&logits), 42);
+        assert_eq!(s.sample(&logits), 42); // deterministic
+    }
+
+    #[test]
+    fn temperature_sampling_is_seeded_deterministic() {
+        let cfg = SamplerConfig {
+            seed: 9,
+            ..Default::default()
+        };
+        let logits = uniformish_logits(260);
+        let a: Vec<i32> = {
+            let mut s = Sampler::new(cfg.clone());
+            (0..20).map(|_| s.sample(&logits)).collect()
+        };
+        let b: Vec<i32> = {
+            let mut s = Sampler::new(cfg);
+            (0..20).map(|_| s.sample(&logits)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut logits = vec![0.0f32; 50];
+        logits[7] = 10.0;
+        logits[13] = 9.5;
+        let mut s = Sampler::new(SamplerConfig {
+            temperature: 1.0,
+            top_k: 2,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            repetition_window: 0,
+            seed: 3,
+        });
+        for _ in 0..200 {
+            let id = s.sample(&logits);
+            assert!(id == 7 || id == 13, "sampled {id} outside top-2");
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        let mut logits = vec![-10.0f32; 50];
+        logits[1] = 8.0; // overwhelming mass
+        logits[2] = 1.0;
+        let mut s = Sampler::new(SamplerConfig {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 0.9,
+            repetition_penalty: 1.0,
+            repetition_window: 0,
+            seed: 4,
+        });
+        for _ in 0..100 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn repetition_penalty_discourages_loops() {
+        // two equal peaks: with penalty, after sampling one it should switch
+        let mut logits = vec![-5.0f32; 20];
+        logits[3] = 4.0;
+        logits[5] = 4.0;
+        let mut s = Sampler::new(SamplerConfig {
+            temperature: 0.01, // near-greedy
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 2.0,
+            repetition_window: 8,
+            seed: 5,
+        });
+        let first = s.sample(&logits);
+        let second = s.sample(&logits);
+        assert_ne!(first, second, "penalty should break the tie loop");
+    }
+}

@@ -1,0 +1,89 @@
+//! Byte-level tokenizer (mirrors `python/compile/configs.py`).
+//!
+//! ids 0..255 are raw bytes; 256..259 are PAD/BOS/EOS/REF specials.  Decoding
+//! is streaming-friendly: specials render as empty strings so the router can
+//! scan the visible byte stream directly.
+
+pub const PAD_ID: i32 = 256;
+pub const BOS_ID: i32 = 257;
+pub const EOS_ID: i32 = 258;
+/// Marks Referential-Injection reference segments (§3.6).
+pub const REF_ID: i32 = 259;
+pub const VOCAB_SIZE: usize = 260;
+
+/// Stateless byte tokenizer.
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        Tokenizer
+    }
+
+    /// Encode text to ids, optionally prefixing BOS.
+    pub fn encode(&self, text: &str, add_bos: bool) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        if add_bos {
+            out.push(BOS_ID);
+        }
+        out.extend(text.bytes().map(|b| b as i32));
+        out
+    }
+
+    /// Decode ids to text (specials skipped; non-UTF8 replaced).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&id| (0..256).contains(&id))
+            .map(|&id| id as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Decode a single id for streaming output (None for specials).
+    pub fn decode_one(&self, id: i32) -> Option<u8> {
+        if (0..256).contains(&id) {
+            Some(id as u8)
+        } else {
+            None
+        }
+    }
+
+    pub fn is_special(&self, id: i32) -> bool {
+        !(0..256).contains(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tk = Tokenizer::new();
+        let ids = tk.encode("hello [TASK: x]", false);
+        assert_eq!(ids.len(), 15);
+        assert_eq!(tk.decode(&ids), "hello [TASK: x]");
+    }
+
+    #[test]
+    fn bos_and_specials() {
+        let tk = Tokenizer::new();
+        let ids = tk.encode("ab", true);
+        assert_eq!(ids, vec![BOS_ID, 97, 98]);
+        assert_eq!(tk.decode(&ids), "ab");
+        assert!(tk.is_special(BOS_ID));
+        assert!(tk.is_special(EOS_ID));
+        assert!(!tk.is_special(65));
+        assert_eq!(tk.decode_one(EOS_ID), None);
+        assert_eq!(tk.decode_one(65), Some(b'A'));
+    }
+
+    #[test]
+    fn non_ascii_bytes() {
+        let tk = Tokenizer::new();
+        let ids = tk.encode("é", false); // two UTF-8 bytes
+        assert_eq!(ids.len(), 2);
+        assert_eq!(tk.decode(&ids), "é");
+    }
+}

@@ -1,0 +1,110 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]... [positional]...`
+//! Flags and options may be interleaved; `--key=value` is accepted.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — first element is argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().skip(1).peekable();
+        let mut out = Args::default();
+        // subcommand = first non-flag token
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(
+            std::iter::once("prog".to_string()).chain(s.split_whitespace().map(String::from)),
+        )
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse("serve --port 8080 --verbose --config=small extra");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("port", 0), 8080);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("config"), Some("small"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("model", "tiny"), "tiny");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert!(!a.flag("x"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

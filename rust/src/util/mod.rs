@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch (offline environment: no serde,
+//! clap, rand or proptest — DESIGN.md §4 lists the substitutions).
+
+pub mod args;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+pub mod vecmath;
+
+pub use json::Json;
+pub use rng::XorShift;

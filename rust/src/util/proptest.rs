@@ -1,0 +1,148 @@
+//! Mini property-testing framework (`proptest` is unavailable offline —
+//! DESIGN.md §4).  Seeded generators + a check loop that reports the failing
+//! case and its seed, so failures are reproducible.
+//!
+//! ```ignore
+//! use warp_cortex::util::proptest::{check, Gen};
+//! check("sort is idempotent", 200, |g| {
+//!     let v = g.vec_i64(0..50, -100..100);
+//!     let mut a = v.clone();
+//!     a.sort();
+//!     let mut b = a.clone();
+//!     b.sort();
+//!     prop_assert!(a == b, "double sort differs: {v:?}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::XorShift;
+use std::ops::Range;
+
+/// Per-case random value source.
+pub struct Gen {
+    rng: XorShift,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.end > r.start);
+        r.start + self.rng.below((r.end - r.start) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, r: Range<i64>) -> i64 {
+        assert!(r.end > r.start);
+        r.start + self.rng.below((r.end - r.start) as u64) as i64
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_i64(&mut self, len: Range<usize>, range: Range<i64>) -> Vec<i64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.i64_in(range.clone())).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: Range<usize>, range: Range<usize>) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.usize_in(range.clone())).collect()
+    }
+
+    /// ASCII string drawn from the given alphabet.
+    pub fn string_from(&mut self, len: Range<usize>, alphabet: &[u8]) -> String {
+        let n = self.usize_in(len);
+        (0..n)
+            .map(|_| *self.rng.choice(alphabet) as char)
+            .collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choice(items)
+    }
+}
+
+/// Run `cases` random cases of `property`.  Panics (with seed + case index)
+/// on the first failure.  The `WARP_PROPTEST_SEED` env var pins the base
+/// seed for reproduction.
+pub fn check<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed: u64 = std::env::var("WARP_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: XorShift::new(seed),
+            case,
+        };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property `{name}` failed at case {case} \
+                 (WARP_PROPTEST_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// `prop_assert!(cond, "format", args...)` — returns `Err(String)` instead of
+/// panicking so `check` can attach the case context.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("reverse twice", 50, |g| {
+            ran += 1;
+            let v = g.vec_i64(0..20, -5..5);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            prop_assert!(v == w, "mismatch");
+            Ok(())
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_context() {
+        check("always fails", 10, |_g| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", 100, |g| {
+            let u = g.usize_in(3..10);
+            prop_assert!((3..10).contains(&u), "usize out of range: {u}");
+            let f = g.f32_in(-1.0, 1.0);
+            prop_assert!((-1.0..1.0).contains(&f), "f32 out of range: {f}");
+            let s = g.string_from(0..8, b"ab");
+            prop_assert!(s.chars().all(|c| c == 'a' || c == 'b'), "bad string {s}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,121 @@
+//! Timing helpers for the bench harness (no `criterion` offline; DESIGN §4).
+//!
+//! `bench_median` follows criterion's discipline: warmup phase, then N timed
+//! iterations, reporting median / p10 / p90 — robust to scheduler noise.
+
+use std::time::{Duration, Instant};
+
+/// Result of a [`bench_median`] run.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchStats {
+    pub fn median(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+
+    /// Ops/sec at the median.
+    pub fn throughput(&self) -> f64 {
+        if self.median_ns <= 0.0 {
+            0.0
+        } else {
+            1e9 / self.median_ns
+        }
+    }
+
+    pub fn format_time(&self) -> String {
+        format_ns(self.median_ns)
+    }
+}
+
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, returning robust statistics.
+///
+/// Runs `warmup` untimed iterations, then `iters` timed ones.
+pub fn bench_median<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let at = |p: f64| samples[((p * (samples.len() - 1) as f64).round() as usize).min(samples.len() - 1)];
+    BenchStats {
+        iters,
+        median_ns: at(0.5),
+        p10_ns: at(0.1),
+        p90_ns: at(0.9),
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+    }
+}
+
+/// Simple scope timer: `let _t = ScopeTimer::new("phase");` prints on drop.
+pub struct ScopeTimer {
+    label: String,
+    start: Instant,
+}
+
+impl ScopeTimer {
+    pub fn new(label: &str) -> Self {
+        Self {
+            label: label.to_string(),
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        eprintln!(
+            "[timer] {}: {}",
+            self.label,
+            format_ns(self.start.elapsed().as_nanos() as f64)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders() {
+        let mut count = 0u64;
+        let stats = bench_median(2, 20, || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert_eq!(count, 22);
+        assert!(stats.p10_ns <= stats.median_ns && stats.median_ns <= stats.p90_ns);
+        assert!(stats.throughput() > 0.0);
+    }
+
+    #[test]
+    fn format_ns_units() {
+        assert!(format_ns(500.0).ends_with("ns"));
+        assert!(format_ns(5_000.0).ends_with("µs"));
+        assert!(format_ns(5_000_000.0).ends_with("ms"));
+        assert!(format_ns(5e9).ends_with(" s"));
+    }
+}

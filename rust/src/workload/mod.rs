@@ -1,0 +1,173 @@
+//! Synthetic request workloads: deterministic traces with Poisson or burst
+//! arrivals and configurable prompt/generation mixes — the input side of the
+//! throughput and E2E serving benches (no production traces exist for this
+//! paper; DESIGN.md §4).
+
+use crate::util::rng::XorShift;
+
+/// One serving request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Offset from trace start when the request arrives.
+    pub arrival: std::time::Duration,
+    pub prompt: String,
+    pub max_tokens: usize,
+}
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrivals {
+    /// Poisson with the given rate (req/s).
+    Poisson(f64),
+    /// Fixed inter-arrival gap.
+    Uniform(f64),
+    /// Everything at t=0 (closed-loop saturation).
+    Burst,
+}
+
+/// Trace generator configuration.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub seed: u64,
+    pub requests: usize,
+    pub arrivals: Arrivals,
+    /// Range of generation lengths.
+    pub min_tokens: usize,
+    pub max_tokens: usize,
+    /// Probability a prompt embeds a router trigger.
+    pub trigger_prob: f64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            seed: 11,
+            requests: 32,
+            arrivals: Arrivals::Poisson(8.0),
+            min_tokens: 16,
+            max_tokens: 48,
+            trigger_prob: 0.3,
+        }
+    }
+}
+
+const TOPICS: &[&str] = &[
+    "the kv cache",
+    "rotary embeddings",
+    "the synapse",
+    "landmark tokens",
+    "the validation gate",
+    "referential injection",
+    "weight sharing",
+    "the memory budget",
+    "the scheduler",
+    "the router",
+];
+
+const TASKS: &[&str] = &[
+    "verify the arithmetic",
+    "check the last claim",
+    "recall the definition",
+    "summarize the context",
+    "estimate the memory",
+    "validate the bounds",
+];
+
+/// Generate a deterministic request trace.
+pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
+    let mut rng = XorShift::new(cfg.seed);
+    let mut t = 0.0f64;
+    (0..cfg.requests)
+        .map(|i| {
+            t += match cfg.arrivals {
+                Arrivals::Poisson(rate) => rng.exp(rate),
+                Arrivals::Uniform(gap) => gap,
+                Arrivals::Burst => 0.0,
+            };
+            let topic = rng.choice(TOPICS);
+            let mut prompt = format!("user: tell me about {topic}.\nriver: ");
+            if rng.unit() < cfg.trigger_prob {
+                let task = rng.choice(TASKS);
+                prompt = format!("user: tell me about {topic}. [TASK: {task}]\nriver: ");
+            }
+            let span = (cfg.max_tokens - cfg.min_tokens).max(1) as u64;
+            Request {
+                id: i as u64,
+                arrival: std::time::Duration::from_secs_f64(t),
+                prompt,
+                max_tokens: cfg.min_tokens + rng.below(span) as usize,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let cfg = WorkloadConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.max_tokens, y.max_tokens);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_roughly_right() {
+        let cfg = WorkloadConfig {
+            requests: 2000,
+            arrivals: Arrivals::Poisson(50.0),
+            ..Default::default()
+        };
+        let trace = generate(&cfg);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let span = trace.last().unwrap().arrival.as_secs_f64();
+        let rate = cfg.requests as f64 / span;
+        assert!((rate - 50.0).abs() < 8.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn burst_all_at_zero() {
+        let cfg = WorkloadConfig {
+            arrivals: Arrivals::Burst,
+            ..Default::default()
+        };
+        assert!(generate(&cfg).iter().all(|r| r.arrival.as_nanos() == 0));
+    }
+
+    #[test]
+    fn token_bounds_respected() {
+        let cfg = WorkloadConfig {
+            requests: 500,
+            min_tokens: 5,
+            max_tokens: 9,
+            ..Default::default()
+        };
+        for r in generate(&cfg) {
+            assert!((5..9).contains(&r.max_tokens));
+        }
+    }
+
+    #[test]
+    fn trigger_probability_respected() {
+        let cfg = WorkloadConfig {
+            requests: 2000,
+            trigger_prob: 0.5,
+            ..Default::default()
+        };
+        let n = generate(&cfg)
+            .iter()
+            .filter(|r| r.prompt.contains("[TASK:"))
+            .count();
+        assert!((800..1200).contains(&n), "trigger count {n}");
+    }
+}

@@ -1,0 +1,483 @@
+//! Integration: the full Warp-Cortex coordinator against real artifacts.
+//!
+//! Covers the paper's mechanisms end-to-end: Prism registration accounting,
+//! synapse extraction→seeding, side agents through the dynamic batcher,
+//! validation gating, referential injection into a live main cache, and a
+//! complete council episode.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use once_cell::sync::Lazy;
+
+use warp_cortex::cortex::{
+    AgentKind, CortexConfig, Event, Injector, MemKind, MemoryTracker, Prism,
+    StandardArchitecture, Synapse, WarpCortex,
+};
+use warp_cortex::model::Engine;
+use warp_cortex::runtime::{DeviceHandle, DeviceOptions, Lane};
+use warp_cortex::text::{SamplerConfig, Tokenizer};
+
+static DEVICE: Lazy<DeviceHandle> = Lazy::new(|| {
+    DeviceHandle::new(DeviceOptions::from_env().with_configs(&["tiny"]))
+        .expect("device (run `make artifacts` first)")
+});
+
+static ENGINE: Lazy<Arc<Engine>> =
+    Lazy::new(|| Engine::new(DEVICE.clone(), "tiny").expect("engine"));
+
+// > synapse_k (64) tokens but < prefill_len (128) with BOS.
+fn long_prompt() -> String {
+    "user: tell me about the kv cache.\n\
+     river: the cache grows one row per token. the synapse selects \
+     landmark tokens.\nriver: "
+        .to_string()
+}
+
+#[test]
+fn prism_accounting_matches_population() {
+    let tracker = MemoryTracker::new();
+    let prism = Prism::new(ENGINE.clone(), tracker.clone());
+    let w = tracker.live_bytes(MemKind::Weights);
+    assert!(w > 0, "weights accounted once");
+
+    let t1 = prism.register(AgentKind::Main).unwrap();
+    let t2 = prism.register(AgentKind::Side).unwrap();
+    let t3 = prism.register(AgentKind::Side).unwrap();
+    assert_eq!(prism.population().main, 1);
+    assert_eq!(prism.population().side, 2);
+    // weights did NOT grow with agents — the singleton claim
+    assert_eq!(tracker.live_bytes(MemKind::Weights), w);
+    let main_kv = tracker.live_bytes(MemKind::MainKv);
+    let side_kv = tracker.live_bytes(MemKind::SideKv);
+    assert_eq!(main_kv as u64, t1.kv.bytes());
+    assert_eq!(side_kv as u64, t2.kv.bytes() + t3.kv.bytes());
+    // side caches are much smaller than main ones (O(k) vs O(L))
+    assert!(t2.kv.bytes() * 4 < t1.kv.bytes());
+
+    drop(t2);
+    assert_eq!(prism.population().side, 1);
+    assert_eq!(tracker.live_bytes(MemKind::SideKv) as u64, t3.kv.bytes());
+    drop(t1);
+    drop(t3);
+    assert_eq!(prism.population().total(), 0);
+    assert_eq!(tracker.live_bytes(MemKind::MainKv), 0);
+}
+
+#[test]
+fn synapse_extraction_seeds_side_agents() {
+    let tk = Tokenizer::new();
+    let tracker = MemoryTracker::new();
+    let synapse = Synapse::new(tracker.clone());
+    let eng = &*ENGINE;
+
+    let mut kv = eng.new_main_cache();
+    let prompt = tk.encode(&long_prompt(), true);
+    let pre = eng.prefill(&prompt, &mut kv, Lane::River).unwrap();
+
+    let out = eng
+        .synapse_extract(&pre.hidden_last, &kv, Lane::Background)
+        .unwrap();
+    let k = eng.caps().synapse_k;
+    assert_eq!(out.indices.len(), k);
+    assert!(out.indices.windows(2).all(|w| w[0] < w[1]));
+    assert!(out.indices.iter().all(|&i| (i as usize) < kv.len()));
+
+    synapse.push(out);
+    let (side_kv, pos, version) = synapse.seed_side_cache(eng).unwrap();
+    assert_eq!(side_kv.len(), k);
+    assert_eq!(pos as usize, kv.len());
+    assert_eq!(version, 1);
+    // compression: k rows vs full context
+    let snap = synapse.read().unwrap();
+    assert!(snap.compression() > 0.4, "{}", snap.compression());
+
+    // the seeded side cache can decode immediately
+    let mut side_kv = side_kv;
+    let out = eng.decode(97, pos, &mut side_kv, Lane::Stream).unwrap();
+    assert_eq!(out.logits.len(), eng.config().vocab_size);
+    assert!(out.logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn referential_injection_changes_predictions_not_positions() {
+    let tk = Tokenizer::new();
+    let eng = &*ENGINE;
+    let injector = Injector::new(8);
+
+    let mut kv = eng.new_main_cache();
+    let prompt = tk.encode("user: what is a kilobyte?\nriver: a kilobyte is ", true);
+    eng.prefill(&prompt, &mut kv, Lane::River).unwrap();
+    let pos = kv.len() as i32;
+
+    // Clone the cache; inject into one copy only.
+    let mut kv_injected = kv.clone();
+    let thought = tk.encode("fact: a kilobyte is 1024 bytes.", false);
+    let report = injector
+        .inject(eng, &mut kv_injected, &thought, pos, Lane::Stream)
+        .unwrap();
+    assert!(report.rows > 0);
+    assert_eq!(report.len_after, report.len_before + report.rows);
+
+    // Decode the SAME next token id at the SAME text position in both.
+    let plain = eng.decode(32, pos, &mut kv, Lane::River).unwrap();
+    let inj = eng.decode(32, pos, &mut kv_injected, Lane::River).unwrap();
+    // The injected memory must influence the distribution...
+    let diff: f32 = plain
+        .logits
+        .iter()
+        .zip(&inj.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff > 1e-4, "injection had no effect (max diff {diff})");
+    // ...while the visible stream/position bookkeeping is unchanged.
+    assert_eq!(kv_injected.len(), kv.len() + report.rows);
+
+    let stats = injector.stats();
+    assert_eq!(stats.injected, 1);
+}
+
+#[test]
+fn injection_headroom_refusal() {
+    let eng = &*ENGINE;
+    let injector = Injector::new(eng.caps().main_ctx); // absurd reserve
+    let mut kv = eng.new_main_cache();
+    let tk = Tokenizer::new();
+    eng.prefill(&tk.encode("hi", true), &mut kv, Lane::River).unwrap();
+    let err = injector
+        .inject(eng, &mut kv, &[65, 66], 2, Lane::Stream)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("headroom"));
+    assert_eq!(injector.stats().refused_headroom, 1);
+}
+
+#[test]
+fn full_council_episode_produces_events_and_text() {
+    let engine = ENGINE.clone();
+    let cfg = CortexConfig {
+        model: "tiny".into(),
+        max_side_agents: 2,
+        synapse_refresh_every: 8,
+        side_gen_budget: 8,
+        sampler: SamplerConfig {
+            temperature: 0.7,
+            seed: 42,
+            ..SamplerConfig::default()
+        },
+        ..CortexConfig::default()
+    };
+    let cortex = WarpCortex::new(engine, cfg).unwrap();
+
+    // Prompt carries explicit triggers so routing fires deterministically.
+    let prompt = format!(
+        "{} [TASK: verify the math] [RECALL: the definition] ",
+        long_prompt()
+    );
+    let report = cortex.run_episode(&prompt, 48).unwrap();
+
+    assert!(report.tokens_generated > 0);
+    assert!(!report.text.is_empty());
+    assert!(report.main_tokens_per_sec > 0.0);
+
+    let spawned = report
+        .events
+        .iter()
+        .filter(|e| matches!(e, Event::Spawned { .. }))
+        .count();
+    let synapse_pushes = report
+        .events
+        .iter()
+        .filter(|e| matches!(e, Event::SynapsePushed { .. }))
+        .count();
+    assert!(synapse_pushes >= 1, "synapse never refreshed");
+    // Prompt triggers fire on the first generated tokens (router saw the
+    // prompt) — at least the two explicit tasks must spawn or drop.
+    let routed = spawned
+        + report
+            .events
+            .iter()
+            .filter(|e| matches!(e, Event::Dropped { .. }))
+            .count();
+    assert!(routed >= 2, "prompt triggers not routed: {:?}", report.events);
+    // every spawned task reaches a terminal event
+    let terminal = report
+        .events
+        .iter()
+        .filter(|e| {
+            matches!(
+                e,
+                Event::Merged { .. } | Event::Rejected { .. } | Event::Failed { .. }
+            )
+        })
+        .count();
+    assert!(terminal >= 1, "no side agent completed: {:?}", report.events);
+    // memory snapshot is alive and categorised
+    assert!(report.memory.get(MemKind::Weights) > 0);
+    assert!(report.memory.total() > 0);
+}
+
+#[test]
+fn batcher_concurrent_decodes_are_correct_and_batched() {
+    use warp_cortex::cortex::Batcher;
+    let eng = ENGINE.clone();
+    let tk = Tokenizer::new();
+    let batcher = Batcher::new(eng.clone(), Duration::from_millis(3));
+
+    // Reference: single-threaded engine decode.
+    let seed_cache = |text: &str| {
+        let toks = tk.encode(text, true);
+        let enc = eng.inject_encode(&toks, 0, Lane::Stream).unwrap();
+        let (k, v) = eng.slice_inject_rows(&enc, enc.len);
+        let mut kv = eng.new_side_cache();
+        kv.append_rows(enc.len, &k, &v).unwrap();
+        kv
+    };
+
+    let texts = ["alpha", "beta", "gamma", "delta"];
+    let mut expected = Vec::new();
+    for t in texts {
+        let mut kv = seed_cache(t);
+        let pos = kv.len() as i32;
+        let out = eng.decode(65, pos, &mut kv, Lane::Stream).unwrap();
+        expected.push(out.logits);
+    }
+
+    // Concurrent: four threads through the batcher.
+    let handles: Vec<_> = texts
+        .iter()
+        .map(|t| {
+            let batcher = batcher.clone();
+            let eng = eng.clone();
+            let t = t.to_string();
+            std::thread::spawn(move || {
+                let tk = Tokenizer::new();
+                let toks = tk.encode(&t, true);
+                let enc = eng.inject_encode(&toks, 0, Lane::Stream).unwrap();
+                let (k, v) = eng.slice_inject_rows(&enc, enc.len);
+                let mut kv = eng.new_side_cache();
+                kv.append_rows(enc.len, &k, &v).unwrap();
+                let pos = kv.len() as i32;
+                batcher.decode(65, pos, &mut kv).unwrap().logits
+            })
+        })
+        .collect();
+    let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (got, want) in results.iter().zip(&expected) {
+        for (a, b) in got.iter().zip(want) {
+            assert!((a - b).abs() < 1e-3, "batched decode diverged: {a} vs {b}");
+        }
+    }
+    let stats = batcher.stats();
+    assert_eq!(stats.requests, 4);
+}
+
+#[test]
+fn hierarchical_and_adaptive_seeding_work_end_to_end() {
+    use warp_cortex::cortex::SeedMode;
+    let tk = Tokenizer::new();
+    let tracker = MemoryTracker::new();
+    let synapse = Synapse::new(tracker);
+    let eng = &*ENGINE;
+
+    let mut kv = eng.new_main_cache();
+    let pre = eng
+        .prefill(&tk.encode(&long_prompt(), true), &mut kv, Lane::River)
+        .unwrap();
+    let s = eng
+        .synapse_extract(&pre.hidden_last, &kv, Lane::Background)
+        .unwrap();
+    let k_full = s.indices.len();
+    synapse.push(s);
+
+    // Hierarchical Synapse (§6.2 #2): coarse seeding yields a smaller but
+    // decodable cache whose landmarks are a causal subset of the fine set.
+    let (coarse_kv, pos, _) = synapse
+        .seed_side_cache_with(eng, SeedMode::Coarse(8))
+        .unwrap();
+    assert_eq!(coarse_kv.len(), 8);
+    let fine = synapse.read().unwrap();
+    let coarse = fine.coarsen(8);
+    assert!(coarse
+        .indices
+        .iter()
+        .all(|i| fine.landmarks.indices.contains(i)));
+    let mut coarse_kv = coarse_kv;
+    let out = eng.decode(97, pos, &mut coarse_kv, Lane::Stream).unwrap();
+    assert!(out.logits.iter().all(|x| x.is_finite()));
+
+    // Adaptive Landmark Selection (§6.2 #1): mass-driven k in [min_k, K].
+    let (small_kv, _, _) = synapse
+        .seed_side_cache_with(
+            eng,
+            SeedMode::Adaptive { target_mass: 0.3, min_k: 4 },
+        )
+        .unwrap();
+    let (big_kv, _, _) = synapse
+        .seed_side_cache_with(
+            eng,
+            SeedMode::Adaptive { target_mass: 0.999, min_k: 4 },
+        )
+        .unwrap();
+    assert!(small_kv.len() >= 4);
+    assert!(small_kv.len() <= big_kv.len());
+    assert!(big_kv.len() <= k_full);
+}
+
+#[test]
+fn decode_tiers_agree_across_capacities() {
+    // The capacity-tier dispatcher (§Perf opt A) must be numerically
+    // transparent: decoding the same state through the small tier and
+    // through the full-capacity program gives the same result.
+    let tk = Tokenizer::new();
+    let eng = &*ENGINE;
+    let mut kv = eng.new_main_cache();
+    eng.prefill(&tk.encode("user: hi\nriver: ", true), &mut kv, Lane::River)
+        .unwrap();
+    // len ≈ 18 → dispatcher picks the 96 or 128 tier
+    let small = {
+        let mut c = kv.clone();
+        eng.decode(65, c.len() as i32, &mut c, Lane::River).unwrap()
+    };
+    // force the full-capacity program by filling a fresh full-cap cache
+    // with identical rows via the raw path
+    let full = {
+        let mut c = kv.clone();
+        // pad the cache so that needed > all smaller tiers: decode once at
+        // a fabricated long length is not equivalent; instead call the
+        // largest tier directly through decode_at_tier.
+        eng.decode_at_tier(65, c.len() as i32, &mut c, eng.caps().main_ctx, Lane::River)
+            .unwrap()
+    };
+    for (a, b) in small.logits.iter().zip(&full.logits) {
+        assert!((a - b).abs() < 1e-4, "tier mismatch: {a} vs {b}");
+    }
+    for (a, b) in small.hidden.iter().zip(&full.hidden) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn failure_injection_bad_inputs_error_cleanly() {
+    // Wrong shapes / empty inputs must produce errors, never poison the
+    // device thread: a good op afterwards still succeeds.
+    let eng = &*ENGINE;
+    let dev = eng.device().clone();
+    let tk = Tokenizer::new();
+
+    // empty prompt
+    assert!(eng
+        .prefill(&[], &mut eng.new_main_cache(), Lane::River)
+        .is_err());
+    // oversized prompt
+    let long = vec![65i32; eng.caps().prefill_len + 1];
+    assert!(eng
+        .prefill(&long, &mut eng.new_main_cache(), Lane::River)
+        .is_err());
+    // wrong-shaped raw op through the device layer
+    let id = dev.program_id("tiny_inject_encode_t16").unwrap();
+    let bad = dev.call(
+        id,
+        vec![warp_cortex::runtime::HostTensor::scalar_i32(1)],
+        Lane::Stream,
+    );
+    assert!(bad.is_err());
+    // empty thought
+    assert!(eng.inject_encode(&[], 0, Lane::Stream).is_err());
+    // device still healthy afterwards
+    let mut kv = eng.new_main_cache();
+    assert!(eng
+        .prefill(&tk.encode("ok", true), &mut kv, Lane::River)
+        .is_ok());
+}
+
+#[test]
+fn scheduler_backpressure_rejects_over_capacity() {
+    use std::time::Duration;
+    use warp_cortex::cortex::{Batcher, SideContext, SideTask, StreamScheduler};
+    use warp_cortex::cortex::AgentRole;
+    let tracker = MemoryTracker::new();
+    let synapse = Synapse::new(tracker.clone());
+    // deliberately EMPTY synapse: tasks fail fast inside workers, but the
+    // queue-capacity check happens before any of that.
+    let ctx = std::sync::Arc::new(SideContext {
+        engine: ENGINE.clone(),
+        synapse,
+        batcher: Batcher::new(ENGINE.clone(), Duration::from_micros(100)),
+        prism: Prism::new(ENGINE.clone(), tracker),
+        seed_mode: warp_cortex::cortex::SeedMode::Full,
+        gen_budget: 4,
+        sampler: warp_cortex::text::SamplerConfig::greedy(),
+    });
+    let sched = StreamScheduler::new(ctx, 1, 2);
+    let mk = |i| SideTask {
+        id: i,
+        role: AgentRole::Task,
+        payload: format!("task {i}"),
+        main_pos: 0,
+        spawned_at: std::time::Instant::now(),
+    };
+    let mut accepted = 0;
+    let mut rejected = 0;
+    for i in 0..50 {
+        if sched.submit(mk(i)) {
+            accepted += 1;
+        } else {
+            rejected += 1;
+        }
+    }
+    assert!(rejected > 0, "queue never filled");
+    assert!(accepted >= 2);
+    // all accepted tasks eventually produce (failed) outcomes
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let mut done = 0;
+    while done < accepted && std::time::Instant::now() < deadline {
+        done += sched.poll_results().len();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(done, accepted, "tasks lost in the scheduler");
+}
+
+#[test]
+fn memory_conservation_under_agent_churn() {
+    use warp_cortex::util::proptest::check;
+    let tracker = MemoryTracker::new();
+    let prism = Prism::new(ENGINE.clone(), tracker.clone());
+    let base = tracker.total_live();
+    check("register/drop conserves bytes", 30, |g| {
+        let n = g.usize_in(1..6);
+        let mut tickets = Vec::new();
+        for _ in 0..n {
+            let kind = if g.bool() { AgentKind::Main } else { AgentKind::Side };
+            tickets.push(prism.register(kind).unwrap());
+        }
+        let live = tracker.total_live();
+        let expected: u64 = tickets.iter().map(|t| t.kv.bytes()).sum();
+        warp_cortex::prop_assert!(
+            live == base + expected as i64,
+            "live {live} != base {base} + {expected}"
+        );
+        drop(tickets);
+        warp_cortex::prop_assert!(
+            tracker.total_live() == base,
+            "leak after drop: {} != {base}",
+            tracker.total_live()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn standard_architecture_scales_linearly_in_weights() {
+    let tracker = MemoryTracker::new();
+    let mut std_arch = StandardArchitecture::new(ENGINE.clone(), tracker.clone());
+    std_arch.spawn().unwrap();
+    let w1 = tracker.live_bytes(MemKind::Weights);
+    std_arch.spawn().unwrap();
+    std_arch.spawn().unwrap();
+    assert_eq!(tracker.live_bytes(MemKind::Weights), 3 * w1);
+    // functional equivalence: a baseline agent can still run prompts
+    let tk = Tokenizer::new();
+    let hidden = std_arch.prefill(0, &tk.encode("hello", true)).unwrap();
+    assert_eq!(hidden.len(), ENGINE.config().d_model);
+}

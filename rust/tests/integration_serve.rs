@@ -1,0 +1,120 @@
+//! Integration: the HTTP serving layer end-to-end over a real socket.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use once_cell::sync::Lazy;
+
+use warp_cortex::cortex::{CortexConfig, WarpCortex};
+use warp_cortex::model::Engine;
+use warp_cortex::runtime::{DeviceHandle, DeviceOptions};
+use warp_cortex::serve::{serve, ServerConfig};
+use warp_cortex::util::Json;
+
+static SERVER: Lazy<std::net::SocketAddr> = Lazy::new(|| {
+    let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&["tiny"]))
+        .expect("device (run `make artifacts` first)");
+    let engine = Engine::new(device, "tiny").expect("engine");
+    let cortex = Arc::new(
+        WarpCortex::new(
+            engine,
+            CortexConfig {
+                model: "tiny".into(),
+                max_side_agents: 2,
+                side_gen_budget: 6,
+                ..CortexConfig::default()
+            },
+        )
+        .expect("cortex"),
+    );
+    let handle = serve(
+        cortex,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            max_tokens_cap: 64,
+        },
+    )
+    .expect("server");
+    let addr = handle.addr;
+    std::mem::forget(handle); // keep serving for the whole test binary
+    addr
+});
+
+fn request(method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let mut stream = TcpStream::connect(*SERVER).unwrap();
+    let body = body.unwrap_or("");
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).unwrap();
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let json_body = response
+        .split("\r\n\r\n")
+        .nth(1)
+        .map(|b| Json::parse(b).unwrap_or(Json::Null))
+        .unwrap_or(Json::Null);
+    (status, json_body)
+}
+
+#[test]
+fn health_endpoint() {
+    let (status, body) = request("GET", "/health", None);
+    assert_eq!(status, 200);
+    assert_eq!(body.get("ok").and_then(|v| v.as_bool()), Some(true));
+}
+
+#[test]
+fn generate_endpoint_roundtrip() {
+    let (status, body) = request(
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "user: tell me about the kv cache.\nriver: ", "max_tokens": 12}"#),
+    );
+    assert_eq!(status, 200, "{body}");
+    let text = body.get("text").and_then(|v| v.as_str()).unwrap();
+    assert!(!text.is_empty());
+    let tokens = body.get("tokens").and_then(|v| v.as_usize()).unwrap();
+    assert!(tokens > 0 && tokens <= 12);
+    assert!(body.get("tokens_per_sec").and_then(|v| v.as_f64()).unwrap() > 0.0);
+}
+
+#[test]
+fn generate_rejects_bad_requests() {
+    let (status, body) = request("POST", "/generate", Some("{not json"));
+    assert_eq!(status, 400);
+    assert!(body.get("error").is_some());
+
+    let (status, _) = request("POST", "/generate", Some(r#"{"nope": 1}"#));
+    assert_eq!(status, 400);
+}
+
+#[test]
+fn stats_endpoint_reports_categories() {
+    // generate once so stats are non-trivial
+    let _ = request(
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "hello there", "max_tokens": 4}"#),
+    );
+    let (status, body) = request("GET", "/stats", None);
+    assert_eq!(status, 200);
+    let mem = body.get("memory").unwrap();
+    assert!(mem.get("weights").and_then(|v| v.as_i64()).unwrap() > 0);
+    assert!(body.get("device").unwrap().get("ops").and_then(|v| v.as_i64()).unwrap() > 0);
+    assert!(body.get("device").unwrap().get("river_ops").and_then(|v| v.as_i64()).unwrap() > 0);
+}
+
+#[test]
+fn unknown_path_404() {
+    let (status, _) = request("GET", "/nope", None);
+    assert_eq!(status, 404);
+}
