@@ -10,7 +10,7 @@
 //! ```
 
 use warp_cortex::cortex::memory::{fmt_bytes, MemoryModel, MemoryTracker};
-use warp_cortex::cortex::{AgentKind, Prism, Synapse};
+use warp_cortex::cortex::{AgentKind, Prism, SeedMode, Synapse};
 use warp_cortex::model::Engine;
 use warp_cortex::runtime::{DeviceHandle, DeviceOptions, Lane, Manifest};
 use warp_cortex::text::Tokenizer;
@@ -49,9 +49,10 @@ fn main() -> anyhow::Result<()> {
     for &target in &checkpoints {
         while side_agents.len() + 1 < target {
             let mut ticket = prism.register(AgentKind::Side)?;
-            // seed from the synapse: the agent is *live*, not just allocated
-            let (kv, _, _) = synapse.seed_side_cache(&engine)?;
-            ticket.kv = kv;
+            // seed the rented cache in place from the synapse: the agent is
+            // *live*, not just allocated, and its landmark rows land in the
+            // shared block pool
+            synapse.seed_into(&mut ticket.kv, SeedMode::Full)?;
             side_agents.push(ticket);
         }
         let total = tracker.total_live();
@@ -82,6 +83,14 @@ fn main() -> anyhow::Result<()> {
         "\npopulation: {} agents, weights resident once: {}",
         prism.population().total(),
         fmt_bytes(engine.device().weight_bytes(&model) as f64)
+    );
+    let p = prism.pool().stats();
+    println!(
+        "kv pool: {} blocks live (high-water {}), resident {} vs {} eager-equivalent",
+        p.blocks_live,
+        p.blocks_high_water,
+        fmt_bytes(p.resident_bytes() as f64),
+        fmt_bytes(prism.registered_kv_bytes() as f64)
     );
 
     // ── Projection to the paper's testbed ──

@@ -167,6 +167,25 @@ fn main() -> anyhow::Result<()> {
         1_000_000 / paper.max_agents_memory().max(1)
     );
 
+    // The measurement loop above churned real pool-backed caches (clones
+    // rent and release blocks every iteration): show that the shared pool
+    // absorbed the churn instead of growing.
+    let p = engine.pool().stats();
+    println!(
+        "\nkv pool after measurement churn: high-water {} blocks \
+         ({}), {} reuses / {} rents",
+        p.blocks_high_water,
+        warp_cortex::cortex::memory::fmt_bytes(p.high_water_bytes() as f64),
+        p.reuses,
+        p.rents
+    );
+    assert!(
+        p.reuses > 0,
+        "bench churn should exercise block reuse (rents {}, reuses {})",
+        p.rents,
+        p.reuses
+    );
+
     // Shape checks: compute binds under active duty; the claim's memory
     // half holds; limits are monotone in duty.
     assert_eq!(paper.limit().1, Bottleneck::Compute);

@@ -12,7 +12,7 @@
 //! and (c) the Standard-Architecture comparison the paper's Table 1 implies.
 
 use warp_cortex::cortex::memory::{fmt_bytes, MemoryModel, MemoryTracker, GIB};
-use warp_cortex::cortex::{AgentKind, Prism, StandardArchitecture, Synapse};
+use warp_cortex::cortex::{AgentKind, Prism, SeedMode, StandardArchitecture, Synapse};
 use warp_cortex::model::Engine;
 use warp_cortex::runtime::{DeviceHandle, DeviceOptions, Lane, Manifest};
 use warp_cortex::text::Tokenizer;
@@ -42,10 +42,13 @@ fn main() -> anyhow::Result<()> {
     synapse.push(s);
 
     println!("═══ Table 2: Measured VRAM vs Agent Count ═══\n");
-    println!("measured on `{model}` (f32, all buffers byte-tracked):");
     println!(
-        "{:>8} {:>14} {:>14} {:>14}",
-        "agents", "total", "delta", "per-agent"
+        "measured on `{model}` (f32; resident-block bytes — the tracker \
+         charges rented pool blocks, not configured capacity):"
+    );
+    println!(
+        "{:>8} {:>14} {:>14} {:>14} {:>14}",
+        "agents", "total", "delta", "per-agent", "eager-equiv"
     );
     let mut side = Vec::new();
     let baseline = tracker.total_live();
@@ -53,15 +56,16 @@ fn main() -> anyhow::Result<()> {
     for &target in &CHECKPOINTS {
         while side.len() + 1 < target {
             let mut t = prism.register(AgentKind::Side)?;
-            let (kv, _, _) = synapse.seed_side_cache(&engine)?;
-            t.kv = kv;
+            // Seed the rented cache in place: landmark rows land directly
+            // in the shared pool's blocks.
+            synapse.seed_into(&mut t.kv, SeedMode::Full)?;
             side.push(t);
         }
         let total = tracker.total_live();
         measured.push(total);
         let delta = total - baseline;
         println!(
-            "{:>8} {:>14} {:>14} {:>14}",
+            "{:>8} {:>14} {:>14} {:>14} {:>14}",
             target,
             fmt_bytes(total as f64),
             if target > 1 { fmt_bytes(delta as f64) } else { "—".into() },
@@ -70,6 +74,42 @@ fn main() -> anyhow::Result<()> {
             } else {
                 "—".into()
             },
+            fmt_bytes(prism.registered_kv_bytes() as f64),
+        );
+    }
+
+    // Pool gauges: the resident-vs-reserved story in block units.
+    {
+        let p = prism.pool().stats();
+        println!(
+            "\npool: {} blocks live ({} free, high-water {}), block = {} rows / {}, \
+             resident {}, fragmentation {:.1}%",
+            p.blocks_live,
+            p.blocks_free,
+            p.blocks_high_water,
+            p.block_tokens,
+            fmt_bytes(p.block_bytes as f64),
+            fmt_bytes(p.resident_bytes() as f64),
+            p.fragmentation() * 100.0
+        );
+        // Acceptance: with short side contexts, per-agent resident bytes are
+        // proportional to actual fill, not the configured side capacity.
+        let seeded_rows = side.first().map(|t| t.kv.len()).unwrap_or(0);
+        let expect_blocks = prism.pool().blocks_for(seeded_rows);
+        for t in &side {
+            assert_eq!(
+                t.kv.bytes(),
+                expect_blocks as u64 * prism.pool().block_bytes(),
+                "side agent resident bytes must equal ceil(fill/bt) blocks"
+            );
+            assert!(
+                t.kv.bytes() <= t.kv.used_bytes() + prism.pool().block_bytes(),
+                "resident exceeds fill by more than one block"
+            );
+        }
+        assert!(
+            (tracker.total_live() as u64) < prism.registered_kv_bytes(),
+            "resident tracking should undercut eager reservation"
         );
     }
 

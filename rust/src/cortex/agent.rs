@@ -106,12 +106,11 @@ fn run_side_inner(ctx: &SideContext, task: &SideTask) -> Result<SideRun> {
     let tk = Tokenizer::new();
 
     // 1. Register with the Prism (just-in-time existence: the ticket's drop
-    //    at function exit releases the agent's bytes) and seed the cache
-    //    from the synapse landmarks (witness reconstruction).
+    //    at function exit returns the agent's blocks to the shared pool)
+    //    and seed its rented cache in place from the synapse landmarks
+    //    (witness reconstruction).
     let mut ticket = ctx.prism.register(AgentKind::Side)?;
-    let (seeded, mut pos, version) =
-        ctx.synapse.seed_side_cache_with(&ctx.engine, ctx.seed_mode)?;
-    ticket.kv = seeded;
+    let (mut pos, version) = ctx.synapse.seed_into(&mut ticket.kv, ctx.seed_mode)?;
     let kv = &mut ticket.kv;
 
     // 2. Absorb the task prompt at continuation positions.  The prompt

@@ -38,10 +38,13 @@ impl StandardArchitecture {
         }
     }
 
-    /// Spawn one agent: full-context KV allocated, weight copy accounted.
+    /// Spawn one agent: full-context KV charged at its eager full-capacity
+    /// reservation (the standard architecture pre-allocates; the pool-backed
+    /// resident figure would understate the baseline), weight copy
+    /// accounted.
     pub fn spawn(&mut self) -> Result<usize> {
         let kv = self.engine.new_main_cache();
-        let kv_mem = self.tracker.alloc(MemKind::MainKv, kv.bytes());
+        let kv_mem = self.tracker.alloc(MemKind::MainKv, kv.capacity_bytes());
         let weight_bytes = self.engine.device().weight_bytes(&self.engine.config().name);
         let weight_mem = self.tracker.alloc(MemKind::Weights, weight_bytes);
         self.agents.push(BaselineAgent {

@@ -91,23 +91,31 @@ impl Batcher {
     pub fn decode(&self, token: i32, pos: i32, kv: &mut KvCache) -> Result<StepOut> {
         self.requests.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
+        // Contiguous full-capacity upload gathered from the pool blocks
+        // (zero-padded past `len`; masked by the compiled program).
+        let (k, v) = kv.prefix_upload(kv.capacity());
         let req = Request {
             token,
             pos,
-            k: kv.k_raw().to_vec(),
-            v: kv.v_raw().to_vec(),
+            k,
+            v,
             cache_len: kv.len() as i32,
             reply: reply_tx,
         };
-        let tx = self.tx.lock().unwrap();
-        tx.as_ref()
-            .ok_or_else(|| anyhow!("batcher shut down"))?
-            .send(req)
-            .map_err(|_| anyhow!("batcher thread gone"))?;
+        // Clone the sender under the mutex, send outside it: shutdown can
+        // take-and-drop the channel without ever racing a held guard.
+        let tx = self
+            .tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .cloned()
+            .ok_or_else(|| anyhow!("batcher shut down"))?;
+        tx.send(req).map_err(|_| anyhow!("batcher thread gone"))?;
         drop(tx);
         let (logits, hidden, k_new, v_new) = reply_rx
             .recv()
-            .map_err(|_| anyhow!("batcher dropped reply"))??;
+            .map_err(|_| anyhow!("batcher shut down while a decode was in flight"))??;
         kv.append_row(&k_new, &v_new)?;
         Ok(StepOut { logits, hidden })
     }
@@ -122,8 +130,17 @@ impl Batcher {
     }
 
     /// Stop the batcher thread (pending requests error out).
+    ///
+    /// Teardown order matters for orchestrator shutdown: the sender is
+    /// *taken out under the mutex and dropped* before joining, so (a) any
+    /// `decode` caller that races the teardown observes the empty slot and
+    /// gets an immediate "batcher shut down" error, and (b) the batcher
+    /// thread sees the channel disconnect, drains already-queued requests
+    /// (replying to each), and exits — no caller is left hanging on a dead
+    /// channel.  Idempotent: later calls find both slots empty.
     pub fn shutdown(&self) {
-        *self.tx.lock().unwrap() = None;
+        let tx = self.tx.lock().unwrap().take();
+        drop(tx);
         if let Some(h) = self.handle.lock().unwrap().take() {
             let _ = h.join();
         }

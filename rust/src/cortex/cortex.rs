@@ -15,7 +15,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::agent::{SideContext, SideOutcome, SideTask};
 use super::batcher::Batcher;
@@ -27,7 +27,7 @@ use super::router::{Router, RouterConfig, Trigger};
 use super::scheduler::{SchedulerStats, StreamScheduler};
 use super::synapse::{Synapse, SynapseStats};
 use crate::metrics::{Histogram, Throughput};
-use crate::model::Engine;
+use crate::model::{Engine, KvPool, KvPoolConfig, PoolStats};
 use crate::runtime::Lane;
 use crate::text::{Sampler, SamplerConfig, Tokenizer, EOS_ID};
 
@@ -59,6 +59,13 @@ pub struct CortexConfig {
     pub router: RouterConfig,
     /// Side-cache seeding (Full, or the §6.2 Coarse/Adaptive extensions).
     pub seed_mode: crate::cortex::synapse::SeedMode,
+    /// Shared KV block pool knobs.  The orchestrator adopts the engine's
+    /// pool (one pool per engine) and applies the runtime limits here:
+    /// capacity ceiling (`max_blocks`, 0 = unbounded) and reclaim policy
+    /// (`retain_free_blocks`).  `block_tokens` must match the engine pool's
+    /// paging granularity (fixed at engine construction via
+    /// `Engine::new_with_pool`); a mismatch is rejected at assembly.
+    pub kv_pool: KvPoolConfig,
 }
 
 impl Default for CortexConfig {
@@ -80,6 +87,7 @@ impl Default for CortexConfig {
             batch_linger: Duration::from_micros(500),
             router: RouterConfig::default(),
             seed_mode: crate::cortex::synapse::SeedMode::Full,
+            kv_pool: KvPoolConfig::default(),
         }
     }
 }
@@ -138,12 +146,16 @@ pub struct EpisodeReport {
     pub synapse: SynapseStats,
     pub scheduler: SchedulerStats,
     pub memory: MemSnapshot,
+    /// Block-pool gauges at episode end (resident vs high-water context).
+    pub pool: PoolStats,
 }
 
 /// The assembled system.
 pub struct WarpCortex {
     pub cfg: CortexConfig,
     pub engine: Arc<Engine>,
+    /// The shared KV block pool every agent cache rents from.
+    pub pool: Arc<KvPool>,
     pub prism: Arc<Prism>,
     pub synapse: Arc<Synapse>,
     pub gate: Arc<Gate>,
@@ -166,10 +178,35 @@ impl Drop for WarpCortex {
 }
 
 impl WarpCortex {
-    /// Assemble the system on an existing engine.
+    /// Assemble the system on an existing engine.  The orchestrator adopts
+    /// the engine's block pool — there is exactly ONE pool per engine, so
+    /// the `cfg.kv_pool` limits and the `/stats` gauges cover every cache,
+    /// including those created through `Engine::new_side_cache` by benches
+    /// or library callers.  The runtime limits (`max_blocks`,
+    /// `retain_free_blocks`) are applied here; the paging granularity
+    /// (`block_tokens`) is fixed when the engine is built — use
+    /// [`crate::model::Engine::new_with_pool`] to change it.
     pub fn new(engine: Arc<Engine>, cfg: CortexConfig) -> Result<WarpCortex> {
         let tracker = MemoryTracker::new();
-        let prism = Prism::new(engine.clone(), tracker.clone());
+        let pool: Arc<KvPool> = engine.pool().clone();
+        // A default-valued block_tokens means "whatever the engine uses";
+        // only an *explicit* different granularity is an error, because it
+        // can't be honored on an already-built engine.
+        let default_bt = KvPoolConfig::default().block_tokens;
+        if cfg.kv_pool.block_tokens != pool.block_tokens()
+            && cfg.kv_pool.block_tokens != default_bt
+        {
+            bail!(
+                "CortexConfig::kv_pool.block_tokens ({}) differs from the engine \
+                 pool's ({}); paging granularity is fixed at engine construction — \
+                 pass the same KvPoolConfig to Engine::new_with_pool, or leave \
+                 block_tokens at its default to adopt the engine's",
+                cfg.kv_pool.block_tokens,
+                pool.block_tokens()
+            );
+        }
+        pool.set_limits(cfg.kv_pool.max_blocks, cfg.kv_pool.retain_free_blocks);
+        let prism = Prism::with_pool(engine.clone(), tracker.clone(), pool.clone());
         let synapse = Synapse::new(tracker.clone());
         let gate = Arc::new(Gate::new(cfg.gate_theta.unwrap_or(engine.gate_theta)));
         let injector = Arc::new(Injector::new(cfg.inject_reserve_rows));
@@ -187,6 +224,7 @@ impl WarpCortex {
         Ok(WarpCortex {
             cfg,
             engine,
+            pool,
             prism,
             synapse,
             gate,
@@ -342,6 +380,7 @@ impl WarpCortex {
             synapse: self.synapse.stats(),
             scheduler: self.scheduler.stats(),
             memory: self.tracker.snapshot(),
+            pool: self.pool.stats(),
         })
     }
 

@@ -4,9 +4,15 @@
 //! [`MemoryTracker`] counts every byte of model state the coordinator
 //! actually allocates (weights resident on the device, per-agent KV caches,
 //! the shared synapse buffer), categorised so the benches can print the
-//! paper's component rows.  [`MemoryModel`] projects the same arithmetic
-//! onto arbitrary configs — in particular Qwen2.5-0.5B on a 24 GB RTX 4090,
-//! the paper's testbed (DESIGN.md §4 records the substitution).
+//! paper's component rows.  Since the paged-KV refactor, the per-agent KV
+//! charge is *resident-block bytes*: each cache carries a [`MemGuard`] that
+//! the cache resizes as it rents and releases pool blocks, so `MainKv` /
+//! `SideKv` track actual fill rather than configured capacity (the pool's
+//! own gauges — blocks live, high-water, fragmentation — live on
+//! [`crate::model::PoolStats`]).  [`MemoryModel`] projects the same
+//! arithmetic onto arbitrary configs — in particular Qwen2.5-0.5B on a
+//! 24 GB RTX 4090, the paper's testbed (DESIGN.md §4 records the
+//! substitution).
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -238,6 +244,24 @@ impl MemoryModel {
         self.kv_row_bytes * (self.synapse_k + self.side_gen) as u64 + self.per_agent_overhead
     }
 
+    /// Resident context bytes for a cache holding `fill_rows` rows under
+    /// demand-paged allocation with `block_tokens`-row blocks (the KvPool):
+    /// fill rounded up to whole blocks — what the tracker now measures,
+    /// versus the eager full-capacity reservation of the seed design.
+    #[allow(clippy::manual_div_ceil)] // spelled out to keep the MSRV permissive
+    pub fn paged_context_bytes(&self, fill_rows: usize, block_tokens: usize) -> u64 {
+        let bt = block_tokens.max(1);
+        let blocks = (fill_rows + bt - 1) / bt;
+        self.kv_row_bytes * (blocks * bt) as u64
+    }
+
+    /// Warp side agent under paged allocation: resident landmark+generation
+    /// rows (block-rounded) + overhead.
+    pub fn warp_agent_resident_bytes(&self, block_tokens: usize) -> u64 {
+        self.paged_context_bytes(self.synapse_k + self.side_gen, block_tokens)
+            + self.per_agent_overhead
+    }
+
     /// Synapse-only context bytes (the paper's "0.01 GB" row).
     pub fn synapse_bytes(&self) -> u64 {
         self.kv_row_bytes * self.synapse_k as u64
@@ -363,6 +387,20 @@ mod tests {
         assert!(delta < 2 * GIB, "delta {}", fmt_bytes(delta as f64));
         // monotone linear scaling
         assert!(m.warp_total_bytes(50) > m.warp_total_bytes(10));
+    }
+
+    #[test]
+    fn paged_resident_tracks_fill_not_capacity() {
+        let m = MemoryModel::qwen05b_on_4090(&qwen_cfg());
+        // 5 rows in 16-row blocks → 1 block resident
+        assert_eq!(m.paged_context_bytes(5, 16), m.kv_row_bytes * 16);
+        assert_eq!(m.paged_context_bytes(0, 16), 0);
+        assert_eq!(m.paged_context_bytes(17, 16), m.kv_row_bytes * 32);
+        // a short-context agent is far cheaper resident than its configured
+        // full context — the point of demand paging
+        assert!(m.paged_context_bytes(96, 16) * 100 < m.full_ctx_bytes());
+        // and the paged side-agent figure never exceeds the eager one
+        assert!(m.warp_agent_resident_bytes(16) <= m.warp_agent_bytes() + m.kv_row_bytes * 16);
     }
 
     #[test]

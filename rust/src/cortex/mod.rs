@@ -2,16 +2,23 @@
 //!
 //! | module      | paper § | mechanism |
 //! |-------------|---------|-----------|
-//! | `prism`     | 3.2     | Singleton Weight Sharing + agent registry |
-//! | `synapse`   | 3.3     | Topological Synapse (shared landmark buffer) |
+//! | `prism`     | 3.2     | Singleton Weight Sharing + agent registry; rents pool-backed caches and wires resident-block accounting |
+//! | `synapse`   | 3.3     | Topological Synapse (shared landmark buffer; seeds side caches in place via `seed_into`) |
 //! | `router`    | 3.4     | Cortex Router (streaming trigger extraction) |
 //! | `gate`      | 3.5     | Validation Gate (cosine θ-test) |
 //! | `inject`    | 3.6     | Referential Injection (virtual-position KV) |
 //! | `scheduler` | 3.1     | River & Stream worker pool (+ device lanes) |
 //! | `batcher`   | 4       | dynamic batching of side-agent decode steps |
-//! | `memory`    | 5       | Table-1/Table-2 byte accounting + projection |
+//! | `memory`    | 5       | Table-1/Table-2 byte accounting (resident-block bytes) + projection |
 //! | `baseline`  | 5       | the Standard Architecture comparison column |
-//! | `cortex`    | Fig. 1  | the assembled orchestrator |
+//! | `cortex`    | Fig. 1  | the assembled orchestrator; governs the shared [`crate::model::KvPool`] and its knobs |
+//!
+//! Context memory is demand-paged: there is exactly one
+//! [`crate::model::KvPool`] per engine, the orchestrator adopts it and
+//! applies the capacity/reclaim limits from [`CortexConfig::kv_pool`]
+//! (paging granularity is fixed at engine construction), every agent cache
+//! is a block-table view into it, and finished side agents return their
+//! blocks for immediate reuse.
 
 pub mod agent;
 pub mod batcher;

@@ -2,9 +2,11 @@
 //!
 //! Weights live in device buffers uploaded exactly once (see
 //! `runtime::device`); every agent holds an `Arc<Engine>` — a pointer, not a
-//! copy.  The Prism tracks the live agent population and charges each
-//! agent's KV bytes to the [`MemoryTracker`], which is what the Table-2
-//! bench measures.
+//! copy.  The Prism tracks the live agent population, hands each agent a
+//! pool-backed cache from the shared [`KvPool`], and wires the cache to the
+//! [`MemoryTracker`] so the Table-2 bench measures *resident-block* bytes:
+//! the charge grows as the cache fills and shrinks as blocks are released —
+//! not the configured capacity the seed used to reserve eagerly.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -13,8 +15,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::memory::{MemGuard, MemKind, MemoryTracker};
-use crate::model::{Engine, KvCache};
+use super::memory::{MemKind, MemoryTracker};
+use crate::model::{Engine, KvCache, KvPool};
 
 /// Kind of registered agent.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,16 +33,18 @@ pub struct AgentId(pub u64);
 struct AgentMeta {
     kind: AgentKind,
     registered: Instant,
-    kv_bytes: u64,
+    /// Bytes an eager full-capacity allocation would have reserved (the
+    /// pre-pool figure, kept for capacity-vs-resident comparisons).
+    capacity_bytes: u64,
 }
 
-/// A registered agent's handle: carries its cache and its memory charge.
-/// Dropping the ticket releases both registry entry and accounted bytes.
+/// A registered agent's handle: carries its pool-backed cache (which in
+/// turn carries its memory charge).  Dropping the ticket releases the
+/// registry entry, the cache's blocks, and the accounted bytes.
 pub struct AgentTicket {
     pub id: AgentId,
     pub kind: AgentKind,
     pub kv: KvCache,
-    _mem: MemGuard,
     prism: Arc<PrismInner>,
 }
 
@@ -83,19 +87,33 @@ impl Population {
 pub struct Prism {
     engine: Arc<Engine>,
     tracker: Arc<MemoryTracker>,
+    pool: Arc<KvPool>,
     inner: Arc<PrismInner>,
     /// Keeps the weights' memory charge alive for the Prism's lifetime.
-    _weights_mem: MemGuard,
+    _weights_mem: super::memory::MemGuard,
 }
 
 impl Prism {
-    /// Wrap an engine; charges the (singleton) weight bytes once.
+    /// Wrap an engine; agents rent from the engine's default block pool.
     pub fn new(engine: Arc<Engine>, tracker: Arc<MemoryTracker>) -> Arc<Prism> {
+        let pool = engine.pool().clone();
+        Prism::with_pool(engine, tracker, pool)
+    }
+
+    /// Wrap an engine with an explicit pool (the orchestrator's, so its
+    /// block-size/capacity/reclaim knobs govern every agent cache).
+    /// Charges the (singleton) weight bytes once.
+    pub fn with_pool(
+        engine: Arc<Engine>,
+        tracker: Arc<MemoryTracker>,
+        pool: Arc<KvPool>,
+    ) -> Arc<Prism> {
         let weight_bytes = engine.device().weight_bytes(&engine.config().name);
         let weights_mem = tracker.alloc(MemKind::Weights, weight_bytes);
         Arc::new(Prism {
             engine,
             tracker,
+            pool,
             inner: Arc::new(PrismInner {
                 agents: Mutex::new(HashMap::new()),
                 next_id: AtomicU64::new(1),
@@ -112,32 +130,35 @@ impl Prism {
         &self.tracker
     }
 
-    /// Register a new agent: allocates its cache and charges its bytes.
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    /// Register a new agent: rents a pool-backed cache and attaches a live
+    /// memory charge that tracks its resident blocks.
     pub fn register(&self, kind: AgentKind) -> Result<AgentTicket> {
-        let kv = match kind {
-            AgentKind::Main => self.engine.new_main_cache(),
-            AgentKind::Side => self.engine.new_side_cache(),
+        let (capacity, mem_kind) = match kind {
+            AgentKind::Main => (self.engine.caps().main_ctx, MemKind::MainKv),
+            AgentKind::Side => (self.engine.caps().side_ctx, MemKind::SideKv),
         };
-        let mem_kind = match kind {
-            AgentKind::Main => MemKind::MainKv,
-            AgentKind::Side => MemKind::SideKv,
-        };
-        let bytes = kv.bytes();
-        let guard = self.tracker.alloc(mem_kind, bytes);
+        let mut kv = self.pool.new_cache(capacity);
+        // Starts at 0 resident bytes; the cache resizes the guard on every
+        // block rent/release.
+        let guard = self.tracker.alloc(mem_kind, kv.bytes());
+        kv.track(guard);
         let id = AgentId(self.inner.next_id.fetch_add(1, Ordering::Relaxed));
         self.inner.agents.lock().unwrap().insert(
             id,
             AgentMeta {
                 kind,
                 registered: Instant::now(),
-                kv_bytes: bytes,
+                capacity_bytes: kv.capacity_bytes(),
             },
         );
         Ok(AgentTicket {
             id,
             kind,
             kv,
-            _mem: guard,
             prism: self.inner.clone(),
         })
     }
@@ -154,14 +175,15 @@ impl Prism {
         p
     }
 
-    /// Total KV bytes currently registered (cross-check for the tracker).
+    /// Total KV bytes the registered population would reserve under eager
+    /// full-capacity allocation (contrast with the pool's resident bytes).
     pub fn registered_kv_bytes(&self) -> u64 {
         self.inner
             .agents
             .lock()
             .unwrap()
             .values()
-            .map(|m| m.kv_bytes)
+            .map(|m| m.capacity_bytes)
             .sum()
     }
 

@@ -193,6 +193,16 @@ impl Synapse {
         engine: &Engine,
         mode: SeedMode,
     ) -> Result<(KvCache, i32, u64)> {
+        let mut kv = engine.new_side_cache();
+        let (pos, version) = self.seed_into(&mut kv, mode)?;
+        Ok((kv, pos, version))
+    }
+
+    /// Seed an *existing* cache in place (the pool-friendly path: side
+    /// agents reuse the cache their prism ticket already rents, so landmark
+    /// rows land in the shared block pool without an intermediate buffer).
+    /// Clears the cache first.  Returns `(continuation_pos, version)`.
+    pub fn seed_into(&self, kv: &mut KvCache, mode: SeedMode) -> Result<(i32, u64)> {
         let Some(snap) = self.read() else {
             bail!("synapse is empty (no landmarks pushed yet)");
         };
@@ -205,9 +215,10 @@ impl Synapse {
         };
         let lm = lm.as_ref().unwrap_or(&snap.landmarks);
         let k = lm.indices.len();
-        let mut kv = engine.new_side_cache();
-        kv.append_rows(k, &lm.lm_k, &lm.lm_v)?;
-        Ok((kv, lm.source_len as i32, snap.version))
+        // replace_rows rents before releasing: pool-exhaustion backpressure
+        // leaves the caller's previous contents intact.
+        kv.replace_rows(k, &lm.lm_k, &lm.lm_v)?;
+        Ok((lm.source_len as i32, snap.version))
     }
 }
 

@@ -11,7 +11,9 @@
 //! * **Layer 2** (`python/compile/model.py`): JAX transformer, AOT-lowered
 //!   to HLO-text artifacts at build time.
 //! * **Layer 3** (this crate): the serving coordinator — singleton weight
-//!   sharing ([`cortex::prism`]), the Topological Synapse buffer
+//!   sharing ([`cortex::prism`]), the shared demand-paged KV block pool
+//!   ([`model::pool`]: agent caches are block tables, resident bytes track
+//!   fill rather than configured capacity), the Topological Synapse buffer
 //!   ([`cortex::synapse`]), the Cortex Router ([`cortex::router`]), the
 //!   Validation Gate ([`cortex::gate`]), Referential Injection
 //!   ([`cortex::inject`]) and the River & Stream scheduler

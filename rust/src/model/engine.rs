@@ -10,6 +10,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::kv::KvCache;
+use super::pool::{KvPool, KvPoolConfig};
 use crate::runtime::device::ProgramId;
 use crate::runtime::{
     Capacities, DeviceHandle, HostTensor, Lane, ModelConfig,
@@ -81,11 +82,18 @@ struct ProgramIds {
 }
 
 /// Shared, stateless inference engine for one model config.
+///
+/// ("Stateless" still holds for per-agent state; the engine does carry a
+/// default [`KvPool`] so every cache it hands out is demand-paged.  The
+/// orchestrator typically supplies its own pool via
+/// [`Engine::new_with_pool`]-configured construction or
+/// [`crate::cortex::Prism::with_pool`].)
 pub struct Engine {
     device: DeviceHandle,
     cfg: ModelConfig,
     caps: Capacities,
     ids: ProgramIds,
+    pool: Arc<KvPool>,
     pub alpha: f32,
     pub inv2sig2: f32,
     pub gate_theta: f32,
@@ -98,8 +106,19 @@ pub const EOS_ID: i32 = 258;
 pub const REF_ID: i32 = 259;
 
 impl Engine {
-    /// Build an engine for `config` on an already-started device.
+    /// Build an engine for `config` on an already-started device, with a
+    /// default-configured KV block pool.
     pub fn new(device: DeviceHandle, config: &str) -> Result<Arc<Engine>> {
+        Engine::new_with_pool(device, config, KvPoolConfig::default())
+    }
+
+    /// Build an engine with explicit pool knobs (block size, capacity,
+    /// reclaim policy).
+    pub fn new_with_pool(
+        device: DeviceHandle,
+        config: &str,
+        pool_cfg: KvPoolConfig,
+    ) -> Result<Arc<Engine>> {
         let bundle = device.manifest().config(config)?.clone();
         let caps = bundle.caps;
         let find = |prefix: &str| -> Result<ProgramId> {
@@ -127,11 +146,13 @@ impl Engine {
             synapse: find("synapse_extract")?,
             inject: find("inject_encode")?,
         };
+        let pool = KvPool::new(&bundle.model, pool_cfg);
         Ok(Arc::new(Engine {
             device,
             cfg: bundle.model,
             caps,
             ids,
+            pool,
             alpha: bundle.defaults.alpha,
             inv2sig2: bundle.defaults.inv2sig2,
             gate_theta: bundle.defaults.gate_theta,
@@ -151,14 +172,19 @@ impl Engine {
         &self.device
     }
 
-    /// Fresh main-agent cache (capacity `main_ctx`).
-    pub fn new_main_cache(&self) -> KvCache {
-        KvCache::new(&self.cfg, self.caps.main_ctx)
+    /// The engine's shared KV block pool.
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
     }
 
-    /// Fresh side-agent cache (capacity `side_ctx`).
+    /// Fresh pool-backed main-agent cache (capacity `main_ctx`).
+    pub fn new_main_cache(&self) -> KvCache {
+        self.pool.new_cache(self.caps.main_ctx)
+    }
+
+    /// Fresh pool-backed side-agent cache (capacity `side_ctx`).
     pub fn new_side_cache(&self) -> KvCache {
-        KvCache::new(&self.cfg, self.caps.side_ctx)
+        self.pool.new_cache(self.caps.side_ctx)
     }
 
     // ── Prefill ────────────────────────────────────────────────────────
@@ -248,11 +274,9 @@ impl Engine {
             bail!("decode_at_tier: {} rows do not fit tier {tier}", kv.len());
         }
 
-        let (k_up, v_up) = if tier == kv.capacity() {
-            (kv.k_raw().to_vec(), kv.v_raw().to_vec())
-        } else {
-            kv.prefix_upload(tier)
-        };
+        // Block-translation gather: one contiguous `[L, tier, KV, hd]`
+        // upload regardless of how the rows are spread across pool blocks.
+        let (k_up, v_up) = kv.prefix_upload(tier);
         let shape = vec![
             self.cfg.n_layers,
             tier,
@@ -418,8 +442,13 @@ impl Engine {
             tokens.push(*tok);
             pos.push(*p);
             lens.push(kv.len() as i32);
-            k_all[i * per..(i + 1) * per].copy_from_slice(kv.k_raw());
-            v_all[i * per..(i + 1) * per].copy_from_slice(kv.v_raw());
+            // Single copy: gather each slot's blocks straight into its lane
+            // of the (freshly zeroed) batch slabs.
+            kv.prefix_upload_into(
+                cs,
+                &mut k_all[i * per..(i + 1) * per],
+                &mut v_all[i * per..(i + 1) * per],
+            );
         }
         let results = self.decode_batch_raw(n, tokens, pos, k_all, v_all, lens, lane)?;
         let mut outs = Vec::with_capacity(n);

@@ -1,42 +1,67 @@
-//! Host-side KV cache buffers.
+//! Host-side KV caches as *views into the shared block pool*.
 //!
-//! Each agent owns one `KvCache` pair of flat row-major buffers shaped
-//! `[L, C, KV, hd]` (matching the AOT program ABI).  The coordinator appends
-//! rows as decoding proceeds and uploads the buffers with each decode op.
-//! Every byte held here is accounted by `cortex::memory` — these buffers ARE
-//! the per-agent context cost of Table 2.
+//! A `KvCache` no longer owns flat `[L, C, KV, hd]` buffers: it holds a
+//! block table into a [`KvPool`](super::pool::KvPool) and grows on append,
+//! one fixed-size block at a time.  `capacity` bounds how far the view may
+//! grow (it matches the compiled program's cache dimension), but resident
+//! bytes track the *fill*, not the capacity — the Table-2 unit is now
+//! `blocks × block_bytes`, kept live-synced with the cortex
+//! [`MemoryTracker`](crate::cortex::memory::MemoryTracker) through an
+//! attached [`MemGuard`].  Device uploads go through the contiguous gather
+//! paths ([`KvCache::prefix_upload`] et al.), which zero-fill positions past
+//! `len` — numerically transparent because every compiled program masks
+//! attention beyond `cache_len`.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use super::pool::{KvBlock, KvPool, KvPoolConfig};
+use crate::cortex::memory::MemGuard;
 use crate::runtime::{HostTensor, ModelConfig};
 
-/// A fixed-capacity KV cache for one agent.
-#[derive(Debug, Clone)]
+/// A bounded, pool-backed KV cache for one agent.
 pub struct KvCache {
-    /// `[L, C, KV, hd]` keys, row-major.
-    k: Vec<f32>,
-    /// `[L, C, KV, hd]` values.
-    v: Vec<f32>,
-    n_layers: usize,
+    pool: Arc<KvPool>,
+    /// Block table: block `i` holds positions `[i*bt, (i+1)*bt)`.
+    blocks: Vec<KvBlock>,
     capacity: usize,
-    kv_heads: usize,
-    row: usize, // KV * hd floats per (layer, position)
     len: usize,
+    /// Accounting hook: resized to the resident-block bytes on every
+    /// rent/release, so the tracker measures fill rather than reservation.
+    mem: Option<MemGuard>,
+}
+
+impl std::fmt::Debug for KvCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvCache")
+            .field("len", &self.len)
+            .field("capacity", &self.capacity)
+            .field("blocks", &self.blocks.len())
+            .field("block_tokens", &self.pool.block_tokens())
+            .finish()
+    }
 }
 
 impl KvCache {
+    /// Standalone cache backed by a private pool (tests and host tools).
+    /// Production caches come from a shared pool via [`KvPool::new_cache`].
     pub fn new(cfg: &ModelConfig, capacity: usize) -> KvCache {
-        let row = cfg.n_kv_heads * cfg.head_dim;
-        let total = cfg.n_layers * capacity * row;
+        KvPool::new(cfg, KvPoolConfig::default()).new_cache(capacity)
+    }
+
+    pub(crate) fn with_pool(pool: Arc<KvPool>, capacity: usize) -> KvCache {
         KvCache {
-            k: vec![0.0; total],
-            v: vec![0.0; total],
-            n_layers: cfg.n_layers,
+            pool,
+            blocks: Vec::new(),
             capacity,
-            kv_heads: cfg.n_kv_heads,
-            row,
             len: 0,
+            mem: None,
         }
+    }
+
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
     }
 
     pub fn len(&self) -> usize {
@@ -55,184 +80,376 @@ impl KvCache {
         self.capacity - self.len
     }
 
-    /// Bytes held by this cache (both K and V buffers) — the Table-2 unit.
+    /// Resident bytes: rented blocks × block bytes — the Table-2 unit.
+    /// Grows with fill, not with configured capacity.
     pub fn bytes(&self) -> u64 {
-        (self.k.len() + self.v.len()) as u64 * 4
+        self.blocks.len() as u64 * self.pool.block_bytes()
     }
 
-    /// Bytes actually in use (`len` rows).
+    /// Bytes an eager flat `[L, C, KV, hd]` allocation of this capacity
+    /// would hold — the pre-pool figure, kept for baseline comparisons.
+    pub fn capacity_bytes(&self) -> u64 {
+        (self.pool.n_layers() * self.capacity * self.row() * 2) as u64 * 4
+    }
+
+    /// Bytes actually occupied by the `len` filled rows.
     pub fn used_bytes(&self) -> u64 {
-        (self.n_layers * self.len * self.row * 2) as u64 * 4
+        (self.pool.n_layers() * self.len * self.row() * 2) as u64 * 4
     }
 
-    fn offset(&self, layer: usize, pos: usize) -> usize {
-        (layer * self.capacity + pos) * self.row
+    /// Attach the memory-accounting guard; from here on every block rent
+    /// and release resizes it to the resident-block bytes.
+    pub fn track(&mut self, mem: MemGuard) {
+        self.mem = Some(mem);
+        self.sync_mem();
     }
 
-    /// Append one position's K/V rows.  `k_new`/`v_new` are `[L, KV, hd]`.
-    pub fn append_row(&mut self, k_new: &[f32], v_new: &[f32]) -> Result<()> {
-        if self.len >= self.capacity {
-            bail!("kv cache full ({} rows)", self.capacity);
+    fn sync_mem(&mut self) {
+        let bytes = self.blocks.len() as u64 * self.pool.block_bytes();
+        if let Some(g) = self.mem.as_mut() {
+            g.resize(bytes);
         }
-        if k_new.len() != self.n_layers * self.row || v_new.len() != k_new.len() {
-            bail!(
-                "append_row: expected {} floats, got {}",
-                self.n_layers * self.row,
-                k_new.len()
-            );
+    }
+
+    fn row(&self) -> usize {
+        self.pool.row()
+    }
+
+    /// Rent blocks until `rows` positions fit.  On pool exhaustion the
+    /// already-rented blocks are kept (the cache stays consistent) and the
+    /// backpressure error bubbles up.
+    fn ensure_blocks(&mut self, rows: usize) -> Result<()> {
+        let need = self.pool.blocks_for(rows);
+        while self.blocks.len() < need {
+            match self.pool.rent_block() {
+                Ok(b) => self.blocks.push(b),
+                Err(e) => {
+                    self.sync_mem();
+                    return Err(e);
+                }
+            }
         }
-        for layer in 0..self.n_layers {
-            let dst = self.offset(layer, self.len);
-            let src = layer * self.row;
-            self.k[dst..dst + self.row].copy_from_slice(&k_new[src..src + self.row]);
-            self.v[dst..dst + self.row].copy_from_slice(&v_new[src..src + self.row]);
-        }
-        self.len += 1;
+        self.sync_mem();
         Ok(())
+    }
+
+    /// (block index, position offset within the block) for a cache position.
+    fn locate(&self, pos: usize) -> (usize, usize) {
+        let bt = self.pool.block_tokens();
+        (pos / bt, pos % bt)
+    }
+
+    /// Flat offset of `(pos_in_block, layer)` inside a block buffer.
+    fn block_offset(&self, layer: usize, off: usize) -> usize {
+        (layer * self.pool.block_tokens() + off) * self.row()
+    }
+
+    /// Copy `[L, n, KV, hd]` rows into positions `[base, base+n)`.  Blocks
+    /// covering those positions must already be rented — the single home of
+    /// the block-addressing arithmetic for writes.
+    fn write_rows(&mut self, base: usize, n: usize, k_rows: &[f32], v_rows: &[f32]) {
+        let row = self.row();
+        let n_layers = self.pool.n_layers();
+        let bt = self.pool.block_tokens();
+        for i in 0..n {
+            let (b, off) = self.locate(base + i);
+            let block = &mut self.blocks[b];
+            for layer in 0..n_layers {
+                let dst = (layer * bt + off) * row;
+                let src = (layer * n + i) * row;
+                block.k[dst..dst + row].copy_from_slice(&k_rows[src..src + row]);
+                block.v[dst..dst + row].copy_from_slice(&v_rows[src..src + row]);
+            }
+        }
+    }
+
+    /// Append one position's K/V rows.  `k_new`/`v_new` are `[L, KV, hd]`
+    /// (identical to `[L, 1, KV, hd]`).
+    pub fn append_row(&mut self, k_new: &[f32], v_new: &[f32]) -> Result<()> {
+        self.append_rows(1, k_new, v_new)
     }
 
     /// Append `n` positions from `[L, n, KV, hd]` buffers (synapse loads,
     /// prefill copy-in, referential injection).
     pub fn append_rows(&mut self, n: usize, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
         if self.len + n > self.capacity {
-            bail!(
-                "kv cache overflow: {} + {n} > {}",
-                self.len,
-                self.capacity
-            );
+            bail!("kv cache overflow: {} + {n} > {}", self.len, self.capacity);
         }
-        let expect = self.n_layers * n * self.row;
+        let expect = self.pool.n_layers() * n * self.row();
         if k_rows.len() != expect || v_rows.len() != expect {
             bail!("append_rows: expected {expect} floats, got {}", k_rows.len());
         }
-        for layer in 0..self.n_layers {
-            let dst = self.offset(layer, self.len);
-            let src = layer * n * self.row;
-            let count = n * self.row;
-            self.k[dst..dst + count].copy_from_slice(&k_rows[src..src + count]);
-            self.v[dst..dst + count].copy_from_slice(&v_rows[src..src + count]);
-        }
+        self.ensure_blocks(self.len + n)?;
+        self.write_rows(self.len, n, k_rows, v_rows);
         self.len += n;
+        self.pool.note_rows_added(n);
         Ok(())
     }
 
-    /// Overwrite the whole buffer from prefill outputs (`[L, C, KV, hd]`)
-    /// and set the row count.
+    /// Replace the cache contents with `n` rows (`[L, n, KV, hd]`), renting
+    /// any additional blocks BEFORE dropping the old rows — like
+    /// [`KvCache::load_full`], pool-exhaustion backpressure leaves the
+    /// previous contents intact.
+    pub fn replace_rows(&mut self, n: usize, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
+        if n > self.capacity {
+            bail!("replace_rows: {n} rows > capacity {}", self.capacity);
+        }
+        let expect = self.pool.n_layers() * n * self.row();
+        if k_rows.len() != expect || v_rows.len() != expect {
+            bail!("replace_rows: expected {expect} floats, got {}", k_rows.len());
+        }
+        let need = self.pool.blocks_for(n);
+        if need > self.blocks.len() {
+            self.ensure_blocks(n)?;
+        }
+        self.pool.note_rows_removed(self.len);
+        self.len = 0;
+        while self.blocks.len() > need {
+            let b = self.blocks.pop().expect("block table shrank unexpectedly");
+            self.pool.release_block(b);
+        }
+        self.write_rows(0, n, k_rows, v_rows);
+        self.len = n;
+        self.pool.note_rows_added(n);
+        self.sync_mem();
+        Ok(())
+    }
+
+    /// Load from prefill outputs (`[L, C, KV, hd]` full-capacity buffers)
+    /// and set the row count.  Only the first `len` positions are copied
+    /// into blocks — the padded tail is masked by every downstream program
+    /// and would only waste resident bytes.
     pub fn load_full(&mut self, len: usize, k_full: &[f32], v_full: &[f32]) -> Result<()> {
-        if k_full.len() != self.k.len() || v_full.len() != self.v.len() {
-            bail!(
-                "load_full: expected {} floats, got {}",
-                self.k.len(),
-                k_full.len()
-            );
+        let row = self.row();
+        let n_layers = self.pool.n_layers();
+        let expect = n_layers * self.capacity * row;
+        if k_full.len() != expect || v_full.len() != expect {
+            bail!("load_full: expected {expect} floats, got {}", k_full.len());
         }
         if len > self.capacity {
             bail!("load_full: len {len} > capacity {}", self.capacity);
         }
-        self.k.copy_from_slice(k_full);
-        self.v.copy_from_slice(v_full);
+        // Grow FIRST (keeping the existing blocks) so pool-exhaustion
+        // backpressure leaves the previous contents intact — a caller
+        // retrying after the error has not lost the agent's state.
+        let need = self.pool.blocks_for(len);
+        if need > self.blocks.len() {
+            self.ensure_blocks(len)?;
+        }
+        self.pool.note_rows_removed(self.len);
+        self.len = 0;
+        while self.blocks.len() > need {
+            let b = self.blocks.pop().expect("block table shrank unexpectedly");
+            self.pool.release_block(b);
+        }
+        let bt = self.pool.block_tokens();
+        for (b, block) in self.blocks.iter_mut().enumerate() {
+            let start = b * bt;
+            let run = (len - start).min(bt);
+            for layer in 0..n_layers {
+                let src = (layer * self.capacity + start) * row;
+                let dst = layer * bt * row;
+                block.k[dst..dst + run * row].copy_from_slice(&k_full[src..src + run * row]);
+                block.v[dst..dst + run * row].copy_from_slice(&v_full[src..src + run * row]);
+            }
+        }
         self.len = len;
+        self.pool.note_rows_added(len);
+        self.sync_mem();
         Ok(())
     }
 
-    /// Reset to empty (buffers retained — no reallocation on the hot path).
-    pub fn clear(&mut self) {
-        self.len = 0;
+    /// Drop rows beyond `rows`, returning now-empty blocks to the pool.
+    pub fn truncate(&mut self, rows: usize) {
+        if rows >= self.len {
+            return;
+        }
+        self.pool.note_rows_removed(self.len - rows);
+        self.len = rows;
+        let keep = self.pool.blocks_for(rows);
+        while self.blocks.len() > keep {
+            let b = self.blocks.pop().expect("block table shrank unexpectedly");
+            self.pool.release_block(b);
+        }
+        self.sync_mem();
     }
 
-    /// Tensor views for a decode upload.
+    /// Reset to empty.  All blocks go back to the shared pool (the reclaim
+    /// path that makes finished agents nearly free).
+    pub fn clear(&mut self) {
+        self.truncate(0);
+    }
+
+    /// Gather one contiguous `[L, c, KV, hd]` buffer from the block table.
+    fn gather_prefix<F>(&self, c: usize, pick: F) -> Vec<f32>
+    where
+        F: Fn(&KvBlock) -> &[f32],
+    {
+        let mut out = vec![0.0f32; self.pool.n_layers() * c * self.row()];
+        self.gather_prefix_into(c, &mut out, pick);
+        out
+    }
+
+    /// Allocation-free gather into a caller-provided `[L, c, KV, hd]`
+    /// buffer.  Only the valid prefix (`< len`) is written — positions past
+    /// it must already be zeroed by the caller (freshly allocated batch
+    /// buffers are).
+    fn gather_prefix_into<F>(&self, c: usize, out: &mut [f32], pick: F)
+    where
+        F: Fn(&KvBlock) -> &[f32],
+    {
+        let row = self.row();
+        let n_layers = self.pool.n_layers();
+        let bt = self.pool.block_tokens();
+        let per = c * row;
+        debug_assert_eq!(out.len(), n_layers * per);
+        let valid = self.len.min(c);
+        for (b, block) in self.blocks.iter().enumerate() {
+            let start = b * bt;
+            if start >= valid {
+                break;
+            }
+            let run = (valid - start).min(bt);
+            let buf = pick(block);
+            for layer in 0..n_layers {
+                let dst = layer * per + start * row;
+                let src = layer * bt * row;
+                out[dst..dst + run * row].copy_from_slice(&buf[src..src + run * row]);
+            }
+        }
+    }
+
+    /// Pack the first `c` positions straight into caller-owned zeroed
+    /// buffers (the batcher's `[B, L, Cs, KV, hd]` slabs) — one copy, no
+    /// intermediate allocation.
+    pub fn prefix_upload_into(&self, c: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        debug_assert!(self.len <= c && c <= self.capacity);
+        self.gather_prefix_into(c, k_out, |b| &b.k);
+        self.gather_prefix_into(c, v_out, |b| &b.v);
+    }
+
+    /// Tensor views for a decode/synapse upload (full capacity, zero-padded
+    /// past `len` — masked on device).
     pub fn k_tensor(&self) -> HostTensor {
-        HostTensor::f32(
-            self.k.clone(),
-            vec![self.n_layers, self.capacity, self.row_kv(), self.head_dim()],
-        )
+        HostTensor::f32(self.gather_prefix(self.capacity, |b| &b.k), self.shape())
     }
 
     pub fn v_tensor(&self) -> HostTensor {
-        HostTensor::f32(
-            self.v.clone(),
-            vec![self.n_layers, self.capacity, self.row_kv(), self.head_dim()],
-        )
-    }
-
-    /// Raw access for batching (the batcher packs several caches into one
-    /// `[B, L, C, KV, hd]` upload without intermediate tensors).
-    pub fn k_raw(&self) -> &[f32] {
-        &self.k
-    }
-
-    pub fn v_raw(&self) -> &[f32] {
-        &self.v
+        HostTensor::f32(self.gather_prefix(self.capacity, |b| &b.v), self.shape())
     }
 
     pub fn shape(&self) -> Vec<usize> {
-        vec![self.n_layers, self.capacity, self.row_kv(), self.head_dim()]
+        vec![
+            self.pool.n_layers(),
+            self.capacity,
+            self.pool.kv_heads(),
+            self.pool.head_dim(),
+        ]
     }
 
-    // The row split (KV heads vs head_dim) is only needed to shape uploads;
-    // store the product and derive the split lazily from construction.
-    fn row_kv(&self) -> usize {
-        self.kv_heads
-    }
-
-    fn head_dim(&self) -> usize {
-        self.row / self.kv_heads
-    }
-}
-
-// NOTE: `kv_heads` retained separately for shaping uploads.
-// (declared after methods for readability)
-impl KvCache {
-    /// Copy the first `c` positions of each layer into fresh `[L, c, KV, hd]`
-    /// buffers — the upload for a capacity-`c` decode tier (§Perf opt A).
-    /// Requires `len() <= c <= capacity()`.
+    /// Contiguous `[L, c, KV, hd]` upload buffers for a capacity-`c` decode
+    /// tier (§Perf opt A) — the block-translation gather.  Requires
+    /// `len() <= c <= capacity()`.
     pub fn prefix_upload(&self, c: usize) -> (Vec<f32>, Vec<f32>) {
         debug_assert!(self.len <= c && c <= self.capacity);
-        let per = c * self.row;
-        let mut k = Vec::with_capacity(self.n_layers * per);
-        let mut v = Vec::with_capacity(self.n_layers * per);
-        for layer in 0..self.n_layers {
-            let off = self.offset(layer, 0);
-            k.extend_from_slice(&self.k[off..off + per]);
-            v.extend_from_slice(&self.v[off..off + per]);
-        }
-        (k, v)
+        (
+            self.gather_prefix(c, |b| &b.k),
+            self.gather_prefix(c, |b| &b.v),
+        )
     }
 
-    /// Gather arbitrary rows (by position) across all layers into
-    /// `[L, n, KV, hd]` buffers — the host-side analogue of the synapse
+    /// Gather arbitrary rows (by position, each `< len`) across all layers
+    /// into `[L, n, KV, hd]` buffers — the host-side analogue of the synapse
     /// program's landmark gather, used by the selection-policy ablation.
     pub fn gather_rows(&self, indices: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let row = self.row();
+        let n_layers = self.pool.n_layers();
         let n = indices.len();
-        let mut k = Vec::with_capacity(self.n_layers * n * self.row);
-        let mut v = Vec::with_capacity(self.n_layers * n * self.row);
-        for layer in 0..self.n_layers {
+        let mut k = Vec::with_capacity(n_layers * n * row);
+        let mut v = Vec::with_capacity(n_layers * n * row);
+        for layer in 0..n_layers {
             for &pos in indices {
-                let off = self.offset(layer, pos);
-                k.extend_from_slice(&self.k[off..off + self.row]);
-                v.extend_from_slice(&self.v[off..off + self.row]);
+                let (b, off) = self.locate(pos);
+                let o = self.block_offset(layer, off);
+                k.extend_from_slice(&self.blocks[b].k[o..o + row]);
+                v.extend_from_slice(&self.blocks[b].v[o..o + row]);
             }
         }
         (k, v)
     }
 
-    /// K rows for position range `[start, end)` of a given layer.
-    pub fn k_slice(&self, layer: usize, start: usize, end: usize) -> &[f32] {
-        let a = self.offset(layer, start);
-        let b = self.offset(layer, end.min(self.len));
-        &self.k[a..b]
+    /// K rows for position range `[start, end)` of a given layer (`end`
+    /// clamped to `len`).  Owned: the range may span multiple blocks.
+    pub fn k_slice(&self, layer: usize, start: usize, end: usize) -> Vec<f32> {
+        self.range_rows(layer, start, end, |b| &b.k)
     }
 
-    pub fn v_slice(&self, layer: usize, start: usize, end: usize) -> &[f32] {
-        let a = self.offset(layer, start);
-        let b = self.offset(layer, end.min(self.len));
-        &self.v[a..b]
+    pub fn v_slice(&self, layer: usize, start: usize, end: usize) -> Vec<f32> {
+        self.range_rows(layer, start, end, |b| &b.v)
+    }
+
+    fn range_rows<F>(&self, layer: usize, start: usize, end: usize, pick: F) -> Vec<f32>
+    where
+        F: Fn(&KvBlock) -> &[f32],
+    {
+        let row = self.row();
+        let end = end.min(self.len);
+        if start >= end {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity((end - start) * row);
+        for pos in start..end {
+            let (b, off) = self.locate(pos);
+            let o = self.block_offset(layer, off);
+            out.extend_from_slice(&pick(&self.blocks[b])[o..o + row]);
+        }
+        out
+    }
+}
+
+impl KvCache {
+    /// Deep copy renting fresh blocks from the same pool, surfacing pool
+    /// exhaustion as the same backpressure error every growth path returns.
+    /// The copy is untracked (no memory guard) — the prism attaches guards
+    /// only to registered agents.
+    pub fn try_clone(&self) -> Result<KvCache> {
+        let mut c = KvCache::with_pool(self.pool.clone(), self.capacity);
+        c.ensure_blocks(self.len)?;
+        for (dst, src) in c.blocks.iter_mut().zip(&self.blocks) {
+            dst.k.copy_from_slice(&src.k);
+            dst.v.copy_from_slice(&src.v);
+        }
+        c.len = self.len;
+        c.pool.note_rows_added(self.len);
+        Ok(c)
+    }
+}
+
+impl Clone for KvCache {
+    /// [`KvCache::try_clone`], panicking on pool exhaustion (`Clone`
+    /// cannot surface a `Result`).  Callers running near a configured
+    /// `max_blocks` cap should prefer `try_clone`.
+    fn clone(&self) -> KvCache {
+        self.try_clone()
+            .expect("kv pool exhausted while cloning a cache")
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        self.pool.note_rows_removed(self.len);
+        for b in self.blocks.drain(..) {
+            self.pool.release_block(b);
+        }
+        // `self.mem` drops after this body, releasing the tracked resident
+        // bytes (which still equal blocks × block_bytes at this point).
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::check;
 
     fn tiny_cfg() -> ModelConfig {
         ModelConfig {
@@ -249,12 +466,76 @@ mod tests {
         }
     }
 
+    const ROW: usize = 32; // KV * hd for tiny_cfg
+
+    /// Reference implementation: the seed's flat `[L, C, KV, hd]` layout.
+    /// The pooled cache must produce bit-identical gathers against it.
+    struct FlatRef {
+        k: Vec<f32>,
+        v: Vec<f32>,
+        n_layers: usize,
+        capacity: usize,
+        len: usize,
+    }
+
+    impl FlatRef {
+        fn new(cfg: &ModelConfig, capacity: usize) -> FlatRef {
+            FlatRef {
+                k: vec![0.0; cfg.n_layers * capacity * ROW],
+                v: vec![0.0; cfg.n_layers * capacity * ROW],
+                n_layers: cfg.n_layers,
+                capacity,
+                len: 0,
+            }
+        }
+
+        fn offset(&self, layer: usize, pos: usize) -> usize {
+            (layer * self.capacity + pos) * ROW
+        }
+
+        fn append_rows(&mut self, n: usize, k_rows: &[f32], v_rows: &[f32]) {
+            for layer in 0..self.n_layers {
+                let dst = self.offset(layer, self.len);
+                let src = layer * n * ROW;
+                self.k[dst..dst + n * ROW].copy_from_slice(&k_rows[src..src + n * ROW]);
+                self.v[dst..dst + n * ROW].copy_from_slice(&v_rows[src..src + n * ROW]);
+            }
+            self.len += n;
+        }
+
+        fn prefix_upload(&self, c: usize) -> (Vec<f32>, Vec<f32>) {
+            let per = c * ROW;
+            let mut k = Vec::with_capacity(self.n_layers * per);
+            let mut v = Vec::with_capacity(self.n_layers * per);
+            for layer in 0..self.n_layers {
+                let off = self.offset(layer, 0);
+                k.extend_from_slice(&self.k[off..off + per]);
+                v.extend_from_slice(&self.v[off..off + per]);
+            }
+            (k, v)
+        }
+
+        fn gather_rows(&self, indices: &[usize]) -> (Vec<f32>, Vec<f32>) {
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            for layer in 0..self.n_layers {
+                for &pos in indices {
+                    let off = self.offset(layer, pos);
+                    k.extend_from_slice(&self.k[off..off + ROW]);
+                    v.extend_from_slice(&self.v[off..off + ROW]);
+                }
+            }
+            (k, v)
+        }
+    }
+
     #[test]
     fn append_and_slice() {
         let cfg = tiny_cfg();
         let mut kv = KvCache::new(&cfg, 8);
         assert_eq!(kv.len(), 0);
-        assert_eq!(kv.bytes(), (2 * 8 * 32 * 2 * 4) as u64);
+        assert_eq!(kv.bytes(), 0, "empty cache holds no blocks");
+        assert_eq!(kv.capacity_bytes(), (2 * 8 * 32 * 2 * 4) as u64);
 
         let row = 2 * 32; // L * KV*hd
         let k: Vec<f32> = (0..row).map(|i| i as f32).collect();
@@ -262,10 +543,11 @@ mod tests {
         kv.append_row(&k, &v).unwrap();
         kv.append_row(&v, &k).unwrap();
         assert_eq!(kv.len(), 2);
-        // layer 1, position 0 starts at offset (1*8+0)*32 in flat buffer;
-        // source layer 1 starts at 32.
+        // layer 1 of the first appended row came from source offset 32.
         assert_eq!(kv.k_slice(1, 0, 1), &k[32..64]);
         assert_eq!(kv.k_slice(1, 1, 2), &v[32..64]);
+        // resident bytes: one 16-position block
+        assert_eq!(kv.bytes(), kv.pool().block_bytes());
     }
 
     #[test]
@@ -280,6 +562,7 @@ mod tests {
         assert_eq!(kv.remaining(), 0);
         kv.clear();
         assert_eq!(kv.remaining(), 2);
+        assert_eq!(kv.bytes(), 0, "clear returns blocks to the pool");
     }
 
     #[test]
@@ -294,7 +577,9 @@ mod tests {
         assert_eq!(kv.k_slice(0, 0, 3), &rows[..96]);
         // layer 1 rows follow
         assert_eq!(kv.k_slice(1, 0, 3), &rows[96..192]);
-        assert!(kv.append_rows(6, &vec![0.0; 2 * 6 * 32], &vec![0.0; 2 * 6 * 32]).is_err());
+        assert!(kv
+            .append_rows(6, &vec![0.0; 2 * 6 * 32], &vec![0.0; 2 * 6 * 32])
+            .is_err());
     }
 
     #[test]
@@ -303,5 +588,198 @@ mod tests {
         let mut kv = KvCache::new(&cfg, 4);
         assert!(kv.append_row(&[0.0; 3], &[0.0; 3]).is_err());
         assert!(kv.load_full(1, &[0.0; 3], &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn block_translation_matches_flat_layout_bit_identical() {
+        // Drive identical random operation sequences through the pooled
+        // cache and the seed's flat layout; every gather path must agree
+        // bit-for-bit on the valid region.
+        let cfg = tiny_cfg();
+        check("pooled == flat", 40, |g| {
+            let capacity = g.usize_in(4..40);
+            let pool = KvPool::new(
+                &cfg,
+                KvPoolConfig {
+                    block_tokens: g.usize_in(1..9),
+                    ..KvPoolConfig::default()
+                },
+            );
+            let mut pooled = pool.new_cache(capacity);
+            let mut flat = FlatRef::new(&cfg, capacity);
+            while pooled.len() < capacity {
+                let n = g.usize_in(1..(capacity - pooled.len() + 1));
+                let k = g.vec_f32((2 * n * ROW)..(2 * n * ROW + 1), -4.0, 4.0);
+                let v = g.vec_f32((2 * n * ROW)..(2 * n * ROW + 1), -4.0, 4.0);
+                pooled.append_rows(n, &k, &v).map_err(|e| e.to_string())?;
+                flat.append_rows(n, &k, &v);
+                if g.bool() {
+                    break;
+                }
+            }
+            let len = pooled.len();
+            crate::prop_assert!(len == flat.len, "length drift: {len} vs {}", flat.len);
+
+            // prefix_upload at a random tier >= len
+            let c = g.usize_in(len.max(1)..(capacity + 1));
+            let (pk, pv) = pooled.prefix_upload(c);
+            let (fk, fv) = flat.prefix_upload(c);
+            // the flat reference carries zeros beyond len too (fresh buffers),
+            // so the comparison covers the full tier
+            crop_eq(&pk, &fk, "prefix k")?;
+            crop_eq(&pv, &fv, "prefix v")?;
+
+            // gather_rows over random valid positions
+            let idx = g.vec_usize(0..8, 0..len.max(1));
+            let idx: Vec<usize> = idx.into_iter().filter(|&i| i < len).collect();
+            let (pk, pv) = pooled.gather_rows(&idx);
+            let (fk, fv) = flat.gather_rows(&idx);
+            crop_eq(&pk, &fk, "gather k")?;
+            crop_eq(&pv, &fv, "gather v")?;
+
+            // per-layer range slices
+            for layer in 0..cfg.n_layers {
+                let got = pooled.k_slice(layer, 0, len);
+                let want = &flat.k[flat.offset(layer, 0)..flat.offset(layer, 0) + len * ROW];
+                crop_eq(&got, want, "k_slice")?;
+            }
+            Ok(())
+        });
+
+        fn crop_eq(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
+            if a.len() != b.len() {
+                return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+            }
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("{what}[{i}]: {x} != {y} (not bit-identical)"));
+                }
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn load_full_copies_only_the_fill() {
+        let cfg = tiny_cfg();
+        let capacity = 8;
+        let pool = KvPool::new(
+            &cfg,
+            KvPoolConfig {
+                block_tokens: 4,
+                ..KvPoolConfig::default()
+            },
+        );
+        let mut kv = pool.new_cache(capacity);
+        let full: Vec<f32> = (0..2 * capacity * ROW).map(|i| i as f32).collect();
+        kv.load_full(5, &full, &full).unwrap();
+        assert_eq!(kv.len(), 5);
+        assert_eq!(kv.bytes(), 2 * pool.block_bytes(), "5 rows → 2 blocks of 4");
+        // valid region matches the flat source
+        let (k_up, _) = kv.prefix_upload(capacity);
+        for layer in 0..2 {
+            let src = &full[layer * capacity * ROW..layer * capacity * ROW + 5 * ROW];
+            let dst = &k_up[layer * capacity * ROW..layer * capacity * ROW + 5 * ROW];
+            assert_eq!(src, dst);
+        }
+        // past the fill the upload is zero (masked on device)
+        assert!(k_up[5 * ROW..capacity * ROW].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn truncate_releases_blocks() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(
+            &cfg,
+            KvPoolConfig {
+                block_tokens: 2,
+                ..KvPoolConfig::default()
+            },
+        );
+        let mut kv = pool.new_cache(10);
+        let row = 2 * 32;
+        for _ in 0..7 {
+            kv.append_row(&vec![1.0; row], &vec![1.0; row]).unwrap();
+        }
+        assert_eq!(kv.bytes(), 4 * pool.block_bytes()); // ceil(7/2)
+        kv.truncate(3);
+        assert_eq!(kv.len(), 3);
+        assert_eq!(kv.bytes(), 2 * pool.block_bytes());
+        let s = pool.stats();
+        assert_eq!(s.blocks_live, 2);
+        assert_eq!(s.blocks_free, 2);
+        // growth after truncation reuses the freed blocks
+        for _ in 0..4 {
+            kv.append_row(&vec![2.0; row], &vec![2.0; row]).unwrap();
+        }
+        assert_eq!(pool.stats().blocks_high_water, 4, "no net growth");
+    }
+
+    #[test]
+    fn pool_exhaustion_surfaces_as_append_error() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(
+            &cfg,
+            KvPoolConfig {
+                block_tokens: 2,
+                max_blocks: 2,
+                retain_free_blocks: usize::MAX,
+            },
+        );
+        let mut kv = pool.new_cache(64);
+        let row = 2 * 32;
+        for _ in 0..4 {
+            kv.append_row(&vec![0.0; row], &vec![0.0; row]).unwrap();
+        }
+        let err = kv.append_row(&vec![0.0; row], &vec![0.0; row]).unwrap_err();
+        assert!(format!("{err:#}").contains("exhausted"));
+        assert_eq!(kv.len(), 4, "failed append must not corrupt the cache");
+        // freeing another cache's worth of blocks unblocks growth
+        kv.truncate(2);
+        assert!(kv.append_row(&vec![0.0; row], &vec![0.0; row]).is_ok());
+    }
+
+    #[test]
+    fn replace_rows_preserves_state_on_exhaustion() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(
+            &cfg,
+            KvPoolConfig {
+                block_tokens: 2,
+                max_blocks: 2,
+                retain_free_blocks: usize::MAX,
+            },
+        );
+        let mut kv = pool.new_cache(64);
+        // fill 3 rows → 2 blocks (the cap)
+        let rows3: Vec<f32> = (0..2 * 3 * 32).map(|i| i as f32).collect();
+        kv.append_rows(3, &rows3, &rows3).unwrap();
+        // replacing with 5 rows needs a 3rd block → backpressure, and the
+        // previous contents must survive the error
+        let rows5 = vec![1.0; 2 * 5 * 32];
+        assert!(kv.replace_rows(5, &rows5, &rows5).is_err());
+        assert_eq!(kv.len(), 3);
+        assert_eq!(kv.k_slice(0, 0, 3), &rows3[..96]);
+        // replacing within the same block budget succeeds in place
+        let rows4: Vec<f32> = (0..2 * 4 * 32).map(|i| -(i as f32)).collect();
+        kv.replace_rows(4, &rows4, &rows4).unwrap();
+        assert_eq!(kv.len(), 4);
+        assert_eq!(kv.k_slice(0, 0, 4), &rows4[..128]);
+    }
+
+    #[test]
+    fn clone_is_deep_and_reuses_the_pool() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig::default());
+        let mut a = pool.new_cache(8);
+        let row = 2 * 32;
+        a.append_row(&vec![3.0; row], &vec![4.0; row]).unwrap();
+        let b = a.clone();
+        assert_eq!(b.len(), 1);
+        assert_eq!(a.k_slice(0, 0, 1), b.k_slice(0, 0, 1));
+        assert_eq!(pool.stats().blocks_live, 2);
+        drop(b);
+        assert_eq!(pool.stats().blocks_live, 1);
+        assert_eq!(pool.stats().blocks_free, 1);
     }
 }

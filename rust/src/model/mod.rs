@@ -1,7 +1,13 @@
 //! Host-side model state and the typed inference API over the runtime.
+//!
+//! * `pool`   — the shared KV block pool (demand-paged context memory)
+//! * `kv`     — per-agent cache views (block tables into the pool)
+//! * `engine` — the typed inference API shared by every agent
 
 pub mod engine;
 pub mod kv;
+pub mod pool;
 
 pub use engine::{DecodeOut, Engine, InjectOut, PrefillOut, SynapseOut};
 pub use kv::KvCache;
+pub use pool::{KvPool, KvPoolConfig, PoolStats};

@@ -1,0 +1,503 @@
+//! The shared KV block pool: demand-paged context memory for every agent.
+//!
+//! The seed architecture gave each agent a full-capacity flat `[L, C, KV, hd]`
+//! buffer, so resident bytes scaled with *configured* capacity rather than
+//! *actual* fill.  `KvPool` replaces that with virtual-memory-style paging:
+//! one shared slab of fixed-size blocks (`block_tokens` positions × all
+//! layers, K+V), a free-list allocator, and per-cache block tables
+//! ([`super::kv::KvCache`]).  Caches rent blocks as they grow and return
+//! them when truncated, cleared or dropped, so
+//!
+//! * an idle or short-context agent costs a handful of blocks, not `C` rows;
+//! * blocks released by finished side agents are immediately reused by new
+//!   ones (the Table-2 "high-water < sum of capacities" property);
+//! * the pool's gauges (blocks live / free / high-water, fragmentation) are
+//!   the measured side of the paper's O(N·k) context-memory claim.
+//!
+//! Invariant: a rented block is exclusively owned by one cache, and readers
+//! only ever observe rows `< len` of a cache — recycled blocks may therefore
+//! carry stale floats beyond the fill without being re-zeroed (the decode
+//! programs mask attention past `cache_len`, and every host-side gather
+//! copies only the valid prefix).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::kv::KvCache;
+use crate::runtime::ModelConfig;
+
+/// Pool sizing + reclaim knobs (surfaced on [`crate::cortex::CortexConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolConfig {
+    /// Positions per block (the paging granularity).
+    pub block_tokens: usize,
+    /// Hard cap on simultaneously rented blocks; `0` = unbounded.  When the
+    /// cap is hit, cache growth fails with a pool-exhaustion error — the
+    /// backpressure signal schedulers act on.
+    pub max_blocks: usize,
+    /// Reclaim policy: how many released blocks the free list may retain for
+    /// reuse before further releases return their memory to the allocator.
+    pub retain_free_blocks: usize,
+}
+
+impl Default for KvPoolConfig {
+    fn default() -> Self {
+        KvPoolConfig {
+            block_tokens: 16,
+            max_blocks: 0,
+            retain_free_blocks: usize::MAX,
+        }
+    }
+}
+
+/// One fixed-size block: `block_tokens` positions × all layers, K and V.
+/// Each buffer is `[L, block_tokens, KV*hd]`, row-major.
+#[derive(Debug)]
+pub struct KvBlock {
+    pub(crate) k: Box<[f32]>,
+    pub(crate) v: Box<[f32]>,
+}
+
+#[derive(Debug, Default)]
+struct PoolState {
+    free: Vec<KvBlock>,
+    live: usize,
+    high_water: usize,
+}
+
+/// Live gauges of one pool (the `/stats` and Table-2 reporting unit).
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    pub block_tokens: usize,
+    /// Bytes of one block (K + V, all layers).
+    pub block_bytes: u64,
+    /// Blocks currently rented by caches.
+    pub blocks_live: usize,
+    /// Released blocks held for reuse.
+    pub blocks_free: usize,
+    /// Peak simultaneously-rented blocks.
+    pub blocks_high_water: usize,
+    /// Total rents (fresh allocations + reuses).
+    pub rents: u64,
+    /// Rents served from the free list instead of a fresh allocation.
+    pub reuses: u64,
+    pub releases: u64,
+    /// Filled positions across all live caches.
+    pub rows_live: u64,
+}
+
+impl PoolStats {
+    /// Bytes held by rented blocks (the resident-context figure).
+    pub fn live_bytes(&self) -> u64 {
+        self.blocks_live as u64 * self.block_bytes
+    }
+
+    /// Bytes held by the pool overall (rented + retained free blocks).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.blocks_live + self.blocks_free) as u64 * self.block_bytes
+    }
+
+    pub fn high_water_bytes(&self) -> u64 {
+        self.blocks_high_water as u64 * self.block_bytes
+    }
+
+    /// Internal fragmentation: the fraction of rented positions that hold no
+    /// row yet (allocated-but-unfilled block tails).
+    pub fn fragmentation(&self) -> f64 {
+        let cap = (self.blocks_live * self.block_tokens) as f64;
+        if cap <= 0.0 {
+            0.0
+        } else {
+            (1.0 - self.rows_live as f64 / cap).max(0.0)
+        }
+    }
+}
+
+/// The shared block allocator.  Exactly one per [`super::Engine`] — every
+/// cache the engine or the orchestrator hands out rents from it, so the
+/// capacity cap and the occupancy gauges cover the whole system.  The
+/// paging granularity (`block_tokens`) is fixed at construction; the
+/// limits (`max_blocks`, `retain_free_blocks`) are runtime-adjustable via
+/// [`KvPool::set_limits`] so [`crate::cortex::WarpCortex`] can apply its
+/// config knobs to an already-built engine's pool.
+pub struct KvPool {
+    block_tokens: usize,
+    max_blocks: AtomicUsize,
+    retain_free_blocks: AtomicUsize,
+    n_layers: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    state: Mutex<PoolState>,
+    rents: AtomicU64,
+    reuses: AtomicU64,
+    releases: AtomicU64,
+    rows_live: AtomicU64,
+}
+
+impl std::fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("KvPool")
+            .field("block_tokens", &s.block_tokens)
+            .field("blocks_live", &s.blocks_live)
+            .field("blocks_free", &s.blocks_free)
+            .field("blocks_high_water", &s.blocks_high_water)
+            .finish()
+    }
+}
+
+impl KvPool {
+    pub fn new(model: &ModelConfig, cfg: KvPoolConfig) -> Arc<KvPool> {
+        assert!(cfg.block_tokens > 0, "block_tokens must be positive");
+        Arc::new(KvPool {
+            block_tokens: cfg.block_tokens,
+            max_blocks: AtomicUsize::new(cfg.max_blocks),
+            retain_free_blocks: AtomicUsize::new(cfg.retain_free_blocks),
+            n_layers: model.n_layers,
+            kv_heads: model.n_kv_heads,
+            head_dim: model.head_dim,
+            state: Mutex::new(PoolState::default()),
+            rents: AtomicU64::new(0),
+            reuses: AtomicU64::new(0),
+            releases: AtomicU64::new(0),
+            rows_live: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> KvPoolConfig {
+        KvPoolConfig {
+            block_tokens: self.block_tokens,
+            max_blocks: self.max_blocks.load(Ordering::Relaxed),
+            retain_free_blocks: self.retain_free_blocks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Adjust the runtime limits (capacity cap + reclaim policy).  The
+    /// paging granularity is fixed at construction — changing it would
+    /// invalidate every live block table.
+    pub fn set_limits(&self, max_blocks: usize, retain_free_blocks: usize) {
+        self.max_blocks.store(max_blocks, Ordering::Relaxed);
+        self.retain_free_blocks
+            .store(retain_free_blocks, Ordering::Relaxed);
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub(crate) fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub(crate) fn kv_heads(&self) -> usize {
+        self.kv_heads
+    }
+
+    pub(crate) fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Floats per (layer, position): `KV * hd`.
+    pub(crate) fn row(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// Floats in one block buffer (K or V alone).
+    pub(crate) fn block_floats(&self) -> usize {
+        self.n_layers * self.block_tokens * self.row()
+    }
+
+    /// Bytes of one block, K + V.
+    pub fn block_bytes(&self) -> u64 {
+        (self.block_floats() * 2 * 4) as u64
+    }
+
+    /// Blocks needed to hold `rows` positions (round up; 0 rows → 0 blocks).
+    /// (Spelled out instead of `div_ceil` to keep the MSRV permissive.)
+    #[allow(clippy::manual_div_ceil)]
+    pub fn blocks_for(&self, rows: usize) -> usize {
+        (rows + self.block_tokens - 1) / self.block_tokens
+    }
+
+    /// Rent one block: reuse a freed block if available, otherwise allocate
+    /// a fresh zeroed one.  Fails when the pool is at `max_blocks` — the
+    /// caller surfaces this as cache-growth backpressure.
+    pub(crate) fn rent_block(&self) -> Result<KvBlock> {
+        let mut st = self.state.lock().unwrap();
+        // The cap binds on LIVE blocks, so it must be checked before the
+        // free list too — parked free blocks don't grant cap headroom.
+        let max_blocks = self.max_blocks.load(Ordering::Relaxed);
+        if max_blocks > 0 && st.live >= max_blocks {
+            bail!(
+                "kv pool exhausted: {} blocks live (max {max_blocks}, block_tokens {})",
+                st.live,
+                self.block_tokens
+            );
+        }
+        if let Some(b) = st.free.pop() {
+            st.live += 1;
+            st.high_water = st.high_water.max(st.live);
+            drop(st);
+            self.rents.fetch_add(1, Ordering::Relaxed);
+            self.reuses.fetch_add(1, Ordering::Relaxed);
+            return Ok(b);
+        }
+        st.live += 1;
+        st.high_water = st.high_water.max(st.live);
+        drop(st);
+        self.rents.fetch_add(1, Ordering::Relaxed);
+        let n = self.block_floats();
+        Ok(KvBlock {
+            k: vec![0.0; n].into_boxed_slice(),
+            v: vec![0.0; n].into_boxed_slice(),
+        })
+    }
+
+    /// Return a block.  Retained on the free list up to
+    /// `retain_free_blocks`; past that the block's memory goes back to the
+    /// allocator (the reclaim policy).
+    pub(crate) fn release_block(&self, block: KvBlock) {
+        self.releases.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.state.lock().unwrap();
+        st.live = st.live.saturating_sub(1);
+        if st.free.len() < self.retain_free_blocks.load(Ordering::Relaxed) {
+            st.free.push(block);
+        }
+    }
+
+    pub(crate) fn note_rows_added(&self, n: usize) {
+        self.rows_live.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_rows_removed(&self, n: usize) {
+        // Saturating: a miscounted release must not wrap the gauge.
+        let _ = self
+            .rows_live
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                Some(cur.saturating_sub(n as u64))
+            });
+    }
+
+    /// A fresh pool-backed cache able to hold up to `capacity` rows.
+    pub fn new_cache(self: &Arc<Self>, capacity: usize) -> KvCache {
+        KvCache::with_pool(self.clone(), capacity)
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let st = self.state.lock().unwrap();
+        PoolStats {
+            block_tokens: self.block_tokens,
+            block_bytes: self.block_bytes(),
+            blocks_live: st.live,
+            blocks_free: st.free.len(),
+            blocks_high_water: st.high_water,
+            rents: self.rents.load(Ordering::Relaxed),
+            reuses: self.reuses.load(Ordering::Relaxed),
+            releases: self.releases.load(Ordering::Relaxed),
+            rows_live: self.rows_live.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 192,
+            vocab_size: 260,
+            head_dim: 16,
+            rope_theta: 1e4,
+            param_count: 0,
+        }
+    }
+
+    fn pool(block_tokens: usize, max_blocks: usize) -> Arc<KvPool> {
+        KvPool::new(
+            &tiny_cfg(),
+            KvPoolConfig {
+                block_tokens,
+                max_blocks,
+                retain_free_blocks: usize::MAX,
+            },
+        )
+    }
+
+    #[test]
+    fn rent_release_reuse_round_trip() {
+        let p = pool(4, 0);
+        assert_eq!(p.block_bytes(), (2 * 4 * 32 * 2 * 4) as u64);
+
+        let a = p.rent_block().unwrap();
+        let b = p.rent_block().unwrap();
+        let s = p.stats();
+        assert_eq!(s.blocks_live, 2);
+        assert_eq!(s.blocks_free, 0);
+        assert_eq!(s.blocks_high_water, 2);
+        assert_eq!(s.reuses, 0);
+
+        p.release_block(a);
+        p.release_block(b);
+        let s = p.stats();
+        assert_eq!(s.blocks_live, 0);
+        assert_eq!(s.blocks_free, 2);
+
+        // the next rents come from the free list, not fresh allocations
+        let _c = p.rent_block().unwrap();
+        let _d = p.rent_block().unwrap();
+        let s = p.stats();
+        assert_eq!(s.reuses, 2);
+        assert_eq!(s.blocks_live, 2);
+        assert_eq!(s.blocks_free, 0);
+        assert_eq!(s.blocks_high_water, 2, "reuse must not raise the peak");
+    }
+
+    #[test]
+    fn exhaustion_backpressure() {
+        let p = pool(4, 2);
+        let a = p.rent_block().unwrap();
+        let _b = p.rent_block().unwrap();
+        let err = p.rent_block().unwrap_err();
+        assert!(format!("{err:#}").contains("exhausted"));
+        // releasing frees capacity again
+        p.release_block(a);
+        assert!(p.rent_block().is_ok());
+    }
+
+    #[test]
+    fn set_limits_applies_at_runtime() {
+        // The orchestrator adopts an engine's pool and applies its knobs
+        // after construction — the cap must bind immediately.
+        let p = pool(4, 0);
+        let _a = p.rent_block().unwrap();
+        p.set_limits(1, usize::MAX);
+        assert!(p.rent_block().is_err(), "cap of 1 with 1 live must refuse");
+        assert_eq!(p.config().max_blocks, 1);
+        p.set_limits(0, usize::MAX);
+        assert!(p.rent_block().is_ok(), "lifting the cap unblocks growth");
+    }
+
+    #[test]
+    fn cap_binds_even_when_free_blocks_are_parked() {
+        // A retained free list must not grant headroom past max_blocks:
+        // the cap is on LIVE blocks.
+        let p = pool(4, 0);
+        let blocks: Vec<_> = (0..5).map(|_| p.rent_block().unwrap()).collect();
+        for b in blocks {
+            p.release_block(b);
+        }
+        assert_eq!(p.stats().blocks_free, 5);
+        p.set_limits(2, usize::MAX);
+        let _a = p.rent_block().unwrap();
+        let _b = p.rent_block().unwrap();
+        let err = p.rent_block().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("exhausted"),
+            "free-list rent bypassed the cap"
+        );
+    }
+
+    #[test]
+    fn reclaim_policy_caps_free_list() {
+        let p = KvPool::new(
+            &tiny_cfg(),
+            KvPoolConfig {
+                block_tokens: 4,
+                max_blocks: 0,
+                retain_free_blocks: 1,
+            },
+        );
+        let a = p.rent_block().unwrap();
+        let b = p.rent_block().unwrap();
+        let c = p.rent_block().unwrap();
+        p.release_block(a);
+        p.release_block(b);
+        p.release_block(c);
+        let s = p.stats();
+        assert_eq!(s.blocks_free, 1, "free list capped by retain_free_blocks");
+        assert_eq!(s.blocks_live, 0);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let p = pool(16, 0);
+        assert_eq!(p.blocks_for(0), 0);
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(16), 1);
+        assert_eq!(p.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn fragmentation_gauge() {
+        let p = pool(8, 0);
+        let _b = p.rent_block().unwrap();
+        p.note_rows_added(6);
+        let s = p.stats();
+        assert_eq!(s.rows_live, 6);
+        assert!((s.fragmentation() - 0.25).abs() < 1e-9, "{}", s.fragmentation());
+        p.note_rows_removed(6);
+        assert_eq!(p.stats().rows_live, 0);
+    }
+
+    #[test]
+    fn random_rent_release_sequences_reuse_without_growth() {
+        // Fragmentation-free reuse: after any interleaving of rents and
+        // releases, demand that never exceeds a prior peak is served
+        // entirely from the free list — the high-water mark stays put.
+        check("pool reuse under churn", 50, |g| {
+            let p = pool(4, 0);
+            let mut held = Vec::new();
+            let mut peak = 0usize;
+            // phase 1: random churn
+            for _ in 0..g.usize_in(10..60) {
+                if g.bool() || held.is_empty() {
+                    held.push(p.rent_block().map_err(|e| e.to_string())?);
+                    peak = peak.max(held.len());
+                } else {
+                    let i = g.usize_in(0..held.len());
+                    p.release_block(held.swap_remove(i));
+                }
+            }
+            let hw = p.stats().blocks_high_water;
+            crate::prop_assert!(hw == peak, "high-water {hw} != observed peak {peak}");
+            // phase 2: drop everything, then re-rent up to the peak
+            for b in held.drain(..) {
+                p.release_block(b);
+            }
+            let before = p.stats();
+            crate::prop_assert!(
+                before.blocks_free == peak,
+                "free list {} != peak {peak}",
+                before.blocks_free
+            );
+            for _ in 0..peak {
+                held.push(p.rent_block().map_err(|e| e.to_string())?);
+            }
+            let after = p.stats();
+            crate::prop_assert!(
+                after.blocks_high_water == peak,
+                "re-renting to the old peak grew the pool: {} > {peak}",
+                after.blocks_high_water
+            );
+            crate::prop_assert!(
+                after.reuses - before.reuses >= peak as u64,
+                "expected {} reuses, got {}",
+                peak,
+                after.reuses - before.reuses
+            );
+            for b in held.drain(..) {
+                p.release_block(b);
+            }
+            Ok(())
+        });
+    }
+}

@@ -24,6 +24,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::{ArtifactSpec, Manifest};
 use super::tensor::HostTensor;
+// The PJRT surface.  Offline builds use the API-compatible stub (device
+// bring-up fails cleanly with "PJRT backend unavailable"); swapping in the
+// real `xla` crate is this one import line.
+use super::xla_stub as xla;
 
 /// Priority lane of the River & Stream topology (paper §3.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]

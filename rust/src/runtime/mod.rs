@@ -13,6 +13,7 @@
 pub mod device;
 pub mod manifest;
 pub mod tensor;
+pub mod xla_stub;
 
 pub use device::{DeviceHandle, DeviceOptions, Lane, OpResult};
 pub use manifest::{ArtifactSpec, Capacities, ConfigBundle, Manifest, ModelConfig, TensorSpec};

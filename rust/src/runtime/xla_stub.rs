@@ -1,0 +1,166 @@
+//! Build-anywhere stand-in for the `xla` (PJRT) crate's API surface.
+//!
+//! The real backend binds LaurentMazare's `xla` bindings to a PJRT CPU/GPU
+//! plugin — a native dependency that cannot be fetched or built in the
+//! offline environments this repo targets (DESIGN.md §4 lists the same
+//! substitution policy for serde/clap/rand).  `runtime::device` imports
+//! this module under the name `xla`, so the whole serving stack compiles
+//! and every host-side component (pool, caches, cortex, scheduler, HTTP
+//! layer) is testable; only actual program execution is unavailable:
+//! [`PjRtClient::cpu`] fails with a descriptive error, which surfaces as a
+//! clean `DeviceHandle::new` error and lets callers (benches, integration
+//! tests) skip device-dependent paths.
+//!
+//! Swapping in the real crate is a one-line change at the import site —
+//! every type and method signature here mirrors `xla` 0.1.x as used by
+//! `device.rs`.
+
+#![allow(dead_code)]
+
+use std::path::Path;
+
+/// Error type mirroring the real crate's (only `Debug`/`Display` are used).
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type StubResult<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>() -> StubResult<T> {
+    Err(XlaError(
+        "PJRT backend unavailable: this build uses the offline `xla` stub \
+         (link the real `xla` crate to execute compiled artifacts)"
+            .to_string(),
+    ))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F16,
+    F64,
+    U8,
+    Pred,
+}
+
+pub struct PjRtDevice {
+    _private: (),
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> StubResult<Literal> {
+        unavailable()
+    }
+}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn ty(&self) -> StubResult<ElementType> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> StubResult<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> StubResult<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Mirrors the real crate's npz-loading entry point.
+pub trait FromRawBytes: Sized {
+    fn read_npz(path: impl AsRef<Path>, ctx: &()) -> StubResult<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    fn read_npz(_path: impl AsRef<Path>, _ctx: &()) -> StubResult<Vec<(String, Literal)>> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> StubResult<HloModuleProto> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> StubResult<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the stub — the device bring-up error every
+    /// device-dependent caller is expected to handle (or skip on).
+    pub fn cpu() -> StubResult<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _literal: &Literal,
+    ) -> StubResult<PjRtBuffer> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> StubResult<PjRtBuffer> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> StubResult<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}

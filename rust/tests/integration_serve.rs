@@ -1,10 +1,9 @@
 //! Integration: the HTTP serving layer end-to-end over a real socket.
+//! Skips cleanly when the artifacts or the PJRT backend are unavailable.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::sync::Arc;
-
-use once_cell::sync::Lazy;
+use std::sync::{Arc, OnceLock};
 
 use warp_cortex::cortex::{CortexConfig, WarpCortex};
 use warp_cortex::model::Engine;
@@ -12,38 +11,58 @@ use warp_cortex::runtime::{DeviceHandle, DeviceOptions};
 use warp_cortex::serve::{serve, ServerConfig};
 use warp_cortex::util::Json;
 
-static SERVER: Lazy<std::net::SocketAddr> = Lazy::new(|| {
-    let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&["tiny"]))
-        .expect("device (run `make artifacts` first)");
-    let engine = Engine::new(device, "tiny").expect("engine");
-    let cortex = Arc::new(
-        WarpCortex::new(
-            engine,
-            CortexConfig {
-                model: "tiny".into(),
-                max_side_agents: 2,
-                side_gen_budget: 6,
-                ..CortexConfig::default()
+fn server() -> Option<std::net::SocketAddr> {
+    static SERVER: OnceLock<Result<std::net::SocketAddr, String>> = OnceLock::new();
+    match SERVER.get_or_init(|| {
+        let device = DeviceHandle::new(DeviceOptions::from_env().with_configs(&["tiny"]))
+            .map_err(|e| format!("{e:#}"))?;
+        let engine = Engine::new(device, "tiny").map_err(|e| format!("{e:#}"))?;
+        let cortex = Arc::new(
+            WarpCortex::new(
+                engine,
+                CortexConfig {
+                    model: "tiny".into(),
+                    max_side_agents: 2,
+                    side_gen_budget: 6,
+                    ..CortexConfig::default()
+                },
+            )
+            .map_err(|e| format!("{e:#}"))?,
+        );
+        let handle = serve(
+            cortex,
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: 2,
+                max_tokens_cap: 64,
             },
         )
-        .expect("cortex"),
-    );
-    let handle = serve(
-        cortex,
-        ServerConfig {
-            addr: "127.0.0.1:0".into(),
-            workers: 2,
-            max_tokens_cap: 64,
-        },
-    )
-    .expect("server");
-    let addr = handle.addr;
-    std::mem::forget(handle); // keep serving for the whole test binary
-    addr
-});
+        .map_err(|e| format!("{e:#}"))?;
+        let addr = handle.addr;
+        std::mem::forget(handle); // keep serving for the whole test binary
+        Ok(addr)
+    }) {
+        Ok(addr) => Some(*addr),
+        // Surface the REAL bring-up error so stub/missing-artifacts skips
+        // are distinguishable from genuine serving regressions.
+        Err(why) => {
+            eprintln!("skipping device-dependent test — server bring-up failed: {why}");
+            None
+        }
+    }
+}
 
-fn request(method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
-    let mut stream = TcpStream::connect(*SERVER).unwrap();
+macro_rules! require_server {
+    () => {
+        match server() {
+            Some(addr) => addr,
+            None => return,
+        }
+    };
+}
+
+fn request(addr: std::net::SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).unwrap();
     let body = body.unwrap_or("");
     let raw = format!(
         "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
@@ -67,14 +86,17 @@ fn request(method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
 
 #[test]
 fn health_endpoint() {
-    let (status, body) = request("GET", "/health", None);
+    let addr = require_server!();
+    let (status, body) = request(addr, "GET", "/health", None);
     assert_eq!(status, 200);
     assert_eq!(body.get("ok").and_then(|v| v.as_bool()), Some(true));
 }
 
 #[test]
 fn generate_endpoint_roundtrip() {
+    let addr = require_server!();
     let (status, body) = request(
+        addr,
         "POST",
         "/generate",
         Some(r#"{"prompt": "user: tell me about the kv cache.\nriver: ", "max_tokens": 12}"#),
@@ -89,32 +111,42 @@ fn generate_endpoint_roundtrip() {
 
 #[test]
 fn generate_rejects_bad_requests() {
-    let (status, body) = request("POST", "/generate", Some("{not json"));
+    let addr = require_server!();
+    let (status, body) = request(addr, "POST", "/generate", Some("{not json"));
     assert_eq!(status, 400);
     assert!(body.get("error").is_some());
 
-    let (status, _) = request("POST", "/generate", Some(r#"{"nope": 1}"#));
+    let (status, _) = request(addr, "POST", "/generate", Some(r#"{"nope": 1}"#));
     assert_eq!(status, 400);
 }
 
 #[test]
 fn stats_endpoint_reports_categories() {
+    let addr = require_server!();
     // generate once so stats are non-trivial
     let _ = request(
+        addr,
         "POST",
         "/generate",
         Some(r#"{"prompt": "hello there", "max_tokens": 4}"#),
     );
-    let (status, body) = request("GET", "/stats", None);
+    let (status, body) = request(addr, "GET", "/stats", None);
     assert_eq!(status, 200);
     let mem = body.get("memory").unwrap();
     assert!(mem.get("weights").and_then(|v| v.as_i64()).unwrap() > 0);
     assert!(body.get("device").unwrap().get("ops").and_then(|v| v.as_i64()).unwrap() > 0);
     assert!(body.get("device").unwrap().get("river_ops").and_then(|v| v.as_i64()).unwrap() > 0);
+    // pool occupancy gauges are live after an episode
+    let pool = body.get("pool").unwrap();
+    assert!(pool.get("block_tokens").and_then(|v| v.as_i64()).unwrap() > 0);
+    assert!(pool.get("blocks_high_water").and_then(|v| v.as_i64()).unwrap() > 0);
+    assert!(pool.get("resident_bytes").is_some());
+    assert!(pool.get("fragmentation").is_some());
 }
 
 #[test]
 fn unknown_path_404() {
-    let (status, _) = request("GET", "/nope", None);
+    let addr = require_server!();
+    let (status, _) = request(addr, "GET", "/nope", None);
     assert_eq!(status, 404);
 }
