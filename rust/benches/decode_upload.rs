@@ -1,0 +1,159 @@
+//! Bench P2 — device-resident paged decode: per-step host→device traffic
+//! is O(new row + block table), not O(capacity).
+//!
+//! The seed's decode hot path re-uploaded the full gathered cache every
+//! token (`prefix_upload(capacity)` per step per agent); since the
+//! device-resident refactor a step ships the freshly produced row
+//! (write-through at append) plus the block table (gather), and the K/V
+//! itself is read from the pool's resident block copies.  This bench
+//! measures the pool's `h2d_bytes` gauge around simulated decode steps and
+//! *asserts* the O(k) claim — it runs in the CI bench-smoke step.
+//!
+//! Pure host-side — the device slab stands in for PJRT buffers with
+//! identical layout and write-through/gather semantics:
+//!
+//! ```bash
+//! cargo bench --bench decode_upload
+//! ```
+
+use warp_cortex::cortex::memory::fmt_bytes;
+use warp_cortex::model::{KvPool, KvPoolConfig};
+use warp_cortex::runtime::ModelConfig;
+use warp_cortex::util::rng::XorShift;
+use warp_cortex::util::timer::bench_median;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 192,
+        vocab_size: 260,
+        head_dim: 16,
+        rope_theta: 1e4,
+        param_count: 116_032,
+    }
+}
+
+const FILL: usize = 100;
+const STEPS: usize = 40;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = tiny_cfg();
+    let pool = KvPool::new(
+        &cfg,
+        KvPoolConfig {
+            block_tokens: 16,
+            ..KvPoolConfig::default()
+        },
+    );
+    let row_floats = cfg.n_layers * cfg.n_kv_heads * cfg.head_dim;
+    let row_bytes = (row_floats * 2 * 4) as u64; // K+V, f32
+    let mut rng = XorShift::new(0xDEC0DE);
+
+    println!("═══ P2: device-resident paged decode (upload bytes per step) ═══\n");
+    println!(
+        "{:>10} {:>6} {:>14} {:>14} {:>9}",
+        "capacity", "fill", "per-step h2d", "flat re-upload", "saving"
+    );
+
+    // Two caches with very different configured capacities, same fill: the
+    // per-step upload must not see the capacity at all.  (Both leave room
+    // for FILL + STEPS rows.)
+    let capacities = [160usize, 2048];
+    let mut per_step = Vec::new();
+    for &capacity in &capacities {
+        let mut kv = pool.new_cache(capacity);
+        for _ in 0..FILL {
+            let r: Vec<f32> = (0..row_floats).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            kv.append_row(&r, &r)?;
+        }
+        let before = pool.stats().h2d_bytes;
+        let mut expected = 0u64;
+        for _ in 0..STEPS {
+            // one decode step: paged gather (ships the block table) + the
+            // write-through of the newly produced row
+            expected += kv.paged().upload_bytes() + row_bytes;
+            let (k_up, v_up) = kv.device_gather(capacity)?;
+            std::hint::black_box((&k_up, &v_up));
+            let r: Vec<f32> = (0..row_floats).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            kv.append_row(&r, &r)?;
+        }
+        let delta = pool.stats().h2d_bytes - before;
+        // exact composition: every step paid table + len scalar + one row
+        assert_eq!(
+            delta, expected,
+            "per-step upload accounting drifted from table+row"
+        );
+        let step = delta / STEPS as u64;
+        // the flat path re-uploaded the full [L, C, KV, hd] K and V
+        let flat = capacity as u64 * row_bytes;
+        println!(
+            "{:>10} {:>6} {:>14} {:>14} {:>8.0}x",
+            capacity,
+            kv.len(),
+            fmt_bytes(step as f64),
+            fmt_bytes(flat as f64),
+            flat as f64 / step as f64
+        );
+        per_step.push(step);
+
+        // ── the acceptance criteria ──
+        // 1. O(k), not O(capacity): orders of magnitude under the flat
+        //    re-upload even at the SMALL capacity.
+        assert!(
+            step * 50 < flat,
+            "per-step upload {step} B is not ≪ flat {flat} B (capacity {capacity})"
+        );
+        // 2. bounded by row + table, with no hidden capacity term.
+        assert!(
+            step <= row_bytes + kv.paged().upload_bytes(),
+            "per-step upload {step} B exceeds row + block table"
+        );
+    }
+    // 3. capacity-independent: a 16x larger cache pays identical bytes.
+    assert_eq!(
+        per_step[0], per_step[1],
+        "per-step upload must not depend on configured capacity"
+    );
+
+    // The batcher-channel payload shrink (Request carries a PagedKv now).
+    let kv = {
+        let mut kv = pool.new_cache(2048);
+        for _ in 0..FILL {
+            let r: Vec<f32> = (0..row_floats).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            kv.append_row(&r, &r)?;
+        }
+        kv
+    };
+    let paged = kv.paged();
+    let flat_req = 2048 * row_bytes; // the k + v vectors a request used to carry
+    println!(
+        "\nbatcher request payload: {} (block table) vs {} (flat K/V) — {:.0}x smaller",
+        fmt_bytes(paged.upload_bytes() as f64),
+        fmt_bytes(flat_req as f64),
+        flat_req as f64 / paged.upload_bytes() as f64
+    );
+    assert!(paged.upload_bytes() * 100 < flat_req);
+
+    // Gather throughput: device-side paged gather vs the host flat gather.
+    let t_dev = bench_median(3, 50, || {
+        let (k, v) = kv.device_gather(2048).expect("gather");
+        std::hint::black_box((k, v));
+    });
+    let t_host = bench_median(3, 50, || {
+        let (k, v) = kv.prefix_upload(2048);
+        std::hint::black_box((k, v));
+    });
+    println!(
+        "gather at c=2048, {} rows: device-resident {:.1} µs vs host flat {:.1} µs median",
+        kv.len(),
+        t_dev.median_ns / 1e3,
+        t_host.median_ns / 1e3
+    );
+
+    println!("\nshape check: per-step upload is O(new row + block table)  ✓");
+    Ok(())
+}

@@ -7,6 +7,15 @@
 //! issues one `decode_batch` op on the Stream lane, and fans the results
 //! back out.  Single stragglers fall through to the cheaper single-decode
 //! program.
+//!
+//! Requests are **paged**: since the device-resident refactor a request
+//! carries the cache's block table ([`PagedKv`], O(k) ints) instead of
+//! full-capacity K/V vectors, shrinking the channel's in-flight memory from
+//! `O(B·capacity)` floats to `O(B·k)` and eliminating the per-token
+//! full-cache upload.  This is sound because the requesting worker *blocks*
+//! on the reply while the batcher resolves the table against the shared
+//! pool's device copies — the blocks are exclusively owned by the waiting
+//! cache and cannot be mutated, released or re-rented mid-step.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -14,7 +23,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::model::{Engine, KvCache};
+use crate::model::{Engine, KvCache, PagedKv};
 use crate::runtime::Lane;
 
 /// Result of one batched decode step.
@@ -27,9 +36,9 @@ pub struct StepOut {
 struct Request {
     token: i32,
     pos: i32,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    cache_len: i32,
+    /// Block table + valid length of the requesting cache — never the
+    /// cache contents (those are device-resident already).
+    paged: PagedKv,
     reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>>,
 }
 
@@ -91,15 +100,14 @@ impl Batcher {
     pub fn decode(&self, token: i32, pos: i32, kv: &mut KvCache) -> Result<StepOut> {
         self.requests.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
-        // Contiguous full-capacity upload gathered from the pool blocks
-        // (zero-padded past `len`; masked by the compiled program).
-        let (k, v) = kv.prefix_upload(kv.capacity());
+        // O(k) request payload: the block table + length.  The K/V rows are
+        // already device-resident (written through on append); we block on
+        // the reply below, so the referenced blocks stay exclusively ours
+        // for the whole step.
         let req = Request {
             token,
             pos,
-            k,
-            v,
-            cache_len: kv.len() as i32,
+            paged: kv.paged(),
             reply: reply_tx,
         };
         // Clone the sender under the mutex, send outside it: shutdown can
@@ -177,9 +185,8 @@ fn batcher_thread(
             // Straggler: cheaper single-decode program.
             stats.singles.fetch_add(1, Ordering::Relaxed);
             let req = batch.pop().unwrap();
-            let result = engine.decode_side_raw(
-                req.token, req.pos, req.k, req.v, req.cache_len, Lane::Stream,
-            );
+            let result =
+                engine.decode_side_raw(req.token, req.pos, &req.paged, Lane::Stream);
             let _ = req.reply.send(result);
             continue;
         }
@@ -191,17 +198,13 @@ fn batcher_thread(
         let n = batch.len();
         let mut tokens = Vec::with_capacity(n);
         let mut pos = Vec::with_capacity(n);
-        let mut lens = Vec::with_capacity(n);
-        let mut k_all = Vec::new();
-        let mut v_all = Vec::new();
+        let mut views = Vec::with_capacity(n);
         for r in &batch {
             tokens.push(r.token);
             pos.push(r.pos);
-            lens.push(r.cache_len);
-            k_all.extend_from_slice(&r.k);
-            v_all.extend_from_slice(&r.v);
+            views.push(r.paged.clone());
         }
-        match engine.decode_batch_raw(n, tokens, pos, k_all, v_all, lens, Lane::Stream) {
+        match engine.decode_batch_raw(n, tokens, pos, &views, Lane::Stream) {
             Ok(results) => {
                 for (req, out) in batch.into_iter().zip(results) {
                     let _ = req.reply.send(Ok(out));

@@ -11,6 +11,14 @@
 //!   Synapse push ◄── gate-accepted thoughts ◄── side agents (Stream lane,
 //!   (Background)                                dynamic batcher)
 //! ```
+//!
+//! Context memory is device-resident end to end: every cache write (prefill
+//! load, decode append, synapse seed, injection) goes through to the shared
+//! pool's device block copies, and every decode step — main-agent River
+//! steps and batched side steps alike — ships only a block table.  The
+//! episode report's [`PoolStats`] carries the measured `h2d_bytes` /
+//! `dev_gathers` gauges, and the prism charges the device copies to
+//! `MemKind::DeviceKv`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -243,6 +251,20 @@ impl WarpCortex {
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// Rows `prompt` will occupy in a fresh main cache: encoded length
+    /// capped by [`WarpCortex::start_main`]'s truncation window
+    /// (BOS + the most recent `prefill_len - 1` tokens).  The serve layer
+    /// clamps `max_tokens` against this; `start_main` debug-asserts its
+    /// truncated ids match it, so the two cannot silently drift.  (The
+    /// byte-level tokenizer makes the extra encode O(prompt bytes) —
+    /// negligible next to one decode step.)
+    pub fn prompt_rows(&self, prompt: &str) -> usize {
+        Tokenizer::new()
+            .encode(prompt, true)
+            .len()
+            .min(self.engine.caps().prefill_len - 1)
+    }
+
     /// Register + prefill a fresh main agent.
     pub fn start_main(&self, prompt: &str) -> Result<(AgentTicket, Vec<f32>, Vec<f32>)> {
         let tk = Tokenizer::new();
@@ -254,6 +276,9 @@ impl WarpCortex {
             let tail = ids.len() - max_prompt + 1;
             ids = std::iter::once(ids[0]).chain(ids[tail..].iter().copied()).collect();
         }
+        // `prompt_rows` is the serve layer's clamp basis — it must predict
+        // exactly how many rows this truncation produces.
+        debug_assert_eq!(ids.len(), self.prompt_rows(prompt));
         let out = self.engine.prefill(&ids, &mut ticket.kv, Lane::River)?;
         let v = self.engine.config().vocab_size;
         let last = out.logits[(out.len - 1) * v..out.len * v].to_vec();

@@ -33,14 +33,20 @@ pub enum MemKind {
     /// Fixed per-agent runtime overhead (allocator granularity, activation
     /// workspace) — modelled, not measured, on this CPU substrate.
     Overhead = 4,
+    /// Device-resident KV block copies (the pool's device slab).  Counted
+    /// separately from the host-side `MainKv`/`SideKv` charges because both
+    /// copies are genuinely resident: the host rows are the source of
+    /// truth, the device copies are what decode attention actually reads.
+    DeviceKv = 5,
 }
 
-pub const MEM_KINDS: [MemKind; 5] = [
+pub const MEM_KINDS: [MemKind; 6] = [
     MemKind::Weights,
     MemKind::MainKv,
     MemKind::SideKv,
     MemKind::Synapse,
     MemKind::Overhead,
+    MemKind::DeviceKv,
 ];
 
 impl MemKind {
@@ -51,6 +57,7 @@ impl MemKind {
             MemKind::SideKv => "side_kv",
             MemKind::Synapse => "synapse",
             MemKind::Overhead => "overhead",
+            MemKind::DeviceKv => "device_kv",
         }
     }
 }
@@ -58,8 +65,8 @@ impl MemKind {
 /// Live byte accounting, by category.
 #[derive(Debug, Default)]
 pub struct MemoryTracker {
-    live: [AtomicI64; 5],
-    peak: [AtomicI64; 5],
+    live: [AtomicI64; 6],
+    peak: [AtomicI64; 6],
     allocs: AtomicU64,
     frees: AtomicU64,
 }
@@ -95,8 +102,8 @@ impl MemoryTracker {
     }
 
     pub fn snapshot(&self) -> MemSnapshot {
-        let mut per = [0i64; 5];
-        let mut peak = [0i64; 5];
+        let mut per = [0i64; 6];
+        let mut peak = [0i64; 6];
         for (i, _) in MEM_KINDS.iter().enumerate() {
             per[i] = self.live[i].load(Ordering::Relaxed);
             peak[i] = self.peak[i].load(Ordering::Relaxed);
@@ -142,8 +149,8 @@ impl Drop for MemGuard {
 
 #[derive(Debug, Clone)]
 pub struct MemSnapshot {
-    pub per_kind: [i64; 5],
-    pub peak_per_kind: [i64; 5],
+    pub per_kind: [i64; 6],
+    pub peak_per_kind: [i64; 6],
     pub allocs: u64,
     pub frees: u64,
 }

@@ -43,5 +43,5 @@ pub use inject::Injector;
 pub use memory::{MemKind, MemoryModel, MemoryTracker};
 pub use prism::{AgentKind, AgentTicket, Prism};
 pub use router::{AgentRole, Router, RouterConfig, Trigger};
-pub use scheduler::StreamScheduler;
+pub use scheduler::{StreamScheduler, TaskRunner};
 pub use synapse::{adaptive_subset, SeedMode, Synapse, SynapseSnapshot};

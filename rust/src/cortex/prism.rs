@@ -110,6 +110,11 @@ impl Prism {
     ) -> Arc<Prism> {
         let weight_bytes = engine.device().weight_bytes(&engine.config().name);
         let weights_mem = tracker.alloc(MemKind::Weights, weight_bytes);
+        // One gauge for the pool's device-resident block copies: the pool
+        // resizes it as buffers materialise on first write-through and free
+        // on reclaim, so Table 2 shows both sides of each block (host rows
+        // under Main/SideKv, the device copy under DeviceKv).
+        pool.track_device(tracker.alloc(MemKind::DeviceKv, 0));
         Arc::new(Prism {
             engine,
             tracker,

@@ -12,7 +12,13 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
-use super::agent::{run_side_agent, SideContext, SideOutcome, SideTask};
+use super::agent::{run_side_agent, SideContext, SideOutcome, SideState, SideTask};
+
+/// The function a worker runs per claimed task.  Production wraps
+/// [`run_side_agent`] (see [`StreamScheduler::new`]); tests inject stub
+/// runners so the scheduler's claiming/drain protocol can be hammered
+/// without a device.
+pub type TaskRunner = Arc<dyn Fn(SideTask) -> SideOutcome + Send + Sync>;
 
 /// Scheduler statistics.
 #[derive(Debug, Clone, Default)]
@@ -46,6 +52,17 @@ impl StreamScheduler {
     /// Spawn `workers` side-agent threads sharing `ctx`.  At most
     /// `max_queue` tasks may wait beyond the running ones (backpressure).
     pub fn new(ctx: Arc<SideContext>, workers: usize, max_queue: usize) -> StreamScheduler {
+        StreamScheduler::with_runner(
+            Arc::new(move |task| run_side_agent(&ctx, task)),
+            workers,
+            max_queue,
+        )
+    }
+
+    /// Scheduler over an arbitrary task runner — the seam the drain-race
+    /// regression tests drive (no engine required); production callers use
+    /// [`StreamScheduler::new`].
+    pub fn with_runner(runner: TaskRunner, workers: usize, max_queue: usize) -> StreamScheduler {
         let queue = Arc::new(SharedQueue {
             tasks: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -56,12 +73,12 @@ impl StreamScheduler {
         let handles = (0..workers.max(1))
             .map(|i| {
                 let queue = queue.clone();
-                let ctx = ctx.clone();
+                let runner = runner.clone();
                 let tx = results_tx.clone();
                 let active = active.clone();
                 std::thread::Builder::new()
                     .name(format!("warp-stream-{i}"))
-                    .spawn(move || worker_loop(queue, ctx, tx, active))
+                    .spawn(move || worker_loop(queue, runner, tx, active))
                     .expect("spawn stream worker")
             })
             .collect();
@@ -117,17 +134,29 @@ impl StreamScheduler {
     }
 
     /// Tasks currently running or queued.
+    ///
+    /// Consistent by construction: workers *claim* a task (increment
+    /// `active`) while still holding the queue lock, and this reads both
+    /// gauges under that same lock — a task can never be observed in
+    /// neither place.  Workers un-claim only after the outcome has been
+    /// sent, so `in_flight() == 0` additionally guarantees every produced
+    /// result is already observable via `poll_results`/`wait_result`.
     pub fn in_flight(&self) -> usize {
-        self.active.load(Ordering::Relaxed) + self.queue.tasks.lock().unwrap().len()
+        let q = self.queue.tasks.lock().unwrap();
+        self.active.load(Ordering::SeqCst) + q.len()
     }
 
     pub fn stats(&self) -> SchedulerStats {
+        let (active, queued) = {
+            let q = self.queue.tasks.lock().unwrap();
+            (self.active.load(Ordering::SeqCst), q.len())
+        };
         SchedulerStats {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected_capacity: self.rejected.load(Ordering::Relaxed),
-            active: self.active.load(Ordering::Relaxed),
-            queued: self.queue.tasks.lock().unwrap().len(),
+            active,
+            queued,
         }
     }
 
@@ -162,9 +191,20 @@ impl Drop for StreamScheduler {
     }
 }
 
+/// Un-claims (decrements `active`) on drop — including on unwind — so no
+/// code path can leak the claim and wedge `in_flight()` above zero forever
+/// (which would make every future `drain()` time out).
+struct Claim<'a>(&'a AtomicUsize);
+
+impl Drop for Claim<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 fn worker_loop(
     queue: Arc<SharedQueue>,
-    ctx: Arc<SideContext>,
+    runner: TaskRunner,
     results: mpsc::Sender<SideOutcome>,
     active: Arc<AtomicUsize>,
 ) {
@@ -176,21 +216,217 @@ fn worker_loop(
                     return;
                 }
                 if let Some(t) = q.pop_front() {
+                    // Claim while still holding the queue lock.  Popping
+                    // first and incrementing after released a window in
+                    // which `in_flight()` read 0 with a task mid-flight —
+                    // `drain()` and shutdown could report success with work
+                    // outstanding (the PR-2 drain race).
+                    active.fetch_add(1, Ordering::SeqCst);
                     break t;
                 }
                 q = queue.cv.wait(q).unwrap();
             }
         };
-        active.fetch_add(1, Ordering::SeqCst);
-        let outcome = run_side_agent(&ctx, task);
-        active.fetch_sub(1, Ordering::SeqCst);
-        if results.send(outcome).is_err() {
+        let claim = Claim(&active);
+        // Contain panics: a poisoned agent must not kill the worker thread
+        // (with a small pool that would strand every queued task and wedge
+        // drain); it surfaces as a Failed outcome like any other error.
+        let fallback = task.clone();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| runner(task)))
+            .unwrap_or_else(|_| SideOutcome {
+                elapsed: fallback.spawned_at.elapsed(),
+                task: fallback,
+                state: SideState::Failed,
+                text: String::new(),
+                tokens: vec![],
+                hidden: vec![],
+                steps: 0,
+                synapse_version: 0,
+                error: Some("side agent panicked".into()),
+            });
+        // Deliver BEFORE un-claiming: once `in_flight()` reads 0, the
+        // outcome is guaranteed to be sitting in the results channel.
+        let delivered = results.send(outcome).is_ok();
+        drop(claim);
+        if !delivered {
             return;
         }
     }
 }
 
 // Scheduler behaviour with a real engine is covered by
-// rust/tests/integration_cortex.rs; queue-capacity/backpressure unit tests
-// would require a mock engine, which the SideContext design intentionally
-// avoids (it is exercised end-to-end instead).
+// rust/tests/integration_cortex.rs; the claiming/drain protocol itself is
+// unit-tested below through the `with_runner` seam (no engine needed).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cortex::agent::SideState;
+    use crate::cortex::router::AgentRole;
+    use std::time::{Duration, Instant};
+
+    fn task(id: u64) -> SideTask {
+        SideTask {
+            id,
+            role: AgentRole::Verify,
+            payload: "x".into(),
+            main_pos: 0,
+            spawned_at: Instant::now(),
+        }
+    }
+
+    fn outcome(task: SideTask) -> SideOutcome {
+        SideOutcome {
+            task,
+            state: SideState::Finished,
+            text: String::new(),
+            tokens: vec![],
+            hidden: vec![],
+            steps: 0,
+            synapse_version: 0,
+            elapsed: Duration::from_millis(0),
+            error: None,
+        }
+    }
+
+    /// The drain-race regression hammer: a task must never be observable
+    /// in neither the queue nor the active gauge while its outcome is
+    /// still undelivered.  With the pre-fix ordering (pop → unlock →
+    /// claim, and un-claim → send) this trips within a few hundred rounds.
+    #[test]
+    fn in_flight_never_drops_a_mid_flight_task() {
+        let s = StreamScheduler::with_runner(Arc::new(outcome), 1, 64);
+        for round in 0..500u64 {
+            assert!(s.submit(task(round)));
+            loop {
+                if s.in_flight() == 0 {
+                    // nothing queued, nothing active → the result MUST
+                    // already be in the channel
+                    let got = s.poll_results();
+                    assert!(
+                        !got.is_empty(),
+                        "round {round}: in_flight()==0 but the outcome \
+                         was not delivered — drain race"
+                    );
+                    break;
+                }
+                if s.wait_result(Duration::from_millis(1)).is_some() {
+                    break;
+                }
+            }
+        }
+        assert!(s.drain(Duration::from_secs(1)));
+        s.shutdown();
+    }
+
+    /// `drain()` returning true must mean every submitted task's outcome
+    /// is already retrievable (submit hammered from several threads).
+    #[test]
+    fn drain_means_all_outcomes_delivered() {
+        let s = Arc::new(StreamScheduler::with_runner(
+            Arc::new(|t| {
+                std::thread::sleep(Duration::from_micros(200));
+                outcome(t)
+            }),
+            4,
+            1024,
+        ));
+        let mut submitted = 0u64;
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    let mut ok = 0u64;
+                    for i in 0..64u64 {
+                        if s.submit(task(t * 1000 + i)) {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+        for h in handles {
+            submitted += h.join().unwrap();
+        }
+        assert!(s.drain(Duration::from_secs(10)), "drain timed out");
+        // nothing was polled before the drain, so every outcome must now
+        // be sitting in the channel
+        let got = s.poll_results().len() as u64;
+        assert_eq!(
+            got, submitted,
+            "drain reported success with {} of {submitted} outcomes missing",
+            submitted - got
+        );
+    }
+
+    /// A panicking runner must neither leak its claim nor kill the worker:
+    /// with a single worker, an uncontained panic would strand every queued
+    /// task and wedge `drain()` forever.  The panic surfaces as a Failed
+    /// outcome and the worker keeps serving.
+    #[test]
+    fn panicking_runner_does_not_wedge_the_scheduler() {
+        let s = StreamScheduler::with_runner(
+            Arc::new(|t: SideTask| {
+                if t.id == 1 {
+                    panic!("side agent blew up");
+                }
+                outcome(t)
+            }),
+            1, // sole worker: it MUST survive the panic
+            8,
+        );
+        assert!(s.submit(task(1)));
+        assert!(s.submit(task(2)));
+        assert!(
+            s.drain(Duration::from_secs(5)),
+            "panicked worker wedged the scheduler"
+        );
+        let got = s.poll_results();
+        assert_eq!(got.len(), 2, "both outcomes must be delivered");
+        let failed: Vec<_> = got.iter().filter(|o| o.error.is_some()).collect();
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].task.id, 1);
+        assert!(failed[0].error.as_deref().unwrap().contains("panicked"));
+        s.shutdown();
+    }
+
+    #[test]
+    fn queue_capacity_backpressure_rejects() {
+        // One worker parked on a gate; max_queue = 2 beyond it.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = gate.clone();
+        let s = StreamScheduler::with_runner(
+            Arc::new(move |t| {
+                let (lock, cv) = &*g;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                outcome(t)
+            }),
+            1,
+            2,
+        );
+        assert!(s.submit(task(1)));
+        // wait until the worker has claimed task 1 (queue empty, active 1)
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while s.stats().queued != 0 || s.stats().active != 1 {
+            assert!(Instant::now() < deadline, "worker never claimed");
+            std::thread::yield_now();
+        }
+        assert!(s.submit(task(2)));
+        assert!(s.submit(task(3)));
+        assert!(!s.submit(task(4)), "queue past max_queue must reject");
+        assert_eq!(s.stats().rejected_capacity, 1);
+        assert_eq!(s.in_flight(), 3);
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        assert!(s.drain(Duration::from_secs(5)));
+        assert_eq!(s.poll_results().len(), 3);
+        s.shutdown();
+    }
+}

@@ -43,14 +43,29 @@ impl SynapseSnapshot {
     pub fn coarsen(&self, k2: usize) -> SynapseOut {
         let lm = &self.landmarks;
         let k = lm.indices.len();
+        if k == 0 {
+            return subset(lm, &[]);
+        }
         let k2 = k2.min(k).max(1);
         // rank landmarks by score, keep top k2, restore causal order
         let mut order: Vec<usize> = (0..k).collect();
-        order.sort_by(|&a, &b| lm.scores[b].partial_cmp(&lm.scores[a]).unwrap());
+        order.sort_by(|&a, &b| sort_score(lm.scores[b]).total_cmp(&sort_score(lm.scores[a])));
         let mut keep: Vec<usize> = order[..k2].to_vec();
         keep.sort_unstable();
 
         subset(lm, &keep)
+    }
+}
+
+/// NaN-proof descending-sort key: a NaN hybrid score ranks as lowest
+/// priority (−∞) instead of aborting the orchestrator — the previous
+/// `partial_cmp(..).unwrap()` panicked on the first NaN an extraction
+/// produced.
+fn sort_score(s: f32) -> f32 {
+    if s.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        s
     }
 }
 
@@ -59,6 +74,18 @@ impl SynapseSnapshot {
 pub fn subset(lm: &SynapseOut, keep: &[usize]) -> SynapseOut {
     let k = lm.indices.len();
     let l = lm.n_layers.max(1);
+    // k = 0 would divide by zero in the row-width computation; an empty
+    // landmark set subsets to an empty set regardless of `keep`.
+    if k == 0 || keep.is_empty() {
+        return SynapseOut {
+            lm_k: Vec::new(),
+            lm_v: Vec::new(),
+            indices: Vec::new(),
+            scores: Vec::new(),
+            source_len: lm.source_len,
+            n_layers: lm.n_layers,
+        };
+    }
     let w = lm.lm_k.len() / (l * k); // row width = KV * hd
     let mut lm_k = Vec::with_capacity(l * keep.len() * w);
     let mut lm_v = Vec::with_capacity(l * keep.len() * w);
@@ -91,7 +118,7 @@ pub fn adaptive_subset(lm: &SynapseOut, target_mass: f32, min_k: usize) -> Synap
         return subset(lm, &(0..k).collect::<Vec<_>>());
     }
     let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by(|&a, &b| lm.scores[b].partial_cmp(&lm.scores[a]).unwrap());
+    order.sort_by(|&a, &b| sort_score(lm.scores[b]).total_cmp(&sort_score(lm.scores[a])));
     let mut mass = 0.0f32;
     let mut keep = Vec::new();
     for &i in &order {
@@ -137,8 +164,16 @@ impl Synapse {
     /// Publish a new landmark set (replaces the previous snapshot; existing
     /// readers keep their `Arc` until they drop it).
     pub fn push(&self, landmarks: SynapseOut) -> u64 {
-        let bytes = (landmarks.lm_k.len() + landmarks.lm_v.len()) as u64 * 4
-            + landmarks.indices.len() as u64 * 8;
+        // Actual buffer bytes: f32 landmark K/V and scores, i32 indices —
+        // all 4 bytes/element.  (The old formula charged 8 bytes per index
+        // and skipped the scores, so the Table-2 synapse row drifted from
+        // the real footprint; the accounting test now pins this to
+        // `size_of_val` of the buffers.)
+        let bytes = (landmarks.lm_k.len()
+            + landmarks.lm_v.len()
+            + landmarks.scores.len()
+            + landmarks.indices.len()) as u64
+            * 4;
         let version = self.version.fetch_add(1, Ordering::SeqCst) + 1;
         let snap = Arc::new(SynapseSnapshot {
             landmarks,
@@ -272,8 +307,16 @@ mod tests {
     fn memory_accounted_once_not_per_reader() {
         let t = MemoryTracker::new();
         let s = Synapse::new(t.clone());
-        s.push(fake_landmarks(4, 100, 8));
+        let lm = fake_landmarks(4, 100, 8);
+        // the charge must equal the buffers' actual sizes, not a formula
+        // that drifts from them (the old one: indices at 8 B, scores free)
+        let expect = (std::mem::size_of_val(&lm.lm_k[..])
+            + std::mem::size_of_val(&lm.lm_v[..])
+            + std::mem::size_of_val(&lm.scores[..])
+            + std::mem::size_of_val(&lm.indices[..])) as i64;
+        s.push(lm);
         let before = t.live_bytes(MemKind::Synapse);
+        assert_eq!(before, expect, "accounted bytes != actual buffer bytes");
         assert!(before > 0);
         let _r1 = s.read();
         let _r2 = s.read();
@@ -340,6 +383,56 @@ mod tests {
         assert_eq!(floored.indices.len(), 3);
         // causal order always
         assert!(floored.indices.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn nan_scores_rank_last_instead_of_panicking() {
+        // A single NaN hybrid score used to abort the orchestrator through
+        // partial_cmp().unwrap(); it must now simply lose every comparison.
+        let mut lm = structured_landmarks();
+        lm.scores[1] = f32::NAN; // poisons what was the top score
+        let t = MemoryTracker::new();
+        let s = Synapse::new(t);
+        s.push(lm);
+        let snap = s.read().unwrap();
+        let coarse = snap.coarsen(2);
+        // top-2 of {0.1, NaN, 0.3, 0.6} is {0.6, 0.3} → causal [20, 30]
+        assert_eq!(coarse.indices, vec![20, 30]);
+        // adaptive: total mass 1.0 (NaN counts as 0); 0.99 needs the three
+        // real scores and never the NaN landmark
+        let ad = adaptive_subset(&snap.landmarks, 0.99, 1);
+        assert_eq!(ad.indices, vec![3, 20, 30]);
+        // an all-NaN set degrades gracefully rather than panicking
+        let mut all_nan = structured_landmarks();
+        for sc in all_nan.scores.iter_mut() {
+            *sc = f32::NAN;
+        }
+        assert_eq!(adaptive_subset(&all_nan, 0.5, 1).indices.len(), 4);
+        let t2 = MemoryTracker::new();
+        let s2 = Synapse::new(t2);
+        s2.push(all_nan);
+        assert_eq!(s2.read().unwrap().coarsen(2).indices.len(), 2);
+    }
+
+    #[test]
+    fn empty_landmark_set_is_safe() {
+        // k = 0 used to divide by zero in subset's row-width computation.
+        let lm = SynapseOut {
+            lm_k: vec![],
+            lm_v: vec![],
+            indices: vec![],
+            scores: vec![],
+            source_len: 7,
+            n_layers: 2,
+        };
+        let sub = subset(&lm, &[]);
+        assert!(sub.indices.is_empty() && sub.lm_k.is_empty());
+        assert_eq!(sub.source_len, 7);
+        assert!(adaptive_subset(&lm, 0.5, 1).indices.is_empty());
+        let t = MemoryTracker::new();
+        let s = Synapse::new(t);
+        s.push(lm);
+        assert!(s.read().unwrap().coarsen(3).indices.is_empty());
     }
 
     #[test]

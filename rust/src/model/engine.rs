@@ -4,13 +4,21 @@
 //! Prism of §3.2): it holds no per-agent state, only program ids and the
 //! device handle.  Every method takes the [`Lane`] the op should run on, so
 //! the River & Stream scheduler controls priority end-to-end.
+//!
+//! Decode is **device-resident**: cache rows are written through to the
+//! pool's device copies as they are produced, so a step ships a token, a
+//! position and a block table ([`PagedKv`]) — the K/V itself comes from the
+//! paged-attention gather over resident blocks (`O(new row + table)`
+//! host→device traffic per step instead of the seed's `O(capacity)`
+//! re-upload; see `model::pool` for the slab design and
+//! `benches/decode_upload.rs` for the measured claim).
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use super::kv::KvCache;
-use super::pool::{KvPool, KvPoolConfig};
+use super::pool::{KvPool, KvPoolConfig, PagedKv};
 use crate::runtime::device::ProgramId;
 use crate::runtime::{
     Capacities, DeviceHandle, HostTensor, Lane, ModelConfig,
@@ -274,9 +282,13 @@ impl Engine {
             bail!("decode_at_tier: {} rows do not fit tier {tier}", kv.len());
         }
 
-        // Block-translation gather: one contiguous `[L, tier, KV, hd]`
-        // upload regardless of how the rows are spread across pool blocks.
-        let (k_up, v_up) = kv.prefix_upload(tier);
+        // Device-resident paged path: the cache rows already live on the
+        // device (written through at append time), so this step ships only
+        // the block table + scalars; the `[L, tier, KV, hd]` K/V comes from
+        // the paged-attention gather over resident blocks.  (On the offline
+        // stub the gather runs host-side with identical semantics — see
+        // `runtime::xla_stub::paged_gather_prefix`.)
+        let (k_up, v_up) = kv.device_gather(tier)?;
         let shape = vec![
             self.cfg.n_layers,
             tier,
@@ -306,20 +318,22 @@ impl Engine {
         })
     }
 
-    /// Single side-agent decode over raw cache buffers (the batcher's
-    /// straggler path).  Returns `(logits, hidden, k_new, v_new)` without
-    /// touching any `KvCache`.
+    /// Single side-agent decode over a paged view (the batcher's straggler
+    /// path).  `paged` must address blocks of **this engine's pool** — the
+    /// batcher's requests come from prism-rented caches, which always do.
+    /// Returns `(logits, hidden, k_new, v_new)` without touching any
+    /// `KvCache`; the caller appends the new row (which writes it through
+    /// to the device copy).
     #[allow(clippy::type_complexity)]
     pub fn decode_side_raw(
         &self,
         token: i32,
         pos: i32,
-        k: Vec<f32>,
-        v: Vec<f32>,
-        cache_len: i32,
+        paged: &PagedKv,
         lane: Lane,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
         let cs = self.caps.side_ctx;
+        let (k, v) = self.pool.dev_gather_prefix(&paged.table, paged.len, cs)?;
         let shape = vec![
             self.cfg.n_layers,
             cs,
@@ -333,7 +347,7 @@ impl Engine {
                 HostTensor::scalar_i32(pos),
                 HostTensor::f32(k, shape.clone()),
                 HostTensor::f32(v, shape),
-                HostTensor::scalar_i32(cache_len),
+                HostTensor::scalar_i32(paged.len as i32),
             ],
             lane,
         )?;
@@ -346,34 +360,47 @@ impl Engine {
         ))
     }
 
-    /// Batched side-agent decode over raw cache buffers (the dynamic
-    /// batcher's entry point — it owns flat copies, not `KvCache`s).
+    /// Batched side-agent decode over paged views (the dynamic batcher's
+    /// entry point — requests carry block tables, not flat copies).
     ///
     /// `n` is the number of real slots; the remaining `B - n` lanes are
-    /// padded.  `k_all`/`v_all` are `[B, L, Cs, KV, hd]` with the first `n`
-    /// slots filled.  Returns `n` tuples `(logits, hidden, k_new, v_new)`.
-    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
+    /// padded.  `views[i]` must address blocks of this engine's pool; each
+    /// lane's `[L, Cs, KV, hd]` K/V is gathered device-side from the
+    /// resident block copies.  Returns `n` tuples
+    /// `(logits, hidden, k_new, v_new)`.
+    #[allow(clippy::type_complexity)]
     pub fn decode_batch_raw(
         &self,
         n: usize,
         mut tokens: Vec<i32>,
         mut pos: Vec<i32>,
-        mut k_all: Vec<f32>,
-        mut v_all: Vec<f32>,
-        mut lens: Vec<i32>,
+        views: &[PagedKv],
         lane: Lane,
     ) -> Result<Vec<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>> {
         let b = self.caps.decode_batch;
         if n == 0 || n > b {
             bail!("decode_batch_raw: {n} slots not in 1..={b}");
         }
+        if views.len() != n {
+            bail!("decode_batch_raw: {} views for {n} slots", views.len());
+        }
         let cs = self.caps.side_ctx;
         let per = self.cfg.n_layers * cs * self.cfg.n_kv_heads * self.cfg.head_dim;
         tokens.resize(b, self.pad_id);
         pos.resize(b, 0);
-        lens.resize(b, 0);
-        k_all.resize(b * per, 0.0);
-        v_all.resize(b * per, 0.0);
+        let mut lens = vec![0i32; b];
+        let mut k_all = vec![0.0f32; b * per];
+        let mut v_all = vec![0.0f32; b * per];
+        for (i, view) in views.iter().enumerate() {
+            lens[i] = view.len as i32;
+            self.pool.dev_gather_prefix_into(
+                &view.table,
+                view.len,
+                cs,
+                &mut k_all[i * per..(i + 1) * per],
+                &mut v_all[i * per..(i + 1) * per],
+            )?;
+        }
 
         let shape = vec![
             b,
@@ -425,13 +452,10 @@ impl Engine {
             bail!("decode_batch: {} slots not in 1..={b}", slots.len());
         }
         let cs = self.caps.side_ctx;
-        let per = self.cfg.n_layers * cs * self.cfg.n_kv_heads * self.cfg.head_dim;
         let n = slots.len();
         let mut tokens = Vec::with_capacity(n);
         let mut pos = Vec::with_capacity(n);
-        let mut lens = Vec::with_capacity(n);
-        let mut k_all = vec![0.0f32; n * per];
-        let mut v_all = vec![0.0f32; n * per];
+        let mut views = Vec::with_capacity(n);
         for (i, (tok, p, kv)) in slots.iter().enumerate() {
             if kv.capacity() != cs {
                 bail!("decode_batch: slot {i} is not side-capacity");
@@ -441,16 +465,11 @@ impl Engine {
             }
             tokens.push(*tok);
             pos.push(*p);
-            lens.push(kv.len() as i32);
-            // Single copy: gather each slot's blocks straight into its lane
-            // of the (freshly zeroed) batch slabs.
-            kv.prefix_upload_into(
-                cs,
-                &mut k_all[i * per..(i + 1) * per],
-                &mut v_all[i * per..(i + 1) * per],
-            );
+            // No copy at all: each slot contributes its block table; the
+            // lane K/V is gathered from the device-resident blocks.
+            views.push(kv.paged());
         }
-        let results = self.decode_batch_raw(n, tokens, pos, k_all, v_all, lens, lane)?;
+        let results = self.decode_batch_raw(n, tokens, pos, &views, lane)?;
         let mut outs = Vec::with_capacity(n);
         for ((logits, hidden, k_new, v_new), (_, _, kv)) in
             results.into_iter().zip(slots.iter_mut())
@@ -499,12 +518,16 @@ impl Engine {
                 self.caps.synapse_k
             );
         }
+        // The landmark scan reads the same device-resident rows decode
+        // attends over — ships the block table, not the full cache.
+        let (k_up, v_up) = kv.device_gather(kv.capacity())?;
+        let kv_shape = kv.shape();
         let out = self.device.call(
             self.ids.synapse,
             vec![
                 HostTensor::f32(hidden.to_vec(), vec![self.cfg.d_model]),
-                kv.k_tensor(),
-                kv.v_tensor(),
+                HostTensor::f32(k_up, kv_shape.clone()),
+                HostTensor::f32(v_up, kv_shape),
                 HostTensor::scalar_i32(kv.len() as i32),
                 HostTensor::scalar_f32(alpha),
                 HostTensor::scalar_f32(inv2sig2),

@@ -7,18 +7,26 @@
 //! bytes track the *fill*, not the capacity — the Table-2 unit is now
 //! `blocks × block_bytes`, kept live-synced with the cortex
 //! [`MemoryTracker`](crate::cortex::memory::MemoryTracker) through an
-//! attached [`MemGuard`].  Device uploads go through the contiguous gather
-//! paths ([`KvCache::prefix_upload`] et al.), which zero-fill positions past
-//! `len` — numerically transparent because every compiled program masks
-//! attention beyond `cache_len`.
+//! attached [`MemGuard`].
+//!
+//! Since the device-resident refactor, every write additionally goes
+//! through to the block's device copy **incrementally** (the touched rows,
+//! not the prefix), so decode steps never re-upload the cache: they ship a
+//! [`PagedKv`] — block table + length — and the device gathers K/V from its
+//! resident copies ([`KvCache::device_gather`], bit-identical to the
+//! host-side [`KvCache::prefix_upload`] reference, proven by the proptest
+//! below).  The host gather paths remain for prefill outputs, the synapse
+//! ablations and as the flat reference; both zero-fill positions past `len`
+//! — numerically transparent because every compiled program masks attention
+//! beyond `cache_len`.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::pool::{KvBlock, KvPool, KvPoolConfig};
+use super::pool::{KvBlock, KvPool, KvPoolConfig, PagedKv};
 use crate::cortex::memory::MemGuard;
-use crate::runtime::{HostTensor, ModelConfig};
+use crate::runtime::ModelConfig;
 
 /// A bounded, pool-backed KV cache for one agent.
 pub struct KvCache {
@@ -144,22 +152,32 @@ impl KvCache {
         (layer * self.pool.block_tokens() + off) * self.row()
     }
 
-    /// Copy `[L, n, KV, hd]` rows into positions `[base, base+n)`.  Blocks
-    /// covering those positions must already be rented — the single home of
-    /// the block-addressing arithmetic for writes.
+    /// Copy `[L, n, KV, hd]` rows into positions `[base, base+n)`, writing
+    /// each touched run through to the block's device-resident copy.
+    /// Blocks covering those positions must already be rented — the single
+    /// home of the block-addressing arithmetic for writes.
     fn write_rows(&mut self, base: usize, n: usize, k_rows: &[f32], v_rows: &[f32]) {
         let row = self.row();
         let n_layers = self.pool.n_layers();
         let bt = self.pool.block_tokens();
-        for i in 0..n {
+        let mut i = 0;
+        while i < n {
             let (b, off) = self.locate(base + i);
-            let block = &mut self.blocks[b];
-            for layer in 0..n_layers {
-                let dst = (layer * bt + off) * row;
-                let src = (layer * n + i) * row;
-                block.k[dst..dst + row].copy_from_slice(&k_rows[src..src + row]);
-                block.v[dst..dst + row].copy_from_slice(&v_rows[src..src + row]);
+            let run = (bt - off).min(n - i);
+            {
+                let block = &mut self.blocks[b];
+                for layer in 0..n_layers {
+                    let dst = (layer * bt + off) * row;
+                    let src = (layer * n + i) * row;
+                    block.k[dst..dst + run * row]
+                        .copy_from_slice(&k_rows[src..src + run * row]);
+                    block.v[dst..dst + run * row]
+                        .copy_from_slice(&v_rows[src..src + run * row]);
+                }
             }
+            // Incremental write-through: this run only, never the prefix.
+            self.pool.dev_sync_rows(&self.blocks[b], off, run);
+            i += run;
         }
     }
 
@@ -252,6 +270,9 @@ impl KvCache {
                 block.k[dst..dst + run * row].copy_from_slice(&k_full[src..src + run * row]);
                 block.v[dst..dst + run * row].copy_from_slice(&v_full[src..src + run * row]);
             }
+            // Prefill is the one legitimately O(len) upload; still per-run,
+            // so a short prompt ships a short copy.
+            self.pool.dev_sync_rows(block, 0, run);
         }
         self.len = len;
         self.pool.note_rows_added(len);
@@ -319,25 +340,6 @@ impl KvCache {
         }
     }
 
-    /// Pack the first `c` positions straight into caller-owned zeroed
-    /// buffers (the batcher's `[B, L, Cs, KV, hd]` slabs) — one copy, no
-    /// intermediate allocation.
-    pub fn prefix_upload_into(&self, c: usize, k_out: &mut [f32], v_out: &mut [f32]) {
-        debug_assert!(self.len <= c && c <= self.capacity);
-        self.gather_prefix_into(c, k_out, |b| &b.k);
-        self.gather_prefix_into(c, v_out, |b| &b.v);
-    }
-
-    /// Tensor views for a decode/synapse upload (full capacity, zero-padded
-    /// past `len` — masked on device).
-    pub fn k_tensor(&self) -> HostTensor {
-        HostTensor::f32(self.gather_prefix(self.capacity, |b| &b.k), self.shape())
-    }
-
-    pub fn v_tensor(&self) -> HostTensor {
-        HostTensor::f32(self.gather_prefix(self.capacity, |b| &b.v), self.shape())
-    }
-
     pub fn shape(&self) -> Vec<usize> {
         vec![
             self.pool.n_layers(),
@@ -348,14 +350,48 @@ impl KvCache {
     }
 
     /// Contiguous `[L, c, KV, hd]` upload buffers for a capacity-`c` decode
-    /// tier (§Perf opt A) — the block-translation gather.  Requires
-    /// `len() <= c <= capacity()`.
+    /// tier — the *host-side* block-translation gather.  Since the
+    /// device-resident refactor this is the flat reference path (tests,
+    /// ablations); the decode hot path uses [`KvCache::device_gather`],
+    /// which reads the resident device copies and ships only the block
+    /// table.  Requires `len() <= c <= capacity()`.
     pub fn prefix_upload(&self, c: usize) -> (Vec<f32>, Vec<f32>) {
         debug_assert!(self.len <= c && c <= self.capacity);
         (
             self.gather_prefix(c, |b| &b.k),
             self.gather_prefix(c, |b| &b.v),
         )
+    }
+
+    /// Device block table covering the valid prefix (`len` rows).
+    pub fn block_table(&self) -> Vec<u32> {
+        let need = self.pool.blocks_for(self.len);
+        self.blocks[..need].iter().map(|b| b.id).collect()
+    }
+
+    /// Device-addressable view of this cache: block ids + valid length —
+    /// the O(k) decode-request payload that replaced the full-capacity
+    /// K/V vectors in the batcher channel.
+    ///
+    /// The view stays valid for as long as the cache is neither mutated
+    /// nor dropped; callers that hand it to another thread (the batcher)
+    /// must block until the step completes, which the request/reply
+    /// protocol guarantees.
+    pub fn paged(&self) -> PagedKv {
+        PagedKv {
+            table: self.block_table(),
+            len: self.len,
+        }
+    }
+
+    /// Capacity-`c` decode upload via the device-resident path: resolves
+    /// this cache's block table against the pool's device copies
+    /// (paged-attention gather).  Bit-identical to
+    /// [`KvCache::prefix_upload`] — proven by the flat-vs-paged proptest —
+    /// but the per-step host→device cost is the table, not the cache.
+    pub fn device_gather(&self, c: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        debug_assert!(self.len <= c && c <= self.capacity);
+        self.pool.dev_gather_prefix(&self.block_table(), self.len, c)
     }
 
     /// Gather arbitrary rows (by position, each `< len`) across all layers
@@ -415,9 +451,16 @@ impl KvCache {
     pub fn try_clone(&self) -> Result<KvCache> {
         let mut c = KvCache::with_pool(self.pool.clone(), self.capacity);
         c.ensure_blocks(self.len)?;
-        for (dst, src) in c.blocks.iter_mut().zip(&self.blocks) {
+        let bt = self.pool.block_tokens();
+        for (b, (dst, src)) in c.blocks.iter_mut().zip(&self.blocks).enumerate() {
             dst.k.copy_from_slice(&src.k);
             dst.v.copy_from_slice(&src.v);
+            // the clone's blocks have their own device slots: write the
+            // valid rows through so it is decodable like any other cache
+            let start = b * bt;
+            if start < self.len {
+                c.pool.dev_sync_rows(dst, 0, (self.len - start).min(bt));
+            }
         }
         c.len = self.len;
         c.pool.note_rows_added(self.len);
@@ -629,6 +672,13 @@ mod tests {
             crop_eq(&pk, &fk, "prefix k")?;
             crop_eq(&pv, &fv, "prefix v")?;
 
+            // the device-resident paged gather must agree bit-for-bit with
+            // both the host gather and the flat reference — this is the
+            // "matching semantics" contract of the stub's paged gather
+            let (dk, dv) = pooled.device_gather(c).map_err(|e| e.to_string())?;
+            crop_eq(&dk, &fk, "device k")?;
+            crop_eq(&dv, &fv, "device v")?;
+
             // gather_rows over random valid positions
             let idx = g.vec_usize(0..8, 0..len.max(1));
             let idx: Vec<usize> = idx.into_iter().filter(|&i| i < len).collect();
@@ -765,6 +815,105 @@ mod tests {
         kv.replace_rows(4, &rows4, &rows4).unwrap();
         assert_eq!(kv.len(), 4);
         assert_eq!(kv.k_slice(0, 0, 4), &rows4[..128]);
+    }
+
+    #[test]
+    fn per_step_upload_is_new_row_plus_table_not_capacity() {
+        // The decode hot-path contract: one step's host→device traffic is
+        // the freshly produced row (write-through) plus the block table
+        // (gather), independent of the configured capacity.
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(
+            &cfg,
+            KvPoolConfig {
+                block_tokens: 16,
+                ..KvPoolConfig::default()
+            },
+        );
+        let capacity = 256;
+        let mut kv = pool.new_cache(capacity);
+        let row = 2 * 32; // L * KV*hd floats per position
+        for _ in 0..40 {
+            kv.append_row(&vec![1.0; row], &vec![1.0; row]).unwrap();
+        }
+        let row_bytes = (row * 2 * 4) as u64; // K+V, f32
+        for _ in 0..10 {
+            let before = pool.stats().h2d_bytes;
+            let (k_up, _v_up) = kv.device_gather(capacity).unwrap();
+            assert_eq!(k_up.len(), 2 * capacity * 32);
+            kv.append_row(&vec![2.0; row], &vec![2.0; row]).unwrap();
+            let delta = pool.stats().h2d_bytes - before;
+            let expect = kv.paged().upload_bytes() + row_bytes;
+            // table measured after the append may be one entry longer than
+            // at gather time (block-boundary steps) — bound both sides
+            assert!(
+                delta <= expect && delta >= row_bytes + 8,
+                "per-step upload {delta} outside [{}, {expect}]",
+                row_bytes + 8
+            );
+            // and it is nowhere near the flat full-capacity re-upload
+            assert!(delta * 50 < capacity as u64 * row_bytes);
+        }
+    }
+
+    #[test]
+    fn device_copies_survive_seed_truncate_clear_churn() {
+        // Rent/write-through/release churn: after any mix of seeding
+        // (replace_rows), truncation and clearing, the device gather stays
+        // bit-identical to the host gather and slab slots are recycled
+        // rather than leaked.
+        let cfg = tiny_cfg();
+        check("device churn == host", 30, |g| {
+            let pool = KvPool::new(
+                &cfg,
+                KvPoolConfig {
+                    block_tokens: g.usize_in(1..7),
+                    ..KvPoolConfig::default()
+                },
+            );
+            let capacity = g.usize_in(6..32);
+            let mut kv = pool.new_cache(capacity);
+            for _ in 0..g.usize_in(5..25) {
+                match g.usize_in(0..4) {
+                    0 => {
+                        let n = g.usize_in(1..(kv.remaining().max(1) + 1));
+                        if n <= kv.remaining() {
+                            let k = g.vec_f32((2 * n * ROW)..(2 * n * ROW + 1), -2.0, 2.0);
+                            let v = g.vec_f32((2 * n * ROW)..(2 * n * ROW + 1), -2.0, 2.0);
+                            kv.append_rows(n, &k, &v).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    1 => {
+                        let n = g.usize_in(1..(capacity + 1));
+                        let k = g.vec_f32((2 * n * ROW)..(2 * n * ROW + 1), -2.0, 2.0);
+                        let v = g.vec_f32((2 * n * ROW)..(2 * n * ROW + 1), -2.0, 2.0);
+                        kv.replace_rows(n, &k, &v).map_err(|e| e.to_string())?;
+                    }
+                    2 => kv.truncate(g.usize_in(0..(kv.len().max(1) + 1))),
+                    _ => kv.clear(),
+                }
+                let (hk, hv) = kv.prefix_upload(capacity);
+                let (dk, dv) = kv.device_gather(capacity).map_err(|e| e.to_string())?;
+                crate::prop_assert!(
+                    hk.iter().zip(&dk).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "device k diverged from host at len {}",
+                    kv.len()
+                );
+                crate::prop_assert!(
+                    hv.iter().zip(&dv).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "device v diverged from host at len {}",
+                    kv.len()
+                );
+            }
+            let s = pool.stats();
+            crate::prop_assert!(
+                s.dev_blocks <= s.blocks_high_water,
+                "slab leaked: {} device copies > {} high-water blocks",
+                s.dev_blocks,
+                s.blocks_high_water
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -10,4 +10,4 @@ pub mod pool;
 
 pub use engine::{DecodeOut, Engine, InjectOut, PrefillOut, SynapseOut};
 pub use kv::KvCache;
-pub use pool::{KvPool, KvPoolConfig, PoolStats};
+pub use pool::{KvPool, KvPoolConfig, PagedKv, PoolStats};

@@ -19,13 +19,34 @@
 //! carry stale floats beyond the fill without being re-zeroed (the decode
 //! programs mask attention past `cache_len`, and every host-side gather
 //! copies only the valid prefix).
+//!
+//! # Device residency
+//!
+//! Since the device-resident refactor, each block also owns a **lazily
+//! materialised device copy** in the pool's *device slab*, addressed by the
+//! block's stable `id` and recycled with the block through the free list.
+//! Every host write ([`KvCache::append_rows`], `replace_rows`, `load_full`,
+//! synapse `seed_into`) writes **only the touched rows** through to the
+//! device copy, so the per-decode-step host→device traffic is
+//! `O(new row + block table)` instead of the seed's `O(capacity)` full-cache
+//! re-upload.  Decode-time K/V then comes from
+//! [`KvPool::dev_gather_prefix`] — the paged-attention gather over resident
+//! blocks (reference semantics in
+//! [`crate::runtime::xla_stub::paged_gather_prefix`]); only the block table
+//! itself counts as upload bytes.  On this offline substrate the slab's
+//! buffers are host memory standing in for PJRT device buffers with
+//! identical layout and life-cycle; the `h2d_bytes` gauge measures the
+//! traffic a real backend would pay, and the O(k)-per-step property is
+//! asserted by `benches/decode_upload.rs`.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::kv::KvCache;
+use crate::cortex::memory::MemGuard;
+use crate::runtime::xla_stub;
 use crate::runtime::ModelConfig;
 
 /// Pool sizing + reclaim knobs (surfaced on [`crate::cortex::CortexConfig`]).
@@ -53,9 +74,13 @@ impl Default for KvPoolConfig {
 }
 
 /// One fixed-size block: `block_tokens` positions × all layers, K and V.
-/// Each buffer is `[L, block_tokens, KV*hd]`, row-major.
+/// Each buffer is `[L, block_tokens, KV*hd]`, row-major.  `id` is the
+/// block's stable slot in the pool's device slab — it survives the free
+/// list (so the device copy is recycled with the block) and is only
+/// returned when the block's memory goes back to the allocator.
 #[derive(Debug)]
 pub struct KvBlock {
+    pub(crate) id: u32,
     pub(crate) k: Box<[f32]>,
     pub(crate) v: Box<[f32]>,
 }
@@ -65,6 +90,64 @@ struct PoolState {
     free: Vec<KvBlock>,
     live: usize,
     high_water: usize,
+}
+
+/// One block's device-resident K/V copy.  Same `[L, block_tokens, KV*hd]`
+/// layout as the host buffers; on a real PJRT backend these would be
+/// `PjRtBuffer`s owned by the device thread.
+#[derive(Debug)]
+struct DevBuf {
+    k: Box<[f32]>,
+    v: Box<[f32]>,
+}
+
+/// The device slab: block id → resident device buffer.
+#[derive(Debug, Default)]
+struct DevSlab {
+    /// `None` until the block's first write-through materialises the copy.
+    slots: Vec<Option<DevBuf>>,
+    /// Ids of fully-dropped blocks, recycled by future rents.
+    free_ids: Vec<u32>,
+    /// Bytes held by materialised device buffers.
+    bytes: u64,
+    /// Accounting hook ([`crate::cortex::memory::MemKind::DeviceKv`]):
+    /// resized on every materialisation and release.
+    guard: Option<MemGuard>,
+}
+
+impl DevSlab {
+    fn sync_guard(&mut self) {
+        let bytes = self.bytes;
+        if let Some(g) = self.guard.as_mut() {
+            g.resize(bytes);
+        }
+    }
+}
+
+/// A device-addressable view of one cache: its block table plus the valid
+/// length.  This — not multi-megabyte K/V vectors — is what a paged decode
+/// request ships across threads and (conceptually) to the device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PagedKv {
+    /// Device-slab ids of the blocks covering positions `[0, len)`.
+    pub table: Vec<u32>,
+    /// Valid rows (`cache_len` of the decode program).
+    pub len: usize,
+}
+
+impl PagedKv {
+    /// Host→device bytes one decode step pays for this view: the i32 block
+    /// table plus the length scalar — the O(k) figure the upload bench
+    /// asserts against.
+    pub fn upload_bytes(&self) -> u64 {
+        PagedKv::upload_bytes_for(self.table.len())
+    }
+
+    /// Single home of the per-step table-upload formula; the gather path's
+    /// `h2d_bytes` charge and the bench assertions both pin to it.
+    pub(crate) fn upload_bytes_for(table_len: usize) -> u64 {
+        (table_len * 4 + 8) as u64
+    }
 }
 
 /// Live gauges of one pool (the `/stats` and Table-2 reporting unit).
@@ -86,6 +169,16 @@ pub struct PoolStats {
     pub releases: u64,
     /// Filled positions across all live caches.
     pub rows_live: u64,
+    /// Blocks with a materialised device-resident copy.
+    pub dev_blocks: usize,
+    /// Bytes held by device-resident block copies.
+    pub dev_bytes: u64,
+    /// Cumulative host→device traffic: row write-throughs + block tables.
+    /// The decode-upload bench asserts the per-step delta is O(k).
+    pub h2d_bytes: u64,
+    /// Device-side paged gathers served (decode steps that shipped a block
+    /// table instead of the cache).
+    pub dev_gathers: u64,
 }
 
 impl PoolStats {
@@ -130,10 +223,22 @@ pub struct KvPool {
     kv_heads: usize,
     head_dim: usize,
     state: Mutex<PoolState>,
+    /// Device-resident block copies.  RwLock so concurrent decode gathers
+    /// (read-only, and they hold the lock for the full lane memcpy) never
+    /// serialize against each other.  Row write-throughs and slot
+    /// materialisation/release take the write side, so a write-through DOES
+    /// serialize against in-flight gathers (and other writes) pool-wide —
+    /// acceptable because a write is one row while a gather is O(c) rows;
+    /// per-slot locking (ids are stable, owners are exclusive) is the
+    /// follow-up if contention shows up at high agent counts.  Lock order:
+    /// `state` before `dev` (never both unless in that order).
+    dev: RwLock<DevSlab>,
     rents: AtomicU64,
     reuses: AtomicU64,
     releases: AtomicU64,
     rows_live: AtomicU64,
+    h2d_bytes: AtomicU64,
+    dev_gathers: AtomicU64,
 }
 
 impl std::fmt::Debug for KvPool {
@@ -159,10 +264,13 @@ impl KvPool {
             kv_heads: model.n_kv_heads,
             head_dim: model.head_dim,
             state: Mutex::new(PoolState::default()),
+            dev: RwLock::new(DevSlab::default()),
             rents: AtomicU64::new(0),
             reuses: AtomicU64::new(0),
             releases: AtomicU64::new(0),
             rows_live: AtomicU64::new(0),
+            h2d_bytes: AtomicU64::new(0),
+            dev_gathers: AtomicU64::new(0),
         })
     }
 
@@ -242,29 +350,193 @@ impl KvPool {
             drop(st);
             self.rents.fetch_add(1, Ordering::Relaxed);
             self.reuses.fetch_add(1, Ordering::Relaxed);
+            // The block keeps its id: its device copy (if materialised) is
+            // recycled with it — stale contents past the new fill are fine,
+            // every reader masks by `cache_len`.
             return Ok(b);
         }
         st.live += 1;
         st.high_water = st.high_water.max(st.live);
         drop(st);
         self.rents.fetch_add(1, Ordering::Relaxed);
+        let id = self.reserve_dev_id();
         let n = self.block_floats();
         Ok(KvBlock {
+            id,
             k: vec![0.0; n].into_boxed_slice(),
             v: vec![0.0; n].into_boxed_slice(),
         })
     }
 
+    /// Reserve a device-slab slot for a freshly allocated block.  The
+    /// buffer itself is materialised lazily on the first write-through.
+    fn reserve_dev_id(&self) -> u32 {
+        let mut dev = self.dev.write().unwrap();
+        if let Some(id) = dev.free_ids.pop() {
+            debug_assert!(dev.slots[id as usize].is_none());
+            id
+        } else {
+            dev.slots.push(None);
+            (dev.slots.len() - 1) as u32
+        }
+    }
+
     /// Return a block.  Retained on the free list up to
     /// `retain_free_blocks`; past that the block's memory goes back to the
-    /// allocator (the reclaim policy).
+    /// allocator (the reclaim policy) and its device copy is freed with it.
     pub(crate) fn release_block(&self, block: KvBlock) {
         self.releases.fetch_add(1, Ordering::Relaxed);
         let mut st = self.state.lock().unwrap();
         st.live = st.live.saturating_sub(1);
         if st.free.len() < self.retain_free_blocks.load(Ordering::Relaxed) {
             st.free.push(block);
+            return;
         }
+        drop(st);
+        let mut dev = self.dev.write().unwrap();
+        if dev
+            .slots
+            .get_mut(block.id as usize)
+            .and_then(|s| s.take())
+            .is_some()
+        {
+            dev.bytes -= self.block_bytes();
+            dev.sync_guard();
+        }
+        dev.free_ids.push(block.id);
+    }
+
+    /// Write rows `[off, off+n)` of `block` through to its device-resident
+    /// copy, materialising the device buffer on first touch.  This is the
+    /// incremental path — one row per decode step, a handful per seed — and
+    /// the copied bytes are the only per-row host→device traffic the system
+    /// pays (contrast with the seed's full-prefix re-upload every step).
+    pub(crate) fn dev_sync_rows(&self, block: &KvBlock, off: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let row = self.row();
+        let bt = self.block_tokens;
+        debug_assert!(off + n <= bt);
+        let mut dev = self.dev.write().unwrap();
+        let idx = block.id as usize;
+        if dev.slots[idx].is_none() {
+            let floats = self.block_floats();
+            dev.slots[idx] = Some(DevBuf {
+                k: vec![0.0; floats].into_boxed_slice(),
+                v: vec![0.0; floats].into_boxed_slice(),
+            });
+            dev.bytes += self.block_bytes();
+            dev.sync_guard();
+        }
+        let buf = dev.slots[idx].as_mut().expect("slot just materialised");
+        // Host and device copies share the `[L, bt, row]` layout, so the
+        // offsets coincide.
+        for layer in 0..self.n_layers {
+            let o = (layer * bt + off) * row;
+            buf.k[o..o + n * row].copy_from_slice(&block.k[o..o + n * row]);
+            buf.v[o..o + n * row].copy_from_slice(&block.v[o..o + n * row]);
+        }
+        drop(dev);
+        self.h2d_bytes
+            .fetch_add((self.n_layers * n * row * 2 * 4) as u64, Ordering::Relaxed);
+    }
+
+    /// Device-side paged gather: contiguous `[L, c, KV, hd]` K and V for
+    /// the first `len` positions addressed by `table`, read from the
+    /// resident block copies.  Ships only the table (counted as the step's
+    /// upload cost) — never the cache contents.
+    ///
+    /// Fails if a needed block has no device copy, which can only mean the
+    /// table addresses a different pool or rows that were never written.
+    pub fn dev_gather_prefix(
+        &self,
+        table: &[u32],
+        len: usize,
+        c: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let sz = self.n_layers * c * self.row();
+        let mut k = vec![0.0f32; sz];
+        let mut v = vec![0.0f32; sz];
+        self.dev_gather_prefix_into(table, len, c, &mut k, &mut v)?;
+        Ok((k, v))
+    }
+
+    /// Allocation-free variant of [`KvPool::dev_gather_prefix`]: gathers
+    /// into caller-provided zeroed `[L, c, KV, hd]` buffers (the batcher's
+    /// per-lane slabs).
+    pub fn dev_gather_prefix_into(
+        &self,
+        table: &[u32],
+        len: usize,
+        c: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> Result<()> {
+        let row = self.row();
+        debug_assert_eq!(k_out.len(), self.n_layers * c * row);
+        debug_assert_eq!(v_out.len(), self.n_layers * c * row);
+        let need = self.blocks_for(len.min(c));
+        if table.len() < need {
+            bail!(
+                "paged gather: table has {} blocks, {need} needed for len {len}",
+                table.len()
+            );
+        }
+        {
+            let dev = self.dev.read().unwrap();
+            let mut k_blocks: Vec<&[f32]> = Vec::with_capacity(need);
+            let mut v_blocks: Vec<&[f32]> = Vec::with_capacity(need);
+            for &id in &table[..need] {
+                let slot = dev
+                    .slots
+                    .get(id as usize)
+                    .and_then(|s| s.as_ref())
+                    .ok_or_else(|| {
+                        anyhow!("paged gather: block {id} has no device-resident copy")
+                    })?;
+                k_blocks.push(&slot.k[..]);
+                v_blocks.push(&slot.v[..]);
+            }
+            xla_stub::paged_gather_prefix(
+                &k_blocks,
+                self.n_layers,
+                self.block_tokens,
+                row,
+                len,
+                c,
+                k_out,
+            );
+            xla_stub::paged_gather_prefix(
+                &v_blocks,
+                self.n_layers,
+                self.block_tokens,
+                row,
+                len,
+                c,
+                v_out,
+            );
+        }
+        // Per-step upload: the i32 table + the length scalar.
+        self.h2d_bytes
+            .fetch_add(PagedKv::upload_bytes_for(table.len()), Ordering::Relaxed);
+        self.dev_gathers.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Attach the device-memory accounting guard
+    /// ([`crate::cortex::memory::MemKind::DeviceKv`]); from here on every
+    /// device-buffer materialisation and release resizes it.  Replaces (and
+    /// thereby releases) any previously attached guard.
+    pub fn track_device(&self, mut guard: MemGuard) {
+        let mut dev = self.dev.write().unwrap();
+        guard.resize(dev.bytes);
+        dev.guard = Some(guard);
+    }
+
+    /// Bytes currently held by device-resident block copies.
+    pub fn dev_bytes(&self) -> u64 {
+        self.dev.read().unwrap().bytes
     }
 
     pub(crate) fn note_rows_added(&self, n: usize) {
@@ -286,17 +558,28 @@ impl KvPool {
     }
 
     pub fn stats(&self) -> PoolStats {
-        let st = self.state.lock().unwrap();
+        let (blocks_live, blocks_free, blocks_high_water) = {
+            let st = self.state.lock().unwrap();
+            (st.live, st.free.len(), st.high_water)
+        };
+        let (dev_blocks, dev_bytes) = {
+            let dev = self.dev.read().unwrap();
+            (dev.slots.iter().filter(|s| s.is_some()).count(), dev.bytes)
+        };
         PoolStats {
             block_tokens: self.block_tokens,
             block_bytes: self.block_bytes(),
-            blocks_live: st.live,
-            blocks_free: st.free.len(),
-            blocks_high_water: st.high_water,
+            blocks_live,
+            blocks_free,
+            blocks_high_water,
             rents: self.rents.load(Ordering::Relaxed),
             reuses: self.reuses.load(Ordering::Relaxed),
             releases: self.releases.load(Ordering::Relaxed),
             rows_live: self.rows_live.load(Ordering::Relaxed),
+            dev_blocks,
+            dev_bytes,
+            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
+            dev_gathers: self.dev_gathers.load(Ordering::Relaxed),
         }
     }
 }
@@ -499,5 +782,100 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn device_copies_materialise_lazily_and_recycle_with_blocks() {
+        let p = pool(4, 0);
+        let b0 = p.rent_block().unwrap();
+        let b1 = p.rent_block().unwrap();
+        assert_ne!(b0.id, b1.id, "slab slots must be distinct");
+        let s = p.stats();
+        assert_eq!(s.dev_blocks, 0, "no write-through yet → no device copy");
+        assert_eq!(s.dev_bytes, 0);
+        assert_eq!(s.h2d_bytes, 0);
+
+        // First write-through materialises the copy and counts the rows.
+        p.dev_sync_rows(&b0, 0, 2);
+        let s = p.stats();
+        assert_eq!(s.dev_blocks, 1);
+        assert_eq!(s.dev_bytes, p.block_bytes());
+        // 2 rows × L(2) × row(32 floats) × K+V × 4 bytes
+        assert_eq!(s.h2d_bytes, (2 * 2 * 32 * 2 * 4) as u64);
+
+        // A free-listed block keeps its device copy (recycled, not freed).
+        let id0 = b0.id;
+        p.release_block(b0);
+        p.release_block(b1);
+        assert_eq!(p.stats().dev_blocks, 1);
+        let b = p.rent_block().unwrap();
+        let b2 = p.rent_block().unwrap();
+        assert!(b.id == id0 || b2.id == id0, "free-listed id must recycle");
+        assert_eq!(p.stats().dev_blocks, 1);
+        p.release_block(b);
+        p.release_block(b2);
+    }
+
+    #[test]
+    fn allocator_return_frees_the_device_copy_and_recycles_the_id() {
+        let p = KvPool::new(
+            &tiny_cfg(),
+            KvPoolConfig {
+                block_tokens: 4,
+                max_blocks: 0,
+                retain_free_blocks: 0, // every release returns to allocator
+            },
+        );
+        let b = p.rent_block().unwrap();
+        let id = b.id;
+        p.dev_sync_rows(&b, 0, 1);
+        assert_eq!(p.stats().dev_bytes, p.block_bytes());
+        p.release_block(b);
+        let s = p.stats();
+        assert_eq!(s.dev_blocks, 0, "allocator return must free the copy");
+        assert_eq!(s.dev_bytes, 0);
+        // the id comes back for the next fresh block
+        let b = p.rent_block().unwrap();
+        assert_eq!(b.id, id);
+        p.release_block(b);
+    }
+
+    #[test]
+    fn gather_requires_resident_copies_and_counts_table_upload() {
+        let p = pool(4, 0);
+        let b = p.rent_block().unwrap();
+        // no write-through yet → gather over real rows must refuse
+        let err = p.dev_gather_prefix(&[b.id], 2, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("no device-resident copy"));
+        // an empty view gathers fine (nothing to read) but still ships the
+        // (empty) table + len scalar
+        let before = p.stats().h2d_bytes;
+        let (k, v) = p.dev_gather_prefix(&[], 0, 4).unwrap();
+        assert_eq!(k.len(), 2 * 4 * 32);
+        assert!(k.iter().chain(v.iter()).all(|&x| x == 0.0));
+        let s = p.stats();
+        assert_eq!(s.h2d_bytes - before, 8);
+        assert_eq!(s.dev_gathers, 1);
+        p.release_block(b);
+    }
+
+    #[test]
+    fn device_guard_tracks_slab_bytes() {
+        use crate::cortex::memory::{MemKind, MemoryTracker};
+        let t = MemoryTracker::new();
+        let p = pool(4, 0);
+        let b = p.rent_block().unwrap();
+        p.dev_sync_rows(&b, 0, 1);
+        // attaching after the fact syncs to the current slab size
+        p.track_device(t.alloc(MemKind::DeviceKv, 0));
+        assert_eq!(t.live_bytes(MemKind::DeviceKv) as u64, p.block_bytes());
+        let b2 = p.rent_block().unwrap();
+        p.dev_sync_rows(&b2, 1, 3);
+        assert_eq!(t.live_bytes(MemKind::DeviceKv) as u64, 2 * p.block_bytes());
+        // reclaim-to-allocator shrinks the charge
+        p.set_limits(0, 0);
+        p.release_block(b);
+        p.release_block(b2);
+        assert_eq!(t.live_bytes(MemKind::DeviceKv), 0);
     }
 }

@@ -14,6 +14,13 @@
 //! Swapping in the real crate is a one-line change at the import site —
 //! every type and method signature here mirrors `xla` 0.1.x as used by
 //! `device.rs`.
+//!
+//! One genuine (non-failing) piece of device semantics also lives here:
+//! [`paged_gather_prefix`], the reference implementation of the device-side
+//! paged-attention gather that the KV pool's device slab runs against its
+//! resident block copies.  Keeping it in this module makes the substitution
+//! boundary explicit: it is exactly the program a real backend would
+//! compile, expressed on host floats.
 
 #![allow(dead_code)]
 
@@ -39,6 +46,46 @@ fn unavailable<T>() -> StubResult<T> {
          (link the real `xla` crate to execute compiled artifacts)"
             .to_string(),
     ))
+}
+
+/// Reference semantics of the device-side **paged-attention gather**: build
+/// the contiguous `[L, c, row]` prefix of one cache from its block table,
+/// where `blocks[i]` is the `[L, block_tokens, row]` buffer of the i-th
+/// table entry and only positions `< len` are valid (the remainder of `out`
+/// is left untouched — callers hand in zeroed buffers, and every compiled
+/// program masks attention past `cache_len` anyway).
+///
+/// On a real PJRT backend this is a compiled gather program reading
+/// device-resident block buffers, so a decode step ships only the block
+/// table and the new token — not the cache.  The offline build has no
+/// device, so [`crate::model::KvPool`]'s device slab calls this host
+/// implementation instead; the semantics are proven bit-identical to the
+/// flat `[L, C, KV, hd]` reference layout by the tests in `model/kv.rs`,
+/// which is what lets host-only tests and benches stand in for the XLA
+/// path.
+pub fn paged_gather_prefix(
+    blocks: &[&[f32]],
+    n_layers: usize,
+    block_tokens: usize,
+    row: usize,
+    len: usize,
+    c: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), n_layers * c * row);
+    let valid = len.min(c);
+    for (b, buf) in blocks.iter().enumerate() {
+        let start = b * block_tokens;
+        if start >= valid {
+            break;
+        }
+        let run = (valid - start).min(block_tokens);
+        for layer in 0..n_layers {
+            let dst = layer * c * row + start * row;
+            let src = layer * block_tokens * row;
+            out[dst..dst + run * row].copy_from_slice(&buf[src..src + run * row]);
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -147,11 +147,15 @@ fn handle_generate(req: &HttpRequest, cortex: &WarpCortex, cfg: &ServerConfig) -
         .as_str()
         .context("`prompt` must be a string")?
         .to_string();
-    let max_tokens = body
-        .get("max_tokens")
-        .and_then(|v| v.as_usize())
-        .unwrap_or(48)
-        .min(cfg.max_tokens_cap);
+    // Clamp against what the main cache can actually hold once the
+    // (possibly truncated) prompt is prefilled — the truncation invariant
+    // lives on WarpCortex::prompt_rows, not here.
+    let remaining = cortex
+        .engine
+        .caps()
+        .main_ctx
+        .saturating_sub(cortex.prompt_rows(&prompt));
+    let max_tokens = resolve_max_tokens(body.get("max_tokens"), 48, cfg.max_tokens_cap, remaining)?;
 
     let report = cortex.run_episode(&prompt, max_tokens)?;
     let events: Vec<Json> = report
@@ -204,6 +208,31 @@ fn handle_generate(req: &HttpRequest, cortex: &WarpCortex, cfg: &ServerConfig) -
         .with("events", Json::Arr(events)))
 }
 
+/// Resolve the requested `max_tokens`: absent → `default`; non-numeric or
+/// non-positive → a clean 400 (the old behaviour let an oversized request
+/// fail mid-episode with a confusing cache-append error); otherwise clamped
+/// to the server cap and to the rows the main cache can still hold after
+/// the prompt.  A full cache still yields a well-formed 1-token request —
+/// the episode loop then terminates cleanly on `remaining() == 0`.
+fn resolve_max_tokens(
+    requested: Option<&Json>,
+    default: usize,
+    cap: usize,
+    remaining: usize,
+) -> Result<usize> {
+    let n = match requested {
+        None => default,
+        Some(v) => {
+            let x = v.as_f64().context("`max_tokens` must be a number")?;
+            if x < 1.0 || x.fract() != 0.0 {
+                anyhow::bail!("`max_tokens` must be a positive integer (got {x})");
+            }
+            x as usize
+        }
+    };
+    Ok(n.min(cap).min(remaining.max(1)))
+}
+
 fn stats_json(cortex: &WarpCortex) -> Json {
     let mem = cortex.tracker.snapshot();
     let gate = cortex.gate.stats();
@@ -220,7 +249,8 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("weights", mem.per_kind[0])
                 .with("main_kv", mem.per_kind[1])
                 .with("side_kv", mem.per_kind[2])
-                .with("synapse", mem.per_kind[3]),
+                .with("synapse", mem.per_kind[3])
+                .with("device_kv", mem.per_kind[5]),
         )
         .with(
             "pool",
@@ -233,7 +263,11 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("resident_bytes", pool.resident_bytes())
                 .with("live_bytes", pool.live_bytes())
                 .with("reuses", pool.reuses)
-                .with("fragmentation", pool.fragmentation()),
+                .with("fragmentation", pool.fragmentation())
+                .with("dev_blocks", pool.dev_blocks)
+                .with("dev_bytes", pool.dev_bytes)
+                .with("h2d_bytes", pool.h2d_bytes)
+                .with("dev_gathers", pool.dev_gathers),
         )
         .with(
             "gate",
@@ -276,3 +310,33 @@ fn stats_json(cortex: &WarpCortex) -> Json {
 }
 
 // End-to-end server tests live in rust/tests/integration_serve.rs.
+
+#[cfg(test)]
+mod tests {
+    use super::resolve_max_tokens;
+    use crate::util::Json;
+
+    #[test]
+    fn max_tokens_clamping() {
+        // absent → default
+        assert_eq!(resolve_max_tokens(None, 48, 128, 1000).unwrap(), 48);
+        // explicit, clamped by the server cap
+        let big = Json::Num(1e6);
+        assert_eq!(resolve_max_tokens(Some(&big), 48, 128, 1000).unwrap(), 128);
+        // clamped to the rows the main cache can still hold (the old code
+        // let this run into a mid-episode append error)
+        let req = Json::Num(500.0);
+        assert_eq!(resolve_max_tokens(Some(&req), 48, 1024, 70).unwrap(), 70);
+        // non-positive and non-numeric → clean 400-shaped errors
+        assert!(resolve_max_tokens(Some(&Json::Num(0.0)), 48, 128, 10).is_err());
+        assert!(resolve_max_tokens(Some(&Json::Num(-3.0)), 48, 128, 10).is_err());
+        assert!(resolve_max_tokens(Some(&Json::Str("x".into())), 48, 128, 10).is_err());
+        assert!(resolve_max_tokens(Some(&Json::Num(0.4)), 48, 128, 10).is_err());
+        assert!(
+            resolve_max_tokens(Some(&Json::Num(2.7)), 48, 128, 10).is_err(),
+            "fractional values must 400, not silently floor"
+        );
+        // a full cache still yields a well-formed 1-token request
+        assert_eq!(resolve_max_tokens(None, 48, 128, 0).unwrap(), 1);
+    }
+}
