@@ -21,6 +21,7 @@ use warp_cortex::model::{KvPool, KvPoolConfig};
 use warp_cortex::runtime::ModelConfig;
 use warp_cortex::util::rng::XorShift;
 use warp_cortex::util::timer::bench_median;
+use warp_cortex::util::Json;
 
 fn tiny_cfg() -> ModelConfig {
     ModelConfig {
@@ -153,6 +154,23 @@ fn main() -> anyhow::Result<()> {
         t_dev.median_ns / 1e3,
         t_host.median_ns / 1e3
     );
+
+    // Machine-readable report (published as a CI artifact and
+    // threshold-checked alongside BENCH_prefix_share.json).
+    let flat_large = capacities[1] as u64 * row_bytes;
+    let report = Json::obj()
+        .with("bench", "decode_upload")
+        .with("fill_rows", FILL)
+        .with("steps", STEPS)
+        .with("per_step_h2d_bytes", per_step[0])
+        .with("flat_reupload_bytes", flat_large)
+        .with("saving_x", flat_large as f64 / per_step[0].max(1) as f64)
+        .with("request_payload_bytes", paged.upload_bytes())
+        .with("flat_request_bytes", flat_req)
+        .with("dev_gather_us", t_dev.median_ns / 1e3)
+        .with("host_gather_us", t_host.median_ns / 1e3);
+    std::fs::write("BENCH_decode_upload.json", report.to_string())?;
+    println!("wrote BENCH_decode_upload.json");
 
     println!("\nshape check: per-step upload is O(new row + block table)  ✓");
     Ok(())

@@ -1,0 +1,267 @@
+//! Bench P3 — copy-on-write prefix sharing: one prefill, N agents.
+//!
+//! The prefix-sharing refactor adds a content-addressed registry to the KV
+//! block pool: the first agent of a prompt (or landmark seed) writes and
+//! registers its full blocks, every later agent adopts them *by reference*.
+//! This bench drives the pool/cache layer directly (host-only — the engine
+//! path is covered by the device-gated integration tests) and *asserts* the
+//! acceptance criteria — it runs in the CI bench-smoke step:
+//!
+//! 1. spawning a second agent with an identical prefix attaches the shared
+//!    blocks with ZERO host→device bytes and allocates O(1) new blocks
+//!    (only the private tail);
+//! 2. shared reads are bit-identical across agents, host and device side;
+//! 3. divergence after sharing copies-on-write and never perturbs the
+//!    other agents or the registry;
+//! 4. parked registry entries are LRU-evicted under the pool cap.
+//!
+//! Emits `BENCH_prefix_share.json` so the perf trajectory is
+//! machine-readable (published as a CI artifact and threshold-checked).
+//!
+//! ```bash
+//! cargo bench --bench prefix_share
+//! ```
+
+use warp_cortex::cortex::memory::fmt_bytes;
+use warp_cortex::model::{KvPool, KvPoolConfig};
+use warp_cortex::runtime::ModelConfig;
+use warp_cortex::util::timer::bench_median;
+use warp_cortex::util::Json;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 192,
+        vocab_size: 260,
+        head_dim: 16,
+        rope_theta: 1e4,
+        param_count: 116_032,
+    }
+}
+
+const L: usize = 2; // layers of tiny_cfg
+const ROW: usize = 32; // KV * hd of tiny_cfg
+const PROMPT: usize = 100; // prompt tokens
+const CAPACITY: usize = 256;
+const WARM_AGENTS: usize = 8;
+const SALT: u64 = 0xBE7C; // bench's registry domain
+
+/// Deterministic prompt token ids.
+fn prompt_tokens() -> Vec<i32> {
+    (0..PROMPT as i32).map(|i| (i * 37 + 11) % 256).collect()
+}
+
+/// Deterministic `[L, n, KV, hd]` rows derived from the tokens — the
+/// content-addressing contract (same keys ⇒ same rows) made literal, which
+/// is exactly what a real prefill guarantees for a fixed model.
+fn canon_rows(tokens: &[i32]) -> (Vec<f32>, Vec<f32>) {
+    let n = tokens.len();
+    let mut k = Vec::with_capacity(L * n * ROW);
+    let mut v = Vec::with_capacity(L * n * ROW);
+    for layer in 0..L {
+        for (pos, &tok) in tokens.iter().enumerate() {
+            for j in 0..ROW {
+                let x = (layer * 7919 + pos * 131 + j) as f32 * 1e-3 + tok as f32 * 1e-2;
+                k.push(x);
+                v.push(-x);
+            }
+        }
+    }
+    (k, v)
+}
+
+fn bit_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = tiny_cfg();
+    let pool = KvPool::new(
+        &cfg,
+        KvPoolConfig {
+            block_tokens: 16,
+            ..KvPoolConfig::default()
+        },
+    );
+    let bt = pool.block_tokens();
+    let tokens = prompt_tokens();
+    let (k_rows, v_rows) = canon_rows(&tokens);
+    let shared_blocks_per_prompt = PROMPT / bt; // full blocks only
+    let row_bytes = (L * ROW * 2 * 4) as u64; // one position, K+V, f32
+
+    println!("═══ P3: copy-on-write prefix sharing (one prefill, N agents) ═══\n");
+
+    // ── cold: the first agent writes and registers the prompt ──────────
+    let before = pool.stats();
+    let mut cold = pool.new_cache(CAPACITY);
+    cold.replace_rows_keyed(PROMPT, SALT, &tokens, &k_rows, &v_rows)?;
+    let s = pool.stats();
+    let cold_blocks = s.blocks_live - before.blocks_live;
+    let cold_h2d = s.h2d_bytes - before.h2d_bytes;
+    assert_eq!(cold_blocks, pool.blocks_for(PROMPT));
+    assert_eq!(cold.shared_blocks(), shared_blocks_per_prompt);
+    assert_eq!(s.shared_blocks, shared_blocks_per_prompt);
+    println!(
+        "cold agent: {} blocks ({} registered), {} uploaded",
+        cold_blocks,
+        shared_blocks_per_prompt,
+        fmt_bytes(cold_h2d as f64)
+    );
+
+    // ── a pure attach is free: zero bytes, zero new blocks ─────────────
+    let hashes = pool.prefix_hashes(SALT, &tokens);
+    let before = pool.stats();
+    let mut attached = pool.new_cache(CAPACITY);
+    let covered = attached.attach_shared_prefix(&hashes, &tokens)?;
+    let s = pool.stats();
+    let attach_h2d = s.h2d_bytes - before.h2d_bytes;
+    let attach_blocks = s.blocks_live - before.blocks_live;
+    assert_eq!(covered, shared_blocks_per_prompt * bt);
+    assert_eq!(attach_h2d, 0, "attaching a shared prefix must upload nothing");
+    assert_eq!(attach_blocks, 0, "attaching a shared prefix must rent nothing");
+    drop(attached);
+
+    // ── warm: N more agents seed the identical prompt ──────────────────
+    let before = pool.stats();
+    let mut warm = Vec::with_capacity(WARM_AGENTS);
+    for _ in 0..WARM_AGENTS {
+        let mut c = pool.new_cache(CAPACITY);
+        c.replace_rows_keyed(PROMPT, SALT, &tokens, &k_rows, &v_rows)?;
+        warm.push(c);
+    }
+    let s = pool.stats();
+    let warm_blocks = s.blocks_live - before.blocks_live;
+    let warm_h2d = s.h2d_bytes - before.h2d_bytes;
+    let warm_new_blocks_per_agent = warm_blocks / WARM_AGENTS;
+    let warm_h2d_per_agent = warm_h2d / WARM_AGENTS as u64;
+    let tail_rows = (PROMPT - shared_blocks_per_prompt * bt) as u64;
+    let prefix_hits = s.prefix_hits;
+    println!(
+        "{WARM_AGENTS} warm agents: {warm_new_blocks_per_agent} new block(s) and {} \
+         uploaded each (tail only) vs {} blocks / {} for a cold spawn",
+        fmt_bytes(warm_h2d_per_agent as f64),
+        cold_blocks,
+        fmt_bytes(cold_h2d as f64)
+    );
+
+    // ── the acceptance criteria ──
+    // 1. O(1) fresh memory per warm agent: only the private tail block.
+    assert_eq!(
+        warm_blocks,
+        WARM_AGENTS * (pool.blocks_for(PROMPT) - shared_blocks_per_prompt),
+        "warm agents rented more than their tails"
+    );
+    // 2. zero h2d for the shared prefix: each agent pays its tail rows only.
+    assert_eq!(
+        warm_h2d,
+        WARM_AGENTS as u64 * tail_rows * row_bytes,
+        "warm seeding uploaded shared rows"
+    );
+    // 3. every full block hit the registry (the attach probe added one
+    //    extra chain of hits before the warm wave).
+    assert!(
+        prefix_hits >= (WARM_AGENTS * shared_blocks_per_prompt) as u64,
+        "expected ≥{} prefix hits, saw {prefix_hits}",
+        WARM_AGENTS * shared_blocks_per_prompt
+    );
+    // 4. resident bytes for the shared prefix are independent of N.
+    assert_eq!(s.shared_blocks, shared_blocks_per_prompt);
+    // 5. shared reads are bit-identical, host and device side.
+    let (ck, cv) = cold.prefix_upload(CAPACITY);
+    for w in &warm {
+        let (wk, wv) = w.prefix_upload(CAPACITY);
+        assert!(bit_eq(&ck, &wk) && bit_eq(&cv, &wv), "shared K/V diverged");
+        let (dk, dv) = w.device_gather(CAPACITY)?;
+        assert!(bit_eq(&dk, &wk) && bit_eq(&dv, &wv), "device gather diverged");
+    }
+
+    // ── CoW: divergence is private ──────────────────────────────────────
+    let (cold_before, _) = cold.prefix_upload(CAPACITY);
+    {
+        let w = warm.last_mut().expect("warm agents exist");
+        w.truncate(90); // back into the shared prefix (block 5 of 16-row blocks)
+        let div_k = vec![7.5f32; L * ROW];
+        let div_v = vec![-7.5f32; L * ROW];
+        w.append_row(&div_k, &div_v)?;
+    }
+    let s = pool.stats();
+    assert!(s.cow_copies >= 1, "write into a shared block must CoW");
+    let (cold_after, _) = cold.prefix_upload(CAPACITY);
+    assert!(
+        bit_eq(&cold_before, &cold_after),
+        "CoW divergence leaked into another agent"
+    );
+    let cow_copies = s.cow_copies;
+    println!("divergence: {cow_copies} CoW copies, other agents bit-identical");
+
+    // ── timing: attach vs cold fill ─────────────────────────────────────
+    let t_attach = bench_median(3, 50, || {
+        let mut c = pool.new_cache(CAPACITY);
+        let covered = c.attach_shared_prefix(&hashes, &tokens).expect("attach");
+        std::hint::black_box(covered);
+    });
+    let cold_pool = KvPool::new(
+        &cfg,
+        KvPoolConfig {
+            block_tokens: 16,
+            ..KvPoolConfig::default()
+        },
+    );
+    let t_cold = bench_median(3, 50, || {
+        let mut c = cold_pool.new_cache(CAPACITY);
+        c.replace_rows(PROMPT, &k_rows, &v_rows).expect("fill");
+        std::hint::black_box(c.len());
+    });
+    println!(
+        "seed latency: attach {:.1} µs vs cold fill {:.1} µs median ({:.0}x)",
+        t_attach.median_ns / 1e3,
+        t_cold.median_ns / 1e3,
+        t_cold.median_ns / t_attach.median_ns.max(1.0)
+    );
+
+    // ── LRU eviction under the cap ──────────────────────────────────────
+    drop(warm);
+    drop(cold);
+    let s = pool.stats();
+    assert_eq!(
+        s.blocks_live, shared_blocks_per_prompt,
+        "only parked registry entries may remain live"
+    );
+    pool.set_limits(shared_blocks_per_prompt, usize::MAX);
+    let mut fresh = pool.new_cache(CAPACITY);
+    let one_k = vec![0.25f32; L * ROW];
+    fresh.append_row(&one_k, &one_k)?;
+    let s = pool.stats();
+    assert!(s.prefix_evictions >= 1, "cap pressure must evict parked entries");
+    assert_eq!(s.blocks_live, shared_blocks_per_prompt, "eviction reuses in place");
+    let prefix_evictions = s.prefix_evictions;
+    drop(fresh);
+    println!("cap pressure: {prefix_evictions} parked entries LRU-evicted\n");
+
+    // ── machine-readable report ─────────────────────────────────────────
+    let report = Json::obj()
+        .with("bench", "prefix_share")
+        .with("block_tokens", bt)
+        .with("prompt_tokens", PROMPT)
+        .with("shared_blocks_per_prompt", shared_blocks_per_prompt)
+        .with("warm_agents", WARM_AGENTS)
+        .with("cold_blocks", cold_blocks)
+        .with("cold_h2d_bytes", cold_h2d)
+        .with("warm_new_blocks_per_agent", warm_new_blocks_per_agent)
+        .with("warm_h2d_bytes_per_agent", warm_h2d_per_agent)
+        .with("warm_attach_h2d_bytes", attach_h2d)
+        .with("warm_attach_new_blocks", attach_blocks)
+        .with("prefix_hits", prefix_hits)
+        .with("cow_copies", cow_copies)
+        .with("prefix_evictions", prefix_evictions)
+        .with("attach_us", t_attach.median_ns / 1e3)
+        .with("cold_fill_us", t_cold.median_ns / 1e3);
+    std::fs::write("BENCH_prefix_share.json", report.to_string())?;
+    println!("wrote BENCH_prefix_share.json");
+    println!("shape check: one prefill, N agents — shared prefix is O(1)  ✓");
+    Ok(())
+}

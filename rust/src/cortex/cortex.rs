@@ -19,6 +19,16 @@
 //! episode report's [`PoolStats`] carries the measured `h2d_bytes` /
 //! `dev_gathers` gauges, and the prism charges the device copies to
 //! `MemKind::DeviceKv`.
+//!
+//! Identical prompt prefixes are shared copy-on-write through the pool's
+//! content-addressed registry: [`WarpCortex::start_main`] goes through
+//! `Engine::prefill_shared`, so the first agent of a prompt runs the one
+//! cold prefill and every later agent adopts the registered blocks by
+//! reference, decoding only the uncovered tail (zero prefill executions,
+//! O(1) fresh blocks).  Synapse seeds dedup the same way in `seed_into`.
+//! The registry's hit/miss/evict/CoW gauges ride on [`PoolStats`] and the
+//! `/stats` endpoint; shared blocks are charged once under
+//! `MemKind::SharedKv`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -173,6 +183,10 @@ pub struct WarpCortex {
     pub tracker: Arc<MemoryTracker>,
     pub main_throughput: Throughput,
     pub step_latency: Histogram,
+    /// One shared tokenizer for every request path (`prompt_rows`,
+    /// `start_main`, `run_episode`) — the per-call `Tokenizer::new()` the
+    /// hot paths used to build is hoisted here.
+    tokenizer: Tokenizer,
     next_task_id: std::sync::atomic::AtomicU64,
 }
 
@@ -242,6 +256,7 @@ impl WarpCortex {
             tracker,
             main_throughput: Throughput::new(),
             step_latency: Histogram::new(),
+            tokenizer: Tokenizer::new(),
             next_task_id: std::sync::atomic::AtomicU64::new(1),
         })
     }
@@ -259,18 +274,23 @@ impl WarpCortex {
     /// byte-level tokenizer makes the extra encode O(prompt bytes) —
     /// negligible next to one decode step.)
     pub fn prompt_rows(&self, prompt: &str) -> usize {
-        Tokenizer::new()
+        self.tokenizer
             .encode(prompt, true)
             .len()
             .min(self.engine.caps().prefill_len - 1)
     }
 
     /// Register + prefill a fresh main agent.
+    ///
+    /// Goes through the prefix-cache-aware `Engine::prefill_shared`: the
+    /// first agent of a prompt runs the one cold prefill and registers its
+    /// blocks; later agents with the same prefix attach those blocks by
+    /// reference and decode only the uncovered tail — zero prefill device
+    /// executions and O(1) fresh blocks per warm spawn.
     pub fn start_main(&self, prompt: &str) -> Result<(AgentTicket, Vec<f32>, Vec<f32>)> {
-        let tk = Tokenizer::new();
         let mut ticket = self.prism.register(AgentKind::Main)?;
         let max_prompt = self.engine.caps().prefill_len - 1;
-        let mut ids = tk.encode(prompt, true);
+        let mut ids = self.tokenizer.encode(prompt, true);
         if ids.len() > max_prompt {
             // keep BOS + the most recent window
             let tail = ids.len() - max_prompt + 1;
@@ -279,17 +299,15 @@ impl WarpCortex {
         // `prompt_rows` is the serve layer's clamp basis — it must predict
         // exactly how many rows this truncation produces.
         debug_assert_eq!(ids.len(), self.prompt_rows(prompt));
-        let out = self.engine.prefill(&ids, &mut ticket.kv, Lane::River)?;
-        let v = self.engine.config().vocab_size;
-        let last = out.logits[(out.len - 1) * v..out.len * v].to_vec();
-        Ok((ticket, last, out.hidden_last))
+        let out = self.engine.prefill_shared(&ids, &mut ticket.kv, Lane::River)?;
+        Ok((ticket, out.last_logits, out.hidden_last))
     }
 
     /// Run one full episode: generate up to `max_tokens` from `prompt`,
     /// routing / gating / injecting along the way.
     pub fn run_episode(&self, prompt: &str, max_tokens: usize) -> Result<EpisodeReport> {
         let started = Instant::now();
-        let tk = Tokenizer::new();
+        let tk = &self.tokenizer;
         let (mut ticket, mut logits, mut hidden) = self.start_main(prompt)?;
         let mut router = Router::new(self.cfg.router.clone());
         // Triggers already present in the prompt spawn on the first step.
@@ -447,9 +465,8 @@ impl WarpCortex {
         }
         let mut injected_rows = 0;
         if self.cfg.inject_enabled {
-            let tk = Tokenizer::new();
             let mut thought_ids = vec![crate::text::REF_ID];
-            thought_ids.extend(tk.encode(&outcome.text, false));
+            thought_ids.extend(self.tokenizer.encode(&outcome.text, false));
             match self
                 .injector
                 .inject(&self.engine, &mut ticket.kv, &thought_ids, pos, Lane::Stream)

@@ -38,15 +38,21 @@ pub enum MemKind {
     /// copies are genuinely resident: the host rows are the source of
     /// truth, the device copies are what decode attention actually reads.
     DeviceKv = 5,
+    /// Blocks registered in the pool's content-addressed prefix registry.
+    /// A shared block is charged here exactly once, however many agent
+    /// caches reference it — `MainKv`/`SideKv` count only each cache's
+    /// *private* blocks, so Table 2 never multiply-counts a shared prefix.
+    SharedKv = 6,
 }
 
-pub const MEM_KINDS: [MemKind; 6] = [
+pub const MEM_KINDS: [MemKind; 7] = [
     MemKind::Weights,
     MemKind::MainKv,
     MemKind::SideKv,
     MemKind::Synapse,
     MemKind::Overhead,
     MemKind::DeviceKv,
+    MemKind::SharedKv,
 ];
 
 impl MemKind {
@@ -58,6 +64,7 @@ impl MemKind {
             MemKind::Synapse => "synapse",
             MemKind::Overhead => "overhead",
             MemKind::DeviceKv => "device_kv",
+            MemKind::SharedKv => "shared_kv",
         }
     }
 }
@@ -65,8 +72,8 @@ impl MemKind {
 /// Live byte accounting, by category.
 #[derive(Debug, Default)]
 pub struct MemoryTracker {
-    live: [AtomicI64; 6],
-    peak: [AtomicI64; 6],
+    live: [AtomicI64; 7],
+    peak: [AtomicI64; 7],
     allocs: AtomicU64,
     frees: AtomicU64,
 }
@@ -102,8 +109,8 @@ impl MemoryTracker {
     }
 
     pub fn snapshot(&self) -> MemSnapshot {
-        let mut per = [0i64; 6];
-        let mut peak = [0i64; 6];
+        let mut per = [0i64; 7];
+        let mut peak = [0i64; 7];
         for (i, _) in MEM_KINDS.iter().enumerate() {
             per[i] = self.live[i].load(Ordering::Relaxed);
             peak[i] = self.peak[i].load(Ordering::Relaxed);
@@ -149,8 +156,8 @@ impl Drop for MemGuard {
 
 #[derive(Debug, Clone)]
 pub struct MemSnapshot {
-    pub per_kind: [i64; 6],
-    pub peak_per_kind: [i64; 6],
+    pub per_kind: [i64; 7],
+    pub peak_per_kind: [i64; 7],
     pub allocs: u64,
     pub frees: u64,
 }

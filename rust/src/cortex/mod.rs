@@ -19,6 +19,19 @@
 //! (paging granularity is fixed at engine construction), every agent cache
 //! is a block-table view into it, and finished side agents return their
 //! blocks for immediate reuse.
+//!
+//! Common prefixes are shared copy-on-write: the pool keeps a
+//! content-addressed registry of full blocks (prompt token chains via
+//! `Engine::prefill_shared`, landmark seeds via `Synapse::seed_into`), so
+//! spawning N agents from one prefix costs one cold fill plus O(1) blocks —
+//! later agents attach the registered blocks by reference, any write into a
+//! shared block copies it first, and parked entries (refcount 0) are
+//! LRU-evicted only under the pool's `max_blocks` cap.  Accounting follows
+//! ownership: per-agent charges (`MainKv`/`SideKv`) cover private blocks
+//! only, while registry-shared blocks are charged once globally
+//! (`SharedKv`) — Table 2 counts every physical block exactly once.  The
+//! registry's hit/miss/evict/CoW gauges surface on
+//! [`crate::model::PoolStats`] and the `/stats` endpoint.
 
 pub mod agent;
 pub mod batcher;

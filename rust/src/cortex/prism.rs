@@ -6,7 +6,12 @@
 //! pool-backed cache from the shared [`KvPool`], and wires the cache to the
 //! [`MemoryTracker`] so the Table-2 bench measures *resident-block* bytes:
 //! the charge grows as the cache fills and shrinks as blocks are released —
-//! not the configured capacity the seed used to reserve eagerly.
+//! not the configured capacity the seed used to reserve eagerly.  Under
+//! prefix sharing each agent's charge covers only its *private* blocks;
+//! registry-shared blocks (common prompt prefixes, landmark seeds) are
+//! charged once globally under `MemKind::SharedKv` via
+//! [`KvPool::track_shared`], so the shared-prefix term of the context bound
+//! is O(1) in the agent count.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -115,6 +120,11 @@ impl Prism {
         // on reclaim, so Table 2 shows both sides of each block (host rows
         // under Main/SideKv, the device copy under DeviceKv).
         pool.track_device(tracker.alloc(MemKind::DeviceKv, 0));
+        // And one for registry-shared (prefix-cache) blocks: a block N
+        // agents reference is charged here exactly once — the per-agent
+        // Main/SideKv guards count only private blocks, so Table 2 never
+        // multiply-counts a shared prompt prefix or landmark seed.
+        pool.track_shared(tracker.alloc(MemKind::SharedKv, 0));
         Arc::new(Prism {
             engine,
             tracker,

@@ -6,6 +6,14 @@
 //! their own caches from it: k rows instead of L — the `O(N·L) → O(N·k)`
 //! claim.  Readers share one `Arc` snapshot ("zero-copy" in the paper's
 //! terms: no per-reader duplication of the landmark buffer).
+//!
+//! Seeding itself is deduplicated through the pool's content-addressed
+//! prefix registry: [`Synapse::seed_into`] keys the landmark rows on
+//! `(snapshot version, landmark indices)` — which fully determine the row
+//! contents — so the first side agent of a snapshot writes the seed blocks
+//! once and every later agent attaches them *by reference* (zero copy,
+//! zero host→device traffic for the shared blocks, CoW on divergence).
+//! The shared-seed term of the O(N·k) context bound is thereby O(1) in N.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -237,6 +245,14 @@ impl Synapse {
     /// agents reuse the cache their prism ticket already rents, so landmark
     /// rows land in the shared block pool without an intermediate buffer).
     /// Clears the cache first.  Returns `(continuation_pos, version)`.
+    ///
+    /// Full landmark blocks are shared through the pool's prefix registry,
+    /// keyed on the snapshot version plus the landmark indices: for a given
+    /// version those two fully determine the row contents (the subset modes
+    /// only choose *which* indices survive), so N side agents seeded from
+    /// the same snapshot hold the same physical blocks — the first seeding
+    /// writes them, the rest attach by reference and pay only the partial
+    /// tail block.
     pub fn seed_into(&self, kv: &mut KvCache, mode: SeedMode) -> Result<(i32, u64)> {
         let Some(snap) = self.read() else {
             bail!("synapse is empty (no landmarks pushed yet)");
@@ -250,12 +266,21 @@ impl Synapse {
         };
         let lm = lm.as_ref().unwrap_or(&snap.landmarks);
         let k = lm.indices.len();
-        // replace_rows rents before releasing: pool-exhaustion backpressure
-        // leaves the caller's previous contents intact.
-        kv.replace_rows(k, &lm.lm_k, &lm.lm_v)?;
+        // Domain salt: the synapse's own namespace, folded with the
+        // snapshot version — identical indices from *different* snapshots
+        // must never collide in the registry.
+        let salt = crate::model::chain_hash(
+            SYNAPSE_CHAIN_SALT,
+            &[snap.version as i32, (snap.version >> 32) as i32],
+        );
+        kv.replace_rows_keyed(k, salt, &lm.indices, &lm.lm_k, &lm.lm_v)?;
         Ok((lm.source_len as i32, snap.version))
     }
 }
+
+/// Domain salt for synapse landmark-seed chains in the pool's prefix
+/// registry (prompt chains use [`crate::model::PROMPT_CHAIN_SALT`]).
+const SYNAPSE_CHAIN_SALT: u64 = 0x5741_5250_5359_4e41; // "WARPSYNA"
 
 /// How a side agent's cache is seeded from the synapse.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -13,11 +13,23 @@
 //! * **Layer 3** (this crate): the serving coordinator — singleton weight
 //!   sharing ([`cortex::prism`]), the shared demand-paged KV block pool
 //!   ([`model::pool`]: agent caches are block tables, resident bytes track
-//!   fill rather than configured capacity), the Topological Synapse buffer
-//!   ([`cortex::synapse`]), the Cortex Router ([`cortex::router`]), the
-//!   Validation Gate ([`cortex::gate`]), Referential Injection
-//!   ([`cortex::inject`]) and the River & Stream scheduler
-//!   ([`runtime::device`] lanes + [`cortex::scheduler`]).
+//!   fill rather than configured capacity; blocks are refcounted and
+//!   copy-on-write, with a content-addressed prefix registry so N agents
+//!   spawned from one prompt or landmark seed share the prefix blocks
+//!   physically — one cold prefill, O(1) shared-prefix memory, LRU
+//!   eviction of parked entries under the pool cap), the Topological
+//!   Synapse buffer ([`cortex::synapse`]), the Cortex Router
+//!   ([`cortex::router`]), the Validation Gate ([`cortex::gate`]),
+//!   Referential Injection ([`cortex::inject`]) and the River & Stream
+//!   scheduler ([`runtime::device`] lanes + [`cortex::scheduler`]).
+//!
+//! Memory accounting follows block ownership: each agent's `MainKv`/
+//! `SideKv` charge counts only its *private* blocks, registry-shared
+//! blocks are charged exactly once under `SharedKv`, and the device slab
+//! under `DeviceKv` — so Table 2 never multiply-counts a shared prefix.
+//! The pool's `/stats` gauges expose the sharing machinery live:
+//! `shared_blocks`/`shared_bytes`, `prefix_hits`/`prefix_misses`/
+//! `prefix_evictions` and `cow_copies`.
 //!
 //! Python never runs on the request path: `make artifacts` exports
 //! everything once, and this crate serves from the compiled artifacts.

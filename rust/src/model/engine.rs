@@ -35,6 +35,28 @@ pub struct PrefillOut {
     pub len: usize,
 }
 
+/// Output of a prefix-cache-aware prefill ([`Engine::prefill_shared`]).
+#[derive(Debug)]
+pub struct PrefillReuse {
+    /// `[V]` logits at the last real position (feeds the first sample).
+    pub last_logits: Vec<f32>,
+    /// Final-layer hidden state at the last real position.
+    pub hidden_last: Vec<f32>,
+    /// Rows now in the cache (== token count).
+    pub len: usize,
+    /// Rows adopted from the shared prefix registry — zero device work,
+    /// zero host→device bytes, O(1) fresh blocks.
+    pub cached_rows: usize,
+    /// Whether the monolithic prefill program ran (the cold path).
+    pub cold_prefill: bool,
+    /// Teacher-forced decode steps run for the uncovered tail (warm path).
+    pub tail_steps: usize,
+}
+
+/// Domain salt for prompt-token chains in the pool's prefix registry
+/// (synapse landmark seeds use their own salt — see `cortex::synapse`).
+pub const PROMPT_CHAIN_SALT: u64 = 0x5741_5250_434f_5254; // "WARPCORT"
+
 /// Output of a decode op.
 #[derive(Debug)]
 pub struct DecodeOut {
@@ -223,6 +245,82 @@ impl Engine {
             logits: logits.into_f32()?,
             hidden_last: hidden.into_f32()?,
             len: tokens.len(),
+        })
+    }
+
+    /// Prefix-cache-aware prefill: the content-addressed fast path behind
+    /// [`crate::cortex::WarpCortex::start_main`].
+    ///
+    /// The prompt is chain-hashed per block against `kv`'s pool.  Blocks
+    /// already registered (an earlier agent ran the same prefix) are
+    /// adopted *by reference* — no device execution, no upload, no fresh
+    /// memory — and only the uncovered tail runs, as teacher-forced decode
+    /// steps over the shared prefix.  On a total miss the monolithic
+    /// prefill program runs once and the prompt's full blocks are published
+    /// for every later agent: one cold prefill, N warm starts.
+    ///
+    /// Coverage always stops before the last token (its decode produces
+    /// the next-token logits and hidden state generation needs), and a
+    /// sliver of coverage falls back to the cold path — one fused prefill
+    /// beats a long teacher-forced tail.
+    pub fn prefill_shared(
+        &self,
+        tokens: &[i32],
+        kv: &mut KvCache,
+        lane: Lane,
+    ) -> Result<PrefillReuse> {
+        let s = self.caps.prefill_len;
+        if tokens.is_empty() || tokens.len() > s {
+            bail!("prefill: prompt length {} not in 1..={s}", tokens.len());
+        }
+        if kv.capacity() != self.caps.main_ctx {
+            bail!("prefill requires a main-capacity cache");
+        }
+        if !kv.is_empty() {
+            bail!("prefill_shared requires an empty cache");
+        }
+        let pool = kv.pool().clone();
+        let bt = pool.block_tokens();
+        let hashes = pool.prefix_hashes(PROMPT_CHAIN_SALT, tokens);
+        let usable = hashes.len().min((tokens.len() - 1) / bt);
+        let mut cached_rows = kv.attach_shared_prefix(&hashes[..usable], tokens)?;
+        if cached_rows > 0 && cached_rows * 2 < tokens.len() {
+            kv.clear();
+            cached_rows = 0;
+        }
+        if cached_rows == 0 {
+            let out = self.prefill(tokens, kv, lane)?;
+            kv.register_prefix(&hashes, tokens);
+            let v = self.cfg.vocab_size;
+            let last = out.logits[(out.len - 1) * v..out.len * v].to_vec();
+            return Ok(PrefillReuse {
+                last_logits: last,
+                hidden_last: out.hidden_last,
+                len: out.len,
+                cached_rows: 0,
+                cold_prefill: true,
+                tail_steps: 0,
+            });
+        }
+        // Warm path: rows [0, cached_rows) are already resident (host and
+        // device side) — teacher-force only the uncovered tail.  Each step
+        // appends its K/V row through the pool's O(row) write-through and
+        // attends over the shared prefix via the paged gather.
+        let mut last: Option<DecodeOut> = None;
+        for (i, &tok) in tokens.iter().enumerate().skip(cached_rows) {
+            last = Some(self.decode(tok, i as i32, kv, lane)?);
+        }
+        let out = last.expect("tail is non-empty: coverage stops before the last token");
+        // Publish any full blocks the tail completed (typically a no-op:
+        // the cold agent already registered them).
+        kv.register_prefix(&hashes, tokens);
+        Ok(PrefillReuse {
+            last_logits: out.logits,
+            hidden_last: out.hidden,
+            len: tokens.len(),
+            cached_rows,
+            cold_prefill: false,
+            tail_steps: tokens.len() - cached_rows,
         })
     }
 

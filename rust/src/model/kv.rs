@@ -9,34 +9,60 @@
 //! [`MemoryTracker`](crate::cortex::memory::MemoryTracker) through an
 //! attached [`MemGuard`].
 //!
-//! Since the device-resident refactor, every write additionally goes
-//! through to the block's device copy **incrementally** (the touched rows,
-//! not the prefix), so decode steps never re-upload the cache: they ship a
-//! [`PagedKv`] — block table + length — and the device gathers K/V from its
-//! resident copies ([`KvCache::device_gather`], bit-identical to the
-//! host-side [`KvCache::prefix_upload`] reference, proven by the proptest
-//! below).  The host gather paths remain for prefill outputs, the synapse
-//! ablations and as the flat reference; both zero-fill positions past `len`
-//! — numerically transparent because every compiled program masks attention
-//! beyond `cache_len`.
+//! # Shared prefixes and copy-on-write
+//!
+//! Since the prefix-sharing refactor a table entry may reference a *shared*
+//! block: [`KvCache::register_prefix`] publishes a cache's full blocks in
+//! the pool's content-addressed registry, and
+//! [`KvCache::attach_shared_prefix`] lets a later cache adopt the longest
+//! registered prefix by reference — N agents spawned from one prompt hold
+//! the same physical blocks.  All writes funnel through the pool's CoW gate
+//! ([`KvPool::write_run`]): a write that lands in a shared block first
+//! copies it into a private one and swaps the table entry, so divergence
+//! after sharing is bit-identical to never having shared (proven by the
+//! proptest below).  Accounting follows ownership: [`KvCache::bytes`]
+//! counts only this cache's *private* blocks — registry-shared blocks are
+//! charged once globally (`MemKind::SharedKv`), never once per referencing
+//! cache.
+//!
+//! Every write additionally goes through to the block's device copy
+//! **incrementally** (the touched rows, not the prefix), so decode steps
+//! never re-upload the cache: they ship a [`PagedKv`] — block table +
+//! length — and the device gathers K/V from its resident copies
+//! ([`KvCache::device_gather`], bit-identical to the host-side
+//! [`KvCache::prefix_upload`] reference).  The host gather paths remain for
+//! prefill outputs, the synapse ablations and as the flat reference; both
+//! zero-fill positions past `len` — numerically transparent because every
+//! compiled program masks attention beyond `cache_len`.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::pool::{KvBlock, KvPool, KvPoolConfig, PagedKv};
+use super::pool::{KvPool, KvPoolConfig, PagedKv};
 use crate::cortex::memory::MemGuard;
 use crate::runtime::ModelConfig;
+
+/// One block-table entry: the pool block id plus whether this cache holds
+/// it *by reference* from the prefix registry (`shared`) or owns it
+/// privately.  Shared entries are excluded from this cache's byte charge
+/// (the pool charges them once globally) and are immutable — writes CoW.
+#[derive(Debug, Clone, Copy)]
+struct BlockRef {
+    id: u32,
+    shared: bool,
+}
 
 /// A bounded, pool-backed KV cache for one agent.
 pub struct KvCache {
     pool: Arc<KvPool>,
     /// Block table: block `i` holds positions `[i*bt, (i+1)*bt)`.
-    blocks: Vec<KvBlock>,
+    blocks: Vec<BlockRef>,
     capacity: usize,
     len: usize,
-    /// Accounting hook: resized to the resident-block bytes on every
-    /// rent/release, so the tracker measures fill rather than reservation.
+    /// Accounting hook: resized to this cache's *private* resident bytes on
+    /// every rent/release/CoW, so the tracker measures fill rather than
+    /// reservation and never double-counts shared blocks.
     mem: Option<MemGuard>,
 }
 
@@ -46,6 +72,7 @@ impl std::fmt::Debug for KvCache {
             .field("len", &self.len)
             .field("capacity", &self.capacity)
             .field("blocks", &self.blocks.len())
+            .field("shared_blocks", &self.shared_blocks())
             .field("block_tokens", &self.pool.block_tokens())
             .finish()
     }
@@ -88,10 +115,19 @@ impl KvCache {
         self.capacity - self.len
     }
 
-    /// Resident bytes: rented blocks × block bytes — the Table-2 unit.
-    /// Grows with fill, not with configured capacity.
+    /// Blocks this cache references out of the shared prefix registry
+    /// (charged once globally, not to this cache).
+    pub fn shared_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.shared).count()
+    }
+
+    /// Resident bytes attributable to this cache: *private* blocks ×
+    /// block bytes — the Table-2 unit.  Grows with fill, not with
+    /// configured capacity, and excludes registry-shared blocks (those are
+    /// charged once under `MemKind::SharedKv` however many caches
+    /// reference them).
     pub fn bytes(&self) -> u64 {
-        self.blocks.len() as u64 * self.pool.block_bytes()
+        self.blocks.iter().filter(|b| !b.shared).count() as u64 * self.pool.block_bytes()
     }
 
     /// Bytes an eager flat `[L, C, KV, hd]` allocation of this capacity
@@ -106,14 +142,14 @@ impl KvCache {
     }
 
     /// Attach the memory-accounting guard; from here on every block rent
-    /// and release resizes it to the resident-block bytes.
+    /// and release resizes it to the private resident-block bytes.
     pub fn track(&mut self, mem: MemGuard) {
         self.mem = Some(mem);
         self.sync_mem();
     }
 
     fn sync_mem(&mut self) {
-        let bytes = self.blocks.len() as u64 * self.pool.block_bytes();
+        let bytes = self.bytes();
         if let Some(g) = self.mem.as_mut() {
             g.resize(bytes);
         }
@@ -123,14 +159,19 @@ impl KvCache {
         self.pool.row()
     }
 
+    /// The raw id table (all rented blocks, valid or not).
+    fn table_ids(&self) -> Vec<u32> {
+        self.blocks.iter().map(|b| b.id).collect()
+    }
+
     /// Rent blocks until `rows` positions fit.  On pool exhaustion the
     /// already-rented blocks are kept (the cache stays consistent) and the
     /// backpressure error bubbles up.
     fn ensure_blocks(&mut self, rows: usize) -> Result<()> {
         let need = self.pool.blocks_for(rows);
         while self.blocks.len() < need {
-            match self.pool.rent_block() {
-                Ok(b) => self.blocks.push(b),
+            match self.pool.rent_ref() {
+                Ok(id) => self.blocks.push(BlockRef { id, shared: false }),
                 Err(e) => {
                     self.sync_mem();
                     return Err(e);
@@ -147,38 +188,33 @@ impl KvCache {
         (pos / bt, pos % bt)
     }
 
-    /// Flat offset of `(pos_in_block, layer)` inside a block buffer.
-    fn block_offset(&self, layer: usize, off: usize) -> usize {
-        (layer * self.pool.block_tokens() + off) * self.row()
-    }
-
-    /// Copy `[L, n, KV, hd]` rows into positions `[base, base+n)`, writing
-    /// each touched run through to the block's device-resident copy.
-    /// Blocks covering those positions must already be rented — the single
-    /// home of the block-addressing arithmetic for writes.
-    fn write_rows(&mut self, base: usize, n: usize, k_rows: &[f32], v_rows: &[f32]) {
-        let row = self.row();
-        let n_layers = self.pool.n_layers();
+    /// Copy `[L, n, KV, hd]` rows into positions `[base, base+n)` through
+    /// the pool's CoW write gate: a run landing in a shared block swaps a
+    /// private copy into this table.  Blocks covering those positions must
+    /// already be rented or attached.
+    fn write_rows(&mut self, base: usize, n: usize, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
         let bt = self.pool.block_tokens();
         let mut i = 0;
         while i < n {
             let (b, off) = self.locate(base + i);
             let run = (bt - off).min(n - i);
-            {
-                let block = &mut self.blocks[b];
-                for layer in 0..n_layers {
-                    let dst = (layer * bt + off) * row;
-                    let src = (layer * n + i) * row;
-                    block.k[dst..dst + run * row]
-                        .copy_from_slice(&k_rows[src..src + run * row]);
-                    block.v[dst..dst + run * row]
-                        .copy_from_slice(&v_rows[src..src + run * row]);
-                }
+            let entry = self.blocks[b];
+            let target = self
+                .pool
+                .write_run(entry.id, off, run, i, n, k_rows, v_rows)?;
+            if target != entry.id {
+                // Copy-on-write: this cache now privately owns the copy
+                // (and is charged for it); the shared original keeps its
+                // registry entry and its other readers.
+                self.blocks[b] = BlockRef {
+                    id: target,
+                    shared: false,
+                };
+                self.sync_mem();
             }
-            // Incremental write-through: this run only, never the prefix.
-            self.pool.dev_sync_rows(&self.blocks[b], off, run);
             i += run;
         }
+        Ok(())
     }
 
     /// Append one position's K/V rows.  `k_new`/`v_new` are `[L, KV, hd]`
@@ -198,7 +234,7 @@ impl KvCache {
             bail!("append_rows: expected {expect} floats, got {}", k_rows.len());
         }
         self.ensure_blocks(self.len + n)?;
-        self.write_rows(self.len, n, k_rows, v_rows);
+        self.write_rows(self.len, n, k_rows, v_rows)?;
         self.len += n;
         self.pool.note_rows_added(n);
         Ok(())
@@ -206,8 +242,10 @@ impl KvCache {
 
     /// Replace the cache contents with `n` rows (`[L, n, KV, hd]`), renting
     /// any additional blocks BEFORE dropping the old rows — like
-    /// [`KvCache::load_full`], pool-exhaustion backpressure leaves the
-    /// previous contents intact.
+    /// [`KvCache::load_full`], pool-exhaustion backpressure during growth
+    /// leaves the previous contents intact.  (A CoW rent *inside* the
+    /// rewrite can still fail on an exhausted pool; the cache stays
+    /// consistent but partially rewritten in that case.)
     pub fn replace_rows(&mut self, n: usize, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
         if n > self.capacity {
             bail!("replace_rows: {n} rows > capacity {}", self.capacity);
@@ -224,13 +262,131 @@ impl KvCache {
         self.len = 0;
         while self.blocks.len() > need {
             let b = self.blocks.pop().expect("block table shrank unexpectedly");
-            self.pool.release_block(b);
+            self.pool.release_ref(b.id);
         }
-        self.write_rows(0, n, k_rows, v_rows);
+        self.write_rows(0, n, k_rows, v_rows)?;
         self.len = n;
         self.pool.note_rows_added(n);
         self.sync_mem();
         Ok(())
+    }
+
+    /// [`KvCache::replace_rows`] with content keys: full blocks of the new
+    /// contents are shared through the pool's prefix registry.  `keys` is
+    /// one i32 per row (token ids, landmark indices, …) and `salt` is the
+    /// caller's domain separator — identical `(salt, keys)` chains MUST
+    /// imply identical row contents, that is the content-addressing
+    /// contract.  Registered hits are attached by reference (zero copy,
+    /// zero host→device traffic); misses are written privately and then
+    /// published for the next caller.  The partial tail block stays
+    /// private.
+    ///
+    /// Unlike `replace_rows`, the previous contents are dropped before the
+    /// rewrite (the registry path requires an empty cache), so on a
+    /// mid-rewrite pool-exhaustion error the cache is left consistent but
+    /// holding only the rows written so far.
+    pub fn replace_rows_keyed(
+        &mut self,
+        n: usize,
+        salt: u64,
+        keys: &[i32],
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<()> {
+        if n > self.capacity {
+            bail!("replace_rows_keyed: {n} rows > capacity {}", self.capacity);
+        }
+        if keys.len() != n {
+            bail!("replace_rows_keyed: {} keys for {n} rows", keys.len());
+        }
+        let expect = self.pool.n_layers() * n * self.row();
+        if k_rows.len() != expect || v_rows.len() != expect {
+            bail!(
+                "replace_rows_keyed: expected {expect} floats, got {}",
+                k_rows.len()
+            );
+        }
+        self.clear();
+        let hashes = self.pool.prefix_hashes(salt, keys);
+        let covered = self.attach_shared_prefix(&hashes, keys)?;
+        if covered < n {
+            let k_tail = self.rows_slice(n, k_rows, covered, n);
+            let v_tail = self.rows_slice(n, v_rows, covered, n);
+            self.append_rows(n - covered, &k_tail, &v_tail)?;
+        }
+        self.register_prefix(&hashes, keys);
+        Ok(())
+    }
+
+    /// Rows `[start, end)` of a `[L, n_src, KV, hd]` buffer as a contiguous
+    /// `[L, end-start, KV, hd]` copy.
+    fn rows_slice(&self, n_src: usize, src: &[f32], start: usize, end: usize) -> Vec<f32> {
+        let row = self.row();
+        let n_layers = self.pool.n_layers();
+        let mut out = Vec::with_capacity(n_layers * (end - start) * row);
+        for layer in 0..n_layers {
+            let base = (layer * n_src + start) * row;
+            out.extend_from_slice(&src[base..base + (end - start) * row]);
+        }
+        out
+    }
+
+    /// On an empty cache, adopt the longest registered prefix of `hashes`
+    /// by reference: hit blocks join this table as shared entries (the
+    /// pool increfs them), `len` jumps to the covered rows, and no bytes
+    /// move — host or device.  Returns the covered row count (0 = total
+    /// miss).  Hashes come from [`KvPool::prefix_hashes`] over `keys`
+    /// (which must cover every hashed block — the pool verifies each hit
+    /// against the registered key run, so hash collisions miss instead of
+    /// attaching foreign KV).
+    pub fn attach_shared_prefix(&mut self, hashes: &[u64], keys: &[i32]) -> Result<usize> {
+        if self.len != 0 || !self.blocks.is_empty() {
+            bail!("attach_shared_prefix requires an empty cache");
+        }
+        let bt = self.pool.block_tokens();
+        let take = hashes.len().min(self.capacity / bt);
+        let ids = self.pool.lookup_chain(&hashes[..take], keys);
+        let rows = ids.len() * bt;
+        for id in ids {
+            self.blocks.push(BlockRef { id, shared: true });
+        }
+        self.len = rows;
+        if rows > 0 {
+            self.pool.note_rows_added(rows);
+        }
+        self.sync_mem();
+        Ok(rows)
+    }
+
+    /// Publish this cache's leading full blocks in the pool's prefix
+    /// registry under `hashes` (one chain hash per full block, from
+    /// [`KvPool::prefix_hashes`] over `keys`, which must cover every
+    /// hashed block — each block's own key run is stored for hit-time
+    /// verification).  Only fully-valid private blocks are registered;
+    /// entries already shared, or whose hash another block owns, are
+    /// skipped.  Registered blocks flip to shared: this cache stops being
+    /// charged for them (they move to the global `SharedKv` charge) and
+    /// its own later writes to them copy-on-write.
+    pub fn register_prefix(&mut self, hashes: &[u64], keys: &[i32]) {
+        let bt = self.pool.block_tokens();
+        let full = self.len / bt;
+        let mut changed = false;
+        for (i, (entry, &hash)) in self.blocks.iter_mut().zip(hashes.iter()).enumerate().take(full)
+        {
+            if entry.shared {
+                continue;
+            }
+            if self
+                .pool
+                .register_block(entry.id, hash, &keys[i * bt..(i + 1) * bt])
+            {
+                entry.shared = true;
+                changed = true;
+            }
+        }
+        if changed {
+            self.sync_mem();
+        }
     }
 
     /// Load from prefill outputs (`[L, C, KV, hd]` full-capacity buffers)
@@ -258,21 +414,27 @@ impl KvCache {
         self.len = 0;
         while self.blocks.len() > need {
             let b = self.blocks.pop().expect("block table shrank unexpectedly");
-            self.pool.release_block(b);
+            self.pool.release_ref(b.id);
         }
         let bt = self.pool.block_tokens();
-        for (b, block) in self.blocks.iter_mut().enumerate() {
+        // The `[L, C, KV, hd]` source is exactly the write gate's
+        // `[L, n_src, row]` layout with n_src = capacity, so each block is
+        // one run at its own source offset.  Prefill is the one
+        // legitimately O(len) upload; still per-run, so a short prompt
+        // ships a short copy.
+        for b in 0..need {
             let start = b * bt;
             let run = (len - start).min(bt);
-            for layer in 0..n_layers {
-                let src = (layer * self.capacity + start) * row;
-                let dst = layer * bt * row;
-                block.k[dst..dst + run * row].copy_from_slice(&k_full[src..src + run * row]);
-                block.v[dst..dst + run * row].copy_from_slice(&v_full[src..src + run * row]);
+            let entry = self.blocks[b];
+            let target = self
+                .pool
+                .write_run(entry.id, 0, run, start, self.capacity, k_full, v_full)?;
+            if target != entry.id {
+                self.blocks[b] = BlockRef {
+                    id: target,
+                    shared: false,
+                };
             }
-            // Prefill is the one legitimately O(len) upload; still per-run,
-            // so a short prompt ships a short copy.
-            self.pool.dev_sync_rows(block, 0, run);
         }
         self.len = len;
         self.pool.note_rows_added(len);
@@ -280,7 +442,9 @@ impl KvCache {
         Ok(())
     }
 
-    /// Drop rows beyond `rows`, returning now-empty blocks to the pool.
+    /// Drop rows beyond `rows`, returning now-empty blocks to the pool
+    /// (shared blocks just lose this table's reference — the registry and
+    /// other readers keep theirs).
     pub fn truncate(&mut self, rows: usize) {
         if rows >= self.len {
             return;
@@ -290,7 +454,7 @@ impl KvCache {
         let keep = self.pool.blocks_for(rows);
         while self.blocks.len() > keep {
             let b = self.blocks.pop().expect("block table shrank unexpectedly");
-            self.pool.release_block(b);
+            self.pool.release_ref(b.id);
         }
         self.sync_mem();
     }
@@ -299,45 +463,6 @@ impl KvCache {
     /// path that makes finished agents nearly free).
     pub fn clear(&mut self) {
         self.truncate(0);
-    }
-
-    /// Gather one contiguous `[L, c, KV, hd]` buffer from the block table.
-    fn gather_prefix<F>(&self, c: usize, pick: F) -> Vec<f32>
-    where
-        F: Fn(&KvBlock) -> &[f32],
-    {
-        let mut out = vec![0.0f32; self.pool.n_layers() * c * self.row()];
-        self.gather_prefix_into(c, &mut out, pick);
-        out
-    }
-
-    /// Allocation-free gather into a caller-provided `[L, c, KV, hd]`
-    /// buffer.  Only the valid prefix (`< len`) is written — positions past
-    /// it must already be zeroed by the caller (freshly allocated batch
-    /// buffers are).
-    fn gather_prefix_into<F>(&self, c: usize, out: &mut [f32], pick: F)
-    where
-        F: Fn(&KvBlock) -> &[f32],
-    {
-        let row = self.row();
-        let n_layers = self.pool.n_layers();
-        let bt = self.pool.block_tokens();
-        let per = c * row;
-        debug_assert_eq!(out.len(), n_layers * per);
-        let valid = self.len.min(c);
-        for (b, block) in self.blocks.iter().enumerate() {
-            let start = b * bt;
-            if start >= valid {
-                break;
-            }
-            let run = (valid - start).min(bt);
-            let buf = pick(block);
-            for layer in 0..n_layers {
-                let dst = layer * per + start * row;
-                let src = layer * bt * row;
-                out[dst..dst + run * row].copy_from_slice(&buf[src..src + run * row]);
-            }
-        }
     }
 
     pub fn shape(&self) -> Vec<usize> {
@@ -357,10 +482,12 @@ impl KvCache {
     /// table.  Requires `len() <= c <= capacity()`.
     pub fn prefix_upload(&self, c: usize) -> (Vec<f32>, Vec<f32>) {
         debug_assert!(self.len <= c && c <= self.capacity);
-        (
-            self.gather_prefix(c, |b| &b.k),
-            self.gather_prefix(c, |b| &b.v),
-        )
+        let sz = self.pool.n_layers() * c * self.row();
+        let mut k = vec![0.0f32; sz];
+        let mut v = vec![0.0f32; sz];
+        self.pool
+            .host_gather_prefix_into(&self.table_ids(), self.len, c, &mut k, &mut v);
+        (k, v)
     }
 
     /// Device block table covering the valid prefix (`len` rows).
@@ -376,7 +503,9 @@ impl KvCache {
     /// The view stays valid for as long as the cache is neither mutated
     /// nor dropped; callers that hand it to another thread (the batcher)
     /// must block until the step completes, which the request/reply
-    /// protocol guarantees.
+    /// protocol guarantees.  Shared blocks in the table are safe to read
+    /// concurrently: they are immutable by the CoW invariant, and the
+    /// reader's reference keeps them from being evicted or reclaimed.
     pub fn paged(&self) -> PagedKv {
         PagedKv {
             table: self.block_table(),
@@ -398,48 +527,19 @@ impl KvCache {
     /// into `[L, n, KV, hd]` buffers — the host-side analogue of the synapse
     /// program's landmark gather, used by the selection-policy ablation.
     pub fn gather_rows(&self, indices: &[usize]) -> (Vec<f32>, Vec<f32>) {
-        let row = self.row();
-        let n_layers = self.pool.n_layers();
-        let n = indices.len();
-        let mut k = Vec::with_capacity(n_layers * n * row);
-        let mut v = Vec::with_capacity(n_layers * n * row);
-        for layer in 0..n_layers {
-            for &pos in indices {
-                let (b, off) = self.locate(pos);
-                let o = self.block_offset(layer, off);
-                k.extend_from_slice(&self.blocks[b].k[o..o + row]);
-                v.extend_from_slice(&self.blocks[b].v[o..o + row]);
-            }
-        }
-        (k, v)
+        self.pool.host_gather_rows(&self.table_ids(), indices)
     }
 
     /// K rows for position range `[start, end)` of a given layer (`end`
     /// clamped to `len`).  Owned: the range may span multiple blocks.
     pub fn k_slice(&self, layer: usize, start: usize, end: usize) -> Vec<f32> {
-        self.range_rows(layer, start, end, |b| &b.k)
+        self.pool
+            .host_slice(&self.table_ids(), layer, start, end.min(self.len), false)
     }
 
     pub fn v_slice(&self, layer: usize, start: usize, end: usize) -> Vec<f32> {
-        self.range_rows(layer, start, end, |b| &b.v)
-    }
-
-    fn range_rows<F>(&self, layer: usize, start: usize, end: usize, pick: F) -> Vec<f32>
-    where
-        F: Fn(&KvBlock) -> &[f32],
-    {
-        let row = self.row();
-        let end = end.min(self.len);
-        if start >= end {
-            return Vec::new();
-        }
-        let mut out = Vec::with_capacity((end - start) * row);
-        for pos in start..end {
-            let (b, off) = self.locate(pos);
-            let o = self.block_offset(layer, off);
-            out.extend_from_slice(&pick(&self.blocks[b])[o..o + row]);
-        }
-        out
+        self.pool
+            .host_slice(&self.table_ids(), layer, start, end.min(self.len), true)
     }
 }
 
@@ -447,23 +547,23 @@ impl KvCache {
     /// Deep copy renting fresh blocks from the same pool, surfacing pool
     /// exhaustion as the same backpressure error every growth path returns.
     /// The copy is untracked (no memory guard) — the prism attaches guards
-    /// only to registered agents.
+    /// only to registered agents — and fully private: shared table entries
+    /// of the source are materialised as owned copies.
     pub fn try_clone(&self) -> Result<KvCache> {
         let mut c = KvCache::with_pool(self.pool.clone(), self.capacity);
-        c.ensure_blocks(self.len)?;
         let bt = self.pool.block_tokens();
-        for (b, (dst, src)) in c.blocks.iter_mut().zip(&self.blocks).enumerate() {
-            dst.k.copy_from_slice(&src.k);
-            dst.v.copy_from_slice(&src.v);
-            // the clone's blocks have their own device slots: write the
-            // valid rows through so it is decodable like any other cache
+        for (b, entry) in self.blocks.iter().enumerate() {
             let start = b * bt;
-            if start < self.len {
-                c.pool.dev_sync_rows(dst, 0, (self.len - start).min(bt));
-            }
+            let valid = if start < self.len {
+                (self.len - start).min(bt)
+            } else {
+                0
+            };
+            let id = self.pool.clone_block(entry.id, valid)?;
+            c.blocks.push(BlockRef { id, shared: false });
         }
         c.len = self.len;
-        c.pool.note_rows_added(self.len);
+        self.pool.note_rows_added(self.len);
         Ok(c)
     }
 }
@@ -482,10 +582,10 @@ impl Drop for KvCache {
     fn drop(&mut self) {
         self.pool.note_rows_removed(self.len);
         for b in self.blocks.drain(..) {
-            self.pool.release_block(b);
+            self.pool.release_ref(b.id);
         }
         // `self.mem` drops after this body, releasing the tracked resident
-        // bytes (which still equal blocks × block_bytes at this point).
+        // bytes (which still equal the private blocks' bytes at this point).
     }
 }
 
@@ -570,6 +670,18 @@ mod tests {
             }
             (k, v)
         }
+    }
+
+    fn crop_eq(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+        }
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{what}[{i}]: {x} != {y} (not bit-identical)"));
+            }
+        }
+        Ok(())
     }
 
     #[test]
@@ -695,18 +807,6 @@ mod tests {
             }
             Ok(())
         });
-
-        fn crop_eq(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
-            if a.len() != b.len() {
-                return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
-            }
-            for (i, (x, y)) in a.iter().zip(b).enumerate() {
-                if x.to_bits() != y.to_bits() {
-                    return Err(format!("{what}[{i}]: {x} != {y} (not bit-identical)"));
-                }
-            }
-            Ok(())
-        }
     }
 
     #[test]
@@ -930,5 +1030,292 @@ mod tests {
         drop(b);
         assert_eq!(pool.stats().blocks_live, 1);
         assert_eq!(pool.stats().blocks_free, 1);
+    }
+
+    // ── Prefix sharing + copy-on-write ─────────────────────────────────
+
+    /// Deterministic `[L, n, KV, hd]` rows derived from `keys` — the
+    /// content-addressing contract (same keys ⇒ same rows) made literal.
+    fn rows_for_keys(cfg: &ModelConfig, keys: &[i32]) -> (Vec<f32>, Vec<f32>) {
+        let n = keys.len();
+        let mut k = Vec::with_capacity(cfg.n_layers * n * ROW);
+        let mut v = Vec::with_capacity(cfg.n_layers * n * ROW);
+        for layer in 0..cfg.n_layers {
+            for (pos, &key) in keys.iter().enumerate() {
+                for j in 0..ROW {
+                    let x = (layer * 1000 + pos * 37 + j) as f32 * 0.01 + key as f32;
+                    k.push(x);
+                    v.push(-x);
+                }
+            }
+        }
+        (k, v)
+    }
+
+    #[test]
+    fn second_agent_attaches_the_registered_prefix_for_free() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(
+            &cfg,
+            KvPoolConfig {
+                block_tokens: 4,
+                ..KvPoolConfig::default()
+            },
+        );
+        let keys: Vec<i32> = (0..10).collect();
+        let (k_rows, v_rows) = rows_for_keys(&cfg, &keys);
+
+        // cold: agent A writes and registers the prompt
+        let mut a = pool.new_cache(32);
+        a.replace_rows_keyed(10, 1, &keys, &k_rows, &v_rows).unwrap();
+        assert_eq!(a.len(), 10);
+        assert_eq!(a.shared_blocks(), 2, "2 full blocks of 4 published");
+        // the registering cache is charged only for its private tail block
+        assert_eq!(a.bytes(), pool.block_bytes());
+        let s = pool.stats();
+        assert_eq!(s.shared_blocks, 2);
+        assert_eq!(s.blocks_live, 3);
+        let h2d_cold = s.h2d_bytes;
+
+        // warm: agent B seeds the same keys — full blocks attach by
+        // reference, only the 2-row tail is written
+        let mut b = pool.new_cache(32);
+        b.replace_rows_keyed(10, 1, &keys, &k_rows, &v_rows).unwrap();
+        assert_eq!(b.len(), 10);
+        assert_eq!(b.shared_blocks(), 2);
+        assert_eq!(b.bytes(), pool.block_bytes(), "B pays one tail block");
+        let s = pool.stats();
+        assert_eq!(s.prefix_hits, 2);
+        assert_eq!(s.blocks_live, 4, "one prompt, two agents, O(1) extra");
+        // the shared rows cost zero additional h2d traffic; only the
+        // 2-row tail was written through
+        let tail_bytes = (cfg.n_layers * 2 * ROW * 2 * 4) as u64;
+        assert_eq!(s.h2d_bytes - h2d_cold, tail_bytes);
+
+        // both caches read identical content, host and device side
+        let (ak, av) = a.prefix_upload(32);
+        let (bk, bv) = b.prefix_upload(32);
+        crop_eq(&ak, &bk, "shared k").unwrap();
+        crop_eq(&av, &bv, "shared v").unwrap();
+        let (dk, _) = b.device_gather(32).unwrap();
+        crop_eq(&dk, &bk, "device k").unwrap();
+    }
+
+    #[test]
+    fn cow_divergence_is_isolated_and_bit_identical_to_unshared() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(
+            &cfg,
+            KvPoolConfig {
+                block_tokens: 4,
+                ..KvPoolConfig::default()
+            },
+        );
+        let keys: Vec<i32> = (0..8).collect();
+        let (k_rows, v_rows) = rows_for_keys(&cfg, &keys);
+        let mut a = pool.new_cache(32);
+        a.replace_rows_keyed(8, 1, &keys, &k_rows, &v_rows).unwrap();
+        let mut b = pool.new_cache(32);
+        b.replace_rows_keyed(8, 1, &keys, &k_rows, &v_rows).unwrap();
+        let (a_before, _) = a.prefix_upload(32);
+
+        // B truncates into the shared prefix and appends divergent rows —
+        // the write lands in a shared block and must copy, not mutate
+        b.truncate(6);
+        let div: Vec<f32> = (0..2 * ROW).map(|i| 1000.0 + i as f32).collect();
+        b.append_row(&div, &div).unwrap();
+        assert!(pool.stats().cow_copies >= 1, "shared write must CoW");
+        assert_eq!(b.shared_blocks(), 1, "the CoW'd entry went private");
+
+        // A sees exactly what it saw before B diverged
+        let (a_after, _) = a.prefix_upload(32);
+        crop_eq(&a_before, &a_after, "A after B's divergence").unwrap();
+
+        // and B matches an unshared cache driven through the same ops
+        let mut u = pool.new_cache(32);
+        u.replace_rows(8, &k_rows, &v_rows).unwrap();
+        u.truncate(6);
+        u.append_row(&div, &div).unwrap();
+        let (bk, bv) = b.prefix_upload(32);
+        let (uk, uv) = u.prefix_upload(32);
+        crop_eq(&bk, &uk, "diverged k vs unshared").unwrap();
+        crop_eq(&bv, &uv, "diverged v vs unshared").unwrap();
+        // device side agrees too
+        let (dbk, dbv) = b.device_gather(32).unwrap();
+        crop_eq(&dbk, &bk, "diverged device k").unwrap();
+        crop_eq(&dbv, &bv, "diverged device v").unwrap();
+
+        // a third agent still gets the pristine prefix
+        let mut c = pool.new_cache(32);
+        c.replace_rows_keyed(8, 1, &keys, &k_rows, &v_rows).unwrap();
+        let (ck, _) = c.prefix_upload(32);
+        crop_eq(&ck, &a_after, "fresh attach after divergence").unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_survives_every_owner_dropping() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(
+            &cfg,
+            KvPoolConfig {
+                block_tokens: 4,
+                ..KvPoolConfig::default()
+            },
+        );
+        let keys: Vec<i32> = (0..8).collect();
+        let (k_rows, v_rows) = rows_for_keys(&cfg, &keys);
+        {
+            let mut a = pool.new_cache(32);
+            a.replace_rows_keyed(8, 1, &keys, &k_rows, &v_rows).unwrap();
+        }
+        // the registering cache is gone; its full blocks park in the
+        // registry and a new agent still attaches them
+        assert_eq!(pool.stats().blocks_live, 2, "registered blocks parked");
+        let mut b = pool.new_cache(32);
+        b.replace_rows_keyed(8, 1, &keys, &k_rows, &v_rows).unwrap();
+        assert_eq!(pool.stats().prefix_hits, 2);
+        let (bk, _) = b.prefix_upload(32);
+        let (want, _) = rows_for_keys(&cfg, &keys);
+        // layer 0 of the gather equals layer 0 of the canonical rows
+        crop_eq(&bk[..8 * ROW], &want[..8 * ROW], "parked reattach").unwrap();
+    }
+
+    #[test]
+    fn shared_churn_matches_unshared_baseline_bit_identical() {
+        // The CoW/refcount proptest: interleave spawn/append/truncate/
+        // clear/release across caches sharing one registered prefix, each
+        // mirrored by an unshared twin in a separate pool.  Every gather
+        // must stay bit-identical twin-to-twin (so a referenced block was
+        // never freed or mutated), and the shared pool must hold fewer
+        // live blocks than the unshared one whenever several caches share.
+        let cfg = tiny_cfg();
+        check("shared churn == unshared", 30, |g| {
+            let bt = g.usize_in(1..7);
+            let mk_pool = || {
+                KvPool::new(
+                    &cfg,
+                    KvPoolConfig {
+                        block_tokens: bt,
+                        ..KvPoolConfig::default()
+                    },
+                )
+            };
+            let pool_s = mk_pool(); // shared (keyed) caches
+            let pool_u = mk_pool(); // unshared twins
+            let capacity = g.usize_in(8..32);
+            let seed_n = g.usize_in(1..(capacity + 1));
+            let keys: Vec<i32> = (0..seed_n as i32).map(|i| i * 3 + 1).collect();
+            let (seed_k, seed_v) = rows_for_keys(&cfg, &keys);
+
+            let mut pairs: Vec<(KvCache, KvCache)> = Vec::new();
+            for _ in 0..g.usize_in(4..20) {
+                let op = g.usize_in(0..6);
+                if pairs.is_empty() || op == 0 {
+                    // spawn: keyed seed vs plain replace
+                    let mut s = pool_s.new_cache(capacity);
+                    s.replace_rows_keyed(seed_n, 9, &keys, &seed_k, &seed_v)
+                        .map_err(|e| e.to_string())?;
+                    let mut u = pool_u.new_cache(capacity);
+                    u.replace_rows(seed_n, &seed_k, &seed_v)
+                        .map_err(|e| e.to_string())?;
+                    pairs.push((s, u));
+                } else if op == 5 {
+                    // release a pair entirely
+                    let i = g.usize_in(0..pairs.len());
+                    pairs.swap_remove(i);
+                } else {
+                    let i = g.usize_in(0..pairs.len());
+                    let (s, u) = &mut pairs[i];
+                    match op {
+                        1 => {
+                            // append divergent rows to both twins
+                            let room = s.remaining();
+                            if room > 0 {
+                                let n = g.usize_in(1..(room.min(4) + 1));
+                                let k = g.vec_f32((2 * n * ROW)..(2 * n * ROW + 1), -2.0, 2.0);
+                                let v = g.vec_f32((2 * n * ROW)..(2 * n * ROW + 1), -2.0, 2.0);
+                                s.append_rows(n, &k, &v).map_err(|e| e.to_string())?;
+                                u.append_rows(n, &k, &v).map_err(|e| e.to_string())?;
+                            }
+                        }
+                        2 => {
+                            let to = g.usize_in(0..(s.len().max(1) + 1));
+                            s.truncate(to);
+                            u.truncate(to);
+                        }
+                        3 => {
+                            s.clear();
+                            u.clear();
+                        }
+                        _ => {
+                            // re-seed in place (the side-agent reuse path)
+                            s.replace_rows_keyed(seed_n, 9, &keys, &seed_k, &seed_v)
+                                .map_err(|e| e.to_string())?;
+                            u.replace_rows(seed_n, &seed_k, &seed_v)
+                                .map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                // every live pair stays bit-identical, host and device
+                for (s, u) in &pairs {
+                    crate::prop_assert!(
+                        s.len() == u.len(),
+                        "len drift {} vs {}",
+                        s.len(),
+                        u.len()
+                    );
+                    let (sk, sv) = s.prefix_upload(capacity);
+                    let (uk, uv) = u.prefix_upload(capacity);
+                    crop_eq(&sk, &uk, "twin k")?;
+                    crop_eq(&sv, &uv, "twin v")?;
+                    let (dk, dv) = s.device_gather(capacity).map_err(|e| e.to_string())?;
+                    crop_eq(&dk, &sk, "twin device k")?;
+                    crop_eq(&dv, &sv, "twin device v")?;
+                }
+            }
+            // sharing must not cost more blocks than not sharing, and with
+            // several sharers it must cost strictly fewer for the seeded
+            // prefix (each twin pays the full seed, sharers pay the tail)
+            let ss = pool_s.stats();
+            let us = pool_u.stats();
+            crate::prop_assert!(
+                ss.blocks_live <= us.blocks_live + seed_n / bt + 1,
+                "sharing used more blocks: {} vs {}",
+                ss.blocks_live,
+                us.blocks_live
+            );
+            if pairs.len() >= 3 && seed_n / bt >= 2 {
+                // strict dedup is only guaranteed while every sharer still
+                // holds the full shared prefix (CoW legitimately privatises
+                // blocks after divergence)
+                let all_seeded = pairs
+                    .iter()
+                    .all(|(s, _)| s.len() == seed_n && s.shared_blocks() == seed_n / bt);
+                if all_seeded {
+                    crate::prop_assert!(
+                        ss.blocks_live < us.blocks_live,
+                        "no dedup despite {} sharers: {} vs {}",
+                        pairs.len(),
+                        ss.blocks_live,
+                        us.blocks_live
+                    );
+                }
+            }
+            // a referenced block is never freed: every pair drop must leave
+            // the pools consistent (parked registrations may remain live)
+            drop(pairs);
+            let ss = pool_s.stats();
+            crate::prop_assert!(
+                ss.blocks_live == ss.shared_blocks,
+                "only parked registry entries may stay live: {} vs {}",
+                ss.blocks_live,
+                ss.shared_blocks
+            );
+            crate::prop_assert!(
+                pool_u.stats().blocks_live == 0,
+                "unshared pool leaked blocks"
+            );
+            Ok(())
+        });
     }
 }

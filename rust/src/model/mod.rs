@@ -1,13 +1,19 @@
 //! Host-side model state and the typed inference API over the runtime.
 //!
-//! * `pool`   — the shared KV block pool (demand-paged context memory)
-//! * `kv`     — per-agent cache views (block tables into the pool)
+//! * `pool`   — the shared KV block pool (demand-paged, refcounted
+//!   copy-on-write context memory + the content-addressed prefix registry)
+//! * `kv`     — per-agent cache views (block tables into the pool; entries
+//!   may reference registry-shared blocks)
 //! * `engine` — the typed inference API shared by every agent
+//!   (`prefill_shared` turns identical prompt prefixes into one cold
+//!   prefill + N by-reference warm starts)
 
 pub mod engine;
 pub mod kv;
 pub mod pool;
 
-pub use engine::{DecodeOut, Engine, InjectOut, PrefillOut, SynapseOut};
+pub use engine::{
+    DecodeOut, Engine, InjectOut, PrefillOut, PrefillReuse, SynapseOut, PROMPT_CHAIN_SALT,
+};
 pub use kv::KvCache;
-pub use pool::{KvPool, KvPoolConfig, PagedKv, PoolStats};
+pub use pool::{chain_hash, KvPool, KvPoolConfig, PagedKv, PoolStats, PREFIX_SEED};

@@ -1,4 +1,5 @@
-//! The shared KV block pool: demand-paged context memory for every agent.
+//! The shared KV block pool: demand-paged, copy-on-write context memory for
+//! every agent.
 //!
 //! The seed architecture gave each agent a full-capacity flat `[L, C, KV, hd]`
 //! buffer, so resident bytes scaled with *configured* capacity rather than
@@ -14,31 +15,57 @@
 //! * the pool's gauges (blocks live / free / high-water, fragmentation) are
 //!   the measured side of the paper's O(N·k) context-memory claim.
 //!
-//! Invariant: a rented block is exclusively owned by one cache, and readers
-//! only ever observe rows `< len` of a cache — recycled blocks may therefore
-//! carry stale floats beyond the fill without being re-zeroed (the decode
-//! programs mask attention past `cache_len`, and every host-side gather
-//! copies only the valid prefix).
+//! # Ownership model: refcounted blocks + copy-on-write
+//!
+//! Since the prefix-sharing refactor the pool owns all block storage: a
+//! cache's table holds block *ids*, and each slab slot carries a refcount.
+//! A block referenced by exactly one table and absent from the prefix
+//! registry is *private* — writes go in place, exactly as before.  A block
+//! that is registered (content-addressed) or referenced by more than one
+//! table is *shared* and immutable: any write through [`KvPool::write_run`]
+//! first copies the block into a fresh private one, swaps it into the
+//! writing cache's table and drops one reference on the original
+//! (copy-on-write).  A physical block is freed only when its last table
+//! reference is gone *and* it is not registered — a referenced block can
+//! never be reclaimed out from under a reader.
+//!
+//! # The content-addressed prefix registry
+//!
+//! [`KvPool::prefix_hashes`] maps a key sequence (prompt token ids, synapse
+//! landmark indices) to one chain hash per *full* block: `h[i]` commits to
+//! every key in blocks `0..=i`, so a hit on `h[i]` proves the whole prefix
+//! matches.  [`super::kv::KvCache::register_prefix`] publishes a cache's
+//! full blocks under those hashes; [`super::kv::KvCache::attach_shared_prefix`]
+//! lets a later cache adopt the longest registered prefix by reference —
+//! O(1) memory and zero host→device traffic for the shared rows, the
+//! "one prefill, N agents" property measured by `benches/prefix_share.rs`.
+//! Registered blocks whose refcount drops to zero stay *parked* in the
+//! registry (still resident, still hittable); when the pool is at its
+//! `max_blocks` cap, a rent evicts the least-recently-used parked entry
+//! before failing with backpressure.  Shared (registered) blocks are
+//! charged once globally (`MemKind::SharedKv` via [`KvPool::track_shared`])
+//! so Table-2 accounting never multiply-counts a block that N caches
+//! reference.
 //!
 //! # Device residency
 //!
-//! Since the device-resident refactor, each block also owns a **lazily
-//! materialised device copy** in the pool's *device slab*, addressed by the
-//! block's stable `id` and recycled with the block through the free list.
-//! Every host write ([`KvCache::append_rows`], `replace_rows`, `load_full`,
-//! synapse `seed_into`) writes **only the touched rows** through to the
-//! device copy, so the per-decode-step host→device traffic is
-//! `O(new row + block table)` instead of the seed's `O(capacity)` full-cache
-//! re-upload.  Decode-time K/V then comes from
-//! [`KvPool::dev_gather_prefix`] — the paged-attention gather over resident
-//! blocks (reference semantics in
+//! Each block also owns a **lazily materialised device copy** in the pool's
+//! *device slab*, addressed by the block's stable `id` and recycled with the
+//! block through the free list.  Every host write goes through
+//! [`KvPool::write_run`], which writes **only the touched rows** through to
+//! the device copy (a CoW copy re-syncs the whole block once), so the
+//! per-decode-step host→device traffic is `O(new row + block table)` instead
+//! of the seed's `O(capacity)` full-cache re-upload.  Decode-time K/V then
+//! comes from [`KvPool::dev_gather_prefix`] — the paged-attention gather
+//! over resident blocks (reference semantics in
 //! [`crate::runtime::xla_stub::paged_gather_prefix`]); only the block table
 //! itself counts as upload bytes.  On this offline substrate the slab's
-//! buffers are host memory standing in for PJRT device buffers with
-//! identical layout and life-cycle; the `h2d_bytes` gauge measures the
-//! traffic a real backend would pay, and the O(k)-per-step property is
-//! asserted by `benches/decode_upload.rs`.
+//! buffers are host memory standing in for PJRT buffers with identical
+//! layout and life-cycle; the `h2d_bytes` gauge measures the traffic a real
+//! backend would pay, and the O(k)-per-step property is asserted by
+//! `benches/decode_upload.rs`.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -54,9 +81,11 @@ use crate::runtime::ModelConfig;
 pub struct KvPoolConfig {
     /// Positions per block (the paging granularity).
     pub block_tokens: usize,
-    /// Hard cap on simultaneously rented blocks; `0` = unbounded.  When the
-    /// cap is hit, cache growth fails with a pool-exhaustion error — the
-    /// backpressure signal schedulers act on.
+    /// Hard cap on simultaneously live blocks; `0` = unbounded.  When the
+    /// cap is hit, the pool first evicts the least-recently-used *parked*
+    /// prefix-registry entry (refcount 0); only if none exists does cache
+    /// growth fail with a pool-exhaustion error — the backpressure signal
+    /// schedulers act on.
     pub max_blocks: usize,
     /// Reclaim policy: how many released blocks the free list may retain for
     /// reuse before further releases return their memory to the allocator.
@@ -73,23 +102,72 @@ impl Default for KvPoolConfig {
     }
 }
 
-/// One fixed-size block: `block_tokens` positions × all layers, K and V.
-/// Each buffer is `[L, block_tokens, KV*hd]`, row-major.  `id` is the
-/// block's stable slot in the pool's device slab — it survives the free
-/// list (so the device copy is recycled with the block) and is only
-/// returned when the block's memory goes back to the allocator.
+/// Base seed of every prefix hash chain (domain-salted per use).
+pub const PREFIX_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Extend a chain hash with a run of i32 keys (FNV-1a over the parent hash
+/// and the keys' little-endian bytes).  Stable across runs — registry keys
+/// are reproducible for a given (salt, key sequence).
+pub fn chain_hash(prev: u64, keys: &[i32]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = prev;
+    for b in prev.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(PRIME);
+    }
+    for &k in keys {
+        for b in k.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// One slab slot: the block's host-side K and V buffers plus its sharing
+/// state.  Each buffer is `[L, block_tokens, KV*hd]`, row-major.
 #[derive(Debug)]
-pub struct KvBlock {
-    pub(crate) id: u32,
-    pub(crate) k: Box<[f32]>,
-    pub(crate) v: Box<[f32]>,
+struct HostBlock {
+    k: Box<[f32]>,
+    v: Box<[f32]>,
+    /// Cache-table references.  The prefix registry's own hold is NOT
+    /// counted here — a registered block with `refs == 0` is *parked*
+    /// (resident, hittable, evictable under cap pressure).
+    refs: u32,
+    /// Content-chain key while the block is registered in the prefix
+    /// registry; `None` for private blocks.
+    hash: Option<u64>,
+    /// The registered block's own key run (`block_tokens` i32s), kept so
+    /// every chain hit is VERIFIED against the caller's keys — a 64-bit
+    /// FNV collision (accidental or adversarial via untrusted prompts)
+    /// must degrade to a miss, never attach another prompt's KV.
+    keys: Option<Box<[i32]>>,
+    /// LRU recency stamp (bumped on registration and on every chain hit).
+    last_used: u64,
 }
 
 #[derive(Debug, Default)]
 struct PoolState {
-    free: Vec<KvBlock>,
+    /// Host-side block storage, indexed by block id (the same id addresses
+    /// the block's device-slab slot).  `None` = id free for recycling.
+    slots: Vec<Option<HostBlock>>,
+    /// Ids of allocated-but-unreferenced blocks retained for reuse.
+    free: Vec<u32>,
+    /// Physical blocks referenced by caches and/or parked in the registry.
     live: usize,
     high_water: usize,
+    /// Content-addressed prefix registry: chain hash → block id.
+    registry: HashMap<u64, u32>,
+    /// Monotone recency counter backing the registry's LRU policy.
+    tick: u64,
+    /// Registered blocks (each charged once globally, however many caches
+    /// reference it).
+    shared: usize,
+    prefix_hits: u64,
+    prefix_misses: u64,
+    prefix_evictions: u64,
+    cow_copies: u64,
+    /// Accounting hook ([`crate::cortex::memory::MemKind::SharedKv`]):
+    /// resized on every registration and eviction.
+    shared_guard: Option<MemGuard>,
 }
 
 /// One block's device-resident K/V copy.  Same `[L, block_tokens, KV*hd]`
@@ -156,18 +234,21 @@ pub struct PoolStats {
     pub block_tokens: usize,
     /// Bytes of one block (K + V, all layers).
     pub block_bytes: u64,
-    /// Blocks currently rented by caches.
+    /// Physical blocks referenced by caches or parked in the registry.
     pub blocks_live: usize,
     /// Released blocks held for reuse.
     pub blocks_free: usize,
-    /// Peak simultaneously-rented blocks.
+    /// Peak simultaneously-live blocks.
     pub blocks_high_water: usize,
     /// Total rents (fresh allocations + reuses).
     pub rents: u64,
-    /// Rents served from the free list instead of a fresh allocation.
+    /// Rents served from the free list (or an evicted registry entry)
+    /// instead of a fresh allocation.
     pub reuses: u64,
     pub releases: u64,
-    /// Filled positions across all live caches.
+    /// Sum of filled positions across all live caches.  Shared rows are
+    /// counted once per *referencing cache* (the per-agent context figure),
+    /// so this can exceed `blocks_live * block_tokens` under heavy sharing.
     pub rows_live: u64,
     /// Blocks with a materialised device-resident copy.
     pub dev_blocks: usize,
@@ -179,15 +260,27 @@ pub struct PoolStats {
     /// Device-side paged gathers served (decode steps that shipped a block
     /// table instead of the cache).
     pub dev_gathers: u64,
+    /// Blocks currently registered in the content-addressed prefix
+    /// registry.  Each is charged once globally (`MemKind::SharedKv`),
+    /// regardless of how many cache tables reference it.
+    pub shared_blocks: usize,
+    /// Prefix-registry lookups that attached a block by reference.
+    pub prefix_hits: u64,
+    /// Prefix-registry lookups that found no (further) covering block.
+    pub prefix_misses: u64,
+    /// Parked registry entries evicted (LRU) to satisfy rents at the cap.
+    pub prefix_evictions: u64,
+    /// Copy-on-write block copies (a write hit a shared block).
+    pub cow_copies: u64,
 }
 
 impl PoolStats {
-    /// Bytes held by rented blocks (the resident-context figure).
+    /// Bytes held by live blocks (the resident-context figure).
     pub fn live_bytes(&self) -> u64 {
         self.blocks_live as u64 * self.block_bytes
     }
 
-    /// Bytes held by the pool overall (rented + retained free blocks).
+    /// Bytes held by the pool overall (live + retained free blocks).
     pub fn resident_bytes(&self) -> u64 {
         (self.blocks_live + self.blocks_free) as u64 * self.block_bytes
     }
@@ -196,8 +289,15 @@ impl PoolStats {
         self.blocks_high_water as u64 * self.block_bytes
     }
 
-    /// Internal fragmentation: the fraction of rented positions that hold no
-    /// row yet (allocated-but-unfilled block tails).
+    /// Bytes held by registry-shared blocks (charged once globally).
+    pub fn shared_bytes(&self) -> u64 {
+        self.shared_blocks as u64 * self.block_bytes
+    }
+
+    /// Internal fragmentation: the fraction of live positions that hold no
+    /// row yet (allocated-but-unfilled block tails).  Clamped at 0 — under
+    /// prefix sharing `rows_live` counts shared rows once per referencing
+    /// cache and can exceed the physical capacity.
     pub fn fragmentation(&self) -> f64 {
         let cap = (self.blocks_live * self.block_tokens) as f64;
         if cap <= 0.0 {
@@ -210,11 +310,12 @@ impl PoolStats {
 
 /// The shared block allocator.  Exactly one per [`super::Engine`] — every
 /// cache the engine or the orchestrator hands out rents from it, so the
-/// capacity cap and the occupancy gauges cover the whole system.  The
-/// paging granularity (`block_tokens`) is fixed at construction; the
-/// limits (`max_blocks`, `retain_free_blocks`) are runtime-adjustable via
-/// [`KvPool::set_limits`] so [`crate::cortex::WarpCortex`] can apply its
-/// config knobs to an already-built engine's pool.
+/// capacity cap, the prefix registry and the occupancy gauges cover the
+/// whole system.  The paging granularity (`block_tokens`) is fixed at
+/// construction; the limits (`max_blocks`, `retain_free_blocks`) are
+/// runtime-adjustable via [`KvPool::set_limits`] so
+/// [`crate::cortex::WarpCortex`] can apply its config knobs to an
+/// already-built engine's pool.
 pub struct KvPool {
     block_tokens: usize,
     max_blocks: AtomicUsize,
@@ -222,16 +323,23 @@ pub struct KvPool {
     n_layers: usize,
     kv_heads: usize,
     head_dim: usize,
+    /// Host slab + refcounts + prefix registry, under one mutex: refcount
+    /// transitions, registry membership and the CoW decision must be
+    /// atomic with respect to each other.  Host-side gathers and per-row
+    /// write-throughs therefore serialize pool-wide (the decode hot path
+    /// itself reads the `dev` slab, not this); if contention shows up at
+    /// high agent counts, the follow-up is to resolve the CoW/refcount
+    /// decision under this lock but copy rows under per-slot locks (ids
+    /// are stable and writers are exclusive by the CoW invariant).
+    /// Likewise `evict_lru_locked` is an O(slots) scan — fine at bench
+    /// scale, an indexed structure (BTreeMap<last_used, id> of parked
+    /// entries) once registries hold tens of thousands of blocks.
     state: Mutex<PoolState>,
     /// Device-resident block copies.  RwLock so concurrent decode gathers
     /// (read-only, and they hold the lock for the full lane memcpy) never
     /// serialize against each other.  Row write-throughs and slot
-    /// materialisation/release take the write side, so a write-through DOES
-    /// serialize against in-flight gathers (and other writes) pool-wide —
-    /// acceptable because a write is one row while a gather is O(c) rows;
-    /// per-slot locking (ids are stable, owners are exclusive) is the
-    /// follow-up if contention shows up at high agent counts.  Lock order:
-    /// `state` before `dev` (never both unless in that order).
+    /// materialisation/release take the write side.  Lock order: `state`
+    /// before `dev` (never both unless in that order).
     dev: RwLock<DevSlab>,
     rents: AtomicU64,
     reuses: AtomicU64,
@@ -249,6 +357,7 @@ impl std::fmt::Debug for KvPool {
             .field("blocks_live", &s.blocks_live)
             .field("blocks_free", &s.blocks_free)
             .field("blocks_high_water", &s.blocks_high_water)
+            .field("shared_blocks", &s.shared_blocks)
             .finish()
     }
 }
@@ -329,43 +438,89 @@ impl KvPool {
         (rows + self.block_tokens - 1) / self.block_tokens
     }
 
-    /// Rent one block: reuse a freed block if available, otherwise allocate
-    /// a fresh zeroed one.  Fails when the pool is at `max_blocks` — the
-    /// caller surfaces this as cache-growth backpressure.
-    pub(crate) fn rent_block(&self) -> Result<KvBlock> {
+    /// One chain hash per **full** block of `keys`: `out[i]` commits to
+    /// `keys[0..(i+1)*block_tokens]` under the domain `salt`.  Partial tail
+    /// blocks are never content-addressed (they are still mutable).
+    pub fn prefix_hashes(&self, salt: u64, keys: &[i32]) -> Vec<u64> {
+        let bt = self.block_tokens;
+        let mut out = Vec::with_capacity(keys.len() / bt);
+        let mut h = PREFIX_SEED ^ salt;
+        for chunk in keys.chunks_exact(bt) {
+            h = chain_hash(h, chunk);
+            out.push(h);
+        }
+        out
+    }
+
+    // ── Allocation ─────────────────────────────────────────────────────
+
+    /// Rent one private block (refcount 1): reuse a freed block if
+    /// available, otherwise allocate a fresh zeroed one.  At the
+    /// `max_blocks` cap, a parked registry entry is LRU-evicted first;
+    /// only then does the rent fail — the caller surfaces this as
+    /// cache-growth backpressure.
+    pub(crate) fn rent_ref(&self) -> Result<u32> {
         let mut st = self.state.lock().unwrap();
+        self.rent_locked(&mut st)
+    }
+
+    fn rent_locked(&self, st: &mut PoolState) -> Result<u32> {
         // The cap binds on LIVE blocks, so it must be checked before the
         // free list too — parked free blocks don't grant cap headroom.
         let max_blocks = self.max_blocks.load(Ordering::Relaxed);
         if max_blocks > 0 && st.live >= max_blocks {
+            // The only headroom at the cap is a parked registry entry
+            // (refcount 0): evict the least-recently-used one and take its
+            // block over in place (`live` unchanged — parked blocks were
+            // already counted).
+            if let Some(id) = self.evict_lru_locked(st) {
+                let b = st.slots[id as usize]
+                    .as_mut()
+                    .expect("evicted block is live");
+                b.refs = 1;
+                self.rents.fetch_add(1, Ordering::Relaxed);
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                return Ok(id);
+            }
             bail!(
                 "kv pool exhausted: {} blocks live (max {max_blocks}, block_tokens {})",
                 st.live,
                 self.block_tokens
             );
         }
-        if let Some(b) = st.free.pop() {
+        if let Some(id) = st.free.pop() {
             st.live += 1;
             st.high_water = st.high_water.max(st.live);
-            drop(st);
+            let b = st.slots[id as usize]
+                .as_mut()
+                .expect("free-listed block has a slot");
+            debug_assert_eq!(b.refs, 0);
+            debug_assert!(b.hash.is_none());
+            b.refs = 1;
             self.rents.fetch_add(1, Ordering::Relaxed);
             self.reuses.fetch_add(1, Ordering::Relaxed);
             // The block keeps its id: its device copy (if materialised) is
             // recycled with it — stale contents past the new fill are fine,
-            // every reader masks by `cache_len`.
-            return Ok(b);
+            // every reader masks by the owning cache's `len`.
+            return Ok(id);
         }
         st.live += 1;
         st.high_water = st.high_water.max(st.live);
-        drop(st);
         self.rents.fetch_add(1, Ordering::Relaxed);
         let id = self.reserve_dev_id();
         let n = self.block_floats();
-        Ok(KvBlock {
-            id,
+        if st.slots.len() <= id as usize {
+            st.slots.resize_with(id as usize + 1, || None);
+        }
+        st.slots[id as usize] = Some(HostBlock {
             k: vec![0.0; n].into_boxed_slice(),
             v: vec![0.0; n].into_boxed_slice(),
-        })
+            refs: 1,
+            hash: None,
+            keys: None,
+            last_used: 0,
+        });
+        Ok(id)
     }
 
     /// Reserve a device-slab slot for a freshly allocated block.  The
@@ -381,37 +536,378 @@ impl KvPool {
         }
     }
 
-    /// Return a block.  Retained on the free list up to
-    /// `retain_free_blocks`; past that the block's memory goes back to the
-    /// allocator (the reclaim policy) and its device copy is freed with it.
-    pub(crate) fn release_block(&self, block: KvBlock) {
-        self.releases.fetch_add(1, Ordering::Relaxed);
+    /// Drop one table reference on `id`.  The physical block is freed only
+    /// when this was the last reference *and* the block is not registered;
+    /// a registered block parks in the registry instead (still resident,
+    /// still hittable, evictable under cap pressure).
+    pub(crate) fn release_ref(&self, id: u32) {
         let mut st = self.state.lock().unwrap();
-        st.live = st.live.saturating_sub(1);
-        if st.free.len() < self.retain_free_blocks.load(Ordering::Relaxed) {
-            st.free.push(block);
+        self.release_ref_locked(&mut st, id);
+    }
+
+    fn release_ref_locked(&self, st: &mut PoolState, id: u32) {
+        self.releases.fetch_add(1, Ordering::Relaxed);
+        let (refs, registered) = {
+            let b = st.slots[id as usize]
+                .as_mut()
+                .expect("released block has a slot");
+            debug_assert!(b.refs > 0, "block refcount underflow");
+            b.refs = b.refs.saturating_sub(1);
+            (b.refs, b.hash.is_some())
+        };
+        if refs > 0 || registered {
             return;
         }
-        drop(st);
+        st.live = st.live.saturating_sub(1);
+        if st.free.len() < self.retain_free_blocks.load(Ordering::Relaxed) {
+            st.free.push(id);
+            return;
+        }
+        // Reclaim to the allocator: host buffer and device copy are freed
+        // and the id is recycled for future fresh blocks.
+        st.slots[id as usize] = None;
         let mut dev = self.dev.write().unwrap();
         if dev
             .slots
-            .get_mut(block.id as usize)
+            .get_mut(id as usize)
             .and_then(|s| s.take())
             .is_some()
         {
             dev.bytes -= self.block_bytes();
             dev.sync_guard();
         }
-        dev.free_ids.push(block.id);
+        dev.free_ids.push(id);
     }
 
-    /// Write rows `[off, off+n)` of `block` through to its device-resident
-    /// copy, materialising the device buffer on first touch.  This is the
-    /// incremental path — one row per decode step, a handful per seed — and
-    /// the copied bytes are the only per-row host→device traffic the system
-    /// pays (contrast with the seed's full-prefix re-upload every step).
-    pub(crate) fn dev_sync_rows(&self, block: &KvBlock, off: usize, n: usize) {
+    /// LRU-evict one parked registry entry (registered, refcount 0).  The
+    /// block stays live — the caller takes it over in place.
+    fn evict_lru_locked(&self, st: &mut PoolState) -> Option<u32> {
+        let mut best: Option<(u64, u32)> = None;
+        for (i, slot) in st.slots.iter().enumerate() {
+            if let Some(b) = slot {
+                if b.refs == 0
+                    && b.hash.is_some()
+                    && best.map_or(true, |(t, _)| b.last_used < t)
+                {
+                    best = Some((b.last_used, i as u32));
+                }
+            }
+        }
+        let (_, id) = best?;
+        let hash = {
+            let b = st.slots[id as usize]
+                .as_mut()
+                .expect("eviction candidate is live");
+            b.keys = None;
+            b.hash.take().expect("eviction candidate is registered")
+        };
+        st.registry.remove(&hash);
+        st.shared -= 1;
+        st.prefix_evictions += 1;
+        self.sync_shared_guard(st);
+        Some(id)
+    }
+
+    fn sync_shared_guard(&self, st: &mut PoolState) {
+        let bytes = st.shared as u64 * self.block_bytes();
+        if let Some(g) = st.shared_guard.as_mut() {
+            g.resize(bytes);
+        }
+    }
+
+    // ── The prefix registry ────────────────────────────────────────────
+
+    /// Publish block `id` under chain `hash`, recording `keys` (this
+    /// block's own `block_tokens`-long key run) for hit-time verification.
+    /// Returns `false` (a no-op) when the hash is already taken or the
+    /// block is already registered — first writer wins, later identical
+    /// blocks stay private duplicates.  On success the block becomes
+    /// shared: subsequent writes to it CoW, and its bytes move to the
+    /// global `SharedKv` charge.
+    pub(crate) fn register_block(&self, id: u32, hash: u64, keys: &[i32]) -> bool {
+        debug_assert_eq!(keys.len(), self.block_tokens);
+        let mut st = self.state.lock().unwrap();
+        if st.registry.contains_key(&hash) {
+            return false;
+        }
+        let tick = st.tick;
+        st.tick += 1;
+        {
+            let b = st.slots[id as usize]
+                .as_mut()
+                .expect("registered block is live");
+            if b.hash.is_some() {
+                return false;
+            }
+            b.hash = Some(hash);
+            b.keys = Some(keys.to_vec().into_boxed_slice());
+            b.last_used = tick;
+        }
+        st.registry.insert(hash, id);
+        st.shared += 1;
+        self.sync_shared_guard(&mut st);
+        true
+    }
+
+    /// Resolve the longest registered prefix of `hashes`, taking one table
+    /// reference on every hit (the caller owns them).  Stops at the first
+    /// miss — a chain hash commits to its whole prefix, so later entries
+    /// cannot hit without the earlier ones.
+    ///
+    /// `keys` is the caller's full key sequence (≥ `hashes.len() * bt`
+    /// entries): every hash hit is verified against the registered block's
+    /// stored key run, so a 64-bit chain-hash collision — FNV is not
+    /// cryptographic, and prompts are untrusted — degrades to a miss
+    /// instead of silently attaching another prompt's KV blocks.
+    pub(crate) fn lookup_chain(&self, hashes: &[u64], keys: &[i32]) -> Vec<u32> {
+        let bt = self.block_tokens;
+        debug_assert!(keys.len() >= hashes.len() * bt);
+        let mut st = self.state.lock().unwrap();
+        let mut ids = Vec::new();
+        for (i, h) in hashes.iter().enumerate() {
+            let Some(&id) = st.registry.get(h) else {
+                break;
+            };
+            let block = st.slots[id as usize]
+                .as_ref()
+                .expect("registered block is live");
+            if block.keys.as_deref() != Some(&keys[i * bt..(i + 1) * bt]) {
+                break; // hash collision: contents NOT content-equal
+            }
+            ids.push(id);
+        }
+        st.prefix_hits += ids.len() as u64;
+        st.prefix_misses += (hashes.len() - ids.len()) as u64;
+        let base = st.tick;
+        st.tick += ids.len() as u64;
+        for (j, &id) in ids.iter().enumerate() {
+            let b = st.slots[id as usize]
+                .as_mut()
+                .expect("registered block is live");
+            b.refs += 1;
+            b.last_used = base + j as u64;
+        }
+        ids
+    }
+
+    // ── Writes (the single CoW gate) ───────────────────────────────────
+
+    /// Copy rows `[src_at, src_at + run)` of a `[L, n_src, KV*hd]` source
+    /// into block `id` at position offset `off`, writing the touched rows
+    /// through to the device copy.  If the block is shared (registered or
+    /// referenced by another table) it is copied first and one reference on
+    /// the original is dropped — the returned id is the block the caller's
+    /// table must now hold (== `id` when the write went in place).
+    ///
+    /// This is the only write path into block storage, so the CoW invariant
+    /// — a shared block's contents never change — holds by construction.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn write_run(
+        &self,
+        id: u32,
+        off: usize,
+        run: usize,
+        src_at: usize,
+        n_src: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<u32> {
+        let row = self.row();
+        let bt = self.block_tokens;
+        let n_layers = self.n_layers;
+        debug_assert!(off + run <= bt);
+        debug_assert!(src_at + run <= n_src);
+        let mut st = self.state.lock().unwrap();
+        let must_cow = {
+            let b = st.slots[id as usize]
+                .as_ref()
+                .expect("written block is live");
+            b.refs > 1 || b.hash.is_some()
+        };
+        let target = if must_cow {
+            // Rent may itself evict a parked entry or fail with
+            // backpressure; nothing has been mutated yet on failure.
+            let tid = self.rent_locked(&mut st)?;
+            // Full-block copy: rows outside the written run may still be
+            // valid for the writing cache (partial overwrites after
+            // truncation into a shared block).
+            let (ck, cv) = {
+                let src = st.slots[id as usize]
+                    .as_ref()
+                    .expect("cow source is live");
+                (src.k.clone(), src.v.clone())
+            };
+            {
+                let dst = st.slots[tid as usize]
+                    .as_mut()
+                    .expect("cow target is live");
+                dst.k = ck;
+                dst.v = cv;
+            }
+            self.release_ref_locked(&mut st, id);
+            st.cow_copies += 1;
+            tid
+        } else {
+            id
+        };
+        {
+            let b = st.slots[target as usize]
+                .as_mut()
+                .expect("write target is live");
+            for layer in 0..n_layers {
+                let dst = (layer * bt + off) * row;
+                let src = (layer * n_src + src_at) * row;
+                b.k[dst..dst + run * row].copy_from_slice(&k_rows[src..src + run * row]);
+                b.v[dst..dst + run * row].copy_from_slice(&v_rows[src..src + run * row]);
+            }
+        }
+        // Write-through: the touched run on the in-place path; the whole
+        // block after a CoW (its untouched rows may be valid too, and the
+        // target's device slot knows none of them).
+        let (s_off, s_n) = if must_cow { (0, bt) } else { (off, run) };
+        {
+            let b = st.slots[target as usize]
+                .as_ref()
+                .expect("write target is live");
+            self.dev_sync(target, &b.k, &b.v, s_off, s_n);
+        }
+        Ok(target)
+    }
+
+    /// Deep-copy `src_id` into a fresh private block (cache cloning),
+    /// syncing the first `valid_rows` rows to the new device slot.
+    pub(crate) fn clone_block(&self, src_id: u32, valid_rows: usize) -> Result<u32> {
+        let mut st = self.state.lock().unwrap();
+        let dst = self.rent_locked(&mut st)?;
+        let (ck, cv) = {
+            let s = st.slots[src_id as usize]
+                .as_ref()
+                .expect("clone source is live");
+            (s.k.clone(), s.v.clone())
+        };
+        {
+            let d = st.slots[dst as usize]
+                .as_mut()
+                .expect("clone target is live");
+            d.k = ck;
+            d.v = cv;
+        }
+        if valid_rows > 0 {
+            let d = st.slots[dst as usize]
+                .as_ref()
+                .expect("clone target is live");
+            self.dev_sync(dst, &d.k, &d.v, 0, valid_rows);
+        }
+        Ok(dst)
+    }
+
+    // ── Host-side reads (block-table gathers) ──────────────────────────
+
+    /// Gather the first `valid` positions addressed by `table` into
+    /// caller-provided zeroed `[L, c, KV, hd]` buffers — the flat reference
+    /// path (prefill loads, ablations, tests).
+    pub(crate) fn host_gather_prefix_into(
+        &self,
+        table: &[u32],
+        valid: usize,
+        c: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let row = self.row();
+        let bt = self.block_tokens;
+        let n_layers = self.n_layers;
+        let per = c * row;
+        debug_assert_eq!(k_out.len(), n_layers * per);
+        debug_assert_eq!(v_out.len(), n_layers * per);
+        let valid = valid.min(c);
+        let st = self.state.lock().unwrap();
+        for (bi, &id) in table.iter().enumerate() {
+            let start = bi * bt;
+            if start >= valid {
+                break;
+            }
+            let run = (valid - start).min(bt);
+            let b = st.slots[id as usize]
+                .as_ref()
+                .expect("gathered block is live");
+            for layer in 0..n_layers {
+                let dst = layer * per + start * row;
+                let src = layer * bt * row;
+                k_out[dst..dst + run * row].copy_from_slice(&b.k[src..src + run * row]);
+                v_out[dst..dst + run * row].copy_from_slice(&b.v[src..src + run * row]);
+            }
+        }
+    }
+
+    /// Gather arbitrary positions (each `< table coverage`) across all
+    /// layers into `[L, n, KV, hd]` buffers — the host-side analogue of the
+    /// synapse program's landmark gather.
+    pub(crate) fn host_gather_rows(
+        &self,
+        table: &[u32],
+        indices: &[usize],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let row = self.row();
+        let bt = self.block_tokens;
+        let n_layers = self.n_layers;
+        let n = indices.len();
+        let mut k = Vec::with_capacity(n_layers * n * row);
+        let mut v = Vec::with_capacity(n_layers * n * row);
+        let st = self.state.lock().unwrap();
+        for layer in 0..n_layers {
+            for &pos in indices {
+                let (bi, off) = (pos / bt, pos % bt);
+                let b = st.slots[table[bi] as usize]
+                    .as_ref()
+                    .expect("gathered block is live");
+                let o = (layer * bt + off) * row;
+                k.extend_from_slice(&b.k[o..o + row]);
+                v.extend_from_slice(&b.v[o..o + row]);
+            }
+        }
+        (k, v)
+    }
+
+    /// Rows `[start, end)` of one layer, K (`want_v == false`) or V.
+    pub(crate) fn host_slice(
+        &self,
+        table: &[u32],
+        layer: usize,
+        start: usize,
+        end: usize,
+        want_v: bool,
+    ) -> Vec<f32> {
+        let row = self.row();
+        let bt = self.block_tokens;
+        if start >= end {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity((end - start) * row);
+        let st = self.state.lock().unwrap();
+        for pos in start..end {
+            let (bi, off) = (pos / bt, pos % bt);
+            let b = st.slots[table[bi] as usize]
+                .as_ref()
+                .expect("sliced block is live");
+            let o = (layer * bt + off) * row;
+            out.extend_from_slice(if want_v {
+                &b.v[o..o + row]
+            } else {
+                &b.k[o..o + row]
+            });
+        }
+        out
+    }
+
+    // ── Device slab ────────────────────────────────────────────────────
+
+    /// Write rows `[off, off+n)` of block `id` through to its
+    /// device-resident copy, materialising the device buffer on first
+    /// touch.  The copied bytes are the only per-row host→device traffic
+    /// the system pays (contrast with the seed's full-prefix re-upload
+    /// every step).
+    fn dev_sync(&self, id: u32, k_host: &[f32], v_host: &[f32], off: usize, n: usize) {
         if n == 0 {
             return;
         }
@@ -419,7 +915,7 @@ impl KvPool {
         let bt = self.block_tokens;
         debug_assert!(off + n <= bt);
         let mut dev = self.dev.write().unwrap();
-        let idx = block.id as usize;
+        let idx = id as usize;
         if dev.slots[idx].is_none() {
             let floats = self.block_floats();
             dev.slots[idx] = Some(DevBuf {
@@ -434,8 +930,8 @@ impl KvPool {
         // offsets coincide.
         for layer in 0..self.n_layers {
             let o = (layer * bt + off) * row;
-            buf.k[o..o + n * row].copy_from_slice(&block.k[o..o + n * row]);
-            buf.v[o..o + n * row].copy_from_slice(&block.v[o..o + n * row]);
+            buf.k[o..o + n * row].copy_from_slice(&k_host[o..o + n * row]);
+            buf.v[o..o + n * row].copy_from_slice(&v_host[o..o + n * row]);
         }
         drop(dev);
         self.h2d_bytes
@@ -534,6 +1030,16 @@ impl KvPool {
         dev.guard = Some(guard);
     }
 
+    /// Attach the shared-block accounting guard
+    /// ([`crate::cortex::memory::MemKind::SharedKv`]): registry-shared
+    /// blocks are charged here exactly once, however many caches reference
+    /// them.  Replaces any previously attached guard.
+    pub fn track_shared(&self, mut guard: MemGuard) {
+        let mut st = self.state.lock().unwrap();
+        guard.resize(st.shared as u64 * self.block_bytes());
+        st.shared_guard = Some(guard);
+    }
+
     /// Bytes currently held by device-resident block copies.
     pub fn dev_bytes(&self) -> u64 {
         self.dev.read().unwrap().bytes
@@ -558,9 +1064,27 @@ impl KvPool {
     }
 
     pub fn stats(&self) -> PoolStats {
-        let (blocks_live, blocks_free, blocks_high_water) = {
+        let (
+            blocks_live,
+            blocks_free,
+            blocks_high_water,
+            shared_blocks,
+            prefix_hits,
+            prefix_misses,
+            prefix_evictions,
+            cow_copies,
+        ) = {
             let st = self.state.lock().unwrap();
-            (st.live, st.free.len(), st.high_water)
+            (
+                st.live,
+                st.free.len(),
+                st.high_water,
+                st.shared,
+                st.prefix_hits,
+                st.prefix_misses,
+                st.prefix_evictions,
+                st.cow_copies,
+            )
         };
         let (dev_blocks, dev_bytes) = {
             let dev = self.dev.read().unwrap();
@@ -580,6 +1104,11 @@ impl KvPool {
             dev_bytes,
             h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
             dev_gathers: self.dev_gathers.load(Ordering::Relaxed),
+            shared_blocks,
+            prefix_hits,
+            prefix_misses,
+            prefix_evictions,
+            cow_copies,
         }
     }
 }
@@ -615,28 +1144,34 @@ mod tests {
         )
     }
 
+    /// `[L, n, KV*hd]` rows filled with a constant, sized for `pool`.
+    fn rows(p: &KvPool, n: usize, fill: f32) -> Vec<f32> {
+        vec![fill; p.n_layers() * n * p.row()]
+    }
+
     #[test]
     fn rent_release_reuse_round_trip() {
         let p = pool(4, 0);
         assert_eq!(p.block_bytes(), (2 * 4 * 32 * 2 * 4) as u64);
 
-        let a = p.rent_block().unwrap();
-        let b = p.rent_block().unwrap();
+        let a = p.rent_ref().unwrap();
+        let b = p.rent_ref().unwrap();
+        assert_ne!(a, b, "slab slots must be distinct");
         let s = p.stats();
         assert_eq!(s.blocks_live, 2);
         assert_eq!(s.blocks_free, 0);
         assert_eq!(s.blocks_high_water, 2);
         assert_eq!(s.reuses, 0);
 
-        p.release_block(a);
-        p.release_block(b);
+        p.release_ref(a);
+        p.release_ref(b);
         let s = p.stats();
         assert_eq!(s.blocks_live, 0);
         assert_eq!(s.blocks_free, 2);
 
         // the next rents come from the free list, not fresh allocations
-        let _c = p.rent_block().unwrap();
-        let _d = p.rent_block().unwrap();
+        let _c = p.rent_ref().unwrap();
+        let _d = p.rent_ref().unwrap();
         let s = p.stats();
         assert_eq!(s.reuses, 2);
         assert_eq!(s.blocks_live, 2);
@@ -647,13 +1182,13 @@ mod tests {
     #[test]
     fn exhaustion_backpressure() {
         let p = pool(4, 2);
-        let a = p.rent_block().unwrap();
-        let _b = p.rent_block().unwrap();
-        let err = p.rent_block().unwrap_err();
+        let a = p.rent_ref().unwrap();
+        let _b = p.rent_ref().unwrap();
+        let err = p.rent_ref().unwrap_err();
         assert!(format!("{err:#}").contains("exhausted"));
         // releasing frees capacity again
-        p.release_block(a);
-        assert!(p.rent_block().is_ok());
+        p.release_ref(a);
+        assert!(p.rent_ref().is_ok());
     }
 
     #[test]
@@ -661,12 +1196,12 @@ mod tests {
         // The orchestrator adopts an engine's pool and applies its knobs
         // after construction — the cap must bind immediately.
         let p = pool(4, 0);
-        let _a = p.rent_block().unwrap();
+        let _a = p.rent_ref().unwrap();
         p.set_limits(1, usize::MAX);
-        assert!(p.rent_block().is_err(), "cap of 1 with 1 live must refuse");
+        assert!(p.rent_ref().is_err(), "cap of 1 with 1 live must refuse");
         assert_eq!(p.config().max_blocks, 1);
         p.set_limits(0, usize::MAX);
-        assert!(p.rent_block().is_ok(), "lifting the cap unblocks growth");
+        assert!(p.rent_ref().is_ok(), "lifting the cap unblocks growth");
     }
 
     #[test]
@@ -674,15 +1209,15 @@ mod tests {
         // A retained free list must not grant headroom past max_blocks:
         // the cap is on LIVE blocks.
         let p = pool(4, 0);
-        let blocks: Vec<_> = (0..5).map(|_| p.rent_block().unwrap()).collect();
-        for b in blocks {
-            p.release_block(b);
+        let ids: Vec<_> = (0..5).map(|_| p.rent_ref().unwrap()).collect();
+        for id in ids {
+            p.release_ref(id);
         }
         assert_eq!(p.stats().blocks_free, 5);
         p.set_limits(2, usize::MAX);
-        let _a = p.rent_block().unwrap();
-        let _b = p.rent_block().unwrap();
-        let err = p.rent_block().unwrap_err();
+        let _a = p.rent_ref().unwrap();
+        let _b = p.rent_ref().unwrap();
+        let err = p.rent_ref().unwrap_err();
         assert!(
             format!("{err:#}").contains("exhausted"),
             "free-list rent bypassed the cap"
@@ -699,12 +1234,12 @@ mod tests {
                 retain_free_blocks: 1,
             },
         );
-        let a = p.rent_block().unwrap();
-        let b = p.rent_block().unwrap();
-        let c = p.rent_block().unwrap();
-        p.release_block(a);
-        p.release_block(b);
-        p.release_block(c);
+        let a = p.rent_ref().unwrap();
+        let b = p.rent_ref().unwrap();
+        let c = p.rent_ref().unwrap();
+        p.release_ref(a);
+        p.release_ref(b);
+        p.release_ref(c);
         let s = p.stats();
         assert_eq!(s.blocks_free, 1, "free list capped by retain_free_blocks");
         assert_eq!(s.blocks_live, 0);
@@ -722,13 +1257,214 @@ mod tests {
     #[test]
     fn fragmentation_gauge() {
         let p = pool(8, 0);
-        let _b = p.rent_block().unwrap();
+        let _b = p.rent_ref().unwrap();
         p.note_rows_added(6);
         let s = p.stats();
         assert_eq!(s.rows_live, 6);
         assert!((s.fragmentation() - 0.25).abs() < 1e-9, "{}", s.fragmentation());
         p.note_rows_removed(6);
         assert_eq!(p.stats().rows_live, 0);
+    }
+
+    #[test]
+    fn chain_hashes_commit_to_the_whole_prefix() {
+        let p = pool(4, 0);
+        let keys: Vec<i32> = (0..12).collect();
+        let h = p.prefix_hashes(7, &keys);
+        assert_eq!(h.len(), 3, "one hash per full block");
+        // same prefix → same chain
+        assert_eq!(p.prefix_hashes(7, &keys), h);
+        // a partial tail never hashes
+        assert_eq!(p.prefix_hashes(7, &keys[..7]).len(), 1);
+        // changing ANY earlier key changes every later hash
+        let mut other = keys.clone();
+        other[1] = 99;
+        let h2 = p.prefix_hashes(7, &other);
+        assert_ne!(h2[0], h[0]);
+        assert_ne!(h2[1], h[1]);
+        assert_ne!(h2[2], h[2]);
+        // a different domain salt separates identical key chains
+        assert_ne!(p.prefix_hashes(8, &keys)[0], h[0]);
+        // chain extension is order-sensitive
+        assert_ne!(chain_hash(1, &[2, 3]), chain_hash(1, &[3, 2]));
+    }
+
+    #[test]
+    fn registry_register_lookup_and_parking() {
+        let p = pool(4, 0);
+        let keys: Vec<i32> = (0..8).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        let a0 = p.rent_ref().unwrap();
+        let a1 = p.rent_ref().unwrap();
+        p.write_run(a0, 0, 4, 0, 8, &rows(&p, 8, 1.0), &rows(&p, 8, -1.0))
+            .unwrap();
+        p.write_run(a1, 0, 4, 4, 8, &rows(&p, 8, 1.0), &rows(&p, 8, -1.0))
+            .unwrap();
+        assert!(p.register_block(a0, hashes[0], &keys[..4]));
+        assert!(p.register_block(a1, hashes[1], &keys[4..8]));
+        assert!(
+            !p.register_block(a1, hashes[1], &keys[4..8]),
+            "re-registering is a no-op"
+        );
+        assert_eq!(p.stats().shared_blocks, 2);
+
+        // a second chain lookup hits both blocks and increfs them
+        let ids = p.lookup_chain(&hashes, &keys);
+        assert_eq!(ids, vec![a0, a1]);
+        let s = p.stats();
+        assert_eq!(s.prefix_hits, 2);
+        assert_eq!(s.prefix_misses, 0);
+
+        // dropping every reference parks the blocks instead of freeing them
+        p.release_ref(a0);
+        p.release_ref(a1);
+        p.release_ref(ids[0]);
+        p.release_ref(ids[1]);
+        let s = p.stats();
+        assert_eq!(s.blocks_live, 2, "registered blocks park, not free");
+        assert_eq!(s.blocks_free, 0);
+        // ...and they still hit
+        let ids2 = p.lookup_chain(&hashes, &keys);
+        assert_eq!(ids2, vec![a0, a1]);
+        p.release_ref(ids2[0]);
+        p.release_ref(ids2[1]);
+
+        // an unknown chain misses without touching anything
+        let other = p.prefix_hashes(1, &keys);
+        assert!(p.lookup_chain(&other, &keys).is_empty());
+        assert_eq!(p.stats().prefix_misses, 2);
+    }
+
+    #[test]
+    fn hash_collisions_verify_keys_and_miss() {
+        // The registry must never trust the 64-bit chain hash alone: a hit
+        // whose stored key run differs from the caller's keys is a
+        // collision and degrades to a miss — attaching another prompt's KV
+        // silently would be cross-request contamination.
+        let p = pool(4, 0);
+        let keys: Vec<i32> = (0..4).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        let id = p.rent_ref().unwrap();
+        p.write_run(id, 0, 4, 0, 4, &rows(&p, 4, 1.0), &rows(&p, 4, 1.0))
+            .unwrap();
+        assert!(p.register_block(id, hashes[0], &keys));
+        // simulate a colliding chain: same hash value, different keys
+        let other_keys: Vec<i32> = (100..104).collect();
+        let refs_probe = p.lookup_chain(&hashes, &other_keys);
+        assert!(refs_probe.is_empty(), "collision must miss, not attach");
+        assert_eq!(p.stats().prefix_misses, 1);
+        // the genuine keys still hit
+        let hit = p.lookup_chain(&hashes, &keys);
+        assert_eq!(hit, vec![id]);
+        p.release_ref(hit[0]);
+        p.release_ref(id);
+    }
+
+    #[test]
+    fn write_to_shared_block_copies_on_write() {
+        let p = pool(4, 0);
+        let keys: Vec<i32> = (0..4).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        let a = p.rent_ref().unwrap();
+        p.write_run(a, 0, 4, 0, 4, &rows(&p, 4, 1.0), &rows(&p, 4, 2.0))
+            .unwrap();
+        assert!(p.register_block(a, hashes[0], &keys));
+
+        // the registering owner's own next write must CoW too
+        let a2 = p
+            .write_run(a, 1, 1, 0, 1, &rows(&p, 1, 9.0), &rows(&p, 1, 9.0))
+            .unwrap();
+        assert_ne!(a2, a, "write to a registered block must copy");
+        assert_eq!(p.stats().cow_copies, 1);
+
+        // the registered original is untouched: a fresh chain hit still
+        // reads the original contents
+        let hit = p.lookup_chain(&hashes, &keys);
+        assert_eq!(hit, vec![a]);
+        let mut k = vec![0.0f32; p.n_layers() * 4 * p.row()];
+        let mut v = vec![0.0f32; p.n_layers() * 4 * p.row()];
+        p.host_gather_prefix_into(&hit, 4, 4, &mut k, &mut v);
+        assert!(k.iter().all(|&x| x == 1.0), "CoW mutated the shared block");
+        // while the copy carries the divergent row
+        let mut k2 = vec![0.0f32; p.n_layers() * 4 * p.row()];
+        let mut v2 = vec![0.0f32; p.n_layers() * 4 * p.row()];
+        p.host_gather_prefix_into(&[a2], 4, 4, &mut k2, &mut v2);
+        let row = p.row();
+        assert!(k2[row..2 * row].iter().all(|&x| x == 9.0));
+        assert!(k2[..row].iter().all(|&x| x == 1.0), "copy lost the prefix");
+        p.release_ref(hit[0]);
+        p.release_ref(a2);
+    }
+
+    #[test]
+    fn lru_eviction_frees_parked_blocks_under_the_cap() {
+        let p = pool(4, 0);
+        let keys: Vec<i32> = (0..12).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        // register three blocks, then park them all
+        let ids: Vec<u32> = (0..3).map(|_| p.rent_ref().unwrap()).collect();
+        for (i, &id) in ids.iter().enumerate() {
+            p.write_run(id, 0, 4, i * 4, 12, &rows(&p, 12, 1.0), &rows(&p, 12, 1.0))
+                .unwrap();
+            assert!(p.register_block(id, hashes[i], &keys[i * 4..(i + 1) * 4]));
+        }
+        for &id in &ids {
+            p.release_ref(id);
+        }
+        assert_eq!(p.stats().blocks_live, 3);
+
+        // touch the first chain entry so it becomes most-recently-used
+        let touched = p.lookup_chain(&hashes[..1], &keys);
+        p.release_ref(touched[0]);
+
+        // cap at 3: the next rent must evict the LRU parked entry — which
+        // is hashes[1] (hashes[0] was just touched, hashes[2] registered
+        // later... registration order gives 0,1,2; touching 0 leaves 1 as
+        // the oldest).
+        p.set_limits(3, usize::MAX);
+        let fresh = p.rent_ref().unwrap();
+        let s = p.stats();
+        assert_eq!(s.prefix_evictions, 1);
+        assert_eq!(s.shared_blocks, 2);
+        assert_eq!(s.blocks_live, 3, "eviction reuses in place");
+        // the evicted chain link now misses; the untouched survivors hit
+        let broken = p.lookup_chain(&hashes, &keys);
+        assert_eq!(broken.len(), 1, "chain broken at evictee");
+        p.release_ref(broken[0]);
+        let hit0 = p.lookup_chain(&hashes[..1], &keys);
+        assert_eq!(hit0.len(), 1);
+        p.release_ref(hit0[0]);
+        p.release_ref(fresh);
+
+        // with everything parked again and no cap, rents do not evict
+        p.set_limits(0, usize::MAX);
+        let id = p.rent_ref().unwrap();
+        assert_eq!(p.stats().prefix_evictions, 1);
+        p.release_ref(id);
+    }
+
+    #[test]
+    fn shared_guard_tracks_registered_bytes() {
+        use crate::cortex::memory::{MemKind, MemoryTracker};
+        let t = MemoryTracker::new();
+        let p = pool(4, 0);
+        let id = p.rent_ref().unwrap();
+        p.write_run(id, 0, 4, 0, 4, &rows(&p, 4, 1.0), &rows(&p, 4, 1.0))
+            .unwrap();
+        let guard_keys = [1, 2, 3, 4];
+        let hashes = p.prefix_hashes(0, &guard_keys);
+        p.track_shared(t.alloc(MemKind::SharedKv, 0));
+        assert_eq!(t.live_bytes(MemKind::SharedKv), 0);
+        assert!(p.register_block(id, hashes[0], &guard_keys));
+        assert_eq!(t.live_bytes(MemKind::SharedKv) as u64, p.block_bytes());
+        // parking does not change the global charge
+        p.release_ref(id);
+        assert_eq!(t.live_bytes(MemKind::SharedKv) as u64, p.block_bytes());
+        // eviction releases it
+        p.set_limits(1, usize::MAX);
+        let id2 = p.rent_ref().unwrap();
+        assert_eq!(t.live_bytes(MemKind::SharedKv), 0);
+        p.release_ref(id2);
     }
 
     #[test]
@@ -743,18 +1479,18 @@ mod tests {
             // phase 1: random churn
             for _ in 0..g.usize_in(10..60) {
                 if g.bool() || held.is_empty() {
-                    held.push(p.rent_block().map_err(|e| e.to_string())?);
+                    held.push(p.rent_ref().map_err(|e| e.to_string())?);
                     peak = peak.max(held.len());
                 } else {
                     let i = g.usize_in(0..held.len());
-                    p.release_block(held.swap_remove(i));
+                    p.release_ref(held.swap_remove(i));
                 }
             }
             let hw = p.stats().blocks_high_water;
             crate::prop_assert!(hw == peak, "high-water {hw} != observed peak {peak}");
             // phase 2: drop everything, then re-rent up to the peak
-            for b in held.drain(..) {
-                p.release_block(b);
+            for id in held.drain(..) {
+                p.release_ref(id);
             }
             let before = p.stats();
             crate::prop_assert!(
@@ -763,7 +1499,7 @@ mod tests {
                 before.blocks_free
             );
             for _ in 0..peak {
-                held.push(p.rent_block().map_err(|e| e.to_string())?);
+                held.push(p.rent_ref().map_err(|e| e.to_string())?);
             }
             let after = p.stats();
             crate::prop_assert!(
@@ -777,8 +1513,8 @@ mod tests {
                 peak,
                 after.reuses - before.reuses
             );
-            for b in held.drain(..) {
-                p.release_block(b);
+            for id in held.drain(..) {
+                p.release_ref(id);
             }
             Ok(())
         });
@@ -787,16 +1523,17 @@ mod tests {
     #[test]
     fn device_copies_materialise_lazily_and_recycle_with_blocks() {
         let p = pool(4, 0);
-        let b0 = p.rent_block().unwrap();
-        let b1 = p.rent_block().unwrap();
-        assert_ne!(b0.id, b1.id, "slab slots must be distinct");
+        let b0 = p.rent_ref().unwrap();
+        let b1 = p.rent_ref().unwrap();
+        assert_ne!(b0, b1, "slab slots must be distinct");
         let s = p.stats();
         assert_eq!(s.dev_blocks, 0, "no write-through yet → no device copy");
         assert_eq!(s.dev_bytes, 0);
         assert_eq!(s.h2d_bytes, 0);
 
         // First write-through materialises the copy and counts the rows.
-        p.dev_sync_rows(&b0, 0, 2);
+        p.write_run(b0, 0, 2, 0, 2, &rows(&p, 2, 1.0), &rows(&p, 2, 1.0))
+            .unwrap();
         let s = p.stats();
         assert_eq!(s.dev_blocks, 1);
         assert_eq!(s.dev_bytes, p.block_bytes());
@@ -804,16 +1541,15 @@ mod tests {
         assert_eq!(s.h2d_bytes, (2 * 2 * 32 * 2 * 4) as u64);
 
         // A free-listed block keeps its device copy (recycled, not freed).
-        let id0 = b0.id;
-        p.release_block(b0);
-        p.release_block(b1);
+        p.release_ref(b0);
+        p.release_ref(b1);
         assert_eq!(p.stats().dev_blocks, 1);
-        let b = p.rent_block().unwrap();
-        let b2 = p.rent_block().unwrap();
-        assert!(b.id == id0 || b2.id == id0, "free-listed id must recycle");
+        let a = p.rent_ref().unwrap();
+        let b = p.rent_ref().unwrap();
+        assert!(a == b0 || b == b0, "free-listed id must recycle");
         assert_eq!(p.stats().dev_blocks, 1);
-        p.release_block(b);
-        p.release_block(b2);
+        p.release_ref(a);
+        p.release_ref(b);
     }
 
     #[test]
@@ -826,26 +1562,26 @@ mod tests {
                 retain_free_blocks: 0, // every release returns to allocator
             },
         );
-        let b = p.rent_block().unwrap();
-        let id = b.id;
-        p.dev_sync_rows(&b, 0, 1);
+        let id = p.rent_ref().unwrap();
+        p.write_run(id, 0, 1, 0, 1, &rows(&p, 1, 1.0), &rows(&p, 1, 1.0))
+            .unwrap();
         assert_eq!(p.stats().dev_bytes, p.block_bytes());
-        p.release_block(b);
+        p.release_ref(id);
         let s = p.stats();
         assert_eq!(s.dev_blocks, 0, "allocator return must free the copy");
         assert_eq!(s.dev_bytes, 0);
         // the id comes back for the next fresh block
-        let b = p.rent_block().unwrap();
-        assert_eq!(b.id, id);
-        p.release_block(b);
+        let id2 = p.rent_ref().unwrap();
+        assert_eq!(id2, id);
+        p.release_ref(id2);
     }
 
     #[test]
     fn gather_requires_resident_copies_and_counts_table_upload() {
         let p = pool(4, 0);
-        let b = p.rent_block().unwrap();
+        let b = p.rent_ref().unwrap();
         // no write-through yet → gather over real rows must refuse
-        let err = p.dev_gather_prefix(&[b.id], 2, 4).unwrap_err();
+        let err = p.dev_gather_prefix(&[b], 2, 4).unwrap_err();
         assert!(format!("{err:#}").contains("no device-resident copy"));
         // an empty view gathers fine (nothing to read) but still ships the
         // (empty) table + len scalar
@@ -856,7 +1592,7 @@ mod tests {
         let s = p.stats();
         assert_eq!(s.h2d_bytes - before, 8);
         assert_eq!(s.dev_gathers, 1);
-        p.release_block(b);
+        p.release_ref(b);
     }
 
     #[test]
@@ -864,18 +1600,20 @@ mod tests {
         use crate::cortex::memory::{MemKind, MemoryTracker};
         let t = MemoryTracker::new();
         let p = pool(4, 0);
-        let b = p.rent_block().unwrap();
-        p.dev_sync_rows(&b, 0, 1);
+        let b = p.rent_ref().unwrap();
+        p.write_run(b, 0, 1, 0, 1, &rows(&p, 1, 1.0), &rows(&p, 1, 1.0))
+            .unwrap();
         // attaching after the fact syncs to the current slab size
         p.track_device(t.alloc(MemKind::DeviceKv, 0));
         assert_eq!(t.live_bytes(MemKind::DeviceKv) as u64, p.block_bytes());
-        let b2 = p.rent_block().unwrap();
-        p.dev_sync_rows(&b2, 1, 3);
+        let b2 = p.rent_ref().unwrap();
+        p.write_run(b2, 1, 3, 0, 3, &rows(&p, 3, 1.0), &rows(&p, 3, 1.0))
+            .unwrap();
         assert_eq!(t.live_bytes(MemKind::DeviceKv) as u64, 2 * p.block_bytes());
         // reclaim-to-allocator shrinks the charge
         p.set_limits(0, 0);
-        p.release_block(b);
-        p.release_block(b2);
+        p.release_ref(b);
+        p.release_ref(b2);
         assert_eq!(t.live_bytes(MemKind::DeviceKv), 0);
     }
 }

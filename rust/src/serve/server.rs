@@ -250,7 +250,8 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("main_kv", mem.per_kind[1])
                 .with("side_kv", mem.per_kind[2])
                 .with("synapse", mem.per_kind[3])
-                .with("device_kv", mem.per_kind[5]),
+                .with("device_kv", mem.per_kind[5])
+                .with("shared_kv", mem.per_kind[6]),
         )
         .with(
             "pool",
@@ -267,7 +268,15 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("dev_blocks", pool.dev_blocks)
                 .with("dev_bytes", pool.dev_bytes)
                 .with("h2d_bytes", pool.h2d_bytes)
-                .with("dev_gathers", pool.dev_gathers),
+                .with("dev_gathers", pool.dev_gathers)
+                // prefix-sharing gauges: registry occupancy (charged once
+                // globally), hit/miss/eviction counters and CoW copies
+                .with("shared_blocks", pool.shared_blocks)
+                .with("shared_bytes", pool.shared_bytes())
+                .with("prefix_hits", pool.prefix_hits)
+                .with("prefix_misses", pool.prefix_misses)
+                .with("prefix_evictions", pool.prefix_evictions)
+                .with("cow_copies", pool.cow_copies),
         )
         .with(
             "gate",

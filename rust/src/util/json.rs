@@ -19,12 +19,21 @@ pub enum Json {
 }
 
 /// Error raised by [`Json::parse`], with a byte offset into the input.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+/// (Display/Error are hand-implemented — `thiserror` is not among this
+/// crate's offline dependencies.)
+#[derive(Debug)]
 pub struct ParseError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     // ── Constructors ───────────────────────────────────────────────────
