@@ -152,12 +152,17 @@ fn main() -> anyhow::Result<()> {
         dev.exec_ns as f64 / dev.ops.max(1) as f64 / 1e6
     );
     let gate = cortex.gate.stats();
+    let step = cortex.step.stats();
     println!(
-        "gate: {} evaluated, {:.0}% accepted; synapse pushes {}; batcher mean batch {:.2}",
+        "gate: {} evaluated, {:.0}% accepted; synapse pushes {}; \
+         step: {:.2} tokens/op ({:.2} ops/token), {} fused ticks, parked peak {}",
         gate.evaluated,
         gate.accept_rate() * 100.0,
         cortex.synapse.stats().pushes,
-        cortex.batcher.stats().mean_batch_size(),
+        step.batch_occupancy(),
+        step.ops_per_token(),
+        step.fused_ticks,
+        step.parked_peak,
     );
     handle.stop();
     Ok(())

@@ -1,0 +1,251 @@
+//! Bench P4 — continuous batching: device ops per generated token fall
+//! from ~1.0 (the pre-PR-4 serial op stream) toward 1/B as the agent
+//! population grows, and main-agent steps are never queued behind side
+//! batches.
+//!
+//! Drives the real [`StepScheduler`] — admission, parking, per-tick
+//! collection, fan-back, continuous slot refill — over a deterministic
+//! host-only fused executor whose per-item results depend ONLY on
+//! `(token, pos, view len)`, mirroring the engine's op-count rules
+//! (1 op per fused tick, 2 when an unfusable main runs ahead of the side
+//! batch).  The engine-level numeric equivalence of fused vs single
+//! decode is covered by the device-gated integration tests; the
+//! *scheduling* equivalence is proven by the proptest in
+//! `cortex/step.rs`.  This bench runs in the CI bench-smoke step and
+//! asserts the acceptance criteria:
+//!
+//! * ops/token ≤ 0.5 at 16 concurrent agents (vs exactly 1.0 sequential),
+//! * ops/token is non-increasing as the population grows,
+//! * a concurrent main agent is included in every tick it is pending for
+//!   (`main_deferred == 0`) and fuses into the side batch.
+//!
+//! ```bash
+//! cargo bench --bench continuous_batch
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use warp_cortex::cortex::router::AgentRole;
+use warp_cortex::cortex::step::testing::{stub_exec, stub_raw};
+use warp_cortex::cortex::{
+    AgentCache, AgentSpawner, SideAgent, SideTask, StepConfig, StepScheduler,
+};
+use warp_cortex::model::{KvPool, KvPoolConfig};
+use warp_cortex::runtime::ModelConfig;
+use warp_cortex::text::{SamplerConfig, Tokenizer};
+use warp_cortex::util::Json;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 2,
+        d_ff: 32,
+        vocab_size: 260,
+        head_dim: 8,
+        rope_theta: 1e4,
+        param_count: 0,
+    }
+}
+
+const SIDE_CTX: usize = 96;
+const BATCH_WIDTH: usize = 8;
+const GEN_BUDGET: usize = 32;
+
+fn task(id: u64) -> SideTask {
+    SideTask {
+        id,
+        role: AgentRole::Verify,
+        payload: format!("agent {id}: inspect the shared block pool"),
+        main_pos: 0,
+        spawned_at: Instant::now(),
+    }
+}
+
+fn spawner(pool: Arc<KvPool>) -> AgentSpawner {
+    Arc::new(move |t: SideTask| {
+        let prompt_ids = Tokenizer::new().encode(&t.payload, false);
+        SideAgent::from_parts(
+            t,
+            AgentCache::Bare(pool.new_cache(SIDE_CTX)),
+            0,
+            1,
+            prompt_ids,
+            GEN_BUDGET,
+            SamplerConfig::greedy(),
+        )
+    })
+}
+
+fn scheduler(pool: &Arc<KvPool>, max_active: usize) -> Arc<StepScheduler> {
+    StepScheduler::new(
+        StepConfig {
+            batch_width: BATCH_WIDTH,
+            side_ctx: SIDE_CTX,
+            max_active,
+            max_parked: 64,
+            fuse_main: true,
+        },
+        stub_exec(tiny_cfg(), SIDE_CTX, BATCH_WIDTH),
+        spawner(pool.clone()),
+        Arc::new(|| true),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = tiny_cfg();
+    let pool = KvPool::new(
+        &cfg,
+        KvPoolConfig {
+            block_tokens: 16,
+            ..KvPoolConfig::default()
+        },
+    );
+
+    println!("═══ P4: continuous batching (device ops per generated token) ═══\n");
+
+    // ── sequential baseline: one device op per step, by construction ──
+    let mut seq_ops = 0u64;
+    let mut seq_tokens = 0u64;
+    for i in 0..16u64 {
+        let mut agent = spawner(pool.clone())(task(1000 + i));
+        while let Some((token, pos)) = agent.next_request() {
+            let len = agent.paged().len;
+            agent.feed(stub_raw(&cfg, token, pos, len));
+            seq_ops += 1;
+            seq_tokens += 1;
+        }
+    }
+    let seq_ops_per_token = seq_ops as f64 / seq_tokens as f64;
+    println!(
+        "sequential baseline: {seq_ops} ops / {seq_tokens} tokens = {seq_ops_per_token:.3} ops/token"
+    );
+    assert!(
+        (seq_ops_per_token - 1.0).abs() < 1e-9,
+        "sequential decode must cost exactly one op per token"
+    );
+
+    // ── fused path: ops/token vs population ──
+    println!(
+        "\n{:>10} {:>8} {:>8} {:>12} {:>12}",
+        "agents", "ops", "tokens", "ops/token", "occupancy"
+    );
+    let populations = [1usize, 2, 4, 8, 16];
+    let mut curve = Vec::new();
+    for &n in &populations {
+        let sched = scheduler(&pool, n);
+        for i in 0..n as u64 {
+            assert!(sched.submit(task(i + 1)), "submit under the bound rejected");
+        }
+        assert!(
+            sched.drain(Duration::from_secs(30)),
+            "population {n} never drained"
+        );
+        let outcomes = sched.poll_results();
+        assert_eq!(outcomes.len(), n, "lost outcomes at population {n}");
+        for o in &outcomes {
+            assert!(o.error.is_none(), "agent failed: {:?}", o.error);
+            assert!(o.steps > 0, "agent did no work");
+        }
+        let st = sched.stats();
+        println!(
+            "{:>10} {:>8} {:>8} {:>12.3} {:>12.2}",
+            n,
+            st.device_ops,
+            st.side_steps,
+            st.ops_per_token(),
+            st.batch_occupancy()
+        );
+        curve.push((n, st.ops_per_token()));
+        sched.shutdown();
+    }
+
+    // ── acceptance criteria ──
+    // 1. toward 1/B: non-increasing in the population (small tolerance for
+    //    tail ticks, where a draining cohort under-fills the batch).
+    for w in curve.windows(2) {
+        assert!(
+            w[1].1 <= w[0].1 + 0.05,
+            "ops/token must not grow with population: {curve:?}"
+        );
+    }
+    assert!(
+        (curve[0].1 - 1.0).abs() < 1e-9,
+        "a lone agent pays exactly one op per token: {curve:?}"
+    );
+    // 2. ≤ 0.5 at 16 concurrent agents (the fused claim; the serial path
+    //    is pinned at 1.0 above).
+    let at_16 = curve.last().unwrap().1;
+    assert!(
+        at_16 <= 0.5,
+        "ops/token at 16 agents is {at_16:.3}, expected ≤ 0.5"
+    );
+
+    // ── main-lane priority: a live main agent fuses into every tick and
+    //    is never deferred behind side work ──
+    let sched = scheduler(&pool, 8);
+    for i in 0..8u64 {
+        assert!(sched.submit(task(100 + i)));
+    }
+    let mut main_kv = pool.new_cache(256);
+    let mut main_tokens = 0u64;
+    for step in 0..64 {
+        let token = (step % 190) as i32;
+        let pos = main_kv.len() as i32;
+        sched.main_step(token, pos, &mut main_kv)?;
+        main_tokens += 1;
+    }
+    assert!(sched.drain(Duration::from_secs(30)), "mixed run never drained");
+    let mixed = sched.stats();
+    let outcomes = sched.poll_results();
+    assert_eq!(outcomes.len(), 8);
+    println!(
+        "\nmixed run: {} main + {} side steps in {} ops ({} fused ticks) — \
+         {:.3} ops/token, main_deferred = {}",
+        mixed.main_steps,
+        mixed.side_steps,
+        mixed.device_ops,
+        mixed.fused_ticks,
+        mixed.ops_per_token(),
+        mixed.main_deferred
+    );
+    assert_eq!(mixed.main_steps, main_tokens);
+    assert_eq!(
+        mixed.main_deferred, 0,
+        "a main step waited behind side work"
+    );
+    assert!(
+        mixed.fused_ticks > 0,
+        "the main agent never rode the fused batch"
+    );
+    sched.shutdown();
+
+    // Machine-readable report (published as a CI artifact and
+    // threshold-checked alongside the other BENCH_*.json files).
+    let mut report = Json::obj()
+        .with("bench", "continuous_batch")
+        .with("batch_width", BATCH_WIDTH)
+        .with("gen_budget", GEN_BUDGET)
+        .with("sequential_ops_per_token", seq_ops_per_token)
+        .with("ops_per_token_at_1", curve[0].1)
+        .with("ops_per_token_at_16", at_16)
+        .with("mixed_ops_per_token", mixed.ops_per_token())
+        .with("mixed_fused_ticks", mixed.fused_ticks)
+        .with("main_deferred", mixed.main_deferred);
+    for (n, opt) in &curve {
+        if *n != 1 && *n != 16 {
+            report = report.with(format!("ops_per_token_at_{n}").as_str(), *opt);
+        }
+    }
+    std::fs::write("BENCH_continuous_batch.json", report.to_string())?;
+    println!("wrote BENCH_continuous_batch.json");
+
+    println!(
+        "\nshape check: ops/token 1.0 (serial) → {:.3} at 16 agents, main never deferred  ✓",
+        at_16
+    );
+    Ok(())
+}

@@ -25,7 +25,7 @@ fn print_curve(tag: &str, model: &CapacityModel) {
         "{:>10} {:>14} {:>12} {:>12}",
         "agents", "memory", "device util", "state"
     );
-    for p in model.curve(1_000_000) {
+    for p in model.curve(1_000_000).expect("valid capacity model") {
         println!(
             "{:>10} {:>14} {:>11.1}% {:>12}",
             p.agents,
@@ -38,7 +38,7 @@ fn print_curve(tag: &str, model: &CapacityModel) {
             }
         );
     }
-    let (n, why) = model.limit();
+    let (n, why) = model.limit().expect("valid capacity model");
     println!(
         "limit: {n} agents, bound by {}",
         match why {
@@ -46,6 +46,13 @@ fn print_curve(tag: &str, model: &CapacityModel) {
             Bottleneck::Compute => "compute",
             Bottleneck::Feasible => "nothing",
         }
+    );
+    // The step scheduler's fused ticks remove the per-token main op: the
+    // compute ceiling moves out accordingly (∞ when sides are free).
+    let serial = model.max_agents_compute().expect("valid capacity model");
+    let fused = model.max_agents_compute_fused().expect("valid capacity model");
+    println!(
+        "compute ceiling: serial op stream {serial}, fused step-scheduler ticks {fused}"
     );
 }
 
@@ -137,7 +144,7 @@ fn main() -> anyhow::Result<()> {
     for duty in [0.5, 0.25, 0.1, 0.05, 0.02, 0.01, 0.005] {
         let mut m = paper.clone();
         m.side_duty = duty;
-        let (n, why) = m.limit();
+        let (n, why) = m.limit().expect("valid capacity model");
         println!(
             "{:>12} {:>12} {:>12}",
             duty,
@@ -162,7 +169,7 @@ fn main() -> anyhow::Result<()> {
          is a *capacity* (memory) claim, which does hold: memory alone \
          carries {} agents/card, and the 'million-agent' title needs \
          ~{} cards at synapse-only footprints.",
-        paper.limit().0,
+        paper.limit().expect("valid capacity model").0,
         paper.max_agents_memory(),
         1_000_000 / paper.max_agents_memory().max(1)
     );
@@ -188,7 +195,7 @@ fn main() -> anyhow::Result<()> {
 
     // Shape checks: compute binds under active duty; the claim's memory
     // half holds; limits are monotone in duty.
-    assert_eq!(paper.limit().1, Bottleneck::Compute);
+    assert_eq!(paper.limit().expect("valid capacity model").1, Bottleneck::Compute);
     assert!(paper.max_agents_memory() > 1000);
     println!("\nshape check: compute-bottleneck prediction + 1,000+ memory capacity  ✓");
     Ok(())

@@ -7,6 +7,15 @@
 //!      positions after the compressed context),
 //!   3. generate a short thought until a stop byte or its budget,
 //!   4. hand the thought + its final hidden state to the Validation Gate.
+//!
+//! Since the step-scheduler refactor a side agent is a **pollable token
+//! source** ([`SideAgent`]): instead of a worker thread that blocks on a
+//! per-token decode RPC, the agent exposes `next_request` (the token it
+//! wants decoded next) and `feed` (consume the step result, append the KV
+//! row, advance).  The [`crate::cortex::StepScheduler`] polls every
+//! runnable agent each tick and fuses their items into one device op.  The
+//! thread-blocking [`run_side_agent`] entry point remains for the legacy
+//! [`crate::cortex::StreamScheduler`] worker-pool path.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -14,10 +23,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::Batcher;
-use super::prism::{AgentKind, Prism};
+use super::prism::{AgentKind, AgentTicket, Prism};
 use super::router::AgentRole;
-use super::synapse::Synapse;
-use crate::model::Engine;
+use super::synapse::{SeedMode, Synapse};
+use crate::model::{Engine, KvCache, PagedKv, RawDecode};
 use crate::text::{Sampler, SamplerConfig, Tokenizer, EOS_ID};
 
 /// A routed unit of side-agent work.
@@ -168,6 +177,328 @@ fn run_side_inner(ctx: &SideContext, task: &SideTask) -> Result<SideRun> {
     }
 
     Ok((state, text, tokens, hidden, steps, version))
+}
+
+// ── Pollable side agents (the step-scheduler path) ──────────────────────
+
+/// What a pollable side agent decodes into: a prism-registered ticket in
+/// production (its drop returns the blocks and the population slot), or a
+/// bare pool cache in the executor-seam tests and benches that run without
+/// an engine.
+pub enum AgentCache {
+    Ticket(AgentTicket),
+    Bare(KvCache),
+}
+
+impl AgentCache {
+    pub fn kv(&mut self) -> &mut KvCache {
+        match self {
+            AgentCache::Ticket(t) => &mut t.kv,
+            AgentCache::Bare(kv) => kv,
+        }
+    }
+
+    pub fn kv_ref(&self) -> &KvCache {
+        match self {
+            AgentCache::Ticket(t) => &t.kv,
+            AgentCache::Bare(kv) => kv,
+        }
+    }
+}
+
+/// Everything [`SideAgent::spawn`] needs to register and seed a fresh side
+/// agent (the step scheduler's production spawner captures one of these).
+pub struct StepAgentCtx {
+    pub prism: Arc<Prism>,
+    pub synapse: Arc<Synapse>,
+    pub seed_mode: SeedMode,
+    pub gen_budget: usize,
+    pub sampler: SamplerConfig,
+}
+
+/// A side agent as a pollable state machine.  Semantics mirror
+/// [`run_side_agent`] step for step — absorb the task prompt at
+/// continuation positions, then sample a short thought until a stop byte,
+/// EOS or the budget — but decoding is inverted: the scheduler asks for
+/// the next `(token, pos)` item, runs it (fused with every other runnable
+/// agent), and feeds the raw result back.
+pub struct SideAgent {
+    task: SideTask,
+    /// `None` only for born-failed agents (spawn error): they are `done`
+    /// from birth, so no decode path ever dereferences the cache.
+    cache: Option<AgentCache>,
+    tokenizer: Tokenizer,
+    sampler: Sampler,
+    prompt_ids: Vec<i32>,
+    /// Prompt tokens to teacher-force (prompt length capped to leave
+    /// generation room).
+    absorb: usize,
+    absorb_idx: usize,
+    gen_budget: usize,
+    generated: usize,
+    pos: i32,
+    steps: usize,
+    state: SideState,
+    text: String,
+    tokens: Vec<i32>,
+    hidden: Vec<f32>,
+    last_logits: Option<Vec<f32>>,
+    /// The item handed out by `next_request` and not yet fed back, so a
+    /// repeated poll cannot re-sample.
+    inflight: Option<(i32, i32)>,
+    version: u64,
+    started: Instant,
+    error: Option<String>,
+    done: bool,
+}
+
+impl SideAgent {
+    /// Register with the Prism and seed from the synapse.  Never fails:
+    /// a registration/seeding error yields a born-finished agent whose
+    /// outcome is `Failed` (the scheduler delivers it like any other).
+    pub fn spawn(ctx: &StepAgentCtx, task: SideTask) -> SideAgent {
+        let started = Instant::now();
+        let spawned = (|| -> Result<(AgentTicket, i32, u64)> {
+            let mut ticket = ctx.prism.register(AgentKind::Side)?;
+            let (pos, version) = ctx.synapse.seed_into(&mut ticket.kv, ctx.seed_mode)?;
+            Ok((ticket, pos, version))
+        })();
+        match spawned {
+            Ok((ticket, pos, version)) => {
+                let tk = Tokenizer::new();
+                let prompt = format!("\nstream: [THOUGHT] {}: ", task.payload);
+                let prompt_ids = tk.encode(&prompt, false);
+                let sampler_cfg = SamplerConfig {
+                    seed: ctx.sampler.seed ^ task.id,
+                    ..ctx.sampler.clone()
+                };
+                SideAgent::assemble(
+                    task,
+                    AgentCache::Ticket(ticket),
+                    tk,
+                    pos,
+                    version,
+                    prompt_ids,
+                    ctx.gen_budget,
+                    sampler_cfg,
+                    started,
+                )
+            }
+            Err(e) => SideAgent::born_failed(task, format!("{e:#}"), started),
+        }
+    }
+
+    /// Executor-seam constructor: an already-seeded cache, explicit prompt
+    /// ids and sampling — no prism, synapse or engine required.  Drives the
+    /// scheduler's fused-vs-sequential equivalence proptest and the
+    /// continuous-batching bench host-only.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        task: SideTask,
+        cache: AgentCache,
+        pos: i32,
+        version: u64,
+        prompt_ids: Vec<i32>,
+        gen_budget: usize,
+        sampler: SamplerConfig,
+    ) -> SideAgent {
+        let sampler_cfg = SamplerConfig {
+            seed: sampler.seed ^ task.id,
+            ..sampler
+        };
+        SideAgent::assemble(
+            task,
+            cache,
+            Tokenizer::new(),
+            pos,
+            version,
+            prompt_ids,
+            gen_budget,
+            sampler_cfg,
+            Instant::now(),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        task: SideTask,
+        mut cache: AgentCache,
+        tokenizer: Tokenizer,
+        pos: i32,
+        version: u64,
+        prompt_ids: Vec<i32>,
+        gen_budget: usize,
+        sampler_cfg: SamplerConfig,
+        started: Instant,
+    ) -> SideAgent {
+        // Same absorb cap as the blocking path: keep room for generation.
+        let absorb = prompt_ids
+            .len()
+            .min(cache.kv().remaining().saturating_sub(gen_budget.min(8)));
+        SideAgent {
+            task,
+            cache: Some(cache),
+            tokenizer,
+            sampler: Sampler::new(sampler_cfg),
+            prompt_ids,
+            absorb,
+            absorb_idx: 0,
+            gen_budget,
+            generated: 0,
+            pos,
+            steps: 0,
+            state: SideState::BudgetExhausted,
+            text: String::new(),
+            tokens: Vec::new(),
+            hidden: Vec::new(),
+            last_logits: None,
+            inflight: None,
+            version,
+            started,
+            error: None,
+            done: false,
+        }
+    }
+
+    fn born_failed(task: SideTask, error: String, started: Instant) -> SideAgent {
+        SideAgent {
+            task,
+            cache: None,
+            tokenizer: Tokenizer::new(),
+            sampler: Sampler::new(SamplerConfig::greedy()),
+            prompt_ids: Vec::new(),
+            absorb: 0,
+            absorb_idx: 0,
+            gen_budget: 0,
+            generated: 0,
+            pos: 0,
+            steps: 0,
+            state: SideState::Failed,
+            text: String::new(),
+            tokens: Vec::new(),
+            hidden: Vec::new(),
+            last_logits: None,
+            inflight: None,
+            version: 0,
+            started,
+            error: Some(error),
+            done: true,
+        }
+    }
+
+    pub fn task_id(&self) -> u64 {
+        self.task.id
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn kv(&mut self) -> &mut KvCache {
+        self.cache
+            .as_mut()
+            .expect("live side agent has a cache")
+            .kv()
+    }
+
+    /// Paged view of the agent's cache for the next fused op.
+    pub fn paged(&self) -> PagedKv {
+        self.cache
+            .as_ref()
+            .expect("live side agent has a cache")
+            .kv_ref()
+            .paged()
+    }
+
+    /// The next `(token, position)` this agent wants decoded, or `None`
+    /// once it has finished.  Idempotent until the matching [`Self::feed`]:
+    /// repeated polls return the same item without re-sampling.
+    pub fn next_request(&mut self) -> Option<(i32, i32)> {
+        if self.done {
+            return None;
+        }
+        if let Some(req) = self.inflight {
+            return Some(req);
+        }
+        // Phase 1: absorb the task prompt (teacher forcing).
+        if self.absorb_idx < self.absorb {
+            let req = (self.prompt_ids[self.absorb_idx], self.pos);
+            self.inflight = Some(req);
+            return Some(req);
+        }
+        // Phase 2: generate the thought.
+        if self.generated >= self.gen_budget || self.kv().remaining() == 0 {
+            self.done = true; // state stays BudgetExhausted
+            return None;
+        }
+        let id = match &self.last_logits {
+            Some(logits) => self.sampler.sample(logits),
+            None => {
+                // no absorb step ran and nothing was seeded to sample from
+                self.done = true;
+                return None;
+            }
+        };
+        if id == EOS_ID {
+            self.state = SideState::Finished;
+            self.done = true;
+            return None;
+        }
+        if let Some(b) = self.tokenizer.decode_one(id) {
+            if b == b'\n' || b == b']' {
+                self.state = SideState::Finished;
+                self.done = true;
+                return None;
+            }
+            self.text.push(b as char);
+        }
+        self.tokens.push(id);
+        self.generated += 1;
+        let req = (id, self.pos);
+        self.inflight = Some(req);
+        Some(req)
+    }
+
+    /// Consume one step result: append the KV row, advance the phase.  An
+    /// append failure marks the agent `Failed` (surfaced in its outcome).
+    pub fn feed(&mut self, step: RawDecode) {
+        self.inflight = None;
+        if let Err(e) = self.kv().append_row(&step.k_new, &step.v_new) {
+            self.fail(format!("append: {e:#}"));
+            return;
+        }
+        self.hidden = step.hidden;
+        self.last_logits = Some(step.logits);
+        if self.absorb_idx < self.absorb {
+            self.absorb_idx += 1;
+        }
+        self.pos += 1;
+        self.steps += 1;
+    }
+
+    /// Mark the agent failed (device error, scheduler shutdown, ...).
+    pub fn fail(&mut self, error: String) {
+        self.inflight = None;
+        self.state = SideState::Failed;
+        self.error = Some(error);
+        self.done = true;
+    }
+
+    /// Terminal outcome; consumes the agent (its ticket's drop returns the
+    /// cache blocks to the pool).
+    pub fn into_outcome(self) -> SideOutcome {
+        SideOutcome {
+            state: self.state,
+            text: self.text,
+            tokens: self.tokens,
+            hidden: self.hidden,
+            steps: self.steps,
+            synapse_version: self.version,
+            elapsed: self.started.elapsed(),
+            error: self.error,
+            task: self.task,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,21 +1,36 @@
-//! Dynamic batcher for side-agent decode steps.
+//! Dynamic batcher for side-agent decode steps — the **legacy** decode
+//! path, subsumed on the serving path by [`super::step::StepScheduler`]
+//! (iteration-level continuous batching).  Kept for thread-per-agent
+//! callers ([`super::agent::run_side_agent`] on the
+//! [`super::StreamScheduler`] worker pool) and as the linger-based
+//! batching reference.
 //!
 //! Side agents run on independent threads; batching their per-token decode
 //! ops amortises device dispatch overhead (the serving classic).  A worker
 //! calls [`Batcher::decode`], which ships a request to the batcher thread;
-//! the thread lingers briefly (`linger`) to collect up to `B` requests,
-//! issues one `decode_batch` op on the Stream lane, and fans the results
-//! back out.  Single stragglers fall through to the cheaper single-decode
-//! program.
+//! the thread drains whatever is already queued and lingers up to `linger`
+//! to collect up to `B` requests, issues one `decode_batch` op on the
+//! Stream lane, and fans the results back out.  Single stragglers fall
+//! through to the cheaper single-decode program.  (`linger == 0` is the
+//! "never wait" knob: co-arriving requests that are *already queued* still
+//! fuse — the pre-PR-4 code checked the deadline before its first
+//! `recv_timeout` and so never batched at all with a zero linger.)
 //!
 //! Requests are **paged**: since the device-resident refactor a request
-//! carries the cache's block table ([`PagedKv`], O(k) ints) instead of
+//! carries the cache's block table ([`crate::model::PagedKv`], O(k) ints) instead of
 //! full-capacity K/V vectors, shrinking the channel's in-flight memory from
 //! `O(B·capacity)` floats to `O(B·k)` and eliminating the per-token
 //! full-cache upload.  This is sound because the requesting worker *blocks*
 //! on the reply while the batcher resolves the table against the shared
 //! pool's device copies — the blocks are exclusively owned by the waiting
 //! cache and cannot be mutated, released or re-rented mid-step.
+//!
+//! Failure containment: the executor runs under `catch_unwind` (a
+//! panicking batch surfaces as an `Err` reply to each caller in it, and
+//! the batcher thread keeps serving), and every lock on the request path
+//! is poison-tolerant ([`crate::util::sync`]) — one panicking worker can
+//! no longer poison the `tx`/`handle` mutexes and cascade its failure
+//! into every later `decode`/`shutdown` caller.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -23,8 +38,8 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::model::{Engine, KvCache, PagedKv};
-use crate::runtime::Lane;
+use crate::model::{Engine, FusedReq, KvCache, RawDecode};
+use crate::util::sync::lock_unpoisoned;
 
 /// Result of one batched decode step.
 #[derive(Debug)]
@@ -33,13 +48,17 @@ pub struct StepOut {
     pub hidden: Vec<f32>,
 }
 
+/// Executes one collected batch, returning one [`RawDecode`] per item
+/// (same order).  Items are [`FusedReq`]s — the engine's per-lane work
+/// unit (token, position, O(k) block table; never the cache contents,
+/// which are device-resident already).  Production wraps the engine's
+/// single/batched decode programs; tests inject recording or faulty
+/// executors to drive the thread protocol host-only.
+pub type BatchExec = Arc<dyn Fn(&[FusedReq]) -> Vec<Result<RawDecode>> + Send + Sync>;
+
 struct Request {
-    token: i32,
-    pos: i32,
-    /// Block table + valid length of the requesting cache — never the
-    /// cache contents (those are device-resident already).
-    paged: PagedKv,
-    reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>>,
+    item: FusedReq,
+    reply: mpsc::Sender<Result<RawDecode>>,
 }
 
 /// Batching statistics.
@@ -74,9 +93,30 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Spawn the batcher thread.  `linger` bounds the wait for co-batchable
-    /// requests (the latency/throughput knob).
+    /// Spawn the batcher thread over an engine.  `linger` bounds the wait
+    /// for co-batchable requests (the latency/throughput knob; 0 = fuse
+    /// only what is already queued).
     pub fn new(engine: Arc<Engine>, linger: Duration) -> Arc<Batcher> {
+        let b_max = engine.caps().decode_batch;
+        // One home for side-batch assembly: the engine's `run_side_batch`
+        // (also the step scheduler's sides-only path) picks the straggler
+        // vs batch program and unpacks the lanes.
+        let exec: BatchExec = Arc::new(move |items| {
+            match engine.run_side_batch(items) {
+                Ok(outs) => outs.into_iter().map(Ok).collect(),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    items.iter().map(|_| Err(anyhow!("{msg}"))).collect()
+                }
+            }
+        });
+        Batcher::with_exec(exec, linger, b_max)
+    }
+
+    /// Batcher over an arbitrary executor — the seam the linger/shutdown/
+    /// panic regression tests drive without a device.  Production callers
+    /// use [`Batcher::new`].
+    pub fn with_exec(exec: BatchExec, linger: Duration, b_max: usize) -> Arc<Batcher> {
         let (tx, rx) = mpsc::channel::<Request>();
         let batcher = Arc::new(Batcher {
             tx: Mutex::new(Some(tx)),
@@ -89,9 +129,9 @@ impl Batcher {
         let b = batcher.clone();
         let handle = std::thread::Builder::new()
             .name("warp-batcher".into())
-            .spawn(move || batcher_thread(engine, rx, linger, b))
+            .spawn(move || batcher_thread(exec, rx, linger, b_max.max(1), b))
             .expect("spawn batcher");
-        *batcher.handle.lock().unwrap() = Some(handle);
+        *lock_unpoisoned(&batcher.handle) = Some(handle);
         batcher
     }
 
@@ -105,27 +145,30 @@ impl Batcher {
         // the reply below, so the referenced blocks stay exclusively ours
         // for the whole step.
         let req = Request {
-            token,
-            pos,
-            paged: kv.paged(),
+            item: FusedReq {
+                token,
+                pos,
+                paged: kv.paged(),
+            },
             reply: reply_tx,
         };
-        // Clone the sender under the mutex, send outside it: shutdown can
-        // take-and-drop the channel without ever racing a held guard.
-        let tx = self
-            .tx
-            .lock()
-            .unwrap()
+        // Clone the sender under the (poison-tolerant) mutex, send outside
+        // it: shutdown can take-and-drop the channel without ever racing a
+        // held guard, and a panicked peer cannot cascade into this caller.
+        let tx = lock_unpoisoned(&self.tx)
             .as_ref()
             .cloned()
             .ok_or_else(|| anyhow!("batcher shut down"))?;
         tx.send(req).map_err(|_| anyhow!("batcher thread gone"))?;
         drop(tx);
-        let (logits, hidden, k_new, v_new) = reply_rx
+        let raw = reply_rx
             .recv()
             .map_err(|_| anyhow!("batcher shut down while a decode was in flight"))??;
-        kv.append_row(&k_new, &v_new)?;
-        Ok(StepOut { logits, hidden })
+        kv.append_row(&raw.k_new, &raw.v_new)?;
+        Ok(StepOut {
+            logits: raw.logits,
+            hidden: raw.hidden,
+        })
     }
 
     pub fn stats(&self) -> BatcherStats {
@@ -147,21 +190,21 @@ impl Batcher {
     /// (replying to each), and exits — no caller is left hanging on a dead
     /// channel.  Idempotent: later calls find both slots empty.
     pub fn shutdown(&self) {
-        let tx = self.tx.lock().unwrap().take();
+        let tx = lock_unpoisoned(&self.tx).take();
         drop(tx);
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        if let Some(h) = lock_unpoisoned(&self.handle).take() {
             let _ = h.join();
         }
     }
 }
 
 fn batcher_thread(
-    engine: Arc<Engine>,
+    exec: BatchExec,
     rx: mpsc::Receiver<Request>,
     linger: Duration,
+    b_max: usize,
     stats: Arc<Batcher>,
 ) {
-    let b_max = engine.caps().decode_batch;
     loop {
         let first = match rx.recv() {
             Ok(r) => r,
@@ -170,6 +213,17 @@ fn batcher_thread(
         let mut batch = vec![first];
         let deadline = std::time::Instant::now() + linger;
         while batch.len() < b_max {
+            // Drain already-queued requests FIRST: co-arrivals fuse even
+            // with `linger == 0` (the old loop checked the deadline before
+            // its first recv and degenerated to singles).
+            match rx.try_recv() {
+                Ok(r) => {
+                    batch.push(r);
+                    continue;
+                }
+                Err(mpsc::TryRecvError::Disconnected) => break,
+                Err(mpsc::TryRecvError::Empty) => {}
+            }
             let now = std::time::Instant::now();
             if now >= deadline {
                 break;
@@ -182,43 +236,241 @@ fn batcher_thread(
         }
 
         if batch.len() == 1 {
-            // Straggler: cheaper single-decode program.
             stats.singles.fetch_add(1, Ordering::Relaxed);
-            let req = batch.pop().unwrap();
-            let result =
-                engine.decode_side_raw(req.token, req.pos, &req.paged, Lane::Stream);
-            let _ = req.reply.send(result);
-            continue;
+        } else {
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            stats
+                .batched_requests
+                .fetch_add(batch.len() as u64, Ordering::Relaxed);
         }
 
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats
-            .batched_requests
-            .fetch_add(batch.len() as u64, Ordering::Relaxed);
-        let n = batch.len();
-        let mut tokens = Vec::with_capacity(n);
-        let mut pos = Vec::with_capacity(n);
-        let mut views = Vec::with_capacity(n);
-        for r in &batch {
-            tokens.push(r.token);
-            pos.push(r.pos);
-            views.push(r.paged.clone());
-        }
-        match engine.decode_batch_raw(n, tokens, pos, &views, Lane::Stream) {
-            Ok(results) => {
-                for (req, out) in batch.into_iter().zip(results) {
-                    let _ = req.reply.send(Ok(out));
-                }
+        // Split payloads from repliers (no per-item clone on the hot path).
+        let (items, replies): (Vec<FusedReq>, Vec<_>) =
+            batch.into_iter().map(|r| (r.item, r.reply)).unzip();
+        // Contain executor panics: the batch's callers get an Err reply,
+        // the thread keeps serving, and (because callers never observe a
+        // poisoned lock) later requests are unaffected.
+        let results = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec(&items)))
+            .unwrap_or_else(|_| {
+                items
+                    .iter()
+                    .map(|_| Err(anyhow!("batch executor panicked")))
+                    .collect()
+            });
+        if results.len() == replies.len() {
+            for (reply, out) in replies.into_iter().zip(results) {
+                let _ = reply.send(out);
             }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for req in batch {
-                    let _ = req.reply.send(Err(anyhow!("{msg}")));
-                }
+        } else {
+            for reply in replies {
+                let _ = reply.send(Err(anyhow!(
+                    "batch executor returned {} results for {} requests",
+                    results.len(),
+                    items.len()
+                )));
             }
         }
     }
 }
 
-// End-to-end batcher behaviour (batch == single numerics, fan-out under
-// concurrency) is covered in rust/tests/integration_cortex.rs.
+// End-to-end batcher behaviour with a real engine (batch == single
+// numerics, fan-out under concurrency) is covered in
+// rust/tests/integration_cortex.rs; the thread protocol itself is
+// unit-tested below through the `with_exec` seam (no engine needed).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{KvPool, KvPoolConfig};
+    use crate::runtime::ModelConfig;
+    use std::sync::Condvar;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 16,
+            vocab_size: 260,
+            head_dim: 4,
+            rope_theta: 1e4,
+            param_count: 0,
+        }
+    }
+
+    fn row_floats(cfg: &ModelConfig) -> usize {
+        cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
+    }
+
+    /// Executor that records batch sizes and can be parked on a gate.
+    struct GatedExec {
+        gate: Arc<(Mutex<bool>, Condvar)>,
+        sizes: Arc<Mutex<Vec<usize>>>,
+    }
+
+    impl GatedExec {
+        fn new() -> (BatchExec, Arc<(Mutex<bool>, Condvar)>, Arc<Mutex<Vec<usize>>>) {
+            let gate = Arc::new((Mutex::new(true), Condvar::new()));
+            let sizes = Arc::new(Mutex::new(Vec::new()));
+            let e = GatedExec {
+                gate: gate.clone(),
+                sizes: sizes.clone(),
+            };
+            let cfg = tiny_cfg();
+            let row = row_floats(&cfg);
+            let exec: BatchExec = Arc::new(move |items| {
+                {
+                    let (lock, cv) = &*e.gate;
+                    let mut open = lock.lock().unwrap();
+                    while !*open {
+                        open = cv.wait(open).unwrap();
+                    }
+                }
+                e.sizes.lock().unwrap().push(items.len());
+                items
+                    .iter()
+                    .map(|it| {
+                        Ok(RawDecode {
+                            logits: vec![it.token as f32; 4],
+                            hidden: vec![it.pos as f32; 4],
+                            k_new: vec![0.5f32; row],
+                            v_new: vec![0.25f32; row],
+                        })
+                    })
+                    .collect()
+            });
+            (exec, gate, sizes)
+        }
+    }
+
+    fn set_gate(gate: &Arc<(Mutex<bool>, Condvar)>, open: bool) {
+        let (lock, cv) = &**gate;
+        *lock.lock().unwrap() = open;
+        cv.notify_all();
+    }
+
+    fn caches(n: usize) -> Vec<KvCache> {
+        let pool = KvPool::new(&tiny_cfg(), KvPoolConfig::default());
+        (0..n).map(|_| pool.new_cache(64)).collect()
+    }
+
+    /// The `linger == 0` regression: requests already queued while the
+    /// executor was busy must still fuse into one batch — the old deadline
+    /// check broke before the first recv and degenerated to singles.
+    #[test]
+    fn linger_zero_still_fuses_co_arrivals() {
+        let (exec, gate, sizes) = GatedExec::new();
+        let b = Batcher::with_exec(exec, Duration::ZERO, 8);
+        // Park the executor on the first request so the next three queue up.
+        set_gate(&gate, false);
+        let workers: Vec<_> = (0..4)
+            .map(|i| {
+                let b = b.clone();
+                let h = std::thread::spawn(move || {
+                    let mut kv = caches(1).pop().unwrap();
+                    b.decode(i, 0, &mut kv).map(|o| o.logits[0])
+                });
+                // Give request 0 time to be claimed before the rest queue.
+                if i == 0 {
+                    std::thread::sleep(Duration::from_millis(30));
+                }
+                h
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30));
+        set_gate(&gate, true);
+        for (i, h) in workers.into_iter().enumerate() {
+            let logit = h.join().unwrap().unwrap();
+            assert_eq!(logit, i as f32, "result fanned back to the wrong caller");
+        }
+        let sizes = sizes.lock().unwrap().clone();
+        assert!(
+            sizes.iter().any(|&s| s > 1),
+            "linger==0 never fused co-arriving requests: batch sizes {sizes:?}"
+        );
+        assert!(b.stats().batches >= 1);
+        b.shutdown();
+    }
+
+    /// Shutdown with requests still queued must drain them (each caller
+    /// gets its reply) rather than stranding blocked workers.
+    #[test]
+    fn shutdown_with_queued_requests_drains_them() {
+        let (exec, gate, sizes) = GatedExec::new();
+        let b = Batcher::with_exec(exec, Duration::ZERO, 2);
+        set_gate(&gate, false);
+        let workers: Vec<_> = (0..5)
+            .map(|i| {
+                let b = b.clone();
+                let h = std::thread::spawn(move || {
+                    let mut kv = caches(1).pop().unwrap();
+                    b.decode(i, 0, &mut kv).map(|o| o.logits[0])
+                });
+                if i == 0 {
+                    std::thread::sleep(Duration::from_millis(30));
+                }
+                h
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30));
+        // Tear down while request 0 is mid-batch and 1..5 are queued; the
+        // thread must drain the queue (channel items survive the sender
+        // drop) before exiting, so shutdown's join completes and every
+        // caller gets a reply.
+        let shutter = {
+            let b = b.clone();
+            std::thread::spawn(move || b.shutdown())
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        set_gate(&gate, true);
+        shutter.join().unwrap();
+        for (i, h) in workers.into_iter().enumerate() {
+            let logit = h.join().unwrap().unwrap();
+            assert_eq!(logit, i as f32, "queued request {i} lost at shutdown");
+        }
+        assert_eq!(sizes.lock().unwrap().iter().sum::<usize>(), 5);
+        // Post-shutdown requests fail fast; repeated shutdown is a no-op.
+        let mut kv = caches(1).pop().unwrap();
+        assert!(b.decode(9, 0, &mut kv).is_err());
+        b.shutdown();
+    }
+
+    /// A panicking executor must surface as an `Err` to its own callers
+    /// and leave the batcher fully serviceable — no poisoned locks, no
+    /// dead thread.
+    #[test]
+    fn panicking_executor_does_not_poison_the_batcher() {
+        let cfg = tiny_cfg();
+        let row = row_floats(&cfg);
+        let exec: BatchExec = Arc::new(move |items| {
+            if items[0].token == 13 {
+                panic!("executor blew up");
+            }
+            items
+                .iter()
+                .map(|it| {
+                    Ok(RawDecode {
+                        logits: vec![it.token as f32; 4],
+                        hidden: vec![0.0; 4],
+                        k_new: vec![0.1; row],
+                        v_new: vec![0.2; row],
+                    })
+                })
+                .collect()
+        });
+        let b = Batcher::with_exec(exec, Duration::ZERO, 4);
+        let mut kv = caches(1).pop().unwrap();
+        let err = b.decode(13, 0, &mut kv).unwrap_err();
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+        assert_eq!(kv.len(), 0, "failed step must not append a row");
+        // The thread survived and later decodes (and stats/shutdown locks)
+        // work — the pre-fix behaviour panicked in `lock().unwrap()` here.
+        let out = b.decode(7, 0, &mut kv).unwrap();
+        assert_eq!(out.logits[0], 7.0);
+        assert_eq!(kv.len(), 1);
+        assert_eq!(b.stats().requests, 2);
+        b.shutdown();
+    }
+}

@@ -14,6 +14,19 @@
 //!
 //!   util(N) = main_rate · t_main + (N−1) · side_duty · main_rate · t_side/B
 //!
+//! Since the PR-4 step scheduler the serving path no longer issues that
+//! serial stream: main and side steps fuse into shared batch ticks, so the
+//! fused model ([`CapacityModel::utilization_fused`]) charges
+//! `max(1, tokens-per-main-token / B)` batch ops per main token instead of
+//! `1 main op + side ops` — the `t_main` term disappears into lane 0 of
+//! the batch op and the compute ceiling moves out accordingly.
+//!
+//! All entry points validate the model first and return a typed
+//! [`CapacityError`] for degenerate inputs (`batch_width == 0`,
+//! non-positive `main_rate`, negative `side_duty`, non-finite costs) —
+//! the pre-PR-4 arithmetic silently produced `inf`/`NaN` utilization
+//! curves instead.
+//!
 //! Memory: the Table-1/Table-2 arithmetic from [`super::memory`].
 
 use super::memory::MemoryModel;
@@ -27,6 +40,44 @@ pub struct ComputeCosts {
     pub t_side_batch: f64,
     pub batch_width: usize,
 }
+
+/// Why a capacity model is unusable (degenerate inputs that would
+/// otherwise propagate as `inf`/`NaN` through every curve).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CapacityError {
+    /// `batch_width == 0`: the per-op token count divides by it.
+    ZeroBatchWidth,
+    /// `main_rate <= 0` (or non-finite): the model is parameterised per
+    /// main token, so a non-positive rate has no meaning.
+    NonPositiveMainRate(f64),
+    /// `side_duty < 0` (or NaN): side agents cannot consume negative
+    /// device-tokens.
+    NegativeSideDuty(f64),
+    /// A per-op cost is negative or non-finite.
+    NonFiniteCost {
+        which: &'static str,
+        value: f64,
+    },
+}
+
+impl std::fmt::Display for CapacityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CapacityError::ZeroBatchWidth => write!(f, "capacity model: batch_width is 0"),
+            CapacityError::NonPositiveMainRate(r) => {
+                write!(f, "capacity model: main_rate {r} is not a positive finite rate")
+            }
+            CapacityError::NegativeSideDuty(d) => {
+                write!(f, "capacity model: side_duty {d} is negative (or NaN)")
+            }
+            CapacityError::NonFiniteCost { which, value } => {
+                write!(f, "capacity model: {which} = {value} is not a finite non-negative cost")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CapacityError {}
 
 /// The full capacity model.
 #[derive(Debug, Clone)]
@@ -57,18 +108,58 @@ pub struct CapacityPoint {
 }
 
 impl CapacityModel {
-    /// Device utilization in [0, ∞): >1 means the op stream no longer fits.
-    pub fn utilization(&self, agents: u64) -> f64 {
-        let side = agents.saturating_sub(1) as f64;
-        let side_tokens_per_sec = side * self.side_duty * self.main_rate;
-        self.main_rate * self.compute.t_main_decode
-            + side_tokens_per_sec * self.compute.t_side_batch
-                / self.compute.batch_width as f64
+    /// Reject degenerate parameters before any arithmetic: every public
+    /// entry point calls this, so a `batch_width` of 0 or a negative duty
+    /// surfaces as a typed [`CapacityError`] instead of an `inf`/`NaN`
+    /// utilization curve.
+    pub fn validate(&self) -> Result<(), CapacityError> {
+        if self.compute.batch_width == 0 {
+            return Err(CapacityError::ZeroBatchWidth);
+        }
+        if !(self.main_rate.is_finite() && self.main_rate > 0.0) {
+            return Err(CapacityError::NonPositiveMainRate(self.main_rate));
+        }
+        if !(self.side_duty >= 0.0 && self.side_duty.is_finite()) {
+            return Err(CapacityError::NegativeSideDuty(self.side_duty));
+        }
+        for (which, value) in [
+            ("t_main_decode", self.compute.t_main_decode),
+            ("t_side_batch", self.compute.t_side_batch),
+        ] {
+            if !(value.is_finite() && value >= 0.0) {
+                return Err(CapacityError::NonFiniteCost { which, value });
+            }
+        }
+        Ok(())
     }
 
-    pub fn evaluate(&self, agents: u64) -> CapacityPoint {
+    /// Device utilization in [0, ∞) under the legacy serial op stream
+    /// (one main op per token + linger-batched side ops): >1 means the op
+    /// stream no longer fits.
+    pub fn utilization(&self, agents: u64) -> Result<f64, CapacityError> {
+        self.validate()?;
+        let side = agents.saturating_sub(1) as f64;
+        let side_tokens_per_sec = side * self.side_duty * self.main_rate;
+        Ok(self.main_rate * self.compute.t_main_decode
+            + side_tokens_per_sec * self.compute.t_side_batch
+                / self.compute.batch_width as f64)
+    }
+
+    /// Device utilization under the step scheduler's fused ticks: per main
+    /// token the population produces `1 + (N−1)·side_duty` tokens, carried
+    /// by `max(1, tokens / B)` batch ops — there is no separate main op,
+    /// so the `t_main` term disappears into lane 0 of the batch program.
+    pub fn utilization_fused(&self, agents: u64) -> Result<f64, CapacityError> {
+        self.validate()?;
+        let b = self.compute.batch_width as f64;
+        let tokens_per_main_token = 1.0 + agents.saturating_sub(1) as f64 * self.side_duty;
+        let ops_per_main_token = (tokens_per_main_token / b).max(1.0);
+        Ok(self.main_rate * ops_per_main_token * self.compute.t_side_batch)
+    }
+
+    pub fn evaluate(&self, agents: u64) -> Result<CapacityPoint, CapacityError> {
         let mem_bytes = self.mem.warp_total_bytes(agents);
-        let utilization = self.utilization(agents);
+        let utilization = self.utilization(agents)?;
         let over_mem = mem_bytes > self.mem.vram_total - self.mem.vram_reserved;
         let bottleneck = match (over_mem, utilization > 1.0) {
             (false, false) => Bottleneck::Feasible,
@@ -76,19 +167,19 @@ impl CapacityModel {
             (true, false) => Bottleneck::Memory,
             (false, true) => Bottleneck::Compute,
             (true, true) => {
-                if self.max_agents_memory() < self.max_agents_compute() {
+                if self.max_agents_memory() < self.max_agents_compute()? {
                     Bottleneck::Memory
                 } else {
                     Bottleneck::Compute
                 }
             }
         };
-        CapacityPoint {
+        Ok(CapacityPoint {
             agents,
             mem_bytes,
             utilization,
             bottleneck,
-        }
+        })
     }
 
     /// Largest N that fits memory.
@@ -96,40 +187,62 @@ impl CapacityModel {
         self.mem.max_agents_warp()
     }
 
-    /// Largest N with utilization <= 1.
-    pub fn max_agents_compute(&self) -> u64 {
+    /// Largest N with serial-stream utilization <= 1.
+    pub fn max_agents_compute(&self) -> Result<u64, CapacityError> {
+        self.validate()?;
         let fixed = self.main_rate * self.compute.t_main_decode;
         if fixed >= 1.0 {
-            return 0;
+            return Ok(0);
         }
         let per_side = self.side_duty * self.main_rate * self.compute.t_side_batch
             / self.compute.batch_width as f64;
         if per_side <= 0.0 {
-            return u64::MAX;
+            return Ok(u64::MAX);
         }
-        1 + ((1.0 - fixed) / per_side) as u64
+        Ok(1 + ((1.0 - fixed) / per_side) as u64)
+    }
+
+    /// Largest N with *fused-tick* utilization <= 1 (the step-scheduler
+    /// ceiling).  Always ≥ the serial figure when `t_side_batch` is the
+    /// binding cost, because the dedicated per-token main op is gone.
+    pub fn max_agents_compute_fused(&self) -> Result<u64, CapacityError> {
+        self.validate()?;
+        let b = self.compute.batch_width as f64;
+        // Floor cost: even a lone main pays one batch op per token.
+        let t = self.main_rate * self.compute.t_side_batch;
+        if t >= 1.0 {
+            return Ok(0);
+        }
+        if self.side_duty <= 0.0 {
+            return Ok(u64::MAX);
+        }
+        // util = main_rate * t_side_batch * tokens / B <= 1 once tokens > B
+        //   ⇒ tokens <= B / (main_rate * t_side_batch)   (≥ B since t < 1)
+        let max_tokens = (b / t).max(b);
+        Ok(1 + ((max_tokens - 1.0) / self.side_duty) as u64)
     }
 
     /// The population where scaling stops, and why.
-    pub fn limit(&self) -> (u64, Bottleneck) {
+    pub fn limit(&self) -> Result<(u64, Bottleneck), CapacityError> {
         let m = self.max_agents_memory();
-        let c = self.max_agents_compute();
-        if c < m {
+        let c = self.max_agents_compute()?;
+        Ok(if c < m {
             (c, Bottleneck::Compute)
         } else {
             (m, Bottleneck::Memory)
-        }
+        })
     }
 
     /// Log-spaced scaling curve up to `max_n`.
-    pub fn curve(&self, max_n: u64) -> Vec<CapacityPoint> {
+    pub fn curve(&self, max_n: u64) -> Result<Vec<CapacityPoint>, CapacityError> {
+        self.validate()?;
         let mut points = Vec::new();
         let mut n = 1u64;
         while n <= max_n {
-            points.push(self.evaluate(n));
+            points.push(self.evaluate(n)?);
             n = if n < 10 { n * 2 } else { n * 10 / 3 };
         }
-        points
+        Ok(points)
     }
 }
 
@@ -166,22 +279,93 @@ mod tests {
         let m = model(4e-3);
         // fixed = 30*2e-3 = 0.06; per_side = 0.25*30*1e-3 = 7.5e-3
         // max = 1 + (0.94/0.0075) = 1 + 125
-        assert_eq!(m.max_agents_compute(), 126);
-        assert!(m.utilization(126) <= 1.0 + 1e-9);
-        assert!(m.utilization(130) > 1.0);
+        assert_eq!(m.max_agents_compute().unwrap(), 126);
+        assert!(m.utilization(126).unwrap() <= 1.0 + 1e-9);
+        assert!(m.utilization(130).unwrap() > 1.0);
+    }
+
+    #[test]
+    fn degenerate_inputs_yield_typed_errors_not_nan() {
+        let mut zero_b = model(4e-3);
+        zero_b.compute.batch_width = 0;
+        assert_eq!(zero_b.utilization(10), Err(CapacityError::ZeroBatchWidth));
+        assert_eq!(zero_b.curve(100).unwrap_err(), CapacityError::ZeroBatchWidth);
+        assert_eq!(zero_b.limit().unwrap_err(), CapacityError::ZeroBatchWidth);
+
+        let mut bad_rate = model(4e-3);
+        bad_rate.main_rate = 0.0;
+        assert_eq!(
+            bad_rate.utilization(10),
+            Err(CapacityError::NonPositiveMainRate(0.0))
+        );
+        bad_rate.main_rate = -3.0;
+        assert_eq!(
+            bad_rate.max_agents_compute(),
+            Err(CapacityError::NonPositiveMainRate(-3.0))
+        );
+        bad_rate.main_rate = f64::NAN;
+        assert!(matches!(
+            bad_rate.utilization(10),
+            Err(CapacityError::NonPositiveMainRate(_))
+        ));
+
+        let mut bad_duty = model(4e-3);
+        bad_duty.side_duty = -0.5;
+        assert_eq!(
+            bad_duty.evaluate(10).unwrap_err(),
+            CapacityError::NegativeSideDuty(-0.5)
+        );
+
+        let mut bad_cost = model(f64::INFINITY);
+        assert!(matches!(
+            bad_cost.utilization_fused(10),
+            Err(CapacityError::NonFiniteCost { which: "t_side_batch", .. })
+        ));
+        bad_cost.compute.t_side_batch = 1e-3;
+        bad_cost.compute.t_main_decode = -1.0;
+        assert!(matches!(
+            bad_cost.utilization(10),
+            Err(CapacityError::NonFiniteCost { which: "t_main_decode", .. })
+        ));
+        // every error renders a human-readable reason
+        assert!(format!("{}", CapacityError::ZeroBatchWidth).contains("batch_width"));
+    }
+
+    #[test]
+    fn fused_ticks_raise_the_compute_ceiling() {
+        // Widen the batch so the per-token main op dominates the serial
+        // model; fusing main into the batch removes that term entirely.
+        let mut m = model(4e-3);
+        m.compute.batch_width = 16;
+        let serial = m.max_agents_compute().unwrap();
+        let fused = m.max_agents_compute_fused().unwrap();
+        assert!(
+            fused > serial,
+            "fused ceiling {fused} must exceed serial {serial}"
+        );
+        // At the serial ceiling the fused stream still has headroom.
+        assert!(m.utilization_fused(serial).unwrap() < 1.0);
+        // Fused utilization is flat until the population fills one batch
+        // (ops per main token floored at 1), then grows linearly.
+        let floor = m.utilization_fused(1).unwrap();
+        assert_eq!(m.utilization_fused(2).unwrap(), floor);
+        assert!(m.utilization_fused(100_000).unwrap() > 1.0);
+        // zero side duty → sides are free → unbounded fused compute
+        m.side_duty = 0.0;
+        assert_eq!(m.max_agents_compute_fused().unwrap(), u64::MAX);
     }
 
     #[test]
     fn limit_reports_binding_constraint() {
         // slow device → compute binds before memory
         let slow = model(4e-3);
-        let (n, why) = slow.limit();
+        let (n, why) = slow.limit().unwrap();
         assert_eq!(why, Bottleneck::Compute);
         assert!(n < slow.max_agents_memory());
 
         // very fast device → memory binds
         let fast = model(1e-7);
-        let (n, why) = fast.limit();
+        let (n, why) = fast.limit().unwrap();
         assert_eq!(why, Bottleneck::Memory);
         assert_eq!(n, fast.max_agents_memory());
         assert!(n > 1000, "paper's 1000+ agent claim should hold: {n}");
@@ -190,7 +374,7 @@ mod tests {
     #[test]
     fn curve_is_monotone_and_classified() {
         let m = model(4e-3);
-        let curve = m.curve(100_000);
+        let curve = m.curve(100_000).unwrap();
         for w in curve.windows(2) {
             assert!(w[1].mem_bytes >= w[0].mem_bytes);
             assert!(w[1].utilization >= w[0].utilization);
@@ -205,8 +389,8 @@ mod tests {
         // one 24 GB card cannot hold 1M × (synapse + overhead) — the model
         // quantifies exactly how far the memory axis carries.
         let free = model(0.0);
-        assert_eq!(free.max_agents_compute(), u64::MAX);
-        let at_million = free.evaluate(1_000_000);
+        assert_eq!(free.max_agents_compute().unwrap(), u64::MAX);
+        let at_million = free.evaluate(1_000_000).unwrap();
         assert_eq!(at_million.bottleneck, Bottleneck::Memory);
         // ... unless the per-agent footprint drops to the synapse-only row
         // the paper's Table 1 quotes (≈0.8 MB): then ~28k agents/card, and

@@ -5,12 +5,21 @@
 //! `run_episode` is the canonical serving loop:
 //!
 //! ```text
-//! prefill (River) ─► decode loop (River) ─► token stream ─► Router
-//!        │                 ▲                                  │ trigger
-//!        ▼                 │ Referential Injection            ▼
-//!   Synapse push ◄── gate-accepted thoughts ◄── side agents (Stream lane,
-//!   (Background)                                dynamic batcher)
+//! prefill (River) ─► decode loop ──► token stream ─► Router
+//!        │              ▲   │                          │ trigger
+//!        ▼              │   ▼ main step                ▼
+//!   Synapse push    inject  STEP SCHEDULER ◄─── side agents (pollable
+//!   (Background)            one fused device op       token sources)
+//!                           per tick: main + sides
 //! ```
+//!
+//! Decode scheduling is iteration-level (continuous batching): every
+//! decode step — the main agent's and every side agent's — flows through
+//! the [`StepScheduler`], which fuses all runnable agents' next tokens
+//! into one `decode_batch` device op per tick.  The main step rides lane 0
+//! at River priority while its context fits a side lane, and runs as its
+//! own River op ahead of the side batch afterwards, preserving the
+//! River/Stream lane contract without serializing the op stream.
 //!
 //! Context memory is device-resident end to end: every cache write (prefill
 //! load, decode append, synapse seed, injection) goes through to the shared
@@ -35,14 +44,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use super::agent::{SideContext, SideOutcome, SideTask};
-use super::batcher::Batcher;
+use super::agent::{SideAgent, SideOutcome, SideTask, StepAgentCtx};
 use super::gate::{Gate, GateStats};
 use super::inject::{InjectStats, Injector};
 use super::memory::{MemSnapshot, MemoryTracker};
 use super::prism::{AgentKind, AgentTicket, Prism};
 use super::router::{Router, RouterConfig, Trigger};
-use super::scheduler::{SchedulerStats, StreamScheduler};
+use super::step::{AdmitGate, AgentSpawner, FusedExec, StepConfig, StepScheduler, StepStats};
 use super::synapse::{Synapse, SynapseStats};
 use crate::metrics::{Histogram, Throughput};
 use crate::model::{Engine, KvPool, KvPoolConfig, PoolStats};
@@ -54,9 +62,9 @@ use crate::text::{Sampler, SamplerConfig, Tokenizer, EOS_ID};
 pub struct CortexConfig {
     /// Model config name (must be loaded on the device).
     pub model: String,
-    /// Max concurrently *running* side agents (worker threads).
+    /// Max concurrently *decoding* side agents (step-scheduler active set).
     pub max_side_agents: usize,
-    /// Additional queued tasks beyond the running ones.
+    /// Additional parked tasks beyond the active ones (admission queue).
     pub max_queued_tasks: usize,
     /// Refresh the synapse every this many main-agent tokens.
     pub synapse_refresh_every: usize,
@@ -72,8 +80,16 @@ pub struct CortexConfig {
     pub sampler: SamplerConfig,
     /// Side-agent sampling.
     pub side_sampler: SamplerConfig,
-    /// Batcher linger window.
+    /// Legacy linger window of the [`super::Batcher`] API.  The serving
+    /// path batches at iteration level through the step scheduler and
+    /// never lingers; kept for callers assembling the legacy batcher
+    /// directly.
     pub batch_linger: Duration,
+    /// Ride the main step on lane 0 of the fused batch op while its
+    /// context fits a side-capacity lane (one device op per tick).  Off =
+    /// the main step always runs as its own River op ahead of the side
+    /// batch (two ops per mixed tick, strictest lane isolation).
+    pub fuse_main: bool,
     pub router: RouterConfig,
     /// Side-cache seeding (Full, or the §6.2 Coarse/Adaptive extensions).
     pub seed_mode: crate::cortex::synapse::SeedMode,
@@ -103,6 +119,7 @@ impl Default for CortexConfig {
                 ..SamplerConfig::default()
             },
             batch_linger: Duration::from_micros(500),
+            fuse_main: true,
             router: RouterConfig::default(),
             seed_mode: crate::cortex::synapse::SeedMode::Full,
             kv_pool: KvPoolConfig::default(),
@@ -162,7 +179,8 @@ pub struct EpisodeReport {
     pub gate: GateStats,
     pub inject: InjectStats,
     pub synapse: SynapseStats,
-    pub scheduler: SchedulerStats,
+    /// Step-scheduler gauges (ticks, fused device ops, admissions, parks).
+    pub scheduler: StepStats,
     pub memory: MemSnapshot,
     /// Block-pool gauges at episode end (resident vs high-water context).
     pub pool: PoolStats,
@@ -178,8 +196,9 @@ pub struct WarpCortex {
     pub synapse: Arc<Synapse>,
     pub gate: Arc<Gate>,
     pub injector: Arc<Injector>,
-    pub scheduler: StreamScheduler,
-    pub batcher: Arc<Batcher>,
+    /// The unified decode scheduler: every main and side decode step
+    /// flows through it as one fused device op per tick.
+    pub step: Arc<StepScheduler>,
     pub tracker: Arc<MemoryTracker>,
     pub main_throughput: Throughput,
     pub step_latency: Histogram,
@@ -192,10 +211,10 @@ pub struct WarpCortex {
 
 impl Drop for WarpCortex {
     fn drop(&mut self) {
-        // Join the batcher thread before tearing the rest down: an un-joined
-        // thread touching engine state during process exit races the C++
-        // xla_extension teardown (observed as a SIGSEGV at exit).
-        self.batcher.shutdown();
+        // Join the step-scheduler thread before tearing the rest down: an
+        // un-joined thread touching engine state during process exit races
+        // the C++ xla_extension teardown (observed as a SIGSEGV at exit).
+        self.step.shutdown();
     }
 }
 
@@ -232,17 +251,49 @@ impl WarpCortex {
         let synapse = Synapse::new(tracker.clone());
         let gate = Arc::new(Gate::new(cfg.gate_theta.unwrap_or(engine.gate_theta)));
         let injector = Arc::new(Injector::new(cfg.inject_reserve_rows));
-        let batcher = Batcher::new(engine.clone(), cfg.batch_linger);
-        let side_ctx = Arc::new(SideContext {
-            engine: engine.clone(),
-            synapse: synapse.clone(),
-            batcher: batcher.clone(),
-            prism: prism.clone(),
-            seed_mode: cfg.seed_mode,
-            gen_budget: cfg.side_gen_budget,
-            sampler: cfg.side_sampler.clone(),
-        });
-        let scheduler = StreamScheduler::new(side_ctx, cfg.max_side_agents, cfg.max_queued_tasks);
+        // The step scheduler's three seams, production-wired:
+        //  * spawner — prism registration + synapse seeding per admitted task,
+        //  * exec    — the engine's mixed-lane fused batch entry point,
+        //  * admit   — pool-occupancy gate: a fresh side cache's worst-case
+        //    blocks must still fit under `max_blocks` (0 = unbounded).
+        let spawner: AgentSpawner = {
+            let step_ctx = StepAgentCtx {
+                prism: prism.clone(),
+                synapse: synapse.clone(),
+                seed_mode: cfg.seed_mode,
+                gen_budget: cfg.side_gen_budget,
+                sampler: cfg.side_sampler.clone(),
+            };
+            Arc::new(move |task| SideAgent::spawn(&step_ctx, task))
+        };
+        let exec: FusedExec = {
+            let engine = engine.clone();
+            Arc::new(move |main, main_cap, sides, fuse| {
+                engine.decode_fused(main, main_cap, sides, fuse)
+            })
+        };
+        let admit: AdmitGate = {
+            let pool = pool.clone();
+            let bt = pool.block_tokens();
+            // Worst-case blocks a side agent can grow to; `can_admit`
+            // counts parked (evictable) registry entries as headroom, so a
+            // warm prefix registry sitting at the cap doesn't permanently
+            // park every new side task.
+            let side_blocks_worst = (engine.caps().side_ctx + bt - 1) / bt;
+            Arc::new(move || pool.can_admit(side_blocks_worst))
+        };
+        let step = StepScheduler::new(
+            StepConfig {
+                batch_width: engine.caps().decode_batch,
+                side_ctx: engine.caps().side_ctx,
+                max_active: cfg.max_side_agents,
+                max_parked: cfg.max_queued_tasks,
+                fuse_main: cfg.fuse_main,
+            },
+            exec,
+            spawner,
+            admit,
+        );
         Ok(WarpCortex {
             cfg,
             engine,
@@ -251,8 +302,7 @@ impl WarpCortex {
             synapse,
             gate,
             injector,
-            scheduler,
-            batcher,
+            step,
             tracker,
             main_throughput: Throughput::new(),
             step_latency: Histogram::new(),
@@ -320,13 +370,17 @@ impl WarpCortex {
         let mut generated = 0usize;
 
         while generated < max_tokens && ticket.kv.remaining() > 0 {
-            // ── decode one token on the River lane ──
+            // ── decode one token through the step scheduler ──
+            // The step runs at River priority inside the next fused tick
+            // (lane 0 of the batch op, or its own op ahead of the side
+            // batch once the context outgrows a side lane) — never queued
+            // behind side work.
             let t0 = Instant::now();
             let id = sampler.sample(&logits);
             if id == EOS_ID {
                 break;
             }
-            let out = self.engine.decode(id, pos, &mut ticket.kv, Lane::River)?;
+            let out = self.step.main_step(id, pos, &mut ticket.kv)?;
             self.step_latency.record(t0.elapsed());
             self.main_throughput.tick();
             logits = out.logits;
@@ -375,7 +429,7 @@ impl WarpCortex {
                     spawned_at: Instant::now(),
                 };
                 let task_id = task.id;
-                if self.scheduler.submit(task) {
+                if self.step.submit(task) {
                     events.push(Event::Spawned {
                         task_id,
                         tag: tr.tag,
@@ -391,7 +445,7 @@ impl WarpCortex {
             }
 
             // ── merge finished side agents (gate + referential injection) ──
-            for outcome in self.scheduler.poll_results() {
+            for outcome in self.step.poll_results() {
                 self.merge_outcome(outcome, &hidden, &mut ticket, pos, generated, &mut events)?;
             }
         }
@@ -399,12 +453,12 @@ impl WarpCortex {
         // Final drain pass: give in-flight agents a grace window so every
         // spawned task reaches a terminal event in the report.
         let deadline = Instant::now() + Duration::from_secs(2);
-        while self.scheduler.in_flight() > 0 && Instant::now() < deadline {
-            if let Some(outcome) = self.scheduler.wait_result(Duration::from_millis(100)) {
+        while self.step.in_flight() > 0 && Instant::now() < deadline {
+            if let Some(outcome) = self.step.wait_result(Duration::from_millis(100)) {
                 self.merge_outcome(outcome, &hidden, &mut ticket, pos, generated, &mut events)?;
             }
         }
-        for outcome in self.scheduler.poll_results() {
+        for outcome in self.step.poll_results() {
             self.merge_outcome(outcome, &hidden, &mut ticket, pos, generated, &mut events)?;
         }
 
@@ -421,7 +475,7 @@ impl WarpCortex {
             gate: self.gate.stats(),
             inject: self.injector.stats(),
             synapse: self.synapse.stats(),
-            scheduler: self.scheduler.stats(),
+            scheduler: self.step.stats(),
             memory: self.tracker.snapshot(),
             pool: self.pool.stats(),
         })

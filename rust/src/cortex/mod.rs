@@ -7,8 +7,9 @@
 //! | `router`    | 3.4     | Cortex Router (streaming trigger extraction) |
 //! | `gate`      | 3.5     | Validation Gate (cosine θ-test) |
 //! | `inject`    | 3.6     | Referential Injection (virtual-position KV) |
-//! | `scheduler` | 3.1     | River & Stream worker pool (+ device lanes) |
-//! | `batcher`   | 4       | dynamic batching of side-agent decode steps |
+//! | `step`      | 3.1, 4  | the step scheduler: iteration-level continuous batching of ALL decode (main + side) into fused per-tick device ops |
+//! | `scheduler` | 3.1     | legacy River & Stream worker pool (kept for the thread-per-agent path) |
+//! | `batcher`   | 4       | legacy linger-based dynamic batcher (subsumed by `step` on the serving path) |
 //! | `memory`    | 5       | Table-1/Table-2 byte accounting (resident-block bytes) + projection |
 //! | `baseline`  | 5       | the Standard Architecture comparison column |
 //! | `cortex`    | Fig. 1  | the assembled orchestrator; governs the shared [`crate::model::KvPool`] and its knobs |
@@ -19,6 +20,20 @@
 //! (paging granularity is fixed at engine construction), every agent cache
 //! is a block-table view into it, and finished side agents return their
 //! blocks for immediate reuse.
+//!
+//! Decode scheduling is tick-based since PR 4: the River/Stream lanes
+//! survive as *priorities inside a fused tick*, not as separate op
+//! streams.  Every tick the [`step::StepScheduler`] collects the next
+//! token from every runnable agent — the main agent's pending step plus
+//! one item per live side agent — and issues ONE `decode_batch` op over
+//! their paged block tables (the main step rides lane 0 at River priority
+//! while its context fits a side lane; afterwards it runs as its own
+//! River op *ahead of* the side batch, so the main agent is never queued
+//! behind side work).  Side tasks park FIFO when the batch width or the
+//! pool occupancy is saturated and are re-admitted the moment a slot
+//! frees — device ops per generated token fall from ~1.0 toward 1/B as
+//! the population grows (`benches/continuous_batch.rs` asserts this; the
+//! `/stats` endpoint exposes the tick/occupancy/park gauges live).
 //!
 //! Common prefixes are shared copy-on-write: the pool keeps a
 //! content-addressed registry of full blocks (prompt token chains via
@@ -44,12 +59,13 @@ pub mod memory;
 pub mod prism;
 pub mod router;
 pub mod scheduler;
+pub mod step;
 pub mod synapse;
 
-pub use agent::{SideContext, SideOutcome, SideTask};
+pub use agent::{AgentCache, SideAgent, SideContext, SideOutcome, SideTask, StepAgentCtx};
 pub use batcher::Batcher;
 pub use baseline::StandardArchitecture;
-pub use capacity::{Bottleneck, CapacityModel, ComputeCosts};
+pub use capacity::{Bottleneck, CapacityError, CapacityModel, ComputeCosts};
 pub use cortex::{CortexConfig, EpisodeReport, Event, WarpCortex};
 pub use gate::{Gate, GateDecision};
 pub use inject::Injector;
@@ -57,4 +73,7 @@ pub use memory::{MemKind, MemoryModel, MemoryTracker};
 pub use prism::{AgentKind, AgentTicket, Prism};
 pub use router::{AgentRole, Router, RouterConfig, Trigger};
 pub use scheduler::{StreamScheduler, TaskRunner};
+pub use step::{
+    AdmitGate, AgentSpawner, FusedExec, MainStepOut, StepConfig, StepScheduler, StepStats,
+};
 pub use synapse::{adaptive_subset, SeedMode, Synapse, SynapseSnapshot};

@@ -1,18 +1,25 @@
 //! The Stream scheduler: the worker-pool half of the River & Stream topology
-//! (paper §3.1).
+//! (paper §3.1) — the **legacy** thread-per-agent executor.  The serving
+//! path runs side agents as pollable state machines under
+//! [`super::step::StepScheduler`] (iteration-level continuous batching);
+//! this pool remains for blocking [`run_side_agent`] callers.
 //!
 //! Device-level priority lives in `runtime::device` (River ops preempt
 //! Stream ops at op granularity).  This module manages the *population*
 //! side: a bounded pool of side-agent worker threads (the paper's
 //! "just-in-time spawning" — an agent exists only while its task runs),
 //! task admission, and result collection that the Main Agent polls between
-//! its decode steps.
+//! its decode steps.  All queue/result locks are poison-tolerant
+//! ([`crate::util::sync`]): a panicking worker's claim is released by the
+//! `Claim` drop guard and its failure surfaces as a `Failed` outcome — it
+//! never cascades a poisoned mutex into later submitters.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use super::agent::{run_side_agent, SideContext, SideOutcome, SideState, SideTask};
+use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
 
 /// The function a worker runs per claimed task.  Production wraps
 /// [`run_side_agent`] (see [`StreamScheduler::new`]); tests inject stub
@@ -97,7 +104,7 @@ impl StreamScheduler {
     /// Submit a task; `false` means the queue is full (caller drops it —
     /// the paper's agents are best-effort by design).
     pub fn submit(&self, task: SideTask) -> bool {
-        let mut q = self.queue.tasks.lock().unwrap();
+        let mut q = lock_unpoisoned(&self.queue.tasks);
         if q.len() >= self.max_queue {
             self.rejected.fetch_add(1, Ordering::Relaxed);
             return false;
@@ -112,7 +119,7 @@ impl StreamScheduler {
     /// Non-blocking poll for finished side agents (the Main Agent calls
     /// this between decode steps).
     pub fn poll_results(&self) -> Vec<SideOutcome> {
-        let rx = self.results_rx.lock().unwrap();
+        let rx = lock_unpoisoned(&self.results_rx);
         let mut out = Vec::new();
         while let Ok(r) = rx.try_recv() {
             self.completed.fetch_add(1, Ordering::Relaxed);
@@ -123,7 +130,7 @@ impl StreamScheduler {
 
     /// Blocking wait for the next result with a timeout.
     pub fn wait_result(&self, timeout: std::time::Duration) -> Option<SideOutcome> {
-        let rx = self.results_rx.lock().unwrap();
+        let rx = lock_unpoisoned(&self.results_rx);
         match rx.recv_timeout(timeout) {
             Ok(r) => {
                 self.completed.fetch_add(1, Ordering::Relaxed);
@@ -142,13 +149,13 @@ impl StreamScheduler {
     /// sent, so `in_flight() == 0` additionally guarantees every produced
     /// result is already observable via `poll_results`/`wait_result`.
     pub fn in_flight(&self) -> usize {
-        let q = self.queue.tasks.lock().unwrap();
+        let q = lock_unpoisoned(&self.queue.tasks);
         self.active.load(Ordering::SeqCst) + q.len()
     }
 
     pub fn stats(&self) -> SchedulerStats {
         let (active, queued) = {
-            let q = self.queue.tasks.lock().unwrap();
+            let q = lock_unpoisoned(&self.queue.tasks);
             (self.active.load(Ordering::SeqCst), q.len())
         };
         SchedulerStats {
@@ -210,7 +217,7 @@ fn worker_loop(
 ) {
     loop {
         let task = {
-            let mut q = queue.tasks.lock().unwrap();
+            let mut q = lock_unpoisoned(&queue.tasks);
             loop {
                 if queue.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -224,7 +231,7 @@ fn worker_loop(
                     active.fetch_add(1, Ordering::SeqCst);
                     break t;
                 }
-                q = queue.cv.wait(q).unwrap();
+                q = wait_unpoisoned(&queue.cv, q);
             }
         };
         let claim = Claim(&active);

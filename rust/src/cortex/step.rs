@@ -1,0 +1,1027 @@
+//! The step scheduler: iteration-level continuous batching for main and
+//! side decode (the PR-4 tentpole).
+//!
+//! The pre-PR-4 topology gave the device a *serial* op stream: the main
+//! agent issued one blocking decode op per token from the episode thread,
+//! while side agents funnelled through the linger-based [`super::batcher`]
+//! on their own worker threads.  `capacity.rs`'s utilization model showed
+//! compute — not memory — had become the binding constraint on the paper's
+//! ">1,000 agents" claim.  The fix is the serving classic (vLLM-style
+//! continuous batching, at iteration granularity): one device-feeding loop
+//! that, every tick,
+//!
+//! 1. collects the next-token work item from every runnable agent — the
+//!    main agent's pending step plus one `(token, pos, block-table)` item
+//!    per live side agent (side agents are *pollable state machines*
+//!    ([`super::agent::SideAgent`]), not blocked threads),
+//! 2. fuses them into one [`crate::model::Engine::decode_fused`] call over
+//!    O(k) paged block tables (main rides lane 0 of the batch program at
+//!    River priority while its context fits; afterwards it runs as its own
+//!    River op *ahead of* the side batch — the main agent is never queued
+//!    behind side work),
+//! 3. fans results back: the main reply through its per-request completion
+//!    channel, side rows fed straight into each agent's state machine.
+//!
+//! Admission is capacity-aware and continuous: new side tasks park in a
+//! FIFO queue and are admitted only while the live-agent count is under
+//! `max_active` AND the admission gate (pool occupancy, in production)
+//! says a fresh side cache still fits; a finishing agent's slot is
+//! refilled on the *very next tick*, not at batch boundaries.
+//!
+//! The scheduler is engine-agnostic behind three seams — the fused
+//! executor, the agent spawner and the admission gate — so the
+//! fused-vs-sequential equivalence proptest below and
+//! `benches/continuous_batch.rs` drive the full admit/park/finish protocol
+//! host-only.  All locks on the request path are poison-tolerant
+//! ([`crate::util::sync`]): one panicking caller surfaces as its own
+//! `Err`, it does not wedge every later request.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::agent::{SideAgent, SideOutcome, SideState, SideTask};
+use crate::model::{FusedOut, FusedReq, KvCache, PagedKv, RawDecode};
+use crate::util::sync::lock_unpoisoned;
+
+/// The fused decode executor: `(main item, main cache capacity, side
+/// items, fuse_main)` → one tick's results.  Production wraps
+/// [`crate::model::Engine::decode_fused`]; tests and the
+/// continuous-batching bench inject deterministic host-only stubs.
+pub type FusedExec =
+    Arc<dyn Fn(Option<&FusedReq>, usize, &[FusedReq], bool) -> Result<FusedOut> + Send + Sync>;
+
+/// Builds a live [`SideAgent`] for an admitted task.  Production wraps
+/// [`SideAgent::spawn`] (prism registration + synapse seeding); tests use
+/// [`SideAgent::from_parts`] over bare pool caches.
+pub type AgentSpawner = Arc<dyn Fn(SideTask) -> SideAgent + Send + Sync>;
+
+/// Capacity gate consulted before each admission: `false` parks the task
+/// (retried every tick).  Production checks pool occupancy — a fresh
+/// side cache's worst-case blocks must still fit under `max_blocks`.
+pub type AdmitGate = Arc<dyn Fn() -> bool + Send + Sync>;
+
+/// Scheduler knobs (production values are derived from
+/// [`super::CortexConfig`] and the engine capacities).
+#[derive(Debug, Clone)]
+pub struct StepConfig {
+    /// Lanes of the compiled batch program (`caps.decode_batch`): the hard
+    /// per-tick fusion width.
+    pub batch_width: usize,
+    /// Rows one batch lane can hold (`caps.side_ctx`).  Decides whether a
+    /// pending main step can ride lane 0 (`len + 1 <= side_ctx`); a main
+    /// that has outgrown a lane runs as its own op and reserves NO lane —
+    /// sides keep the full width.
+    pub side_ctx: usize,
+    /// Max concurrently *decoding* side agents; beyond this, tasks park.
+    pub max_active: usize,
+    /// Max parked tasks beyond the active ones (submit backpressure).
+    pub max_parked: usize,
+    /// Ride the main step on lane 0 of the batch program while its context
+    /// fits a side-capacity lane (one device op per tick).  Off = the main
+    /// step always runs as its own River op ahead of the side batch.
+    pub fuse_main: bool,
+}
+
+/// Result of one main-agent step routed through the scheduler.
+#[derive(Debug)]
+pub struct MainStepOut {
+    pub logits: Vec<f32>,
+    pub hidden: Vec<f32>,
+}
+
+/// Live scheduler statistics (the `/stats` `step` gauges).
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    /// Side tasks accepted by `submit`.
+    pub submitted: u64,
+    /// Side-task outcomes delivered to the results channel.
+    pub completed: u64,
+    /// Side tasks rejected at submit (park queue full).
+    pub rejected_capacity: u64,
+    /// Side agents currently decoding.
+    pub active: usize,
+    /// Side tasks currently parked awaiting admission.
+    pub parked: usize,
+    /// High-water parked count.
+    pub parked_peak: usize,
+    /// Parked tasks admitted to the active set.
+    pub admitted: u64,
+    /// Fused ticks executed.
+    pub ticks: u64,
+    /// Device ops those ticks actually issued.
+    pub device_ops: u64,
+    /// Main-agent steps served.
+    pub main_steps: u64,
+    /// Side-agent steps served.
+    pub side_steps: u64,
+    /// Ticks where the main step rode the side batch in one device op.
+    pub fused_ticks: u64,
+    /// Main steps that had to wait a tick behind *another main* (never
+    /// behind side work; >0 only with concurrent episodes).
+    pub main_deferred: u64,
+}
+
+impl StepStats {
+    /// Device ops per generated token — the continuous-batching figure of
+    /// merit: ~1.0 for the serial pre-PR-4 path, → 1/B as the population
+    /// grows.
+    pub fn ops_per_token(&self) -> f64 {
+        let tokens = self.main_steps + self.side_steps;
+        if tokens == 0 {
+            0.0
+        } else {
+            self.device_ops as f64 / tokens as f64
+        }
+    }
+
+    /// Mean decoded tokens per device op (the batch-occupancy gauge;
+    /// inverse of [`StepStats::ops_per_token`]).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.device_ops == 0 {
+            0.0
+        } else {
+            (self.main_steps + self.side_steps) as f64 / self.device_ops as f64
+        }
+    }
+}
+
+struct Gauges {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    admitted: AtomicU64,
+    ticks: AtomicU64,
+    device_ops: AtomicU64,
+    main_steps: AtomicU64,
+    side_steps: AtomicU64,
+    fused_ticks: AtomicU64,
+    main_deferred: AtomicU64,
+    active: AtomicUsize,
+    parked: AtomicUsize,
+    parked_peak: AtomicUsize,
+}
+
+impl Gauges {
+    fn new() -> Gauges {
+        Gauges {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            ticks: AtomicU64::new(0),
+            device_ops: AtomicU64::new(0),
+            main_steps: AtomicU64::new(0),
+            side_steps: AtomicU64::new(0),
+            fused_ticks: AtomicU64::new(0),
+            main_deferred: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            parked: AtomicUsize::new(0),
+            parked_peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// Tasks accepted but whose outcome is not yet in the results channel.
+    fn in_flight(&self) -> usize {
+        let s = self.submitted.load(Ordering::SeqCst);
+        let c = self.completed.load(Ordering::SeqCst);
+        s.saturating_sub(c) as usize
+    }
+}
+
+struct MainReq {
+    token: i32,
+    pos: i32,
+    paged: PagedKv,
+    capacity: usize,
+    reply: mpsc::Sender<Result<RawDecode>>,
+}
+
+enum Cmd {
+    Main(MainReq),
+    Task(SideTask),
+}
+
+/// The unified step scheduler.  Share via `Arc`; one per [`super::WarpCortex`].
+pub struct StepScheduler {
+    tx: Mutex<Option<mpsc::Sender<Cmd>>>,
+    results_rx: Mutex<mpsc::Receiver<SideOutcome>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    gauges: Arc<Gauges>,
+    max_pending: usize,
+}
+
+impl StepScheduler {
+    /// Spawn the tick loop over the three seams.  Production callers build
+    /// the seams from an engine + prism/synapse (see `WarpCortex::new`);
+    /// tests and benches inject host-only stubs.
+    pub fn new(
+        mut cfg: StepConfig,
+        exec: FusedExec,
+        spawner: AgentSpawner,
+        admit: AdmitGate,
+    ) -> Arc<StepScheduler> {
+        // A zero width would collect no side items while agents sit active
+        // forever (a hot spin); one lane is the meaningful minimum.
+        cfg.batch_width = cfg.batch_width.max(1);
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (results_tx, results_rx) = mpsc::channel::<SideOutcome>();
+        let gauges = Arc::new(Gauges::new());
+        let max_pending = cfg.max_active + cfg.max_parked;
+        let g = gauges.clone();
+        let handle = std::thread::Builder::new()
+            .name("warp-step".into())
+            .spawn(move || step_loop(cfg, rx, results_tx, exec, spawner, admit, g))
+            .expect("spawn step scheduler");
+        Arc::new(StepScheduler {
+            tx: Mutex::new(Some(tx)),
+            results_rx: Mutex::new(results_rx),
+            handle: Mutex::new(Some(handle)),
+            gauges,
+            max_pending,
+        })
+    }
+
+    /// One main-agent decode step through the scheduler (blocks until the
+    /// result lands; appends the new KV row to `kv` on success).  The
+    /// request ships the O(k) block table only — sound because this caller
+    /// blocks on the reply, so the referenced blocks stay exclusively owned
+    /// by `kv` for the whole step.
+    pub fn main_step(&self, token: i32, pos: i32, kv: &mut KvCache) -> Result<MainStepOut> {
+        if kv.remaining() == 0 {
+            bail!("main_step: kv cache full");
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = MainReq {
+            token,
+            pos,
+            paged: kv.paged(),
+            capacity: kv.capacity(),
+            reply: reply_tx,
+        };
+        let tx = lock_unpoisoned(&self.tx)
+            .as_ref()
+            .cloned()
+            .ok_or_else(|| anyhow!("step scheduler shut down"))?;
+        tx.send(Cmd::Main(req))
+            .map_err(|_| anyhow!("step scheduler thread gone"))?;
+        drop(tx);
+        let raw = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("step scheduler shut down while a main step was in flight"))??;
+        kv.append_row(&raw.k_new, &raw.v_new)?;
+        Ok(MainStepOut {
+            logits: raw.logits,
+            hidden: raw.hidden,
+        })
+    }
+
+    /// Submit a side task; `false` means the park queue is full (caller
+    /// drops it — the paper's side agents are best-effort by design).
+    pub fn submit(&self, task: SideTask) -> bool {
+        // Serialize the backpressure check under the tx lock; `completed`
+        // only grows concurrently, which merely frees capacity.
+        let guard = lock_unpoisoned(&self.tx);
+        let Some(tx) = guard.as_ref() else {
+            self.gauges.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        };
+        if self.gauges.in_flight() >= self.max_pending {
+            self.gauges.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        // Count BEFORE sending so `in_flight()` can never under-report a
+        // task the loop is already processing.
+        self.gauges.submitted.fetch_add(1, Ordering::SeqCst);
+        if tx.send(Cmd::Task(task)).is_err() {
+            self.gauges.completed.fetch_add(1, Ordering::SeqCst); // net zero
+            self.gauges.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Non-blocking poll for finished side agents (the episode loop calls
+    /// this between main steps).
+    pub fn poll_results(&self) -> Vec<SideOutcome> {
+        let rx = lock_unpoisoned(&self.results_rx);
+        let mut out = Vec::new();
+        while let Ok(r) = rx.try_recv() {
+            out.push(r);
+        }
+        out
+    }
+
+    /// Blocking wait for the next side outcome with a timeout.
+    pub fn wait_result(&self, timeout: Duration) -> Option<SideOutcome> {
+        let rx = lock_unpoisoned(&self.results_rx);
+        rx.recv_timeout(timeout).ok()
+    }
+
+    /// Side tasks accepted but not yet delivered as outcomes.  The loop
+    /// sends every outcome *before* counting it completed, so
+    /// `in_flight() == 0` guarantees the outcomes are already retrievable.
+    pub fn in_flight(&self) -> usize {
+        self.gauges.in_flight()
+    }
+
+    /// Wait until no side task is active or parked (or timeout).
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while self.in_flight() > 0 {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        true
+    }
+
+    pub fn stats(&self) -> StepStats {
+        let g = &self.gauges;
+        StepStats {
+            submitted: g.submitted.load(Ordering::Relaxed),
+            completed: g.completed.load(Ordering::Relaxed),
+            rejected_capacity: g.rejected.load(Ordering::Relaxed),
+            active: g.active.load(Ordering::Relaxed),
+            parked: g.parked.load(Ordering::Relaxed),
+            parked_peak: g.parked_peak.load(Ordering::Relaxed),
+            admitted: g.admitted.load(Ordering::Relaxed),
+            ticks: g.ticks.load(Ordering::Relaxed),
+            device_ops: g.device_ops.load(Ordering::Relaxed),
+            main_steps: g.main_steps.load(Ordering::Relaxed),
+            side_steps: g.side_steps.load(Ordering::Relaxed),
+            fused_ticks: g.fused_ticks.load(Ordering::Relaxed),
+            main_deferred: g.main_deferred.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the tick loop.  In-flight main steps error out; active and
+    /// parked side tasks surface as `Failed` outcomes (delivered before the
+    /// loop exits, so a final `poll_results` still observes them).
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        let tx = lock_unpoisoned(&self.tx).take();
+        drop(tx);
+        if let Some(h) = lock_unpoisoned(&self.handle).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StepScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn deliver(results: &mpsc::Sender<SideOutcome>, gauges: &Gauges, outcome: SideOutcome) {
+    let _ = results.send(outcome);
+    // AFTER the send: in_flight() == 0 implies the outcome is retrievable.
+    gauges.completed.fetch_add(1, Ordering::SeqCst);
+}
+
+fn failed_outcome(task: SideTask, error: String) -> SideOutcome {
+    SideOutcome {
+        elapsed: task.spawned_at.elapsed(),
+        task,
+        state: SideState::Failed,
+        text: String::new(),
+        tokens: vec![],
+        hidden: vec![],
+        steps: 0,
+        synapse_version: 0,
+        error: Some(error),
+    }
+}
+
+#[allow(clippy::too_many_lines)]
+fn step_loop(
+    cfg: StepConfig,
+    rx: mpsc::Receiver<Cmd>,
+    results: mpsc::Sender<SideOutcome>,
+    exec: FusedExec,
+    spawner: AgentSpawner,
+    admit: AdmitGate,
+    gauges: Arc<Gauges>,
+) {
+    let mut active: Vec<SideAgent> = Vec::new();
+    let mut parked: VecDeque<SideTask> = VecDeque::new();
+    let mut mains: VecDeque<MainReq> = VecDeque::new();
+    // Round-robin cursor so `max_active > batch_width` populations are
+    // served fairly across ticks.
+    let mut rr: usize = 0;
+    let mut open = true;
+
+    fn enqueue(cmd: Cmd, mains: &mut VecDeque<MainReq>, parked: &mut VecDeque<SideTask>) {
+        match cmd {
+            Cmd::Main(m) => mains.push_back(m),
+            Cmd::Task(t) => parked.push_back(t),
+        }
+    }
+
+    loop {
+        // ── 1. take on new work ─────────────────────────────────────────
+        if open {
+            if active.is_empty() && parked.is_empty() && mains.is_empty() {
+                gauges.active.store(0, Ordering::Relaxed);
+                gauges.parked.store(0, Ordering::Relaxed);
+                // Fully idle: block until there is something to do.
+                match rx.recv() {
+                    Ok(cmd) => enqueue(cmd, &mut mains, &mut parked),
+                    Err(_) => open = false,
+                }
+            }
+            loop {
+                match rx.try_recv() {
+                    Ok(cmd) => enqueue(cmd, &mut mains, &mut parked),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if !open {
+            // Shutdown: fail everything still pending (delivered like any
+            // other outcome) and exit.  Episode loops drain before the
+            // orchestrator drops, so this only fires on teardown.
+            for m in mains.drain(..) {
+                let _ = m.reply.send(Err(anyhow!("step scheduler shut down")));
+            }
+            for t in parked.drain(..) {
+                deliver(&results, &gauges, failed_outcome(t, "step scheduler shut down".into()));
+            }
+            for mut a in active.drain(..) {
+                a.fail("step scheduler shut down".into());
+                deliver(&results, &gauges, a.into_outcome());
+            }
+            return;
+        }
+
+        // ── 2. continuous admission: refill freed slots every tick ──────
+        while active.len() < cfg.max_active && !parked.is_empty() && admit() {
+            let task = parked.pop_front().expect("parked is non-empty");
+            gauges.admitted.fetch_add(1, Ordering::Relaxed);
+            let agent = spawner(task);
+            if agent.is_done() {
+                // born-failed (registration/seeding error)
+                deliver(&results, &gauges, agent.into_outcome());
+            } else {
+                active.push(agent);
+            }
+        }
+        gauges.active.store(active.len(), Ordering::Relaxed);
+        gauges.parked.store(parked.len(), Ordering::Relaxed);
+        gauges.parked_peak.fetch_max(parked.len(), Ordering::Relaxed);
+
+        // ── 3. collect this tick's work items ───────────────────────────
+        let main_req = mains.pop_front();
+        let main_item = main_req.as_ref().map(|m| FusedReq {
+            token: m.token,
+            pos: m.pos,
+            paged: m.paged.clone(),
+        });
+        // Reserve lane 0 only for a main that can actually fuse; a main
+        // whose context has outgrown a side lane runs as its own op ahead
+        // of the batch, so the sides keep the full width.
+        let main_can_fuse = cfg.fuse_main
+            && main_req
+                .as_ref()
+                .map_or(false, |m| m.paged.len + 1 <= cfg.side_ctx);
+        let side_budget = if main_can_fuse {
+            cfg.batch_width.saturating_sub(1)
+        } else {
+            cfg.batch_width
+        };
+        let mut idx: Vec<usize> = Vec::new();
+        let mut sides: Vec<FusedReq> = Vec::new();
+        let n = active.len();
+        for k in 0..n {
+            if sides.len() >= side_budget {
+                break;
+            }
+            let i = (rr + k) % n;
+            if let Some((token, pos)) = active[i].next_request() {
+                sides.push(FusedReq {
+                    token,
+                    pos,
+                    paged: active[i].paged(),
+                });
+                idx.push(i);
+            }
+        }
+        if n > 0 {
+            rr = (rr + 1) % n;
+        }
+
+        if main_item.is_none() && sides.is_empty() {
+            // Nothing runnable: sweep agents that just finished; if tasks
+            // are parked behind the capacity gate, wait briefly for blocks
+            // to free (or for new commands) instead of spinning hot.
+            sweep_done(&mut active, &results, &gauges);
+            if active.is_empty() && !parked.is_empty() {
+                match rx.recv_timeout(Duration::from_millis(1)) {
+                    Ok(cmd) => enqueue(cmd, &mut mains, &mut parked),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+            }
+            continue;
+        }
+
+        // ── 4. one fused tick ───────────────────────────────────────────
+        gauges.ticks.fetch_add(1, Ordering::Relaxed);
+        if !mains.is_empty() {
+            // Only other *mains* ever wait a tick; never side work.
+            gauges
+                .main_deferred
+                .fetch_add(mains.len() as u64, Ordering::Relaxed);
+        }
+        let main_capacity = main_req.as_ref().map(|m| m.capacity).unwrap_or(0);
+        // Contain executor panics like the legacy batcher: this tick's
+        // participants get Err/Failed results, the loop keeps serving.
+        let tick = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec(main_item.as_ref(), main_capacity, &sides, cfg.fuse_main)
+        }))
+        .unwrap_or_else(|_| Err(anyhow!("fused executor panicked")));
+        match tick {
+            Ok(FusedOut {
+                main,
+                sides: side_out,
+                side_error,
+                device_ops,
+            }) => {
+                gauges.device_ops.fetch_add(device_ops, Ordering::Relaxed);
+                if device_ops == 1 && main_item.is_some() && !idx.is_empty() {
+                    gauges.fused_ticks.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Some(req) = main_req {
+                    gauges.main_steps.fetch_add(1, Ordering::Relaxed);
+                    let reply = match main {
+                        Some(raw) => Ok(raw),
+                        None => Err(anyhow!("fused executor returned no main result")),
+                    };
+                    let _ = req.reply.send(reply);
+                }
+                if let Some(msg) = side_error {
+                    // The side half of an unfused tick failed after the
+                    // main op succeeded: fail only these lanes.
+                    for slot in &idx {
+                        active[*slot].fail(format!("side batch failed: {msg}"));
+                    }
+                } else {
+                    let fed = idx.len().min(side_out.len());
+                    for (slot, raw) in idx[..fed].iter().zip(side_out) {
+                        gauges.side_steps.fetch_add(1, Ordering::Relaxed);
+                        active[*slot].feed(raw);
+                    }
+                    for slot in &idx[fed..] {
+                        active[*slot]
+                            .fail("fused executor dropped this lane's result".into());
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if let Some(req) = main_req {
+                    let _ = req.reply.send(Err(anyhow!("{msg}")));
+                }
+                for slot in &idx {
+                    active[*slot].fail(format!("fused decode failed: {msg}"));
+                }
+            }
+        }
+
+        // ── 5. sweep: deliver finished agents; slots refill next tick ───
+        sweep_done(&mut active, &results, &gauges);
+        gauges.active.store(active.len(), Ordering::Relaxed);
+    }
+}
+
+fn sweep_done(active: &mut Vec<SideAgent>, results: &mpsc::Sender<SideOutcome>, gauges: &Gauges) {
+    let mut i = 0;
+    while i < active.len() {
+        if active[i].is_done() {
+            let agent = active.swap_remove(i);
+            deliver(results, gauges, agent.into_outcome());
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Deterministic host-only stand-ins for the fused executor, shared by the
+/// equivalence proptest below and `benches/continuous_batch.rs` — ONE home
+/// for the op-accounting rules the CI thresholds assert against, so the
+/// bench can never drift from the semantics the tests pin.  Hidden: not
+/// part of the serving API.
+#[doc(hidden)]
+pub mod testing {
+    use super::*;
+    use crate::runtime::ModelConfig;
+    use crate::util::rng::XorShift;
+
+    /// Deterministic per-item decode stub: depends ONLY on
+    /// `(token, pos, view len)`, so a step's result is identical whether it
+    /// ran fused or sequential — exactly the property the real engine's
+    /// batch==single numerics tests establish on-device.
+    pub fn stub_raw(cfg: &ModelConfig, token: i32, pos: i32, len: usize) -> RawDecode {
+        let row = cfg.n_layers * cfg.n_kv_heads * cfg.head_dim;
+        let seed = 0x57E9_0000_0000_0000
+            ^ ((token as u64) << 40)
+            ^ ((pos as u64) << 20)
+            ^ len as u64;
+        let mut rng = XorShift::new(seed);
+        RawDecode {
+            logits: (0..cfg.vocab_size).map(|_| rng.range_f32(-4.0, 4.0)).collect(),
+            hidden: (0..cfg.d_model).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+            k_new: (0..row).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+            v_new: (0..row).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+        }
+    }
+
+    /// Host-only fused executor mirroring [`crate::model::Engine::decode_fused`]'s
+    /// op accounting (1 op fused / sides-only / main-only, 2 when an
+    /// unfusable main runs ahead of the side batch).
+    pub fn stub_exec(cfg: ModelConfig, side_ctx: usize, batch_width: usize) -> FusedExec {
+        Arc::new(move |main, _main_cap, sides, fuse_main| {
+            if main.is_none() && sides.is_empty() {
+                anyhow::bail!("empty tick");
+            }
+            let main_out = main.map(|m| stub_raw(&cfg, m.token, m.pos, m.paged.len));
+            let side_out: Vec<RawDecode> = sides
+                .iter()
+                .map(|s| stub_raw(&cfg, s.token, s.pos, s.paged.len))
+                .collect();
+            let fused = match main {
+                None => true,
+                Some(m) => {
+                    fuse_main && m.paged.len + 1 <= side_ctx && sides.len() + 1 <= batch_width
+                }
+            };
+            let device_ops = if main.is_some() && !sides.is_empty() && !fused {
+                2
+            } else {
+                1
+            };
+            Ok(FusedOut {
+                main: main_out,
+                sides: side_out,
+                side_error: None,
+                device_ops,
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::{stub_exec, stub_raw};
+    use super::*;
+    use crate::cortex::agent::AgentCache;
+    use crate::cortex::router::AgentRole;
+    use crate::model::{KvPool, KvPoolConfig};
+    use crate::runtime::ModelConfig;
+    use crate::text::{SamplerConfig, Tokenizer};
+    use crate::util::proptest::check;
+    use std::sync::atomic::AtomicBool;
+    use std::time::Instant;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 16,
+            vocab_size: 260,
+            head_dim: 4,
+            rope_theta: 1e4,
+            param_count: 0,
+        }
+    }
+
+    fn task(id: u64, payload: &str) -> SideTask {
+        SideTask {
+            id,
+            role: AgentRole::Verify,
+            payload: payload.into(),
+            main_pos: 0,
+            spawned_at: Instant::now(),
+        }
+    }
+
+    fn sampler_cfg(seed: u64) -> SamplerConfig {
+        SamplerConfig {
+            temperature: 0.8,
+            top_k: 20,
+            top_p: 0.9,
+            repetition_penalty: 1.1,
+            repetition_window: 16,
+            seed,
+        }
+    }
+
+    /// Spawner over bare pool caches: prompt ids derived from the payload,
+    /// exactly what the sequential reference reconstructs per task.
+    fn bare_spawner(
+        pool: Arc<KvPool>,
+        side_ctx: usize,
+        gen_budget: usize,
+        seed: u64,
+    ) -> AgentSpawner {
+        Arc::new(move |t: SideTask| {
+            let prompt_ids = Tokenizer::new().encode(&t.payload, false);
+            SideAgent::from_parts(
+                t,
+                AgentCache::Bare(pool.new_cache(side_ctx)),
+                0,
+                7,
+                prompt_ids,
+                gen_budget,
+                sampler_cfg(seed),
+            )
+        })
+    }
+
+    /// Run one agent to completion against the per-item stub, sequentially
+    /// (one device op per step) — the bit-identical reference.
+    fn run_sequential(cfg: &ModelConfig, agent: &mut SideAgent) -> u64 {
+        let mut ops = 0u64;
+        while let Some((token, pos)) = agent.next_request() {
+            let len = agent.paged().len;
+            agent.feed(stub_raw(cfg, token, pos, len));
+            ops += 1;
+        }
+        ops
+    }
+
+    fn assert_outcomes_match(got: &SideOutcome, want: &SideOutcome) {
+        assert_eq!(got.task.id, want.task.id);
+        assert_eq!(got.state, want.state, "task {}", want.task.id);
+        assert_eq!(got.text, want.text, "task {}", want.task.id);
+        assert_eq!(got.tokens, want.tokens, "task {}", want.task.id);
+        assert_eq!(got.hidden, want.hidden, "task {}", want.task.id);
+        assert_eq!(got.steps, want.steps, "task {}", want.task.id);
+        assert_eq!(got.error, want.error, "task {}", want.task.id);
+    }
+
+    #[test]
+    fn completes_tasks_and_fuses_ticks() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let side_ctx = 64;
+        let sched = StepScheduler::new(
+            StepConfig { batch_width: 4, side_ctx: 64, max_active: 4, max_parked: 16, fuse_main: true },
+            stub_exec(cfg.clone(), side_ctx, 4),
+            bare_spawner(pool, side_ctx, 8, 3),
+            Arc::new(|| true),
+        );
+        for i in 0..6u64 {
+            assert!(sched.submit(task(i, "check the cache")));
+        }
+        assert!(sched.drain(Duration::from_secs(5)), "tasks never finished");
+        let outcomes = sched.poll_results();
+        assert_eq!(outcomes.len(), 6);
+        let st = sched.stats();
+        assert_eq!(st.completed, 6);
+        assert!(st.side_steps > 0);
+        // continuous batching must beat one-op-per-token
+        assert!(
+            st.device_ops < st.side_steps,
+            "no fusion happened: {} ops for {} steps",
+            st.device_ops,
+            st.side_steps
+        );
+        sched.shutdown();
+    }
+
+    #[test]
+    fn park_queue_backpressure_rejects_and_resumes_fifo() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = gate.clone();
+        let sched = StepScheduler::new(
+            StepConfig { batch_width: 2, side_ctx: 64, max_active: 1, max_parked: 2, fuse_main: true },
+            stub_exec(cfg.clone(), 64, 2),
+            bare_spawner(pool, 64, 4, 1),
+            Arc::new(move || g.load(Ordering::SeqCst)),
+        );
+        // Gate closed: everything parks; the 4th submit exceeds
+        // max_active + max_parked and is rejected.
+        assert!(sched.submit(task(1, "a")));
+        assert!(sched.submit(task(2, "b")));
+        assert!(sched.submit(task(3, "c")));
+        assert!(!sched.submit(task(4, "d")), "park queue must backpressure");
+        assert_eq!(sched.stats().rejected_capacity, 1);
+        // Nothing admitted while the capacity gate is closed.
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(sched.stats().admitted, 0);
+        assert!(sched.stats().parked >= 2, "tasks should be parked");
+        // Open the gate: all three run and finish, FIFO.
+        gate.store(true, Ordering::SeqCst);
+        assert!(sched.drain(Duration::from_secs(5)), "parked tasks never resumed");
+        let outcomes = sched.poll_results();
+        assert_eq!(outcomes.len(), 3);
+        assert_eq!(
+            outcomes.iter().map(|o| o.task.id).collect::<Vec<_>>(),
+            vec![1, 2, 3],
+            "admission must resume FIFO (max_active=1 serializes completion)"
+        );
+        sched.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fails_pending_work_but_delivers_outcomes() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let sched = StepScheduler::new(
+            StepConfig { batch_width: 2, side_ctx: 64, max_active: 1, max_parked: 8, fuse_main: true },
+            stub_exec(cfg.clone(), 64, 2),
+            bare_spawner(pool, 64, 4, 1),
+            Arc::new(|| false), // never admit: tasks stay parked
+        );
+        assert!(sched.submit(task(1, "x")));
+        assert!(sched.submit(task(2, "y")));
+        sched.shutdown();
+        let outcomes = sched.poll_results();
+        assert_eq!(outcomes.len(), 2, "parked tasks must surface on shutdown");
+        for o in &outcomes {
+            assert_eq!(o.state, SideState::Failed);
+            assert!(o.error.as_deref().unwrap().contains("shut down"));
+        }
+        // post-shutdown requests error out instead of hanging
+        let mut kv = KvPool::new(&tiny_cfg(), KvPoolConfig::default()).new_cache(64);
+        assert!(sched.main_step(65, 0, &mut kv).is_err());
+        assert!(!sched.submit(task(3, "z")));
+    }
+
+    /// A `side_error` tick (the engine's unfused 2-op path: main op
+    /// succeeded, side batch failed) must fail ONLY the side lanes that
+    /// were in the tick — and the scheduler keeps serving afterwards.
+    #[test]
+    fn side_error_fails_only_that_ticks_lanes() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let poisoned = Arc::new(AtomicBool::new(true));
+        let exec: FusedExec = {
+            let cfg = cfg.clone();
+            let poisoned = poisoned.clone();
+            Arc::new(move |main, _mc, sides, _fuse| {
+                if poisoned.load(Ordering::SeqCst) && !sides.is_empty() {
+                    return Ok(FusedOut {
+                        main: main.map(|m| stub_raw(&cfg, m.token, m.pos, m.paged.len)),
+                        sides: Vec::new(),
+                        side_error: Some("injected side fault".into()),
+                        device_ops: 2,
+                    });
+                }
+                let side_out = sides
+                    .iter()
+                    .map(|s| stub_raw(&cfg, s.token, s.pos, s.paged.len))
+                    .collect();
+                Ok(FusedOut {
+                    main: main.map(|m| stub_raw(&cfg, m.token, m.pos, m.paged.len)),
+                    sides: side_out,
+                    side_error: None,
+                    device_ops: 1,
+                })
+            })
+        };
+        let sched = StepScheduler::new(
+            StepConfig { batch_width: 4, side_ctx: 64, max_active: 4, max_parked: 8, fuse_main: true },
+            exec,
+            bare_spawner(pool.clone(), 64, 4, 9),
+            Arc::new(|| true),
+        );
+        // Both agents land in a poisoned tick: Failed, with the side-batch
+        // message — while a concurrent main step still succeeds.
+        assert!(sched.submit(task(1, "alpha")));
+        assert!(sched.submit(task(2, "beta")));
+        let mut main_kv = pool.new_cache(128);
+        sched.main_step(5, 0, &mut main_kv).expect("main must survive a side fault");
+        assert!(sched.drain(Duration::from_secs(5)));
+        let got = sched.poll_results();
+        assert_eq!(got.len(), 2);
+        for o in &got {
+            assert_eq!(o.state, SideState::Failed);
+            assert!(o.error.as_deref().unwrap().contains("side batch failed"), "{:?}", o.error);
+        }
+        // Heal the executor: the scheduler keeps serving new tasks.
+        poisoned.store(false, Ordering::SeqCst);
+        assert!(sched.submit(task(3, "gamma")));
+        assert!(sched.drain(Duration::from_secs(5)));
+        let ok = sched.poll_results();
+        assert_eq!(ok.len(), 1);
+        assert!(ok[0].error.is_none(), "{:?}", ok[0].error);
+        sched.shutdown();
+    }
+
+    /// The acceptance-criteria proptest: fused scheduling is bit-identical
+    /// to the sequential per-agent path across random admit/park/finish
+    /// interleavings (random widths, budgets, capacity-gate flaps and
+    /// interleaved main steps).
+    #[test]
+    fn fused_equals_sequential_across_interleavings() {
+        check("step scheduler ≡ sequential decode", 40, |g| {
+            let cfg = tiny_cfg();
+            let pool = KvPool::new(
+                &cfg,
+                KvPoolConfig { block_tokens: 8, ..Default::default() },
+            );
+            let side_ctx = 64;
+            let batch_width = g.usize_in(1..6);
+            let max_active = g.usize_in(1..6);
+            let fuse_main = g.bool();
+            let n_tasks = g.usize_in(1..9);
+            let gen_budget = g.usize_in(1..10);
+            let seed = g.usize_in(1..1000) as u64;
+            let main_steps = g.usize_in(0..12);
+
+            // A capacity gate that flaps (deterministically) to exercise
+            // parking + FIFO resume; numerics must be unaffected.
+            let flap = Arc::new(AtomicU64::new(0));
+            let admit: AdmitGate = {
+                let flap = flap.clone();
+                Arc::new(move || flap.fetch_add(1, Ordering::Relaxed) % 3 != 1)
+            };
+            let sched = StepScheduler::new(
+                StepConfig { batch_width, side_ctx, max_active, max_parked: n_tasks + 1, fuse_main },
+                stub_exec(cfg.clone(), side_ctx, batch_width),
+                bare_spawner(pool.clone(), side_ctx, gen_budget, seed),
+                admit,
+            );
+
+            let payloads: Vec<String> =
+                (0..n_tasks).map(|i| format!("task {i} {}", g.usize_in(0..50))).collect();
+            // Interleave submissions with main steps against a live cache.
+            let mut main_kv = pool.new_cache(128);
+            let mut twin_kv = pool.new_cache(128);
+            let mut main_outs = Vec::new();
+            let mut submitted = 0usize;
+            for step in 0..main_steps.max(n_tasks) {
+                if submitted < n_tasks {
+                    crate::prop_assert!(
+                        sched.submit(task(submitted as u64 + 1, &payloads[submitted])),
+                        "submit {submitted} rejected below the bound"
+                    );
+                    submitted += 1;
+                }
+                if step < main_steps {
+                    let tok = (step % 200) as i32;
+                    let pos = main_kv.len() as i32;
+                    let out = sched
+                        .main_step(tok, pos, &mut main_kv)
+                        .map_err(|e| format!("main step failed: {e:#}"))?;
+                    main_outs.push(out);
+                }
+            }
+            crate::prop_assert!(
+                sched.drain(Duration::from_secs(10)),
+                "scheduler never drained (width {batch_width}, active {max_active})"
+            );
+            let mut got = sched.poll_results();
+            got.sort_by_key(|o| o.task.id);
+            crate::prop_assert!(got.len() == n_tasks, "lost outcomes: {} of {n_tasks}", got.len());
+            let st = sched.stats();
+            crate::prop_assert!(st.main_deferred == 0, "single-main runs must never defer mains");
+            sched.shutdown();
+
+            // Sequential reference: identical parts, one op per step.
+            for (i, payload) in payloads.iter().enumerate() {
+                let t = task(i as u64 + 1, payload);
+                let prompt_ids = Tokenizer::new().encode(payload, false);
+                let mut reference = SideAgent::from_parts(
+                    t,
+                    AgentCache::Bare(pool.new_cache(side_ctx)),
+                    0,
+                    7,
+                    prompt_ids,
+                    gen_budget,
+                    sampler_cfg(seed),
+                );
+                run_sequential(&cfg, &mut reference);
+                assert_outcomes_match(&got[i], &reference.into_outcome());
+            }
+            // Main chain: bit-identical to the direct per-step stub path.
+            for (step, out) in main_outs.iter().enumerate() {
+                let tok = (step % 200) as i32;
+                let pos = twin_kv.len() as i32;
+                let want = stub_raw(&cfg, tok, pos, twin_kv.len());
+                twin_kv
+                    .append_row(&want.k_new, &want.v_new)
+                    .map_err(|e| format!("twin append: {e:#}"))?;
+                crate::prop_assert!(out.logits == want.logits, "main logits diverged at step {step}");
+                crate::prop_assert!(out.hidden == want.hidden, "main hidden diverged at step {step}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -20,8 +20,20 @@
 //!   eviction of parked entries under the pool cap), the Topological
 //!   Synapse buffer ([`cortex::synapse`]), the Cortex Router
 //!   ([`cortex::router`]), the Validation Gate ([`cortex::gate`]),
-//!   Referential Injection ([`cortex::inject`]) and the River & Stream
-//!   scheduler ([`runtime::device`] lanes + [`cortex::scheduler`]).
+//!   Referential Injection ([`cortex::inject`]) and the step scheduler
+//!   ([`cortex::step`]): iteration-level continuous batching that fuses
+//!   the main agent's and every side agent's next decode step into one
+//!   device op per tick over paged block tables ([`runtime::device`]
+//!   lanes survive as priorities *inside* the tick — the main step rides
+//!   lane 0 at River priority or runs ahead of the side batch, never
+//!   behind it), with capacity-aware FIFO admission that parks side tasks
+//!   when the batch width or pool occupancy saturates and refills freed
+//!   slots on the very next tick.
+//!
+//! Device ops per generated token fall from ~1.0 (the old serial op
+//! stream) toward 1/B as the agent population grows —
+//! `benches/continuous_batch.rs` asserts this and the `/stats` endpoint
+//! exposes the tick/batch-occupancy/park gauges live.
 //!
 //! Memory accounting follows block ownership: each agent's `MainKv`/
 //! `SideKv` charge counts only its *private* blocks, registry-shared

@@ -68,6 +68,51 @@ pub struct DecodeOut {
     pub exec_ns: u64,
 }
 
+/// Raw output of one paged decode step: everything a caller needs to append
+/// the freshly produced row and continue, without the engine touching any
+/// `KvCache`.  The step scheduler fans these back to per-agent completion
+/// queues; the owning agent appends the row (which writes it through to the
+/// device copy).
+#[derive(Debug)]
+pub struct RawDecode {
+    /// `[V]` next-token logits.
+    pub logits: Vec<f32>,
+    /// `[D]` final hidden state.
+    pub hidden: Vec<f32>,
+    /// `[L, KV, hd]` new K row.
+    pub k_new: Vec<f32>,
+    /// `[L, KV, hd]` new V row.
+    pub v_new: Vec<f32>,
+}
+
+/// One agent's work item in a fused decode tick: the next token, its RoPE
+/// position and the O(k) paged view of the agent's cache.
+#[derive(Debug, Clone)]
+pub struct FusedReq {
+    pub token: i32,
+    pub pos: i32,
+    pub paged: PagedKv,
+}
+
+/// Result of one fused decode tick ([`Engine::decode_fused`]).
+#[derive(Debug)]
+pub struct FusedOut {
+    /// Result for the main item (present iff a main item was submitted).
+    pub main: Option<RawDecode>,
+    /// One result per side item, in submission order (empty when
+    /// `side_error` is set).
+    pub sides: Vec<RawDecode>,
+    /// Set when the tick's side half failed while the main half succeeded
+    /// (possible only on the unfused 2-op path, where main runs its own op
+    /// first): the scheduler fails the side lanes and the main episode
+    /// continues — a side-only device fault must not abort the River.
+    pub side_error: Option<String>,
+    /// Device ops the tick actually issued: 1 when fully fused, 2 when the
+    /// main context no longer fits a batch lane and runs its own (River)
+    /// op ahead of the side batch.
+    pub device_ops: u64,
+}
+
 /// Output of a synapse extraction (§3.3).
 #[derive(Debug, Clone)]
 pub struct SynapseOut {
@@ -335,27 +380,7 @@ impl Engine {
         if kv.remaining() == 0 {
             bail!("decode: kv cache full");
         }
-        // Tier dispatch: smallest compiled capacity that (a) holds the rows
-        // the step must attend over and (b) does not exceed this cache's
-        // own capacity (so side caches use the side program).
-        let needed = kv.len() + 1;
-        let (tier, id) = self
-            .ids
-            .decode_tiers
-            .iter()
-            .find(|(c, _)| *c >= needed && *c <= kv.capacity())
-            .copied()
-            .or_else(|| {
-                self.ids
-                    .decode_tiers
-                    .iter()
-                    .find(|(c, _)| *c == kv.capacity())
-                    .copied()
-            })
-            .ok_or_else(|| {
-                anyhow::anyhow!("no decode tier for cache capacity {}", kv.capacity())
-            })?;
-        let _ = id;
+        let (tier, _id) = self.select_decode_tier(kv.len() + 1, kv.capacity())?;
         self.decode_at_tier(token, pos, kv, tier, lane)
     }
 
@@ -456,6 +481,242 @@ impl Engine {
             k_new.into_f32()?,
             v_new.into_f32()?,
         ))
+    }
+
+    /// The tier dispatcher shared by [`Engine::decode`] and
+    /// [`Engine::decode_raw`]: the smallest compiled capacity that (a)
+    /// holds the rows the step must attend over and (b) does not exceed
+    /// the cache's own capacity (so side caches use the side program),
+    /// falling back to the exact-capacity program.  One home, so the
+    /// scheduler-routed path can never drift from the in-thread one.
+    fn select_decode_tier(&self, needed: usize, capacity: usize) -> Result<(usize, ProgramId)> {
+        self.ids
+            .decode_tiers
+            .iter()
+            .find(|(c, _)| *c >= needed && *c <= capacity)
+            .copied()
+            .or_else(|| {
+                self.ids
+                    .decode_tiers
+                    .iter()
+                    .find(|(c, _)| *c == capacity)
+                    .copied()
+            })
+            .ok_or_else(|| anyhow::anyhow!("no decode tier for cache capacity {capacity}"))
+    }
+
+    /// One tier-dispatched decode step over a paged view, without touching
+    /// any `KvCache` — the step scheduler's main-lane building block.
+    ///
+    /// Tier selection matches [`Engine::decode`] exactly (`capacity` plays
+    /// the role of `kv.capacity()` — both go through
+    /// [`Engine::select_decode_tier`]), so a main-agent step routed through
+    /// the scheduler hits the same compiled program as the old in-thread
+    /// `engine.decode` call.  The caller appends the returned row.
+    pub fn decode_raw(
+        &self,
+        token: i32,
+        pos: i32,
+        paged: &PagedKv,
+        capacity: usize,
+        lane: Lane,
+    ) -> Result<RawDecode> {
+        let (tier, id) = self.select_decode_tier(paged.len + 1, capacity)?;
+        if paged.len >= tier {
+            bail!("decode_raw: {} rows do not fit tier {tier}", paged.len);
+        }
+        let (k_up, v_up) = self.pool.dev_gather_prefix(&paged.table, paged.len, tier)?;
+        let shape = vec![
+            self.cfg.n_layers,
+            tier,
+            self.cfg.n_kv_heads,
+            self.cfg.head_dim,
+        ];
+        let out = self.device.call(
+            id,
+            vec![
+                HostTensor::scalar_i32(token),
+                HostTensor::scalar_i32(pos),
+                HostTensor::f32(k_up, shape.clone()),
+                HostTensor::f32(v_up, shape),
+                HostTensor::scalar_i32(paged.len as i32),
+            ],
+            lane,
+        )?;
+        let [logits, hidden, k_new, v_new]: [HostTensor; 4] = take4(out.outputs)?;
+        Ok(RawDecode {
+            logits: logits.into_f32()?,
+            hidden: hidden.into_f32()?,
+            k_new: k_new.into_f32()?,
+            v_new: v_new.into_f32()?,
+        })
+    }
+
+    /// One step-scheduler tick: at most one main item plus any number of
+    /// side items (≤ the batch width), fused into as few device ops as the
+    /// compiled programs allow — the mixed-lane entry point behind
+    /// [`crate::cortex::StepScheduler`].
+    ///
+    /// Fusion rules, in priority order:
+    /// * main + sides, and the main context still fits a batch lane
+    ///   (`len + 1 <= side_ctx`) with `fuse_main` on → ONE `decode_batch`
+    ///   op on the River lane, main in lane 0;
+    /// * main + sides otherwise → the main step runs FIRST as its own
+    ///   tier-dispatched River op, then one side batch on Stream (2 ops —
+    ///   the main agent is never queued behind side work);
+    /// * main only → one tier-dispatched River op;
+    /// * sides only → one batch op on Stream (or the cheaper single-decode
+    ///   program for a lone straggler).
+    pub fn decode_fused(
+        &self,
+        main: Option<&FusedReq>,
+        main_capacity: usize,
+        sides: &[FusedReq],
+        fuse_main: bool,
+    ) -> Result<FusedOut> {
+        let b = self.caps.decode_batch;
+        if main.is_none() && sides.is_empty() {
+            bail!("decode_fused: empty tick");
+        }
+        if sides.len() > b {
+            bail!("decode_fused: {} side items exceed batch width {b}", sides.len());
+        }
+        let cs = self.caps.side_ctx;
+
+        // Sides only: one Stream op.
+        let Some(m) = main else {
+            let sides_out = self.run_side_batch(sides)?;
+            return Ok(FusedOut {
+                main: None,
+                sides: sides_out,
+                side_error: None,
+                device_ops: 1,
+            });
+        };
+        if sides.is_empty() {
+            let raw = self.decode_raw(m.token, m.pos, &m.paged, main_capacity, Lane::River)?;
+            return Ok(FusedOut {
+                main: Some(raw),
+                sides: Vec::new(),
+                side_error: None,
+                device_ops: 1,
+            });
+        }
+
+        let main_fits = fuse_main && m.paged.len + 1 <= cs && sides.len() + 1 <= b;
+        if main_fits {
+            // The fully fused tick: main rides lane 0 of the batch program,
+            // and the whole op runs at River priority.
+            let n = sides.len() + 1;
+            let mut tokens = Vec::with_capacity(n);
+            let mut pos = Vec::with_capacity(n);
+            let mut views = Vec::with_capacity(n);
+            tokens.push(m.token);
+            pos.push(m.pos);
+            views.push(m.paged.clone());
+            for s in sides {
+                tokens.push(s.token);
+                pos.push(s.pos);
+                views.push(s.paged.clone());
+            }
+            let mut results = match self.decode_batch_raw(n, tokens, pos, &views, Lane::River) {
+                Ok(r) => r,
+                Err(e) => {
+                    // A side lane's fault (bad table, gather error) must
+                    // not sink the River: rerun the main step alone and
+                    // report the side half failed — the same isolation the
+                    // unfused path below provides.  Nothing was appended
+                    // by the failed call, so the rerun is side-effect-safe.
+                    let main_out =
+                        self.decode_raw(m.token, m.pos, &m.paged, main_capacity, Lane::River)?;
+                    return Ok(FusedOut {
+                        main: Some(main_out),
+                        sides: Vec::new(),
+                        side_error: Some(format!("{e:#}")),
+                        device_ops: 2,
+                    });
+                }
+            };
+            let side_out: Vec<RawDecode> = results
+                .drain(1..)
+                .map(|(logits, hidden, k_new, v_new)| RawDecode {
+                    logits,
+                    hidden,
+                    k_new,
+                    v_new,
+                })
+                .collect();
+            let (logits, hidden, k_new, v_new) = results.pop().expect("lane 0 is the main item");
+            return Ok(FusedOut {
+                main: Some(RawDecode {
+                    logits,
+                    hidden,
+                    k_new,
+                    v_new,
+                }),
+                sides: side_out,
+                side_error: None,
+                device_ops: 1,
+            });
+        }
+
+        // Main no longer fits a side-capacity lane: its own River op runs
+        // FIRST (priority admission), then the side batch on Stream.  A
+        // side-batch failure after a successful main op is reported in
+        // `side_error`, NOT as a tick error — the main result must reach
+        // the episode (the legacy paths isolated side faults to side
+        // agents, and so does the scheduler).
+        let main_out = self.decode_raw(m.token, m.pos, &m.paged, main_capacity, Lane::River)?;
+        match self.run_side_batch(sides) {
+            Ok(sides_out) => Ok(FusedOut {
+                main: Some(main_out),
+                sides: sides_out,
+                side_error: None,
+                device_ops: 2,
+            }),
+            Err(e) => Ok(FusedOut {
+                main: Some(main_out),
+                sides: Vec::new(),
+                side_error: Some(format!("{e:#}")),
+                device_ops: 2,
+            }),
+        }
+    }
+
+    /// One device op over side items only: the cheaper single-decode
+    /// program for a lone straggler, the batch program otherwise.  Shared
+    /// by [`Engine::decode_fused`] and the legacy batcher's executor.
+    pub fn run_side_batch(&self, sides: &[FusedReq]) -> Result<Vec<RawDecode>> {
+        if sides.len() == 1 {
+            let s = &sides[0];
+            let (logits, hidden, k_new, v_new) =
+                self.decode_side_raw(s.token, s.pos, &s.paged, Lane::Stream)?;
+            return Ok(vec![RawDecode {
+                logits,
+                hidden,
+                k_new,
+                v_new,
+            }]);
+        }
+        let n = sides.len();
+        let mut tokens = Vec::with_capacity(n);
+        let mut pos = Vec::with_capacity(n);
+        let mut views = Vec::with_capacity(n);
+        for s in sides {
+            tokens.push(s.token);
+            pos.push(s.pos);
+            views.push(s.paged.clone());
+        }
+        let results = self.decode_batch_raw(n, tokens, pos, &views, Lane::Stream)?;
+        Ok(results
+            .into_iter()
+            .map(|(logits, hidden, k_new, v_new)| RawDecode {
+                logits,
+                hidden,
+                k_new,
+                v_new,
+            })
+            .collect())
     }
 
     /// Batched side-agent decode over paged views (the dynamic batcher's

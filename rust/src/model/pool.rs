@@ -464,6 +464,29 @@ impl KvPool {
         self.rent_locked(&mut st)
     }
 
+    /// Admission-gate view of capacity: can `blocks` fresh private blocks
+    /// still be rented under the `max_blocks` cap?  Mirrors
+    /// [`KvPool::rent_ref`]'s own headroom rules: fresh allocations up to
+    /// the cap, PLUS one LRU eviction per parked registry entry
+    /// (registered, refcount 0) once at it — a warm prefix registry holds
+    /// `blocks_live` near the cap *by design* and must not read as
+    /// exhaustion (it would starve side-agent admission forever).  Always
+    /// true when uncapped.
+    pub fn can_admit(&self, blocks: usize) -> bool {
+        let max = self.max_blocks.load(Ordering::Relaxed);
+        if max == 0 {
+            return true;
+        }
+        let st = self.state.lock().unwrap();
+        let parked = st
+            .slots
+            .iter()
+            .flatten()
+            .filter(|b| b.refs == 0 && b.hash.is_some())
+            .count();
+        max.saturating_sub(st.live) + parked >= blocks
+    }
+
     fn rent_locked(&self, st: &mut PoolState) -> Result<u32> {
         // The cap binds on LIVE blocks, so it must be checked before the
         // free list too — parked free blocks don't grant cap headroom.
@@ -1264,6 +1287,40 @@ mod tests {
         assert!((s.fragmentation() - 0.25).abs() < 1e-9, "{}", s.fragmentation());
         p.note_rows_removed(6);
         assert_eq!(p.stats().rows_live, 0);
+    }
+
+    #[test]
+    fn can_admit_counts_parked_registry_blocks_as_headroom() {
+        // Uncapped: always admissible.
+        assert!(pool(4, 0).can_admit(1_000_000));
+
+        let p = pool(4, 2);
+        assert!(p.can_admit(2));
+        assert!(!p.can_admit(3), "beyond the cap even when empty");
+        let keys: Vec<i32> = (0..8).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        let a0 = p.rent_ref().unwrap();
+        let a1 = p.rent_ref().unwrap();
+        // Fully referenced at the cap: nothing rentable.
+        assert!(!p.can_admit(1));
+        // Register + drop every reference: the blocks PARK (still live,
+        // still hittable) — but a rent would LRU-evict them, so the
+        // admission gate must read them as headroom, not exhaustion (the
+        // warm-registry starvation bug).
+        p.write_run(a0, 0, 4, 0, 8, &rows(&p, 8, 1.0), &rows(&p, 8, -1.0))
+            .unwrap();
+        p.write_run(a1, 0, 4, 4, 8, &rows(&p, 8, 1.0), &rows(&p, 8, -1.0))
+            .unwrap();
+        assert!(p.register_block(a0, hashes[0], &keys[..4]));
+        assert!(p.register_block(a1, hashes[1], &keys[4..8]));
+        p.release_ref(a0);
+        p.release_ref(a1);
+        assert_eq!(p.stats().blocks_live, 2, "parked, not freed");
+        assert!(p.can_admit(2), "parked registry entries are evictable headroom");
+        assert!(!p.can_admit(3));
+        // ...and the promise is real: both rents succeed via LRU eviction.
+        assert!(p.rent_ref().is_ok());
+        assert!(p.rent_ref().is_ok());
     }
 
     #[test]

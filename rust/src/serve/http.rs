@@ -2,11 +2,42 @@
 //!
 //! Supports exactly what the API needs: GET/POST, Content-Length bodies,
 //! and JSON responses.  Not a general web server — a serving substrate.
+//!
+//! Body handling is defensive: the `Content-Length` header is *validated*,
+//! never trusted for the read allocation.  A missing header on a
+//! body-carrying method, a non-numeric or negative value, or anything over
+//! the [`MAX_BODY_BYTES`] hard cap surfaces as a typed [`BadRequest`]
+//! error so the server answers `400` instead of allocating
+//! attacker-controlled buffers (the pre-PR-4 parser mapped a *negative*
+//! length to 0 via `parse::<usize>().ok()` and silently read no body, and
+//! dropped the connection without a response on oversized ones).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
+
+/// Hard cap on request bodies.  Generous for `/generate` prompts (the
+/// only body-carrying endpoint) while bounding the per-connection
+/// allocation an arbitrary client can force.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// A malformed request the server answers with `400 Bad Request`
+/// (distinct from transport errors, which just drop the connection).
+#[derive(Debug)]
+pub struct BadRequest(pub String);
+
+impl std::fmt::Display for BadRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bad request: {}", self.0)
+    }
+}
+
+impl std::error::Error for BadRequest {}
+
+fn bad(msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(BadRequest(msg.into()))
+}
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -40,7 +71,7 @@ impl HttpRequest {
         let method = parts.next().unwrap_or("").to_uppercase();
         let path = parts.next().unwrap_or("/").to_string();
         if method.is_empty() {
-            bail!("malformed request line: {line:?}");
+            return Err(bad(format!("malformed request line: {line:?}")));
         }
 
         let mut headers = Vec::new();
@@ -58,14 +89,39 @@ impl HttpRequest {
             }
         }
 
-        let len: usize = headers
+        // Validate Content-Length instead of trusting it for the read
+        // allocation: absent on a body-carrying method, non-numeric,
+        // negative or over the hard cap are all 400s, not allocations.
+        let declared = headers
             .iter()
             .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
-            .and_then(|(_, v)| v.parse().ok())
-            .unwrap_or(0);
-        if len > 16 * 1024 * 1024 {
-            bail!("request body too large: {len}");
-        }
+            .map(|(_, v)| v.as_str());
+        let len = match declared {
+            None => {
+                if matches!(method.as_str(), "POST" | "PUT" | "PATCH") {
+                    return Err(bad(format!("{method} request without Content-Length")));
+                }
+                0
+            }
+            Some(raw) => {
+                let n: i64 = raw
+                    .trim()
+                    .parse()
+                    .map_err(|_| bad(format!("invalid Content-Length: {raw:?}")))?;
+                if n < 0 {
+                    return Err(bad(format!("negative Content-Length: {n}")));
+                }
+                // Compare BEFORE narrowing: on 32-bit targets an `as usize`
+                // cast of a >= 2^32 value truncates under the cap and
+                // desyncs body framing.
+                if n > MAX_BODY_BYTES as i64 {
+                    return Err(bad(format!(
+                        "request body too large: {n} bytes (cap {MAX_BODY_BYTES})"
+                    )));
+                }
+                n as usize
+            }
+        };
         let mut body = vec![0u8; len];
         if len > 0 {
             reader.read_exact(&mut body)?;
@@ -115,7 +171,7 @@ mod tests {
     use super::*;
     use std::net::{TcpListener, TcpStream};
 
-    fn roundtrip(raw: &str) -> Option<HttpRequest> {
+    fn roundtrip_res(raw: &str) -> Result<Option<HttpRequest>> {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let raw = raw.to_string();
@@ -125,9 +181,26 @@ mod tests {
             s.shutdown(std::net::Shutdown::Write).unwrap();
         });
         let (mut conn, _) = listener.accept().unwrap();
-        let req = HttpRequest::read_from(&mut conn).unwrap();
+        let req = HttpRequest::read_from(&mut conn);
         client.join().unwrap();
         req
+    }
+
+    fn roundtrip(raw: &str) -> Option<HttpRequest> {
+        roundtrip_res(raw).unwrap()
+    }
+
+    /// The error must be the typed 400 marker, not a transport error.
+    fn expect_bad_request(raw: &str, needle: &str) {
+        let err = roundtrip_res(raw).unwrap_err();
+        let bad = err
+            .downcast_ref::<BadRequest>()
+            .unwrap_or_else(|| panic!("not a BadRequest: {err:#}"));
+        assert!(
+            bad.0.contains(needle),
+            "expected {needle:?} in {:?}",
+            bad.0
+        );
     }
 
     #[test]
@@ -154,5 +227,61 @@ mod tests {
     #[test]
     fn empty_connection_is_none() {
         assert!(roundtrip("").is_none());
+    }
+
+    #[test]
+    fn get_without_content_length_is_fine() {
+        let req = roundtrip("GET / HTTP/1.1\r\n\r\n").unwrap();
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn post_without_content_length_is_rejected() {
+        expect_bad_request(
+            "POST /generate HTTP/1.1\r\n\r\n{\"prompt\":\"hi\"}",
+            "without Content-Length",
+        );
+    }
+
+    #[test]
+    fn negative_content_length_is_rejected() {
+        // The old parser's parse::<usize>().ok() mapped this to len 0 and
+        // silently dropped the body.
+        expect_bad_request(
+            "POST /generate HTTP/1.1\r\nContent-Length: -5\r\n\r\nhello",
+            "negative Content-Length",
+        );
+    }
+
+    #[test]
+    fn non_numeric_content_length_is_rejected() {
+        expect_bad_request(
+            "POST /generate HTTP/1.1\r\nContent-Length: banana\r\n\r\nhello",
+            "invalid Content-Length",
+        );
+        // numeric overflow of the parser is invalid too, not a huge alloc
+        expect_bad_request(
+            "POST /g HTTP/1.1\r\nContent-Length: 99999999999999999999\r\n\r\n",
+            "invalid Content-Length",
+        );
+    }
+
+    #[test]
+    fn oversized_content_length_is_rejected_before_allocation() {
+        let raw = format!(
+            "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        expect_bad_request(&raw, "too large");
+        // exactly at the cap is allowed (the declared body just isn't there,
+        // so the read errors at transport level — not a BadRequest)
+        let raw = format!("POST /g HTTP/1.1\r\nContent-Length: {MAX_BODY_BYTES}\r\n\r\n");
+        let err = roundtrip_res(&raw).unwrap_err();
+        assert!(err.downcast_ref::<BadRequest>().is_none());
+    }
+
+    #[test]
+    fn malformed_request_line_is_rejected() {
+        expect_bad_request("   \r\n\r\n", "malformed request line");
     }
 }

@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::http::{respond, respond_json, HttpRequest};
+use super::http::{respond, respond_json, BadRequest, HttpRequest};
 use crate::cortex::WarpCortex;
 use crate::util::Json;
 
@@ -121,8 +121,18 @@ fn handle_connection(
     cortex: &WarpCortex,
     cfg: &ServerConfig,
 ) -> Result<()> {
-    let Some(req) = HttpRequest::read_from(stream)? else {
-        return Ok(());
+    // Malformed requests (bad/missing/oversized Content-Length, broken
+    // request line) get a clean 400; only transport errors drop the
+    // connection without a response.
+    let req = match HttpRequest::read_from(stream) {
+        Ok(Some(req)) => req,
+        Ok(None) => return Ok(()),
+        Err(e) => {
+            if let Some(bad) = e.downcast_ref::<BadRequest>() {
+                return respond_json(stream, 400, &Json::obj().with("error", bad.0.as_str()));
+            }
+            return Err(e);
+        }
     };
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => respond_json(stream, 200, &Json::obj().with("ok", true)),
@@ -237,9 +247,8 @@ fn stats_json(cortex: &WarpCortex) -> Json {
     let mem = cortex.tracker.snapshot();
     let gate = cortex.gate.stats();
     let syn = cortex.synapse.stats();
-    let sched = cortex.scheduler.stats();
+    let step = cortex.step.stats();
     let dev = cortex.engine.device().stats();
-    let batch = cortex.batcher.stats();
     let pool = cortex.pool.stats();
     Json::obj()
         .with(
@@ -295,16 +304,32 @@ fn stats_json(cortex: &WarpCortex) -> Json {
         .with(
             "scheduler",
             Json::obj()
-                .with("submitted", sched.submitted)
-                .with("completed", sched.completed)
-                .with("active", sched.active)
-                .with("queued", sched.queued),
+                .with("submitted", step.submitted)
+                .with("completed", step.completed)
+                .with("rejected_capacity", step.rejected_capacity)
+                .with("active", step.active)
+                .with("queued", step.parked),
         )
+        // Step-scheduler gauges: continuous-batching health.  The figure
+        // of merit is ops_per_token (→ 1/B as the population grows);
+        // parked/parked_peak expose capacity-gated admission, and
+        // main_deferred counts main steps that waited behind *another
+        // main* (never behind side work — >0 only with concurrent
+        // episodes).
         .with(
-            "batcher",
+            "step",
             Json::obj()
-                .with("requests", batch.requests)
-                .with("mean_batch_size", batch.mean_batch_size()),
+                .with("ticks", step.ticks)
+                .with("device_ops", step.device_ops)
+                .with("main_steps", step.main_steps)
+                .with("side_steps", step.side_steps)
+                .with("fused_ticks", step.fused_ticks)
+                .with("batch_occupancy", step.batch_occupancy())
+                .with("ops_per_token", step.ops_per_token())
+                .with("admitted", step.admitted)
+                .with("parked", step.parked)
+                .with("parked_peak", step.parked_peak)
+                .with("main_deferred", step.main_deferred),
         )
         .with(
             "device",

@@ -1,9 +1,21 @@
 //! Token sampling: greedy, temperature, top-k and nucleus (top-p), with a
 //! seeded xorshift RNG and a repetition penalty — everything the serving
 //! layer needs, no `rand` crate.
+//!
+//! NaN robustness (mirrors the synapse score-sort fix): a NaN logit can
+//! neither win greedy argmax (the old `vecmath::argmax` returned index 0
+//! when `logits[0]` was NaN) nor poison the top-k sort
+//! (`partial_cmp().unwrap()` panicked on NaN) or the top-p
+//! renormalization.  Greedy skips NaN but keeps ±inf ordered — a
+//! +inf logit IS the maximum (fp16-saturated head) and must be selected.
+//! The stochastic path short-circuits to a +inf logit for the same reason
+//! (softmaxing against an infinite max would NaN every weight; dropping it
+//! would emit a ~0-probability token), sorts the rest with `total_cmp`,
+//! and drops NaN/-inf mass before the softmax; when nothing finite
+//! survives it falls back to the NaN-skipping argmax, so an all-NaN
+//! distribution yields id 0 instead of a panic.
 
 use crate::util::rng::XorShift;
-use crate::util::vecmath::argmax;
 
 /// Sampling hyper-parameters.
 #[derive(Debug, Clone)]
@@ -79,7 +91,7 @@ impl Sampler {
 
     fn sample_inner(&mut self, logits: &[f32]) -> i32 {
         if self.cfg.temperature <= 0.0 {
-            return argmax(logits) as i32;
+            return nan_safe_argmax(logits) as i32;
         }
         let mut work: Vec<(usize, f32)> = logits.iter().cloned().enumerate().collect();
 
@@ -100,8 +112,23 @@ impl Sampler {
             *l *= inv_t;
         }
 
-        // top-k cut
-        work.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // A +inf logit (post-penalty/temperature — both preserve the sign
+        // of an infinity) is a probability-~1 token: select it outright,
+        // matching greedy.  Softmaxing against an infinite max would NaN
+        // every weight, and dropping it would emit a ~0-probability token.
+        if let Some((i, _)) = work.iter().find(|(_, l)| *l == f32::INFINITY) {
+            return *i as i32;
+        }
+        // Drop the remaining non-finite mass BEFORE ranking: a NaN must not
+        // win the sort and -inf carries no weight.  If nothing finite
+        // survives (all NaN/-inf), fall back to the greedy argmax.
+        work.retain(|(_, l)| l.is_finite());
+        if work.is_empty() {
+            return nan_safe_argmax(logits) as i32;
+        }
+
+        // top-k cut (total order: well-defined for every float)
+        work.sort_by(|a, b| b.1.total_cmp(&a.1));
         if self.cfg.top_k > 0 && self.cfg.top_k < work.len() {
             work.truncate(self.cfg.top_k);
         }
@@ -150,6 +177,30 @@ impl Sampler {
         }
         work[probs.len() - 1].0 as i32
     }
+}
+
+/// Argmax that skips NaN — a NaN can never win OR capture the incumbent
+/// slot (the old `vecmath::argmax` returned index 0 whenever `logits[0]`
+/// was NaN, because every comparison against a NaN incumbent is false).
+/// ±inf are ordinary ordered values here: a +inf logit IS the maximum
+/// (e.g. an fp16-saturated head) and greedy must select it.  0 when
+/// everything is NaN.
+fn nan_safe_argmax(logits: &[f32]) -> usize {
+    let mut best: Option<usize> = None;
+    for (i, x) in logits.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                if *x > logits[b] {
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    best.unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -222,6 +273,85 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(s.sample(&logits), 1);
         }
+    }
+
+    #[test]
+    fn nan_logits_never_win_greedy_argmax() {
+        let mut s = Sampler::new(SamplerConfig::greedy());
+        // NaN in slot 0 used to capture vecmath::argmax (NaN comparisons
+        // are all false, so the incumbent never lost).
+        let mut logits = vec![f32::NAN; 20];
+        logits[7] = 1.5;
+        logits[12] = 0.5;
+        assert_eq!(s.sample(&logits), 7);
+        // trailing NaN must not win either
+        let mut logits = vec![0.0f32; 20];
+        logits[3] = 2.0;
+        logits[19] = f32::NAN;
+        assert_eq!(s.sample(&logits), 3);
+    }
+
+    #[test]
+    fn nan_does_not_corrupt_topk_topp() {
+        // The old sort used partial_cmp().unwrap(): a single NaN panicked
+        // the decode thread.  Now NaN/-inf carry zero mass: every draw
+        // lands on a finite id, and renormalization stays exact.
+        let mut logits = vec![0.0f32; 50];
+        logits[5] = 4.0;
+        logits[9] = 3.5;
+        logits[11] = f32::NAN;
+        logits[17] = f32::NEG_INFINITY;
+        let mut s = Sampler::new(SamplerConfig {
+            temperature: 1.0,
+            top_k: 2,
+            top_p: 0.9,
+            repetition_penalty: 1.0,
+            repetition_window: 0,
+            seed: 11,
+        });
+        for _ in 0..200 {
+            let id = s.sample(&logits);
+            assert!(id == 5 || id == 9, "non-finite logit leaked into the draw: {id}");
+        }
+    }
+
+    #[test]
+    fn positive_infinity_wins_greedy_and_stochastic() {
+        // +inf is a well-defined probability-~1 token (fp16-saturated
+        // logit): both paths must select it — only NaN and -inf are
+        // massless.
+        let mut logits = vec![0.0f32; 10];
+        logits[4] = f32::INFINITY;
+        logits[8] = 7.0;
+        let mut greedy = Sampler::new(SamplerConfig::greedy());
+        assert_eq!(greedy.sample(&logits), 4);
+        let mut stochastic = Sampler::new(SamplerConfig {
+            temperature: 1.0,
+            repetition_penalty: 1.0,
+            repetition_window: 0,
+            ..SamplerConfig::default()
+        });
+        for _ in 0..50 {
+            assert_eq!(stochastic.sample(&logits), 4);
+        }
+    }
+
+    #[test]
+    fn all_non_finite_logits_fall_back_instead_of_panicking() {
+        // Nothing finite: no panic; the NaN-skipping argmax picks the
+        // +inf entry (the only meaningful maximum).
+        let logits = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, f32::NAN];
+        let mut greedy = Sampler::new(SamplerConfig::greedy());
+        assert_eq!(greedy.sample(&logits), 1);
+        let mut stochastic = Sampler::new(SamplerConfig {
+            temperature: 1.0,
+            ..SamplerConfig::default()
+        });
+        assert_eq!(stochastic.sample(&logits), 1);
+        // all-NaN: deterministic id 0, no panic
+        let nans = vec![f32::NAN; 5];
+        assert_eq!(greedy.sample(&nans), 0);
+        assert_eq!(stochastic.sample(&nans), 0);
     }
 
     #[test]

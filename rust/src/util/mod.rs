@@ -5,6 +5,7 @@ pub mod args;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod sync;
 pub mod timer;
 pub mod vecmath;
 

@@ -1,0 +1,45 @@
+//! Poison-tolerant lock helpers for the decode path.
+//!
+//! A worker that panics while holding a `Mutex` poisons it; every later
+//! `lock().unwrap()` then panics too, cascading one agent's failure into
+//! the whole serving loop (the step scheduler, the legacy batcher and the
+//! stream worker pool all share locks across agent threads).  The locks
+//! these helpers guard protect *restartable* state — channels, join
+//! handles, task queues — so the right response to poison is to recover
+//! the guard and keep serving: the panicking caller's own request surfaces
+//! as an `Err`/`Failed` outcome through the normal reply path, and nobody
+//! else inherits the panic.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait` that recovers the guard on poison instead of panicking.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // lock_unpoisoned still hands out the data
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 9;
+        assert_eq!(*lock_unpoisoned(&m), 9);
+    }
+}
