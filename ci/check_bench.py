@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Versioned bench threshold gate.
+
+Replaces the inline Python heredoc that used to live in
+.github/workflows/ci.yml: thresholds are declarative data in
+ci/thresholds.json (one entry per BENCH_*.json metric), this script is
+the single versioned evaluator, and the merged BENCH_summary.json it
+emits is uploaded with the bench artifacts so the perf trajectory is one
+file per commit.
+
+Usage:
+    python3 ci/check_bench.py [--thresholds ci/thresholds.json]
+                              [--summary BENCH_summary.json]
+                              [--reports-dir .]
+
+thresholds.json shape:
+    {
+      "BENCH_foo.json": [
+        {"key": "warm_bytes", "op": "==", "bound": 0},
+        {"key": "ops_at_8", "op": "<=", "bound": "0.6 * ops_at_1"}
+      ],
+      ...
+    }
+
+`bound` is a number, or an arithmetic expression (+ - * / and
+parentheses) over numeric keys of the same report — evaluated by a small
+AST whitelist, never eval().  Every listed report must exist and every
+referenced key must be present: a bench that silently stopped emitting a
+metric fails the gate instead of passing by omission.
+
+Exit status: 0 iff every check passes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import operator
+import sys
+from pathlib import Path
+
+OPS = {
+    "<": operator.lt,
+    "<=": operator.le,
+    ">": operator.gt,
+    ">=": operator.ge,
+    "==": operator.eq,
+    "!=": operator.ne,
+}
+
+_BINOPS = {
+    ast.Add: operator.add,
+    ast.Sub: operator.sub,
+    ast.Mult: operator.mul,
+    ast.Div: operator.truediv,
+}
+
+
+def eval_bound(bound, report: dict, where: str) -> float:
+    """A number, or a whitelisted arithmetic expression over report keys."""
+    if isinstance(bound, (int, float)) and not isinstance(bound, bool):
+        return float(bound)
+    if not isinstance(bound, str):
+        raise ValueError(f"{where}: bound must be a number or expression, got {bound!r}")
+
+    def walk(node) -> float:
+        if isinstance(node, ast.Expression):
+            return walk(node.body)
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, (int, float)) and not isinstance(node.value, bool):
+                return float(node.value)
+            raise ValueError(f"{where}: non-numeric literal {node.value!r}")
+        if isinstance(node, ast.Name):
+            if node.id not in report:
+                raise KeyError(f"{where}: key `{node.id}` missing from report")
+            return as_number(report[node.id], f"{where}: `{node.id}`")
+        if isinstance(node, ast.BinOp) and type(node.op) in _BINOPS:
+            return _BINOPS[type(node.op)](walk(node.left), walk(node.right))
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            return -walk(node.operand)
+        raise ValueError(f"{where}: disallowed syntax {ast.dump(node)}")
+
+    return walk(ast.parse(bound, mode="eval"))
+
+
+def as_number(value, where: str) -> float:
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        raise ValueError(f"{where} is not numeric: {value!r}")
+    return float(value)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--thresholds", default="ci/thresholds.json")
+    ap.add_argument("--summary", default="BENCH_summary.json")
+    ap.add_argument("--reports-dir", default=".")
+    args = ap.parse_args()
+
+    thresholds = json.loads(Path(args.thresholds).read_text())
+    reports_dir = Path(args.reports_dir)
+
+    summary = {"thresholds_file": args.thresholds, "reports": {}, "checks": []}
+    failures = []
+
+    for report_name in sorted(thresholds):
+        path = reports_dir / report_name
+        if not path.exists():
+            failures.append(f"{report_name}: report missing (bench did not run?)")
+            summary["reports"][report_name] = None
+            continue
+        report = json.loads(path.read_text())
+        summary["reports"][report_name] = report
+        for check in thresholds[report_name]:
+            key, op_name, bound = check["key"], check["op"], check["bound"]
+            where = f"{report_name}: {key} {op_name} {bound!r}"
+            entry = {"report": report_name, "key": key, "op": op_name, "bound": bound}
+            try:
+                if key not in report:
+                    raise KeyError(f"{where}: key `{key}` missing from report")
+                actual = as_number(report[key], f"{where}: `{key}`")
+                bound_value = eval_bound(bound, report, where)
+                ok = OPS[op_name](actual, bound_value)
+                entry.update(actual=actual, bound_value=bound_value, passed=ok)
+                if not ok:
+                    failures.append(f"FAIL {where}  (actual {actual}, bound {bound_value})")
+            except (KeyError, ValueError) as e:
+                entry.update(passed=False, error=str(e))
+                failures.append(f"FAIL {e}")
+            summary["checks"].append(entry)
+
+    # Fold in any extra BENCH_*.json the thresholds don't know yet, so the
+    # per-commit summary artifact is complete even before a gate exists.
+    for extra in sorted(reports_dir.glob("BENCH_*.json")):
+        if extra.name == Path(args.summary).name or extra.name in summary["reports"]:
+            continue
+        try:
+            summary["reports"][extra.name] = json.loads(extra.read_text())
+        except json.JSONDecodeError as e:
+            failures.append(f"{extra.name}: unparseable report: {e}")
+
+    summary["passed"] = not failures
+    Path(args.summary).write_text(json.dumps(summary, indent=2, sort_keys=True) + "\n")
+
+    checked = len(summary["checks"])
+    if failures:
+        print(f"bench gate: {len(failures)} failure(s) across {checked} checks:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"bench gate: all {checked} checks passed "
+          f"({len(summary['reports'])} reports merged into {args.summary})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 use warp_cortex::cortex::router::AgentRole;
 use warp_cortex::cortex::step::testing::{stub_exec, stub_raw};
 use warp_cortex::cortex::{
-    AgentCache, AgentSpawner, SideAgent, SideTask, StepConfig, StepScheduler,
+    AgentCache, AgentSpawner, SideAgent, SideTask, StepConfig, StepScheduler, StepSeams,
 };
 use warp_cortex::model::{KvPool, KvPoolConfig};
 use warp_cortex::runtime::ModelConfig;
@@ -58,6 +58,7 @@ const GEN_BUDGET: usize = 32;
 fn task(id: u64) -> SideTask {
     SideTask {
         id,
+        session: 0,
         role: AgentRole::Verify,
         payload: format!("agent {id}: inspect the shared block pool"),
         main_pos: 0,
@@ -87,11 +88,9 @@ fn scheduler(pool: &Arc<KvPool>, max_active: usize) -> Arc<StepScheduler> {
             side_ctx: SIDE_CTX,
             max_active,
             max_parked: 64,
-            fuse_main: true,
+            ..StepConfig::default()
         },
-        stub_exec(tiny_cfg(), SIDE_CTX, BATCH_WIDTH),
-        spawner(pool.clone()),
-        Arc::new(|| true),
+        StepSeams::new(stub_exec(tiny_cfg(), SIDE_CTX, BATCH_WIDTH), spawner(pool.clone())),
     )
 }
 

@@ -1,0 +1,220 @@
+//! Bench P5 — multi-session continuous batching: device ops per generated
+//! token with S concurrent serving sessions fall toward 1/S of the
+//! single-session fused baseline, because every admitted session's main
+//! step rides the same per-tick fused op (the PR-5 tentpole) instead of
+//! serializing one episode per blocked worker.
+//!
+//! Drives the real [`StepScheduler`] — session admission, FIFO permits,
+//! the cross-session gather window, per-tick multi-main collection and
+//! fan-back — over the deterministic host-only stub executor from
+//! `cortex/step.rs::testing` (ONE home for the op-accounting rules, so
+//! this bench can never drift from the semantics the scheduling-
+//! equivalence proptests pin).  Each session runs on its own thread and
+//! blocks on its per-step reply, exactly like a serving worker.
+//!
+//! CI asserts (via `ci/check_bench.py` over the emitted
+//! `BENCH_multi_session.json`):
+//!
+//! * ops/token at 8 concurrent sessions ≤ 0.6× the 1-session fused
+//!   baseline,
+//! * and strictly below sequential-episode serving (the S-episodes-in-a-
+//!   row reference, which pays one op per token),
+//! * no main step ever deferred behind side work (`main_deferred == 0`),
+//! * all 8 sessions admitted and completed (gauges reconcile).
+//!
+//! ```bash
+//! cargo bench --bench multi_session
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use warp_cortex::cortex::step::testing::stub_exec;
+use warp_cortex::cortex::{StepConfig, StepScheduler, StepSeams};
+use warp_cortex::model::{KvPool, KvPoolConfig};
+use warp_cortex::runtime::ModelConfig;
+use warp_cortex::util::Json;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 2,
+        d_ff: 32,
+        vocab_size: 260,
+        head_dim: 8,
+        rope_theta: 1e4,
+        param_count: 0,
+    }
+}
+
+const SIDE_CTX: usize = 96;
+const BATCH_WIDTH: usize = 8;
+const SESSIONS: usize = 8;
+const TOKENS_PER_SESSION: usize = 64;
+
+fn scheduler(pool: &Arc<KvPool>) -> Arc<StepScheduler> {
+    StepScheduler::new(
+        StepConfig {
+            batch_width: BATCH_WIDTH,
+            side_ctx: SIDE_CTX,
+            max_active: 4,
+            max_parked: 64,
+            max_sessions: SESSIONS,
+            max_parked_sessions: SESSIONS,
+            // Generous gather window so the bench is deterministic on slow
+            // CI machines: with instant stub ops, ticks would otherwise
+            // race the session threads' resubmissions.
+            main_gather: Duration::from_millis(2),
+            ..StepConfig::default()
+        },
+        StepSeams::new(
+            stub_exec(tiny_cfg(), SIDE_CTX, BATCH_WIDTH),
+            // No side tasks in this bench; the spawner is never called.
+            {
+                let pool = pool.clone();
+                Arc::new(move |t| {
+                    warp_cortex::cortex::SideAgent::from_parts(
+                        t,
+                        warp_cortex::cortex::AgentCache::Bare(pool.new_cache(SIDE_CTX)),
+                        0,
+                        1,
+                        vec![],
+                        0,
+                        warp_cortex::text::SamplerConfig::greedy(),
+                    )
+                })
+            },
+        ),
+    )
+}
+
+/// Run `sessions` concurrent sessions of `tokens` main steps each and
+/// return (ops_per_token, occupancy, admitted, completed, main_deferred).
+fn run_concurrent(pool: &Arc<KvPool>, sessions: usize, tokens: usize) -> (f64, f64, u64, u64, u64) {
+    let sched = scheduler(pool);
+    std::thread::scope(|scope| {
+        for s in 0..sessions {
+            let sched = sched.clone();
+            let pool = pool.clone();
+            scope.spawn(move || {
+                let _permit = sched.open_session().expect("session under the cap admits");
+                let mut kv = pool.new_cache(256);
+                for step in 0..tokens {
+                    let tok = ((s * 37 + step) % 200) as i32;
+                    sched
+                        .main_step(tok, kv.len() as i32, &mut kv)
+                        .expect("main step");
+                }
+            });
+        }
+    });
+    let st = sched.stats();
+    let ss = sched.session_stats();
+    assert_eq!(st.main_steps, (sessions * tokens) as u64, "lost main steps");
+    let out = (
+        st.ops_per_token(),
+        ss.occupancy,
+        ss.admitted,
+        ss.completed,
+        st.main_deferred,
+    );
+    sched.shutdown();
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = tiny_cfg();
+    let pool = KvPool::new(
+        &cfg,
+        KvPoolConfig {
+            block_tokens: 16,
+            ..KvPoolConfig::default()
+        },
+    );
+
+    println!("═══ P5: multi-session continuous batching (ops per token vs concurrent sessions) ═══\n");
+
+    // ── sequential-episode serving: S episodes one after another, each
+    //    paying one op per token (the pre-session serving path) ──
+    let mut seq_ops_per_token_acc = 0.0;
+    for _ in 0..SESSIONS {
+        let (opt, _, _, _, _) = run_concurrent(&pool, 1, TOKENS_PER_SESSION);
+        seq_ops_per_token_acc += opt;
+    }
+    let sequential_ops_per_token = seq_ops_per_token_acc / SESSIONS as f64;
+    println!("sequential-episode serving: {sequential_ops_per_token:.3} ops/token");
+    assert!(
+        (sequential_ops_per_token - 1.0).abs() < 1e-9,
+        "a lone session pays exactly one op per token"
+    );
+
+    // ── fused path: ops/token vs concurrent session count ──
+    println!(
+        "\n{:>10} {:>12} {:>12} {:>10}",
+        "sessions", "ops/token", "occupancy", "deferred"
+    );
+    let mut curve = Vec::new();
+    let mut measured_admitted = 0u64;
+    let mut measured_deferred = 0u64;
+    for &s in &[1usize, 2, 4, 8] {
+        let (opt, occ, admitted, completed, deferred) =
+            run_concurrent(&pool, s, TOKENS_PER_SESSION);
+        println!("{s:>10} {opt:>12.3} {occ:>12.2} {deferred:>10}");
+        assert_eq!(admitted, s as u64, "all sessions must admit");
+        assert_eq!(completed, s as u64, "all sessions must complete");
+        assert_eq!(deferred, 0, "mains must never defer behind side work");
+        curve.push((s, opt, occ));
+        measured_admitted = admitted;
+        measured_deferred = deferred;
+    }
+    let at_1 = curve[0].1;
+    let (_, at_8, occ_8) = *curve.last().expect("curve has the 8-session point");
+
+    // ── acceptance criteria (mirrored in ci/thresholds.json) ──
+    assert!(
+        (at_1 - 1.0).abs() < 1e-9,
+        "1-session fused baseline must be 1.0 ops/token, got {at_1}"
+    );
+    assert!(
+        at_8 <= 0.6 * at_1,
+        "ops/token at 8 sessions is {at_8:.3}, expected ≤ 0.6× the 1-session baseline {at_1:.3}"
+    );
+    assert!(
+        at_8 < sequential_ops_per_token,
+        "fused multi-session serving must beat sequential episodes"
+    );
+    assert!(
+        occ_8 > 1.0,
+        "session occupancy {occ_8:.2} must exceed one stream per tick"
+    );
+
+    // Machine-readable report, gated by ci/check_bench.py (declarative
+    // thresholds in ci/thresholds.json — no inline CI heredoc).
+    let mut report = Json::obj()
+        .with("bench", "multi_session")
+        .with("batch_width", BATCH_WIDTH)
+        .with("sessions", SESSIONS)
+        .with("tokens_per_session", TOKENS_PER_SESSION)
+        .with("sequential_ops_per_token", sequential_ops_per_token)
+        .with("ops_per_token_at_1", at_1)
+        .with("ops_per_token_at_8", at_8)
+        .with("occupancy_at_8", occ_8)
+        .with("sessions_admitted", measured_admitted)
+        .with("main_deferred", measured_deferred);
+    for (s, opt, _) in &curve {
+        if *s != 1 && *s != 8 {
+            report = report.with(format!("ops_per_token_at_{s}").as_str(), *opt);
+        }
+    }
+    std::fs::write("BENCH_multi_session.json", report.to_string())?;
+    println!("\nwrote BENCH_multi_session.json");
+
+    println!(
+        "\nshape check: 1.0 ops/token sequential → {at_8:.3} at {SESSIONS} concurrent sessions \
+         (occupancy {occ_8:.1})  ✓"
+    );
+    Ok(())
+}

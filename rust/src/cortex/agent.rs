@@ -33,6 +33,12 @@ use crate::text::{Sampler, SamplerConfig, Tokenizer, EOS_ID};
 #[derive(Debug, Clone)]
 pub struct SideTask {
     pub id: u64,
+    /// The serving session that spawned this task
+    /// ([`crate::cortex::SessionPermit::id`]); the step scheduler routes
+    /// the outcome back to that session's queue only.  0 = legacy
+    /// sessionless submission — the outcome goes to the global results
+    /// channel (`poll_results`).
+    pub session: u64,
     pub role: AgentRole,
     pub payload: String,
     /// Main-agent text position when the trigger fired (for gating context).
@@ -509,6 +515,7 @@ mod tests {
     fn side_task_fields() {
         let t = SideTask {
             id: 7,
+            session: 0,
             role: AgentRole::Verify,
             payload: "check the date".into(),
             main_pos: 42,

@@ -21,6 +21,15 @@
 //! `1 main op + side ops` — the `t_main` term disappears into lane 0 of
 //! the batch op and the compute ceiling moves out accordingly.
 //!
+//! The multi-session scheduler adds a third axis: S concurrent serving
+//! *sessions*, each its own episode population, sharing the fused tick
+//! loop.  [`CapacityModel::utilization_sessions`] charges
+//! `max(1, S·(1+(n−1)·side_duty) / B)` batch ops per main token —
+//! sequential-episode serving would pay S single-session op streams —
+//! and [`CapacityModel::max_sessions_compute`] inverts it into the
+//! serving layer's `max_sessions` planning figure (Table-3-style curves
+//! via [`CapacityModel::sessions_curve`]).
+//!
 //! All entry points validate the model first and return a typed
 //! [`CapacityError`] for degenerate inputs (`batch_width == 0`,
 //! non-positive `main_rate`, negative `side_duty`, non-finite costs) —
@@ -222,6 +231,75 @@ impl CapacityModel {
         Ok(1 + ((max_tokens - 1.0) / self.side_duty) as u64)
     }
 
+    // ── Multi-session model (Table-3-style curves) ─────────────────────
+    //
+    // Since the multi-session scheduler, S independent serving sessions —
+    // each a full episode population of 1 main + (n−1) side agents —
+    // share the fused tick loop: their S main steps ride the leading
+    // lanes of the same batch op.  Per main-token interval (1/main_rate
+    // seconds, sessions assumed rate-matched) the system therefore
+    // produces `S · (1 + (n−1)·side_duty)` tokens, carried by
+    // `max(1, tokens/B)` batch ops — sequential-episode serving would pay
+    // `S` times the single-session op stream instead.
+
+    /// Fused-tick device utilization with `sessions` concurrent main
+    /// streams, each running `agents_per_session` agents (1 main +
+    /// n−1 sides).  `utilization_sessions(1, n) == utilization_fused(n)`.
+    pub fn utilization_sessions(
+        &self,
+        sessions: u64,
+        agents_per_session: u64,
+    ) -> Result<f64, CapacityError> {
+        self.validate()?;
+        if sessions == 0 {
+            return Ok(0.0);
+        }
+        let b = self.compute.batch_width as f64;
+        let per_session =
+            1.0 + agents_per_session.saturating_sub(1) as f64 * self.side_duty;
+        let tokens_per_main_token = sessions as f64 * per_session;
+        let ops_per_main_token = (tokens_per_main_token / b).max(1.0);
+        Ok(self.main_rate * ops_per_main_token * self.compute.t_side_batch)
+    }
+
+    /// Largest concurrent-session count with fused utilization <= 1 at a
+    /// fixed per-session population (the serving-layer `max_sessions`
+    /// planning figure).
+    pub fn max_sessions_compute(&self, agents_per_session: u64) -> Result<u64, CapacityError> {
+        self.validate()?;
+        let b = self.compute.batch_width as f64;
+        let t = self.main_rate * self.compute.t_side_batch;
+        if t >= 1.0 {
+            // Even one batch op per main token oversubscribes the device.
+            return Ok(0);
+        }
+        let per_session =
+            1.0 + agents_per_session.saturating_sub(1) as f64 * self.side_duty;
+        // util <= 1  ⇔  tokens <= B / t  (and ops floor at 1 keeps any
+        // S with tokens <= B feasible since t < 1); per_session >= 1.
+        let max_tokens = (b / t).max(b);
+        Ok((max_tokens / per_session) as u64)
+    }
+
+    /// Log-spaced utilization curve over the session axis at a fixed
+    /// per-session population: the Table-3-style view of how far
+    /// iteration-level multi-session batching carries before compute
+    /// binds.
+    pub fn sessions_curve(
+        &self,
+        max_sessions: u64,
+        agents_per_session: u64,
+    ) -> Result<Vec<(u64, f64)>, CapacityError> {
+        self.validate()?;
+        let mut points = Vec::new();
+        let mut s = 1u64;
+        while s <= max_sessions {
+            points.push((s, self.utilization_sessions(s, agents_per_session)?));
+            s = if s < 10 { s * 2 } else { s * 10 / 3 };
+        }
+        Ok(points)
+    }
+
     /// The population where scaling stops, and why.
     pub fn limit(&self) -> Result<(u64, Bottleneck), CapacityError> {
         let m = self.max_agents_memory();
@@ -353,6 +431,55 @@ mod tests {
         // zero side duty → sides are free → unbounded fused compute
         m.side_duty = 0.0;
         assert_eq!(m.max_agents_compute_fused().unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn multi_session_model_generalizes_the_fused_one() {
+        let m = model(4e-3);
+        // One session IS the fused single-episode model.
+        for n in [1u64, 2, 5, 40] {
+            assert_eq!(
+                m.utilization_sessions(1, n).unwrap(),
+                m.utilization_fused(n).unwrap(),
+                "S=1 must reduce to the fused model at n={n}"
+            );
+        }
+        // Utilization is monotone in the session count, zero at S=0.
+        assert_eq!(m.utilization_sessions(0, 5).unwrap(), 0.0);
+        let mut last = 0.0;
+        for s in 1..40u64 {
+            let u = m.utilization_sessions(s, 5).unwrap();
+            assert!(u >= last, "utilization dipped at S={s}");
+            last = u;
+        }
+        // Exact ceiling math: b=4, t=30·4e-3=0.12, max_tokens=4/0.12=33.3;
+        // n=5, duty 0.25 → per_session=2 → S_max = 16.
+        assert_eq!(m.max_sessions_compute(5).unwrap(), 16);
+        assert!(m.utilization_sessions(16, 5).unwrap() <= 1.0 + 1e-9);
+        assert!(m.utilization_sessions(18, 5).unwrap() > 1.0);
+        // More side agents per session → fewer concurrent sessions fit.
+        assert!(m.max_sessions_compute(1).unwrap() > m.max_sessions_compute(5).unwrap());
+        // A device too slow for even one batch op per token serves nobody.
+        let slow = model(40e-3);
+        assert_eq!(slow.max_sessions_compute(5).unwrap(), 0);
+        // Curve: log-spaced, classified by the same utilization.
+        let curve = m.sessions_curve(100, 5).unwrap();
+        assert_eq!(curve.first().unwrap().0, 1);
+        assert!(curve.last().unwrap().1 > 1.0, "curve should cross saturation");
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        // Degenerate inputs surface as the same typed errors.
+        let mut zero_b = model(4e-3);
+        zero_b.compute.batch_width = 0;
+        assert_eq!(
+            zero_b.utilization_sessions(4, 5).unwrap_err(),
+            CapacityError::ZeroBatchWidth
+        );
+        assert_eq!(
+            zero_b.max_sessions_compute(5).unwrap_err(),
+            CapacityError::ZeroBatchWidth
+        );
     }
 
     #[test]

@@ -2,24 +2,29 @@
 //! Injector and the River & Stream scheduler into the full system of the
 //! paper's Figure 1.
 //!
-//! `run_episode` is the canonical serving loop:
+//! [`WarpCortex::open_session`] → [`CortexSession`] is the canonical
+//! serving loop (`run_episode` is its open/loop/finish wrapper):
 //!
 //! ```text
-//! prefill (River) ─► decode loop ──► token stream ─► Router
-//!        │              ▲   │                          │ trigger
-//!        ▼              │   ▼ main step                ▼
+//! session 1..S  prefill (River) ─► next_token ──► token stream ─► Router
+//!        │              ▲   │                                      │ trigger
+//!        ▼              │   ▼ main steps (one per session)         ▼
 //!   Synapse push    inject  STEP SCHEDULER ◄─── side agents (pollable
 //!   (Background)            one fused device op       token sources)
-//!                           per tick: main + sides
+//!                           per tick: S mains + sides
 //! ```
 //!
-//! Decode scheduling is iteration-level (continuous batching): every
-//! decode step — the main agent's and every side agent's — flows through
-//! the [`StepScheduler`], which fuses all runnable agents' next tokens
-//! into one `decode_batch` device op per tick.  The main step rides lane 0
-//! at River priority while its context fits a side lane, and runs as its
-//! own River op ahead of the side batch afterwards, preserving the
-//! River/Stream lane contract without serializing the op stream.
+//! Decode scheduling is iteration-level (continuous batching) across
+//! *sessions*: every decode step — each session's main step and every
+//! side agent's — flows through the [`StepScheduler`], which fuses all
+//! runnable agents' next tokens into one `decode_batch` device op per
+//! tick.  Fusable main steps ride the leading lanes at River priority
+//! while their contexts fit a side lane, and run as their own River ops
+//! ahead of the side batch afterwards, preserving the River/Stream lane
+//! contract without serializing the op stream.  Sessions admit FIFO
+//! (`CortexConfig::max_sessions`, pool-headroom gated with a prefill
+//! reservation) and shed with `Busy` beyond the park queue; each
+//! session's side-agent outcomes route back to it alone.
 //!
 //! Context memory is device-resident end to end: every cache write (prefill
 //! load, decode append, synapse seed, injection) goes through to the shared
@@ -50,12 +55,16 @@ use super::inject::{InjectStats, Injector};
 use super::memory::{MemSnapshot, MemoryTracker};
 use super::prism::{AgentKind, AgentTicket, Prism};
 use super::router::{Router, RouterConfig, Trigger};
-use super::step::{AdmitGate, AgentSpawner, FusedExec, StepConfig, StepScheduler, StepStats};
+use super::step::{
+    AdmitGate, AgentSpawner, FusedExec, SessionPermit, StepConfig, StepScheduler, StepSeams,
+    StepStats,
+};
 use super::synapse::{Synapse, SynapseStats};
 use crate::metrics::{Histogram, Throughput};
 use crate::model::{Engine, KvPool, KvPoolConfig, PoolStats};
 use crate::runtime::Lane;
 use crate::text::{Sampler, SamplerConfig, Tokenizer, EOS_ID};
+use crate::util::Json;
 
 /// Orchestrator configuration.
 #[derive(Debug, Clone)]
@@ -85,11 +94,24 @@ pub struct CortexConfig {
     /// never lingers; kept for callers assembling the legacy batcher
     /// directly.
     pub batch_linger: Duration,
-    /// Ride the main step on lane 0 of the fused batch op while its
-    /// context fits a side-capacity lane (one device op per tick).  Off =
-    /// the main step always runs as its own River op ahead of the side
-    /// batch (two ops per mixed tick, strictest lane isolation).
+    /// Ride main steps on the leading lanes of the fused batch op while
+    /// their contexts fit a side-capacity lane (one device op per tick).
+    /// Off = every main step runs as its own River op ahead of the side
+    /// batch (strictest lane isolation).
     pub fuse_main: bool,
+    /// Concurrent serving sessions (main streams) sharing the fused tick
+    /// loop.  `open_session` calls beyond this park FIFO until a session
+    /// closes.
+    pub max_sessions: usize,
+    /// Sessions allowed to wait for admission before `open_session`
+    /// rejects outright (load shedding — the serve layer answers 503).
+    pub max_parked_sessions: usize,
+    /// Cross-session gather window: when fewer main steps are queued than
+    /// there are admitted sessions, the tick loop waits up to this long
+    /// for the other sessions' concurrent steps so S sessions share one
+    /// fused device op.  Negligible against a real device op; zero
+    /// disables gathering.
+    pub main_gather: Duration,
     pub router: RouterConfig,
     /// Side-cache seeding (Full, or the §6.2 Coarse/Adaptive extensions).
     pub seed_mode: crate::cortex::synapse::SeedMode,
@@ -120,6 +142,9 @@ impl Default for CortexConfig {
             },
             batch_linger: Duration::from_micros(500),
             fuse_main: true,
+            max_sessions: 8,
+            max_parked_sessions: 32,
+            main_gather: Duration::from_micros(200),
             router: RouterConfig::default(),
             seed_mode: crate::cortex::synapse::SeedMode::Full,
             kv_pool: KvPoolConfig::default(),
@@ -184,6 +209,95 @@ pub struct EpisodeReport {
     pub memory: MemSnapshot,
     /// Block-pool gauges at episode end (resident vs high-water context).
     pub pool: PoolStats,
+}
+
+impl Event {
+    /// Wire shape of one coordination event (the `/generate` `events`
+    /// array).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::Spawned { task_id, tag, payload, at_token } => Json::obj()
+                .with("type", "spawned")
+                .with("task", *task_id as i64)
+                .with("tag", tag.as_str())
+                .with("payload", payload.as_str())
+                .with("at_token", *at_token),
+            Event::Dropped { payload, at_token } => Json::obj()
+                .with("type", "dropped")
+                .with("payload", payload.as_str())
+                .with("at_token", *at_token),
+            Event::Merged { task_id, score, thought, injected_rows, at_token } => Json::obj()
+                .with("type", "merged")
+                .with("task", *task_id as i64)
+                .with("score", *score as f64)
+                .with("thought", thought.as_str())
+                .with("injected_rows", *injected_rows)
+                .with("at_token", *at_token),
+            Event::Rejected { task_id, score, thought, at_token } => Json::obj()
+                .with("type", "rejected")
+                .with("task", *task_id as i64)
+                .with("score", *score as f64)
+                .with("thought", thought.as_str())
+                .with("at_token", *at_token),
+            Event::Failed { task_id, error, at_token } => Json::obj()
+                .with("type", "failed")
+                .with("task", *task_id as i64)
+                .with("error", error.as_str())
+                .with("at_token", *at_token),
+            Event::SynapsePushed { version, source_len, at_token } => Json::obj()
+                .with("type", "synapse")
+                .with("version", *version)
+                .with("source_len", *source_len)
+                .with("at_token", *at_token),
+        }
+    }
+}
+
+impl EpisodeReport {
+    /// Wire shape of the episode summary: the non-streaming `/generate`
+    /// response body, and (with `"done": true` added) the trailing chunk
+    /// of a streaming one.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("text", self.text.as_str())
+            .with("tokens", self.tokens_generated)
+            .with("elapsed_ms", self.elapsed.as_secs_f64() * 1e3)
+            .with("tokens_per_sec", self.main_tokens_per_sec)
+            .with(
+                "events",
+                Json::Arr(self.events.iter().map(Event::to_json).collect()),
+            )
+    }
+}
+
+/// Why [`WarpCortex::open_session`] refused.
+#[derive(Debug)]
+pub enum SessionError {
+    /// Admission refused (session queue full or shutdown): shed load and
+    /// retry later — the serve layer answers 503.
+    Busy(String),
+    /// Episode bring-up failed (registration, prefill).
+    Failed(anyhow::Error),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Busy(m) => write!(f, "session admission refused: {m}"),
+            SessionError::Failed(e) => write!(f, "session failed to open: {e:#}"),
+        }
+    }
+}
+
+// Manual bridge instead of `std::error::Error` so anyhow's blanket
+// `From<E: Error>` impl does not conflict.
+impl From<SessionError> for anyhow::Error {
+    fn from(e: SessionError) -> anyhow::Error {
+        match e {
+            SessionError::Busy(m) => anyhow::anyhow!("session admission refused: {m}"),
+            SessionError::Failed(e) => e,
+        }
+    }
 }
 
 /// The assembled system.
@@ -268,9 +382,7 @@ impl WarpCortex {
         };
         let exec: FusedExec = {
             let engine = engine.clone();
-            Arc::new(move |main, main_cap, sides, fuse| {
-                engine.decode_fused(main, main_cap, sides, fuse)
-            })
+            Arc::new(move |mains, sides, fuse| engine.decode_fused(mains, sides, fuse))
         };
         let admit: AdmitGate = {
             let pool = pool.clone();
@@ -282,6 +394,16 @@ impl WarpCortex {
             let side_blocks_worst = (engine.caps().side_ctx + bt - 1) / bt;
             Arc::new(move || pool.can_admit(side_blocks_worst))
         };
+        let session_admit: AdmitGate = {
+            let pool = pool.clone();
+            let bt = pool.block_tokens();
+            // Session admission guards the prefill burst: a fresh session's
+            // prompt can occupy up to `prefill_len` rows (+1 block of slack
+            // for its first generated rows).  Growth beyond that is
+            // backpressured per-step by the pool's own rent path.
+            let prefill_blocks = (engine.caps().prefill_len + bt - 1) / bt + 1;
+            Arc::new(move || pool.can_admit(prefill_blocks))
+        };
         let step = StepScheduler::new(
             StepConfig {
                 batch_width: engine.caps().decode_batch,
@@ -289,10 +411,16 @@ impl WarpCortex {
                 max_active: cfg.max_side_agents,
                 max_parked: cfg.max_queued_tasks,
                 fuse_main: cfg.fuse_main,
+                max_sessions: cfg.max_sessions,
+                max_parked_sessions: cfg.max_parked_sessions,
+                main_gather: cfg.main_gather,
             },
-            exec,
-            spawner,
-            admit,
+            StepSeams {
+                exec,
+                spawner,
+                admit,
+                session_admit,
+            },
         );
         Ok(WarpCortex {
             cfg,
@@ -318,16 +446,33 @@ impl WarpCortex {
 
     /// Rows `prompt` will occupy in a fresh main cache: encoded length
     /// capped by [`WarpCortex::start_main`]'s truncation window
-    /// (BOS + the most recent `prefill_len - 1` tokens).  The serve layer
-    /// clamps `max_tokens` against this; `start_main` debug-asserts its
-    /// truncated ids match it, so the two cannot silently drift.  (The
-    /// byte-level tokenizer makes the extra encode O(prompt bytes) —
-    /// negligible next to one decode step.)
+    /// (BOS + the most recent `prefill_len - 1` tokens).  Library callers'
+    /// capacity-planning helper; the request hot path itself encodes ONCE
+    /// via `truncated_prompt_ids` (which debug-asserts against this, so
+    /// the two cannot silently drift).
     pub fn prompt_rows(&self, prompt: &str) -> usize {
         self.tokenizer
             .encode(prompt, true)
             .len()
             .min(self.engine.caps().prefill_len - 1)
+    }
+
+    /// Encode + truncate a prompt to what the prefill window holds
+    /// (BOS + the most recent `prefill_len - 1` tokens): the ONE encode a
+    /// session needs — its length sizes the admission reservation and the
+    /// ids feed the prefill, so the hot path never tokenizes twice.
+    fn truncated_prompt_ids(&self, prompt: &str) -> Vec<i32> {
+        let max_prompt = self.engine.caps().prefill_len - 1;
+        let mut ids = self.tokenizer.encode(prompt, true);
+        if ids.len() > max_prompt {
+            // keep BOS + the most recent window
+            let tail = ids.len() - max_prompt + 1;
+            ids = std::iter::once(ids[0]).chain(ids[tail..].iter().copied()).collect();
+        }
+        // `prompt_rows` is the public planning figure — it must predict
+        // exactly how many rows this truncation produces.
+        debug_assert_eq!(ids.len(), self.prompt_rows(prompt));
+        ids
     }
 
     /// Register + prefill a fresh main agent.
@@ -338,147 +483,91 @@ impl WarpCortex {
     /// reference and decode only the uncovered tail — zero prefill device
     /// executions and O(1) fresh blocks per warm spawn.
     pub fn start_main(&self, prompt: &str) -> Result<(AgentTicket, Vec<f32>, Vec<f32>)> {
+        let ids = self.truncated_prompt_ids(prompt);
+        self.start_main_ids(&ids)
+    }
+
+    fn start_main_ids(&self, ids: &[i32]) -> Result<(AgentTicket, Vec<f32>, Vec<f32>)> {
         let mut ticket = self.prism.register(AgentKind::Main)?;
-        let max_prompt = self.engine.caps().prefill_len - 1;
-        let mut ids = self.tokenizer.encode(prompt, true);
-        if ids.len() > max_prompt {
-            // keep BOS + the most recent window
-            let tail = ids.len() - max_prompt + 1;
-            ids = std::iter::once(ids[0]).chain(ids[tail..].iter().copied()).collect();
-        }
-        // `prompt_rows` is the serve layer's clamp basis — it must predict
-        // exactly how many rows this truncation produces.
-        debug_assert_eq!(ids.len(), self.prompt_rows(prompt));
-        let out = self.engine.prefill_shared(&ids, &mut ticket.kv, Lane::River)?;
+        let out = self.engine.prefill_shared(ids, &mut ticket.kv, Lane::River)?;
         Ok((ticket, out.last_logits, out.hidden_last))
     }
 
-    /// Run one full episode: generate up to `max_tokens` from `prompt`,
-    /// routing / gating / injecting along the way.
-    pub fn run_episode(&self, prompt: &str, max_tokens: usize) -> Result<EpisodeReport> {
-        let started = Instant::now();
-        let tk = &self.tokenizer;
-        let (mut ticket, mut logits, mut hidden) = self.start_main(prompt)?;
+    /// Open one serving session: admit it (blocking FIFO when the session
+    /// slots or pool headroom are saturated), run the prefix-shared
+    /// prefill, and return the incremental episode state machine.  S open
+    /// sessions' main steps fuse into shared device ticks — this is the
+    /// multi-session serving entry point behind streaming `/generate`.
+    ///
+    /// Dropping the returned session without [`CortexSession::finish`]
+    /// cancels it: the admission slot frees for the next parked session,
+    /// the main cache's blocks return to the pool, and any undelivered
+    /// side outcomes are discarded.
+    pub fn open_session(
+        &self,
+        prompt: &str,
+        max_tokens: usize,
+    ) -> std::result::Result<CortexSession<'_>, SessionError> {
+        let permit = self
+            .step
+            .open_session()
+            .map_err(|d| SessionError::Busy(d.to_string()))?;
+        // Atomically reserve the prefill burst between admission and
+        // prefill: the admission gate and this check race across sessions,
+        // so the reservation re-validates headroom under the pool lock — N
+        // simultaneously admitted sessions cannot all pass the gate and
+        // then collectively exhaust the pool; the loser sheds as Busy
+        // (retryable 503) instead of failing mid-prefill.  One encode
+        // serves both the reservation sizing and the prefill.
+        let ids = self.truncated_prompt_ids(prompt);
+        let bt = self.pool.block_tokens();
+        let rsv = match self.pool.try_reserve(ids.len() / bt + 1) {
+            Some(rsv) => rsv,
+            None => {
+                // Reclassify this admission as a shed so the `sessions`
+                // gauges count the 503, not a phantom completed session.
+                permit.shed();
+                return Err(SessionError::Busy(
+                    "kv pool headroom claimed by a concurrent admission".into(),
+                ));
+            }
+        };
+        let opened = self.start_main_ids(&ids);
+        drop(rsv); // the real blocks are rented (or the prefill failed)
+        let (ticket, logits, hidden) = opened.map_err(SessionError::Failed)?;
         let mut router = Router::new(self.cfg.router.clone());
         // Triggers already present in the prompt spawn on the first step.
-        let mut pending: Vec<Trigger> = router.feed(prompt);
-
-        let mut sampler = Sampler::new(self.cfg.sampler.clone());
-        let mut text = String::new();
-        let mut events = Vec::new();
-        let mut pos = ticket.kv.len() as i32; // text position == cache rows so far
-        let mut generated = 0usize;
-
-        while generated < max_tokens && ticket.kv.remaining() > 0 {
-            // ── decode one token through the step scheduler ──
-            // The step runs at River priority inside the next fused tick
-            // (lane 0 of the batch op, or its own op ahead of the side
-            // batch once the context outgrows a side lane) — never queued
-            // behind side work.
-            let t0 = Instant::now();
-            let id = sampler.sample(&logits);
-            if id == EOS_ID {
-                break;
-            }
-            let out = self.step.main_step(id, pos, &mut ticket.kv)?;
-            self.step_latency.record(t0.elapsed());
-            self.main_throughput.tick();
-            logits = out.logits;
-            hidden = out.hidden;
-            pos += 1;
-            generated += 1;
-
-            let mut new_triggers: Vec<Trigger> = std::mem::take(&mut pending);
-            if let Some(b) = tk.decode_one(id) {
-                text.push(b as char);
-                if let Some(tr) = router.feed_byte(b) {
-                    new_triggers.push(tr);
-                }
-            }
-
-            // ── synapse refresh (Background lane) ──
-            let due = generated % self.cfg.synapse_refresh_every == 0;
-            let need = !new_triggers.is_empty() && self.synapse.read().is_none();
-            if (due || need) && ticket.kv.len() >= self.engine.caps().synapse_k {
-                let s = self
-                    .engine
-                    .synapse_extract(&hidden, &ticket.kv, Lane::Background)?;
-                let source_len = s.source_len;
-                let version = self.synapse.push(s);
-                events.push(Event::SynapsePushed {
-                    version,
-                    source_len,
-                    at_token: generated,
-                });
-            }
-
-            // ── route triggers to side agents ──
-            for tr in new_triggers {
-                if self.synapse.read().is_none() {
-                    events.push(Event::Dropped {
-                        payload: tr.payload,
-                        at_token: generated,
-                    });
-                    continue;
-                }
-                let task = SideTask {
-                    id: self.next_task_id(),
-                    role: tr.role,
-                    payload: tr.payload.clone(),
-                    main_pos: pos,
-                    spawned_at: Instant::now(),
-                };
-                let task_id = task.id;
-                if self.step.submit(task) {
-                    events.push(Event::Spawned {
-                        task_id,
-                        tag: tr.tag,
-                        payload: tr.payload,
-                        at_token: generated,
-                    });
-                } else {
-                    events.push(Event::Dropped {
-                        payload: tr.payload,
-                        at_token: generated,
-                    });
-                }
-            }
-
-            // ── merge finished side agents (gate + referential injection) ──
-            for outcome in self.step.poll_results() {
-                self.merge_outcome(outcome, &hidden, &mut ticket, pos, generated, &mut events)?;
-            }
-        }
-
-        // Final drain pass: give in-flight agents a grace window so every
-        // spawned task reaches a terminal event in the report.
-        let deadline = Instant::now() + Duration::from_secs(2);
-        while self.step.in_flight() > 0 && Instant::now() < deadline {
-            if let Some(outcome) = self.step.wait_result(Duration::from_millis(100)) {
-                self.merge_outcome(outcome, &hidden, &mut ticket, pos, generated, &mut events)?;
-            }
-        }
-        for outcome in self.step.poll_results() {
-            self.merge_outcome(outcome, &hidden, &mut ticket, pos, generated, &mut events)?;
-        }
-
-        let elapsed = started.elapsed();
-        Ok(EpisodeReport {
+        let pending: Vec<Trigger> = router.feed(prompt);
+        Ok(CortexSession {
+            pos: ticket.kv.len() as i32, // text position == cache rows so far
+            cx: self,
+            permit,
+            ticket,
+            router,
+            sampler: Sampler::new(self.cfg.sampler.clone()),
             prompt: prompt.to_string(),
-            text,
-            tokens_generated: generated,
-            events,
-            elapsed,
-            main_tokens_per_sec: generated as f64 / elapsed.as_secs_f64().max(1e-9),
-            step_latency_p50_ns: self.step_latency.percentile_ns(50.0),
-            step_latency_p95_ns: self.step_latency.percentile_ns(95.0),
-            gate: self.gate.stats(),
-            inject: self.injector.stats(),
-            synapse: self.synapse.stats(),
-            scheduler: self.step.stats(),
-            memory: self.tracker.snapshot(),
-            pool: self.pool.stats(),
+            logits,
+            hidden,
+            pending,
+            text: String::new(),
+            events: Vec::new(),
+            generated: 0,
+            max_tokens,
+            outstanding: 0,
+            started: Instant::now(),
+            done: false,
         })
+    }
+
+    /// Run one full episode: generate up to `max_tokens` from `prompt`,
+    /// routing / gating / injecting along the way.  Thin wrapper over the
+    /// session API — one `open_session`, a token loop, one `finish`.
+    pub fn run_episode(&self, prompt: &str, max_tokens: usize) -> Result<EpisodeReport> {
+        let mut session = self
+            .open_session(prompt, max_tokens)
+            .map_err(anyhow::Error::from)?;
+        while session.next_token()?.is_some() {}
+        session.finish()
     }
 
     fn merge_outcome(
@@ -539,5 +628,218 @@ impl WarpCortex {
             at_token,
         });
         Ok(())
+    }
+}
+
+/// One live serving session (the tentpole of the multi-session refactor):
+/// the episode loop turned into an incremental state machine so N
+/// concurrent requests can each advance one token at a time while the
+/// [`StepScheduler`] fuses their steps into shared device ticks.
+///
+/// Per [`CortexSession::next_token`] call: sample from the last logits,
+/// run one main step (fused with every other session's pending step and
+/// the side batch), feed the router, refresh the synapse on schedule,
+/// spawn triggered side agents (tagged with this session's id so their
+/// outcomes route back here only), and merge any of *this session's*
+/// finished side agents.  [`CortexSession::finish`] drains the session's
+/// in-flight side agents and produces the [`EpisodeReport`].
+///
+/// Dropping the session mid-stream (a disconnected streaming client)
+/// cancels it: the prism ticket returns the cache blocks, the permit
+/// frees the admission slot, and undelivered outcomes are discarded —
+/// other sessions are unaffected.
+pub struct CortexSession<'c> {
+    cx: &'c WarpCortex,
+    permit: SessionPermit,
+    ticket: AgentTicket,
+    router: Router,
+    sampler: Sampler,
+    prompt: String,
+    logits: Vec<f32>,
+    hidden: Vec<f32>,
+    /// Triggers seen but not yet routed (prompt triggers before step 1).
+    pending: Vec<Trigger>,
+    text: String,
+    events: Vec<Event>,
+    pos: i32,
+    generated: usize,
+    max_tokens: usize,
+    /// Side tasks submitted by this session whose outcomes have not yet
+    /// been merged.
+    outstanding: usize,
+    started: Instant,
+    done: bool,
+}
+
+impl<'c> CortexSession<'c> {
+    /// The scheduler-issued session id (what this session's
+    /// [`SideTask::session`] tags carry).
+    pub fn id(&self) -> u64 {
+        self.permit.id()
+    }
+
+    /// Visible text generated so far.
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+
+    pub fn tokens_generated(&self) -> usize {
+        self.generated
+    }
+
+    /// Advance one token.  Returns the visible text delta (possibly empty
+    /// — not every token decodes to a printable byte), or `None` once the
+    /// budget, the cache or an EOS ended generation.
+    pub fn next_token(&mut self) -> Result<Option<String>> {
+        if self.done || self.generated >= self.max_tokens || self.ticket.kv.remaining() == 0 {
+            self.done = true;
+            return Ok(None);
+        }
+        // ── decode one token through the step scheduler ──
+        // The step runs at River priority inside the next fused tick
+        // (a leading lane of the batch op shared with the other sessions,
+        // or its own op ahead of the side batch once the context outgrows
+        // a side lane) — never queued behind side work.
+        let t0 = Instant::now();
+        let id = self.sampler.sample(&self.logits);
+        if id == EOS_ID {
+            self.done = true;
+            return Ok(None);
+        }
+        let out = self.cx.step.main_step(id, self.pos, &mut self.ticket.kv)?;
+        self.cx.step_latency.record(t0.elapsed());
+        self.cx.main_throughput.tick();
+        self.logits = out.logits;
+        self.hidden = out.hidden;
+        self.pos += 1;
+        self.generated += 1;
+
+        let mut delta = String::new();
+        let mut new_triggers: Vec<Trigger> = std::mem::take(&mut self.pending);
+        if let Some(b) = self.cx.tokenizer.decode_one(id) {
+            delta.push(b as char);
+            self.text.push(b as char);
+            if let Some(tr) = self.router.feed_byte(b) {
+                new_triggers.push(tr);
+            }
+        }
+
+        // ── synapse refresh (Background lane) ──
+        let due = self.generated % self.cx.cfg.synapse_refresh_every == 0;
+        let need = !new_triggers.is_empty() && self.cx.synapse.read().is_none();
+        if (due || need) && self.ticket.kv.len() >= self.cx.engine.caps().synapse_k {
+            let s = self
+                .cx
+                .engine
+                .synapse_extract(&self.hidden, &self.ticket.kv, Lane::Background)?;
+            let source_len = s.source_len;
+            let version = self.cx.synapse.push(s);
+            self.events.push(Event::SynapsePushed {
+                version,
+                source_len,
+                at_token: self.generated,
+            });
+        }
+
+        // ── route triggers to side agents (tagged with this session) ──
+        for tr in new_triggers {
+            if self.cx.synapse.read().is_none() {
+                self.events.push(Event::Dropped {
+                    payload: tr.payload,
+                    at_token: self.generated,
+                });
+                continue;
+            }
+            let task = SideTask {
+                id: self.cx.next_task_id(),
+                session: self.permit.id(),
+                role: tr.role,
+                payload: tr.payload.clone(),
+                main_pos: self.pos,
+                spawned_at: Instant::now(),
+            };
+            let task_id = task.id;
+            if self.cx.step.submit(task) {
+                self.outstanding += 1;
+                self.events.push(Event::Spawned {
+                    task_id,
+                    tag: tr.tag,
+                    payload: tr.payload,
+                    at_token: self.generated,
+                });
+            } else {
+                self.events.push(Event::Dropped {
+                    payload: tr.payload,
+                    at_token: self.generated,
+                });
+            }
+        }
+
+        // ── merge this session's finished side agents ──
+        for outcome in self.cx.step.poll_session_results(self.permit.id()) {
+            self.outstanding = self.outstanding.saturating_sub(1);
+            self.cx.merge_outcome(
+                outcome,
+                &self.hidden,
+                &mut self.ticket,
+                self.pos,
+                self.generated,
+                &mut self.events,
+            )?;
+        }
+        Ok(Some(delta))
+    }
+
+    /// Finalize: drain this session's in-flight side agents (bounded grace
+    /// window, so every spawned task reaches a terminal event) and build
+    /// the episode report.  Consumes the session — the permit and ticket
+    /// drop here, freeing the slot and the cache blocks.
+    pub fn finish(mut self) -> Result<EpisodeReport> {
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while self.outstanding > 0 && Instant::now() < deadline {
+            if let Some(outcome) = self
+                .cx
+                .step
+                .wait_session_result(self.permit.id(), Duration::from_millis(100))
+            {
+                self.outstanding = self.outstanding.saturating_sub(1);
+                self.cx.merge_outcome(
+                    outcome,
+                    &self.hidden,
+                    &mut self.ticket,
+                    self.pos,
+                    self.generated,
+                    &mut self.events,
+                )?;
+            }
+        }
+        for outcome in self.cx.step.poll_session_results(self.permit.id()) {
+            self.outstanding = self.outstanding.saturating_sub(1);
+            self.cx.merge_outcome(
+                outcome,
+                &self.hidden,
+                &mut self.ticket,
+                self.pos,
+                self.generated,
+                &mut self.events,
+            )?;
+        }
+        let elapsed = self.started.elapsed();
+        Ok(EpisodeReport {
+            prompt: self.prompt,
+            text: self.text,
+            tokens_generated: self.generated,
+            events: self.events,
+            elapsed,
+            main_tokens_per_sec: self.generated as f64 / elapsed.as_secs_f64().max(1e-9),
+            step_latency_p50_ns: self.cx.step_latency.percentile_ns(50.0),
+            step_latency_p95_ns: self.cx.step_latency.percentile_ns(95.0),
+            gate: self.cx.gate.stats(),
+            inject: self.cx.injector.stats(),
+            synapse: self.cx.synapse.stats(),
+            scheduler: self.cx.step.stats(),
+            memory: self.cx.tracker.snapshot(),
+            pool: self.cx.pool.stats(),
+        })
     }
 }

@@ -21,19 +21,39 @@
 //! is a block-table view into it, and finished side agents return their
 //! blocks for immediate reuse.
 //!
-//! Decode scheduling is tick-based since PR 4: the River/Stream lanes
-//! survive as *priorities inside a fused tick*, not as separate op
-//! streams.  Every tick the [`step::StepScheduler`] collects the next
-//! token from every runnable agent — the main agent's pending step plus
-//! one item per live side agent — and issues ONE `decode_batch` op over
-//! their paged block tables (the main step rides lane 0 at River priority
-//! while its context fits a side lane; afterwards it runs as its own
-//! River op *ahead of* the side batch, so the main agent is never queued
-//! behind side work).  Side tasks park FIFO when the batch width or the
-//! pool occupancy is saturated and are re-admitted the moment a slot
-//! frees — device ops per generated token fall from ~1.0 toward 1/B as
-//! the population grows (`benches/continuous_batch.rs` asserts this; the
-//! `/stats` endpoint exposes the tick/occupancy/park gauges live).
+//! Decode scheduling is tick-based since PR 4, and **multi-session**
+//! since PR 5: the River/Stream lanes survive as *priorities inside a
+//! fused tick*, not as separate op streams.  Every tick the
+//! [`step::StepScheduler`] collects the next token from every runnable
+//! agent — the pending main step of EVERY admitted session plus one item
+//! per live side agent — and issues ONE `decode_batch` op over their
+//! paged block tables (fusable mains ride the leading lanes at River
+//! priority while their contexts fit a side lane; a main that has
+//! outgrown a lane runs as its own River op *ahead of* the side batch,
+//! so no main is ever queued behind side work).  Side tasks park FIFO
+//! when the batch width or the pool occupancy is saturated and are
+//! re-admitted the moment a slot frees — device ops per generated token
+//! fall from ~1.0 toward 1/B as the population grows
+//! (`benches/continuous_batch.rs` asserts this; the `/stats` endpoint
+//! exposes the tick/occupancy/park gauges live).
+//!
+//! The episode → **session** vocabulary: an *episode* is one prompt's
+//! full generation; a *session* ([`cortex::CortexSession`], opened via
+//! `WarpCortex::open_session`) is an episode as a schedulable unit — an
+//! incremental state machine advancing one token per call, so S
+//! concurrent requests interleave on the same fused tick loop instead of
+//! serializing one blocked thread each (`run_episode` survives as a thin
+//! open/loop/finish wrapper).  Session admission is FIFO under
+//! [`cortex::CortexConfig::max_sessions`] and a KV-pool headroom gate
+//! (with a [`crate::model::KvPool::reserve`] reservation covering the
+//! admit→prefill window); beyond `max_parked_sessions` requests shed.
+//! Each session's side tasks carry its id ([`agent::SideTask::session`])
+//! and their outcomes route back to that session only — a disconnected
+//! session's outcomes are discarded, never leaked to another request.
+//! `benches/multi_session.rs` pins the payoff (ops/token at 8 sessions ≤
+//! 0.6× one session) and the step.rs proptests pin bit-identical
+//! equivalence to sequential episodes; [`capacity`] models the session
+//! axis (`utilization_sessions`/`max_sessions_compute`).
 //!
 //! Common prefixes are shared copy-on-write: the pool keeps a
 //! content-addressed registry of full blocks (prompt token chains via
@@ -66,7 +86,9 @@ pub use agent::{AgentCache, SideAgent, SideContext, SideOutcome, SideTask, StepA
 pub use batcher::Batcher;
 pub use baseline::StandardArchitecture;
 pub use capacity::{Bottleneck, CapacityError, CapacityModel, ComputeCosts};
-pub use cortex::{CortexConfig, EpisodeReport, Event, WarpCortex};
+pub use cortex::{
+    CortexConfig, CortexSession, EpisodeReport, Event, SessionError, WarpCortex,
+};
 pub use gate::{Gate, GateDecision};
 pub use inject::Injector;
 pub use memory::{MemKind, MemoryModel, MemoryTracker};
@@ -74,6 +96,7 @@ pub use prism::{AgentKind, AgentTicket, Prism};
 pub use router::{AgentRole, Router, RouterConfig, Trigger};
 pub use scheduler::{StreamScheduler, TaskRunner};
 pub use step::{
-    AdmitGate, AgentSpawner, FusedExec, MainStepOut, StepConfig, StepScheduler, StepStats,
+    AdmitGate, AgentSpawner, FusedExec, MainStepOut, SessionDenied, SessionPermit, SessionStats,
+    StepConfig, StepScheduler, StepSeams, StepStats,
 };
 pub use synapse::{adaptive_subset, SeedMode, Synapse, SynapseSnapshot};

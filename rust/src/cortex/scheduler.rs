@@ -275,6 +275,7 @@ mod tests {
     fn task(id: u64) -> SideTask {
         SideTask {
             id,
+            session: 0,
             role: AgentRole::Verify,
             payload: "x".into(),
             main_pos: 0,

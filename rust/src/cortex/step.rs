@@ -1,5 +1,6 @@
 //! The step scheduler: iteration-level continuous batching for main and
-//! side decode (the PR-4 tentpole).
+//! side decode (the PR-4 tentpole), generalized to **S concurrent
+//! sessions** (the PR-5 tentpole).
 //!
 //! The pre-PR-4 topology gave the device a *serial* op stream: the main
 //! agent issued one blocking decode op per token from the episode thread,
@@ -11,48 +12,59 @@
 //! that, every tick,
 //!
 //! 1. collects the next-token work item from every runnable agent — the
-//!    main agent's pending step plus one `(token, pos, block-table)` item
-//!    per live side agent (side agents are *pollable state machines*
+//!    pending main step of EVERY admitted session (the session table; a
+//!    bounded cross-session gather window lets rate-matched sessions land
+//!    in the same tick) plus one `(token, pos, block-table)` item per
+//!    live side agent (side agents are *pollable state machines*
 //!    ([`super::agent::SideAgent`]), not blocked threads),
-//! 2. fuses them into one [`crate::model::Engine::decode_fused`] call over
-//!    O(k) paged block tables (main rides lane 0 of the batch program at
-//!    River priority while its context fits; afterwards it runs as its own
-//!    River op *ahead of* the side batch — the main agent is never queued
-//!    behind side work),
-//! 3. fans results back: the main reply through its per-request completion
-//!    channel, side rows fed straight into each agent's state machine.
+//! 2. fuses them into one [`crate::model::Engine::decode_fused`] call
+//!    over O(k) paged block tables (fusable mains ride the leading lanes
+//!    of the batch program at River priority while their contexts fit;
+//!    outgrown mains run as their own River ops *ahead of* the side
+//!    batch — a main is never queued behind side work, only behind other
+//!    mains when fusable mains exceed the width: `main_deferred`),
+//! 3. fans results back: each main reply through its per-request
+//!    completion channel, side rows fed straight into each agent's state
+//!    machine, side outcomes routed to the owning session's queue.
 //!
-//! Admission is capacity-aware and continuous: new side tasks park in a
-//! FIFO queue and are admitted only while the live-agent count is under
-//! `max_active` AND the admission gate (pool occupancy, in production)
-//! says a fresh side cache still fits; a finishing agent's slot is
-//! refilled on the *very next tick*, not at batch boundaries.
+//! Admission is capacity-aware and continuous on BOTH axes.  Side tasks
+//! park in a FIFO queue and are admitted only while the live-agent count
+//! is under `max_active` AND the admission gate (pool occupancy, in
+//! production) says a fresh side cache still fits; a finishing agent's
+//! slot is refilled on the *very next tick*.  Sessions ([`SessionPermit`]
+//! via [`StepScheduler::open_session`]) admit FIFO under `max_sessions`
+//! and the session gate (prefill headroom, in production), park up to
+//! `max_parked_sessions`, and shed with [`SessionDenied::QueueFull`]
+//! beyond that — a disconnecting session (permit drop) frees its slot
+//! immediately and its undelivered outcomes are discarded.
 //!
-//! The scheduler is engine-agnostic behind three seams — the fused
-//! executor, the agent spawner and the admission gate — so the
-//! fused-vs-sequential equivalence proptest below and
-//! `benches/continuous_batch.rs` drive the full admit/park/finish protocol
-//! host-only.  All locks on the request path are poison-tolerant
-//! ([`crate::util::sync`]): one panicking caller surfaces as its own
-//! `Err`, it does not wedge every later request.
+//! The scheduler is engine-agnostic behind the [`StepSeams`] — the fused
+//! executor, the agent spawner and the two admission gates — so the
+//! fused-vs-sequential and multi-session equivalence proptests below and
+//! `benches/continuous_batch.rs`/`benches/multi_session.rs` drive the
+//! full admit/park/disconnect protocol host-only.  All locks on the
+//! request path are poison-tolerant ([`crate::util::sync`]): one
+//! panicking caller surfaces as its own `Err`, it does not wedge every
+//! later request.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::agent::{SideAgent, SideOutcome, SideState, SideTask};
-use crate::model::{FusedOut, FusedReq, KvCache, PagedKv, RawDecode};
-use crate::util::sync::lock_unpoisoned;
+use crate::model::{FusedOut, FusedReq, KvCache, MainLane, PagedKv, RawDecode};
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
 
-/// The fused decode executor: `(main item, main cache capacity, side
-/// items, fuse_main)` → one tick's results.  Production wraps
+/// The fused decode executor: `(main lanes, side items, fuse_main)` → one
+/// tick's results.  Since the multi-session generalisation a tick carries
+/// one main lane per concurrent session.  Production wraps
 /// [`crate::model::Engine::decode_fused`]; tests and the
-/// continuous-batching bench inject deterministic host-only stubs.
+/// continuous-batching benches inject deterministic host-only stubs.
 pub type FusedExec =
-    Arc<dyn Fn(Option<&FusedReq>, usize, &[FusedReq], bool) -> Result<FusedOut> + Send + Sync>;
+    Arc<dyn Fn(&[MainLane], &[FusedReq], bool) -> Result<FusedOut> + Send + Sync>;
 
 /// Builds a live [`SideAgent`] for an admitted task.  Production wraps
 /// [`SideAgent::spawn`] (prism registration + synapse seeding); tests use
@@ -64,6 +76,32 @@ pub type AgentSpawner = Arc<dyn Fn(SideTask) -> SideAgent + Send + Sync>;
 /// side cache's worst-case blocks must still fit under `max_blocks`.
 pub type AdmitGate = Arc<dyn Fn() -> bool + Send + Sync>;
 
+/// The scheduler's injectable seams, bundled: the fused executor, the
+/// side-agent spawner, and the two capacity gates (side-task admission and
+/// session admission).  [`StepSeams::new`] defaults both gates to
+/// always-admit; production wires them to [`crate::model::KvPool`]
+/// headroom checks.
+pub struct StepSeams {
+    pub exec: FusedExec,
+    pub spawner: AgentSpawner,
+    /// Consulted before each side-task admission.
+    pub admit: AdmitGate,
+    /// Consulted before each *session* admission (a main stream's worst
+    /// case prefill blocks must still fit).
+    pub session_admit: AdmitGate,
+}
+
+impl StepSeams {
+    pub fn new(exec: FusedExec, spawner: AgentSpawner) -> StepSeams {
+        StepSeams {
+            exec,
+            spawner,
+            admit: Arc::new(|| true),
+            session_admit: Arc::new(|| true),
+        }
+    }
+}
+
 /// Scheduler knobs (production values are derived from
 /// [`super::CortexConfig`] and the engine capacities).
 #[derive(Debug, Clone)]
@@ -72,18 +110,47 @@ pub struct StepConfig {
     /// per-tick fusion width.
     pub batch_width: usize,
     /// Rows one batch lane can hold (`caps.side_ctx`).  Decides whether a
-    /// pending main step can ride lane 0 (`len + 1 <= side_ctx`); a main
-    /// that has outgrown a lane runs as its own op and reserves NO lane —
-    /// sides keep the full width.
+    /// pending main step can ride a batch lane (`len + 1 <= side_ctx`); a
+    /// main that has outgrown a lane runs as its own op and reserves NO
+    /// lane — sides keep the full width.
     pub side_ctx: usize,
     /// Max concurrently *decoding* side agents; beyond this, tasks park.
     pub max_active: usize,
     /// Max parked tasks beyond the active ones (submit backpressure).
     pub max_parked: usize,
-    /// Ride the main step on lane 0 of the batch program while its context
-    /// fits a side-capacity lane (one device op per tick).  Off = the main
-    /// step always runs as its own River op ahead of the side batch.
+    /// Ride main steps on the leading lanes of the batch program while
+    /// their contexts fit a side-capacity lane (one device op per tick).
+    /// Off = every main step runs as its own River op ahead of the side
+    /// batch.
     pub fuse_main: bool,
+    /// Concurrent admitted sessions (main streams).  `open_session` calls
+    /// beyond this park FIFO until a session closes.  Clamped to ≥ 1.
+    pub max_sessions: usize,
+    /// Sessions allowed to wait for admission before `open_session`
+    /// rejects outright (load shedding — HTTP 503 at the serve layer).
+    pub max_parked_sessions: usize,
+    /// Cross-session gather window: when fewer mains are queued than there
+    /// are admitted sessions, wait up to this long for the other sessions'
+    /// concurrent steps before running the tick, so S sessions share one
+    /// fused op instead of S serial ones.  Zero = tick immediately.  The
+    /// window only ever delays a tick that would under-fill its main
+    /// lanes, and is negligible against a real device op.
+    pub main_gather: Duration,
+}
+
+impl Default for StepConfig {
+    fn default() -> StepConfig {
+        StepConfig {
+            batch_width: 1,
+            side_ctx: 64,
+            max_active: 4,
+            max_parked: 16,
+            fuse_main: true,
+            max_sessions: 8,
+            max_parked_sessions: 32,
+            main_gather: Duration::from_micros(200),
+        }
+    }
 }
 
 /// Result of one main-agent step routed through the scheduler.
@@ -118,10 +185,15 @@ pub struct StepStats {
     pub main_steps: u64,
     /// Side-agent steps served.
     pub side_steps: u64,
-    /// Ticks where the main step rode the side batch in one device op.
+    /// Ticks where main steps rode the side batch in one device op.
     pub fused_ticks: u64,
-    /// Main steps that had to wait a tick behind *another main* (never
-    /// behind side work; >0 only with concurrent episodes).
+    /// Ticks that served at least one main step (the session-occupancy
+    /// denominator: `main_steps / main_ticks` → concurrent main streams
+    /// per tick).
+    pub main_ticks: u64,
+    /// Main steps that had to wait a tick behind *other mains* (fusable
+    /// mains beyond the lane budget — the batch width minus the one lane
+    /// reserved for live side agents; never behind the side queue itself).
     pub main_deferred: u64,
 }
 
@@ -149,6 +221,240 @@ impl StepStats {
     }
 }
 
+/// Why a session admission was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionDenied {
+    /// The session park queue is full — shed load (HTTP 503 upstream).
+    QueueFull,
+    /// The scheduler is shutting down.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SessionDenied {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionDenied::QueueFull => write!(f, "session queue full"),
+            SessionDenied::ShuttingDown => write!(f, "scheduler shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SessionDenied {}
+
+/// Live session-layer statistics (the `/stats` `sessions` gauge block).
+#[derive(Debug, Clone, Default)]
+pub struct SessionStats {
+    /// `open_session` calls.
+    pub requested: u64,
+    /// Sessions granted a slot (== `completed + active` at any instant).
+    pub admitted: u64,
+    /// Sessions refused (queue full / shutdown).  `requested ==
+    /// admitted + rejected + parked` at any instant.
+    pub rejected: u64,
+    /// Sessions closed (permit dropped — finished or disconnected).
+    pub completed: u64,
+    /// Sessions currently holding a slot.
+    pub active: usize,
+    /// Sessions waiting FIFO for admission.
+    pub parked: usize,
+    /// High-water parked count.
+    pub parked_peak: usize,
+    /// Mean concurrent main streams per main-serving tick
+    /// (`main_steps / main_ticks`): the cross-session fusion figure,
+    /// → `max_sessions` under saturating load.
+    pub occupancy: f64,
+}
+
+/// FIFO session admission + per-session side-outcome routing.  Shared
+/// between the scheduler handle, the tick loop and every live
+/// [`SessionPermit`].
+struct SessionTable {
+    max_sessions: usize,
+    max_parked: usize,
+    admit: AdmitGate,
+    state: Mutex<SessionWait>,
+    cv: Condvar,
+    /// Session ids start at 1; 0 marks legacy (sessionless) side tasks,
+    /// whose outcomes go to the global results channel.
+    next_id: AtomicU64,
+    /// Per-session outcome queues; an entry exists exactly while the
+    /// session's permit is alive.
+    results: Mutex<HashMap<u64, VecDeque<SideOutcome>>>,
+    results_cv: Condvar,
+}
+
+/// All session gauges live under ONE mutex so every state transition is
+/// atomic with its counters — `/stats` snapshots reconcile exactly
+/// (`requested == admitted + rejected + waiting`,
+/// `admitted == completed + active`) at any instant, which the
+/// concurrent-client hammer test asserts while sampling mid-flight.
+#[derive(Default)]
+struct SessionWait {
+    active: usize,
+    waiting: usize,
+    /// FIFO tickets: `serving` is the head waiter's ticket.
+    next_ticket: u64,
+    serving: u64,
+    closing: bool,
+    requested: u64,
+    admitted: u64,
+    rejected: u64,
+    completed: u64,
+    parked_peak: usize,
+}
+
+impl SessionTable {
+    fn new(max_sessions: usize, max_parked: usize, admit: AdmitGate) -> Arc<SessionTable> {
+        Arc::new(SessionTable {
+            max_sessions: max_sessions.max(1),
+            max_parked,
+            admit,
+            state: Mutex::new(SessionWait::default()),
+            cv: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            results: Mutex::new(HashMap::new()),
+            results_cv: Condvar::new(),
+        })
+    }
+
+    /// Blocking FIFO admission: immediate when a slot and pool headroom are
+    /// free and nobody is already waiting; otherwise parks in ticket order
+    /// (re-checked on every close and on a short timeout, since the pool
+    /// gate has no condvar of its own).  Associated fn because the permit
+    /// must hold the table `Arc`.
+    fn open(table: &Arc<SessionTable>) -> std::result::Result<SessionPermit, SessionDenied> {
+        let mut st = lock_unpoisoned(&table.state);
+        st.requested += 1;
+        if st.closing {
+            st.rejected += 1;
+            return Err(SessionDenied::ShuttingDown);
+        }
+        if st.waiting == 0 && st.active < table.max_sessions && (table.admit)() {
+            st.active += 1;
+            st.admitted += 1;
+            drop(st);
+            return Ok(SessionTable::issue(table));
+        }
+        if st.waiting >= table.max_parked {
+            st.rejected += 1;
+            return Err(SessionDenied::QueueFull);
+        }
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.waiting += 1;
+        st.parked_peak = st.parked_peak.max(st.waiting);
+        loop {
+            if st.closing {
+                st.waiting -= 1;
+                st.rejected += 1;
+                if st.serving == ticket {
+                    // let the waiters behind this one drain in order
+                    st.serving += 1;
+                }
+                drop(st);
+                table.cv.notify_all();
+                return Err(SessionDenied::ShuttingDown);
+            }
+            if st.serving == ticket && st.active < table.max_sessions && (table.admit)() {
+                st.serving += 1;
+                st.waiting -= 1;
+                st.active += 1;
+                st.admitted += 1;
+                drop(st);
+                table.cv.notify_all();
+                return Ok(SessionTable::issue(table));
+            }
+            st = wait_timeout_unpoisoned(&table.cv, st, Duration::from_millis(5));
+        }
+    }
+
+    fn issue(table: &Arc<SessionTable>) -> SessionPermit {
+        let id = table.next_id.fetch_add(1, Ordering::Relaxed);
+        lock_unpoisoned(&table.results).insert(id, VecDeque::new());
+        SessionPermit {
+            table: table.clone(),
+            id,
+            shed: false,
+        }
+    }
+
+    fn close(&self, id: u64, shed: bool) {
+        {
+            let mut st = lock_unpoisoned(&self.state);
+            st.active = st.active.saturating_sub(1);
+            if shed {
+                // Post-admission load shed (e.g. the pool's atomic
+                // reservation lost a race): reclassify as rejected so the
+                // gauges reconcile AND operators alarming on `rejected`
+                // actually see the 503s — the session never generated.
+                st.admitted = st.admitted.saturating_sub(1);
+                st.rejected += 1;
+            } else {
+                st.completed += 1;
+            }
+        }
+        self.cv.notify_all();
+        lock_unpoisoned(&self.results).remove(&id);
+        self.results_cv.notify_all();
+    }
+
+    /// Route one outcome to its session's queue; `false` when the session
+    /// has already closed (outcome dropped — its agent's blocks are freed
+    /// with the agent either way).
+    fn route(&self, session: u64, outcome: SideOutcome) -> bool {
+        let mut map = lock_unpoisoned(&self.results);
+        match map.get_mut(&session) {
+            Some(q) => {
+                q.push_back(outcome);
+                drop(map);
+                self.results_cv.notify_all();
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn close_all(&self) {
+        lock_unpoisoned(&self.state).closing = true;
+        self.cv.notify_all();
+    }
+
+    fn active_now(&self) -> usize {
+        lock_unpoisoned(&self.state).active
+    }
+}
+
+/// RAII admission slot for one main stream.  Carries the session id that
+/// side tasks reference ([`SideTask::session`]) so their outcomes route
+/// back to this session only.  Dropping the permit closes the session:
+/// the slot frees, the next parked session admits, and any undelivered
+/// outcomes for this session are discarded.
+pub struct SessionPermit {
+    table: Arc<SessionTable>,
+    id: u64,
+    shed: bool,
+}
+
+impl SessionPermit {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Consume the permit as a *load shed*: the admission is reclassified
+    /// as `rejected` instead of `completed` (used when a post-admission
+    /// resource grab — the pool's atomic prefill reservation — loses a
+    /// race and the request answers 503 without ever generating).
+    pub fn shed(mut self) {
+        self.shed = true;
+    }
+}
+
+impl Drop for SessionPermit {
+    fn drop(&mut self) {
+        self.table.close(self.id, self.shed);
+    }
+}
+
 struct Gauges {
     submitted: AtomicU64,
     completed: AtomicU64,
@@ -159,6 +465,7 @@ struct Gauges {
     main_steps: AtomicU64,
     side_steps: AtomicU64,
     fused_ticks: AtomicU64,
+    main_ticks: AtomicU64,
     main_deferred: AtomicU64,
     active: AtomicUsize,
     parked: AtomicUsize,
@@ -177,6 +484,7 @@ impl Gauges {
             main_steps: AtomicU64::new(0),
             side_steps: AtomicU64::new(0),
             fused_ticks: AtomicU64::new(0),
+            main_ticks: AtomicU64::new(0),
             main_deferred: AtomicU64::new(0),
             active: AtomicUsize::new(0),
             parked: AtomicUsize::new(0),
@@ -211,38 +519,104 @@ pub struct StepScheduler {
     results_rx: Mutex<mpsc::Receiver<SideOutcome>>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
     gauges: Arc<Gauges>,
+    sessions: Arc<SessionTable>,
     max_pending: usize,
 }
 
 impl StepScheduler {
-    /// Spawn the tick loop over the three seams.  Production callers build
-    /// the seams from an engine + prism/synapse (see `WarpCortex::new`);
-    /// tests and benches inject host-only stubs.
-    pub fn new(
-        mut cfg: StepConfig,
-        exec: FusedExec,
-        spawner: AgentSpawner,
-        admit: AdmitGate,
-    ) -> Arc<StepScheduler> {
+    /// Spawn the tick loop over the injected seams.  Production callers
+    /// build the seams from an engine + prism/synapse (see
+    /// `WarpCortex::new`); tests and benches inject host-only stubs.
+    pub fn new(mut cfg: StepConfig, seams: StepSeams) -> Arc<StepScheduler> {
+        let StepSeams {
+            exec,
+            spawner,
+            admit,
+            session_admit,
+        } = seams;
         // A zero width would collect no side items while agents sit active
         // forever (a hot spin); one lane is the meaningful minimum.
         cfg.batch_width = cfg.batch_width.max(1);
         let (tx, rx) = mpsc::channel::<Cmd>();
         let (results_tx, results_rx) = mpsc::channel::<SideOutcome>();
         let gauges = Arc::new(Gauges::new());
+        let sessions =
+            SessionTable::new(cfg.max_sessions, cfg.max_parked_sessions, session_admit);
         let max_pending = cfg.max_active + cfg.max_parked;
         let g = gauges.clone();
+        let s = sessions.clone();
         let handle = std::thread::Builder::new()
             .name("warp-step".into())
-            .spawn(move || step_loop(cfg, rx, results_tx, exec, spawner, admit, g))
+            .spawn(move || step_loop(cfg, rx, results_tx, exec, spawner, admit, g, s))
             .expect("spawn step scheduler");
         Arc::new(StepScheduler {
             tx: Mutex::new(Some(tx)),
             results_rx: Mutex::new(results_rx),
             handle: Mutex::new(Some(handle)),
             gauges,
+            sessions,
             max_pending,
         })
+    }
+
+    /// Admit one main stream (blocking FIFO; see [`StepConfig`] for the
+    /// slot and queue bounds).  The permit's drop closes the session.
+    pub fn open_session(&self) -> std::result::Result<SessionPermit, SessionDenied> {
+        SessionTable::open(&self.sessions)
+    }
+
+    /// Non-blocking poll for finished side agents of one session.
+    pub fn poll_session_results(&self, session: u64) -> Vec<SideOutcome> {
+        let mut map = lock_unpoisoned(&self.sessions.results);
+        map.get_mut(&session)
+            .map(|q| q.drain(..).collect())
+            .unwrap_or_default()
+    }
+
+    /// Blocking wait for one session's next side outcome (None on timeout
+    /// or once the session is closed).
+    pub fn wait_session_result(&self, session: u64, timeout: Duration) -> Option<SideOutcome> {
+        let deadline = Instant::now() + timeout;
+        let mut map = lock_unpoisoned(&self.sessions.results);
+        loop {
+            match map.get_mut(&session) {
+                None => return None,
+                Some(q) => {
+                    if let Some(o) = q.pop_front() {
+                        return Some(o);
+                    }
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            map = wait_timeout_unpoisoned(&self.sessions.results_cv, map, deadline - now);
+        }
+    }
+
+    /// Session-layer gauges (the `/stats` `sessions` block).  The counter
+    /// snapshot is taken under the session lock, so it reconciles exactly
+    /// at any instant: `admitted == completed + active`,
+    /// `requested == admitted + rejected + parked`.
+    pub fn session_stats(&self) -> SessionStats {
+        let main_steps = self.gauges.main_steps.load(Ordering::Relaxed);
+        let main_ticks = self.gauges.main_ticks.load(Ordering::Relaxed);
+        let st = lock_unpoisoned(&self.sessions.state);
+        SessionStats {
+            requested: st.requested,
+            admitted: st.admitted,
+            rejected: st.rejected,
+            completed: st.completed,
+            active: st.active,
+            parked: st.waiting,
+            parked_peak: st.parked_peak,
+            occupancy: if main_ticks == 0 {
+                0.0
+            } else {
+                main_steps as f64 / main_ticks as f64
+            },
+        }
     }
 
     /// One main-agent decode step through the scheduler (blocks until the
@@ -355,15 +729,17 @@ impl StepScheduler {
             main_steps: g.main_steps.load(Ordering::Relaxed),
             side_steps: g.side_steps.load(Ordering::Relaxed),
             fused_ticks: g.fused_ticks.load(Ordering::Relaxed),
+            main_ticks: g.main_ticks.load(Ordering::Relaxed),
             main_deferred: g.main_deferred.load(Ordering::Relaxed),
         }
     }
 
     /// Stop the tick loop.  In-flight main steps error out; active and
     /// parked side tasks surface as `Failed` outcomes (delivered before the
-    /// loop exits, so a final `poll_results` still observes them).
-    /// Idempotent.
+    /// loop exits, so a final `poll_results` still observes them); parked
+    /// `open_session` callers wake with `ShuttingDown`.  Idempotent.
     pub fn shutdown(&self) {
+        self.sessions.close_all();
         let tx = lock_unpoisoned(&self.tx).take();
         drop(tx);
         if let Some(h) = lock_unpoisoned(&self.handle).take() {
@@ -378,8 +754,21 @@ impl Drop for StepScheduler {
     }
 }
 
-fn deliver(results: &mpsc::Sender<SideOutcome>, gauges: &Gauges, outcome: SideOutcome) {
-    let _ = results.send(outcome);
+fn deliver(
+    results: &mpsc::Sender<SideOutcome>,
+    sessions: &SessionTable,
+    gauges: &Gauges,
+    outcome: SideOutcome,
+) {
+    let session = outcome.task.session;
+    if session == 0 {
+        // Legacy (sessionless) task: the global results channel.
+        let _ = results.send(outcome);
+    } else {
+        // Session-routed: a closed (disconnected) session's outcome is
+        // dropped — it must never leak into another session's merge loop.
+        let _ = sessions.route(session, outcome);
+    }
     // AFTER the send: in_flight() == 0 implies the outcome is retrievable.
     gauges.completed.fetch_add(1, Ordering::SeqCst);
 }
@@ -398,7 +787,7 @@ fn failed_outcome(task: SideTask, error: String) -> SideOutcome {
     }
 }
 
-#[allow(clippy::too_many_lines)]
+#[allow(clippy::too_many_lines, clippy::too_many_arguments)]
 fn step_loop(
     cfg: StepConfig,
     rx: mpsc::Receiver<Cmd>,
@@ -407,6 +796,7 @@ fn step_loop(
     spawner: AgentSpawner,
     admit: AdmitGate,
     gauges: Arc<Gauges>,
+    sessions: Arc<SessionTable>,
 ) {
     let mut active: Vec<SideAgent> = Vec::new();
     let mut parked: VecDeque<SideTask> = VecDeque::new();
@@ -414,6 +804,13 @@ fn step_loop(
     // Round-robin cursor so `max_active > batch_width` populations are
     // served fairly across ticks.
     let mut rr: usize = 0;
+    // Gather back-off: after a full-window gather still fell short of the
+    // session goal (an admitted session is idle or stalled, not
+    // rate-matched), skip the next few gathers so that session taxes the
+    // others by at most ~1/(1+GATHER_BACKOFF) of the window per token —
+    // and probe again periodically so rate-matched populations recover.
+    const GATHER_BACKOFF: u32 = 4;
+    let mut gather_skip: u32 = 0;
     let mut open = true;
 
     fn enqueue(cmd: Cmd, mains: &mut VecDeque<MainReq>, parked: &mut VecDeque<SideTask>) {
@@ -445,6 +842,42 @@ fn step_loop(
                     }
                 }
             }
+            // Cross-session gather: if fewer mains are queued than there
+            // are admitted sessions, wait briefly for the other sessions'
+            // concurrent steps so they share this tick's fused op instead
+            // of paying one op each across consecutive ticks.  The goal
+            // over-counts sessions that are idle (draining side agents,
+            // stalled client sockets), so a missed window backs off before
+            // probing again — an idle session must not tax every other
+            // session's every token with the full wait.
+            // (Gathering only pays off when mains can actually fuse:
+            // with fuse_main off every main runs its own op regardless,
+            // so the window would be pure latency.)
+            if open && cfg.fuse_main && !mains.is_empty() && cfg.main_gather > Duration::ZERO {
+                let goal = sessions.active_now().min(cfg.batch_width);
+                if mains.len() >= goal {
+                    gather_skip = 0;
+                } else if gather_skip > 0 {
+                    gather_skip -= 1;
+                } else {
+                    let deadline = Instant::now() + cfg.main_gather;
+                    while mains.len() < goal {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(cmd) => enqueue(cmd, &mut mains, &mut parked),
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    }
+                    gather_skip = if mains.len() < goal { GATHER_BACKOFF } else { 0 };
+                }
+            }
         }
         if !open {
             // Shutdown: fail everything still pending (delivered like any
@@ -454,11 +887,16 @@ fn step_loop(
                 let _ = m.reply.send(Err(anyhow!("step scheduler shut down")));
             }
             for t in parked.drain(..) {
-                deliver(&results, &gauges, failed_outcome(t, "step scheduler shut down".into()));
+                deliver(
+                    &results,
+                    &sessions,
+                    &gauges,
+                    failed_outcome(t, "step scheduler shut down".into()),
+                );
             }
             for mut a in active.drain(..) {
                 a.fail("step scheduler shut down".into());
-                deliver(&results, &gauges, a.into_outcome());
+                deliver(&results, &sessions, &gauges, a.into_outcome());
             }
             return;
         }
@@ -470,7 +908,7 @@ fn step_loop(
             let agent = spawner(task);
             if agent.is_done() {
                 // born-failed (registration/seeding error)
-                deliver(&results, &gauges, agent.into_outcome());
+                deliver(&results, &sessions, &gauges, agent.into_outcome());
             } else {
                 active.push(agent);
             }
@@ -480,24 +918,51 @@ fn step_loop(
         gauges.parked_peak.fetch_max(parked.len(), Ordering::Relaxed);
 
         // ── 3. collect this tick's work items ───────────────────────────
-        let main_req = mains.pop_front();
-        let main_item = main_req.as_ref().map(|m| FusedReq {
-            token: m.token,
-            pos: m.pos,
-            paged: m.paged.clone(),
-        });
-        // Reserve lane 0 only for a main that can actually fuse; a main
-        // whose context has outgrown a side lane runs as its own op ahead
-        // of the batch, so the sides keep the full width.
-        let main_can_fuse = cfg.fuse_main
-            && main_req
-                .as_ref()
-                .map_or(false, |m| m.paged.len + 1 <= cfg.side_ctx);
-        let side_budget = if main_can_fuse {
-            cfg.batch_width.saturating_sub(1)
-        } else {
+        // Every queued session step runs this tick: fusable mains ride the
+        // leading batch lanes at River priority, the rest run as their own
+        // River ops ahead of the side batch.  When side agents are live,
+        // one lane stays reserved for them (width permitting) so a
+        // main-saturated session table cannot starve side progress
+        // indefinitely — PR 4's width-1 side guarantee, generalized.
+        // Fusable mains beyond the lane budget stay queued for the next
+        // tick (`main_deferred`): a main only ever waits behind other
+        // mains or that one reserved side lane, never behind the side
+        // *queue* itself.
+        // (Only *active* agents can contribute a side item this tick —
+        // admission already ran — so an empty active set frees the full
+        // width for mains.)
+        let main_lane_cap = if active.is_empty() {
             cfg.batch_width
+        } else {
+            cfg.batch_width.saturating_sub(1).max(1)
         };
+        let mut tick_mains: Vec<MainReq> = Vec::new();
+        let mut fused_lanes = 0usize;
+        let mut overflow: VecDeque<MainReq> = VecDeque::new();
+        while let Some(m) = mains.pop_front() {
+            let fusable = cfg.fuse_main && m.paged.len + 1 <= cfg.side_ctx;
+            if fusable && fused_lanes >= main_lane_cap {
+                overflow.push_back(m);
+            } else {
+                if fusable {
+                    fused_lanes += 1;
+                }
+                tick_mains.push(m);
+            }
+        }
+        mains = overflow;
+        let lanes: Vec<MainLane> = tick_mains
+            .iter()
+            .map(|m| MainLane {
+                req: FusedReq {
+                    token: m.token,
+                    pos: m.pos,
+                    paged: m.paged.clone(),
+                },
+                capacity: m.capacity,
+            })
+            .collect();
+        let side_budget = cfg.batch_width.saturating_sub(fused_lanes);
         let mut idx: Vec<usize> = Vec::new();
         let mut sides: Vec<FusedReq> = Vec::new();
         let n = active.len();
@@ -519,11 +984,11 @@ fn step_loop(
             rr = (rr + 1) % n;
         }
 
-        if main_item.is_none() && sides.is_empty() {
+        if lanes.is_empty() && sides.is_empty() {
             // Nothing runnable: sweep agents that just finished; if tasks
             // are parked behind the capacity gate, wait briefly for blocks
             // to free (or for new commands) instead of spinning hot.
-            sweep_done(&mut active, &results, &gauges);
+            sweep_done(&mut active, &results, &sessions, &gauges);
             if active.is_empty() && !parked.is_empty() {
                 match rx.recv_timeout(Duration::from_millis(1)) {
                     Ok(cmd) => enqueue(cmd, &mut mains, &mut parked),
@@ -542,35 +1007,41 @@ fn step_loop(
                 .main_deferred
                 .fetch_add(mains.len() as u64, Ordering::Relaxed);
         }
-        let main_capacity = main_req.as_ref().map(|m| m.capacity).unwrap_or(0);
         // Contain executor panics like the legacy batcher: this tick's
         // participants get Err/Failed results, the loop keeps serving.
         let tick = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            exec(main_item.as_ref(), main_capacity, &sides, cfg.fuse_main)
+            exec(&lanes, &sides, cfg.fuse_main)
         }))
         .unwrap_or_else(|_| Err(anyhow!("fused executor panicked")));
         match tick {
             Ok(FusedOut {
-                main,
+                mains: main_res,
                 sides: side_out,
                 side_error,
                 device_ops,
             }) => {
                 gauges.device_ops.fetch_add(device_ops, Ordering::Relaxed);
-                if device_ops == 1 && main_item.is_some() && !idx.is_empty() {
-                    gauges.fused_ticks.fetch_add(1, Ordering::Relaxed);
+                if !tick_mains.is_empty() {
+                    gauges.main_ticks.fetch_add(1, Ordering::Relaxed);
+                    if device_ops == 1 && !idx.is_empty() {
+                        gauges.fused_ticks.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
-                if let Some(req) = main_req {
+                let mut res_it = main_res.into_iter();
+                for req in tick_mains {
                     gauges.main_steps.fetch_add(1, Ordering::Relaxed);
-                    let reply = match main {
-                        Some(raw) => Ok(raw),
-                        None => Err(anyhow!("fused executor returned no main result")),
+                    // Per-lane isolation: one session's fault errs only its
+                    // own step; the other sessions' replies still land.
+                    let reply = match res_it.next() {
+                        Some(Ok(raw)) => Ok(raw),
+                        Some(Err(msg)) => Err(anyhow!("main lane failed: {msg}")),
+                        None => Err(anyhow!("fused executor dropped a main lane result")),
                     };
                     let _ = req.reply.send(reply);
                 }
                 if let Some(msg) = side_error {
-                    // The side half of an unfused tick failed after the
-                    // main op succeeded: fail only these lanes.
+                    // The side half of the tick failed after the main ops
+                    // succeeded: fail only these lanes.
                     for slot in &idx {
                         active[*slot].fail(format!("side batch failed: {msg}"));
                     }
@@ -588,7 +1059,7 @@ fn step_loop(
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                if let Some(req) = main_req {
+                for req in tick_mains {
                     let _ = req.reply.send(Err(anyhow!("{msg}")));
                 }
                 for slot in &idx {
@@ -598,17 +1069,22 @@ fn step_loop(
         }
 
         // ── 5. sweep: deliver finished agents; slots refill next tick ───
-        sweep_done(&mut active, &results, &gauges);
+        sweep_done(&mut active, &results, &sessions, &gauges);
         gauges.active.store(active.len(), Ordering::Relaxed);
     }
 }
 
-fn sweep_done(active: &mut Vec<SideAgent>, results: &mpsc::Sender<SideOutcome>, gauges: &Gauges) {
+fn sweep_done(
+    active: &mut Vec<SideAgent>,
+    results: &mpsc::Sender<SideOutcome>,
+    sessions: &SessionTable,
+    gauges: &Gauges,
+) {
     let mut i = 0;
     while i < active.len() {
         if active[i].is_done() {
             let agent = active.swap_remove(i);
-            deliver(results, gauges, agent.into_outcome());
+            deliver(results, sessions, gauges, agent.into_outcome());
         } else {
             i += 1;
         }
@@ -646,31 +1122,37 @@ pub mod testing {
     }
 
     /// Host-only fused executor mirroring [`crate::model::Engine::decode_fused`]'s
-    /// op accounting (1 op fused / sides-only / main-only, 2 when an
-    /// unfusable main runs ahead of the side batch).
+    /// op accounting: one batch op carries every fusable main plus the
+    /// sides, and each unfusable main pays its own op ahead of it (a lone
+    /// main with no sides is one single-decode op either way).
     pub fn stub_exec(cfg: ModelConfig, side_ctx: usize, batch_width: usize) -> FusedExec {
-        Arc::new(move |main, _main_cap, sides, fuse_main| {
-            if main.is_none() && sides.is_empty() {
+        Arc::new(move |mains, sides, fuse_main| {
+            if mains.is_empty() && sides.is_empty() {
                 anyhow::bail!("empty tick");
             }
-            let main_out = main.map(|m| stub_raw(&cfg, m.token, m.pos, m.paged.len));
+            let main_out: Vec<std::result::Result<RawDecode, String>> = mains
+                .iter()
+                .map(|m| Ok(stub_raw(&cfg, m.req.token, m.req.pos, m.req.paged.len)))
+                .collect();
             let side_out: Vec<RawDecode> = sides
                 .iter()
                 .map(|s| stub_raw(&cfg, s.token, s.pos, s.paged.len))
                 .collect();
-            let fused = match main {
-                None => true,
-                Some(m) => {
-                    fuse_main && m.paged.len + 1 <= side_ctx && sides.len() + 1 <= batch_width
-                }
-            };
-            let device_ops = if main.is_some() && !sides.is_empty() && !fused {
-                2
-            } else {
-                1
-            };
+            let fused = mains
+                .iter()
+                .filter(|m| fuse_main && m.req.paged.len + 1 <= side_ctx)
+                .count();
+            if fused + sides.len() > batch_width {
+                anyhow::bail!(
+                    "stub_exec: {fused} fused mains + {} sides exceed width {batch_width}",
+                    sides.len()
+                );
+            }
+            let own = (mains.len() - fused) as u64;
+            let batched = fused + sides.len();
+            let device_ops = own + u64::from(batched > 0);
             Ok(FusedOut {
-                main: main_out,
+                mains: main_out,
                 sides: side_out,
                 side_error: None,
                 device_ops,
@@ -708,8 +1190,13 @@ mod tests {
     }
 
     fn task(id: u64, payload: &str) -> SideTask {
+        session_task(id, 0, payload)
+    }
+
+    fn session_task(id: u64, session: u64, payload: &str) -> SideTask {
         SideTask {
             id,
+            session,
             role: AgentRole::Verify,
             payload: payload.into(),
             main_pos: 0,
@@ -778,10 +1265,17 @@ mod tests {
         let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
         let side_ctx = 64;
         let sched = StepScheduler::new(
-            StepConfig { batch_width: 4, side_ctx: 64, max_active: 4, max_parked: 16, fuse_main: true },
-            stub_exec(cfg.clone(), side_ctx, 4),
-            bare_spawner(pool, side_ctx, 8, 3),
-            Arc::new(|| true),
+            StepConfig {
+                batch_width: 4,
+                side_ctx: 64,
+                max_active: 4,
+                max_parked: 16,
+                ..StepConfig::default()
+            },
+            StepSeams::new(
+                stub_exec(cfg.clone(), side_ctx, 4),
+                bare_spawner(pool, side_ctx, 8, 3),
+            ),
         );
         for i in 0..6u64 {
             assert!(sched.submit(task(i, "check the cache")));
@@ -809,10 +1303,17 @@ mod tests {
         let gate = Arc::new(AtomicBool::new(false));
         let g = gate.clone();
         let sched = StepScheduler::new(
-            StepConfig { batch_width: 2, side_ctx: 64, max_active: 1, max_parked: 2, fuse_main: true },
-            stub_exec(cfg.clone(), 64, 2),
-            bare_spawner(pool, 64, 4, 1),
-            Arc::new(move || g.load(Ordering::SeqCst)),
+            StepConfig {
+                batch_width: 2,
+                side_ctx: 64,
+                max_active: 1,
+                max_parked: 2,
+                ..StepConfig::default()
+            },
+            StepSeams {
+                admit: Arc::new(move || g.load(Ordering::SeqCst)),
+                ..StepSeams::new(stub_exec(cfg.clone(), 64, 2), bare_spawner(pool, 64, 4, 1))
+            },
         );
         // Gate closed: everything parks; the 4th submit exceeds
         // max_active + max_parked and is rejected.
@@ -843,10 +1344,17 @@ mod tests {
         let cfg = tiny_cfg();
         let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
         let sched = StepScheduler::new(
-            StepConfig { batch_width: 2, side_ctx: 64, max_active: 1, max_parked: 8, fuse_main: true },
-            stub_exec(cfg.clone(), 64, 2),
-            bare_spawner(pool, 64, 4, 1),
-            Arc::new(|| false), // never admit: tasks stay parked
+            StepConfig {
+                batch_width: 2,
+                side_ctx: 64,
+                max_active: 1,
+                max_parked: 8,
+                ..StepConfig::default()
+            },
+            StepSeams {
+                admit: Arc::new(|| false), // never admit: tasks stay parked
+                ..StepSeams::new(stub_exec(cfg.clone(), 64, 2), bare_spawner(pool, 64, 4, 1))
+            },
         );
         assert!(sched.submit(task(1, "x")));
         assert!(sched.submit(task(2, "y")));
@@ -874,10 +1382,14 @@ mod tests {
         let exec: FusedExec = {
             let cfg = cfg.clone();
             let poisoned = poisoned.clone();
-            Arc::new(move |main, _mc, sides, _fuse| {
+            Arc::new(move |mains: &[MainLane], sides: &[FusedReq], _fuse: bool| {
+                let main_out: Vec<std::result::Result<RawDecode, String>> = mains
+                    .iter()
+                    .map(|m| Ok(stub_raw(&cfg, m.req.token, m.req.pos, m.req.paged.len)))
+                    .collect();
                 if poisoned.load(Ordering::SeqCst) && !sides.is_empty() {
                     return Ok(FusedOut {
-                        main: main.map(|m| stub_raw(&cfg, m.token, m.pos, m.paged.len)),
+                        mains: main_out,
                         sides: Vec::new(),
                         side_error: Some("injected side fault".into()),
                         device_ops: 2,
@@ -888,7 +1400,7 @@ mod tests {
                     .map(|s| stub_raw(&cfg, s.token, s.pos, s.paged.len))
                     .collect();
                 Ok(FusedOut {
-                    main: main.map(|m| stub_raw(&cfg, m.token, m.pos, m.paged.len)),
+                    mains: main_out,
                     sides: side_out,
                     side_error: None,
                     device_ops: 1,
@@ -896,10 +1408,14 @@ mod tests {
             })
         };
         let sched = StepScheduler::new(
-            StepConfig { batch_width: 4, side_ctx: 64, max_active: 4, max_parked: 8, fuse_main: true },
-            exec,
-            bare_spawner(pool.clone(), 64, 4, 9),
-            Arc::new(|| true),
+            StepConfig {
+                batch_width: 4,
+                side_ctx: 64,
+                max_active: 4,
+                max_parked: 8,
+                ..StepConfig::default()
+            },
+            StepSeams::new(exec, bare_spawner(pool.clone(), 64, 4, 9)),
         );
         // Both agents land in a poisoned tick: Failed, with the side-batch
         // message — while a concurrent main step still succeeds.
@@ -953,10 +1469,21 @@ mod tests {
                 Arc::new(move || flap.fetch_add(1, Ordering::Relaxed) % 3 != 1)
             };
             let sched = StepScheduler::new(
-                StepConfig { batch_width, side_ctx, max_active, max_parked: n_tasks + 1, fuse_main },
-                stub_exec(cfg.clone(), side_ctx, batch_width),
-                bare_spawner(pool.clone(), side_ctx, gen_budget, seed),
-                admit,
+                StepConfig {
+                    batch_width,
+                    side_ctx,
+                    max_active,
+                    max_parked: n_tasks + 1,
+                    fuse_main,
+                    ..StepConfig::default()
+                },
+                StepSeams {
+                    admit,
+                    ..StepSeams::new(
+                        stub_exec(cfg.clone(), side_ctx, batch_width),
+                        bare_spawner(pool.clone(), side_ctx, gen_budget, seed),
+                    )
+                },
             );
 
             let payloads: Vec<String> =
@@ -1021,6 +1548,455 @@ mod tests {
                 crate::prop_assert!(out.logits == want.logits, "main logits diverged at step {step}");
                 crate::prop_assert!(out.hidden == want.hidden, "main hidden diverged at step {step}");
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sessions_park_fifo_and_admit_as_slots_free() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let sched = StepScheduler::new(
+            StepConfig {
+                batch_width: 2,
+                side_ctx: 64,
+                max_sessions: 1,
+                max_parked_sessions: 4,
+                ..StepConfig::default()
+            },
+            StepSeams::new(
+                stub_exec(cfg.clone(), 64, 2),
+                bare_spawner(pool.clone(), 64, 4, 1),
+            ),
+        );
+        let first = sched.open_session().expect("first session admits");
+        let (tx, rx) = mpsc::channel();
+        let waiter = {
+            let sched = sched.clone();
+            std::thread::spawn(move || {
+                let p = sched.open_session().expect("parked session eventually admits");
+                tx.send(p.id()).unwrap();
+            })
+        };
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while sched.session_stats().parked == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let ss = sched.session_stats();
+        assert_eq!(ss.parked, 1, "second session must park behind the slot");
+        assert_eq!(ss.admitted, 1);
+        assert!(rx.try_recv().is_err(), "parked session admitted early");
+        // Freeing the slot admits the parked session.
+        let first_id = first.id();
+        drop(first);
+        let second_id = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("parked session admitted after the slot freed");
+        assert!(second_id > first_id, "sessions admit in arrival order");
+        waiter.join().unwrap();
+        let ss = sched.session_stats();
+        assert_eq!(ss.requested, 2);
+        assert_eq!(ss.admitted, 2);
+        assert_eq!(ss.rejected, 0);
+        assert_eq!(ss.completed, 2);
+        assert_eq!(ss.active, 0);
+        assert_eq!(ss.parked, 0);
+        assert_eq!(ss.parked_peak, 1);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn session_queue_backpressure_and_shutdown_reject_cleanly() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let sched = StepScheduler::new(
+            StepConfig {
+                max_sessions: 1,
+                max_parked_sessions: 0,
+                ..StepConfig::default()
+            },
+            StepSeams::new(
+                stub_exec(cfg.clone(), 64, 1),
+                bare_spawner(pool.clone(), 64, 4, 1),
+            ),
+        );
+        let held = sched.open_session().expect("slot free");
+        // No parking allowed: the second request sheds immediately.
+        assert_eq!(sched.open_session().unwrap_err(), SessionDenied::QueueFull);
+        assert_eq!(sched.session_stats().rejected, 1);
+        drop(held);
+        drop(sched.open_session().expect("slot freed"));
+        sched.shutdown();
+
+        // A parked opener wakes with ShuttingDown when the scheduler stops.
+        let sched2 = StepScheduler::new(
+            StepConfig {
+                max_sessions: 1,
+                max_parked_sessions: 4,
+                ..StepConfig::default()
+            },
+            StepSeams::new(stub_exec(cfg.clone(), 64, 1), bare_spawner(pool, 64, 4, 1)),
+        );
+        let hold = sched2.open_session().unwrap();
+        let waiter = {
+            let s = sched2.clone();
+            std::thread::spawn(move || s.open_session().unwrap_err())
+        };
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while sched2.session_stats().parked == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(sched2.session_stats().parked, 1);
+        sched2.shutdown();
+        assert_eq!(waiter.join().unwrap(), SessionDenied::ShuttingDown);
+        assert_eq!(
+            sched2.open_session().unwrap_err(),
+            SessionDenied::ShuttingDown,
+            "post-shutdown opens must refuse, not hang"
+        );
+        drop(hold);
+    }
+
+    /// The tentpole property at scheduler level: two concurrent sessions'
+    /// main steps share fused ticks — neither serializes behind the other
+    /// (no cross-session head-of-line blocking) and neither is ever
+    /// deferred behind side work.
+    #[test]
+    fn concurrent_sessions_fuse_into_shared_ticks() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let sched = StepScheduler::new(
+            StepConfig {
+                batch_width: 4,
+                side_ctx: 64,
+                max_sessions: 4,
+                max_parked_sessions: 8,
+                main_gather: Duration::from_millis(2),
+                ..StepConfig::default()
+            },
+            StepSeams::new(
+                stub_exec(cfg.clone(), 64, 4),
+                bare_spawner(pool.clone(), 64, 4, 5),
+            ),
+        );
+        const STEPS: usize = 32;
+        std::thread::scope(|scope| {
+            for s in 0..2usize {
+                let sched = sched.clone();
+                let pool = pool.clone();
+                scope.spawn(move || {
+                    let _permit = sched.open_session().expect("session admits");
+                    let mut kv = pool.new_cache(128);
+                    for step in 0..STEPS {
+                        let tok = ((s * 31 + step) % 200) as i32;
+                        sched
+                            .main_step(tok, kv.len() as i32, &mut kv)
+                            .expect("main step");
+                    }
+                });
+            }
+        });
+        let st = sched.stats();
+        assert_eq!(st.main_steps, (2 * STEPS) as u64);
+        assert_eq!(st.main_deferred, 0, "fusable mains share a tick, never defer");
+        assert!(
+            st.device_ops < st.main_steps,
+            "{} ops for {} steps: sessions never fused",
+            st.device_ops,
+            st.main_steps
+        );
+        let ss = sched.session_stats();
+        assert!(
+            ss.occupancy > 1.0,
+            "occupancy {} must exceed one stream per tick",
+            ss.occupancy
+        );
+        assert_eq!(ss.admitted, 2);
+        assert_eq!(ss.completed, 2);
+        sched.shutdown();
+    }
+
+    /// Main-saturated session tables must not starve side agents: with as
+    /// many pending fusable mains as batch lanes every tick, one lane
+    /// stays reserved for live side work, so the side outcome lands while
+    /// the mains are still flowing — not only after they drain.
+    #[test]
+    fn saturated_mains_leave_a_lane_for_side_agents() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let sched = StepScheduler::new(
+            StepConfig {
+                batch_width: 2,
+                side_ctx: 64,
+                max_sessions: 3,
+                max_parked_sessions: 4,
+                main_gather: Duration::from_millis(1),
+                ..StepConfig::default()
+            },
+            StepSeams::new(
+                stub_exec(cfg.clone(), 64, 2),
+                bare_spawner(pool.clone(), 64, 4, 11),
+            ),
+        );
+        let a = sched.open_session().unwrap();
+        assert!(sched.submit(session_task(1, a.id(), "starved?")));
+        const DRIVER_STEPS: usize = 60;
+        let done_steps = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|scope| {
+            // Two sessions keep a fusable main pending essentially every
+            // tick — enough to fill both lanes without the reservation.
+            for s in 0..2usize {
+                let sched = sched.clone();
+                let pool = pool.clone();
+                let done = done_steps.clone();
+                scope.spawn(move || {
+                    let _p = sched.open_session().expect("driver session admits");
+                    let mut kv = pool.new_cache(128);
+                    for step in 0..DRIVER_STEPS {
+                        let tok = ((s * 13 + step) % 200) as i32;
+                        sched
+                            .main_step(tok, kv.len() as i32, &mut kv)
+                            .expect("main step");
+                        done.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+            let got = sched
+                .wait_session_result(a.id(), Duration::from_secs(10))
+                .expect("side agent starved behind saturating mains");
+            assert!(got.error.is_none(), "{:?}", got.error);
+            let mains_done = done_steps.load(Ordering::SeqCst);
+            assert!(
+                (mains_done as usize) < 2 * DRIVER_STEPS - 10,
+                "side outcome only arrived after the mains drained \
+                 (starvation): {mains_done} of {} main steps already done",
+                2 * DRIVER_STEPS
+            );
+        });
+        drop(a);
+        sched.shutdown();
+    }
+
+    /// Side outcomes route to the session that spawned them — never to
+    /// another session's merge loop or the global channel — and a
+    /// disconnected session's undelivered outcomes are dropped, not
+    /// leaked.
+    #[test]
+    fn session_outcome_routing_is_isolated() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let sched = StepScheduler::new(
+            StepConfig {
+                batch_width: 4,
+                side_ctx: 64,
+                max_sessions: 4,
+                ..StepConfig::default()
+            },
+            StepSeams::new(
+                stub_exec(cfg.clone(), 64, 4),
+                bare_spawner(pool.clone(), 64, 4, 3),
+            ),
+        );
+        let a = sched.open_session().unwrap();
+        let b = sched.open_session().unwrap();
+        assert!(sched.submit(session_task(1, a.id(), "alpha")));
+        assert!(sched.submit(session_task(2, b.id(), "beta")));
+        let got_a = sched
+            .wait_session_result(a.id(), Duration::from_secs(5))
+            .expect("a's outcome");
+        let got_b = sched
+            .wait_session_result(b.id(), Duration::from_secs(5))
+            .expect("b's outcome");
+        assert_eq!(got_a.task.id, 1);
+        assert_eq!(got_b.task.id, 2);
+        assert!(sched.poll_session_results(a.id()).is_empty());
+        assert!(
+            sched.poll_results().is_empty(),
+            "session outcomes must not leak to the global channel"
+        );
+        // Disconnect: the session closes before its outcome lands.
+        let c = sched.open_session().unwrap();
+        let c_id = c.id();
+        assert!(sched.submit(session_task(3, c_id, "gamma")));
+        drop(c);
+        assert!(
+            sched.drain(Duration::from_secs(5)),
+            "the orphaned agent still runs to completion"
+        );
+        assert!(sched.poll_results().is_empty());
+        assert!(sched.poll_session_results(c_id).is_empty());
+        assert!(
+            sched
+                .wait_session_result(c_id, Duration::from_millis(10))
+                .is_none(),
+            "a closed session's queue is gone"
+        );
+        drop((a, b));
+        sched.shutdown();
+    }
+
+    /// The acceptance-criteria proptest: S concurrent sessions through the
+    /// fused tick loop are bit-identical to the same S episodes run
+    /// sequentially, across random widths, session caps (forcing FIFO
+    /// parking), gather windows, side-task loads and mid-stream
+    /// disconnects.
+    #[test]
+    fn multi_session_fused_equals_sequential_episodes() {
+        struct Plan {
+            cut: usize,
+            disconnect: bool,
+            sides: Vec<String>,
+        }
+        check("S fused sessions ≡ S sequential episodes", 20, |g| {
+            let cfg = tiny_cfg();
+            let pool = KvPool::new(
+                &cfg,
+                KvPoolConfig { block_tokens: 8, ..Default::default() },
+            );
+            let side_ctx = 64;
+            let batch_width = g.usize_in(1..6);
+            let n_sessions = g.usize_in(1..5);
+            let max_sessions = g.usize_in(1..n_sessions + 1);
+            let gen_budget = g.usize_in(1..6);
+            let seed = g.usize_in(1..1000) as u64;
+            let fuse_main = g.bool();
+            let gather = Duration::from_micros(g.usize_in(0..400) as u64);
+            let sched = StepScheduler::new(
+                StepConfig {
+                    batch_width,
+                    side_ctx,
+                    max_active: 4,
+                    max_parked: 64,
+                    fuse_main,
+                    max_sessions,
+                    max_parked_sessions: n_sessions + 1,
+                    main_gather: gather,
+                },
+                StepSeams::new(
+                    stub_exec(cfg.clone(), side_ctx, batch_width),
+                    bare_spawner(pool.clone(), side_ctx, gen_budget, seed),
+                ),
+            );
+            let plans: Vec<Plan> = (0..n_sessions)
+                .map(|_| {
+                    let steps = g.usize_in(1..10);
+                    let disconnect = g.bool() && g.bool(); // ~25%
+                    let cut = if disconnect { g.usize_in(0..steps) } else { steps };
+                    let sides = (0..g.usize_in(0..3))
+                        .map(|j| format!("probe {j} {}", g.usize_in(0..50)))
+                        .collect();
+                    Plan { cut, disconnect, sides }
+                })
+                .collect();
+            type SessRun = std::result::Result<(Vec<MainStepOut>, Vec<SideOutcome>), String>;
+            let runs: Vec<SessRun> = std::thread::scope(|scope| {
+                let handles: Vec<_> = plans
+                    .iter()
+                    .enumerate()
+                    .map(|(s, plan)| {
+                        let sched = sched.clone();
+                        let pool = pool.clone();
+                        scope.spawn(move || -> SessRun {
+                            let permit =
+                                sched.open_session().map_err(|e| format!("open: {e}"))?;
+                            let sid = permit.id();
+                            for (j, payload) in plan.sides.iter().enumerate() {
+                                let t = session_task((s * 100 + j + 1) as u64, sid, payload);
+                                if !sched.submit(t) {
+                                    return Err(format!("session {s}: side submit rejected"));
+                                }
+                            }
+                            let mut kv = pool.new_cache(128);
+                            let mut outs = Vec::new();
+                            for step in 0..plan.cut {
+                                let tok = ((s * 31 + step * 7) % 200) as i32;
+                                let out = sched
+                                    .main_step(tok, kv.len() as i32, &mut kv)
+                                    .map_err(|e| format!("session {s} step {step}: {e:#}"))?;
+                                outs.push(out);
+                            }
+                            let mut got = Vec::new();
+                            if !plan.disconnect {
+                                let deadline = Instant::now() + Duration::from_secs(10);
+                                while got.len() < plan.sides.len()
+                                    && Instant::now() < deadline
+                                {
+                                    if let Some(o) = sched
+                                        .wait_session_result(sid, Duration::from_millis(20))
+                                    {
+                                        got.push(o);
+                                    }
+                                }
+                            }
+                            drop(permit);
+                            Ok((outs, got))
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("session thread"))
+                    .collect()
+            });
+            sched.drain(Duration::from_secs(10));
+            let ss = sched.session_stats();
+            sched.shutdown();
+            for (s, (plan, run)) in plans.iter().zip(&runs).enumerate() {
+                let (outs, sides) = match run {
+                    Ok(r) => r,
+                    Err(e) => return Err(e.clone()),
+                };
+                // Main chain ≡ the direct per-step stub (pos == len == step
+                // on a private main cache).
+                crate::prop_assert!(outs.len() == plan.cut, "session {s} lost steps");
+                for (step, out) in outs.iter().enumerate() {
+                    let tok = ((s * 31 + step * 7) % 200) as i32;
+                    let want = stub_raw(&cfg, tok, step as i32, step);
+                    crate::prop_assert!(
+                        out.logits == want.logits,
+                        "session {s} logits diverged at step {step}"
+                    );
+                    crate::prop_assert!(
+                        out.hidden == want.hidden,
+                        "session {s} hidden diverged at step {step}"
+                    );
+                }
+                // Side outcomes ≡ the sequential per-agent reference.
+                if !plan.disconnect {
+                    crate::prop_assert!(
+                        sides.len() == plan.sides.len(),
+                        "session {s}: {} of {} side outcomes",
+                        sides.len(),
+                        plan.sides.len()
+                    );
+                    let mut sorted: Vec<&SideOutcome> = sides.iter().collect();
+                    sorted.sort_by_key(|o| o.task.id);
+                    for (j, payload) in plan.sides.iter().enumerate() {
+                        let id = (s * 100 + j + 1) as u64;
+                        let prompt_ids = Tokenizer::new().encode(payload, false);
+                        let mut reference = SideAgent::from_parts(
+                            session_task(id, 0, payload),
+                            AgentCache::Bare(pool.new_cache(side_ctx)),
+                            0,
+                            7,
+                            prompt_ids,
+                            gen_budget,
+                            sampler_cfg(seed),
+                        );
+                        run_sequential(&cfg, &mut reference);
+                        assert_outcomes_match(sorted[j], &reference.into_outcome());
+                    }
+                }
+            }
+            // Gauge reconciliation: every request accounted for exactly once.
+            crate::prop_assert!(ss.requested == n_sessions as u64, "requested {ss:?}");
+            crate::prop_assert!(
+                ss.admitted + ss.rejected == ss.requested,
+                "admission must account every request: {ss:?}"
+            );
+            crate::prop_assert!(ss.rejected == 0, "queue was sized to fit: {ss:?}");
+            crate::prop_assert!(ss.completed == ss.admitted, "every permit dropped: {ss:?}");
+            crate::prop_assert!(ss.active == 0 && ss.parked == 0, "{ss:?}");
             Ok(())
         });
     }

@@ -22,18 +22,29 @@
 //!   ([`cortex::router`]), the Validation Gate ([`cortex::gate`]),
 //!   Referential Injection ([`cortex::inject`]) and the step scheduler
 //!   ([`cortex::step`]): iteration-level continuous batching that fuses
-//!   the main agent's and every side agent's next decode step into one
-//!   device op per tick over paged block tables ([`runtime::device`]
-//!   lanes survive as priorities *inside* the tick — the main step rides
-//!   lane 0 at River priority or runs ahead of the side batch, never
-//!   behind it), with capacity-aware FIFO admission that parks side tasks
-//!   when the batch width or pool occupancy saturates and refills freed
-//!   slots on the very next tick.
+//!   every session's main step and every side agent's next decode step
+//!   into one device op per tick over paged block tables
+//!   ([`runtime::device`] lanes survive as priorities *inside* the tick —
+//!   main steps ride the leading lanes at River priority or run ahead of
+//!   the side batch, never behind it), with capacity-aware FIFO admission
+//!   that parks side tasks when the batch width or pool occupancy
+//!   saturates and refills freed slots on the very next tick.
+//!
+//! Serving is **session-based** ([`serve`]): each `/generate` request is
+//! admitted as a [`cortex::CortexSession`] — a schedulable unit over the
+//! shared weights and KV pool, not a blocked worker thread.  S concurrent
+//! sessions' main steps fuse into the same per-tick device op (no
+//! cross-request head-of-line blocking; `benches/multi_session.rs`
+//! asserts ops/token at 8 sessions ≤ 0.6× one session), admission parks
+//! FIFO under `max_sessions`/pool headroom and sheds with 503 beyond the
+//! park queue, and `"stream": true` delivers tokens over chunked transfer
+//! encoding as ticks produce them.  [`cortex::capacity`] models the
+//! multi-session compute ceiling (`max_sessions_compute`).
 //!
 //! Device ops per generated token fall from ~1.0 (the old serial op
 //! stream) toward 1/B as the agent population grows —
 //! `benches/continuous_batch.rs` asserts this and the `/stats` endpoint
-//! exposes the tick/batch-occupancy/park gauges live.
+//! exposes the tick/batch-occupancy/park/session gauges live.
 //!
 //! Memory accounting follows block ownership: each agent's `MainKv`/
 //! `SideKv` charge counts only its *private* blocks, registry-shared

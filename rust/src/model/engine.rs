@@ -94,22 +94,35 @@ pub struct FusedReq {
     pub paged: PagedKv,
 }
 
+/// One *main stream*'s work item in a fused tick: a [`FusedReq`] plus the
+/// cache capacity its tier dispatch is bounded by.  Since the multi-session
+/// scheduler there can be several of these per tick — one per concurrent
+/// session — all riding the same batch program at River priority.
+#[derive(Debug, Clone)]
+pub struct MainLane {
+    pub req: FusedReq,
+    /// The owning cache's capacity (`kv.capacity()`): the tier-dispatch
+    /// bound when this main runs as its own op.
+    pub capacity: usize,
+}
+
 /// Result of one fused decode tick ([`Engine::decode_fused`]).
 #[derive(Debug)]
 pub struct FusedOut {
-    /// Result for the main item (present iff a main item was submitted).
-    pub main: Option<RawDecode>,
+    /// One result per main lane, in submission order.  Per-lane `Err`
+    /// isolates a single session's fault (bad table, tier miss) to that
+    /// session — the other mains of the tick still get their step.
+    pub mains: Vec<Result<RawDecode, String>>,
     /// One result per side item, in submission order (empty when
     /// `side_error` is set).
     pub sides: Vec<RawDecode>,
-    /// Set when the tick's side half failed while the main half succeeded
-    /// (possible only on the unfused 2-op path, where main runs its own op
-    /// first): the scheduler fails the side lanes and the main episode
-    /// continues — a side-only device fault must not abort the River.
+    /// Set when the tick's side half failed while the main half succeeded:
+    /// the scheduler fails the side lanes and the main episodes continue —
+    /// a side-only device fault must not abort any River.
     pub side_error: Option<String>,
-    /// Device ops the tick actually issued: 1 when fully fused, 2 when the
-    /// main context no longer fits a batch lane and runs its own (River)
-    /// op ahead of the side batch.
+    /// Device ops the tick actually issued: 1 when fully fused, +1 per
+    /// main whose context no longer fits a batch lane (each runs its own
+    /// River op ahead of the batch).
     pub device_ops: u64,
 }
 
@@ -510,7 +523,7 @@ impl Engine {
     ///
     /// Tier selection matches [`Engine::decode`] exactly (`capacity` plays
     /// the role of `kv.capacity()` — both go through
-    /// [`Engine::select_decode_tier`]), so a main-agent step routed through
+    /// `Engine::select_decode_tier`), so a main-agent step routed through
     /// the scheduler hits the same compiled program as the old in-thread
     /// `engine.decode` call.  The caller appends the returned row.
     pub fn decode_raw(
@@ -552,135 +565,164 @@ impl Engine {
         })
     }
 
-    /// One step-scheduler tick: at most one main item plus any number of
-    /// side items (≤ the batch width), fused into as few device ops as the
-    /// compiled programs allow — the mixed-lane entry point behind
-    /// [`crate::cortex::StepScheduler`].
+    /// One step-scheduler tick: any number of main lanes (one per
+    /// concurrent session) plus any number of side items, fused into as
+    /// few device ops as the compiled programs allow — the mixed-lane
+    /// entry point behind [`crate::cortex::StepScheduler`].
     ///
-    /// Fusion rules, in priority order:
-    /// * main + sides, and the main context still fits a batch lane
-    ///   (`len + 1 <= side_ctx`) with `fuse_main` on → ONE `decode_batch`
-    ///   op on the River lane, main in lane 0;
-    /// * main + sides otherwise → the main step runs FIRST as its own
-    ///   tier-dispatched River op, then one side batch on Stream (2 ops —
-    ///   the main agent is never queued behind side work);
-    /// * main only → one tier-dispatched River op;
-    /// * sides only → one batch op on Stream (or the cheaper single-decode
-    ///   program for a lone straggler).
+    /// Fusion rules:
+    /// * Every main whose context still fits a batch lane
+    ///   (`len + 1 <= side_ctx`, `fuse_main` on) is *fusable*: fusable
+    ///   mains ride the leading lanes of ONE `decode_batch` op together
+    ///   with the side items, and the whole op runs at River priority —
+    ///   this is how S concurrent sessions share one device op per tick.
+    /// * A main that has outgrown a lane runs as its own tier-dispatched
+    ///   River op FIRST, ahead of any batched work (+1 op each; mains are
+    ///   never queued behind side work).
+    /// * A lone main with no sides runs the cheaper single-decode program.
+    /// * Sides with no fusable main batch on the Stream lane.
+    ///
+    /// Fault isolation: an unfusable main's op error fails only that lane
+    /// (`mains[i]` is `Err`); a batch failure with mains aboard reruns
+    /// each of those mains alone and reports `side_error`; a side-only
+    /// batch failure after any successful main op is `side_error` too.
+    /// The scheduler guarantees `fusable mains + sides <= batch_width`.
     pub fn decode_fused(
         &self,
-        main: Option<&FusedReq>,
-        main_capacity: usize,
+        mains: &[MainLane],
         sides: &[FusedReq],
         fuse_main: bool,
     ) -> Result<FusedOut> {
         let b = self.caps.decode_batch;
-        if main.is_none() && sides.is_empty() {
+        if mains.is_empty() && sides.is_empty() {
             bail!("decode_fused: empty tick");
         }
-        if sides.len() > b {
-            bail!("decode_fused: {} side items exceed batch width {b}", sides.len());
-        }
         let cs = self.caps.side_ctx;
+        let fusable = |m: &MainLane| fuse_main && m.req.paged.len + 1 <= cs;
+        let n_fusable = mains.iter().filter(|m| fusable(m)).count();
+        if n_fusable + sides.len() > b {
+            bail!(
+                "decode_fused: {n_fusable} fusable mains + {} sides exceed batch width {b}",
+                sides.len()
+            );
+        }
+        let mut device_ops = 0u64;
+        let mut main_out: Vec<Option<Result<RawDecode, String>>> =
+            (0..mains.len()).map(|_| None).collect();
 
-        // Sides only: one Stream op.
-        let Some(m) = main else {
-            let sides_out = self.run_side_batch(sides)?;
+        // A lone main with no sides: the cheaper single-decode program,
+        // exactly the pre-session behaviour.
+        let force_own = mains.len() == 1 && sides.is_empty();
+
+        // Unfusable mains first — their own River ops, ahead of the batch.
+        for (i, m) in mains.iter().enumerate() {
+            if fusable(m) && !force_own {
+                continue;
+            }
+            device_ops += 1;
+            main_out[i] = Some(
+                self.decode_raw(m.req.token, m.req.pos, &m.req.paged, m.capacity, Lane::River)
+                    .map_err(|e| format!("{e:#}")),
+            );
+        }
+        if force_own {
             return Ok(FusedOut {
-                main: None,
-                sides: sides_out,
-                side_error: None,
-                device_ops: 1,
-            });
-        };
-        if sides.is_empty() {
-            let raw = self.decode_raw(m.token, m.pos, &m.paged, main_capacity, Lane::River)?;
-            return Ok(FusedOut {
-                main: Some(raw),
+                mains: main_out.into_iter().map(|r| r.expect("lone main ran")).collect(),
                 sides: Vec::new(),
                 side_error: None,
-                device_ops: 1,
+                device_ops,
             });
         }
 
-        let main_fits = fuse_main && m.paged.len + 1 <= cs && sides.len() + 1 <= b;
-        if main_fits {
-            // The fully fused tick: main rides lane 0 of the batch program,
-            // and the whole op runs at River priority.
-            let n = sides.len() + 1;
+        // The batched half: fusable mains lead the lanes, sides follow.
+        let fused_idx: Vec<usize> = mains
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| fusable(m))
+            .map(|(i, _)| i)
+            .collect();
+        let mut side_out = Vec::new();
+        let mut side_error = None;
+        if !fused_idx.is_empty() {
+            let n = fused_idx.len() + sides.len();
             let mut tokens = Vec::with_capacity(n);
             let mut pos = Vec::with_capacity(n);
             let mut views = Vec::with_capacity(n);
-            tokens.push(m.token);
-            pos.push(m.pos);
-            views.push(m.paged.clone());
+            for &i in &fused_idx {
+                tokens.push(mains[i].req.token);
+                pos.push(mains[i].req.pos);
+                views.push(mains[i].req.paged.clone());
+            }
             for s in sides {
                 tokens.push(s.token);
                 pos.push(s.pos);
                 views.push(s.paged.clone());
             }
-            let mut results = match self.decode_batch_raw(n, tokens, pos, &views, Lane::River) {
-                Ok(r) => r,
-                Err(e) => {
-                    // A side lane's fault (bad table, gather error) must
-                    // not sink the River: rerun the main step alone and
-                    // report the side half failed — the same isolation the
-                    // unfused path below provides.  Nothing was appended
-                    // by the failed call, so the rerun is side-effect-safe.
-                    let main_out =
-                        self.decode_raw(m.token, m.pos, &m.paged, main_capacity, Lane::River)?;
-                    return Ok(FusedOut {
-                        main: Some(main_out),
-                        sides: Vec::new(),
-                        side_error: Some(format!("{e:#}")),
-                        device_ops: 2,
-                    });
+            device_ops += 1;
+            match self.decode_batch_raw(n, tokens, pos, &views, Lane::River) {
+                Ok(results) => {
+                    let mut it = results.into_iter();
+                    for &i in &fused_idx {
+                        let (logits, hidden, k_new, v_new) =
+                            it.next().expect("one result per fused main lane");
+                        main_out[i] = Some(Ok(RawDecode { logits, hidden, k_new, v_new }));
+                    }
+                    side_out = it
+                        .map(|(logits, hidden, k_new, v_new)| RawDecode {
+                            logits,
+                            hidden,
+                            k_new,
+                            v_new,
+                        })
+                        .collect();
                 }
-            };
-            let side_out: Vec<RawDecode> = results
-                .drain(1..)
-                .map(|(logits, hidden, k_new, v_new)| RawDecode {
-                    logits,
-                    hidden,
-                    k_new,
-                    v_new,
-                })
-                .collect();
-            let (logits, hidden, k_new, v_new) = results.pop().expect("lane 0 is the main item");
-            return Ok(FusedOut {
-                main: Some(RawDecode {
-                    logits,
-                    hidden,
-                    k_new,
-                    v_new,
-                }),
-                sides: side_out,
-                side_error: None,
-                device_ops: 1,
-            });
+                Err(e) => {
+                    // A lane's fault must not sink the Rivers: rerun each
+                    // fused main alone and report the side half failed.
+                    // Nothing was appended by the failed call, so the
+                    // reruns are side-effect-safe.
+                    for &i in &fused_idx {
+                        let m = &mains[i];
+                        device_ops += 1;
+                        main_out[i] = Some(
+                            self.decode_raw(
+                                m.req.token,
+                                m.req.pos,
+                                &m.req.paged,
+                                m.capacity,
+                                Lane::River,
+                            )
+                            .map_err(|e| format!("{e:#}")),
+                        );
+                    }
+                    side_error = Some(format!("{e:#}"));
+                }
+            }
+        } else if !sides.is_empty() {
+            // No fusable main aboard: one side batch on Stream.
+            device_ops += 1;
+            match self.run_side_batch(sides) {
+                Ok(out) => side_out = out,
+                Err(e) => {
+                    if mains.is_empty() {
+                        // Pure side tick: the whole tick failed.
+                        return Err(e);
+                    }
+                    // Some main op already succeeded — isolate the fault.
+                    side_error = Some(format!("{e:#}"));
+                }
+            }
         }
 
-        // Main no longer fits a side-capacity lane: its own River op runs
-        // FIRST (priority admission), then the side batch on Stream.  A
-        // side-batch failure after a successful main op is reported in
-        // `side_error`, NOT as a tick error — the main result must reach
-        // the episode (the legacy paths isolated side faults to side
-        // agents, and so does the scheduler).
-        let main_out = self.decode_raw(m.token, m.pos, &m.paged, main_capacity, Lane::River)?;
-        match self.run_side_batch(sides) {
-            Ok(sides_out) => Ok(FusedOut {
-                main: Some(main_out),
-                sides: sides_out,
-                side_error: None,
-                device_ops: 2,
-            }),
-            Err(e) => Ok(FusedOut {
-                main: Some(main_out),
-                sides: Vec::new(),
-                side_error: Some(format!("{e:#}")),
-                device_ops: 2,
-            }),
-        }
+        Ok(FusedOut {
+            mains: main_out
+                .into_iter()
+                .map(|r| r.expect("every main lane ran own-op or batched"))
+                .collect(),
+            sides: side_out,
+            side_error,
+            device_ops,
+        })
     }
 
     /// One device op over side items only: the cheaper single-decode

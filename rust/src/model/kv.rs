@@ -17,7 +17,7 @@
 //! [`KvCache::attach_shared_prefix`] lets a later cache adopt the longest
 //! registered prefix by reference — N agents spawned from one prompt hold
 //! the same physical blocks.  All writes funnel through the pool's CoW gate
-//! ([`KvPool::write_run`]): a write that lands in a shared block first
+//! (`KvPool::write_run`): a write that lands in a shared block first
 //! copies it into a private one and swaps the table entry, so divergence
 //! after sharing is bit-identical to never having shared (proven by the
 //! proptest below).  Accounting follows ownership: [`KvCache::bytes`]

@@ -13,8 +13,10 @@ pub mod kv;
 pub mod pool;
 
 pub use engine::{
-    DecodeOut, Engine, FusedOut, FusedReq, InjectOut, PrefillOut, PrefillReuse, RawDecode,
-    SynapseOut, PROMPT_CHAIN_SALT,
+    DecodeOut, Engine, FusedOut, FusedReq, InjectOut, MainLane, PrefillOut, PrefillReuse,
+    RawDecode, SynapseOut, PROMPT_CHAIN_SALT,
 };
 pub use kv::KvCache;
-pub use pool::{chain_hash, KvPool, KvPoolConfig, PagedKv, PoolStats, PREFIX_SEED};
+pub use pool::{
+    chain_hash, BlockReservation, KvPool, KvPoolConfig, PagedKv, PoolStats, PREFIX_SEED,
+};

@@ -22,7 +22,7 @@
 //! A block referenced by exactly one table and absent from the prefix
 //! registry is *private* — writes go in place, exactly as before.  A block
 //! that is registered (content-addressed) or referenced by more than one
-//! table is *shared* and immutable: any write through [`KvPool::write_run`]
+//! table is *shared* and immutable: any write through `KvPool::write_run`
 //! first copies the block into a fresh private one, swaps it into the
 //! writing cache's table and drops one reference on the original
 //! (copy-on-write).  A physical block is freed only when its last table
@@ -52,7 +52,7 @@
 //! Each block also owns a **lazily materialised device copy** in the pool's
 //! *device slab*, addressed by the block's stable `id` and recycled with the
 //! block through the free list.  Every host write goes through
-//! [`KvPool::write_run`], which writes **only the touched rows** through to
+//! `KvPool::write_run`, which writes **only the touched rows** through to
 //! the device copy (a CoW copy re-syncs the whole block once), so the
 //! per-decode-step host→device traffic is `O(new row + block table)` instead
 //! of the seed's `O(capacity)` full-cache re-upload.  Decode-time K/V then
@@ -272,6 +272,29 @@ pub struct PoolStats {
     pub prefix_evictions: u64,
     /// Copy-on-write block copies (a write hit a shared block).
     pub cow_copies: u64,
+    /// Blocks promised to admitted-but-not-yet-prefilled sessions
+    /// ([`KvPool::reserve`]); [`KvPool::can_admit`] treats them as spent.
+    pub reserved_blocks: usize,
+}
+
+/// RAII admission reservation from [`KvPool::reserve`]: while alive,
+/// [`KvPool::can_admit`] counts `blocks` as already rented.  Dropped once
+/// the owning session's prefill has rented its real blocks.
+pub struct BlockReservation<'a> {
+    pool: &'a KvPool,
+    blocks: usize,
+}
+
+impl BlockReservation<'_> {
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+}
+
+impl Drop for BlockReservation<'_> {
+    fn drop(&mut self) {
+        self.pool.reserved.fetch_sub(self.blocks, Ordering::SeqCst);
+    }
 }
 
 impl PoolStats {
@@ -347,6 +370,12 @@ pub struct KvPool {
     rows_live: AtomicU64,
     h2d_bytes: AtomicU64,
     dev_gathers: AtomicU64,
+    /// Blocks promised to admitted-but-not-yet-prefilled sessions
+    /// ([`KvPool::reserve`]).  Accounting only — `rent_ref` never consults
+    /// it — but [`KvPool::can_admit`] subtracts it so N sessions admitted
+    /// in the same instant cannot all pass the headroom check and then
+    /// collectively exhaust the pool at prefill time.
+    reserved: AtomicUsize,
 }
 
 impl std::fmt::Debug for KvPool {
@@ -380,6 +409,7 @@ impl KvPool {
             rows_live: AtomicU64::new(0),
             h2d_bytes: AtomicU64::new(0),
             dev_gathers: AtomicU64::new(0),
+            reserved: AtomicUsize::new(0),
         })
     }
 
@@ -466,17 +496,19 @@ impl KvPool {
 
     /// Admission-gate view of capacity: can `blocks` fresh private blocks
     /// still be rented under the `max_blocks` cap?  Mirrors
-    /// [`KvPool::rent_ref`]'s own headroom rules: fresh allocations up to
+    /// `KvPool::rent_ref`'s own headroom rules: fresh allocations up to
     /// the cap, PLUS one LRU eviction per parked registry entry
     /// (registered, refcount 0) once at it — a warm prefix registry holds
     /// `blocks_live` near the cap *by design* and must not read as
-    /// exhaustion (it would starve side-agent admission forever).  Always
-    /// true when uncapped.
+    /// exhaustion (it would starve side-agent admission forever).
+    /// Outstanding session reservations ([`KvPool::reserve`]) count as
+    /// already-spent headroom.  Always true when uncapped.
     pub fn can_admit(&self, blocks: usize) -> bool {
         let max = self.max_blocks.load(Ordering::Relaxed);
         if max == 0 {
             return true;
         }
+        let reserved = self.reserved.load(Ordering::SeqCst);
         let st = self.state.lock().unwrap();
         let parked = st
             .slots
@@ -484,7 +516,49 @@ impl KvPool {
             .flatten()
             .filter(|b| b.refs == 0 && b.hash.is_some())
             .count();
-        max.saturating_sub(st.live) + parked >= blocks
+        max.saturating_sub(st.live + reserved) + parked >= blocks
+    }
+
+    /// Reserve admission headroom for a session between its admission and
+    /// its prefill: the returned guard makes [`KvPool::can_admit`] treat
+    /// `blocks` as already rented until it drops.  Pure accounting — the
+    /// session's real rents still go through `KvPool::rent_ref`; the
+    /// caller drops the guard once the prefill has materialised the real
+    /// blocks (holding it longer double-counts and only makes admission
+    /// more conservative).
+    pub fn reserve(&self, blocks: usize) -> BlockReservation<'_> {
+        self.reserved.fetch_add(blocks, Ordering::SeqCst);
+        BlockReservation { pool: self, blocks }
+    }
+
+    /// Atomic check-and-reserve: succeed only if `blocks` still fit under
+    /// the cap *including every outstanding reservation*, bumping the
+    /// reservation in the same critical section.  This is what makes N
+    /// simultaneously admitted sessions safe — two sessions that both
+    /// passed the admission gate race here, and exactly one wins the last
+    /// headroom (the loser sheds as Busy instead of failing mid-prefill).
+    /// Always succeeds on an uncapped pool.
+    pub fn try_reserve(&self, blocks: usize) -> Option<BlockReservation<'_>> {
+        let max = self.max_blocks.load(Ordering::Relaxed);
+        if max == 0 {
+            return Some(self.reserve(blocks));
+        }
+        // Hold the state lock across the headroom check AND the bump so
+        // concurrent try_reserve calls serialize; the guard's unlocked
+        // decrement on drop is safe (headroom only grows).
+        let st = self.state.lock().unwrap();
+        let reserved = self.reserved.load(Ordering::SeqCst);
+        let parked = st
+            .slots
+            .iter()
+            .flatten()
+            .filter(|b| b.refs == 0 && b.hash.is_some())
+            .count();
+        if max.saturating_sub(st.live + reserved) + parked < blocks {
+            return None;
+        }
+        self.reserved.fetch_add(blocks, Ordering::SeqCst);
+        Some(BlockReservation { pool: self, blocks })
     }
 
     fn rent_locked(&self, st: &mut PoolState) -> Result<u32> {
@@ -1132,6 +1206,7 @@ impl KvPool {
             prefix_misses,
             prefix_evictions,
             cow_copies,
+            reserved_blocks: self.reserved.load(Ordering::SeqCst),
         }
     }
 }
@@ -1321,6 +1396,49 @@ mod tests {
         // ...and the promise is real: both rents succeed via LRU eviction.
         assert!(p.rent_ref().is_ok());
         assert!(p.rent_ref().is_ok());
+    }
+
+    #[test]
+    fn session_reservations_consume_admission_headroom() {
+        let p = pool(4, 4);
+        assert!(p.can_admit(4));
+        let r1 = p.reserve(3);
+        assert_eq!(p.stats().reserved_blocks, 3);
+        assert!(p.can_admit(1), "one block of headroom left");
+        assert!(
+            !p.can_admit(2),
+            "reserved blocks must read as spent headroom"
+        );
+        // A second session's reservation stacks.
+        let r2 = p.reserve(1);
+        assert!(!p.can_admit(1));
+        // Prefill done: the guard drops and the headroom returns (the real
+        // rents then show up in `blocks_live` instead).
+        drop(r1);
+        assert!(p.can_admit(3));
+        assert!(!p.can_admit(4));
+        drop(r2);
+        assert!(p.can_admit(4));
+        assert_eq!(p.stats().reserved_blocks, 0);
+        // Uncapped pools ignore reservations entirely.
+        let free = pool(4, 0);
+        let _r = free.reserve(1_000_000);
+        assert!(free.can_admit(1_000_000));
+    }
+
+    #[test]
+    fn try_reserve_is_atomic_against_concurrent_admissions() {
+        // Headroom for exactly one 3-block prefill: of two racing
+        // admissions, exactly one may win it (the old check-then-reserve
+        // let both pass and fail mid-prefill instead).
+        let p = pool(4, 4);
+        let won = p.try_reserve(3).expect("first reservation fits");
+        assert!(p.try_reserve(3).is_none(), "no headroom left for a twin");
+        assert!(p.try_reserve(1).is_some(), "the remainder is still grantable");
+        drop(won);
+        assert!(p.try_reserve(3).is_some(), "headroom returns on drop");
+        // Uncapped: always granted.
+        assert!(pool(4, 0).try_reserve(1_000_000).is_some());
     }
 
     #[test]

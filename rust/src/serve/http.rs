@@ -135,14 +135,8 @@ impl HttpRequest {
     }
 }
 
-/// Write an HTTP response with a JSON (or plain) body.
-pub fn respond(
-    stream: &mut TcpStream,
-    status: u16,
-    content_type: &str,
-    body: &str,
-) -> Result<()> {
-    let reason = match status {
+fn reason(status: u16) -> &'static str {
+    match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
@@ -150,10 +144,20 @@ pub fn respond(
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
-    };
+    }
+}
+
+/// Write an HTTP response with a JSON (or plain) body.
+pub fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> Result<()> {
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
         body.len()
     );
     stream.write_all(head.as_bytes())?;
@@ -164,6 +168,53 @@ pub fn respond(
 
 pub fn respond_json(stream: &mut TcpStream, status: u16, body: &crate::util::Json) -> Result<()> {
     respond(stream, status, "application/json", &body.to_string())
+}
+
+// ── Chunked (streaming) responses ───────────────────────────────────────
+//
+// The streaming `/generate` path: headers first (`Transfer-Encoding:
+// chunked`), then one [`write_chunk`] per token delta as the session's
+// fused ticks produce them, then [`finish_chunked`].  Each chunk is
+// flushed immediately — the client sees the first token while other
+// sessions are still mid-generation, and a failed write is the server's
+// disconnect signal (the handler drops the session, cancelling only it).
+
+/// Start a chunked response: status line + headers only; the body follows
+/// via [`write_chunk`] and ends with [`finish_chunked`].
+pub fn respond_chunked_head(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        reason(status)
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Write one chunk (hex size line + payload), flushed so it reaches the
+/// client now.  Empty payloads are skipped — a zero-length chunk would
+/// terminate the stream.
+pub fn write_chunk(stream: &mut TcpStream, data: &str) -> Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    stream.write_all(format!("{:x}\r\n", data.len()).as_bytes())?;
+    stream.write_all(data.as_bytes())?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Terminate a chunked response (the zero-length chunk).
+pub fn finish_chunked(stream: &mut TcpStream) -> Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -283,5 +334,28 @@ mod tests {
     #[test]
     fn malformed_request_line_is_rejected() {
         expect_bad_request("   \r\n\r\n", "malformed request line");
+    }
+
+    #[test]
+    fn chunked_stream_frames_and_terminates() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            respond_chunked_head(&mut conn, 200, "application/x-ndjson").unwrap();
+            write_chunk(&mut conn, "hello\n").unwrap();
+            // empty deltas are skipped, NOT sent as the terminating chunk
+            write_chunk(&mut conn, "").unwrap();
+            write_chunk(&mut conn, "world\n").unwrap();
+            finish_chunked(&mut conn).unwrap();
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        server.join().unwrap();
+        assert!(raw.starts_with("HTTP/1.1 200 OK\r\n"), "{raw}");
+        assert!(raw.contains("Transfer-Encoding: chunked"), "{raw}");
+        let body = &raw[raw.find("\r\n\r\n").unwrap() + 4..];
+        assert_eq!(body, "6\r\nhello\n\r\n6\r\nworld\n\r\n0\r\n\r\n");
     }
 }

@@ -1,7 +1,38 @@
-//! The serving layer: a minimal HTTP/1.1 server over `std::net` exposing the
-//! Warp-Cortex orchestrator (no web-framework crates offline — DESIGN §4).
+//! The serving layer: a minimal HTTP/1.1 server over `std::net` exposing
+//! the Warp-Cortex orchestrator (no web-framework crates offline —
+//! DESIGN §4).
+//!
+//! Since the multi-session refactor this is a **session layer**, not a
+//! thread-per-episode front end:
+//!
+//! * Every `POST /generate` is admitted as a *session* — a schedulable
+//!   unit over the shared weights and KV pool.  N concurrent requests'
+//!   main decode steps fuse into the same per-tick device op in the
+//!   [`crate::cortex::StepScheduler`]; there is no cross-request
+//!   head-of-line blocking.
+//! * Admission rules: sessions beyond `CortexConfig::max_sessions` park
+//!   FIFO; beyond `max_parked_sessions` the server sheds load with a 503.
+//!   Session admission also gates on KV-pool headroom for the prefill
+//!   burst (with a [`crate::model::KvPool::reserve`] reservation closing
+//!   the admit-then-rent race).
+//! * Streaming protocol: `"stream": true` switches the response to
+//!   chunked transfer encoding, `application/x-ndjson` — one
+//!   `{"n": k, "delta": "..."}` line per token as ticks produce it, then
+//!   one final summary line with `"done": true` (same fields as the
+//!   non-streaming body).  A mid-stream disconnect cancels only that
+//!   session.
+//! * `GET /stats` carries a `sessions` gauge block
+//!   (requested/admitted/rejected/completed/active/parked/occupancy) that
+//!   reconciles: `admitted == completed + active`,
+//!   `requested == admitted + rejected + parked`.
+//!
+//! The substrate is generic over [`SessionSource`] so the HTTP paths are
+//! testable host-only (`rust/tests/serve_sessions.rs` drives them over a
+//! stub source backed by the real step scheduler).
 
 pub mod http;
 pub mod server;
 
-pub use server::{serve, ServerConfig};
+pub use server::{
+    serve, sessions_json, OpenDenied, ServerConfig, ServerHandle, SessionSource, TokenStream,
+};

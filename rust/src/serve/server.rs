@@ -1,24 +1,47 @@
-//! The Warp-Cortex HTTP API.
+//! The Warp-Cortex HTTP API: a *session layer* over the multi-session
+//! step scheduler.
 //!
 //! Endpoints:
 //! * `POST /generate` — `{"prompt": "...", "max_tokens": 64}` → episode
-//!   report (text, events, timing).
-//! * `GET  /stats`    — live system statistics (memory, gate, synapse,
-//!   scheduler, device).
+//!   report (text, events, timing).  With `"stream": true` the response
+//!   switches to chunked transfer encoding: one NDJSON line per token
+//!   delta as the fused ticks produce them, then a final `"done": true`
+//!   summary line.
+//! * `GET  /stats`    — live system statistics (memory, pool, gate,
+//!   synapse, scheduler, **sessions**, device).
 //! * `GET  /health`   — readiness probe.
 //!
-//! Connections are handled by a small accept-loop thread pool; every episode
-//! runs through the shared [`WarpCortex`] orchestrator, so all requests
-//! share the singleton weights and the device priority lanes.
+//! Every `/generate` request is admitted as a **session**
+//! ([`SessionSource::open_session`]): a schedulable unit over the shared
+//! weights and KV pool, not a blocked thread.  N in-flight requests'
+//! main steps fuse into the same per-tick device op (see
+//! [`crate::cortex::StepScheduler`]), so a new session streams its first
+//! token while others are mid-generation — admission control (FIFO
+//! parking, 503 shedding) replaces head-of-line blocking.  A client that
+//! disconnects mid-stream cancels only its own session: the failed chunk
+//! write drops the session, freeing its slot and cache blocks.
+//!
+//! The handler pool is still thread-per-connection (it is the *device
+//! scheduling* that multiplexes, not the sockets), behind a nonblocking
+//! accept loop so [`ServerHandle::stop`] is deterministic: no wake-up
+//! poke that a worker could swallow, no hanging on a full OS backlog.
+//!
+//! The serving substrate is generic over [`SessionSource`] — production
+//! uses [`WarpCortex`]; host-only tests drive the identical HTTP paths
+//! with a stub source over the real step scheduler.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::http::{respond, respond_json, BadRequest, HttpRequest};
-use crate::cortex::WarpCortex;
+use super::http::{
+    finish_chunked, respond, respond_chunked_head, respond_json, write_chunk, BadRequest,
+    HttpRequest,
+};
+use crate::cortex::{CortexSession, SessionError, SessionStats, WarpCortex};
 use crate::util::Json;
 
 /// Server configuration.
@@ -34,9 +57,95 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             addr: "127.0.0.1:8787".into(),
-            workers: 2,
+            // A streaming session occupies its worker for the whole
+            // generation, so the pool should exceed the session table
+            // (CortexConfig::max_sessions, default 8) with headroom for
+            // /stats probes — otherwise HTTP queuing hides the session
+            // layer's own FIFO parking and 503 shedding.
+            workers: 10,
             max_tokens_cap: 128,
         }
+    }
+}
+
+/// Per-socket read/write timeout: bounds how long a stalled client (no
+/// request bytes, or a streaming reader that stopped draining its TCP
+/// window) can pin a worker thread and — on the streaming path — a
+/// session slot.  The timed-out write/read errs, the handler drops the
+/// session (cancelling only it), and the worker moves on; `stop()` is
+/// therefore bounded by one generation + this timeout, never infinite.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Why a session could not be opened, as the HTTP layer needs it.
+#[derive(Debug)]
+pub enum OpenDenied {
+    /// Admission refused (session queue full / shutting down) → 503.
+    Busy(String),
+    /// Bring-up failed (prefill, registration) → 500.
+    Internal(String),
+}
+
+/// One live generation session from the server's perspective: a pull
+/// iterator of visible text deltas plus a finalizer producing the
+/// summary JSON.
+pub trait TokenStream {
+    /// Next visible text delta (may be empty for unprintable tokens);
+    /// `None` once generation finished.
+    fn next_delta(&mut self) -> Result<Option<String>>;
+    /// Finalize: the episode summary (the non-streaming response body /
+    /// the trailing streaming chunk, before `"done"` is added).
+    fn finish(self) -> Result<Json>
+    where
+        Self: Sized;
+}
+
+/// What the server serves: a source of generation sessions plus the
+/// `/stats` snapshot.  Implemented by [`WarpCortex`] in production and by
+/// host-only stubs in the serve-layer tests.
+pub trait SessionSource: Send + Sync + 'static {
+    type Stream<'a>: TokenStream
+    where
+        Self: 'a;
+    /// Open a session for up to `max_tokens` tokens.  The backend owns the
+    /// context clamp: a session whose cache fills simply ends early (the
+    /// serve layer deliberately does NOT pre-compute a context budget —
+    /// that cost a second prompt tokenization per request).
+    fn open_session(
+        &self,
+        prompt: &str,
+        max_tokens: usize,
+    ) -> std::result::Result<Self::Stream<'_>, OpenDenied>;
+    fn stats(&self) -> Json;
+}
+
+impl SessionSource for WarpCortex {
+    type Stream<'a> = CortexSession<'a>
+    where
+        Self: 'a;
+
+    fn open_session(
+        &self,
+        prompt: &str,
+        max_tokens: usize,
+    ) -> std::result::Result<CortexSession<'_>, OpenDenied> {
+        WarpCortex::open_session(self, prompt, max_tokens).map_err(|e| match e {
+            SessionError::Busy(m) => OpenDenied::Busy(m),
+            SessionError::Failed(err) => OpenDenied::Internal(format!("{err:#}")),
+        })
+    }
+
+    fn stats(&self) -> Json {
+        stats_json(self)
+    }
+}
+
+impl<'a> TokenStream for CortexSession<'a> {
+    fn next_delta(&mut self) -> Result<Option<String>> {
+        self.next_token()
+    }
+
+    fn finish(self) -> Result<Json> {
+        Ok(CortexSession::finish(self)?.to_json())
     }
 }
 
@@ -48,10 +157,15 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
+    /// Stop accepting and join every thread.  Deterministic: the acceptor
+    /// polls a nonblocking listener, so no connect-poke is needed — the
+    /// old poke could be swallowed by the OS backlog (or satisfied by a
+    /// queued real client) and leave `stop()` hanging until the backlog
+    /// drained.  Workers finish their in-flight connections (including
+    /// active streaming sessions) and exit when the accept channel
+    /// closes.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // poke the acceptor
-        let _ = TcpStream::connect(self.addr);
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -59,20 +173,29 @@ impl ServerHandle {
 }
 
 /// Start serving; returns immediately with a handle.
-pub fn serve(cortex: Arc<WarpCortex>, cfg: ServerConfig) -> Result<ServerHandle> {
+pub fn serve<S: SessionSource>(src: Arc<S>, cfg: ServerConfig) -> Result<ServerHandle> {
     let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
     let addr = listener.local_addr()?;
+    // Nonblocking acceptor: the accept loop re-checks the stop flag every
+    // few ms instead of blocking in accept() forever (the ServerHandle
+    // wake race fix).
+    listener.set_nonblocking(true)?;
     let stop = Arc::new(AtomicBool::new(false));
     let requests = Arc::new(AtomicU64::new(0));
 
-    // Accept loop distributes connections to handler threads via a channel.
-    let (tx, rx) = std::sync::mpsc::channel::<TcpStream>();
+    // Accept loop distributes connections to handler threads via a BOUNDED
+    // channel: connections beyond the worker pool plus this small queue are
+    // shed with an immediate 503 instead of piling up invisibly in an
+    // unbounded buffer where neither the session layer's parking nor its
+    // load shedding can see them.
+    let workers = cfg.workers.max(1);
+    let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(workers);
     let rx = Arc::new(std::sync::Mutex::new(rx));
     let mut threads = Vec::new();
 
-    for i in 0..cfg.workers.max(1) {
+    for i in 0..workers {
         let rx = rx.clone();
-        let cortex = cortex.clone();
+        let src = src.clone();
         let cfg = cfg.clone();
         let requests = requests.clone();
         threads.push(
@@ -83,7 +206,7 @@ pub fn serve(cortex: Arc<WarpCortex>, cfg: ServerConfig) -> Result<ServerHandle>
                     match conn {
                         Ok(mut stream) => {
                             requests.fetch_add(1, Ordering::Relaxed);
-                            if let Err(e) = handle_connection(&mut stream, &cortex, &cfg) {
+                            if let Err(e) = handle_connection(&mut stream, src.as_ref(), &cfg) {
                                 log::debug!("connection error: {e:#}");
                             }
                         }
@@ -98,16 +221,44 @@ pub fn serve(cortex: Arc<WarpCortex>, cfg: ServerConfig) -> Result<ServerHandle>
         threads.push(
             std::thread::Builder::new()
                 .name("warp-accept".into())
-                .spawn(move || {
-                    for conn in listener.incoming() {
-                        if stop.load(Ordering::SeqCst) {
-                            return;
-                        }
-                        if let Ok(stream) = conn {
-                            if tx.send(stream).is_err() {
-                                return;
+                .spawn(move || loop {
+                    if stop.load(Ordering::SeqCst) {
+                        return; // drops tx: workers drain and exit
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // Accepted sockets must be blocking regardless
+                            // of the listener's mode — but never *unboundedly*
+                            // blocking: a client that stops sending (or stops
+                            // reading its stream) errors out after IO_TIMEOUT
+                            // instead of pinning a worker and its session slot
+                            // forever, and `stop()` stays bounded.
+                            if stream.set_nonblocking(false).is_err() {
+                                continue;
+                            }
+                            let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+                            let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+                            match tx.try_send(stream) {
+                                Ok(()) => {}
+                                Err(std::sync::mpsc::TrySendError::Full(mut s)) => {
+                                    // Every worker busy and the queue full:
+                                    // shed NOW with a 503 (never block the
+                                    // acceptor — stop() must stay
+                                    // deterministic).
+                                    let _ = respond_json(
+                                        &mut s,
+                                        503,
+                                        &Json::obj()
+                                            .with("error", "server at capacity, retry"),
+                                    );
+                                }
+                                Err(std::sync::mpsc::TrySendError::Disconnected(_)) => return,
                             }
                         }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(2)),
                     }
                 })?,
         );
@@ -116,9 +267,9 @@ pub fn serve(cortex: Arc<WarpCortex>, cfg: ServerConfig) -> Result<ServerHandle>
     Ok(ServerHandle { addr, stop, threads })
 }
 
-fn handle_connection(
+fn handle_connection<S: SessionSource>(
     stream: &mut TcpStream,
-    cortex: &WarpCortex,
+    src: &S,
     cfg: &ServerConfig,
 ) -> Result<()> {
     // Malformed requests (bad/missing/oversized Content-Length, broken
@@ -136,100 +287,137 @@ fn handle_connection(
     };
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => respond_json(stream, 200, &Json::obj().with("ok", true)),
-        ("GET", "/stats") => respond_json(stream, 200, &stats_json(cortex)),
-        ("POST", "/generate") => match handle_generate(&req, cortex, cfg) {
-            Ok(body) => respond_json(stream, 200, &body),
-            Err(e) => respond_json(
-                stream,
-                400,
-                &Json::obj().with("error", format!("{e:#}")),
-            ),
-        },
+        ("GET", "/stats") => respond_json(stream, 200, &src.stats()),
+        ("POST", "/generate") => handle_generate(stream, &req, src, cfg),
         ("POST", _) | ("GET", _) => respond(stream, 404, "text/plain", "not found"),
         _ => respond(stream, 405, "text/plain", "method not allowed"),
     }
 }
 
-fn handle_generate(req: &HttpRequest, cortex: &WarpCortex, cfg: &ServerConfig) -> Result<Json> {
-    let body = Json::parse(req.body_str()?).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
-    let prompt = body
-        .req("prompt")?
-        .as_str()
-        .context("`prompt` must be a string")?
-        .to_string();
-    // Clamp against what the main cache can actually hold once the
-    // (possibly truncated) prompt is prefilled — the truncation invariant
-    // lives on WarpCortex::prompt_rows, not here.
-    let remaining = cortex
-        .engine
-        .caps()
-        .main_ctx
-        .saturating_sub(cortex.prompt_rows(&prompt));
-    let max_tokens = resolve_max_tokens(body.get("max_tokens"), 48, cfg.max_tokens_cap, remaining)?;
+fn error_json(msg: impl std::fmt::Display) -> Json {
+    Json::obj().with("error", format!("{msg}"))
+}
 
-    let report = cortex.run_episode(&prompt, max_tokens)?;
-    let events: Vec<Json> = report
-        .events
-        .iter()
-        .map(|e| match e {
-            crate::cortex::Event::Spawned { task_id, tag, payload, at_token } => Json::obj()
-                .with("type", "spawned")
-                .with("task", *task_id as i64)
-                .with("tag", tag.as_str())
-                .with("payload", payload.as_str())
-                .with("at_token", *at_token),
-            crate::cortex::Event::Dropped { payload, at_token } => Json::obj()
-                .with("type", "dropped")
-                .with("payload", payload.as_str())
-                .with("at_token", *at_token),
-            crate::cortex::Event::Merged { task_id, score, thought, injected_rows, at_token } => {
-                Json::obj()
-                    .with("type", "merged")
-                    .with("task", *task_id as i64)
-                    .with("score", *score as f64)
-                    .with("thought", thought.as_str())
-                    .with("injected_rows", *injected_rows)
-                    .with("at_token", *at_token)
+fn handle_generate<S: SessionSource>(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    src: &S,
+    cfg: &ServerConfig,
+) -> Result<()> {
+    let body = match req
+        .body_str()
+        .and_then(|s| Json::parse(s).map_err(|e| anyhow::anyhow!("bad json: {e}")))
+    {
+        Ok(b) => b,
+        Err(e) => return respond_json(stream, 400, &error_json(format!("{e:#}"))),
+    };
+    let prompt = match body
+        .req("prompt")
+        .and_then(|v| v.as_str().context("`prompt` must be a string"))
+    {
+        Ok(p) => p.to_string(),
+        Err(e) => return respond_json(stream, 400, &error_json(format!("{e:#}"))),
+    };
+    let stream_mode = match body.get("stream") {
+        None => false,
+        Some(v) => match v.as_bool() {
+            Some(b) => b,
+            None => {
+                return respond_json(stream, 400, &error_json("`stream` must be a boolean"))
             }
-            crate::cortex::Event::Rejected { task_id, score, thought, at_token } => Json::obj()
-                .with("type", "rejected")
-                .with("task", *task_id as i64)
-                .with("score", *score as f64)
-                .with("thought", thought.as_str())
-                .with("at_token", *at_token),
-            crate::cortex::Event::Failed { task_id, error, at_token } => Json::obj()
-                .with("type", "failed")
-                .with("task", *task_id as i64)
-                .with("error", error.as_str())
-                .with("at_token", *at_token),
-            crate::cortex::Event::SynapsePushed { version, source_len, at_token } => Json::obj()
-                .with("type", "synapse")
-                .with("version", *version)
-                .with("source_len", *source_len)
-                .with("at_token", *at_token),
-        })
-        .collect();
+        },
+    };
+    let max_tokens = match resolve_max_tokens(body.get("max_tokens"), 48, cfg.max_tokens_cap) {
+        Ok(n) => n,
+        Err(e) => return respond_json(stream, 400, &error_json(format!("{e:#}"))),
+    };
+    // Admission: Busy (slots + park queue saturated) sheds with 503 so the
+    // client retries, instead of queueing unboundedly behind a blocked
+    // thread.
+    let session = match src.open_session(&prompt, max_tokens) {
+        Ok(s) => s,
+        Err(OpenDenied::Busy(m)) => return respond_json(stream, 503, &error_json(m)),
+        Err(OpenDenied::Internal(m)) => return respond_json(stream, 500, &error_json(m)),
+    };
+    if stream_mode {
+        stream_session(stream, session)
+    } else {
+        collect_session(stream, session)
+    }
+}
 
-    Ok(Json::obj()
-        .with("text", report.text.as_str())
-        .with("tokens", report.tokens_generated)
-        .with("elapsed_ms", report.elapsed.as_secs_f64() * 1e3)
-        .with("tokens_per_sec", report.main_tokens_per_sec)
-        .with("events", Json::Arr(events)))
+/// Non-streaming `/generate`: run the session to completion, answer with
+/// the episode summary.
+fn collect_session<T: TokenStream>(stream: &mut TcpStream, mut session: T) -> Result<()> {
+    loop {
+        match session.next_delta() {
+            Ok(Some(_)) => {}
+            Ok(None) => break,
+            Err(e) => return respond_json(stream, 500, &error_json(format!("{e:#}"))),
+        }
+    }
+    match session.finish() {
+        Ok(j) => respond_json(stream, 200, &j),
+        Err(e) => respond_json(stream, 500, &error_json(format!("{e:#}"))),
+    }
+}
+
+/// Streaming `/generate`: chunked transfer encoding, one NDJSON line per
+/// token as the fused ticks produce them, then a `"done": true` summary
+/// line.  A failed chunk write is the disconnect signal — the session
+/// drops (cancelling only itself) and the handler returns.
+fn stream_session<T: TokenStream>(stream: &mut TcpStream, mut session: T) -> Result<()> {
+    respond_chunked_head(stream, 200, "application/x-ndjson")?;
+    let mut n = 0usize;
+    loop {
+        match session.next_delta() {
+            Ok(Some(delta)) => {
+                n += 1;
+                let line =
+                    Json::obj().with("n", n).with("delta", delta.as_str()).to_string() + "\n";
+                if write_chunk(stream, &line).is_err() {
+                    // Client went away mid-stream: dropping the session
+                    // cancels ONLY it — the admission slot and cache
+                    // blocks free; every other session is untouched.
+                    return Ok(());
+                }
+            }
+            Ok(None) => break,
+            Err(e) => {
+                // Even the failure line carries the protocol's terminal
+                // marker: clients read until `"done": true` and must be
+                // able to tell a server-side error from a truncated
+                // stream.
+                let line = Json::obj()
+                    .with("done", true)
+                    .with("error", format!("{e:#}"))
+                    .to_string()
+                    + "\n";
+                let _ = write_chunk(stream, &line);
+                let _ = finish_chunked(stream);
+                return Ok(());
+            }
+        }
+    }
+    let tail = match session.finish() {
+        Ok(mut j) => {
+            j.set("done", true);
+            j
+        }
+        Err(e) => Json::obj().with("done", true).with("error", format!("{e:#}")),
+    };
+    let _ = write_chunk(stream, &(tail.to_string() + "\n"));
+    let _ = finish_chunked(stream);
+    Ok(())
 }
 
 /// Resolve the requested `max_tokens`: absent → `default`; non-numeric or
-/// non-positive → a clean 400 (the old behaviour let an oversized request
-/// fail mid-episode with a confusing cache-append error); otherwise clamped
-/// to the server cap and to the rows the main cache can still hold after
-/// the prompt.  A full cache still yields a well-formed 1-token request —
-/// the episode loop then terminates cleanly on `remaining() == 0`.
-fn resolve_max_tokens(
-    requested: Option<&Json>,
-    default: usize,
-    cap: usize,
-    remaining: usize,
-) -> Result<usize> {
+/// non-positive → a clean 400; otherwise clamped to the server cap.  The
+/// *context* clamp lives in the session itself — `next_token` ends the
+/// stream cleanly at `remaining() == 0` — so an oversized request just
+/// stops early (and the serve layer avoids the prompt re-tokenization a
+/// pre-computed budget used to cost).
+fn resolve_max_tokens(requested: Option<&Json>, default: usize, cap: usize) -> Result<usize> {
     let n = match requested {
         None => default,
         Some(v) => {
@@ -240,7 +428,22 @@ fn resolve_max_tokens(
             x as usize
         }
     };
-    Ok(n.min(cap).min(remaining.max(1)))
+    Ok(n.min(cap))
+}
+
+/// The `/stats` `sessions` gauge block — one shape shared by the cortex
+/// backend and the host-only test stubs, so gauge-reconciliation tests
+/// pin the wire format the dashboards read.
+pub fn sessions_json(s: &SessionStats) -> Json {
+    Json::obj()
+        .with("requested", s.requested)
+        .with("admitted", s.admitted)
+        .with("rejected", s.rejected)
+        .with("completed", s.completed)
+        .with("active", s.active)
+        .with("parked", s.parked)
+        .with("parked_peak", s.parked_peak)
+        .with("occupancy", s.occupancy)
 }
 
 fn stats_json(cortex: &WarpCortex) -> Json {
@@ -248,6 +451,7 @@ fn stats_json(cortex: &WarpCortex) -> Json {
     let gate = cortex.gate.stats();
     let syn = cortex.synapse.stats();
     let step = cortex.step.stats();
+    let sess = cortex.step.session_stats();
     let dev = cortex.engine.device().stats();
     let pool = cortex.pool.stats();
     Json::obj()
@@ -285,7 +489,9 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("prefix_hits", pool.prefix_hits)
                 .with("prefix_misses", pool.prefix_misses)
                 .with("prefix_evictions", pool.prefix_evictions)
-                .with("cow_copies", pool.cow_copies),
+                .with("cow_copies", pool.cow_copies)
+                // admission reservations held by sessions mid-prefill
+                .with("reserved_blocks", pool.reserved_blocks),
         )
         .with(
             "gate",
@@ -313,9 +519,8 @@ fn stats_json(cortex: &WarpCortex) -> Json {
         // Step-scheduler gauges: continuous-batching health.  The figure
         // of merit is ops_per_token (→ 1/B as the population grows);
         // parked/parked_peak expose capacity-gated admission, and
-        // main_deferred counts main steps that waited behind *another
-        // main* (never behind side work — >0 only with concurrent
-        // episodes).
+        // main_deferred counts main steps that waited behind *other
+        // mains* (never behind side work).
         .with(
             "step",
             Json::obj()
@@ -324,6 +529,7 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("main_steps", step.main_steps)
                 .with("side_steps", step.side_steps)
                 .with("fused_ticks", step.fused_ticks)
+                .with("main_ticks", step.main_ticks)
                 .with("batch_occupancy", step.batch_occupancy())
                 .with("ops_per_token", step.ops_per_token())
                 .with("admitted", step.admitted)
@@ -331,6 +537,10 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("parked_peak", step.parked_peak)
                 .with("main_deferred", step.main_deferred),
         )
+        // Session-layer gauges: admitted == completed + active and
+        // requested == admitted + rejected + parked at every instant —
+        // the concurrent-client hammer test reconciles these.
+        .with("sessions", sessions_json(&sess))
         .with(
             "device",
             Json::obj()
@@ -343,7 +553,11 @@ fn stats_json(cortex: &WarpCortex) -> Json {
         .with("population", cortex.prism.population().total())
 }
 
-// End-to-end server tests live in rust/tests/integration_serve.rs.
+// End-to-end server tests live in rust/tests/integration_serve.rs
+// (device-gated, real WarpCortex) and rust/tests/serve_sessions.rs
+// (host-only: stub SessionSource over the real step scheduler — the
+// concurrent-client hammer, streaming no-head-of-line-blocking, and the
+// deterministic-stop regression).
 
 #[cfg(test)]
 mod tests {
@@ -353,24 +567,19 @@ mod tests {
     #[test]
     fn max_tokens_clamping() {
         // absent → default
-        assert_eq!(resolve_max_tokens(None, 48, 128, 1000).unwrap(), 48);
-        // explicit, clamped by the server cap
+        assert_eq!(resolve_max_tokens(None, 48, 128).unwrap(), 48);
+        // explicit, clamped by the server cap (the CONTEXT clamp lives in
+        // the session itself, which ends cleanly at remaining() == 0)
         let big = Json::Num(1e6);
-        assert_eq!(resolve_max_tokens(Some(&big), 48, 128, 1000).unwrap(), 128);
-        // clamped to the rows the main cache can still hold (the old code
-        // let this run into a mid-episode append error)
-        let req = Json::Num(500.0);
-        assert_eq!(resolve_max_tokens(Some(&req), 48, 1024, 70).unwrap(), 70);
+        assert_eq!(resolve_max_tokens(Some(&big), 48, 128).unwrap(), 128);
         // non-positive and non-numeric → clean 400-shaped errors
-        assert!(resolve_max_tokens(Some(&Json::Num(0.0)), 48, 128, 10).is_err());
-        assert!(resolve_max_tokens(Some(&Json::Num(-3.0)), 48, 128, 10).is_err());
-        assert!(resolve_max_tokens(Some(&Json::Str("x".into())), 48, 128, 10).is_err());
-        assert!(resolve_max_tokens(Some(&Json::Num(0.4)), 48, 128, 10).is_err());
+        assert!(resolve_max_tokens(Some(&Json::Num(0.0)), 48, 128).is_err());
+        assert!(resolve_max_tokens(Some(&Json::Num(-3.0)), 48, 128).is_err());
+        assert!(resolve_max_tokens(Some(&Json::Str("x".into())), 48, 128).is_err());
+        assert!(resolve_max_tokens(Some(&Json::Num(0.4)), 48, 128).is_err());
         assert!(
-            resolve_max_tokens(Some(&Json::Num(2.7)), 48, 128, 10).is_err(),
+            resolve_max_tokens(Some(&Json::Num(2.7)), 48, 128).is_err(),
             "fractional values must 400, not silently floor"
         );
-        // a full cache still yields a well-formed 1-token request
-        assert_eq!(resolve_max_tokens(None, 48, 128, 0).unwrap(), 1);
     }
 }

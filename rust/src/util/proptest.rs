@@ -71,9 +71,20 @@ impl Gen {
     }
 }
 
-/// Run `cases` random cases of `property`.  Panics (with seed + case index)
-/// on the first failure.  The `WARP_PROPTEST_SEED` env var pins the base
-/// seed for reproduction.
+/// Case-count multiplier from the `WARP_PROPTEST_MULT` env var (default
+/// 1).  The scheduled deep-proptest CI job sets it to ~20 to rerun every
+/// property at elevated depth without slowing the PR path.
+pub fn case_multiplier() -> usize {
+    std::env::var("WARP_PROPTEST_MULT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|m| *m > 0)
+        .unwrap_or(1)
+}
+
+/// Run `cases` random cases of `property` (times [`case_multiplier`]).
+/// Panics (with seed + case index) on the first failure.  The
+/// `WARP_PROPTEST_SEED` env var pins the base seed for reproduction.
 pub fn check<F>(name: &str, cases: usize, mut property: F)
 where
     F: FnMut(&mut Gen) -> Result<(), String>,
@@ -82,6 +93,7 @@ where
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0xC0FFEE);
+    let cases = cases * case_multiplier();
     for case in 0..cases {
         let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let mut g = Gen {
@@ -124,7 +136,8 @@ mod tests {
             prop_assert!(v == w, "mismatch");
             Ok(())
         });
-        assert_eq!(ran, 50);
+        // the deep-proptest CI job scales every property via the env var
+        assert_eq!(ran, 50 * case_multiplier());
     }
 
     #[test]

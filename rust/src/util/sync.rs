@@ -22,6 +22,21 @@ pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGu
     cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
 }
 
+/// `Condvar::wait_timeout` that recovers the guard on poison instead of
+/// panicking (the timeout flag is dropped — callers re-check their
+/// condition and their own deadline, which is the correct pattern against
+/// spurious wakeups anyway).
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: std::time::Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((g, _)) => g,
+        Err(e) => e.into_inner().0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -503,6 +503,7 @@ fn scheduler_backpressure_rejects_over_capacity() {
     let sched = StreamScheduler::new(ctx, 1, 2);
     let mk = |i| SideTask {
         id: i,
+        session: 0,
         role: AgentRole::Task,
         payload: format!("task {i}"),
         main_pos: 0,

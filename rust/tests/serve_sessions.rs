@@ -1,0 +1,476 @@
+//! Host-only serve-layer integration tests: a stub [`SessionSource`] over
+//! the REAL step scheduler drives the real HTTP server — session
+//! admission, FIFO parking, 503 shedding, chunked streaming, disconnect
+//! cancellation and deterministic shutdown — with no artifacts or device.
+//!
+//! What the stub replaces is only the model: each session's
+//! `next_delta` runs one genuine `StepScheduler::main_step` (so session
+//! gauges, fusion and admission are the production code paths), paced by
+//! a configurable per-token delay so sessions stay in flight long enough
+//! to overlap.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use warp_cortex::cortex::step::testing::stub_exec;
+use warp_cortex::cortex::{
+    AgentCache, SessionPermit, SideAgent, StepConfig, StepScheduler, StepSeams,
+};
+use warp_cortex::model::{KvCache, KvPool, KvPoolConfig};
+use warp_cortex::runtime::ModelConfig;
+use warp_cortex::serve::{
+    serve, sessions_json, OpenDenied, ServerConfig, ServerHandle, SessionSource, TokenStream,
+};
+use warp_cortex::text::SamplerConfig;
+use warp_cortex::util::Json;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 2,
+        d_ff: 32,
+        vocab_size: 260,
+        head_dim: 8,
+        rope_theta: 1e4,
+        param_count: 0,
+    }
+}
+
+struct StubSource {
+    sched: Arc<StepScheduler>,
+    pool: Arc<KvPool>,
+    delay: Duration,
+}
+
+struct StubStream<'a> {
+    src: &'a StubSource,
+    // Held for its Drop: closing the session is what frees the slot.
+    _permit: SessionPermit,
+    kv: KvCache,
+    produced: usize,
+    max_tokens: usize,
+    prompt_len: usize,
+}
+
+impl SessionSource for StubSource {
+    type Stream<'a> = StubStream<'a>
+    where
+        Self: 'a;
+
+    fn open_session(
+        &self,
+        prompt: &str,
+        max_tokens: usize,
+    ) -> Result<StubStream<'_>, OpenDenied> {
+        let permit = self
+            .sched
+            .open_session()
+            .map_err(|d| OpenDenied::Busy(d.to_string()))?;
+        Ok(StubStream {
+            src: self,
+            _permit: permit,
+            kv: self.pool.new_cache(256),
+            produced: 0,
+            max_tokens,
+            prompt_len: prompt.len(),
+        })
+    }
+
+    fn stats(&self) -> Json {
+        Json::obj().with("sessions", sessions_json(&self.sched.session_stats()))
+    }
+}
+
+impl<'a> TokenStream for StubStream<'a> {
+    fn next_delta(&mut self) -> anyhow::Result<Option<String>> {
+        if self.produced >= self.max_tokens {
+            return Ok(None);
+        }
+        std::thread::sleep(self.src.delay);
+        let tok = ((self.prompt_len + self.produced) % 200) as i32;
+        self.src
+            .sched
+            .main_step(tok, self.kv.len() as i32, &mut self.kv)?;
+        self.produced += 1;
+        Ok(Some(format!("t{}", self.produced)))
+    }
+
+    fn finish(self) -> anyhow::Result<Json> {
+        Ok(Json::obj().with("text", "stub").with("tokens", self.produced))
+    }
+}
+
+fn stub_source(max_sessions: usize, max_parked: usize, delay_ms: u64) -> Arc<StubSource> {
+    let cfg = tiny_cfg();
+    let pool = KvPool::new(
+        &cfg,
+        KvPoolConfig {
+            block_tokens: 16,
+            ..KvPoolConfig::default()
+        },
+    );
+    let sched = StepScheduler::new(
+        StepConfig {
+            batch_width: 8,
+            side_ctx: 96,
+            max_sessions,
+            max_parked_sessions: max_parked,
+            main_gather: Duration::from_micros(500),
+            ..StepConfig::default()
+        },
+        StepSeams::new(stub_exec(cfg, 96, 8), {
+            let pool = pool.clone();
+            Arc::new(move |t| {
+                // No side tasks in these tests; never called.
+                SideAgent::from_parts(
+                    t,
+                    AgentCache::Bare(pool.new_cache(96)),
+                    0,
+                    1,
+                    vec![],
+                    0,
+                    SamplerConfig::greedy(),
+                )
+            })
+        }),
+    );
+    Arc::new(StubSource {
+        sched,
+        pool,
+        delay: Duration::from_millis(delay_ms),
+    })
+}
+
+fn start(src: Arc<StubSource>, workers: usize) -> ServerHandle {
+    serve(
+        src,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers,
+            max_tokens_cap: 256,
+        },
+    )
+    .expect("serve binds")
+}
+
+// ── HTTP client helpers ─────────────────────────────────────────────────
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let body = body.unwrap_or("");
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).unwrap();
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let json_body = response
+        .split("\r\n\r\n")
+        .nth(1)
+        .map(|b| Json::parse(b).unwrap_or(Json::Null))
+        .unwrap_or(Json::Null);
+    (status, json_body)
+}
+
+/// A streaming `/generate` client: sends the request, consumes the
+/// response headers, then yields de-chunked NDJSON lines one at a time.
+/// Dropping it mid-stream is the disconnect the server must survive.
+struct StreamingClient {
+    reader: BufReader<TcpStream>,
+}
+
+impl StreamingClient {
+    fn open(addr: SocketAddr, prompt: &str, max_tokens: usize) -> StreamingClient {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let body =
+            format!(r#"{{"prompt": "{prompt}", "max_tokens": {max_tokens}, "stream": true}}"#);
+        let raw = format!(
+            "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(raw.as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("200"), "streaming request refused: {line}");
+        let mut saw_chunked = false;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            if h.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+                saw_chunked = true;
+            }
+            if h == "\r\n" {
+                break;
+            }
+        }
+        assert!(saw_chunked, "streaming responses must use chunked encoding");
+        StreamingClient { reader }
+    }
+
+    /// Next de-chunked payload, or `None` at the terminating zero chunk.
+    fn next_chunk(&mut self) -> Option<String> {
+        let mut size_line = String::new();
+        if self.reader.read_line(&mut size_line).ok()? == 0 {
+            return None;
+        }
+        let size = usize::from_str_radix(size_line.trim(), 16).ok()?;
+        if size == 0 {
+            let mut tail = String::new();
+            let _ = self.reader.read_line(&mut tail);
+            return None;
+        }
+        let mut buf = vec![0u8; size + 2]; // payload + CRLF
+        self.reader.read_exact(&mut buf).ok()?;
+        Some(String::from_utf8_lossy(&buf[..size]).into_owned())
+    }
+}
+
+fn sessions_block(addr: SocketAddr) -> Json {
+    let (status, body) = request(addr, "GET", "/stats", None);
+    assert_eq!(status, 200);
+    body.get("sessions").cloned().unwrap_or(Json::Null)
+}
+
+fn gauge(j: &Json, key: &str) -> i64 {
+    j.get(key).and_then(|v| v.as_i64()).unwrap_or(-1)
+}
+
+// ── Tests ───────────────────────────────────────────────────────────────
+
+#[test]
+fn health_and_request_validation_run_host_only() {
+    let handle = start(stub_source(4, 8, 1), 2);
+    let addr = handle.addr;
+    let (status, body) = request(addr, "GET", "/health", None);
+    assert_eq!(status, 200);
+    assert_eq!(body.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let (status, _) = request(addr, "POST", "/generate", Some("{not json"));
+    assert_eq!(status, 400);
+    let (status, _) = request(addr, "POST", "/generate", Some(r#"{"nope": 1}"#));
+    assert_eq!(status, 400);
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "x", "stream": "yes"}"#),
+    );
+    assert_eq!(status, 400, "non-boolean stream must 400: {body}");
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "hi", "max_tokens": 5}"#),
+    );
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body.get("tokens").and_then(|v| v.as_usize()), Some(5));
+    handle.stop();
+}
+
+/// The streaming acceptance criterion: a NEW session delivers its first
+/// chunk while another session is mid-generation — no head-of-line
+/// blocking across sessions.
+#[test]
+fn streaming_first_chunk_arrives_while_another_session_is_mid_generation() {
+    let handle = start(stub_source(8, 8, 15), 4);
+    let addr = handle.addr;
+    // Session A: long-running stream.
+    let mut a = StreamingClient::open(addr, "alpha", 60);
+    let first = a.next_chunk().expect("A's first chunk");
+    assert!(first.contains("delta"), "{first}");
+    // Session B arrives while A is mid-generation and must complete first.
+    let t0 = Instant::now();
+    let mut b = StreamingClient::open(addr, "beta", 3);
+    let mut b_chunks = 0;
+    while b.next_chunk().is_some() {
+        b_chunks += 1;
+    }
+    let b_elapsed = t0.elapsed();
+    assert_eq!(b_chunks, 4, "3 token lines + the done line");
+    assert!(
+        b_elapsed < Duration::from_millis(450),
+        "B took {b_elapsed:?}: it queued behind A's 900ms stream (head-of-line blocking)"
+    );
+    // A was untouched: the rest of its stream still arrives in full.
+    let mut a_rest = 0;
+    while a.next_chunk().is_some() {
+        a_rest += 1;
+    }
+    assert_eq!(a_rest, 60, "A's remaining 59 token lines + the done line");
+    handle.stop();
+}
+
+/// Load shedding: with one session slot and no parking, a second
+/// concurrent request answers 503 — and the slot recovers once the first
+/// session ends.
+#[test]
+fn saturated_sessions_shed_with_503() {
+    let handle = start(stub_source(1, 0, 20), 4);
+    let addr = handle.addr;
+    let mut a = StreamingClient::open(addr, "hog", 50);
+    let _ = a.next_chunk().expect("A is live");
+    let (status, body) = request(addr, "POST", "/generate", Some(r#"{"prompt": "b"}"#));
+    assert_eq!(status, 503, "{body}");
+    assert!(gauge(&sessions_block(addr), "rejected") >= 1);
+    // Disconnect A: its slot frees and new sessions admit again.
+    drop(a);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = sessions_block(addr);
+        if gauge(&s, "active") == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnected session never released its slot: {s}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let (status, _) = request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "c", "max_tokens": 2}"#),
+    );
+    assert_eq!(status, 200);
+    handle.stop();
+}
+
+/// The concurrent-client hammer: N parallel `/generate` clients — mixed
+/// streaming and non-streaming, some disconnecting mid-stream — all
+/// complete, disconnects cancel only their own session, and the `/stats`
+/// session gauges reconcile exactly.
+#[test]
+fn concurrent_client_hammer_reconciles_session_gauges() {
+    const CLIENTS: usize = 12;
+    let handle = start(stub_source(4, 16, 2), 8);
+    let addr = handle.addr;
+    std::thread::scope(|scope| {
+        for i in 0..CLIENTS {
+            scope.spawn(move || match i % 3 {
+                // Non-streaming: full episode, well-formed summary.
+                0 => {
+                    let (status, body) = request(
+                        addr,
+                        "POST",
+                        "/generate",
+                        Some(r#"{"prompt": "plain", "max_tokens": 6}"#),
+                    );
+                    assert_eq!(status, 200, "client {i}: {body}");
+                    assert_eq!(
+                        body.get("tokens").and_then(|v| v.as_usize()),
+                        Some(6),
+                        "client {i}"
+                    );
+                }
+                // Streaming, read to completion.
+                1 => {
+                    let mut c = StreamingClient::open(addr, "streamy", 6);
+                    let mut chunks = 0;
+                    let mut saw_done = false;
+                    while let Some(line) = c.next_chunk() {
+                        if line.contains("\"done\"") {
+                            saw_done = true;
+                        }
+                        chunks += 1;
+                    }
+                    assert_eq!(chunks, 7, "client {i}: 6 token lines + done");
+                    assert!(saw_done, "client {i} never saw the summary line");
+                }
+                // Streaming, disconnect after two chunks.
+                _ => {
+                    let mut c = StreamingClient::open(addr, "quitter", 40);
+                    let _ = c.next_chunk().expect("first chunk");
+                    let _ = c.next_chunk().expect("second chunk");
+                    drop(c); // mid-stream disconnect
+                }
+            });
+        }
+    });
+    // Every session reaches a terminal state; the gauges reconcile:
+    //   requested == admitted + rejected + parked
+    //   admitted  == completed + active
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let s = sessions_block(addr);
+        let (req, adm, rej, comp, act, park) = (
+            gauge(&s, "requested"),
+            gauge(&s, "admitted"),
+            gauge(&s, "rejected"),
+            gauge(&s, "completed"),
+            gauge(&s, "active"),
+            gauge(&s, "parked"),
+        );
+        assert_eq!(req, adm + rej + park, "requested must reconcile: {s}");
+        assert_eq!(adm, comp + act, "admitted must reconcile: {s}");
+        if act == 0 && park == 0 && comp == CLIENTS as i64 {
+            assert_eq!(req, CLIENTS as i64, "{s}");
+            assert_eq!(rej, 0, "queue was sized to fit every client: {s}");
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "sessions never settled: {s} (disconnects must cancel only their own session)"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    handle.stop();
+}
+
+/// Regression for the `ServerHandle::stop` wake race: the old
+/// implementation poked the acceptor with one `TcpStream::connect`, which
+/// could be satisfied by the OS backlog (or swallowed ahead of a queued
+/// real client) and leave `stop()` hanging.  The nonblocking accept loop
+/// makes shutdown deterministic — including with a streaming session in
+/// flight.
+#[test]
+fn stop_is_deterministic_with_inflight_streaming_sessions() {
+    // With an in-flight streaming session: stop() must return as soon as
+    // the worker finishes that one session, never hang on the acceptor.
+    let handle = start(stub_source(4, 8, 10), 2);
+    let addr = handle.addr;
+    let reader = std::thread::spawn(move || {
+        let mut c = StreamingClient::open(addr, "inflight", 30);
+        let mut chunks = 0;
+        while c.next_chunk().is_some() {
+            chunks += 1;
+        }
+        chunks
+    });
+    // Wait until the session is actually live before stopping.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while gauge(&sessions_block(addr), "active") == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let t0 = Instant::now();
+    handle.stop();
+    let stop_elapsed = t0.elapsed();
+    assert!(
+        stop_elapsed < Duration::from_secs(5),
+        "stop() hung for {stop_elapsed:?} with an in-flight stream"
+    );
+    // The in-flight client was served to completion, not aborted.
+    assert_eq!(reader.join().unwrap(), 31, "30 token lines + done");
+
+    // Idle churn: repeated start/stop cycles never hang on the wake race.
+    for round in 0..10 {
+        let h = start(stub_source(2, 4, 1), 2);
+        let t0 = Instant::now();
+        h.stop();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "idle stop round {round} hung"
+        );
+    }
+}
