@@ -1,0 +1,277 @@
+//! Bench P6 — chunked prefill interleaved with the fused decode tick:
+//! admitting a max-length prompt while four sessions decode must never
+//! add more than ONE device op to any tick (bounded TPOT), while the
+//! prompt still finishes in `ceil(prompt/budget)` ticks (bounded TTFT)
+//! instead of stalling the whole batch for one monolithic prefill.
+//!
+//! Drives the real [`StepScheduler`] — budgeted prefill lanes, the
+//! fair decode/prefill interleave, per-tick fan-back — over the
+//! deterministic host-only stub executor from `cortex/step.rs::testing`,
+//! wrapped in a counting executor that logs every tick's `device_ops`.
+//! The decode population replays a `workload::generate` Poisson trace
+//! (the trace fixes the session count, admission order and generation
+//! lengths; arrivals are replayed closed-loop, not in real time).  Two
+//! IDENTICAL long prompts prefill in interleaved chunks from one driver
+//! thread, so the second must adopt blocks the first registers
+//! *mid-prefill* — the copy-on-write registry working inside the
+//! prefill window, not just at episode start.
+//!
+//! CI asserts (via `ci/check_bench.py` over the emitted
+//! `BENCH_prefill_interleave.json`):
+//!
+//! * p99 (and max) device ops per tick ≤ 2 — one fused op plus at most
+//!   the single budgeted prefill chunk that has outgrown a batch lane,
+//! * mid-prefill registry hits > 0 — the interleaved twin prompt
+//!   attached blocks registered while its sibling was still prefilling,
+//! * no prefill chunk and no decode main ever deferred at this load.
+//!
+//! ```bash
+//! cargo bench --bench prefill_interleave
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use warp_cortex::cortex::step::testing::{stub_exec, stub_raw};
+use warp_cortex::cortex::{FusedExec, StepConfig, StepScheduler, StepSeams};
+use warp_cortex::model::{ChunkedPrefill, FusedReq, KvPool, KvPoolConfig, MainLane};
+use warp_cortex::runtime::ModelConfig;
+use warp_cortex::util::Json;
+use warp_cortex::workload::{generate, Arrivals, WorkloadConfig};
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 2,
+        d_ff: 32,
+        vocab_size: 260,
+        head_dim: 8,
+        rope_theta: 1e4,
+        param_count: 0,
+    }
+}
+
+const SIDE_CTX: usize = 96;
+const BATCH_WIDTH: usize = 8;
+const BLOCK_TOKENS: usize = 16;
+const DECODERS: usize = 4;
+/// Longer than `SIDE_CTX`, so the prompt's tail chunks outgrow a batch
+/// lane and must run as their own (budget-bounded) op.
+const PROMPT_LEN: usize = 120;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = tiny_cfg();
+    let pool = KvPool::new(
+        &cfg,
+        KvPoolConfig {
+            block_tokens: BLOCK_TOKENS,
+            ..KvPoolConfig::default()
+        },
+    );
+
+    // Per-tick device-op log: the inter-token latency proxy this bench
+    // gates on (every tick is one inter-token interval for all decoders).
+    let per_tick: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let exec: FusedExec = {
+        let inner = stub_exec(cfg.clone(), SIDE_CTX, BATCH_WIDTH);
+        let per_tick = per_tick.clone();
+        Arc::new(move |mains: &[MainLane], sides: &[FusedReq], fuse: bool| {
+            let out = inner(mains, sides, fuse)?;
+            per_tick.lock().expect("tick log").push(out.device_ops);
+            Ok(out)
+        })
+    };
+    let sched = StepScheduler::new(
+        StepConfig {
+            batch_width: BATCH_WIDTH,
+            side_ctx: SIDE_CTX,
+            max_active: 4,
+            max_parked: 64,
+            max_sessions: DECODERS + 2,
+            max_parked_sessions: DECODERS + 2,
+            // One chunk per tick: the tightest TPOT bound (and the
+            // slowest TTFT) the knob allows — the worst case to gate.
+            prefill_budget: 1,
+            // Generous gather window so the bench is deterministic on
+            // slow CI machines (same reasoning as multi_session).
+            main_gather: Duration::from_millis(2),
+            ..StepConfig::default()
+        },
+        StepSeams::new(exec, {
+            let pool = pool.clone();
+            // No side tasks in this bench; the spawner is never called.
+            Arc::new(move |t| {
+                warp_cortex::cortex::SideAgent::from_parts(
+                    t,
+                    warp_cortex::cortex::AgentCache::Bare(pool.new_cache(SIDE_CTX)),
+                    0,
+                    1,
+                    vec![],
+                    0,
+                    warp_cortex::text::SamplerConfig::greedy(),
+                )
+            })
+        }),
+    );
+
+    println!("═══ P6: chunked prefill interleaved with the fused decode tick ═══\n");
+
+    // ── decode population: replay a Poisson trace, closed-loop ──────────
+    let trace = generate(&WorkloadConfig {
+        seed: 17,
+        requests: DECODERS,
+        arrivals: Arrivals::Poisson(64.0),
+        min_tokens: 24,
+        max_tokens: 56,
+        trigger_prob: 0.3,
+    });
+    // The two identical long prompts that prefill mid-flight.
+    let prompt: Vec<i32> = (0..PROMPT_LEN).map(|i| ((i * 7 + 3) % 200) as i32).collect();
+
+    let prefill_result: Mutex<Option<(usize, usize)>> = Mutex::new(None);
+    std::thread::scope(|scope| {
+        // Decode sessions: one serving worker per trace request, admission
+        // in arrival order, generation length from the trace.
+        for req in &trace {
+            let sched = sched.clone();
+            let pool = pool.clone();
+            scope.spawn(move || {
+                let _permit = sched.open_session().expect("session under the cap admits");
+                let toks: Vec<i32> = req.prompt.bytes().map(|b| i32::from(b % 200)).collect();
+                let mut kv = pool.new_cache(256);
+                for step in 0..req.max_tokens {
+                    let tok = toks[step % toks.len()];
+                    sched
+                        .main_step(tok, kv.len() as i32, &mut kv)
+                        .expect("main step");
+                }
+            });
+        }
+        // Prefill driver: prompt A starts cold; once A has two full blocks
+        // registered, its twin B begins and the two interleave chunk by
+        // chunk — B's block-boundary probes must then adopt blocks A
+        // registered mid-prefill.
+        let sched = sched.clone();
+        let pool = pool.clone();
+        let prefill_result = &prefill_result;
+        let prompt = &prompt;
+        scope.spawn(move || {
+            let _pa = sched.open_session().expect("prefill session A admits");
+            let _pb = sched.open_session().expect("prefill session B admits");
+            let mut kv_a = pool.new_cache(PROMPT_LEN + 8);
+            let mut kv_b = pool.new_cache(PROMPT_LEN + 8);
+            let mut cp_a = ChunkedPrefill::begin(prompt, &mut kv_a).expect("A begins");
+            assert_eq!(cp_a.adopted_rows(), 0, "A starts cold");
+            while kv_a.len() < 2 * BLOCK_TOKENS {
+                let (tok, pos) = cp_a.next_lane(&mut kv_a).expect("A has rows left");
+                sched.prefill_step(tok, pos, &mut kv_a).expect("A chunk");
+                cp_a.advance(&mut kv_a);
+            }
+            let mut cp_b = ChunkedPrefill::begin(prompt, &mut kv_b).expect("B begins");
+            let (mut last_a, mut last_b) = (None, None);
+            while !(cp_a.is_done() && cp_b.is_done()) {
+                if let Some((tok, pos)) = cp_a.next_lane(&mut kv_a) {
+                    last_a = Some(sched.prefill_step(tok, pos, &mut kv_a).expect("A chunk"));
+                    cp_a.advance(&mut kv_a);
+                }
+                if let Some((tok, pos)) = cp_b.next_lane(&mut kv_b) {
+                    last_b = Some(sched.prefill_step(tok, pos, &mut kv_b).expect("B chunk"));
+                    cp_b.advance(&mut kv_b);
+                }
+            }
+            // Chunked ≡ monolithic: both streams end on the reference
+            // final-token decode, regardless of how many blocks B adopted.
+            let want = stub_raw(
+                &tiny_cfg(),
+                prompt[PROMPT_LEN - 1],
+                (PROMPT_LEN - 1) as i32,
+                PROMPT_LEN - 1,
+            );
+            assert_eq!(last_a.expect("A decoded its tail").logits, want.logits);
+            assert_eq!(last_b.expect("B decoded its tail").logits, want.logits);
+            *prefill_result.lock().expect("prefill result") =
+                Some((cp_a.tail_steps(), cp_b.adopted_rows()));
+        });
+    });
+
+    let st = sched.stats();
+    let ss = sched.session_stats();
+    let ps = pool.stats();
+    let (a_steps, b_adopted) = prefill_result
+        .lock()
+        .expect("prefill result")
+        .take()
+        .expect("prefill driver finished");
+    sched.shutdown();
+
+    let mut ops = per_tick.lock().expect("tick log").clone();
+    assert!(!ops.is_empty(), "the run must have ticked");
+    ops.sort_unstable();
+    let p99_idx = ((ops.len() as f64 * 0.99).ceil() as usize).saturating_sub(1);
+    let p99_ops_per_tick = ops[p99_idx] as f64;
+    let max_ops_per_tick = *ops.last().expect("non-empty") as f64;
+
+    let decode_steps: usize = trace.iter().map(|r| r.max_tokens).sum();
+    println!("{:>22} {}", "ticks", st.ticks);
+    println!("{:>22} {}", "device ops", st.device_ops);
+    println!("{:>22} {:.3}", "ops/token", st.ops_per_token());
+    println!("{:>22} {p99_ops_per_tick}", "p99 ops/tick");
+    println!("{:>22} {max_ops_per_tick}", "max ops/tick");
+    println!("{:>22} {}", "prefill chunks", st.prefill_steps);
+    println!("{:>22} {}", "mid-prefill hits", ps.prefix_mid_hits);
+    println!("{:>22} {b_adopted}", "rows B adopted");
+
+    // ── acceptance criteria (mirrored in ci/thresholds.json) ────────────
+    assert_eq!(st.main_steps, decode_steps as u64, "lost decode steps");
+    assert_eq!(
+        ss.completed,
+        (DECODERS + 2) as u64,
+        "all sessions must complete"
+    );
+    assert!(
+        p99_ops_per_tick <= 2.0 && max_ops_per_tick <= 2.0,
+        "a prefilling prompt may add at most one op to a tick \
+         (p99 {p99_ops_per_tick}, max {max_ops_per_tick})"
+    );
+    assert!(
+        ps.prefix_mid_hits > 0,
+        "the twin prompt must hit blocks registered mid-prefill"
+    );
+    assert!(
+        b_adopted > 0 && a_steps + b_adopted > PROMPT_LEN,
+        "B must skip rows A already filled (adopted {b_adopted})"
+    );
+    assert_eq!(st.prefill_deferred, 0, "budget 1 never defers a lone driver");
+    assert_eq!(st.main_deferred, 0, "decode never waits behind prefill lanes");
+
+    // Machine-readable report, gated by ci/check_bench.py (declarative
+    // thresholds in ci/thresholds.json — no inline CI heredoc).
+    let report = Json::obj()
+        .with("bench", "prefill_interleave")
+        .with("batch_width", BATCH_WIDTH)
+        .with("decoders", DECODERS)
+        .with("prompt_len", PROMPT_LEN)
+        .with("prefill_budget", 1u64)
+        .with("ticks", st.ticks)
+        .with("device_ops", st.device_ops)
+        .with("ops_per_token", st.ops_per_token())
+        .with("p99_ops_per_tick", p99_ops_per_tick)
+        .with("max_ops_per_tick", max_ops_per_tick)
+        .with("main_steps", st.main_steps)
+        .with("prefill_steps", st.prefill_steps)
+        .with("prefill_deferred", st.prefill_deferred)
+        .with("main_deferred", st.main_deferred)
+        .with("mid_prefill_hits", ps.prefix_mid_hits)
+        .with("rows_adopted_by_twin", b_adopted as u64);
+    std::fs::write("BENCH_prefill_interleave.json", report.to_string())?;
+    println!("\nwrote BENCH_prefill_interleave.json");
+
+    println!(
+        "\nshape check: {PROMPT_LEN}-token prompt prefilled under budget 1 while {DECODERS} \
+         sessions decoded — p99 {p99_ops_per_tick} ops/tick, twin adopted {b_adopted} rows  ✓"
+    );
+    Ok(())
+}

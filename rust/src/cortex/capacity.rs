@@ -67,6 +67,9 @@ pub enum CapacityError {
         which: &'static str,
         value: f64,
     },
+    /// `prefill_budget == 0`: zero lanes per tick would never finish a
+    /// prompt (the scheduler clamps to 1; the model rejects outright).
+    ZeroPrefillBudget,
 }
 
 impl std::fmt::Display for CapacityError {
@@ -81,6 +84,9 @@ impl std::fmt::Display for CapacityError {
             }
             CapacityError::NonFiniteCost { which, value } => {
                 write!(f, "capacity model: {which} = {value} is not a finite non-negative cost")
+            }
+            CapacityError::ZeroPrefillBudget => {
+                write!(f, "capacity model: prefill_budget is 0 (a prompt would never finish)")
             }
         }
     }
@@ -114,6 +120,21 @@ pub struct CapacityPoint {
     pub mem_bytes: u64,
     pub utilization: f64,
     pub bottleneck: Bottleneck,
+}
+
+/// One point of the TTFT-vs-budget trade-off curve
+/// ([`CapacityModel::prefill_curve`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefillPoint {
+    /// Teacher-forced lanes per fused tick ([`crate::cortex::step::StepConfig::prefill_budget`]).
+    pub prefill_budget: u64,
+    /// Fused ticks until the admission's first sampled token.
+    pub ttft_ticks: u64,
+    /// The same figure in seconds (one batch op per tick).
+    pub ttft_seconds: f64,
+    /// Worst extra inter-token gap (fused ticks) concurrent decode
+    /// streams see while the prompt admits — constant under chunking.
+    pub tpot_stall_ticks: f64,
 }
 
 impl CapacityModel {
@@ -300,6 +321,95 @@ impl CapacityModel {
         Ok(points)
     }
 
+    // ── Chunked-prefill admission model (TTFT vs TPOT) ─────────────────
+    //
+    // Since the chunked-prefill scheduler, a prompt admitting into a busy
+    // system teacher-forces `prefill_budget` lanes per fused tick instead
+    // of running one monolithic prefill op.  Two figures fall out, both in
+    // fused-tick units so they compose with the utilization model above:
+    //
+    //  * TTFT — ticks until the first sampled token:
+    //    `ceil(uncovered / budget)` where `uncovered` is the prompt minus
+    //    any prefix-registry rows adopted for free (begin-time attach or
+    //    mid-prefill hits).  Raising the budget buys TTFT linearly.
+    //
+    //  * TPOT inflation — the worst extra inter-token gap a concurrent
+    //    decode stream sees while the prompt admits.  Chunked lanes ride
+    //    the SAME fused op and the fair interleave cedes a decode lane at
+    //    most every other tick, so the bound is a constant 2 ticks —
+    //    independent of prompt length.  A monolithic admission instead
+    //    monopolizes the device for the prompt's whole prefill,
+    //    ≈ `prompt / B` fused-tick equivalents (B lanes per op).
+
+    /// Fused ticks until a chunked admission's first sample.
+    /// `cached_rows` is the prefix-registry coverage adopted for free; the
+    /// final prompt token always decodes live, so the result is ≥ 1.
+    pub fn ttft_ticks_chunked(
+        &self,
+        prompt_tokens: u64,
+        cached_rows: u64,
+        prefill_budget: u64,
+    ) -> Result<u64, CapacityError> {
+        if prefill_budget == 0 {
+            return Err(CapacityError::ZeroPrefillBudget);
+        }
+        let uncovered = prompt_tokens.saturating_sub(cached_rows).max(1);
+        #[allow(clippy::manual_div_ceil)] // u64::div_ceil needs rustc 1.73; MSRV is 1.70
+        Ok((uncovered + prefill_budget - 1) / prefill_budget)
+    }
+
+    /// [`CapacityModel::ttft_ticks_chunked`] in seconds, charging one
+    /// fused batch op per tick.
+    pub fn ttft_seconds_chunked(
+        &self,
+        prompt_tokens: u64,
+        cached_rows: u64,
+        prefill_budget: u64,
+    ) -> Result<f64, CapacityError> {
+        self.validate()?;
+        let ticks = self.ttft_ticks_chunked(prompt_tokens, cached_rows, prefill_budget)?;
+        Ok(ticks as f64 * self.compute.t_side_batch)
+    }
+
+    /// Worst-case extra inter-token gap (fused ticks) a decode stream sees
+    /// while a prompt admits monolithically: the prefill op monopolizes
+    /// the device for ≈ `prompt / B` tick-equivalents.
+    pub fn tpot_stall_monolithic_ticks(&self, prompt_tokens: u64) -> Result<f64, CapacityError> {
+        self.validate()?;
+        Ok(prompt_tokens as f64 / self.compute.batch_width as f64)
+    }
+
+    /// The chunked counterpart: a constant bound, independent of prompt
+    /// length — a ceded decode lane runs by the next tick and the fair
+    /// interleave never cedes on consecutive ticks.
+    pub fn tpot_stall_chunked_ticks(&self) -> f64 {
+        2.0
+    }
+
+    /// TTFT-vs-budget trade-off curve for one admission (budgets
+    /// `1..=max_budget`): TTFT falls linearly with the budget while the
+    /// decode-stall bound stays constant — the dial the serving layer
+    /// turns via `CortexConfig::prefill_budget`.
+    pub fn prefill_curve(
+        &self,
+        prompt_tokens: u64,
+        cached_rows: u64,
+        max_budget: u64,
+    ) -> Result<Vec<PrefillPoint>, CapacityError> {
+        self.validate()?;
+        (1..=max_budget.max(1))
+            .map(|budget| {
+                let ttft_ticks = self.ttft_ticks_chunked(prompt_tokens, cached_rows, budget)?;
+                Ok(PrefillPoint {
+                    prefill_budget: budget,
+                    ttft_ticks,
+                    ttft_seconds: ttft_ticks as f64 * self.compute.t_side_batch,
+                    tpot_stall_ticks: self.tpot_stall_chunked_ticks(),
+                })
+            })
+            .collect()
+    }
+
     /// The population where scaling stops, and why.
     pub fn limit(&self) -> Result<(u64, Bottleneck), CapacityError> {
         let m = self.max_agents_memory();
@@ -480,6 +590,44 @@ mod tests {
             zero_b.max_sessions_compute(5).unwrap_err(),
             CapacityError::ZeroBatchWidth
         );
+    }
+
+    #[test]
+    fn chunked_prefill_bounds_ttft_and_tpot() {
+        let m = model(4e-3);
+        // Exact tick math: 120 uncovered tokens at different budgets.
+        assert_eq!(m.ttft_ticks_chunked(120, 0, 1).unwrap(), 120);
+        assert_eq!(m.ttft_ticks_chunked(120, 0, 4).unwrap(), 30);
+        assert_eq!(m.ttft_ticks_chunked(120, 0, 7).unwrap(), 18); // ceiling
+        // Registry coverage is free TTFT: 96 adopted rows leave 24 lanes.
+        assert_eq!(m.ttft_ticks_chunked(120, 96, 4).unwrap(), 6);
+        // The final token always decodes live, even under full coverage.
+        assert_eq!(m.ttft_ticks_chunked(120, 120, 4).unwrap(), 1);
+        // Seconds charge one fused op per tick.
+        assert_eq!(m.ttft_seconds_chunked(120, 0, 4).unwrap(), 30.0 * 4e-3);
+        // Budget 0 is a typed error, not a prompt that never finishes.
+        assert_eq!(
+            m.ttft_ticks_chunked(120, 0, 0),
+            Err(CapacityError::ZeroPrefillBudget)
+        );
+        assert!(format!("{}", CapacityError::ZeroPrefillBudget).contains("prefill_budget"));
+        // TPOT: the chunked stall bound is a constant; the monolithic one
+        // scales with the prompt and overtakes it past two batches' worth.
+        assert_eq!(m.tpot_stall_chunked_ticks(), 2.0);
+        assert!(
+            m.tpot_stall_monolithic_ticks(120).unwrap() > m.tpot_stall_chunked_ticks(),
+            "a long prompt must stall more monolithically than chunked"
+        );
+        assert!(m.tpot_stall_monolithic_ticks(4).unwrap() <= m.tpot_stall_chunked_ticks());
+        // The dial: TTFT falls monotonically with budget, stall stays flat.
+        let curve = m.prefill_curve(120, 0, 8).unwrap();
+        assert_eq!(curve.len(), 8);
+        for w in curve.windows(2) {
+            assert!(w[1].ttft_ticks <= w[0].ttft_ticks, "TTFT rose with budget");
+            assert_eq!(w[1].tpot_stall_ticks, w[0].tpot_stall_ticks);
+        }
+        assert_eq!(curve[0].ttft_ticks, 120);
+        assert_eq!(curve[7].ttft_ticks, 15);
     }
 
     #[test]

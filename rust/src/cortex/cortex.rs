@@ -26,6 +26,14 @@
 //! reservation) and shed with `Busy` beyond the park queue; each
 //! session's side-agent outcomes route back to it alone.
 //!
+//! Prefill is part of the same schedule: when other sessions are already
+//! decoding, `open_session` defers the prompt to a
+//! [`ChunkedPrefill`] carried inside the session (the prefill→decode
+//! state machine), whose block-sized chunks ride the fused tick under
+//! [`StepConfig::prefill_budget`] — a long prompt no longer stalls
+//! in-flight sessions for its whole length, and its completed blocks
+//! register in the prefix registry while it is still prefilling.
+//!
 //! Context memory is device-resident end to end: every cache write (prefill
 //! load, decode append, synapse seed, injection) goes through to the shared
 //! pool's device block copies, and every decode step — main-agent River
@@ -61,7 +69,9 @@ use super::step::{
 };
 use super::synapse::{Synapse, SynapseStats};
 use crate::metrics::{Histogram, Throughput};
-use crate::model::{Engine, KvPool, KvPoolConfig, PoolStats};
+use crate::model::{
+    BlockReservation, ChunkedPrefill, Engine, KvPool, KvPoolConfig, PoolStats,
+};
 use crate::runtime::Lane;
 use crate::text::{Sampler, SamplerConfig, Tokenizer, EOS_ID};
 use crate::util::Json;
@@ -112,6 +122,18 @@ pub struct CortexConfig {
     /// fused device op.  Negligible against a real device op; zero
     /// disables gathering.
     pub main_gather: Duration,
+    /// Admit prompts as *chunked* prefill when other sessions are already
+    /// decoding: the prompt teacher-forces through the shared fused tick
+    /// under [`CortexConfig::prefill_budget`] instead of running one
+    /// monolithic prefill op that would stall every concurrent stream's
+    /// inter-token latency.  A session opening into an idle system still
+    /// takes the monolithic path (one prefill op beats N per-token lanes
+    /// when nobody is waiting behind it).
+    pub chunked_prefill: bool,
+    /// Per-tick cap on teacher-forced prefill lanes riding the fused tick
+    /// ([`super::step::StepConfig::prefill_budget`]) — the TTFT-vs-TPOT
+    /// dial under admission storms.  Clamped to ≥ 1.
+    pub prefill_budget: usize,
     pub router: RouterConfig,
     /// Side-cache seeding (Full, or the §6.2 Coarse/Adaptive extensions).
     pub seed_mode: crate::cortex::synapse::SeedMode,
@@ -145,6 +167,8 @@ impl Default for CortexConfig {
             max_sessions: 8,
             max_parked_sessions: 32,
             main_gather: Duration::from_micros(200),
+            chunked_prefill: true,
+            prefill_budget: 2,
             router: RouterConfig::default(),
             seed_mode: crate::cortex::synapse::SeedMode::Full,
             kv_pool: KvPoolConfig::default(),
@@ -414,6 +438,7 @@ impl WarpCortex {
                 max_sessions: cfg.max_sessions,
                 max_parked_sessions: cfg.max_parked_sessions,
                 main_gather: cfg.main_gather,
+                prefill_budget: cfg.prefill_budget.max(1),
             },
             StepSeams {
                 exec,
@@ -532,9 +557,32 @@ impl WarpCortex {
                 ));
             }
         };
-        let opened = self.start_main_ids(&ids);
-        drop(rsv); // the real blocks are rented (or the prefill failed)
-        let (ticket, logits, hidden) = opened.map_err(SessionError::Failed)?;
+        // Chunked admission (the bounded-TTFT path): when other sessions
+        // are already decoding, the prompt enters as teacher-forced lanes
+        // that ride the shared fused tick under the per-tick prefill
+        // budget — a long prompt can no longer stall every concurrent
+        // stream behind one monolithic prefill op.  Alone in the system,
+        // the monolithic path wins (one device op for the whole prompt),
+        // so chunking only engages with company.
+        let use_chunked = self.cfg.chunked_prefill && self.step.session_stats().active > 1;
+        let (ticket, logits, hidden, prefill) = if use_chunked {
+            let opened = (|| {
+                let mut ticket = self.prism.register(AgentKind::Main)?;
+                let cp = ChunkedPrefill::begin(&ids, &mut ticket.kv)?;
+                Ok::<_, anyhow::Error>((ticket, cp))
+            })();
+            let (ticket, cp) = opened.map_err(SessionError::Failed)?;
+            // The reservation rides into the session: its rows are rented
+            // chunk-by-chunk across the coming ticks, so releasing the
+            // headroom now would let a concurrent admission claim it and
+            // fail this session mid-prefill instead of shedding cleanly.
+            (ticket, Vec::new(), Vec::new(), Some((cp, rsv)))
+        } else {
+            let opened = self.start_main_ids(&ids);
+            drop(rsv); // the real blocks are rented (or the prefill failed)
+            let (ticket, logits, hidden) = opened.map_err(SessionError::Failed)?;
+            (ticket, logits, hidden, None)
+        };
         let mut router = Router::new(self.cfg.router.clone());
         // Triggers already present in the prompt spawn on the first step.
         let pending: Vec<Trigger> = router.feed(prompt);
@@ -543,6 +591,7 @@ impl WarpCortex {
             cx: self,
             permit,
             ticket,
+            prefill,
             router,
             sampler: Sampler::new(self.cfg.sampler.clone()),
             prompt: prompt.to_string(),
@@ -652,6 +701,13 @@ pub struct CortexSession<'c> {
     cx: &'c WarpCortex,
     permit: SessionPermit,
     ticket: AgentTicket,
+    /// In-flight chunked admission (`None` once the prompt is covered,
+    /// always `None` on the monolithic path): the remaining teacher-forced
+    /// lanes plus the admission-time block reservation, held until the
+    /// prompt's rows are actually rented.  Makes the session a
+    /// prefill→decode state machine — the first [`CortexSession::next_token`]
+    /// completes coverage before sampling.
+    prefill: Option<(ChunkedPrefill, BlockReservation<'c>)>,
     router: Router,
     sampler: Sampler,
     prompt: String,
@@ -687,10 +743,40 @@ impl<'c> CortexSession<'c> {
         self.generated
     }
 
+    /// Complete a chunked admission: teacher-force the remaining prefill
+    /// lanes through the scheduler (budgeted per tick, fused with the
+    /// other sessions' decode steps) and seed the sampler state from the
+    /// final lane — the first-sample logits.  Block-boundary probes along
+    /// the way adopt any identical prefix a concurrent session has
+    /// registered mid-prefill.  No-op once the prompt is covered.
+    fn ensure_prefilled(&mut self) -> Result<()> {
+        let Some((mut cp, rsv)) = self.prefill.take() else {
+            return Ok(());
+        };
+        let mut last = None;
+        while let Some((tok, pos)) = cp.next_lane(&mut self.ticket.kv) {
+            match self.cx.step.prefill_step(tok, pos, &mut self.ticket.kv) {
+                Ok(out) => last = Some(out),
+                Err(e) => {
+                    self.done = true; // poisoned: no logits to sample from
+                    return Err(e);
+                }
+            }
+            cp.advance(&mut self.ticket.kv);
+        }
+        let out = last.expect("chunked coverage always leaves the final prompt token live");
+        self.logits = out.logits;
+        self.hidden = out.hidden;
+        self.pos = self.ticket.kv.len() as i32;
+        drop(rsv); // the prompt's rows are rented now
+        Ok(())
+    }
+
     /// Advance one token.  Returns the visible text delta (possibly empty
     /// — not every token decodes to a printable byte), or `None` once the
     /// budget, the cache or an EOS ended generation.
     pub fn next_token(&mut self) -> Result<Option<String>> {
+        self.ensure_prefilled()?;
         if self.done || self.generated >= self.max_tokens || self.ticket.kv.remaining() == 0 {
             self.done = true;
             return Ok(None);

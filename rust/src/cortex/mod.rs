@@ -55,6 +55,22 @@
 //! equivalence to sequential episodes; [`capacity`] models the session
 //! axis (`utilization_sessions`/`max_sessions_compute`).
 //!
+//! Prompt **prefill is chunked** since PR 6: once other sessions are
+//! decoding, `open_session` no longer runs one monolithic prefill before
+//! joining the tick loop — the session opens in a prefill→decode state
+//! machine ([`crate::model::ChunkedPrefill`] held inside
+//! [`cortex::CortexSession`]) whose teacher-forced chunks ride the same
+//! fused tick as everyone else's decode lanes, budgeted by
+//! [`step::StepConfig::prefill_budget`] and fair-interleaved so a
+//! decode-saturated table cannot starve prefill (bounded TTFT) and a
+//! long prompt adds at most one op to any tick (bounded TPOT —
+//! `benches/prefill_interleave.rs` gates p99 ops/tick ≤ 2; [`capacity`]
+//! models the TTFT-vs-budget curve via `ttft_ticks_chunked` /
+//! `prefill_curve`).  Completed chunks register in the prefix registry
+//! *incrementally*, so a concurrent identical prompt adopts blocks while
+//! its twin is still prefilling (the pool's `prefix_mid_hits` gauge and
+//! the `/stats` `prefill` block expose this live).
+//!
 //! Common prefixes are shared copy-on-write: the pool keeps a
 //! content-addressed registry of full blocks (prompt token chains via
 //! `Engine::prefill_shared`, landmark seeds via `Synapse::seed_into`), so
@@ -85,7 +101,7 @@ pub mod synapse;
 pub use agent::{AgentCache, SideAgent, SideContext, SideOutcome, SideTask, StepAgentCtx};
 pub use batcher::Batcher;
 pub use baseline::StandardArchitecture;
-pub use capacity::{Bottleneck, CapacityError, CapacityModel, ComputeCosts};
+pub use capacity::{Bottleneck, CapacityError, CapacityModel, ComputeCosts, PrefillPoint};
 pub use cortex::{
     CortexConfig, CortexSession, EpisodeReport, Event, SessionError, WarpCortex,
 };

@@ -136,6 +136,17 @@ pub struct StepConfig {
     /// window only ever delays a tick that would under-fill its main
     /// lanes, and is negligible against a real device op.
     pub main_gather: Duration,
+    /// Teacher-forced prefill lanes admitted into each fused tick
+    /// ([`StepScheduler::prefill_step`]) — the TTFT-vs-TPOT dial: a long
+    /// prompt admits immediately and trickles into the shared tick at this
+    /// rate instead of stalling every session behind one monolithic
+    /// prefill op.  Prefill lanes ride behind decode mains (a pending
+    /// fusable prefill chunk is ceded a batch lane on alternating ticks
+    /// when decode would otherwise monopolize the width), so with budget
+    /// `b` a prefilling prompt adds at most `b` lanes — and, once its
+    /// context outgrows a batch lane, at most `b` extra own-ops — to any
+    /// tick.  Clamped to ≥ 1: budget 0 would park prefills forever.
+    pub prefill_budget: usize,
 }
 
 impl Default for StepConfig {
@@ -149,6 +160,7 @@ impl Default for StepConfig {
             max_sessions: 8,
             max_parked_sessions: 32,
             main_gather: Duration::from_micros(200),
+            prefill_budget: 2,
         }
     }
 }
@@ -193,8 +205,17 @@ pub struct StepStats {
     pub main_ticks: u64,
     /// Main steps that had to wait a tick behind *other mains* (fusable
     /// mains beyond the lane budget — the batch width minus the one lane
-    /// reserved for live side agents; never behind the side queue itself).
+    /// reserved for live side agents and, on alternating ticks, the one
+    /// lane ceded to a pending prefill chunk; never behind the side queue
+    /// itself).
     pub main_deferred: u64,
+    /// Teacher-forced prefill lanes served (chunked-prefill chunks).
+    pub prefill_steps: u64,
+    /// Ticks that carried at least one prefill lane.
+    pub prefill_ticks: u64,
+    /// Prefill lanes left queued for a tick by the per-tick budget or the
+    /// lane cap (the budget-deferred tokens of the `/stats` prefill block).
+    pub prefill_deferred: u64,
 }
 
 impl StepStats {
@@ -202,7 +223,7 @@ impl StepStats {
     /// merit: ~1.0 for the serial pre-PR-4 path, → 1/B as the population
     /// grows.
     pub fn ops_per_token(&self) -> f64 {
-        let tokens = self.main_steps + self.side_steps;
+        let tokens = self.main_steps + self.side_steps + self.prefill_steps;
         if tokens == 0 {
             0.0
         } else {
@@ -211,12 +232,14 @@ impl StepStats {
     }
 
     /// Mean decoded tokens per device op (the batch-occupancy gauge;
-    /// inverse of [`StepStats::ops_per_token`]).
+    /// inverse of [`StepStats::ops_per_token`]).  Prefill lanes count as
+    /// tokens: a teacher-forced chunk is a decoded row like any other.
     pub fn batch_occupancy(&self) -> f64 {
         if self.device_ops == 0 {
             0.0
         } else {
-            (self.main_steps + self.side_steps) as f64 / self.device_ops as f64
+            (self.main_steps + self.side_steps + self.prefill_steps) as f64
+                / self.device_ops as f64
         }
     }
 }
@@ -467,6 +490,9 @@ struct Gauges {
     fused_ticks: AtomicU64,
     main_ticks: AtomicU64,
     main_deferred: AtomicU64,
+    prefill_steps: AtomicU64,
+    prefill_ticks: AtomicU64,
+    prefill_deferred: AtomicU64,
     active: AtomicUsize,
     parked: AtomicUsize,
     parked_peak: AtomicUsize,
@@ -486,6 +512,9 @@ impl Gauges {
             fused_ticks: AtomicU64::new(0),
             main_ticks: AtomicU64::new(0),
             main_deferred: AtomicU64::new(0),
+            prefill_steps: AtomicU64::new(0),
+            prefill_ticks: AtomicU64::new(0),
+            prefill_deferred: AtomicU64::new(0),
             active: AtomicUsize::new(0),
             parked: AtomicUsize::new(0),
             parked_peak: AtomicUsize::new(0),
@@ -510,6 +539,10 @@ struct MainReq {
 
 enum Cmd {
     Main(MainReq),
+    /// A teacher-forced prefill chunk: same request shape as a main step,
+    /// but admitted under [`StepConfig::prefill_budget`] behind decode
+    /// mains instead of competing with them for every lane.
+    Prefill(MainReq),
     Task(SideTask),
 }
 
@@ -653,6 +686,45 @@ impl StepScheduler {
         })
     }
 
+    /// One teacher-forced prefill step through the scheduler: the chunked
+    /// admission path.  Identical round-trip to
+    /// [`StepScheduler::main_step`] — blocks until the lane's result lands
+    /// and appends the produced row to `kv` — but the lane rides the tick
+    /// under the per-tick [`StepConfig::prefill_budget`] behind decode
+    /// mains, so a long prompt prefilling chunk-by-chunk cannot stall
+    /// concurrent sessions' inter-token latency.  A prefilling session
+    /// calls this once per [`crate::model::ChunkedPrefill`] lane; the
+    /// sequential-KV dependency (row `i` decodes over a cache of length
+    /// `i`) is preserved because the caller blocks per chunk.
+    pub fn prefill_step(&self, token: i32, pos: i32, kv: &mut KvCache) -> Result<MainStepOut> {
+        if kv.remaining() == 0 {
+            bail!("prefill_step: kv cache full");
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = MainReq {
+            token,
+            pos,
+            paged: kv.paged(),
+            capacity: kv.capacity(),
+            reply: reply_tx,
+        };
+        let tx = lock_unpoisoned(&self.tx)
+            .as_ref()
+            .cloned()
+            .ok_or_else(|| anyhow!("step scheduler shut down"))?;
+        tx.send(Cmd::Prefill(req))
+            .map_err(|_| anyhow!("step scheduler thread gone"))?;
+        drop(tx);
+        let raw = reply_rx.recv().map_err(|_| {
+            anyhow!("step scheduler shut down while a prefill step was in flight")
+        })??;
+        kv.append_row(&raw.k_new, &raw.v_new)?;
+        Ok(MainStepOut {
+            logits: raw.logits,
+            hidden: raw.hidden,
+        })
+    }
+
     /// Submit a side task; `false` means the park queue is full (caller
     /// drops it — the paper's side agents are best-effort by design).
     pub fn submit(&self, task: SideTask) -> bool {
@@ -731,6 +803,9 @@ impl StepScheduler {
             fused_ticks: g.fused_ticks.load(Ordering::Relaxed),
             main_ticks: g.main_ticks.load(Ordering::Relaxed),
             main_deferred: g.main_deferred.load(Ordering::Relaxed),
+            prefill_steps: g.prefill_steps.load(Ordering::Relaxed),
+            prefill_ticks: g.prefill_ticks.load(Ordering::Relaxed),
+            prefill_deferred: g.prefill_deferred.load(Ordering::Relaxed),
         }
     }
 
@@ -801,6 +876,13 @@ fn step_loop(
     let mut active: Vec<SideAgent> = Vec::new();
     let mut parked: VecDeque<SideTask> = VecDeque::new();
     let mut mains: VecDeque<MainReq> = VecDeque::new();
+    let mut prefills: VecDeque<MainReq> = VecDeque::new();
+    // Fair-interleave bit: on alternating ticks a pending fusable prefill
+    // chunk is ceded one batch lane ahead of decode mains, so under decode
+    // saturation a prefilling prompt still makes ≥ 1 chunk of progress
+    // every 2 ticks (and decode never loses more than 1 lane every other
+    // tick to it).
+    let mut prefill_turn = false;
     // Round-robin cursor so `max_active > batch_width` populations are
     // served fairly across ticks.
     let mut rr: usize = 0;
@@ -813,9 +895,15 @@ fn step_loop(
     let mut gather_skip: u32 = 0;
     let mut open = true;
 
-    fn enqueue(cmd: Cmd, mains: &mut VecDeque<MainReq>, parked: &mut VecDeque<SideTask>) {
+    fn enqueue(
+        cmd: Cmd,
+        mains: &mut VecDeque<MainReq>,
+        prefills: &mut VecDeque<MainReq>,
+        parked: &mut VecDeque<SideTask>,
+    ) {
         match cmd {
             Cmd::Main(m) => mains.push_back(m),
+            Cmd::Prefill(p) => prefills.push_back(p),
             Cmd::Task(t) => parked.push_back(t),
         }
     }
@@ -823,18 +911,18 @@ fn step_loop(
     loop {
         // ── 1. take on new work ─────────────────────────────────────────
         if open {
-            if active.is_empty() && parked.is_empty() && mains.is_empty() {
+            if active.is_empty() && parked.is_empty() && mains.is_empty() && prefills.is_empty() {
                 gauges.active.store(0, Ordering::Relaxed);
                 gauges.parked.store(0, Ordering::Relaxed);
                 // Fully idle: block until there is something to do.
                 match rx.recv() {
-                    Ok(cmd) => enqueue(cmd, &mut mains, &mut parked),
+                    Ok(cmd) => enqueue(cmd, &mut mains, &mut prefills, &mut parked),
                     Err(_) => open = false,
                 }
             }
             loop {
                 match rx.try_recv() {
-                    Ok(cmd) => enqueue(cmd, &mut mains, &mut parked),
+                    Ok(cmd) => enqueue(cmd, &mut mains, &mut prefills, &mut parked),
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
                         open = false;
@@ -867,7 +955,7 @@ fn step_loop(
                             break;
                         }
                         match rx.recv_timeout(deadline - now) {
-                            Ok(cmd) => enqueue(cmd, &mut mains, &mut parked),
+                            Ok(cmd) => enqueue(cmd, &mut mains, &mut prefills, &mut parked),
                             Err(mpsc::RecvTimeoutError::Timeout) => break,
                             Err(mpsc::RecvTimeoutError::Disconnected) => {
                                 open = false;
@@ -885,6 +973,9 @@ fn step_loop(
             // orchestrator drops, so this only fires on teardown.
             for m in mains.drain(..) {
                 let _ = m.reply.send(Err(anyhow!("step scheduler shut down")));
+            }
+            for p in prefills.drain(..) {
+                let _ = p.reply.send(Err(anyhow!("step scheduler shut down")));
             }
             for t in parked.drain(..) {
                 deliver(
@@ -936,12 +1027,25 @@ fn step_loop(
         } else {
             cfg.batch_width.saturating_sub(1).max(1)
         };
+        // Fair interleave: when a fusable prefill chunk is pending and it
+        // is prefill's turn, cede one of the main lanes to it this tick —
+        // otherwise a decode-saturated session table would starve prefill
+        // (unbounded TTFT), and without the alternation prefill would
+        // displace a decode main every tick (stalled TPOT).
+        let prefill_wants_lane = prefills
+            .front()
+            .is_some_and(|p| cfg.fuse_main && p.paged.len + 1 <= cfg.side_ctx);
+        let decode_lane_cap = if prefill_wants_lane && prefill_turn {
+            main_lane_cap.saturating_sub(1)
+        } else {
+            main_lane_cap
+        };
         let mut tick_mains: Vec<MainReq> = Vec::new();
         let mut fused_lanes = 0usize;
         let mut overflow: VecDeque<MainReq> = VecDeque::new();
         while let Some(m) = mains.pop_front() {
             let fusable = cfg.fuse_main && m.paged.len + 1 <= cfg.side_ctx;
-            if fusable && fused_lanes >= main_lane_cap {
+            if fusable && fused_lanes >= decode_lane_cap {
                 overflow.push_back(m);
             } else {
                 if fusable {
@@ -951,8 +1055,32 @@ fn step_loop(
             }
         }
         mains = overflow;
+        // Budgeted prefill admission: up to `prefill_budget` chunks ride
+        // this tick.  A fusable chunk needs a free batch lane (within the
+        // same side-reserving cap as mains); a chunk whose context has
+        // outgrown a lane runs as its own op and takes no lane — either
+        // way the per-tick cost a prefilling prompt can add is bounded by
+        // the budget, not the prompt length.
+        let mut tick_prefills: Vec<MainReq> = Vec::new();
+        let budget = cfg.prefill_budget.max(1);
+        while tick_prefills.len() < budget {
+            let fusable = match prefills.front() {
+                None => break,
+                Some(p) => cfg.fuse_main && p.paged.len + 1 <= cfg.side_ctx,
+            };
+            if fusable && fused_lanes >= main_lane_cap {
+                break;
+            }
+            let p = prefills.pop_front().expect("front exists");
+            if fusable {
+                fused_lanes += 1;
+            }
+            tick_prefills.push(p);
+        }
+        prefill_turn = !prefill_turn;
         let lanes: Vec<MainLane> = tick_mains
             .iter()
+            .chain(tick_prefills.iter())
             .map(|m| MainLane {
                 req: FusedReq {
                     token: m.token,
@@ -991,7 +1119,7 @@ fn step_loop(
             sweep_done(&mut active, &results, &sessions, &gauges);
             if active.is_empty() && !parked.is_empty() {
                 match rx.recv_timeout(Duration::from_millis(1)) {
-                    Ok(cmd) => enqueue(cmd, &mut mains, &mut parked),
+                    Ok(cmd) => enqueue(cmd, &mut mains, &mut prefills, &mut parked),
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
                 }
@@ -1006,6 +1134,12 @@ fn step_loop(
             gauges
                 .main_deferred
                 .fetch_add(mains.len() as u64, Ordering::Relaxed);
+        }
+        if !prefills.is_empty() {
+            // Chunks held back by the budget or the lane cap this tick.
+            gauges
+                .prefill_deferred
+                .fetch_add(prefills.len() as u64, Ordering::Relaxed);
         }
         // Contain executor panics like the legacy batcher: this tick's
         // participants get Err/Failed results, the loop keeps serving.
@@ -1027,6 +1161,11 @@ fn step_loop(
                         gauges.fused_ticks.fetch_add(1, Ordering::Relaxed);
                     }
                 }
+                if !tick_prefills.is_empty() {
+                    gauges.prefill_ticks.fetch_add(1, Ordering::Relaxed);
+                }
+                // Lane results come back in submission order: decode mains
+                // first, then the tick's prefill chunks.
                 let mut res_it = main_res.into_iter();
                 for req in tick_mains {
                     gauges.main_steps.fetch_add(1, Ordering::Relaxed);
@@ -1036,6 +1175,15 @@ fn step_loop(
                         Some(Ok(raw)) => Ok(raw),
                         Some(Err(msg)) => Err(anyhow!("main lane failed: {msg}")),
                         None => Err(anyhow!("fused executor dropped a main lane result")),
+                    };
+                    let _ = req.reply.send(reply);
+                }
+                for req in tick_prefills {
+                    gauges.prefill_steps.fetch_add(1, Ordering::Relaxed);
+                    let reply = match res_it.next() {
+                        Some(Ok(raw)) => Ok(raw),
+                        Some(Err(msg)) => Err(anyhow!("prefill lane failed: {msg}")),
+                        None => Err(anyhow!("fused executor dropped a prefill lane result")),
                     };
                     let _ = req.reply.send(reply);
                 }
@@ -1060,6 +1208,9 @@ fn step_loop(
             Err(e) => {
                 let msg = format!("{e:#}");
                 for req in tick_mains {
+                    let _ = req.reply.send(Err(anyhow!("{msg}")));
+                }
+                for req in tick_prefills {
                     let _ = req.reply.send(Err(anyhow!("{msg}")));
                 }
                 for slot in &idx {
@@ -1167,7 +1318,7 @@ mod tests {
     use super::*;
     use crate::cortex::agent::AgentCache;
     use crate::cortex::router::AgentRole;
-    use crate::model::{KvPool, KvPoolConfig};
+    use crate::model::{ChunkedPrefill, KvPool, KvPoolConfig};
     use crate::runtime::ModelConfig;
     use crate::text::{SamplerConfig, Tokenizer};
     use crate::util::proptest::check;
@@ -1871,6 +2022,7 @@ mod tests {
                     max_sessions,
                     max_parked_sessions: n_sessions + 1,
                     main_gather: gather,
+                    prefill_budget: 2,
                 },
                 StepSeams::new(
                     stub_exec(cfg.clone(), side_ctx, batch_width),
@@ -1997,6 +2149,236 @@ mod tests {
             crate::prop_assert!(ss.rejected == 0, "queue was sized to fit: {ss:?}");
             crate::prop_assert!(ss.completed == ss.admitted, "every permit dropped: {ss:?}");
             crate::prop_assert!(ss.active == 0 && ss.parked == 0, "{ss:?}");
+            Ok(())
+        });
+    }
+
+    /// The tentpole's mid-prefill sharing path end to end: while session A
+    /// is still prefilling chunk-by-chunk, an identical prompt B admits,
+    /// warm-attaches the blocks A has already published, and then adopts
+    /// A's *next* block from the registry mid-prefill — B teacher-forces
+    /// only the final token (the one coverage never includes) and its
+    /// first-sample logits are bit-identical to A's.
+    #[test]
+    fn interleaved_identical_prompts_hit_the_registry_mid_prefill() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let sched = StepScheduler::new(
+            StepConfig {
+                batch_width: 2,
+                side_ctx: 64,
+                max_sessions: 4,
+                prefill_budget: 1,
+                ..StepConfig::default()
+            },
+            StepSeams::new(
+                stub_exec(cfg.clone(), 64, 2),
+                bare_spawner(pool.clone(), 64, 4, 1),
+            ),
+        );
+        // 33 tokens over 8-token blocks: coverage spans rows 0..32 (four
+        // blocks); row 32 always decodes live for the first sample.
+        let toks: Vec<i32> = (0..33).map(|i| (i % 200) as i32).collect();
+        let _a = sched.open_session().unwrap();
+        let mut kv_a = pool.new_cache(64);
+        let mut cp_a = ChunkedPrefill::begin(&toks, &mut kv_a).unwrap();
+        assert_eq!(cp_a.adopted_rows(), 0, "registry starts cold");
+        for _ in 0..24 {
+            let (tok, pos) = cp_a.next_lane(&mut kv_a).expect("A has rows left");
+            sched.prefill_step(tok, pos, &mut kv_a).unwrap();
+            cp_a.advance(&mut kv_a);
+        }
+        // B admits mid-prefill: A's three completed blocks are already in
+        // the registry, so B warm-starts at row 24 instead of running a
+        // duplicate cold prefill.
+        let _b = sched.open_session().unwrap();
+        let mut kv_b = pool.new_cache(64);
+        let mut cp_b = ChunkedPrefill::begin(&toks, &mut kv_b).unwrap();
+        assert_eq!(cp_b.begin_cached_rows(), 24, "B rides A's published blocks");
+        // A finishes, publishing its fourth block at the row-32 boundary.
+        let mut last_a = None;
+        while let Some((tok, pos)) = cp_a.next_lane(&mut kv_a) {
+            last_a = Some(sched.prefill_step(tok, pos, &mut kv_a).unwrap());
+            cp_a.advance(&mut kv_a);
+        }
+        assert!(cp_a.is_done());
+        // B's next lane probe adopts that block from the registry: eight
+        // rows of teacher-forcing skipped, only the final token runs live.
+        let (tok, pos) = cp_b.next_lane(&mut kv_b).expect("final token decodes live");
+        assert_eq!((tok, pos), (toks[32], 32));
+        assert_eq!(cp_b.mid_hit_rows(), 8, "B adopted A's mid-prefill block");
+        let out_b = sched.prefill_step(tok, pos, &mut kv_b).unwrap();
+        cp_b.advance(&mut kv_b);
+        assert!(cp_b.is_done());
+        let want = stub_raw(&cfg, toks[32], 32, 32);
+        assert_eq!(out_b.logits, want.logits, "chunked+adopted ≡ monolithic");
+        assert_eq!(last_a.unwrap().logits, want.logits, "A and B converge");
+        let st = sched.stats();
+        assert_eq!(st.prefill_steps, 34, "A teacher-forced 33 rows, B one");
+        assert!(st.prefill_ticks >= 1);
+        assert_eq!(st.prefill_deferred, 0, "lone prefill stream never defers");
+        assert_eq!(pool.stats().prefix_mid_hits, 1, "one mid-prefill chain hit");
+        sched.shutdown();
+    }
+
+    /// Satellite: a prompt prefilled in scheduler-interleaved chunks is
+    /// bit-identical to the monolithic prefill of the same prompt — across
+    /// random per-tick budgets, warm-coverage boundaries (a prior identical
+    /// prompt left blocks in the registry), concurrent decode sessions and
+    /// mid-prefill abandonment — and the concurrent decode chains are
+    /// untouched by the interleave.
+    #[test]
+    fn chunked_prefill_equals_monolithic_across_interleavings() {
+        check("chunked prefill ≡ monolithic", 16, |g| {
+            let cfg = tiny_cfg();
+            let pool = KvPool::new(
+                &cfg,
+                KvPoolConfig { block_tokens: 8, ..Default::default() },
+            );
+            let side_ctx = 64;
+            let batch_width = g.usize_in(1..6);
+            let prefill_budget = g.usize_in(1..4);
+            let fuse_main = g.bool();
+            let n_len = g.usize_in(1..50);
+            let n_decoders = g.usize_in(0..3);
+            let decode_steps = g.usize_in(1..8);
+            let pre_rows = if g.bool() { g.usize_in(0..n_len + 1) } else { 0 };
+            let abandon = g.bool() && g.bool(); // ~25%: drop mid-prefill
+            let cut = if abandon { g.usize_in(0..n_len) } else { n_len };
+            let sched = StepScheduler::new(
+                StepConfig {
+                    batch_width,
+                    side_ctx,
+                    max_sessions: n_decoders + 1,
+                    max_parked_sessions: 4,
+                    main_gather: Duration::from_micros(g.usize_in(0..300) as u64),
+                    fuse_main,
+                    prefill_budget,
+                    ..StepConfig::default()
+                },
+                StepSeams::new(
+                    stub_exec(cfg.clone(), side_ctx, batch_width),
+                    bare_spawner(pool.clone(), side_ctx, 3, 1),
+                ),
+            );
+            let toks: Vec<i32> = (0..n_len).map(|i| ((i * 7 + 3) % 200) as i32).collect();
+            // Optionally a prior identical prompt leaves `pre_rows`-worth of
+            // complete blocks in the registry (held live for the whole run),
+            // so this run's begin() lands on a random coverage boundary.
+            let mut warm = pool.new_cache(64);
+            if pre_rows > 0 {
+                let mut cp = ChunkedPrefill::begin(&toks, &mut warm)
+                    .map_err(|e| format!("warm begin: {e:#}"))?;
+                for _ in 0..pre_rows {
+                    let Some((tok, pos)) = cp.next_lane(&mut warm) else { break };
+                    let raw = stub_raw(&cfg, tok, pos, warm.len());
+                    warm.append_row(&raw.k_new, &raw.v_new)
+                        .map_err(|e| format!("warm append: {e:#}"))?;
+                    cp.advance(&mut warm);
+                }
+            }
+            type PrefillRun =
+                std::result::Result<(usize, Vec<(usize, MainStepOut)>, bool), String>;
+            type DecodeRun = std::result::Result<Vec<MainStepOut>, String>;
+            let (prefill_run, decode_runs) = std::thread::scope(|scope| {
+                let prefill_handle = {
+                    let sched = sched.clone();
+                    let pool = pool.clone();
+                    let toks = toks.clone();
+                    scope.spawn(move || -> PrefillRun {
+                        let _permit =
+                            sched.open_session().map_err(|e| format!("open: {e}"))?;
+                        let mut kv = pool.new_cache(64);
+                        let mut cp = ChunkedPrefill::begin(&toks, &mut kv)
+                            .map_err(|e| format!("begin: {e:#}"))?;
+                        let mut steps = Vec::new();
+                        while steps.len() < cut {
+                            let Some((tok, pos)) = cp.next_lane(&mut kv) else { break };
+                            let out = sched
+                                .prefill_step(tok, pos, &mut kv)
+                                .map_err(|e| format!("prefill step {pos}: {e:#}"))?;
+                            cp.advance(&mut kv);
+                            steps.push((pos as usize, out));
+                        }
+                        Ok((cp.adopted_rows(), steps, cp.is_done()))
+                    })
+                };
+                let decode_handles: Vec<_> = (0..n_decoders)
+                    .map(|s| {
+                        let sched = sched.clone();
+                        let pool = pool.clone();
+                        scope.spawn(move || -> DecodeRun {
+                            let _permit =
+                                sched.open_session().map_err(|e| format!("open: {e}"))?;
+                            let mut kv = pool.new_cache(64);
+                            let mut outs = Vec::new();
+                            for step in 0..decode_steps {
+                                let tok = ((s * 31 + step * 7) % 200) as i32;
+                                let out = sched
+                                    .main_step(tok, kv.len() as i32, &mut kv)
+                                    .map_err(|e| format!("decoder {s} step {step}: {e:#}"))?;
+                                outs.push(out);
+                            }
+                            Ok(outs)
+                        })
+                    })
+                    .collect();
+                (
+                    prefill_handle.join().expect("prefill thread"),
+                    decode_handles
+                        .into_iter()
+                        .map(|h| h.join().expect("decoder thread"))
+                        .collect::<Vec<_>>(),
+                )
+            });
+            let (adopted, steps, done) = prefill_run?;
+            // Every teacher-forced lane that ran is bit-identical to the
+            // monolithic prefill's step at the same position (pos == view
+            // len == i), independent of budget, boundary and interleaving.
+            for (pos, out) in &steps {
+                let want = stub_raw(&cfg, toks[*pos], *pos as i32, *pos);
+                crate::prop_assert!(
+                    out.logits == want.logits && out.hidden == want.hidden,
+                    "chunked lane diverged from monolithic at row {pos}"
+                );
+            }
+            if !abandon {
+                crate::prop_assert!(done, "prefill must complete when not abandoned");
+                // Adoption + live lanes partition the prompt exactly, and
+                // the final lane is always live at the last position — its
+                // output IS the monolithic first-sample result.
+                crate::prop_assert!(
+                    adopted + steps.len() == n_len,
+                    "{adopted} adopted + {} live != {n_len}",
+                    steps.len()
+                );
+                let (last_pos, _) = steps.last().expect("coverage stops before the end");
+                crate::prop_assert!(*last_pos == n_len - 1, "last lane at {last_pos}");
+            }
+            let st = sched.stats();
+            crate::prop_assert!(
+                st.prefill_steps == steps.len() as u64,
+                "every prefill lane accounted: {} != {}",
+                st.prefill_steps,
+                steps.len()
+            );
+            // Concurrent decode chains are untouched by the interleave.
+            for (s, run) in decode_runs.iter().enumerate() {
+                let outs = match run {
+                    Ok(o) => o,
+                    Err(e) => return Err(e.clone()),
+                };
+                for (step, out) in outs.iter().enumerate() {
+                    let tok = ((s * 31 + step * 7) % 200) as i32;
+                    let want = stub_raw(&cfg, tok, step as i32, step);
+                    crate::prop_assert!(
+                        out.logits == want.logits,
+                        "decoder {s} diverged at step {step} during prefill"
+                    );
+                }
+            }
+            sched.shutdown();
+            drop(warm);
             Ok(())
         });
     }

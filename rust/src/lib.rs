@@ -28,7 +28,15 @@
 //!   main steps ride the leading lanes at River priority or run ahead of
 //!   the side batch, never behind it), with capacity-aware FIFO admission
 //!   that parks side tasks when the batch width or pool occupancy
-//!   saturates and refills freed slots on the very next tick.
+//!   saturates and refills freed slots on the very next tick.  Prompt
+//!   prefill is **chunked** ([`model::ChunkedPrefill`]): a long prompt
+//!   rides the same fused tick in budgeted block-sized chunks
+//!   (`StepConfig::prefill_budget`) instead of stalling every in-flight
+//!   session behind one monolithic prefill — TTFT becomes a scheduler
+//!   knob while decode pays at most one extra op per tick
+//!   (`benches/prefill_interleave.rs` asserts p99 ops/tick ≤ 2), and
+//!   completed chunks register in the prefix registry immediately, so a
+//!   concurrent identical prompt adopts blocks *mid-prefill*.
 //!
 //! Serving is **session-based** ([`serve`]): each `/generate` request is
 //! admitted as a [`cortex::CortexSession`] — a schedulable unit over the
@@ -44,7 +52,9 @@
 //! Device ops per generated token fall from ~1.0 (the old serial op
 //! stream) toward 1/B as the agent population grows —
 //! `benches/continuous_batch.rs` asserts this and the `/stats` endpoint
-//! exposes the tick/batch-occupancy/park/session gauges live.
+//! exposes the tick/batch-occupancy/park/session/prefill gauges live
+//! (`GET /metrics` renders the same snapshot as Prometheus text
+//! exposition via [`serve::metrics_text`]).
 //!
 //! Memory accounting follows block ownership: each agent's `MainKv`/
 //! `SideKv` charge counts only its *private* blocks, registry-shared

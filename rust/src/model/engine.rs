@@ -57,6 +57,159 @@ pub struct PrefillReuse {
 /// (synapse landmark seeds use their own salt — see `cortex::synapse`).
 pub const PROMPT_CHAIN_SALT: u64 = 0x5741_5250_434f_5254; // "WARPCORT"
 
+/// Incremental (chunked) prefill driver: the bookkeeping half of a
+/// teacher-forced prompt prefill, split out so the *caller* owns each
+/// decode step.  [`Engine::prefill_shared`] drives it in-thread (the warm
+/// tail below), and the step scheduler drives it one budgeted lane per
+/// fused tick (`StepScheduler::prefill_step` in `cortex::step`) so a long
+/// prompt admits without stalling concurrent sessions' decode.
+///
+/// It holds no engine or device handle — everything here is cache/pool
+/// bookkeeping (chain hashes, the coverage cursor, incremental block
+/// registration, mid-prefill registry adoption) — which is also what lets
+/// the host-only proptests and benches drive the identical mechanism over
+/// the stub executor.
+///
+/// Protocol per lane: call [`ChunkedPrefill::next_lane`] for the next
+/// `(token, position)` to decode (it may first jump the cursor over blocks
+/// a concurrent identical prompt registered since the last step — the
+/// mid-prefill registry hit), run the decode, append the produced K/V row
+/// to the cache, then call [`ChunkedPrefill::advance`].  Coverage always
+/// stops before the last token: its live decode produces the logits and
+/// hidden state that seed generation, so `next_lane` yields at least once.
+#[derive(Debug)]
+pub struct ChunkedPrefill {
+    tokens: Vec<i32>,
+    /// Chain hashes over the full prompt ([`PROMPT_CHAIN_SALT`] domain).
+    hashes: Vec<u64>,
+    /// Blocks adoption may cover — `min(hashes.len(), (len-1)/bt)`, so the
+    /// last token is always decoded live.
+    usable: usize,
+    block_tokens: usize,
+    /// Index of the next token to teacher-force (== the cache fill).
+    next: usize,
+    begin_cached_rows: usize,
+    mid_hit_rows: usize,
+    tail_steps: usize,
+}
+
+impl ChunkedPrefill {
+    /// Begin a chunked prefill over an empty cache: attach the longest
+    /// registered prefix of the prompt by reference, with the same
+    /// sliver-of-coverage fallback as [`Engine::prefill_shared`] (a sliver
+    /// is dropped; whatever the registry has by the first block boundary
+    /// is re-adopted there by the mid-prefill probe).
+    pub fn begin(tokens: &[i32], kv: &mut KvCache) -> Result<ChunkedPrefill> {
+        if tokens.is_empty() {
+            bail!("chunked prefill: empty prompt");
+        }
+        if tokens.len() > kv.capacity() {
+            bail!(
+                "chunked prefill: prompt length {} > cache capacity {}",
+                tokens.len(),
+                kv.capacity()
+            );
+        }
+        if !kv.is_empty() {
+            bail!("chunked prefill requires an empty cache");
+        }
+        let pool = kv.pool().clone();
+        let bt = pool.block_tokens();
+        let hashes = pool.prefix_hashes(PROMPT_CHAIN_SALT, tokens);
+        let usable = hashes.len().min((tokens.len() - 1) / bt);
+        let mut cached_rows = kv.attach_shared_prefix(&hashes[..usable], tokens)?;
+        if cached_rows > 0 && cached_rows * 2 < tokens.len() {
+            kv.clear();
+            cached_rows = 0;
+        }
+        Ok(ChunkedPrefill {
+            tokens: tokens.to_vec(),
+            hashes,
+            usable,
+            block_tokens: bt,
+            next: cached_rows,
+            begin_cached_rows: cached_rows,
+            mid_hit_rows: 0,
+            tail_steps: 0,
+        })
+    }
+
+    /// The next teacher-forced lane as `(token, position)`, or `None` once
+    /// every prompt token is in the cache.  At a block boundary this first
+    /// probes the registry for continuation blocks a concurrent identical
+    /// prompt registered since the last step and jumps the cursor over any
+    /// it adopts — the mid-prefill hit that replaces a duplicate prefill.
+    pub fn next_lane(&mut self, kv: &mut KvCache) -> Option<(i32, i32)> {
+        let bt = self.block_tokens;
+        if self.next % bt == 0 && self.next < self.usable * bt {
+            let adopted = kv.extend_shared_prefix(&self.hashes[..self.usable], &self.tokens);
+            self.next += adopted;
+            self.mid_hit_rows += adopted;
+        }
+        if self.next >= self.tokens.len() {
+            return None;
+        }
+        Some((self.tokens[self.next], self.next as i32))
+    }
+
+    /// Account one completed lane: the caller has decoded the token from
+    /// the last [`ChunkedPrefill::next_lane`] and appended its K/V row.
+    /// If the row completed a block, that block is published in the prefix
+    /// registry *now* — not at prompt end — so a concurrent identical
+    /// prompt attaches or mid-adopts it immediately.
+    pub fn advance(&mut self, kv: &mut KvCache) {
+        self.next += 1;
+        self.tail_steps += 1;
+        debug_assert_eq!(
+            kv.len(),
+            self.next,
+            "advance: the decoded row must be appended before advancing"
+        );
+        if self.next % self.block_tokens == 0 {
+            kv.register_prefix(&self.hashes, &self.tokens);
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.next >= self.tokens.len()
+    }
+
+    /// Prompt tokens not yet in the cache.
+    pub fn remaining(&self) -> usize {
+        self.tokens.len() - self.next
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Chain hashes over the full prompt (for registration by callers that
+    /// bypass the per-lane protocol, e.g. the cold monolithic path).
+    pub fn hashes(&self) -> &[u64] {
+        &self.hashes
+    }
+
+    /// Total rows adopted from the registry (at begin + mid-prefill).
+    pub fn adopted_rows(&self) -> usize {
+        self.begin_cached_rows + self.mid_hit_rows
+    }
+
+    /// Rows adopted when the prefill began.
+    pub fn begin_cached_rows(&self) -> usize {
+        self.begin_cached_rows
+    }
+
+    /// Rows adopted mid-prefill from concurrent registrations.
+    pub fn mid_hit_rows(&self) -> usize {
+        self.mid_hit_rows
+    }
+
+    /// Teacher-forced decode steps actually run so far.
+    pub fn tail_steps(&self) -> usize {
+        self.tail_steps
+    }
+}
+
 /// Output of a decode op.
 #[derive(Debug)]
 pub struct DecodeOut {
@@ -337,18 +490,10 @@ impl Engine {
         if !kv.is_empty() {
             bail!("prefill_shared requires an empty cache");
         }
-        let pool = kv.pool().clone();
-        let bt = pool.block_tokens();
-        let hashes = pool.prefix_hashes(PROMPT_CHAIN_SALT, tokens);
-        let usable = hashes.len().min((tokens.len() - 1) / bt);
-        let mut cached_rows = kv.attach_shared_prefix(&hashes[..usable], tokens)?;
-        if cached_rows > 0 && cached_rows * 2 < tokens.len() {
-            kv.clear();
-            cached_rows = 0;
-        }
-        if cached_rows == 0 {
+        let mut chunked = ChunkedPrefill::begin(tokens, kv)?;
+        if chunked.adopted_rows() == 0 {
             let out = self.prefill(tokens, kv, lane)?;
-            kv.register_prefix(&hashes, tokens);
+            kv.register_prefix(chunked.hashes(), tokens);
             let v = self.cfg.vocab_size;
             let last = out.logits[(out.len - 1) * v..out.len * v].to_vec();
             return Ok(PrefillReuse {
@@ -361,24 +506,30 @@ impl Engine {
             });
         }
         // Warm path: rows [0, cached_rows) are already resident (host and
-        // device side) — teacher-force only the uncovered tail.  Each step
-        // appends its K/V row through the pool's O(row) write-through and
-        // attends over the shared prefix via the paged gather.
+        // device side) — teacher-force only the uncovered tail, driven
+        // through the same [`ChunkedPrefill`] protocol the scheduler's
+        // budgeted prefill lanes use.  Each step appends its K/V row
+        // through the pool's O(row) write-through and attends over the
+        // shared prefix via the paged gather; completed blocks publish
+        // incrementally and concurrent registrations are adopted at block
+        // boundaries instead of being recomputed.
         let mut last: Option<DecodeOut> = None;
-        for (i, &tok) in tokens.iter().enumerate().skip(cached_rows) {
-            last = Some(self.decode(tok, i as i32, kv, lane)?);
+        while let Some((tok, pos)) = chunked.next_lane(kv) {
+            let out = self.decode(tok, pos, kv, lane)?;
+            chunked.advance(kv);
+            last = Some(out);
         }
         let out = last.expect("tail is non-empty: coverage stops before the last token");
-        // Publish any full blocks the tail completed (typically a no-op:
-        // the cold agent already registered them).
-        kv.register_prefix(&hashes, tokens);
+        // Publish any remaining full private blocks (typically a no-op:
+        // boundaries registered incrementally as the tail crossed them).
+        kv.register_prefix(chunked.hashes(), tokens);
         Ok(PrefillReuse {
             last_logits: out.logits,
             hidden_last: out.hidden,
             len: tokens.len(),
-            cached_rows,
+            cached_rows: chunked.adopted_rows(),
             cold_prefill: false,
-            tail_steps: tokens.len() - cached_rows,
+            tail_steps: chunked.tail_steps(),
         })
     }
 

@@ -358,6 +358,44 @@ impl KvCache {
         Ok(rows)
     }
 
+    /// Mid-prefill registry adoption: on a cache sitting exactly at a block
+    /// boundary (every rented block full), adopt any *continuation* blocks
+    /// of the chain that a concurrent identical prompt registered since
+    /// this cache attached (or teacher-forced past) its prefix.  Adopted
+    /// blocks join the table as shared references and `len` jumps over
+    /// them — a chunked prefill skips recomputing rows a twin already
+    /// published.  `hashes`/`keys` are the same full chain passed to
+    /// [`KvCache::attach_shared_prefix`]; the chain hash at index `i`
+    /// commits to the entire prefix `keys[..(i+1)*bt]`, so continuing the
+    /// walk mid-chain is as safe as starting it (hit-time key-run
+    /// verification still applies).  Off a clean block boundary there is
+    /// nothing adoptable and this returns 0.  Returns the adopted row
+    /// count.
+    pub fn extend_shared_prefix(&mut self, hashes: &[u64], keys: &[i32]) -> usize {
+        let bt = self.pool.block_tokens();
+        if self.len % bt != 0 || self.blocks.len() != self.len / bt {
+            return 0; // partial tail block: the chain cannot continue here
+        }
+        let done = self.len / bt;
+        let take = hashes.len().min(self.capacity / bt);
+        if done >= take {
+            return 0;
+        }
+        let ids = self
+            .pool
+            .lookup_chain_mid(&hashes[done..take], &keys[done * bt..take * bt]);
+        let rows = ids.len() * bt;
+        for id in ids {
+            self.blocks.push(BlockRef { id, shared: true });
+        }
+        if rows > 0 {
+            self.len += rows;
+            self.pool.note_rows_added(rows);
+            self.sync_mem();
+        }
+        rows
+    }
+
     /// Publish this cache's leading full blocks in the pool's prefix
     /// registry under `hashes` (one chain hash per full block, from
     /// [`KvPool::prefix_hashes`] over `keys`, which must cover every
@@ -1099,6 +1137,54 @@ mod tests {
         crop_eq(&av, &bv, "shared v").unwrap();
         let (dk, _) = b.device_gather(32).unwrap();
         crop_eq(&dk, &bk, "device k").unwrap();
+    }
+
+    #[test]
+    fn extend_shared_prefix_adopts_blocks_registered_mid_prefill() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(
+            &cfg,
+            KvPoolConfig {
+                block_tokens: 4,
+                ..KvPoolConfig::default()
+            },
+        );
+        let keys: Vec<i32> = (0..12).collect();
+        let (k_rows, v_rows) = rows_for_keys(&cfg, &keys);
+        let hashes = pool.prefix_hashes(1, &keys);
+
+        // B starts a chunked prefill of the same prompt and has privately
+        // filled block 0 when A (the "concurrent twin") finishes and
+        // registers the full chain.
+        let mut b = pool.new_cache(32);
+        let (k0, v0) = rows_for_keys(&cfg, &keys[..4]);
+        b.append_rows(4, &k0, &v0).unwrap();
+
+        let mut a = pool.new_cache(32);
+        a.replace_rows_keyed(12, 1, &keys, &k_rows, &v_rows).unwrap();
+
+        // Off a block boundary: nothing adoptable.
+        let mut c = pool.new_cache(32);
+        let (k1, v1) = rows_for_keys(&cfg, &keys[..3]);
+        c.append_rows(3, &k1, &v1).unwrap();
+        assert_eq!(c.extend_shared_prefix(&hashes, &keys), 0);
+
+        // B, at its boundary, adopts blocks 1 and 2 by reference and jumps
+        // its fill over them — the mid-prefill registry hit.
+        let adopted = b.extend_shared_prefix(&hashes, &keys);
+        assert_eq!(adopted, 8);
+        assert_eq!(b.len(), 12);
+        assert_eq!(b.shared_blocks(), 2);
+        assert_eq!(pool.stats().prefix_mid_hits, 2);
+
+        // Content is bit-identical to the cache that computed every row.
+        let (ak, av) = a.prefix_upload(32);
+        let (bk, bv) = b.prefix_upload(32);
+        crop_eq(&ak, &bk, "mid-adopted k").unwrap();
+        crop_eq(&av, &bv, "mid-adopted v").unwrap();
+
+        // A second probe at the same boundary finds nothing new.
+        assert_eq!(b.extend_shared_prefix(&hashes, &keys), 0);
     }
 
     #[test]

@@ -6,15 +6,19 @@
 //!   may reference registry-shared blocks)
 //! * `engine` — the typed inference API shared by every agent
 //!   (`prefill_shared` turns identical prompt prefixes into one cold
-//!   prefill + N by-reference warm starts)
+//!   prefill + N by-reference warm starts; `ChunkedPrefill` is the same
+//!   mechanism split into per-token lanes the step scheduler interleaves
+//!   with decode under a per-tick budget, publishing completed blocks
+//!   incrementally so concurrent identical prompts hit the registry
+//!   mid-prefill)
 
 pub mod engine;
 pub mod kv;
 pub mod pool;
 
 pub use engine::{
-    DecodeOut, Engine, FusedOut, FusedReq, InjectOut, MainLane, PrefillOut, PrefillReuse,
-    RawDecode, SynapseOut, PROMPT_CHAIN_SALT,
+    ChunkedPrefill, DecodeOut, Engine, FusedOut, FusedReq, InjectOut, MainLane, PrefillOut,
+    PrefillReuse, RawDecode, SynapseOut, PROMPT_CHAIN_SALT,
 };
 pub use kv::KvCache;
 pub use pool::{

@@ -163,6 +163,10 @@ struct PoolState {
     shared: usize,
     prefix_hits: u64,
     prefix_misses: u64,
+    /// Chain hits resolved *mid-prefill* ([`KvPool::lookup_chain_mid`]): a
+    /// partially-prefilled cache adopted a continuation block a concurrent
+    /// identical prompt registered after this cache attached its prefix.
+    prefix_mid_hits: u64,
     prefix_evictions: u64,
     cow_copies: u64,
     /// Accounting hook ([`crate::cortex::memory::MemKind::SharedKv`]):
@@ -268,6 +272,10 @@ pub struct PoolStats {
     pub prefix_hits: u64,
     /// Prefix-registry lookups that found no (further) covering block.
     pub prefix_misses: u64,
+    /// Chain hits resolved mid-prefill: a partially-prefilled cache adopted
+    /// continuation blocks a concurrent identical prompt registered after
+    /// this cache attached its prefix (the chunked-prefill dedup path).
+    pub prefix_mid_hits: u64,
     /// Parked registry entries evicted (LRU) to satisfy rents at the cap.
     pub prefix_evictions: u64,
     /// Copy-on-write block copies (a write hit a shared block).
@@ -757,9 +765,34 @@ impl KvPool {
     /// cryptographic, and prompts are untrusted — degrades to a miss
     /// instead of silently attaching another prompt's KV blocks.
     pub(crate) fn lookup_chain(&self, hashes: &[u64], keys: &[i32]) -> Vec<u32> {
+        let mut st = self.state.lock().unwrap();
+        let ids = self.chain_walk_locked(&mut st, hashes, keys);
+        st.prefix_hits += ids.len() as u64;
+        st.prefix_misses += (hashes.len() - ids.len()) as u64;
+        ids
+    }
+
+    /// [`lookup_chain`](Self::lookup_chain) for the *continuation* of a
+    /// chain: `hashes` start at the caller's next unfilled block index, with
+    /// `keys` offset to match.  Hits count as `prefix_mid_hits` — they
+    /// rescue an in-flight chunked prefill from recomputing blocks a
+    /// concurrent identical prompt just registered — and misses are not
+    /// counted at all, because probing and finding nothing is the expected
+    /// steady state of every per-block adoption probe.
+    pub(crate) fn lookup_chain_mid(&self, hashes: &[u64], keys: &[i32]) -> Vec<u32> {
+        let mut st = self.state.lock().unwrap();
+        let ids = self.chain_walk_locked(&mut st, hashes, keys);
+        st.prefix_mid_hits += ids.len() as u64;
+        ids
+    }
+
+    /// Shared core of the chain lookups: walk `hashes` until the first
+    /// registry miss or key-run mismatch, taking one table reference (and an
+    /// LRU bump) per hit.  The caller owns the returned references and the
+    /// hit/miss accounting.
+    fn chain_walk_locked(&self, st: &mut PoolState, hashes: &[u64], keys: &[i32]) -> Vec<u32> {
         let bt = self.block_tokens;
         debug_assert!(keys.len() >= hashes.len() * bt);
-        let mut st = self.state.lock().unwrap();
         let mut ids = Vec::new();
         for (i, h) in hashes.iter().enumerate() {
             let Some(&id) = st.registry.get(h) else {
@@ -773,8 +806,6 @@ impl KvPool {
             }
             ids.push(id);
         }
-        st.prefix_hits += ids.len() as u64;
-        st.prefix_misses += (hashes.len() - ids.len()) as u64;
         let base = st.tick;
         st.tick += ids.len() as u64;
         for (j, &id) in ids.iter().enumerate() {
@@ -1168,6 +1199,7 @@ impl KvPool {
             shared_blocks,
             prefix_hits,
             prefix_misses,
+            prefix_mid_hits,
             prefix_evictions,
             cow_copies,
         ) = {
@@ -1179,6 +1211,7 @@ impl KvPool {
                 st.shared,
                 st.prefix_hits,
                 st.prefix_misses,
+                st.prefix_mid_hits,
                 st.prefix_evictions,
                 st.cow_copies,
             )
@@ -1204,6 +1237,7 @@ impl KvPool {
             shared_blocks,
             prefix_hits,
             prefix_misses,
+            prefix_mid_hits,
             prefix_evictions,
             cow_copies,
             reserved_blocks: self.reserved.load(Ordering::SeqCst),
@@ -1508,6 +1542,39 @@ mod tests {
         let other = p.prefix_hashes(1, &keys);
         assert!(p.lookup_chain(&other, &keys).is_empty());
         assert_eq!(p.stats().prefix_misses, 2);
+    }
+
+    #[test]
+    fn mid_chain_lookup_counts_mid_hits_and_skips_miss_accounting() {
+        let p = pool(4, 0);
+        let keys: Vec<i32> = (0..12).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        let ids: Vec<u32> = (0..3).map(|_| p.rent_ref().unwrap()).collect();
+        for (i, &id) in ids.iter().enumerate() {
+            p.write_run(id, 0, 4, i * 4, 12, &rows(&p, 12, 1.0), &rows(&p, 12, -1.0))
+                .unwrap();
+            assert!(p.register_block(id, hashes[i], &keys[i * 4..(i + 1) * 4]));
+        }
+        // A prefiller already past block 0 probes the chain continuation:
+        // blocks 1 and 2 hit (incref'd), counted as mid-prefill hits.
+        let got = p.lookup_chain_mid(&hashes[1..], &keys[4..]);
+        assert_eq!(got, vec![ids[1], ids[2]]);
+        let s = p.stats();
+        assert_eq!(s.prefix_mid_hits, 2);
+        assert_eq!(s.prefix_hits, 0, "mid hits are a separate gauge");
+        // An empty probe (nothing registered past the chain) is free: no
+        // miss accounting — probing is the steady state of chunked prefill.
+        let other = p.prefix_hashes(9, &keys);
+        assert!(p.lookup_chain_mid(&other[2..], &keys[8..]).is_empty());
+        let s = p.stats();
+        assert_eq!(s.prefix_mid_hits, 2);
+        assert_eq!(s.prefix_misses, 0);
+        for id in got {
+            p.release_ref(id);
+        }
+        for id in ids {
+            p.release_ref(id);
+        }
     }
 
     #[test]

@@ -24,7 +24,14 @@
 //! * `GET /stats` carries a `sessions` gauge block
 //!   (requested/admitted/rejected/completed/active/parked/occupancy) that
 //!   reconciles: `admitted == completed + active`,
-//!   `requested == admitted + rejected + parked`.
+//!   `requested == admitted + rejected + parked` — plus a `prefill` block
+//!   (chunks/ticks/budget_deferred/mid_prefix_hits) tracking the chunked
+//!   prefill lanes interleaved with the decode tick.
+//! * `GET /metrics` renders the same snapshot in Prometheus text
+//!   exposition format (version 0.0.4): every numeric leaf of the
+//!   `/stats` document becomes one `warp_<path> <value>` sample via
+//!   [`metrics_text`], so scrape dashboards can never drift from the
+//!   JSON gauges.
 //!
 //! The substrate is generic over [`SessionSource`] so the HTTP paths are
 //! testable host-only (`rust/tests/serve_sessions.rs` drives them over a
@@ -34,5 +41,6 @@ pub mod http;
 pub mod server;
 
 pub use server::{
-    serve, sessions_json, OpenDenied, ServerConfig, ServerHandle, SessionSource, TokenStream,
+    metrics_text, serve, sessions_json, OpenDenied, ServerConfig, ServerHandle, SessionSource,
+    TokenStream,
 };

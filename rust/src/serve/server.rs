@@ -8,7 +8,11 @@
 //!   delta as the fused ticks produce them, then a final `"done": true`
 //!   summary line.
 //! * `GET  /stats`    — live system statistics (memory, pool, gate,
-//!   synapse, scheduler, **sessions**, device).
+//!   synapse, scheduler, **sessions**, **prefill**, device).
+//! * `GET  /metrics`  — the same gauges in Prometheus text exposition
+//!   (version 0.0.4): every numeric leaf of the `/stats` tree flattened
+//!   to one `warp_<path>` sample, so scrapers need no JSON shim and the
+//!   two endpoints can never drift.
 //! * `GET  /health`   — readiness probe.
 //!
 //! Every `/generate` request is admitted as a **session**
@@ -288,6 +292,12 @@ fn handle_connection<S: SessionSource>(
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => respond_json(stream, 200, &Json::obj().with("ok", true)),
         ("GET", "/stats") => respond_json(stream, 200, &src.stats()),
+        ("GET", "/metrics") => respond(
+            stream,
+            200,
+            "text/plain; version=0.0.4",
+            &metrics_text(&src.stats()),
+        ),
         ("POST", "/generate") => handle_generate(stream, &req, src, cfg),
         ("POST", _) | ("GET", _) => respond(stream, 404, "text/plain", "not found"),
         _ => respond(stream, 405, "text/plain", "method not allowed"),
@@ -431,6 +441,48 @@ fn resolve_max_tokens(requested: Option<&Json>, default: usize, cap: usize) -> R
     Ok(n.min(cap))
 }
 
+/// Render a stats snapshot as Prometheus text exposition (version 0.0.4):
+/// every numeric leaf of the JSON tree becomes one `warp_<path>` sample
+/// (booleans as 0/1), so the same snapshot that answers `/stats` answers
+/// the scrape endpoint and the two can never drift.  Strings and arrays
+/// have no Prometheus scalar type and are skipped.
+pub fn metrics_text(stats: &Json) -> String {
+    let mut out = String::new();
+    flatten_metrics(stats, "warp", &mut out);
+    out
+}
+
+fn flatten_metrics(node: &Json, prefix: &str, out: &mut String) {
+    match node {
+        Json::Obj(pairs) => {
+            for (k, v) in pairs {
+                let name = format!("{prefix}_{}", sanitize_metric(k));
+                flatten_metrics(v, &name, out);
+            }
+        }
+        Json::Num(x) if x.is_finite() => {
+            // Integral values print without a trailing `.0`, matching the
+            // /stats wire shape (counters stay counters to the scraper).
+            if x.fract() == 0.0 && x.abs() < 1e15 {
+                out.push_str(&format!("{prefix} {}\n", *x as i64));
+            } else {
+                out.push_str(&format!("{prefix} {x}\n"));
+            }
+        }
+        Json::Bool(b) => {
+            out.push_str(&format!("{prefix} {}\n", u8::from(*b)));
+        }
+        _ => {}
+    }
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; JSON keys may not.
+fn sanitize_metric(key: &str) -> String {
+    key.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
 /// The `/stats` `sessions` gauge block — one shape shared by the cortex
 /// backend and the host-only test stubs, so gauge-reconciliation tests
 /// pin the wire format the dashboards read.
@@ -488,6 +540,7 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("shared_bytes", pool.shared_bytes())
                 .with("prefix_hits", pool.prefix_hits)
                 .with("prefix_misses", pool.prefix_misses)
+                .with("prefix_mid_hits", pool.prefix_mid_hits)
                 .with("prefix_evictions", pool.prefix_evictions)
                 .with("cow_copies", pool.cow_copies)
                 // admission reservations held by sessions mid-prefill
@@ -537,6 +590,20 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("parked_peak", step.parked_peak)
                 .with("main_deferred", step.main_deferred),
         )
+        // Chunked-prefill gauges: chunks teacher-forced through the fused
+        // tick, ticks that carried one, chunks the per-tick budget held
+        // back, and prefix-registry hits landed *mid-prefill* (a
+        // concurrent identical prompt adopting blocks as they publish).
+        .with(
+            "prefill",
+            Json::obj()
+                .with("chunks", step.prefill_steps)
+                .with("ticks", step.prefill_ticks)
+                .with("budget_deferred", step.prefill_deferred)
+                .with("mid_prefix_hits", pool.prefix_mid_hits)
+                .with("budget", cortex.cfg.prefill_budget.max(1))
+                .with("chunked", cortex.cfg.chunked_prefill),
+        )
         // Session-layer gauges: admitted == completed + active and
         // requested == admitted + rejected + parked at every instant —
         // the concurrent-client hammer test reconciles these.
@@ -561,8 +628,37 @@ fn stats_json(cortex: &WarpCortex) -> Json {
 
 #[cfg(test)]
 mod tests {
-    use super::resolve_max_tokens;
+    use super::{metrics_text, resolve_max_tokens};
     use crate::util::Json;
+
+    #[test]
+    fn metrics_flatten_numeric_leaves_only() {
+        let stats = Json::obj()
+            .with(
+                "pool",
+                Json::obj()
+                    .with("prefix_mid_hits", 3u64)
+                    .with("frag-pct", 0.5),
+            )
+            .with("prefill", Json::obj().with("chunked", true))
+            .with("model", "tiny") // strings have no scalar type: skipped
+            .with("events", Json::Arr(vec![Json::Num(1.0)])); // arrays too
+        let text = metrics_text(&stats);
+        assert!(text.contains("warp_pool_prefix_mid_hits 3\n"), "{text}");
+        // non-[a-zA-Z0-9] key bytes sanitize to `_`
+        assert!(text.contains("warp_pool_frag_pct 0.5\n"), "{text}");
+        // booleans export as 0/1 gauges
+        assert!(text.contains("warp_prefill_chunked 1\n"), "{text}");
+        assert!(!text.contains("tiny"), "{text}");
+        assert!(!text.contains("events"), "{text}");
+        // every sample line is `name value`
+        for line in text.lines() {
+            let mut parts = line.split(' ');
+            assert!(parts.next().unwrap().starts_with("warp_"));
+            assert!(parts.next().unwrap().parse::<f64>().is_ok());
+            assert!(parts.next().is_none());
+        }
+    }
 
     #[test]
     fn max_tokens_clamping() {

@@ -5,6 +5,39 @@
 
 use crate::util::rng::XorShift;
 
+/// Why a [`WorkloadConfig`] cannot produce a trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorkloadError {
+    /// `max_tokens < min_tokens`: the generation-length range is empty, and
+    /// the span subtraction in the generator would underflow (panic in debug
+    /// builds, silently wrap in release).
+    EmptyTokenRange { min: usize, max: usize },
+    /// Trigger probability outside `[0, 1]` or non-finite.
+    InvalidTriggerProb(f64),
+    /// Poisson rate or uniform gap that is non-finite or non-positive (a
+    /// non-positive Poisson rate divides by zero in the exponential sampler).
+    InvalidArrivalRate(f64),
+}
+
+impl std::fmt::Display for WorkloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkloadError::EmptyTokenRange { min, max } => write!(
+                f,
+                "empty generation range: max_tokens ({max}) < min_tokens ({min})"
+            ),
+            WorkloadError::InvalidTriggerProb(p) => {
+                write!(f, "trigger_prob {p} outside [0, 1]")
+            }
+            WorkloadError::InvalidArrivalRate(r) => {
+                write!(f, "arrival rate/gap {r} must be finite and positive")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WorkloadError {}
+
 /// One serving request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -37,6 +70,33 @@ pub struct WorkloadConfig {
     pub max_tokens: usize,
     /// Probability a prompt embeds a router trigger.
     pub trigger_prob: f64,
+}
+
+impl WorkloadConfig {
+    /// Reject configs the generator cannot honor: an empty token range
+    /// (`max < min`), an out-of-range trigger probability, or a degenerate
+    /// arrival process. `min_tokens == max_tokens` is allowed and yields a
+    /// constant generation length.
+    pub fn validate(&self) -> Result<(), WorkloadError> {
+        if self.max_tokens < self.min_tokens {
+            return Err(WorkloadError::EmptyTokenRange {
+                min: self.min_tokens,
+                max: self.max_tokens,
+            });
+        }
+        if !self.trigger_prob.is_finite() || !(0.0..=1.0).contains(&self.trigger_prob) {
+            return Err(WorkloadError::InvalidTriggerProb(self.trigger_prob));
+        }
+        match self.arrivals {
+            Arrivals::Poisson(rate) if !rate.is_finite() || rate <= 0.0 => {
+                Err(WorkloadError::InvalidArrivalRate(rate))
+            }
+            Arrivals::Uniform(gap) if !gap.is_finite() || gap < 0.0 => {
+                Err(WorkloadError::InvalidArrivalRate(gap))
+            }
+            _ => Ok(()),
+        }
+    }
 }
 
 impl Default for WorkloadConfig {
@@ -75,10 +135,21 @@ const TASKS: &[&str] = &[
 ];
 
 /// Generate a deterministic request trace.
+///
+/// Panics on an invalid config (previously `max_tokens < min_tokens`
+/// underflowed: debug panic, release wrap to a huge span). Callers that want
+/// the typed error instead use [`try_generate`].
 pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
+    try_generate(cfg).unwrap_or_else(|e| panic!("workload::generate: {e}"))
+}
+
+/// Generate a deterministic request trace, rejecting invalid configs with a
+/// typed [`WorkloadError`] instead of panicking.
+pub fn try_generate(cfg: &WorkloadConfig) -> Result<Vec<Request>, WorkloadError> {
+    cfg.validate()?;
     let mut rng = XorShift::new(cfg.seed);
     let mut t = 0.0f64;
-    (0..cfg.requests)
+    let trace = (0..cfg.requests)
         .map(|i| {
             t += match cfg.arrivals {
                 Arrivals::Poisson(rate) => rng.exp(rate),
@@ -91,6 +162,7 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
                 let task = rng.choice(TASKS);
                 prompt = format!("user: tell me about {topic}. [TASK: {task}]\nriver: ");
             }
+            // validate() guarantees max >= min, so this cannot underflow.
             let span = (cfg.max_tokens - cfg.min_tokens).max(1) as u64;
             Request {
                 id: i as u64,
@@ -99,7 +171,8 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
                 max_tokens: cfg.min_tokens + rng.below(span) as usize,
             }
         })
-        .collect()
+        .collect();
+    Ok(trace)
 }
 
 #[cfg(test)]
@@ -155,6 +228,50 @@ mod tests {
         for r in generate(&cfg) {
             assert!((5..9).contains(&r.max_tokens));
         }
+    }
+
+    #[test]
+    fn inverted_token_range_is_a_typed_error_not_an_underflow() {
+        // Regression: max < min used to underflow the span subtraction
+        // (debug panic, release wrap to a ~usize::MAX token budget).
+        let cfg = WorkloadConfig {
+            min_tokens: 48,
+            max_tokens: 16,
+            ..Default::default()
+        };
+        assert_eq!(
+            try_generate(&cfg).unwrap_err(),
+            WorkloadError::EmptyTokenRange { min: 48, max: 16 }
+        );
+        // A degenerate-but-valid range is fine and constant.
+        let flat = WorkloadConfig {
+            min_tokens: 7,
+            max_tokens: 7,
+            requests: 20,
+            ..Default::default()
+        };
+        assert!(try_generate(&flat).unwrap().iter().all(|r| r.max_tokens == 7));
+    }
+
+    #[test]
+    fn invalid_rate_and_probability_are_rejected() {
+        let bad_prob = WorkloadConfig {
+            trigger_prob: 1.5,
+            ..Default::default()
+        };
+        assert_eq!(
+            bad_prob.validate().unwrap_err(),
+            WorkloadError::InvalidTriggerProb(1.5)
+        );
+        let bad_rate = WorkloadConfig {
+            arrivals: Arrivals::Poisson(0.0),
+            ..Default::default()
+        };
+        assert_eq!(
+            bad_rate.validate().unwrap_err(),
+            WorkloadError::InvalidArrivalRate(0.0)
+        );
+        assert!(WorkloadConfig::default().validate().is_ok());
     }
 
     #[test]

@@ -311,6 +311,53 @@ fn streaming_first_chunk_arrives_while_another_session_is_mid_generation() {
     handle.stop();
 }
 
+/// The Prometheus scrape endpoint: `/metrics` renders the same snapshot
+/// that answers `/stats`, flattened to `warp_<path> <value>` text
+/// exposition — one line per numeric leaf, nothing else.
+#[test]
+fn metrics_endpoint_exports_prometheus_text() {
+    let handle = start(stub_source(2, 4, 1), 2);
+    let addr = handle.addr;
+    // One completed episode makes the gauges non-trivial.
+    let (status, _) = request(
+        addr,
+        "POST",
+        "/generate",
+        Some(r#"{"prompt": "m", "max_tokens": 2}"#),
+    );
+    assert_eq!(status, 200);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n")
+        .unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).unwrap();
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    assert_eq!(status, 200, "{response}");
+    let (head, body) = response.split_once("\r\n\r\n").expect("header/body split");
+    assert!(
+        head.to_ascii_lowercase()
+            .contains("content-type: text/plain; version=0.0.4"),
+        "scrapers need the exposition-format content type: {head}"
+    );
+    // The stub's /stats `sessions` block surfaces leaf-by-leaf.
+    assert!(body.contains("warp_sessions_requested 1\n"), "{body}");
+    assert!(body.contains("warp_sessions_completed 1\n"), "{body}");
+    assert!(body.contains("warp_sessions_active 0\n"), "{body}");
+    // Every line is a bare `name value` sample.
+    for line in body.trim().lines() {
+        let mut parts = line.split(' ');
+        assert!(parts.next().unwrap().starts_with("warp_"), "{line}");
+        assert!(parts.next().unwrap().parse::<f64>().is_ok(), "{line}");
+        assert!(parts.next().is_none(), "{line}");
+    }
+    handle.stop();
+}
+
 /// Load shedding: with one session slot and no parking, a second
 /// concurrent request answers 503 — and the slot recovers once the first
 /// session ends.
