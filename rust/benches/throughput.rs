@@ -115,7 +115,7 @@ fn main() -> anyhow::Result<()> {
             baseline_tps = main_tps;
         }
         let degradation = baseline_tps / main_tps;
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lat.sort_by(|a, b| a.total_cmp(b));
         let p50 = lat[lat.len() / 2] / 1e6;
         println!(
             "{:>12} {:>14.1} {:>16.1} {:>13.2}x {:>10.2}ms",

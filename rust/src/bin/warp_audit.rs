@@ -1,0 +1,612 @@
+//! warp-audit: the project-native static-analysis pass.
+//!
+//! Enforces the concurrency-core conventions the compiler cannot see —
+//! each rule is distilled from a real past bug in this tree:
+//!
+//! - `poison-cascade` — no `.lock().unwrap()` / `.lock().expect(...)`
+//!   outside `util/sync.rs`.  One panicking session would poison the
+//!   shared mutex and wedge every later session; use
+//!   `util::sync::lock_unpoisoned` or `RankedMutex::lock` (both
+//!   poison-tolerant).
+//! - `nan-sort` — no `partial_cmp` in comparator position.  A single NaN
+//!   panicked the sampler (PR 4) and the synapse selector (PR 2); use
+//!   `total_cmp`.
+//! - `raw-mutex` — no bare `std::sync::Mutex::new` in decode-path
+//!   modules: those locks must be `util::sync::RankedMutex` so the
+//!   debug-build lock-rank detector covers them.
+//! - `panic-in-serve` — no `unwrap` / `expect` / `panic!` in `serve/`
+//!   request handling: a request must fail as an error response, never by
+//!   unwinding a worker.
+//!
+//! `#[cfg(test)]` / `#[test]` items are skipped (tests may panic freely);
+//! a deliberate exception is written as `// audit-allow: <rule>` on the
+//! offending line or the line above it.  Self-contained on purpose: a
+//! line/token scanner over stripped source (comments, strings and char
+//! literals blanked), no parser dependencies — the crate builds offline.
+//!
+//! Usage: `cargo run --bin warp-audit -- rust/src` (the CI `audit` job).
+//! Exits 0 on a clean tree, 1 with `file:line: rule: message` findings.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Modules on the fused-tick decode path: every mutex here must be ranked
+/// (see `util::sync::LockRank`) so the deadlock detector covers it.
+const DECODE_PATH_MODULES: [&str; 8] = [
+    "model/pool.rs",
+    "cortex/step.rs",
+    "cortex/scheduler.rs",
+    "cortex/batcher.rs",
+    "cortex/prism.rs",
+    "cortex/synapse.rs",
+    "runtime/device.rs",
+    "metrics/mod.rs",
+];
+
+/// Comparator-position sinks for the `nan-sort` rule: `partial_cmp`
+/// appearing near one of these is a NaN-unsafe ordering.
+const SORTERS: [&str; 5] = [
+    "sort_by(",
+    "sort_unstable_by(",
+    "min_by(",
+    "max_by(",
+    "binary_search_by(",
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Rule {
+    PoisonCascade,
+    NanSort,
+    RawMutex,
+    PanicInServe,
+}
+
+impl Rule {
+    fn name(self) -> &'static str {
+        match self {
+            Rule::PoisonCascade => "poison-cascade",
+            Rule::NanSort => "nan-sort",
+            Rule::RawMutex => "raw-mutex",
+            Rule::PanicInServe => "panic-in-serve",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<Rule> {
+        match name {
+            "poison-cascade" => Some(Rule::PoisonCascade),
+            "nan-sort" => Some(Rule::NanSort),
+            "raw-mutex" => Some(Rule::RawMutex),
+            "panic-in-serve" => Some(Rule::PanicInServe),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Finding {
+    line: usize,
+    rule: Rule,
+    message: &'static str,
+}
+
+/// Source split into lines with comments, string contents and char
+/// literals blanked (`code`), plus the comment text per line (`comments`,
+/// for `audit-allow:` detection).  Line numbers are preserved exactly.
+struct Stripped {
+    code: Vec<String>,
+    comments: Vec<String>,
+}
+
+fn newline(out: &mut Stripped) {
+    out.code.push(String::new());
+    out.comments.push(String::new());
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// If a raw (byte) string literal starts at `i` (`r"`, `r#"`, `br##"`,
+/// ...), return the index one past its closing quote.
+fn raw_string_end(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) != Some(&'"') {
+        return None;
+    }
+    j += 1;
+    while j < chars.len() {
+        if chars[j] == '"'
+            && chars
+                .get(j + 1..j + 1 + hashes)
+                .is_some_and(|t| t.iter().all(|&c| c == '#'))
+        {
+            return Some(j + 1 + hashes);
+        }
+        j += 1;
+    }
+    Some(chars.len())
+}
+
+fn strip(src: &str) -> Stripped {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Stripped {
+        code: vec![String::new()],
+        comments: vec![String::new()],
+    };
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            newline(&mut out);
+            i += 1;
+            continue;
+        }
+        // Line comment (covers `///` and `//!` doc comments too).
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < n && chars[i] != '\n' {
+                out.comments.last_mut().expect("line present").push(chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    newline(&mut out);
+                    i += 1;
+                } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    out.comments.last_mut().expect("line present").push(chars[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw / byte-string prefixes.
+        if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+            if let Some(end) = raw_string_end(&chars, i) {
+                for &ch in &chars[i..end] {
+                    if ch == '\n' {
+                        newline(&mut out);
+                    }
+                }
+                i = end;
+                continue;
+            }
+            // `b"..."` / `b'x'`: step past the prefix; the quote handlers
+            // below take over on the next iteration.
+            if chars.get(i + 1) == Some(&'"') || chars.get(i + 1) == Some(&'\'') {
+                i += 1;
+                continue;
+            }
+        }
+        // Plain string.
+        if c == '"' {
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    i += 2;
+                } else if chars[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if chars[i] == '\n' {
+                        newline(&mut out);
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if chars.get(i + 1) == Some(&'\\') {
+                // Escaped char: skip past `'\x`, then scan to the close.
+                i += 3;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                continue;
+            }
+            if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                i += 3; // 'x'
+                continue;
+            }
+            // Lifetime: drop the quote, keep scanning.
+            i += 1;
+            continue;
+        }
+        out.code.last_mut().expect("line present").push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Rules suppressed by an `audit-allow:` marker in this comment.
+fn allowed_rules(comment: &str) -> Vec<Rule> {
+    let Some(pos) = comment.find("audit-allow:") else {
+        return Vec::new();
+    };
+    comment[pos + "audit-allow:".len()..]
+        .split([',', ' '].as_slice())
+        .filter_map(|name| Rule::from_name(name.trim()))
+        .collect()
+}
+
+/// Brace-tracking skip state for `#[cfg(test)]` / `#[test]` items.
+#[derive(Default)]
+struct TestSkip {
+    /// Saw the attribute; waiting for the item body to open.
+    pending: bool,
+    /// Inside the item body at this brace depth.
+    depth: usize,
+    active: bool,
+}
+
+impl TestSkip {
+    /// Feed one stripped line; true when it belongs to a test item
+    /// (including the attribute lines themselves).
+    fn observe(&mut self, line: &str) -> bool {
+        let trimmed = line.trim();
+        if self.active {
+            for c in trimmed.chars() {
+                match c {
+                    '{' => self.depth += 1,
+                    '}' if self.depth > 0 => {
+                        self.depth -= 1;
+                        if self.depth == 0 {
+                            self.active = false;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            return true;
+        }
+        if self.pending {
+            let mut saw_open = false;
+            for c in trimmed.chars() {
+                match c {
+                    '{' => {
+                        saw_open = true;
+                        self.depth += 1;
+                    }
+                    '}' if self.depth > 0 => self.depth -= 1,
+                    ';' if self.depth == 0 && !saw_open => {
+                        // Bodyless item (`mod tests;`, `use ...;`).
+                        self.pending = false;
+                        return true;
+                    }
+                    _ => {}
+                }
+            }
+            if saw_open {
+                self.pending = false;
+                if self.depth > 0 {
+                    self.active = true;
+                }
+            }
+            return true;
+        }
+        if trimmed.starts_with("#[cfg(test)")
+            || trimmed.starts_with("#[test]")
+            || trimmed.starts_with("#[cfg(all(test")
+        {
+            self.pending = true;
+            return true;
+        }
+        false
+    }
+}
+
+/// Run every rule over one file's source.  `module` is the path relative
+/// to `src/` (e.g. `util/sync.rs`), which scopes the per-module rules.
+fn scan_source(module: &str, src: &str) -> Vec<Finding> {
+    let stripped = strip(src);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut skip = TestSkip::default();
+    let decode_path = DECODE_PATH_MODULES.contains(&module);
+    let in_serve = module.starts_with("serve/");
+    let in_sync = module == "util/sync.rs";
+    for (idx, line) in stripped.code.iter().enumerate() {
+        if skip.observe(line) {
+            continue;
+        }
+        let mut report = |rule: Rule, message: &'static str| {
+            let allowed = allowed_rules(&stripped.comments[idx]).contains(&rule)
+                || (idx > 0 && allowed_rules(&stripped.comments[idx - 1]).contains(&rule));
+            if !allowed {
+                findings.push(Finding {
+                    line: idx + 1,
+                    rule,
+                    message,
+                });
+            }
+        };
+        if !in_sync {
+            // Merge with the next line so a formatter-split
+            // `.lock()\n.unwrap()` chain is still caught; only matches
+            // that *start* on this line are reported here.
+            let here = line.trim_end();
+            let next = stripped.code.get(idx + 1).map_or("", |l| l.trim());
+            let merged = format!("{here}{next}");
+            for pat in [".lock().unwrap()", ".lock().expect("] {
+                if let Some(p) = merged.find(pat) {
+                    if p < here.len() {
+                        report(
+                            Rule::PoisonCascade,
+                            "poison-intolerant lock: use util::sync::lock_unpoisoned \
+                             or a RankedMutex",
+                        );
+                        break;
+                    }
+                }
+            }
+        }
+        if line.contains(".partial_cmp(") {
+            let window = idx.saturating_sub(2);
+            let in_comparator = stripped.code[window..=idx]
+                .iter()
+                .any(|l| SORTERS.iter().any(|s| l.contains(s)));
+            if in_comparator {
+                report(Rule::NanSort, "NaN-unsafe comparator: use total_cmp");
+            }
+        }
+        if decode_path {
+            let mut start = 0;
+            while let Some(p) = line[start..].find("Mutex::new(") {
+                let abs = start + p;
+                if line[..abs].ends_with("Ranked") {
+                    start = abs + "Mutex::new(".len();
+                    continue;
+                }
+                report(
+                    Rule::RawMutex,
+                    "bare std::sync::Mutex in a decode-path module: \
+                     use util::sync::RankedMutex",
+                );
+                break;
+            }
+        }
+        if in_serve {
+            for pat in [".unwrap()", ".expect(", "panic!"] {
+                if line.contains(pat) {
+                    report(
+                        Rule::PanicInServe,
+                        "panic path in request handling: return an error \
+                         response instead",
+                    );
+                    break;
+                }
+            }
+        }
+    }
+    findings
+}
+
+/// Module path relative to the last `/src/` component (the scope key the
+/// per-module rules match on); the raw path when there is none.
+fn normalize_module(path: &Path) -> String {
+    let s = path.to_string_lossy().replace('\\', "/");
+    match s.rfind("/src/") {
+        Some(p) => s[p + "/src/".len()..].to_string(),
+        None => s,
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roots = if args.is_empty() {
+        vec!["rust/src".to_string()]
+    } else {
+        args
+    };
+    let mut files = Vec::new();
+    for root in &roots {
+        let path = PathBuf::from(root);
+        let result = if path.is_file() {
+            files.push(path);
+            Ok(())
+        } else {
+            walk(&path, &mut files)
+        };
+        if let Err(e) = result {
+            eprintln!("warp-audit: cannot read {root}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+    files.sort();
+    let mut total = 0usize;
+    for file in &files {
+        let src = match std::fs::read_to_string(file) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("warp-audit: cannot read {}: {e}", file.display());
+                return ExitCode::from(2);
+            }
+        };
+        for f in scan_source(&normalize_module(file), &src) {
+            println!("{}:{}: {}: {}", file.display(), f.line, f.rule.name(), f.message);
+            total += 1;
+        }
+    }
+    if total == 0 {
+        println!("warp-audit: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("warp-audit: {total} finding(s)");
+        ExitCode::FAILURE
+    }
+}
+
+// Fixture-driven self-tests: each rule must both FIRE on its fixture and
+// SUPPRESS under `audit-allow:` / `#[cfg(test)]`.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(module: &str, src: &str) -> Vec<(usize, Rule)> {
+        scan_source(module, src)
+            .into_iter()
+            .map(|f| (f.line, f.rule))
+            .collect()
+    }
+
+    #[test]
+    fn poison_cascade_fires_with_file_and_line() {
+        let src = "fn f() {\n    let g = m.lock().unwrap();\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(2, Rule::PoisonCascade)]);
+        let src = "fn f() {\n    let g = m.lock().expect(\"locked\");\n}\n";
+        assert_eq!(rules("cortex/prism.rs", src), vec![(2, Rule::PoisonCascade)]);
+    }
+
+    #[test]
+    fn poison_cascade_catches_a_formatter_split_chain() {
+        let src = "fn f() {\n    let g = m\n        .lock()\n        .unwrap();\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(3, Rule::PoisonCascade)]);
+    }
+
+    #[test]
+    fn poison_cascade_exempts_util_sync() {
+        let src = "fn f() {\n    let g = m.lock().unwrap();\n}\n";
+        assert!(rules("util/sync.rs", src).is_empty());
+    }
+
+    #[test]
+    fn audit_allow_suppresses_on_the_same_and_preceding_line() {
+        let same = "fn f() {\n    let g = m.lock().unwrap(); // audit-allow: poison-cascade\n}\n";
+        assert!(rules("model/pool.rs", same).is_empty());
+        let above =
+            "fn f() {\n    // audit-allow: poison-cascade\n    let g = m.lock().unwrap();\n}\n";
+        assert!(rules("model/pool.rs", above).is_empty());
+    }
+
+    #[test]
+    fn audit_allow_for_another_rule_does_not_suppress() {
+        let src = "fn f() {\n    let g = m.lock().unwrap(); // audit-allow: nan-sort\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(2, Rule::PoisonCascade)]);
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() {\n        m.lock().unwrap();\n    }\n}\n\
+                   fn prod() {\n    m.lock().unwrap();\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(8, Rule::PoisonCascade)]);
+        let src = "#[test]\nfn t() {\n    m.lock().unwrap();\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn comments_and_strings_never_fire() {
+        let src = "fn f() {\n    // m.lock().unwrap()\n    let s = \".lock().unwrap()\";\n\
+                   \n    let r = r#\".lock().unwrap()\"#;\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nan_sort_fires_in_comparator_position() {
+        let src = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        assert_eq!(rules("util/timer.rs", src), vec![(2, Rule::NanSort)]);
+        let split = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| {\n        \
+                     a.partial_cmp(b).unwrap()\n    });\n}\n";
+        assert_eq!(rules("util/timer.rs", split), vec![(3, Rule::NanSort)]);
+    }
+
+    #[test]
+    fn nan_sort_ignores_non_comparator_uses_and_total_cmp() {
+        let src = "fn f(a: f32, b: f32) -> bool {\n    \
+                   a.partial_cmp(&b) == Some(std::cmp::Ordering::Less)\n}\n";
+        assert!(rules("util/timer.rs", src).is_empty());
+        let src = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\n";
+        assert!(rules("util/timer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_mutex_fires_only_in_decode_path_modules() {
+        let src = "fn f() {\n    let m = Mutex::new(0);\n}\n";
+        assert_eq!(rules("cortex/step.rs", src), vec![(2, Rule::RawMutex)]);
+        assert_eq!(rules("metrics/mod.rs", src), vec![(2, Rule::RawMutex)]);
+        assert!(rules("util/timer.rs", src).is_empty());
+        let qualified = "fn f() {\n    let m = std::sync::Mutex::new(0);\n}\n";
+        assert_eq!(rules("model/pool.rs", qualified), vec![(2, Rule::RawMutex)]);
+    }
+
+    #[test]
+    fn ranked_mutex_is_not_a_raw_mutex() {
+        let src = "fn f() {\n    let m = RankedMutex::new(LockRank::Metrics, 0);\n}\n";
+        assert!(rules("metrics/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_in_serve_fires_and_suppresses() {
+        let src = "fn handle() {\n    let v = parse().unwrap();\n}\n";
+        assert_eq!(rules("serve/server.rs", src), vec![(2, Rule::PanicInServe)]);
+        let src = "fn handle() {\n    panic!(\"bad request\");\n}\n";
+        assert_eq!(rules("serve/http.rs", src), vec![(2, Rule::PanicInServe)]);
+        let src = "fn handle() {\n    let v = parse().unwrap(); // audit-allow: panic-in-serve\n}\n";
+        assert!(rules("serve/server.rs", src).is_empty());
+        // Outside serve/, a bare unwrap is not this rule's business.
+        let src = "fn f() {\n    let v = parse().unwrap();\n}\n";
+        assert!(rules("util/timer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_variants_do_not_fire() {
+        let src = "fn handle() {\n    let v = parse().unwrap_or(0);\n    \
+                   let w = lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n}\n";
+        assert!(rules("serve/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn module_normalization_scopes_rules() {
+        assert_eq!(
+            normalize_module(Path::new("rust/src/util/sync.rs")),
+            "util/sync.rs"
+        );
+        assert_eq!(
+            normalize_module(Path::new("/abs/repo/rust/src/serve/server.rs")),
+            "serve/server.rs"
+        );
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals_do_not_derail_the_scanner() {
+        let src = "fn f<'a>(x: &'a str) -> char {\n    let c = '{';\n    let d = '\\'';\n    \
+                   m.lock().unwrap();\n    c\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(4, Rule::PoisonCascade)]);
+    }
+}

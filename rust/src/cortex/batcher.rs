@@ -33,13 +33,13 @@
 //! into every later `decode`/`shutdown` caller.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::model::{Engine, FusedReq, KvCache, RawDecode};
-use crate::util::sync::lock_unpoisoned;
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Result of one batched decode step.
 #[derive(Debug)]
@@ -84,12 +84,12 @@ impl BatcherStats {
 
 /// The dynamic batcher.  Clone-free: share via `Arc`.
 pub struct Batcher {
-    tx: Mutex<Option<mpsc::Sender<Request>>>,
+    tx: RankedMutex<Option<mpsc::Sender<Request>>>,
     requests: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
     singles: AtomicU64,
-    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    handle: RankedMutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Batcher {
@@ -119,19 +119,19 @@ impl Batcher {
     pub fn with_exec(exec: BatchExec, linger: Duration, b_max: usize) -> Arc<Batcher> {
         let (tx, rx) = mpsc::channel::<Request>();
         let batcher = Arc::new(Batcher {
-            tx: Mutex::new(Some(tx)),
+            tx: RankedMutex::new(LockRank::SchedulerQueue, Some(tx)),
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
             singles: AtomicU64::new(0),
-            handle: Mutex::new(None),
+            handle: RankedMutex::new(LockRank::SchedulerQueue, None),
         });
         let b = batcher.clone();
         let handle = std::thread::Builder::new()
             .name("warp-batcher".into())
             .spawn(move || batcher_thread(exec, rx, linger, b_max.max(1), b))
             .expect("spawn batcher");
-        *lock_unpoisoned(&batcher.handle) = Some(handle);
+        *batcher.handle.lock() = Some(handle);
         batcher
     }
 
@@ -155,7 +155,7 @@ impl Batcher {
         // Clone the sender under the (poison-tolerant) mutex, send outside
         // it: shutdown can take-and-drop the channel without ever racing a
         // held guard, and a panicked peer cannot cascade into this caller.
-        let tx = lock_unpoisoned(&self.tx)
+        let tx = self.tx.lock()
             .as_ref()
             .cloned()
             .ok_or_else(|| anyhow!("batcher shut down"))?;
@@ -190,9 +190,9 @@ impl Batcher {
     /// (replying to each), and exits — no caller is left hanging on a dead
     /// channel.  Idempotent: later calls find both slots empty.
     pub fn shutdown(&self) {
-        let tx = lock_unpoisoned(&self.tx).take();
+        let tx = self.tx.lock().take();
         drop(tx);
-        if let Some(h) = lock_unpoisoned(&self.handle).take() {
+        if let Some(h) = self.handle.lock().take() {
             let _ = h.join();
         }
     }
@@ -283,7 +283,7 @@ mod tests {
     use super::*;
     use crate::model::{KvPool, KvPoolConfig};
     use crate::runtime::ModelConfig;
-    use std::sync::Condvar;
+    use std::sync::{Condvar, Mutex};
 
     fn tiny_cfg() -> ModelConfig {
         ModelConfig {

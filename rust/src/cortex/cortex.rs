@@ -445,6 +445,12 @@ impl WarpCortex {
                 spawner,
                 admit,
                 session_admit,
+                // Debug builds re-prove the pool conservation laws at every
+                // tick boundary; release ticks skip the check entirely.
+                invariants: Some({
+                    let pool = pool.clone();
+                    Arc::new(move || pool.check_invariants())
+                }),
             },
         );
         Ok(WarpCortex {

@@ -83,6 +83,59 @@
 //! (`SharedKv`) — Table 2 counts every physical block exactly once.  The
 //! registry's hit/miss/evict/CoW gauges surface on
 //! [`crate::model::PoolStats`] and the `/stats` endpoint.
+//!
+//! # Correctness tooling
+//!
+//! The fused-tick core is lock-based, so its correctness story is
+//! mechanised rather than taken on faith.
+//!
+//! **Lock ranking.**  Every production mutex is a
+//! [`crate::util::sync::RankedMutex`] carrying a
+//! [`crate::util::sync::LockRank`].  A thread may acquire a lock only if
+//! its rank is *strictly lower* than every rank it already holds
+//! (acquire-descending), which makes cycles — and therefore deadlocks —
+//! impossible by construction.  The hierarchy, highest (acquire first)
+//! to lowest (acquire last):
+//!
+//! | rank | lock | guards |
+//! |------|------|--------|
+//! | `Registry`       (70) | `runtime::device` LIVE_DEVICES, serve accept handoff | process-wide registries |
+//! | `Metrics`        (60) | `metrics` histograms / throughput windows | leaf telemetry |
+//! | `PrismAgents`    (50) | `prism` agent map, `synapse` memory guard | agent bookkeeping |
+//! | `SideResults`    (40) | step-loop side-outcome staging | per-tick result routing |
+//! | `SessionTable`   (30) | `step` session table + gauges | admission / lifecycle |
+//! | `SchedulerQueue` (20) | `step`/`scheduler`/`batcher` queues & channels | work handoff |
+//! | `PoolState`      (10) | `model::pool` block state | allocation / refcounts / registry |
+//! | `DeviceQueue`     (0) | `runtime::device` op queue | the one every subsystem may enqueue into last |
+//!
+//! Debug builds keep a per-thread stack of held ranks and panic on an
+//! out-of-order acquisition, naming both ranks; release builds compile
+//! the tracking away to a plain `Mutex`.  Locks are poison-tolerant: a
+//! panicking agent thread cannot cascade `PoisonError` unwraps into
+//! every other session (`model::pool` has the regression test).
+//!
+//! **Invariant sanitizer.**  Debug builds re-prove the conservation laws
+//! at every tick boundary and after every mutating pool op:
+//! [`crate::model::KvPool::check_invariants`] (block-state / free-list /
+//! live-count / registry / shared-bytes / dev-slab laws) and
+//! [`step::StepScheduler::check_invariants`] (`admitted == completed +
+//! active`, `requested == admitted + rejected + parked`).  The existing
+//! pool-churn / CoW / fused-scheduling / multi-session proptests call
+//! both, so every randomised schedule doubles as an invariant fuzz.
+//!
+//! **warp-audit.**  `cargo run --bin warp-audit -- rust/src` (a required
+//! CI job) lints the tree with four project-native rules:
+//! `poison-cascade` (no `.lock().unwrap()` / `.lock().expect(...)`
+//! outside `util/sync.rs`), `nan-sort` (no `partial_cmp` in comparator
+//! position — use `total_cmp`), `raw-mutex` (no bare `std::sync::Mutex`
+//! in decode-path modules), and `panic-in-serve` (no `unwrap` / `expect`
+//! / `panic!` in `serve/`).  Test code is exempt; a deliberate site opts
+//! out with `// audit-allow: <rule>` on the same or preceding line.
+//!
+//! **Cost model.**  Rank tracking, per-op pool validation and the
+//! tick-boundary checks all sit behind `debug_assertions`: debug test
+//! runs pay a bounded O(blocks) scan per tick, release builds pay
+//! nothing beyond the plain mutex they would have had anyway.
 
 pub mod agent;
 pub mod batcher;

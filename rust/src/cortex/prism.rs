@@ -15,13 +15,14 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::memory::{MemKind, MemoryTracker};
 use crate::model::{Engine, KvCache, KvPool};
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Kind of registered agent.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,13 +66,16 @@ impl std::fmt::Debug for AgentTicket {
 
 impl Drop for AgentTicket {
     fn drop(&mut self) {
-        self.prism.agents.lock().unwrap().remove(&self.id);
+        self.prism.agents.lock().remove(&self.id);
     }
 }
 
 #[derive(Debug)]
 struct PrismInner {
-    agents: Mutex<HashMap<AgentId, AgentMeta>>,
+    /// Ranked [`LockRank::PrismAgents`]: never held across a pool or
+    /// scheduler lock — registration and the population gauges touch only
+    /// this map.
+    agents: RankedMutex<HashMap<AgentId, AgentMeta>>,
     next_id: AtomicU64,
 }
 
@@ -130,7 +134,7 @@ impl Prism {
             tracker,
             pool,
             inner: Arc::new(PrismInner {
-                agents: Mutex::new(HashMap::new()),
+                agents: RankedMutex::new(LockRank::PrismAgents, HashMap::new()),
                 next_id: AtomicU64::new(1),
             }),
             _weights_mem: weights_mem,
@@ -162,7 +166,7 @@ impl Prism {
         let guard = self.tracker.alloc(mem_kind, kv.bytes());
         kv.track(guard);
         let id = AgentId(self.inner.next_id.fetch_add(1, Ordering::Relaxed));
-        self.inner.agents.lock().unwrap().insert(
+        self.inner.agents.lock().insert(
             id,
             AgentMeta {
                 kind,
@@ -179,7 +183,7 @@ impl Prism {
     }
 
     pub fn population(&self) -> Population {
-        let agents = self.inner.agents.lock().unwrap();
+        let agents = self.inner.agents.lock();
         let mut p = Population::default();
         for meta in agents.values() {
             match meta.kind {
@@ -196,7 +200,6 @@ impl Prism {
         self.inner
             .agents
             .lock()
-            .unwrap()
             .values()
             .map(|m| m.capacity_bytes)
             .sum()
@@ -207,7 +210,6 @@ impl Prism {
         self.inner
             .agents
             .lock()
-            .unwrap()
             .values()
             .map(|m| m.registered.elapsed())
             .max()

@@ -16,10 +16,10 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar};
 
 use super::agent::{run_side_agent, SideContext, SideOutcome, SideState, SideTask};
-use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
+use crate::util::sync::{ranked_wait, LockRank, RankedMutex};
 
 /// The function a worker runs per claimed task.  Production wraps
 /// [`run_side_agent`] (see [`StreamScheduler::new`]); tests inject stub
@@ -38,7 +38,9 @@ pub struct SchedulerStats {
 }
 
 struct SharedQueue {
-    tasks: Mutex<VecDeque<SideTask>>,
+    /// Ranked [`LockRank::SchedulerQueue`]; workers claim under this lock
+    /// (the drain-race protocol) holding nothing else.
+    tasks: RankedMutex<VecDeque<SideTask>>,
     cv: Condvar,
     shutdown: AtomicBool,
 }
@@ -46,7 +48,7 @@ struct SharedQueue {
 /// Bounded side-agent executor.
 pub struct StreamScheduler {
     queue: Arc<SharedQueue>,
-    results_rx: Mutex<mpsc::Receiver<SideOutcome>>,
+    results_rx: RankedMutex<mpsc::Receiver<SideOutcome>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     active: Arc<AtomicUsize>,
     max_queue: usize,
@@ -71,7 +73,7 @@ impl StreamScheduler {
     /// [`StreamScheduler::new`].
     pub fn with_runner(runner: TaskRunner, workers: usize, max_queue: usize) -> StreamScheduler {
         let queue = Arc::new(SharedQueue {
-            tasks: Mutex::new(VecDeque::new()),
+            tasks: RankedMutex::new(LockRank::SchedulerQueue, VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -91,7 +93,7 @@ impl StreamScheduler {
             .collect();
         StreamScheduler {
             queue,
-            results_rx: Mutex::new(results_rx),
+            results_rx: RankedMutex::new(LockRank::SchedulerQueue, results_rx),
             workers: handles,
             active,
             max_queue,
@@ -104,7 +106,7 @@ impl StreamScheduler {
     /// Submit a task; `false` means the queue is full (caller drops it —
     /// the paper's agents are best-effort by design).
     pub fn submit(&self, task: SideTask) -> bool {
-        let mut q = lock_unpoisoned(&self.queue.tasks);
+        let mut q = self.queue.tasks.lock();
         if q.len() >= self.max_queue {
             self.rejected.fetch_add(1, Ordering::Relaxed);
             return false;
@@ -119,7 +121,7 @@ impl StreamScheduler {
     /// Non-blocking poll for finished side agents (the Main Agent calls
     /// this between decode steps).
     pub fn poll_results(&self) -> Vec<SideOutcome> {
-        let rx = lock_unpoisoned(&self.results_rx);
+        let rx = self.results_rx.lock();
         let mut out = Vec::new();
         while let Ok(r) = rx.try_recv() {
             self.completed.fetch_add(1, Ordering::Relaxed);
@@ -130,7 +132,7 @@ impl StreamScheduler {
 
     /// Blocking wait for the next result with a timeout.
     pub fn wait_result(&self, timeout: std::time::Duration) -> Option<SideOutcome> {
-        let rx = lock_unpoisoned(&self.results_rx);
+        let rx = self.results_rx.lock();
         match rx.recv_timeout(timeout) {
             Ok(r) => {
                 self.completed.fetch_add(1, Ordering::Relaxed);
@@ -149,13 +151,13 @@ impl StreamScheduler {
     /// sent, so `in_flight() == 0` additionally guarantees every produced
     /// result is already observable via `poll_results`/`wait_result`.
     pub fn in_flight(&self) -> usize {
-        let q = lock_unpoisoned(&self.queue.tasks);
+        let q = self.queue.tasks.lock();
         self.active.load(Ordering::SeqCst) + q.len()
     }
 
     pub fn stats(&self) -> SchedulerStats {
         let (active, queued) = {
-            let q = lock_unpoisoned(&self.queue.tasks);
+            let q = self.queue.tasks.lock();
             (self.active.load(Ordering::SeqCst), q.len())
         };
         SchedulerStats {
@@ -217,7 +219,7 @@ fn worker_loop(
 ) {
     loop {
         let task = {
-            let mut q = lock_unpoisoned(&queue.tasks);
+            let mut q = queue.tasks.lock();
             loop {
                 if queue.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -231,7 +233,7 @@ fn worker_loop(
                     active.fetch_add(1, Ordering::SeqCst);
                     break t;
                 }
-                q = wait_unpoisoned(&queue.cv, q);
+                q = ranked_wait(&queue.cv, q);
             }
         };
         let claim = Claim(&active);
@@ -270,6 +272,7 @@ mod tests {
     use super::*;
     use crate::cortex::agent::SideState;
     use crate::cortex::router::AgentRole;
+    use std::sync::Mutex;
     use std::time::{Duration, Instant};
 
     fn task(id: u64) -> SideTask {

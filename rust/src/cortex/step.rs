@@ -49,14 +49,14 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::agent::{SideAgent, SideOutcome, SideState, SideTask};
 use crate::model::{FusedOut, FusedReq, KvCache, MainLane, PagedKv, RawDecode};
-use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
+use crate::util::sync::{ranked_wait_timeout, LockRank, RankedMutex};
 
 /// The fused decode executor: `(main lanes, side items, fuse_main)` → one
 /// tick's results.  Since the multi-session generalisation a tick carries
@@ -76,6 +76,12 @@ pub type AgentSpawner = Arc<dyn Fn(SideTask) -> SideAgent + Send + Sync>;
 /// side cache's worst-case blocks must still fit under `max_blocks`.
 pub type AdmitGate = Arc<dyn Fn() -> bool + Send + Sync>;
 
+/// A runtime invariant sanitizer the tick loop runs at every tick
+/// boundary in debug builds: returns the violated conservation laws (by
+/// name) or `Ok`.  Production wires this to
+/// [`crate::model::KvPool::check_invariants`].
+pub type InvariantCheck = Arc<dyn Fn() -> std::result::Result<(), String> + Send + Sync>;
+
 /// The scheduler's injectable seams, bundled: the fused executor, the
 /// side-agent spawner, and the two capacity gates (side-task admission and
 /// session admission).  [`StepSeams::new`] defaults both gates to
@@ -89,6 +95,11 @@ pub struct StepSeams {
     /// Consulted before each *session* admission (a main stream's worst
     /// case prefill blocks must still fit).
     pub session_admit: AdmitGate,
+    /// Optional tick-boundary sanitizer, run after each tick's sweep in
+    /// debug builds only (release ticks pay nothing).  A violation
+    /// panics the loop — in debug, corrupted bookkeeping is a bug to
+    /// surface at the tick that caused it, not to serve on.
+    pub invariants: Option<InvariantCheck>,
 }
 
 impl StepSeams {
@@ -98,6 +109,7 @@ impl StepSeams {
             spawner,
             admit: Arc::new(|| true),
             session_admit: Arc::new(|| true),
+            invariants: None,
         }
     }
 }
@@ -295,14 +307,16 @@ struct SessionTable {
     max_sessions: usize,
     max_parked: usize,
     admit: AdmitGate,
-    state: Mutex<SessionWait>,
+    /// Ranked [`LockRank::SessionTable`]: held across the admission gate,
+    /// which acquires the pool state (a strictly lower rank) underneath.
+    state: RankedMutex<SessionWait>,
     cv: Condvar,
     /// Session ids start at 1; 0 marks legacy (sessionless) side tasks,
     /// whose outcomes go to the global results channel.
     next_id: AtomicU64,
     /// Per-session outcome queues; an entry exists exactly while the
-    /// session's permit is alive.
-    results: Mutex<HashMap<u64, VecDeque<SideOutcome>>>,
+    /// session's permit is alive.  Ranked [`LockRank::SideResults`].
+    results: RankedMutex<HashMap<u64, VecDeque<SideOutcome>>>,
     results_cv: Condvar,
 }
 
@@ -332,10 +346,10 @@ impl SessionTable {
             max_sessions: max_sessions.max(1),
             max_parked,
             admit,
-            state: Mutex::new(SessionWait::default()),
+            state: RankedMutex::new(LockRank::SessionTable, SessionWait::default()),
             cv: Condvar::new(),
             next_id: AtomicU64::new(1),
-            results: Mutex::new(HashMap::new()),
+            results: RankedMutex::new(LockRank::SideResults, HashMap::new()),
             results_cv: Condvar::new(),
         })
     }
@@ -346,7 +360,7 @@ impl SessionTable {
     /// gate has no condvar of its own).  Associated fn because the permit
     /// must hold the table `Arc`.
     fn open(table: &Arc<SessionTable>) -> std::result::Result<SessionPermit, SessionDenied> {
-        let mut st = lock_unpoisoned(&table.state);
+        let mut st = table.state.lock();
         st.requested += 1;
         if st.closing {
             st.rejected += 1;
@@ -387,13 +401,13 @@ impl SessionTable {
                 table.cv.notify_all();
                 return Ok(SessionTable::issue(table));
             }
-            st = wait_timeout_unpoisoned(&table.cv, st, Duration::from_millis(5));
+            st = ranked_wait_timeout(&table.cv, st, Duration::from_millis(5));
         }
     }
 
     fn issue(table: &Arc<SessionTable>) -> SessionPermit {
         let id = table.next_id.fetch_add(1, Ordering::Relaxed);
-        lock_unpoisoned(&table.results).insert(id, VecDeque::new());
+        table.results.lock().insert(id, VecDeque::new());
         SessionPermit {
             table: table.clone(),
             id,
@@ -403,7 +417,7 @@ impl SessionTable {
 
     fn close(&self, id: u64, shed: bool) {
         {
-            let mut st = lock_unpoisoned(&self.state);
+            let mut st = self.state.lock();
             st.active = st.active.saturating_sub(1);
             if shed {
                 // Post-admission load shed (e.g. the pool's atomic
@@ -417,7 +431,7 @@ impl SessionTable {
             }
         }
         self.cv.notify_all();
-        lock_unpoisoned(&self.results).remove(&id);
+        self.results.lock().remove(&id);
         self.results_cv.notify_all();
     }
 
@@ -425,7 +439,7 @@ impl SessionTable {
     /// has already closed (outcome dropped — its agent's blocks are freed
     /// with the agent either way).
     fn route(&self, session: u64, outcome: SideOutcome) -> bool {
-        let mut map = lock_unpoisoned(&self.results);
+        let mut map = self.results.lock();
         match map.get_mut(&session) {
             Some(q) => {
                 q.push_back(outcome);
@@ -438,12 +452,34 @@ impl SessionTable {
     }
 
     fn close_all(&self) {
-        lock_unpoisoned(&self.state).closing = true;
+        self.state.lock().closing = true;
         self.cv.notify_all();
     }
 
     fn active_now(&self) -> usize {
-        lock_unpoisoned(&self.state).active
+        self.state.lock().active
+    }
+
+    /// Session-gauge conservation laws.  All counters live under the one
+    /// state mutex, so a single snapshot must reconcile exactly — any
+    /// drift is a lost or double-counted transition, not a race window.
+    fn validate_gauges(&self) -> std::result::Result<(), String> {
+        let st = self.state.lock();
+        let admitted_rhs = st.completed + st.active as u64;
+        if st.admitted != admitted_rhs {
+            return Err(format!(
+                "session-admission-conservation: admitted ({}) != completed ({}) + active ({})",
+                st.admitted, st.completed, st.active
+            ));
+        }
+        let requested_rhs = st.admitted + st.rejected + st.waiting as u64;
+        if st.requested != requested_rhs {
+            return Err(format!(
+                "session-request-conservation: requested ({}) != admitted ({}) + rejected ({}) + parked ({})",
+                st.requested, st.admitted, st.rejected, st.waiting
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -548,9 +584,9 @@ enum Cmd {
 
 /// The unified step scheduler.  Share via `Arc`; one per [`super::WarpCortex`].
 pub struct StepScheduler {
-    tx: Mutex<Option<mpsc::Sender<Cmd>>>,
-    results_rx: Mutex<mpsc::Receiver<SideOutcome>>,
-    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    tx: RankedMutex<Option<mpsc::Sender<Cmd>>>,
+    results_rx: RankedMutex<mpsc::Receiver<SideOutcome>>,
+    handle: RankedMutex<Option<std::thread::JoinHandle<()>>>,
     gauges: Arc<Gauges>,
     sessions: Arc<SessionTable>,
     max_pending: usize,
@@ -566,6 +602,7 @@ impl StepScheduler {
             spawner,
             admit,
             session_admit,
+            invariants,
         } = seams;
         // A zero width would collect no side items while agents sit active
         // forever (a hot spin); one lane is the meaningful minimum.
@@ -580,12 +617,12 @@ impl StepScheduler {
         let s = sessions.clone();
         let handle = std::thread::Builder::new()
             .name("warp-step".into())
-            .spawn(move || step_loop(cfg, rx, results_tx, exec, spawner, admit, g, s))
+            .spawn(move || step_loop(cfg, rx, results_tx, exec, spawner, admit, invariants, g, s))
             .expect("spawn step scheduler");
         Arc::new(StepScheduler {
-            tx: Mutex::new(Some(tx)),
-            results_rx: Mutex::new(results_rx),
-            handle: Mutex::new(Some(handle)),
+            tx: RankedMutex::new(LockRank::SchedulerQueue, Some(tx)),
+            results_rx: RankedMutex::new(LockRank::SchedulerQueue, results_rx),
+            handle: RankedMutex::new(LockRank::SchedulerQueue, Some(handle)),
             gauges,
             sessions,
             max_pending,
@@ -600,7 +637,7 @@ impl StepScheduler {
 
     /// Non-blocking poll for finished side agents of one session.
     pub fn poll_session_results(&self, session: u64) -> Vec<SideOutcome> {
-        let mut map = lock_unpoisoned(&self.sessions.results);
+        let mut map = self.sessions.results.lock();
         map.get_mut(&session)
             .map(|q| q.drain(..).collect())
             .unwrap_or_default()
@@ -610,7 +647,7 @@ impl StepScheduler {
     /// or once the session is closed).
     pub fn wait_session_result(&self, session: u64, timeout: Duration) -> Option<SideOutcome> {
         let deadline = Instant::now() + timeout;
-        let mut map = lock_unpoisoned(&self.sessions.results);
+        let mut map = self.sessions.results.lock();
         loop {
             match map.get_mut(&session) {
                 None => return None,
@@ -624,7 +661,7 @@ impl StepScheduler {
             if now >= deadline {
                 return None;
             }
-            map = wait_timeout_unpoisoned(&self.sessions.results_cv, map, deadline - now);
+            map = ranked_wait_timeout(&self.sessions.results_cv, map, deadline - now);
         }
     }
 
@@ -635,7 +672,7 @@ impl StepScheduler {
     pub fn session_stats(&self) -> SessionStats {
         let main_steps = self.gauges.main_steps.load(Ordering::Relaxed);
         let main_ticks = self.gauges.main_ticks.load(Ordering::Relaxed);
-        let st = lock_unpoisoned(&self.sessions.state);
+        let st = self.sessions.state.lock();
         SessionStats {
             requested: st.requested,
             admitted: st.admitted,
@@ -669,7 +706,7 @@ impl StepScheduler {
             capacity: kv.capacity(),
             reply: reply_tx,
         };
-        let tx = lock_unpoisoned(&self.tx)
+        let tx = self.tx.lock()
             .as_ref()
             .cloned()
             .ok_or_else(|| anyhow!("step scheduler shut down"))?;
@@ -708,7 +745,7 @@ impl StepScheduler {
             capacity: kv.capacity(),
             reply: reply_tx,
         };
-        let tx = lock_unpoisoned(&self.tx)
+        let tx = self.tx.lock()
             .as_ref()
             .cloned()
             .ok_or_else(|| anyhow!("step scheduler shut down"))?;
@@ -730,7 +767,7 @@ impl StepScheduler {
     pub fn submit(&self, task: SideTask) -> bool {
         // Serialize the backpressure check under the tx lock; `completed`
         // only grows concurrently, which merely frees capacity.
-        let guard = lock_unpoisoned(&self.tx);
+        let guard = self.tx.lock();
         let Some(tx) = guard.as_ref() else {
             self.gauges.rejected.fetch_add(1, Ordering::Relaxed);
             return false;
@@ -753,7 +790,7 @@ impl StepScheduler {
     /// Non-blocking poll for finished side agents (the episode loop calls
     /// this between main steps).
     pub fn poll_results(&self) -> Vec<SideOutcome> {
-        let rx = lock_unpoisoned(&self.results_rx);
+        let rx = self.results_rx.lock();
         let mut out = Vec::new();
         while let Ok(r) = rx.try_recv() {
             out.push(r);
@@ -763,7 +800,7 @@ impl StepScheduler {
 
     /// Blocking wait for the next side outcome with a timeout.
     pub fn wait_result(&self, timeout: Duration) -> Option<SideOutcome> {
-        let rx = lock_unpoisoned(&self.results_rx);
+        let rx = self.results_rx.lock();
         rx.recv_timeout(timeout).ok()
     }
 
@@ -809,15 +846,35 @@ impl StepScheduler {
         }
     }
 
+    /// Run the scheduler's conservation laws once, naming the violated law
+    /// on failure.  Session gauges are snapshotted under their one mutex,
+    /// so they must reconcile exactly; the side-task gauges are atomics
+    /// updated from several threads, so only the monotone law
+    /// (`completed <= submitted`) is sound to assert from outside the tick
+    /// loop.  `completed` is loaded BEFORE `submitted`: a task completes
+    /// only after it was counted submitted, so this order can never
+    /// observe a transient `completed > submitted`.
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        self.sessions.validate_gauges()?;
+        let completed = self.gauges.completed.load(Ordering::SeqCst);
+        let submitted = self.gauges.submitted.load(Ordering::SeqCst);
+        if completed > submitted {
+            return Err(format!(
+                "side-task-conservation: completed ({completed}) > submitted ({submitted})"
+            ));
+        }
+        Ok(())
+    }
+
     /// Stop the tick loop.  In-flight main steps error out; active and
     /// parked side tasks surface as `Failed` outcomes (delivered before the
     /// loop exits, so a final `poll_results` still observes them); parked
     /// `open_session` callers wake with `ShuttingDown`.  Idempotent.
     pub fn shutdown(&self) {
         self.sessions.close_all();
-        let tx = lock_unpoisoned(&self.tx).take();
+        let tx = self.tx.lock().take();
         drop(tx);
-        if let Some(h) = lock_unpoisoned(&self.handle).take() {
+        if let Some(h) = self.handle.lock().take() {
             let _ = h.join();
         }
     }
@@ -826,6 +883,26 @@ impl StepScheduler {
 impl Drop for StepScheduler {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Test-only corruption hooks for the sanitizer's own coverage: each
+/// breaks exactly one conservation law so the tests can assert
+/// [`StepScheduler::check_invariants`] names it.  Only call while the
+/// scheduler is idle — the tick loop's debug boundary check would
+/// (correctly) panic on the seeded drift otherwise.
+#[cfg(test)]
+impl StepScheduler {
+    /// Bump `admitted` without a matching session transition:
+    /// `admitted == completed + active` breaks.
+    fn corrupt_admitted_gauge(&self) {
+        self.sessions.state.lock().admitted += 1;
+    }
+
+    /// Bump `requested` without an admit/reject/park outcome:
+    /// `requested == admitted + rejected + parked` breaks.
+    fn corrupt_requested_gauge(&self) {
+        self.sessions.state.lock().requested += 1;
     }
 }
 
@@ -870,6 +947,7 @@ fn step_loop(
     exec: FusedExec,
     spawner: AgentSpawner,
     admit: AdmitGate,
+    invariants: Option<InvariantCheck>,
     gauges: Arc<Gauges>,
     sessions: Arc<SessionTable>,
 ) {
@@ -1222,6 +1300,22 @@ fn step_loop(
         // ── 5. sweep: deliver finished agents; slots refill next tick ───
         sweep_done(&mut active, &results, &sessions, &gauges);
         gauges.active.store(active.len(), Ordering::Relaxed);
+
+        // ── 6. debug-build sanitizer: tick-boundary invariant check ─────
+        // Every tick ends at a quiescent point for this loop's own state,
+        // so a violated conservation law here is a real bug, not a race
+        // window.  `cfg!` (not `#[cfg]`) so release builds still typecheck
+        // the seam without unused-variable warnings; the branch folds away.
+        if cfg!(debug_assertions) {
+            if let Some(check) = invariants.as_ref() {
+                if let Err(e) = check() {
+                    panic!("tick-boundary invariant violation: {e}");
+                }
+            }
+            if let Err(e) = sessions.validate_gauges() {
+                panic!("tick-boundary invariant violation: {e}");
+            }
+        }
     }
 }
 
@@ -1670,6 +1764,8 @@ mod tests {
             crate::prop_assert!(got.len() == n_tasks, "lost outcomes: {} of {n_tasks}", got.len());
             let st = sched.stats();
             crate::prop_assert!(st.main_deferred == 0, "single-main runs must never defer mains");
+            sched.check_invariants()?;
+            pool.check_invariants()?;
             sched.shutdown();
 
             // Sequential reference: identical parts, one op per step.
@@ -2092,6 +2188,8 @@ mod tests {
             });
             sched.drain(Duration::from_secs(10));
             let ss = sched.session_stats();
+            sched.check_invariants()?;
+            pool.check_invariants()?;
             sched.shutdown();
             for (s, (plan, run)) in plans.iter().zip(&runs).enumerate() {
                 let (outs, sides) = match run {
@@ -2377,9 +2475,48 @@ mod tests {
                     );
                 }
             }
+            sched.check_invariants()?;
+            pool.check_invariants()?;
             sched.shutdown();
             drop(warm);
             Ok(())
         });
+    }
+
+    /// Satellite: the sanitizer must name each violated session-gauge law.
+    #[test]
+    fn sanitizer_names_session_gauge_drift() {
+        let cfg = tiny_cfg();
+        let pool =
+            KvPool::new(&cfg, KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let sched = StepScheduler::new(
+            StepConfig::default(),
+            StepSeams::new(
+                stub_exec(cfg.clone(), 64, 1),
+                bare_spawner(pool.clone(), 64, 2, 1),
+            ),
+        );
+        // A real open/close cycle first: the laws hold on honest gauges.
+        let permit = sched.open_session().expect("admit");
+        drop(permit);
+        sched.check_invariants().expect("honest gauges reconcile");
+
+        sched.corrupt_admitted_gauge();
+        let err = sched.check_invariants().expect_err("seeded admitted drift");
+        assert!(
+            err.contains("session-admission-conservation"),
+            "law not named: {err}"
+        );
+        // Undo, then break the other law in isolation.
+        sched.sessions.state.lock().admitted -= 1;
+        sched.corrupt_requested_gauge();
+        let err = sched.check_invariants().expect_err("seeded requested drift");
+        assert!(
+            err.contains("session-request-conservation"),
+            "law not named: {err}"
+        );
+        sched.sessions.state.lock().requested -= 1;
+        sched.check_invariants().expect("restored gauges reconcile");
+        sched.shutdown();
     }
 }

@@ -16,13 +16,14 @@
 //! The shared-seed term of the O(N·k) context bound is thereby O(1) in N.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use super::memory::{MemGuard, MemKind, MemoryTracker};
 use crate::model::{Engine, KvCache, SynapseOut};
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// One immutable published landmark set.
 #[derive(Debug)]
@@ -154,7 +155,9 @@ pub struct Synapse {
     current: RwLock<Option<Arc<SynapseSnapshot>>>,
     version: AtomicU64,
     reads: AtomicU64,
-    mem: Mutex<Option<MemGuard>>,
+    /// Ranked [`LockRank::PrismAgents`] (same tier as the prism registry:
+    /// leaf bookkeeping, never held across pool/scheduler locks).
+    mem: RankedMutex<Option<MemGuard>>,
     tracker: Arc<MemoryTracker>,
 }
 
@@ -164,7 +167,7 @@ impl Synapse {
             current: RwLock::new(None),
             version: AtomicU64::new(0),
             reads: AtomicU64::new(0),
-            mem: Mutex::new(None),
+            mem: RankedMutex::new(LockRank::PrismAgents, None),
             tracker,
         })
     }
@@ -189,7 +192,7 @@ impl Synapse {
             created: Instant::now(),
         });
         {
-            let mut mem = self.mem.lock().unwrap();
+            let mut mem = self.mem.lock();
             match mem.as_mut() {
                 Some(g) => g.resize(bytes),
                 None => *mem = Some(self.tracker.alloc(MemKind::Synapse, bytes)),

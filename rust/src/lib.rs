@@ -64,6 +64,22 @@
 //! `shared_blocks`/`shared_bytes`, `prefix_hits`/`prefix_misses`/
 //! `prefix_evictions` and `cow_copies`.
 //!
+//! Concurrency correctness is enforced by construction and by tooling
+//! (see the *Correctness tooling* section of [`cortex`]): every
+//! production mutex is a [`util::sync::RankedMutex`] acquired in strictly
+//! descending [`util::sync::LockRank`] order (debug builds panic on an
+//! out-of-order acquisition, naming both ranks), locks are
+//! poison-tolerant so one panicking session can never cascade a poisoned
+//! `unwrap` into every other session, and debug builds re-prove the pool
+//! and session-gauge conservation laws at every tick boundary
+//! ([`model::KvPool::check_invariants`],
+//! [`cortex::StepScheduler::check_invariants`]).  The project-native
+//! linter `warp-audit` (`cargo run --bin warp-audit -- rust/src`, a
+//! required CI job) keeps the tree clean of `.lock().unwrap()` chains,
+//! NaN-unsound `partial_cmp` comparators, bare `std::sync::Mutex` on the
+//! decode path, and panicking calls in [`serve`]; individual sites opt
+//! out with `// audit-allow: <rule>`.
+//!
 //! Python never runs on the request path: `make artifacts` exports
 //! everything once, and this crate serves from the compiled artifacts.
 

@@ -3,8 +3,9 @@
 //! hot loop (atomics + a mutex-guarded histogram with bounded buckets).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Monotonic counter.
 #[derive(Debug, Default)]
@@ -28,7 +29,7 @@ impl Counter {
 /// with <8% relative error — plenty for p50/p95/p99 reporting.
 #[derive(Debug)]
 pub struct Histogram {
-    buckets: Mutex<Vec<u64>>,
+    buckets: RankedMutex<Vec<u64>>,
     count: AtomicU64,
     sum_ns: AtomicU64,
     max_ns: AtomicU64,
@@ -54,7 +55,7 @@ fn bucket_upper_ns(idx: usize) -> f64 {
 impl Default for Histogram {
     fn default() -> Self {
         Histogram {
-            buckets: Mutex::new(vec![0; NBUCKETS]),
+            buckets: RankedMutex::new(LockRank::Metrics, vec![0; NBUCKETS]),
             count: AtomicU64::new(0),
             sum_ns: AtomicU64::new(0),
             max_ns: AtomicU64::new(0),
@@ -71,7 +72,7 @@ impl Histogram {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
-        let mut b = self.buckets.lock().unwrap();
+        let mut b = self.buckets.lock();
         b[bucket_of(ns)] += 1;
     }
 
@@ -103,7 +104,7 @@ impl Histogram {
             return 0.0;
         }
         let target = (p / 100.0 * total as f64).ceil().max(1.0) as u64;
-        let b = self.buckets.lock().unwrap();
+        let b = self.buckets.lock();
         let mut cum = 0u64;
         for (i, n) in b.iter().enumerate() {
             cum += n;
@@ -141,7 +142,7 @@ pub struct HistSummary {
 pub struct Throughput {
     start: Instant,
     events: Counter,
-    window: Mutex<Vec<Instant>>,
+    window: RankedMutex<Vec<Instant>>,
     window_cap: usize,
 }
 
@@ -150,14 +151,14 @@ impl Throughput {
         Throughput {
             start: Instant::now(),
             events: Counter::default(),
-            window: Mutex::new(Vec::new()),
+            window: RankedMutex::new(LockRank::Metrics, Vec::new()),
             window_cap: 4096,
         }
     }
 
     pub fn tick(&self) {
         self.events.inc();
-        let mut w = self.window.lock().unwrap();
+        let mut w = self.window.lock();
         w.push(Instant::now());
         if w.len() > self.window_cap {
             let drop_n = w.len() - self.window_cap;
@@ -182,7 +183,7 @@ impl Throughput {
     /// Rate over the last `secs` seconds (from the sliding window).
     pub fn recent_per_sec(&self, secs: f64) -> f64 {
         let cutoff = Instant::now() - std::time::Duration::from_secs_f64(secs);
-        let w = self.window.lock().unwrap();
+        let w = self.window.lock();
         let n = w.iter().rev().take_while(|t| **t >= cutoff).count();
         n as f64 / secs
     }

@@ -843,6 +843,7 @@ mod tests {
                 let want = &flat.k[flat.offset(layer, 0)..flat.offset(layer, 0) + len * ROW];
                 crop_eq(&got, want, "k_slice")?;
             }
+            pool.check_invariants()?;
             Ok(())
         });
     }
@@ -1050,6 +1051,7 @@ mod tests {
                 s.dev_blocks,
                 s.blocks_high_water
             );
+            pool.check_invariants()?;
             Ok(())
         });
     }
@@ -1401,6 +1403,8 @@ mod tests {
                 pool_u.stats().blocks_live == 0,
                 "unshared pool leaked blocks"
             );
+            pool_s.check_invariants()?;
+            pool_u.check_invariants()?;
             Ok(())
         });
     }

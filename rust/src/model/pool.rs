@@ -66,8 +66,9 @@
 //! `benches/decode_upload.rs`.
 
 use std::collections::HashMap;
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -75,6 +76,7 @@ use super::kv::KvCache;
 use crate::cortex::memory::MemGuard;
 use crate::runtime::xla_stub;
 use crate::runtime::ModelConfig;
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Pool sizing + reclaim knobs (surfaced on [`crate::cortex::CortexConfig`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -365,7 +367,12 @@ pub struct KvPool {
     /// Likewise `evict_lru_locked` is an O(slots) scan — fine at bench
     /// scale, an indexed structure (BTreeMap<last_used, id> of parked
     /// entries) once registries hold tens of thousands of blocks.
-    state: Mutex<PoolState>,
+    ///
+    /// Ranked [`LockRank::PoolState`]: acquired under the session table by
+    /// the admission gate, never the other way around; poison-tolerant so
+    /// one panicking agent cannot cascade into every session
+    /// (`poison-cascade` in warp-audit).
+    state: RankedMutex<PoolState>,
     /// Device-resident block copies.  RwLock so concurrent decode gathers
     /// (read-only, and they hold the lock for the full lane memcpy) never
     /// serialize against each other.  Row write-throughs and slot
@@ -409,7 +416,7 @@ impl KvPool {
             n_layers: model.n_layers,
             kv_heads: model.n_kv_heads,
             head_dim: model.head_dim,
-            state: Mutex::new(PoolState::default()),
+            state: RankedMutex::new(LockRank::PoolState, PoolState::default()),
             dev: RwLock::new(DevSlab::default()),
             rents: AtomicU64::new(0),
             reuses: AtomicU64::new(0),
@@ -498,8 +505,10 @@ impl KvPool {
     /// only then does the rent fail — the caller surfaces this as
     /// cache-growth backpressure.
     pub(crate) fn rent_ref(&self) -> Result<u32> {
-        let mut st = self.state.lock().unwrap();
-        self.rent_locked(&mut st)
+        let mut st = self.state.lock();
+        let id = self.rent_locked(&mut st);
+        self.debug_validate(&st);
+        id
     }
 
     /// Admission-gate view of capacity: can `blocks` fresh private blocks
@@ -517,7 +526,7 @@ impl KvPool {
             return true;
         }
         let reserved = self.reserved.load(Ordering::SeqCst);
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock();
         let parked = st
             .slots
             .iter()
@@ -554,7 +563,7 @@ impl KvPool {
         // Hold the state lock across the headroom check AND the bump so
         // concurrent try_reserve calls serialize; the guard's unlocked
         // decrement on drop is safe (headroom only grows).
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock();
         let reserved = self.reserved.load(Ordering::SeqCst);
         let parked = st
             .slots
@@ -646,8 +655,9 @@ impl KvPool {
     /// a registered block parks in the registry instead (still resident,
     /// still hittable, evictable under cap pressure).
     pub(crate) fn release_ref(&self, id: u32) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         self.release_ref_locked(&mut st, id);
+        self.debug_validate(&st);
     }
 
     fn release_ref_locked(&self, st: &mut PoolState, id: u32) {
@@ -731,7 +741,7 @@ impl KvPool {
     /// global `SharedKv` charge.
     pub(crate) fn register_block(&self, id: u32, hash: u64, keys: &[i32]) -> bool {
         debug_assert_eq!(keys.len(), self.block_tokens);
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         if st.registry.contains_key(&hash) {
             return false;
         }
@@ -751,6 +761,7 @@ impl KvPool {
         st.registry.insert(hash, id);
         st.shared += 1;
         self.sync_shared_guard(&mut st);
+        self.debug_validate(&st);
         true
     }
 
@@ -765,10 +776,11 @@ impl KvPool {
     /// cryptographic, and prompts are untrusted — degrades to a miss
     /// instead of silently attaching another prompt's KV blocks.
     pub(crate) fn lookup_chain(&self, hashes: &[u64], keys: &[i32]) -> Vec<u32> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         let ids = self.chain_walk_locked(&mut st, hashes, keys);
         st.prefix_hits += ids.len() as u64;
         st.prefix_misses += (hashes.len() - ids.len()) as u64;
+        self.debug_validate(&st);
         ids
     }
 
@@ -780,9 +792,10 @@ impl KvPool {
     /// counted at all, because probing and finding nothing is the expected
     /// steady state of every per-block adoption probe.
     pub(crate) fn lookup_chain_mid(&self, hashes: &[u64], keys: &[i32]) -> Vec<u32> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         let ids = self.chain_walk_locked(&mut st, hashes, keys);
         st.prefix_mid_hits += ids.len() as u64;
+        self.debug_validate(&st);
         ids
     }
 
@@ -845,7 +858,7 @@ impl KvPool {
         let n_layers = self.n_layers;
         debug_assert!(off + run <= bt);
         debug_assert!(src_at + run <= n_src);
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         let must_cow = {
             let b = st.slots[id as usize]
                 .as_ref()
@@ -899,13 +912,14 @@ impl KvPool {
                 .expect("write target is live");
             self.dev_sync(target, &b.k, &b.v, s_off, s_n);
         }
+        self.debug_validate(&st);
         Ok(target)
     }
 
     /// Deep-copy `src_id` into a fresh private block (cache cloning),
     /// syncing the first `valid_rows` rows to the new device slot.
     pub(crate) fn clone_block(&self, src_id: u32, valid_rows: usize) -> Result<u32> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         let dst = self.rent_locked(&mut st)?;
         let (ck, cv) = {
             let s = st.slots[src_id as usize]
@@ -926,6 +940,7 @@ impl KvPool {
                 .expect("clone target is live");
             self.dev_sync(dst, &d.k, &d.v, 0, valid_rows);
         }
+        self.debug_validate(&st);
         Ok(dst)
     }
 
@@ -949,7 +964,7 @@ impl KvPool {
         debug_assert_eq!(k_out.len(), n_layers * per);
         debug_assert_eq!(v_out.len(), n_layers * per);
         let valid = valid.min(c);
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock();
         for (bi, &id) in table.iter().enumerate() {
             let start = bi * bt;
             if start >= valid {
@@ -982,7 +997,7 @@ impl KvPool {
         let n = indices.len();
         let mut k = Vec::with_capacity(n_layers * n * row);
         let mut v = Vec::with_capacity(n_layers * n * row);
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock();
         for layer in 0..n_layers {
             for &pos in indices {
                 let (bi, off) = (pos / bt, pos % bt);
@@ -1012,7 +1027,7 @@ impl KvPool {
             return Vec::new();
         }
         let mut out = Vec::with_capacity((end - start) * row);
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock();
         for pos in start..end {
             let (bi, off) = (pos / bt, pos % bt);
             let b = st.slots[table[bi] as usize]
@@ -1163,7 +1178,7 @@ impl KvPool {
     /// blocks are charged here exactly once, however many caches reference
     /// them.  Replaces any previously attached guard.
     pub fn track_shared(&self, mut guard: MemGuard) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         guard.resize(st.shared as u64 * self.block_bytes());
         st.shared_guard = Some(guard);
     }
@@ -1203,7 +1218,7 @@ impl KvPool {
             prefix_evictions,
             cow_copies,
         ) = {
-            let st = self.state.lock().unwrap();
+            let st = self.state.lock();
             (
                 st.live,
                 st.free.len(),
@@ -1242,6 +1257,275 @@ impl KvPool {
             cow_copies,
             reserved_blocks: self.reserved.load(Ordering::SeqCst),
         }
+    }
+
+    // ── The invariant sanitizer ────────────────────────────────────────
+
+    /// Verify every conservation law the pool's bookkeeping rests on,
+    /// naming each violated law in the error.  Laws checked (see also
+    /// [`KvPool::validate_locked`]):
+    ///
+    /// * `block-state` — every allocated block is exactly one of
+    ///   *referenced* (refs > 0), *parked* (refs == 0, registered) or
+    ///   *free-listed* (refs == 0, unregistered, on the free list);
+    /// * `free-list` — free ids are unique and disjoint from live blocks;
+    /// * `live-count` — the `live` gauge equals referenced + parked and
+    ///   never exceeds `high_water`;
+    /// * `registry` — the shared gauge, the registry map and the
+    ///   hash-carrying slots agree, and every registry entry points at a
+    ///   slot carrying that hash (no stale ids);
+    /// * `shared-bytes` — the `SharedKv` accounting guard charges exactly
+    ///   `shared * block_bytes`;
+    /// * `cap` — when capped, live blocks never exceed `max_blocks`
+    ///   (assumes the cap was not lowered below `live` mid-flight via
+    ///   [`KvPool::set_limits`]).  The stronger `live + reserved ≤ max`
+    ///   is deliberately NOT asserted: a session legally double-counts
+    ///   while its prefill rents real blocks under a still-held
+    ///   [`BlockReservation`], so it fails transiently by design;
+    /// * `dev-slab` — device free ids are unique, address no occupied
+    ///   host slot and no materialised buffer, and the device byte gauge
+    ///   matches the materialised-block count.
+    ///
+    /// Run at tick boundaries by the step scheduler (debug builds) and
+    /// explicitly from the property suites at any depth; the per-op debug
+    /// hook ([`KvPool::debug_validate`]) covers the core laws after every
+    /// mutating pool op.
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        let st = self.state.lock();
+        let mut errs = match self.validate_locked(&st) {
+            Ok(()) => Vec::new(),
+            Err(e) => vec![e],
+        };
+        let max = self.max_blocks.load(Ordering::Relaxed);
+        if max > 0 && st.live > max {
+            errs.push(format!(
+                "cap: {} blocks live exceeds max_blocks {max}",
+                st.live
+            ));
+        }
+        // Lock order: `state` before `dev` — the documented pool order.
+        let dev = self.dev.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut dev_free = HashSet::with_capacity(dev.free_ids.len());
+        for &id in &dev.free_ids {
+            if !dev_free.insert(id) {
+                errs.push(format!(
+                    "dev-slab: id {id} double-entered in the device free list"
+                ));
+            }
+            if st.slots.get(id as usize).map_or(false, |s| s.is_some()) {
+                errs.push(format!(
+                    "dev-slab: id {id} is device-free but its host slot is occupied"
+                ));
+            }
+            if dev.slots.get(id as usize).map_or(false, |s| s.is_some()) {
+                errs.push(format!(
+                    "dev-slab: id {id} is device-free but still materialised"
+                ));
+            }
+        }
+        let materialised = dev.slots.iter().filter(|s| s.is_some()).count();
+        let want = materialised as u64 * self.block_bytes();
+        if dev.bytes != want {
+            errs.push(format!(
+                "dev-slab: byte gauge {} != {materialised} materialised blocks ({want} bytes)",
+                dev.bytes
+            ));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// Core of the sanitizer: the laws that hold after *every* mutating
+    /// pool op, checked against an already-held state guard (so the debug
+    /// hook can run inside the op's own critical section).
+    fn validate_locked(&self, st: &PoolState) -> std::result::Result<(), String> {
+        let mut errs: Vec<String> = Vec::new();
+        let mut free = HashSet::with_capacity(st.free.len());
+        for &id in &st.free {
+            if !free.insert(id) {
+                errs.push(format!(
+                    "free-list: block {id} double-entered in the free list"
+                ));
+            }
+            match st.slots.get(id as usize).and_then(|s| s.as_ref()) {
+                None => errs.push(format!("free-list: block {id} is free-listed but unallocated")),
+                Some(b) => {
+                    if b.refs != 0 {
+                        errs.push(format!(
+                            "free-list: block {id} is free-listed with refcount {}",
+                            b.refs
+                        ));
+                    }
+                    if b.hash.is_some() {
+                        errs.push(format!(
+                            "free-list: block {id} is free-listed while registered"
+                        ));
+                    }
+                }
+            }
+        }
+        let mut referenced = 0usize;
+        let mut parked = 0usize;
+        let mut hashed = 0usize;
+        for (i, slot) in st.slots.iter().enumerate() {
+            let Some(b) = slot else { continue };
+            if let Some(hash) = b.hash {
+                hashed += 1;
+                match b.keys.as_deref() {
+                    Some(k) if k.len() == self.block_tokens => {}
+                    Some(k) => errs.push(format!(
+                        "registry: block {i} (hash {hash:#x}) stores {} keys, block_tokens is {}",
+                        k.len(),
+                        self.block_tokens
+                    )),
+                    None => errs.push(format!(
+                        "registry: registered block {i} (hash {hash:#x}) has no key run for hit verification"
+                    )),
+                }
+            }
+            if b.refs > 0 {
+                referenced += 1;
+                if free.contains(&(i as u32)) {
+                    errs.push(format!(
+                        "block-state: block {i} is referenced (refs {}) AND free-listed",
+                        b.refs
+                    ));
+                }
+            } else if b.hash.is_some() {
+                parked += 1;
+                if free.contains(&(i as u32)) {
+                    errs.push(format!(
+                        "block-state: block {i} is parked in the registry AND free-listed"
+                    ));
+                }
+            } else if !free.contains(&(i as u32)) {
+                errs.push(format!(
+                    "block-state: block {i} is neither referenced, parked, nor free-listed \
+                     (a refcount underflow leaks the block)"
+                ));
+            }
+        }
+        if st.live != referenced + parked {
+            errs.push(format!(
+                "live-count: blocks_live gauge {} != {referenced} referenced + {parked} parked",
+                st.live
+            ));
+        }
+        if st.high_water < st.live {
+            errs.push(format!(
+                "live-count: high_water {} below live {}",
+                st.high_water, st.live
+            ));
+        }
+        if st.registry.len() != hashed {
+            errs.push(format!(
+                "registry: {} registry entries but {hashed} slots carry a hash",
+                st.registry.len()
+            ));
+        }
+        if st.shared != st.registry.len() {
+            errs.push(format!(
+                "registry: shared gauge {} != registry size {}",
+                st.shared,
+                st.registry.len()
+            ));
+        }
+        for (&hash, &id) in &st.registry {
+            match st.slots.get(id as usize).and_then(|s| s.as_ref()) {
+                None => errs.push(format!(
+                    "registry: hash {hash:#x} maps to unallocated block {id} (stale registry id)"
+                )),
+                Some(b) if b.hash != Some(hash) => errs.push(format!(
+                    "registry: hash {hash:#x} maps to block {id}, which carries {:?} (stale registry id)",
+                    b.hash
+                )),
+                Some(_) => {}
+            }
+        }
+        if let Some(g) = st.shared_guard.as_ref() {
+            let want = st.shared as u64 * self.block_bytes();
+            if g.bytes() != want {
+                errs.push(format!(
+                    "shared-bytes: guard charges {} bytes, registry holds {} blocks ({want} bytes)",
+                    g.bytes(),
+                    st.shared
+                ));
+            }
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// Debug-build hook: every mutating pool op re-validates the core
+    /// laws before releasing the state lock, so corruption panics at the
+    /// corrupting op instead of at a later symptom.  O(slots + registry)
+    /// per op; compiled out of release builds entirely (the release-mode
+    /// cost model is zero — the nightly deep-proptest job exercises the
+    /// laws through explicit `check_invariants` calls instead).
+    #[cfg(debug_assertions)]
+    fn debug_validate(&self, st: &PoolState) {
+        if let Err(e) = self.validate_locked(st) {
+            panic!("kv pool invariant violation: {e}");
+        }
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline(always)]
+    fn debug_validate(&self, _st: &PoolState) {}
+}
+
+/// Test-only corruption hooks: seed one specific bookkeeping bug each, so
+/// the sanitizer's negative tests can prove `check_invariants` names the
+/// violated law.  Callers must not run further mutating pool ops after
+/// corrupting (the per-op debug hook would — correctly — panic).
+#[cfg(test)]
+impl KvPool {
+    /// Zero a referenced block's refcount without freeing it: the block
+    /// leaks (`block-state`) and the live gauge over-counts (`live-count`).
+    fn corrupt_refcount_underflow(&self, id: u32) {
+        let mut st = self.state.lock();
+        st.slots[id as usize].as_mut().expect("block allocated").refs = 0;
+    }
+
+    /// Enter an already-free block a second time (`free-list`).
+    fn corrupt_free_list_double_entry(&self) {
+        let mut st = self.state.lock();
+        let id = *st.free.first().expect("a free block to duplicate");
+        st.free.push(id);
+    }
+
+    /// Point a registry hash at a block that does not carry it
+    /// (`registry` stale-id detection).
+    fn corrupt_stale_registry_id(&self, hash: u64, id: u32) {
+        let mut st = self.state.lock();
+        st.registry.insert(hash, id);
+        st.shared += 1; // keep shared == registry.len(): isolate the stale id
+    }
+
+    /// Drift the live gauge off the slot population (`live-count`).
+    fn corrupt_live_gauge(&self) {
+        let mut st = self.state.lock();
+        st.live += 1;
+    }
+
+    /// Poison the state mutex the way a real bug would: panic while
+    /// holding it (the cascade regression test's setup).
+    fn poison_state_for_test(&self) {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = self.state.lock();
+            panic!("poison the pool state lock");
+        }));
+        assert!(res.is_err(), "the poisoning closure must panic");
+    }
+
+    fn state_is_poisoned(&self) -> bool {
+        self.state.is_poisoned()
     }
 }
 
@@ -1728,6 +2012,7 @@ mod tests {
                     p.release_ref(held.swap_remove(i));
                 }
             }
+            p.check_invariants()?;
             let hw = p.stats().blocks_high_water;
             crate::prop_assert!(hw == peak, "high-water {hw} != observed peak {peak}");
             // phase 2: drop everything, then re-rent up to the peak
@@ -1758,8 +2043,100 @@ mod tests {
             for id in held.drain(..) {
                 p.release_ref(id);
             }
+            p.check_invariants()?;
             Ok(())
         });
+    }
+
+    // ── The invariant sanitizer ────────────────────────────────────────
+
+    #[test]
+    fn check_invariants_passes_on_real_pool_states() {
+        // Empty, private churn, shared/parked, evicted — all legal states.
+        let p = pool(4, 2);
+        p.check_invariants().unwrap();
+        let keys: Vec<i32> = (0..8).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        let a0 = p.rent_ref().unwrap();
+        let a1 = p.rent_ref().unwrap();
+        p.check_invariants().unwrap();
+        p.write_run(a0, 0, 4, 0, 8, &rows(&p, 8, 1.0), &rows(&p, 8, -1.0))
+            .unwrap();
+        p.write_run(a1, 0, 4, 4, 8, &rows(&p, 8, 1.0), &rows(&p, 8, -1.0))
+            .unwrap();
+        assert!(p.register_block(a0, hashes[0], &keys[..4]));
+        assert!(p.register_block(a1, hashes[1], &keys[4..8]));
+        p.check_invariants().unwrap();
+        p.release_ref(a0);
+        p.release_ref(a1); // both park in the registry
+        p.check_invariants().unwrap();
+        let _evictor = p.rent_ref().unwrap(); // LRU-evicts one parked entry
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sanitizer_names_a_refcount_underflow() {
+        let p = pool(4, 0);
+        let id = p.rent_ref().unwrap();
+        p.corrupt_refcount_underflow(id);
+        let err = p.check_invariants().unwrap_err();
+        assert!(err.contains("block-state"), "law not named: {err}");
+        assert!(err.contains("live-count"), "gauge drift not named: {err}");
+    }
+
+    #[test]
+    fn sanitizer_names_a_free_list_double_entry() {
+        let p = pool(4, 0);
+        let id = p.rent_ref().unwrap();
+        p.release_ref(id);
+        p.corrupt_free_list_double_entry();
+        let err = p.check_invariants().unwrap_err();
+        assert!(err.contains("free-list"), "law not named: {err}");
+        assert!(err.contains("double-entered"), "symptom not named: {err}");
+    }
+
+    #[test]
+    fn sanitizer_names_a_stale_registry_id() {
+        let p = pool(4, 0);
+        let id = p.rent_ref().unwrap();
+        // Hash points at a live block that does not carry it.
+        p.corrupt_stale_registry_id(0xdead_beef, id);
+        let err = p.check_invariants().unwrap_err();
+        assert!(err.contains("stale registry id"), "law not named: {err}");
+    }
+
+    #[test]
+    fn sanitizer_names_live_gauge_drift() {
+        let p = pool(4, 0);
+        let _id = p.rent_ref().unwrap();
+        p.corrupt_live_gauge();
+        let err = p.check_invariants().unwrap_err();
+        assert!(err.contains("live-count"), "law not named: {err}");
+    }
+
+    // ── Poison containment (the cascade regression) ────────────────────
+
+    #[test]
+    fn poisoned_state_mutex_does_not_cascade_into_other_sessions() {
+        // PR 4's fault-isolation rule, now load-bearing in the pool
+        // itself: one agent panicking while holding the pool state lock
+        // must not take every other session down with it.
+        let p = pool(4, 8);
+        let a = p.rent_ref().unwrap();
+        p.poison_state_for_test();
+        assert!(p.state_is_poisoned());
+        // Other sessions keep renting, writing and releasing…
+        let b = p.rent_ref().unwrap();
+        p.write_run(b, 0, 2, 0, 2, &rows(&p, 2, 1.0), &rows(&p, 2, 1.0))
+            .unwrap();
+        assert!(p.can_admit(1), "admission gate must survive the poison");
+        p.release_ref(a);
+        p.release_ref(b);
+        // …and `/stats` stays serveable off the same mutex.
+        let s = p.stats();
+        assert_eq!(s.blocks_live, 0);
+        assert_eq!(s.blocks_free, 2);
+        p.check_invariants().unwrap();
     }
 
     #[test]

@@ -17,13 +17,14 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, Once};
+use std::sync::{mpsc, Arc, Condvar, Once};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::{ArtifactSpec, Manifest};
 use super::tensor::HostTensor;
+use crate::util::sync::{ranked_wait, LockRank, RankedMutex};
 // The PJRT surface.  Offline builds use the API-compatible stub (device
 // bring-up fails cleanly with "PJRT backend unavailable"); swapping in the
 // real `xla` crate is this one import line.
@@ -133,17 +134,17 @@ pub struct DeviceStatsSnapshot {
 // down and drops all PJRT objects first.
 
 static CLEANUP_ONCE: Once = Once::new();
-static LIVE_DEVICES: Mutex<Vec<(std::sync::Weak<Shared>, Option<std::thread::JoinHandle<()>>)>> =
-    Mutex::new(Vec::new());
+type DeviceRegistry = Vec<(std::sync::Weak<Shared>, Option<std::thread::JoinHandle<()>>)>;
+/// Ranked [`LockRank::Registry`]: the highest rank, legal to hold while
+/// shutting each device's [`LockRank::DeviceQueue`] down underneath.
+static LIVE_DEVICES: RankedMutex<DeviceRegistry> =
+    RankedMutex::new(LockRank::Registry, Vec::new());
 
 extern "C" fn cleanup_devices_at_exit() {
-    let mut devices = match LIVE_DEVICES.lock() {
-        Ok(g) => g,
-        Err(p) => p.into_inner(),
-    };
+    let mut devices = LIVE_DEVICES.lock();
     for (weak, handle) in devices.drain(..) {
         if let Some(shared) = weak.upgrade() {
-            shared.queues.lock().unwrap().shutdown = true;
+            shared.queues.lock().shutdown = true;
             shared.cv.notify_all();
         }
         if let Some(h) = handle {
@@ -158,14 +159,15 @@ fn register_device_for_cleanup(shared: &Arc<Shared>, handle: std::thread::JoinHa
     });
     LIVE_DEVICES
         .lock()
-        .unwrap()
         .push((Arc::downgrade(shared), Some(handle)));
 }
 
 struct Shared {
     specs: Vec<ArtifactSpec>,
     name_to_id: HashMap<String, usize>,
-    queues: Mutex<QueueState>,
+    /// Ranked [`LockRank::DeviceQueue`]: the lowest rank — every other
+    /// subsystem may hold its own lock while enqueueing an op here.
+    queues: RankedMutex<QueueState>,
     cv: Condvar,
     stats: DeviceStats,
     /// Bytes of weights resident on the device (the Prism), per config.
@@ -205,10 +207,13 @@ impl DeviceHandle {
         let shared = Arc::new(Shared {
             specs,
             name_to_id,
-            queues: Mutex::new(QueueState {
-                lanes: Default::default(),
-                shutdown: false,
-            }),
+            queues: RankedMutex::new(
+                LockRank::DeviceQueue,
+                QueueState {
+                    lanes: Default::default(),
+                    shutdown: false,
+                },
+            ),
             cv: Condvar::new(),
             stats: DeviceStats::default(),
             weight_bytes,
@@ -275,7 +280,7 @@ impl DeviceHandle {
             enqueued: Instant::now(),
         };
         {
-            let mut q = self.shared.queues.lock().unwrap();
+            let mut q = self.shared.queues.lock();
             if q.shutdown {
                 let _ = op.reply.send(Err(anyhow!("device is shut down")));
             } else {
@@ -315,13 +320,13 @@ impl DeviceHandle {
 
     /// Number of ops currently waiting, per lane (for backpressure).
     pub fn queue_depths(&self) -> [usize; 3] {
-        let q = self.shared.queues.lock().unwrap();
+        let q = self.shared.queues.lock();
         [q.lanes[0].len(), q.lanes[1].len(), q.lanes[2].len()]
     }
 
     /// Stop the service thread (pending ops receive errors).
     pub fn shutdown(&self) {
-        let mut q = self.shared.queues.lock().unwrap();
+        let mut q = self.shared.queues.lock();
         q.shutdown = true;
         drop(q);
         self.shared.cv.notify_all();
@@ -442,7 +447,7 @@ fn device_thread(
 
     loop {
         let op = {
-            let mut q = shared.queues.lock().unwrap();
+            let mut q = shared.queues.lock();
             loop {
                 if q.shutdown {
                     for lane in q.lanes.iter_mut() {
@@ -456,7 +461,7 @@ fn device_thread(
                 if let Some(op) = q.lanes.iter_mut().find_map(|l| l.pop_front()) {
                     break op;
                 }
-                q = shared.cv.wait(q).unwrap();
+                q = ranked_wait(&shared.cv, q);
             }
         };
 

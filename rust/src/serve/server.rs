@@ -46,6 +46,7 @@ use super::http::{
     HttpRequest,
 };
 use crate::cortex::{CortexSession, SessionError, SessionStats, WarpCortex};
+use crate::util::sync::{LockRank, RankedMutex};
 use crate::util::Json;
 
 /// Server configuration.
@@ -194,7 +195,10 @@ pub fn serve<S: SessionSource>(src: Arc<S>, cfg: ServerConfig) -> Result<ServerH
     // load shedding can see them.
     let workers = cfg.workers.max(1);
     let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(workers);
-    let rx = Arc::new(std::sync::Mutex::new(rx));
+    // Ranked `Registry`: a worker holds it only for the recv handoff,
+    // never while a request handler runs (the guard is a statement
+    // temporary), so it can never invert against the session/pool locks.
+    let rx = Arc::new(RankedMutex::new(LockRank::Registry, rx));
     let mut threads = Vec::new();
 
     for i in 0..workers {
@@ -206,7 +210,7 @@ pub fn serve<S: SessionSource>(src: Arc<S>, cfg: ServerConfig) -> Result<ServerH
             std::thread::Builder::new()
                 .name(format!("warp-http-{i}"))
                 .spawn(move || loop {
-                    let conn = rx.lock().unwrap().recv();
+                    let conn = rx.lock().recv();
                     match conn {
                         Ok(mut stream) => {
                             requests.fetch_add(1, Ordering::Relaxed);

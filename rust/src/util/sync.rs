@@ -1,15 +1,37 @@
-//! Poison-tolerant lock helpers for the decode path.
+//! Poison-tolerant lock helpers and the ranked-lock deadlock detector.
+//!
+//! # Poison tolerance
 //!
 //! A worker that panics while holding a `Mutex` poisons it; every later
 //! `lock().unwrap()` then panics too, cascading one agent's failure into
 //! the whole serving loop (the step scheduler, the legacy batcher and the
 //! stream worker pool all share locks across agent threads).  The locks
 //! these helpers guard protect *restartable* state — channels, join
-//! handles, task queues — so the right response to poison is to recover
-//! the guard and keep serving: the panicking caller's own request surfaces
-//! as an `Err`/`Failed` outcome through the normal reply path, and nobody
-//! else inherits the panic.
+//! handles, task queues, pool bookkeeping — so the right response to
+//! poison is to recover the guard and keep serving: the panicking
+//! caller's own request surfaces as an `Err`/`Failed` outcome through the
+//! normal reply path, and nobody else inherits the panic.  The
+//! `poison-cascade` rule in `warp-audit` enforces that production code
+//! reaches locks only through this module.
+//!
+//! # Lock ranks
+//!
+//! [`RankedMutex`] additionally encodes the crate's global lock hierarchy
+//! (see [`LockRank`]).  The convention is **acquire-descending**: a thread
+//! may acquire a ranked lock only while every lock it already holds has a
+//! *strictly higher* rank.  Outer (coarse, long-held) locks therefore
+//! carry high ranks and leaf locks low ranks, and any two threads that
+//! both obey the rule can never deadlock on ranked mutexes: a cycle would
+//! require someone to acquire upward.
+//!
+//! Under `debug_assertions` each thread keeps a held-rank stack and an
+//! out-of-order acquisition panics immediately, naming both the rank
+//! being acquired and the lowest rank already held — turning a
+//! probabilistic deadlock hang into a deterministic test failure.  In
+//! release builds the bookkeeping compiles out entirely and
+//! `RankedMutex::lock` is exactly `lock_unpoisoned`.
 
+use std::ops::{Deref, DerefMut};
 use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 
 /// Lock `m`, recovering the guard if a previous holder panicked.
@@ -37,6 +59,220 @@ pub fn wait_timeout_unpoisoned<'a, T>(
     }
 }
 
+/// The crate-wide lock hierarchy, innermost (leaf) first.
+///
+/// A thread holding a lock of rank `R` may only acquire locks of rank
+/// strictly *below* `R`.  Reading top to bottom: device queues are the
+/// innermost locks (anyone may take them last), the process-lifetime
+/// registries are the outermost.  The six core levels the runtime is
+/// built on — device queues < pool state < scheduler session table <
+/// side-results map < prism agents < metrics — appear here with two
+/// plumbing levels (`SchedulerQueue`, `Registry`) slotted in.
+///
+/// Discriminants are spaced so future levels can land between existing
+/// ones without renumbering call sites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum LockRank {
+    /// Innermost: per-device service queues (`runtime::device`).  Taken
+    /// on every op submission; nothing may be acquired under them.
+    DeviceQueue = 0,
+    /// The KV pool's slab + prefix-registry state (`model::pool`).
+    /// Acquired under the session table by the admission gate.
+    PoolState = 10,
+    /// Scheduler plumbing: command senders, result receivers and join
+    /// handles in `cortex::{step,scheduler,batcher}`.
+    SchedulerQueue = 20,
+    /// The step scheduler's session table (`cortex::step::SessionTable`)
+    /// — held across admission, which locks the pool underneath.
+    SessionTable = 30,
+    /// The per-session side-results map (`cortex::step`).
+    SideResults = 40,
+    /// The prism agent registry and the synapse memory guard
+    /// (`cortex::{prism,synapse}`).  Ticket drop releases pool blocks
+    /// underneath this rank.
+    PrismAgents = 50,
+    /// Metrics sinks (`metrics::{Histogram,Throughput}`).  Recorded from
+    /// code that holds no other ranked lock or only `Registry`.
+    Metrics = 60,
+    /// Outermost: process-lifetime registries — the live-device table in
+    /// `runtime::device` (held while shutting down per-device queues)
+    /// and the serve layer's accept-queue handoff.
+    Registry = 70,
+}
+
+#[cfg(debug_assertions)]
+mod held {
+    use super::LockRank;
+    use std::cell::RefCell;
+
+    thread_local! {
+        static HELD: RefCell<Vec<LockRank>> = const { RefCell::new(Vec::new()) };
+    }
+
+    pub fn acquire(rank: LockRank) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            if let Some(&floor) = h.iter().min() {
+                assert!(
+                    rank < floor,
+                    "lock-rank violation: acquiring {rank:?} (rank {}) while holding \
+                     {floor:?} (rank {}); ranked locks must be acquired in strictly \
+                     descending rank order — see util::sync::LockRank",
+                    rank as u8,
+                    floor as u8,
+                );
+            }
+            h.push(rank);
+        });
+    }
+
+    pub fn release(rank: LockRank) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            // Remove the *last* occurrence: guards may be dropped out of
+            // declaration order, but rank release is by value so the
+            // stack stays consistent either way.
+            if let Some(i) = h.iter().rposition(|&r| r == rank) {
+                h.remove(i);
+            }
+        });
+    }
+}
+
+#[cfg(not(debug_assertions))]
+mod held {
+    use super::LockRank;
+    #[inline(always)]
+    pub fn acquire(_rank: LockRank) {}
+    #[inline(always)]
+    pub fn release(_rank: LockRank) {}
+}
+
+/// A poison-tolerant mutex that enforces the global [`LockRank`]
+/// hierarchy under `debug_assertions`.
+///
+/// In release builds this is a zero-cost wrapper over
+/// [`lock_unpoisoned`]; in debug builds every acquisition is checked
+/// against the thread's held-rank stack and an inversion panics with
+/// both ranks named.
+pub struct RankedMutex<T> {
+    rank: LockRank,
+    inner: Mutex<T>,
+}
+
+impl<T> RankedMutex<T> {
+    /// `const` so ranked mutexes can back process-lifetime `static`s
+    /// (e.g. the live-device registry).
+    pub const fn new(rank: LockRank, value: T) -> RankedMutex<T> {
+        RankedMutex {
+            rank,
+            inner: Mutex::new(value),
+        }
+    }
+
+    /// Acquire the lock: rank-checked (debug) and poison-tolerant.
+    ///
+    /// The rank check runs *before* blocking on the inner mutex, so an
+    /// inversion panics instead of demonstrating the deadlock it guards
+    /// against.
+    pub fn lock(&self) -> RankedGuard<'_, T> {
+        held::acquire(self.rank);
+        RankedGuard {
+            inner: Some(lock_unpoisoned(&self.inner)),
+            rank: self.rank,
+        }
+    }
+
+    pub fn rank(&self) -> LockRank {
+        self.rank
+    }
+
+    /// Whether a holder has panicked with the lock held.  Ranked locks
+    /// keep serving after poison; this is observability for tests and
+    /// `/stats`.
+    pub fn is_poisoned(&self) -> bool {
+        self.inner.is_poisoned()
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for RankedMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RankedMutex")
+            .field("rank", &self.rank)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Guard for a [`RankedMutex`]; pops the rank off the thread's held
+/// stack on drop.
+pub struct RankedGuard<'a, T> {
+    // `Option` so `ranked_wait` can move the inner guard out without
+    // running the rank-release twice.
+    inner: Option<MutexGuard<'a, T>>,
+    rank: LockRank,
+}
+
+impl<T> Deref for RankedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard present")
+    }
+}
+
+impl<T> DerefMut for RankedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard present")
+    }
+}
+
+impl<T> Drop for RankedGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            held::release(self.rank);
+        }
+    }
+}
+
+/// `Condvar::wait` over a [`RankedGuard`]: the rank is released for the
+/// duration of the wait (the mutex is unlocked while blocked) and
+/// re-checked on wakeup.  Poison-tolerant like [`wait_unpoisoned`].
+pub fn ranked_wait<'a, T>(cv: &Condvar, mut guard: RankedGuard<'a, T>) -> RankedGuard<'a, T> {
+    let rank = guard.rank;
+    let inner = guard.inner.take().expect("guard present");
+    held::release(rank);
+    drop(guard);
+    let inner = cv.wait(inner).unwrap_or_else(PoisonError::into_inner);
+    held::acquire(rank);
+    RankedGuard {
+        inner: Some(inner),
+        rank,
+    }
+}
+
+/// `Condvar::wait_timeout` over a [`RankedGuard`]; same contract as
+/// [`wait_timeout_unpoisoned`] (timeout flag dropped, callers re-check
+/// their condition and deadline).
+pub fn ranked_wait_timeout<'a, T>(
+    cv: &Condvar,
+    mut guard: RankedGuard<'a, T>,
+    timeout: std::time::Duration,
+) -> RankedGuard<'a, T> {
+    let rank = guard.rank;
+    let inner = guard.inner.take().expect("guard present");
+    held::release(rank);
+    drop(guard);
+    let inner = match cv.wait_timeout(inner, timeout) {
+        Ok((g, _)) => g,
+        Err(e) => e.into_inner().0,
+    };
+    held::acquire(rank);
+    RankedGuard {
+        inner: Some(inner),
+        rank,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -56,5 +292,107 @@ mod tests {
         assert_eq!(*lock_unpoisoned(&m), 7);
         *lock_unpoisoned(&m) = 9;
         assert_eq!(*lock_unpoisoned(&m), 9);
+    }
+
+    #[test]
+    fn ranked_mutex_recovers_from_poison() {
+        let m = Arc::new(RankedMutex::new(LockRank::PoolState, 3usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        *m.lock() = 11;
+        assert_eq!(*m.lock(), 11);
+    }
+
+    #[test]
+    fn descending_acquisition_is_legal() {
+        let outer = RankedMutex::new(LockRank::SessionTable, ());
+        let inner = RankedMutex::new(LockRank::PoolState, ());
+        let leaf = RankedMutex::new(LockRank::DeviceQueue, ());
+        let g1 = outer.lock();
+        let g2 = inner.lock();
+        let g3 = leaf.lock();
+        // Out-of-order *release* must also be fine.
+        drop(g2);
+        drop(g3);
+        drop(g1);
+        // And the stack must be clean afterwards: re-acquiring the
+        // outermost rank succeeds.
+        let _g = outer.lock();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn inverted_acquisition_panics_naming_both_ranks() {
+        let err = std::thread::spawn(|| {
+            let inner = RankedMutex::new(LockRank::PoolState, ());
+            let outer = RankedMutex::new(LockRank::SessionTable, ());
+            let _g1 = inner.lock();
+            let _g2 = outer.lock(); // inversion: 30 acquired while holding 10
+        })
+        .join()
+        .expect_err("inverted acquisition must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| err.downcast_ref::<&str>().unwrap_or(&"").to_string());
+        assert!(msg.contains("lock-rank violation"), "got: {msg}");
+        assert!(msg.contains("SessionTable"), "got: {msg}");
+        assert!(msg.contains("PoolState"), "got: {msg}");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn equal_rank_nesting_panics() {
+        let err = std::thread::spawn(|| {
+            let a = RankedMutex::new(LockRank::Metrics, ());
+            let b = RankedMutex::new(LockRank::Metrics, ());
+            let _g1 = a.lock();
+            let _g2 = b.lock();
+        })
+        .join()
+        .expect_err("equal-rank nesting must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| err.downcast_ref::<&str>().unwrap_or(&"").to_string());
+        assert!(msg.contains("lock-rank violation"), "got: {msg}");
+    }
+
+    #[test]
+    fn ranked_wait_timeout_releases_and_reacquires_rank() {
+        let m = RankedMutex::new(LockRank::SessionTable, 0u32);
+        let cv = Condvar::new();
+        let g = m.lock();
+        let g = ranked_wait_timeout(&cv, g, std::time::Duration::from_millis(5));
+        assert_eq!(*g, 0);
+        drop(g);
+        // Stack must be balanced: outer rank re-acquirable.
+        let _g = m.lock();
+    }
+
+    #[test]
+    fn ranked_wait_wakes_on_notify() {
+        let pair = Arc::new((RankedMutex::new(LockRank::SideResults, false), Condvar::new()));
+        let p2 = pair.clone();
+        let h = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut g = m.lock();
+            *g = true;
+            drop(g);
+            cv.notify_one();
+        });
+        let (m, cv) = &*pair;
+        let mut g = m.lock();
+        while !*g {
+            g = ranked_wait(cv, g);
+        }
+        assert!(*g);
+        drop(g);
+        h.join().unwrap();
     }
 }

@@ -59,7 +59,7 @@ pub fn bench_median<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchS
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let at = |p: f64| samples[((p * (samples.len() - 1) as f64).round() as usize).min(samples.len() - 1)];
     BenchStats {
         iters,
