@@ -12,6 +12,7 @@ Usage:
     python3 ci/check_bench.py [--thresholds ci/thresholds.json]
                               [--summary BENCH_summary.json]
                               [--reports-dir .]
+    python3 ci/check_bench.py --self-test
 
 thresholds.json shape:
     {
@@ -28,6 +29,12 @@ AST whitelist, never eval().  Every listed report must exist and every
 referenced key must be present: a bench that silently stopped emitting a
 metric fails the gate instead of passing by omission.
 
+`--self-test` proves those fail-closed properties against synthetic
+reports in a temp dir (missing report -> non-zero, missing key ->
+non-zero, violated bound -> non-zero, all-good -> zero) so a regression
+in the gate itself cannot silently wave benches through.  CI runs it
+before the real evaluation.
+
 Exit status: 0 iff every check passes.
 """
 
@@ -38,6 +45,7 @@ import ast
 import json
 import operator
 import sys
+import tempfile
 from pathlib import Path
 
 OPS = {
@@ -90,17 +98,9 @@ def as_number(value, where: str) -> float:
     return float(value)
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--thresholds", default="ci/thresholds.json")
-    ap.add_argument("--summary", default="BENCH_summary.json")
-    ap.add_argument("--reports-dir", default=".")
-    args = ap.parse_args()
-
-    thresholds = json.loads(Path(args.thresholds).read_text())
-    reports_dir = Path(args.reports_dir)
-
-    summary = {"thresholds_file": args.thresholds, "reports": {}, "checks": []}
+def evaluate(thresholds: dict, reports_dir: Path, summary_path: Path):
+    """Run every threshold check; returns (summary dict, failure list)."""
+    summary = {"thresholds_file": None, "reports": {}, "checks": []}
     failures = []
 
     for report_name in sorted(thresholds):
@@ -132,7 +132,7 @@ def main() -> int:
     # Fold in any extra BENCH_*.json the thresholds don't know yet, so the
     # per-commit summary artifact is complete even before a gate exists.
     for extra in sorted(reports_dir.glob("BENCH_*.json")):
-        if extra.name == Path(args.summary).name or extra.name in summary["reports"]:
+        if extra.name == summary_path.name or extra.name in summary["reports"]:
             continue
         try:
             summary["reports"][extra.name] = json.loads(extra.read_text())
@@ -140,6 +140,85 @@ def main() -> int:
             failures.append(f"{extra.name}: unparseable report: {e}")
 
     summary["passed"] = not failures
+    return summary, failures
+
+
+def self_test() -> int:
+    """Prove the gate fails closed.  Each case is (thresholds, reports on
+    disk, expected-failure-count); any mismatch is a gate bug."""
+    cases = [
+        (
+            "missing report fails",
+            {"BENCH_absent.json": [{"key": "x", "op": ">=", "bound": 1}]},
+            {},
+            1,
+        ),
+        (
+            "missing key fails",
+            {"BENCH_a.json": [{"key": "gone", "op": ">=", "bound": 1}]},
+            {"BENCH_a.json": {"x": 5}},
+            1,
+        ),
+        (
+            "violated bound fails",
+            {"BENCH_a.json": [{"key": "x", "op": ">=", "bound": 10}]},
+            {"BENCH_a.json": {"x": 5}},
+            1,
+        ),
+        (
+            "expression bound over missing key fails",
+            {"BENCH_a.json": [{"key": "x", "op": "<=", "bound": "2 * gone"}]},
+            {"BENCH_a.json": {"x": 5}},
+            1,
+        ),
+        (
+            "boolean metric is rejected, not coerced",
+            {"BENCH_a.json": [{"key": "ok", "op": "==", "bound": 1}]},
+            {"BENCH_a.json": {"ok": True}},
+            1,
+        ),
+        (
+            "all-good passes",
+            {"BENCH_a.json": [{"key": "x", "op": ">=", "bound": "x - 1"}]},
+            {"BENCH_a.json": {"x": 5}},
+            0,
+        ),
+    ]
+    bad = 0
+    for name, thresholds, reports, want in cases:
+        with tempfile.TemporaryDirectory() as tmp:
+            tmp = Path(tmp)
+            for fname, content in reports.items():
+                (tmp / fname).write_text(json.dumps(content))
+            summary, failures = evaluate(thresholds, tmp, tmp / "BENCH_summary.json")
+            if len(failures) != want or summary["passed"] != (want == 0):
+                bad += 1
+                print(f"self-test FAIL: {name}: expected {want} failure(s), "
+                      f"got {len(failures)}: {failures}")
+            else:
+                print(f"self-test ok: {name}")
+    if bad:
+        print(f"self-test: {bad} case(s) broken — the gate does not fail closed")
+        return 1
+    print(f"self-test: all {len(cases)} cases passed")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--thresholds", default="ci/thresholds.json")
+    ap.add_argument("--summary", default="BENCH_summary.json")
+    ap.add_argument("--reports-dir", default=".")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate fails closed, then exit")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+
+    thresholds = json.loads(Path(args.thresholds).read_text())
+    summary, failures = evaluate(thresholds, Path(args.reports_dir), Path(args.summary))
+    summary["thresholds_file"] = args.thresholds
     Path(args.summary).write_text(json.dumps(summary, indent=2, sort_keys=True) + "\n")
 
     checked = len(summary["checks"])

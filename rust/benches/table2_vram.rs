@@ -119,11 +119,14 @@ fn main() -> anyhow::Result<()> {
     let m = MemoryModel::qwen05b_on_4090(qwen);
     println!("\nprojected to Qwen2.5-0.5B fp16 / RTX 4090 vs the paper:");
     println!(
-        "{:>8} {:>14} {:>14} {:>15} {:>15}",
-        "agents", "paper total", "ours total", "paper per-agent", "ours per-agent"
+        "{:>8} {:>14} {:>14} {:>14} {:>15} {:>15}",
+        "agents", "paper total", "ours total", "ours q8", "paper per-agent", "ours per-agent"
     );
     for (i, &n) in CHECKPOINTS.iter().enumerate() {
         let ours = m.warp_total_bytes(n as u64);
+        // The tiered pool's warm column: side-agent KV parked as int8
+        // blocks (one f32 scale per row) instead of fp16-width rows.
+        let ours_q8 = m.warp_total_bytes_q8(n as u64);
         let paper_per = if n > 1 {
             (PAPER_GB[i] - PAPER_GB[0]) * 1e9 / (n - 1) as f64
         } else {
@@ -135,10 +138,11 @@ fn main() -> anyhow::Result<()> {
             0.0
         };
         println!(
-            "{:>8} {:>13.2}GB {:>14} {:>15} {:>15}",
+            "{:>8} {:>13.2}GB {:>14} {:>14} {:>15} {:>15}",
             n,
             PAPER_GB[i],
             fmt_bytes(ours as f64),
+            fmt_bytes(ours_q8 as f64),
             if n > 1 { fmt_bytes(paper_per) } else { "—".into() },
             if n > 1 { fmt_bytes(ours_per) } else { "—".into() },
         );
@@ -171,6 +175,18 @@ fn main() -> anyhow::Result<()> {
     );
     assert!(m.warp_total_bytes(100) < 6 * GIB);
     assert!(m.standard_total_bytes(100) > 24 * GIB);
+    // Quantized tier: strictly cheaper at every checkpoint past n=1 (the
+    // main agent's hot fp32 context is tier-exempt, so n=1 is equal).
+    assert_eq!(m.warp_total_bytes_q8(1), m.warp_total_bytes(1));
+    for &n in &CHECKPOINTS[1..] {
+        assert!(m.warp_total_bytes_q8(n as u64) < m.warp_total_bytes(n as u64));
+    }
+    let q8_per =
+        (m.warp_total_bytes_q8(100) - m.warp_total_bytes_q8(1)) as f64 / 99.0 / 1e6;
+    assert!(
+        q8_per < per_agent,
+        "q8 per-agent {q8_per} MB should undercut fp16 {per_agent} MB"
+    );
     let meas_per_10 = (measured[1] - measured[0]) as f64 / 9.0;
     let meas_per_100 = (measured[3] - measured[0]) as f64 / 99.0;
     assert!(
@@ -179,9 +195,11 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "\nshape check: linear (~{} measured/agent), projected {:.1} MB/agent \
-         within paper's 10–13 MB band, 100 agents ≪ 24 GB  ✓",
+         within paper's 10–13 MB band ({:.1} MB/agent quantized), \
+         100 agents ≪ 24 GB  ✓",
         fmt_bytes(meas_per_100),
-        per_agent
+        per_agent,
+        q8_per
     );
     Ok(())
 }

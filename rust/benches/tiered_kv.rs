@@ -1,0 +1,285 @@
+//! Bench P7 — tiered KV memory: block-granular int8 quantization for warm
+//! (parked / registry) blocks + host-RAM offload for cold (parked-session)
+//! state.
+//!
+//! Drives the pool/cache layer directly (host-only — runs in the CI
+//! bench-smoke step) and *asserts* the tiered-store acceptance criteria:
+//!
+//! 1. with `quantize_parked` on, parked registry blocks cost
+//!    [`KvPool::q8_block_bytes`] instead of [`KvPool::block_bytes`] —
+//!    resident blocks per GB ≥ 3× the fp32 baseline;
+//! 2. at the `max_blocks` cap, a single-tier pool sacrifices its warm
+//!    prefix registry to LRU eviction and STILL sheds the next session,
+//!    while the tiered pool spills parked state to the host slab, keeps
+//!    the registry intact, and admits;
+//! 3. park→offload→resume round-trips a session's fp32 state losslessly:
+//!    the post-resume gather is bit-identical to the pre-park one, and the
+//!    swap gauges reconcile (`swap_out == swap_in + host_slab_bytes`).
+//!
+//! Emits `BENCH_tiered_kv.json` (threshold-checked by ci/check_bench.py
+//! and folded into the per-commit BENCH_summary.json).
+//!
+//! ```bash
+//! cargo bench --bench tiered_kv
+//! ```
+
+use warp_cortex::cortex::memory::fmt_bytes;
+use warp_cortex::model::{KvCache, KvPool, KvPoolConfig};
+use warp_cortex::runtime::ModelConfig;
+use warp_cortex::util::timer::bench_median;
+use warp_cortex::util::Json;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 192,
+        vocab_size: 260,
+        head_dim: 16,
+        rope_theta: 1e4,
+        param_count: 116_032,
+    }
+}
+
+const L: usize = 2; // layers of tiny_cfg
+const ROW: usize = 32; // KV * hd of tiny_cfg
+const BT: usize = 16; // block_tokens
+const PROMPT: usize = 32; // registered prompt (2 full blocks)
+const SESSION_ROWS: usize = 32; // per parked session (2 full blocks)
+const CAPACITY: usize = 256;
+const PARKED_PROMPTS: usize = 6;
+const SESSIONS: usize = 4;
+const CAP_BLOCKS: usize = (SESSIONS * SESSION_ROWS) / BT; // budget = exactly the sessions
+const SALT: u64 = 0x71E2; // bench's registry domain
+
+/// Deterministic prompt token ids, distinct per `seed`.
+fn prompt_tokens(seed: usize) -> Vec<i32> {
+    (0..PROMPT as i32)
+        .map(|i| (i * 37 + 11 + seed as i32 * 101) % 256)
+        .collect()
+}
+
+/// Deterministic `[L, n, KV, hd]` rows derived from the tokens (the
+/// content-addressing contract made literal).
+fn canon_rows(tokens: &[i32]) -> (Vec<f32>, Vec<f32>) {
+    let n = tokens.len();
+    let mut k = Vec::with_capacity(L * n * ROW);
+    let mut v = Vec::with_capacity(L * n * ROW);
+    for layer in 0..L {
+        for (pos, &tok) in tokens.iter().enumerate() {
+            for j in 0..ROW {
+                let x = (layer * 7919 + pos * 131 + j) as f32 * 1e-3 + tok as f32 * 1e-2;
+                k.push(x);
+                v.push(-x);
+            }
+        }
+    }
+    (k, v)
+}
+
+fn bit_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn pool_with(quantize: bool, max_blocks: usize, slab: usize) -> std::sync::Arc<KvPool> {
+    KvPool::new(
+        &tiny_cfg(),
+        KvPoolConfig {
+            block_tokens: BT,
+            max_blocks,
+            quantize_parked: quantize,
+            host_slab_blocks: slab,
+            ..KvPoolConfig::default()
+        },
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("═══ P7: tiered KV memory (warm int8 + cold host slab) ═══\n");
+
+    // ── A: blocks per GB — quantized parked registry vs fp32 ───────────
+    // Register PARKED_PROMPTS distinct prompts and park them (drop the
+    // writing caches): with quantization on, each parked block's resident
+    // cost drops from block_bytes to q8_block_bytes.
+    let quant = pool_with(true, 0, 0);
+    let fp32 = pool_with(false, 0, 0);
+    for p in [&quant, &fp32] {
+        for seed in 0..PARKED_PROMPTS {
+            let tokens = prompt_tokens(seed);
+            let (k, v) = canon_rows(&tokens);
+            let mut c = p.new_cache(CAPACITY);
+            c.replace_rows_keyed(PROMPT, SALT, &tokens, &k, &v)?;
+            drop(c); // park: refs → 0, entry stays registered
+        }
+    }
+    let (qs, fs) = (quant.stats(), fp32.stats());
+    let parked_blocks = PARKED_PROMPTS * (PROMPT / BT);
+    assert_eq!(qs.blocks_live, parked_blocks);
+    assert_eq!(fs.blocks_live, parked_blocks);
+    assert_eq!(qs.quantized_blocks, parked_blocks, "every parked block demotes");
+    // Same parked population, fewer resident bytes ⇒ more blocks per GB.
+    let ratio = fs.live_bytes() as f64 / qs.live_bytes() as f64;
+    println!(
+        "warm tier: {parked_blocks} parked blocks resident at {} (int8) vs {} (fp32) \
+         — {ratio:.2}x blocks/GB, {} saved",
+        fmt_bytes(qs.live_bytes() as f64),
+        fmt_bytes(fs.live_bytes() as f64),
+        fmt_bytes(qs.quant_saved_bytes as f64)
+    );
+    assert!(ratio >= 3.0, "quantized tier must fit ≥3x blocks/GB, got {ratio:.2}");
+    assert_eq!(
+        qs.quant_saved_bytes,
+        parked_blocks as u64 * (quant.block_bytes() - quant.q8_block_bytes())
+    );
+    // Parked reads stay correct: a later agent adopts the quantized prefix
+    // and reconstructs each row within the per-row quantization bound.
+    let tokens = prompt_tokens(0);
+    let (k_src, _) = canon_rows(&tokens);
+    let hashes = quant.prefix_hashes(SALT, &tokens);
+    let mut reader = quant.new_cache(CAPACITY);
+    assert_eq!(reader.attach_shared_prefix(&hashes, &tokens)?, PROMPT);
+    let (k_got, _) = reader.prefix_upload(PROMPT);
+    for (pos, (orig, got)) in k_src.chunks(ROW).zip(k_got.chunks(ROW)).enumerate() {
+        let bound = orig.iter().fold(0f32, |m, x| m.max(x.abs())) / 127.0 + 1e-6;
+        for (o, g) in orig.iter().zip(got) {
+            assert!((o - g).abs() <= bound, "row {pos}: |{o} - {g}| > {bound}");
+        }
+    }
+    drop(reader);
+
+    // ── B: admission at the max_blocks cap ──────────────────────────────
+    // Workload: one registered prompt (the warm registry), then SESSIONS
+    // sessions each filling SESSION_ROWS private rows — exactly the byte
+    // budget.  The single-tier pool can only evict the registry to make
+    // room, and still sheds the next session; the tiered pool spills
+    // parked state to host RAM, keeps the registry, and admits.
+    let reg_tokens = prompt_tokens(99);
+    let (reg_k, reg_v) = canon_rows(&reg_tokens);
+    let fill_sessions = |p: &std::sync::Arc<KvPool>| -> anyhow::Result<Vec<KvCache>> {
+        let mut reg = p.new_cache(CAPACITY);
+        reg.replace_rows_keyed(PROMPT, SALT, &reg_tokens, &reg_k, &reg_v)?;
+        drop(reg); // park the registry entry
+        let mut sessions = Vec::with_capacity(SESSIONS);
+        for s in 0..SESSIONS {
+            let tokens = prompt_tokens(10 + s);
+            let (k, v) = canon_rows(&tokens);
+            let mut c = p.new_cache(CAPACITY);
+            c.replace_rows(SESSION_ROWS, &k, &v)?; // private, unregistered
+            sessions.push(c);
+        }
+        Ok(sessions)
+    };
+
+    // Single tier: sessions fit only by evicting the parked registry.
+    let single = pool_with(false, CAP_BLOCKS, 0);
+    let mut single_sessions = fill_sessions(&single)?;
+    let ss = single.stats();
+    assert!(ss.prefix_evictions > 0, "single tier must sacrifice the registry");
+    let single_sheds = !single.can_admit(1);
+    assert!(single_sheds, "budget is exactly the held sessions — must shed");
+    assert!(
+        single.new_cache(CAPACITY).append_row(&[0.5; L * ROW], &[0.5; L * ROW]).is_err(),
+        "single-tier growth past the cap must fail"
+    );
+    let reg_hashes = single.prefix_hashes(SALT, &reg_tokens);
+    let mut probe = single.new_cache(CAPACITY);
+    assert_eq!(
+        probe.attach_shared_prefix(&reg_hashes, &reg_tokens)?,
+        0,
+        "the evicted registry covers nothing"
+    );
+    drop(probe);
+
+    // Tiered: same workload + quantized parking + a host slab.
+    let tiered = pool_with(true, CAP_BLOCKS, 16);
+    let mut sessions = fill_sessions(&tiered)?;
+    let ts = tiered.stats();
+    assert_eq!(ts.prefix_evictions, 0, "pressure offloads, never evicts, here");
+    assert!(ts.offloaded_blocks > 0, "the parked registry spilled to the slab");
+    // Park every session (a quiet client): private fp32 blocks move to the
+    // host slab verbatim and their budget cost drops to zero.
+    let baseline = sessions[0].device_gather(SESSION_ROWS)?;
+    let mut parked_blocks_cold = 0usize;
+    for s in sessions.iter_mut() {
+        parked_blocks_cold += s.park_to_host()?;
+    }
+    assert_eq!(parked_blocks_cold, SESSIONS * SESSION_ROWS / BT);
+    let admits = tiered.can_admit(SESSION_ROWS / BT);
+    assert!(admits, "tiered pool must admit after parking");
+    let adm_tokens = prompt_tokens(50);
+    let (adm_k, adm_v) = canon_rows(&adm_tokens);
+    let mut admitted = tiered.new_cache(CAPACITY);
+    admitted.replace_rows(SESSION_ROWS, &adm_k, &adm_v)?;
+    // Resume the first parked session: page-in is lossless, so the gather
+    // is bit-identical to the pre-park baseline.
+    let resumed = sessions[0].resume_from_host()?;
+    assert_eq!(resumed, SESSION_ROWS / BT);
+    let after = sessions[0].device_gather(SESSION_ROWS)?;
+    let roundtrip_ok = bit_eq(&baseline.0, &after.0) && bit_eq(&baseline.1, &after.1);
+    assert!(roundtrip_ok, "park→offload→resume must be bit-identical");
+    // And the warm registry survived the pressure (paged back on hit).
+    let mut probe = tiered.new_cache(CAPACITY);
+    assert_eq!(
+        probe.attach_shared_prefix(&tiered.prefix_hashes(SALT, &reg_tokens), &reg_tokens)?,
+        PROMPT,
+        "tiered pool keeps the registry through cap pressure"
+    );
+    drop(probe);
+    let ts = tiered.stats();
+    assert_eq!(
+        ts.swap_out_bytes,
+        ts.swap_in_bytes + ts.swap_dropped_bytes + ts.host_slab_bytes,
+        "swap conservation"
+    );
+    tiered.check_invariants().map_err(anyhow::Error::msg)?;
+    println!(
+        "cold tier: single-tier pool shed at the {CAP_BLOCKS}-block cap (registry \
+         evicted); tiered pool parked {parked_blocks_cold} blocks to host \
+         ({} out / {} in), admitted a new session, resumed bit-identical",
+        fmt_bytes(ts.swap_out_bytes as f64),
+        fmt_bytes(ts.swap_in_bytes as f64)
+    );
+
+    // ── timing: one park→resume cycle on a 2-block session ─────────────
+    let t_cycle = bench_median(3, 50, || {
+        let n = sessions[1].park_to_host().expect("park");
+        std::hint::black_box(n);
+        let n = sessions[1].resume_from_host().expect("resume");
+        std::hint::black_box(n);
+    });
+    println!(
+        "park+resume cycle ({} blocks): {:.1} µs median",
+        SESSION_ROWS / BT,
+        t_cycle.median_ns / 1e3
+    );
+    drop(admitted);
+    drop(single_sessions.drain(..));
+    drop(sessions.drain(..));
+
+    // ── machine-readable report ─────────────────────────────────────────
+    let ts = tiered.stats();
+    let report = Json::obj()
+        .with("bench", "tiered_kv")
+        .with("block_tokens", BT)
+        .with("block_bytes", quant.block_bytes())
+        .with("q8_block_bytes", quant.q8_block_bytes())
+        .with("parked_blocks", parked_blocks)
+        .with("blocks_per_gb_ratio", ratio)
+        .with("quant_saved_bytes", qs.quant_saved_bytes)
+        // 0/1 gauges (not JSON booleans — the threshold gate compares
+        // numbers only)
+        .with("single_tier_sheds", u64::from(single_sheds))
+        .with("admission_after_offload", u64::from(admits))
+        .with("roundtrip_bitident", u64::from(roundtrip_ok))
+        .with("swap_out_bytes", ts.swap_out_bytes)
+        .with("swap_in_bytes", ts.swap_in_bytes)
+        .with("resume_page_ins", ts.resume_page_ins)
+        .with("park_resume_cycle_us", t_cycle.median_ns / 1e3);
+    std::fs::write("BENCH_tiered_kv.json", report.to_string())?;
+    println!("wrote BENCH_tiered_kv.json");
+    println!("\nshape check: 3x warm density + lossless cold parking + admission  ✓");
+    Ok(())
+}

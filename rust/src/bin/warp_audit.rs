@@ -17,6 +17,12 @@
 //! - `panic-in-serve` — no `unwrap` / `expect` / `panic!` in `serve/`
 //!   request handling: a request must fail as an error response, never by
 //!   unwinding a worker.
+//! - `float-eq` — no `==` / `!=` against a float expression (float
+//!   literal or `as f32`/`as f64` cast operand) in `model/` and `cortex/`
+//!   production code.  The tiered KV store round-trips values through
+//!   int8 and mixed host/device paths; exact equality on computed floats
+//!   is either a latent tolerance bug or, where bit-identity IS the
+//!   contract, should compare `to_bits()` explicitly.
 //!
 //! `#[cfg(test)]` / `#[test]` items are skipped (tests may panic freely);
 //! a deliberate exception is written as `// audit-allow: <rule>` on the
@@ -59,6 +65,7 @@ enum Rule {
     NanSort,
     RawMutex,
     PanicInServe,
+    FloatEq,
 }
 
 impl Rule {
@@ -68,6 +75,7 @@ impl Rule {
             Rule::NanSort => "nan-sort",
             Rule::RawMutex => "raw-mutex",
             Rule::PanicInServe => "panic-in-serve",
+            Rule::FloatEq => "float-eq",
         }
     }
 
@@ -77,6 +85,7 @@ impl Rule {
             "nan-sort" => Some(Rule::NanSort),
             "raw-mutex" => Some(Rule::RawMutex),
             "panic-in-serve" => Some(Rule::PanicInServe),
+            "float-eq" => Some(Rule::FloatEq),
             _ => None,
         }
     }
@@ -321,6 +330,70 @@ impl TestSkip {
     }
 }
 
+/// True when `s` contains a float-typed expression shape: a float literal
+/// (`1.0`, `2.5e-3`, `1f32`) or an `as f32` / `as f64` cast.  Operates on
+/// stripped code, so strings and comments never match.
+fn has_float_expr(s: &str) -> bool {
+    if s.contains("as f32") || s.contains("as f64") {
+        return true;
+    }
+    let c: Vec<char> = s.chars().collect();
+    for i in 0..c.len() {
+        if !c[i].is_ascii_digit() {
+            continue;
+        }
+        // Must start a numeric token (not `x2`, `0x1E`, tuple index `.0`).
+        if i > 0 && (c[i - 1].is_alphanumeric() || c[i - 1] == '_' || c[i - 1] == '.') {
+            continue;
+        }
+        let mut j = i;
+        while j < c.len() && (c[j].is_ascii_digit() || c[j] == '_') {
+            j += 1;
+        }
+        match c.get(j) {
+            Some('.') if c.get(j + 1).is_some_and(|d| d.is_ascii_digit()) => return true,
+            Some('e') | Some('E') => {
+                let mut k = j + 1;
+                if matches!(c.get(k), Some('+') | Some('-')) {
+                    k += 1;
+                }
+                if c.get(k).is_some_and(|d| d.is_ascii_digit()) {
+                    return true;
+                }
+            }
+            Some('f') => {
+                let suffix = c.get(j + 1..j + 3);
+                if (suffix == Some(&['3', '2']) || suffix == Some(&['6', '4']))
+                    && c.get(j + 3).map_or(true, |ch| !(ch.is_alphanumeric() || *ch == '_'))
+                {
+                    return true;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Does the `==`/`!=` at byte `p` compare a float expression?  Operands
+/// are bounded by the nearest expression delimiter on each side, so a
+/// float literal elsewhere on the line cannot condemn an integer compare.
+fn float_eq_at(line: &str, p: usize) -> bool {
+    let left_all = &line[..p];
+    let right_all = &line[p + 2..];
+    let lb = ["(", "{", "[", ",", ";", "&&", "||"]
+        .iter()
+        .filter_map(|d| left_all.rfind(d).map(|q| q + d.len()))
+        .max()
+        .unwrap_or(0);
+    let rb = [")", "}", "]", ",", ";", "&&", "||", "{"]
+        .iter()
+        .filter_map(|d| right_all.find(d))
+        .min()
+        .unwrap_or(right_all.len());
+    has_float_expr(&left_all[lb..]) || has_float_expr(&right_all[..rb])
+}
+
 /// Run every rule over one file's source.  `module` is the path relative
 /// to `src/` (e.g. `util/sync.rs`), which scopes the per-module rules.
 fn scan_source(module: &str, src: &str) -> Vec<Finding> {
@@ -330,6 +403,7 @@ fn scan_source(module: &str, src: &str) -> Vec<Finding> {
     let decode_path = DECODE_PATH_MODULES.contains(&module);
     let in_serve = module.starts_with("serve/");
     let in_sync = module == "util/sync.rs";
+    let float_scope = module.starts_with("model/") || module.starts_with("cortex/");
     for (idx, line) in stripped.code.iter().enumerate() {
         if skip.observe(line) {
             continue;
@@ -398,6 +472,35 @@ fn scan_source(module: &str, src: &str) -> Vec<Finding> {
                         "panic path in request handling: return an error \
                          response instead",
                     );
+                    break;
+                }
+            }
+        }
+        if float_scope {
+            for op in ["==", "!="] {
+                let mut start = 0;
+                let mut fired = false;
+                while let Some(rel) = line[start..].find(op) {
+                    let abs = start + rel;
+                    // Not part of `<=`, `>=`, `=>`, compound assignment…
+                    let before = line[..abs].chars().next_back();
+                    let after = line[abs + 2..].chars().next();
+                    let neighbor = matches!(
+                        before,
+                        Some('<' | '>' | '=' | '!' | '+' | '-' | '*' | '/' | '%' | '&' | '|' | '^')
+                    ) || after == Some('=');
+                    if !neighbor && float_eq_at(line, abs) {
+                        report(
+                            Rule::FloatEq,
+                            "exact float equality: compare within a bound, \
+                             or on to_bits() where bit-identity is the contract",
+                        );
+                        fired = true;
+                        break;
+                    }
+                    start = abs + 2;
+                }
+                if fired {
                     break;
                 }
             }
@@ -589,6 +692,50 @@ mod tests {
         let src = "fn handle() {\n    let v = parse().unwrap_or(0);\n    \
                    let w = lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n}\n";
         assert!(rules("serve/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_eq_fires_on_literal_and_cast_comparisons() {
+        let src = "fn f(x: f32) -> bool {\n    x == 1.0\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(2, Rule::FloatEq)]);
+        let src = "fn f(x: f64, n: usize) -> bool {\n    x != n as f64\n}\n";
+        assert_eq!(rules("cortex/capacity.rs", src), vec![(2, Rule::FloatEq)]);
+        let src = "fn f(x: f32) -> bool {\n    x == 2.5e-3\n}\n";
+        assert_eq!(rules("model/engine.rs", src), vec![(2, Rule::FloatEq)]);
+        let src = "fn f(x: f32) -> bool {\n    1f32 != x\n}\n";
+        assert_eq!(rules("cortex/step.rs", src), vec![(2, Rule::FloatEq)]);
+    }
+
+    #[test]
+    fn float_eq_ignores_integer_compares_and_other_scopes() {
+        // integer comparisons, float-free
+        let src = "fn f(n: usize) -> bool {\n    n == 0\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        // ordered float comparisons are fine — only exact equality fires
+        let src = "fn f(x: f32) -> bool {\n    x <= 1.0 && x >= -1.0\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        // a float elsewhere on the line does not condemn an integer compare
+        let src = "fn f(n: usize) {\n    if n == 0 { g(1.0) }\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        let src = "fn f(n: usize, e: f32) -> bool {\n    n == 0 && e < 1e-6\n}\n";
+        assert!(rules("cortex/step.rs", src).is_empty());
+        // hex literals and tuple indexing are not float literals
+        let src = "fn f(n: u32, t: (u32, u32)) -> bool {\n    n == 0x1E3 && t.0 != 2\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        // outside model/ and cortex/, exact float equality is allowed
+        let src = "fn f(x: f32) -> bool {\n    x == 1.0\n}\n";
+        assert!(rules("util/timer.rs", src).is_empty());
+        assert!(rules("serve/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_eq_suppresses_under_audit_allow_and_in_tests() {
+        let src = "fn f(x: f32) -> bool {\n    x == 0.0 // audit-allow: float-eq\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        let src = "#[test]\nfn t() {\n    assert!(x == 1.0);\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        let src = "#[cfg(test)]\nmod tests {\n    fn close(x: f32) -> bool {\n        x == 1.0\n    }\n}\n";
+        assert!(rules("cortex/capacity.rs", src).is_empty());
     }
 
     #[test]

@@ -36,7 +36,13 @@
 //! the pre-PR-4 arithmetic silently produced `inf`/`NaN` utilization
 //! curves instead.
 //!
-//! Memory: the Table-1/Table-2 arithmetic from [`super::memory`].
+//! Memory: the Table-1/Table-2 arithmetic from [`super::memory`].  Since
+//! the tiered KV store the memory axis comes in two flavours: the fp32
+//! hot-tier charge ([`CapacityModel::evaluate`]) and the warm int8 tier
+//! ([`CapacityModel::evaluate_q8`]), where parked side-agent context is
+//! block-granularly quantized (int8 values + one fp32 scale per
+//! (layer, K/V) row — ~4× rows per GB).  Compute is tier-blind: gathers
+//! dequantize transparently, so only the memory ceiling moves.
 
 use super::memory::MemoryModel;
 
@@ -410,6 +416,75 @@ impl CapacityModel {
             .collect()
     }
 
+    // ── Tiered-KV memory axis (warm int8 parked tier) ──────────────────
+    //
+    // The pool's quantized tier stores parked / registered-prefix blocks
+    // as int8 with per-row fp32 scales, so side-agent context — which is
+    // parked almost all the time under bursty duty cycles — charges at
+    // `kv_row_bytes_q8` instead of `kv_row_bytes`.  These entry points
+    // re-run the Table-1/2 arithmetic with that rate: same compute model
+    // (dequantize is transparent in the gather), smaller memory term.
+
+    /// Largest N that fits memory with parked side-agent context in the
+    /// warm int8 tier — the "quantized" column of Table 1.
+    pub fn max_agents_memory_q8(&self) -> u64 {
+        self.mem.max_agents_warp_q8()
+    }
+
+    /// [`CapacityModel::evaluate`] with side-agent context charged at the
+    /// quantized tier's rate.  Utilization is identical (the tier changes
+    /// bytes, not ops); only the memory classification moves.
+    pub fn evaluate_q8(&self, agents: u64) -> Result<CapacityPoint, CapacityError> {
+        let mem_bytes = self.mem.warp_total_bytes_q8(agents);
+        let utilization = self.utilization(agents)?;
+        let over_mem = mem_bytes > self.mem.vram_total - self.mem.vram_reserved;
+        let bottleneck = match (over_mem, utilization > 1.0) {
+            (false, false) => Bottleneck::Feasible,
+            (true, false) => Bottleneck::Memory,
+            (false, true) => Bottleneck::Compute,
+            (true, true) => {
+                if self.max_agents_memory_q8() < self.max_agents_compute()? {
+                    Bottleneck::Memory
+                } else {
+                    Bottleneck::Compute
+                }
+            }
+        };
+        Ok(CapacityPoint {
+            agents,
+            mem_bytes,
+            utilization,
+            bottleneck,
+        })
+    }
+
+    /// The population where scaling stops under the quantized tier, and
+    /// why.  With compute held fixed, the tier can only move a Memory
+    /// limit outward — a Compute limit stays put.
+    pub fn limit_q8(&self) -> Result<(u64, Bottleneck), CapacityError> {
+        let m = self.max_agents_memory_q8();
+        let c = self.max_agents_compute()?;
+        Ok(if c < m {
+            (c, Bottleneck::Compute)
+        } else {
+            (m, Bottleneck::Memory)
+        })
+    }
+
+    /// Log-spaced scaling curve up to `max_n` with the quantized memory
+    /// axis — plotted beside [`CapacityModel::curve`], the pair is the
+    /// Table-2 fp32-vs-int8 comparison.
+    pub fn curve_q8(&self, max_n: u64) -> Result<Vec<CapacityPoint>, CapacityError> {
+        self.validate()?;
+        let mut points = Vec::new();
+        let mut n = 1u64;
+        while n <= max_n {
+            points.push(self.evaluate_q8(n)?);
+            n = if n < 10 { n * 2 } else { n * 10 / 3 };
+        }
+        Ok(points)
+    }
+
     /// The population where scaling stops, and why.
     pub fn limit(&self) -> Result<(u64, Bottleneck), CapacityError> {
         let m = self.max_agents_memory();
@@ -444,6 +519,8 @@ mod tests {
             mem: MemoryModel {
                 config_name: "test".into(),
                 kv_row_bytes: 12288,
+                // int8 values (half of the 2-byte fp16 rows) + per-row scales
+                kv_row_bytes_q8: 6336,
                 weight_bytes: GIB,
                 full_ctx: 32768,
                 synapse_k: 64,
@@ -656,6 +733,33 @@ mod tests {
         }
         assert_eq!(curve.first().unwrap().bottleneck, Bottleneck::Feasible);
         assert_ne!(curve.last().unwrap().bottleneck, Bottleneck::Feasible);
+    }
+
+    #[test]
+    fn quantized_tier_extends_the_memory_ceiling() {
+        // fast device → memory binds, so the tier is the lever that matters
+        let fast = model(1e-7);
+        assert!(fast.max_agents_memory_q8() > fast.max_agents_memory());
+        let (n32, why32) = fast.limit().unwrap();
+        let (nq8, why8) = fast.limit_q8().unwrap();
+        assert_eq!(why32, Bottleneck::Memory);
+        assert_eq!(why8, Bottleneck::Memory);
+        assert!(nq8 > n32, "quantized tier must admit more agents: {nq8} vs {n32}");
+        // Just past the fp32 ceiling the quantized tier is still feasible.
+        let past = fast.evaluate(n32 + 1).unwrap();
+        assert_eq!(past.bottleneck, Bottleneck::Memory);
+        let past_q8 = fast.evaluate_q8(n32 + 1).unwrap();
+        assert_eq!(past_q8.bottleneck, Bottleneck::Feasible);
+        // The tier changes memory charges only — compute is tier-blind.
+        assert_eq!(past_q8.utilization, past.utilization);
+        assert!(past_q8.mem_bytes < past.mem_bytes);
+        // The q8 curve is classified by the same machinery.
+        let curve = fast.curve_q8(100_000).unwrap();
+        assert_eq!(curve.first().unwrap().bottleneck, Bottleneck::Feasible);
+        assert_ne!(curve.last().unwrap().bottleneck, Bottleneck::Feasible);
+        // A compute-bound model gains nothing from the tier.
+        let slow = model(4e-3);
+        assert_eq!(slow.limit_q8().unwrap(), slow.limit().unwrap());
     }
 
     #[test]

@@ -385,6 +385,12 @@ impl WarpCortex {
             );
         }
         pool.set_limits(cfg.kv_pool.max_blocks, cfg.kv_pool.retain_free_blocks);
+        // Tiering knobs ride the same config: parked registry entries
+        // demote to int8 (`quantize_parked`) and parked sessions /
+        // refcount-0 entries may spill to the cold host slab
+        // (`host_slab_blocks`), so admission sheds only when BOTH tiers
+        // are exhausted.
+        pool.set_tiering(cfg.kv_pool.quantize_parked, cfg.kv_pool.host_slab_blocks);
         let prism = Prism::with_pool(engine.clone(), tracker.clone(), pool.clone());
         let synapse = Synapse::new(tracker.clone());
         let gate = Arc::new(Gate::new(cfg.gate_theta.unwrap_or(engine.gate_theta)));
@@ -747,6 +753,26 @@ impl<'c> CortexSession<'c> {
 
     pub fn tokens_generated(&self) -> usize {
         self.generated
+    }
+
+    /// Park this session's private context blocks to the pool's cold host
+    /// slab (capacity: `CortexConfig::kv_pool.host_slab_blocks`): a
+    /// client that has gone quiet stops costing device bytes while its
+    /// admission slot and cache stay alive.  Registry-shared prefix
+    /// blocks are untouched — they demote through the pool's own
+    /// offload-under-pressure path.  Returns the blocks parked.
+    pub fn park_to_host(&mut self) -> Result<usize> {
+        self.ticket.kv.park_to_host()
+    }
+
+    /// Page this session's parked blocks back to the hot tier — the
+    /// resume half of the park/resume round trip, bit-identical by the
+    /// offload tier's contract (tests in `model/kv.rs` prove it).  The
+    /// next decode step's cache write would also page in transparently;
+    /// the explicit call front-loads the transfer so the resumed stream's
+    /// first token doesn't pay it.  Returns the blocks paged in.
+    pub fn resume_from_host(&mut self) -> Result<usize> {
+        self.ticket.kv.resume_from_host()
     }
 
     /// Complete a chunked admission: teacher-force the remaining prefill

@@ -43,9 +43,16 @@ pub enum MemKind {
     /// caches reference it — `MainKv`/`SideKv` count only each cache's
     /// *private* blocks, so Table 2 never multiply-counts a shared prefix.
     SharedKv = 6,
+    /// KV payloads offloaded to the pool's cold host slab (parked sessions
+    /// and cold registry entries paged out of device memory).  Host RAM,
+    /// not VRAM — tracked so every physical byte of KV state is counted
+    /// exactly once in its tier: a block's bytes move between
+    /// `MainKv`/`SideKv`/`SharedKv`/`DeviceKv` and `HostKv` as it pages
+    /// out and back in, never appearing in both.
+    HostKv = 7,
 }
 
-pub const MEM_KINDS: [MemKind; 7] = [
+pub const MEM_KINDS: [MemKind; 8] = [
     MemKind::Weights,
     MemKind::MainKv,
     MemKind::SideKv,
@@ -53,6 +60,7 @@ pub const MEM_KINDS: [MemKind; 7] = [
     MemKind::Overhead,
     MemKind::DeviceKv,
     MemKind::SharedKv,
+    MemKind::HostKv,
 ];
 
 impl MemKind {
@@ -65,6 +73,7 @@ impl MemKind {
             MemKind::Overhead => "overhead",
             MemKind::DeviceKv => "device_kv",
             MemKind::SharedKv => "shared_kv",
+            MemKind::HostKv => "host_kv",
         }
     }
 }
@@ -72,8 +81,8 @@ impl MemKind {
 /// Live byte accounting, by category.
 #[derive(Debug, Default)]
 pub struct MemoryTracker {
-    live: [AtomicI64; 7],
-    peak: [AtomicI64; 7],
+    live: [AtomicI64; 8],
+    peak: [AtomicI64; 8],
     allocs: AtomicU64,
     frees: AtomicU64,
 }
@@ -109,8 +118,8 @@ impl MemoryTracker {
     }
 
     pub fn snapshot(&self) -> MemSnapshot {
-        let mut per = [0i64; 7];
-        let mut peak = [0i64; 7];
+        let mut per = [0i64; 8];
+        let mut peak = [0i64; 8];
         for (i, _) in MEM_KINDS.iter().enumerate() {
             per[i] = self.live[i].load(Ordering::Relaxed);
             peak[i] = self.peak[i].load(Ordering::Relaxed);
@@ -156,8 +165,8 @@ impl Drop for MemGuard {
 
 #[derive(Debug, Clone)]
 pub struct MemSnapshot {
-    pub per_kind: [i64; 7],
-    pub peak_per_kind: [i64; 7],
+    pub per_kind: [i64; 8],
+    pub peak_per_kind: [i64; 8],
     pub allocs: u64,
     pub frees: u64,
 }
@@ -193,6 +202,10 @@ pub struct MemoryModel {
     pub config_name: String,
     /// KV bytes for one cached row (all layers, K+V).
     pub kv_row_bytes: u64,
+    /// KV bytes for one cached row in the warm int8 tier: int8 values plus
+    /// one fp32 scale per (layer, K/V) row — the `KvPool` quantized-block
+    /// layout projected to paper scale.
+    pub kv_row_bytes_q8: u64,
     pub weight_bytes: u64,
     /// Full context length L of the standard architecture.
     pub full_ctx: usize,
@@ -221,6 +234,7 @@ impl MemoryModel {
         MemoryModel {
             config_name: cfg.name.clone(),
             kv_row_bytes: cfg.kv_row_bytes(2), // fp16 cache
+            kv_row_bytes_q8: cfg.kv_row_bytes(1) + cfg.n_layers as u64 * 8,
             // fp16 weights + embeddings ≈ paper's 1.2 GB figure
             weight_bytes: cfg.weight_bytes(2) + 200 * MIB,
             full_ctx: 32_768,
@@ -237,6 +251,7 @@ impl MemoryModel {
         MemoryModel {
             config_name: cfg.name.clone(),
             kv_row_bytes: cfg.kv_row_bytes(4),
+            kv_row_bytes_q8: cfg.kv_row_bytes(1) + cfg.n_layers as u64 * 8,
             weight_bytes: cfg.weight_bytes(4),
             full_ctx: main_ctx,
             synapse_k,
@@ -274,6 +289,31 @@ impl MemoryModel {
     pub fn warp_agent_resident_bytes(&self, block_tokens: usize) -> u64 {
         self.paged_context_bytes(self.synapse_k + self.side_gen, block_tokens)
             + self.per_agent_overhead
+    }
+
+    /// Warp-Cortex side agent with its context in the warm int8 tier
+    /// (parked / registered-prefix state quantized block-granularly).
+    pub fn warp_agent_bytes_q8(&self) -> u64 {
+        self.kv_row_bytes_q8 * (self.synapse_k + self.side_gen) as u64 + self.per_agent_overhead
+    }
+
+    /// Max agents under Warp-Cortex with the quantized tier enabled for
+    /// side-agent context (the tiered-KV column of Table 1).
+    pub fn max_agents_warp_q8(&self) -> u64 {
+        let rest = self.budget().saturating_sub(self.weight_bytes + self.full_ctx_bytes());
+        1 + rest / self.warp_agent_bytes_q8().max(1)
+    }
+
+    /// Total VRAM with `n` Warp-Cortex agents when side-agent context sits
+    /// in the quantized tier.
+    pub fn warp_total_bytes_q8(&self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        self.weight_bytes
+            + self.full_ctx_bytes()
+            + self.per_agent_overhead
+            + (n - 1) * self.warp_agent_bytes_q8()
     }
 
     /// Synapse-only context bytes (the paper's "0.01 GB" row).
@@ -415,6 +455,17 @@ mod tests {
         assert!(m.paged_context_bytes(96, 16) * 100 < m.full_ctx_bytes());
         // and the paged side-agent figure never exceeds the eager one
         assert!(m.warp_agent_resident_bytes(16) <= m.warp_agent_bytes() + m.kv_row_bytes * 16);
+    }
+
+    #[test]
+    fn quantized_tier_multiplies_capacity() {
+        let m = MemoryModel::qwen05b_on_4090(&qwen_cfg());
+        // an int8 row (values + per-layer scales) is about half the fp16 row
+        assert!(m.kv_row_bytes_q8 < m.kv_row_bytes);
+        assert!(m.kv_row_bytes_q8 * 2 < m.kv_row_bytes + m.kv_row_bytes / 4);
+        // and capacity strictly improves even with overhead dominating
+        assert!(m.max_agents_warp_q8() > m.max_agents_warp());
+        assert!(m.warp_total_bytes_q8(100) < m.warp_total_bytes(100));
     }
 
     #[test]

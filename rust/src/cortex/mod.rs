@@ -84,6 +84,35 @@
 //! registry's hit/miss/evict/CoW gauges surface on
 //! [`crate::model::PoolStats`] and the `/stats` endpoint.
 //!
+//! # Memory tiers
+//!
+//! KV blocks occupy one of three tiers, and every block's budget charge
+//! follows it:
+//!
+//! | tier | representation | who lives here | cost/block |
+//! |------|----------------|----------------|------------|
+//! | hot  | fp32, device-resident | active caches, attached shared prefixes | `block_bytes` |
+//! | warm | int8 + per-row fp32 scales ([`CortexConfig::kv_pool`] `quantize_parked`) | parked registry entries (refcount 0) | `q8_block_bytes` (~3.5× denser) |
+//! | cold | verbatim payload in the host slab (`host_slab_blocks`) | parked sessions ([`cortex::CortexSession::park_to_host`]), cap-pressured registry entries | 0 device bytes |
+//!
+//! Demotion: release-to-parked quantizes (lossy, bounded by max|x|/254
+//! per row); cap pressure and explicit parking spill to the host slab
+//! (lossless).  Promotion: gathers dequantize warm blocks transparently
+//! (host and device share one dequant expression, so decode over a
+//! mixed-tier table is deterministic), a write into a warm shared block
+//! promotes via copy-on-write to a private fp32 copy, and cold blocks
+//! page back in on registry hit, session resume, or write.  Admission
+//! ([`crate::model::KvPool::can_admit`]) counts parked entries as
+//! reclaimable headroom, so sessions shed only when the hot tier AND
+//! both parking tiers are exhausted; [`capacity`] projects the tier's
+//! Table-1/2 effect (`evaluate_q8`/`limit_q8`/`curve_q8`) and
+//! `benches/tiered_kv.rs` gates density, admission, and bit-identical
+//! park→resume in CI.  Accounting stays once-per-byte: warm parked
+//! registry bytes under `SharedKv` at their quantized size, cold
+//! payloads under `HostKv`, with the swap conservation law
+//! (`swap_out == swap_in + swap_dropped + host_slab_bytes`) re-proved by
+//! the invariant sanitizer.
+//!
 //! # Correctness tooling
 //!
 //! The fused-tick core is lock-based, so its correctness story is
@@ -124,13 +153,18 @@
 //! both, so every randomised schedule doubles as an invariant fuzz.
 //!
 //! **warp-audit.**  `cargo run --bin warp-audit -- rust/src` (a required
-//! CI job) lints the tree with four project-native rules:
+//! CI job) lints the tree with five project-native rules:
 //! `poison-cascade` (no `.lock().unwrap()` / `.lock().expect(...)`
 //! outside `util/sync.rs`), `nan-sort` (no `partial_cmp` in comparator
 //! position — use `total_cmp`), `raw-mutex` (no bare `std::sync::Mutex`
-//! in decode-path modules), and `panic-in-serve` (no `unwrap` / `expect`
-//! / `panic!` in `serve/`).  Test code is exempt; a deliberate site opts
-//! out with `// audit-allow: <rule>` on the same or preceding line.
+//! in decode-path modules), `panic-in-serve` (no `unwrap` / `expect`
+//! / `panic!` in `serve/`), and `float-eq` (no `==` / `!=` against a
+//! float expression in `model/` / `cortex/` production code — the warm
+//! tier's quantize→dequantize round-trip makes exact float equality a
+//! tolerance bug; compare within a bound, or on `to_bits()` where
+//! bit-identity is the contract).  Test code is exempt; a deliberate
+//! site opts out with `// audit-allow: <rule>` on the same or preceding
+//! line.
 //!
 //! **Cost model.**  Rank tracking, per-op pool validation and the
 //! tick-boundary checks all sit behind `debug_assertions`: debug test

@@ -129,6 +129,11 @@ impl Prism {
         // Main/SideKv guards count only private blocks, so Table 2 never
         // multiply-counts a shared prompt prefix or landmark seed.
         pool.track_shared(tracker.alloc(MemKind::SharedKv, 0));
+        // And one for the cold host slab: parked payloads leave their
+        // device-tier charges (DeviceKv + Main/Side/SharedKv) and appear
+        // here instead — host RAM, not VRAM — so every physical byte is
+        // counted exactly once, in the tier it occupies.
+        pool.track_host(tracker.alloc(MemKind::HostKv, 0));
         Arc::new(Prism {
             engine,
             tracker,

@@ -93,8 +93,12 @@ pub struct StepSeams {
     /// Consulted before each side-task admission.
     pub admit: AdmitGate,
     /// Consulted before each *session* admission (a main stream's worst
-    /// case prefill blocks must still fit).
-    pub session_admit: AdmitGate,
+    /// case prefill blocks must still fit).  The production gate is
+    /// [`crate::model::KvPool::can_admit`], which counts *tiered*
+    /// headroom: free blocks, plus parked registry entries that would
+    /// re-quantize or spill to the host slab under pressure — a session
+    /// is shed only when the hot tier AND both parking tiers are
+    /// exhausted.
     /// Optional tick-boundary sanitizer, run after each tick's sweep in
     /// debug builds only (release ticks pay nothing).  A violation
     /// panics the loop — in debug, corrupted bookkeeping is a bug to

@@ -56,13 +56,31 @@
 //! (`GET /metrics` renders the same snapshot as Prometheus text
 //! exposition via [`serve::metrics_text`]).
 //!
+//! KV memory is **tiered** ([`model::pool`]): hot blocks are fp32 and
+//! device-resident; parked registry entries (refcount 0) demote to a
+//! *warm* int8 tier — block-granular quantization with one fp32 scale per
+//! (layer, position) row, ~3.5× blocks per GB, dequantized transparently
+//! on gather and promoted back to fp32 by copy-on-write on divergence —
+//! and parked sessions plus cap-pressured registry entries spill to a
+//! *cold* host-RAM slab ([`cortex::CortexSession::park_to_host`] /
+//! `resume_from_host`; lossless, zero device-budget bytes until paged
+//! back in).  Admission ([`model::KvPool::can_admit`]) counts offloadable
+//! headroom across both parking tiers, so a session is shed only when
+//! the hot tier AND the slab are exhausted — `benches/tiered_kv.rs`
+//! asserts the density, the admission win, and that park→offload→resume
+//! decode is bit-identical.
+//!
 //! Memory accounting follows block ownership: each agent's `MainKv`/
 //! `SideKv` charge counts only its *private* blocks, registry-shared
-//! blocks are charged exactly once under `SharedKv`, and the device slab
-//! under `DeviceKv` — so Table 2 never multiply-counts a shared prefix.
-//! The pool's `/stats` gauges expose the sharing machinery live:
-//! `shared_blocks`/`shared_bytes`, `prefix_hits`/`prefix_misses`/
-//! `prefix_evictions` and `cow_copies`.
+//! blocks are charged exactly once under `SharedKv`, the device slab
+//! under `DeviceKv`, and host-slab payloads under `HostKv` — every
+//! physical byte exactly once, in the tier it occupies — so Table 2
+//! never multiply-counts a shared prefix.  The pool's `/stats` gauges
+//! expose the sharing and tiering machinery live: `shared_blocks`/
+//! `shared_bytes`, `prefix_hits`/`prefix_misses`/`prefix_evictions`,
+//! `cow_copies`, `quantized_blocks`/`quant_saved_bytes`,
+//! `offloaded_blocks`/`host_slab_bytes`, and the swap counters
+//! `swap_out_bytes`/`swap_in_bytes`/`resume_page_ins`.
 //!
 //! Concurrency correctness is enforced by construction and by tooling
 //! (see the *Correctness tooling* section of [`cortex`]): every
@@ -77,8 +95,10 @@
 //! linter `warp-audit` (`cargo run --bin warp-audit -- rust/src`, a
 //! required CI job) keeps the tree clean of `.lock().unwrap()` chains,
 //! NaN-unsound `partial_cmp` comparators, bare `std::sync::Mutex` on the
-//! decode path, and panicking calls in [`serve`]; individual sites opt
-//! out with `// audit-allow: <rule>`.
+//! decode path, panicking calls in [`serve`], and exact float equality in
+//! `model/`/`cortex/` production code (tier round-trips make it a
+//! tolerance bug); individual sites opt out with
+//! `// audit-allow: <rule>`.
 //!
 //! Python never runs on the request path: `make artifacts` exports
 //! everything once, and this crate serves from the compiled artifacts.

@@ -12,6 +12,15 @@
 //! host→device traffic per step instead of the seed's `O(capacity)`
 //! re-upload; see `model::pool` for the slab design and
 //! `benches/decode_upload.rs` for the measured claim).
+//!
+//! The gather is **tier-transparent**: a block table may mix hot fp32
+//! blocks with warm int8 (quantized parked/registry) blocks, and the
+//! paged gather dequantizes warm blocks inline with the same arithmetic
+//! on every path (`runtime::xla_stub::paged_gather_prefix_tiered` and the
+//! pool's host gather share one expression), so decode over a mixed-tier
+//! table is bit-identical between host and device.  Cold (host-slab)
+//! blocks never appear in a gather — the pool pages them in before any
+//! read or write touches them.
 
 use std::sync::Arc;
 

@@ -34,6 +34,21 @@
 //! prefill outputs, the synapse ablations and as the flat reference; both
 //! zero-fill positions past `len` — numerically transparent because every
 //! compiled program masks attention beyond `cache_len`.
+//!
+//! # Memory tiers
+//!
+//! Since the tiered-KV refactor a table entry also carries the block's
+//! current *tier*.  Private blocks of a parked session can spill their
+//! payload to the pool's cold host slab ([`KvCache::park_to_host`]) and
+//! page back in on resume ([`KvCache::resume_from_host`]) — a lossless,
+//! bit-identical round trip (the offload tier stores the exact fp32
+//! bytes).  Registered prefix blocks instead demote *in place* to the warm
+//! int8 tier when they park (pool-level, `quantize_parked`); their reads
+//! dequantize transparently and a write CoW-promotes a full-precision
+//! private copy.  [`KvCache::bytes`] counts only hot private blocks: warm
+//! registry blocks stay on the global `SharedKv` charge at their reduced
+//! size, and offloaded payloads are charged once under `HostKv` — every
+//! physical byte counted exactly once, in its tier.
 
 use std::sync::Arc;
 
@@ -43,14 +58,22 @@ use super::pool::{KvPool, KvPoolConfig, PagedKv};
 use crate::cortex::memory::MemGuard;
 use crate::runtime::ModelConfig;
 
-/// One block-table entry: the pool block id plus whether this cache holds
-/// it *by reference* from the prefix registry (`shared`) or owns it
-/// privately.  Shared entries are excluded from this cache's byte charge
-/// (the pool charges them once globally) and are immutable — writes CoW.
+/// One block-table entry: the pool block id, whether this cache holds it
+/// *by reference* from the prefix registry (`shared`) or owns it
+/// privately, and which memory tier the payload currently sits in.
+/// Shared entries are excluded from this cache's byte charge (the pool
+/// charges them once globally) and are immutable — writes CoW.
 #[derive(Debug, Clone, Copy)]
 struct BlockRef {
     id: u32,
     shared: bool,
+    /// Cold tier: [`KvCache::park_to_host`] spilled this private block's
+    /// payload to the pool's host slab.  Offloaded entries are excluded
+    /// from the cache's resident byte charge (the pool charges them once
+    /// under `MemKind::HostKv`) and refuse device gathers until
+    /// [`KvCache::resume_from_host`] — a write through the pool's CoW
+    /// gate pages the block back in transparently instead.
+    offloaded: bool,
 }
 
 /// A bounded, pool-backed KV cache for one agent.
@@ -121,13 +144,86 @@ impl KvCache {
         self.blocks.iter().filter(|b| b.shared).count()
     }
 
-    /// Resident bytes attributable to this cache: *private* blocks ×
-    /// block bytes — the Table-2 unit.  Grows with fill, not with
-    /// configured capacity, and excludes registry-shared blocks (those are
-    /// charged once under `MemKind::SharedKv` however many caches
-    /// reference them).
+    /// Resident bytes attributable to this cache: *private, resident*
+    /// blocks × block bytes — the Table-2 unit.  Grows with fill, not with
+    /// configured capacity, and excludes registry-shared blocks (charged
+    /// once under `MemKind::SharedKv` however many caches reference them)
+    /// as well as host-offloaded blocks (charged once under
+    /// `MemKind::HostKv` while parked — host RAM, not VRAM).
     pub fn bytes(&self) -> u64 {
-        self.blocks.iter().filter(|b| !b.shared).count() as u64 * self.pool.block_bytes()
+        self.blocks
+            .iter()
+            .filter(|b| !b.shared && !b.offloaded)
+            .count() as u64
+            * self.pool.block_bytes()
+    }
+
+    /// Blocks this cache currently parks in the pool's cold host slab.
+    pub fn offloaded_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.offloaded).count()
+    }
+
+    /// Park this cache's private blocks to the pool's cold host slab (the
+    /// session-park path: a parked agent's context stops costing device
+    /// bytes entirely).  Shared registry entries are skipped — they demote
+    /// through the registry's own offload-under-pressure path and must
+    /// stay addressable for other readers.  On a full slab the error
+    /// surfaces after parking what fit; already-parked blocks stay parked
+    /// (resume pages everything back regardless).  Returns the number of
+    /// blocks newly offloaded.
+    pub fn park_to_host(&mut self) -> Result<usize> {
+        let mut parked = 0;
+        let mut first_err = None;
+        for b in self.blocks.iter_mut() {
+            if b.shared || b.offloaded {
+                continue;
+            }
+            match self.pool.offload_ref(b.id) {
+                Ok(()) => {
+                    b.offloaded = true;
+                    parked += 1;
+                }
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        self.sync_mem();
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(parked),
+        }
+    }
+
+    /// Page every host-offloaded block of this cache back to the hot tier
+    /// (the session-resume path).  Paging in may itself demote other
+    /// parked state to make room; if the device budget is exhausted the
+    /// error surfaces with the blocks resumed so far staying resident.
+    /// Returns the number of blocks paged in.
+    pub fn resume_from_host(&mut self) -> Result<usize> {
+        let mut resumed = 0;
+        let mut first_err = None;
+        for b in self.blocks.iter_mut() {
+            if !b.offloaded {
+                continue;
+            }
+            match self.pool.page_in_ref(b.id) {
+                Ok(()) => {
+                    b.offloaded = false;
+                    resumed += 1;
+                }
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        self.sync_mem();
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(resumed),
+        }
     }
 
     /// Bytes an eager flat `[L, C, KV, hd]` allocation of this capacity
@@ -171,7 +267,11 @@ impl KvCache {
         let need = self.pool.blocks_for(rows);
         while self.blocks.len() < need {
             match self.pool.rent_ref() {
-                Ok(id) => self.blocks.push(BlockRef { id, shared: false }),
+                Ok(id) => self.blocks.push(BlockRef {
+                    id,
+                    shared: false,
+                    offloaded: false,
+                }),
                 Err(e) => {
                     self.sync_mem();
                     return Err(e);
@@ -209,7 +309,14 @@ impl KvCache {
                 self.blocks[b] = BlockRef {
                     id: target,
                     shared: false,
+                    offloaded: false,
                 };
+                self.sync_mem();
+            } else if entry.offloaded {
+                // The write gate paged a cold block back in (parked
+                // sessions growing without an explicit resume); mirror the
+                // promotion so the byte charge moves back to this cache.
+                self.blocks[b].offloaded = false;
                 self.sync_mem();
             }
             i += run;
@@ -348,7 +455,11 @@ impl KvCache {
         let ids = self.pool.lookup_chain(&hashes[..take], keys);
         let rows = ids.len() * bt;
         for id in ids {
-            self.blocks.push(BlockRef { id, shared: true });
+            self.blocks.push(BlockRef {
+                id,
+                shared: true,
+                offloaded: false,
+            });
         }
         self.len = rows;
         if rows > 0 {
@@ -386,7 +497,11 @@ impl KvCache {
             .lookup_chain_mid(&hashes[done..take], &keys[done * bt..take * bt]);
         let rows = ids.len() * bt;
         for id in ids {
-            self.blocks.push(BlockRef { id, shared: true });
+            self.blocks.push(BlockRef {
+                id,
+                shared: true,
+                offloaded: false,
+            });
         }
         if rows > 0 {
             self.len += rows;
@@ -471,7 +586,10 @@ impl KvCache {
                 self.blocks[b] = BlockRef {
                     id: target,
                     shared: false,
+                    offloaded: false,
                 };
+            } else if entry.offloaded {
+                self.blocks[b].offloaded = false; // write gate paged it in
             }
         }
         self.len = len;
@@ -598,7 +716,13 @@ impl KvCache {
                 0
             };
             let id = self.pool.clone_block(entry.id, valid)?;
-            c.blocks.push(BlockRef { id, shared: false });
+            // The clone always materialises hot: `clone_block` reads the
+            // source through its tier view (dequantized / slab-resolved).
+            c.blocks.push(BlockRef {
+                id,
+                shared: false,
+                offloaded: false,
+            });
         }
         c.len = self.len;
         self.pool.note_rows_added(self.len);
@@ -913,6 +1037,7 @@ mod tests {
                 block_tokens: 2,
                 max_blocks: 2,
                 retain_free_blocks: usize::MAX,
+                ..KvPoolConfig::default()
             },
         );
         let mut kv = pool.new_cache(64);
@@ -937,6 +1062,7 @@ mod tests {
                 block_tokens: 2,
                 max_blocks: 2,
                 retain_free_blocks: usize::MAX,
+                ..KvPoolConfig::default()
             },
         );
         let mut kv = pool.new_cache(64);
@@ -1407,5 +1533,110 @@ mod tests {
             pool_u.check_invariants()?;
             Ok(())
         });
+    }
+
+    // ── Memory tiers: park to host / resume ────────────────────────────
+
+    fn tiered_pool(slab: usize) -> Arc<KvPool> {
+        KvPool::new(
+            &tiny_cfg(),
+            KvPoolConfig {
+                block_tokens: 4,
+                host_slab_blocks: slab,
+                ..KvPoolConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn park_to_host_and_resume_round_trip_bit_identical() {
+        let pool = tiered_pool(8);
+        let mut kv = pool.new_cache(8);
+        let rows6: Vec<f32> = (0..2 * 6 * ROW).map(|i| (i as f32 * 0.7).sin()).collect();
+        kv.append_rows(6, &rows6, &rows6).unwrap();
+        assert_eq!(kv.bytes(), 2 * pool.block_bytes());
+        let (bk, bv) = kv.device_gather(8).unwrap();
+
+        assert_eq!(kv.park_to_host().unwrap(), 2);
+        assert_eq!(kv.offloaded_blocks(), 2);
+        assert_eq!(kv.bytes(), 0, "parked context costs no device bytes");
+        let s = pool.stats();
+        assert_eq!(s.offloaded_blocks, 2);
+        assert_eq!(s.host_slab_bytes, 2 * pool.block_bytes());
+        // cold blocks refuse device gathers but host reads resolve through
+        // the slab, verbatim
+        assert!(kv.device_gather(8).is_err());
+        let (hk, hv) = kv.prefix_upload(8);
+        crop_eq(&hk, &bk, "parked host k").unwrap();
+        crop_eq(&hv, &bv, "parked host v").unwrap();
+        // a second park is a no-op
+        assert_eq!(kv.park_to_host().unwrap(), 0);
+
+        assert_eq!(kv.resume_from_host().unwrap(), 2);
+        assert_eq!(kv.offloaded_blocks(), 0);
+        assert_eq!(kv.bytes(), 2 * pool.block_bytes());
+        // the resume round trip is lossless: decode state is bit-identical
+        let (ak, av) = kv.device_gather(8).unwrap();
+        crop_eq(&ak, &bk, "resumed k").unwrap();
+        crop_eq(&av, &bv, "resumed v").unwrap();
+        let s = pool.stats();
+        assert_eq!(s.swap_in_bytes, s.swap_out_bytes);
+        assert_eq!(s.resume_page_ins, 2);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn writes_into_a_parked_cache_page_in_transparently() {
+        let pool = tiered_pool(8);
+        let mut kv = pool.new_cache(16);
+        let rows6 = vec![1.5; 2 * 6 * ROW];
+        kv.append_rows(6, &rows6, &rows6).unwrap();
+        assert_eq!(kv.park_to_host().unwrap(), 2);
+        // the append lands in block 1 (rows 4..6 + the new row): the write
+        // gate pages exactly that block back in; block 0 stays cold
+        let row = vec![2.5; 2 * ROW];
+        kv.append_row(&row, &row).unwrap();
+        assert_eq!(kv.offloaded_blocks(), 1);
+        assert_eq!(kv.bytes(), pool.block_bytes());
+        assert_eq!(pool.stats().offloaded_blocks, 1);
+        // resume brings back the rest
+        assert_eq!(kv.resume_from_host().unwrap(), 1);
+        assert_eq!(kv.bytes(), 2 * pool.block_bytes());
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn park_skips_shared_registry_entries() {
+        let pool = tiered_pool(8);
+        let keys: Vec<i32> = (0..10).collect();
+        let (k_rows, v_rows) = rows_for_keys(&tiny_cfg(), &keys);
+        let mut kv = pool.new_cache(32);
+        kv.replace_rows_keyed(10, 1, &keys, &k_rows, &v_rows).unwrap();
+        assert_eq!(kv.shared_blocks(), 2);
+        // only the private tail block parks; the registry entries stay
+        // addressable for other readers
+        assert_eq!(kv.park_to_host().unwrap(), 1);
+        assert_eq!(kv.shared_blocks(), 2);
+        assert_eq!(pool.stats().offloaded_blocks, 1);
+        assert_eq!(kv.resume_from_host().unwrap(), 1);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn park_surfaces_slab_exhaustion_and_keeps_the_cache_consistent() {
+        let pool = tiered_pool(1);
+        let mut kv = pool.new_cache(8);
+        let rows8 = vec![0.25; 2 * 8 * ROW];
+        kv.append_rows(8, &rows8, &rows8).unwrap();
+        // two private blocks, a one-block slab: the first parks, the
+        // second bails — and the error leaves the table consistent
+        let err = kv.park_to_host().unwrap_err();
+        assert!(format!("{err:#}").contains("host slab full"));
+        assert_eq!(kv.offloaded_blocks(), 1);
+        assert_eq!(kv.bytes(), pool.block_bytes());
+        // resume undoes the partial park
+        assert_eq!(kv.resume_from_host().unwrap(), 1);
+        assert_eq!(kv.offloaded_blocks(), 0);
+        pool.check_invariants().unwrap();
     }
 }

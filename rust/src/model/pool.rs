@@ -64,10 +64,47 @@
 //! layout and life-cycle; the `h2d_bytes` gauge measures the traffic a real
 //! backend would pay, and the O(k)-per-step property is asserted by
 //! `benches/decode_upload.rs`.
+//!
+//! # The memory-tier hierarchy
+//!
+//! Since the tiered-KV refactor a block's payload lives in exactly one of
+//! three tiers, and the `max_blocks` cap binds on **bytes** (a budget of
+//! `max_blocks × block_bytes`, i.e. fp32-block-equivalents) rather than on
+//! a block count — which is what lets the warm tier multiply blocks-per-GB:
+//!
+//! * **hot — fp32 device** (`Payload::F32`): every private, writable
+//!   block.  Full-precision host rows plus the lazily materialised device
+//!   copy; all writes land here (`write_run` promotes first if needed).
+//! * **warm — int8 quantized** (`Payload::Q8`): registered blocks whose
+//!   refcount dropped to zero (parked prefixes, synapse seeds) demote to
+//!   block-granular int8 with one f32 scale per (layer, position) row when
+//!   [`KvPoolConfig::quantize_parked`] is set — ~3.5× more blocks per GB
+//!   for exactly the state that dominates at scale.  Quantized blocks are
+//!   immutable (registered ⇒ CoW): gathers dequantize transparently, host
+//!   and device bit-identically; a write CoW-promotes a private fp32 copy.
+//! * **cold — host slab** (`Payload::Offloaded`): under cap pressure (and
+//!   on session park via [`super::kv::KvCache::park_to_host`]) a block's
+//!   payload moves *verbatim* — losslessly — into a bounded host slab
+//!   ([`KvPoolConfig::host_slab_blocks`], the stand-in for pinned-host PJRT
+//!   buffers) and its device copy is dropped.  Offloaded registry entries
+//!   stay hittable: a chain hit (or a session resume) pages the payload
+//!   back in, re-uploads the device copy, and counts `swap_in_bytes` /
+//!   `resume_page_ins`.  Because the move is verbatim, a park → offload →
+//!   resume round trip decodes bit-identically.
+//!
+//! Demotion order under pressure is offload-first (lossless, keeps the
+//! entry) then LRU-evict (drops it); admission ([`KvPool::can_admit`])
+//! counts both as reclaimable headroom and sheds only when the budget,
+//! the slab and the parked set are all exhausted.  Accounting counts every
+//! physical byte once in its tier: resident payload bytes under the byte
+//! budget (`SharedKv`/`MainKv`/`SideKv` at their actual tier size), slab
+//! bytes under `HostKv`, device copies under `DeviceKv`;
+//! [`KvPool::check_invariants`] re-proves the tier partition and every
+//! gauge reconciliation.
 
 use std::collections::HashMap;
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, bail, Result};
@@ -92,6 +129,18 @@ pub struct KvPoolConfig {
     /// Reclaim policy: how many released blocks the free list may retain for
     /// reuse before further releases return their memory to the allocator.
     pub retain_free_blocks: usize,
+    /// Warm tier: demote a registered block to block-granular int8 (one f32
+    /// scale per (layer, position) row) when its refcount drops to zero —
+    /// parked prefixes and synapse seeds then cost
+    /// [`KvPool::q8_block_bytes`] instead of [`KvPool::block_bytes`]
+    /// against the byte budget (~3.5× more blocks per GB).  Off by default:
+    /// quantization is lossy (bounded by max|x|/127 per row).
+    pub quantize_parked: bool,
+    /// Cold tier: capacity (in blocks) of the host slab that parked
+    /// sessions and refcount-0 registry entries spill to under cap
+    /// pressure.  `0` disables offload.  Offloaded payloads move verbatim
+    /// (lossless) and cost zero device-budget bytes until paged back in.
+    pub host_slab_blocks: usize,
 }
 
 impl Default for KvPoolConfig {
@@ -100,6 +149,8 @@ impl Default for KvPoolConfig {
             block_tokens: 16,
             max_blocks: 0,
             retain_free_blocks: usize::MAX,
+            quantize_parked: false,
+            host_slab_blocks: 0,
         }
     }
 }
@@ -124,12 +175,111 @@ pub fn chain_hash(prev: u64, keys: &[i32]) -> u64 {
     h
 }
 
-/// One slab slot: the block's host-side K and V buffers plus its sharing
-/// state.  Each buffer is `[L, block_tokens, KV*hd]`, row-major.
+/// A block's K/V payload in one of the three memory tiers (see the
+/// module-level tier hierarchy).  `F32` buffers are `[L, block_tokens,
+/// KV*hd]` row-major; `Q8` stores the same elements as int8 with one f32
+/// scale per (layer, position) row (`[L, block_tokens]`), so host- and
+/// device-side dequantization are bit-identical by construction.
+#[derive(Debug)]
+enum Payload {
+    /// Hot tier: full-precision, writable.
+    F32 { k: Box<[f32]>, v: Box<[f32]> },
+    /// Warm tier: block-granular symmetric int8, immutable (only registered
+    /// blocks demote, and registered ⇒ copy-on-write).
+    Q8 {
+        k: Box<[i8]>,
+        v: Box<[i8]>,
+        k_scales: Box<[f32]>,
+        v_scales: Box<[f32]>,
+    },
+    /// Cold tier: the payload lives verbatim in `PoolState::host_slab`
+    /// under this block's id; no device copy exists until page-in.
+    Offloaded,
+}
+
+impl Payload {
+    fn is_offloaded(&self) -> bool {
+        matches!(self, Payload::Offloaded)
+    }
+
+    fn tier_name(&self) -> &'static str {
+        match self {
+            Payload::F32 { .. } => "f32",
+            Payload::Q8 { .. } => "q8",
+            Payload::Offloaded => "offloaded",
+        }
+    }
+}
+
+/// Symmetric per-row int8 quantization: each `row`-float row gets one f32
+/// scale `max|x|/127` (0 for all-zero rows); elements quantize to
+/// `round(x/scale)` clamped to `[-127, 127]`.  The per-element round-trip
+/// error is bounded by `scale/2 = max|x|/254` — the bound the proptests
+/// assert and the reason exact float equality on gathered K/V is a lint
+/// (`float-eq` in warp-audit).
+fn q8_quantize(src: &[f32], row: usize) -> (Box<[i8]>, Box<[f32]>) {
+    debug_assert_eq!(src.len() % row, 0);
+    let rows = src.len() / row;
+    let mut q = vec![0i8; src.len()];
+    let mut scales = vec![0f32; rows];
+    for r in 0..rows {
+        let s = &src[r * row..(r + 1) * row];
+        let max = s.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if !(max > 0.0) {
+            continue; // all-zero (or NaN-only) row: scale 0, elements 0
+        }
+        let scale = max / 127.0;
+        scales[r] = scale;
+        for (i, &x) in s.iter().enumerate() {
+            q[r * row + i] = (x / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q.into_boxed_slice(), scales.into_boxed_slice())
+}
+
+/// Inverse of [`q8_quantize`]: `x̂ = q * scale[row]`.  Used identically by
+/// the host gathers and the device-slab re-encode, so both sides of the
+/// substitution boundary reconstruct the same floats bit-for-bit.
+fn q8_dequantize(q: &[i8], scales: &[f32], row: usize) -> Box<[f32]> {
+    debug_assert_eq!(q.len(), scales.len() * row);
+    let mut out = vec![0f32; q.len()];
+    for (r, &scale) in scales.iter().enumerate() {
+        for i in 0..row {
+            out[r * row + i] = q[r * row + i] as f32 * scale;
+        }
+    }
+    out.into_boxed_slice()
+}
+
+/// A read-only f32 view of one block's K/V, produced by
+/// `KvPool::tier_view`: borrowed straight from a hot-tier slot, or owned
+/// (dequantized / slab-resolved) for the other tiers.
+enum TierView<'a> {
+    Hot { k: &'a [f32], v: &'a [f32] },
+    Warm { k: Box<[f32]>, v: Box<[f32]> },
+}
+
+impl TierView<'_> {
+    fn k(&self) -> &[f32] {
+        match self {
+            TierView::Hot { k, .. } => k,
+            TierView::Warm { k, .. } => k,
+        }
+    }
+
+    fn v(&self) -> &[f32] {
+        match self {
+            TierView::Hot { v, .. } => v,
+            TierView::Warm { v, .. } => v,
+        }
+    }
+}
+
+/// One slab slot: the block's host-side K/V payload (in whichever tier it
+/// currently occupies) plus its sharing state.
 #[derive(Debug)]
 struct HostBlock {
-    k: Box<[f32]>,
-    v: Box<[f32]>,
+    payload: Payload,
     /// Cache-table references.  The prefix registry's own hold is NOT
     /// counted here — a registered block with `refs == 0` is *parked*
     /// (resident, hittable, evictable under cap pressure).
@@ -174,15 +324,55 @@ struct PoolState {
     /// Accounting hook ([`crate::cortex::memory::MemKind::SharedKv`]):
     /// resized on every registration and eviction.
     shared_guard: Option<MemGuard>,
+    /// Cold tier: block id → payload moved verbatim off the device budget
+    /// (the stand-in for pinned-host PJRT buffers).
+    host_slab: HashMap<u32, Payload>,
+    /// Bytes currently held by the host slab (Σ payload bytes of
+    /// `host_slab` entries).
+    host_slab_bytes: u64,
+    /// Accounting hook ([`crate::cortex::memory::MemKind::HostKv`]):
+    /// resized on every offload, page-in and slab-entry drop.
+    host_guard: Option<MemGuard>,
+    /// Resident payload bytes of LIVE blocks (referenced + parked) at their
+    /// actual tier size — the quantity the byte budget
+    /// (`max_blocks × block_bytes`) binds on.  Free-listed blocks (always
+    /// fp32) and offloaded payloads do not count.
+    resident_bytes: u64,
+    /// Resident payload bytes of *registered* blocks (the `SharedKv`
+    /// charge); excludes offloaded registry entries (charged to `HostKv`).
+    shared_bytes: u64,
+    /// Live blocks currently at the warm int8 tier.
+    quantized: usize,
+    /// Cumulative bytes moved device → host slab.
+    swap_out_bytes: u64,
+    /// Cumulative bytes paged host slab → device.
+    swap_in_bytes: u64,
+    /// Cumulative slab bytes dropped with their block (a parked session's
+    /// cache released while offloaded) — never paged back in.  Closes the
+    /// swap conservation law:
+    /// `swap_out == swap_in + swap_dropped + host_slab_bytes`.
+    swap_dropped_bytes: u64,
+    /// Page-ins served (chain hits on offloaded entries + session resumes).
+    page_ins: u64,
 }
 
-/// One block's device-resident K/V copy.  Same `[L, block_tokens, KV*hd]`
-/// layout as the host buffers; on a real PJRT backend these would be
-/// `PjRtBuffer`s owned by the device thread.
+/// One block's device-resident K/V copy, at the same tier as its host
+/// payload (a quantized block's device copy stores the identical ints and
+/// scales, so gathers dequantize bit-identically on either side).  Same
+/// `[L, block_tokens, KV*hd]` layout as the host buffers; on a real PJRT
+/// backend these would be `PjRtBuffer`s owned by the device thread.
 #[derive(Debug)]
-struct DevBuf {
-    k: Box<[f32]>,
-    v: Box<[f32]>,
+enum DevBuf {
+    F32 {
+        k: Box<[f32]>,
+        v: Box<[f32]>,
+    },
+    Q8 {
+        k: Box<[i8]>,
+        v: Box<[i8]>,
+        k_scales: Box<[f32]>,
+        v_scales: Box<[f32]>,
+    },
 }
 
 /// The device slab: block id → resident device buffer.
@@ -285,6 +475,33 @@ pub struct PoolStats {
     /// Blocks promised to admitted-but-not-yet-prefilled sessions
     /// ([`KvPool::reserve`]); [`KvPool::can_admit`] treats them as spent.
     pub reserved_blocks: usize,
+    /// Resident payload bytes of live blocks at their actual tier size —
+    /// the quantity the byte budget (`max_blocks × block_bytes`) binds on.
+    pub resident_payload_bytes: u64,
+    /// Live blocks currently at the warm int8 tier.
+    pub quantized_blocks: usize,
+    /// Bytes the warm tier currently saves vs fp32 residency
+    /// (`quantized_blocks × (block_bytes − q8_block_bytes)`).
+    pub quant_saved_bytes: u64,
+    /// Bytes of one block at the warm int8 tier.
+    pub q8_block_bytes: u64,
+    /// Blocks whose payload currently sits in the cold host slab.
+    pub offloaded_blocks: usize,
+    /// Bytes held by the cold host slab.
+    pub host_slab_bytes: u64,
+    /// Resident bytes of registry-shared blocks at their tier size (the
+    /// `SharedKv` charge; excludes offloaded entries, which are `HostKv`).
+    pub shared_payload_bytes: u64,
+    /// Cumulative bytes moved device → host slab.
+    pub swap_out_bytes: u64,
+    /// Cumulative bytes paged host slab → device.
+    pub swap_in_bytes: u64,
+    /// Cumulative slab bytes dropped with their block, never paged back in
+    /// (closes `swap_out == swap_in + swap_dropped + host_slab_bytes`).
+    pub swap_dropped_bytes: u64,
+    /// Page-ins served: registry chain hits on offloaded entries plus
+    /// session resumes.
+    pub resume_page_ins: u64,
 }
 
 /// RAII admission reservation from [`KvPool::reserve`]: while alive,
@@ -308,23 +525,27 @@ impl Drop for BlockReservation<'_> {
 }
 
 impl PoolStats {
-    /// Bytes held by live blocks (the resident-context figure).
+    /// Bytes held by live blocks at their actual tier size (the
+    /// resident-context figure; equals `blocks_live × block_bytes` while
+    /// tiering is off).
     pub fn live_bytes(&self) -> u64 {
-        self.blocks_live as u64 * self.block_bytes
+        self.resident_payload_bytes
     }
 
-    /// Bytes held by the pool overall (live + retained free blocks).
+    /// Bytes held by the pool overall (live at tier size + retained free
+    /// blocks, which are always fp32).
     pub fn resident_bytes(&self) -> u64 {
-        (self.blocks_live + self.blocks_free) as u64 * self.block_bytes
+        self.resident_payload_bytes + self.blocks_free as u64 * self.block_bytes
     }
 
     pub fn high_water_bytes(&self) -> u64 {
         self.blocks_high_water as u64 * self.block_bytes
     }
 
-    /// Bytes held by registry-shared blocks (charged once globally).
+    /// Bytes held by registry-shared blocks (charged once globally, at
+    /// their resident tier size).
     pub fn shared_bytes(&self) -> u64 {
-        self.shared_blocks as u64 * self.block_bytes
+        self.shared_payload_bytes
     }
 
     /// Internal fragmentation: the fraction of live positions that hold no
@@ -353,6 +574,12 @@ pub struct KvPool {
     block_tokens: usize,
     max_blocks: AtomicUsize,
     retain_free_blocks: AtomicUsize,
+    /// Warm-tier knob ([`KvPoolConfig::quantize_parked`]), runtime-settable
+    /// via [`KvPool::set_tiering`].
+    quantize_parked: AtomicBool,
+    /// Cold-tier capacity ([`KvPoolConfig::host_slab_blocks`]), runtime-
+    /// settable via [`KvPool::set_tiering`].
+    host_slab_blocks: AtomicUsize,
     n_layers: usize,
     kv_heads: usize,
     head_dim: usize,
@@ -413,6 +640,8 @@ impl KvPool {
             block_tokens: cfg.block_tokens,
             max_blocks: AtomicUsize::new(cfg.max_blocks),
             retain_free_blocks: AtomicUsize::new(cfg.retain_free_blocks),
+            quantize_parked: AtomicBool::new(cfg.quantize_parked),
+            host_slab_blocks: AtomicUsize::new(cfg.host_slab_blocks),
             n_layers: model.n_layers,
             kv_heads: model.n_kv_heads,
             head_dim: model.head_dim,
@@ -433,6 +662,8 @@ impl KvPool {
             block_tokens: self.block_tokens,
             max_blocks: self.max_blocks.load(Ordering::Relaxed),
             retain_free_blocks: self.retain_free_blocks.load(Ordering::Relaxed),
+            quantize_parked: self.quantize_parked.load(Ordering::Relaxed),
+            host_slab_blocks: self.host_slab_blocks.load(Ordering::Relaxed),
         }
     }
 
@@ -443,6 +674,18 @@ impl KvPool {
         self.max_blocks.store(max_blocks, Ordering::Relaxed);
         self.retain_free_blocks
             .store(retain_free_blocks, Ordering::Relaxed);
+    }
+
+    /// Adjust the tiering knobs at runtime (the orchestrator applies its
+    /// config to an already-built engine's pool, like
+    /// [`KvPool::set_limits`]).  Turning quantization on demotes blocks as
+    /// they next park — already-parked fp32 entries are left untouched;
+    /// shrinking the slab strands no data — existing entries stay until
+    /// paged in or dropped, only further offloads are refused.
+    pub fn set_tiering(&self, quantize_parked: bool, host_slab_blocks: usize) {
+        self.quantize_parked.store(quantize_parked, Ordering::Relaxed);
+        self.host_slab_blocks
+            .store(host_slab_blocks, Ordering::Relaxed);
     }
 
     pub fn block_tokens(&self) -> usize {
@@ -474,6 +717,43 @@ impl KvPool {
     /// Bytes of one block, K + V.
     pub fn block_bytes(&self) -> u64 {
         (self.block_floats() * 2 * 4) as u64
+    }
+
+    /// Bytes of one block at the warm int8 tier: 1 byte per K/V element
+    /// plus one f32 scale per (layer, position) row of each buffer.  With
+    /// typical head geometry this is ~3.5× smaller than
+    /// [`KvPool::block_bytes`] — the blocks-per-GB multiplier the tiered-kv
+    /// bench asserts.
+    pub fn q8_block_bytes(&self) -> u64 {
+        (self.block_floats() * 2 + self.n_layers * self.block_tokens * 2 * 4) as u64
+    }
+
+    /// Resident bytes a payload costs against the device byte budget.
+    fn payload_bytes(&self, p: &Payload) -> u64 {
+        match p {
+            Payload::F32 { .. } => self.block_bytes(),
+            Payload::Q8 { .. } => self.q8_block_bytes(),
+            Payload::Offloaded => 0,
+        }
+    }
+
+    /// Bytes a materialised device buffer holds.
+    fn dev_buf_bytes(&self, b: &DevBuf) -> u64 {
+        match b {
+            DevBuf::F32 { .. } => self.block_bytes(),
+            DevBuf::Q8 { .. } => self.q8_block_bytes(),
+        }
+    }
+
+    /// The device byte budget (`max_blocks` fp32-block-equivalents);
+    /// `None` = uncapped.
+    fn budget_bytes(&self) -> Option<u64> {
+        let max = self.max_blocks.load(Ordering::Relaxed);
+        if max == 0 {
+            None
+        } else {
+            Some(max as u64 * self.block_bytes())
+        }
     }
 
     /// Blocks needed to hold `rows` positions (round up; 0 rows → 0 blocks).
@@ -512,28 +792,39 @@ impl KvPool {
     }
 
     /// Admission-gate view of capacity: can `blocks` fresh private blocks
-    /// still be rented under the `max_blocks` cap?  Mirrors
-    /// `KvPool::rent_ref`'s own headroom rules: fresh allocations up to
-    /// the cap, PLUS one LRU eviction per parked registry entry
-    /// (registered, refcount 0) once at it — a warm prefix registry holds
-    /// `blocks_live` near the cap *by design* and must not read as
-    /// exhaustion (it would starve side-agent admission forever).
+    /// still be rented under the byte budget?  Mirrors
+    /// `KvPool::rent_ref`'s own headroom rules: unspent budget bytes, PLUS
+    /// the resident payload bytes of every parked registry entry
+    /// (registered, refcount 0) — a rent under pressure offloads or
+    /// LRU-evicts those, so a warm prefix registry holding residency near
+    /// the cap *by design* must not read as exhaustion (it would starve
+    /// side-agent admission forever), and a quantized or offloaded parked
+    /// set reads as exactly the bytes reclaiming it would yield.
     /// Outstanding session reservations ([`KvPool::reserve`]) count as
     /// already-spent headroom.  Always true when uncapped.
     pub fn can_admit(&self, blocks: usize) -> bool {
-        let max = self.max_blocks.load(Ordering::Relaxed);
-        if max == 0 {
+        let Some(budget) = self.budget_bytes() else {
             return true;
-        }
+        };
         let reserved = self.reserved.load(Ordering::SeqCst);
         let st = self.state.lock();
-        let parked = st
+        self.headroom_locked(&st, budget, reserved) >= blocks as u64 * self.block_bytes()
+    }
+
+    /// Admissible bytes under `budget`: unspent budget plus the resident
+    /// payload bytes reclaimable from parked registry entries (offload or
+    /// eviction yields exactly their current-tier size; already-offloaded
+    /// entries cost — and therefore yield — nothing).
+    fn headroom_locked(&self, st: &PoolState, budget: u64, reserved: usize) -> u64 {
+        let spent = st.resident_bytes + reserved as u64 * self.block_bytes();
+        let reclaimable: u64 = st
             .slots
             .iter()
             .flatten()
             .filter(|b| b.refs == 0 && b.hash.is_some())
-            .count();
-        max.saturating_sub(st.live + reserved) + parked >= blocks
+            .map(|b| self.payload_bytes(&b.payload))
+            .sum();
+        budget.saturating_sub(spent) + reclaimable
     }
 
     /// Reserve admission headroom for a session between its admission and
@@ -556,22 +847,15 @@ impl KvPool {
     /// headroom (the loser sheds as Busy instead of failing mid-prefill).
     /// Always succeeds on an uncapped pool.
     pub fn try_reserve(&self, blocks: usize) -> Option<BlockReservation<'_>> {
-        let max = self.max_blocks.load(Ordering::Relaxed);
-        if max == 0 {
+        let Some(budget) = self.budget_bytes() else {
             return Some(self.reserve(blocks));
-        }
+        };
         // Hold the state lock across the headroom check AND the bump so
         // concurrent try_reserve calls serialize; the guard's unlocked
         // decrement on drop is safe (headroom only grows).
         let st = self.state.lock();
         let reserved = self.reserved.load(Ordering::SeqCst);
-        let parked = st
-            .slots
-            .iter()
-            .flatten()
-            .filter(|b| b.refs == 0 && b.hash.is_some())
-            .count();
-        if max.saturating_sub(st.live + reserved) + parked < blocks {
+        if self.headroom_locked(&st, budget, reserved) < blocks as u64 * self.block_bytes() {
             return None;
         }
         self.reserved.fetch_add(blocks, Ordering::SeqCst);
@@ -579,37 +863,20 @@ impl KvPool {
     }
 
     fn rent_locked(&self, st: &mut PoolState) -> Result<u32> {
-        // The cap binds on LIVE blocks, so it must be checked before the
-        // free list too — parked free blocks don't grant cap headroom.
-        let max_blocks = self.max_blocks.load(Ordering::Relaxed);
-        if max_blocks > 0 && st.live >= max_blocks {
-            // The only headroom at the cap is a parked registry entry
-            // (refcount 0): evict the least-recently-used one and take its
-            // block over in place (`live` unchanged — parked blocks were
-            // already counted).
-            if let Some(id) = self.evict_lru_locked(st) {
-                let b = st.slots[id as usize]
-                    .as_mut()
-                    .expect("evicted block is live");
-                b.refs = 1;
-                self.rents.fetch_add(1, Ordering::Relaxed);
-                self.reuses.fetch_add(1, Ordering::Relaxed);
-                return Ok(id);
-            }
-            bail!(
-                "kv pool exhausted: {} blocks live (max {max_blocks}, block_tokens {})",
-                st.live,
-                self.block_tokens
-            );
-        }
+        // The budget binds on resident payload bytes of LIVE blocks, so it
+        // must be enforced before the free list too — parked free blocks
+        // (always fp32, about to count bb again) don't grant headroom.
+        self.make_room_locked(st, self.block_bytes())?;
         if let Some(id) = st.free.pop() {
             st.live += 1;
             st.high_water = st.high_water.max(st.live);
+            st.resident_bytes += self.block_bytes();
             let b = st.slots[id as usize]
                 .as_mut()
                 .expect("free-listed block has a slot");
             debug_assert_eq!(b.refs, 0);
             debug_assert!(b.hash.is_none());
+            debug_assert!(matches!(b.payload, Payload::F32 { .. }));
             b.refs = 1;
             self.rents.fetch_add(1, Ordering::Relaxed);
             self.reuses.fetch_add(1, Ordering::Relaxed);
@@ -620,6 +887,7 @@ impl KvPool {
         }
         st.live += 1;
         st.high_water = st.high_water.max(st.live);
+        st.resident_bytes += self.block_bytes();
         self.rents.fetch_add(1, Ordering::Relaxed);
         let id = self.reserve_dev_id();
         let n = self.block_floats();
@@ -627,14 +895,48 @@ impl KvPool {
             st.slots.resize_with(id as usize + 1, || None);
         }
         st.slots[id as usize] = Some(HostBlock {
-            k: vec![0.0; n].into_boxed_slice(),
-            v: vec![0.0; n].into_boxed_slice(),
+            payload: Payload::F32 {
+                k: vec![0.0; n].into_boxed_slice(),
+                v: vec![0.0; n].into_boxed_slice(),
+            },
             refs: 1,
             hash: None,
             keys: None,
             last_used: 0,
         });
         Ok(id)
+    }
+
+    /// Reclaim resident bytes until `need` more fit under the byte budget:
+    /// offload the LRU parked registry entry to the host slab first
+    /// (lossless — the entry stays hittable), LRU-evict parked entries to
+    /// the free list once the slab is full or disabled, and only when both
+    /// tiers are exhausted fail with the backpressure error schedulers act
+    /// on.  No-op on an uncapped pool or when `need` already fits.
+    fn make_room_locked(&self, st: &mut PoolState, need: u64) -> Result<()> {
+        let Some(budget) = self.budget_bytes() else {
+            return Ok(());
+        };
+        while st.resident_bytes + need > budget {
+            if self.offload_lru_parked_locked(st) {
+                continue;
+            }
+            if let Some(id) = self.evict_lru_locked(st) {
+                // Deregistered and refcount 0: the block moves to the free
+                // list (payload reset to fp32), where the rent below — or a
+                // later one — picks it up.
+                self.free_block_locked(st, id);
+                continue;
+            }
+            bail!(
+                "kv pool exhausted: {} resident bytes + {need} needed exceed budget {budget} \
+                 (max_blocks {}, block_tokens {})",
+                st.resident_bytes,
+                self.max_blocks.load(Ordering::Relaxed),
+                self.block_tokens
+            );
+        }
+        Ok(())
     }
 
     /// Reserve a device-slab slot for a freshly allocated block.  The
@@ -670,8 +972,77 @@ impl KvPool {
             b.refs = b.refs.saturating_sub(1);
             (b.refs, b.hash.is_some())
         };
-        if refs > 0 || registered {
+        if refs > 0 {
             return;
+        }
+        if registered {
+            // Parked: the block stays live and hittable.  Demote it to the
+            // warm int8 tier when the knob is on — parked registry entries
+            // are exactly the immutable, read-mostly state the quantized
+            // tier is for (the next chain hit dequantizes transparently; a
+            // write would CoW-promote anyway).
+            if self.quantize_parked.load(Ordering::Relaxed) {
+                self.quantize_block_locked(st, id);
+            }
+            return;
+        }
+        self.free_block_locked(st, id);
+    }
+
+    /// Move a live, unreferenced, unregistered block out of the live set:
+    /// onto the free list, or back to the allocator once the retain cap is
+    /// hit.  Non-fp32 payloads are reset first — free blocks are always
+    /// hot-tier (an offloaded payload's slab entry is dropped, counted as
+    /// `swap_dropped_bytes`; a quantized payload's stale device copy goes
+    /// with it).
+    fn free_block_locked(&self, st: &mut PoolState, id: u32) {
+        {
+            let b = st.slots[id as usize]
+                .as_mut()
+                .expect("freed block has a slot");
+            debug_assert_eq!(b.refs, 0);
+            debug_assert!(b.hash.is_none());
+            if !matches!(b.payload, Payload::F32 { .. }) {
+                let was = std::mem::replace(
+                    &mut b.payload,
+                    Payload::F32 {
+                        k: vec![0.0; self.block_floats()].into_boxed_slice(),
+                        v: vec![0.0; self.block_floats()].into_boxed_slice(),
+                    },
+                );
+                match was {
+                    Payload::Q8 { .. } => {
+                        st.resident_bytes = st.resident_bytes.saturating_sub(self.q8_block_bytes());
+                        st.quantized = st.quantized.saturating_sub(1);
+                    }
+                    Payload::Offloaded => {
+                        // Dropped, not paged in: the payload dies with the
+                        // block (the `quantized` gauge counts live
+                        // residents only, so a q8 slab entry never touched
+                        // it).
+                        if let Some(p) = st.host_slab.remove(&id) {
+                            let bytes = self.payload_bytes(&p);
+                            st.host_slab_bytes -= bytes;
+                            st.swap_dropped_bytes += bytes;
+                            self.sync_host_guard(st);
+                        }
+                    }
+                    Payload::F32 { .. } => unreachable!("matched non-fp32 above"),
+                }
+                // The replacement fp32 payload is free-listed, not live —
+                // it contributes no resident bytes until re-rented; drop
+                // any stale non-fp32 device copy so the tiers agree.
+                let mut dev = self.dev.write().unwrap();
+                if let Some(slot) = dev.slots.get_mut(id as usize) {
+                    if matches!(slot, Some(DevBuf::Q8 { .. })) {
+                        let buf = slot.take().expect("matched Some above");
+                        dev.bytes -= self.dev_buf_bytes(&buf);
+                        dev.sync_guard();
+                    }
+                }
+            } else {
+                st.resident_bytes = st.resident_bytes.saturating_sub(self.block_bytes());
+            }
         }
         st.live = st.live.saturating_sub(1);
         if st.free.len() < self.retain_free_blocks.load(Ordering::Relaxed) {
@@ -682,33 +1053,20 @@ impl KvPool {
         // and the id is recycled for future fresh blocks.
         st.slots[id as usize] = None;
         let mut dev = self.dev.write().unwrap();
-        if dev
-            .slots
-            .get_mut(id as usize)
-            .and_then(|s| s.take())
-            .is_some()
-        {
-            dev.bytes -= self.block_bytes();
+        if let Some(buf) = dev.slots.get_mut(id as usize).and_then(|s| s.take()) {
+            dev.bytes -= self.dev_buf_bytes(&buf);
             dev.sync_guard();
         }
         dev.free_ids.push(id);
     }
 
-    /// LRU-evict one parked registry entry (registered, refcount 0).  The
-    /// block stays live — the caller takes it over in place.
+    /// LRU-evict one *resident* parked registry entry (registered,
+    /// refcount 0, payload not offloaded): deregister it so the caller can
+    /// free its block.  Offloaded entries are never evicted — they cost
+    /// zero budget bytes, so evicting them reclaims nothing (the bounded
+    /// slab is their only capacity limit).
     fn evict_lru_locked(&self, st: &mut PoolState) -> Option<u32> {
-        let mut best: Option<(u64, u32)> = None;
-        for (i, slot) in st.slots.iter().enumerate() {
-            if let Some(b) = slot {
-                if b.refs == 0
-                    && b.hash.is_some()
-                    && best.map_or(true, |(t, _)| b.last_used < t)
-                {
-                    best = Some((b.last_used, i as u32));
-                }
-            }
-        }
-        let (_, id) = best?;
+        let id = self.lru_parked_locked(st)?;
         let hash = {
             let b = st.slots[id as usize]
                 .as_mut()
@@ -718,14 +1076,222 @@ impl KvPool {
         };
         st.registry.remove(&hash);
         st.shared -= 1;
+        st.shared_bytes -= self.payload_bytes(
+            &st.slots[id as usize]
+                .as_ref()
+                .expect("eviction candidate is live")
+                .payload,
+        );
         st.prefix_evictions += 1;
         self.sync_shared_guard(st);
         Some(id)
     }
 
+    /// The least-recently-used resident parked registry entry, if any.
+    fn lru_parked_locked(&self, st: &PoolState) -> Option<u32> {
+        let mut best: Option<(u64, u32)> = None;
+        for (i, slot) in st.slots.iter().enumerate() {
+            if let Some(b) = slot {
+                if b.refs == 0
+                    && b.hash.is_some()
+                    && !b.payload.is_offloaded()
+                    && best.map_or(true, |(t, _)| b.last_used < t)
+                {
+                    best = Some((b.last_used, i as u32));
+                }
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Demote a registered block's payload to the warm int8 tier (no-op if
+    /// it is not fp32-resident).  The materialised device copy is
+    /// re-encoded with the *same* ints and scales, so host- and device-side
+    /// gathers keep reconstructing identical floats.
+    fn quantize_block_locked(&self, st: &mut PoolState, id: u32) {
+        let row = self.row();
+        let (qk, qv, sk, sv) = {
+            let b = st.slots[id as usize]
+                .as_ref()
+                .expect("quantized block is live");
+            debug_assert!(b.hash.is_some(), "only registered blocks demote");
+            let Payload::F32 { k, v } = &b.payload else {
+                return;
+            };
+            let (qk, sk) = q8_quantize(k, row);
+            let (qv, sv) = q8_quantize(v, row);
+            (qk, qv, sk, sv)
+        };
+        let saved = self.block_bytes() - self.q8_block_bytes();
+        {
+            let b = st.slots[id as usize]
+                .as_mut()
+                .expect("quantized block is live");
+            b.payload = Payload::Q8 {
+                k: qk.clone(),
+                v: qv.clone(),
+                k_scales: sk.clone(),
+                v_scales: sv.clone(),
+            };
+        }
+        st.resident_bytes -= saved;
+        st.shared_bytes -= saved;
+        st.quantized += 1;
+        self.sync_shared_guard(st);
+        let mut dev = self.dev.write().unwrap();
+        if let Some(slot) = dev.slots.get_mut(id as usize) {
+            if slot.is_some() {
+                *slot = Some(DevBuf::Q8 {
+                    k: qk,
+                    v: qv,
+                    k_scales: sk,
+                    v_scales: sv,
+                });
+                dev.bytes -= saved;
+                dev.sync_guard();
+            }
+        }
+    }
+
+    /// Spill the LRU resident parked registry entry to the host slab.
+    /// Returns `false` when the slab is disabled, full, or nothing is
+    /// offloadable.
+    fn offload_lru_parked_locked(&self, st: &mut PoolState) -> bool {
+        let cap = self.host_slab_blocks.load(Ordering::Relaxed);
+        if cap == 0 || st.host_slab.len() >= cap {
+            return false;
+        }
+        let Some(id) = self.lru_parked_locked(st) else {
+            return false;
+        };
+        self.offload_block_locked(st, id);
+        true
+    }
+
+    /// Move block `id`'s payload verbatim into the host slab and drop its
+    /// device copy.  The block stays live (still addressable, still
+    /// registered if it was); its budget cost drops to zero until page-in.
+    fn offload_block_locked(&self, st: &mut PoolState, id: u32) {
+        let (bytes, registered) = {
+            let b = st.slots[id as usize]
+                .as_mut()
+                .expect("offloaded block is live");
+            debug_assert!(!b.payload.is_offloaded(), "double offload");
+            let payload = std::mem::replace(&mut b.payload, Payload::Offloaded);
+            let bytes = self.payload_bytes(&payload);
+            if matches!(payload, Payload::Q8 { .. }) {
+                st.quantized -= 1;
+            }
+            let registered = b.hash.is_some();
+            st.host_slab.insert(id, payload);
+            (bytes, registered)
+        };
+        st.host_slab_bytes += bytes;
+        st.swap_out_bytes += bytes;
+        st.resident_bytes -= bytes;
+        if registered {
+            st.shared_bytes -= bytes;
+            self.sync_shared_guard(st);
+        }
+        self.sync_host_guard(st);
+        // An offloaded block is not device-addressable: drop the copy (a
+        // real backend frees the PJRT buffer; page-in re-uploads).
+        let mut dev = self.dev.write().unwrap();
+        if let Some(buf) = dev.slots.get_mut(id as usize).and_then(|s| s.take()) {
+            dev.bytes -= self.dev_buf_bytes(&buf);
+            dev.sync_guard();
+        }
+    }
+
+    /// Page block `id`'s payload back in from the host slab, making room
+    /// under the byte budget first (offload-then-evict, same order as a
+    /// rent) and re-uploading the device copy.  Fails — leaving the entry
+    /// offloaded and intact — when the budget cannot fit it; registry
+    /// chain walks degrade that to a miss.
+    fn page_in_locked(&self, st: &mut PoolState, id: u32) -> Result<()> {
+        let bytes = self.payload_bytes(
+            st.host_slab
+                .get(&id)
+                .expect("paged-in block has a slab entry"),
+        );
+        self.make_room_locked(st, bytes)?;
+        let payload = st
+            .host_slab
+            .remove(&id)
+            .expect("slab entry survives make_room (it is not resident-parked)");
+        st.host_slab_bytes -= bytes;
+        st.swap_in_bytes += bytes;
+        st.page_ins += 1;
+        st.resident_bytes += bytes;
+        if matches!(payload, Payload::Q8 { .. }) {
+            st.quantized += 1;
+        }
+        let registered = {
+            let b = st.slots[id as usize]
+                .as_mut()
+                .expect("paged-in block is live");
+            debug_assert!(b.payload.is_offloaded());
+            b.payload = payload;
+            b.hash.is_some()
+        };
+        if registered {
+            st.shared_bytes += bytes;
+            self.sync_shared_guard(st);
+        }
+        self.sync_host_guard(st);
+        // Re-upload: the whole payload crosses host→device again, at its
+        // tier size.
+        let b = st.slots[id as usize]
+            .as_ref()
+            .expect("paged-in block is live");
+        self.dev_restore(id, &b.payload);
+        Ok(())
+    }
+
+    /// Materialise a device copy of `payload` for block `id` (page-in
+    /// path), charging the full tier-size upload.
+    fn dev_restore(&self, id: u32, payload: &Payload) {
+        let buf = match payload {
+            Payload::F32 { k, v } => DevBuf::F32 {
+                k: k.clone(),
+                v: v.clone(),
+            },
+            Payload::Q8 {
+                k,
+                v,
+                k_scales,
+                v_scales,
+            } => DevBuf::Q8 {
+                k: k.clone(),
+                v: v.clone(),
+                k_scales: k_scales.clone(),
+                v_scales: v_scales.clone(),
+            },
+            Payload::Offloaded => unreachable!("page-in restored a materialised payload"),
+        };
+        let bytes = self.dev_buf_bytes(&buf);
+        let mut dev = self.dev.write().unwrap();
+        debug_assert!(
+            dev.slots[id as usize].is_none(),
+            "offload dropped the device copy"
+        );
+        dev.slots[id as usize] = Some(buf);
+        dev.bytes += bytes;
+        dev.sync_guard();
+        drop(dev);
+        self.h2d_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     fn sync_shared_guard(&self, st: &mut PoolState) {
-        let bytes = st.shared as u64 * self.block_bytes();
+        let bytes = st.shared_bytes;
         if let Some(g) = st.shared_guard.as_mut() {
+            g.resize(bytes);
+        }
+    }
+
+    fn sync_host_guard(&self, st: &mut PoolState) {
+        let bytes = st.host_slab_bytes;
+        if let Some(g) = st.host_guard.as_mut() {
             g.resize(bytes);
         }
     }
@@ -760,6 +1326,10 @@ impl KvPool {
         }
         st.registry.insert(hash, id);
         st.shared += 1;
+        // A registering cache holds a reference, so the payload is
+        // fp32-resident: the SharedKv charge starts at full block size and
+        // shrinks if the block later demotes or offloads.
+        st.shared_bytes += self.block_bytes();
         self.sync_shared_guard(&mut st);
         self.debug_validate(&st);
         true
@@ -811,22 +1381,36 @@ impl KvPool {
             let Some(&id) = st.registry.get(h) else {
                 break;
             };
-            let block = st.slots[id as usize]
-                .as_ref()
-                .expect("registered block is live");
-            if block.keys.as_deref() != Some(&keys[i * bt..(i + 1) * bt]) {
-                break; // hash collision: contents NOT content-equal
+            let offloaded = {
+                let block = st.slots[id as usize]
+                    .as_ref()
+                    .expect("registered block is live");
+                if block.keys.as_deref() != Some(&keys[i * bt..(i + 1) * bt]) {
+                    break; // hash collision: contents NOT content-equal
+                }
+                block.payload.is_offloaded()
+            };
+            // A hit on a cold-tier entry pages it back in first; if the
+            // byte budget cannot make room the hit degrades to a miss —
+            // attaching an unreadable block would be worse than
+            // recomputing it.
+            if offloaded && self.page_in_locked(st, id).is_err() {
+                break;
+            }
+            // Take the reference (and the LRU bump) immediately, not in a
+            // deferred pass: a later hit's page-in makes room by demoting
+            // refcount-0 entries, and must never re-offload a block this
+            // same walk just paged in.
+            let tick = st.tick;
+            st.tick += 1;
+            {
+                let b = st.slots[id as usize]
+                    .as_mut()
+                    .expect("registered block is live");
+                b.refs += 1;
+                b.last_used = tick;
             }
             ids.push(id);
-        }
-        let base = st.tick;
-        st.tick += ids.len() as u64;
-        for (j, &id) in ids.iter().enumerate() {
-            let b = st.slots[id as usize]
-                .as_mut()
-                .expect("registered block is live");
-            b.refs += 1;
-            b.last_used = base + j as u64;
         }
         ids
     }
@@ -859,6 +1443,17 @@ impl KvPool {
         debug_assert!(off + run <= bt);
         debug_assert!(src_at + run <= n_src);
         let mut st = self.state.lock();
+        // A write into a cold-tier block (a parked session growing again
+        // without an explicit resume) pages it in first — writes only ever
+        // land on materialised payloads.
+        if st.slots[id as usize]
+            .as_ref()
+            .expect("written block is live")
+            .payload
+            .is_offloaded()
+        {
+            self.page_in_locked(&mut st, id)?;
+        }
         let must_cow = {
             let b = st.slots[id as usize]
                 .as_ref()
@@ -866,24 +1461,37 @@ impl KvPool {
             b.refs > 1 || b.hash.is_some()
         };
         let target = if must_cow {
-            // Rent may itself evict a parked entry or fail with
+            // Rent may itself offload/evict a parked entry or fail with
             // backpressure; nothing has been mutated yet on failure.
             let tid = self.rent_locked(&mut st)?;
             // Full-block copy: rows outside the written run may still be
             // valid for the writing cache (partial overwrites after
-            // truncation into a shared block).
+            // truncation into a shared block).  A quantized source
+            // CoW-promotes: the private copy is full-precision fp32
+            // reconstructed from the stored ints and scales.
             let (ck, cv) = {
                 let src = st.slots[id as usize]
                     .as_ref()
                     .expect("cow source is live");
-                (src.k.clone(), src.v.clone())
+                match &src.payload {
+                    Payload::F32 { k, v } => (k.clone(), v.clone()),
+                    Payload::Q8 {
+                        k,
+                        v,
+                        k_scales,
+                        v_scales,
+                    } => (
+                        q8_dequantize(k, k_scales, row),
+                        q8_dequantize(v, v_scales, row),
+                    ),
+                    Payload::Offloaded => unreachable!("paged in above"),
+                }
             };
             {
                 let dst = st.slots[tid as usize]
                     .as_mut()
                     .expect("cow target is live");
-                dst.k = ck;
-                dst.v = cv;
+                dst.payload = Payload::F32 { k: ck, v: cv };
             }
             self.release_ref_locked(&mut st, id);
             st.cow_copies += 1;
@@ -895,11 +1503,14 @@ impl KvPool {
             let b = st.slots[target as usize]
                 .as_mut()
                 .expect("write target is live");
+            let Payload::F32 { k, v } = &mut b.payload else {
+                unreachable!("in-place write targets are hot-tier (q8 ⇒ registered ⇒ CoW)");
+            };
             for layer in 0..n_layers {
                 let dst = (layer * bt + off) * row;
                 let src = (layer * n_src + src_at) * row;
-                b.k[dst..dst + run * row].copy_from_slice(&k_rows[src..src + run * row]);
-                b.v[dst..dst + run * row].copy_from_slice(&v_rows[src..src + run * row]);
+                k[dst..dst + run * row].copy_from_slice(&k_rows[src..src + run * row]);
+                v[dst..dst + run * row].copy_from_slice(&v_rows[src..src + run * row]);
             }
         }
         // Write-through: the touched run on the in-place path; the whole
@@ -910,41 +1521,81 @@ impl KvPool {
             let b = st.slots[target as usize]
                 .as_ref()
                 .expect("write target is live");
-            self.dev_sync(target, &b.k, &b.v, s_off, s_n);
+            let Payload::F32 { k, v } = &b.payload else {
+                unreachable!("write target stays hot-tier");
+            };
+            self.dev_sync(target, k, v, s_off, s_n);
         }
         self.debug_validate(&st);
         Ok(target)
     }
 
     /// Deep-copy `src_id` into a fresh private block (cache cloning),
-    /// syncing the first `valid_rows` rows to the new device slot.
+    /// syncing the first `valid_rows` rows to the new device slot.  A
+    /// warm- or cold-tier source promotes: the clone is a private fp32
+    /// block whatever tier the source occupies.
     pub(crate) fn clone_block(&self, src_id: u32, valid_rows: usize) -> Result<u32> {
         let mut st = self.state.lock();
         let dst = self.rent_locked(&mut st)?;
         let (ck, cv) = {
-            let s = st.slots[src_id as usize]
-                .as_ref()
-                .expect("clone source is live");
-            (s.k.clone(), s.v.clone())
+            let view = self.tier_view(&st, src_id);
+            (
+                view.k().to_vec().into_boxed_slice(),
+                view.v().to_vec().into_boxed_slice(),
+            )
         };
         {
             let d = st.slots[dst as usize]
                 .as_mut()
                 .expect("clone target is live");
-            d.k = ck;
-            d.v = cv;
+            d.payload = Payload::F32 { k: ck, v: cv };
         }
         if valid_rows > 0 {
             let d = st.slots[dst as usize]
                 .as_ref()
                 .expect("clone target is live");
-            self.dev_sync(dst, &d.k, &d.v, 0, valid_rows);
+            let Payload::F32 { k, v } = &d.payload else {
+                unreachable!("clone target just assigned fp32");
+            };
+            self.dev_sync(dst, k, v, 0, valid_rows);
         }
         self.debug_validate(&st);
         Ok(dst)
     }
 
     // ── Host-side reads (block-table gathers) ──────────────────────────
+
+    /// Resolve block `id`'s K/V floats whatever tier the payload occupies:
+    /// hot fp32 borrows straight from the slot, warm int8 dequantizes into
+    /// an owned buffer (reads never mutate the stored payload), and cold
+    /// payloads are read through the host slab.  Host gathers go through
+    /// this, which is what makes mixed-tier block tables transparent to
+    /// every reader.
+    fn tier_view<'a>(&self, st: &'a PoolState, id: u32) -> TierView<'a> {
+        let b = st.slots[id as usize]
+            .as_ref()
+            .expect("viewed block is live");
+        let payload = match &b.payload {
+            Payload::Offloaded => st
+                .host_slab
+                .get(&id)
+                .expect("offloaded block has a slab entry"),
+            p => p,
+        };
+        match payload {
+            Payload::F32 { k, v } => TierView::Hot { k, v },
+            Payload::Q8 {
+                k,
+                v,
+                k_scales,
+                v_scales,
+            } => TierView::Warm {
+                k: q8_dequantize(k, k_scales, self.row()),
+                v: q8_dequantize(v, v_scales, self.row()),
+            },
+            Payload::Offloaded => unreachable!("slab entries are materialised payloads"),
+        }
+    }
 
     /// Gather the first `valid` positions addressed by `table` into
     /// caller-provided zeroed `[L, c, KV, hd]` buffers — the flat reference
@@ -971,14 +1622,12 @@ impl KvPool {
                 break;
             }
             let run = (valid - start).min(bt);
-            let b = st.slots[id as usize]
-                .as_ref()
-                .expect("gathered block is live");
+            let view = self.tier_view(&st, id);
             for layer in 0..n_layers {
                 let dst = layer * per + start * row;
                 let src = layer * bt * row;
-                k_out[dst..dst + run * row].copy_from_slice(&b.k[src..src + run * row]);
-                v_out[dst..dst + run * row].copy_from_slice(&b.v[src..src + run * row]);
+                k_out[dst..dst + run * row].copy_from_slice(&view.k()[src..src + run * row]);
+                v_out[dst..dst + run * row].copy_from_slice(&view.v()[src..src + run * row]);
             }
         }
     }
@@ -998,15 +1647,16 @@ impl KvPool {
         let mut k = Vec::with_capacity(n_layers * n * row);
         let mut v = Vec::with_capacity(n_layers * n * row);
         let st = self.state.lock();
+        // Resolve each block's tier once up front — a warm-tier block
+        // dequantizes one time, not once per gathered row.
+        let views: Vec<TierView> = table.iter().map(|&id| self.tier_view(&st, id)).collect();
         for layer in 0..n_layers {
             for &pos in indices {
                 let (bi, off) = (pos / bt, pos % bt);
-                let b = st.slots[table[bi] as usize]
-                    .as_ref()
-                    .expect("gathered block is live");
+                let view = &views[bi];
                 let o = (layer * bt + off) * row;
-                k.extend_from_slice(&b.k[o..o + row]);
-                v.extend_from_slice(&b.v[o..o + row]);
+                k.extend_from_slice(&view.k()[o..o + row]);
+                v.extend_from_slice(&view.v()[o..o + row]);
             }
         }
         (k, v)
@@ -1028,16 +1678,15 @@ impl KvPool {
         }
         let mut out = Vec::with_capacity((end - start) * row);
         let st = self.state.lock();
+        let views: Vec<TierView> = table.iter().map(|&id| self.tier_view(&st, id)).collect();
         for pos in start..end {
             let (bi, off) = (pos / bt, pos % bt);
-            let b = st.slots[table[bi] as usize]
-                .as_ref()
-                .expect("sliced block is live");
+            let view = &views[bi];
             let o = (layer * bt + off) * row;
             out.extend_from_slice(if want_v {
-                &b.v[o..o + row]
+                &view.v()[o..o + row]
             } else {
-                &b.k[o..o + row]
+                &view.k()[o..o + row]
             });
         }
         out
@@ -1061,20 +1710,22 @@ impl KvPool {
         let idx = id as usize;
         if dev.slots[idx].is_none() {
             let floats = self.block_floats();
-            dev.slots[idx] = Some(DevBuf {
+            dev.slots[idx] = Some(DevBuf::F32 {
                 k: vec![0.0; floats].into_boxed_slice(),
                 v: vec![0.0; floats].into_boxed_slice(),
             });
             dev.bytes += self.block_bytes();
             dev.sync_guard();
         }
-        let buf = dev.slots[idx].as_mut().expect("slot just materialised");
+        let Some(DevBuf::F32 { k, v }) = dev.slots[idx].as_mut() else {
+            unreachable!("row write-throughs target hot-tier blocks, whose device copy is fp32");
+        };
         // Host and device copies share the `[L, bt, row]` layout, so the
         // offsets coincide.
         for layer in 0..self.n_layers {
             let o = (layer * bt + off) * row;
-            buf.k[o..o + n * row].copy_from_slice(&k_host[o..o + n * row]);
-            buf.v[o..o + n * row].copy_from_slice(&v_host[o..o + n * row]);
+            k[o..o + n * row].copy_from_slice(&k_host[o..o + n * row]);
+            v[o..o + n * row].copy_from_slice(&v_host[o..o + n * row]);
         }
         drop(dev);
         self.h2d_bytes
@@ -1086,8 +1737,13 @@ impl KvPool {
     /// resident block copies.  Ships only the table (counted as the step's
     /// upload cost) — never the cache contents.
     ///
-    /// Fails if a needed block has no device copy, which can only mean the
-    /// table addresses a different pool or rows that were never written.
+    /// The gather is tier-aware: a warm int8 block's device copy carries
+    /// its ints and scales, and the stub program dequantizes in-gather
+    /// (bit-identical to the host-side reconstruction).
+    ///
+    /// Fails if a needed block has no device copy: the table addresses a
+    /// different pool, rows that were never written, or an offloaded
+    /// (cold-tier) block that must be paged in before decoding.
     pub fn dev_gather_prefix(
         &self,
         table: &[u32],
@@ -1124,8 +1780,8 @@ impl KvPool {
         }
         {
             let dev = self.dev.read().unwrap();
-            let mut k_blocks: Vec<&[f32]> = Vec::with_capacity(need);
-            let mut v_blocks: Vec<&[f32]> = Vec::with_capacity(need);
+            let mut k_blocks: Vec<xla_stub::PagedBlock> = Vec::with_capacity(need);
+            let mut v_blocks: Vec<xla_stub::PagedBlock> = Vec::with_capacity(need);
             for &id in &table[..need] {
                 let slot = dev
                     .slots
@@ -1134,10 +1790,29 @@ impl KvPool {
                     .ok_or_else(|| {
                         anyhow!("paged gather: block {id} has no device-resident copy")
                     })?;
-                k_blocks.push(&slot.k[..]);
-                v_blocks.push(&slot.v[..]);
+                match slot {
+                    DevBuf::F32 { k, v } => {
+                        k_blocks.push(xla_stub::PagedBlock::F32(k));
+                        v_blocks.push(xla_stub::PagedBlock::F32(v));
+                    }
+                    DevBuf::Q8 {
+                        k,
+                        v,
+                        k_scales,
+                        v_scales,
+                    } => {
+                        k_blocks.push(xla_stub::PagedBlock::Q8 {
+                            q: k,
+                            scales: k_scales,
+                        });
+                        v_blocks.push(xla_stub::PagedBlock::Q8 {
+                            q: v,
+                            scales: v_scales,
+                        });
+                    }
+                }
             }
-            xla_stub::paged_gather_prefix(
+            xla_stub::paged_gather_prefix_tiered(
                 &k_blocks,
                 self.n_layers,
                 self.block_tokens,
@@ -1146,7 +1821,7 @@ impl KvPool {
                 c,
                 k_out,
             );
-            xla_stub::paged_gather_prefix(
+            xla_stub::paged_gather_prefix_tiered(
                 &v_blocks,
                 self.n_layers,
                 self.block_tokens,
@@ -1175,12 +1850,78 @@ impl KvPool {
 
     /// Attach the shared-block accounting guard
     /// ([`crate::cortex::memory::MemKind::SharedKv`]): registry-shared
-    /// blocks are charged here exactly once, however many caches reference
-    /// them.  Replaces any previously attached guard.
+    /// blocks are charged here exactly once, at their *resident tier size*
+    /// (full for fp32, ~3.5× less once demoted to int8, zero while
+    /// offloaded — those bytes are `HostKv`'s), however many caches
+    /// reference them.  Replaces any previously attached guard.
     pub fn track_shared(&self, mut guard: MemGuard) {
         let mut st = self.state.lock();
-        guard.resize(st.shared as u64 * self.block_bytes());
+        guard.resize(st.shared_bytes);
         st.shared_guard = Some(guard);
+    }
+
+    /// Attach the host-slab accounting guard
+    /// ([`crate::cortex::memory::MemKind::HostKv`]): offloaded payload
+    /// bytes are charged here — and only here — while they sit in the cold
+    /// tier.  Replaces any previously attached guard.
+    pub fn track_host(&self, mut guard: MemGuard) {
+        let mut st = self.state.lock();
+        guard.resize(st.host_slab_bytes);
+        st.host_guard = Some(guard);
+    }
+
+    // ── Session park / resume (the cold tier's public face) ────────────
+
+    /// Spill one *private* block (refcount 1, unregistered — the caller's
+    /// cache holds the only reference) to the host slab: the session-park
+    /// path [`super::kv::KvCache::park_to_host`] drives.  Lossless — the
+    /// payload moves verbatim, so resume decodes bit-identically.  Fails
+    /// when the slab is disabled or full; no-op if already offloaded.
+    pub(crate) fn offload_ref(&self, id: u32) -> Result<()> {
+        let mut st = self.state.lock();
+        {
+            let b = st.slots[id as usize]
+                .as_ref()
+                .expect("offloaded block has a slot");
+            if b.payload.is_offloaded() {
+                return Ok(());
+            }
+            if b.refs != 1 || b.hash.is_some() {
+                bail!(
+                    "offload: block {id} is shared (refs {}, registered {}) — only private \
+                     session blocks park to host",
+                    b.refs,
+                    b.hash.is_some()
+                );
+            }
+        }
+        let cap = self.host_slab_blocks.load(Ordering::Relaxed);
+        if cap == 0 || st.host_slab.len() >= cap {
+            bail!(
+                "offload: host slab full ({} of {cap} blocks) — cannot park block {id}",
+                st.host_slab.len()
+            );
+        }
+        self.offload_block_locked(&mut st, id);
+        self.debug_validate(&st);
+        Ok(())
+    }
+
+    /// Page one block back in from the host slab (session resume); no-op
+    /// if it is already resident.  Fails — leaving the entry intact — when
+    /// the byte budget cannot make room.
+    pub(crate) fn page_in_ref(&self, id: u32) -> Result<()> {
+        let mut st = self.state.lock();
+        if st.slots[id as usize]
+            .as_ref()
+            .expect("paged-in block has a slot")
+            .payload
+            .is_offloaded()
+        {
+            self.page_in_locked(&mut st, id)?;
+        }
+        self.debug_validate(&st);
+        Ok(())
     }
 
     /// Bytes currently held by device-resident block copies.
@@ -1207,56 +1948,48 @@ impl KvPool {
     }
 
     pub fn stats(&self) -> PoolStats {
-        let (
-            blocks_live,
-            blocks_free,
-            blocks_high_water,
-            shared_blocks,
-            prefix_hits,
-            prefix_misses,
-            prefix_mid_hits,
-            prefix_evictions,
-            cow_copies,
-        ) = {
+        let mut s = {
             let st = self.state.lock();
-            (
-                st.live,
-                st.free.len(),
-                st.high_water,
-                st.shared,
-                st.prefix_hits,
-                st.prefix_misses,
-                st.prefix_mid_hits,
-                st.prefix_evictions,
-                st.cow_copies,
-            )
+            PoolStats {
+                block_tokens: self.block_tokens,
+                block_bytes: self.block_bytes(),
+                blocks_live: st.live,
+                blocks_free: st.free.len(),
+                blocks_high_water: st.high_water,
+                shared_blocks: st.shared,
+                prefix_hits: st.prefix_hits,
+                prefix_misses: st.prefix_misses,
+                prefix_mid_hits: st.prefix_mid_hits,
+                prefix_evictions: st.prefix_evictions,
+                cow_copies: st.cow_copies,
+                resident_payload_bytes: st.resident_bytes,
+                quantized_blocks: st.quantized,
+                quant_saved_bytes: st.quantized as u64
+                    * (self.block_bytes() - self.q8_block_bytes()),
+                q8_block_bytes: self.q8_block_bytes(),
+                offloaded_blocks: st.host_slab.len(),
+                host_slab_bytes: st.host_slab_bytes,
+                shared_payload_bytes: st.shared_bytes,
+                swap_out_bytes: st.swap_out_bytes,
+                swap_in_bytes: st.swap_in_bytes,
+                swap_dropped_bytes: st.swap_dropped_bytes,
+                resume_page_ins: st.page_ins,
+                ..PoolStats::default()
+            }
         };
-        let (dev_blocks, dev_bytes) = {
+        {
             let dev = self.dev.read().unwrap();
-            (dev.slots.iter().filter(|s| s.is_some()).count(), dev.bytes)
-        };
-        PoolStats {
-            block_tokens: self.block_tokens,
-            block_bytes: self.block_bytes(),
-            blocks_live,
-            blocks_free,
-            blocks_high_water,
-            rents: self.rents.load(Ordering::Relaxed),
-            reuses: self.reuses.load(Ordering::Relaxed),
-            releases: self.releases.load(Ordering::Relaxed),
-            rows_live: self.rows_live.load(Ordering::Relaxed),
-            dev_blocks,
-            dev_bytes,
-            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
-            dev_gathers: self.dev_gathers.load(Ordering::Relaxed),
-            shared_blocks,
-            prefix_hits,
-            prefix_misses,
-            prefix_mid_hits,
-            prefix_evictions,
-            cow_copies,
-            reserved_blocks: self.reserved.load(Ordering::SeqCst),
+            s.dev_blocks = dev.slots.iter().filter(|sl| sl.is_some()).count();
+            s.dev_bytes = dev.bytes;
         }
+        s.rents = self.rents.load(Ordering::Relaxed);
+        s.reuses = self.reuses.load(Ordering::Relaxed);
+        s.releases = self.releases.load(Ordering::Relaxed);
+        s.rows_live = self.rows_live.load(Ordering::Relaxed);
+        s.h2d_bytes = self.h2d_bytes.load(Ordering::Relaxed);
+        s.dev_gathers = self.dev_gathers.load(Ordering::Relaxed);
+        s.reserved_blocks = self.reserved.load(Ordering::SeqCst);
+        s
     }
 
     // ── The invariant sanitizer ────────────────────────────────────────
@@ -1274,17 +2007,31 @@ impl KvPool {
     /// * `registry` — the shared gauge, the registry map and the
     ///   hash-carrying slots agree, and every registry entry points at a
     ///   slot carrying that hash (no stale ids);
-    /// * `shared-bytes` — the `SharedKv` accounting guard charges exactly
-    ///   `shared * block_bytes`;
-    /// * `cap` — when capped, live blocks never exceed `max_blocks`
-    ///   (assumes the cap was not lowered below `live` mid-flight via
-    ///   [`KvPool::set_limits`]).  The stronger `live + reserved ≤ max`
-    ///   is deliberately NOT asserted: a session legally double-counts
-    ///   while its prefill rents real blocks under a still-held
-    ///   [`BlockReservation`], so it fails transiently by design;
+    /// * `shared-bytes` — the shared gauge and the `SharedKv` accounting
+    ///   guard charge exactly the resident tier-size bytes of registered
+    ///   blocks;
+    /// * `tier` — tier populations partition the block set: free-listed
+    ///   blocks are fp32, quantized blocks are registered, a block is
+    ///   offloaded *iff* the host slab holds its payload, the `quantized`
+    ///   gauge counts the warm tier exactly, and every materialised device
+    ///   copy is at the same tier as its host payload;
+    /// * `host-slab` — the slab byte gauge equals the sum of its payloads,
+    ///   the `HostKv` guard charges exactly that, and the swap traffic
+    ///   conserves: `swap_out == swap_in + swap_dropped + host_slab_bytes`;
+    /// * `resident-bytes` — the budget gauge equals the sum of live
+    ///   blocks' tier-size payload bytes;
+    /// * `cap` — when capped, resident payload bytes never exceed the
+    ///   byte budget `max_blocks × block_bytes`, and the host slab never
+    ///   exceeds `host_slab_blocks` entries (both assume the knob was not
+    ///   lowered below current occupancy mid-flight via
+    ///   [`KvPool::set_limits`] / [`KvPool::set_tiering`]).  The stronger
+    ///   `resident + reserved ≤ budget` is deliberately NOT asserted: a
+    ///   session legally double-counts while its prefill rents real blocks
+    ///   under a still-held [`BlockReservation`], so it fails transiently
+    ///   by design;
     /// * `dev-slab` — device free ids are unique, address no occupied
     ///   host slot and no materialised buffer, and the device byte gauge
-    ///   matches the materialised-block count.
+    ///   matches the per-tier sum over materialised buffers.
     ///
     /// Run at tick boundaries by the step scheduler (debug builds) and
     /// explicitly from the property suites at any depth; the per-op debug
@@ -1296,11 +2043,19 @@ impl KvPool {
             Ok(()) => Vec::new(),
             Err(e) => vec![e],
         };
-        let max = self.max_blocks.load(Ordering::Relaxed);
-        if max > 0 && st.live > max {
+        if let Some(budget) = self.budget_bytes() {
+            if st.resident_bytes > budget {
+                errs.push(format!(
+                    "cap: {} resident payload bytes exceed the byte budget {budget}",
+                    st.resident_bytes
+                ));
+            }
+        }
+        let slab_cap = self.host_slab_blocks.load(Ordering::Relaxed);
+        if st.host_slab.len() > slab_cap {
             errs.push(format!(
-                "cap: {} blocks live exceeds max_blocks {max}",
-                st.live
+                "host-slab: {} entries exceed host_slab_blocks {slab_cap}",
+                st.host_slab.len()
             ));
         }
         // Lock order: `state` before `dev` — the documented pool order.
@@ -1323,13 +2078,35 @@ impl KvPool {
                 ));
             }
         }
-        let materialised = dev.slots.iter().filter(|s| s.is_some()).count();
-        let want = materialised as u64 * self.block_bytes();
+        let want: u64 = dev
+            .slots
+            .iter()
+            .flatten()
+            .map(|b| self.dev_buf_bytes(b))
+            .sum();
         if dev.bytes != want {
             errs.push(format!(
-                "dev-slab: byte gauge {} != {materialised} materialised blocks ({want} bytes)",
+                "dev-slab: byte gauge {} != per-tier sum over materialised buffers ({want} bytes)",
                 dev.bytes
             ));
+        }
+        // Tier agreement: a materialised device copy mirrors its host
+        // payload's tier; offloaded blocks have none.
+        for (i, slot) in dev.slots.iter().enumerate() {
+            let Some(buf) = slot else { continue };
+            let Some(b) = st.slots.get(i).and_then(|s| s.as_ref()) else {
+                continue; // free-id checks above cover unallocated slots
+            };
+            let host_tier = b.payload.tier_name();
+            let dev_tier = match buf {
+                DevBuf::F32 { .. } => "f32",
+                DevBuf::Q8 { .. } => "q8",
+            };
+            if host_tier != dev_tier {
+                errs.push(format!(
+                    "tier: block {i} device copy is {dev_tier} but its host payload is {host_tier}"
+                ));
+            }
         }
         if errs.is_empty() {
             Ok(())
@@ -1364,14 +2141,49 @@ impl KvPool {
                             "free-list: block {id} is free-listed while registered"
                         ));
                     }
+                    if !matches!(b.payload, Payload::F32 { .. }) {
+                        errs.push(format!(
+                            "tier: block {id} is free-listed at the {} tier (free blocks are fp32)",
+                            b.payload.tier_name()
+                        ));
+                    }
                 }
             }
         }
         let mut referenced = 0usize;
         let mut parked = 0usize;
         let mut hashed = 0usize;
+        let mut quantized = 0usize;
+        let mut resident_bytes = 0u64;
+        let mut shared_bytes = 0u64;
         for (i, slot) in st.slots.iter().enumerate() {
             let Some(b) = slot else { continue };
+            let live = b.refs > 0 || b.hash.is_some();
+            if live {
+                resident_bytes += self.payload_bytes(&b.payload);
+                if b.hash.is_some() {
+                    shared_bytes += self.payload_bytes(&b.payload);
+                }
+            }
+            match &b.payload {
+                Payload::Q8 { .. } => {
+                    quantized += 1;
+                    if b.hash.is_none() {
+                        errs.push(format!(
+                            "tier: block {i} is int8-quantized but not registered \
+                             (only immutable registry blocks demote)"
+                        ));
+                    }
+                }
+                Payload::Offloaded => {
+                    if !st.host_slab.contains_key(&(i as u32)) {
+                        errs.push(format!(
+                            "tier: block {i} is marked offloaded but the host slab has no payload"
+                        ));
+                    }
+                }
+                Payload::F32 { .. } => {}
+            }
             if let Some(hash) = b.hash {
                 hashed += 1;
                 match b.keys.as_deref() {
@@ -1445,15 +2257,66 @@ impl KvPool {
                 Some(_) => {}
             }
         }
+        if st.quantized != quantized {
+            errs.push(format!(
+                "tier: quantized gauge {} != {quantized} live int8 payloads",
+                st.quantized
+            ));
+        }
+        if st.resident_bytes != resident_bytes {
+            errs.push(format!(
+                "resident-bytes: gauge {} != {resident_bytes} summed live payload bytes",
+                st.resident_bytes
+            ));
+        }
+        if st.shared_bytes != shared_bytes {
+            errs.push(format!(
+                "shared-bytes: gauge {} != {shared_bytes} summed registered payload bytes",
+                st.shared_bytes
+            ));
+        }
         if let Some(g) = st.shared_guard.as_ref() {
-            let want = st.shared as u64 * self.block_bytes();
-            if g.bytes() != want {
+            if g.bytes() != st.shared_bytes {
                 errs.push(format!(
-                    "shared-bytes: guard charges {} bytes, registry holds {} blocks ({want} bytes)",
+                    "shared-bytes: guard charges {} bytes, registered residents hold {}",
                     g.bytes(),
-                    st.shared
+                    st.shared_bytes
                 ));
             }
+        }
+        for &id in st.host_slab.keys() {
+            match st.slots.get(id as usize).and_then(|s| s.as_ref()) {
+                None => errs.push(format!(
+                    "tier: host slab holds a payload for unallocated block {id}"
+                )),
+                Some(b) if !b.payload.is_offloaded() => errs.push(format!(
+                    "tier: host slab holds a payload for block {id}, whose slot is {}-tier",
+                    b.payload.tier_name()
+                )),
+                Some(_) => {}
+            }
+        }
+        let slab_bytes: u64 = st.host_slab.values().map(|p| self.payload_bytes(p)).sum();
+        if st.host_slab_bytes != slab_bytes {
+            errs.push(format!(
+                "host-slab: byte gauge {} != {slab_bytes} summed slab payload bytes",
+                st.host_slab_bytes
+            ));
+        }
+        if let Some(g) = st.host_guard.as_ref() {
+            if g.bytes() != st.host_slab_bytes {
+                errs.push(format!(
+                    "host-slab: guard charges {} bytes, slab holds {}",
+                    g.bytes(),
+                    st.host_slab_bytes
+                ));
+            }
+        }
+        if st.swap_out_bytes != st.swap_in_bytes + st.swap_dropped_bytes + st.host_slab_bytes {
+            errs.push(format!(
+                "host-slab: swap traffic does not conserve: out {} != in {} + dropped {} + held {}",
+                st.swap_out_bytes, st.swap_in_bytes, st.swap_dropped_bytes, st.host_slab_bytes
+            ));
         }
         if errs.is_empty() {
             Ok(())
@@ -1514,6 +2377,21 @@ impl KvPool {
         st.live += 1;
     }
 
+    /// Drift the host-slab byte gauge off the stored payloads
+    /// (`host-slab`); the swap counter moves with it so the conservation
+    /// law stays isolated from the gauge drift.
+    fn corrupt_host_slab_gauge(&self) {
+        let mut st = self.state.lock();
+        st.host_slab_bytes += 1;
+        st.swap_out_bytes += 1;
+    }
+
+    /// Drift the quantized-tier population gauge (`tier`).
+    fn corrupt_quantized_gauge(&self) {
+        let mut st = self.state.lock();
+        st.quantized += 1;
+    }
+
     /// Poison the state mutex the way a real bug would: panic while
     /// holding it (the cascade regression test's setup).
     fn poison_state_for_test(&self) {
@@ -1556,6 +2434,27 @@ mod tests {
                 block_tokens,
                 max_blocks,
                 retain_free_blocks: usize::MAX,
+                ..KvPoolConfig::default()
+            },
+        )
+    }
+
+    /// A pool with both demotion tiers armed: int8 quantize-on-park plus a
+    /// host slab of `slab` blocks.
+    fn tiered_pool(
+        block_tokens: usize,
+        max_blocks: usize,
+        quantize_parked: bool,
+        slab: usize,
+    ) -> Arc<KvPool> {
+        KvPool::new(
+            &tiny_cfg(),
+            KvPoolConfig {
+                block_tokens,
+                max_blocks,
+                retain_free_blocks: usize::MAX,
+                quantize_parked,
+                host_slab_blocks: slab,
             },
         )
     }
@@ -1563,6 +2462,31 @@ mod tests {
     /// `[L, n, KV*hd]` rows filled with a constant, sized for `pool`.
     fn rows(p: &KvPool, n: usize, fill: f32) -> Vec<f32> {
         vec![fill; p.n_layers() * n * p.row()]
+    }
+
+    /// `[L, n, KV*hd]` rows with distinct, bounded values — quantization
+    /// tests need real per-row dynamic range, not a constant.
+    fn varied_rows(p: &KvPool, n: usize, seed: f32) -> Vec<f32> {
+        (0..p.n_layers() * n * p.row())
+            .map(|i| ((i as f32 + seed) * 0.618_034).sin())
+            .collect()
+    }
+
+    /// Assert `got` reconstructs `orig` within the symmetric-int8 bound:
+    /// per (layer, position) row, each element is within `max|row|/254`
+    /// (half the quantization step) plus float noise.
+    fn assert_close_q8(orig: &[f32], got: &[f32], row: usize) {
+        assert_eq!(orig.len(), got.len());
+        for (r, (o, g)) in orig.chunks(row).zip(got.chunks(row)).enumerate() {
+            let max = o.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let bound = max / 254.0 + 1e-6;
+            for (i, (&a, &b)) in o.iter().zip(g.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= bound,
+                    "row {r} elem {i}: {a} vs {b} exceeds the q8 bound {bound}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -1648,6 +2572,7 @@ mod tests {
                 block_tokens: 4,
                 max_blocks: 0,
                 retain_free_blocks: 1,
+                ..KvPoolConfig::default()
             },
         );
         let a = p.rent_ref().unwrap();
@@ -2179,6 +3104,7 @@ mod tests {
                 block_tokens: 4,
                 max_blocks: 0,
                 retain_free_blocks: 0, // every release returns to allocator
+                ..KvPoolConfig::default()
             },
         );
         let id = p.rent_ref().unwrap();
@@ -2234,5 +3160,530 @@ mod tests {
         p.release_ref(b);
         p.release_ref(b2);
         assert_eq!(t.live_bytes(MemKind::DeviceKv), 0);
+    }
+
+    // ---- tiered store: quantized (warm) + host-slab (cold) tiers --------
+
+    #[test]
+    fn parked_blocks_quantize_and_stay_readable_within_the_bound() {
+        let p = tiered_pool(4, 0, true, 0);
+        let keys: Vec<i32> = (0..4).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        let k_src = varied_rows(&p, 4, 1.0);
+        let v_src = varied_rows(&p, 4, 2.0);
+
+        let id = p.rent_ref().unwrap();
+        p.write_run(id, 0, 4, 0, 4, &k_src, &v_src).unwrap();
+        assert!(p.register_block(id, hashes[0], &keys));
+        p.release_ref(id); // parks → demotes to int8
+
+        let s = p.stats();
+        assert_eq!(s.quantized_blocks, 1);
+        assert_eq!(s.blocks_live, 1);
+        assert_eq!(s.resident_payload_bytes, p.q8_block_bytes());
+        assert_eq!(s.quant_saved_bytes, p.block_bytes() - p.q8_block_bytes());
+        assert!(
+            p.q8_block_bytes() * 3 < p.block_bytes(),
+            "int8 payload must be under a third of fp32 ({} vs {})",
+            p.q8_block_bytes(),
+            p.block_bytes()
+        );
+        p.check_invariants().unwrap();
+
+        // Host reads dequantize transparently, within the per-row bound.
+        let sz = p.n_layers() * 4 * p.row();
+        let (mut k, mut v) = (vec![0.0; sz], vec![0.0; sz]);
+        p.host_gather_prefix_into(&[id], 4, 4, &mut k, &mut v);
+        assert_close_q8(&k_src, &k, p.row());
+        assert_close_q8(&v_src, &v, p.row());
+
+        // …and the device-side tiered gather reconstructs the SAME floats:
+        // both paths dequantize with `q as f32 * scale`, bit-for-bit.
+        let (dk, dv) = p.dev_gather_prefix(&[id], 4, 4).unwrap();
+        assert_eq!(dk, k, "host and device dequantization must agree");
+        assert_eq!(dv, v);
+
+        // A chain hit attaches the quantized block as-is — no promotion.
+        let hit = p.lookup_chain(&hashes, &keys);
+        assert_eq!(hit, vec![id]);
+        assert_eq!(p.stats().quantized_blocks, 1);
+        p.release_ref(id);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn offload_and_page_in_round_trip_is_bit_identical() {
+        let p = tiered_pool(4, 0, false, 2);
+        let k_src = varied_rows(&p, 4, 3.0);
+        let v_src = varied_rows(&p, 4, 4.0);
+        let id = p.rent_ref().unwrap();
+        p.write_run(id, 0, 4, 0, 4, &k_src, &v_src).unwrap();
+        let (bk, bv) = p.dev_gather_prefix(&[id], 4, 4).unwrap();
+
+        p.offload_ref(id).unwrap();
+        let s = p.stats();
+        assert_eq!(s.offloaded_blocks, 1);
+        assert_eq!(s.host_slab_bytes, p.block_bytes());
+        assert_eq!(s.swap_out_bytes, p.block_bytes());
+        assert_eq!(s.resident_payload_bytes, 0);
+        assert_eq!(s.dev_blocks, 0, "offload drops the device copy");
+        assert_eq!(s.blocks_live, 1, "offloaded blocks stay live");
+        p.check_invariants().unwrap();
+
+        // Re-offloading is a no-op, and the cold block refuses device reads
+        // but still resolves host-side through the slab — verbatim.
+        p.offload_ref(id).unwrap();
+        assert_eq!(p.stats().swap_out_bytes, p.block_bytes());
+        assert!(p.dev_gather_prefix(&[id], 4, 4).is_err());
+        let sz = p.n_layers() * 4 * p.row();
+        let (mut k, mut v) = (vec![0.0; sz], vec![0.0; sz]);
+        p.host_gather_prefix_into(&[id], 4, 4, &mut k, &mut v);
+        assert_eq!(k, k_src);
+        assert_eq!(v, v_src);
+
+        p.page_in_ref(id).unwrap();
+        let s = p.stats();
+        assert_eq!(s.offloaded_blocks, 0);
+        assert_eq!(s.swap_in_bytes, p.block_bytes());
+        assert_eq!(s.resume_page_ins, 1);
+        assert_eq!(s.host_slab_bytes, 0);
+        // The lossless round-trip law: decode state after resume is the
+        // exact bytes that were parked.
+        let (ak, av) = p.dev_gather_prefix(&[id], 4, 4).unwrap();
+        assert_eq!(ak, bk);
+        assert_eq!(av, bv);
+        // …and paging in a resident block is a no-op.
+        p.page_in_ref(id).unwrap();
+        assert_eq!(p.stats().resume_page_ins, 1);
+        p.check_invariants().unwrap();
+        p.release_ref(id);
+    }
+
+    #[test]
+    fn offload_rejects_shared_blocks_and_full_slabs() {
+        let p = tiered_pool(4, 0, false, 1);
+        // A registered block is shared state — it parks via the registry's
+        // own demotion path, never via session offload.
+        let keys: Vec<i32> = (0..4).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        let shared = p.rent_ref().unwrap();
+        assert!(p.register_block(shared, hashes[0], &keys));
+        let err = p.offload_ref(shared).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("only private session blocks"),
+            "unexpected: {err:#}"
+        );
+
+        // The slab holds one block; the second private park must bail.
+        let a = p.rent_ref().unwrap();
+        let b = p.rent_ref().unwrap();
+        p.offload_ref(a).unwrap();
+        let err = p.offload_ref(b).unwrap_err();
+        assert!(format!("{err:#}").contains("host slab full"), "unexpected: {err:#}");
+
+        // A pool with no slab configured refuses outright.
+        let p0 = tiered_pool(4, 0, false, 0);
+        let c = p0.rent_ref().unwrap();
+        let err = p0.offload_ref(c).unwrap_err();
+        assert!(format!("{err:#}").contains("host slab full"), "unexpected: {err:#}");
+        p.check_invariants().unwrap();
+        p0.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pressure_offloads_parked_registry_entries_before_evicting() {
+        let p = tiered_pool(4, 3, false, 2);
+        let keys: Vec<i32> = (0..12).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        let k_src = varied_rows(&p, 12, 5.0);
+        let v_src = varied_rows(&p, 12, 6.0);
+        let ids: Vec<u32> = (0..3).map(|_| p.rent_ref().unwrap()).collect();
+        for (i, &id) in ids.iter().enumerate() {
+            p.write_run(id, 0, 4, i * 4, 12, &k_src, &v_src).unwrap();
+            assert!(p.register_block(id, hashes[i], &keys[i * 4..(i + 1) * 4]));
+        }
+        for &id in &ids {
+            p.release_ref(id);
+        }
+
+        // At the cap with every block parked: a rent spills the LRU entry
+        // to the host slab instead of evicting it — the chain survives.
+        let fresh = p.rent_ref().unwrap();
+        let s = p.stats();
+        assert_eq!(s.prefix_evictions, 0, "offload-first: nothing evicted");
+        assert_eq!(s.offloaded_blocks, 1);
+        assert_eq!(s.shared_blocks, 3, "the cold entry stays registered");
+        assert_eq!(s.swap_out_bytes, p.block_bytes());
+        assert_eq!(s.blocks_live, 4, "4 live blocks under a 3-block device cap");
+        p.check_invariants().unwrap();
+
+        // Free the private block, then hit the full chain: the cold entry
+        // pages back in and all three blocks attach.
+        p.release_ref(fresh);
+        let hit = p.lookup_chain(&hashes, &keys);
+        assert_eq!(hit, ids);
+        let s = p.stats();
+        assert_eq!(s.resume_page_ins, 1);
+        assert_eq!(s.offloaded_blocks, 0);
+        assert_eq!(s.swap_in_bytes, s.swap_out_bytes, "every spilled byte paged back");
+        // …and the paged-in prefix reads back verbatim (fp32 tier).
+        let sz = p.n_layers() * 12 * p.row();
+        let (mut k, mut v) = (vec![0.0; sz], vec![0.0; sz]);
+        p.host_gather_prefix_into(&hit, 12, 12, &mut k, &mut v);
+        assert_eq!(k, k_src);
+        assert_eq!(v, v_src);
+        for &id in &hit {
+            p.release_ref(id);
+        }
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_resumes_when_the_host_slab_is_full() {
+        let p = tiered_pool(4, 2, false, 1);
+        let keys: Vec<i32> = (0..8).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        for i in 0..2 {
+            let id = p.rent_ref().unwrap();
+            assert!(p.register_block(id, hashes[i], &keys[i * 4..(i + 1) * 4]));
+            p.release_ref(id);
+        }
+        // First rent offloads the LRU entry into the last slab slot…
+        let _r1 = p.rent_ref().unwrap();
+        let s = p.stats();
+        assert_eq!(s.offloaded_blocks, 1);
+        assert_eq!(s.prefix_evictions, 0);
+        // …the second finds the slab full and falls back to eviction.
+        let _r2 = p.rent_ref().unwrap();
+        let s = p.stats();
+        assert_eq!(s.prefix_evictions, 1);
+        assert_eq!(s.offloaded_blocks, 1);
+        assert_eq!(s.shared_blocks, 1, "the offloaded entry survives, the evictee is gone");
+        // Both tiers exhausted → the rent sheds with backpressure.
+        let err = p.rent_ref().unwrap_err();
+        assert!(format!("{err:#}").contains("exhausted"), "unexpected: {err:#}");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn quantized_tier_multiplies_parked_capacity_under_one_budget() {
+        // Identical byte budget (2 fp32 blocks), identical workload: park 3
+        // registered blocks, then rent a private one.  The quantized tier
+        // holds all four; the fp32 pool has to evict twice.
+        let q = tiered_pool(4, 2, true, 0);
+        let f = pool(4, 2);
+        let keys: Vec<i32> = (0..12).collect();
+        for p in [&q, &f] {
+            let hashes = p.prefix_hashes(0, &keys);
+            let k_src = varied_rows(p, 12, 7.0);
+            let v_src = varied_rows(p, 12, 8.0);
+            for i in 0..3 {
+                let id = p.rent_ref().unwrap();
+                p.write_run(id, 0, 4, i * 4, 12, &k_src, &v_src).unwrap();
+                assert!(p.register_block(id, hashes[i], &keys[i * 4..(i + 1) * 4]));
+                p.release_ref(id);
+            }
+            let private = p.rent_ref().unwrap();
+            p.release_ref(private);
+        }
+        let (qs, fs) = (q.stats(), f.stats());
+        assert_eq!(qs.prefix_evictions, 0, "int8 parking keeps every chain entry");
+        assert_eq!(qs.quantized_blocks, 3);
+        assert_eq!(qs.shared_blocks, 3);
+        assert_eq!(qs.quant_saved_bytes, 3 * (q.block_bytes() - q.q8_block_bytes()));
+        assert_eq!(fs.prefix_evictions, 2, "fp32 parking sheds under the same budget");
+        assert_eq!(fs.shared_blocks, 1);
+        // The surviving quantized chain still fully hits.
+        let hashes = q.prefix_hashes(0, &keys);
+        let hit = q.lookup_chain(&hashes, &keys);
+        assert_eq!(hit.len(), 3);
+        for id in hit {
+            q.release_ref(id);
+        }
+        q.check_invariants().unwrap();
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn can_admit_counts_offloadable_headroom() {
+        let p = tiered_pool(4, 2, false, 2);
+        let keys: Vec<i32> = (0..8).collect();
+        let hashes = p.prefix_hashes(0, &keys);
+        let mut ids = Vec::new();
+        for i in 0..2 {
+            let id = p.rent_ref().unwrap();
+            assert!(p.register_block(id, hashes[i], &keys[i * 4..(i + 1) * 4]));
+            ids.push(id);
+        }
+        // Both blocks referenced: the device budget is pinned solid.
+        assert!(!p.can_admit(1));
+        // Parked, they become reclaimable (offloadable to the slab), so the
+        // same byte budget admits a full turnover again — the tiered
+        // admission gate from the issue.
+        for id in ids {
+            p.release_ref(id);
+        }
+        assert!(p.can_admit(2));
+        assert!(!p.can_admit(3));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sanitizer_names_host_slab_gauge_drift() {
+        let p = tiered_pool(4, 0, false, 2);
+        let id = p.rent_ref().unwrap();
+        p.offload_ref(id).unwrap();
+        p.corrupt_host_slab_gauge();
+        let err = p.check_invariants().unwrap_err();
+        assert!(err.contains("host-slab"), "law not named: {err}");
+    }
+
+    #[test]
+    fn sanitizer_names_quantized_gauge_drift() {
+        let p = pool(4, 0);
+        let _id = p.rent_ref().unwrap();
+        p.corrupt_quantized_gauge();
+        let err = p.check_invariants().unwrap_err();
+        assert!(err.contains("tier"), "law not named: {err}");
+    }
+
+    // ---- satellite 3: tier proptests ------------------------------------
+
+    #[test]
+    fn q8_round_trip_error_is_bounded_per_row() {
+        crate::util::proptest::check("q8 round trip bound", 80, |g| {
+            let row = g.usize_in(1..40);
+            let rows = g.usize_in(1..8);
+            let mut src = Vec::with_capacity(row * rows);
+            for _ in 0..row * rows {
+                // mixed magnitudes, with exact zeros (and occasionally whole
+                // zero rows) to exercise the degenerate-scale guard
+                let x = if g.bool() {
+                    (g.usize_in(0..2000) as f32 - 1000.0) / 250.0
+                } else {
+                    0.0
+                };
+                src.push(x);
+            }
+            let (q, scales) = q8_quantize(&src, row);
+            let back = q8_dequantize(&q, &scales, row);
+            for r in 0..rows {
+                let s = &src[r * row..(r + 1) * row];
+                let max = s.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                let bound = max / 254.0 + 1e-6;
+                for i in 0..row {
+                    let err = (s[i] - back[r * row + i]).abs();
+                    crate::prop_assert!(
+                        err <= bound,
+                        "row {} elem {}: {} -> {} (err {} > bound {})",
+                        r,
+                        i,
+                        s[i],
+                        back[r * row + i],
+                        err,
+                        bound
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cow_promotion_from_q8_matches_the_dequantized_baseline() {
+        crate::util::proptest::check("q8 CoW promotion", 40, |g| {
+            let p = tiered_pool(4, 0, true, 0);
+            let row = p.row();
+            let salt = g.usize_in(0..10_000) as u64;
+            let keys: Vec<i32> = (0..4).map(|i| i + salt as i32).collect();
+            let hashes = p.prefix_hashes(salt, &keys);
+            let k_src = varied_rows(&p, 4, salt as f32 + 0.25);
+            let v_src = varied_rows(&p, 4, salt as f32 + 0.75);
+
+            // Shared path: register, park (demotes to int8), re-attach.
+            let a = p.rent_ref().map_err(|e| e.to_string())?;
+            p.write_run(a, 0, 4, 0, 4, &k_src, &v_src)
+                .map_err(|e| e.to_string())?;
+            crate::prop_assert!(p.register_block(a, hashes[0], &keys), "register");
+            p.release_ref(a);
+            crate::prop_assert!(
+                p.stats().quantized_blocks == 1,
+                "park must quantize (got {})",
+                p.stats().quantized_blocks
+            );
+            let hit = p.lookup_chain(&hashes[..1], &keys);
+            crate::prop_assert!(hit == vec![a], "chain must hit the parked block");
+
+            // The dequantized baseline, read straight off the int8 payload,
+            // is within the quantization bound of the original rows…
+            let sz = p.n_layers() * 4 * row;
+            let (mut base_k, mut base_v) = (vec![0.0; sz], vec![0.0; sz]);
+            p.host_gather_prefix_into(&hit, 4, 4, &mut base_k, &mut base_v);
+            for (orig, base) in [(&k_src, &base_k), (&v_src, &base_v)] {
+                for (r, (o, b)) in orig.chunks(row).zip(base.chunks(row)).enumerate() {
+                    let max = o.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                    let bound = max / 254.0 + 1e-6;
+                    for i in 0..row {
+                        crate::prop_assert!(
+                            (o[i] - b[i]).abs() <= bound,
+                            "row {} elem {} beyond q8 bound",
+                            r,
+                            i
+                        );
+                    }
+                }
+            }
+
+            // A write into the shared quantized block CoW-promotes: fresh
+            // rows are the new fp32 data, untouched rows are bit-identical
+            // to the dequantized baseline (promotion is stable).
+            let off = g.usize_in(0..4);
+            let run = g.usize_in(1..(4 - off + 1));
+            let nk = varied_rows(&p, run, salt as f32 + 100.0);
+            let nv = varied_rows(&p, run, salt as f32 + 200.0);
+            let promoted = p
+                .write_run(hit[0], off, run, 0, run, &nk, &nv)
+                .map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                promoted != hit[0],
+                "a write into a shared quantized block must CoW"
+            );
+            let (mut got_k, mut got_v) = (vec![0.0; sz], vec![0.0; sz]);
+            p.host_gather_prefix_into(&[promoted], 4, 4, &mut got_k, &mut got_v);
+            for (new_rows, base, got) in
+                [(&nk, &base_k, &got_k), (&nv, &base_v, &got_v)]
+            {
+                for layer in 0..p.n_layers() {
+                    for pos in 0..4 {
+                        let o = (layer * 4 + pos) * row;
+                        if pos >= off && pos < off + run {
+                            let s = (layer * run + (pos - off)) * row;
+                            crate::prop_assert!(
+                                got[o..o + row] == new_rows[s..s + row],
+                                "written row (layer {}, pos {}) must be fresh fp32",
+                                layer,
+                                pos
+                            );
+                        } else {
+                            crate::prop_assert!(
+                                got[o..o + row] == base[o..o + row],
+                                "untouched row (layer {}, pos {}) must match baseline",
+                                layer,
+                                pos
+                            );
+                        }
+                    }
+                }
+            }
+            p.release_ref(promoted);
+            p.release_ref(hit[0]);
+            p.check_invariants()?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tier_churn_keeps_invariants_green_and_gauges_reconciled() {
+        crate::util::proptest::check("tier churn", 40, |g| {
+            let quantize = g.bool();
+            let slab = g.usize_in(0..4);
+            let cap = g.usize_in(0..7); // 0 = uncapped
+            let p = tiered_pool(2, cap, quantize, slab);
+            let mut held: Vec<u32> = Vec::new();
+            let mut cold: Vec<u32> = Vec::new(); // private blocks parked to host
+            let mut salt = 0u64;
+            let steps = g.usize_in(10..60);
+            for _ in 0..steps {
+                match g.usize_in(0..6) {
+                    0 => {
+                        // admit: rent + write a full block
+                        if let Ok(id) = p.rent_ref() {
+                            let k = varied_rows(&p, 2, salt as f32 + 0.1);
+                            let v = varied_rows(&p, 2, salt as f32 + 0.2);
+                            let id = p
+                                .write_run(id, 0, 2, 0, 2, &k, &v)
+                                .map_err(|e| e.to_string())?;
+                            held.push(id);
+                        }
+                    }
+                    1 => {
+                        // drop a session block
+                        if !held.is_empty() {
+                            let i = g.usize_in(0..held.len());
+                            p.release_ref(held.swap_remove(i));
+                        }
+                    }
+                    2 => {
+                        // register under a fresh chain, then park it
+                        if !held.is_empty() {
+                            let i = g.usize_in(0..held.len());
+                            let id = held.swap_remove(i);
+                            salt += 1;
+                            let keys = [salt as i32, -(salt as i32)];
+                            let h = p.prefix_hashes(salt, &keys);
+                            if p.register_block(id, h[0], &keys) {
+                                p.release_ref(id);
+                            } else {
+                                held.push(id);
+                            }
+                        }
+                    }
+                    3 => {
+                        // park a private block to the host slab
+                        if !held.is_empty() {
+                            let i = g.usize_in(0..held.len());
+                            if p.offload_ref(held[i]).is_ok() {
+                                cold.push(held.swap_remove(i));
+                            }
+                        }
+                    }
+                    4 => {
+                        // resume a cold block
+                        if !cold.is_empty() {
+                            let i = g.usize_in(0..cold.len());
+                            if p.page_in_ref(cold[i]).is_ok() {
+                                held.push(cold.swap_remove(i));
+                            }
+                        }
+                    }
+                    _ => {
+                        // decode-style single-row write into a held block
+                        if !held.is_empty() {
+                            let i = g.usize_in(0..held.len());
+                            let k = varied_rows(&p, 1, salt as f32 + 0.3);
+                            if let Ok(nid) = p.write_run(held[i], 0, 1, 0, 1, &k, &k) {
+                                held[i] = nid;
+                            }
+                        }
+                    }
+                }
+                p.check_invariants()?;
+            }
+            // Gauge reconciliation at rest: swap traffic conserves, and the
+            // quantizer's savings gauge matches its population.
+            let s = p.stats();
+            crate::prop_assert!(
+                s.swap_out_bytes
+                    == s.swap_in_bytes + s.swap_dropped_bytes + s.host_slab_bytes,
+                "swap conservation: out {} != in {} + dropped {} + held {}",
+                s.swap_out_bytes,
+                s.swap_in_bytes,
+                s.swap_dropped_bytes,
+                s.host_slab_bytes
+            );
+            crate::prop_assert!(
+                s.quant_saved_bytes
+                    == s.quantized_blocks as u64 * (p.block_bytes() - p.q8_block_bytes()),
+                "saved-bytes gauge must reconcile with the int8 population"
+            );
+            for id in held.drain(..) {
+                p.release_ref(id);
+            }
+            for id in cold.drain(..) {
+                p.release_ref(id); // drops the slab entry → swap_dropped
+            }
+            p.check_invariants()?;
+            Ok(())
+        });
     }
 }

@@ -88,6 +88,71 @@ pub fn paged_gather_prefix(
     }
 }
 
+/// One device-resident block as seen by the tiered gather: either a raw
+/// fp32 buffer (hot tier) or an int8 buffer with per-`(layer, position)`
+/// scales (warm tier).  Mirrors how a real backend would keep quantized
+/// pages resident and dequantize inside the gather kernel rather than
+/// materializing fp32 copies.
+pub enum PagedBlock<'a> {
+    /// `[L, block_tokens, row]` fp32 buffer.
+    F32(&'a [f32]),
+    /// `[L, block_tokens, row]` int8 buffer plus `[L, block_tokens]`
+    /// per-row symmetric scales (`x ≈ q as f32 * scale`).
+    Q8 {
+        q: &'a [i8],
+        scales: &'a [f32],
+    },
+}
+
+/// Mixed-tier variant of [`paged_gather_prefix`]: identical contiguous
+/// `[L, c, row]` output, but each table entry may be fp32 or int8.  Warm
+/// (int8) entries are dequantized row-by-row during the copy — on a real
+/// backend this fusion is what makes the quantized tier free at gather
+/// time (no fp32 staging buffer, ~4× less device traffic per warm block).
+///
+/// Dequantization here (`q as f32 * scale`) is the *only* definition of
+/// the warm tier's value semantics: the pool's host-side gathers use the
+/// same expression, which is what makes host and device reads of a
+/// quantized block bit-identical (`model/pool.rs` proves it in tests).
+pub fn paged_gather_prefix_tiered(
+    blocks: &[PagedBlock<'_>],
+    n_layers: usize,
+    block_tokens: usize,
+    row: usize,
+    len: usize,
+    c: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), n_layers * c * row);
+    let valid = len.min(c);
+    for (b, blk) in blocks.iter().enumerate() {
+        let start = b * block_tokens;
+        if start >= valid {
+            break;
+        }
+        let run = (valid - start).min(block_tokens);
+        for layer in 0..n_layers {
+            let dst = layer * c * row + start * row;
+            let src = layer * block_tokens * row;
+            match blk {
+                PagedBlock::F32(buf) => {
+                    out[dst..dst + run * row].copy_from_slice(&buf[src..src + run * row]);
+                }
+                PagedBlock::Q8 { q, scales } => {
+                    for tok in 0..run {
+                        let scale = scales[layer * block_tokens + tok];
+                        let s = src + tok * row;
+                        let d = dst + tok * row;
+                        for i in 0..row {
+                            out[d + i] = q[s + i] as f32 * scale;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ElementType {
     F32,

@@ -520,7 +520,8 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("side_kv", mem.per_kind[2])
                 .with("synapse", mem.per_kind[3])
                 .with("device_kv", mem.per_kind[5])
-                .with("shared_kv", mem.per_kind[6]),
+                .with("shared_kv", mem.per_kind[6])
+                .with("host_kv", mem.per_kind[7]),
         )
         .with(
             "pool",
@@ -548,7 +549,19 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("prefix_evictions", pool.prefix_evictions)
                 .with("cow_copies", pool.cow_copies)
                 // admission reservations held by sessions mid-prefill
-                .with("reserved_blocks", pool.reserved_blocks),
+                .with("reserved_blocks", pool.reserved_blocks)
+                // tiered-KV gauges: warm int8 occupancy and the bytes it
+                // saves vs fp32, cold host-slab occupancy, and the swap
+                // traffic counters (swap_out == swap_in + swap_dropped +
+                // host_slab_bytes is a sanitizer-checked conservation law)
+                .with("quantized_blocks", pool.quantized_blocks)
+                .with("quant_saved_bytes", pool.quant_saved_bytes)
+                .with("offloaded_blocks", pool.offloaded_blocks)
+                .with("host_slab_bytes", pool.host_slab_bytes)
+                .with("swap_out_bytes", pool.swap_out_bytes)
+                .with("swap_in_bytes", pool.swap_in_bytes)
+                .with("swap_dropped_bytes", pool.swap_dropped_bytes)
+                .with("resume_page_ins", pool.resume_page_ins),
         )
         .with(
             "gate",
