@@ -1,0 +1,535 @@
+//! Per-function call-site extraction and a whole-crate name-resolution
+//! graph.  Resolution is deliberately conservative (an over-approximation):
+//! a call edge that might exist is included, so the reachability passes
+//! (lock-order, hot-tick) can miss nothing a human would consider
+//! reachable.  The price is occasional spurious edges through common
+//! method names; those are bounded by the same-file preference, the
+//! qualifier/owner match, and the [`AMBIENT`] damping rule below, and any
+//! residual false positive is waivable with `// audit-allow:`.
+//!
+//! **Ambient names.**  Without type information, `out.push(r)` on a local
+//! `Vec` is indistinguishable from `self.synapse.push(..)` — and a crate
+//! that defines `Synapse::push` would acquire every `Vec::push` in the
+//! tree as a spurious edge into rank-50 territory.  Names on the
+//! [`AMBIENT`] list (std container / iterator / atomic / channel method
+//! vocabulary) therefore resolve only through an *explicit* receiver:
+//! `Owner::name(..)` by qualifier match, or `self.name(..)` to a method
+//! of the enclosing impl.  A real cross-object call through such a name
+//! (`table.drain(..)` meaning a crate method) is a lost edge — the
+//! documented price for not drowning lock-order in Vec noise.  Free
+//! `drop(x)` is the extreme case: it releases a guard (the lock-order
+//! simulation models that separately) and must never resolve to the
+//! crate's `Drop` impls, whose bodies the runtime checker covers.
+//!
+//! Known seams the resolver cannot cross (documented limitation): calls
+//! through closures and `fn`-pointer fields (the scheduler's `spawner` /
+//! `admit` / `exec` hooks), and trait-object dispatch.  Lock-order and
+//! hot-tick therefore also scan every function *body* for direct lock /
+//! blocking tokens, so a seam hides an edge but never a site.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use super::items::{FnInfo, SourceFile};
+
+/// Words that look like calls but never are (keywords, prelude
+/// constructors, control flow).
+const NON_CALLS: &[&str] = &[
+    "if", "else", "match", "while", "for", "loop", "return", "break", "continue", "in", "let",
+    "mut", "as", "fn", "impl", "struct", "enum", "union", "trait", "mod", "use", "pub", "const",
+    "static", "ref", "move", "async", "await", "dyn", "where", "unsafe", "type", "Some", "None",
+    "Ok", "Err", "self", "Self", "super", "crate", "true", "false",
+];
+
+/// Method names shadowed by the std prelude vocabulary (Vec, HashMap,
+/// Option/Result, atomics, mpsc, Condvar, iterators).  Unqualified calls
+/// through these names resolve only to `self.name(..)` on the enclosing
+/// impl or via an explicit `Owner::name(..)` qualifier — never through
+/// the cross-file fallback.  Sorted; extend when a crate fn adopts a new
+/// std-colliding name and starts leaking spurious edges.
+const AMBIENT: &[&str] = &[
+    "abs", "all", "any", "clear", "clone", "cloned", "collect", "contains", "count", "drain",
+    "drop", "entry", "expect", "extend", "filter", "find", "first", "flush", "fold", "get",
+    "get_mut", "insert", "is_empty", "iter", "join", "last", "len", "load", "lock", "map", "max",
+    "min", "next", "peek", "pop", "position", "push", "read", "recv", "remove", "retain", "send",
+    "set", "split", "store", "sum", "swap", "take", "unwrap", "wait", "write",
+];
+
+/// One syntactic call site inside a function body.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    /// 0-based source line.
+    pub line: usize,
+    /// Callee name (`route`, `println` for macros).
+    pub callee: String,
+    /// `Q` in `Q::callee(...)`, when present.
+    pub qualifier: Option<String>,
+    /// Preceded by `.` — a method call.
+    pub is_method: bool,
+    /// The ident immediately before the dot of a method call (`self` in
+    /// `self.route(..)`, `state` in `self.state.lock()`); `None` for a
+    /// chained receiver (`)` / `]`) or a non-method call.
+    pub receiver: Option<String>,
+    /// `name!(...)` — macro invocation.
+    pub is_macro: bool,
+}
+
+/// One `.lock()` acquisition site: the receiver field name it resolves
+/// through (`state` in `self.state.lock()` / `table.state.lock()`).
+#[derive(Debug, Clone)]
+pub struct LockSite {
+    pub line: usize,
+    pub receiver: String,
+    /// `true` when the guard is bound with `let` (held beyond the line).
+    pub bound: bool,
+}
+
+/// Extract call sites from the stripped body of `f`.
+pub fn call_sites(file: &SourceFile, f: &FnInfo) -> Vec<CallSite> {
+    let mut out = Vec::new();
+    for line in f.start..=f.end.min(file.stripped.code.len().saturating_sub(1)) {
+        let code = &file.stripped.code[line];
+        let words = super::lexer::idents(code);
+        for (wi, &(start, word)) in words.iter().enumerate() {
+            if NON_CALLS.contains(&word) {
+                continue;
+            }
+            // The token right before the name tells us what it is.
+            let before = code[..start].trim_end();
+            // Item definitions (`fn name(`, `struct Name(`) are not calls.
+            if let Some(&(_, prev)) = wi.checked_sub(1).and_then(|p| words.get(p)) {
+                if before.ends_with(prev)
+                    && matches!(prev, "fn" | "struct" | "enum" | "union" | "trait" | "mod")
+                {
+                    continue;
+                }
+            }
+            let after = &code[start + word.len()..];
+            let after_trim = after.trim_start();
+            let is_macro = after_trim.starts_with('!')
+                && after_trim[1..]
+                    .trim_start()
+                    .starts_with(['(', '[', '{']);
+            let is_call = after_trim.starts_with('(');
+            if !is_macro && !is_call {
+                continue;
+            }
+            let is_method = before.ends_with('.');
+            let receiver = if is_method {
+                let head = before[..before.len() - 1].trim_end();
+                let r: String = head
+                    .chars()
+                    .rev()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .rev()
+                    .collect();
+                if r.is_empty() { None } else { Some(r) }
+            } else {
+                None
+            };
+            let qualifier = if before.ends_with("::") {
+                let q = before[..before.len() - 2].trim_end();
+                let qname: String = q
+                    .chars()
+                    .rev()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .rev()
+                    .collect();
+                if qname.is_empty() { None } else { Some(qname) }
+            } else {
+                None
+            };
+            out.push(CallSite {
+                line,
+                callee: word.to_string(),
+                qualifier,
+                is_method,
+                receiver,
+                is_macro,
+            });
+        }
+    }
+    out
+}
+
+/// Extract `.lock()` sites from the stripped body of `f`.
+pub fn lock_sites(file: &SourceFile, f: &FnInfo) -> Vec<LockSite> {
+    let mut out = Vec::new();
+    for line in f.start..=f.end.min(file.stripped.code.len().saturating_sub(1)) {
+        let code = &file.stripped.code[line];
+        let mut from = 0;
+        while let Some(rel) = code[from..].find(".lock()") {
+            let abs = from + rel;
+            from = abs + ".lock()".len();
+            // Walk back over the receiver path: idents joined by `.`.
+            let head = &code[..abs];
+            let receiver: String = head
+                .chars()
+                .rev()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect::<Vec<_>>()
+                .into_iter()
+                .rev()
+                .collect();
+            if receiver.is_empty() {
+                continue;
+            }
+            let bound = code.trim_start().starts_with("let ")
+                || code.trim_start().starts_with("let(")
+                || code.contains("= ranked_wait");
+            out.push(LockSite {
+                line,
+                receiver,
+                bound,
+            });
+        }
+    }
+    out
+}
+
+/// Stable function identity across the scanned file set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FnId {
+    pub file: usize,
+    pub idx: usize,
+}
+
+/// Whole-crate call graph over a set of parsed files.
+pub struct CrateGraph<'a> {
+    pub files: &'a [SourceFile],
+    /// name → all non-test fns bearing it.
+    by_name: BTreeMap<&'a str, Vec<FnId>>,
+    /// Resolved call edges per function, with the originating line.
+    pub edges: BTreeMap<FnId, Vec<(usize, FnId)>>,
+    /// All call sites per function (resolved or not) for token passes.
+    pub sites: BTreeMap<FnId, Vec<CallSite>>,
+}
+
+impl<'a> CrateGraph<'a> {
+    pub fn build(files: &'a [SourceFile]) -> CrateGraph<'a> {
+        let mut by_name: BTreeMap<&str, Vec<FnId>> = BTreeMap::new();
+        for (fi, file) in files.iter().enumerate() {
+            for (xi, f) in file.fns.iter().enumerate() {
+                if f.is_test {
+                    continue;
+                }
+                by_name
+                    .entry(f.name.as_str())
+                    .or_default()
+                    .push(FnId { file: fi, idx: xi });
+            }
+        }
+        let mut graph = CrateGraph {
+            files,
+            by_name,
+            edges: BTreeMap::new(),
+            sites: BTreeMap::new(),
+        };
+        for (fi, file) in files.iter().enumerate() {
+            for (xi, f) in file.fns.iter().enumerate() {
+                if f.is_test {
+                    continue;
+                }
+                let id = FnId { file: fi, idx: xi };
+                let sites = call_sites(file, f);
+                let mut edges = Vec::new();
+                for s in &sites {
+                    for callee in graph.resolve(s, fi, f.owner.as_deref()) {
+                        edges.push((s.line, callee));
+                    }
+                }
+                graph.edges.insert(id, edges);
+                graph.sites.insert(id, sites);
+            }
+        }
+        graph
+    }
+
+    pub fn info(&self, id: FnId) -> &FnInfo {
+        &self.files[id.file].fns[id.idx]
+    }
+
+    /// Display form: `module::Owner::name`.
+    pub fn label(&self, id: FnId) -> String {
+        format!(
+            "{}::{}",
+            self.files[id.file].module.trim_end_matches(".rs"),
+            self.info(id).qualified()
+        )
+    }
+
+    /// Resolve one call site to candidate crate functions.
+    fn resolve(&self, site: &CallSite, caller_file: usize, caller_owner: Option<&str>) -> Vec<FnId> {
+        if site.is_macro {
+            return Vec::new();
+        }
+        let Some(cands) = self.by_name.get(site.callee.as_str()) else {
+            return Vec::new();
+        };
+        // `Q::f(...)`: only fns whose impl owner is `Q` (`Self::f` maps to
+        // the caller's own impl).  A lowercase qualifier is a module path;
+        // owner matching still applies (and usually yields nothing — std
+        // calls stay unresolved).
+        if let Some(q) = &site.qualifier {
+            let want = if q == "Self" { caller_owner } else { Some(q.as_str()) };
+            let Some(want) = want else { return Vec::new() };
+            return cands
+                .iter()
+                .copied()
+                .filter(|id| self.info(*id).owner.as_deref() == Some(want))
+                .collect();
+        }
+        // Std-shadowed vocabulary: only `self.name(..)` to the enclosing
+        // impl resolves; everything else is Vec/HashMap/atomic noise.
+        if AMBIENT.contains(&site.callee.as_str()) {
+            if site.is_method && site.receiver.as_deref() == Some("self") {
+                if let Some(owner) = caller_owner {
+                    return cands
+                        .iter()
+                        .copied()
+                        .filter(|id| {
+                            id.file == caller_file
+                                && self.info(*id).owner.as_deref() == Some(owner)
+                        })
+                        .collect();
+                }
+            }
+            return Vec::new();
+        }
+        // Unqualified / method call: prefer same-file candidates (the
+        // overwhelmingly common case for `self.helper()` and free calls),
+        // else link every crate candidate — conservative.
+        let same_file: Vec<FnId> = cands
+            .iter()
+            .copied()
+            .filter(|id| id.file == caller_file)
+            .collect();
+        if !same_file.is_empty() {
+            return same_file;
+        }
+        if site.is_method {
+            // Cross-file method call: only methods can match.
+            return cands
+                .iter()
+                .copied()
+                .filter(|id| self.info(*id).owner.is_some())
+                .collect();
+        }
+        cands.clone()
+    }
+
+    /// All functions reachable from `roots` (inclusive), BFS order.
+    pub fn reachable(&self, roots: &[FnId]) -> Vec<FnId> {
+        let mut seen: BTreeSet<FnId> = roots.iter().copied().collect();
+        let mut queue: VecDeque<FnId> = roots.iter().copied().collect();
+        let mut order = Vec::new();
+        while let Some(id) = queue.pop_front() {
+            order.push(id);
+            if let Some(edges) = self.edges.get(&id) {
+                for &(_, callee) in edges {
+                    if seen.insert(callee) {
+                        queue.push_back(callee);
+                    }
+                }
+            }
+        }
+        order
+    }
+
+    /// Find every non-test fn named `name` (optionally owner-qualified).
+    pub fn find(&self, name: &str) -> Vec<FnId> {
+        self.by_name.get(name).cloned().unwrap_or_default()
+    }
+
+    /// Shortest call path root → target, as display labels; None when
+    /// unreachable.
+    pub fn path(&self, root: FnId, target: FnId) -> Option<Vec<String>> {
+        let mut prev: BTreeMap<FnId, FnId> = BTreeMap::new();
+        let mut queue = VecDeque::from([root]);
+        let mut seen = BTreeSet::from([root]);
+        while let Some(id) = queue.pop_front() {
+            if id == target {
+                let mut chain = vec![self.label(id)];
+                let mut cur = id;
+                while let Some(&p) = prev.get(&cur) {
+                    chain.push(self.label(p));
+                    cur = p;
+                }
+                chain.reverse();
+                return Some(chain);
+            }
+            if let Some(edges) = self.edges.get(&id) {
+                for &(_, callee) in edges {
+                    if seen.insert(callee) {
+                        prev.insert(callee, id);
+                        queue.push_back(callee);
+                    }
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::items::SourceFile;
+
+    fn single(src: &str) -> Vec<SourceFile> {
+        vec![SourceFile::parse("rust/src/a.rs", src)]
+    }
+
+    #[test]
+    fn direct_and_method_calls_resolve_same_file() {
+        let files = single(
+            "fn root() {\n    helper();\n    self.dispatch();\n}\n\
+             fn helper() {}\n\
+             struct S;\nimpl S {\n    fn dispatch(&self) {}\n}\n",
+        );
+        let g = CrateGraph::build(&files);
+        let root = g.find("root")[0];
+        let names: Vec<String> = g.edges[&root]
+            .iter()
+            .map(|&(_, id)| g.info(id).name.clone())
+            .collect();
+        assert_eq!(names, vec!["helper", "dispatch"]);
+    }
+
+    #[test]
+    fn qualified_calls_require_owner_match() {
+        let files = single(
+            "fn root() {\n    S::build();\n    VecDeque::new();\n}\n\
+             struct S;\nimpl S {\n    fn build() {}\n}\n\
+             struct T;\nimpl T {\n    fn new() {}\n}\n",
+        );
+        let g = CrateGraph::build(&files);
+        let root = g.find("root")[0];
+        let names: Vec<String> = g.edges[&root]
+            .iter()
+            .map(|&(_, id)| g.info(id).name.clone())
+            .collect();
+        // S::build resolves; VecDeque::new must NOT resolve to T::new.
+        assert_eq!(names, vec!["build"]);
+    }
+
+    #[test]
+    fn macros_are_sites_but_not_edges() {
+        let files = single("fn root() {\n    println!(\"x\");\n}\nfn println() {}\n");
+        let g = CrateGraph::build(&files);
+        let root = g.find("root")[0];
+        assert!(g.edges[&root].is_empty());
+        let site = &g.sites[&root][0];
+        assert!(site.is_macro);
+        assert_eq!(site.callee, "println");
+    }
+
+    #[test]
+    fn reachability_and_paths() {
+        let files = single(
+            "fn a() {\n    b();\n}\nfn b() {\n    c();\n}\nfn c() {}\nfn lonely() {}\n",
+        );
+        let g = CrateGraph::build(&files);
+        let a = g.find("a")[0];
+        let c = g.find("c")[0];
+        let lonely = g.find("lonely")[0];
+        let reach = g.reachable(&[a]);
+        assert!(reach.contains(&c));
+        assert!(!reach.contains(&lonely));
+        let path = g.path(a, c).unwrap();
+        assert_eq!(path.len(), 3);
+        assert!(path[2].ends_with("::c"));
+    }
+
+    #[test]
+    fn lock_sites_recover_the_receiver_field() {
+        let files = single(
+            "struct S;\nimpl S {\n    fn f(&self) {\n        let st = self.state.lock();\n        table.results.lock().push(1);\n    }\n}\n",
+        );
+        let g = CrateGraph::build(&files);
+        let f = &files[0].fns[0];
+        let sites = lock_sites(&files[0], f);
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[0].receiver, "state");
+        assert!(sites[0].bound);
+        assert_eq!(sites[1].receiver, "results");
+        assert!(!sites[1].bound);
+    }
+
+    #[test]
+    fn ambient_names_do_not_cross_resolve() {
+        // `out.push(r)` on a local Vec must NOT link to Synapse::push in
+        // another file; `self.push(..)` inside the impl must.
+        let files = vec![
+            SourceFile::parse(
+                "rust/src/cortex/synapse.rs",
+                "struct Synapse;\nimpl Synapse {\n    pub fn push(&self) {\n        self.push();\n    }\n}\n",
+            ),
+            SourceFile::parse(
+                "rust/src/cortex/scheduler.rs",
+                "struct Sched;\nimpl Sched {\n    fn poll(&self) {\n        let mut out = Vec::new();\n        out.push(1);\n        drop(out);\n    }\n}\n",
+            ),
+        ];
+        let g = CrateGraph::build(&files);
+        let poll = g.find("poll")[0];
+        assert!(g.edges[&poll].is_empty(), "Vec::push / drop must stay unresolved");
+        let push = g.find("push")[0];
+        let self_edges: Vec<String> = g.edges[&push]
+            .iter()
+            .map(|&(_, id)| g.info(id).name.clone())
+            .collect();
+        assert_eq!(self_edges, vec!["push"], "self.push resolves to the enclosing impl");
+    }
+
+    #[test]
+    fn free_drop_never_resolves_to_drop_impls() {
+        let files = vec![
+            SourceFile::parse(
+                "rust/src/a.rs",
+                "struct Permit;\nimpl Drop for Permit {\n    fn drop(&mut self) {\n        helper();\n    }\n}\nfn helper() {}\n",
+            ),
+            SourceFile::parse("rust/src/b.rs", "fn release(x: Permit) {\n    drop(x);\n}\n"),
+        ];
+        let g = CrateGraph::build(&files);
+        let release = g.find("release")[0];
+        assert!(g.edges[&release].is_empty());
+    }
+
+    #[test]
+    fn self_qualified_calls_resolve_to_the_enclosing_impl() {
+        let files = single(
+            "struct S;\nimpl S {\n    fn a(&self) {\n        Self::b();\n    }\n    fn b() {}\n}\n\
+             struct T;\nimpl T {\n    fn b() {}\n}\n",
+        );
+        let g = CrateGraph::build(&files);
+        let a = g.find("a")[0];
+        let edges: Vec<FnId> = g.edges[&a].iter().map(|&(_, id)| id).collect();
+        assert_eq!(edges.len(), 1);
+        assert_eq!(g.info(edges[0]).owner.as_deref(), Some("S"));
+    }
+
+    #[test]
+    fn call_sites_record_the_method_receiver() {
+        let files = single(
+            "fn f() {\n    self.route(1);\n    self.state.lock();\n    make().chain();\n}\n",
+        );
+        let sites = call_sites(&files[0], &files[0].fns[0]);
+        let by_name: std::collections::BTreeMap<&str, &CallSite> =
+            sites.iter().map(|s| (s.callee.as_str(), s)).collect();
+        assert_eq!(by_name["route"].receiver.as_deref(), Some("self"));
+        assert_eq!(by_name["lock"].receiver.as_deref(), Some("state"));
+        assert_eq!(by_name["chain"].receiver, None);
+        assert_eq!(by_name["make"].receiver, None);
+    }
+
+    #[test]
+    fn test_fns_are_excluded_from_the_graph() {
+        let files = single("#[test]\nfn t() {\n    prod();\n}\nfn prod() {}\n");
+        let g = CrateGraph::build(&files);
+        assert!(g.find("t").is_empty());
+        assert_eq!(g.find("prod").len(), 1);
+    }
+}

@@ -1,0 +1,455 @@
+//! Item extraction over the stripped source: test-region marking,
+//! `fn` / `impl` boundaries, and a per-line map to the innermost
+//! enclosing function — the substrate the call-graph and the whole-crate
+//! passes (lock-order, gauge-lineage, hot-tick) are built on.
+//!
+//! This is a brace-tracking heuristic parser, not a grammar: it only
+//! needs item *boundaries* and owner types, which brace/paren depth
+//! recovers exactly on stripped code (strings and comments can no longer
+//! confuse the depth counters).  Trait-method declarations without a
+//! body (`fn f();`) are skipped; nested `fn` items are recorded and own
+//! their lines (the enclosing function resumes after them).
+
+use super::lexer::{strip, Stripped};
+
+/// Brace-tracking skip state for `#[cfg(test)]` / `#[test]` items —
+/// byte-for-byte the legacy scanner's semantics, so the re-hosted token
+/// rules reproduce its findings exactly.
+#[derive(Default)]
+pub struct TestSkip {
+    /// Saw the attribute; waiting for the item body to open.
+    pending: bool,
+    /// Inside the item body at this brace depth.
+    depth: usize,
+    active: bool,
+}
+
+impl TestSkip {
+    /// Feed one stripped line; true when it belongs to a test item
+    /// (including the attribute lines themselves).
+    pub fn observe(&mut self, line: &str) -> bool {
+        let trimmed = line.trim();
+        if self.active {
+            for c in trimmed.chars() {
+                match c {
+                    '{' => self.depth += 1,
+                    '}' if self.depth > 0 => {
+                        self.depth -= 1;
+                        if self.depth == 0 {
+                            self.active = false;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            return true;
+        }
+        if self.pending {
+            let mut saw_open = false;
+            for c in trimmed.chars() {
+                match c {
+                    '{' => {
+                        saw_open = true;
+                        self.depth += 1;
+                    }
+                    '}' if self.depth > 0 => self.depth -= 1,
+                    ';' if self.depth == 0 && !saw_open => {
+                        // Bodyless item (`mod tests;`, `use ...;`).
+                        self.pending = false;
+                        return true;
+                    }
+                    _ => {}
+                }
+            }
+            if saw_open {
+                self.pending = false;
+                if self.depth > 0 {
+                    self.active = true;
+                }
+            }
+            return true;
+        }
+        if trimmed.starts_with("#[cfg(test)")
+            || trimmed.starts_with("#[test]")
+            || trimmed.starts_with("#[cfg(all(test")
+        {
+            self.pending = true;
+            return true;
+        }
+        false
+    }
+}
+
+/// One extracted function item.
+#[derive(Debug, Clone)]
+pub struct FnInfo {
+    /// Bare name (`route`).
+    pub name: String,
+    /// Owning `impl` type, when the fn is a method (`SessionTable`).
+    pub owner: Option<String>,
+    /// 0-based line of the `fn` keyword.
+    pub start: usize,
+    /// 0-based line of the closing brace (inclusive).
+    pub end: usize,
+    /// Declared inside a `#[cfg(test)]` / `#[test]` region.
+    pub is_test: bool,
+}
+
+impl FnInfo {
+    /// `Owner::name` or bare `name` — the display form findings use.
+    pub fn qualified(&self) -> String {
+        match &self.owner {
+            Some(o) => format!("{o}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// One scanned source file with its extracted structure.
+pub struct SourceFile {
+    /// Path as given to the scanner (display form).
+    pub path: String,
+    /// Path relative to the last `/src/` component — the scope key the
+    /// per-module rules match on.
+    pub module: String,
+    pub stripped: Stripped,
+    pub fns: Vec<FnInfo>,
+    /// Per line: index into `fns` of the innermost enclosing function.
+    pub line_fn: Vec<Option<usize>>,
+    /// Per line: inside a `#[cfg(test)]` / `#[test]` region.
+    pub test_lines: Vec<bool>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        let stripped = strip(src);
+        let mut skip = TestSkip::default();
+        let test_lines: Vec<bool> = stripped.code.iter().map(|l| skip.observe(l)).collect();
+        let (fns, line_fn) = extract_fns(&stripped, &test_lines);
+        SourceFile {
+            path: path.to_string(),
+            module: normalize_module(path),
+            stripped,
+            fns,
+            line_fn,
+            test_lines,
+        }
+    }
+
+    /// The function declaring `line` (0-based), innermost first.
+    pub fn fn_at(&self, line: usize) -> Option<&FnInfo> {
+        self.line_fn.get(line).copied().flatten().map(|i| &self.fns[i])
+    }
+}
+
+/// Module path relative to the last `/src/` component; the raw path when
+/// there is none.
+pub fn normalize_module(path: &str) -> String {
+    let s = path.replace('\\', "/");
+    match s.rfind("/src/") {
+        Some(p) => s[p + "/src/".len()..].to_string(),
+        None => s,
+    }
+}
+
+/// After `impl`, recover the implemented type: skip generics, and for
+/// `impl Trait for Type` take the segment after `for`.  `rest` is the
+/// text following the `impl` keyword on its line (signatures that wrap
+/// are joined by the caller).
+fn impl_type(rest: &str) -> Option<String> {
+    // Strip a leading generics list `<...>` (depth-balanced).
+    let rest = rest.trim_start();
+    let rest = if let Some(s) = rest.strip_prefix('<') {
+        let mut depth = 1usize;
+        let mut end = 0;
+        for (i, c) in s.char_indices() {
+            match c {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        &s[end.min(s.len())..]
+    } else {
+        rest
+    };
+    // Body of the impl header up to `{` or `where`.
+    let head = rest.split('{').next().unwrap_or(rest);
+    let head = head.split(" where ").next().unwrap_or(head);
+    let subject = match head.find(" for ") {
+        Some(p) => &head[p + " for ".len()..],
+        None => head,
+    };
+    // Last path segment, generics dropped: `kv::KvCache<'a>` → `KvCache`.
+    let subject = subject.split('<').next().unwrap_or(subject).trim();
+    let name = subject.rsplit("::").next().unwrap_or(subject).trim();
+    let name: String = name
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+enum Frame {
+    /// Opened by `impl X {` — `depth` is the brace depth *inside* it.
+    Impl { name: Option<String>, depth: usize },
+    /// Opened by `fn name(...) {` — index into the output fn table.
+    Fn { index: usize, depth: usize },
+    /// Any other brace (block, struct, match arm, closure, ...).
+    Other { depth: usize },
+}
+
+/// Waiting for a pending item header's body brace.
+enum Pending {
+    None,
+    Impl { name: Option<String> },
+    Fn { index: usize, paren_depth: i32 },
+}
+
+fn extract_fns(
+    stripped: &Stripped,
+    test_lines: &[bool],
+) -> (Vec<FnInfo>, Vec<Option<usize>>) {
+    let mut fns: Vec<FnInfo> = Vec::new();
+    let mut line_fn: Vec<Option<usize>> = vec![None; stripped.code.len()];
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut depth: usize = 0;
+    let mut pending = Pending::None;
+
+    for (lineno, line) in stripped.code.iter().enumerate() {
+        // Record the innermost enclosing fn for this line BEFORE scanning
+        // it (the `fn` line itself belongs to the new fn — patched below).
+        let mut innermost = stack
+            .iter()
+            .rev()
+            .find_map(|f| match f {
+                Frame::Fn { index, .. } => Some(*index),
+                _ => None,
+            });
+
+        let chars: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            // Identifier scan: catch `impl` / `fn` keywords.
+            if (c.is_ascii_alphabetic() || c == '_') && !prev_ident(&chars, i) {
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                let word: String = chars[start..i].iter().collect();
+                if matches!(pending, Pending::None) {
+                    if word == "impl" {
+                        let rest: String = chars[i..].iter().collect();
+                        // The header may wrap; a None name is tolerated
+                        // and refined when the brace opens on this line.
+                        pending = Pending::Impl {
+                            name: impl_type(&rest),
+                        };
+                        // Keep scanning this line for the opening brace.
+                        continue;
+                    }
+                    if word == "fn" {
+                        // Next token must be the name (a bare `fn(` is a
+                        // function-pointer type, not an item).
+                        let mut j = i;
+                        while j < chars.len() && chars[j].is_whitespace() {
+                            j += 1;
+                        }
+                        let name_start = j;
+                        while j < chars.len() && (chars[j].is_alphanumeric() || chars[j] == '_')
+                        {
+                            j += 1;
+                        }
+                        if j > name_start {
+                            let name: String = chars[name_start..j].iter().collect();
+                            let owner = stack.iter().rev().find_map(|f| match f {
+                                Frame::Impl { name, .. } => name.clone(),
+                                _ => None,
+                            });
+                            fns.push(FnInfo {
+                                name,
+                                owner,
+                                start: lineno,
+                                end: lineno,
+                                is_test: test_lines.get(lineno).copied().unwrap_or(false),
+                            });
+                            pending = Pending::Fn {
+                                index: fns.len() - 1,
+                                paren_depth: 0,
+                            };
+                            innermost = Some(fns.len() - 1);
+                            i = j;
+                        }
+                        continue;
+                    }
+                }
+                continue;
+            }
+            match c {
+                '(' => {
+                    if let Pending::Fn { paren_depth, .. } = &mut pending {
+                        *paren_depth += 1;
+                    }
+                }
+                ')' => {
+                    if let Pending::Fn { paren_depth, .. } = &mut pending {
+                        *paren_depth -= 1;
+                    }
+                }
+                ';' => {
+                    // Bodyless declaration at paren depth 0 cancels the
+                    // pending item (trait method, fn-pointer alias).
+                    match &pending {
+                        Pending::Fn { paren_depth: 0, .. } | Pending::Impl { .. } => {
+                            pending = Pending::None;
+                        }
+                        _ => {}
+                    }
+                }
+                '{' => {
+                    depth += 1;
+                    match std::mem::replace(&mut pending, Pending::None) {
+                        Pending::Impl { name } => stack.push(Frame::Impl { name, depth }),
+                        Pending::Fn { index, .. } => {
+                            stack.push(Frame::Fn { index, depth });
+                        }
+                        Pending::None => stack.push(Frame::Other { depth }),
+                    }
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    while let Some(top) = stack.last() {
+                        let d = match top {
+                            Frame::Impl { depth, .. }
+                            | Frame::Fn { depth, .. }
+                            | Frame::Other { depth } => *depth,
+                        };
+                        if d > depth {
+                            if let Some(Frame::Fn { index, .. }) = stack.pop().map(|f| match f {
+                                Frame::Fn { index, depth } => Frame::Fn { index, depth },
+                                other => other,
+                            }) {
+                                fns[index].end = lineno;
+                            }
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        line_fn[lineno] = innermost;
+    }
+    // Unclosed fns (truncated input) end at the last line.
+    let last = stripped.code.len().saturating_sub(1);
+    for f in stack {
+        if let Frame::Fn { index, .. } = f {
+            fns[index].end = last;
+        }
+    }
+    (fns, line_fn)
+}
+
+fn prev_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> SourceFile {
+        SourceFile::parse("rust/src/x/y.rs", src)
+    }
+
+    #[test]
+    fn extracts_free_and_impl_fns() {
+        let src = "fn free() {\n    body();\n}\n\
+                   struct S;\n\
+                   impl S {\n    fn method(&self) -> u32 {\n        1\n    }\n}\n\
+                   impl Drop for S {\n    fn drop(&mut self) {}\n}\n";
+        let f = parse(src);
+        let names: Vec<String> = f.fns.iter().map(|x| x.qualified()).collect();
+        assert_eq!(names, vec!["free", "S::method", "S::drop"]);
+        assert_eq!(f.fns[0].start, 0);
+        assert_eq!(f.fns[0].end, 2);
+        assert_eq!(f.fns[1].start, 5);
+        assert_eq!(f.fns[1].end, 7);
+    }
+
+    #[test]
+    fn line_fn_maps_to_innermost() {
+        let src = "fn outer() {\n    fn inner() {\n        x();\n    }\n    y();\n}\n";
+        let f = parse(src);
+        assert_eq!(f.fn_at(2).unwrap().name, "inner");
+        assert_eq!(f.fn_at(4).unwrap().name, "outer");
+        assert!(f.fn_at(5).is_some()); // closing brace line still outer's
+    }
+
+    #[test]
+    fn generic_impls_and_trait_impls_resolve_the_type() {
+        let src = "impl<T> Deref for RankedGuard<'_, T> {\n    fn deref(&self) -> &T { x() }\n}\n\
+                   impl<'a> Wrapper<'a> {\n    fn get(&self) {}\n}\n";
+        let f = parse(src);
+        let names: Vec<String> = f.fns.iter().map(|x| x.qualified()).collect();
+        assert_eq!(names, vec!["RankedGuard::deref", "Wrapper::get"]);
+    }
+
+    #[test]
+    fn trait_method_declarations_without_body_are_skipped() {
+        let src = "trait T {\n    fn decl(&self);\n    fn with_default(&self) {\n        1;\n    }\n}\n";
+        let f = parse(src);
+        let names: Vec<&str> = f.fns.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, vec!["with_default"]);
+    }
+
+    #[test]
+    fn test_regions_mark_fns() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n    #[test]\n    fn t() {}\n}\n";
+        let f = parse(src);
+        assert!(!f.fns[0].is_test);
+        assert!(f.fns[1].is_test, "helper inside cfg(test) mod");
+        assert!(f.fns[2].is_test);
+    }
+
+    #[test]
+    fn fn_pointer_types_are_not_items() {
+        let src = "type Cb = fn(u32) -> u32;\nfn real(cb: fn() -> ()) {\n    cb();\n}\n";
+        let f = parse(src);
+        let names: Vec<&str> = f.fns.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, vec!["real"]);
+    }
+
+    #[test]
+    fn multiline_signatures_attach_the_body() {
+        let src = "fn long(\n    a: u32,\n    b: u32,\n) -> u32 {\n    a + b\n}\n";
+        let f = parse(src);
+        assert_eq!(f.fns.len(), 1);
+        assert_eq!(f.fns[0].start, 0);
+        assert_eq!(f.fns[0].end, 5);
+        assert_eq!(f.fn_at(4).unwrap().name, "long");
+    }
+
+    #[test]
+    fn module_normalization() {
+        assert_eq!(normalize_module("rust/src/util/sync.rs"), "util/sync.rs");
+        assert_eq!(
+            normalize_module("/abs/repo/rust/src/serve/server.rs"),
+            "serve/server.rs"
+        );
+        assert_eq!(normalize_module("fixture.rs"), "fixture.rs");
+    }
+}

@@ -1,0 +1,301 @@
+//! The audit lexer: a char-level scanner that splits Rust source into
+//! three per-line channels — `code` (comments, string contents and char
+//! literals blanked), `comments` (comment text, for `audit-allow:`
+//! markers) and `strings` (string-literal contents, for serialization-key
+//! and threshold-key lineage checks).
+//!
+//! Line numbers are preserved exactly: every channel has one entry per
+//! source line, so a finding computed on channel `i` reports source line
+//! `i + 1`.  The scanner handles raw/byte strings (`r"…"`, `br##"…"##`),
+//! nested block comments, escaped char literals and the
+//! lifetime-vs-char-literal ambiguity, and never panics on arbitrary
+//! input (a proptest drives it with random byte soup) — unterminated
+//! literals simply run to end of input.
+//!
+//! Everything downstream of the legacy token rules AND the crate-graph
+//! passes (item extraction, call-graph building, lock-order, gauge
+//! lineage) consumes this one representation, so the old scanner and the
+//! new passes can never disagree about what is code and what is text.
+
+/// Source split into per-line channels; see the module doc.
+#[derive(Debug, Default)]
+pub struct Stripped {
+    /// Code with comments, string contents and char literals blanked.
+    pub code: Vec<String>,
+    /// Comment text per line (`//`, `///`, `//!` and block-comment body).
+    pub comments: Vec<String>,
+    /// String-literal contents per line, space-joined.
+    pub strings: Vec<String>,
+}
+
+impl Stripped {
+    pub fn lines(&self) -> usize {
+        self.code.len()
+    }
+}
+
+fn newline(out: &mut Stripped) {
+    out.code.push(String::new());
+    out.comments.push(String::new());
+    out.strings.push(String::new());
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// If a raw (byte) string literal starts at `i` (`r"`, `r#"`, `br##"`,
+/// ...), return the index one past its closing quote.
+fn raw_string_end(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) != Some(&'"') {
+        return None;
+    }
+    j += 1;
+    while j < chars.len() {
+        if chars[j] == '"'
+            && chars
+                .get(j + 1..j + 1 + hashes)
+                .is_some_and(|t| t.iter().all(|&c| c == '#'))
+        {
+            return Some(j + 1 + hashes);
+        }
+        j += 1;
+    }
+    Some(chars.len())
+}
+
+/// Split `src` into the three per-line channels.  Total work is O(len):
+/// every character is visited a bounded number of times.
+pub fn strip(src: &str) -> Stripped {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Stripped::default();
+    newline(&mut out);
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            newline(&mut out);
+            i += 1;
+            continue;
+        }
+        // Line comment (covers `///` and `//!` doc comments too).
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < n && chars[i] != '\n' {
+                out.comments.last_mut().expect("line present").push(chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    newline(&mut out);
+                    i += 1;
+                } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    out.comments.last_mut().expect("line present").push(chars[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw / byte-string prefixes.
+        if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+            if let Some(end) = raw_string_end(&chars, i) {
+                for &ch in &chars[i..end] {
+                    if ch == '\n' {
+                        newline(&mut out);
+                    } else if ch != '"' && ch != '#' {
+                        out.strings.last_mut().expect("line present").push(ch);
+                    }
+                }
+                out.strings.last_mut().expect("line present").push(' ');
+                i = end;
+                continue;
+            }
+            // `b"..."` / `b'x'`: step past the prefix; the quote handlers
+            // below take over on the next iteration.
+            if chars.get(i + 1) == Some(&'"') || chars.get(i + 1) == Some(&'\'') {
+                i += 1;
+                continue;
+            }
+        }
+        // Plain string.
+        if c == '"' {
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    if let Some(&esc) = chars.get(i + 1) {
+                        out.strings.last_mut().expect("line present").push(esc);
+                    }
+                    i += 2;
+                } else if chars[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if chars[i] == '\n' {
+                        newline(&mut out);
+                    } else {
+                        out.strings.last_mut().expect("line present").push(chars[i]);
+                    }
+                    i += 1;
+                }
+            }
+            out.strings.last_mut().expect("line present").push(' ');
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if chars.get(i + 1) == Some(&'\\') {
+                // Escaped char: skip past `'\x`, then scan to the close.
+                i += 3;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                continue;
+            }
+            if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                i += 3; // 'x'
+                continue;
+            }
+            // Lifetime: drop the quote, keep scanning.
+            i += 1;
+            continue;
+        }
+        out.code.last_mut().expect("line present").push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Iterate identifiers in one stripped-code line as `(start_col, ident)`.
+pub fn idents(line: &str) -> Vec<(usize, &str)> {
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            while i < bytes.len() && {
+                let d = bytes[i] as char;
+                d.is_ascii_alphanumeric() || d == '_'
+            } {
+                i += 1;
+            }
+            out.push((start, &line[start..i]));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// True when `line[pos..]` starts an identifier boundary (the char before
+/// `pos` is not part of an identifier).
+pub fn at_ident_start(line: &str, pos: usize) -> bool {
+    pos == 0
+        || !line[..pos]
+            .chars()
+            .next_back()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// True when the identifier ending at `end` is not followed by more
+/// identifier characters.
+pub fn at_ident_end(line: &str, end: usize) -> bool {
+    !line[end..]
+        .chars()
+        .next()
+        .is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Whole-word containment: `needle` appears in `hay` at identifier
+/// boundaries.
+pub fn contains_word(hay: &str, needle: &str) -> bool {
+    let mut start = 0;
+    while let Some(rel) = hay[start..].find(needle) {
+        let abs = start + rel;
+        if at_ident_start(hay, abs) && at_ident_end(hay, abs + needle.len()) {
+            return true;
+        }
+        start = abs + needle.len().max(1);
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channels_stay_line_aligned() {
+        let src = "fn f() { // hi\n    let s = \"a\nb\";\n}\n/* multi\nline */\n";
+        let s = strip(src);
+        let n = src.lines().count() + 1; // trailing newline opens a last, empty line
+        assert_eq!(s.code.len(), n);
+        assert_eq!(s.comments.len(), n);
+        assert_eq!(s.strings.len(), n);
+    }
+
+    #[test]
+    fn string_contents_land_in_the_string_channel() {
+        let s = strip("let k = \"prefix_hits\";\nlet r = r#\"raw_key\"#;\n");
+        assert!(s.strings[0].contains("prefix_hits"));
+        assert!(!s.code[0].contains("prefix_hits"));
+        assert!(s.strings[1].contains("raw_key"));
+    }
+
+    #[test]
+    fn comments_land_in_the_comment_channel() {
+        let s = strip("let x = 1; // audit-allow: nan-sort\n");
+        assert!(s.comments[0].contains("audit-allow: nan-sort"));
+        assert!(!s.code[0].contains("audit-allow"));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals() {
+        let s = strip("fn f<'a>(x: &'a str) { let c = '{'; let d = '\\''; }\n");
+        // the brace inside the char literal must not appear as code
+        assert_eq!(s.code[0].matches('{').count(), 1);
+        assert!(s.code[0].contains("fn f<"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("a.prefix_hits + 1", "prefix_hits"));
+        assert!(!contains_word("a.prefix_hits_total", "prefix_hits"));
+        assert!(!contains_word("my_prefix_hits", "prefix_hits"));
+    }
+
+    #[test]
+    fn unterminated_literals_do_not_panic() {
+        for src in ["\"abc", "r#\"abc", "'", "b'", "/* never closed", "'\\x"] {
+            let s = strip(src);
+            assert!(s.lines() >= 1);
+        }
+    }
+}

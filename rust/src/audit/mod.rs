@@ -1,0 +1,33 @@
+//! warp-audit v2: the crate-graph static analyzer behind the `warp-audit`
+//! bin and the CI `audit` job.
+//!
+//! Self-contained on purpose — no external parser dependencies, same
+//! offline constraint as `xla_stub`.  The pipeline:
+//!
+//! 1. [`lexer`] splits each source file into per-line `code` / `comments`
+//!    / `strings` channels (raw strings, nested block comments, char
+//!    literals and lifetimes handled; never panics on arbitrary bytes).
+//! 2. [`items`] recovers item structure from the stripped code:
+//!    `#[cfg(test)]` regions, `fn` boundaries with their `impl` owner,
+//!    and a per-line innermost-function map.
+//! 3. [`callgraph`] extracts call and `.lock()` sites per function and
+//!    resolves them crate-wide (conservative over-approximation;
+//!    qualifier/owner matching, same-file preference).
+//! 4. [`passes`] runs the rules: the five PR 7 token rules (re-hosted,
+//!    findings identical — see `rust/tests/audit_roundtrip.rs`), the
+//!    whole-crate `lock-order` / `gauge-lineage` / `hot-tick` passes,
+//!    and the `stale-allow` suppression audit.
+//!
+//! The static `LockRank` table is parsed out of `util/sync.rs` source and
+//! cross-checked against the runtime enum ([`crate::util::sync::LockRank::ALL`])
+//! so the static and dynamic checkers can never drift.  See the
+//! "Correctness tooling" section in [`crate::cortex`] for which checker —
+//! static pass, runtime sanitizer, or proptest — owns each invariant.
+
+pub mod callgraph;
+pub mod items;
+pub mod lexer;
+pub mod passes;
+
+pub use items::SourceFile;
+pub use passes::{allowed_rules, run, AuditInput, AuditReport, Finding, Rule};

@@ -1,0 +1,1799 @@
+//! The audit rules: the five legacy token rules re-hosted onto the
+//! shared lexer (findings bit-identical to the PR 7 scanner — a
+//! round-trip test in `rust/tests/audit_roundtrip.rs` proves it), plus
+//! the three crate-graph passes and the stale-suppression check.
+//!
+//! Pass architecture: every rule first produces *raw* findings (before
+//! suppression).  Suppression is then applied centrally — a
+//! `// audit-allow: <rule>` comment on the finding's line or the line
+//! above it silences the finding — and the stale-suppression pass runs
+//! over the raw set, flagging any marker that silences nothing.  That
+//! ordering is what makes `stale-allow` sound: it sees the findings the
+//! markers were written against, not the post-suppression residue.
+//!
+//! The whole-crate passes need context beyond one file, carried by
+//! [`AuditInput`]: the parsed file set, the raw text of
+//! `ci/thresholds.json`, and "extra" sources (`rust/tests/`,
+//! `rust/benches/`) that count as verification references for
+//! gauge-lineage but are not themselves scanned for findings.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use super::callgraph::{lock_sites, CrateGraph, FnId, LockSite};
+use super::items::SourceFile;
+use super::lexer::contains_word;
+
+/// Modules on the fused-tick decode path: every mutex here must be ranked
+/// (see `util::sync::LockRank`) so the deadlock detector covers it.
+pub const DECODE_PATH_MODULES: [&str; 8] = [
+    "model/pool.rs",
+    "cortex/step.rs",
+    "cortex/scheduler.rs",
+    "cortex/batcher.rs",
+    "cortex/prism.rs",
+    "cortex/synapse.rs",
+    "runtime/device.rs",
+    "metrics/mod.rs",
+];
+
+/// Comparator-position sinks for the `nan-sort` rule: `partial_cmp`
+/// appearing near one of these is a NaN-unsafe ordering.
+const SORTERS: [&str; 5] = [
+    "sort_by(",
+    "sort_unstable_by(",
+    "min_by(",
+    "max_by(",
+    "binary_search_by(",
+];
+
+/// Entry points of the fused decode tick for the `hot-tick` pass.
+const HOT_ROOTS: [&str; 3] = ["step_loop", "decode_fused", "prefill_step"];
+
+/// Tokens that mean filesystem / network IO when they appear on a
+/// hot-tick-reachable line of stripped code.
+const IO_TOKENS: [&str; 9] = [
+    "std::fs::",
+    "File::open",
+    "File::create",
+    "OpenOptions",
+    "read_to_string",
+    "TcpStream",
+    "TcpListener",
+    "UdpSocket",
+    "stdin()",
+];
+
+/// Output macros banned on the hot tick (they take a global stdio lock).
+const PRINT_MACROS: [&str; 4] = ["println", "eprintln", "print", "eprint"];
+
+/// Gauge-struct home modules for the gauge-lineage pass.
+const GAUGE_MODULES: [&str; 2] = ["model/pool.rs", "cortex/step.rs"];
+
+/// Read methods of the `metrics` sinks: a `Counter` / `Histogram` /
+/// `Throughput` field nobody calls one of these on is write-only.
+const SINK_READS: [&str; 9] = [
+    "summary",
+    "percentile_ns",
+    "mean_ns",
+    "count",
+    "total",
+    "overall_per_sec",
+    "recent_per_sec",
+    "get",
+    "snapshot",
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    PoisonCascade,
+    NanSort,
+    RawMutex,
+    PanicInServe,
+    FloatEq,
+    LockOrder,
+    GaugeLineage,
+    HotTick,
+    StaleAllow,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 9] = [
+        Rule::PoisonCascade,
+        Rule::NanSort,
+        Rule::RawMutex,
+        Rule::PanicInServe,
+        Rule::FloatEq,
+        Rule::LockOrder,
+        Rule::GaugeLineage,
+        Rule::HotTick,
+        Rule::StaleAllow,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::PoisonCascade => "poison-cascade",
+            Rule::NanSort => "nan-sort",
+            Rule::RawMutex => "raw-mutex",
+            Rule::PanicInServe => "panic-in-serve",
+            Rule::FloatEq => "float-eq",
+            Rule::LockOrder => "lock-order",
+            Rule::GaugeLineage => "gauge-lineage",
+            Rule::HotTick => "hot-tick",
+            Rule::StaleAllow => "stale-allow",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Rule> {
+        Rule::ALL.into_iter().find(|r| r.name() == name)
+    }
+
+    /// One-line rationale for `--list-rules`.
+    pub fn rationale(self) -> &'static str {
+        match self {
+            Rule::PoisonCascade => {
+                "a panicking session poisons a shared mutex and wedges every later \
+                 session; use util::sync::lock_unpoisoned or RankedMutex::lock"
+            }
+            Rule::NanSort => {
+                "partial_cmp in comparator position panics on NaN (sampler PR 4, \
+                 synapse selector PR 2); use total_cmp"
+            }
+            Rule::RawMutex => {
+                "bare std::sync::Mutex in a decode-path module escapes the lock-rank \
+                 detector; use util::sync::RankedMutex"
+            }
+            Rule::PanicInServe => {
+                "a request must fail as an error response, never by unwinding a \
+                 serve worker"
+            }
+            Rule::FloatEq => {
+                "exact float equality in model//cortex/ is a latent tolerance bug \
+                 across the int8/host round-trips; compare within a bound or on \
+                 to_bits()"
+            }
+            Rule::LockOrder => {
+                "static lock-order check: every reachable RankedMutex acquisition \
+                 path must be strictly rank-descending, even on paths no test \
+                 executes"
+            }
+            Rule::GaugeLineage => {
+                "every pool/step gauge must reach the /stats serialization and be \
+                 referenced by check_invariants, a test, or ci/thresholds.json; \
+                 metric sinks must be read somewhere"
+            }
+            Rule::HotTick => {
+                "functions reachable from the fused decode tick must not do IO, \
+                 sleep, print, or acquire locks ranked above SchedulerQueue"
+            }
+            Rule::StaleAllow => {
+                "an audit-allow marker that no longer suppresses a real finding is \
+                 a lie in the source; remove it"
+            }
+        }
+    }
+
+    /// Suppression syntax for `--list-rules`.
+    pub fn suppression(self) -> &'static str {
+        match self {
+            Rule::StaleAllow => "not suppressible — delete the stale marker",
+            _ => "// audit-allow: <rule> on the offending line or the line above",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Display path of the offending file.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+/// Everything the passes need: parsed sources plus out-of-crate context.
+#[derive(Default)]
+pub struct AuditInput {
+    pub files: Vec<SourceFile>,
+    /// Raw text of `ci/thresholds.json`, when in scope.
+    pub thresholds: Option<String>,
+    /// `(path, source)` of reference-only texts (tests/, benches/): they
+    /// count as gauge verification sites and threshold-key producers but
+    /// are not scanned for findings.
+    pub extras: Vec<(String, String)>,
+}
+
+pub struct AuditReport {
+    /// Post-suppression findings, sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// The static `LockRank` table parsed out of `util/sync.rs`
+    /// (name, value) — cross-checked against the runtime enum by the bin
+    /// and by `rust/tests/audit_roundtrip.rs` so the two can never drift.
+    pub rank_table: Vec<(String, u8)>,
+}
+
+/// Rules suppressed by an `audit-allow:` marker in this comment.
+pub fn allowed_rules(comment: &str) -> Vec<Rule> {
+    let Some(pos) = comment.find("audit-allow:") else {
+        return Vec::new();
+    };
+    comment[pos + "audit-allow:".len()..]
+        .split([',', ' '].as_slice())
+        .filter_map(|name| Rule::from_name(name.trim()))
+        .collect()
+}
+
+/// Run every pass over the input and apply suppression.
+pub fn run(input: &AuditInput) -> AuditReport {
+    let files = &input.files;
+    let graph = CrateGraph::build(files);
+    let ranks = parse_rank_enum(files);
+    let tables = RankTables::build(files, &ranks);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    for file in files {
+        raw.extend(legacy_pass(file));
+    }
+    raw.extend(lock_order_pass(files, &graph, &ranks, &tables));
+    raw.extend(hot_tick_pass(files, &graph, &ranks, &tables));
+    raw.extend(gauge_lineage_pass(input));
+
+    let by_path: BTreeMap<&str, &SourceFile> =
+        files.iter().map(|f| (f.path.as_str(), f)).collect();
+    let mut findings: Vec<Finding> = raw
+        .iter()
+        .filter(|f| !suppressed(f, &by_path))
+        .cloned()
+        .collect();
+    findings.extend(stale_allow_pass(files, &raw));
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule.name()).cmp(&(b.path.as_str(), b.line, b.rule.name()))
+    });
+    AuditReport {
+        findings,
+        files_scanned: files.len(),
+        rank_table: ranks,
+    }
+}
+
+fn suppressed(f: &Finding, by_path: &BTreeMap<&str, &SourceFile>) -> bool {
+    if f.rule == Rule::StaleAllow {
+        return false;
+    }
+    let Some(file) = by_path.get(f.path.as_str()) else {
+        return false; // non-source findings (thresholds.json) have no markers
+    };
+    let idx = f.line - 1;
+    let on = |i: usize| {
+        file.stripped
+            .comments
+            .get(i)
+            .is_some_and(|c| allowed_rules(c).contains(&f.rule))
+    };
+    on(idx) || (idx > 0 && on(idx - 1))
+}
+
+/// Flag markers that silence no raw finding (same line or the line
+/// below — the two positions suppression honors).
+fn stale_allow_pass(files: &[SourceFile], raw: &[Finding]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in files {
+        for (idx, comment) in file.stripped.comments.iter().enumerate() {
+            // Markers inside test regions are dead by construction (rules
+            // skip tests); they are noise, not lies — ignore them.
+            if file.test_lines.get(idx).copied().unwrap_or(false) {
+                continue;
+            }
+            for rule in allowed_rules(comment) {
+                let used = raw.iter().any(|f| {
+                    f.path == file.path
+                        && f.rule == rule
+                        && (f.line == idx + 1 || f.line == idx + 2)
+                });
+                if !used {
+                    out.push(Finding {
+                        path: file.path.clone(),
+                        line: idx + 1,
+                        rule: Rule::StaleAllow,
+                        message: format!(
+                            "stale suppression: no {} finding on this line or the \
+                             next — remove the marker",
+                            rule.name()
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Legacy token rules (PR 7 semantics, re-hosted on the shared lexer).
+// ---------------------------------------------------------------------------
+
+/// True when `s` contains a float-typed expression shape: a float literal
+/// (`1.0`, `2.5e-3`, `1f32`) or an `as f32` / `as f64` cast.  Operates on
+/// stripped code, so strings and comments never match.
+fn has_float_expr(s: &str) -> bool {
+    if s.contains("as f32") || s.contains("as f64") {
+        return true;
+    }
+    let c: Vec<char> = s.chars().collect();
+    for i in 0..c.len() {
+        if !c[i].is_ascii_digit() {
+            continue;
+        }
+        // Must start a numeric token (not `x2`, `0x1E`, tuple index `.0`).
+        if i > 0 && (c[i - 1].is_alphanumeric() || c[i - 1] == '_' || c[i - 1] == '.') {
+            continue;
+        }
+        let mut j = i;
+        while j < c.len() && (c[j].is_ascii_digit() || c[j] == '_') {
+            j += 1;
+        }
+        match c.get(j) {
+            Some('.') if c.get(j + 1).is_some_and(|d| d.is_ascii_digit()) => return true,
+            Some('e') | Some('E') => {
+                let mut k = j + 1;
+                if matches!(c.get(k), Some('+') | Some('-')) {
+                    k += 1;
+                }
+                if c.get(k).is_some_and(|d| d.is_ascii_digit()) {
+                    return true;
+                }
+            }
+            Some('f') => {
+                let suffix = c.get(j + 1..j + 3);
+                if (suffix == Some(&['3', '2']) || suffix == Some(&['6', '4']))
+                    && c.get(j + 3)
+                        .map_or(true, |ch| !(ch.is_alphanumeric() || *ch == '_'))
+                {
+                    return true;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Does the `==`/`!=` at byte `p` compare a float expression?  Operands
+/// are bounded by the nearest expression delimiter on each side, so a
+/// float literal elsewhere on the line cannot condemn an integer compare.
+fn float_eq_at(line: &str, p: usize) -> bool {
+    let left_all = &line[..p];
+    let right_all = &line[p + 2..];
+    let lb = ["(", "{", "[", ",", ";", "&&", "||"]
+        .iter()
+        .filter_map(|d| left_all.rfind(d).map(|q| q + d.len()))
+        .max()
+        .unwrap_or(0);
+    let rb = [")", "}", "]", ",", ";", "&&", "||", "{"]
+        .iter()
+        .filter_map(|d| right_all.find(d))
+        .min()
+        .unwrap_or(right_all.len());
+    has_float_expr(&left_all[lb..]) || has_float_expr(&right_all[..rb])
+}
+
+/// The five PR 7 rules over one file, emitting RAW findings (suppression
+/// is applied centrally by [`run`]).
+pub fn legacy_pass(file: &SourceFile) -> Vec<Finding> {
+    let module = file.module.as_str();
+    let mut findings: Vec<Finding> = Vec::new();
+    let decode_path = DECODE_PATH_MODULES.contains(&module);
+    let in_serve = module.starts_with("serve/");
+    let in_sync = module == "util/sync.rs";
+    let float_scope = module.starts_with("model/") || module.starts_with("cortex/");
+    for (idx, line) in file.stripped.code.iter().enumerate() {
+        if file.test_lines[idx] {
+            continue;
+        }
+        let mut report = |rule: Rule, message: &str| {
+            findings.push(Finding {
+                path: file.path.clone(),
+                line: idx + 1,
+                rule,
+                message: message.to_string(),
+            });
+        };
+        if !in_sync {
+            // Merge with the next line so a formatter-split
+            // `.lock()\n.unwrap()` chain is still caught; only matches
+            // that *start* on this line are reported here.
+            let here = line.trim_end();
+            let next = file.stripped.code.get(idx + 1).map_or("", |l| l.trim());
+            let merged = format!("{here}{next}");
+            for pat in [".lock().unwrap()", ".lock().expect("] {
+                if let Some(p) = merged.find(pat) {
+                    if p < here.len() {
+                        report(
+                            Rule::PoisonCascade,
+                            "poison-intolerant lock: use util::sync::lock_unpoisoned \
+                             or a RankedMutex",
+                        );
+                        break;
+                    }
+                }
+            }
+        }
+        if line.contains(".partial_cmp(") {
+            let window = idx.saturating_sub(2);
+            let in_comparator = file.stripped.code[window..=idx]
+                .iter()
+                .any(|l| SORTERS.iter().any(|s| l.contains(s)));
+            if in_comparator {
+                report(Rule::NanSort, "NaN-unsafe comparator: use total_cmp");
+            }
+        }
+        if decode_path {
+            let mut start = 0;
+            while let Some(p) = line[start..].find("Mutex::new(") {
+                let abs = start + p;
+                if line[..abs].ends_with("Ranked") {
+                    start = abs + "Mutex::new(".len();
+                    continue;
+                }
+                report(
+                    Rule::RawMutex,
+                    "bare std::sync::Mutex in a decode-path module: \
+                     use util::sync::RankedMutex",
+                );
+                break;
+            }
+        }
+        if in_serve {
+            for pat in [".unwrap()", ".expect(", "panic!"] {
+                if line.contains(pat) {
+                    report(
+                        Rule::PanicInServe,
+                        "panic path in request handling: return an error \
+                         response instead",
+                    );
+                    break;
+                }
+            }
+        }
+        if float_scope {
+            'ops: for op in ["==", "!="] {
+                let mut start = 0;
+                while let Some(rel) = line[start..].find(op) {
+                    let abs = start + rel;
+                    // Not part of `<=`, `>=`, `=>`, compound assignment…
+                    let before = line[..abs].chars().next_back();
+                    let after = line[abs + 2..].chars().next();
+                    let neighbor = matches!(
+                        before,
+                        Some('<' | '>' | '=' | '!' | '+' | '-' | '*' | '/' | '%' | '&' | '|' | '^')
+                    ) || after == Some('=');
+                    if !neighbor && float_eq_at(line, abs) {
+                        report(
+                            Rule::FloatEq,
+                            "exact float equality: compare within a bound, \
+                             or on to_bits() where bit-identity is the contract",
+                        );
+                        break 'ops;
+                    }
+                    start = abs + 2;
+                }
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Lock-rank tables.
+// ---------------------------------------------------------------------------
+
+/// Parse the `enum LockRank { Name = value, ... }` declaration out of
+/// `util/sync.rs` stripped code.  Empty when the file is out of scope.
+pub fn parse_rank_enum(files: &[SourceFile]) -> Vec<(String, u8)> {
+    let Some(sync) = files.iter().find(|f| f.module == "util/sync.rs") else {
+        return Vec::new();
+    };
+    let joined = sync.stripped.code.join("\n");
+    let Some(p) = joined.find("enum LockRank") else {
+        return Vec::new();
+    };
+    let Some(open) = joined[p..].find('{') else {
+        return Vec::new();
+    };
+    let body = &joined[p + open + 1..];
+    let mut out = Vec::new();
+    let mut next_value: u8 = 0;
+    let chars: Vec<char> = body.chars().collect();
+    let mut i = 0;
+    while i < chars.len() && chars[i] != '}' {
+        let c = chars[i];
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            let name: String = chars[start..i].iter().collect();
+            // Optional `= value`.
+            let mut j = i;
+            while j < chars.len() && chars[j].is_whitespace() {
+                j += 1;
+            }
+            let mut value = next_value;
+            if chars.get(j) == Some(&'=') {
+                j += 1;
+                while j < chars.len() && chars[j].is_whitespace() {
+                    j += 1;
+                }
+                let num_start = j;
+                while j < chars.len() && chars[j].is_ascii_digit() {
+                    j += 1;
+                }
+                if let Ok(v) = chars[num_start..j].iter().collect::<String>().parse() {
+                    value = v;
+                }
+                i = j;
+            }
+            out.push((name, value));
+            next_value = value.saturating_add(1);
+            // Skip to the variant separator.
+            while i < chars.len() && chars[i] != ',' && chars[i] != '}' {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Per-file `field → rank` tables from `RankedMutex::new(LockRank::X, ..)`
+/// construction sites, plus a global fallback for names that are unique
+/// crate-wide.
+pub struct RankTables {
+    per_file: Vec<BTreeMap<String, u8>>,
+    /// `None` marks a crate-ambiguous name (e.g. `state` in both the pool
+    /// and the session table) — unusable as a fallback.
+    global: BTreeMap<String, Option<u8>>,
+}
+
+impl RankTables {
+    pub fn build(files: &[SourceFile], ranks: &[(String, u8)]) -> RankTables {
+        let rank_of = |name: &str| ranks.iter().find(|(n, _)| n == name).map(|(_, v)| *v);
+        let mut per_file = Vec::with_capacity(files.len());
+        let mut global: BTreeMap<String, Option<u8>> = BTreeMap::new();
+        for file in files {
+            let mut table: BTreeMap<String, u8> = BTreeMap::new();
+            let joined = file.stripped.code.join("\n");
+            // Line starts, to skip construction sites inside test regions.
+            let mut line_starts = vec![0usize];
+            for (i, b) in joined.bytes().enumerate() {
+                if b == b'\n' {
+                    line_starts.push(i + 1);
+                }
+            }
+            let mut from = 0;
+            while let Some(rel) = joined[from..].find("RankedMutex::new") {
+                let abs = from + rel;
+                from = abs + "RankedMutex::new".len();
+                let line = line_starts.partition_point(|&s| s <= abs) - 1;
+                if file.test_lines.get(line).copied().unwrap_or(false) {
+                    continue;
+                }
+                let after = &joined[from..];
+                let Some(lr) = after.find("LockRank::") else {
+                    continue;
+                };
+                // The rank argument sits right in the call; a far-away
+                // LockRank mention is some other expression.
+                if lr > 80 {
+                    continue;
+                }
+                let rank_name: String = after[lr + "LockRank::".len()..]
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                let Some(rank) = rank_of(&rank_name) else {
+                    continue;
+                };
+                if let Some(name) = binding_ident(&joined[..abs]) {
+                    table.insert(name.clone(), rank);
+                    global
+                        .entry(name)
+                        .and_modify(|v| {
+                            if *v != Some(rank) {
+                                *v = None;
+                            }
+                        })
+                        .or_insert(Some(rank));
+                }
+            }
+            per_file.push(table);
+        }
+        RankTables { per_file, global }
+    }
+
+    /// Resolve a `.lock()` receiver to a rank: same-file first, then the
+    /// global table when the name is unambiguous crate-wide.
+    pub fn resolve(&self, file_idx: usize, receiver: &str) -> Option<u8> {
+        if let Some(r) = self.per_file.get(file_idx).and_then(|t| t.get(receiver)) {
+            return Some(*r);
+        }
+        self.global.get(receiver).copied().flatten()
+    }
+}
+
+/// Walk backwards from a `RankedMutex::new` site to the ident it is bound
+/// to: `let x = …`, `field: …` (struct literal), `static N: T = …`, and
+/// wrapper calls (`Arc::new(…)`) are all recognized.
+fn binding_ident(head: &str) -> Option<String> {
+    let c: Vec<char> = head.chars().collect();
+    let mut i = c.len();
+    loop {
+        while i > 0 && c[i - 1].is_whitespace() {
+            i -= 1;
+        }
+        if i == 0 {
+            return None;
+        }
+        match c[i - 1] {
+            '(' => {
+                // A wrapper call: skip `(` and the call path, keep looking.
+                i -= 1;
+                while i > 0 && c[i - 1].is_whitespace() {
+                    i -= 1;
+                }
+                while i > 0
+                    && (c[i - 1].is_alphanumeric()
+                        || c[i - 1] == '_'
+                        || c[i - 1] == ':'
+                        || c[i - 1] == '<'
+                        || c[i - 1] == '>')
+                {
+                    i -= 1;
+                }
+            }
+            '=' => {
+                i -= 1;
+                while i > 0 && c[i - 1].is_whitespace() {
+                    i -= 1;
+                }
+                if i > 0 && c[i - 1] == '>' {
+                    // Generic type annotation: skip the balanced `<…>` and
+                    // the type path back through the `:`.
+                    let mut depth = 0i32;
+                    while i > 0 {
+                        match c[i - 1] {
+                            '>' => depth += 1,
+                            '<' => depth -= 1,
+                            _ => {}
+                        }
+                        i -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    while i > 0
+                        && (c[i - 1].is_alphanumeric() || c[i - 1] == '_' || c[i - 1] == ':')
+                    {
+                        i -= 1;
+                    }
+                    while i > 0 && c[i - 1].is_whitespace() {
+                        i -= 1;
+                    }
+                    return ident_ending_at(&c, i);
+                }
+                let end = i;
+                let name = ident_ending_at(&c, end)?;
+                // `x: Type =` — the ident we just read is the type; the
+                // binding sits before the `:`.
+                let mut j = end - name.chars().count();
+                while j > 0 && c[j - 1].is_whitespace() {
+                    j -= 1;
+                }
+                if j > 0 && c[j - 1] == ':' && !(j > 1 && c[j - 2] == ':') {
+                    let mut k = j - 1;
+                    while k > 0 && c[k - 1].is_whitespace() {
+                        k -= 1;
+                    }
+                    return ident_ending_at(&c, k);
+                }
+                return Some(name);
+            }
+            ':' => {
+                // Struct-literal field `name: RankedMutex::new(…)`; a `::`
+                // here would be a path, which cannot precede the match.
+                if i > 1 && c[i - 2] == ':' {
+                    return None;
+                }
+                let mut k = i - 1;
+                while k > 0 && c[k - 1].is_whitespace() {
+                    k -= 1;
+                }
+                return ident_ending_at(&c, k);
+            }
+            _ => return None,
+        }
+    }
+}
+
+fn ident_ending_at(c: &[char], end: usize) -> Option<String> {
+    let mut start = end;
+    while start > 0 && (c[start - 1].is_alphanumeric() || c[start - 1] == '_') {
+        start -= 1;
+    }
+    if start == end {
+        None
+    } else {
+        Some(c[start..end].iter().collect())
+    }
+}
+
+fn rank_label(ranks: &[(String, u8)], v: u8) -> String {
+    ranks
+        .iter()
+        .find(|(_, x)| *x == v)
+        .map(|(n, _)| format!("{n}({v})"))
+        .unwrap_or_else(|| format!("rank {v}"))
+}
+
+// ---------------------------------------------------------------------------
+// lock-order: strictly-descending acquisition, whole crate.
+// ---------------------------------------------------------------------------
+
+/// Ranks a function may acquire directly (its own `.lock()` sites).
+fn direct_ranks(
+    files: &[SourceFile],
+    graph: &CrateGraph,
+    tables: &RankTables,
+) -> BTreeMap<FnId, BTreeSet<u8>> {
+    let mut out: BTreeMap<FnId, BTreeSet<u8>> = BTreeMap::new();
+    for (&id, _) in graph.edges.iter() {
+        let file = &files[id.file];
+        if file.module == "util/sync.rs" {
+            continue; // the rank machinery's own internals
+        }
+        let mut ranks = BTreeSet::new();
+        for site in lock_sites(file, graph.info(id)) {
+            if let Some(r) = tables.resolve(id.file, &site.receiver) {
+                ranks.insert(r);
+            }
+        }
+        if !ranks.is_empty() {
+            out.insert(id, ranks);
+        }
+    }
+    out
+}
+
+/// Fixpoint closure of `direct` over the call graph: every rank a
+/// function may acquire transitively.
+fn transitive_ranks(
+    graph: &CrateGraph,
+    direct: &BTreeMap<FnId, BTreeSet<u8>>,
+) -> BTreeMap<FnId, BTreeSet<u8>> {
+    let mut acq = direct.clone();
+    loop {
+        let mut changed = false;
+        for (&id, edges) in graph.edges.iter() {
+            let mut add: BTreeSet<u8> = BTreeSet::new();
+            for &(_, callee) in edges {
+                if let Some(rs) = acq.get(&callee) {
+                    add.extend(rs.iter().copied());
+                }
+            }
+            if add.is_empty() {
+                continue;
+            }
+            let entry = acq.entry(id).or_default();
+            let before = entry.len();
+            entry.extend(add);
+            changed |= entry.len() != before;
+        }
+        if !changed {
+            return acq;
+        }
+    }
+}
+
+/// Shortest chain from `from` to a fn that directly acquires a rank
+/// `>= floor`; returns (labels, acquired rank).
+fn chain_to_acquisition(
+    graph: &CrateGraph,
+    direct: &BTreeMap<FnId, BTreeSet<u8>>,
+    from: FnId,
+    floor: u8,
+) -> Option<(Vec<String>, u8)> {
+    let offending = |id: FnId| {
+        direct
+            .get(&id)
+            .and_then(|rs| rs.iter().copied().find(|&r| r >= floor))
+    };
+    let mut prev: BTreeMap<FnId, FnId> = BTreeMap::new();
+    let mut queue = VecDeque::from([from]);
+    let mut seen = BTreeSet::from([from]);
+    while let Some(id) = queue.pop_front() {
+        if let Some(rank) = offending(id) {
+            let mut chain = vec![graph.label(id)];
+            let mut cur = id;
+            while let Some(&p) = prev.get(&cur) {
+                chain.push(graph.label(p));
+                cur = p;
+            }
+            chain.reverse();
+            return Some((chain, rank));
+        }
+        if let Some(edges) = graph.edges.get(&id) {
+            for &(_, callee) in edges {
+                if seen.insert(callee) {
+                    prev.insert(callee, id);
+                    queue.push_back(callee);
+                }
+            }
+        }
+    }
+    None
+}
+
+struct Held {
+    rank: u8,
+    receiver: String,
+    /// Bound guard ident (`let g = …`); `None` for expression guards that
+    /// die at end of line.
+    ident: Option<String>,
+    /// Brace depth at the binding — leaving that scope releases the guard.
+    depth: i32,
+    line: usize,
+}
+
+/// Parse `let [mut] IDENT` at the start of a stripped line.
+fn let_ident(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    let t = t.strip_prefix("let ")?;
+    let t = t.trim_start();
+    let t = t.strip_prefix("mut ").unwrap_or(t).trim_start();
+    let name: String = t
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+fn lock_order_pass(
+    files: &[SourceFile],
+    graph: &CrateGraph,
+    ranks: &[(String, u8)],
+    tables: &RankTables,
+) -> Vec<Finding> {
+    let direct = direct_ranks(files, graph, tables);
+    let acq = transitive_ranks(graph, &direct);
+    let mut out = Vec::new();
+    for &id in graph.sites.keys() {
+        let file = &files[id.file];
+        if file.module == "util/sync.rs" {
+            continue;
+        }
+        let info = graph.info(id);
+        let locks: Vec<LockSite> = lock_sites(file, info);
+        let edges = graph.edges.get(&id);
+        let mut held: Vec<Held> = Vec::new();
+        let mut depth: i32 = 0;
+        for line in info.start..=info.end.min(file.stripped.code.len().saturating_sub(1)) {
+            let code = &file.stripped.code[line];
+            // 1. Direct acquisitions on this line, strict-descent checked.
+            for site in locks.iter().filter(|s| s.line == line) {
+                let Some(rank) = tables.resolve(id.file, &site.receiver) else {
+                    continue;
+                };
+                if let Some(h) = held.iter().filter(|h| h.rank <= rank).min_by_key(|h| h.rank)
+                {
+                    out.push(Finding {
+                        path: file.path.clone(),
+                        line: line + 1,
+                        rule: Rule::LockOrder,
+                        message: format!(
+                            "{} acquires {} while holding {} (taken line {}): \
+                             ranks must strictly descend",
+                            graph.label(id),
+                            rank_label(ranks, rank),
+                            rank_label(ranks, h.rank),
+                            h.line + 1,
+                        ),
+                    });
+                }
+                held.push(Held {
+                    rank,
+                    receiver: site.receiver.clone(),
+                    ident: if site.bound { let_ident(code) } else { None },
+                    depth,
+                    line,
+                });
+            }
+            // 2. Calls made while holding: the callee's transitive
+            //    acquisitions must stay strictly below the held floor.
+            if let (Some(edges), Some(floor)) =
+                (edges, held.iter().map(|h| h.rank).min())
+            {
+                let holder = held
+                    .iter()
+                    .min_by_key(|h| h.rank)
+                    .map(|h| h.receiver.clone())
+                    .unwrap_or_default();
+                for &(l, callee) in edges.iter().filter(|(l, _)| *l == line) {
+                    let Some(reachable) = acq.get(&callee) else {
+                        continue;
+                    };
+                    if reachable.iter().any(|&r| r >= floor) {
+                        if let Some((chain, rank)) =
+                            chain_to_acquisition(graph, &direct, callee, floor)
+                        {
+                            out.push(Finding {
+                                path: file.path.clone(),
+                                line: l + 1,
+                                rule: Rule::LockOrder,
+                                message: format!(
+                                    "{} calls {} while holding {} via `{}`; the \
+                                     callee can acquire {} — chain: {} -> {}",
+                                    graph.label(id),
+                                    graph.label(callee),
+                                    rank_label(ranks, floor),
+                                    holder,
+                                    rank_label(ranks, rank),
+                                    graph.label(id),
+                                    chain.join(" -> "),
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+            // 3. Explicit `drop(guard)` releases.
+            let mut from = 0;
+            while let Some(rel) = code[from..].find("drop(") {
+                let abs = from + rel;
+                from = abs + "drop(".len();
+                if !super::lexer::at_ident_start(code, abs) {
+                    continue;
+                }
+                let arg: String = code[from..]
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                held.retain(|h| h.ident.as_deref() != Some(arg.as_str()));
+            }
+            // 4. Scope tracking: leaving the binding scope releases bound
+            //    guards; expression guards die with their line (their call
+            //    checks above already ran).
+            for ch in code.chars() {
+                match ch {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            held.retain(|h| h.ident.is_some() && depth >= h.depth);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// hot-tick: no blocking work reachable from the fused decode tick.
+// ---------------------------------------------------------------------------
+
+fn hot_tick_pass(
+    files: &[SourceFile],
+    graph: &CrateGraph,
+    ranks: &[(String, u8)],
+    tables: &RankTables,
+) -> Vec<Finding> {
+    let sched_rank = ranks
+        .iter()
+        .find(|(n, _)| n == "SchedulerQueue")
+        .map(|(_, v)| *v)
+        .unwrap_or(20);
+    let roots: Vec<FnId> = HOT_ROOTS.iter().flat_map(|n| graph.find(n)).collect();
+    if roots.is_empty() {
+        return Vec::new();
+    }
+    let reachable = graph.reachable(&roots);
+    let chain_from_root = |target: FnId| -> String {
+        roots
+            .iter()
+            .filter_map(|&r| graph.path(r, target))
+            .min_by_key(|p| p.len())
+            .map(|p| p.join(" -> "))
+            .unwrap_or_else(|| graph.label(target))
+    };
+    let mut out = Vec::new();
+    for &id in &reachable {
+        let file = &files[id.file];
+        if file.module == "util/sync.rs" {
+            continue; // rank machinery internals, runtime-checked
+        }
+        let info = graph.info(id);
+        let mut report = |line: usize, what: String| {
+            out.push(Finding {
+                path: file.path.clone(),
+                line: line + 1,
+                rule: Rule::HotTick,
+                message: format!("{what} on the hot tick path ({})", chain_from_root(id)),
+            });
+        };
+        if let Some(sites) = graph.sites.get(&id) {
+            for s in sites {
+                if s.is_macro && PRINT_MACROS.contains(&s.callee.as_str()) {
+                    report(s.line, format!("`{}!` takes the global stdio lock", s.callee));
+                } else if !s.is_macro && s.callee == "sleep" {
+                    report(s.line, "blocking `sleep`".to_string());
+                }
+            }
+        }
+        for line in info.start..=info.end.min(file.stripped.code.len().saturating_sub(1)) {
+            let code = &file.stripped.code[line];
+            if file.test_lines[line] {
+                continue;
+            }
+            for tok in IO_TOKENS {
+                if code.contains(tok) {
+                    report(line, format!("IO (`{tok}`)"));
+                    break;
+                }
+            }
+        }
+        for site in lock_sites(file, info) {
+            if let Some(rank) = tables.resolve(id.file, &site.receiver) {
+                if rank > sched_rank {
+                    report(
+                        site.line,
+                        format!(
+                            "acquires `{}` at {}, above {}",
+                            site.receiver,
+                            rank_label(ranks, rank),
+                            rank_label(ranks, sched_rank),
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// gauge-lineage: every gauge reaches /stats and some consistency check.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct FieldInfo {
+    line: usize,
+    strukt: String,
+    name: String,
+    ty: String,
+}
+
+/// Struct fields in one file's stripped code (non-test regions only).
+fn struct_fields(file: &SourceFile) -> Vec<FieldInfo> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    let lines = &file.stripped.code;
+    while i < lines.len() {
+        let line = lines[i].trim();
+        if file.test_lines[i] || !contains_word(line, "struct") {
+            i += 1;
+            continue;
+        }
+        let Some(pos) = line.find("struct ") else {
+            i += 1;
+            continue;
+        };
+        let name: String = line[pos + "struct ".len()..]
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if name.is_empty() || !line.contains('{') {
+            i += 1; // tuple / unit struct, or a body opening later — skip
+            continue;
+        }
+        let strukt = name;
+        let mut depth = line.matches('{').count() as i32 - line.matches('}').count() as i32;
+        i += 1;
+        while i < lines.len() && depth > 0 {
+            let body_line = lines[i].trim();
+            if depth == 1 && !body_line.starts_with('#') {
+                if let Some(colon) = body_line.find(':') {
+                    let head = body_line[..colon].trim();
+                    let field = head.rsplit(' ').next().unwrap_or(head);
+                    let valid = !field.is_empty()
+                        && field.chars().all(|c| c.is_alphanumeric() || c == '_')
+                        && !field.chars().next().is_some_and(|c| c.is_ascii_digit());
+                    if valid {
+                        let ty = body_line[colon + 1..].trim_end_matches(',').trim();
+                        out.push(FieldInfo {
+                            line: i,
+                            strukt: strukt.clone(),
+                            name: field.to_string(),
+                            ty: ty.to_string(),
+                        });
+                    }
+                }
+            }
+            depth += body_line.matches('{').count() as i32;
+            depth -= body_line.matches('}').count() as i32;
+            i += 1;
+        }
+    }
+    out
+}
+
+fn gauge_lineage_pass(input: &AuditInput) -> Vec<Finding> {
+    let files = &input.files;
+    // The pass needs the serve layer in scope to say anything about
+    // serialization; on partial trees it stays quiet.
+    let Some(server) = files.iter().find(|f| f.module == "serve/server.rs") else {
+        return Vec::new();
+    };
+    // Words mentioned by the serve layer's production code or string keys.
+    let mut server_words: BTreeSet<String> = BTreeSet::new();
+    for (idx, code) in server.stripped.code.iter().enumerate() {
+        if server.test_lines[idx] {
+            continue;
+        }
+        for (_, w) in super::lexer::idents(code) {
+            server_words.insert(w.to_string());
+        }
+        for w in server.stripped.strings[idx]
+            .split(|c: char| !(c.is_alphanumeric() || c == '_'))
+        {
+            if !w.is_empty() {
+                server_words.insert(w.to_string());
+            }
+        }
+    }
+    // Verification corpus: invariant checkers, test regions, extras,
+    // thresholds.
+    let mut verify_text = String::new();
+    for file in files {
+        for f in &file.fns {
+            if f.name == "check_invariants" || f.name == "validate_gauges" {
+                for l in f.start..=f.end.min(file.stripped.code.len() - 1) {
+                    verify_text.push_str(&file.stripped.code[l]);
+                    verify_text.push('\n');
+                }
+            }
+        }
+        for (idx, is_test) in file.test_lines.iter().enumerate() {
+            if *is_test {
+                verify_text.push_str(&file.stripped.code[idx]);
+                verify_text.push(' ');
+                verify_text.push_str(&file.stripped.strings[idx]);
+                verify_text.push('\n');
+            }
+        }
+    }
+    for (_, text) in &input.extras {
+        verify_text.push_str(text);
+        verify_text.push('\n');
+    }
+    if let Some(t) = &input.thresholds {
+        verify_text.push_str(t);
+    }
+
+    let mut out = Vec::new();
+    for file in files.iter().filter(|f| GAUGE_MODULES.contains(&f.module.as_str())) {
+        for field in struct_fields(file) {
+            if !field.strukt.ends_with("Stats") {
+                continue;
+            }
+            let ty_head = field.ty.split('<').next().unwrap_or("").trim();
+            if !matches!(ty_head, "usize" | "u64" | "u32" | "f32" | "f64") {
+                continue;
+            }
+            let serialized = server_words.contains(&field.name)
+                || derived_through_method(file, &field.name, &server_words);
+            if !serialized {
+                out.push(Finding {
+                    path: file.path.clone(),
+                    line: field.line + 1,
+                    rule: Rule::GaugeLineage,
+                    message: format!(
+                        "orphaned gauge {}.{}: never serialized by \
+                         serve/server.rs (/stats and /metrics cannot see it)",
+                        field.strukt, field.name
+                    ),
+                });
+            }
+            if !contains_word(&verify_text, &field.name) {
+                out.push(Finding {
+                    path: file.path.clone(),
+                    line: field.line + 1,
+                    rule: Rule::GaugeLineage,
+                    message: format!(
+                        "unverified gauge {}.{}: not referenced by \
+                         check_invariants, any test, or ci/thresholds.json",
+                        field.strukt, field.name
+                    ),
+                });
+            }
+        }
+    }
+
+    // Metric sinks that are written but never read anywhere.
+    for file in files {
+        if file.module == "metrics/mod.rs" {
+            continue; // the sink library itself
+        }
+        for field in struct_fields(file) {
+            let ty_head = field.ty.split('<').next().unwrap_or("").trim();
+            let last = ty_head.rsplit("::").next().unwrap_or(ty_head);
+            if !matches!(last, "Counter" | "Histogram" | "Throughput") {
+                continue;
+            }
+            let read = files.iter().any(|f| {
+                f.stripped.code.iter().any(|l| {
+                    SINK_READS
+                        .iter()
+                        .any(|m| l.contains(&format!("{}.{m}(", field.name)))
+                })
+            }) || input.extras.iter().any(|(_, text)| {
+                SINK_READS
+                    .iter()
+                    .any(|m| text.contains(&format!("{}.{m}(", field.name)))
+            });
+            if !read {
+                out.push(Finding {
+                    path: file.path.clone(),
+                    line: field.line + 1,
+                    rule: Rule::GaugeLineage,
+                    message: format!(
+                        "write-only metric sink {}.{} ({}): no read method \
+                         ({}) is ever called on it",
+                        field.strukt,
+                        field.name,
+                        last,
+                        SINK_READS.join("/"),
+                    ),
+                });
+            }
+        }
+    }
+
+    out.extend(threshold_keys_pass(input));
+    out
+}
+
+/// A gauge can legitimately reach `/stats` through a derived method
+/// (`fragmentation()`, `live_bytes()`): the field is read by a method of
+/// its own file whose *name* the serve layer mentions.
+fn derived_through_method(
+    file: &SourceFile,
+    field: &str,
+    server_words: &BTreeSet<String>,
+) -> bool {
+    file.fns.iter().any(|f| {
+        !f.is_test
+            && server_words.contains(&f.name)
+            && (f.start..=f.end.min(file.stripped.code.len() - 1))
+                .any(|l| contains_word(&file.stripped.code[l], field))
+    })
+}
+
+/// Every key (and bound-expression identifier) in `ci/thresholds.json`
+/// must be produced by some bench/test source, and every report filename
+/// must appear in a source string — a renamed bench key otherwise turns
+/// the CI gate into a no-op.
+fn threshold_keys_pass(input: &AuditInput) -> Vec<Finding> {
+    let Some(text) = &input.thresholds else {
+        return Vec::new();
+    };
+    if input.extras.is_empty() {
+        return Vec::new(); // no producers in scope (fixture runs)
+    }
+    let Ok(json) = crate::util::json::Json::parse(text) else {
+        return vec![Finding {
+            path: "ci/thresholds.json".to_string(),
+            line: 1,
+            rule: Rule::GaugeLineage,
+            message: "ci/thresholds.json does not parse as JSON".to_string(),
+        }];
+    };
+    let crate::util::json::Json::Obj(sections) = &json else {
+        return Vec::new();
+    };
+    let line_of = |needle: &str| {
+        text.lines()
+            .position(|l| l.contains(&format!("\"{needle}\"")))
+            .map(|i| i + 1)
+            .unwrap_or(1)
+    };
+    let mut corpus = String::new();
+    for (_, t) in &input.extras {
+        corpus.push_str(t);
+        corpus.push('\n');
+    }
+    for file in &input.files {
+        for s in &file.stripped.strings {
+            corpus.push_str(s);
+            corpus.push(' ');
+        }
+    }
+    let mut out = Vec::new();
+    let mut check = |word: &str, what: &str| {
+        if !contains_word(&corpus, word) {
+            out.push(Finding {
+                path: "ci/thresholds.json".to_string(),
+                line: line_of(word),
+                rule: Rule::GaugeLineage,
+                message: format!(
+                    "dangling threshold {what} `{word}`: no bench or test \
+                     source produces it — the CI gate silently passes"
+                ),
+            });
+        }
+    };
+    for (report, entries) in sections {
+        check(report, "report");
+        let crate::util::json::Json::Arr(entries) = entries else {
+            continue;
+        };
+        for entry in entries {
+            let crate::util::json::Json::Obj(kv) = entry else {
+                continue;
+            };
+            for (k, v) in kv {
+                match (k.as_str(), v) {
+                    ("key", crate::util::json::Json::Str(s)) => check(s, "key"),
+                    ("bound", crate::util::json::Json::Str(expr)) => {
+                        for w in expr
+                            .split(|c: char| !(c.is_alphanumeric() || c == '_'))
+                            .filter(|w| {
+                                !w.is_empty()
+                                    && !w.chars().next().is_some_and(|c| c.is_ascii_digit())
+                            })
+                        {
+                            check(w, "bound identifier");
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::items::SourceFile;
+
+    /// A minimal `util/sync.rs` stand-in declaring the rank enum, so the
+    /// fixture crates resolve ranks without the real tree.
+    const SYNC_FIXTURE: &str = "pub enum LockRank {\n    DeviceQueue = 0,\n    PoolState = 10,\n    SchedulerQueue = 20,\n    SessionTable = 30,\n    SideResults = 40,\n}\n";
+
+    fn audit(files: Vec<(&str, &str)>) -> Vec<Finding> {
+        let input = AuditInput {
+            files: files
+                .into_iter()
+                .map(|(p, s)| SourceFile::parse(p, s))
+                .collect(),
+            thresholds: None,
+            extras: Vec::new(),
+        };
+        run(&input).findings
+    }
+
+    fn rules(module: &str, src: &str) -> Vec<(usize, Rule)> {
+        let path = format!("rust/src/{module}");
+        audit(vec![(path.as_str(), src)])
+            .into_iter()
+            .map(|f| (f.line, f.rule))
+            .collect()
+    }
+
+    // -- legacy rules: the PR 7 fixtures, preserved verbatim ---------------
+
+    #[test]
+    fn poison_cascade_fires_with_file_and_line() {
+        let src = "fn f() {\n    let g = m.lock().unwrap();\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(2, Rule::PoisonCascade)]);
+        let src = "fn f() {\n    let g = m.lock().expect(\"locked\");\n}\n";
+        assert_eq!(rules("cortex/prism.rs", src), vec![(2, Rule::PoisonCascade)]);
+    }
+
+    #[test]
+    fn poison_cascade_catches_a_formatter_split_chain() {
+        let src = "fn f() {\n    let g = m\n        .lock()\n        .unwrap();\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(3, Rule::PoisonCascade)]);
+    }
+
+    #[test]
+    fn poison_cascade_exempts_util_sync() {
+        let src = "fn f() {\n    let g = m.lock().unwrap();\n}\n";
+        assert!(rules("util/sync.rs", src).is_empty());
+    }
+
+    #[test]
+    fn audit_allow_suppresses_on_the_same_and_preceding_line() {
+        let same = "fn f() {\n    let g = m.lock().unwrap(); // audit-allow: poison-cascade\n}\n";
+        assert!(rules("model/pool.rs", same).is_empty());
+        let above =
+            "fn f() {\n    // audit-allow: poison-cascade\n    let g = m.lock().unwrap();\n}\n";
+        assert!(rules("model/pool.rs", above).is_empty());
+    }
+
+    #[test]
+    fn audit_allow_for_another_rule_does_not_suppress() {
+        let src = "fn f() {\n    let g = m.lock().unwrap(); // audit-allow: nan-sort\n}\n";
+        // The poison finding survives, and the nan-sort marker is now
+        // itself a finding: it suppresses nothing.
+        assert_eq!(
+            rules("model/pool.rs", src),
+            vec![(2, Rule::PoisonCascade), (2, Rule::StaleAllow)]
+        );
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() {\n        m.lock().unwrap();\n    }\n}\n\
+                   fn prod() {\n    m.lock().unwrap();\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(8, Rule::PoisonCascade)]);
+        let src = "#[test]\nfn t() {\n    m.lock().unwrap();\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn comments_and_strings_never_fire() {
+        let src = "fn f() {\n    // m.lock().unwrap()\n    let s = \".lock().unwrap()\";\n\
+                   \n    let r = r#\".lock().unwrap()\"#;\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nan_sort_fires_in_comparator_position() {
+        let src = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        assert_eq!(rules("util/timer.rs", src), vec![(2, Rule::NanSort)]);
+        let split = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| {\n        \
+                     a.partial_cmp(b).unwrap()\n    });\n}\n";
+        assert_eq!(rules("util/timer.rs", split), vec![(3, Rule::NanSort)]);
+    }
+
+    #[test]
+    fn nan_sort_ignores_non_comparator_uses_and_total_cmp() {
+        let src = "fn f(a: f32, b: f32) -> bool {\n    \
+                   a.partial_cmp(&b) == Some(std::cmp::Ordering::Less)\n}\n";
+        assert!(rules("util/timer.rs", src).is_empty());
+        let src = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\n";
+        assert!(rules("util/timer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_mutex_fires_only_in_decode_path_modules() {
+        let src = "fn f() {\n    let m = Mutex::new(0);\n}\n";
+        assert_eq!(rules("cortex/step.rs", src), vec![(2, Rule::RawMutex)]);
+        assert_eq!(rules("metrics/mod.rs", src), vec![(2, Rule::RawMutex)]);
+        assert!(rules("util/timer.rs", src).is_empty());
+        let qualified = "fn f() {\n    let m = std::sync::Mutex::new(0);\n}\n";
+        assert_eq!(rules("model/pool.rs", qualified), vec![(2, Rule::RawMutex)]);
+    }
+
+    #[test]
+    fn ranked_mutex_is_not_a_raw_mutex() {
+        let src = "fn f() {\n    let m = RankedMutex::new(LockRank::Metrics, 0);\n}\n";
+        assert!(rules("metrics/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_in_serve_fires_and_suppresses() {
+        let src = "fn handle() {\n    let v = parse().unwrap();\n}\n";
+        assert_eq!(rules("serve/http.rs", src), vec![(2, Rule::PanicInServe)]);
+        let src = "fn handle() {\n    panic!(\"bad request\");\n}\n";
+        assert_eq!(rules("serve/http.rs", src), vec![(2, Rule::PanicInServe)]);
+        let src = "fn handle() {\n    let v = parse().unwrap(); // audit-allow: panic-in-serve\n}\n";
+        assert!(rules("serve/http.rs", src).is_empty());
+        // Outside serve/, a bare unwrap is not this rule's business.
+        let src = "fn f() {\n    let v = parse().unwrap();\n}\n";
+        assert!(rules("util/timer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_variants_do_not_fire() {
+        let src = "fn handle() {\n    let v = parse().unwrap_or(0);\n    \
+                   let w = lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n}\n";
+        assert!(rules("serve/http.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_eq_fires_on_literal_and_cast_comparisons() {
+        let src = "fn f(x: f32) -> bool {\n    x == 1.0\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(2, Rule::FloatEq)]);
+        let src = "fn f(x: f64, n: usize) -> bool {\n    x != n as f64\n}\n";
+        assert_eq!(rules("cortex/capacity.rs", src), vec![(2, Rule::FloatEq)]);
+        let src = "fn f(x: f32) -> bool {\n    x == 2.5e-3\n}\n";
+        assert_eq!(rules("model/engine.rs", src), vec![(2, Rule::FloatEq)]);
+        let src = "fn f(x: f32) -> bool {\n    1f32 != x\n}\n";
+        assert_eq!(rules("cortex/step.rs", src), vec![(2, Rule::FloatEq)]);
+    }
+
+    #[test]
+    fn float_eq_ignores_integer_compares_and_other_scopes() {
+        let src = "fn f(n: usize) -> bool {\n    n == 0\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        let src = "fn f(x: f32) -> bool {\n    x <= 1.0 && x >= -1.0\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        let src = "fn f(n: usize) {\n    if n == 0 { g(1.0) }\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        let src = "fn f(n: usize, e: f32) -> bool {\n    n == 0 && e < 1e-6\n}\n";
+        assert!(rules("cortex/step.rs", src).is_empty());
+        let src = "fn f(n: u32, t: (u32, u32)) -> bool {\n    n == 0x1E3 && t.0 != 2\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        let src = "fn f(x: f32) -> bool {\n    x == 1.0\n}\n";
+        assert!(rules("util/timer.rs", src).is_empty());
+        assert!(rules("serve/http.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_eq_suppresses_under_audit_allow_and_in_tests() {
+        let src = "fn f(x: f32) -> bool {\n    x == 0.0 // audit-allow: float-eq\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        let src = "#[test]\nfn t() {\n    assert!(x == 1.0);\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        let src =
+            "#[cfg(test)]\nmod tests {\n    fn close(x: f32) -> bool {\n        x == 1.0\n    }\n}\n";
+        assert!(rules("cortex/capacity.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals_do_not_derail_the_scanner() {
+        let src = "fn f<'a>(x: &'a str) -> char {\n    let c = '{';\n    let d = '\\'';\n    \
+                   m.lock().unwrap();\n    c\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(4, Rule::PoisonCascade)]);
+    }
+
+    // -- rank table parsing -------------------------------------------------
+
+    #[test]
+    fn rank_enum_parses_names_and_values() {
+        let files = vec![SourceFile::parse("rust/src/util/sync.rs", SYNC_FIXTURE)];
+        let ranks = parse_rank_enum(&files);
+        assert_eq!(ranks.len(), 5);
+        assert_eq!(ranks[0], ("DeviceQueue".to_string(), 0));
+        assert_eq!(ranks[3], ("SessionTable".to_string(), 30));
+    }
+
+    #[test]
+    fn binding_ident_recovers_all_declaration_shapes() {
+        assert_eq!(binding_ident("    let tx = ").as_deref(), Some("tx"));
+        assert_eq!(binding_ident("    let mut tx = ").as_deref(), Some("tx"));
+        assert_eq!(binding_ident("        state: ").as_deref(), Some("state"));
+        assert_eq!(
+            binding_ident("    let rx = Arc::new(").as_deref(),
+            Some("rx")
+        );
+        assert_eq!(
+            binding_ident("static QUEUE: RankedMutex<Vec<u8>> =\n    ").as_deref(),
+            Some("QUEUE")
+        );
+        assert_eq!(binding_ident("some_fn(").as_deref(), None);
+    }
+
+    // -- lock-order ---------------------------------------------------------
+
+    #[test]
+    fn lock_order_intra_fn_inversion_fires_with_both_ranks() {
+        let src = "struct T { state: u8, results: u8 }\n\
+                   impl T {\n\
+                   fn build() -> T {\n    T { state: RankedMutex::new(LockRank::SessionTable, 0), results: RankedMutex::new(LockRank::SideResults, 0) }\n}\n\
+                   fn bad(&self) {\n    let st = self.state.lock();\n    let rs = self.results.lock();\n}\n\
+                   }\n";
+        let found = audit(vec![
+            ("rust/src/util/sync.rs", SYNC_FIXTURE),
+            ("rust/src/cortex/fixture.rs", src),
+        ]);
+        let lock: Vec<&Finding> =
+            found.iter().filter(|f| f.rule == Rule::LockOrder).collect();
+        assert_eq!(lock.len(), 1, "findings: {found:?}");
+        assert_eq!(lock[0].line, 8);
+        assert!(lock[0].message.contains("SideResults(40)"));
+        assert!(lock[0].message.contains("SessionTable(30)"));
+    }
+
+    #[test]
+    fn lock_order_descending_and_scoped_sequences_are_clean() {
+        let src = "struct T { state: u8, results: u8 }\n\
+                   impl T {\n\
+                   fn build() -> T {\n    T { state: RankedMutex::new(LockRank::SessionTable, 0), results: RankedMutex::new(LockRank::SideResults, 0) }\n}\n\
+                   fn good(&self) {\n    let rs = self.results.lock();\n    let st = self.state.lock();\n}\n\
+                   fn scoped(&self) {\n    {\n        let st = self.state.lock();\n    }\n    let rs = self.results.lock();\n}\n\
+                   fn dropped(&self) {\n    let st = self.state.lock();\n    drop(st);\n    let rs = self.results.lock();\n}\n\
+                   }\n";
+        let found = audit(vec![
+            ("rust/src/util/sync.rs", SYNC_FIXTURE),
+            ("rust/src/cortex/fixture.rs", src),
+        ]);
+        assert!(
+            found.iter().all(|f| f.rule != Rule::LockOrder),
+            "spurious: {found:?}"
+        );
+    }
+
+    #[test]
+    fn lock_order_reports_the_cross_function_chain() {
+        let src = "struct T { state: u8, results: u8 }\n\
+                   impl T {\n\
+                   fn build() -> T {\n    T { state: RankedMutex::new(LockRank::SessionTable, 0), results: RankedMutex::new(LockRank::SideResults, 0) }\n}\n\
+                   fn outer(&self) {\n    let st = self.state.lock();\n    self.middle();\n}\n\
+                   fn middle(&self) {\n    self.inner();\n}\n\
+                   fn inner(&self) {\n    let rs = self.results.lock();\n}\n\
+                   }\n";
+        let found = audit(vec![
+            ("rust/src/util/sync.rs", SYNC_FIXTURE),
+            ("rust/src/cortex/fixture.rs", src),
+        ]);
+        let lock: Vec<&Finding> =
+            found.iter().filter(|f| f.rule == Rule::LockOrder).collect();
+        assert_eq!(lock.len(), 1, "findings: {found:?}");
+        let msg = &lock[0].message;
+        assert!(msg.contains("T::outer"), "{msg}");
+        assert!(msg.contains("T::middle"), "{msg}");
+        assert!(msg.contains("T::inner"), "{msg}");
+        assert!(msg.contains("SideResults(40)"), "{msg}");
+    }
+
+    #[test]
+    fn lock_order_equal_rank_reacquisition_fires() {
+        let src = "struct T { a: u8, b: u8 }\n\
+                   impl T {\n\
+                   fn build() -> T {\n    T { a: RankedMutex::new(LockRank::PoolState, 0), b: RankedMutex::new(LockRank::PoolState, 0) }\n}\n\
+                   fn bad(&self) {\n    let x = self.a.lock();\n    let y = self.b.lock();\n}\n\
+                   }\n";
+        let found = audit(vec![
+            ("rust/src/util/sync.rs", SYNC_FIXTURE),
+            ("rust/src/cortex/fixture.rs", src),
+        ]);
+        assert!(
+            found.iter().any(|f| f.rule == Rule::LockOrder),
+            "equal-rank double acquisition must fire: {found:?}"
+        );
+    }
+
+    // -- hot-tick -----------------------------------------------------------
+
+    #[test]
+    fn hot_tick_flags_sleep_print_io_and_high_locks_with_chain() {
+        let src = "struct T { results: u8 }\n\
+                   impl T {\n\
+                   fn build() -> T {\n    T { results: RankedMutex::new(LockRank::SideResults, 0) }\n}\n\
+                   fn step_loop(&self) {\n    self.deliver();\n}\n\
+                   fn deliver(&self) {\n    thread::sleep(ms);\n    println!(\"x\");\n    let s = std::fs::read_to_string(p);\n    let r = self.results.lock();\n}\n\
+                   fn cold(&self) {\n    thread::sleep(ms);\n}\n\
+                   }\n";
+        let found = audit(vec![
+            ("rust/src/util/sync.rs", SYNC_FIXTURE),
+            ("rust/src/cortex/fixture.rs", src),
+        ]);
+        let hot: Vec<&Finding> = found.iter().filter(|f| f.rule == Rule::HotTick).collect();
+        // sleep + println + IO + high lock, all inside deliver; cold's
+        // sleep is unreachable and must stay quiet.
+        assert_eq!(hot.len(), 4, "findings: {found:?}");
+        assert!(hot.iter().all(|f| f.message.contains("step_loop")));
+        assert!(hot.iter().any(|f| f.message.contains("sleep")));
+        assert!(hot.iter().any(|f| f.message.contains("println")));
+        assert!(hot.iter().any(|f| f.message.contains("IO")));
+        assert!(hot.iter().any(|f| f.message.contains("SideResults(40)")));
+        assert!(!found.iter().any(|f| f.line == 16), "cold's sleep is unreachable");
+    }
+
+    #[test]
+    fn hot_tick_waiver_suppresses_and_is_not_stale() {
+        let src = "struct T { results: u8 }\n\
+                   impl T {\n\
+                   fn build() -> T {\n    T { results: RankedMutex::new(LockRank::SideResults, 0) }\n}\n\
+                   fn step_loop(&self) {\n    // audit-allow: hot-tick\n    let r = self.results.lock();\n}\n\
+                   }\n";
+        let found = audit(vec![
+            ("rust/src/util/sync.rs", SYNC_FIXTURE),
+            ("rust/src/cortex/fixture.rs", src),
+        ]);
+        assert!(
+            found.iter().all(|f| f.rule != Rule::HotTick && f.rule != Rule::StaleAllow),
+            "findings: {found:?}"
+        );
+    }
+
+    // -- stale-allow --------------------------------------------------------
+
+    #[test]
+    fn stale_allow_flags_a_marker_with_no_finding() {
+        let src = "fn f() {\n    // audit-allow: poison-cascade\n    let x = 1;\n}\n";
+        assert_eq!(rules("model/pool.rs", src), vec![(2, Rule::StaleAllow)]);
+    }
+
+    #[test]
+    fn stale_allow_ignores_markers_in_tests_and_invalid_rules() {
+        let src = "#[test]\nfn t() {\n    // audit-allow: poison-cascade\n    x();\n}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+        // `<rule>` in prose is not a valid rule name, hence not a marker.
+        let src = "// A waiver is written as `audit-allow: <rule>`.\nfn f() {}\n";
+        assert!(rules("model/pool.rs", src).is_empty());
+    }
+
+    // -- gauge-lineage ------------------------------------------------------
+
+    const SERVER_FIXTURE: &str = "fn stats_json() {\n    let j = obj().with(\"good_gauge\", s.good_gauge).with(\"ratio\", s.ratio());\n}\n";
+
+    #[test]
+    fn gauge_lineage_flags_orphaned_and_unverified_gauges() {
+        let pool = "pub struct PoolStats {\n    pub good_gauge: usize,\n    pub orphan_gauge: usize,\n}\n\
+                    impl PoolStats {\n    pub fn check_invariants(&self) {\n        assert!(self.good_gauge + self.orphan_gauge > 0);\n    }\n}\n";
+        let found = audit(vec![
+            ("rust/src/model/pool.rs", pool),
+            ("rust/src/serve/server.rs", SERVER_FIXTURE),
+        ]);
+        let gauge: Vec<&Finding> =
+            found.iter().filter(|f| f.rule == Rule::GaugeLineage).collect();
+        assert_eq!(gauge.len(), 1, "findings: {found:?}");
+        assert!(gauge[0].message.contains("orphan_gauge"));
+        assert!(gauge[0].message.contains("never serialized"));
+        assert_eq!(gauge[0].line, 3);
+    }
+
+    #[test]
+    fn gauge_lineage_accepts_derived_methods_and_flags_unverified() {
+        let pool = "pub struct PoolStats {\n    pub hidden: usize,\n}\n\
+                    impl PoolStats {\n    pub fn ratio(&self) -> f64 {\n        self.hidden as f64\n    }\n}\n";
+        let found = audit(vec![
+            ("rust/src/model/pool.rs", pool),
+            ("rust/src/serve/server.rs", SERVER_FIXTURE),
+        ]);
+        let gauge: Vec<&Finding> =
+            found.iter().filter(|f| f.rule == Rule::GaugeLineage).collect();
+        // Serialized through ratio() — but verified nowhere.
+        assert_eq!(gauge.len(), 1, "findings: {found:?}");
+        assert!(gauge[0].message.contains("unverified gauge"));
+        assert!(gauge[0].message.contains("hidden"));
+    }
+
+    #[test]
+    fn gauge_lineage_flags_write_only_metric_sinks() {
+        let cortex = "pub struct Cx {\n    pub dead_histo: Histogram,\n    pub live_histo: Histogram,\n}\n\
+                      fn report(cx: &Cx) {\n    let p = cx.live_histo.percentile_ns(0.5);\n}\n";
+        let found = audit(vec![
+            ("rust/src/cortex/cortex.rs", cortex),
+            ("rust/src/serve/server.rs", SERVER_FIXTURE),
+        ]);
+        let gauge: Vec<&Finding> =
+            found.iter().filter(|f| f.rule == Rule::GaugeLineage).collect();
+        assert_eq!(gauge.len(), 1, "findings: {found:?}");
+        assert!(gauge[0].message.contains("dead_histo"));
+        assert!(gauge[0].message.contains("write-only"));
+    }
+
+    #[test]
+    fn threshold_keys_must_have_producers() {
+        let input = AuditInput {
+            files: vec![SourceFile::parse(
+                "rust/src/serve/server.rs",
+                SERVER_FIXTURE,
+            )],
+            thresholds: Some(
+                "{\n  \"BENCH_x.json\": [\n    { \"key\": \"real_key\", \"op\": \">\", \"bound\": 0 },\n    { \"key\": \"ghost_key\", \"op\": \">\", \"bound\": \"other_ghost / 2\" }\n  ]\n}\n"
+                    .to_string(),
+            ),
+            extras: vec![(
+                "rust/benches/x.rs".to_string(),
+                "emit(\"BENCH_x.json\"); write(\"real_key\", v);".to_string(),
+            )],
+        };
+        let found = run(&input).findings;
+        let msgs: Vec<&str> = found.iter().map(|f| f.message.as_str()).collect();
+        assert_eq!(found.len(), 2, "findings: {msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("ghost_key")));
+        assert!(msgs.iter().any(|m| m.contains("other_ghost")));
+        assert!(found.iter().all(|f| f.path == "ci/thresholds.json"));
+    }
+}

@@ -1,523 +1,48 @@
-//! warp-audit: the project-native static-analysis pass.
+//! warp-audit: the project-native static-analysis CLI (the CI `audit`
+//! job), a thin front-end over the crate-graph analyzer in
+//! [`warp_cortex::audit`].
 //!
-//! Enforces the concurrency-core conventions the compiler cannot see —
-//! each rule is distilled from a real past bug in this tree:
+//! Eight rules run on every invocation: the five token rules distilled
+//! from real past bugs (`poison-cascade`, `nan-sort`, `raw-mutex`,
+//! `panic-in-serve`, `float-eq`), the whole-crate passes (`lock-order` —
+//! static strictly-descending acquisition over the call graph,
+//! `gauge-lineage` — every pool/step gauge reaches `/stats` and a
+//! consistency check, `hot-tick` — nothing reachable from the fused
+//! decode tick blocks), and `stale-allow`, which flags suppression
+//! markers that no longer suppress anything.  `--list-rules` prints each
+//! rule's id, rationale and suppression syntax.
 //!
-//! - `poison-cascade` — no `.lock().unwrap()` / `.lock().expect(...)`
-//!   outside `util/sync.rs`.  One panicking session would poison the
-//!   shared mutex and wedge every later session; use
-//!   `util::sync::lock_unpoisoned` or `RankedMutex::lock` (both
-//!   poison-tolerant).
-//! - `nan-sort` — no `partial_cmp` in comparator position.  A single NaN
-//!   panicked the sampler (PR 4) and the synapse selector (PR 2); use
-//!   `total_cmp`.
-//! - `raw-mutex` — no bare `std::sync::Mutex::new` in decode-path
-//!   modules: those locks must be `util::sync::RankedMutex` so the
-//!   debug-build lock-rank detector covers them.
-//! - `panic-in-serve` — no `unwrap` / `expect` / `panic!` in `serve/`
-//!   request handling: a request must fail as an error response, never by
-//!   unwinding a worker.
-//! - `float-eq` — no `==` / `!=` against a float expression (float
-//!   literal or `as f32`/`as f64` cast operand) in `model/` and `cortex/`
-//!   production code.  The tiered KV store round-trips values through
-//!   int8 and mixed host/device paths; exact equality on computed floats
-//!   is either a latent tolerance bug or, where bit-identity IS the
-//!   contract, should compare `to_bits()` explicitly.
+//! `#[cfg(test)]` / `#[test]` items are skipped (tests may panic and
+//! block freely); a deliberate exception is written as
+//! `// audit-allow: <rule>` on the offending line or the line above it.
+//! Self-contained on purpose — no parser dependencies, the crate builds
+//! offline.
 //!
-//! `#[cfg(test)]` / `#[test]` items are skipped (tests may panic freely);
-//! a deliberate exception is written as `// audit-allow: <rule>` on the
-//! offending line or the line above it.  Self-contained on purpose: a
-//! line/token scanner over stripped source (comments, strings and char
-//! literals blanked), no parser dependencies — the crate builds offline.
+//! Usage:
 //!
-//! Usage: `cargo run --bin warp-audit -- rust/src` (the CI `audit` job).
-//! Exits 0 on a clean tree, 1 with `file:line: rule: message` findings.
+//! ```text
+//! warp-audit [--format text|json] [--list-rules] [roots...]
+//! ```
+//!
+//! Roots default to `rust/src`.  When run from the repo root,
+//! `rust/tests/`, `rust/benches/` and `ci/thresholds.json` are picked up
+//! automatically as gauge-lineage reference context (they are not
+//! themselves scanned for findings).
+//!
+//! # Exit-code contract
+//!
+//! - `0` — clean: every rule ran, no findings.
+//! - `1` — findings were reported (text mode: `file:line: rule: message`
+//!   per line; json mode: a report object on stdout).
+//! - `2` — environment error: unreadable root/file, unknown flag, or the
+//!   static rank table drifting from the runtime `LockRank` enum.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-/// Modules on the fused-tick decode path: every mutex here must be ranked
-/// (see `util::sync::LockRank`) so the deadlock detector covers it.
-const DECODE_PATH_MODULES: [&str; 8] = [
-    "model/pool.rs",
-    "cortex/step.rs",
-    "cortex/scheduler.rs",
-    "cortex/batcher.rs",
-    "cortex/prism.rs",
-    "cortex/synapse.rs",
-    "runtime/device.rs",
-    "metrics/mod.rs",
-];
-
-/// Comparator-position sinks for the `nan-sort` rule: `partial_cmp`
-/// appearing near one of these is a NaN-unsafe ordering.
-const SORTERS: [&str; 5] = [
-    "sort_by(",
-    "sort_unstable_by(",
-    "min_by(",
-    "max_by(",
-    "binary_search_by(",
-];
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Rule {
-    PoisonCascade,
-    NanSort,
-    RawMutex,
-    PanicInServe,
-    FloatEq,
-}
-
-impl Rule {
-    fn name(self) -> &'static str {
-        match self {
-            Rule::PoisonCascade => "poison-cascade",
-            Rule::NanSort => "nan-sort",
-            Rule::RawMutex => "raw-mutex",
-            Rule::PanicInServe => "panic-in-serve",
-            Rule::FloatEq => "float-eq",
-        }
-    }
-
-    fn from_name(name: &str) -> Option<Rule> {
-        match name {
-            "poison-cascade" => Some(Rule::PoisonCascade),
-            "nan-sort" => Some(Rule::NanSort),
-            "raw-mutex" => Some(Rule::RawMutex),
-            "panic-in-serve" => Some(Rule::PanicInServe),
-            "float-eq" => Some(Rule::FloatEq),
-            _ => None,
-        }
-    }
-}
-
-#[derive(Debug)]
-struct Finding {
-    line: usize,
-    rule: Rule,
-    message: &'static str,
-}
-
-/// Source split into lines with comments, string contents and char
-/// literals blanked (`code`), plus the comment text per line (`comments`,
-/// for `audit-allow:` detection).  Line numbers are preserved exactly.
-struct Stripped {
-    code: Vec<String>,
-    comments: Vec<String>,
-}
-
-fn newline(out: &mut Stripped) {
-    out.code.push(String::new());
-    out.comments.push(String::new());
-}
-
-fn prev_is_ident(chars: &[char], i: usize) -> bool {
-    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
-}
-
-/// If a raw (byte) string literal starts at `i` (`r"`, `r#"`, `br##"`,
-/// ...), return the index one past its closing quote.
-fn raw_string_end(chars: &[char], i: usize) -> Option<usize> {
-    let mut j = i;
-    if chars[j] == 'b' {
-        j += 1;
-    }
-    if chars.get(j) != Some(&'r') {
-        return None;
-    }
-    j += 1;
-    let mut hashes = 0;
-    while chars.get(j) == Some(&'#') {
-        hashes += 1;
-        j += 1;
-    }
-    if chars.get(j) != Some(&'"') {
-        return None;
-    }
-    j += 1;
-    while j < chars.len() {
-        if chars[j] == '"'
-            && chars
-                .get(j + 1..j + 1 + hashes)
-                .is_some_and(|t| t.iter().all(|&c| c == '#'))
-        {
-            return Some(j + 1 + hashes);
-        }
-        j += 1;
-    }
-    Some(chars.len())
-}
-
-fn strip(src: &str) -> Stripped {
-    let chars: Vec<char> = src.chars().collect();
-    let n = chars.len();
-    let mut out = Stripped {
-        code: vec![String::new()],
-        comments: vec![String::new()],
-    };
-    let mut i = 0;
-    while i < n {
-        let c = chars[i];
-        if c == '\n' {
-            newline(&mut out);
-            i += 1;
-            continue;
-        }
-        // Line comment (covers `///` and `//!` doc comments too).
-        if c == '/' && chars.get(i + 1) == Some(&'/') {
-            while i < n && chars[i] != '\n' {
-                out.comments.last_mut().expect("line present").push(chars[i]);
-                i += 1;
-            }
-            continue;
-        }
-        // Block comment, nested.
-        if c == '/' && chars.get(i + 1) == Some(&'*') {
-            let mut depth = 1;
-            i += 2;
-            while i < n && depth > 0 {
-                if chars[i] == '\n' {
-                    newline(&mut out);
-                    i += 1;
-                } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
-                    depth += 1;
-                    i += 2;
-                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
-                    depth -= 1;
-                    i += 2;
-                } else {
-                    out.comments.last_mut().expect("line present").push(chars[i]);
-                    i += 1;
-                }
-            }
-            continue;
-        }
-        // Raw / byte-string prefixes.
-        if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
-            if let Some(end) = raw_string_end(&chars, i) {
-                for &ch in &chars[i..end] {
-                    if ch == '\n' {
-                        newline(&mut out);
-                    }
-                }
-                i = end;
-                continue;
-            }
-            // `b"..."` / `b'x'`: step past the prefix; the quote handlers
-            // below take over on the next iteration.
-            if chars.get(i + 1) == Some(&'"') || chars.get(i + 1) == Some(&'\'') {
-                i += 1;
-                continue;
-            }
-        }
-        // Plain string.
-        if c == '"' {
-            i += 1;
-            while i < n {
-                if chars[i] == '\\' {
-                    i += 2;
-                } else if chars[i] == '"' {
-                    i += 1;
-                    break;
-                } else {
-                    if chars[i] == '\n' {
-                        newline(&mut out);
-                    }
-                    i += 1;
-                }
-            }
-            continue;
-        }
-        // Char literal vs lifetime.
-        if c == '\'' {
-            if chars.get(i + 1) == Some(&'\\') {
-                // Escaped char: skip past `'\x`, then scan to the close.
-                i += 3;
-                while i < n && chars[i] != '\'' {
-                    i += 1;
-                }
-                i = (i + 1).min(n);
-                continue;
-            }
-            if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
-                i += 3; // 'x'
-                continue;
-            }
-            // Lifetime: drop the quote, keep scanning.
-            i += 1;
-            continue;
-        }
-        out.code.last_mut().expect("line present").push(c);
-        i += 1;
-    }
-    out
-}
-
-/// Rules suppressed by an `audit-allow:` marker in this comment.
-fn allowed_rules(comment: &str) -> Vec<Rule> {
-    let Some(pos) = comment.find("audit-allow:") else {
-        return Vec::new();
-    };
-    comment[pos + "audit-allow:".len()..]
-        .split([',', ' '].as_slice())
-        .filter_map(|name| Rule::from_name(name.trim()))
-        .collect()
-}
-
-/// Brace-tracking skip state for `#[cfg(test)]` / `#[test]` items.
-#[derive(Default)]
-struct TestSkip {
-    /// Saw the attribute; waiting for the item body to open.
-    pending: bool,
-    /// Inside the item body at this brace depth.
-    depth: usize,
-    active: bool,
-}
-
-impl TestSkip {
-    /// Feed one stripped line; true when it belongs to a test item
-    /// (including the attribute lines themselves).
-    fn observe(&mut self, line: &str) -> bool {
-        let trimmed = line.trim();
-        if self.active {
-            for c in trimmed.chars() {
-                match c {
-                    '{' => self.depth += 1,
-                    '}' if self.depth > 0 => {
-                        self.depth -= 1;
-                        if self.depth == 0 {
-                            self.active = false;
-                        }
-                    }
-                    _ => {}
-                }
-            }
-            return true;
-        }
-        if self.pending {
-            let mut saw_open = false;
-            for c in trimmed.chars() {
-                match c {
-                    '{' => {
-                        saw_open = true;
-                        self.depth += 1;
-                    }
-                    '}' if self.depth > 0 => self.depth -= 1,
-                    ';' if self.depth == 0 && !saw_open => {
-                        // Bodyless item (`mod tests;`, `use ...;`).
-                        self.pending = false;
-                        return true;
-                    }
-                    _ => {}
-                }
-            }
-            if saw_open {
-                self.pending = false;
-                if self.depth > 0 {
-                    self.active = true;
-                }
-            }
-            return true;
-        }
-        if trimmed.starts_with("#[cfg(test)")
-            || trimmed.starts_with("#[test]")
-            || trimmed.starts_with("#[cfg(all(test")
-        {
-            self.pending = true;
-            return true;
-        }
-        false
-    }
-}
-
-/// True when `s` contains a float-typed expression shape: a float literal
-/// (`1.0`, `2.5e-3`, `1f32`) or an `as f32` / `as f64` cast.  Operates on
-/// stripped code, so strings and comments never match.
-fn has_float_expr(s: &str) -> bool {
-    if s.contains("as f32") || s.contains("as f64") {
-        return true;
-    }
-    let c: Vec<char> = s.chars().collect();
-    for i in 0..c.len() {
-        if !c[i].is_ascii_digit() {
-            continue;
-        }
-        // Must start a numeric token (not `x2`, `0x1E`, tuple index `.0`).
-        if i > 0 && (c[i - 1].is_alphanumeric() || c[i - 1] == '_' || c[i - 1] == '.') {
-            continue;
-        }
-        let mut j = i;
-        while j < c.len() && (c[j].is_ascii_digit() || c[j] == '_') {
-            j += 1;
-        }
-        match c.get(j) {
-            Some('.') if c.get(j + 1).is_some_and(|d| d.is_ascii_digit()) => return true,
-            Some('e') | Some('E') => {
-                let mut k = j + 1;
-                if matches!(c.get(k), Some('+') | Some('-')) {
-                    k += 1;
-                }
-                if c.get(k).is_some_and(|d| d.is_ascii_digit()) {
-                    return true;
-                }
-            }
-            Some('f') => {
-                let suffix = c.get(j + 1..j + 3);
-                if (suffix == Some(&['3', '2']) || suffix == Some(&['6', '4']))
-                    && c.get(j + 3).map_or(true, |ch| !(ch.is_alphanumeric() || *ch == '_'))
-                {
-                    return true;
-                }
-            }
-            _ => {}
-        }
-    }
-    false
-}
-
-/// Does the `==`/`!=` at byte `p` compare a float expression?  Operands
-/// are bounded by the nearest expression delimiter on each side, so a
-/// float literal elsewhere on the line cannot condemn an integer compare.
-fn float_eq_at(line: &str, p: usize) -> bool {
-    let left_all = &line[..p];
-    let right_all = &line[p + 2..];
-    let lb = ["(", "{", "[", ",", ";", "&&", "||"]
-        .iter()
-        .filter_map(|d| left_all.rfind(d).map(|q| q + d.len()))
-        .max()
-        .unwrap_or(0);
-    let rb = [")", "}", "]", ",", ";", "&&", "||", "{"]
-        .iter()
-        .filter_map(|d| right_all.find(d))
-        .min()
-        .unwrap_or(right_all.len());
-    has_float_expr(&left_all[lb..]) || has_float_expr(&right_all[..rb])
-}
-
-/// Run every rule over one file's source.  `module` is the path relative
-/// to `src/` (e.g. `util/sync.rs`), which scopes the per-module rules.
-fn scan_source(module: &str, src: &str) -> Vec<Finding> {
-    let stripped = strip(src);
-    let mut findings: Vec<Finding> = Vec::new();
-    let mut skip = TestSkip::default();
-    let decode_path = DECODE_PATH_MODULES.contains(&module);
-    let in_serve = module.starts_with("serve/");
-    let in_sync = module == "util/sync.rs";
-    let float_scope = module.starts_with("model/") || module.starts_with("cortex/");
-    for (idx, line) in stripped.code.iter().enumerate() {
-        if skip.observe(line) {
-            continue;
-        }
-        let mut report = |rule: Rule, message: &'static str| {
-            let allowed = allowed_rules(&stripped.comments[idx]).contains(&rule)
-                || (idx > 0 && allowed_rules(&stripped.comments[idx - 1]).contains(&rule));
-            if !allowed {
-                findings.push(Finding {
-                    line: idx + 1,
-                    rule,
-                    message,
-                });
-            }
-        };
-        if !in_sync {
-            // Merge with the next line so a formatter-split
-            // `.lock()\n.unwrap()` chain is still caught; only matches
-            // that *start* on this line are reported here.
-            let here = line.trim_end();
-            let next = stripped.code.get(idx + 1).map_or("", |l| l.trim());
-            let merged = format!("{here}{next}");
-            for pat in [".lock().unwrap()", ".lock().expect("] {
-                if let Some(p) = merged.find(pat) {
-                    if p < here.len() {
-                        report(
-                            Rule::PoisonCascade,
-                            "poison-intolerant lock: use util::sync::lock_unpoisoned \
-                             or a RankedMutex",
-                        );
-                        break;
-                    }
-                }
-            }
-        }
-        if line.contains(".partial_cmp(") {
-            let window = idx.saturating_sub(2);
-            let in_comparator = stripped.code[window..=idx]
-                .iter()
-                .any(|l| SORTERS.iter().any(|s| l.contains(s)));
-            if in_comparator {
-                report(Rule::NanSort, "NaN-unsafe comparator: use total_cmp");
-            }
-        }
-        if decode_path {
-            let mut start = 0;
-            while let Some(p) = line[start..].find("Mutex::new(") {
-                let abs = start + p;
-                if line[..abs].ends_with("Ranked") {
-                    start = abs + "Mutex::new(".len();
-                    continue;
-                }
-                report(
-                    Rule::RawMutex,
-                    "bare std::sync::Mutex in a decode-path module: \
-                     use util::sync::RankedMutex",
-                );
-                break;
-            }
-        }
-        if in_serve {
-            for pat in [".unwrap()", ".expect(", "panic!"] {
-                if line.contains(pat) {
-                    report(
-                        Rule::PanicInServe,
-                        "panic path in request handling: return an error \
-                         response instead",
-                    );
-                    break;
-                }
-            }
-        }
-        if float_scope {
-            for op in ["==", "!="] {
-                let mut start = 0;
-                let mut fired = false;
-                while let Some(rel) = line[start..].find(op) {
-                    let abs = start + rel;
-                    // Not part of `<=`, `>=`, `=>`, compound assignment…
-                    let before = line[..abs].chars().next_back();
-                    let after = line[abs + 2..].chars().next();
-                    let neighbor = matches!(
-                        before,
-                        Some('<' | '>' | '=' | '!' | '+' | '-' | '*' | '/' | '%' | '&' | '|' | '^')
-                    ) || after == Some('=');
-                    if !neighbor && float_eq_at(line, abs) {
-                        report(
-                            Rule::FloatEq,
-                            "exact float equality: compare within a bound, \
-                             or on to_bits() where bit-identity is the contract",
-                        );
-                        fired = true;
-                        break;
-                    }
-                    start = abs + 2;
-                }
-                if fired {
-                    break;
-                }
-            }
-        }
-    }
-    findings
-}
-
-/// Module path relative to the last `/src/` component (the scope key the
-/// per-module rules match on); the raw path when there is none.
-fn normalize_module(path: &Path) -> String {
-    let s = path.to_string_lossy().replace('\\', "/");
-    match s.rfind("/src/") {
-        Some(p) => s[p + "/src/".len()..].to_string(),
-        None => s,
-    }
-}
+use warp_cortex::audit::{self, AuditInput, Rule, SourceFile};
+use warp_cortex::util::json::Json;
+use warp_cortex::util::sync::LockRank;
 
 fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     for entry in std::fs::read_dir(dir)? {
@@ -531,229 +56,192 @@ fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     Ok(())
 }
 
-fn main() -> ExitCode {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let roots = if args.is_empty() {
-        vec!["rust/src".to_string()]
+fn list_rules() {
+    println!("{:<16} {:<72} suppression", "rule", "rationale");
+    for rule in Rule::ALL {
+        println!(
+            "{:<16} {:<72} {}",
+            rule.name(),
+            rule.rationale().split_whitespace().collect::<Vec<_>>().join(" "),
+            rule.suppression()
+        );
+    }
+}
+
+/// Reference-only context for gauge-lineage: test/bench sources and the
+/// CI threshold table, when run from the repo root.
+fn load_context(input: &mut AuditInput) {
+    for dir in ["rust/tests", "rust/benches"] {
+        let mut files = Vec::new();
+        if walk(Path::new(dir), &mut files).is_ok() {
+            files.sort();
+            for f in files {
+                if let Ok(src) = std::fs::read_to_string(&f) {
+                    input.extras.push((f.display().to_string(), src));
+                }
+            }
+        }
+    }
+    if let Ok(t) = std::fs::read_to_string("ci/thresholds.json") {
+        input.thresholds = Some(t);
+    }
+}
+
+/// The static rank table parsed from source must match the runtime enum
+/// exactly — a drift means the analyzer is checking a different
+/// hierarchy than the one debug builds enforce.
+fn rank_drift(parsed: &[(String, u8)]) -> Option<String> {
+    if parsed.is_empty() {
+        // util/sync.rs outside the scanned roots: nothing to compare.
+        return None;
+    }
+    let runtime: Vec<(String, u8)> = LockRank::ALL
+        .iter()
+        .map(|r| (r.name().to_string(), *r as u8))
+        .collect();
+    if parsed == runtime.as_slice() {
+        None
     } else {
-        args
-    };
-    let mut files = Vec::new();
+        Some(format!(
+            "static/runtime LockRank drift: parsed {parsed:?}, runtime {runtime:?}"
+        ))
+    }
+}
+
+fn main() -> ExitCode {
+    let mut format = "text".to_string();
+    let mut roots: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--list-rules" => {
+                list_rules();
+                return ExitCode::SUCCESS;
+            }
+            "--format" => match args.next() {
+                Some(f) if f == "text" || f == "json" => format = f,
+                other => {
+                    eprintln!(
+                        "warp-audit: --format expects `text` or `json`, got {other:?}"
+                    );
+                    return ExitCode::from(2);
+                }
+            },
+            flag if flag.starts_with("--") => {
+                eprintln!("warp-audit: unknown flag {flag}");
+                return ExitCode::from(2);
+            }
+            root => roots.push(root.to_string()),
+        }
+    }
+    if roots.is_empty() {
+        roots.push("rust/src".to_string());
+    }
+
+    let mut paths = Vec::new();
     for root in &roots {
         let path = PathBuf::from(root);
         let result = if path.is_file() {
-            files.push(path);
+            paths.push(path);
             Ok(())
         } else {
-            walk(&path, &mut files)
+            walk(&path, &mut paths)
         };
         if let Err(e) = result {
             eprintln!("warp-audit: cannot read {root}: {e}");
             return ExitCode::from(2);
         }
     }
-    files.sort();
-    let mut total = 0usize;
-    for file in &files {
-        let src = match std::fs::read_to_string(file) {
-            Ok(s) => s,
+    paths.sort();
+    let mut input = AuditInput::default();
+    for path in &paths {
+        match std::fs::read_to_string(path) {
+            Ok(src) => input
+                .files
+                .push(SourceFile::parse(&path.display().to_string(), &src)),
             Err(e) => {
-                eprintln!("warp-audit: cannot read {}: {e}", file.display());
+                eprintln!("warp-audit: cannot read {}: {e}", path.display());
                 return ExitCode::from(2);
             }
-        };
-        for f in scan_source(&normalize_module(file), &src) {
-            println!("{}:{}: {}: {}", file.display(), f.line, f.rule.name(), f.message);
-            total += 1;
         }
     }
-    if total == 0 {
-        println!("warp-audit: clean ({} files)", files.len());
+    load_context(&mut input);
+
+    let report = audit::run(&input);
+    if let Some(drift) = rank_drift(&report.rank_table) {
+        eprintln!("warp-audit: {drift}");
+        return ExitCode::from(2);
+    }
+
+    if format == "json" {
+        let findings: Vec<Json> = report
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj()
+                    .with("file", f.path.as_str())
+                    .with("line", f.line as f64)
+                    .with("rule", f.rule.name())
+                    .with("message", f.message.as_str())
+            })
+            .collect();
+        let doc = Json::obj()
+            .with("tool", "warp-audit")
+            .with("files_scanned", report.files_scanned as f64)
+            .with(
+                "rules",
+                Json::Arr(Rule::ALL.iter().map(|r| Json::from(r.name())).collect()),
+            )
+            .with("findings", Json::Arr(findings));
+        let mut out = String::new();
+        doc.write_into(&mut out);
+        println!("{out}");
+    } else {
+        for f in &report.findings {
+            println!("{}:{}: {}: {}", f.path, f.line, f.rule.name(), f.message);
+        }
+        if report.findings.is_empty() {
+            println!(
+                "warp-audit: clean ({} files, {} rules)",
+                report.files_scanned,
+                Rule::ALL.len()
+            );
+        } else {
+            eprintln!("warp-audit: {} finding(s)", report.findings.len());
+        }
+    }
+    if report.findings.is_empty() {
         ExitCode::SUCCESS
     } else {
-        eprintln!("warp-audit: {total} finding(s)");
         ExitCode::FAILURE
     }
 }
 
-// Fixture-driven self-tests: each rule must both FIRE on its fixture and
-// SUPPRESS under `audit-allow:` / `#[cfg(test)]`.
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn rules(module: &str, src: &str) -> Vec<(usize, Rule)> {
-        scan_source(module, src)
-            .into_iter()
-            .map(|f| (f.line, f.rule))
-            .collect()
+    #[test]
+    fn static_rank_table_matches_runtime_enum() {
+        let src = std::fs::read_to_string("rust/src/util/sync.rs").expect("sync source");
+        let files = vec![SourceFile::parse("rust/src/util/sync.rs", &src)];
+        let parsed = warp_cortex::audit::passes::parse_rank_enum(&files);
+        assert!(rank_drift(&parsed).is_none(), "{:?}", rank_drift(&parsed));
     }
 
     #[test]
-    fn poison_cascade_fires_with_file_and_line() {
-        let src = "fn f() {\n    let g = m.lock().unwrap();\n}\n";
-        assert_eq!(rules("model/pool.rs", src), vec![(2, Rule::PoisonCascade)]);
-        let src = "fn f() {\n    let g = m.lock().expect(\"locked\");\n}\n";
-        assert_eq!(rules("cortex/prism.rs", src), vec![(2, Rule::PoisonCascade)]);
-    }
-
-    #[test]
-    fn poison_cascade_catches_a_formatter_split_chain() {
-        let src = "fn f() {\n    let g = m\n        .lock()\n        .unwrap();\n}\n";
-        assert_eq!(rules("model/pool.rs", src), vec![(3, Rule::PoisonCascade)]);
-    }
-
-    #[test]
-    fn poison_cascade_exempts_util_sync() {
-        let src = "fn f() {\n    let g = m.lock().unwrap();\n}\n";
-        assert!(rules("util/sync.rs", src).is_empty());
-    }
-
-    #[test]
-    fn audit_allow_suppresses_on_the_same_and_preceding_line() {
-        let same = "fn f() {\n    let g = m.lock().unwrap(); // audit-allow: poison-cascade\n}\n";
-        assert!(rules("model/pool.rs", same).is_empty());
-        let above =
-            "fn f() {\n    // audit-allow: poison-cascade\n    let g = m.lock().unwrap();\n}\n";
-        assert!(rules("model/pool.rs", above).is_empty());
-    }
-
-    #[test]
-    fn audit_allow_for_another_rule_does_not_suppress() {
-        let src = "fn f() {\n    let g = m.lock().unwrap(); // audit-allow: nan-sort\n}\n";
-        assert_eq!(rules("model/pool.rs", src), vec![(2, Rule::PoisonCascade)]);
-    }
-
-    #[test]
-    fn cfg_test_items_are_skipped() {
-        let src = "#[cfg(test)]\nmod tests {\n    fn f() {\n        m.lock().unwrap();\n    }\n}\n\
-                   fn prod() {\n    m.lock().unwrap();\n}\n";
-        assert_eq!(rules("model/pool.rs", src), vec![(8, Rule::PoisonCascade)]);
-        let src = "#[test]\nfn t() {\n    m.lock().unwrap();\n}\n";
-        assert!(rules("model/pool.rs", src).is_empty());
-    }
-
-    #[test]
-    fn comments_and_strings_never_fire() {
-        let src = "fn f() {\n    // m.lock().unwrap()\n    let s = \".lock().unwrap()\";\n\
-                   \n    let r = r#\".lock().unwrap()\"#;\n}\n";
-        assert!(rules("model/pool.rs", src).is_empty());
-    }
-
-    #[test]
-    fn nan_sort_fires_in_comparator_position() {
-        let src = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
-        assert_eq!(rules("util/timer.rs", src), vec![(2, Rule::NanSort)]);
-        let split = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| {\n        \
-                     a.partial_cmp(b).unwrap()\n    });\n}\n";
-        assert_eq!(rules("util/timer.rs", split), vec![(3, Rule::NanSort)]);
-    }
-
-    #[test]
-    fn nan_sort_ignores_non_comparator_uses_and_total_cmp() {
-        let src = "fn f(a: f32, b: f32) -> bool {\n    \
-                   a.partial_cmp(&b) == Some(std::cmp::Ordering::Less)\n}\n";
-        assert!(rules("util/timer.rs", src).is_empty());
-        let src = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\n";
-        assert!(rules("util/timer.rs", src).is_empty());
-    }
-
-    #[test]
-    fn raw_mutex_fires_only_in_decode_path_modules() {
-        let src = "fn f() {\n    let m = Mutex::new(0);\n}\n";
-        assert_eq!(rules("cortex/step.rs", src), vec![(2, Rule::RawMutex)]);
-        assert_eq!(rules("metrics/mod.rs", src), vec![(2, Rule::RawMutex)]);
-        assert!(rules("util/timer.rs", src).is_empty());
-        let qualified = "fn f() {\n    let m = std::sync::Mutex::new(0);\n}\n";
-        assert_eq!(rules("model/pool.rs", qualified), vec![(2, Rule::RawMutex)]);
-    }
-
-    #[test]
-    fn ranked_mutex_is_not_a_raw_mutex() {
-        let src = "fn f() {\n    let m = RankedMutex::new(LockRank::Metrics, 0);\n}\n";
-        assert!(rules("metrics/mod.rs", src).is_empty());
-    }
-
-    #[test]
-    fn panic_in_serve_fires_and_suppresses() {
-        let src = "fn handle() {\n    let v = parse().unwrap();\n}\n";
-        assert_eq!(rules("serve/server.rs", src), vec![(2, Rule::PanicInServe)]);
-        let src = "fn handle() {\n    panic!(\"bad request\");\n}\n";
-        assert_eq!(rules("serve/http.rs", src), vec![(2, Rule::PanicInServe)]);
-        let src = "fn handle() {\n    let v = parse().unwrap(); // audit-allow: panic-in-serve\n}\n";
-        assert!(rules("serve/server.rs", src).is_empty());
-        // Outside serve/, a bare unwrap is not this rule's business.
-        let src = "fn f() {\n    let v = parse().unwrap();\n}\n";
-        assert!(rules("util/timer.rs", src).is_empty());
-    }
-
-    #[test]
-    fn unwrap_or_variants_do_not_fire() {
-        let src = "fn handle() {\n    let v = parse().unwrap_or(0);\n    \
-                   let w = lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n}\n";
-        assert!(rules("serve/server.rs", src).is_empty());
-    }
-
-    #[test]
-    fn float_eq_fires_on_literal_and_cast_comparisons() {
-        let src = "fn f(x: f32) -> bool {\n    x == 1.0\n}\n";
-        assert_eq!(rules("model/pool.rs", src), vec![(2, Rule::FloatEq)]);
-        let src = "fn f(x: f64, n: usize) -> bool {\n    x != n as f64\n}\n";
-        assert_eq!(rules("cortex/capacity.rs", src), vec![(2, Rule::FloatEq)]);
-        let src = "fn f(x: f32) -> bool {\n    x == 2.5e-3\n}\n";
-        assert_eq!(rules("model/engine.rs", src), vec![(2, Rule::FloatEq)]);
-        let src = "fn f(x: f32) -> bool {\n    1f32 != x\n}\n";
-        assert_eq!(rules("cortex/step.rs", src), vec![(2, Rule::FloatEq)]);
-    }
-
-    #[test]
-    fn float_eq_ignores_integer_compares_and_other_scopes() {
-        // integer comparisons, float-free
-        let src = "fn f(n: usize) -> bool {\n    n == 0\n}\n";
-        assert!(rules("model/pool.rs", src).is_empty());
-        // ordered float comparisons are fine — only exact equality fires
-        let src = "fn f(x: f32) -> bool {\n    x <= 1.0 && x >= -1.0\n}\n";
-        assert!(rules("model/pool.rs", src).is_empty());
-        // a float elsewhere on the line does not condemn an integer compare
-        let src = "fn f(n: usize) {\n    if n == 0 { g(1.0) }\n}\n";
-        assert!(rules("model/pool.rs", src).is_empty());
-        let src = "fn f(n: usize, e: f32) -> bool {\n    n == 0 && e < 1e-6\n}\n";
-        assert!(rules("cortex/step.rs", src).is_empty());
-        // hex literals and tuple indexing are not float literals
-        let src = "fn f(n: u32, t: (u32, u32)) -> bool {\n    n == 0x1E3 && t.0 != 2\n}\n";
-        assert!(rules("model/pool.rs", src).is_empty());
-        // outside model/ and cortex/, exact float equality is allowed
-        let src = "fn f(x: f32) -> bool {\n    x == 1.0\n}\n";
-        assert!(rules("util/timer.rs", src).is_empty());
-        assert!(rules("serve/server.rs", src).is_empty());
-    }
-
-    #[test]
-    fn float_eq_suppresses_under_audit_allow_and_in_tests() {
-        let src = "fn f(x: f32) -> bool {\n    x == 0.0 // audit-allow: float-eq\n}\n";
-        assert!(rules("model/pool.rs", src).is_empty());
-        let src = "#[test]\nfn t() {\n    assert!(x == 1.0);\n}\n";
-        assert!(rules("model/pool.rs", src).is_empty());
-        let src = "#[cfg(test)]\nmod tests {\n    fn close(x: f32) -> bool {\n        x == 1.0\n    }\n}\n";
-        assert!(rules("cortex/capacity.rs", src).is_empty());
-    }
-
-    #[test]
-    fn module_normalization_scopes_rules() {
-        assert_eq!(
-            normalize_module(Path::new("rust/src/util/sync.rs")),
-            "util/sync.rs"
-        );
-        assert_eq!(
-            normalize_module(Path::new("/abs/repo/rust/src/serve/server.rs")),
-            "serve/server.rs"
-        );
-    }
-
-    #[test]
-    fn lifetimes_and_char_literals_do_not_derail_the_scanner() {
-        let src = "fn f<'a>(x: &'a str) -> char {\n    let c = '{';\n    let d = '\\'';\n    \
-                   m.lock().unwrap();\n    c\n}\n";
-        assert_eq!(rules("model/pool.rs", src), vec![(4, Rule::PoisonCascade)]);
+    fn rank_drift_detects_a_renamed_or_renumbered_variant() {
+        let mut parsed: Vec<(String, u8)> = LockRank::ALL
+            .iter()
+            .map(|r| (r.name().to_string(), *r as u8))
+            .collect();
+        parsed[1].1 = 11;
+        assert!(rank_drift(&parsed).is_some());
+        let mut renamed: Vec<(String, u8)> = LockRank::ALL
+            .iter()
+            .map(|r| (r.name().to_string(), *r as u8))
+            .collect();
+        renamed[0].0 = "DeviceQueues".to_string();
+        assert!(rank_drift(&renamed).is_some());
     }
 }

@@ -153,7 +153,10 @@
 //! both, so every randomised schedule doubles as an invariant fuzz.
 //!
 //! **warp-audit.**  `cargo run --bin warp-audit -- rust/src` (a required
-//! CI job) lints the tree with five project-native rules:
+//! CI job) is a crate-graph static analyzer ([`crate::audit`]): it lexes
+//! every file into code/comment/string channels, extracts functions and
+//! impl owners, builds a conservative whole-crate call graph, and runs
+//! eight rules.  Five are token rules distilled from real past bugs:
 //! `poison-cascade` (no `.lock().unwrap()` / `.lock().expect(...)`
 //! outside `util/sync.rs`), `nan-sort` (no `partial_cmp` in comparator
 //! position — use `total_cmp`), `raw-mutex` (no bare `std::sync::Mutex`
@@ -162,14 +165,40 @@
 //! float expression in `model/` / `cortex/` production code — the warm
 //! tier's quantize→dequantize round-trip makes exact float equality a
 //! tolerance bug; compare within a bound, or on `to_bits()` where
-//! bit-identity is the contract).  Test code is exempt; a deliberate
-//! site opts out with `// audit-allow: <rule>` on the same or preceding
-//! line.
+//! bit-identity is the contract).  Three are whole-crate passes:
+//! `lock-order` simulates every function's `RankedMutex` acquisitions
+//! over the call graph and reports any reachable path that is not
+//! strictly rank-descending, naming the full function chain — the static
+//! twin of the debug-build held-rank stack, covering paths no test
+//! executes; `gauge-lineage` proves every pool/step gauge both reaches
+//! the `/stats` serialization and is referenced by some consistency
+//! check (invariant, proptest, or `ci/thresholds.json`), so a counter
+//! cannot silently become write-only fiction; `hot-tick` proves nothing
+//! reachable from `step_loop` / `decode_fused` / `prefill_step` performs
+//! IO, sleeps, prints, or acquires a rank above `SchedulerQueue`.  Test
+//! code is exempt; a deliberate site opts out with `// audit-allow:
+//! <rule>` on the same or preceding line, and the eighth rule,
+//! `stale-allow`, flags any marker that no longer suppresses a real
+//! finding so waivers cannot outlive their reason.
+//!
+//! **Who owns which invariant.**  Each law is checked by exactly one
+//! *primary* mechanism, with the others as backstops:
+//!
+//! | invariant | static (`warp-audit`) | runtime sanitizer | proptest |
+//! |-----------|----------------------|-------------------|----------|
+//! | lock acquisition strictly rank-descending | `lock-order` over all reachable paths (primary) | debug held-rank stack panics on executed violations | exercised by every randomised schedule |
+//! | tick loop never blocks (IO / sleep / high-rank lock) | `hot-tick` (primary, waivers audited) | — | latency benches catch regressions indirectly |
+//! | pool block / byte / registry conservation | `gauge-lineage` (gauges reach `/stats` + a check) | [`crate::model::KvPool::check_invariants`] (primary) | pool-churn / CoW / tiering proptests call it |
+//! | session-gauge conservation (`admitted == completed + active`, …) | `gauge-lineage` | [`step::StepScheduler::check_invariants`] (primary) | multi-session hammer reconciles `/stats` |
+//! | tick counters (`main_ticks <= ticks`) | `gauge-lineage` | `check_invariants` tick-conservation law (primary) | fused-scheduling proptests |
+//! | static rank table == runtime `LockRank` | CLI exits 2 on drift (primary) | — | `rust/tests/audit_roundtrip.rs` cross-check |
+//! | legacy token rules keep firing identically | the 5 rules themselves | — | round-trip vs the frozen legacy scanner |
 //!
 //! **Cost model.**  Rank tracking, per-op pool validation and the
 //! tick-boundary checks all sit behind `debug_assertions`: debug test
 //! runs pay a bounded O(blocks) scan per tick, release builds pay
-//! nothing beyond the plain mutex they would have had anyway.
+//! nothing beyond the plain mutex they would have had anyway.  The
+//! static passes run only in the CI `audit` job — zero runtime cost.
 
 pub mod agent;
 pub mod batcher;

@@ -443,6 +443,10 @@ impl SessionTable {
     /// has already closed (outcome dropped — its agent's blocks are freed
     /// with the agent either way).
     fn route(&self, session: u64, outcome: SideOutcome) -> bool {
+        // Delivering outcomes to session queues IS the tick's job;
+        // `results` is held for one push_back and released before the
+        // wakeup, never across IO or another lock.
+        // audit-allow: hot-tick
         let mut map = self.results.lock();
         match map.get_mut(&session) {
             Some(q) => {
@@ -461,6 +465,9 @@ impl SessionTable {
     }
 
     fn active_now(&self) -> usize {
+        // One-field read under the session lock; the tick polls it for
+        // admission headroom, bounded and lock-leaf.
+        // audit-allow: hot-tick
         self.state.lock().active
     }
 
@@ -468,6 +475,9 @@ impl SessionTable {
     /// state mutex, so a single snapshot must reconcile exactly — any
     /// drift is a lost or double-counted transition, not a race window.
     fn validate_gauges(&self) -> std::result::Result<(), String> {
+        // The debug-boundary sanitizer snapshots the gauges under the
+        // session lock once per tick; release builds never take this path.
+        // audit-allow: hot-tick
         let st = self.state.lock();
         let admitted_rhs = st.completed + st.active as u64;
         if st.admitted != admitted_rhs {
@@ -865,6 +875,16 @@ impl StepScheduler {
         if completed > submitted {
             return Err(format!(
                 "side-task-conservation: completed ({completed}) > submitted ({submitted})"
+            ));
+        }
+        // A tick is counted main-carrying only after it was counted as a
+        // tick (the loop bumps `ticks` first), so loading `main_ticks`
+        // before `ticks` can never observe a transient excess.
+        let main_ticks = self.gauges.main_ticks.load(Ordering::Relaxed);
+        let ticks = self.gauges.ticks.load(Ordering::Relaxed);
+        if main_ticks > ticks {
+            return Err(format!(
+                "tick-conservation: main_ticks ({main_ticks}) > ticks ({ticks})"
             ));
         }
         Ok(())

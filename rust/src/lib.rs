@@ -93,16 +93,24 @@
 //! ([`model::KvPool::check_invariants`],
 //! [`cortex::StepScheduler::check_invariants`]).  The project-native
 //! linter `warp-audit` (`cargo run --bin warp-audit -- rust/src`, a
-//! required CI job) keeps the tree clean of `.lock().unwrap()` chains,
-//! NaN-unsound `partial_cmp` comparators, bare `std::sync::Mutex` on the
-//! decode path, panicking calls in [`serve`], and exact float equality in
-//! `model/`/`cortex/` production code (tier round-trips make it a
-//! tolerance bug); individual sites opt out with
-//! `// audit-allow: <rule>`.
+//! required CI job) is a crate-graph static analyzer ([`audit`]): the
+//! five token rules — `.lock().unwrap()` chains, NaN-unsound
+//! `partial_cmp` comparators, bare `std::sync::Mutex` on the decode
+//! path, panicking calls in [`serve`], exact float equality in
+//! `model/`/`cortex/` production code — plus three whole-crate passes:
+//! `lock-order` proves every reachable `RankedMutex` acquisition path
+//! strictly rank-descending even where no test executes it,
+//! `gauge-lineage` proves every pool/step gauge reaches the `/stats`
+//! serialization and some consistency check, and `hot-tick` proves
+//! nothing reachable from the fused decode tick does IO, sleeps,
+//! prints, or takes a lock ranked above `SchedulerQueue`.  Individual
+//! sites opt out with `// audit-allow: <rule>`, and the `stale-allow`
+//! pass flags any marker that no longer suppresses a real finding.
 //!
 //! Python never runs on the request path: `make artifacts` exports
 //! everything once, and this crate serves from the compiled artifacts.
 
+pub mod audit;
 pub mod cortex;
 pub mod metrics;
 pub mod model;

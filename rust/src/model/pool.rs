@@ -2058,6 +2058,24 @@ impl KvPool {
                 st.host_slab.len()
             ));
         }
+        // Churn conservation: every release was preceded by its rent, and
+        // `releases` is loaded first, so an excess can only mean a
+        // double-free or an uncounted rent path.
+        let releases = self.releases.load(Ordering::Relaxed);
+        let rents = self.rents.load(Ordering::Relaxed);
+        if releases > rents {
+            errs.push(format!("churn: {releases} releases exceed {rents} rents"));
+        }
+        // `shared_payload_bytes` (the `/stats` name for the registry's
+        // once-only charge) is bounded by every shared block resident at
+        // fp32 — a larger figure means a stale or double-counted charge.
+        let shared_payload_bytes = st.shared_bytes;
+        if shared_payload_bytes > st.shared as u64 * self.block_bytes() {
+            errs.push(format!(
+                "shared: {shared_payload_bytes} shared payload bytes exceed {} shared blocks at fp32",
+                st.shared
+            ));
+        }
         // Lock order: `state` before `dev` — the documented pool order.
         let dev = self.dev.read().unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut dev_free = HashSet::with_capacity(dev.free_ids.len());

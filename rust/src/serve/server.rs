@@ -447,9 +447,12 @@ fn resolve_max_tokens(requested: Option<&Json>, default: usize, cap: usize) -> R
 
 /// Render a stats snapshot as Prometheus text exposition (version 0.0.4):
 /// every numeric leaf of the JSON tree becomes one `warp_<path>` sample
-/// (booleans as 0/1), so the same snapshot that answers `/stats` answers
-/// the scrape endpoint and the two can never drift.  Strings and arrays
-/// have no Prometheus scalar type and are skipped.
+/// (booleans as 0/1) preceded by its `# TYPE warp_<path> gauge` metadata
+/// line, so the same snapshot that answers `/stats` answers the scrape
+/// endpoint and the two can never drift.  Everything is declared `gauge`:
+/// the snapshot has no reset semantics a scraper could rely on, and a
+/// monotone counter read as a gauge is still `rate()`-able.  Strings and
+/// arrays have no Prometheus scalar type and are skipped.
 pub fn metrics_text(stats: &Json) -> String {
     let mut out = String::new();
     flatten_metrics(stats, "warp", &mut out);
@@ -465,6 +468,7 @@ fn flatten_metrics(node: &Json, prefix: &str, out: &mut String) {
             }
         }
         Json::Num(x) if x.is_finite() => {
+            out.push_str(&format!("# TYPE {prefix} gauge\n"));
             // Integral values print without a trailing `.0`, matching the
             // /stats wire shape (counters stay counters to the scraper).
             if x.fract() == 0.0 && x.abs() < 1e15 {
@@ -474,6 +478,7 @@ fn flatten_metrics(node: &Json, prefix: &str, out: &mut String) {
             }
         }
         Json::Bool(b) => {
+            out.push_str(&format!("# TYPE {prefix} gauge\n"));
             out.push_str(&format!("{prefix} {}\n", u8::from(*b)));
         }
         _ => {}
@@ -533,7 +538,9 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 .with("blocks_high_water", pool.blocks_high_water)
                 .with("resident_bytes", pool.resident_bytes())
                 .with("live_bytes", pool.live_bytes())
+                .with("rents", pool.rents)
                 .with("reuses", pool.reuses)
+                .with("releases", pool.releases)
                 .with("fragmentation", pool.fragmentation())
                 .with("dev_blocks", pool.dev_blocks)
                 .with("dev_bytes", pool.dev_bytes)
@@ -556,6 +563,7 @@ fn stats_json(cortex: &WarpCortex) -> Json {
                 // host_slab_bytes is a sanitizer-checked conservation law)
                 .with("quantized_blocks", pool.quantized_blocks)
                 .with("quant_saved_bytes", pool.quant_saved_bytes)
+                .with("q8_block_bytes", pool.q8_block_bytes)
                 .with("offloaded_blocks", pool.offloaded_blocks)
                 .with("host_slab_bytes", pool.host_slab_bytes)
                 .with("swap_out_bytes", pool.swap_out_bytes)
@@ -625,6 +633,16 @@ fn stats_json(cortex: &WarpCortex) -> Json {
         // requested == admitted + rejected + parked at every instant —
         // the concurrent-client hammer test reconciles these.
         .with("sessions", sessions_json(&sess))
+        // Main-stream token throughput: lifetime total plus the overall
+        // and trailing-10s rates from the sliding window — the live
+        // counterpart of the paper's tokens/sec figure.
+        .with(
+            "throughput",
+            Json::obj()
+                .with("main_tokens", cortex.main_throughput.total())
+                .with("overall_per_sec", cortex.main_throughput.overall_per_sec())
+                .with("recent_per_sec", cortex.main_throughput.recent_per_sec(10.0)),
+        )
         .with(
             "device",
             Json::obj()
@@ -668,13 +686,27 @@ mod tests {
         assert!(text.contains("warp_prefill_chunked 1\n"), "{text}");
         assert!(!text.contains("tiny"), "{text}");
         assert!(!text.contains("events"), "{text}");
-        // every sample line is `name value`
+        // every sample is `name value`, preceded by its TYPE metadata line
+        let mut last_type: Option<String> = None;
         for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut parts = rest.split(' ');
+                let name = parts.next().unwrap();
+                assert!(name.starts_with("warp_"), "{line}");
+                assert_eq!(parts.next(), Some("gauge"), "{line}");
+                assert!(parts.next().is_none(), "{line}");
+                last_type = Some(name.to_string());
+                continue;
+            }
             let mut parts = line.split(' ');
-            assert!(parts.next().unwrap().starts_with("warp_"));
+            let name = parts.next().unwrap();
+            assert!(name.starts_with("warp_"));
             assert!(parts.next().unwrap().parse::<f64>().is_ok());
             assert!(parts.next().is_none());
+            // the metadata line announced exactly this sample
+            assert_eq!(last_type.take().as_deref(), Some(name), "{text}");
         }
+        assert!(last_type.is_none(), "dangling TYPE line: {text}");
     }
 
     #[test]

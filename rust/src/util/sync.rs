@@ -101,6 +101,38 @@ pub enum LockRank {
     Registry = 70,
 }
 
+impl LockRank {
+    /// Every rank, innermost first.  `warp-audit`'s static `lock-order`
+    /// pass parses the enum declaration above out of this file's source
+    /// and asserts the parsed table equal to this one
+    /// (`rust/tests/audit_roundtrip.rs`), so the static analyzer and the
+    /// runtime detector can never drift.
+    pub const ALL: [LockRank; 8] = [
+        LockRank::DeviceQueue,
+        LockRank::PoolState,
+        LockRank::SchedulerQueue,
+        LockRank::SessionTable,
+        LockRank::SideResults,
+        LockRank::PrismAgents,
+        LockRank::Metrics,
+        LockRank::Registry,
+    ];
+
+    /// The variant's source-level name, as the static pass sees it.
+    pub const fn name(self) -> &'static str {
+        match self {
+            LockRank::DeviceQueue => "DeviceQueue",
+            LockRank::PoolState => "PoolState",
+            LockRank::SchedulerQueue => "SchedulerQueue",
+            LockRank::SessionTable => "SessionTable",
+            LockRank::SideResults => "SideResults",
+            LockRank::PrismAgents => "PrismAgents",
+            LockRank::Metrics => "Metrics",
+            LockRank::Registry => "Registry",
+        }
+    }
+}
+
 #[cfg(debug_assertions)]
 mod held {
     use super::LockRank;

@@ -1,0 +1,721 @@
+//! Round-trip and property coverage for the crate-graph analyzer
+//! (`warp_cortex::audit`), pinning three contracts:
+//!
+//! 1. **Legacy parity** — the `legacy` module below is a pristine copy of
+//!    the original token scanner's scanning core (the five rules as they
+//!    shipped before the crate-graph rewrite).  The new pipeline must
+//!    reproduce its findings *exactly* — same file, line, rule and
+//!    message — both on the real `rust/src` tree and on seeded-violation
+//!    fixtures that make every rule and the `audit-allow:` suppression
+//!    path fire.  Do not "improve" the legacy copy: its whole value is
+//!    not moving.
+//! 2. **Lexer robustness** — `audit::lexer::strip` never panics on
+//!    arbitrary quote/comment/escape soup and always returns the three
+//!    channels line-aligned with the input.
+//! 3. **Rank-table agreement** — the static lock-order table parsed from
+//!    `util/sync.rs` equals the runtime `LockRank` hierarchy debug
+//!    builds enforce (the cross-check `LockRank::name` exists for).
+
+use std::path::{Path, PathBuf};
+
+use warp_cortex::audit::{self, AuditInput, SourceFile};
+use warp_cortex::util::sync::LockRank;
+
+/// The original warp-audit token scanner, verbatim (sans CLI).  Kept as
+/// the reference implementation the crate-graph pipeline is compared
+/// against; intentionally self-contained and frozen.
+mod legacy {
+    use std::path::Path;
+
+    /// Modules on the fused-tick decode path: every mutex here must be
+    /// ranked (see `util::sync::LockRank`) so the deadlock detector
+    /// covers it.
+    const DECODE_PATH_MODULES: [&str; 8] = [
+        "model/pool.rs",
+        "cortex/step.rs",
+        "cortex/scheduler.rs",
+        "cortex/batcher.rs",
+        "cortex/prism.rs",
+        "cortex/synapse.rs",
+        "runtime/device.rs",
+        "metrics/mod.rs",
+    ];
+
+    /// Comparator-position sinks for the `nan-sort` rule: `partial_cmp`
+    /// appearing near one of these is a NaN-unsafe ordering.
+    const SORTERS: [&str; 5] = [
+        "sort_by(",
+        "sort_unstable_by(",
+        "min_by(",
+        "max_by(",
+        "binary_search_by(",
+    ];
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Rule {
+        PoisonCascade,
+        NanSort,
+        RawMutex,
+        PanicInServe,
+        FloatEq,
+    }
+
+    impl Rule {
+        pub fn name(self) -> &'static str {
+            match self {
+                Rule::PoisonCascade => "poison-cascade",
+                Rule::NanSort => "nan-sort",
+                Rule::RawMutex => "raw-mutex",
+                Rule::PanicInServe => "panic-in-serve",
+                Rule::FloatEq => "float-eq",
+            }
+        }
+
+        fn from_name(name: &str) -> Option<Rule> {
+            match name {
+                "poison-cascade" => Some(Rule::PoisonCascade),
+                "nan-sort" => Some(Rule::NanSort),
+                "raw-mutex" => Some(Rule::RawMutex),
+                "panic-in-serve" => Some(Rule::PanicInServe),
+                "float-eq" => Some(Rule::FloatEq),
+                _ => None,
+            }
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct Finding {
+        pub line: usize,
+        pub rule: Rule,
+        pub message: &'static str,
+    }
+
+    /// Source split into lines with comments, string contents and char
+    /// literals blanked (`code`), plus the comment text per line
+    /// (`comments`, for `audit-allow:` detection).  Line numbers are
+    /// preserved exactly.
+    struct Stripped {
+        code: Vec<String>,
+        comments: Vec<String>,
+    }
+
+    fn newline(out: &mut Stripped) {
+        out.code.push(String::new());
+        out.comments.push(String::new());
+    }
+
+    fn prev_is_ident(chars: &[char], i: usize) -> bool {
+        i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+    }
+
+    /// If a raw (byte) string literal starts at `i` (`r"`, `r#"`,
+    /// `br##"`, ...), return the index one past its closing quote.
+    fn raw_string_end(chars: &[char], i: usize) -> Option<usize> {
+        let mut j = i;
+        if chars[j] == 'b' {
+            j += 1;
+        }
+        if chars.get(j) != Some(&'r') {
+            return None;
+        }
+        j += 1;
+        let mut hashes = 0;
+        while chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if chars.get(j) != Some(&'"') {
+            return None;
+        }
+        j += 1;
+        while j < chars.len() {
+            if chars[j] == '"'
+                && chars
+                    .get(j + 1..j + 1 + hashes)
+                    .is_some_and(|t| t.iter().all(|&c| c == '#'))
+            {
+                return Some(j + 1 + hashes);
+            }
+            j += 1;
+        }
+        Some(chars.len())
+    }
+
+    fn strip(src: &str) -> Stripped {
+        let chars: Vec<char> = src.chars().collect();
+        let n = chars.len();
+        let mut out = Stripped {
+            code: vec![String::new()],
+            comments: vec![String::new()],
+        };
+        let mut i = 0;
+        while i < n {
+            let c = chars[i];
+            if c == '\n' {
+                newline(&mut out);
+                i += 1;
+                continue;
+            }
+            // Line comment (covers `///` and `//!` doc comments too).
+            if c == '/' && chars.get(i + 1) == Some(&'/') {
+                while i < n && chars[i] != '\n' {
+                    out.comments.last_mut().expect("line present").push(chars[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            // Block comment, nested.
+            if c == '/' && chars.get(i + 1) == Some(&'*') {
+                let mut depth = 1;
+                i += 2;
+                while i < n && depth > 0 {
+                    if chars[i] == '\n' {
+                        newline(&mut out);
+                        i += 1;
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        out.comments.last_mut().expect("line present").push(chars[i]);
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            // Raw / byte-string prefixes.
+            if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                if let Some(end) = raw_string_end(&chars, i) {
+                    for &ch in &chars[i..end] {
+                        if ch == '\n' {
+                            newline(&mut out);
+                        }
+                    }
+                    i = end;
+                    continue;
+                }
+                // `b"..."` / `b'x'`: step past the prefix; the quote
+                // handlers below take over on the next iteration.
+                if chars.get(i + 1) == Some(&'"') || chars.get(i + 1) == Some(&'\'') {
+                    i += 1;
+                    continue;
+                }
+            }
+            // Plain string.
+            if c == '"' {
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' {
+                        i += 2;
+                    } else if chars[i] == '"' {
+                        i += 1;
+                        break;
+                    } else {
+                        if chars[i] == '\n' {
+                            newline(&mut out);
+                        }
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            // Char literal vs lifetime.
+            if c == '\'' {
+                if chars.get(i + 1) == Some(&'\\') {
+                    // Escaped char: skip past `'\x`, then scan to the
+                    // close.
+                    i += 3;
+                    while i < n && chars[i] != '\'' {
+                        i += 1;
+                    }
+                    i = (i + 1).min(n);
+                    continue;
+                }
+                if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                    i += 3; // 'x'
+                    continue;
+                }
+                // Lifetime: drop the quote, keep scanning.
+                i += 1;
+                continue;
+            }
+            out.code.last_mut().expect("line present").push(c);
+            i += 1;
+        }
+        out
+    }
+
+    /// Rules suppressed by an `audit-allow:` marker in this comment.
+    fn allowed_rules(comment: &str) -> Vec<Rule> {
+        let Some(pos) = comment.find("audit-allow:") else {
+            return Vec::new();
+        };
+        comment[pos + "audit-allow:".len()..]
+            .split([',', ' '].as_slice())
+            .filter_map(|name| Rule::from_name(name.trim()))
+            .collect()
+    }
+
+    /// Brace-tracking skip state for `#[cfg(test)]` / `#[test]` items.
+    #[derive(Default)]
+    struct TestSkip {
+        /// Saw the attribute; waiting for the item body to open.
+        pending: bool,
+        /// Inside the item body at this brace depth.
+        depth: usize,
+        active: bool,
+    }
+
+    impl TestSkip {
+        /// Feed one stripped line; true when it belongs to a test item
+        /// (including the attribute lines themselves).
+        fn observe(&mut self, line: &str) -> bool {
+            let trimmed = line.trim();
+            if self.active {
+                for c in trimmed.chars() {
+                    match c {
+                        '{' => self.depth += 1,
+                        '}' if self.depth > 0 => {
+                            self.depth -= 1;
+                            if self.depth == 0 {
+                                self.active = false;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                return true;
+            }
+            if self.pending {
+                let mut saw_open = false;
+                for c in trimmed.chars() {
+                    match c {
+                        '{' => {
+                            saw_open = true;
+                            self.depth += 1;
+                        }
+                        '}' if self.depth > 0 => self.depth -= 1,
+                        ';' if self.depth == 0 && !saw_open => {
+                            // Bodyless item (`mod tests;`, `use ...;`).
+                            self.pending = false;
+                            return true;
+                        }
+                        _ => {}
+                    }
+                }
+                if saw_open {
+                    self.pending = false;
+                    if self.depth > 0 {
+                        self.active = true;
+                    }
+                }
+                return true;
+            }
+            if trimmed.starts_with("#[cfg(test)")
+                || trimmed.starts_with("#[test]")
+                || trimmed.starts_with("#[cfg(all(test")
+            {
+                self.pending = true;
+                return true;
+            }
+            false
+        }
+    }
+
+    /// True when `s` contains a float-typed expression shape: a float
+    /// literal (`1.0`, `2.5e-3`, `1f32`) or an `as f32` / `as f64` cast.
+    /// Operates on stripped code, so strings and comments never match.
+    fn has_float_expr(s: &str) -> bool {
+        if s.contains("as f32") || s.contains("as f64") {
+            return true;
+        }
+        let c: Vec<char> = s.chars().collect();
+        for i in 0..c.len() {
+            if !c[i].is_ascii_digit() {
+                continue;
+            }
+            // Must start a numeric token (not `x2`, `0x1E`, tuple index
+            // `.0`).
+            if i > 0 && (c[i - 1].is_alphanumeric() || c[i - 1] == '_' || c[i - 1] == '.') {
+                continue;
+            }
+            let mut j = i;
+            while j < c.len() && (c[j].is_ascii_digit() || c[j] == '_') {
+                j += 1;
+            }
+            match c.get(j) {
+                Some('.') if c.get(j + 1).is_some_and(|d| d.is_ascii_digit()) => return true,
+                Some('e') | Some('E') => {
+                    let mut k = j + 1;
+                    if matches!(c.get(k), Some('+') | Some('-')) {
+                        k += 1;
+                    }
+                    if c.get(k).is_some_and(|d| d.is_ascii_digit()) {
+                        return true;
+                    }
+                }
+                Some('f') => {
+                    let suffix = c.get(j + 1..j + 3);
+                    if (suffix == Some(&['3', '2']) || suffix == Some(&['6', '4']))
+                        && c.get(j + 3).map_or(true, |ch| !(ch.is_alphanumeric() || *ch == '_'))
+                    {
+                        return true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        false
+    }
+
+    /// Does the `==`/`!=` at byte `p` compare a float expression?
+    /// Operands are bounded by the nearest expression delimiter on each
+    /// side, so a float literal elsewhere on the line cannot condemn an
+    /// integer compare.
+    fn float_eq_at(line: &str, p: usize) -> bool {
+        let left_all = &line[..p];
+        let right_all = &line[p + 2..];
+        let lb = ["(", "{", "[", ",", ";", "&&", "||"]
+            .iter()
+            .filter_map(|d| left_all.rfind(d).map(|q| q + d.len()))
+            .max()
+            .unwrap_or(0);
+        let rb = [")", "}", "]", ",", ";", "&&", "||", "{"]
+            .iter()
+            .filter_map(|d| right_all.find(d))
+            .min()
+            .unwrap_or(right_all.len());
+        has_float_expr(&left_all[lb..]) || has_float_expr(&right_all[..rb])
+    }
+
+    /// Run every rule over one file's source.  `module` is the path
+    /// relative to `src/` (e.g. `util/sync.rs`), which scopes the
+    /// per-module rules.
+    pub fn scan_source(module: &str, src: &str) -> Vec<Finding> {
+        let stripped = strip(src);
+        let mut findings: Vec<Finding> = Vec::new();
+        let mut skip = TestSkip::default();
+        let decode_path = DECODE_PATH_MODULES.contains(&module);
+        let in_serve = module.starts_with("serve/");
+        let in_sync = module == "util/sync.rs";
+        let float_scope = module.starts_with("model/") || module.starts_with("cortex/");
+        for (idx, line) in stripped.code.iter().enumerate() {
+            if skip.observe(line) {
+                continue;
+            }
+            let mut report = |rule: Rule, message: &'static str| {
+                let allowed = allowed_rules(&stripped.comments[idx]).contains(&rule)
+                    || (idx > 0 && allowed_rules(&stripped.comments[idx - 1]).contains(&rule));
+                if !allowed {
+                    findings.push(Finding {
+                        line: idx + 1,
+                        rule,
+                        message,
+                    });
+                }
+            };
+            if !in_sync {
+                // Merge with the next line so a formatter-split
+                // `.lock()\n.unwrap()` chain is still caught; only
+                // matches that *start* on this line are reported here.
+                let here = line.trim_end();
+                let next = stripped.code.get(idx + 1).map_or("", |l| l.trim());
+                let merged = format!("{here}{next}");
+                for pat in [".lock().unwrap()", ".lock().expect("] {
+                    if let Some(p) = merged.find(pat) {
+                        if p < here.len() {
+                            report(
+                                Rule::PoisonCascade,
+                                "poison-intolerant lock: use util::sync::lock_unpoisoned \
+                                 or a RankedMutex",
+                            );
+                            break;
+                        }
+                    }
+                }
+            }
+            if line.contains(".partial_cmp(") {
+                let window = idx.saturating_sub(2);
+                let in_comparator = stripped.code[window..=idx]
+                    .iter()
+                    .any(|l| SORTERS.iter().any(|s| l.contains(s)));
+                if in_comparator {
+                    report(Rule::NanSort, "NaN-unsafe comparator: use total_cmp");
+                }
+            }
+            if decode_path {
+                let mut start = 0;
+                while let Some(p) = line[start..].find("Mutex::new(") {
+                    let abs = start + p;
+                    if line[..abs].ends_with("Ranked") {
+                        start = abs + "Mutex::new(".len();
+                        continue;
+                    }
+                    report(
+                        Rule::RawMutex,
+                        "bare std::sync::Mutex in a decode-path module: \
+                         use util::sync::RankedMutex",
+                    );
+                    break;
+                }
+            }
+            if in_serve {
+                for pat in [".unwrap()", ".expect(", "panic!"] {
+                    if line.contains(pat) {
+                        report(
+                            Rule::PanicInServe,
+                            "panic path in request handling: return an error \
+                             response instead",
+                        );
+                        break;
+                    }
+                }
+            }
+            if float_scope {
+                for op in ["==", "!="] {
+                    let mut start = 0;
+                    let mut fired = false;
+                    while let Some(rel) = line[start..].find(op) {
+                        let abs = start + rel;
+                        // Not part of `<=`, `>=`, `=>`, compound
+                        // assignment…
+                        let before = line[..abs].chars().next_back();
+                        let after = line[abs + 2..].chars().next();
+                        let neighbor = matches!(
+                            before,
+                            Some(
+                                '<' | '>' | '=' | '!' | '+' | '-' | '*' | '/' | '%' | '&' | '|'
+                                    | '^'
+                            )
+                        ) || after == Some('=');
+                        if !neighbor && float_eq_at(line, abs) {
+                            report(
+                                Rule::FloatEq,
+                                "exact float equality: compare within a bound, \
+                                 or on to_bits() where bit-identity is the contract",
+                            );
+                            fired = true;
+                            break;
+                        }
+                        start = abs + 2;
+                    }
+                    if fired {
+                        break;
+                    }
+                }
+            }
+        }
+        findings
+    }
+
+    /// Module path relative to the last `/src/` component (the scope key
+    /// the per-module rules match on); the raw path when there is none.
+    pub fn normalize_module(path: &Path) -> String {
+        let s = path.to_string_lossy().replace('\\', "/");
+        match s.rfind("/src/") {
+            Some(p) => s[p + "/src/".len()..].to_string(),
+            None => s,
+        }
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// One finding in comparable form: (path, 1-based line, rule id,
+/// message).
+type Key = (String, usize, String, String);
+
+fn legacy_keys(path: &str, src: &str) -> Vec<Key> {
+    let module = legacy::normalize_module(Path::new(path));
+    legacy::scan_source(&module, src)
+        .into_iter()
+        .map(|f| (path.to_string(), f.line, f.rule.name().to_string(), f.message.to_string()))
+        .collect()
+}
+
+const LEGACY_RULES: [&str; 5] = [
+    "poison-cascade",
+    "nan-sort",
+    "raw-mutex",
+    "panic-in-serve",
+    "float-eq",
+];
+
+fn new_pipeline_keys(sources: &[(String, String)]) -> Vec<Key> {
+    let mut input = AuditInput::default();
+    for (path, src) in sources {
+        input.files.push(SourceFile::parse(path, src));
+    }
+    audit::run(&input)
+        .findings
+        .into_iter()
+        .filter(|f| LEGACY_RULES.contains(&f.rule.name()))
+        .map(|f| (f.path, f.line, f.rule.name().to_string(), f.message))
+        .collect()
+}
+
+/// The new crate-graph pipeline reproduces the frozen reference scanner
+/// exactly, rule for rule and message for message, over the real source
+/// tree (which is audit-clean, so both sides must agree on *emptiness*
+/// too — a new false positive shows up here before it shows up in CI).
+#[test]
+fn new_pipeline_matches_legacy_scanner_on_real_tree() {
+    let mut paths = Vec::new();
+    walk(Path::new("rust/src"), &mut paths).expect("rust/src readable");
+    paths.sort();
+    assert!(paths.len() > 20, "tree walk looks wrong: {} files", paths.len());
+    let sources: Vec<(String, String)> = paths
+        .iter()
+        .map(|p| {
+            let src = std::fs::read_to_string(p).expect("source readable");
+            (p.display().to_string(), src)
+        })
+        .collect();
+
+    let mut expected: Vec<Key> = sources
+        .iter()
+        .flat_map(|(path, src)| legacy_keys(path, src))
+        .collect();
+    let mut got = new_pipeline_keys(&sources);
+    expected.sort();
+    got.sort();
+    assert_eq!(got, expected, "legacy-rule findings diverged from the reference scanner");
+}
+
+/// Same parity on sources seeded with one violation per legacy rule plus
+/// a suppressed site — proves agreement on *firing* behaviour, not just
+/// on the clean tree, and that both sides honour `audit-allow:`
+/// identically.
+#[test]
+fn new_pipeline_matches_legacy_scanner_on_seeded_violations() {
+    let step = r#"
+fn tick(m: &std::sync::Mutex<u32>) {
+    let v = m.lock().unwrap();
+    let q = Mutex::new(0);
+    let _ = (v, q);
+}
+
+fn order(xs: &mut Vec<f32>) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+fn compare(x: f32) -> bool {
+    // audit-allow: float-eq
+    x == 1.0
+}
+
+fn drift(x: f32) -> bool {
+    x == 0.25
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let m = std::sync::Mutex::new(1);
+        let _ = m.lock().unwrap();
+    }
+}
+"#;
+    let serve = r#"
+fn handle(body: Option<String>) -> String {
+    body.expect("body present")
+}
+"#;
+    let sources = vec![
+        ("rust/src/cortex/step.rs".to_string(), step.to_string()),
+        ("rust/src/serve/server.rs".to_string(), serve.to_string()),
+    ];
+    let mut expected: Vec<Key> = sources
+        .iter()
+        .flat_map(|(path, src)| legacy_keys(path, src))
+        .collect();
+    let mut got = new_pipeline_keys(&sources);
+    expected.sort();
+    got.sort();
+    assert_eq!(got, expected);
+
+    // The seeds genuinely fire: one poison-cascade, one raw-mutex, one
+    // nan-sort, one float-eq (the second one — the first is waived), one
+    // panic-in-serve; the test-mod violations are skipped.
+    let rules: Vec<&str> = got.iter().map(|k| k.2.as_str()).collect();
+    assert_eq!(
+        rules.iter().filter(|r| **r == "poison-cascade").count(),
+        1,
+        "{got:?}"
+    );
+    assert_eq!(rules.iter().filter(|r| **r == "raw-mutex").count(), 1, "{got:?}");
+    assert_eq!(rules.iter().filter(|r| **r == "nan-sort").count(), 1, "{got:?}");
+    assert_eq!(rules.iter().filter(|r| **r == "float-eq").count(), 1, "{got:?}");
+    assert_eq!(
+        rules.iter().filter(|r| **r == "panic-in-serve").count(),
+        1,
+        "{got:?}"
+    );
+}
+
+/// The lexer is total: arbitrary quote/comment/escape soup never panics,
+/// the three channels stay line-aligned with the input, and the full
+/// file parse built on top is total too.
+#[test]
+fn lexer_never_panics_and_stays_line_aligned() {
+    use warp_cortex::prop_assert;
+    use warp_cortex::util::proptest::check;
+    // Deliberately hostile alphabet: every byte that changes lexer state.
+    let alphabet: &[u8] = b"\"'\\/*#rb{}()[]!.,;:=<>xyzXYZ_09 \n\t";
+    check("audit lexer is total and line-aligned", 400, |g| {
+        let src = g.string_from(0..160, alphabet);
+        let s = warp_cortex::audit::lexer::strip(&src);
+        let lines = src.split('\n').count();
+        prop_assert!(
+            s.code.len() == lines && s.comments.len() == lines && s.strings.len() == lines,
+            "channel misalignment on {src:?}: code {} comments {} strings {} vs {lines} lines",
+            s.code.len(),
+            s.comments.len(),
+            s.strings.len()
+        );
+        for line in &s.code {
+            for (off, word) in warp_cortex::audit::lexer::idents(line) {
+                prop_assert!(
+                    line[off..].starts_with(word),
+                    "ident offset out of register on {line:?}"
+                );
+            }
+        }
+        // The whole item/fn extraction pipeline must be total as well.
+        let file = SourceFile::parse("rust/src/fuzz.rs", &src);
+        prop_assert!(
+            file.line_fn.len() == lines,
+            "line→fn map misaligned: {} vs {lines}",
+            file.line_fn.len()
+        );
+        Ok(())
+    });
+}
+
+/// The lock-order pass checks the same hierarchy debug builds enforce:
+/// the table parsed statically from `util/sync.rs` equals `LockRank`
+/// variant for variant, discriminant for discriminant.
+#[test]
+fn static_rank_table_matches_runtime_hierarchy() {
+    let src = std::fs::read_to_string("rust/src/util/sync.rs").expect("sync source");
+    let files = vec![SourceFile::parse("rust/src/util/sync.rs", &src)];
+    let parsed = audit::passes::parse_rank_enum(&files);
+    let runtime: Vec<(String, u8)> = LockRank::ALL
+        .iter()
+        .map(|r| (r.name().to_string(), *r as u8))
+        .collect();
+    assert_eq!(parsed, runtime, "static lock-order table drifted from the runtime enum");
+}

@@ -313,7 +313,8 @@ fn streaming_first_chunk_arrives_while_another_session_is_mid_generation() {
 
 /// The Prometheus scrape endpoint: `/metrics` renders the same snapshot
 /// that answers `/stats`, flattened to `warp_<path> <value>` text
-/// exposition — one line per numeric leaf, nothing else.
+/// exposition — one sample per numeric leaf, each preceded by its
+/// `# TYPE warp_<path> gauge` metadata line, nothing else.
 #[test]
 fn metrics_endpoint_exports_prometheus_text() {
     let handle = start(stub_source(2, 4, 1), 2);
@@ -344,12 +345,25 @@ fn metrics_endpoint_exports_prometheus_text() {
             .contains("content-type: text/plain; version=0.0.4"),
         "scrapers need the exposition-format content type: {head}"
     );
-    // The stub's /stats `sessions` block surfaces leaf-by-leaf.
+    // The stub's /stats `sessions` block surfaces leaf-by-leaf, each
+    // sample announced by its TYPE metadata line.
     assert!(body.contains("warp_sessions_requested 1\n"), "{body}");
     assert!(body.contains("warp_sessions_completed 1\n"), "{body}");
     assert!(body.contains("warp_sessions_active 0\n"), "{body}");
-    // Every line is a bare `name value` sample.
+    assert!(
+        body.contains("# TYPE warp_sessions_requested gauge\n"),
+        "{body}"
+    );
+    // Every line is either `# TYPE warp_<name> gauge` metadata or a bare
+    // `name value` sample.
     for line in body.trim().lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split(' ');
+            assert!(parts.next().unwrap().starts_with("warp_"), "{line}");
+            assert_eq!(parts.next(), Some("gauge"), "{line}");
+            assert!(parts.next().is_none(), "{line}");
+            continue;
+        }
         let mut parts = line.split(' ');
         assert!(parts.next().unwrap().starts_with("warp_"), "{line}");
         assert!(parts.next().unwrap().parse::<f64>().is_ok(), "{line}");
