@@ -1,0 +1,286 @@
+//! Bench P10 — durable sessions: the single-file checkpoint store as the
+//! fourth memory tier and the fourth admission tier.
+//!
+//! Drives the store + pool layers directly (host-only — runs in the CI
+//! bench-smoke step) and *asserts* the durable-session acceptance
+//! criteria:
+//!
+//! 1. checkpoint → drop → resume round-trips a session losslessly: the
+//!    registry-shared prompt prefix re-attaches by hash chain with **zero
+//!    new blocks and zero h2d bytes** (no re-prefill), the private tail
+//!    reloads from the file, and the post-resume gather is bit-identical
+//!    to the pre-checkpoint one;
+//! 2. at the pool cap, tiering alone (PR 8: no slab headroom left) sheds
+//!    the next arrival — but with hibernated residents parked in the
+//!    store, preempting the coldest to disk frees its blocks and the
+//!    arrival **admits** instead of 503ing, and the preempted session
+//!    still resumes bit-identically from its durable record afterwards;
+//! 3. the store's record ledger reconciles (`checkpoints == resumes +
+//!    superseded + corrupt_records_skipped + retained`) through all of it.
+//!
+//! Emits `BENCH_durable_sessions.json` (threshold-checked by
+//! ci/check_bench.py and folded into the per-commit BENCH_summary.json).
+//!
+//! ```bash
+//! cargo bench --bench durable_sessions
+//! ```
+
+use warp_cortex::cortex::{SessionCheckpoint, SessionStore};
+use warp_cortex::model::{KvPool, KvPoolConfig};
+use warp_cortex::runtime::ModelConfig;
+use warp_cortex::util::timer::bench_median;
+use warp_cortex::util::Json;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 192,
+        vocab_size: 260,
+        head_dim: 16,
+        rope_theta: 1e4,
+        param_count: 116_032,
+    }
+}
+
+const L: usize = 2; // layers of tiny_cfg
+const ROW: usize = 32; // KV * hd of tiny_cfg
+const BT: usize = 16; // block_tokens
+const PROMPT: usize = 32; // registered prompt (2 full blocks)
+const TAIL: usize = 16; // private decode rows past the prompt
+const TOTAL: usize = PROMPT + TAIL;
+const CAPACITY: usize = 256;
+const SESSIONS: usize = 4;
+const SESSION_ROWS: usize = 32; // per hibernated session (2 full blocks)
+const CAP_BLOCKS: usize = (SESSIONS * SESSION_ROWS) / BT; // exactly the residents
+const SALT: u64 = 0x0D15; // bench's registry domain
+
+/// Deterministic prompt token ids, distinct per `seed`.
+fn prompt_tokens(seed: usize) -> Vec<i32> {
+    (0..PROMPT as i32)
+        .map(|i| (i * 37 + 11 + seed as i32 * 101) % 256)
+        .collect()
+}
+
+/// Deterministic `[L, n, ROW]` rows for positions `start..start + n` —
+/// the layout `replace_rows` / `append_rows` expect, and the same layout
+/// `SessionCheckpoint::k_tail`/`v_tail` carry.
+fn span_rows(seed: usize, start: usize, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut k = Vec::with_capacity(L * n * ROW);
+    let mut v = Vec::with_capacity(L * n * ROW);
+    for layer in 0..L {
+        for pos in start..start + n {
+            for j in 0..ROW {
+                let x = (layer * 7919 + pos * 131 + j) as f32 * 1e-3 + seed as f32 * 1e-2;
+                k.push(x);
+                v.push(-x);
+            }
+        }
+    }
+    (k, v)
+}
+
+fn bit_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn pool_with(max_blocks: usize, slab: usize) -> std::sync::Arc<KvPool> {
+    KvPool::new(
+        &tiny_cfg(),
+        KvPoolConfig {
+            block_tokens: BT,
+            max_blocks,
+            // Bit-identity scenarios: the warm int8 tier is lossy by
+            // design, so parked state must stay fp32 here.
+            quantize_parked: false,
+            host_slab_blocks: slab,
+            ..KvPoolConfig::default()
+        },
+    )
+}
+
+/// A synthetic but fully-populated checkpoint: real tail rows, synthetic
+/// sampler/logits state (the cortex-level codec tests prove those fields
+/// bit-exactly; this bench proves the KV path).
+fn checkpoint_for(id: u64, seed: usize, shared_rows: usize, total_rows: usize) -> SessionCheckpoint {
+    let (k_tail, v_tail) = span_rows(seed, shared_rows, total_rows - shared_rows);
+    SessionCheckpoint {
+        id,
+        rng_state: 0x9E37_79B9 ^ id,
+        synapse_version: 1,
+        generated: (total_rows - shared_rows) as u64,
+        max_tokens: 64,
+        pos: total_rows as i64,
+        shared_rows: shared_rows as u32,
+        total_rows: total_rows as u32,
+        offloaded_blocks: 0,
+        prompt: format!("bench prompt {seed}"),
+        text: String::new(),
+        prompt_ids: prompt_tokens(seed),
+        recent: vec![1, 2, 3],
+        logits: vec![0.25; 16],
+        hidden: vec![-0.5; 8],
+        k_tail,
+        v_tail,
+    }
+}
+
+fn store_path() -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("warpstore_bench_{}.wst", std::process::id()))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("═══ P10: durable sessions (checkpoint store + preempt-to-disk) ═══\n");
+    let path = store_path();
+    let _ = std::fs::remove_file(&path);
+
+    // ── A: checkpoint → drop → resume, zero re-prefill ──────────────────
+    // A session with a registry-shared prompt and a private decode tail
+    // checkpoints, fully drops, and resumes: the prompt re-attaches from
+    // the prefix registry by hash chain (no new blocks, no h2d), the tail
+    // reloads from the file, and the gather is bit-identical.
+    let pool = pool_with(0, 16);
+    let store = SessionStore::open(&path)?;
+    let tokens = prompt_tokens(7);
+    let (pk, pv) = span_rows(7, 0, PROMPT);
+    let (tk, tv) = span_rows(7, PROMPT, TAIL);
+    let mut cache = pool.new_cache(CAPACITY);
+    cache.replace_rows_keyed(PROMPT, SALT, &tokens, &pk, &pv)?;
+    cache.append_rows(TAIL, &tk, &tv)?;
+    let baseline = cache.device_gather(TOTAL)?;
+    store.checkpoint(&checkpoint_for(1, 7, PROMPT, TOTAL))?;
+    drop(cache); // the session is gone; only the registry + the file remain
+
+    let ticket = store.take(1)?;
+    assert!(ticket.resident.is_none(), "nothing was parked resident");
+    let cp = ticket.checkpoint;
+    let s0 = pool.stats();
+    let mut resumed = pool.new_cache(CAPACITY);
+    let hashes = pool.prefix_hashes(SALT, &cp.prompt_ids);
+    let attached = resumed.attach_shared_prefix(&hashes, &cp.prompt_ids)?;
+    let s1 = pool.stats();
+    let resume_prefix_new_blocks = s1.blocks_live - s0.blocks_live;
+    let resume_prefix_h2d_bytes = s1.h2d_bytes - s0.h2d_bytes;
+    assert_eq!(attached, cp.shared_rows as usize, "hash chain must cover the prompt");
+    assert_eq!(resume_prefix_new_blocks, 0, "shared prefix resumes by reference");
+    assert_eq!(resume_prefix_h2d_bytes, 0, "shared prefix resumes without upload");
+    let tail_rows = cp.total_rows as usize - cp.shared_rows as usize;
+    resumed.append_rows(tail_rows, &cp.k_tail, &cp.v_tail)?;
+    let after = resumed.device_gather(TOTAL)?;
+    let resume_bitident = bit_eq(&baseline.0, &after.0) && bit_eq(&baseline.1, &after.1);
+    assert!(resume_bitident, "checkpoint→resume must be bit-identical");
+    println!(
+        "durable resume: {attached} prompt rows re-attached by hash chain \
+         ({resume_prefix_new_blocks} new blocks, {resume_prefix_h2d_bytes} h2d bytes), \
+         {tail_rows} tail rows from the file — bit-identical gather"
+    );
+    drop(resumed);
+
+    // ── B: preempt-to-disk as the fourth admission tier ─────────────────
+    // SESSIONS hibernated sessions (checkpointed + parked resident) fill
+    // a capped, slab-less pool exactly: tiering alone sheds the next
+    // arrival (PR 8's terminal state).  Preempting the coldest resident
+    // to disk frees its blocks and the arrival admits.
+    let capped = pool_with(CAP_BLOCKS, 0);
+    let mut baseline0 = None;
+    for s in 0..SESSIONS {
+        let (k, v) = span_rows(100 + s, 0, SESSION_ROWS);
+        let mut c = capped.new_cache(CAPACITY);
+        c.replace_rows(SESSION_ROWS, &k, &v)?;
+        if s == 0 {
+            baseline0 = Some(c.device_gather(SESSION_ROWS)?);
+        }
+        store.checkpoint(&checkpoint_for(100 + s as u64, 100 + s, 0, SESSION_ROWS))?;
+        store.park_resident(100 + s as u64, Box::new(c));
+    }
+    let need = SESSION_ROWS / BT;
+    let tiering_sheds = !capped.can_admit(need);
+    assert!(tiering_sheds, "the budget is exactly the hibernated residents — must shed");
+    // The admission loop the cortex runs: preempt the coldest resident to
+    // disk until the reservation fits.
+    let mut preempted = 0usize;
+    while !capped.can_admit(need) && store.preempt_coldest() {
+        preempted += 1;
+    }
+    let preempt_admits = capped.can_admit(need);
+    assert!(preempt_admits, "preempt-to-disk must open the slot tiering could not");
+    assert_eq!(preempted, 1, "one coldest victim frees exactly one session's blocks");
+    let (ak, av) = span_rows(50, 0, SESSION_ROWS);
+    let mut arrival = capped.new_cache(CAPACITY);
+    arrival.replace_rows(SESSION_ROWS, &ak, &av)?;
+    println!(
+        "admission: tiered pool shed at the {CAP_BLOCKS}-block cap; preempting \
+         {preempted} resident to disk admitted the arrival ({} still resident)",
+        store.parked_resident()
+    );
+
+    // The preempted session (id 100, the coldest) lost its resident
+    // ticket but kept its durable record: free a slot and rebuild it from
+    // the file — still bit-identical.
+    while !capped.can_admit(need) && store.preempt_coldest() {}
+    let ticket = store.take(100)?;
+    assert!(ticket.resident.is_none(), "the victim's ticket was dropped to disk");
+    let cp = ticket.checkpoint;
+    let mut revived = capped.new_cache(CAPACITY);
+    revived.append_rows(cp.total_rows as usize, &cp.k_tail, &cp.v_tail)?;
+    let after0 = revived.device_gather(SESSION_ROWS)?;
+    let base0 = baseline0.expect("captured before parking");
+    let preempted_resume_bitident =
+        bit_eq(&base0.0, &after0.0) && bit_eq(&base0.1, &after0.1);
+    assert!(preempted_resume_bitident, "preempt-to-disk must be lossless");
+    println!("preempted session rebuilt from its record — bit-identical gather");
+
+    // ── ledger: conservation through every transition ───────────────────
+    store.check_invariants().map_err(anyhow::Error::msg)?;
+    let ss = store.stats();
+    let store_conservation_ok = ss.checkpoints
+        == ss.resumes + ss.superseded + ss.corrupt_records_skipped + ss.retained;
+    assert!(store_conservation_ok, "store ledger must reconcile: {ss:?}");
+
+    // ── timing: one checkpoint+take cycle on a 2-block tail ─────────────
+    let cycle_cp = checkpoint_for(999, 9, 0, SESSION_ROWS);
+    let t_cycle = bench_median(3, 50, || {
+        store.checkpoint(&cycle_cp).expect("checkpoint");
+        let t = store.take(999).expect("take");
+        std::hint::black_box(t.checkpoint.total_rows);
+    });
+    println!(
+        "checkpoint+take cycle ({} tail rows): {:.1} µs median",
+        SESSION_ROWS,
+        t_cycle.median_ns / 1e3
+    );
+    drop(arrival);
+    drop(revived);
+
+    // ── machine-readable report ─────────────────────────────────────────
+    let ss = store.stats();
+    let report = Json::obj()
+        .with("bench", "durable_sessions")
+        .with("resume_shared_rows", attached)
+        .with("resume_prefix_new_blocks", resume_prefix_new_blocks)
+        .with("resume_prefix_h2d_bytes", resume_prefix_h2d_bytes)
+        // 0/1 gauges (not JSON booleans — the threshold gate compares
+        // numbers only)
+        .with("resume_bitident", u64::from(resume_bitident))
+        .with("tiering_sheds", u64::from(tiering_sheds))
+        .with("preempt_admits", u64::from(preempt_admits))
+        .with("preempted_resume_bitident", u64::from(preempted_resume_bitident))
+        .with("store_conservation_ok", u64::from(store_conservation_ok))
+        .with("checkpoints", ss.checkpoints)
+        .with("resumes", ss.resumes)
+        .with("preempt_to_disk", ss.preempt_to_disk)
+        .with("retained", ss.retained)
+        .with("superseded", ss.superseded)
+        .with("corrupt_records_skipped", ss.corrupt_records_skipped)
+        .with("parked_resident", ss.parked_resident)
+        .with("store_bytes", ss.store_bytes)
+        .with("checkpoint_take_cycle_us", t_cycle.median_ns / 1e3);
+    std::fs::write("BENCH_durable_sessions.json", report.to_string())?;
+    println!("wrote BENCH_durable_sessions.json");
+    let _ = std::fs::remove_file(&path);
+    println!("\nshape check: zero-re-prefill resume + preempt-to-disk admission  ✓");
+    Ok(())
+}

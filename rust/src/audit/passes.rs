@@ -67,7 +67,7 @@ const IO_TOKENS: [&str; 9] = [
 const PRINT_MACROS: [&str; 4] = ["println", "eprintln", "print", "eprint"];
 
 /// Gauge-struct home modules for the gauge-lineage pass.
-const GAUGE_MODULES: [&str; 2] = ["model/pool.rs", "cortex/step.rs"];
+const GAUGE_MODULES: [&str; 3] = ["model/pool.rs", "cortex/step.rs", "cortex/store.rs"];
 
 /// Read methods of the `metrics` sinks: a `Counter` / `Histogram` /
 /// `Throughput` field nobody calls one of these on is write-only.

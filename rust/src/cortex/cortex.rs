@@ -67,6 +67,7 @@ use super::step::{
     AdmitGate, AgentSpawner, FusedExec, SessionPermit, StepConfig, StepScheduler, StepSeams,
     StepStats,
 };
+use super::store::{SessionCheckpoint, SessionStore, StoreError};
 use super::synapse::{Synapse, SynapseStats};
 use crate::metrics::{Histogram, Throughput};
 use crate::model::{
@@ -144,6 +145,23 @@ pub struct CortexConfig {
     /// paging granularity (fixed at engine construction via
     /// `Engine::new_with_pool`); a mismatch is rejected at assembly.
     pub kv_pool: KvPoolConfig,
+    /// Durable session store file ([`super::store`]).  `None` disables the
+    /// fourth memory tier entirely: no checkpoints, no
+    /// `POST /sessions/{id}/resume`, and admission under pool pressure
+    /// sheds (503) instead of preempting parked sessions to disk.
+    pub store_path: Option<std::path::PathBuf>,
+    /// Auto-checkpoint a session's durable record whenever it parks to the
+    /// cold host slab ([`CortexSession::park_to_host`]), so a parked
+    /// session is crash-recoverable the moment it goes quiet.
+    /// [`CortexSession::hibernate`] always checkpoints regardless — a
+    /// hibernated session frees its admission slot, so the record is the
+    /// only path back.
+    pub checkpoint_on_park: bool,
+    /// Let the serve layer hibernate (checkpoint + park) a streaming
+    /// session whose client disconnected mid-stream, instead of cancelling
+    /// it — the client can reconnect through `POST /sessions/{id}/resume`
+    /// and continue from the exact token it left off.
+    pub checkpoint_on_disconnect: bool,
 }
 
 impl Default for CortexConfig {
@@ -172,6 +190,9 @@ impl Default for CortexConfig {
             router: RouterConfig::default(),
             seed_mode: crate::cortex::synapse::SeedMode::Full,
             kv_pool: KvPoolConfig::default(),
+            store_path: None,
+            checkpoint_on_park: true,
+            checkpoint_on_disconnect: true,
         }
     }
 }
@@ -324,6 +345,37 @@ impl From<SessionError> for anyhow::Error {
     }
 }
 
+/// Why [`WarpCortex::resume_session`] refused.
+#[derive(Debug)]
+pub enum ResumeError {
+    /// No retained checkpoint under this id (never checkpointed, already
+    /// resumed, or lost to contained corruption at recovery) — the serve
+    /// layer answers 404.
+    Unknown(u64),
+    /// The record existed but failed its CRC or decode; it has been
+    /// dropped (counted in `corrupt_records_skipped`) — 500.
+    Corrupt(String),
+    /// Admission or bring-up failed the same ways [`WarpCortex::open_session`]
+    /// can — `Busy` is a retryable 503 and the record stays retained.
+    Session(SessionError),
+}
+
+impl std::fmt::Display for ResumeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResumeError::Unknown(id) => write!(f, "no resumable checkpoint for session {id}"),
+            ResumeError::Corrupt(m) => write!(f, "checkpoint unrecoverable: {m}"),
+            ResumeError::Session(e) => write!(f, "resume re-admission failed: {e}"),
+        }
+    }
+}
+
+impl From<ResumeError> for anyhow::Error {
+    fn from(e: ResumeError) -> anyhow::Error {
+        anyhow::anyhow!("{e}")
+    }
+}
+
 /// The assembled system.
 pub struct WarpCortex {
     pub cfg: CortexConfig,
@@ -337,6 +389,10 @@ pub struct WarpCortex {
     /// The unified decode scheduler: every main and side decode step
     /// flows through it as one fused device op per tick.
     pub step: Arc<StepScheduler>,
+    /// The durable session store (fourth memory tier) when
+    /// `CortexConfig::store_path` is set: checkpoint/resume records plus
+    /// the resident parked tickets that preempt-to-disk can sacrifice.
+    pub store: Option<Arc<SessionStore>>,
     pub tracker: Arc<MemoryTracker>,
     pub main_throughput: Throughput,
     pub step_latency: Histogram,
@@ -393,6 +449,13 @@ impl WarpCortex {
         pool.set_tiering(cfg.kv_pool.quantize_parked, cfg.kv_pool.host_slab_blocks);
         let prism = Prism::with_pool(engine.clone(), tracker.clone(), pool.clone());
         let synapse = Synapse::new(tracker.clone());
+        // The durable tier opens (and crash-recovers) before any seam can
+        // observe it: the admission gate and the preempt path both hold a
+        // reference from the first tick.
+        let store = match &cfg.store_path {
+            Some(path) => Some(Arc::new(SessionStore::open(path)?)),
+            None => None,
+        };
         let gate = Arc::new(Gate::new(cfg.gate_theta.unwrap_or(engine.gate_theta)));
         let injector = Arc::new(Injector::new(cfg.inject_reserve_rows));
         // The step scheduler's three seams, production-wired:
@@ -426,13 +489,24 @@ impl WarpCortex {
         };
         let session_admit: AdmitGate = {
             let pool = pool.clone();
+            let store = store.clone();
             let bt = pool.block_tokens();
             // Session admission guards the prefill burst: a fresh session's
             // prompt can occupy up to `prefill_len` rows (+1 block of slack
             // for its first generated rows).  Growth beyond that is
-            // backpressured per-step by the pool's own rent path.
+            // backpressured per-step by the pool's own rent path.  With a
+            // durable store, resident parked sessions are a fourth
+            // admission tier behind `can_admit`'s hot/evictable/host
+            // headroom: they can be preempted to disk, so their presence
+            // alone admits the arrival — `open_session`'s reservation loop
+            // does the actual preemption on the caller thread (this gate
+            // runs under the scheduler's session-table lock and must stay
+            // lock-free and IO-free).
             let prefill_blocks = (engine.caps().prefill_len + bt - 1) / bt + 1;
-            Arc::new(move || pool.can_admit(prefill_blocks))
+            Arc::new(move || {
+                pool.can_admit(prefill_blocks)
+                    || store.as_ref().is_some_and(|s| s.parked_resident() > 0)
+            })
         };
         let step = StepScheduler::new(
             StepConfig {
@@ -468,6 +542,7 @@ impl WarpCortex {
             gate,
             injector,
             step,
+            store,
             tracker,
             main_throughput: Throughput::new(),
             step_latency: Histogram::new(),
@@ -530,6 +605,27 @@ impl WarpCortex {
         Ok((ticket, out.last_logits, out.hidden_last))
     }
 
+    /// Reserve `blocks` of pool headroom, preempting hibernated-resident
+    /// sessions to disk (coldest first) until the reservation fits or no
+    /// preemptable session remains.  This is the preempt-to-disk admission
+    /// tier: a parked session's ticket drops (its record is already
+    /// durable — resume rebuilds it from the file), its blocks return to
+    /// the pool, and the arrival that would have shed with 503 admits
+    /// instead.  Runs on the caller thread — never under a scheduler lock
+    /// and never inside the fused tick.
+    fn reserve_or_preempt(&self, blocks: usize) -> Option<BlockReservation<'_>> {
+        loop {
+            match self.pool.try_reserve(blocks) {
+                Some(rsv) => return Some(rsv),
+                // Bounded: every iteration drops one resident ticket.
+                None => match &self.store {
+                    Some(store) if store.preempt_coldest() => continue,
+                    _ => return None,
+                },
+            }
+        }
+    }
+
     /// Open one serving session: admit it (blocking FIFO when the session
     /// slots or pool headroom are saturated), run the prefix-shared
     /// prefill, and return the incremental episode state machine.  S open
@@ -558,7 +654,7 @@ impl WarpCortex {
         // serves both the reservation sizing and the prefill.
         let ids = self.truncated_prompt_ids(prompt);
         let bt = self.pool.block_tokens();
-        let rsv = match self.pool.try_reserve(ids.len() / bt + 1) {
+        let rsv = match self.reserve_or_preempt(ids.len() / bt + 1) {
             Some(rsv) => rsv,
             None => {
                 // Reclassify this admission as a shed so the `sessions`
@@ -601,12 +697,17 @@ impl WarpCortex {
         Ok(CortexSession {
             pos: ticket.kv.len() as i32, // text position == cache rows so far
             cx: self,
+            // A fresh session's durable identity is its first permit id;
+            // resume issues new permits but keeps this id, so the client
+            // handle survives hibernation cycles.
+            durable_id: permit.id(),
             permit,
             ticket,
             prefill,
             router,
             sampler: Sampler::new(self.cfg.sampler.clone()),
             prompt: prompt.to_string(),
+            prompt_ids: ids,
             logits,
             hidden,
             pending,
@@ -618,6 +719,211 @@ impl WarpCortex {
             started: Instant::now(),
             done: false,
         })
+    }
+
+    /// Resume a checkpointed session by its durable id: re-admit it
+    /// through the scheduler (a fresh permit — the durable id survives),
+    /// rebuild its context, and return a live [`CortexSession`] whose next
+    /// token is bit-identical to what the never-interrupted session would
+    /// have produced (same logits, same sampler RNG position).
+    ///
+    /// Context rebuild is tiered like everything else:
+    ///
+    /// 1. **resident fast path** — the session hibernated in this process
+    ///    and escaped preemption: its parked ticket pages back from the
+    ///    cold host slab, no device recompute at all;
+    /// 2. **registry-covered rebuild** — the record's shared prefix
+    ///    re-attaches from the content-addressed registry by hash chain
+    ///    and only the private tail rows load from the file — zero
+    ///    re-prefill device ops;
+    /// 3. **full rebuild** — the registry no longer covers the prefix
+    ///    (evicted after preempt-to-disk dropped the last reference): one
+    ///    deterministic re-prefill of the prompt re-registers it, then the
+    ///    post-prompt tail loads from the file.
+    ///
+    /// `take` is single-use: a successful (or corrupt) resume consumes the
+    /// record; `Busy` re-retains it so the client can retry.
+    pub fn resume_session(
+        &self,
+        id: u64,
+    ) -> std::result::Result<CortexSession<'_>, ResumeError> {
+        let store = match &self.store {
+            Some(s) => s.clone(),
+            None => return Err(ResumeError::Unknown(id)),
+        };
+        // Re-admit before touching the record: a Busy here must not
+        // consume the single-use checkpoint.
+        let permit = self
+            .step
+            .open_session()
+            .map_err(|d| ResumeError::Session(SessionError::Busy(d.to_string())))?;
+        let rt = match store.take(id) {
+            Ok(rt) => rt,
+            Err(e) => {
+                permit.shed();
+                return Err(match e {
+                    StoreError::Unknown(id) => ResumeError::Unknown(id),
+                    other => ResumeError::Corrupt(other.to_string()),
+                });
+            }
+        };
+        let cp = rt.checkpoint;
+        // Tier 1: the hibernated ticket is still resident in this process.
+        let resident = rt
+            .resident
+            .and_then(|b| b.downcast::<AgentTicket>().ok().map(|b| *b));
+        let ticket = match resident {
+            Some(mut t) => match t.kv.resume_from_host() {
+                Ok(_) => Ok(t),
+                Err(e) => {
+                    // Host-slab page-in failed; the ticket is unusable but
+                    // the record still rebuilds — fall through to tier 2/3
+                    // after re-retaining it would double-count, so rebuild
+                    // directly from the in-hand checkpoint.
+                    log::debug!("resident resume page-in failed, rebuilding: {e:#}");
+                    drop(t);
+                    self.rebuild_ticket(&store, &cp)
+                }
+            },
+            None => self.rebuild_ticket(&store, &cp),
+        };
+        let ticket = match ticket {
+            Ok(t) => t,
+            Err(e) => {
+                permit.shed();
+                return Err(e);
+            }
+        };
+        debug_assert_eq!(ticket.kv.len(), cp.total_rows as usize);
+        // Restore the generation state machine exactly: sampler RNG +
+        // repetition window, last logits/hidden, positions.  The router
+        // re-feeds the transcript to rebuild its byte-level matcher state;
+        // its triggers already fired in the previous life and are
+        // discarded (their side agents were drained or cancelled then).
+        let mut router = Router::new(self.cfg.router.clone());
+        let _ = router.feed(&cp.prompt);
+        for b in cp.text.bytes() {
+            let _ = router.feed_byte(b);
+        }
+        let sampler = Sampler::restore(self.cfg.sampler.clone(), cp.rng_state, cp.recent);
+        Ok(CortexSession {
+            pos: cp.pos as i32,
+            cx: self,
+            durable_id: id,
+            permit,
+            ticket,
+            prefill: None,
+            router,
+            sampler,
+            prompt: cp.prompt,
+            prompt_ids: cp.prompt_ids,
+            logits: cp.logits,
+            hidden: cp.hidden,
+            pending: Vec::new(),
+            text: cp.text,
+            events: Vec::new(),
+            generated: cp.generated as usize,
+            max_tokens: cp.max_tokens as usize,
+            outstanding: 0,
+            started: Instant::now(),
+            done: false,
+        })
+    }
+
+    /// Tiers 2 and 3 of [`WarpCortex::resume_session`]: rebuild a context
+    /// from its durable record.  On `Busy` the record is re-checkpointed
+    /// (stays retained — the conservation ledger counts the original take
+    /// as a resume and this as a fresh checkpoint superseding nothing).
+    fn rebuild_ticket(
+        &self,
+        store: &SessionStore,
+        cp: &SessionCheckpoint,
+    ) -> std::result::Result<AgentTicket, ResumeError> {
+        let bt = self.pool.block_tokens();
+        let row = self.pool.row();
+        let n_layers = self.pool.n_layers();
+        let total_rows = cp.total_rows as usize;
+        let shared_rows = cp.shared_rows as usize;
+        let prompt_len = cp.prompt_ids.len();
+        let tail_rows = match total_rows.checked_sub(shared_rows) {
+            Some(t) => t,
+            None => {
+                return Err(ResumeError::Corrupt(format!(
+                    "shared_rows {shared_rows} exceeds total_rows {total_rows}"
+                )))
+            }
+        };
+        if shared_rows % bt != 0
+            || shared_rows > prompt_len
+            || prompt_len > total_rows
+            || cp.k_tail.len() != n_layers * tail_rows * row
+            || cp.v_tail.len() != cp.k_tail.len()
+        {
+            return Err(ResumeError::Corrupt(format!(
+                "checkpoint geometry inconsistent: shared {shared_rows} / prompt \
+                 {prompt_len} / total {total_rows} rows, tail {} + {} floats",
+                cp.k_tail.len(),
+                cp.v_tail.len()
+            )));
+        }
+        // Headroom for the rebuilt context, preempting parked sessions to
+        // disk like any other admission.
+        let rsv = match self.reserve_or_preempt(total_rows / bt + 1) {
+            Some(rsv) => rsv,
+            None => {
+                let _ = store.checkpoint(cp); // keep the session resumable
+                return Err(ResumeError::Session(SessionError::Busy(
+                    "kv pool headroom claimed by concurrent admissions".into(),
+                )));
+            }
+        };
+        let shared_blocks = shared_rows / bt;
+        let attempt = (|| -> Result<AgentTicket> {
+            // Tier 2: re-attach the shared prefix by hash chain — the
+            // checkpoint stored no shared bytes, just the chain keys.
+            let mut ticket = self.prism.register(AgentKind::Main)?;
+            let hashes = self
+                .pool
+                .prefix_hashes(crate::model::PROMPT_CHAIN_SALT, &cp.prompt_ids);
+            let covered = if shared_blocks > 0 && shared_blocks <= hashes.len() {
+                ticket
+                    .kv
+                    .attach_shared_prefix(&hashes[..shared_blocks], &cp.prompt_ids[..shared_rows])
+                    .unwrap_or(0)
+            } else {
+                0
+            };
+            if covered == shared_rows {
+                ticket.kv.append_rows(tail_rows, &cp.k_tail, &cp.v_tail)?;
+                return Ok(ticket);
+            }
+            // Tier 3: the registry evicted the prefix — one deterministic
+            // re-prefill reproduces (and re-registers) the prompt rows
+            // bit-identically, then only the post-prompt tail loads from
+            // the record (skipping the prompt rows the prefill re-covered).
+            drop(ticket);
+            let (mut ticket, _logits, _hidden) = self.start_main_ids(&cp.prompt_ids)?;
+            let skip = prompt_len - shared_rows;
+            let n_app = total_rows - prompt_len;
+            let seg = tail_rows * row;
+            let mut k = Vec::with_capacity(n_layers * n_app * row);
+            let mut v = Vec::with_capacity(n_layers * n_app * row);
+            for layer in 0..n_layers {
+                let base = layer * seg;
+                k.extend_from_slice(&cp.k_tail[base + skip * row..base + seg]);
+                v.extend_from_slice(&cp.v_tail[base + skip * row..base + seg]);
+            }
+            ticket.kv.append_rows(n_app, &k, &v)?;
+            Ok(ticket)
+        })();
+        drop(rsv); // the context's rows are rented (or the rebuild failed)
+        match attempt {
+            Ok(t) => Ok(t),
+            Err(e) => {
+                let _ = store.checkpoint(cp); // keep the session resumable
+                Err(ResumeError::Session(SessionError::Failed(e)))
+            }
+        }
     }
 
     /// Run one full episode: generate up to `max_tokens` from `prompt`,
@@ -723,6 +1029,13 @@ pub struct CortexSession<'c> {
     router: Router,
     sampler: Sampler,
     prompt: String,
+    /// Truncated prompt token ids (the one admission-time encode): the
+    /// prefix-registry chain keys a durable checkpoint stores instead of
+    /// the shared blocks' bytes.
+    prompt_ids: Vec<i32>,
+    /// Durable identity across hibernate/resume cycles (the first permit's
+    /// id; later permits differ but the store key does not).
+    durable_id: u64,
     logits: Vec<f32>,
     hidden: Vec<f32>,
     /// Triggers seen but not yet routed (prompt triggers before step 1).
@@ -762,7 +1075,115 @@ impl<'c> CortexSession<'c> {
     /// blocks are untouched — they demote through the pool's own
     /// offload-under-pressure path.  Returns the blocks parked.
     pub fn park_to_host(&mut self) -> Result<usize> {
+        // Checkpoint-on-park policy: a quiescent session's durable record
+        // lands before its blocks leave the hot tier, so a crash (or a
+        // later preempt-to-disk) can't strand it.
+        if self.cx.cfg.checkpoint_on_park && self.cx.store.is_some() {
+            self.checkpoint()?;
+        }
         self.ticket.kv.park_to_host()
+    }
+
+    /// The session's durable store identity — stable across
+    /// hibernate/resume cycles (unlike [`CortexSession::id`], which is the
+    /// current scheduler permit).  This is the id `POST
+    /// /sessions/{id}/resume` takes.
+    pub fn durable_id(&self) -> u64 {
+        self.durable_id
+    }
+
+    /// Whether the serve layer should hibernate this session (checkpoint
+    /// it and hand the ticket to the store as a preempt-to-disk
+    /// candidate) when its client disconnects mid-stream, instead of
+    /// dropping it outright.  True only with a configured store and the
+    /// `CortexConfig::checkpoint_on_disconnect` policy on.
+    pub fn hibernate_on_disconnect(&self) -> bool {
+        self.cx.cfg.checkpoint_on_disconnect && self.cx.store.is_some()
+    }
+
+    /// Write this session's durable checkpoint record: identity, sampler
+    /// RNG + repetition window, last logits/hidden, the block-table chain
+    /// split into registry-shared prefix (stored as hash-chain keys, not
+    /// bytes) and private tail rows, and the synapse snapshot version.
+    /// After a crash, [`WarpCortex::resume_session`] rebuilds the session
+    /// from this record with bit-identical next-token logits.
+    pub fn checkpoint(&mut self) -> Result<()> {
+        let Some(store) = &self.cx.store else {
+            bail!("checkpointing requires CortexConfig::store_path");
+        };
+        // A mid-chunked-prefill session finishes coverage first: the
+        // checkpoint captures a commit point, not a half-fed prompt.
+        self.ensure_prefilled()?;
+        let bt = self.cx.pool.block_tokens();
+        let len = self.ticket.kv.len();
+        // Tier tag recorded before page-in; `host_slice` reads require the
+        // rows resident, so an offloaded session pages back for the copy
+        // (hibernate re-parks right after).
+        let offloaded = self.ticket.kv.offloaded_blocks();
+        if offloaded > 0 {
+            self.ticket.kv.resume_from_host()?;
+        }
+        // Only *whole* leading shared blocks resume by hash chain; a
+        // clamp below len never happens in practice (registry blocks are
+        // full), but the floor keeps the geometry sound if it ever did.
+        let mut shared_rows = self.ticket.kv.leading_shared_blocks() * bt;
+        if shared_rows > len {
+            shared_rows = (len / bt) * bt;
+        }
+        let shared_rows = shared_rows.min(self.prompt_ids.len() / bt * bt);
+        let n_layers = self.cx.pool.n_layers();
+        let row = self.cx.pool.row();
+        let mut k_tail = Vec::with_capacity(n_layers * (len - shared_rows) * row);
+        let mut v_tail = Vec::with_capacity(k_tail.capacity());
+        for layer in 0..n_layers {
+            k_tail.extend(self.ticket.kv.k_slice(layer, shared_rows, len));
+            v_tail.extend(self.ticket.kv.v_slice(layer, shared_rows, len));
+        }
+        let (rng_state, recent) = self.sampler.save_state();
+        let cp = SessionCheckpoint {
+            id: self.durable_id,
+            rng_state,
+            synapse_version: self.cx.synapse.version(),
+            generated: self.generated as u64,
+            max_tokens: self.max_tokens as u64,
+            pos: self.pos as i64,
+            shared_rows: shared_rows as u32,
+            total_rows: len as u32,
+            offloaded_blocks: offloaded as u32,
+            prompt: self.prompt.clone(),
+            text: self.text.clone(),
+            prompt_ids: self.prompt_ids.clone(),
+            recent,
+            logits: self.logits.clone(),
+            hidden: self.hidden.clone(),
+            k_tail,
+            v_tail,
+        };
+        store.checkpoint(&cp)?;
+        Ok(())
+    }
+
+    /// Hibernate: checkpoint the durable record, park the context to the
+    /// cold host slab, and hand the ticket to the store as a
+    /// preempt-to-disk candidate.  Consumes the session — the permit drops
+    /// here, freeing the admission slot for a parked arrival; in-flight
+    /// side tasks are discarded like any other session drop.  Returns the
+    /// durable id [`WarpCortex::resume_session`] takes.
+    pub fn hibernate(mut self) -> Result<u64> {
+        if self.cx.store.is_none() {
+            bail!("hibernation requires CortexConfig::store_path");
+        }
+        self.ensure_prefilled()?;
+        self.checkpoint()?;
+        self.ticket.kv.park_to_host()?;
+        let id = self.durable_id;
+        // No `Drop` impl on CortexSession, so destructuring moves the
+        // ticket out; every other field (permit included) drops here.
+        let CortexSession { cx, ticket, .. } = self;
+        if let Some(store) = &cx.store {
+            store.park_resident(id, Box::new(ticket));
+        }
+        Ok(id)
     }
 
     /// Page this session's parked blocks back to the hot tier — the

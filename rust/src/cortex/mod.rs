@@ -12,6 +12,7 @@
 //! | `batcher`   | 4       | legacy linger-based dynamic batcher (subsumed by `step` on the serving path) |
 //! | `memory`    | 5       | Table-1/Table-2 byte accounting (resident-block bytes) + projection |
 //! | `baseline`  | 5       | the Standard Architecture comparison column |
+//! | `store`     | 5       | durable session tier: crash-safe single-file checkpoint store behind hibernate / resume / preempt-to-disk |
 //! | `cortex`    | Fig. 1  | the assembled orchestrator; governs the shared [`crate::model::KvPool`] and its knobs |
 //!
 //! Context memory is demand-paged: there is exactly one
@@ -86,7 +87,8 @@
 //!
 //! # Memory tiers
 //!
-//! KV blocks occupy one of three tiers, and every block's budget charge
+//! KV blocks occupy one of four tiers (see [`crate::architecture`] for
+//! the operator-facing walkthrough), and every block's budget charge
 //! follows it:
 //!
 //! | tier | representation | who lives here | cost/block |
@@ -94,6 +96,7 @@
 //! | hot  | fp32, device-resident | active caches, attached shared prefixes | `block_bytes` |
 //! | warm | int8 + per-row fp32 scales ([`CortexConfig::kv_pool`] `quantize_parked`) | parked registry entries (refcount 0) | `q8_block_bytes` (~3.5× denser) |
 //! | cold | verbatim payload in the host slab (`host_slab_blocks`) | parked sessions ([`cortex::CortexSession::park_to_host`]), cap-pressured registry entries | 0 device bytes |
+//! | durable | CRC-checked records in the single-file [`store`] (`store_path`) | checkpointed / hibernated / preempted sessions | 0 bytes of RAM |
 //!
 //! Demotion: release-to-parked quantizes (lossy, bounded by max|x|/254
 //! per row); cap pressure and explicit parking spill to the host slab
@@ -112,6 +115,28 @@
 //! payloads under `HostKv`, with the swap conservation law
 //! (`swap_out == swap_in + swap_dropped + host_slab_bytes`) re-proved by
 //! the invariant sanitizer.
+//!
+//! Sessions are **durable** since PR 10: with
+//! [`cortex::CortexConfig::store_path`] set, the fourth tier gives a
+//! session a life beyond its TCP connection.  The lifecycle:
+//! [`cortex::CortexSession::checkpoint`] commits a crash-safe record
+//! (identity, sampler RNG state, last logits, and the block chain split
+//! into registry hash-chain keys + private tail rows) to the append-only
+//! [`store::SessionStore`]; [`cortex::CortexSession::hibernate`]
+//! checkpoints, parks the context to the cold slab, frees the admission
+//! slot, and leaves the ticket resident as a *preempt-to-disk candidate*;
+//! under pool pressure a new admission preempts the coldest such ticket
+//! (its record is already durable) instead of shedding with 503; and
+//! [`cortex::WarpCortex::resume_session`] — `POST /sessions/{id}/resume`
+//! at the serve layer — rebuilds the session with bit-identical
+//! next-token logits via three rebuild tiers (resident page-in /
+//! registry-covered attach with zero re-prefill device ops / full
+//! deterministic re-prefill).  The store's ledger obeys its own
+//! conservation law (`checkpoints == resumes + superseded +
+//! corrupt_records_skipped + retained`, re-proved by
+//! [`store::SessionStore::check_invariants`]), and
+//! `benches/durable_sessions.rs` gates the zero-re-prefill resume and
+//! the preempt-for-admission path in CI.
 //!
 //! # Correctness tooling
 //!
@@ -190,6 +215,7 @@
 //! | tick loop never blocks (IO / sleep / high-rank lock) | `hot-tick` (primary, waivers audited) | — | latency benches catch regressions indirectly |
 //! | pool block / byte / registry conservation | `gauge-lineage` (gauges reach `/stats` + a check) | [`crate::model::KvPool::check_invariants`] (primary) | pool-churn / CoW / tiering proptests call it |
 //! | session-gauge conservation (`admitted == completed + active`, …) | `gauge-lineage` | [`step::StepScheduler::check_invariants`] (primary) | multi-session hammer reconciles `/stats` |
+//! | store record conservation (`checkpoints == resumes + superseded + corrupt_records_skipped + retained`) | `gauge-lineage` | [`store::SessionStore::check_invariants`] (called by the store tests + `benches/durable_sessions.rs`) | crash-safety proptest tracks a mirror model (primary) |
 //! | tick counters (`main_ticks <= ticks`) | `gauge-lineage` | `check_invariants` tick-conservation law (primary) | fused-scheduling proptests |
 //! | static rank table == runtime `LockRank` | CLI exits 2 on drift (primary) | — | `rust/tests/audit_roundtrip.rs` cross-check |
 //! | legacy token rules keep firing identically | the 5 rules themselves | — | round-trip vs the frozen legacy scanner |
@@ -212,6 +238,7 @@ pub mod prism;
 pub mod router;
 pub mod scheduler;
 pub mod step;
+pub mod store;
 pub mod synapse;
 
 pub use agent::{AgentCache, SideAgent, SideContext, SideOutcome, SideTask, StepAgentCtx};
@@ -219,7 +246,7 @@ pub use batcher::Batcher;
 pub use baseline::StandardArchitecture;
 pub use capacity::{Bottleneck, CapacityError, CapacityModel, ComputeCosts, PrefillPoint};
 pub use cortex::{
-    CortexConfig, CortexSession, EpisodeReport, Event, SessionError, WarpCortex,
+    CortexConfig, CortexSession, EpisodeReport, Event, ResumeError, SessionError, WarpCortex,
 };
 pub use gate::{Gate, GateDecision};
 pub use inject::Injector;
@@ -231,4 +258,5 @@ pub use step::{
     AdmitGate, AgentSpawner, FusedExec, MainStepOut, SessionDenied, SessionPermit, SessionStats,
     StepConfig, StepScheduler, StepSeams, StepStats,
 };
+pub use store::{ResumeTicket, SessionCheckpoint, SessionStore, StoreError, StoreStats};
 pub use synapse::{adaptive_subset, SeedMode, Synapse, SynapseSnapshot};

@@ -99,6 +99,7 @@ pub struct StepSeams {
     /// re-quantize or spill to the host slab under pressure — a session
     /// is shed only when the hot tier AND both parking tiers are
     /// exhausted.
+    pub session_admit: AdmitGate,
     /// Optional tick-boundary sanitizer, run after each tick's sweep in
     /// debug builds only (release ticks pay nothing).  A violation
     /// panics the loop — in debug, corrupted bookkeeping is a bug to

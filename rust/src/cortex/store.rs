@@ -1,0 +1,1265 @@
+//! Durable session store — the fourth memory tier (hot fp32 → warm int8 →
+//! cold host slab → **durable file**), giving sessions a life beyond their
+//! TCP connection.  A checkpointed session can be dropped entirely (its
+//! permit, ticket and pool blocks released) and later rebuilt bit-identically
+//! via `POST /sessions/{id}/resume`; under pool pressure the admission path
+//! preempts the coldest parked session to disk instead of shedding a new
+//! arrival with 503.  Single embedded file, no external DB dependencies —
+//! the "SQLite for agent memory" idiom with the schema cut down to exactly
+//! what resume needs.
+//!
+//! # On-disk format
+//!
+//! ```text
+//! offset 0    ┌───────────────────────────────┐
+//!             │ header slot A (32 bytes)      │  magic "WARPSTOR" · generation
+//! offset 32   ├───────────────────────────────┤  u64 · committed-tail u64 ·
+//!             │ header slot B (32 bytes)      │  crc32 of the first 24 bytes
+//! offset 64   ├───────────────────────────────┤
+//!             │ record: len u32 · id u64 ·    │  append-only checkpoint log;
+//!             │   payload-crc u32 ·           │  payload is the
+//!             │   header-crc u32 ·            │  [`SessionCheckpoint`] codec;
+//!             │   payload (len bytes)         │  header-crc covers the first
+//!             ├───────────────────────────────┤  16 header bytes so the id
+//!             │ record …                      │  survives payload corruption
+//!             └───────────────────────────────┘
+//! ```
+//!
+//! # Commit protocol (atomic header flip)
+//!
+//! A checkpoint appends its record at the committed tail, syncs, then
+//! writes the **alternate** header slot with `generation + 1` and the new
+//! tail, and syncs again.  Recovery takes the highest-generation slot whose
+//! CRC validates, so every crash window resolves cleanly:
+//!
+//! * crash before the record sync — the old header still points below the
+//!   torn bytes; they are invisible and the next append overwrites them;
+//! * crash mid-header-write — the slot being written fails its CRC and the
+//!   other slot (the previous commit) wins;
+//! * crash after the header sync — the record is durable and indexed.
+//!
+//! # Corruption recovery
+//!
+//! Opening a store scans `[64, committed_tail)` rebuilding the id → record
+//! index (the latest record per session id wins; earlier ones count as
+//! `superseded`).  The record header carries the session id under its own
+//! CRC, separate from the payload CRC, so corruption resolves without
+//! resurrecting stale state:
+//!
+//! * **payload CRC fails, header CRC holds** — the id is still trusted; the
+//!   record counts as `corrupt_records_skipped` *and still supersedes* any
+//!   earlier record of the same id, so `take` reports that session as
+//!   [`StoreError::Unknown`] rather than silently rolling it back to a
+//!   superseded checkpoint;
+//! * **header CRC fails (or its length is insane)** — nothing after this
+//!   point can be framed; the scan ends and the remaining committed region
+//!   counts as one corrupt record.  Records indexed *before* the damage
+//!   stay resumable (last-good-checkpoint semantics — the only window in
+//!   which an earlier checkpoint can be served, bounded by the 20-byte
+//!   header as the corruption target).
+//!
+//! Bytes past the committed tail are a torn append and are ignored without
+//! counting.  Corruption is therefore always *contained*: a flipped bit
+//! costs exactly the records it touches ([`StoreError::Corrupt`] at resume
+//! time), never a panic — and `take` is single-use, so a resumed id cannot
+//! be resumed again until it is checkpointed again.
+//!
+//! # Conservation law
+//!
+//! Every record this store handle has ever known (`checkpoints`: appended
+//! through it, or encountered in the recovery scan) ends in exactly one of
+//! four states, which [`SessionStore::check_invariants`] re-proves:
+//!
+//! ```text
+//! checkpoints == resumes + superseded + corrupt_records_skipped + retained
+//! ```
+//!
+//! (The preempt path never mints or destroys records — `preempt_to_disk`
+//! drops a *resident* parked ticket whose record is already durable, so it
+//! moves nothing across the ledger.)
+//!
+//! # Locking
+//!
+//! The store's mutable state sits behind one [`RankedMutex`] at
+//! [`LockRank::Registry`] (outermost, process-lifetime registry — the same
+//! level as the serve layer's accept queue, which is only ever held as a
+//! statement temporary).  Dropping a preempted ticket under the store lock
+//! releases prism (`PrismAgents`) and pool (`PoolState`) state, both
+//! strictly below `Registry` — acquire-descending holds.  The admission
+//! gate reads [`SessionStore::parked_resident`] through an atomic, never
+//! the lock: it runs under the scheduler's `SessionTable` lock, which ranks
+//! *below* `Registry` and must not acquire upward.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::sync::{LockRank, RankedMutex};
+
+/// Magic prefix of both header slots.
+const MAGIC: &[u8; 8] = b"WARPSTOR";
+/// One header slot: magic 8 · generation 8 · tail 8 · crc 4 · pad 4.
+const SLOT_BYTES: u64 = 32;
+/// Two slots; records start here.
+const HEADER_BYTES: u64 = 2 * SLOT_BYTES;
+/// Per-record header: len u32 · id u64 · payload-crc u32 · header-crc u32.
+const RECORD_HEADER_BYTES: u64 = 20;
+/// Hard cap on one record's payload — lengths beyond this are treated as
+/// scan-ending corruption, bounding what a flipped length byte can allocate.
+pub const MAX_RECORD_BYTES: u32 = 256 * 1024 * 1024;
+
+/// Typed store failures.  `Corrupt` is scoped to the record it names — the
+/// store stays serviceable and other records stay resumable.
+#[derive(Debug)]
+pub enum StoreError {
+    /// The record failed its CRC or decode; it has been dropped from the
+    /// index (counted in `corrupt_records_skipped`).
+    Corrupt(String),
+    /// No retained record under this session id (never checkpointed,
+    /// already resumed, or lost to corruption).
+    Unknown(u64),
+    /// A checkpoint payload over [`MAX_RECORD_BYTES`].
+    TooLarge(usize),
+    /// Underlying file I/O failed.
+    Io(String),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Corrupt(m) => write!(f, "corrupt store record: {m}"),
+            StoreError::Unknown(id) => write!(f, "no checkpoint for session {id}"),
+            StoreError::TooLarge(n) => {
+                write!(f, "checkpoint payload {n} bytes > cap {MAX_RECORD_BYTES}")
+            }
+            StoreError::Io(m) => write!(f, "store io: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+fn io_err(e: std::io::Error) -> StoreError {
+    StoreError::Io(e.to_string())
+}
+
+/// Bitwise reflected IEEE CRC-32 (no table — the store is not the hot
+/// path, and the 256-entry table would be the only one in the crate).
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// ── Checkpoint payload codec ────────────────────────────────────────────
+
+/// Everything resume needs, captured at a commit point: identity, sampler
+/// and RNG state, generation progress, and the block-table chain split
+/// into the registry-shared prefix (re-attached by hash chain at resume —
+/// the shared *bytes* are never re-stored) and the private tail rows
+/// (serialized fp32, exactly the `[L, n, row]` layout `append_rows`
+/// expects back).
+#[derive(Debug, Clone)]
+pub struct SessionCheckpoint {
+    /// Durable session id — the scheduler permit id at first open; kept
+    /// across resume cycles so the client's handle stays stable.
+    pub id: u64,
+    /// Sampler RNG position ([`crate::util::XorShift::state`]).
+    pub rng_state: u64,
+    /// Synapse snapshot version current at checkpoint (informational —
+    /// the synapse is shared global state and is not rolled back).
+    pub synapse_version: u64,
+    /// Tokens generated so far.
+    pub generated: u64,
+    /// Generation budget.
+    pub max_tokens: u64,
+    /// Text position (== cache rows at checkpoint).
+    pub pos: i64,
+    /// Leading rows held *by reference* from the prefix registry; resume
+    /// re-attaches them via the content-addressed hash chain.
+    pub shared_rows: u32,
+    /// Total cache rows; `total_rows - shared_rows` private tail rows ride
+    /// in `k_tail`/`v_tail`.
+    pub total_rows: u32,
+    /// Blocks parked in the cold host slab when the session hibernated
+    /// (tier tag — the payload itself is checkpointed hot).
+    pub offloaded_blocks: u32,
+    /// Original prompt (router re-feed + prefix-chain keys).
+    pub prompt: String,
+    /// Visible text generated so far (router re-feed + client catch-up).
+    pub text: String,
+    /// Truncated prompt token ids — the prefix-chain keys.
+    pub prompt_ids: Vec<i32>,
+    /// Sampler repetition window.
+    pub recent: Vec<i32>,
+    /// Last logits (next sample draws from these — bit-exact).
+    pub logits: Vec<f32>,
+    /// Last hidden state (gate evaluation + synapse extraction input).
+    pub hidden: Vec<f32>,
+    /// Private tail K rows, layer-major `[L, n, row]`.
+    pub k_tail: Vec<f32>,
+    /// Private tail V rows, layer-major `[L, n, row]`.
+    pub v_tail: Vec<f32>,
+}
+
+/// Codec version byte leading every payload.
+const CODEC_VERSION: u8 = 1;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_vec_i32(out: &mut Vec<u8>, v: &[i32]) {
+    put_u32(out, v.len() as u32);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_vec_f32(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len() as u32);
+    for x in v {
+        // bit-exact: f32 travels as its IEEE bits, never reformatted
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a record payload.  Every
+/// overrun is a typed [`StoreError::Corrupt`], never a panic — the decode
+/// path is exactly where flipped bits land.
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                StoreError::Corrupt(format!(
+                    "payload truncated: need {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.buf.len()
+                ))
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, StoreError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, StoreError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, StoreError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn i64(&mut self) -> Result<i64, StoreError> {
+        Ok(self.u64()? as i64)
+    }
+
+    /// Element count for a 4-byte-element vector, pre-validated against
+    /// the remaining payload so a corrupt count cannot drive a huge
+    /// allocation.
+    fn count4(&mut self) -> Result<usize, StoreError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(4) > self.buf.len() - self.pos {
+            return Err(StoreError::Corrupt(format!(
+                "vector count {n} exceeds remaining payload"
+            )));
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self) -> Result<String, StoreError> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| StoreError::Corrupt("string field is not UTF-8".into()))
+    }
+
+    fn vec_i32(&mut self) -> Result<Vec<i32>, StoreError> {
+        let n = self.count4()?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.take(4)?;
+            v.push(i32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        Ok(v)
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>, StoreError> {
+        let n = self.count4()?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.take(4)?;
+            v.push(f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+        }
+        Ok(v)
+    }
+}
+
+impl SessionCheckpoint {
+    /// Serialize to the record payload (little-endian; floats as IEEE
+    /// bits, so encode→decode round-trips bit-exactly).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            64 + self.prompt.len()
+                + self.text.len()
+                + 4 * (self.prompt_ids.len() + self.recent.len())
+                + 4 * (self.logits.len()
+                    + self.hidden.len()
+                    + self.k_tail.len()
+                    + self.v_tail.len()),
+        );
+        out.push(CODEC_VERSION);
+        put_u64(&mut out, self.id);
+        put_u64(&mut out, self.rng_state);
+        put_u64(&mut out, self.synapse_version);
+        put_u64(&mut out, self.generated);
+        put_u64(&mut out, self.max_tokens);
+        put_u64(&mut out, self.pos as u64);
+        put_u32(&mut out, self.shared_rows);
+        put_u32(&mut out, self.total_rows);
+        put_u32(&mut out, self.offloaded_blocks);
+        put_str(&mut out, &self.prompt);
+        put_str(&mut out, &self.text);
+        put_vec_i32(&mut out, &self.prompt_ids);
+        put_vec_i32(&mut out, &self.recent);
+        put_vec_f32(&mut out, &self.logits);
+        put_vec_f32(&mut out, &self.hidden);
+        put_vec_f32(&mut out, &self.k_tail);
+        put_vec_f32(&mut out, &self.v_tail);
+        out
+    }
+
+    /// Decode a record payload.  Any truncation, bad count or version
+    /// mismatch is [`StoreError::Corrupt`].
+    pub fn decode(bytes: &[u8]) -> Result<SessionCheckpoint, StoreError> {
+        let mut r = ByteReader { buf: bytes, pos: 0 };
+        let version = r.u8()?;
+        if version != CODEC_VERSION {
+            return Err(StoreError::Corrupt(format!(
+                "unknown checkpoint codec version {version}"
+            )));
+        }
+        Ok(SessionCheckpoint {
+            id: r.u64()?,
+            rng_state: r.u64()?,
+            synapse_version: r.u64()?,
+            generated: r.u64()?,
+            max_tokens: r.u64()?,
+            pos: r.i64()?,
+            shared_rows: r.u32()?,
+            total_rows: r.u32()?,
+            offloaded_blocks: r.u32()?,
+            prompt: r.string()?,
+            text: r.string()?,
+            prompt_ids: r.vec_i32()?,
+            recent: r.vec_i32()?,
+            logits: r.vec_f32()?,
+            hidden: r.vec_f32()?,
+            k_tail: r.vec_f32()?,
+            v_tail: r.vec_f32()?,
+        })
+    }
+}
+
+/// Frame one record: CRC-protected header (so the id survives payload
+/// corruption) followed by the payload.
+fn encode_record(id: u64, payload: &[u8]) -> Vec<u8> {
+    let mut rec = Vec::with_capacity(RECORD_HEADER_BYTES as usize + payload.len());
+    put_u32(&mut rec, payload.len() as u32);
+    put_u64(&mut rec, id);
+    put_u32(&mut rec, crc32(payload));
+    let hdr_crc = crc32(&rec[0..16]);
+    put_u32(&mut rec, hdr_crc);
+    rec.extend_from_slice(payload);
+    rec
+}
+
+/// Parse a record header at `raw[off..]`: `(len, id, payload_crc)` if the
+/// header CRC validates, else `None` (the scan cannot frame past it).
+fn decode_record_header(raw: &[u8], off: usize) -> Option<(u32, u64, u32)> {
+    let hdr = raw.get(off..off + RECORD_HEADER_BYTES as usize)?;
+    let hdr_crc = u32::from_le_bytes([hdr[16], hdr[17], hdr[18], hdr[19]]);
+    if crc32(&hdr[0..16]) != hdr_crc {
+        return None;
+    }
+    let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+    let mut id = [0u8; 8];
+    id.copy_from_slice(&hdr[4..12]);
+    let payload_crc = u32::from_le_bytes([hdr[12], hdr[13], hdr[14], hdr[15]]);
+    Some((len, u64::from_le_bytes(id), payload_crc))
+}
+
+// ── Store gauges ────────────────────────────────────────────────────────
+
+/// Store gauges (the `store` block of `/stats` and `/metrics`).  The
+/// ledger counters obey the conservation law re-proved by
+/// [`SessionStore::check_invariants`].
+#[derive(Debug, Clone, Default)]
+pub struct StoreStats {
+    /// Records known to this handle: appended through it + found live or
+    /// corrupt in the recovery scan.
+    pub checkpoints: u64,
+    /// Records taken for resume (single-use: taking removes the entry).
+    pub resumes: u64,
+    /// Resident parked tickets dropped to free pool headroom for a new
+    /// admission (their records stay durable — this moves nothing on the
+    /// record ledger).
+    pub preempt_to_disk: u64,
+    /// Committed file bytes (header + record log through the tail).
+    pub store_bytes: u64,
+    /// Records dropped to contained corruption (CRC/decode failure).
+    pub corrupt_records_skipped: u64,
+    /// Records currently live in the index, resumable.
+    pub retained: u64,
+    /// Records replaced by a newer checkpoint of the same session id.
+    pub superseded: u64,
+    /// Parked sessions whose ticket is still resident in memory (the
+    /// preempt-to-disk candidates).  Read lock-free by the admission gate.
+    pub parked_resident: u64,
+}
+
+/// A hibernated session's in-memory remainder: the opaque parked ticket
+/// (blocks in the cold host slab) plus its park order for coldest-first
+/// preemption.
+struct Parked {
+    state: Box<dyn Any + Send>,
+    seq: u64,
+}
+
+struct StoreInner {
+    file: File,
+    path: PathBuf,
+    /// Committed log tail (next append offset).
+    tail: u64,
+    /// Header generation of the last commit.
+    generation: u64,
+    /// session id → (record offset, payload length) of the latest record.
+    index: HashMap<u64, (u64, u32)>,
+    /// Hibernated-but-resident tickets, preemptable to disk.
+    resident: HashMap<u64, Parked>,
+    next_seq: u64,
+}
+
+/// The crash-safe single-file session store.  One per [`super::WarpCortex`]
+/// when `CortexConfig::store_path` is set; see the module docs for the
+/// format, the commit protocol and the conservation law.
+pub struct SessionStore {
+    inner: RankedMutex<StoreInner>,
+    // Ledger counters live outside the lock so the admission gate (which
+    // runs under the scheduler's SessionTable lock) and /stats can read
+    // them without acquiring Registry rank.  `stats()` still snapshots
+    // under the lock so the conservation law is checked against a
+    // consistent cut.
+    checkpoints: AtomicU64,
+    resumes: AtomicU64,
+    preempt_to_disk: AtomicU64,
+    store_bytes: AtomicU64,
+    corrupt_records_skipped: AtomicU64,
+    retained: AtomicU64,
+    superseded: AtomicU64,
+    parked_resident: AtomicU64,
+}
+
+/// What [`SessionStore::take`] hands back: the decoded checkpoint plus, on
+/// the fast path, the still-resident parked ticket (downcast by the cortex
+/// to its `AgentTicket`).
+pub struct ResumeTicket {
+    pub checkpoint: SessionCheckpoint,
+    pub resident: Option<Box<dyn Any + Send>>,
+}
+
+fn encode_slot(generation: u64, tail: u64) -> [u8; SLOT_BYTES as usize] {
+    let mut slot = [0u8; SLOT_BYTES as usize];
+    slot[0..8].copy_from_slice(MAGIC);
+    slot[8..16].copy_from_slice(&generation.to_le_bytes());
+    slot[16..24].copy_from_slice(&tail.to_le_bytes());
+    let crc = crc32(&slot[0..24]);
+    slot[24..28].copy_from_slice(&crc.to_le_bytes());
+    slot
+}
+
+/// (generation, tail) of a slot if its magic and CRC validate.
+fn decode_slot(raw: &[u8]) -> Option<(u64, u64)> {
+    if raw.len() < SLOT_BYTES as usize || &raw[0..8] != MAGIC {
+        return None;
+    }
+    let crc = u32::from_le_bytes([raw[24], raw[25], raw[26], raw[27]]);
+    if crc32(&raw[0..24]) != crc {
+        return None;
+    }
+    let mut g = [0u8; 8];
+    g.copy_from_slice(&raw[8..16]);
+    let mut t = [0u8; 8];
+    t.copy_from_slice(&raw[16..24]);
+    Some((u64::from_le_bytes(g), u64::from_le_bytes(t)))
+}
+
+impl SessionStore {
+    /// Open (or create) the store at `path`, running the recovery scan.
+    /// See the module docs for how torn tails, bad CRCs and insane lengths
+    /// are contained; none of them fail the open.
+    pub fn open(path: impl AsRef<Path>) -> Result<SessionStore, StoreError> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&path)
+            .map_err(io_err)?;
+        let mut raw = Vec::new();
+        file.seek(SeekFrom::Start(0)).map_err(io_err)?;
+        file.read_to_end(&mut raw).map_err(io_err)?;
+
+        let mut checkpoints = 0u64;
+        let mut corrupt = 0u64;
+        let mut superseded = 0u64;
+        let mut index: HashMap<u64, (u64, u32)> = HashMap::new();
+
+        // Highest-generation valid header slot wins; neither valid means a
+        // fresh (or non-store) file — initialize generation 0 / empty log.
+        // The double-write protocol guarantees a real store always keeps
+        // at least one valid slot, so reinitialization cannot orphan data.
+        let slot_a = decode_slot(&raw);
+        let slot_b = decode_slot(raw.get(SLOT_BYTES as usize..).unwrap_or(&[]));
+        let (generation, tail) = match (slot_a, slot_b) {
+            (Some(a), Some(b)) => {
+                if a.0 >= b.0 {
+                    a
+                } else {
+                    b
+                }
+            }
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (None, None) => {
+                file.set_len(0).map_err(io_err)?;
+                file.seek(SeekFrom::Start(0)).map_err(io_err)?;
+                file.write_all(&encode_slot(0, HEADER_BYTES)).map_err(io_err)?;
+                file.write_all(&[0u8; SLOT_BYTES as usize]).map_err(io_err)?;
+                file.sync_data().map_err(io_err)?;
+                (0, HEADER_BYTES)
+            }
+        };
+        let tail = tail.max(HEADER_BYTES);
+
+        // Recovery scan over the committed region.  Latest record per id
+        // wins; earlier ones are superseded — including when the latest is
+        // corrupt (its CRC-protected header still names the id), so
+        // corruption never rolls a session back to a superseded record.
+        // An unframeable remainder counts as one corrupt record so the
+        // conservation ledger still balances.
+        let scan_end = tail.min(raw.len() as u64) as usize;
+        let mut off = HEADER_BYTES as usize;
+        loop {
+            if off + RECORD_HEADER_BYTES as usize > scan_end {
+                break;
+            }
+            let (len, id, payload_crc) = match decode_record_header(&raw, off) {
+                Some(h) => h,
+                None => break,
+            };
+            let start = off + RECORD_HEADER_BYTES as usize;
+            let end = start + len as usize;
+            if len == 0 || len > MAX_RECORD_BYTES || end > scan_end {
+                break;
+            }
+            checkpoints += 1;
+            if index.remove(&id).is_some() {
+                superseded += 1;
+            }
+            let payload = &raw[start..end];
+            if crc32(payload) == payload_crc {
+                index.insert(id, (off as u64, len));
+            } else {
+                corrupt += 1;
+            }
+            off = end;
+        }
+        if (off as u64) < tail {
+            // Committed bytes the scan could not parse into records — one
+            // corrupt pseudo-record covers the whole region.
+            checkpoints += 1;
+            corrupt += 1;
+        }
+
+        let retained = index.len() as u64;
+        Ok(SessionStore {
+            inner: RankedMutex::new(
+                LockRank::Registry,
+                StoreInner {
+                    file,
+                    path,
+                    tail,
+                    generation,
+                    index,
+                    resident: HashMap::new(),
+                    next_seq: 0,
+                },
+            ),
+            checkpoints: AtomicU64::new(checkpoints),
+            resumes: AtomicU64::new(0),
+            preempt_to_disk: AtomicU64::new(0),
+            store_bytes: AtomicU64::new(tail),
+            corrupt_records_skipped: AtomicU64::new(corrupt),
+            retained: AtomicU64::new(retained),
+            superseded: AtomicU64::new(superseded),
+            parked_resident: AtomicU64::new(0),
+        })
+    }
+
+    /// The backing file's path.
+    pub fn path(&self) -> PathBuf {
+        self.inner.lock().path.clone()
+    }
+
+    /// Append + commit one checkpoint.  A later checkpoint of the same id
+    /// supersedes the earlier record (the log is append-only; the index
+    /// moves).
+    pub fn checkpoint(&self, cp: &SessionCheckpoint) -> Result<(), StoreError> {
+        let payload = cp.encode();
+        if payload.len() as u64 > MAX_RECORD_BYTES as u64 {
+            return Err(StoreError::TooLarge(payload.len()));
+        }
+        let mut inner = self.inner.lock();
+        let off = inner.tail;
+        let rec = encode_record(cp.id, &payload);
+        inner.file.seek(SeekFrom::Start(off)).map_err(io_err)?;
+        inner.file.write_all(&rec).map_err(io_err)?;
+        inner.file.sync_data().map_err(io_err)?;
+        // Record durable — flip the alternate header slot to commit it.
+        let new_tail = off + rec.len() as u64;
+        let generation = inner.generation + 1;
+        let slot_off = (generation % 2) * SLOT_BYTES;
+        inner.file.seek(SeekFrom::Start(slot_off)).map_err(io_err)?;
+        inner
+            .file
+            .write_all(&encode_slot(generation, new_tail))
+            .map_err(io_err)?;
+        inner.file.sync_data().map_err(io_err)?;
+        inner.generation = generation;
+        inner.tail = new_tail;
+        let replaced = inner.index.insert(cp.id, (off, payload.len() as u32));
+        if replaced.is_some() {
+            self.superseded.fetch_add(1, Ordering::Relaxed);
+        }
+        self.checkpoints.fetch_add(1, Ordering::Relaxed);
+        self.retained.store(inner.index.len() as u64, Ordering::Relaxed);
+        self.store_bytes.store(inner.tail, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Take the retained record for `id` (single-use: the index entry is
+    /// removed — resuming again requires checkpointing again), along with
+    /// the still-resident parked ticket if the session hibernated in this
+    /// process.  A CRC or decode failure drops the record as corrupt and
+    /// surfaces [`StoreError::Corrupt`]; other records are unaffected.
+    pub fn take(&self, id: u64) -> Result<ResumeTicket, StoreError> {
+        let mut inner = self.inner.lock();
+        let (off, len) = match inner.index.get(&id) {
+            Some(&e) => e,
+            None => return Err(StoreError::Unknown(id)),
+        };
+        let resident = inner.resident.remove(&id).map(|p| p.state);
+        self.parked_resident
+            .store(inner.resident.len() as u64, Ordering::Relaxed);
+        let mut payload = vec![0u8; len as usize];
+        let read = (|| -> Result<u32, StoreError> {
+            inner.file.seek(SeekFrom::Start(off + 12)).map_err(io_err)?;
+            let mut crc = [0u8; 4];
+            inner.file.read_exact(&mut crc).map_err(io_err)?;
+            inner
+                .file
+                .seek(SeekFrom::Start(off + RECORD_HEADER_BYTES))
+                .map_err(io_err)?;
+            inner.file.read_exact(&mut payload).map_err(io_err)?;
+            Ok(u32::from_le_bytes(crc))
+        })();
+        let outcome = read.and_then(|crc| {
+            if crc32(&payload) != crc {
+                return Err(StoreError::Corrupt(format!(
+                    "record for session {id} failed its CRC"
+                )));
+            }
+            let cp = SessionCheckpoint::decode(&payload)?;
+            if cp.id != id {
+                return Err(StoreError::Corrupt(format!(
+                    "record indexed under {id} decodes to session {}",
+                    cp.id
+                )));
+            }
+            Ok(cp)
+        });
+        inner.index.remove(&id);
+        self.retained.store(inner.index.len() as u64, Ordering::Relaxed);
+        match outcome {
+            Ok(checkpoint) => {
+                self.resumes.fetch_add(1, Ordering::Relaxed);
+                Ok(ResumeTicket {
+                    checkpoint,
+                    resident,
+                })
+            }
+            Err(e) => {
+                // The record (and any resident ticket that depended on it)
+                // is lost to contained corruption; the ledger moves it
+                // from retained to corrupt_records_skipped.
+                self.corrupt_records_skipped.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Register a hibernated session's still-resident parked ticket (kept
+    /// opaque so the store stays host-testable without a prism).  Resident
+    /// tickets make resume a page-in instead of a rebuild — and are what
+    /// [`SessionStore::preempt_coldest`] sacrifices under pool pressure.
+    pub fn park_resident(&self, id: u64, state: Box<dyn Any + Send>) {
+        let mut inner = self.inner.lock();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.resident.insert(id, Parked { state, seq });
+        self.parked_resident
+            .store(inner.resident.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Drop the coldest (earliest-parked) resident ticket whose record is
+    /// durable, releasing its pool blocks so a new admission fits — the
+    /// preempt-to-disk path.  Returns whether a ticket was dropped.
+    /// Resident entries without a durable record are never preempted
+    /// (dropping them would lose state, not tier it).
+    pub fn preempt_coldest(&self) -> bool {
+        let mut inner = self.inner.lock();
+        let victim = inner
+            .resident
+            .iter()
+            .filter(|e| inner.index.contains_key(e.0))
+            .min_by_key(|e| e.1.seq)
+            .map(|e| *e.0);
+        match victim {
+            Some(id) => {
+                // Dropping the ticket under the store lock releases prism
+                // + pool state — both rank below Registry (descending).
+                inner.resident.remove(&id);
+                self.preempt_to_disk.fetch_add(1, Ordering::Relaxed);
+                self.parked_resident
+                    .store(inner.resident.len() as u64, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Resident parked tickets — lock-free, safe for the admission gate
+    /// (which runs under the scheduler's SessionTable lock).
+    pub fn parked_resident(&self) -> u64 {
+        self.parked_resident.load(Ordering::Relaxed)
+    }
+
+    /// Gauge snapshot, taken under the store lock so the counters form a
+    /// consistent cut (the lock-free atomics alone could be read mid-
+    /// checkpoint and transiently violate the conservation law).
+    pub fn stats(&self) -> StoreStats {
+        let _inner = self.inner.lock();
+        StoreStats {
+            checkpoints: self.checkpoints.load(Ordering::Relaxed),
+            resumes: self.resumes.load(Ordering::Relaxed),
+            preempt_to_disk: self.preempt_to_disk.load(Ordering::Relaxed),
+            store_bytes: self.store_bytes.load(Ordering::Relaxed),
+            corrupt_records_skipped: self.corrupt_records_skipped.load(Ordering::Relaxed),
+            retained: self.retained.load(Ordering::Relaxed),
+            superseded: self.superseded.load(Ordering::Relaxed),
+            parked_resident: self.parked_resident.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Re-prove the store conservation law: every record ever known
+    /// (`checkpoints`) is exactly one of resumed (`resumes`), replaced
+    /// (`superseded`), lost to contained corruption
+    /// (`corrupt_records_skipped`) or still resumable (`retained`).  Also
+    /// sanity-checks the byte ledger (`store_bytes` covers at least the
+    /// header) and the preempt gauges (`preempt_to_disk` never exceeds
+    /// what was ever resident: parks = current `parked_resident` +
+    /// preempted + resumed-or-taken residents).
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        let s = self.stats();
+        let accounted = s.resumes + s.superseded + s.corrupt_records_skipped + s.retained;
+        if s.checkpoints != accounted {
+            return Err(format!(
+                "store conservation violated: checkpoints {} != resumes {} + superseded {} \
+                 + corrupt_records_skipped {} + retained {}",
+                s.checkpoints, s.resumes, s.superseded, s.corrupt_records_skipped, s.retained
+            ));
+        }
+        if s.store_bytes < HEADER_BYTES {
+            return Err(format!(
+                "store_bytes {} below the {HEADER_BYTES}-byte header",
+                s.store_bytes
+            ));
+        }
+        let inner = self.inner.lock();
+        if s.parked_resident != inner.resident.len() as u64 {
+            return Err(format!(
+                "parked_resident gauge {} != resident map {} (preempt_to_disk {})",
+                s.parked_resident,
+                inner.resident.len(),
+                s.preempt_to_disk
+            ));
+        }
+        if s.retained != inner.index.len() as u64 {
+            return Err(format!(
+                "retained gauge {} != index {}",
+                s.retained,
+                inner.index.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("warpstore_{}_{tag}.wst", std::process::id()))
+    }
+
+    fn cp(id: u64, salt: u64) -> SessionCheckpoint {
+        SessionCheckpoint {
+            id,
+            rng_state: 0x9E37 ^ salt,
+            synapse_version: salt,
+            generated: 3 + salt,
+            max_tokens: 64,
+            pos: 7 + salt as i64,
+            shared_rows: 4,
+            total_rows: 9,
+            offloaded_blocks: 1,
+            prompt: format!("prompt-{id}-{salt}"),
+            text: "abc".into(),
+            prompt_ids: vec![1, 2, 3, -4],
+            recent: vec![5, 6],
+            logits: vec![0.5, -1.25, f32::MIN_POSITIVE, salt as f32],
+            hidden: vec![1.0, 2.0],
+            k_tail: vec![0.125; 8],
+            v_tail: vec![-0.125; 8],
+        }
+    }
+
+    fn open_fresh(tag: &str) -> (SessionStore, PathBuf) {
+        let path = tmp_path(tag);
+        let _ = std::fs::remove_file(&path);
+        (SessionStore::open(&path).unwrap(), path)
+    }
+
+    #[test]
+    fn codec_roundtrips_bit_exactly() {
+        let a = cp(42, 7);
+        let bytes = a.encode();
+        let b = SessionCheckpoint::decode(&bytes).unwrap();
+        // byte-level equality implies bit-exact floats (encode stores
+        // IEEE bits verbatim)
+        assert_eq!(bytes, b.encode());
+        assert_eq!(b.id, 42);
+        assert_eq!(b.prompt, "prompt-42-7");
+        assert_eq!(b.logits.len(), 4);
+        assert_eq!(b.logits[2].to_bits(), f32::MIN_POSITIVE.to_bits());
+    }
+
+    #[test]
+    fn decode_rejects_truncation_without_panicking() {
+        let bytes = cp(1, 1).encode();
+        for cut in 0..bytes.len() {
+            match SessionCheckpoint::decode(&bytes[..cut]) {
+                Err(StoreError::Corrupt(_)) => {}
+                Ok(_) => panic!("decode of a {cut}-byte truncation succeeded"),
+                Err(e) => panic!("unexpected error on truncation: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_take_roundtrip_and_single_use() {
+        let (store, path) = open_fresh("roundtrip");
+        let a = cp(10, 1);
+        store.checkpoint(&a).unwrap();
+        store.check_invariants().unwrap();
+        let got = store.take(10).unwrap();
+        assert_eq!(got.checkpoint.encode(), a.encode());
+        assert!(got.resident.is_none());
+        // single-use: the record is consumed
+        assert!(matches!(store.take(10), Err(StoreError::Unknown(10))));
+        let s = store.stats();
+        assert_eq!((s.checkpoints, s.resumes, s.retained), (1, 1, 0));
+        store.check_invariants().unwrap();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn recovery_rebuilds_index_latest_record_wins() {
+        let (store, path) = open_fresh("recover");
+        store.checkpoint(&cp(1, 1)).unwrap();
+        store.checkpoint(&cp(2, 1)).unwrap();
+        let latest = cp(1, 9); // supersedes the first record for id 1
+        store.checkpoint(&latest).unwrap();
+        assert_eq!(store.stats().superseded, 1);
+        drop(store);
+
+        let store = SessionStore::open(&path).unwrap();
+        let s = store.stats();
+        assert_eq!(s.checkpoints, 3, "all scanned records counted");
+        assert_eq!(s.superseded, 1);
+        assert_eq!(s.retained, 2);
+        assert_eq!(s.corrupt_records_skipped, 0);
+        store.check_invariants().unwrap();
+        assert_eq!(store.take(1).unwrap().checkpoint.encode(), latest.encode());
+        assert_eq!(store.take(2).unwrap().checkpoint.generated, cp(2, 1).generated);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn torn_trailing_append_is_invisible_after_reopen() {
+        let (store, path) = open_fresh("torn");
+        store.checkpoint(&cp(5, 2)).unwrap();
+        drop(store);
+        // Simulate a crash mid-append: record bytes land past the
+        // committed tail but the header never flipped.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0xAB; 37]).unwrap();
+        drop(f);
+
+        let store = SessionStore::open(&path).unwrap();
+        let s = store.stats();
+        assert_eq!(s.checkpoints, 1, "torn bytes are not records");
+        assert_eq!(s.corrupt_records_skipped, 0);
+        assert_eq!(s.retained, 1);
+        store.check_invariants().unwrap();
+        // the surviving record resumes bit-identically
+        assert_eq!(store.take(5).unwrap().checkpoint.encode(), cp(5, 2).encode());
+        // and the next append overwrites the torn region cleanly
+        store.checkpoint(&cp(6, 3)).unwrap();
+        drop(store);
+        let store = SessionStore::open(&path).unwrap();
+        assert_eq!(store.take(6).unwrap().checkpoint.encode(), cp(6, 3).encode());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn bit_flip_corrupts_exactly_one_record() {
+        let (store, path) = open_fresh("bitflip");
+        store.checkpoint(&cp(1, 1)).unwrap();
+        store.checkpoint(&cp(2, 2)).unwrap();
+        // flip one payload byte of record 1 (its extent via the index)
+        let (off, _len) = *store.inner.lock().index.get(&1).unwrap();
+        let at = off + RECORD_HEADER_BYTES + 12;
+        drop(store);
+        let mut f = OpenOptions::new().read(true).write(true).open(&path).unwrap();
+        f.seek(SeekFrom::Start(at)).unwrap();
+        let mut b = [0u8; 1];
+        f.read_exact(&mut b).unwrap();
+        f.seek(SeekFrom::Start(at)).unwrap();
+        f.write_all(&[b[0] ^ 0x40]).unwrap();
+        drop(f);
+
+        let store = SessionStore::open(&path).unwrap();
+        let s = store.stats();
+        assert_eq!(s.checkpoints, 2);
+        assert_eq!(s.corrupt_records_skipped, 1, "only the flipped record");
+        assert_eq!(s.retained, 1);
+        store.check_invariants().unwrap();
+        assert!(matches!(store.take(1), Err(StoreError::Unknown(1))));
+        assert_eq!(store.take(2).unwrap().checkpoint.encode(), cp(2, 2).encode());
+        store.check_invariants().unwrap();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn corrupting_latest_record_never_resumes_the_superseded_one() {
+        let (store, path) = open_fresh("stale");
+        store.checkpoint(&cp(4, 1)).unwrap(); // superseded
+        store.checkpoint(&cp(4, 2)).unwrap(); // latest — about to be flipped
+        let (off, _) = *store.inner.lock().index.get(&4).unwrap();
+        drop(store);
+        let mut f = OpenOptions::new().read(true).write(true).open(&path).unwrap();
+        f.seek(SeekFrom::Start(off + RECORD_HEADER_BYTES + 3)).unwrap();
+        let mut b = [0u8; 1];
+        f.read_exact(&mut b).unwrap();
+        f.seek(SeekFrom::Start(off + RECORD_HEADER_BYTES + 3)).unwrap();
+        f.write_all(&[b[0] ^ 0x01]).unwrap();
+        drop(f);
+
+        // The corrupt latest record's CRC-protected header still names the
+        // session, so the scan poisons the id rather than re-indexing the
+        // superseded record: resume must be Unknown, never stale state.
+        let store = SessionStore::open(&path).unwrap();
+        assert!(matches!(store.take(4), Err(StoreError::Unknown(4))));
+        let s = store.stats();
+        assert_eq!(s.checkpoints, 2);
+        assert_eq!(s.superseded, 1);
+        assert_eq!(s.corrupt_records_skipped, 1);
+        assert_eq!(s.retained, 0);
+        store.check_invariants().unwrap();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn insane_length_ends_the_scan_as_contained_corruption() {
+        let (store, path) = open_fresh("insane");
+        store.checkpoint(&cp(1, 1)).unwrap();
+        store.checkpoint(&cp(2, 2)).unwrap();
+        let (off, _) = *store.inner.lock().index.get(&2).unwrap();
+        drop(store);
+        // overwrite record 2's length with garbage past MAX_RECORD_BYTES
+        // (also invalidates its header CRC — either way, nothing after
+        // this point can be framed)
+        let mut f = OpenOptions::new().read(true).write(true).open(&path).unwrap();
+        f.seek(SeekFrom::Start(off)).unwrap();
+        f.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        drop(f);
+
+        let store = SessionStore::open(&path).unwrap();
+        let s = store.stats();
+        // record 1 scanned fine; the unparseable committed remainder is
+        // one corrupt pseudo-record
+        assert_eq!(s.checkpoints, 2);
+        assert_eq!(s.corrupt_records_skipped, 1);
+        assert_eq!(s.retained, 1);
+        store.check_invariants().unwrap();
+        assert_eq!(store.take(1).unwrap().checkpoint.encode(), cp(1, 1).encode());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn header_slot_corruption_falls_back_to_the_other_slot() {
+        let (store, path) = open_fresh("slots");
+        store.checkpoint(&cp(1, 1)).unwrap(); // gen 1 → slot B
+        store.checkpoint(&cp(2, 2)).unwrap(); // gen 2 → slot A
+        drop(store);
+        // Crash mid-write of the *next* commit's slot (gen 3 → slot B):
+        // garbage in slot B must fall back to gen 2 in slot A.
+        let mut f = OpenOptions::new().read(true).write(true).open(&path).unwrap();
+        f.seek(SeekFrom::Start(SLOT_BYTES)).unwrap();
+        f.write_all(&[0xCC; SLOT_BYTES as usize]).unwrap();
+        drop(f);
+        let store = SessionStore::open(&path).unwrap();
+        assert_eq!(store.stats().retained, 2, "slot-A commit still visible");
+        assert_eq!(store.take(2).unwrap().checkpoint.encode(), cp(2, 2).encode());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn preempt_drops_coldest_resident_with_a_durable_record() {
+        let (store, path) = open_fresh("preempt");
+        // id 1 parks first (coldest), then id 2; id 3 is resident but has
+        // no durable record and must never be preempted.
+        store.checkpoint(&cp(1, 1)).unwrap();
+        store.checkpoint(&cp(2, 2)).unwrap();
+        store.park_resident(1, Box::new("ticket-1".to_string()));
+        store.park_resident(2, Box::new("ticket-2".to_string()));
+        store.park_resident(3, Box::new("ticket-3".to_string()));
+        assert_eq!(store.parked_resident(), 3);
+
+        assert!(store.preempt_coldest());
+        assert_eq!(store.parked_resident(), 2);
+        assert!(store.preempt_coldest());
+        assert_eq!(store.parked_resident(), 1);
+        // only the record-less resident remains — not preemptable
+        assert!(!store.preempt_coldest());
+        assert_eq!(store.stats().preempt_to_disk, 2);
+        store.check_invariants().unwrap();
+
+        // the preempted sessions remain resumable from disk (slow path)
+        let r = store.take(1).unwrap();
+        assert!(r.resident.is_none(), "ticket was preempted");
+        assert_eq!(r.checkpoint.encode(), cp(1, 1).encode());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn take_returns_the_resident_ticket_on_the_fast_path() {
+        let (store, path) = open_fresh("resident");
+        store.checkpoint(&cp(7, 1)).unwrap();
+        store.park_resident(7, Box::new(1234u32));
+        let r = store.take(7).unwrap();
+        let ticket = r.resident.expect("resident fast path");
+        assert_eq!(*ticket.downcast::<u32>().unwrap(), 1234);
+        assert_eq!(store.parked_resident(), 0);
+        store.check_invariants().unwrap();
+        let _ = std::fs::remove_file(path);
+    }
+
+    /// Crash-safety proptest: random checkpoint / take / reopen / torn-
+    /// append / bit-flip interleavings must track a mirror model exactly —
+    /// every id either resumes bit-identically or surfaces a typed
+    /// `StoreError` for that record only; no panics, no stale state.
+    #[test]
+    fn crash_safety_random_interleavings() {
+        check("store crash safety", 25, |g| {
+            let path = tmp_path(&format!("prop{}", g.case));
+            let _ = std::fs::remove_file(&path);
+            let mut store = SessionStore::open(&path).map_err(|e| e.to_string())?;
+            // mirror: id → encoded payload expected on resume
+            let mut mirror: HashMap<u64, Vec<u8>> = HashMap::new();
+            let mut salt = 0u64;
+            for _ in 0..g.usize_in(5..40) {
+                match g.usize_in(0..6) {
+                    // checkpoint (possibly superseding)
+                    0 | 1 => {
+                        let id = g.usize_in(1..6) as u64;
+                        salt += 1;
+                        let c = cp(id, salt);
+                        store.checkpoint(&c).map_err(|e| e.to_string())?;
+                        mirror.insert(id, c.encode());
+                    }
+                    // take: must match the mirror bit-exactly, or Unknown
+                    2 => {
+                        let id = g.usize_in(1..6) as u64;
+                        match (store.take(id), mirror.remove(&id)) {
+                            (Ok(r), Some(want)) => {
+                                crate::prop_assert!(
+                                    r.checkpoint.encode() == want,
+                                    "resume of {id} not bit-identical"
+                                );
+                            }
+                            (Err(StoreError::Unknown(_)), None) => {}
+                            (Ok(_), None) => {
+                                return Err(format!("id {id} resurrected from nothing"))
+                            }
+                            (Err(e), want) => {
+                                return Err(format!(
+                                    "take({id}) → {e} (mirror had record: {})",
+                                    want.is_some()
+                                ))
+                            }
+                        }
+                    }
+                    // clean restart
+                    3 => {
+                        drop(store);
+                        store = SessionStore::open(&path).map_err(|e| e.to_string())?;
+                    }
+                    // crash mid-append: torn bytes past the committed tail
+                    4 => {
+                        drop(store);
+                        let n = g.usize_in(1..50);
+                        let mut f = OpenOptions::new()
+                            .append(true)
+                            .open(&path)
+                            .map_err(|e| e.to_string())?;
+                        f.write_all(&vec![0x5A; n]).map_err(|e| e.to_string())?;
+                        drop(f);
+                        store = SessionStore::open(&path).map_err(|e| e.to_string())?;
+                    }
+                    // bit flip inside a known record's payload: that id (and
+                    // only that id) becomes Unknown-or-Corrupt
+                    _ => {
+                        let victim = {
+                            let inner = store.inner.lock();
+                            inner.index.iter().map(|(id, e)| (*id, *e)).next()
+                        };
+                        if let Some((id, (off, len))) = victim {
+                            drop(store);
+                            let at =
+                                off + RECORD_HEADER_BYTES + g.usize_in(0..len as usize) as u64;
+                            let mut f = OpenOptions::new()
+                                .read(true)
+                                .write(true)
+                                .open(&path)
+                                .map_err(|e| e.to_string())?;
+                            f.seek(SeekFrom::Start(at)).map_err(|e| e.to_string())?;
+                            let mut b = [0u8; 1];
+                            f.read_exact(&mut b).map_err(|e| e.to_string())?;
+                            f.seek(SeekFrom::Start(at)).map_err(|e| e.to_string())?;
+                            f.write_all(&[b[0] ^ (1 << g.usize_in(0..8))])
+                                .map_err(|e| e.to_string())?;
+                            drop(f);
+                            store = SessionStore::open(&path).map_err(|e| e.to_string())?;
+                            // the flipped record's header still names the id,
+                            // so resume is typed-unavailable for that session
+                            // only — never a panic, never the superseded
+                            // record's stale bytes
+                            match store.take(id) {
+                                Err(StoreError::Unknown(_)) | Err(StoreError::Corrupt(_)) => {}
+                                Ok(_) => {
+                                    return Err(format!(
+                                        "flipped record for {id} resumed anyway"
+                                    ))
+                                }
+                                Err(e) => return Err(format!("take after flip: {e}")),
+                            }
+                            mirror.remove(&id);
+                        }
+                    }
+                }
+                store.check_invariants()?;
+            }
+            // drain: every surviving mirror entry resumes bit-identically
+            for (id, want) in mirror {
+                let got = store.take(id).map_err(|e| format!("drain {id}: {e}"))?;
+                crate::prop_assert!(
+                    got.checkpoint.encode() == want,
+                    "drained resume of {id} not bit-identical"
+                );
+            }
+            store.check_invariants()?;
+            let _ = std::fs::remove_file(&path);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conservation_law_holds_across_every_transition() {
+        let (store, path) = open_fresh("ledger");
+        for i in 0..6u64 {
+            store.checkpoint(&cp(i % 3, i)).unwrap(); // 3 supersessions
+            store.check_invariants().unwrap();
+        }
+        store.take(0).unwrap();
+        store.take(1).unwrap();
+        assert!(matches!(store.take(99), Err(StoreError::Unknown(99))));
+        let s = store.stats();
+        assert_eq!(s.checkpoints, 6);
+        assert_eq!(s.superseded, 3);
+        assert_eq!(s.resumes, 2);
+        assert_eq!(s.retained, 1);
+        assert_eq!(s.corrupt_records_skipped, 0);
+        assert!(s.store_bytes > HEADER_BYTES);
+        store.check_invariants().unwrap();
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -70,6 +70,21 @@
 //! asserts the density, the admission win, and that park→offload→resume
 //! decode is bit-identical.
 //!
+//! Sessions are **durable** ([`cortex::store`]): a crash-safe
+//! single-file checkpoint store (append-only CRC-framed records behind
+//! an atomic double-slot header flip — no external database) persists
+//! each session's identity, sampler/RNG state, and block-table chain,
+//! with the registry-shared prompt prefix stored as a hash chain rather
+//! than bytes.  `POST /sessions/{id}/resume` rebuilds a checkpointed
+//! session with bit-identical next-token logits, a mid-stream client
+//! disconnect hibernates instead of cancelling, and under a full pool an
+//! arrival preempts the coldest hibernated resident to disk instead of
+//! being shed — the fourth admission tier and the fourth memory tier
+//! (`benches/durable_sessions.rs` asserts both).  The operator-facing
+//! map of all of this — lifecycle, tiers, and every `/stats` gauge — is
+//! the handbook at [`architecture`], reconciled against the live
+//! serializer by a CI test.
+//!
 //! Memory accounting follows block ownership: each agent's `MainKv`/
 //! `SideKv` charge counts only its *private* blocks, registry-shared
 //! blocks are charged exactly once under `SharedKv`, the device slab
@@ -109,6 +124,15 @@
 //!
 //! Python never runs on the request path: `make artifacts` exports
 //! everything once, and this crate serves from the compiled artifacts.
+
+/// The operator's handbook — `docs/ARCHITECTURE.md` rendered into the
+/// crate docs: the request lifecycle from accept to resume, the
+/// four-tier memory hierarchy, and the gauge reference for every
+/// `/stats` block.  The gauge table is fenced by markers that
+/// `rust/tests/docs_drift.rs` reconciles against the live `/stats`
+/// serializer in CI, so the handbook cannot drift from the wire.
+#[doc = include_str!("../../docs/ARCHITECTURE.md")]
+pub mod architecture {}
 
 pub mod audit;
 pub mod cortex;

@@ -144,6 +144,14 @@ impl KvCache {
         self.blocks.iter().filter(|b| b.shared).count()
     }
 
+    /// Length of the *leading* run of registry-shared blocks — the prefix
+    /// a durable checkpoint stores by hash chain instead of by bytes
+    /// (`cortex::store`): resume re-attaches exactly this many blocks via
+    /// `attach_shared_prefix` and replays only the private tail rows.
+    pub fn leading_shared_blocks(&self) -> usize {
+        self.blocks.iter().take_while(|b| b.shared).count()
+    }
+
     /// Resident bytes attributable to this cache: *private, resident*
     /// blocks × block bytes — the Table-2 unit.  Grows with fill, not with
     /// configured capacity, and excludes registry-shared blocks (charged

@@ -135,6 +135,50 @@ impl HttpRequest {
     }
 }
 
+/// Typed outcome of matching a path against the `/sessions/{id}/resume`
+/// route — the 404-vs-400 distinction the server needs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionRoute {
+    /// Exactly `/sessions/{id}/resume` with a well-formed u64 id.
+    Resume(u64),
+    /// The resume shape with an id that is not a u64 — `400`, because the
+    /// client addressed the right route with a malformed argument (a 404
+    /// would misreport "no such session" for a request that could never
+    /// name one).  Carries the offending segment for the error body.
+    Malformed(String),
+    /// Not a session route at all — fall through to the server's `404`.
+    NotSession,
+}
+
+/// Match `path` against the session routes by *path segments*, not string
+/// prefix: `/sessions/7/resume` resumes session 7, while `/sessionsX/7`
+/// and `/sessions/7/resume/extra` are `NotSession` (the prefix-match
+/// idiom would have swallowed both), and a non-numeric or empty id
+/// (`/sessions/abc/resume`, `/sessions//resume`) is `Malformed`.
+/// Trailing-slash-only variants (`/sessions/7/resume/`) are accepted —
+/// one empty trailing segment is a client formatting wobble, not a
+/// different resource.
+pub fn parse_session_route(path: &str) -> SessionRoute {
+    // Ignore any query string; route identity is the path alone.
+    let path = path.split('?').next().unwrap_or(path);
+    let mut segs: Vec<&str> = path.split('/').collect();
+    // Leading '/' yields an empty first segment; drop exactly one
+    // trailing empty segment for a trailing slash.
+    if segs.first() == Some(&"") {
+        segs.remove(0);
+    }
+    if segs.last() == Some(&"") {
+        segs.pop();
+    }
+    match segs.as_slice() {
+        ["sessions", id, "resume"] => match id.parse::<u64>() {
+            Ok(id) => SessionRoute::Resume(id),
+            Err(_) => SessionRoute::Malformed((*id).to_string()),
+        },
+        _ => SessionRoute::NotSession,
+    }
+}
+
 fn reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
@@ -334,6 +378,67 @@ mod tests {
     #[test]
     fn malformed_request_line_is_rejected() {
         expect_bad_request("   \r\n\r\n", "malformed request line");
+    }
+
+    #[test]
+    fn session_route_matches_exact_segments_only() {
+        assert_eq!(parse_session_route("/sessions/7/resume"), SessionRoute::Resume(7));
+        assert_eq!(
+            parse_session_route("/sessions/7/resume/"),
+            SessionRoute::Resume(7),
+            "one trailing slash is a formatting wobble, not a new resource"
+        );
+        assert_eq!(
+            parse_session_route("/sessions/18446744073709551615/resume"),
+            SessionRoute::Resume(u64::MAX)
+        );
+        assert_eq!(
+            parse_session_route("/sessions/7/resume?verbose=1"),
+            SessionRoute::Resume(7),
+            "query strings are not part of route identity"
+        );
+    }
+
+    #[test]
+    fn session_route_distinguishes_malformed_from_unknown() {
+        // Malformed ids hit the right route with a bad argument → 400;
+        // a 404 here would misreport "no such session" for a request
+        // that could never name one.
+        for path in [
+            "/sessions/abc/resume",
+            "/sessions/-7/resume",
+            "/sessions/7x/resume",
+            "/sessions//resume",
+            "/sessions/99999999999999999999999/resume", // > u64::MAX
+        ] {
+            match parse_session_route(path) {
+                SessionRoute::Malformed(_) => {}
+                other => panic!("{path} parsed as {other:?}, want Malformed"),
+            }
+        }
+    }
+
+    #[test]
+    fn session_route_rejects_prefix_match_lookalikes() {
+        // The prefix-match idiom (`path.starts_with("/sessions/")`) would
+        // have swallowed every one of these.
+        for path in [
+            "/sessionsX/7/resume",
+            "/sessions/7/resume/extra",
+            "/sessions/7",
+            "/sessions/7/pause",
+            "/sessions",
+            "/session/7/resume",
+            "/x/sessions/7/resume",
+            "/",
+            "/generate",
+        ] {
+            assert_eq!(
+                parse_session_route(path),
+                SessionRoute::NotSession,
+                "{path} must fall through to the server's 404"
+            );
+        }
     }
 
     #[test]

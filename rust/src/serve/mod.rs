@@ -19,14 +19,26 @@
 //!   chunked transfer encoding, `application/x-ndjson` — one
 //!   `{"n": k, "delta": "..."}` line per token as ticks produce it, then
 //!   one final summary line with `"done": true` (same fields as the
-//!   non-streaming body).  A mid-stream disconnect cancels only that
-//!   session.
+//!   non-streaming body).  Durable backends prepend a `{"session": id}`
+//!   line announcing the resume id.
+//! * Sessions are durable: a mid-stream disconnect *hibernates* the
+//!   session (checkpoint to the store, KV parked to host) instead of
+//!   cancelling it, and `POST /sessions/{id}/resume` reattaches —
+//!   re-admitted first so a 503 never consumes the single-use record,
+//!   then rebuilt with bit-identical logits.  Route matching is
+//!   segment-exact with a typed 400/404 split: a malformed id is a 400
+//!   (the route matched, the id didn't parse), an unknown path a 404.
 //! * `GET /stats` carries a `sessions` gauge block
 //!   (requested/admitted/rejected/completed/active/parked/occupancy) that
 //!   reconciles: `admitted == completed + active`,
 //!   `requested == admitted + rejected + parked` — plus a `prefill` block
 //!   (chunks/ticks/budget_deferred/mid_prefix_hits) tracking the chunked
-//!   prefill lanes interleaved with the decode tick.
+//!   prefill lanes interleaved with the decode tick, and a `store` block
+//!   (checkpoints/resumes/preempt_to_disk/retained/…) whose ledger obeys
+//!   `checkpoints == resumes + superseded + corrupt_records_skipped +
+//!   retained`.  The operator-facing reference for every block is the
+//!   handbook at [`crate::architecture`], CI-reconciled against the
+//!   serializer by `rust/tests/docs_drift.rs`.
 //! * `GET /metrics` renders the same snapshot in Prometheus text
 //!   exposition format (version 0.0.4): every numeric leaf of the
 //!   `/stats` document becomes one `warp_<path> <value>` sample via
@@ -40,7 +52,8 @@
 pub mod http;
 pub mod server;
 
+pub use http::{parse_session_route, SessionRoute};
 pub use server::{
-    metrics_text, serve, sessions_json, OpenDenied, ServerConfig, ServerHandle, SessionSource,
-    TokenStream,
+    metrics_text, serve, sessions_json, store_json, OpenDenied, ResumeDenied, ServerConfig,
+    ServerHandle, SessionSource, TokenStream,
 };

@@ -7,8 +7,15 @@
 //!   switches to chunked transfer encoding: one NDJSON line per token
 //!   delta as the fused ticks produce them, then a final `"done": true`
 //!   summary line.
+//! * `POST /sessions/{id}/resume` — reattach to a hibernated session by
+//!   its durable id (announced as the first chunk of every streaming
+//!   response).  Always streams: the client is reconnecting to a
+//!   generation in progress, so the body mirrors `"stream": true` —
+//!   the id line, one NDJSON delta per token, then the `"done"` summary.
+//!   `404` unknown/corrupt-consumed id, `400` malformed id, `503` no
+//!   admission slot (the record is retained; retry).
 //! * `GET  /stats`    — live system statistics (memory, pool, gate,
-//!   synapse, scheduler, **sessions**, **prefill**, device).
+//!   synapse, scheduler, **sessions**, **store**, **prefill**, device).
 //! * `GET  /metrics`  — the same gauges in Prometheus text exposition
 //!   (version 0.0.4): every numeric leaf of the `/stats` tree flattened
 //!   to one `warp_<path>` sample, so scrapers need no JSON shim and the
@@ -23,7 +30,11 @@
 //! token while others are mid-generation — admission control (FIFO
 //! parking, 503 shedding) replaces head-of-line blocking.  A client that
 //! disconnects mid-stream cancels only its own session: the failed chunk
-//! write drops the session, freeing its slot and cache blocks.
+//! write **hibernates** the session when the backend supports it
+//! (checkpoint to the durable store + ticket parked as a preempt-to-disk
+//! candidate, resumable via `POST /sessions/{id}/resume`) and otherwise
+//! drops it — either way its slot and cache blocks free and every other
+//! session is untouched.
 //!
 //! The handler pool is still thread-per-connection (it is the *device
 //! scheduling* that multiplexes, not the sockets), behind a nonblocking
@@ -42,10 +53,12 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::http::{
-    finish_chunked, respond, respond_chunked_head, respond_json, write_chunk, BadRequest,
-    HttpRequest,
+    finish_chunked, parse_session_route, respond, respond_chunked_head, respond_json,
+    write_chunk, BadRequest, HttpRequest, SessionRoute,
 };
-use crate::cortex::{CortexSession, SessionError, SessionStats, WarpCortex};
+use crate::cortex::{
+    CortexSession, ResumeError, SessionError, SessionStats, StoreStats, WarpCortex,
+};
 use crate::util::sync::{LockRank, RankedMutex};
 use crate::util::Json;
 
@@ -90,6 +103,21 @@ pub enum OpenDenied {
     Internal(String),
 }
 
+/// Why a session could not be resumed, as the HTTP layer needs it.
+#[derive(Debug)]
+pub enum ResumeDenied {
+    /// No durable record under that id — never checkpointed, already
+    /// consumed by an earlier resume, or no store configured → 404.
+    Unknown,
+    /// Admission refused (the record is retained; retry later) → 503.
+    Busy(String),
+    /// The record was corrupt or the rebuild failed → 500.
+    Internal(String),
+    /// This source has no durable-session support at all → 404 (a
+    /// stub's ids are as unknown as a misremembered one).
+    Unsupported,
+}
+
 /// One live generation session from the server's perspective: a pull
 /// iterator of visible text deltas plus a finalizer producing the
 /// summary JSON.
@@ -102,6 +130,23 @@ pub trait TokenStream {
     fn finish(self) -> Result<Json>
     where
         Self: Sized;
+    /// The durable id this stream can later be resumed under, when the
+    /// backend checkpoints it — announced as the first streaming chunk
+    /// so the client knows what to `POST /sessions/{id}/resume` after a
+    /// disconnect.  Default `None`: no id line is emitted.
+    fn session_id(&self) -> Option<u64> {
+        None
+    }
+    /// The client disconnected mid-stream: checkpoint and park instead
+    /// of dropping, where the backend supports it and policy allows.
+    /// Returns the durable resume id, or `None` if the session was
+    /// simply dropped (the default).
+    fn hibernate(self) -> Option<u64>
+    where
+        Self: Sized,
+    {
+        None
+    }
 }
 
 /// What the server serves: a source of generation sessions plus the
@@ -120,6 +165,12 @@ pub trait SessionSource: Send + Sync + 'static {
         prompt: &str,
         max_tokens: usize,
     ) -> std::result::Result<Self::Stream<'_>, OpenDenied>;
+    /// Resume a hibernated session by its durable id.  Default:
+    /// unsupported — sources without a checkpoint store answer 404.
+    fn resume(&self, id: u64) -> std::result::Result<Self::Stream<'_>, ResumeDenied> {
+        let _ = id;
+        Err(ResumeDenied::Unsupported)
+    }
     fn stats(&self) -> Json;
 }
 
@@ -139,6 +190,17 @@ impl SessionSource for WarpCortex {
         })
     }
 
+    fn resume(&self, id: u64) -> std::result::Result<CortexSession<'_>, ResumeDenied> {
+        WarpCortex::resume_session(self, id).map_err(|e| match e {
+            ResumeError::Unknown(_) => ResumeDenied::Unknown,
+            ResumeError::Corrupt(m) => ResumeDenied::Internal(m),
+            ResumeError::Session(SessionError::Busy(m)) => ResumeDenied::Busy(m),
+            ResumeError::Session(SessionError::Failed(err)) => {
+                ResumeDenied::Internal(format!("{err:#}"))
+            }
+        })
+    }
+
     fn stats(&self) -> Json {
         stats_json(self)
     }
@@ -151,6 +213,26 @@ impl<'a> TokenStream for CortexSession<'a> {
 
     fn finish(self) -> Result<Json> {
         Ok(CortexSession::finish(self)?.to_json())
+    }
+
+    fn session_id(&self) -> Option<u64> {
+        Some(self.durable_id())
+    }
+
+    fn hibernate(self) -> Option<u64> {
+        if !self.hibernate_on_disconnect() {
+            return None; // policy off or no store: plain drop, as before
+        }
+        match CortexSession::hibernate(self) {
+            Ok(id) => Some(id),
+            Err(e) => {
+                // Hibernation is best-effort on this path — a failed
+                // checkpoint degrades to the pre-durability behaviour
+                // (drop the session, free its slot), never to a stall.
+                log::debug!("hibernate on disconnect failed: {e:#}");
+                None
+            }
+        }
     }
 }
 
@@ -303,9 +385,40 @@ fn handle_connection<S: SessionSource>(
             &metrics_text(&src.stats()),
         ),
         ("POST", "/generate") => handle_generate(stream, &req, src, cfg),
-        ("POST", _) | ("GET", _) => respond(stream, 404, "text/plain", "not found"),
+        // Parameterized routes resolve by exact path *segments*, never by
+        // prefix: `/sessions/7/resume/x` is a 404, `/sessions/abc/resume`
+        // a typed 400 (the route matched; the id didn't parse).
+        ("POST", path) => match parse_session_route(path) {
+            SessionRoute::Resume(id) => handle_resume(stream, src, id),
+            SessionRoute::Malformed(seg) => respond_json(
+                stream,
+                400,
+                &error_json(format!("`{seg}` is not a valid session id (expect u64)")),
+            ),
+            SessionRoute::NotSession => respond(stream, 404, "text/plain", "not found"),
+        },
+        ("GET", _) => respond(stream, 404, "text/plain", "not found"),
         _ => respond(stream, 405, "text/plain", "method not allowed"),
     }
+}
+
+/// `POST /sessions/{id}/resume`: re-admit a hibernated session and
+/// reattach to its stream.  Resume always streams — the client is
+/// reconnecting to a generation in progress, so the response mirrors the
+/// `"stream": true` shape of `/generate`.  The durable record is
+/// single-use: a successful resume consumes it (the announced id on the
+/// new stream covers the *next* disconnect), while a `503` retains it
+/// for retry.
+fn handle_resume<S: SessionSource>(stream: &mut TcpStream, src: &S, id: u64) -> Result<()> {
+    let session = match src.resume(id) {
+        Ok(s) => s,
+        Err(ResumeDenied::Unknown) | Err(ResumeDenied::Unsupported) => {
+            return respond_json(stream, 404, &error_json(format!("unknown session {id}")))
+        }
+        Err(ResumeDenied::Busy(m)) => return respond_json(stream, 503, &error_json(m)),
+        Err(ResumeDenied::Internal(m)) => return respond_json(stream, 500, &error_json(m)),
+    };
+    stream_session(stream, session)
 }
 
 fn error_json(msg: impl std::fmt::Display) -> Json {
@@ -376,12 +489,23 @@ fn collect_session<T: TokenStream>(stream: &mut TcpStream, mut session: T) -> Re
     }
 }
 
-/// Streaming `/generate`: chunked transfer encoding, one NDJSON line per
-/// token as the fused ticks produce them, then a `"done": true` summary
-/// line.  A failed chunk write is the disconnect signal — the session
-/// drops (cancelling only itself) and the handler returns.
+/// Streaming `/generate` and `/sessions/{id}/resume`: chunked transfer
+/// encoding — an id line when the backend is durable, one NDJSON line
+/// per token as the fused ticks produce them, then a `"done": true`
+/// summary line.  A failed chunk write is the disconnect signal: the
+/// session hibernates if the backend and policy support it (resumable
+/// later under the announced id), else drops — only itself, either way.
 fn stream_session<T: TokenStream>(stream: &mut TcpStream, mut session: T) -> Result<()> {
     respond_chunked_head(stream, 200, "application/x-ndjson")?;
+    // Durable backends announce the resume id before the first delta, so
+    // a client that loses the connection knows what to POST.
+    if let Some(id) = session.session_id() {
+        let line = Json::obj().with("session", id).to_string() + "\n";
+        if write_chunk(stream, &line).is_err() {
+            let _ = session.hibernate();
+            return Ok(());
+        }
+    }
     let mut n = 0usize;
     loop {
         match session.next_delta() {
@@ -390,9 +514,12 @@ fn stream_session<T: TokenStream>(stream: &mut TcpStream, mut session: T) -> Res
                 let line =
                     Json::obj().with("n", n).with("delta", delta.as_str()).to_string() + "\n";
                 if write_chunk(stream, &line).is_err() {
-                    // Client went away mid-stream: dropping the session
-                    // cancels ONLY it — the admission slot and cache
-                    // blocks free; every other session is untouched.
+                    // Client went away mid-stream: hibernate (checkpoint
+                    // + park, resumable by id) when supported, else drop.
+                    // Both cancel ONLY this session — the admission slot
+                    // and cache blocks free; every other session is
+                    // untouched.
+                    let _ = session.hibernate();
                     return Ok(());
                 }
             }
@@ -505,6 +632,24 @@ pub fn sessions_json(s: &SessionStats) -> Json {
         .with("parked", s.parked)
         .with("parked_peak", s.parked_peak)
         .with("occupancy", s.occupancy)
+}
+
+/// The `/stats` `store` gauge block — the durable checkpoint store's
+/// record ledger and footprint.  `checkpoints == resumes + superseded +
+/// corrupt_records_skipped + retained` is the store's sanitizer-checked
+/// conservation law; `preempt_to_disk` and `parked_resident` track the
+/// fourth admission tier (resident hibernated tickets evicted under pool
+/// pressure).  All-zero when no `store_path` is configured.
+pub fn store_json(s: &StoreStats) -> Json {
+    Json::obj()
+        .with("checkpoints", s.checkpoints)
+        .with("resumes", s.resumes)
+        .with("preempt_to_disk", s.preempt_to_disk)
+        .with("store_bytes", s.store_bytes)
+        .with("corrupt_records_skipped", s.corrupt_records_skipped)
+        .with("retained", s.retained)
+        .with("superseded", s.superseded)
+        .with("parked_resident", s.parked_resident)
 }
 
 fn stats_json(cortex: &WarpCortex) -> Json {
@@ -633,6 +778,12 @@ fn stats_json(cortex: &WarpCortex) -> Json {
         // requested == admitted + rejected + parked at every instant —
         // the concurrent-client hammer test reconciles these.
         .with("sessions", sessions_json(&sess))
+        // Durable-session gauges: the checkpoint store's record ledger
+        // (see `store_json` for the conservation law it satisfies).
+        .with(
+            "store",
+            store_json(&cortex.store.as_ref().map(|s| s.stats()).unwrap_or_default()),
+        )
         // Main-stream token throughput: lifetime total plus the overall
         // and trailing-10s rates from the sliding window — the live
         // counterpart of the paper's tokens/sec figure.

@@ -77,6 +77,25 @@ impl Sampler {
         }
     }
 
+    /// Capture the mutable sampler state for checkpointing
+    /// (`cortex::store`): the RNG position and the repetition window.
+    /// Restoring via [`Sampler::restore`] with the same config reproduces
+    /// the exact token stream the interrupted sampler would have drawn.
+    pub fn save_state(&self) -> (u64, Vec<i32>) {
+        (self.rng.state(), self.recent.clone())
+    }
+
+    /// Rebuild a sampler mid-stream from a [`Sampler::save_state`]
+    /// capture.  `cfg` must be the config the state was captured under —
+    /// the RNG state is post-seed-mapping and is adopted verbatim.
+    pub fn restore(cfg: SamplerConfig, rng_state: u64, recent: Vec<i32>) -> Sampler {
+        Sampler {
+            cfg,
+            rng: XorShift::from_state(rng_state),
+            recent,
+        }
+    }
+
     /// Sample the next id from raw logits (mutates a working copy).
     pub fn sample(&mut self, logits: &[f32]) -> i32 {
         let id = self.sample_inner(logits);

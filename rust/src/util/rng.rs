@@ -15,6 +15,19 @@ impl XorShift {
         }
     }
 
+    /// Current generator state, for checkpointing (`cortex::store`).
+    /// Round-trips through [`XorShift::from_state`] bit-exactly.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a generator at a previously captured [`XorShift::state`].
+    /// Unlike [`XorShift::new`], zero is preserved verbatim — a captured
+    /// state is already post-seed-mapping and must not be remapped.
+    pub fn from_state(state: u64) -> Self {
+        Self { state }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;

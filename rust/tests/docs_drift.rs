@@ -1,0 +1,142 @@
+//! Docs-drift gate: `docs/ARCHITECTURE.md`'s gauge-reference table vs
+//! the live `/stats` serializer in `serve/server.rs`.
+//!
+//! The handbook promises operators one row per wire key.  This test
+//! reconciles the two *bidirectionally* at compile-snapshot level (both
+//! files arrive via `include_str!`, so the gate can never test a stale
+//! copy):
+//!
+//! * every `"key"` the serializer region writes must appear in the
+//!   fenced gauge-reference table (an undocumented gauge fails CI), and
+//! * every `block.key` row in the table must name identifiers the
+//!   serializer actually writes (a documented phantom gauge fails CI).
+//!
+//! The serializer region is everything from `pub fn sessions_json` (the
+//! first gauge-block helper) to `#[cfg(test)]` — it contains
+//! `sessions_json`, `store_json`, and `stats_json`, and no non-gauge
+//! `.with("...")` calls (the streaming protocol keys live in
+//! `stream_session`, above the region).
+
+const SERVER_SRC: &str = include_str!("../src/serve/server.rs");
+const HANDBOOK: &str = include_str!("../../docs/ARCHITECTURE.md");
+
+/// Every string literal passed as the first argument of a `.with(`
+/// inside the serializer region — exactly the `/stats` wire keys (block
+/// names and leaves alike).
+fn server_keys() -> std::collections::BTreeSet<String> {
+    let start = SERVER_SRC
+        .find("pub fn sessions_json")
+        .expect("serializer region anchor `pub fn sessions_json` moved — update docs_drift.rs");
+    let end = SERVER_SRC[start..]
+        .find("#[cfg(test)]")
+        .map(|i| start + i)
+        .unwrap_or(SERVER_SRC.len());
+    let region = &SERVER_SRC[start..end];
+    let mut keys = std::collections::BTreeSet::new();
+    let mut rest = region;
+    while let Some(i) = rest.find(".with(") {
+        rest = &rest[i + ".with(".len()..];
+        let arg = rest.trim_start();
+        if let Some(lit) = arg.strip_prefix('"') {
+            if let Some(close) = lit.find('"') {
+                keys.insert(lit[..close].to_string());
+            }
+        }
+    }
+    assert!(
+        keys.len() > 40,
+        "suspiciously few serializer keys extracted ({}): parser drifted from the source",
+        keys.len()
+    );
+    keys
+}
+
+/// Every identifier part of every `block.key` row inside the
+/// gauge-reference markers: `pool.prefix_hits` contributes both `pool`
+/// and `prefix_hits`, the top-level leaf `population` contributes
+/// itself.
+fn doc_parts() -> std::collections::BTreeSet<String> {
+    let begin = HANDBOOK
+        .find("<!-- gauge-reference:begin -->")
+        .expect("gauge-reference:begin marker missing from docs/ARCHITECTURE.md");
+    let end = HANDBOOK
+        .find("<!-- gauge-reference:end -->")
+        .expect("gauge-reference:end marker missing from docs/ARCHITECTURE.md");
+    assert!(begin < end, "gauge-reference markers are out of order");
+    let mut parts = std::collections::BTreeSet::new();
+    let mut rows = 0usize;
+    for line in HANDBOOK[begin..end].lines() {
+        let line = line.trim();
+        if !line.starts_with('|') {
+            continue;
+        }
+        // First backtick-fenced token of the row is the gauge name.
+        let Some(tick) = line.find('`') else { continue };
+        let rest = &line[tick + 1..];
+        let Some(close) = rest.find('`') else { continue };
+        let token = &rest[..close];
+        let well_formed = !token.is_empty()
+            && token
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '.');
+        if !well_formed {
+            continue; // header row / prose cell
+        }
+        rows += 1;
+        for part in token.split('.') {
+            assert!(!part.is_empty(), "malformed gauge row `{token}`");
+            parts.insert(part.to_string());
+        }
+    }
+    assert!(
+        rows > 40,
+        "suspiciously few gauge rows parsed ({rows}): table format drifted"
+    );
+    parts
+}
+
+#[test]
+fn every_stats_wire_key_is_documented() {
+    let keys = server_keys();
+    let parts = doc_parts();
+    let missing: Vec<&String> = keys.iter().filter(|k| !parts.contains(*k)).collect();
+    assert!(
+        missing.is_empty(),
+        "serve/server.rs serializes gauge keys the handbook never documents \
+         (add rows to the gauge-reference table in docs/ARCHITECTURE.md): {missing:?}"
+    );
+}
+
+#[test]
+fn every_documented_gauge_exists_on_the_wire() {
+    let keys = server_keys();
+    let parts = doc_parts();
+    let phantom: Vec<&String> = parts.iter().filter(|p| !keys.contains(*p)).collect();
+    assert!(
+        phantom.is_empty(),
+        "docs/ARCHITECTURE.md documents gauges serve/server.rs never serializes \
+         (stale rows in the gauge-reference table): {phantom:?}"
+    );
+}
+
+#[test]
+fn store_block_documents_the_full_conservation_ledger() {
+    // The durable-store ledger is the newest block and the one the
+    // conservation law reads from — pin its rows explicitly so a partial
+    // rename can't slip through the set reconciliation.
+    for key in [
+        "store.checkpoints",
+        "store.resumes",
+        "store.preempt_to_disk",
+        "store.store_bytes",
+        "store.corrupt_records_skipped",
+        "store.retained",
+        "store.superseded",
+        "store.parked_resident",
+    ] {
+        assert!(
+            HANDBOOK.contains(&format!("`{key}`")),
+            "docs/ARCHITECTURE.md lost the `{key}` gauge row"
+        );
+    }
+}

@@ -8,20 +8,28 @@
 //! gauges, fusion and admission are the production code paths), paced by
 //! a configurable per-token delay so sessions stay in flight long enough
 //! to overlap.
+//!
+//! The durable suite at the bottom swaps in a second stub backed by a
+//! REAL [`SessionStore`]: a mid-stream disconnect hibernates instead of
+//! cancelling, and `POST /sessions/{id}/resume` continues the stream
+//! with exactly the deltas the unbroken stream would have carried.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use warp_cortex::cortex::step::testing::stub_exec;
 use warp_cortex::cortex::{
-    AgentCache, SessionPermit, SideAgent, StepConfig, StepScheduler, StepSeams,
+    AgentCache, SessionCheckpoint, SessionPermit, SessionStore, SideAgent, StepConfig,
+    StepScheduler, StepSeams, StoreError,
 };
 use warp_cortex::model::{KvCache, KvPool, KvPoolConfig};
 use warp_cortex::runtime::ModelConfig;
 use warp_cortex::serve::{
-    serve, sessions_json, OpenDenied, ServerConfig, ServerHandle, SessionSource, TokenStream,
+    serve, sessions_json, store_json, OpenDenied, ResumeDenied, ServerConfig, ServerHandle,
+    SessionSource, TokenStream,
 };
 use warp_cortex::text::SamplerConfig;
 use warp_cortex::util::Json;
@@ -192,11 +200,17 @@ struct StreamingClient {
 
 impl StreamingClient {
     fn open(addr: SocketAddr, prompt: &str, max_tokens: usize) -> StreamingClient {
-        let mut stream = TcpStream::connect(addr).unwrap();
         let body =
             format!(r#"{{"prompt": "{prompt}", "max_tokens": {max_tokens}, "stream": true}}"#);
+        StreamingClient::open_raw(addr, "/generate", &body)
+    }
+
+    /// A streaming POST to an arbitrary path — `/generate` or
+    /// `/sessions/{id}/resume` — asserting the 200 + chunked head.
+    fn open_raw(addr: SocketAddr, path: &str, body: &str) -> StreamingClient {
+        let mut stream = TcpStream::connect(addr).unwrap();
         let raw = format!(
-            "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
             body.len()
         );
         stream.write_all(raw.as_bytes()).unwrap();
@@ -534,4 +548,371 @@ fn stop_is_deterministic_with_inflight_streaming_sessions() {
             "idle stop round {round} hung"
         );
     }
+}
+
+// ── Durable sessions over HTTP ──────────────────────────────────────────
+//
+// A second stub source with a REAL `SessionStore`: streams announce their
+// durable id, a mid-stream disconnect hibernates (checkpoint + resident
+// park) instead of dropping, and `POST /sessions/{id}/resume` continues
+// the stream.  The token sequence is a deterministic function of the
+// generation cursor, so "the resumed stream continues identically" is
+// directly assertable at the HTTP layer.
+
+struct DurableSource {
+    sched: Arc<StepScheduler>,
+    pool: Arc<KvPool>,
+    store: Arc<SessionStore>,
+    delay: Duration,
+    next_id: AtomicU64,
+}
+
+struct DurableStream<'a> {
+    src: &'a DurableSource,
+    _permit: SessionPermit,
+    kv: KvCache,
+    id: u64,
+    produced: usize,
+    max_tokens: usize,
+}
+
+impl DurableSource {
+    /// The minimal durable record the stub needs: the generation cursor
+    /// and budget (the cortex-level codec tests cover the full payload;
+    /// this layer tests the HTTP choreography around it).
+    fn checkpoint_of(&self, id: u64, produced: usize, max_tokens: usize) -> SessionCheckpoint {
+        SessionCheckpoint {
+            id,
+            rng_state: 0,
+            synapse_version: 0,
+            generated: produced as u64,
+            max_tokens: max_tokens as u64,
+            pos: 0,
+            shared_rows: 0,
+            total_rows: 0,
+            offloaded_blocks: 0,
+            prompt: String::new(),
+            text: String::new(),
+            prompt_ids: Vec::new(),
+            recent: Vec::new(),
+            logits: Vec::new(),
+            hidden: Vec::new(),
+            k_tail: Vec::new(),
+            v_tail: Vec::new(),
+        }
+    }
+}
+
+impl SessionSource for DurableSource {
+    type Stream<'a> = DurableStream<'a>
+    where
+        Self: 'a;
+
+    fn open_session(
+        &self,
+        _prompt: &str,
+        max_tokens: usize,
+    ) -> Result<DurableStream<'_>, OpenDenied> {
+        let permit = self
+            .sched
+            .open_session()
+            .map_err(|d| OpenDenied::Busy(d.to_string()))?;
+        Ok(DurableStream {
+            src: self,
+            _permit: permit,
+            kv: self.pool.new_cache(256),
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            produced: 0,
+            max_tokens,
+        })
+    }
+
+    fn resume(&self, id: u64) -> Result<DurableStream<'_>, ResumeDenied> {
+        // Admit first: a Busy must not consume the single-use record —
+        // the same ordering the production cortex uses.
+        let permit = self
+            .sched
+            .open_session()
+            .map_err(|d| ResumeDenied::Busy(d.to_string()))?;
+        let ticket = match self.store.take(id) {
+            Ok(t) => t,
+            Err(e) => {
+                permit.shed();
+                return Err(match e {
+                    StoreError::Unknown(_) => ResumeDenied::Unknown,
+                    other => ResumeDenied::Internal(other.to_string()),
+                });
+            }
+        };
+        let kv = ticket
+            .resident
+            .and_then(|b| b.downcast::<KvCache>().ok().map(|b| *b))
+            .unwrap_or_else(|| self.pool.new_cache(256));
+        Ok(DurableStream {
+            src: self,
+            _permit: permit,
+            kv,
+            id,
+            produced: ticket.checkpoint.generated as usize,
+            max_tokens: ticket.checkpoint.max_tokens as usize,
+        })
+    }
+
+    fn stats(&self) -> Json {
+        Json::obj()
+            .with("sessions", sessions_json(&self.sched.session_stats()))
+            .with("store", store_json(&self.store.stats()))
+    }
+}
+
+impl<'a> TokenStream for DurableStream<'a> {
+    fn next_delta(&mut self) -> anyhow::Result<Option<String>> {
+        if self.produced >= self.max_tokens {
+            return Ok(None);
+        }
+        std::thread::sleep(self.src.delay);
+        let tok = (self.produced % 200) as i32;
+        self.src
+            .sched
+            .main_step(tok, self.kv.len() as i32, &mut self.kv)?;
+        self.produced += 1;
+        // Deterministic in the cursor alone: a resumed stream's deltas
+        // are bitwise the ones the unbroken stream would have produced.
+        Ok(Some(format!("t{}", self.produced)))
+    }
+
+    fn finish(self) -> anyhow::Result<Json> {
+        Ok(Json::obj().with("text", "stub").with("tokens", self.produced))
+    }
+
+    fn session_id(&self) -> Option<u64> {
+        Some(self.id)
+    }
+
+    fn hibernate(self) -> Option<u64> {
+        let DurableStream { src, kv, id, produced, max_tokens, .. } = self;
+        src.store.checkpoint(&src.checkpoint_of(id, produced, max_tokens)).ok()?;
+        src.store.park_resident(id, Box::new(kv));
+        Some(id) // _permit dropped: the admission slot frees here
+    }
+}
+
+fn durable_source(max_sessions: usize, delay_ms: u64, tag: &str) -> Arc<DurableSource> {
+    let cfg = tiny_cfg();
+    let pool = KvPool::new(
+        &cfg,
+        KvPoolConfig {
+            block_tokens: 16,
+            ..KvPoolConfig::default()
+        },
+    );
+    let sched = StepScheduler::new(
+        StepConfig {
+            batch_width: 8,
+            side_ctx: 96,
+            max_sessions,
+            max_parked_sessions: 0,
+            main_gather: Duration::from_micros(500),
+            ..StepConfig::default()
+        },
+        StepSeams::new(stub_exec(cfg, 96, 8), {
+            let pool = pool.clone();
+            Arc::new(move |t| {
+                SideAgent::from_parts(
+                    t,
+                    AgentCache::Bare(pool.new_cache(96)),
+                    0,
+                    1,
+                    vec![],
+                    0,
+                    SamplerConfig::greedy(),
+                )
+            })
+        }),
+    );
+    let name = format!("warpstore_serve_{}_{tag}.wst", std::process::id());
+    let path = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_file(&path);
+    let store = Arc::new(SessionStore::open(&path).expect("store opens"));
+    Arc::new(DurableSource {
+        sched,
+        pool,
+        store,
+        delay: Duration::from_millis(delay_ms),
+        next_id: AtomicU64::new(1),
+    })
+}
+
+fn store_block(addr: SocketAddr) -> Json {
+    let (status, body) = request(addr, "GET", "/stats", None);
+    assert_eq!(status, 200);
+    body.get("store").cloned().unwrap_or(Json::Null)
+}
+
+/// The `"delta"` payload of one NDJSON stream line.
+fn delta_of(line: &str) -> String {
+    Json::parse(line.trim())
+        .expect("stream line is json")
+        .get("delta")
+        .and_then(|v| v.as_str().map(String::from))
+        .unwrap_or_else(|| panic!("line carries no delta: {line}"))
+}
+
+/// The durable-session acceptance criterion at the HTTP layer: a
+/// streaming client disconnects mid-generation, the session hibernates
+/// (not cancels), and `POST /sessions/{id}/resume` picks the stream up
+/// with exactly the deltas the unbroken stream would have carried.  The
+/// hibernation point `k` is timing-dependent (the server notices the
+/// disconnect on its next failed chunk write), so the assertion is on
+/// the delta *payloads*: the resumed stream is the contiguous tail
+/// t{k+1}..tN — no token repeated, none skipped — ending in the same
+/// summary line.  The record is single-use: a second resume is a 404.
+#[test]
+fn disconnected_stream_resumes_over_http_with_identical_deltas() {
+    const N: usize = 30;
+    let src = durable_source(4, 10, "resume");
+    let store = src.store.clone();
+    let handle = start_durable(src, 4);
+    let addr = handle.addr;
+
+    // The unbroken reference: deltas are t1..tN then the done line.
+    let mut c = StreamingClient::open(addr, "ref", N);
+    let id_line = c.next_chunk().expect("id line");
+    assert!(id_line.contains("\"session\""), "first chunk announces the id: {id_line}");
+    let mut reference = Vec::new();
+    while let Some(line) = c.next_chunk() {
+        reference.push(line);
+    }
+    assert_eq!(reference.len(), N + 1, "{N} deltas + done: {reference:?}");
+    let reference_done = reference.pop().expect("done line");
+    assert!(reference_done.contains("\"done\""), "{reference_done}");
+
+    // The broken stream: read the id + two deltas, then disconnect.
+    let mut c = StreamingClient::open(addr, "broken", N);
+    let id_line = c.next_chunk().expect("id line");
+    let id = Json::parse(id_line.trim())
+        .expect("id line is json")
+        .get("session")
+        .and_then(|v| v.as_i64())
+        .expect("session id") as u64;
+    let first = c.next_chunk().expect("delta 1");
+    let second = c.next_chunk().expect("delta 2");
+    assert_eq!(first, reference[0]);
+    assert_eq!(second, reference[1]);
+    drop(c); // mid-stream disconnect → the server hibernates the session
+
+    // Hibernation is observable: the record lands in the store and the
+    // resident cache parks.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = store.stats();
+        if s.retained >= 1 && s.parked_resident >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnect never hibernated: {s:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let sb = store_block(addr);
+    assert!(gauge(&sb, "checkpoints") >= 1, "store gauges on /stats: {sb}");
+    assert!(gauge(&sb, "retained") >= 1, "{sb}");
+
+    // Resume: a new chunked stream carrying the contiguous tail.
+    let mut r = StreamingClient::open_raw(addr, &format!("/sessions/{id}/resume"), "");
+    let id_line = r.next_chunk().expect("resumed id line");
+    assert!(id_line.contains("\"session\""), "{id_line}");
+    let mut resumed = Vec::new();
+    while let Some(line) = r.next_chunk() {
+        resumed.push(line);
+    }
+    let resumed_done = resumed.pop().expect("resumed done line");
+    assert_eq!(
+        resumed_done, reference_done,
+        "the resumed episode must end in the reference's summary"
+    );
+    // First resumed delta pins the hibernation cursor k: the client read
+    // 2 deltas, so k ≥ 2; the stream hadn't finished, so k < N.
+    let k: usize = delta_of(&resumed[0])
+        .strip_prefix('t')
+        .and_then(|s| s.parse().ok())
+        .expect("deltas are t<cursor>");
+    assert!((3..=N).contains(&k), "resume point t{k} out of range");
+    assert_eq!(
+        resumed.len(),
+        N - k + 1,
+        "the tail must run t{k}..t{N} with nothing repeated or skipped"
+    );
+    for (i, line) in resumed.iter().enumerate() {
+        assert_eq!(
+            delta_of(line),
+            delta_of(&reference[k - 1 + i]),
+            "resumed delta {i} diverged from the unbroken stream"
+        );
+    }
+
+    // Single-use: the consumed record cannot resume twice.
+    let (status, body) = request(addr, "POST", &format!("/sessions/{id}/resume"), None);
+    assert_eq!(status, 404, "consumed record must 404: {body}");
+    let sb = store_block(addr);
+    assert!(gauge(&sb, "resumes") >= 1, "{sb}");
+    assert_eq!(gauge(&sb, "retained"), 0, "{sb}");
+    assert_eq!(gauge(&sb, "parked_resident"), 0, "{sb}");
+    handle.stop();
+}
+
+/// Typed route errors: malformed ids 400 with a JSON error body,
+/// lookalike paths and unknown ids 404, and a source without durable
+/// support (the plain stub) 404s every resume.
+#[test]
+fn resume_route_distinguishes_malformed_unknown_and_unsupported() {
+    let src = durable_source(2, 1, "routes");
+    let handle = start_durable(src, 2);
+    let addr = handle.addr;
+    // Malformed ids: the route matched, the id did not parse → 400.
+    for path in ["/sessions/abc/resume", "/sessions/-7/resume", "/sessions//resume"] {
+        let (status, body) = request(addr, "POST", path, None);
+        assert_eq!(status, 400, "{path} must 400: {body}");
+        assert!(
+            body.get("error").is_some(),
+            "400s carry a JSON error body: {body}"
+        );
+    }
+    // Lookalikes that must NOT prefix-match the route → 404.
+    for path in [
+        "/sessions/7/resume/extra",
+        "/session/7/resume",
+        "/sessions/7/resumed",
+        "/sessions/7",
+        "/xsessions/7/resume",
+    ] {
+        let (status, _) = request(addr, "POST", path, None);
+        assert_eq!(status, 404, "{path} must 404, not match the resume route");
+    }
+    // Well-formed but unknown id → 404 (nothing was ever checkpointed).
+    let (status, body) = request(addr, "POST", "/sessions/31337/resume", None);
+    assert_eq!(status, 404, "{body}");
+    // Wrong method on a session path → 404 via the GET fallthrough.
+    let (status, _) = request(addr, "GET", "/sessions/1/resume", None);
+    assert_eq!(status, 404);
+    handle.stop();
+
+    // A source with no durable support answers 404, not 500.
+    let handle = start(stub_source(2, 4, 1), 2);
+    let (status, body) = request(handle.addr, "POST", "/sessions/1/resume", None);
+    assert_eq!(status, 404, "unsupported resume must 404: {body}");
+    handle.stop();
+}
+
+fn start_durable(src: Arc<DurableSource>, workers: usize) -> ServerHandle {
+    serve(
+        src,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers,
+            max_tokens_cap: 256,
+        },
+    )
+    .expect("serve binds")
 }
